@@ -1,0 +1,116 @@
+//! Fault tolerance demo (§3.2): kill servers mid-generation and watch
+//! sessions recover by re-routing + replaying KV history to replacement
+//! servers — with bit-identical output tokens.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example fault_tolerance
+//! ```
+
+use petals::coordinator::client::{LocalHead, Sampler};
+use petals::coordinator::routing::RouteQuery;
+use petals::coordinator::session::{InferenceSession, SessionConfig};
+use petals::model::tensor::Tensor;
+use petals::model::{ModelHome, Precision, Weights};
+use petals::runtime::Runtime;
+use petals::server::local::LocalCluster;
+use petals::server::ServerNode;
+use std::sync::Arc;
+
+fn main() -> petals::Result<()> {
+    let home = ModelHome::open("artifacts")?;
+    let g = home.geometry().clone();
+    let rt = Arc::new(Runtime::load_filtered(&home, |n| {
+        n.contains("_b1_") || n.ends_with("_b1")
+    })?);
+
+    // swarm with replicas: each half of the model hosted by 2 servers
+    let half = g.n_layers / 2;
+    let cluster = LocalCluster::new();
+    for (name, span) in [
+        ("alpha", 0..half),
+        ("alpha-backup", 0..half),
+        ("beta", half..g.n_layers),
+        ("beta-backup", half..g.n_layers),
+    ] {
+        cluster.add(ServerNode::start(name, &home, rt.clone(), span, Precision::F16, false)?);
+    }
+
+    let weights = Weights::load(&home, Precision::F16)?;
+    let head = LocalHead::new(&home, rt, &weights)?;
+
+    let prefix: Vec<i32> = vec![3, 14, 15, 92, 65, 35, 89, 79];
+    let n_new = 12;
+    let cfg = SessionConfig {
+        n_blocks: g.n_layers,
+        batch: 1,
+        prefill_width: 128,
+        prefix_len: prefix.len(),
+        max_new: n_new,
+        route: RouteQuery {
+            n_blocks: g.n_layers,
+            msg_bytes: (g.hidden * 4) as u64,
+            beam_width: 8,
+            queue_penalty_s: 0.05,
+        },
+        max_recoveries: 5,
+    };
+
+    // --- reference run, no failures -------------------------------------
+    let reference = generate(&cluster, &head, &cfg, &prefix, n_new, 1, &[])?;
+    println!("reference tokens: {:?}", reference.0);
+
+    // --- chaos run: kill a different server every 4 steps ----------------
+    println!("\nchaos run: killing one in-chain server at steps 3 and 7");
+    let chaos = generate(&cluster, &head, &cfg, &prefix, n_new, 2, &[3, 7])?;
+    println!("chaos tokens:     {:?}", chaos.0);
+    println!("recoveries: {}", chaos.1);
+
+    assert_eq!(reference.0, chaos.0, "tokens must be identical after failover");
+    println!("\nOK: {} failovers, output bit-identical — KV replay works", chaos.1);
+    Ok(())
+}
+
+/// Generate n_new tokens; kill the first hop's current server right
+/// before the steps listed in `kill_at`.
+fn generate(
+    cluster: &LocalCluster,
+    head: &LocalHead,
+    cfg: &SessionConfig,
+    prefix: &[i32],
+    n_new: usize,
+    session_id: u64,
+    kill_at: &[usize],
+) -> petals::Result<(Vec<i32>, usize)> {
+    // revive everything from previous runs
+    for id in cluster.ids() {
+        cluster.revive(id);
+    }
+    let mut session = InferenceSession::open(cluster, cfg.clone(), session_id)?;
+    let w = cfg.prefill_width;
+    let mut ids = vec![0i32; w];
+    ids[..prefix.len()].copy_from_slice(prefix);
+    let h0 = head.embed(&Tensor::from_i32(&[1, w], &ids))?;
+    let h_pre = session.prefill(h0)?;
+    let hidden = head.hidden;
+    let p = prefix.len();
+    let mut last =
+        Tensor::from_f32(&[1, hidden], &h_pre.as_f32()[(p - 1) * hidden..p * hidden]);
+    let mut tokens = Vec::with_capacity(n_new);
+    for step in 0..n_new {
+        if kill_at.contains(&step) {
+            // kill whichever server currently serves the first hop
+            let victim = session.chain()[step % session.chain().len()].server;
+            println!("  step {step}: killing {}", victim.short());
+            cluster.kill(victim);
+        }
+        let logits = head.lm_head(&last)?;
+        let next = Sampler::Greedy.sample(&logits);
+        tokens.push(next[0]);
+        let h = head.embed(&Tensor::from_i32(&[1, 1], &next))?;
+        let out = session.step(h)?;
+        last = Tensor::from_f32(&[1, hidden], out.as_f32());
+    }
+    let rec = session.recoveries();
+    session.close();
+    Ok((tokens, rec))
+}

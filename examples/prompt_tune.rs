@@ -1,0 +1,87 @@
+//! Distributed soft prompt tuning (§2.2, Figure 4): the client owns
+//! trainable prompts + a classification head; servers run frozen blocks
+//! forward AND backward, returning activation gradients.
+//!
+//! Task: synthetic 2-class sequence classification — class decided by
+//! which half of the vocabulary dominates the sequence. Real PJRT
+//! compute for every block fwd/bwd; loss curve printed per step.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example prompt_tune
+//! ```
+
+use petals::config::Rng;
+use petals::coordinator::routing::RouteQuery;
+use petals::finetune::PromptTuner;
+use petals::model::tensor::Tensor;
+use petals::model::{ModelHome, Precision, Weights};
+use petals::runtime::Runtime;
+use petals::server::local::spawn_even_swarm;
+use std::sync::Arc;
+
+fn main() -> petals::Result<()> {
+    let home = ModelHome::open("artifacts")?;
+    let g = home.geometry().clone();
+    // fine-tuning entries are exported at batch 4, seq 64
+    let (b, s) = (4usize, 64usize);
+    println!("== distributed soft prompt tuning (batch {b}, seq {s}) ==");
+
+    let rt = Arc::new(Runtime::load_filtered(&home, |n| {
+        n == format!("embed_b{b}_s{s}")
+            || n == format!("block_prefill_b{b}_s{s}")
+            || n == format!("block_bwd_b{b}_s{s}")
+    })?);
+
+    // servers host frozen blocks (2 servers, f16 — backward needs f16)
+    let swarm = spawn_even_swarm(&home, rt.clone(), 2, Precision::F16)?;
+    let weights = Weights::load(&home, Precision::F16)?;
+    let head = petals::coordinator::client::LocalHead::new(&home, rt.clone(), &weights)?;
+
+    let n_prompts = 4;
+    let n_classes = 2;
+    let mut tuner = PromptTuner::new(n_prompts, g.hidden, n_classes, 0.01, 0);
+    let route = RouteQuery {
+        n_blocks: g.n_layers,
+        msg_bytes: (b * s * g.hidden * 4) as u64,
+        beam_width: 8,
+        queue_penalty_s: 0.05,
+    };
+
+    let mut rng = Rng::new(42);
+    let half = (g.vocab / 2) as i32;
+    println!("step |  loss  | accuracy");
+    let mut final_acc = 0.0;
+    for step in 0..30 {
+        // synthetic batch: class 0 draws tokens from the low half of the
+        // vocab, class 1 from the high half
+        let mut ids = vec![0i32; b * s];
+        let mut labels = Vec::with_capacity(b);
+        for bi in 0..b {
+            let cls = bi % 2;
+            labels.push(cls);
+            for si in n_prompts..s {
+                let t = rng.below(half as u64) as i32;
+                ids[bi * s + si] = if cls == 0 { t } else { t + half };
+            }
+        }
+        // client-side embedding (prompt slots get overwritten by the
+        // trainable prompt vectors inside train_step)
+        let embeds = head.embed(&Tensor::from_i32(&[b, s], &ids))?;
+        let report = tuner.train_step(&swarm, &route, &embeds, &labels, s - 1)?;
+        final_acc = report.accuracy;
+        println!("{step:4} | {:.4} | {:.2}", report.loss, report.accuracy);
+    }
+    println!("\nfinal train accuracy: {final_acc:.2}");
+
+    // share the trained module on the hub (§2.3)
+    let hub = petals::hub::Hub::open(std::env::temp_dir().join("petals_hub_demo"))?;
+    let mut tags = std::collections::BTreeMap::new();
+    tags.insert("task".to_string(), "synthetic-cls".to_string());
+    tags.insert("base".to_string(), "bloom-mini@1".to_string());
+    tags.insert("method".to_string(), "prompt-tuning".to_string());
+    let hash = hub.publish("demo/synthetic-cls-prompts", &tuner.export_bytes(), &tags, "30 steps")?;
+    println!("published to hub: demo/synthetic-cls-prompts @ {hash}");
+    let found = hub.search(&tags);
+    println!("hub search by tags found {} module(s)", found.len());
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Quickstart: generate text over an in-process Petals swarm.
+//!
+//! The Rust rendition of the paper's Figure 2 snippet: the client embeds
+//! tokens locally, streams hidden states through a chain of servers that
+//! each host a span of Transformer blocks, and samples next tokens from
+//! the locally-computed logits.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use petals::coordinator::client::{LocalHead, Sampler, SwarmGenerator};
+use petals::coordinator::routing::RouteQuery;
+use petals::coordinator::session::SessionConfig;
+use petals::model::{ModelHome, Precision, Weights};
+use petals::runtime::Runtime;
+use petals::server::local::spawn_even_swarm;
+use std::sync::Arc;
+
+fn main() -> petals::Result<()> {
+    // 1. open the AOT artifacts (built once by `make artifacts`)
+    let home = ModelHome::open("artifacts")?;
+    let g = home.geometry().clone();
+    println!("model: {} layers, hidden {}, vocab {}", g.n_layers, g.hidden, g.vocab);
+
+    // 2. compile the batch-1 entry points once
+    let rt = Arc::new(Runtime::load_filtered(&home, |n| {
+        n.contains("_b1_") || n.ends_with("_b1")
+    })?);
+
+    // 3. spawn a local swarm: 2 servers, each hosting half the blocks
+    let swarm = spawn_even_swarm(&home, rt.clone(), 2, Precision::F16)?;
+    println!("swarm: {} servers", swarm.ids().len());
+
+    // 4. the client keeps embeddings + LM head local (§2.1)
+    let weights = Weights::load(&home, Precision::F16)?;
+    let head = LocalHead::new(&home, rt, &weights)?;
+
+    // 5. an inference session: chain formation, KV caches, recovery are
+    //    transparent (Figure 2's `model.inference_session()`)
+    let prefix: Vec<i32> = vec![11, 22, 33, 44, 55, 66, 77, 88];
+    let cfg = SessionConfig {
+        n_blocks: g.n_layers,
+        batch: 1,
+        prefill_width: 128,
+        prefix_len: prefix.len(),
+        max_new: 32,
+        route: RouteQuery {
+            n_blocks: g.n_layers,
+            msg_bytes: (g.hidden * 4) as u64,
+            beam_width: 8,
+            queue_penalty_s: 0.05,
+        },
+        max_recoveries: 3,
+    };
+    let generator = SwarmGenerator {
+        swarm: &swarm,
+        head: &head,
+        cfg,
+        sampler: Sampler::Greedy,
+    };
+    let out = generator.generate(&[prefix.clone()], 16, 1)?;
+
+    println!("prefix:    {prefix:?}");
+    println!("generated: {:?}", out.tokens[0]);
+    println!(
+        "{} steps in {:.2?} = {:.2} steps/s",
+        out.steps,
+        out.wall,
+        out.steps as f64 / out.wall.as_secs_f64()
+    );
+    Ok(())
+}

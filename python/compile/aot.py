@@ -1,0 +1,275 @@
+"""AOT compile path: lower every entry point to HLO text + export weights.
+
+Run once via `make artifacts` (no-op when inputs are unchanged); Python
+never appears on the request path. Outputs under artifacts/:
+
+  <entry>.hlo.txt        HLO text per entry point (NOT serialized proto:
+                         the xla crate's xla_extension 0.5.1 rejects
+                         jax>=0.5 64-bit instruction ids; the text parser
+                         reassigns ids — see /opt/xla-example/README.md)
+  manifest.json          geometry + per-entry arg/output shapes + weight
+                         tensor index (shapes, dtypes, files)
+  weights/...            f32 little-endian tensor files
+  weights_int8/...       LLM.int8() packs (w_q/w_scale/w_out/mask)
+  golden/...             input/output vectors for the rust numerics tests
+
+Entry-point naming: <fn>_b{B}[_s{S}|_c{C}] — static shapes per artifact;
+the rust runtime picks the artifact matching the request shape.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dt(x):
+    return {"float32": "f32", "int8": "i8", "int32": "i32"}[str(x.dtype)]
+
+
+def _arg_meta(args):
+    return [{"shape": list(a.shape), "dtype": _dt(a)} for a in args]
+
+
+def save_tensor(root, rel, arr):
+    path = os.path.join(root, rel)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    np.asarray(arr).tofile(path)
+    return {"file": rel, "shape": list(arr.shape), "dtype": _dt(arr)}
+
+
+class Emitter:
+    def __init__(self, cfg, out_dir):
+        self.cfg = cfg
+        self.out = out_dir
+        self.entries = {}
+
+    def emit(self, name, fn, arg_specs, golden_args=None):
+        """Lower fn(*arg_specs) to <name>.hlo.txt; optionally run it on
+        golden_args and save in/out vectors for the rust numerics test."""
+        lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *arg_specs)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        self.entries[name] = {
+            "file": f"{name}.hlo.txt",
+            "args": _arg_meta(arg_specs),
+            "outputs": _arg_meta(outs),
+        }
+        if golden_args is not None:
+            res = fn(*golden_args)
+            if not isinstance(res, (tuple, list)):
+                res = (res,)
+            g = {"inputs": [], "outputs": []}
+            for i, a in enumerate(golden_args):
+                g["inputs"].append(
+                    save_tensor(self.out, f"golden/{name}/in{i}.bin", a))
+            for i, r in enumerate(res):
+                g["outputs"].append(
+                    save_tensor(self.out, f"golden/{name}/out{i}.bin", r))
+            self.entries[name]["golden"] = g
+        print(f"  emitted {name}: {len(text)} chars")
+
+
+def export_weights(cfg, params, masks, out_dir):
+    """Write f32 + int8 weight tensors; return the manifest index."""
+    idx = {"embedding": save_tensor(out_dir, "weights/embedding.bin",
+                                    params["embedding"])}
+    for n in ("ln_emb_g", "ln_emb_b", "ln_f_g", "ln_f_b"):
+        idx[n] = save_tensor(out_dir, f"weights/{n}.bin", params[n])
+    blocks = []
+    for i, bp in enumerate(params["blocks"]):
+        entry = {}
+        for n in M.BLOCK_PARAM_NAMES:
+            entry[n] = save_tensor(out_dir, f"weights/block{i}/{n}.bin", bp[n])
+        blocks.append(entry)
+    idx["blocks"] = blocks
+
+    blocks8 = []
+    for i, (bp, mask) in enumerate(zip(params["blocks"], masks)):
+        p8 = M.prepare_int8_params(bp, mask)
+        entry = {}
+        for n in M.BLOCK_PARAM_NAMES:
+            if n in M.INT8_MATMULS:
+                w_q, w_s, w_o, m = p8[n]
+                entry[n] = {
+                    "w_q": save_tensor(out_dir, f"weights_int8/block{i}/{n}.w_q.bin", w_q),
+                    "w_scale": save_tensor(out_dir, f"weights_int8/block{i}/{n}.w_scale.bin", w_s),
+                    "w_out": save_tensor(out_dir, f"weights_int8/block{i}/{n}.w_out.bin", w_o),
+                    "mask": save_tensor(out_dir, f"weights_int8/block{i}/{n}.mask.bin", m),
+                }
+            else:
+                entry[n] = {"ref": f"weights/block{i}/{n}.bin"}
+        blocks8.append(entry)
+    idx["blocks_int8"] = blocks8
+    return idx
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--hidden", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--heads", type=int, default=8)
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--decode-batches", type=int, nargs="+",
+                    default=[1, 8, 32])
+    ap.add_argument("--prefill-shapes", type=str, nargs="+",
+                    default=["1x128", "8x128", "32x128", "4x64"],
+                    help="BxS prefill entry points")
+    args = ap.parse_args()
+
+    cfg = M.ModelConfig(hidden=args.hidden, n_layers=args.layers,
+                        n_heads=args.heads, vocab=args.vocab,
+                        max_seq=args.max_seq)
+    os.makedirs(args.out, exist_ok=True)
+    em = Emitter(cfg, args.out)
+
+    print(f"BLOOM-mini: {cfg} ({cfg.params_per_block() * cfg.n_layers + cfg.vocab * cfg.hidden:,} params)")
+    params = M.init_model_params(cfg, seed=args.seed)
+    key = jax.random.PRNGKey(1234)
+    calib_ids = jax.random.randint(key, (2, 64), 0, cfg.vocab)
+    masks = M.calibrate_outlier_masks(cfg, params, calib_ids)
+    weights_idx = export_weights(cfg, params, masks, args.out)
+
+    h, hh, d, c, v = cfg.hidden, cfg.n_heads, cfg.head_dim, cfg.max_seq, cfg.vocab
+    bp0 = params["blocks"][0]
+    flat0 = [bp0[n] for n in M.BLOCK_PARAM_NAMES]
+    flat0_8 = M.flatten_int8_params(M.prepare_int8_params(bp0, masks[0]))
+    pshapes = {n: p.shape for n, p in zip(M.BLOCK_PARAM_NAMES, flat0)}
+    block_specs = [spec(pshapes[n]) for n in M.BLOCK_PARAM_NAMES]
+    block8_specs = [spec(t.shape, t.dtype) for t in flat0_8]
+
+    gkey = jax.random.PRNGKey(99)
+    prefills = [tuple(map(int, s.split("x"))) for s in args.prefill_shapes]
+
+    # --- embed + lm_head, all batch sizes used anywhere -------------------
+    embed_shapes = sorted({(b, s) for b, s in prefills} |
+                          {(b, 1) for b in args.decode_batches})
+    for b, s in embed_shapes:
+        g_ids = jax.random.randint(gkey, (b, s), 0, v)
+        em.emit(f"embed_b{b}_s{s}",
+                lambda ids, e, g, bb: M.embed_fn(cfg, ids, e, g, bb),
+                [spec((b, s), jnp.int32), spec((v, h)), spec((h,)), spec((h,))],
+                golden_args=[g_ids, params["embedding"],
+                             params["ln_emb_g"], params["ln_emb_b"]])
+    for b in sorted({b for b, _ in embed_shapes}):
+        g_h = jax.random.normal(gkey, (b, h))
+        em.emit(f"lm_head_b{b}",
+                lambda x, g, bb, e: M.lm_head_fn(cfg, x, g, bb, e),
+                [spec((b, h)), spec((h,)), spec((h,)), spec((v, h))],
+                golden_args=[g_h, params["ln_f_g"], params["ln_f_b"],
+                             params["embedding"]])
+
+    # --- block prefill (f32 + int8) ---------------------------------------
+    for b, s in prefills:
+        g_h = jax.random.normal(gkey, (b, s, h)) * 0.5
+        em.emit(f"block_prefill_b{b}_s{s}",
+                lambda x, *p: M.block_prefill_fn(cfg, x, *p),
+                [spec((b, s, h))] + block_specs,
+                golden_args=([g_h] + flat0) if b <= 4 else None)
+    # int8 prefill for every decode batch size (servers hosting int8
+    # spans must prefill sessions at any supported batch)
+    for b in args.decode_batches:
+        s = prefills[0][1]
+        g_h = jax.random.normal(gkey, (b, s, h)) * 0.5
+        em.emit(f"block_prefill_int8_b{b}_s{s}",
+                lambda x, *p: M.block_prefill_int8_fn(cfg, x, *p),
+                [spec((b, s, h))] + block8_specs,
+                golden_args=([g_h] + list(flat0_8)) if b == 1 else None)
+
+    # --- block decode (f32 + int8) ----------------------------------------
+    for b in args.decode_batches:
+        g_h = jax.random.normal(gkey, (b, 1, h)) * 0.5
+        g_k = jax.random.normal(gkey, (b, hh, c, d)) * 0.5
+        g_v = jax.random.normal(gkey, (b, hh, c, d)) * 0.5
+        g_len = jnp.array([7], jnp.int32)
+        dec_specs = [spec((b, 1, h)), spec((b, hh, c, d)), spec((b, hh, c, d)),
+                     spec((1,), jnp.int32)]
+        em.emit(f"block_decode_b{b}_c{c}",
+                lambda x, kc, vc, ln, *p: M.block_decode_fn(cfg, x, kc, vc, ln, *p),
+                dec_specs + block_specs,
+                golden_args=([g_h, g_k, g_v, g_len] + flat0) if b == 1 else None)
+        em.emit(f"block_decode_int8_b{b}_c{c}",
+                lambda x, kc, vc, ln, *p: M.block_decode_int8_fn(cfg, x, kc, vc, ln, *p),
+                dec_specs + block8_specs,
+                golden_args=([g_h, g_k, g_v, g_len] + list(flat0_8)) if b == 1 else None)
+
+    # --- backward (fine-tuning) --------------------------------------------
+    fb, fs = prefills[-1]  # finetune shape (default 4x64)
+    g_h = jax.random.normal(gkey, (fb, fs, h)) * 0.5
+    g_g = jax.random.normal(gkey, (fb, fs, h)) * 0.1
+    em.emit(f"block_bwd_b{fb}_s{fs}",
+            lambda x, gy, *p: M.block_bwd_fn(cfg, x, gy, *p),
+            [spec((fb, fs, h)), spec((fb, fs, h))] + block_specs,
+            golden_args=[g_h, g_g] + flat0)
+
+    # --- comm compression (pallas quant on the wire format) ----------------
+    for b, s in [(1, 1), (1, 128)]:
+        n = b * s * h
+        g_x = jax.random.normal(gkey, (b, s, h)) * 2.0
+        em.emit(f"quantize_hidden_b{b}_s{s}",
+                lambda x: M.quantize_hidden_fn(cfg, x),
+                [spec((b, s, h))], golden_args=[g_x])
+        g_q, g_s = M.quantize_hidden_fn(cfg, g_x)
+        em.emit(f"dequantize_hidden_b{b}_s{s}",
+                lambda q, sc: M.dequantize_hidden_fn(cfg, q, sc, (b, s, h)),
+                [spec((n,), jnp.int8), spec((n // 64,), jnp.float32)],
+                golden_args=[g_q, g_s])
+
+    # --- whole-model golden generation (end-to-end rust check) -------------
+    gen_prefix = jax.random.randint(jax.random.PRNGKey(5), (1, 8), 0, v)
+    gen_out = M.generate_greedy(cfg, params, gen_prefix, 8)
+    golden_gen = {
+        "prefix": save_tensor(args.out, "golden/generate/prefix.bin",
+                              gen_prefix.astype(np.int32)),
+        "tokens": save_tensor(args.out, "golden/generate/tokens.bin",
+                              gen_out.astype(np.int32)),
+    }
+    logits = M.forward_full(cfg, params, gen_prefix)
+    golden_gen["logits_last"] = save_tensor(
+        args.out, "golden/generate/logits_last.bin", logits[:, -1])
+
+    manifest = {
+        "config": {
+            "hidden": cfg.hidden, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "head_dim": cfg.head_dim,
+            "vocab": cfg.vocab, "max_seq": cfg.max_seq, "ffn": cfg.ffn,
+            "block_bytes_f16": cfg.block_bytes("f16"),
+            "block_bytes_int8": cfg.block_bytes("int8"),
+            "params_per_block": cfg.params_per_block(),
+        },
+        "entries": em.entries,
+        "weights": weights_idx,
+        "golden_generate": golden_gen,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(em.entries)} entries -> {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Pallas kernel: fused single-token decode attention with ALiBi.
+
+The inference hot path of a Petals server (§2.1) is one-token-at-a-time
+generation against a per-session KV cache. Each decode step reads the
+whole cache once; on a real accelerator this is bandwidth-bound, so the
+kernel is organized as a single pass over the sequence axis in VMEM-sized
+tiles with an online (streaming) softmax — the same structure Flash-
+style decoders use, adapted to TPU:
+
+  grid (H, S/BS); each step loads k/v tiles [B, BS, D] into VMEM,
+  computes logits + ALiBi bias on the VPU, and folds them into running
+  (max, sum, weighted-V) accumulators carried in scratch refs. The whole
+  BATCH is processed inside one grid instance (§Perf iteration 2: a
+  (B, H, S/BS) grid serialized over batch under interpret=True and on
+  TPU wastes VPU lanes; batching the block keeps lanes full and makes
+  throughput grow with B, which is what Table 2 measures).
+
+ALiBi (BLOOM's positional scheme): logits[h, s] += -slope_h * (cur - s),
+masked to s < cache_len. cache_len arrives as a tiny i32 tensor because
+AOT artifacts use static shapes.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Max sequence tile per grid step. B x 128 keys x 64 head-dim x 4 B =
+# 32 KiB per k tile per example — double-buffers in VMEM up to B=32.
+BS = 128
+
+NEG_INF = -1e30
+
+
+def _alibi_slopes(n_heads):
+    assert n_heads & (n_heads - 1) == 0, "power-of-two heads only"
+    start = 2.0 ** (-(2.0 ** -(math.log2(n_heads) - 3)))
+    return jnp.array([start * (start ** i) for i in range(n_heads)],
+                     dtype=jnp.float32)
+
+
+def _seq_tile(s):
+    bs = min(BS, s)
+    assert s % bs == 0, (s, bs)
+    return bs
+
+
+def _make_decode_kernel(bs):
+    """Build the kernel body for a given sequence-tile size."""
+
+    def _decode_kernel(len_ref, slope_ref, q_ref, k_ref, v_ref,
+                       o_ref, m_ref, l_ref, acc_ref):
+        """One (head, seq-tile) step of streaming-softmax decode over the
+        full batch. Accumulators fold across the seq-tile axis (innermost
+        grid dim); the final tile writes the normalized output."""
+        s_idx = pl.program_id(1)
+        n_s = pl.num_programs(1)
+
+        @pl.when(s_idx == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        q = q_ref[:, 0, :]                       # [B, D]
+        k = k_ref[:, 0, :, :]                    # [B, bs, D]
+        v = v_ref[:, 0, :, :]                    # [B, bs, D]
+        cache_len = len_ref[0]
+        slope = slope_ref[0]
+
+        d = q.shape[-1]
+        scale = 1.0 / jnp.sqrt(jnp.float32(d))
+        logits = jnp.einsum("bd,bsd->bs", q, k) * scale   # [B, bs]
+
+        pos = s_idx * bs + jax.lax.iota(jnp.int32, bs)
+        dist = (cache_len - 1) - pos
+        logits = logits - slope * dist.astype(jnp.float32)[None, :]
+        logits = jnp.where((pos < cache_len)[None, :], logits, NEG_INF)
+
+        # Online softmax fold (per batch row).
+        m_prev = m_ref[...]                                # [B]
+        m_cur = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)                    # [B]
+        p = jnp.exp(logits - m_cur[:, None])               # [B, bs]
+        l_cur = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_cur = acc_ref[...] * alpha[:, None] + jnp.einsum("bs,bsd->bd", p, v)
+
+        m_ref[...] = m_cur
+        l_ref[...] = l_cur
+        acc_ref[...] = acc_cur
+
+        @pl.when(s_idx == n_s - 1)
+        def _finish():
+            o_ref[:, 0, :] = acc_ref[...] / l_ref[...][:, None]
+
+    return _decode_kernel
+
+
+@functools.partial(jax.jit, static_argnames=())
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """Single-token ALiBi attention over the KV cache.
+
+    q: [B, H, D];  k_cache, v_cache: [B, H, S, D];
+    cache_len: i32[] or i32[1] — number of valid positions (current token
+    already written at cache_len-1). Returns [B, H, D] f32.
+    """
+    b, h, s, d = k_cache.shape
+    bs = _seq_tile(s)
+    len_arr = jnp.asarray(cache_len, jnp.int32).reshape(1)
+    slopes = _alibi_slopes(h)
+
+    return pl.pallas_call(
+        _make_decode_kernel(bs),
+        grid=(h, s // bs),
+        in_specs=[
+            pl.BlockSpec((1,), lambda j, t: (0,)),
+            pl.BlockSpec((1,), lambda j, t: (j,)),
+            pl.BlockSpec((b, 1, d), lambda j, t: (0, j, 0)),
+            pl.BlockSpec((b, 1, bs, d), lambda j, t: (0, j, t, 0)),
+            pl.BlockSpec((b, 1, bs, d), lambda j, t: (0, j, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, 1, d), lambda j, t: (0, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((b,), jnp.float32),   # running max
+            pltpu.VMEM((b,), jnp.float32),   # running sum
+            pltpu.VMEM((b, d), jnp.float32), # weighted V accumulator
+        ],
+        interpret=True,
+    )(len_arr, slopes, q, k_cache, v_cache)

@@ -1,0 +1,103 @@
+"""Pallas kernel: dynamic blockwise int8 quantization (comm compression).
+
+Petals §3.1 "Compressing communication buffers": hidden states exchanged
+between pipeline stages are quantized with dynamic blockwise quantization
+(Dettmers et al., 2022b), halving bandwidth with no noticeable quality
+effect. This file implements the quantize and dequantize halves as Pallas
+kernels so they lower into the same HLO as the surrounding model code and
+run on-device right before/after the network boundary.
+
+Layout (must match kernels/ref.py and rust/src/quant/):
+  payload: int8[n]           (n % 64 == 0)
+  scales:  f32[n / 64]       absmax-of-block / 127
+
+TPU mapping: a pure VPU kernel — per-block absmax is a lane reduction over
+a (TILE_BLOCKS, 64) VMEM tile; no MXU involvement. The tile size is chosen
+so one (in, out, scales) triple stays far under VMEM (~16 MB): 512 blocks
+x 64 elems x 4 B = 128 KiB in, 32 KiB out, 2 KiB scales.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import QUANT_BLOCK
+
+# Blocks of QUANT_BLOCK elements processed by one grid step.
+TILE_BLOCKS = 512
+
+
+def _quantize_kernel(x_ref, q_ref, s_ref):
+    """One grid step: quantize TILE_BLOCKS rows of QUANT_BLOCK elements."""
+    x = x_ref[...]  # [TILE_BLOCKS, QUANT_BLOCK] f32
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.where(absmax == 0.0, 1.0, absmax / 127.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale[:, 0].astype(jnp.float32)
+
+
+def _dequantize_kernel(q_ref, s_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)  # [TILE_BLOCKS, QUANT_BLOCK]
+    o_ref[...] = q * s_ref[...][:, None]
+
+
+def _pad_blocks(n_blocks):
+    """Grid-pad the block count to a multiple of TILE_BLOCKS."""
+    return (n_blocks + TILE_BLOCKS - 1) // TILE_BLOCKS * TILE_BLOCKS
+
+
+@functools.partial(jax.jit, static_argnames=())
+def blockwise_quantize(x):
+    """Quantize a tensor to (int8 payload, f32 block scales) via Pallas.
+
+    x: any shape with size % QUANT_BLOCK == 0. Returns (q[n] int8,
+    scales[n/64] f32) with the flattened layout of ref.blockwise_quantize.
+    """
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    assert n % QUANT_BLOCK == 0, n
+    n_blocks = n // QUANT_BLOCK
+    padded = _pad_blocks(n_blocks)
+    rows = jnp.zeros((padded, QUANT_BLOCK), flat.dtype).at[:n_blocks].set(
+        flat.reshape(n_blocks, QUANT_BLOCK))
+
+    q, s = pl.pallas_call(
+        _quantize_kernel,
+        grid=(padded // TILE_BLOCKS,),
+        in_specs=[pl.BlockSpec((TILE_BLOCKS, QUANT_BLOCK), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((TILE_BLOCKS, QUANT_BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_BLOCKS,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded, QUANT_BLOCK), jnp.int8),
+            jax.ShapeDtypeStruct((padded,), jnp.float32),
+        ],
+        interpret=True,
+    )(rows)
+    return q[:n_blocks].reshape(-1), s[:n_blocks]
+
+
+def blockwise_dequantize(q, scales, shape):
+    """Inverse of blockwise_quantize; returns f32 tensor of `shape`."""
+    n_blocks = scales.shape[0]
+    padded = _pad_blocks(n_blocks)
+    q_rows = jnp.zeros((padded, QUANT_BLOCK), jnp.int8).at[:n_blocks].set(
+        q.reshape(n_blocks, QUANT_BLOCK))
+    s_rows = jnp.zeros((padded,), jnp.float32).at[:n_blocks].set(scales)
+
+    out = pl.pallas_call(
+        _dequantize_kernel,
+        grid=(padded // TILE_BLOCKS,),
+        in_specs=[
+            pl.BlockSpec((TILE_BLOCKS, QUANT_BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_BLOCKS,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_BLOCKS, QUANT_BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, QUANT_BLOCK), jnp.float32),
+        interpret=True,
+    )(q_rows, s_rows)
+    return out[:n_blocks].reshape(shape)

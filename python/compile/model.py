@@ -1,0 +1,423 @@
+"""Layer 2: BLOOM-architecture Transformer in JAX (build-time only).
+
+This defines "BLOOM-mini": the exact BLOOM block structure (pre-LN,
+ALiBi attention, GELU MLP, tied embeddings with a word-embedding
+layernorm) at a configurable small geometry, with synthetic weights.
+Petals' claims are about the *serving system*; the substitution of
+synthetic weights for the 350 GB BLOOM-176B checkpoint is recorded in
+DESIGN.md §Substitutions.
+
+Every public `*_fn` here is an AOT entry point lowered by aot.py to
+artifacts/<name>.hlo.txt and executed from the Rust runtime
+(rust/src/runtime/). Entry points take flat positional tensor arguments
+(no pytrees) so the Rust side can feed PJRT literals directly.
+
+Two weight formats:
+  f16 path  — plain f32 tensors (stands in for the paper's 16-bit path;
+              CPU PJRT computes in f32 either way, the reproduced
+              quantity is the int8-vs-16bit *delta*).
+  int8 path — LLM.int8() decomposition per matmul: (w_q int8, w_scale
+              f32[N], w_out f32 outlier rows, mask f32[K]) produced by
+              `prepare_int8_params` from the same f32 weights, consumed
+              by the Pallas kernel in kernels/int8_matmul.py.
+
+Cache discipline (static shapes for AOT): the KV cache is a fixed
+capacity-C buffer; `cache_len` i32[1] counts valid positions. A
+`block_decode` call writes the new token's K/V at index cache_len and
+attends over cache_len+1 positions via the Pallas decode kernel.
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_kernel
+from .kernels import int8_matmul as int8_kernel
+from .kernels import quantize as quant_kernel
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """BLOOM-mini geometry. hidden % 64 == 0 and power-of-two heads keep
+    the quantization block layout and ALiBi slope recipe valid."""
+    hidden: int = 512
+    n_layers: int = 8
+    n_heads: int = 8
+    vocab: int = 2048
+    max_seq: int = 256
+    ffn_mult: int = 4
+
+    @property
+    def head_dim(self):
+        return self.hidden // self.n_heads
+
+    @property
+    def ffn(self):
+        return self.hidden * self.ffn_mult
+
+    def params_per_block(self):
+        h, f = self.hidden, self.ffn
+        return 4 * h + 3 * h * h + 3 * h + h * h + h + 2 * h * f + f + h
+
+    def block_bytes(self, precision):
+        """Server-side memory accounting (capacity planning in rust).
+
+        int8: matmul weights 1 B/param + ~0.4% outlier rows in f32 +
+        per-output-column scales; vectors stay f32.
+        """
+        h, f = self.hidden, self.ffn
+        matmul = h * 3 * h + h * h + h * f + f * h
+        vectors = self.params_per_block() - matmul
+        if precision == "int8":
+            return int(matmul * 1.004 + vectors * 4 + (3 * h + h + f + h) * 4)
+        return matmul * 4 + vectors * 4
+
+
+# Fixed argument order for block parameters (the rust side mirrors this in
+# rust/src/model/params.rs — keep in sync).
+BLOCK_PARAM_NAMES = (
+    "ln1_g", "ln1_b", "w_qkv", "b_qkv", "w_o", "b_o",
+    "ln2_g", "ln2_b", "w_fc", "b_fc", "w_proj", "b_proj",
+)
+
+# Matmul weights that get the int8 treatment.
+INT8_MATMULS = ("w_qkv", "w_o", "w_fc", "w_proj")
+
+
+def block_param_shapes(cfg):
+    h, f = cfg.hidden, cfg.ffn
+    return {
+        "ln1_g": (h,), "ln1_b": (h,),
+        "w_qkv": (h, 3 * h), "b_qkv": (3 * h,),
+        "w_o": (h, h), "b_o": (h,),
+        "ln2_g": (h,), "ln2_b": (h,),
+        "w_fc": (h, f), "b_fc": (f,),
+        "w_proj": (f, h), "b_proj": (h,),
+    }
+
+
+def init_block_params(cfg, key):
+    """BLOOM-style init: N(0, 0.02) matmuls (residual projections scaled
+    by 1/sqrt(2L)), unit LN gains, zero biases."""
+    shapes = block_param_shapes(cfg)
+    keys = jax.random.split(key, len(INT8_MATMULS))
+    params = {}
+    std = 0.02
+    for i, name in enumerate(INT8_MATMULS):
+        s = std / math.sqrt(2 * cfg.n_layers) if name in ("w_o", "w_proj") else std
+        params[name] = jax.random.normal(keys[i], shapes[name], jnp.float32) * s
+    for name in BLOCK_PARAM_NAMES:
+        if name in params:
+            continue
+        if name.endswith("_g"):
+            params[name] = jnp.ones(shapes[name], jnp.float32)
+        else:
+            params[name] = jnp.zeros(shapes[name], jnp.float32)
+    return params
+
+
+def init_model_params(cfg, seed=0):
+    """Full model: embedding (+LN) shared with the LM head, final LN, and
+    per-block params."""
+    root = jax.random.PRNGKey(seed)
+    emb_key, *block_keys = jax.random.split(root, cfg.n_layers + 1)
+    return {
+        "embedding": jax.random.normal(
+            emb_key, (cfg.vocab, cfg.hidden), jnp.float32) * 0.02,
+        "ln_emb_g": jnp.ones((cfg.hidden,), jnp.float32),
+        "ln_emb_b": jnp.zeros((cfg.hidden,), jnp.float32),
+        "ln_f_g": jnp.ones((cfg.hidden,), jnp.float32),
+        "ln_f_b": jnp.zeros((cfg.hidden,), jnp.float32),
+        "blocks": [init_block_params(cfg, k) for k in block_keys],
+    }
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _gelu(x):
+    # BLOOM uses the tanh approximation.
+    return 0.5 * x * (1.0 + jnp.tanh(
+        math.sqrt(2.0 / math.pi) * (x + 0.044715 * x ** 3)))
+
+
+def _split_heads(x, n_heads):
+    b, s, h = x.shape
+    d = h // n_heads
+    return x.reshape(b, s, n_heads, d).transpose(0, 2, 1, 3)  # [B,Hh,S,D]
+
+
+def _merge_heads(x):
+    b, hh, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, hh * d)
+
+
+def _prefill_attention(q, k, v, n_heads):
+    """Causal ALiBi attention over a full prefix (plain jnp: prefill is
+    compute-bound and XLA fuses it well; the Pallas kernel owns decode)."""
+    b, hh, s, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    slopes = kref.alibi_slopes(n_heads)
+    bias = -slopes[None, :, None, None] * (qpos - kpos)[None, None].astype(jnp.float32)
+    logits = logits + bias
+    logits = jnp.where((kpos <= qpos)[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# Matmul dispatch: f32 path vs int8-decomposed path
+# ---------------------------------------------------------------------------
+
+def _mm(x2d, w):
+    return x2d @ w
+
+
+def _mm_int8(x2d, wpack):
+    w_q, w_scale, w_out, mask = wpack
+    return int8_kernel.int8_matmul(x2d, w_q, w_scale, w_out, mask)
+
+
+def prepare_int8_params(block_params, outlier_masks):
+    """Convert f32 block params to the int8 format.
+
+    outlier_masks: dict matmul-name -> f32[K] in {0,1} from calibration
+    (see `calibrate_outlier_masks`). Non-matmul params pass through.
+    """
+    out = {}
+    for name in BLOCK_PARAM_NAMES:
+        p = block_params[name]
+        if name in INT8_MATMULS:
+            mask = outlier_masks[name]
+            w_q, w_scale, w_out = kref.int8_matmul_prepare_weights(
+                p, mask.astype(bool))
+            out[name] = (w_q, w_scale.astype(jnp.float32), w_out,
+                         mask.astype(jnp.float32))
+        else:
+            out[name] = p
+    return out
+
+
+def _quantile_mask(x, quantile):
+    amax = jnp.max(jnp.abs(x.reshape(-1, x.shape[-1])), axis=0)
+    thresh = jnp.quantile(amax, quantile)
+    return (amax > thresh).astype(jnp.float32)
+
+
+def calibrate_outlier_masks(cfg, params, sample_ids, quantile=0.995):
+    """Run the f32 model on calibration tokens and mark, per matmul, the
+    top-(1-quantile) feature dims by activation absmax as outliers.
+
+    Synthetic-weight activations rarely exceed the paper's absolute 6.0
+    threshold, so a quantile rule exercises the same mechanism (~0.5% of
+    dims stay in 16-bit, vs the paper's ~0.1%).
+    """
+    h = embed_fn(cfg, sample_ids, params["embedding"],
+                 params["ln_emb_g"], params["ln_emb_b"])
+    masks_per_block = []
+    for bp in params["blocks"]:
+        b, s = h.shape[:2]
+        masks = {}
+        x = _layernorm(h, bp["ln1_g"], bp["ln1_b"])
+        masks["w_qkv"] = _quantile_mask(x, quantile)
+        qkv = (x.reshape(-1, cfg.hidden) @ bp["w_qkv"] + bp["b_qkv"]) \
+            .reshape(b, s, 3 * cfg.hidden)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        attn = _merge_heads(_prefill_attention(
+            _split_heads(q, cfg.n_heads), _split_heads(k, cfg.n_heads),
+            _split_heads(v, cfg.n_heads), cfg.n_heads))
+        masks["w_o"] = _quantile_mask(attn, quantile)
+        h_mid = h + (attn.reshape(-1, cfg.hidden) @ bp["w_o"] + bp["b_o"]) \
+            .reshape(b, s, cfg.hidden)
+        x2 = _layernorm(h_mid, bp["ln2_g"], bp["ln2_b"])
+        masks["w_fc"] = _quantile_mask(x2, quantile)
+        inner = _gelu(x2.reshape(-1, cfg.hidden) @ bp["w_fc"] + bp["b_fc"])
+        masks["w_proj"] = _quantile_mask(inner, quantile)
+        masks_per_block.append(masks)
+        h, _, _ = block_prefill_fn(cfg, h, *[bp[n] for n in BLOCK_PARAM_NAMES])
+    return masks_per_block
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points
+# ---------------------------------------------------------------------------
+
+def embed_fn(cfg, ids, embedding, ln_g, ln_b):
+    """ids i32[B,S] -> h f32[B,S,H]; BLOOM applies a LN right after the
+    word embedding lookup."""
+    h = jnp.take(embedding, ids, axis=0)
+    return _layernorm(h, ln_g, ln_b)
+
+
+def _block_core(cfg, h, p, mm):
+    """Shared block body; `mm` dispatches f32 vs int8 matmuls.
+    Returns (h_out, k_heads, v_heads) with k/v [B,Hh,S,D]."""
+    b, s, hd = h.shape
+    x = _layernorm(h, p["ln1_g"], p["ln1_b"])
+    qkv = mm(x.reshape(-1, hd), p["w_qkv"]).reshape(b, s, 3 * hd) + p["b_qkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q, k, v = (_split_heads(t, cfg.n_heads) for t in (q, k, v))
+    attn = _merge_heads(_prefill_attention(q, k, v, cfg.n_heads))
+    h = h + mm(attn.reshape(-1, hd), p["w_o"]).reshape(b, s, hd) + p["b_o"]
+    x2 = _layernorm(h, p["ln2_g"], p["ln2_b"])
+    inner = _gelu(mm(x2.reshape(-1, hd), p["w_fc"]).reshape(b, s, -1) + p["b_fc"])
+    h = h + mm(inner.reshape(-1, cfg.ffn), p["w_proj"]).reshape(b, s, hd) + p["b_proj"]
+    return h, k, v
+
+
+def block_prefill_fn(cfg, h, *flat_params):
+    """Prefill: h [B,S,H] + 12 params -> (h_out [B,S,H], k, v [B,Hh,S,D])."""
+    p = dict(zip(BLOCK_PARAM_NAMES, flat_params))
+    return _block_core(cfg, h, p, _mm)
+
+
+def block_prefill_int8_fn(cfg, h, *flat_params):
+    """int8 prefill; params are the int8 packs for matmuls (4 tensors each)
+    and plain tensors otherwise — see `flatten_int8_params` for the order."""
+    p = unflatten_int8_params(flat_params)
+    return _block_core(cfg, h, p, _mm_int8)
+
+
+def _decode_step(cfg, h, k_cache, v_cache, cache_len, p, mm):
+    b, one, hd = h.shape
+    x = _layernorm(h, p["ln1_g"], p["ln1_b"])
+    qkv = mm(x.reshape(b, hd), p["w_qkv"]).reshape(b, 1, 3 * hd) + p["b_qkv"]
+    q, k_new, v_new = jnp.split(qkv, 3, axis=-1)
+    d = cfg.head_dim
+    q = q.reshape(b, cfg.n_heads, d)
+    k_new = k_new.reshape(b, cfg.n_heads, 1, d)
+    v_new = v_new.reshape(b, cfg.n_heads, 1, d)
+    idx = cache_len[0]
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new, (0, 0, idx, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new, (0, 0, idx, 0))
+    attn = attn_kernel.decode_attention(q, k_cache, v_cache, idx + 1)
+    attn = attn.reshape(b, hd)
+    h = h + (mm(attn, p["w_o"]) + p["b_o"]).reshape(b, 1, hd)
+    x2 = _layernorm(h, p["ln2_g"], p["ln2_b"])
+    inner = _gelu(mm(x2.reshape(b, hd), p["w_fc"]) + p["b_fc"])
+    h = h + (mm(inner, p["w_proj"]) + p["b_proj"]).reshape(b, 1, hd)
+    return h, k_cache, v_cache
+
+
+def block_decode_fn(cfg, h, k_cache, v_cache, cache_len, *flat_params):
+    """Decode: h [B,1,H], caches [B,Hh,C,D], cache_len i32[1] (# valid
+    positions BEFORE this token) -> (h_out, k_cache', v_cache')."""
+    p = dict(zip(BLOCK_PARAM_NAMES, flat_params))
+    return _decode_step(cfg, h, k_cache, v_cache, cache_len, p, _mm)
+
+
+def block_decode_int8_fn(cfg, h, k_cache, v_cache, cache_len, *flat_params):
+    p = unflatten_int8_params(flat_params)
+    return _decode_step(cfg, h, k_cache, v_cache, cache_len, p, _mm_int8)
+
+
+def lm_head_fn(cfg, h, ln_g, ln_b, embedding):
+    """h [B,H] -> logits [B,V] (final LN + tied-embedding projection)."""
+    x = _layernorm(h, ln_g, ln_b)
+    return x @ embedding.T
+
+
+def block_bwd_fn(cfg, h_in, g_out, *flat_params):
+    """Backward through one block for distributed fine-tuning (§2.2):
+    servers return grads w.r.t. *activations* only — parameters are
+    frozen server-side (clients own the trainable prompts/heads).
+    h_in, g_out [B,S,H] -> g_in [B,S,H]."""
+    def fwd(h):
+        out, _, _ = block_prefill_fn(cfg, h, *flat_params)
+        return out
+    _, vjp = jax.vjp(fwd, h_in)
+    return vjp(g_out)[0]
+
+
+def quantize_hidden_fn(cfg, h):
+    """Comm compression (§3.1): hidden states -> (int8 payload, scales)."""
+    return quant_kernel.blockwise_quantize(h)
+
+
+def dequantize_hidden_fn(cfg, q, scales, shape):
+    return quant_kernel.blockwise_dequantize(q, scales, shape)
+
+
+# ---------------------------------------------------------------------------
+# int8 param flattening (fixed order, mirrored in rust/src/model/params.rs)
+# ---------------------------------------------------------------------------
+
+def flatten_int8_params(p):
+    """dict -> flat tuple: matmuls expand to (w_q, w_scale, w_out, mask)."""
+    flat = []
+    for name in BLOCK_PARAM_NAMES:
+        if name in INT8_MATMULS:
+            flat.extend(p[name])
+        else:
+            flat.append(p[name])
+    return tuple(flat)
+
+
+def unflatten_int8_params(flat):
+    p, i = {}, 0
+    for name in BLOCK_PARAM_NAMES:
+        if name in INT8_MATMULS:
+            p[name] = tuple(flat[i:i + 4])
+            i += 4
+        else:
+            p[name] = flat[i]
+            i += 1
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Whole-model reference (used for golden vectors + python-side tests)
+# ---------------------------------------------------------------------------
+
+def forward_full(cfg, params, ids):
+    """Full forward: ids [B,S] -> logits [B,S,V] (prefill path per block)."""
+    h = embed_fn(cfg, ids, params["embedding"],
+                 params["ln_emb_g"], params["ln_emb_b"])
+    for bp in params["blocks"]:
+        h, _, _ = block_prefill_fn(cfg, h, *[bp[n] for n in BLOCK_PARAM_NAMES])
+    x = _layernorm(h, params["ln_f_g"], params["ln_f_b"])
+    return x @ params["embedding"].T
+
+
+def generate_greedy(cfg, params, ids, n_new):
+    """Reference greedy generation used to produce golden sequences."""
+    b = ids.shape[0]
+    c = cfg.max_seq
+    caches = [
+        (jnp.zeros((b, cfg.n_heads, c, cfg.head_dim), jnp.float32),
+         jnp.zeros((b, cfg.n_heads, c, cfg.head_dim), jnp.float32))
+        for _ in params["blocks"]]
+    h = embed_fn(cfg, ids, params["embedding"],
+                 params["ln_emb_g"], params["ln_emb_b"])
+    s0 = ids.shape[1]
+    for li, bp in enumerate(params["blocks"]):
+        flat = [bp[n] for n in BLOCK_PARAM_NAMES]
+        h, k, v = block_prefill_fn(cfg, h, *flat)
+        kc, vc = caches[li]
+        caches[li] = (kc.at[:, :, :s0].set(k), vc.at[:, :, :s0].set(v))
+    out = []
+    last = h[:, -1]
+    for step in range(n_new):
+        logits = lm_head_fn(cfg, last, params["ln_f_g"], params["ln_f_b"],
+                            params["embedding"])
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(nxt)
+        h = embed_fn(cfg, nxt[:, None], params["embedding"],
+                     params["ln_emb_g"], params["ln_emb_b"])
+        clen = jnp.array([s0 + step], jnp.int32)
+        for li, bp in enumerate(params["blocks"]):
+            flat = [bp[n] for n in BLOCK_PARAM_NAMES]
+            kc, vc = caches[li]
+            h, kc, vc = block_decode_fn(cfg, h, kc, vc, clen, *flat)
+            caches[li] = (kc, vc)
+        last = h[:, 0]
+    return jnp.stack(out, axis=1)

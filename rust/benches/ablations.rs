@@ -1,0 +1,219 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. routing policy: beam search (paper) vs greedy-nearest vs random
+//!    valid chain;
+//! 2. load balancing: worst-throughput interval selection (paper §3.2)
+//!    vs random interval, measured by swarm throughput after joins;
+//! 3. rebalancing on/off under churn (coverage recovery);
+//! 4. failure recovery: KV replay (paper) vs full session restart,
+//!    measured in replayed work.
+//!
+//! Run: `cargo bench --bench ablations`
+
+use petals::config::profiles::{NetworkProfile, SwarmPreset};
+use petals::config::Rng;
+use petals::coordinator::balancer::{self, BlockCoverage};
+use petals::coordinator::routing::{self, RouteQuery, ServerView};
+use petals::dht::NodeId;
+use petals::sim::SwarmSim;
+
+fn main() {
+    routing_ablation();
+    balancing_ablation();
+    churn_ablation();
+    recovery_ablation();
+}
+
+// ---------------------------------------------------------------------------
+
+fn random_views(rng: &mut Rng, n_blocks: usize, n_servers: usize) -> Vec<ServerView> {
+    (0..n_servers)
+        .map(|i| {
+            let start = rng.usize_below(n_blocks);
+            let end = (start + 1 + rng.usize_below(n_blocks - start)).min(n_blocks);
+            ServerView {
+                id: NodeId::from_name(&format!("s{i}")),
+                start,
+                end,
+                latency_s: rng.range_f64(0.002, 0.120),
+                bandwidth_bps: rng.range_f64(50e6, 1e9),
+                span_compute_s: rng.range_f64(0.02, 0.4),
+                queue_depth: rng.usize_below(4) as u32,
+            }
+        })
+        .collect()
+}
+
+/// Predicted chain time under the model in routing.rs.
+fn chain_cost(servers: &[ServerView], hops: &[routing::ChainHop], q: &RouteQuery) -> f64 {
+    let mut cost = 0.0;
+    for h in hops {
+        let s = servers.iter().find(|s| s.id == h.server).unwrap();
+        let frac = (h.end - h.start) as f64 / (s.end - s.start) as f64;
+        cost += s.latency_s
+            + q.msg_bytes as f64 * 8.0 / s.bandwidth_bps
+            + s.span_compute_s * frac
+            + s.queue_depth as f64 * q.queue_penalty_s;
+    }
+    let last = servers
+        .iter()
+        .find(|s| s.id == hops.last().unwrap().server)
+        .unwrap();
+    cost + last.latency_s + q.msg_bytes as f64 * 8.0 / last.bandwidth_bps
+}
+
+/// Greedy-nearest: at each frontier take the lowest-latency cover.
+fn greedy_chain(servers: &[ServerView], q: &RouteQuery) -> Option<Vec<routing::ChainHop>> {
+    let mut at = 0;
+    let mut hops = Vec::new();
+    while at < q.n_blocks {
+        let s = servers
+            .iter()
+            .filter(|s| s.start <= at && s.end > at)
+            .min_by(|a, b| a.latency_s.total_cmp(&b.latency_s))?;
+        hops.push(routing::ChainHop { server: s.id, start: at, end: s.end.min(q.n_blocks) });
+        at = s.end.min(q.n_blocks);
+    }
+    Some(hops)
+}
+
+/// Random valid chain.
+fn random_chain(servers: &[ServerView], q: &RouteQuery, rng: &mut Rng) -> Option<Vec<routing::ChainHop>> {
+    let mut at = 0;
+    let mut hops = Vec::new();
+    while at < q.n_blocks {
+        let cands: Vec<&ServerView> = servers
+            .iter()
+            .filter(|s| s.start <= at && s.end > at)
+            .collect();
+        if cands.is_empty() {
+            return None;
+        }
+        let s = cands[rng.usize_below(cands.len())];
+        hops.push(routing::ChainHop { server: s.id, start: at, end: s.end.min(q.n_blocks) });
+        at = s.end.min(q.n_blocks);
+    }
+    Some(hops)
+}
+
+fn routing_ablation() {
+    println!("ablation 1: routing policy (500 random swarms, 24 blocks)\n");
+    let mut rng = Rng::new(0xAB1);
+    let q = RouteQuery { n_blocks: 24, msg_bytes: 60_000, beam_width: 8, queue_penalty_s: 0.05 };
+    let (mut beam_sum, mut greedy_sum, mut random_sum) = (0.0, 0.0, 0.0);
+    let mut count = 0;
+    for _ in 0..500 {
+        let servers = random_views(&mut rng, 24, 12);
+        let Some((hops, _)) = routing::find_chain(&servers, &q) else {
+            continue;
+        };
+        let Some(gh) = greedy_chain(&servers, &q) else { continue };
+        let Some(rh) = random_chain(&servers, &q, &mut rng) else { continue };
+        beam_sum += chain_cost(&servers, &hops, &q);
+        greedy_sum += chain_cost(&servers, &gh, &q);
+        random_sum += chain_cost(&servers, &rh, &q);
+        count += 1;
+    }
+    println!("| policy | mean predicted step time |");
+    println!("|---|---|");
+    println!("| beam search (paper) | {:.3} s |", beam_sum / count as f64);
+    println!("| greedy nearest | {:.3} s (+{:.0}%)|", greedy_sum / count as f64, (greedy_sum / beam_sum - 1.0) * 100.0);
+    println!("| random valid | {:.3} s (+{:.0}%)|", random_sum / count as f64, (random_sum / beam_sum - 1.0) * 100.0);
+    println!();
+}
+
+fn balancing_ablation() {
+    println!("ablation 2: block assignment at join (70 blocks, heterogeneous capacities)\n");
+    let mut rng = Rng::new(0xAB2);
+    let n_blocks = 70;
+    let trials = 300;
+    let (mut petals_sum, mut random_sum) = (0.0, 0.0);
+    for _ in 0..trials {
+        let caps: Vec<usize> = (0..10).map(|_| 8 + rng.usize_below(20)).collect();
+        let tputs: Vec<f64> = (0..10).map(|_| rng.range_f64(0.5, 3.0)).collect();
+        // petals policy
+        let mut cov = BlockCoverage::new(n_blocks);
+        for (c, t) in caps.iter().zip(&tputs) {
+            let span = balancer::choose_join_span(&cov, *c);
+            cov.add_span(span, *t);
+        }
+        petals_sum += balancer::swarm_throughput(&cov);
+        // random policy
+        let mut cov = BlockCoverage::new(n_blocks);
+        for (c, t) in caps.iter().zip(&tputs) {
+            let len = (*c).min(n_blocks);
+            let start = rng.usize_below(n_blocks - len + 1);
+            cov.add_span(start..start + len, *t);
+        }
+        random_sum += balancer::swarm_throughput(&cov);
+    }
+    println!("| join policy | mean swarm throughput |");
+    println!("|---|---|");
+    println!("| worst-interval (paper §3.2) | {:.3} |", petals_sum / trials as f64);
+    println!("| random interval | {:.3} |", random_sum / trials as f64);
+    println!();
+}
+
+fn churn_ablation() {
+    println!("ablation 3: rebalancing under churn (12-virtual swarm, kill 3 servers)\n");
+    let mut with_sum = 0.0;
+    let mut without_sum = 0.0;
+    let mut dead_with = 0;
+    let mut dead_without = 0;
+    let trials = 20;
+    for seed in 0..trials {
+        for rebalance in [true, false] {
+            let mut sim = SwarmSim::build(
+                SwarmPreset::TwelveVirtual.build(NetworkProfile::GBIT_5MS, true),
+                seed,
+            );
+            let mut rng = Rng::new(seed * 7 + 1);
+            for _ in 0..3 {
+                let alive: Vec<usize> = sim
+                    .servers
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| s.alive)
+                    .map(|(i, _)| i)
+                    .collect();
+                sim.kill(alive[rng.usize_below(alive.len())]);
+            }
+            if rebalance {
+                sim.rebalance();
+            }
+            let tput = sim.total_throughput();
+            if rebalance {
+                with_sum += tput;
+                if tput == 0.0 {
+                    dead_with += 1;
+                }
+            } else {
+                without_sum += tput;
+                if tput == 0.0 {
+                    dead_without += 1;
+                }
+            }
+        }
+    }
+    println!("| policy | mean throughput after churn | dead swarms |");
+    println!("|---|---|---|");
+    println!("| rebalancing on (paper) | {:.3} | {dead_with}/{trials} |", with_sum / trials as f64);
+    println!("| rebalancing off | {:.3} | {dead_without}/{trials} |", without_sum / trials as f64);
+    println!();
+}
+
+fn recovery_ablation() {
+    println!("ablation 4: failure recovery cost, KV replay vs session restart\n");
+    // analytic at BLOOM-176B scale: failing at token t of a generation
+    // costs t replayed steps on ONE span (replay) vs t steps on ALL
+    // spans + a new prefill (restart)
+    println!("| fail at token | replay cost (span-steps) | restart cost |");
+    println!("|---|---|---|");
+    let chain_len = 9.0;
+    for t in [16usize, 64, 256, 1024] {
+        let replay = t as f64; // one span re-fed t inputs
+        let restart = t as f64 * chain_len + chain_len; // whole chain redone
+        println!("| {t} | {replay:.0} | {restart:.0} ({:.1}x) |", restart / replay);
+    }
+    println!("\n(KV replay touches only the failed span; restart repeats every span — the gap widens with context length)");
+}

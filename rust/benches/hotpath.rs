@@ -1,0 +1,122 @@
+//! Hot-path microbenchmarks — the §Perf instrument (before/after in
+//! EXPERIMENTS.md).
+//!
+//! Breaks one decode step into its L3 cost components:
+//!   - tensor -> literal conversion (per-call marshalling)
+//!   - artifact execution per block (f16 and int8)
+//!   - KV-cache literal refeed (the optimization: no host repack)
+//!   - comm codec (quantize+encode / decode+dequantize)
+//!   - routing decision + DHT lookup (control plane)
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use petals::config::Rng;
+use petals::model::tensor::{DType, Tensor};
+use petals::model::{ModelHome, Precision};
+use petals::quant;
+use petals::runtime::Runtime;
+use petals::server::ServerNode;
+use std::sync::Arc;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("  {name:44} {:>10.1} us", per * 1e6);
+    per
+}
+
+fn main() -> petals::Result<()> {
+    let home = ModelHome::open("artifacts")?;
+    let g = home.geometry().clone();
+    let rt = Arc::new(Runtime::load_filtered(&home, |n| {
+        n.contains("_b1_") || n.ends_with("_b1")
+    })?);
+
+    println!("== L3 hot path breakdown (BLOOM-mini, CPU PJRT) ==\n");
+
+    // --- marshalling -------------------------------------------------------
+    let mut rng = Rng::new(0);
+    let vals: Vec<f32> = (0..g.hidden).map(|_| rng.f64() as f32).collect();
+    let h = Tensor::from_f32(&[1, 1, g.hidden], &vals);
+    println!("marshalling:");
+    bench("tensor->literal [1,1,H]", 1000, || {
+        let _ = h.to_literal().unwrap();
+    });
+    let kv = Tensor::zeros(&[1, g.n_heads, g.max_seq, g.head_dim], DType::F32);
+    bench("tensor->literal KV [1,Hh,C,D] (4 MB)", 100, || {
+        let _ = kv.to_literal().unwrap();
+    });
+
+    // --- single-block execution --------------------------------------------
+    println!("\nblock execution (per block, per step):");
+    let f16 = ServerNode::start("f16", &home, rt.clone(), 0..1, Precision::F16, false)?;
+    f16.open_session(1, 1)?;
+    let wide = Tensor::zeros(&[1, 128, g.hidden], DType::F32);
+    f16.prefill(1, &wide)?;
+    let mut step = 8usize;
+    bench("f16 decode step (1 block incl. caches)", 50, || {
+        f16.step(1, step, &h).unwrap();
+        step += 1;
+        if step > 200 {
+            step = 8;
+        }
+    });
+    let int8 = ServerNode::start("int8", &home, rt.clone(), 0..1, Precision::Int8, false)?;
+    int8.open_session(1, 1)?;
+    int8.prefill(1, &wide)?;
+    let mut step8 = 8usize;
+    bench("int8 decode step (1 block incl. caches)", 20, || {
+        int8.step(1, step8, &h).unwrap();
+        step8 += 1;
+        if step8 > 200 {
+            step8 = 8;
+        }
+    });
+    bench("f16 prefill 128 tok (1 block)", 20, || {
+        f16.prefill(1, &wide).unwrap();
+    });
+
+    // --- comm codec ---------------------------------------------------------
+    println!("\ncomm codec (hidden state, 1 token):");
+    bench("quantize+encode", 5000, || {
+        let q = quant::quantize(&h);
+        let _ = quant::encode(&q);
+    });
+    let enc = quant::encode(&quant::quantize(&h));
+    bench("decode+dequantize", 5000, || {
+        let q = quant::decode(&enc).unwrap();
+        let _ = quant::dequantize(&q);
+    });
+
+    // --- control plane -------------------------------------------------------
+    println!("\ncontrol plane:");
+    use petals::coordinator::routing::{find_chain, RouteQuery, ServerView};
+    use petals::dht::NodeId;
+    let views: Vec<ServerView> = (0..14)
+        .map(|i| {
+            let start = (i * 5) % 70;
+            ServerView {
+                id: NodeId::from_name(&format!("s{i}")),
+                start,
+                end: (start + 24).min(70),
+                latency_s: 0.01 + i as f64 * 0.002,
+                bandwidth_bps: 1e8,
+                span_compute_s: 0.2,
+                queue_depth: 0,
+            }
+        })
+        .collect();
+    let q = RouteQuery { n_blocks: 70, msg_bytes: 15_000, beam_width: 8, queue_penalty_s: 0.05 };
+    bench("beam-search route (70 blocks, 14 servers)", 2000, || {
+        let _ = find_chain(&views, &q);
+    });
+
+    // DHT iterative lookup over an in-memory 100-node net
+    println!("\n(end of hot-path breakdown)");
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! §3.3 multi-client experiment: "For 12 servers with 100 Mbit/s
+//! bandwidth and 100 ms latency, if 8 clients run inference
+//! concurrently, each of them gets ≈20% slowdown compared to the case
+//! when it runs inference alone."
+//!
+//! Part 1: the simulator at BLOOM-176B scale (client-count sweep).
+//! Part 2: real concurrent clients (threads) against a real local swarm
+//! at BLOOM-mini scale — contention through actual PJRT serialization.
+//!
+//! Run: `cargo bench --bench multiclient`
+
+use petals::config::profiles::{NetworkProfile, SwarmPreset};
+use petals::coordinator::client::{LocalHead, Sampler, SwarmGenerator};
+use petals::coordinator::routing::RouteQuery;
+use petals::coordinator::session::SessionConfig;
+use petals::model::{ModelHome, Precision, Weights};
+use petals::runtime::Runtime;
+use petals::server::local::spawn_even_swarm;
+use petals::sim::SwarmSim;
+use std::sync::Arc;
+
+fn main() -> petals::Result<()> {
+    println!("multi-client slowdown (reproduction of §3.3)\n");
+    println!("simulated 12-virtual swarm @ 100 Mbit/s, 100 ms RTT (BLOOM-176B):");
+    println!("| clients | steps/s per client | slowdown vs solo |");
+    println!("|---|---|---|");
+    let solo = {
+        let mut s =
+            SwarmSim::build(SwarmPreset::TwelveVirtual.build(NetworkProfile::MBIT100_100MS, true), 0);
+        s.run_inference(128, 32, 1).unwrap().steps_per_s
+    };
+    for n in [1usize, 2, 4, 8, 16] {
+        let mut s =
+            SwarmSim::build(SwarmPreset::TwelveVirtual.build(NetworkProfile::MBIT100_100MS, true), 0);
+        let rates = s.run_inference_concurrent(n, 128, 32).unwrap();
+        let mean: f64 = rates.iter().sum::<f64>() / rates.len() as f64;
+        println!("| {n} | {mean:.2} | {:.0}% |", (1.0 - mean / solo) * 100.0);
+    }
+    println!("(paper: 8 clients -> ~20%)\n");
+
+    // ---- real concurrent clients on BLOOM-mini --------------------------
+    println!("real concurrent clients, BLOOM-mini local swarm (CPU PJRT):");
+    let home = ModelHome::open("artifacts")?;
+    let g = home.geometry().clone();
+    let rt = Arc::new(Runtime::load_filtered(&home, |n| {
+        n.contains("_b1_") || n.ends_with("_b1")
+    })?);
+    let cluster = Arc::new(spawn_even_swarm(&home, rt.clone(), 2, Precision::F16)?);
+    let weights = Weights::load(&home, Precision::F16)?;
+    let head = Arc::new(LocalHead::new(&home, rt, &weights)?);
+    let cfg = SessionConfig {
+        n_blocks: g.n_layers,
+        batch: 1,
+        prefill_width: 128,
+        prefix_len: 8,
+        max_new: 8,
+        route: RouteQuery {
+            n_blocks: g.n_layers,
+            msg_bytes: (g.hidden * 4) as u64,
+            beam_width: 8,
+            queue_penalty_s: 0.05,
+        },
+        max_recoveries: 2,
+    };
+
+    println!("| clients | steps/s per client | slowdown |");
+    println!("|---|---|---|");
+    let mut solo_rate = 0.0;
+    for n in [1usize, 2, 4] {
+        let mut handles = Vec::new();
+        for c in 0..n {
+            let cluster = cluster.clone();
+            let head = head.clone();
+            let cfg = cfg.clone();
+            handles.push(std::thread::spawn(move || {
+                let generator = SwarmGenerator {
+                    swarm: cluster.as_ref(),
+                    head: head.as_ref(),
+                    cfg,
+                    sampler: Sampler::Greedy,
+                };
+                let prefix: Vec<i32> = (0..8).map(|i| (c * 31 + i) as i32 % 100).collect();
+                let out = generator.generate(&[prefix], 8, 500 + c as u64).unwrap();
+                out.steps as f64 / out.wall.as_secs_f64()
+            }));
+        }
+        let rates: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let mean: f64 = rates.iter().sum::<f64>() / rates.len() as f64;
+        if n == 1 {
+            solo_rate = mean;
+        }
+        println!("| {n} | {mean:.2} | {:.0}% |", (1.0 - mean / solo_rate) * 100.0);
+    }
+    println!("(CPU PJRT serializes executions, so real contention here is the upper bound)");
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! Table 1: zero-shot quality, 16-bit vs 8-bit weights.
+//!
+//! Paper: HellaSwag/LAMBADA/WinoGrande accuracy for OPT-175B and
+//! BLOOM-176B is preserved under LLM.int8() (Δavg <= 0.4 pt).
+//!
+//! Substitution (DESIGN.md): BLOOM-mini has synthetic weights, so public
+//! benchmarks are meaningless. The reproduced *quantity* is the
+//! quality delta between precisions on the same tasks:
+//!
+//! - three synthetic cloze "task families" (different prefix lengths /
+//!   distributions standing in for the three benchmarks), scored as
+//!   top-1 agreement of each precision with the f32 reference ranking,
+//! - perplexity ratio int8/f16 over a held-out token stream.
+//!
+//! Shape target: agreement ~100%, PPL ratio ~1.0 (the paper's "little
+//! effect on quality").
+//!
+//! Run: `cargo bench --bench table1_quality`
+
+use petals::config::Rng;
+use petals::coordinator::client::LocalHead;
+use petals::model::tensor::Tensor;
+use petals::model::{ModelHome, Precision, Weights};
+use petals::runtime::Runtime;
+use petals::server::ServerNode;
+use std::sync::Arc;
+
+fn main() -> petals::Result<()> {
+    let home = ModelHome::open("artifacts")?;
+    let g = home.geometry().clone();
+    let rt = Arc::new(Runtime::load_filtered(&home, |n| {
+        n.contains("_b1_") || n.ends_with("_b1")
+    })?);
+    let weights = Weights::load(&home, Precision::F16)?;
+    let head = LocalHead::new(&home, rt.clone(), &weights)?;
+
+    let f16 = ServerNode::start("f16", &home, rt.clone(), 0..g.n_layers, Precision::F16, false)?;
+    let int8 = ServerNode::start("int8", &home, rt.clone(), 0..g.n_layers, Precision::Int8, false)?;
+
+    println!("Table 1 (reproduction): zero-shot quality, 16-bit vs 8-bit weights");
+    println!("(synthetic-cloze agreement with the f32 reference ranking; see bench header)\n");
+    println!("| Task family | prompts | top-1 agreement (8-bit vs 16-bit) | mean |Δ logprob| |");
+    println!("|---|---|---|---|");
+
+    // three task families with different prefix statistics
+    let families = [
+        ("cloze-short (≈HellaSwag)", 6usize, 0u64),
+        ("cloze-long (≈LAMBADA)", 16, 1),
+        ("cloze-binary (≈WinoGrande)", 10, 2),
+    ];
+    let n_prompts = 20;
+    let mut total_agree = 0.0;
+    for (name, prefix_len, seed) in families {
+        let mut rng = Rng::new(seed);
+        let mut agree = 0usize;
+        let mut dlp_sum = 0.0f64;
+        for _ in 0..n_prompts {
+            let ids: Vec<i32> =
+                (0..prefix_len).map(|_| rng.below(g.vocab as u64) as i32).collect();
+            let lf = last_logits(&head, &f16, &ids, g.hidden)?;
+            let lq = last_logits(&head, &int8, &ids, g.hidden)?;
+            let (af, _) = argmax(&lf);
+            let (aq, _) = argmax(&lq);
+            if af == aq {
+                agree += 1;
+            }
+            // binary-choice margin for the WinoGrande-like family:
+            // compare logprob of the reference top-1 under each precision
+            let pf = logprob(&lf, af);
+            let pq = logprob(&lq, af);
+            dlp_sum += (pf - pq).abs() as f64;
+        }
+        let pct = 100.0 * agree as f64 / n_prompts as f64;
+        total_agree += pct;
+        println!("| {name} | {n_prompts} | {pct:.1}% | {:.4} |", dlp_sum / n_prompts as f64);
+    }
+
+    // perplexity ratio over a random token stream
+    let mut rng = Rng::new(99);
+    let mut nll_f = 0.0f64;
+    let mut nll_q = 0.0f64;
+    let mut count = 0usize;
+    for _ in 0..10 {
+        let ids: Vec<i32> = (0..12).map(|_| rng.below(g.vocab as u64) as i32).collect();
+        for t in 4..ids.len() {
+            let lf = last_logits(&head, &f16, &ids[..t], g.hidden)?;
+            let lq = last_logits(&head, &int8, &ids[..t], g.hidden)?;
+            nll_f -= logprob(&lf, ids[t] as usize) as f64;
+            nll_q -= logprob(&lq, ids[t] as usize) as f64;
+            count += 1;
+        }
+    }
+    let ppl_f = (nll_f / count as f64).exp();
+    let ppl_q = (nll_q / count as f64).exp();
+    println!("\nperplexity: 16-bit {ppl_f:.3}, 8-bit {ppl_q:.3} (ratio {:.4})", ppl_q / ppl_f);
+    println!("mean agreement {:.1}% — paper's Table 1 shape: ~no quality loss from int8", total_agree / 3.0);
+    Ok(())
+}
+
+fn last_logits(
+    head: &LocalHead,
+    server: &ServerNode,
+    ids: &[i32],
+    hidden: usize,
+) -> petals::Result<Vec<f32>> {
+    let w = 128usize;
+    let mut padded = vec![0i32; w];
+    padded[..ids.len()].copy_from_slice(ids);
+    let h0 = head.embed(&Tensor::from_i32(&[1, w], &padded))?;
+    let h = server.forward(&h0)?;
+    let p = ids.len();
+    let last = Tensor::from_f32(&[1, hidden], &h.as_f32()[(p - 1) * hidden..p * hidden]);
+    Ok(head.lm_head(&last)?.as_f32().to_vec())
+}
+
+fn argmax(row: &[f32]) -> (usize, f32) {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, &v)| (i, v))
+        .unwrap()
+}
+
+fn logprob(logits: &[f32], idx: usize) -> f32 {
+    let mx = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let z: f32 = logits.iter().map(|&x| (x - mx).exp()).sum();
+    logits[idx] - mx - z.ln()
+}

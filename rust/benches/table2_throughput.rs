@@ -1,0 +1,105 @@
+//! Table 2: generation throughput (tokens/s), 8-bit vs 16-bit weights,
+//! batch ∈ {1, 8, 32}.
+//!
+//! Paper (8x A100, BLOOM-176B): int8 costs ~5% at batch 1 and becomes
+//! negligible at batch 32. Here: one server hosting all BLOOM-mini
+//! blocks on CPU PJRT; generation = embed → decode steps → lm_head, 20
+//! tokens per request (matching the paper's "20 tokens").
+//!
+//! Deviation note (EXPERIMENTS.md): the interpret-mode Pallas int8
+//! kernel pays a large CPU overhead that CUDA kernels do not, so the
+//! absolute int8/16bit ratio is worse than the paper's 5%; the shape
+//! that must hold is *overhead shrinking as batch grows* (per-batch
+//! kernel overheads amortize).
+//!
+//! Run: `cargo bench --bench table2_throughput`
+
+use petals::coordinator::client::LocalHead;
+use petals::model::tensor::Tensor;
+use petals::model::{ModelHome, Precision, Weights};
+use petals::runtime::Runtime;
+use petals::server::ServerNode;
+use std::sync::Arc;
+
+fn main() -> petals::Result<()> {
+    let home = ModelHome::open("artifacts")?;
+    let g = home.geometry().clone();
+    let rt = Arc::new(Runtime::load(&home)?);
+    let weights = Weights::load(&home, Precision::F16)?;
+    let head = LocalHead::new(&home, rt.clone(), &weights)?;
+
+    // 20 tokens per the paper; int8@b32 in interpret mode costs ~1 s per
+    // block-step, so the b=32 cell uses fewer steps (tokens/s unaffected)
+    let n_tokens = 20usize;
+    println!("Table 2 (reproduction): generation throughput (tokens/s), BLOOM-mini on CPU PJRT\n");
+    println!("| Weights | batch 1 | batch 8 | batch 32 |");
+    println!("|---------|---------|---------|----------|");
+
+    let mut rows = Vec::new();
+    for (label, prec) in [("16-bit", Precision::F16), ("8-bit", Precision::Int8)] {
+        let server = ServerNode::start(label, &home, rt.clone(), 0..g.n_layers, prec, false)?;
+        let mut cells = Vec::new();
+        for batch in [1usize, 8, 32] {
+            let steps = if batch == 32 { 5 } else { n_tokens };
+            let tput = generation_throughput(&home, &head, &server, batch, steps)?;
+            cells.push(tput);
+        }
+        println!(
+            "| {label} | {:.2} | {:.2} | {:.2} |",
+            cells[0], cells[1], cells[2]
+        );
+        rows.push(cells);
+    }
+    println!("\nint8/16-bit throughput ratio per batch:");
+    for (i, batch) in [1usize, 8, 32].iter().enumerate() {
+        println!("  batch {batch}: {:.2}x", rows[1][i] / rows[0][i]);
+    }
+    println!("(paper shape: ratio -> 1.0 as batch grows)");
+    Ok(())
+}
+
+/// tokens/s of `n_tokens` greedy decode steps at `batch` (prefill
+/// excluded, matching the paper's generation measurement).
+fn generation_throughput(
+    home: &ModelHome,
+    head: &LocalHead,
+    server: &ServerNode,
+    batch: usize,
+    n_tokens: usize,
+) -> petals::Result<f64> {
+    let g = home.geometry();
+    let mut rng = petals::config::Rng::new(batch as u64);
+    let prefix_len = 8usize;
+    let w = 128usize;
+    let mut ids = vec![0i32; batch * w];
+    for row in 0..batch {
+        for s in 0..prefix_len {
+            ids[row * w + s] = rng.below(g.vocab as u64) as i32;
+        }
+    }
+    server.open_session(batch as u64, batch)?;
+    let h0 = head.embed(&Tensor::from_i32(&[batch, w], &ids))?;
+    let h = server.prefill(batch as u64, &h0)?;
+    let hidden = g.hidden;
+    let mut last = {
+        let src = h.as_f32();
+        let mut v = Vec::with_capacity(batch * hidden);
+        for bi in 0..batch {
+            let off = (bi * w + prefix_len - 1) * hidden;
+            v.extend_from_slice(&src[off..off + hidden]);
+        }
+        Tensor::from_f32(&[batch, hidden], &v)
+    };
+
+    let t0 = std::time::Instant::now();
+    for step in 0..n_tokens {
+        let logits = head.lm_head(&last)?;
+        let next = petals::coordinator::client::Sampler::Greedy.sample(&logits);
+        let h = head.embed(&Tensor::from_i32(&[batch, 1], &next))?;
+        let out = server.step(batch as u64, prefix_len + step, &h)?;
+        last = Tensor::from_f32(&[batch, hidden], out.as_f32());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    server.close_session(batch as u64);
+    Ok((batch * n_tokens) as f64 / wall)
+}

@@ -1,0 +1,64 @@
+//! Table 3 (Petals rows): sequential inference steps/s and parallel
+//! forward tokens/s across swarm presets and network conditions.
+//!
+//! Every row of the paper's Table 3 except the offloading baseline
+//! (see table3_offload). BLOOM-176B geometry through the calibrated
+//! simulator (DESIGN.md §Substitutions): the same balancer/routing code
+//! as the real servers, analytic device/network timing.
+//!
+//! Run: `cargo bench --bench table3_swarm`
+
+use petals::config::profiles::{NetworkProfile, SwarmPreset};
+use petals::sim::SwarmSim;
+
+fn main() {
+    println!("Table 3 (reproduction): single-batch inference and parallel forward\n");
+    println!("| Setup | Bandwidth, RTT | inference seq 128 (steps/s) | seq 2048 | forward b=1 (tok/s) | b=64 |");
+    println!("|---|---|---|---|---|---|");
+
+    let nets = [
+        ("1 Gbit/s, <5 ms", NetworkProfile::GBIT_5MS),
+        ("100 Mbit/s, <5 ms", NetworkProfile::MBIT100_5MS),
+        ("100 Mbit/s, 100 ms", NetworkProfile::MBIT100_100MS),
+    ];
+
+    // paper rows 1-3: 3 physical A100 servers
+    for (label, net) in nets {
+        row("Petals, 3 physical (A100)", label, SwarmPreset::ThreeA100, net);
+    }
+    // paper rows 4-6: 12 virtual servers
+    for (label, net) in nets {
+        row("Petals, 12 virtual", label, SwarmPreset::TwelveVirtual, net);
+    }
+    // paper row 7: 14 real-world heterogeneous servers (per-server nets)
+    row(
+        "Petals, 14 real-world",
+        "heterogeneous",
+        SwarmPreset::FourteenRealWorld,
+        NetworkProfile::MBIT100_5MS, // default for servers without overrides
+    );
+
+    println!();
+    println!("paper reference rows (BLOOM-176B, for shape comparison):");
+    println!("  3 physical:  1.71/1.54 steps/s | 70.0/253.6 tok/s  (1 Gbit)");
+    println!("               1.66/1.49         | 56.4/182.0        (100 Mbit 5ms)");
+    println!("               1.23/1.11         | 19.7/112.2        (100 Mbit 100ms)");
+    println!("  12 virtual:  1.24/1.06         | 37.9/180.0        (1 Gbit)");
+    println!("               1.24/1.05         | 25.6/66.6         (100 Mbit 5ms)");
+    println!("               0.57/0.53         | 5.8/44.3          (100 Mbit 100ms)");
+    println!("  14 real:     0.83/0.79         | 32.6/179.4");
+}
+
+fn row(setup: &str, net_label: &str, preset: SwarmPreset, net: NetworkProfile) {
+    let mut sim = SwarmSim::build(preset.build(net, true), 0);
+    // sequence length 128 vs 2048: the sim charges prefill for the
+    // prefix and the cache grows; steps/s measured over 32 decode steps
+    let s128 = sim.run_inference(128, 32, 1).map(|r| r.steps_per_s).unwrap_or(0.0);
+    let mut sim = SwarmSim::build(preset.build(net, true), 0);
+    let s2048 = sim.run_inference(2048, 32, 1).map(|r| r.steps_per_s).unwrap_or(0.0);
+    let mut sim = SwarmSim::build(preset.build(net, true), 0);
+    let f1 = sim.run_forward(1, 128, 1).map(|r| r.tokens_per_s).unwrap_or(0.0);
+    let mut sim = SwarmSim::build(preset.build(net, true), 0);
+    let f64_ = sim.run_forward(64, 128, 4).map(|r| r.tokens_per_s).unwrap_or(0.0);
+    println!("| {setup} | {net_label} | {s128:.2} | {s2048:.2} | {f1:.1} | {f64_:.1} |");
+}

@@ -1,0 +1,244 @@
+//! Chat-application backend (§2.1 "Chat application", Figure 3).
+//!
+//! "The backend is a Flask web server that uses the PETALS client to run
+//! inference over the swarm. It accepts requests via HTTP [...] so
+//! anyone can develop their own applications using our backend."
+//!
+//! Here: a minimal HTTP/1.1 server (hand-rolled — no web framework in
+//! the offline crate set) exposing `POST /api/v1/generate` with a JSON
+//! body `{"inputs": [ids...], "max_new_tokens": n}` and a JSON reply
+//! `{"outputs": [ids...], "steps_per_s": x}`. Token ids in/out: the demo
+//! model's tokenizer is synthetic, so the chat example maps characters
+//! to ids client-side.
+
+use crate::config::json::Value;
+use crate::coordinator::client::{LocalHead, Sampler, SwarmGenerator};
+use crate::coordinator::session::{ChainClient, SessionConfig};
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Backend over any swarm implementation.
+pub struct ChatBackend<C: ChainClient> {
+    pub swarm: Arc<C>,
+    pub head: Arc<LocalHead>,
+    pub cfg: SessionConfig,
+    next_session: AtomicU64,
+}
+
+impl<C: ChainClient + Send + Sync + 'static> ChatBackend<C> {
+    pub fn new(swarm: Arc<C>, head: Arc<LocalHead>, cfg: SessionConfig) -> Arc<Self> {
+        Arc::new(ChatBackend { swarm, head, cfg, next_session: AtomicU64::new(1000) })
+    }
+
+    /// Handle one generation request body; returns the JSON reply body.
+    pub fn generate_json(&self, body: &str) -> Result<String> {
+        let v = Value::parse(body)?;
+        let inputs: Vec<i32> = v
+            .get("inputs")?
+            .arr()?
+            .iter()
+            .map(|x| Ok(x.f64()? as i32))
+            .collect::<Result<Vec<_>>>()?;
+        let max_new = v.opt("max_new_tokens").map(|x| x.usize()).transpose()?.unwrap_or(8);
+        let vocab = self.head.vocab as i32;
+        if inputs.is_empty() || inputs.iter().any(|&t| t < 0 || t >= vocab) {
+            return Err(Error::Parse("inputs empty or out of vocab".into()));
+        }
+
+        // clamp/pad the prefix to the session's expected length
+        let want = self.cfg.prefix_len;
+        let mut prefix = inputs.clone();
+        prefix.truncate(want);
+        while prefix.len() < want {
+            prefix.insert(0, 0);
+        }
+        let max_new = max_new.min(self.cfg.max_new);
+
+        let sampler = Sampler::Greedy;
+        let generator = SwarmGenerator {
+            swarm: self.swarm.as_ref(),
+            head: self.head.as_ref(),
+            cfg: self.cfg.clone(),
+            sampler,
+        };
+        let session = self.next_session.fetch_add(1, Ordering::SeqCst);
+        let out = generator.generate(&[prefix], max_new, session)?;
+
+        let mut obj = BTreeMap::new();
+        obj.insert(
+            "outputs".to_string(),
+            Value::Arr(out.tokens[0].iter().map(|&t| Value::Num(t as f64)).collect()),
+        );
+        obj.insert(
+            "steps_per_s".to_string(),
+            Value::Num(out.steps as f64 / out.wall.as_secs_f64().max(1e-9)),
+        );
+        obj.insert("recoveries".to_string(), Value::Num(out.recoveries as f64));
+        Ok(Value::Obj(obj).render())
+    }
+
+    /// Serve HTTP on `addr` until `stop` is set. Returns the bound addr.
+    pub fn serve(self: Arc<Self>, addr: &str, stop: Arc<AtomicBool>) -> Result<String> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?.to_string();
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let backend = self.clone();
+                std::thread::spawn(move || {
+                    let _ = backend.handle_conn(stream);
+                });
+            }
+        });
+        Ok(local)
+    }
+
+    fn handle_conn(&self, stream: std::net::TcpStream) -> Result<()> {
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut stream = stream;
+        loop {
+            // request line
+            let mut line = String::new();
+            if reader.read_line(&mut line)? == 0 {
+                return Ok(()); // closed
+            }
+            let mut parts = line.split_whitespace();
+            let method = parts.next().unwrap_or("").to_string();
+            let path = parts.next().unwrap_or("").to_string();
+            // headers
+            let mut content_len = 0usize;
+            let mut keep_alive = true;
+            loop {
+                let mut h = String::new();
+                reader.read_line(&mut h)?;
+                let h = h.trim();
+                if h.is_empty() {
+                    break;
+                }
+                let lower = h.to_ascii_lowercase();
+                if let Some(v) = lower.strip_prefix("content-length:") {
+                    content_len = v.trim().parse().unwrap_or(0);
+                }
+                if lower.starts_with("connection:") && lower.contains("close") {
+                    keep_alive = false;
+                }
+            }
+            let mut body = vec![0u8; content_len];
+            reader.read_exact(&mut body)?;
+            let body = String::from_utf8_lossy(&body).to_string();
+
+            let (status, reply) = match (method.as_str(), path.as_str()) {
+                ("POST", "/api/v1/generate") => match self.generate_json(&body) {
+                    Ok(json) => ("200 OK", json),
+                    Err(e) => ("400 Bad Request", format!("{{\"error\":\"{e}\"}}")),
+                },
+                ("GET", "/health") => ("200 OK", "{\"status\":\"ok\"}".to_string()),
+                _ => ("404 Not Found", "{\"error\":\"not found\"}".to_string()),
+            };
+            write!(
+                stream,
+                "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+                reply.len(),
+                reply
+            )?;
+            stream.flush()?;
+            if !keep_alive {
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// Tiny HTTP client for tests/examples (same offline constraint).
+pub fn http_post(addr: &str, path: &str, body: &str) -> Result<String> {
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    write!(
+        stream,
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    let mut buf = String::new();
+    BufReader::new(stream).read_to_string(&mut buf)?;
+    let idx = buf
+        .find("\r\n\r\n")
+        .ok_or_else(|| Error::Protocol("no http body".into()))?;
+    Ok(buf[idx + 4..].to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::routing::RouteQuery;
+    use crate::model::{test_home, Precision, Weights};
+    use crate::runtime::Runtime;
+    use crate::server::local::spawn_even_swarm;
+
+    fn backend() -> Arc<ChatBackend<crate::server::local::LocalCluster>> {
+        let home = test_home();
+        let g = home.geometry().clone();
+        let rt = Arc::new(
+            Runtime::load_filtered(&home, |n| n.contains("_b1_") || n.ends_with("_b1")).unwrap(),
+        );
+        let cluster = Arc::new(spawn_even_swarm(&home, rt.clone(), 2, Precision::F16).unwrap());
+        let weights = Weights::load(&home, Precision::F16).unwrap();
+        let head = Arc::new(LocalHead::new(&home, rt, &weights).unwrap());
+        let cfg = SessionConfig {
+            n_blocks: g.n_layers,
+            batch: 1,
+            prefill_width: 128,
+            prefix_len: 8,
+            max_new: 8,
+            route: RouteQuery {
+                n_blocks: g.n_layers,
+                msg_bytes: (g.hidden * 4) as u64,
+                beam_width: 8,
+                queue_penalty_s: 0.05,
+            },
+            max_recoveries: 2,
+        };
+        ChatBackend::new(cluster, head, cfg)
+    }
+
+    #[test]
+    fn generate_json_roundtrip() {
+        let b = backend();
+        let reply = b
+            .generate_json(r#"{"inputs": [5, 6, 7, 8, 9, 10, 11, 12], "max_new_tokens": 4}"#)
+            .unwrap();
+        let v = Value::parse(&reply).unwrap();
+        assert_eq!(v.get("outputs").unwrap().arr().unwrap().len(), 4);
+        assert!(v.get("steps_per_s").unwrap().f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let b = backend();
+        assert!(b.generate_json(r#"{"inputs": []}"#).is_err());
+        assert!(b.generate_json(r#"{"inputs": [999999]}"#).is_err());
+        assert!(b.generate_json("not json").is_err());
+    }
+
+    #[test]
+    fn http_end_to_end() {
+        let b = backend();
+        let stop = Arc::new(AtomicBool::new(false));
+        let addr = b.serve("127.0.0.1:0", stop.clone()).unwrap();
+        let reply = http_post(
+            &addr,
+            "/api/v1/generate",
+            r#"{"inputs": [1,2,3,4,5,6,7,8], "max_new_tokens": 2}"#,
+        )
+        .unwrap();
+        let v = Value::parse(&reply).unwrap();
+        assert_eq!(v.get("outputs").unwrap().arr().unwrap().len(), 2);
+        stop.store(true, Ordering::SeqCst);
+    }
+}

@@ -1,0 +1,430 @@
+//! Minimal JSON parser — substrate module.
+//!
+//! The build environment is fully offline with no serde_json in the
+//! vendored crate set, so the manifest/config loader ships its own
+//! RFC 8259 subset parser: objects, arrays, strings (with escapes),
+//! numbers, booleans, null. No serializer bells: `Value::render` emits
+//! compact JSON for the few places we write configs/ledgers back out.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn parse(src: &str) -> Result<Value> {
+        let mut p = Parser { b: src.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.b.len() {
+            return Err(Error::Parse(format!("trailing data at byte {}", p.pos)));
+        }
+        Ok(v)
+    }
+
+    // --- typed accessors ---------------------------------------------------
+
+    pub fn get(&self, key: &str) -> Result<&Value> {
+        match self {
+            Value::Obj(m) => m
+                .get(key)
+                .ok_or_else(|| Error::Parse(format!("missing key {key:?}"))),
+            _ => Err(Error::Parse(format!("not an object (want key {key:?})"))),
+        }
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(m) => m.get(key).filter(|v| !matches!(v, Value::Null)),
+            _ => None,
+        }
+    }
+
+    pub fn obj(&self) -> Result<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(m) => Ok(m),
+            _ => Err(Error::Parse("expected object".into())),
+        }
+    }
+
+    pub fn arr(&self) -> Result<&[Value]> {
+        match self {
+            Value::Arr(v) => Ok(v),
+            _ => Err(Error::Parse("expected array".into())),
+        }
+    }
+
+    pub fn str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => Err(Error::Parse("expected string".into())),
+        }
+    }
+
+    pub fn f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            _ => Err(Error::Parse("expected number".into())),
+        }
+    }
+
+    pub fn usize(&self) -> Result<usize> {
+        Ok(self.f64()? as usize)
+    }
+
+    pub fn u64(&self) -> Result<u64> {
+        Ok(self.f64()? as u64)
+    }
+
+    pub fn bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => Err(Error::Parse("expected bool".into())),
+        }
+    }
+
+    /// Shapes etc.: array of numbers -> Vec<usize>.
+    pub fn usize_vec(&self) -> Result<Vec<usize>> {
+        self.arr()?.iter().map(|v| v.usize()).collect()
+    }
+
+    // --- compact serializer -------------------------------------------------
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.render_into(&mut s);
+        s
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Value::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            out.push_str(&format!("\\u{:04x}", c as u32))
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Value::Arr(v) => {
+                out.push('[');
+                for (i, e) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    e.render_into(out);
+                }
+                out.push(']');
+            }
+            Value::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Value::Str(k.clone()).render_into(out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.b.len()
+            && matches!(self.b[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.pos)
+            .copied()
+            .ok_or_else(|| Error::Parse("unexpected end of JSON".into()))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? == c {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(Error::Parse(format!(
+                "expected {:?} at byte {}, found {:?}",
+                c as char, self.pos, self.peek()? as char
+            )))
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Value) -> Result<Value> {
+        if self.b[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(Error::Parse(format!("bad literal at byte {}", self.pos)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        self.skip_ws();
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Value::Str(self.string()?)),
+            b't' => self.lit("true", Value::Bool(true)),
+            b'f' => self.lit("false", Value::Bool(false)),
+            b'n' => self.lit("null", Value::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn object(&mut self) -> Result<Value> {
+        self.eat(b'{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(Value::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            let v = self.value()?;
+            m.insert(k, v);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(Value::Obj(m));
+                }
+                c => {
+                    return Err(Error::Parse(format!(
+                        "expected ',' or '}}' at byte {}, found {:?}",
+                        self.pos, c as char
+                    )))
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.eat(b'[')?;
+        let mut v = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(Value::Arr(v));
+        }
+        loop {
+            v.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Value::Arr(v));
+                }
+                c => {
+                    return Err(Error::Parse(format!(
+                        "expected ',' or ']' at byte {}, found {:?}",
+                        self.pos, c as char
+                    )))
+                }
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.pos += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.pos += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            let hex = self
+                                .b
+                                .get(self.pos..self.pos + 4)
+                                .ok_or_else(|| Error::Parse("bad \\u escape".into()))?;
+                            let code = u32::from_str_radix(
+                                std::str::from_utf8(hex)
+                                    .map_err(|_| Error::Parse("bad \\u escape".into()))?,
+                                16,
+                            )
+                            .map_err(|_| Error::Parse("bad \\u escape".into()))?;
+                            self.pos += 4;
+                            // (surrogate pairs unsupported — artifacts never emit them)
+                            s.push(
+                                char::from_u32(code)
+                                    .ok_or_else(|| Error::Parse("bad codepoint".into()))?,
+                            );
+                        }
+                        other => {
+                            return Err(Error::Parse(format!(
+                                "bad escape \\{}",
+                                other as char
+                            )))
+                        }
+                    }
+                }
+                c => {
+                    // re-assemble UTF-8 multibyte sequences
+                    if c < 0x80 {
+                        s.push(c as char);
+                    } else {
+                        let start = self.pos - 1;
+                        let len = if c >= 0xf0 {
+                            4
+                        } else if c >= 0xe0 {
+                            3
+                        } else {
+                            2
+                        };
+                        let bytes = self
+                            .b
+                            .get(start..start + len)
+                            .ok_or_else(|| Error::Parse("truncated utf8".into()))?;
+                        s.push_str(
+                            std::str::from_utf8(bytes)
+                                .map_err(|_| Error::Parse("bad utf8".into()))?,
+                        );
+                        self.pos = start + len;
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.pos;
+        while self.pos < self.b.len()
+            && matches!(self.b[self.pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.pos])
+            .map_err(|_| Error::Parse("bad number".into()))?;
+        s.parse::<f64>()
+            .map(Value::Num)
+            .map_err(|_| Error::Parse(format!("bad number {s:?} at byte {start}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Value::parse("42").unwrap().f64().unwrap(), 42.0);
+        assert_eq!(Value::parse("-1.5e3").unwrap().f64().unwrap(), -1500.0);
+        assert_eq!(Value::parse("true").unwrap().bool().unwrap(), true);
+        assert_eq!(Value::parse("null").unwrap(), Value::Null);
+        assert_eq!(Value::parse("\"hi\\n\"").unwrap().str().unwrap(), "hi\n");
+    }
+
+    #[test]
+    fn parse_nested() {
+        let v = Value::parse(r#"{"a": [1, 2, {"b": "c"}], "d": {}}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().arr().unwrap().len(), 3);
+        assert_eq!(
+            v.get("a").unwrap().arr().unwrap()[2]
+                .get("b")
+                .unwrap()
+                .str()
+                .unwrap(),
+            "c"
+        );
+    }
+
+    #[test]
+    fn parse_unicode_escape() {
+        let v = Value::parse(r#""éA""#).unwrap();
+        assert_eq!(v.str().unwrap(), "éA");
+    }
+
+    #[test]
+    fn parse_utf8_passthrough() {
+        let v = Value::parse("\"héllo — ≈\"").unwrap();
+        assert_eq!(v.str().unwrap(), "héllo — ≈");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Value::parse("{").is_err());
+        assert!(Value::parse("[1,]").is_err());
+        assert!(Value::parse("{\"a\" 1}").is_err());
+        assert!(Value::parse("12 34").is_err());
+        assert!(Value::parse("").is_err());
+    }
+
+    #[test]
+    fn render_roundtrip() {
+        let src = r#"{"a":[1,2.5,"x\"y"],"b":true,"c":null}"#;
+        let v = Value::parse(src).unwrap();
+        let out = v.render();
+        assert_eq!(Value::parse(&out).unwrap(), v);
+    }
+
+    #[test]
+    fn roundtrip_manifest_like() {
+        let src = r#"{"entries":{"e":{"shape":[1,128,512],"dtype":"f32"}}}"#;
+        let v = Value::parse(src).unwrap();
+        assert_eq!(
+            v.get("entries").unwrap().get("e").unwrap().get("shape").unwrap().usize_vec().unwrap(),
+            vec![1, 128, 512]
+        );
+    }
+}

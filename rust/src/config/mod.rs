@@ -1,0 +1,12 @@
+//! Configuration substrate: JSON parsing ([`json`]), deterministic PRNG
+//! ([`rng`]), and the typed device / network / swarm profiles
+//! ([`profiles`]) that parameterize every Table-3 scenario.
+
+pub mod json;
+pub mod profiles;
+pub mod rng;
+
+pub use profiles::{
+    ClientProfile, DeviceProfile, NetworkProfile, ServerSpec, SwarmPreset, SwarmProfile,
+};
+pub use rng::Rng;

@@ -1,0 +1,394 @@
+//! Device / network / swarm profiles — the knobs behind every Table-3 row.
+//!
+//! The paper benchmarks BLOOM-176B on hardware we do not have (A100s,
+//! consumer GPUs spread over two continents). Per DESIGN.md
+//! §Substitutions, the simulator reproduces those rows with a calibrated
+//! analytic compute model + the deterministic network simulator, while
+//! the end-to-end examples run *real* PJRT compute on BLOOM-mini.
+//!
+//! Compute model (per server, per inference step over `n` blocks at
+//! batch `b` tokens):
+//!
+//! ```text
+//! decode:  t = overhead + n * block_bytes(precision) / mem_bw
+//! prefill: t = overhead + n * tokens * flops_per_token_block / flops_eff
+//! ```
+//!
+//! Single-token decode is memory-bound (each step streams every weight
+//! byte once); large-batch forward is compute-bound. `flops_eff` is the
+//! *achieved* rate (peak x utilization), calibrated so the 3x-A100 row
+//! lands near the paper's 1.7 steps/s and 250 tok/s — all other rows
+//! then follow from hardware ratios, which is exactly the reproduction
+//! target (shape, not absolute numbers).
+
+/// One accelerator model hosting Petals blocks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// GPU memory available for blocks, bytes.
+    pub mem_bytes: u64,
+    /// Effective memory bandwidth, bytes/s (decode path).
+    pub mem_bw: f64,
+    /// Achieved dense-matmul rate, FLOP/s (prefill path).
+    pub flops_eff: f64,
+    /// Fixed per-request overhead, seconds (kernel launch, framework,
+    /// (de)quantization of activations).
+    pub overhead_s: f64,
+}
+
+impl DeviceProfile {
+    pub const A100_80G: DeviceProfile = DeviceProfile {
+        name: "A100-80GB",
+        mem_bytes: 80 * GB,
+        mem_bw: 320e9, // achieved effective rate incl. framework (calibrated)
+        flops_eff: 100e12,
+        overhead_s: 0.004,
+    };
+
+    /// One quarter of an A100 (the paper partitions each A100 into
+    /// "3 large and 1 small" virtual servers; we model 4 equal quarters,
+    /// which matches aggregate capacity). Memory bandwidth stays near the
+    /// full card's: the partitions time-share the same HBM, and the
+    /// paper's 12-virtual row (1.24 steps/s at 1 Gbit) implies ~11
+    /// ms/block — only ~1.4x the physical-A100 block time.
+    pub const VIRTUAL_QUARTER_A100: DeviceProfile = DeviceProfile {
+        name: "virtual-A100/4",
+        mem_bytes: 20 * GB,
+        mem_bw: 220e9,
+        flops_eff: 25e12,
+        overhead_s: 0.004,
+    };
+
+    pub const RTX_3060: DeviceProfile = DeviceProfile {
+        name: "RTX-3060",
+        mem_bytes: 12 * GB,
+        mem_bw: 58e9, // 360 GB/s peak scaled by the same achieved ratio
+        flops_eff: 9e12,
+        overhead_s: 0.005,
+    };
+
+    pub const RTX_2080TI: DeviceProfile = DeviceProfile {
+        name: "RTX-2080Ti",
+        mem_bytes: 11 * GB,
+        mem_bw: 99e9,
+        flops_eff: 10e12,
+        overhead_s: 0.005,
+    };
+
+    pub const RTX_3090: DeviceProfile = DeviceProfile {
+        name: "RTX-3090",
+        mem_bytes: 24 * GB,
+        mem_bw: 150e9,
+        flops_eff: 25e12,
+        overhead_s: 0.005,
+    };
+
+    pub const A4000: DeviceProfile = DeviceProfile {
+        name: "A4000",
+        mem_bytes: 16 * GB,
+        mem_bw: 72e9,
+        flops_eff: 14e12,
+        overhead_s: 0.005,
+    };
+
+    pub const A5000: DeviceProfile = DeviceProfile {
+        name: "A5000",
+        mem_bytes: 24 * GB,
+        mem_bw: 123e9,
+        flops_eff: 20e12,
+        overhead_s: 0.005,
+    };
+
+    /// Blocks this device can host at `bytes_per_block` (minus ~1 GB of
+    /// runtime overhead).
+    pub fn capacity_blocks(&self, bytes_per_block: u64) -> usize {
+        let usable = self.mem_bytes.saturating_sub(GB);
+        (usable / bytes_per_block.max(1)) as usize
+    }
+
+    /// Seconds for one single-token decode step over `n_blocks`.
+    pub fn decode_time(&self, n_blocks: usize, bytes_per_block: u64, batch: usize) -> f64 {
+        // The weight stream is shared across the batch; activations are
+        // negligible next to weights for batch <= 64.
+        let weight_t = n_blocks as f64 * bytes_per_block as f64 / self.mem_bw;
+        let batch_t = 0.02e-3 * batch.saturating_sub(1) as f64 * n_blocks as f64;
+        self.overhead_s + weight_t + batch_t
+    }
+
+    /// Seconds for a parallel forward of `tokens` through `n_blocks`.
+    ///
+    /// Small token counts do not saturate the matrix units: achieved
+    /// FLOP/s ramps as tokens/(tokens + 384) (half-saturation at 384
+    /// tokens, matching the paper's 3xA100 forward column where 128
+    /// tokens reach ~25% of large-batch throughput).
+    pub fn forward_time(&self, n_blocks: usize, tokens: usize, flops_per_token_block: f64) -> f64 {
+        let sat = tokens as f64 / (tokens as f64 + 384.0);
+        let achieved = self.flops_eff * sat;
+        let compute = n_blocks as f64 * tokens as f64 * flops_per_token_block / achieved;
+        self.overhead_s + compute
+    }
+}
+
+pub const GB: u64 = 1 << 30;
+pub const MBIT: f64 = 1e6;
+pub const GBIT: f64 = 1e9;
+
+/// Point-to-point network conditions (paper §3.3 emulates these with
+/// wondershaper; we inject them in the simulator).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkProfile {
+    /// Bidirectional bandwidth, bits/s.
+    pub bandwidth_bps: f64,
+    /// Round-trip latency, seconds.
+    pub rtt_s: f64,
+    /// Relative jitter on per-message latency (0.0 = deterministic).
+    pub jitter: f64,
+    /// Extra one-way latency for NAT/firewall relay hops (libp2p circuit
+    /// relay in the paper; 4 of the 14 real servers needed it).
+    pub relay_extra_s: f64,
+}
+
+impl NetworkProfile {
+    pub const GBIT_5MS: NetworkProfile = NetworkProfile {
+        bandwidth_bps: 1.0 * GBIT,
+        rtt_s: 0.005,
+        jitter: 0.0,
+        relay_extra_s: 0.0,
+    };
+
+    pub const MBIT100_5MS: NetworkProfile = NetworkProfile {
+        bandwidth_bps: 100.0 * MBIT,
+        rtt_s: 0.005,
+        jitter: 0.0,
+        relay_extra_s: 0.0,
+    };
+
+    pub const MBIT100_100MS: NetworkProfile = NetworkProfile {
+        bandwidth_bps: 100.0 * MBIT,
+        rtt_s: 0.100,
+        jitter: 0.0,
+        relay_extra_s: 0.0,
+    };
+
+    /// One-way propagation delay.
+    pub fn one_way_s(&self) -> f64 {
+        self.rtt_s / 2.0 + self.relay_extra_s
+    }
+
+    /// Seconds to push `bytes` through the link (serialization delay).
+    pub fn transfer_s(&self, bytes: u64) -> f64 {
+        (bytes as f64 * 8.0) / self.bandwidth_bps
+    }
+
+    /// Total one-way message time.
+    pub fn message_s(&self, bytes: u64) -> f64 {
+        self.one_way_s() + self.transfer_s(bytes)
+    }
+}
+
+/// One server in a swarm scenario.
+#[derive(Debug, Clone)]
+pub struct ServerSpec {
+    pub device: DeviceProfile,
+    /// Link from/to this server (overrides the swarm default if set).
+    pub net: Option<NetworkProfile>,
+    /// Server is behind a NAT and reachable only via relay.
+    pub relayed: bool,
+}
+
+/// Client-side hardware (paper: 8 CPU cores, no GPU): embedding lookup +
+/// LM head per step.
+#[derive(Debug, Clone, Copy)]
+pub struct ClientProfile {
+    pub step_overhead_s: f64,
+}
+
+impl Default for ClientProfile {
+    fn default() -> Self {
+        // embedding + lm head of BLOOM-176B on 8 CPU cores ~ 15 ms
+        ClientProfile { step_overhead_s: 0.015 }
+    }
+}
+
+/// A full swarm scenario: the model being served, who serves it, and the
+/// ambient network.
+#[derive(Debug, Clone)]
+pub struct SwarmProfile {
+    pub name: String,
+    pub n_blocks: usize,
+    pub bytes_per_block: u64,
+    pub flops_per_token_block: f64,
+    pub hidden: usize,
+    pub servers: Vec<ServerSpec>,
+    pub default_net: NetworkProfile,
+    pub client: ClientProfile,
+    /// Compress hidden states on the wire (§3.1 dynamic blockwise int8).
+    pub compress_activations: bool,
+}
+
+/// BLOOM-176B geometry constants used by the Table-3 scenarios.
+pub mod bloom176b {
+    /// 70 Transformer blocks.
+    pub const N_BLOCKS: usize = 70;
+    pub const HIDDEN: usize = 14336;
+    /// Bytes per block at int8 (~2.44 B params/block x ~1 B).
+    pub const BLOCK_BYTES_INT8: u64 = 2_440_000_000;
+    /// Bytes per block at 16-bit.
+    pub const BLOCK_BYTES_F16: u64 = 4_880_000_000;
+    /// 2 * params FLOPs per token per block.
+    pub const FLOPS_PER_TOKEN_BLOCK: f64 = 4.88e9;
+}
+
+/// Named presets matching the paper's evaluation setups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwarmPreset {
+    /// 3 physical servers with one A100 each.
+    ThreeA100,
+    /// 12 virtual servers partitioned from 3 A100s.
+    TwelveVirtual,
+    /// 14 heterogeneous real servers across Europe + North America.
+    FourteenRealWorld,
+}
+
+impl SwarmPreset {
+    pub fn build(self, net: NetworkProfile, compress: bool) -> SwarmProfile {
+        use bloom176b::*;
+        let servers = match self {
+            SwarmPreset::ThreeA100 => {
+                vec![
+                    ServerSpec { device: DeviceProfile::A100_80G, net: None, relayed: false };
+                    3
+                ]
+            }
+            SwarmPreset::TwelveVirtual => {
+                vec![
+                    ServerSpec {
+                        device: DeviceProfile::VIRTUAL_QUARTER_A100,
+                        net: None,
+                        relayed: false
+                    };
+                    12
+                ]
+            }
+            SwarmPreset::FourteenRealWorld => {
+                let mut v = Vec::new();
+                let devs = [
+                    DeviceProfile::RTX_3060,
+                    DeviceProfile::RTX_3060,
+                    DeviceProfile::RTX_2080TI,
+                    DeviceProfile::RTX_2080TI,
+                    DeviceProfile::RTX_2080TI,
+                    DeviceProfile::RTX_2080TI,
+                    DeviceProfile::RTX_3090,
+                    DeviceProfile::RTX_3090,
+                    DeviceProfile::A4000,
+                    DeviceProfile::A4000,
+                    DeviceProfile::A5000,
+                    DeviceProfile::A5000,
+                    DeviceProfile::A5000,
+                    DeviceProfile::A5000,
+                ];
+                for (i, d) in devs.into_iter().enumerate() {
+                    // bandwidths 100-1000 Mbit, intercontinental RTTs,
+                    // 4 servers behind relays (paper footnote 3)
+                    let bw = [1000.0, 100.0, 300.0, 500.0, 100.0, 1000.0, 200.0][i % 7] * MBIT;
+                    let rtt = [0.02, 0.09, 0.05, 0.12, 0.07, 0.03, 0.10][i % 7];
+                    v.push(ServerSpec {
+                        device: d,
+                        net: Some(NetworkProfile {
+                            bandwidth_bps: bw,
+                            rtt_s: rtt,
+                            jitter: 0.1,
+                            relay_extra_s: if i % 4 == 3 { 0.03 } else { 0.0 },
+                        }),
+                        relayed: i % 4 == 3,
+                    });
+                }
+                v
+            }
+        };
+        SwarmProfile {
+            name: format!("{self:?}"),
+            n_blocks: N_BLOCKS,
+            bytes_per_block: BLOCK_BYTES_INT8,
+            flops_per_token_block: FLOPS_PER_TOKEN_BLOCK,
+            hidden: HIDDEN,
+            servers,
+            default_net: net,
+            client: ClientProfile::default(),
+            compress_activations: compress,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_hosts_bloom_third_at_int8() {
+        // 3 A100s must cover all 70 int8 blocks: >=24 each
+        let cap = DeviceProfile::A100_80G.capacity_blocks(bloom176b::BLOCK_BYTES_INT8);
+        assert!(cap >= 24, "cap={cap}");
+        // ...but NOT at 16-bit (the 44->22 node story)
+        let cap16 = DeviceProfile::A100_80G.capacity_blocks(bloom176b::BLOCK_BYTES_F16);
+        assert!(cap16 < 24, "cap16={cap16}");
+    }
+
+    #[test]
+    fn decode_time_memory_bound_scaling() {
+        let d = DeviceProfile::A100_80G;
+        let t24 = d.decode_time(24, bloom176b::BLOCK_BYTES_INT8, 1);
+        let t12 = d.decode_time(12, bloom176b::BLOCK_BYTES_INT8, 1);
+        assert!(t24 > 1.9 * t12 - d.overhead_s);
+        // ~8 ms/block on the calibrated profile
+        let per_block = (t24 - d.overhead_s) / 24.0;
+        assert!((0.004..0.012).contains(&per_block), "{per_block}");
+    }
+
+    #[test]
+    fn forward_time_compute_bound() {
+        let d = DeviceProfile::A100_80G;
+        let t = d.forward_time(24, 8192, bloom176b::FLOPS_PER_TOKEN_BLOCK);
+        // 24 blocks x 8192 tok x 4.88 GFLOP / 100 TFLOPs ~ 9.6 s
+        assert!((5.0..20.0).contains(&t), "{t}");
+    }
+
+    #[test]
+    fn network_message_time() {
+        let n = NetworkProfile::MBIT100_100MS;
+        // 15 KB hidden state: 50 ms propagation + ~1.2 ms serialization
+        let t = n.message_s(15_000);
+        assert!((0.050..0.053).contains(&t), "{t}");
+        let g = NetworkProfile::GBIT_5MS;
+        assert!(g.message_s(15_000) < 0.003);
+    }
+
+    #[test]
+    fn presets_have_capacity_for_all_blocks() {
+        for preset in [
+            SwarmPreset::ThreeA100,
+            SwarmPreset::TwelveVirtual,
+            SwarmPreset::FourteenRealWorld,
+        ] {
+            let p = preset.build(NetworkProfile::GBIT_5MS, true);
+            let total: usize = p
+                .servers
+                .iter()
+                .map(|s| s.device.capacity_blocks(p.bytes_per_block))
+                .sum();
+            assert!(
+                total >= p.n_blocks,
+                "{preset:?}: total capacity {total} < {}",
+                p.n_blocks
+            );
+        }
+    }
+
+    #[test]
+    fn realworld_has_relayed_servers() {
+        let p = SwarmPreset::FourteenRealWorld.build(NetworkProfile::GBIT_5MS, true);
+        assert_eq!(p.servers.len(), 14);
+        assert!(p.servers.iter().filter(|s| s.relayed).count() >= 3);
+    }
+}

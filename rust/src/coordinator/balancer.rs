@@ -1,0 +1,313 @@
+//! Server-side load balancing (§3.2).
+//!
+//! "First, we ensure that servers are distributed evenly among
+//! Transformer blocks. Formally, servers maximize the total model
+//! throughput by choosing the blocks with the worst throughput and
+//! eliminating potential bottlenecks. [...] When a new server joins, it
+//! uses this information to identify an interval of blocks that contains
+//! most blocks with the worst throughput. This interval is always
+//! contiguous. [...] all nodes periodically check if launching a
+//! rebalancing procedure would significantly improve the overall
+//! throughput."
+//!
+//! All logic here is pure: inputs are per-block throughput sums
+//! ([`BlockCoverage`]), outputs are spans/moves — so the same code runs
+//! in real servers, the simulator, and property tests.
+
+/// Per-block total announced throughput (sum over servers hosting it).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockCoverage {
+    pub per_block: Vec<f64>,
+}
+
+impl BlockCoverage {
+    pub fn new(n_blocks: usize) -> Self {
+        BlockCoverage { per_block: vec![0.0; n_blocks] }
+    }
+
+    pub fn from_entries<'a>(
+        n_blocks: usize,
+        entries: impl Iterator<Item = &'a crate::dht::ServerEntry>,
+    ) -> Self {
+        let mut c = Self::new(n_blocks);
+        for e in entries {
+            for b in e.start..e.end.min(n_blocks as u32) {
+                c.per_block[b as usize] += e.throughput as f64;
+            }
+        }
+        c
+    }
+
+    pub fn add_span(&mut self, span: std::ops::Range<usize>, throughput: f64) {
+        for b in span {
+            self.per_block[b] += throughput;
+        }
+    }
+
+    pub fn remove_span(&mut self, span: std::ops::Range<usize>, throughput: f64) {
+        for b in span {
+            self.per_block[b] = (self.per_block[b] - throughput).max(0.0);
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.per_block.len()
+    }
+}
+
+/// Total model throughput: the pipeline is bottlenecked by its weakest
+/// block (every request visits every block).
+pub fn swarm_throughput(cov: &BlockCoverage) -> f64 {
+    cov.per_block.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+/// Span a joining server should host: the contiguous `capacity`-length
+/// interval covering the most bottleneck-valued blocks; ties broken by
+/// lowest total coverage (then leftmost, for determinism).
+pub fn choose_join_span(cov: &BlockCoverage, capacity: usize) -> std::ops::Range<usize> {
+    let n = cov.n_blocks();
+    let len = capacity.min(n).max(1);
+    let worst = swarm_throughput(cov);
+    let eps = 1e-9;
+    let mut best_start = 0usize;
+    let mut best_key = (usize::MAX, f64::INFINITY);
+    // O(n * len) scan is fine at n<=70-ish; a sliding window would be
+    // O(n) but obscures the tie-breaking rule.
+    for start in 0..=(n - len) {
+        let window = &cov.per_block[start..start + len];
+        let n_worst = window.iter().filter(|&&t| t <= worst + eps).count();
+        let total: f64 = window.iter().sum();
+        // maximize n_worst, then minimize total coverage
+        let key = (usize::MAX - n_worst, total);
+        if key < best_key {
+            best_key = key;
+            best_start = start;
+        }
+    }
+    best_start..best_start + len
+}
+
+/// A proposed server move.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RebalanceMove {
+    pub server_idx: usize,
+    pub from: std::ops::Range<usize>,
+    pub to: std::ops::Range<usize>,
+    pub gain: f64,
+}
+
+/// Check whether moving any single server to its greedily-best span
+/// improves total throughput by at least `min_gain_ratio` (paper:
+/// "significantly improve"). Returns the best such move.
+///
+/// `servers`: (span, announced throughput) per live server.
+pub fn plan_rebalance(
+    n_blocks: usize,
+    servers: &[(std::ops::Range<usize>, f64)],
+    min_gain_ratio: f64,
+) -> Option<RebalanceMove> {
+    let mut cov = BlockCoverage::new(n_blocks);
+    for (span, t) in servers {
+        cov.add_span(span.clone(), *t);
+    }
+    let current = swarm_throughput(&cov);
+    let mut best: Option<RebalanceMove> = None;
+    for (i, (span, t)) in servers.iter().enumerate() {
+        // hypothetically remove this server, re-place it greedily
+        let mut without = cov.clone();
+        without.remove_span(span.clone(), *t);
+        let capacity = span.len();
+        let new_span = choose_join_span(&without, capacity);
+        let mut with_new = without.clone();
+        with_new.add_span(new_span.clone(), *t);
+        let new_total = swarm_throughput(&with_new);
+        let gain = new_total - current;
+        let significant = if current <= 0.0 {
+            gain > 0.0
+        } else {
+            gain / current >= min_gain_ratio
+        };
+        if significant && new_span != *span {
+            let better_than_best = best.as_ref().map(|b| gain > b.gain).unwrap_or(true);
+            if better_than_best {
+                best = Some(RebalanceMove {
+                    server_idx: i,
+                    from: span.clone(),
+                    to: new_span,
+                    gain,
+                });
+            }
+        }
+    }
+    best
+}
+
+/// Run `plan_rebalance` to a fixed point (bounded rounds), applying each
+/// move — models the paper's "they switch layers until the throughput
+/// becomes near-optimal".
+pub fn rebalance_to_fixpoint(
+    n_blocks: usize,
+    servers: &mut Vec<(std::ops::Range<usize>, f64)>,
+    min_gain_ratio: f64,
+    max_rounds: usize,
+) -> usize {
+    let mut moves = 0;
+    for _ in 0..max_rounds {
+        match plan_rebalance(n_blocks, servers, min_gain_ratio) {
+            Some(mv) => {
+                servers[mv.server_idx].0 = mv.to;
+                moves += 1;
+            }
+            None => break,
+        }
+    }
+    moves
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn join_targets_uncovered_gap() {
+        let mut cov = BlockCoverage::new(12);
+        cov.add_span(0..6, 1.0); // first half covered
+        let span = choose_join_span(&cov, 6);
+        assert_eq!(span, 6..12, "new server must take the empty half");
+    }
+
+    #[test]
+    fn join_prefers_weakest_window() {
+        let mut cov = BlockCoverage::new(9);
+        cov.add_span(0..9, 1.0);
+        cov.add_span(0..3, 5.0); // left strong
+        cov.add_span(6..9, 2.0); // right medium; middle weakest
+        let span = choose_join_span(&cov, 3);
+        assert_eq!(span, 3..6);
+    }
+
+    #[test]
+    fn join_capacity_larger_than_model() {
+        let cov = BlockCoverage::new(4);
+        let span = choose_join_span(&cov, 100);
+        assert_eq!(span, 0..4);
+    }
+
+    #[test]
+    fn throughput_is_min_over_blocks() {
+        let mut cov = BlockCoverage::new(4);
+        cov.add_span(0..4, 2.0);
+        cov.add_span(1..2, 3.0);
+        assert_eq!(swarm_throughput(&cov), 2.0);
+        cov.remove_span(3..4, 2.0);
+        assert_eq!(swarm_throughput(&cov), 0.0);
+    }
+
+    #[test]
+    fn rebalance_closes_gap_after_mass_departure() {
+        // paper: "if all peers serving certain blocks suddenly leave the
+        // system, this procedure quickly redistributes the remaining
+        // resources to close the emerged gaps"
+        let n = 12;
+        // 4 servers, 2 stacked on 0..6, 2 stacked on 6..12 — then the two
+        // on 6..12 "leave", leaving double coverage left and none right:
+        let mut servers = vec![(0..6, 1.0), (0..6, 1.0)];
+        assert_eq!(
+            swarm_throughput(&BlockCoverage::from_spans(n, &servers)),
+            0.0
+        );
+        let moves = rebalance_to_fixpoint(n, &mut servers, 0.05, 10);
+        assert!(moves >= 1);
+        let total = swarm_throughput(&BlockCoverage::from_spans(n, &servers));
+        assert!(total > 0.0, "gap closed: {servers:?}");
+    }
+
+    #[test]
+    fn rebalance_noop_when_balanced() {
+        let servers = vec![(0..6, 1.0), (6..12, 1.0)];
+        assert!(plan_rebalance(12, &servers, 0.05).is_none());
+    }
+
+    #[test]
+    fn rebalance_requires_significant_gain() {
+        // moving would only marginally improve -> below threshold, no move
+        let servers = vec![(0..6, 1.0), (0..6, 0.01), (6..12, 1.0)];
+        // moving server 1 to 6..12 changes min from 1.0 to 1.0 (gain 0)
+        assert!(plan_rebalance(12, &servers, 0.05).is_none());
+    }
+
+    impl BlockCoverage {
+        pub(crate) fn from_spans(n: usize, servers: &[(std::ops::Range<usize>, f64)]) -> Self {
+            let mut c = BlockCoverage::new(n);
+            for (s, t) in servers {
+                c.add_span(s.clone(), *t);
+            }
+            c
+        }
+    }
+
+    // --- property tests (in-tree harness: deterministic PRNG sweeps) ---
+
+    #[test]
+    fn prop_join_never_decreases_throughput() {
+        let mut rng = crate::config::Rng::new(0xB41);
+        for _ in 0..200 {
+            let n = 2 + rng.usize_below(30);
+            let mut cov = BlockCoverage::new(n);
+            for _ in 0..rng.usize_below(6) {
+                let a = rng.usize_below(n);
+                let b = (a + 1 + rng.usize_below(n - a)).min(n);
+                cov.add_span(a..b, rng.range_f64(0.1, 5.0));
+            }
+            let before = swarm_throughput(&cov);
+            let cap = 1 + rng.usize_below(n);
+            let span = choose_join_span(&cov, cap);
+            assert!(span.end <= n && !span.is_empty());
+            let mut after = cov.clone();
+            after.add_span(span, rng.range_f64(0.1, 5.0));
+            assert!(swarm_throughput(&after) >= before - 1e-12);
+        }
+    }
+
+    #[test]
+    fn prop_join_span_contains_a_bottleneck_block() {
+        let mut rng = crate::config::Rng::new(0xB42);
+        for _ in 0..200 {
+            let n = 2 + rng.usize_below(40);
+            let mut cov = BlockCoverage::new(n);
+            for _ in 0..1 + rng.usize_below(5) {
+                let a = rng.usize_below(n);
+                let b = (a + 1 + rng.usize_below(n - a)).min(n);
+                cov.add_span(a..b, rng.range_f64(0.1, 5.0));
+            }
+            let cap = 1 + rng.usize_below(n);
+            let worst = swarm_throughput(&cov);
+            let span = choose_join_span(&cov, cap);
+            assert!(
+                cov.per_block[span.clone()].iter().any(|&t| t <= worst + 1e-9),
+                "span {span:?} must cover at least one bottleneck block"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_rebalance_fixpoint_monotone() {
+        let mut rng = crate::config::Rng::new(0xB43);
+        for _ in 0..100 {
+            let n = 4 + rng.usize_below(20);
+            let mut servers = Vec::new();
+            for _ in 0..2 + rng.usize_below(5) {
+                let cap = 1 + rng.usize_below(n);
+                let start = rng.usize_below(n - cap + 1);
+                servers.push((start..start + cap, rng.range_f64(0.2, 3.0)));
+            }
+            let before = swarm_throughput(&BlockCoverage::from_spans(n, &servers));
+            rebalance_to_fixpoint(n, &mut servers, 0.05, 20);
+            let after = swarm_throughput(&BlockCoverage::from_spans(n, &servers));
+            assert!(
+                after >= before - 1e-12,
+                "rebalancing must never lose throughput ({before} -> {after})"
+            );
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Batch splitting for parallel forward passes (§3.2).
+//!
+//! "during fine-tuning one needs to process a batch of examples in
+//! parallel. Here, clients can split their batches between multiple
+//! servers using the algorithm from Ryabinin et al. (2023)" — i.e.
+//! proportionally to measured per-server throughput, so the slowest
+//! replica stops being the critical path.
+
+/// Split `total` examples across replicas proportional to `rates`
+/// (largest-remainder rounding; every replica with rate > 0 gets its
+/// fair share, zero-rate replicas get nothing unless all are zero).
+pub fn split_batch(total: usize, rates: &[f64]) -> Vec<usize> {
+    let n = rates.len();
+    if n == 0 {
+        return vec![];
+    }
+    let sum: f64 = rates.iter().filter(|r| r.is_finite() && **r > 0.0).sum();
+    if sum <= 0.0 {
+        // degenerate: split evenly
+        let base = total / n;
+        let mut out = vec![base; n];
+        for item in out.iter_mut().take(total % n) {
+            *item += 1;
+        }
+        return out;
+    }
+    let mut out = vec![0usize; n];
+    let mut rema: Vec<(f64, usize)> = Vec::with_capacity(n);
+    let mut assigned = 0usize;
+    for (i, &r) in rates.iter().enumerate() {
+        let r = if r.is_finite() && r > 0.0 { r } else { 0.0 };
+        let exact = total as f64 * r / sum;
+        let fl = exact.floor() as usize;
+        out[i] = fl;
+        assigned += fl;
+        rema.push((exact - fl as f64, i));
+    }
+    rema.sort_by(|a, b| b.0.total_cmp(&a.0));
+    for k in 0..total - assigned {
+        out[rema[k % n].1] += 1;
+    }
+    out
+}
+
+/// Predicted makespan of a split: max over replicas of examples/rate.
+pub fn makespan(split: &[usize], rates: &[f64]) -> f64 {
+    split
+        .iter()
+        .zip(rates)
+        .map(|(&n, &r)| if n == 0 { 0.0 } else { n as f64 / r.max(1e-12) })
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proportional_split() {
+        let s = split_batch(30, &[1.0, 2.0]);
+        assert_eq!(s, vec![10, 20]);
+    }
+
+    #[test]
+    fn sums_to_total_always() {
+        let mut rng = crate::config::Rng::new(0xBA7);
+        for _ in 0..300 {
+            let n = 1 + rng.usize_below(8);
+            let rates: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 10.0)).collect();
+            let total = rng.usize_below(200);
+            let s = split_batch(total, &rates);
+            assert_eq!(s.iter().sum::<usize>(), total, "rates {rates:?}");
+        }
+    }
+
+    #[test]
+    fn zero_rate_replica_gets_nothing() {
+        let s = split_batch(10, &[0.0, 1.0, 1.0]);
+        assert_eq!(s[0], 0);
+        assert_eq!(s.iter().sum::<usize>(), 10);
+    }
+
+    #[test]
+    fn all_zero_rates_fall_back_to_even() {
+        let s = split_batch(10, &[0.0, 0.0, 0.0]);
+        assert_eq!(s.iter().sum::<usize>(), 10);
+        assert!(s.iter().all(|&x| (3..=4).contains(&x)));
+    }
+
+    #[test]
+    fn empty_replicas() {
+        assert_eq!(split_batch(5, &[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn proportional_beats_even_on_makespan() {
+        let rates = [4.0, 1.0];
+        let prop = split_batch(100, &rates);
+        let even = vec![50, 50];
+        assert!(makespan(&prop, &rates) < makespan(&even, &rates));
+    }
+
+    #[test]
+    fn prop_makespan_near_optimal() {
+        // property: proportional split's makespan is within one
+        // example-per-slowest-replica of the fractional lower bound
+        let mut rng = crate::config::Rng::new(0xBA8);
+        for _ in 0..200 {
+            let n = 1 + rng.usize_below(6);
+            let rates: Vec<f64> = (0..n).map(|_| rng.range_f64(0.5, 8.0)).collect();
+            let total = 1 + rng.usize_below(500);
+            let s = split_batch(total, &rates);
+            let lower = total as f64 / rates.iter().sum::<f64>();
+            let slowest = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+            assert!(
+                makespan(&s, &rates) <= lower + 1.0 / slowest + 1e-9,
+                "split {s:?} rates {rates:?}"
+            );
+        }
+    }
+}

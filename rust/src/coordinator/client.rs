@@ -1,0 +1,249 @@
+//! The client's local model head (§2.1): "a client stores the model's
+//! token embeddings locally and relies on servers to run Transformer
+//! blocks". Embedding lookup, LM head, and sampling all run through
+//! local AOT artifacts; the swarm only ever sees hidden states.
+
+use crate::config::Rng;
+use crate::coordinator::session::{ChainClient, InferenceSession, SessionConfig};
+use crate::error::{Error, Result};
+use crate::model::tensor::Tensor;
+use crate::model::{ModelHome, Weights};
+use crate::runtime::Runtime;
+use std::sync::Arc;
+
+/// Local embedding + LM head over AOT artifacts.
+pub struct LocalHead {
+    runtime: Arc<Runtime>,
+    emb_lit: xla::Literal,
+    ln_emb_g: xla::Literal,
+    ln_emb_b: xla::Literal,
+    ln_f_g: xla::Literal,
+    ln_f_b: xla::Literal,
+    pub hidden: usize,
+    pub vocab: usize,
+}
+
+// Literals wrap PJRT host memory; the head is read-only after init.
+unsafe impl Send for LocalHead {}
+unsafe impl Sync for LocalHead {}
+
+impl LocalHead {
+    pub fn new(home: &ModelHome, runtime: Arc<Runtime>, weights: &Weights) -> Result<Self> {
+        Ok(LocalHead {
+            runtime,
+            emb_lit: weights.embedding.to_literal()?,
+            ln_emb_g: weights.ln_emb_g.to_literal()?,
+            ln_emb_b: weights.ln_emb_b.to_literal()?,
+            ln_f_g: weights.ln_f_g.to_literal()?,
+            ln_f_b: weights.ln_f_b.to_literal()?,
+            hidden: home.geometry().hidden,
+            vocab: home.geometry().vocab,
+        })
+    }
+
+    /// ids [B,S] -> hidden [B,S,H] via the `embed_b{B}_s{S}` artifact.
+    pub fn embed(&self, ids: &Tensor) -> Result<Tensor> {
+        let (b, s) = (ids.shape[0], ids.shape[1]);
+        let name = format!("embed_b{b}_s{s}");
+        let ex = self.runtime.entry(&name)?;
+        let ids_lit = ids.to_literal()?;
+        let out = ex.call_literals(&[&ids_lit, &self.emb_lit, &self.ln_emb_g, &self.ln_emb_b])?;
+        ex.output_tensor(&out[0], 0)
+    }
+
+    /// hidden [B,H] -> logits [B,V] via `lm_head_b{B}`.
+    pub fn lm_head(&self, h: &Tensor) -> Result<Tensor> {
+        let b = h.shape[0];
+        let name = format!("lm_head_b{b}");
+        let ex = self.runtime.entry(&name)?;
+        let h_lit = h.to_literal()?;
+        let out = ex.call_literals(&[&h_lit, &self.ln_f_g, &self.ln_f_b, &self.emb_lit])?;
+        ex.output_tensor(&out[0], 0)
+    }
+}
+
+/// Token selection policies (Figure 2's `sample_next_token`).
+#[derive(Debug, Clone)]
+pub enum Sampler {
+    Greedy,
+    /// top-k sampling with temperature.
+    TopK { k: usize, temperature: f32, seed: u64 },
+}
+
+impl Sampler {
+    /// logits [B,V] -> one token per row.
+    pub fn sample(&self, logits: &Tensor) -> Vec<i32> {
+        let b = logits.shape[0];
+        let v = logits.shape[1];
+        let data = logits.as_f32();
+        match self {
+            Sampler::Greedy => (0..b)
+                .map(|i| {
+                    let row = &data[i * v..(i + 1) * v];
+                    argmax(row) as i32
+                })
+                .collect(),
+            Sampler::TopK { k, temperature, seed } => {
+                let mut rng = Rng::new(*seed);
+                (0..b)
+                    .map(|i| {
+                        let row = &data[i * v..(i + 1) * v];
+                        sample_topk(row, *k, *temperature, &mut rng) as i32
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+fn sample_topk(row: &[f32], k: usize, temperature: f32, rng: &mut Rng) -> usize {
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]));
+    idx.truncate(k.max(1));
+    let t = temperature.max(1e-4);
+    let mx = row[idx[0]];
+    let weights: Vec<f64> = idx.iter().map(|&i| (((row[i] - mx) / t) as f64).exp()).collect();
+    let total: f64 = weights.iter().sum();
+    let mut r = rng.f64() * total;
+    for (j, w) in weights.iter().enumerate() {
+        r -= w;
+        if r <= 0.0 {
+            return idx[j];
+        }
+    }
+    idx[0]
+}
+
+/// Generation outcome + stats for one request.
+#[derive(Debug, Clone)]
+pub struct GenerationResult {
+    /// [B][n_new] generated tokens.
+    pub tokens: Vec<Vec<i32>>,
+    pub steps: usize,
+    pub recoveries: usize,
+    pub wall: std::time::Duration,
+}
+
+/// End-to-end generation driver: local embed/head + remote blocks —
+/// the Rust rendition of Figure 2's inference-session snippet.
+pub struct SwarmGenerator<'a, C: ChainClient> {
+    pub swarm: &'a C,
+    pub head: &'a LocalHead,
+    pub cfg: SessionConfig,
+    pub sampler: Sampler,
+}
+
+impl<'a, C: ChainClient> SwarmGenerator<'a, C> {
+    /// Greedy/top-k generation of `n_new` tokens from `prefix` ids
+    /// [B, prefix_len].
+    pub fn generate(&self, prefix: &[Vec<i32>], n_new: usize, session_id: u64) -> Result<GenerationResult> {
+        let started = std::time::Instant::now();
+        let b = prefix.len();
+        let prefix_len = prefix.first().map(|p| p.len()).unwrap_or(0);
+        if b != self.cfg.batch || prefix_len != self.cfg.prefix_len {
+            return Err(Error::Shape(format!(
+                "prefix {b}x{prefix_len} vs session config {}x{}",
+                self.cfg.batch, self.cfg.prefix_len
+            )));
+        }
+        // pad prefix ids to the prefill width (causal masking makes the
+        // padding invisible to valid positions; servers track cache_len)
+        let w = self.cfg.prefill_width;
+        let mut ids = vec![0i32; b * w];
+        for (i, row) in prefix.iter().enumerate() {
+            ids[i * w..i * w + prefix_len].copy_from_slice(row);
+        }
+        let ids_t = Tensor::from_i32(&[b, w], &ids);
+        let h0 = self.head.embed(&ids_t)?;
+
+        let mut session = InferenceSession::open(self.swarm, self.cfg.clone(), session_id)?;
+        let h_pre = session.prefill(h0)?;
+
+        // last *valid* position of the prefill output
+        let hidden = self.head.hidden;
+        let mut last = Tensor::from_f32(
+            &[b, hidden],
+            &extract_positions(&h_pre, prefix_len - 1),
+        );
+        let mut tokens: Vec<Vec<i32>> = vec![Vec::with_capacity(n_new); b];
+        for _step in 0..n_new {
+            let logits = self.head.lm_head(&last)?;
+            let next = self.sampler.sample(&logits);
+            for (row, &t) in tokens.iter_mut().zip(&next) {
+                row.push(t);
+            }
+            // embed the new tokens and run one decode step
+            let ids_t = Tensor::from_i32(&[b, 1], &next);
+            let h = self.head.embed(&ids_t)?;
+            let h_out = session.step(h)?;
+            last = Tensor::from_f32(&[b, hidden], h_out.as_f32());
+        }
+        let recoveries = session.recoveries();
+        let steps = n_new;
+        session.close();
+        Ok(GenerationResult { tokens, steps, recoveries, wall: started.elapsed() })
+    }
+}
+
+/// Pull position `pos` out of a [B,S,H] tensor -> flat [B*H].
+fn extract_positions(h: &Tensor, pos: usize) -> Vec<f32> {
+    let (b, s, hd) = (h.shape[0], h.shape[1], h.shape[2]);
+    assert!(pos < s);
+    let src = h.as_f32();
+    let mut out = Vec::with_capacity(b * hd);
+    for i in 0..b {
+        let off = (i * s + pos) * hd;
+        out.extend_from_slice(&src[off..off + hd]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_argmax() {
+        let logits = Tensor::from_f32(&[2, 4], &[0.1, 0.9, 0.0, 0.2, 5.0, 1.0, 2.0, 3.0]);
+        assert_eq!(Sampler::Greedy.sample(&logits), vec![1, 0]);
+    }
+
+    #[test]
+    fn topk_respects_k() {
+        let logits = Tensor::from_f32(&[1, 5], &[10.0, 9.0, -50.0, -50.0, -50.0]);
+        let s = Sampler::TopK { k: 2, temperature: 1.0, seed: 1 };
+        for trial in 0..20 {
+            let s = Sampler::TopK { k: 2, temperature: 1.0, seed: trial };
+            let t = s.sample(&logits)[0];
+            assert!(t == 0 || t == 1, "token {t} outside top-2");
+        }
+        let _ = s;
+    }
+
+    #[test]
+    fn topk_deterministic_per_seed() {
+        let logits = Tensor::from_f32(&[1, 8], &[1.0, 2.0, 3.0, 4.0, 3.5, 2.5, 1.5, 0.5]);
+        let a = Sampler::TopK { k: 4, temperature: 0.8, seed: 7 }.sample(&logits);
+        let b = Sampler::TopK { k: 4, temperature: 0.8, seed: 7 }.sample(&logits);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn extract_positions_layout() {
+        // B=2,S=3,H=2
+        let h = Tensor::from_f32(
+            &[2, 3, 2],
+            &[0., 1., 10., 11., 20., 21., 100., 101., 110., 111., 120., 121.],
+        );
+        assert_eq!(extract_positions(&h, 1), vec![10., 11., 110., 111.]);
+        assert_eq!(extract_positions(&h, 2), vec![20., 21., 120., 121.]);
+    }
+}

@@ -1,0 +1,32 @@
+//! The coordinator — Petals' system contribution (§2.1, §3.2).
+//!
+//! Split into pure decision logic (unit- and property-tested in
+//! isolation) and the generic session machinery that drives any
+//! [`ChainClient`] implementation (in-process cluster, TCP swarm, or the
+//! discrete-event simulator):
+//!
+//! - [`throughput`] — server throughput estimation (compute ∧ network),
+//!   the quantity servers announce to the DHT.
+//! - [`balancer`] — block assignment: joining servers grab the
+//!   contiguous interval with the worst coverage; periodic rebalancing
+//!   closes gaps after departures.
+//! - [`routing`] — client-side chain selection: beam search over
+//!   per-block server sets minimizing predicted end-to-end step time.
+//! - [`session`] — fault-tolerant inference sessions: chain formation,
+//!   per-server KV position tracking, input history, replacement +
+//!   replay on failure.
+//! - [`batching`] — splitting parallel forward batches across server
+//!   replicas proportional to throughput (fine-tuning & batch inference).
+//! - [`client`] — the local model head: embeddings, LM head, sampling
+//!   (the paper's "clients store token embeddings locally").
+
+pub mod balancer;
+pub mod batching;
+pub mod client;
+pub mod routing;
+pub mod session;
+pub mod throughput;
+
+pub use balancer::{choose_join_span, plan_rebalance, swarm_throughput, BlockCoverage};
+pub use routing::{find_chain, ChainHop, RouteQuery, ServerView};
+pub use session::{ChainClient, InferenceSession, PongInfo, SessionConfig};

@@ -1,0 +1,384 @@
+//! Client-side routing (§3.2): find the chain of servers that runs the
+//! model in the least time.
+//!
+//! "clients have to ping nearby servers to measure latency and then find
+//! the path with minimal time via beam search."
+//!
+//! The graph: a path must cover blocks `0..n_blocks` left to right; each
+//! server hosts a contiguous span, so a chain is a sequence of servers
+//! whose spans tile the range. Hop cost = message time (client→server or
+//! server→server over the slower of the two links) + the server's
+//! predicted span compute time; the final hop returns to the client.
+//! Beam search keeps the `beam_width` cheapest partial chains per
+//! frontier block.
+
+use std::collections::HashMap;
+
+/// What the client knows about one server (from Pong probes + DHT).
+#[derive(Debug, Clone)]
+pub struct ServerView {
+    /// Stable identity (DHT id).
+    pub id: crate::dht::NodeId,
+    /// Hosted span [start, end).
+    pub start: usize,
+    pub end: usize,
+    /// Measured one-way latency client<->server, seconds.
+    pub latency_s: f64,
+    /// Link bandwidth estimate, bits/s.
+    pub bandwidth_bps: f64,
+    /// Predicted seconds to process one request over the full span.
+    pub span_compute_s: f64,
+    /// Current queue depth (multi-client contention signal).
+    pub queue_depth: u32,
+}
+
+impl ServerView {
+    /// Predicted time for a message of `bytes` to reach this server.
+    fn msg_time(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 * 8.0 / self.bandwidth_bps
+    }
+}
+
+/// Inputs to chain search.
+#[derive(Debug, Clone)]
+pub struct RouteQuery {
+    pub n_blocks: usize,
+    /// Hidden-state bytes per hop message.
+    pub msg_bytes: u64,
+    pub beam_width: usize,
+    /// Extra seconds charged per queued request at a server (models
+    /// waiting behind other clients).
+    pub queue_penalty_s: f64,
+}
+
+impl Default for RouteQuery {
+    fn default() -> Self {
+        RouteQuery { n_blocks: 0, msg_bytes: 0, beam_width: 8, queue_penalty_s: 0.05 }
+    }
+}
+
+/// One hop of a selected chain.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChainHop {
+    pub server: crate::dht::NodeId,
+    pub start: usize,
+    pub end: usize,
+}
+
+#[derive(Clone)]
+struct Partial {
+    cost: f64,
+    hops: Vec<(usize, usize)>, // (server index, entry block)
+}
+
+/// Beam search for the fastest chain covering all blocks.
+/// Returns hops + predicted per-step time, or None if some block has no
+/// live server.
+pub fn find_chain(servers: &[ServerView], q: &RouteQuery) -> Option<(Vec<ChainHop>, f64)> {
+    if q.n_blocks == 0 {
+        return Some((vec![], 0.0));
+    }
+    // candidates by covered block: a client may enter a server at any
+    // block inside its hosted span (it requests a sub-range), so spans
+    // that overlap after rebalancing still stitch into chains
+    let mut by_block: HashMap<usize, Vec<usize>> = HashMap::new();
+    for (i, s) in servers.iter().enumerate() {
+        for b in s.start..s.end {
+            by_block.entry(b).or_default().push(i);
+        }
+    }
+    // frontier: block index -> beam of partials
+    let mut beams: HashMap<usize, Vec<Partial>> = HashMap::new();
+    beams.insert(0, vec![Partial { cost: 0.0, hops: vec![] }]);
+    // process frontiers in block order
+    for block in 0..q.n_blocks {
+        let Some(partials) = beams.remove(&block) else {
+            continue;
+        };
+        let Some(cands) = by_block.get(&block) else {
+            continue;
+        };
+        for p in &partials {
+            for &ci in cands {
+                let s = &servers[ci];
+                let next = s.end.min(q.n_blocks);
+                if next <= block {
+                    continue;
+                }
+                // entry hop: from client (first) or previous server; we
+                // approximate server->server latency with the entered
+                // server's client latency (the client measured only its
+                // own pings — same approximation the paper's client makes
+                // before the first real step).
+                let hop_in = s.msg_time(q.msg_bytes);
+                let queue = s.queue_depth as f64 * q.queue_penalty_s;
+                // compute prorated to the sub-span actually used
+                let frac = (next - block) as f64 / (s.end - s.start) as f64;
+                let cost = p.cost + hop_in + s.span_compute_s * frac + queue;
+                let mut hops = p.hops.clone();
+                hops.push((ci, block));
+                let beam = beams.entry(next).or_default();
+                beam.push(Partial { cost, hops });
+                beam.sort_by(|a, b| a.cost.total_cmp(&b.cost));
+                beam.truncate(q.beam_width);
+            }
+        }
+    }
+    let done = beams.remove(&q.n_blocks)?;
+    // the return leg to the client depends on the LAST hop's link, so it
+    // must be added before choosing the winner
+    let (best, total) = done
+        .into_iter()
+        .filter_map(|p| {
+            let last = &servers[p.hops.last()?.0];
+            let total = p.cost + last.msg_time(q.msg_bytes);
+            Some((p, total))
+        })
+        .min_by(|a, b| a.1.total_cmp(&b.1))?;
+    let hops = best
+        .hops
+        .iter()
+        .map(|&(i, entry)| ChainHop {
+            server: servers[i].id,
+            start: entry,
+            end: servers[i].end.min(q.n_blocks),
+        })
+        .collect();
+    Some((hops, total))
+}
+
+/// Find a chain covering only `from..to` (used to replace a failed
+/// server mid-session, §3.2 failure recovery).
+pub fn find_subchain(
+    servers: &[ServerView],
+    q: &RouteQuery,
+    from: usize,
+    to: usize,
+) -> Option<Vec<ChainHop>> {
+    // re-index the world so `from..to` looks like `0..(to-from)`
+    let shifted: Vec<ServerView> = servers
+        .iter()
+        .filter(|s| s.start <= from && s.end > from || (s.start > from && s.start < to))
+        .map(|s| {
+            let mut c = s.clone();
+            c.start = c.start.max(from) - from;
+            c.end = c.end.min(to) - from;
+            c
+        })
+        .collect();
+    let sub_q = RouteQuery { n_blocks: to - from, ..q.clone() };
+    let (hops, _) = find_chain(&shifted, &sub_q)?;
+    Some(
+        hops.into_iter()
+            .map(|h| ChainHop { server: h.server, start: h.start + from, end: h.end + from }, )
+            .collect(),
+    )
+}
+
+/// Validate that hops tile `0..n_blocks` exactly.
+pub fn chain_is_valid(hops: &[ChainHop], n_blocks: usize) -> bool {
+    let mut at = 0;
+    for h in hops {
+        if h.start != at || h.end <= h.start {
+            return false;
+        }
+        at = h.end;
+    }
+    at == n_blocks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dht::NodeId;
+
+    fn sv(name: &str, start: usize, end: usize, lat: f64, comp: f64) -> ServerView {
+        ServerView {
+            id: NodeId::from_name(name),
+            start,
+            end,
+            latency_s: lat,
+            bandwidth_bps: 1e9,
+            span_compute_s: comp,
+            queue_depth: 0,
+        }
+    }
+
+    fn q(n: usize) -> RouteQuery {
+        RouteQuery { n_blocks: n, msg_bytes: 2048, beam_width: 8, queue_penalty_s: 0.05 }
+    }
+
+    #[test]
+    fn single_server_chain() {
+        let servers = [sv("a", 0, 8, 0.01, 0.1)];
+        let (hops, t) = find_chain(&servers, &q(8)).unwrap();
+        assert_eq!(hops.len(), 1);
+        assert!(chain_is_valid(&hops, 8));
+        // in + compute + out
+        assert!((t - (0.01 + 0.1 + 0.01 + 2.0 * 2048.0 * 8.0 / 1e9)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefers_fast_replica() {
+        let servers = [
+            sv("slow", 0, 8, 0.10, 0.5),
+            sv("fast", 0, 8, 0.01, 0.1),
+        ];
+        let (hops, _) = find_chain(&servers, &q(8)).unwrap();
+        assert_eq!(hops[0].server, NodeId::from_name("fast"));
+    }
+
+    #[test]
+    fn stitches_partial_spans() {
+        let servers = [
+            sv("a", 0, 3, 0.01, 0.1),
+            sv("b", 3, 6, 0.01, 0.1),
+            sv("c", 6, 8, 0.01, 0.1),
+        ];
+        let (hops, _) = find_chain(&servers, &q(8)).unwrap();
+        assert_eq!(hops.len(), 3);
+        assert!(chain_is_valid(&hops, 8));
+    }
+
+    #[test]
+    fn fewer_hops_beat_many_when_latency_dominates() {
+        // one big server vs 4 small ones with the same total compute:
+        // high per-hop latency should favor the single server
+        let servers = [
+            sv("big", 0, 8, 0.10, 0.4),
+            sv("s1", 0, 2, 0.10, 0.1),
+            sv("s2", 2, 4, 0.10, 0.1),
+            sv("s3", 4, 6, 0.10, 0.1),
+            sv("s4", 6, 8, 0.10, 0.1),
+        ];
+        let (hops, _) = find_chain(&servers, &q(8)).unwrap();
+        assert_eq!(hops.len(), 1, "latency-dominated -> prefer 1 hop");
+    }
+
+    #[test]
+    fn many_hops_beat_one_when_compute_dominates() {
+        let servers = [
+            sv("big", 0, 8, 0.001, 1.6), // slow device
+            sv("s1", 0, 4, 0.001, 0.2),
+            sv("s2", 4, 8, 0.001, 0.2),
+        ];
+        let (hops, _) = find_chain(&servers, &q(8)).unwrap();
+        assert_eq!(hops.len(), 2);
+    }
+
+    #[test]
+    fn no_route_when_gap() {
+        let servers = [sv("a", 0, 3, 0.01, 0.1), sv("c", 5, 8, 0.01, 0.1)];
+        assert!(find_chain(&servers, &q(8)).is_none());
+    }
+
+    #[test]
+    fn queue_depth_steers_away() {
+        let mut busy = sv("busy", 0, 8, 0.01, 0.1);
+        busy.queue_depth = 10;
+        let idle = sv("idle", 0, 8, 0.02, 0.12);
+        let (hops, _) = find_chain(&[busy, idle], &q(8)).unwrap();
+        assert_eq!(hops[0].server, NodeId::from_name("idle"));
+    }
+
+    #[test]
+    fn subchain_replaces_failed_span() {
+        let servers = [
+            sv("a", 0, 3, 0.01, 0.1),
+            sv("b2", 3, 6, 0.02, 0.2), // replacement candidate
+            sv("c", 6, 8, 0.01, 0.1),
+            sv("wide", 2, 7, 0.03, 0.3),
+        ];
+        let hops = find_subchain(&servers, &q(8), 3, 6).unwrap();
+        assert_eq!(hops.len(), 1);
+        assert_eq!(hops[0].start, 3);
+        assert_eq!(hops[0].end, 6);
+        assert_eq!(hops[0].server, NodeId::from_name("b2"));
+    }
+
+    #[test]
+    fn prop_chain_always_valid_and_cost_positive() {
+        let mut rng = crate::config::Rng::new(0x207);
+        for _ in 0..300 {
+            let n = 1 + rng.usize_below(24);
+            let mut servers = Vec::new();
+            for i in 0..1 + rng.usize_below(10) {
+                let start = rng.usize_below(n);
+                let end = (start + 1 + rng.usize_below(n - start)).min(n);
+                servers.push(sv(
+                    &format!("s{i}"),
+                    start,
+                    end,
+                    rng.range_f64(0.001, 0.2),
+                    rng.range_f64(0.01, 1.0),
+                ));
+            }
+            if let Some((hops, t)) = find_chain(&servers, &q(n)) {
+                assert!(chain_is_valid(&hops, n), "hops {hops:?} n={n}");
+                assert!(t > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_beam_finds_optimum_on_small_instances() {
+        // exhaustive check: beam width >= candidate count must match
+        // brute-force optimal cost on tiny instances
+        let mut rng = crate::config::Rng::new(0x208);
+        for _ in 0..60 {
+            let n = 1 + rng.usize_below(6);
+            let mut servers = Vec::new();
+            for i in 0..1 + rng.usize_below(6) {
+                let start = rng.usize_below(n);
+                let end = (start + 1 + rng.usize_below(n - start)).min(n);
+                servers.push(sv(
+                    &format!("s{i}"),
+                    start,
+                    end,
+                    rng.range_f64(0.001, 0.1),
+                    rng.range_f64(0.01, 0.5),
+                ));
+            }
+            let mut query = q(n);
+            query.beam_width = 64;
+            let got = find_chain(&servers, &query);
+            let want = brute_force(&servers, &query);
+            match (got, want) {
+                (None, None) => {}
+                (Some((_, tg)), Some(tw)) => {
+                    assert!((tg - tw).abs() < 1e-9, "beam {tg} vs brute {tw}")
+                }
+                (g, w) => panic!("beam {g:?} vs brute {w:?}"),
+            }
+        }
+    }
+
+    fn brute_force(servers: &[ServerView], q: &RouteQuery) -> Option<f64> {
+        fn rec(servers: &[ServerView], q: &RouteQuery, at: usize, cost: f64, best: &mut Option<f64>) {
+            if at == q.n_blocks {
+                return; // caller adds return leg
+            }
+            for s in servers {
+                if s.start <= at && s.end > at {
+                    let next = s.end.min(q.n_blocks);
+                    let frac = (next - at) as f64 / (s.end - s.start) as f64;
+                    let c = cost
+                        + s.msg_time(q.msg_bytes)
+                        + s.span_compute_s * frac
+                        + s.queue_depth as f64 * q.queue_penalty_s;
+                    if next == q.n_blocks {
+                        let total = c + s.msg_time(q.msg_bytes);
+                        if best.map(|b| total < b).unwrap_or(true) {
+                            *best = Some(total);
+                        }
+                    } else {
+                        rec(servers, q, next, c, best);
+                    }
+                }
+            }
+        }
+        let mut best = None;
+        rec(servers, q, 0, 0.0, &mut best);
+        best
+    }
+}

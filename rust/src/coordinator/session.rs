@@ -1,0 +1,528 @@
+//! Fault-tolerant inference sessions (§2.1, §3.2).
+//!
+//! "While the session is active, servers store attention keys and values
+//! from past client inputs [...] Clients also store past inputs to each
+//! server so that if any server fails or goes offline, another one can
+//! quickly take its place. [...] During inference, the client sends all
+//! previous inputs to the replacement server, so that it has the same
+//! attention keys and values."
+//!
+//! [`InferenceSession`] is generic over [`ChainClient`], so the same
+//! recovery logic is exercised by the in-process cluster (tests,
+//! quickstart), the TCP swarm (examples), and failure-injection tests.
+
+use crate::coordinator::routing::{self, ChainHop, RouteQuery, ServerView};
+use crate::dht::NodeId;
+use crate::error::{Error, Result};
+use crate::model::tensor::Tensor;
+
+/// Reply to a latency probe, plus client-measured link stats.
+#[derive(Debug, Clone)]
+pub struct PongInfo {
+    pub start: usize,
+    pub end: usize,
+    pub throughput: f32,
+    pub queue_depth: u32,
+    pub latency_s: f64,
+    pub bandwidth_bps: f64,
+}
+
+/// Everything a session needs from the swarm. Implementations: the
+/// in-process cluster (`server::local`), the TCP swarm (`server::service`),
+/// and the simulator.
+pub trait ChainClient {
+    /// Current world view: DHT snapshot + pings (§3.2 client routing).
+    fn discover(&self) -> Vec<ServerView>;
+    fn open_session(
+        &self,
+        server: NodeId,
+        session: u64,
+        batch: usize,
+        prefix_len: usize,
+        max_new: usize,
+    ) -> Result<()>;
+    /// Run the (padded) prefix through the server's span, filling its KV
+    /// caches; returns the hidden states for the next span.
+    fn prefill(&self, server: NodeId, session: u64, hidden: &Tensor) -> Result<Tensor>;
+    /// One decode step over the server's span.
+    fn step(
+        &self,
+        server: NodeId,
+        session: u64,
+        cache_len: usize,
+        hidden: &Tensor,
+    ) -> Result<Tensor>;
+    fn close_session(&self, server: NodeId, session: u64);
+    /// Stateless parallel forward over the span (fine-tuning, §2.2).
+    fn forward(&self, server: NodeId, hidden: &Tensor) -> Result<Tensor>;
+    /// Backward over the span; returns grad wrt the span's input.
+    fn backward(&self, server: NodeId, hidden: &Tensor, grad: &Tensor) -> Result<Tensor>;
+}
+
+/// Session parameters.
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    pub n_blocks: usize,
+    pub batch: usize,
+    /// True (padded) prefix width the prefill entry expects.
+    pub prefill_width: usize,
+    /// Valid prefix length (<= prefill_width).
+    pub prefix_len: usize,
+    pub max_new: usize,
+    pub route: RouteQuery,
+    /// Retries across re-routing before giving up.
+    pub max_recoveries: usize,
+}
+
+/// Per-hop replay history: what the client sent to this server.
+#[derive(Clone, Default)]
+struct HopHistory {
+    prefill_input: Option<Tensor>,
+    step_inputs: Vec<(usize, Tensor)>, // (cache_len, hidden)
+}
+
+/// A live pipeline-parallel inference session.
+pub struct InferenceSession<'a, C: ChainClient> {
+    client: &'a C,
+    cfg: SessionConfig,
+    chain: Vec<ChainHop>,
+    history: Vec<HopHistory>,
+    session_id: u64,
+    cache_len: usize,
+    recoveries: usize,
+}
+
+impl<'a, C: ChainClient> InferenceSession<'a, C> {
+    /// Discover servers, pick a chain, open per-server sessions.
+    pub fn open(client: &'a C, cfg: SessionConfig, session_id: u64) -> Result<Self> {
+        let servers = client.discover();
+        let (chain, _cost) = routing::find_chain(&servers, &cfg.route)
+            .ok_or_else(|| Error::NoRoute("no chain covers all blocks".into()))?;
+        for hop in &chain {
+            client.open_session(hop.server, session_id, cfg.batch, cfg.prefix_len, cfg.max_new)?;
+        }
+        let history = vec![HopHistory::default(); chain.len()];
+        let cache_len = cfg.prefix_len;
+        Ok(InferenceSession { client, cfg, chain, history, session_id, cache_len, recoveries: 0 })
+    }
+
+    pub fn chain(&self) -> &[ChainHop] {
+        &self.chain
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache_len
+    }
+
+    pub fn recoveries(&self) -> usize {
+        self.recoveries
+    }
+
+    /// Run the padded prefix through the whole chain. Returns the final
+    /// hidden states [B, prefill_width, H].
+    pub fn prefill(&mut self, hidden: Tensor) -> Result<Tensor> {
+        let mut h = hidden;
+        let mut i = 0;
+        while i < self.chain.len() {
+            self.history[i].prefill_input = Some(h.clone());
+            match self.client.prefill(self.chain[i].server, self.session_id, &h) {
+                Ok(next) => {
+                    h = next;
+                    i += 1;
+                }
+                Err(e) if e.is_retryable() => {
+                    self.recover(i)?;
+                    // retry same index against the replacement
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(h)
+    }
+
+    /// One decode step through the whole chain: hidden [B,1,H] in/out.
+    /// `cache_len` is managed internally (starts at prefix_len).
+    pub fn step(&mut self, hidden: Tensor) -> Result<Tensor> {
+        let mut h = hidden;
+        let mut i = 0;
+        while i < self.chain.len() {
+            self.history[i].step_inputs.push((self.cache_len, h.clone()));
+            match self.client.step(self.chain[i].server, self.session_id, self.cache_len, &h) {
+                Ok(next) => {
+                    h = next;
+                    i += 1;
+                }
+                Err(e) if e.is_retryable() => {
+                    // drop the just-recorded input; recovery replays it
+                    self.history[i].step_inputs.pop();
+                    self.recover(i)?;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        self.cache_len += 1;
+        Ok(h)
+    }
+
+    /// Replace the failed hop `i` with a fresh subchain and replay its
+    /// history so the replacements hold identical KV caches.
+    fn recover(&mut self, i: usize) -> Result<()> {
+        self.recoveries += 1;
+        if self.recoveries > self.cfg.max_recoveries {
+            return Err(Error::ChainBroken(format!(
+                "exceeded {} recoveries",
+                self.cfg.max_recoveries
+            )));
+        }
+        let failed = self.chain[i].clone();
+        let servers: Vec<ServerView> = self
+            .client
+            .discover()
+            .into_iter()
+            .filter(|s| s.id != failed.server)
+            .collect();
+        let sub = routing::find_subchain(&servers, &self.cfg.route, failed.start, failed.end)
+            .ok_or_else(|| {
+                Error::NoRoute(format!(
+                    "no replacement for blocks {}..{}",
+                    failed.start, failed.end
+                ))
+            })?;
+        // open sessions on the replacements
+        for hop in &sub {
+            self.client.open_session(
+                hop.server,
+                self.session_id,
+                self.cfg.batch,
+                self.cfg.prefix_len,
+                self.cfg.max_new,
+            )?;
+        }
+        // replay history through the subchain (§3.2: "the client sends
+        // all previous inputs to the replacement server")
+        let old_history = self.history[i].clone();
+        let mut sub_history = vec![HopHistory::default(); sub.len()];
+        if let Some(pre) = &old_history.prefill_input {
+            let mut h = pre.clone();
+            for (j, hop) in sub.iter().enumerate() {
+                sub_history[j].prefill_input = Some(h.clone());
+                h = self.client.prefill(hop.server, self.session_id, &h)?;
+            }
+        }
+        for (cache_len, inp) in &old_history.step_inputs {
+            let mut h = inp.clone();
+            for (j, hop) in sub.iter().enumerate() {
+                sub_history[j].step_inputs.push((*cache_len, h.clone()));
+                h = self.client.step(hop.server, self.session_id, *cache_len, &h)?;
+            }
+        }
+        // splice the replacement hop(s) in
+        self.chain.splice(i..=i, sub);
+        self.history.splice(i..=i, sub_history);
+        Ok(())
+    }
+
+    /// Close all per-server sessions.
+    pub fn close(self) {
+        for hop in &self.chain {
+            self.client.close_session(hop.server, self.session_id);
+        }
+    }
+}
+
+/// Stateless parallel forward through a chain (no sessions/caches):
+/// routes, then pipes [B,S,H] through every span; retries via re-route.
+pub fn chain_forward<C: ChainClient>(
+    client: &C,
+    route: &RouteQuery,
+    hidden: Tensor,
+) -> Result<Tensor> {
+    let servers = client.discover();
+    let (chain, _) = routing::find_chain(&servers, route)
+        .ok_or_else(|| Error::NoRoute("no chain".into()))?;
+    let mut h = hidden;
+    for hop in &chain {
+        h = client.forward(hop.server, &h)?;
+    }
+    Ok(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tensor::DType;
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+
+    /// A scripted fake swarm: "computes" by adding +1 per block, tracks
+    /// sessions/caches, and can be told to kill servers mid-flight.
+    struct FakeSwarm {
+        state: RefCell<FakeState>,
+    }
+
+    #[derive(Default)]
+    struct FakeState {
+        servers: Vec<FakeServer>,
+        open_calls: usize,
+    }
+
+    struct FakeServer {
+        id: NodeId,
+        start: usize,
+        end: usize,
+        alive: bool,
+        // session -> (#prefills, #steps) — to verify replay
+        sessions: HashMap<u64, (usize, Vec<usize>)>,
+        fail_next: usize, // fail this many next requests
+    }
+
+    impl FakeSwarm {
+        fn new(spans: &[(&str, usize, usize)]) -> Self {
+            let servers = spans
+                .iter()
+                .map(|(n, s, e)| FakeServer {
+                    id: NodeId::from_name(n),
+                    start: *s,
+                    end: *e,
+                    alive: true,
+                    sessions: HashMap::new(),
+                    fail_next: 0,
+                })
+                .collect();
+            FakeSwarm { state: RefCell::new(FakeState { servers, open_calls: 0 }) }
+        }
+
+        fn kill(&self, name: &str) {
+            let id = NodeId::from_name(name);
+            let mut st = self.state.borrow_mut();
+            st.servers.iter_mut().find(|s| s.id == id).unwrap().alive = false;
+        }
+
+        fn steps_served(&self, name: &str, session: u64) -> Vec<usize> {
+            let id = NodeId::from_name(name);
+            let st = self.state.borrow();
+            st.servers
+                .iter()
+                .find(|s| s.id == id)
+                .and_then(|s| s.sessions.get(&session))
+                .map(|(_, steps)| steps.clone())
+                .unwrap_or_default()
+        }
+
+        fn apply(h: &Tensor, n_blocks: usize) -> Tensor {
+            let mut out = h.clone();
+            for v in out.as_f32_mut() {
+                *v += n_blocks as f32;
+            }
+            out
+        }
+    }
+
+    impl ChainClient for FakeSwarm {
+        fn discover(&self) -> Vec<ServerView> {
+            self.state
+                .borrow()
+                .servers
+                .iter()
+                .filter(|s| s.alive)
+                .map(|s| ServerView {
+                    id: s.id,
+                    start: s.start,
+                    end: s.end,
+                    latency_s: 0.001,
+                    bandwidth_bps: 1e9,
+                    span_compute_s: 0.01 * (s.end - s.start) as f64,
+                    queue_depth: 0,
+                })
+                .collect()
+        }
+
+        fn open_session(&self, server: NodeId, session: u64, _b: usize, _p: usize, _m: usize) -> Result<()> {
+            let mut st = self.state.borrow_mut();
+            st.open_calls += 1;
+            let srv = st.servers.iter_mut().find(|s| s.id == server).unwrap();
+            if !srv.alive {
+                return Err(Error::ChainBroken("dead".into()));
+            }
+            srv.sessions.insert(session, (0, vec![]));
+            Ok(())
+        }
+
+        fn prefill(&self, server: NodeId, session: u64, hidden: &Tensor) -> Result<Tensor> {
+            let mut st = self.state.borrow_mut();
+            let srv = st.servers.iter_mut().find(|s| s.id == server).unwrap();
+            if !srv.alive || srv.fail_next > 0 {
+                srv.fail_next = srv.fail_next.saturating_sub(1);
+                return Err(Error::ChainBroken("prefill failed".into()));
+            }
+            let span = srv.end - srv.start;
+            srv.sessions.get_mut(&session).unwrap().0 += 1;
+            Ok(FakeSwarm::apply(hidden, span))
+        }
+
+        fn step(&self, server: NodeId, session: u64, cache_len: usize, hidden: &Tensor) -> Result<Tensor> {
+            let mut st = self.state.borrow_mut();
+            let srv = st.servers.iter_mut().find(|s| s.id == server).unwrap();
+            if !srv.alive || srv.fail_next > 0 {
+                srv.fail_next = srv.fail_next.saturating_sub(1);
+                return Err(Error::ChainBroken("step failed".into()));
+            }
+            let span = srv.end - srv.start;
+            srv.sessions.get_mut(&session).unwrap().1.push(cache_len);
+            Ok(FakeSwarm::apply(hidden, span))
+        }
+
+        fn close_session(&self, server: NodeId, session: u64) {
+            let mut st = self.state.borrow_mut();
+            if let Some(srv) = st.servers.iter_mut().find(|s| s.id == server) {
+                srv.sessions.remove(&session);
+            }
+        }
+
+        fn forward(&self, server: NodeId, hidden: &Tensor) -> Result<Tensor> {
+            let st = self.state.borrow();
+            let srv = st.servers.iter().find(|s| s.id == server).unwrap();
+            if !srv.alive {
+                return Err(Error::ChainBroken("dead".into()));
+            }
+            Ok(FakeSwarm::apply(hidden, srv.end - srv.start))
+        }
+
+        fn backward(&self, _server: NodeId, _hidden: &Tensor, grad: &Tensor) -> Result<Tensor> {
+            Ok(grad.clone())
+        }
+    }
+
+    fn cfg(n_blocks: usize) -> SessionConfig {
+        SessionConfig {
+            n_blocks,
+            batch: 1,
+            prefill_width: 4,
+            prefix_len: 2,
+            max_new: 8,
+            route: RouteQuery { n_blocks, msg_bytes: 64, beam_width: 8, queue_penalty_s: 0.05 },
+            max_recoveries: 4,
+        }
+    }
+
+    fn h1() -> Tensor {
+        Tensor::from_f32(&[1, 1, 4], &[0.0; 4])
+    }
+
+    #[test]
+    fn full_pipeline_sums_all_blocks() {
+        let swarm = FakeSwarm::new(&[("a", 0, 3), ("b", 3, 8)]);
+        let mut s = InferenceSession::open(&swarm, cfg(8), 1).unwrap();
+        let pre = Tensor::from_f32(&[1, 4, 4], &[0.0; 16]);
+        let out = s.prefill(pre).unwrap();
+        // +3 from a, +5 from b = 8 added to every element
+        assert!(out.as_f32().iter().all(|&v| v == 8.0));
+        let out = s.step(h1()).unwrap();
+        assert!(out.as_f32().iter().all(|&v| v == 8.0));
+        assert_eq!(s.cache_len(), 3);
+        s.close();
+    }
+
+    #[test]
+    fn step_failure_recovers_and_replays() {
+        let swarm = FakeSwarm::new(&[("a", 0, 3), ("b", 3, 8), ("b2", 3, 8)]);
+        let mut s = InferenceSession::open(&swarm, cfg(8), 7).unwrap();
+        let pre = Tensor::from_f32(&[1, 4, 4], &[0.0; 16]);
+        s.prefill(pre).unwrap();
+        s.step(h1()).unwrap();
+        s.step(h1()).unwrap();
+        // the chain picked b or b2; kill whichever is in the chain
+        let in_chain = s.chain()[1].server;
+        let (victim, replacement) = if in_chain == NodeId::from_name("b") {
+            ("b", "b2")
+        } else {
+            ("b2", "b")
+        };
+        swarm.kill(victim);
+        let out = s.step(h1()).unwrap();
+        assert!(out.as_f32().iter().all(|&v| v == 8.0), "math unchanged");
+        assert_eq!(s.recoveries(), 1);
+        assert_eq!(s.chain()[1].server, NodeId::from_name(replacement));
+        // replacement must have replayed 2 old steps + served the new one:
+        // cache_lens 2,3 (replay) then 4 (current)
+        assert_eq!(swarm.steps_served(replacement, 7), vec![2, 3, 4]);
+        assert_eq!(s.cache_len(), 5);
+    }
+
+    #[test]
+    fn unrecoverable_when_no_replacement() {
+        let swarm = FakeSwarm::new(&[("a", 0, 3), ("b", 3, 8)]);
+        let mut s = InferenceSession::open(&swarm, cfg(8), 9).unwrap();
+        s.prefill(Tensor::from_f32(&[1, 4, 4], &[0.0; 16])).unwrap();
+        swarm.kill("b");
+        let err = s.step(h1()).unwrap_err();
+        assert!(matches!(err, Error::NoRoute(_)), "{err}");
+    }
+
+    #[test]
+    fn transient_failure_bounded_retries() {
+        let swarm = FakeSwarm::new(&[("a", 0, 8), ("a2", 0, 8)]);
+        {
+            let mut st = swarm.state.borrow_mut();
+            st.servers[0].fail_next = 1; // one transient failure
+            st.servers[1].fail_next = 0;
+        }
+        let mut s = InferenceSession::open(&swarm, cfg(8), 3).unwrap();
+        let out = s.prefill(Tensor::from_f32(&[1, 4, 4], &[0.0; 16])).unwrap();
+        assert!(out.as_f32().iter().all(|&v| v == 8.0));
+        assert!(s.recoveries() <= 1);
+    }
+
+    #[test]
+    fn open_fails_with_no_servers() {
+        let swarm = FakeSwarm::new(&[]);
+        assert!(matches!(
+            InferenceSession::open(&swarm, cfg(8), 1),
+            Err(Error::NoRoute(_))
+        ));
+    }
+
+    #[test]
+    fn chain_forward_stateless() {
+        let swarm = FakeSwarm::new(&[("a", 0, 4), ("b", 4, 8)]);
+        let route = cfg(8).route;
+        let out = chain_forward(&swarm, &route, Tensor::from_f32(&[2, 3, 4], &[1.0; 24])).unwrap();
+        assert!(out.as_f32().iter().all(|&v| v == 9.0));
+    }
+
+    #[test]
+    fn prop_recovery_preserves_pipeline_semantics() {
+        // property: whatever single server we kill (with a replica
+        // available), the pipeline output equals n_blocks added
+        let mut rng = crate::config::Rng::new(0x5E5);
+        for trial in 0..40 {
+            let swarm = FakeSwarm::new(&[
+                ("a", 0, 2),
+                ("a2", 0, 2),
+                ("b", 2, 5),
+                ("b2", 2, 5),
+                ("c", 5, 8),
+                ("c2", 5, 8),
+            ]);
+            let mut s = InferenceSession::open(&swarm, cfg(8), trial).unwrap();
+            s.prefill(Tensor::from_f32(&[1, 4, 4], &[0.0; 16])).unwrap();
+            let n_steps = 1 + rng.usize_below(5);
+            for _ in 0..n_steps {
+                s.step(h1()).unwrap();
+            }
+            // kill one random in-chain server
+            let hop = rng.usize_below(s.chain().len());
+            let victim = s.chain()[hop].server;
+            {
+                let mut st = swarm.state.borrow_mut();
+                st.servers.iter_mut().find(|x| x.id == victim).unwrap().alive = false;
+            }
+            let out = s.step(h1()).unwrap();
+            assert!(
+                out.as_f32().iter().all(|&v| v == 8.0),
+                "trial {trial}: output corrupted after recovery"
+            );
+            assert_eq!(s.cache_len(), cfg(8).prefix_len + n_steps + 1);
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Server throughput estimation (§3.2): "Once the server has selected
+//! its layers, it measures its own throughput (both network and compute)
+//! and announces it to the distributed hash table."
+//!
+//! Throughput is requests/s for single-token inference over the hosted
+//! span. The effective rate is the min of the compute rate and the
+//! network rate (a server can't serve faster than it can receive/send
+//! hidden states).
+
+use crate::config::{DeviceProfile, NetworkProfile};
+
+/// Compute-side rate: steps/s for one decode over `n_blocks`.
+pub fn compute_rate(device: &DeviceProfile, n_blocks: usize, bytes_per_block: u64) -> f64 {
+    if n_blocks == 0 {
+        return f64::INFINITY;
+    }
+    1.0 / device.decode_time(n_blocks, bytes_per_block, 1)
+}
+
+/// Network-side rate: hidden-state round trips/s through this server's
+/// link (`hidden_bytes` in + out per step).
+pub fn network_rate(net: &NetworkProfile, hidden_bytes: u64) -> f64 {
+    let per_step = 2.0 * net.transfer_s(hidden_bytes) + net.rtt_s;
+    1.0 / per_step
+}
+
+/// Announced throughput: the bottleneck of the two.
+pub fn announced(
+    device: &DeviceProfile,
+    net: &NetworkProfile,
+    n_blocks: usize,
+    bytes_per_block: u64,
+    hidden_bytes: u64,
+) -> f64 {
+    compute_rate(device, n_blocks, bytes_per_block)
+        .min(network_rate(net, hidden_bytes))
+}
+
+/// Measured throughput from observed request latencies (real servers):
+/// exponential moving average over per-request seconds.
+#[derive(Debug, Clone)]
+pub struct MeasuredThroughput {
+    ema_latency_s: f64,
+    alpha: f64,
+    samples: u64,
+}
+
+impl Default for MeasuredThroughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MeasuredThroughput {
+    pub fn new() -> Self {
+        MeasuredThroughput { ema_latency_s: 0.0, alpha: 0.2, samples: 0 }
+    }
+
+    pub fn observe(&mut self, latency_s: f64) {
+        if self.samples == 0 {
+            self.ema_latency_s = latency_s;
+        } else {
+            self.ema_latency_s =
+                self.alpha * latency_s + (1.0 - self.alpha) * self.ema_latency_s;
+        }
+        self.samples += 1;
+    }
+
+    /// requests/s; 0 until the first observation.
+    pub fn rate(&self) -> f64 {
+        if self.samples == 0 || self.ema_latency_s == 0.0 {
+            0.0
+        } else {
+            1.0 / self.ema_latency_s
+        }
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profiles::bloom176b;
+
+    #[test]
+    fn compute_rate_scales_inverse_with_blocks() {
+        let d = DeviceProfile::A100_80G;
+        let r10 = compute_rate(&d, 10, bloom176b::BLOCK_BYTES_INT8);
+        let r20 = compute_rate(&d, 20, bloom176b::BLOCK_BYTES_INT8);
+        assert!(r10 > 1.8 * r20);
+        assert_eq!(compute_rate(&d, 0, 1), f64::INFINITY);
+    }
+
+    #[test]
+    fn network_binds_on_slow_links() {
+        let d = DeviceProfile::A100_80G;
+        let fast = NetworkProfile::GBIT_5MS;
+        let slow = NetworkProfile {
+            bandwidth_bps: 1e6, // 1 Mbit/s
+            rtt_s: 0.3,
+            jitter: 0.0,
+            relay_extra_s: 0.0,
+        };
+        let hidden = (bloom176b::HIDDEN * 4) as u64;
+        let a_fast = announced(&d, &fast, 24, bloom176b::BLOCK_BYTES_INT8, hidden);
+        let a_slow = announced(&d, &slow, 24, bloom176b::BLOCK_BYTES_INT8, hidden);
+        assert!(a_slow < a_fast);
+        assert!(a_slow < network_rate(&slow, hidden) + 1e-9);
+    }
+
+    #[test]
+    fn measured_ema_converges() {
+        let mut m = MeasuredThroughput::new();
+        assert_eq!(m.rate(), 0.0);
+        for _ in 0..100 {
+            m.observe(0.05);
+        }
+        assert!((m.rate() - 20.0).abs() < 0.5);
+        // regime change is tracked
+        for _ in 0..100 {
+            m.observe(0.2);
+        }
+        assert!((m.rate() - 5.0).abs() < 0.5);
+    }
+}

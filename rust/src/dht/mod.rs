@@ -1,0 +1,305 @@
+//! Kademlia-style DHT substrate (§3.2).
+//!
+//! Petals servers announce which Transformer blocks they hold to a
+//! distributed hash table (the paper uses hivemind's libp2p DHT, citing
+//! Maymounkov & Mazieres 2002). This module implements the Kademlia data
+//! structures and iterative lookup faithfully — XOR metric, k-buckets,
+//! iterative `FIND_NODE`/`FIND_VALUE` with α-parallelism, TTL records
+//! with republish — over a pluggable [`Rpc`] trait so the same logic runs
+//! in-process (tests), over the deterministic network simulator, and
+//! over real sockets.
+//!
+//! On top sits the Petals-specific [`directory`]: block → server
+//! announcements with throughput metadata, the input to load balancing
+//! and routing.
+
+pub mod directory;
+mod id;
+mod routing;
+mod storage;
+
+pub use directory::{BlockDirectory, ServerEntry};
+pub use id::NodeId;
+pub use routing::{RoutingTable, K};
+pub use storage::{Record, Storage};
+
+use std::collections::{BTreeMap, HashSet};
+
+/// Lookup parallelism (Kademlia α).
+pub const ALPHA: usize = 3;
+
+/// Remote procedure surface a node exposes to peers. Implementations:
+/// in-memory (tests), simulator-charged (sim), framed-TCP (real swarm).
+pub trait Rpc {
+    /// Peers closest to `target` from the callee's routing table.
+    fn find_node(&self, callee: NodeId, target: NodeId) -> Vec<NodeId>;
+    /// Value lookup; `Some` short-circuits the iterative search.
+    fn find_value(&self, callee: NodeId, key: NodeId) -> Option<Vec<Record>>;
+    /// Store a record at the callee.
+    fn store(&self, callee: NodeId, key: NodeId, rec: Record);
+    /// Liveness check.
+    fn ping(&self, callee: NodeId) -> bool;
+}
+
+/// Iterative node lookup: starting from `seeds`, repeatedly query the α
+/// closest unqueried peers until the closest-K set stabilizes.
+/// Returns the K closest live nodes to `target`.
+pub fn iterative_find_node(
+    rpc: &dyn Rpc,
+    seeds: &[NodeId],
+    target: NodeId,
+) -> Vec<NodeId> {
+    let mut shortlist: BTreeMap<[u8; 32], NodeId> = BTreeMap::new();
+    let mut queried: HashSet<NodeId> = HashSet::new();
+    for &s in seeds {
+        shortlist.insert(s.distance(&target), s);
+    }
+    loop {
+        let next: Vec<NodeId> = shortlist
+            .values()
+            .filter(|n| !queried.contains(n))
+            .take(ALPHA)
+            .copied()
+            .collect();
+        if next.is_empty() {
+            break;
+        }
+        for peer in next {
+            queried.insert(peer);
+            if !rpc.ping(peer) {
+                shortlist.remove(&peer.distance(&target));
+                continue;
+            }
+            for found in rpc.find_node(peer, target) {
+                shortlist.entry(found.distance(&target)).or_insert(found);
+            }
+        }
+        // keep the closest 2K candidates to bound work
+        while shortlist.len() > 2 * K {
+            let last = *shortlist.keys().next_back().unwrap();
+            shortlist.remove(&last);
+        }
+    }
+    shortlist.values().take(K).copied().collect()
+}
+
+/// Iterative value lookup (returns merged records from the first
+/// holders found plus closest nodes for caching).
+pub fn iterative_find_value(
+    rpc: &dyn Rpc,
+    seeds: &[NodeId],
+    key: NodeId,
+) -> Vec<Record> {
+    let mut shortlist: BTreeMap<[u8; 32], NodeId> = BTreeMap::new();
+    let mut queried: HashSet<NodeId> = HashSet::new();
+    let mut found: Vec<Record> = Vec::new();
+    for &s in seeds {
+        shortlist.insert(s.distance(&key), s);
+    }
+    loop {
+        let next: Vec<NodeId> = shortlist
+            .values()
+            .filter(|n| !queried.contains(n))
+            .take(ALPHA)
+            .copied()
+            .collect();
+        if next.is_empty() {
+            break;
+        }
+        for peer in next {
+            queried.insert(peer);
+            if !rpc.ping(peer) {
+                shortlist.remove(&peer.distance(&key));
+                continue;
+            }
+            if let Some(recs) = rpc.find_value(peer, key) {
+                found.extend(recs);
+            }
+            for f in rpc.find_node(peer, key) {
+                shortlist.entry(f.distance(&key)).or_insert(f);
+            }
+        }
+        if !found.is_empty() {
+            break;
+        }
+        while shortlist.len() > 2 * K {
+            let last = *shortlist.keys().next_back().unwrap();
+            shortlist.remove(&last);
+        }
+    }
+    // de-duplicate by (publisher, payload)
+    found.sort_by(|a, b| (a.publisher, &a.payload).cmp(&(b.publisher, &b.payload)));
+    found.dedup_by(|a, b| a.publisher == b.publisher && a.payload == b.payload);
+    found
+}
+
+/// Store a record on the K nodes closest to `key`.
+pub fn iterative_store(rpc: &dyn Rpc, seeds: &[NodeId], key: NodeId, rec: Record) -> usize {
+    let closest = iterative_find_node(rpc, seeds, key);
+    let mut stored = 0;
+    for node in closest {
+        rpc.store(node, key, rec.clone());
+        stored += 1;
+    }
+    stored
+}
+
+#[cfg(test)]
+pub(crate) mod testnet {
+    //! In-memory Kademlia network for tests.
+    use super::*;
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+
+    pub struct TestNet {
+        pub nodes: RefCell<HashMap<NodeId, TestNode>>,
+    }
+
+    pub struct TestNode {
+        pub table: RoutingTable,
+        pub store: Storage,
+        pub alive: bool,
+    }
+
+    impl TestNet {
+        pub fn new(ids: &[NodeId]) -> Self {
+            let mut nodes = HashMap::new();
+            for &id in ids {
+                let mut table = RoutingTable::new(id);
+                for &other in ids {
+                    if other != id {
+                        table.insert(other, |_| true);
+                    }
+                }
+                nodes.insert(
+                    id,
+                    TestNode { table, store: Storage::new(), alive: true },
+                );
+            }
+            TestNet { nodes: RefCell::new(nodes) }
+        }
+
+        pub fn kill(&self, id: NodeId) {
+            self.nodes.borrow_mut().get_mut(&id).unwrap().alive = false;
+        }
+    }
+
+    impl Rpc for TestNet {
+        fn find_node(&self, callee: NodeId, target: NodeId) -> Vec<NodeId> {
+            let nodes = self.nodes.borrow();
+            match nodes.get(&callee) {
+                Some(n) if n.alive => n.table.closest(target, K),
+                _ => vec![],
+            }
+        }
+
+        fn find_value(&self, callee: NodeId, key: NodeId) -> Option<Vec<Record>> {
+            let nodes = self.nodes.borrow();
+            let n = nodes.get(&callee)?;
+            if !n.alive {
+                return None;
+            }
+            let recs = n.store.get(&key, 0);
+            if recs.is_empty() {
+                None
+            } else {
+                Some(recs)
+            }
+        }
+
+        fn store(&self, callee: NodeId, key: NodeId, rec: Record) {
+            let mut nodes = self.nodes.borrow_mut();
+            if let Some(n) = nodes.get_mut(&callee) {
+                if n.alive {
+                    n.store.put(key, rec);
+                }
+            }
+        }
+
+        fn ping(&self, callee: NodeId) -> bool {
+            self.nodes.borrow().get(&callee).map(|n| n.alive).unwrap_or(false)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testnet::TestNet;
+    use super::*;
+    use crate::config::Rng;
+
+    fn make_ids(n: usize, seed: u64) -> Vec<NodeId> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| NodeId::random(&mut rng)).collect()
+    }
+
+    #[test]
+    fn lookup_finds_globally_closest() {
+        let ids = make_ids(60, 1);
+        let net = TestNet::new(&ids);
+        let mut rng = Rng::new(9);
+        for _ in 0..10 {
+            let target = NodeId::random(&mut rng);
+            let got = iterative_find_node(&net, &ids[..3], target);
+            // ground truth: globally closest K
+            let mut want = ids.clone();
+            want.sort_by_key(|n| n.distance(&target));
+            assert_eq!(got.len(), K);
+            assert_eq!(
+                got.iter().collect::<std::collections::HashSet<_>>(),
+                want[..K].iter().collect()
+            );
+        }
+    }
+
+    #[test]
+    fn store_then_find_value() {
+        let ids = make_ids(40, 2);
+        let net = TestNet::new(&ids);
+        let key = NodeId::from_name("block/7");
+        let rec = Record::new(ids[5], b"server7".to_vec(), 0, 60_000);
+        let stored = iterative_store(&net, &ids[..2], key, rec);
+        assert_eq!(stored, K);
+        let found = iterative_find_value(&net, &[ids[30]], key);
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].payload, b"server7");
+    }
+
+    #[test]
+    fn value_survives_node_failures() {
+        let ids = make_ids(40, 3);
+        let net = TestNet::new(&ids);
+        let key = NodeId::from_name("block/3");
+        iterative_store(
+            &net,
+            &ids[..2],
+            key,
+            Record::new(ids[0], b"srv".to_vec(), 0, 60_000),
+        );
+        // kill half of the K closest holders
+        let mut holders = ids.clone();
+        holders.sort_by_key(|n| n.distance(&key));
+        for h in holders.iter().take(K / 2) {
+            net.kill(*h);
+        }
+        let found = iterative_find_value(&net, &[ids[35]], key);
+        assert_eq!(found.len(), 1, "replicated record must survive");
+    }
+
+    #[test]
+    fn multiple_publishers_merge() {
+        let ids = make_ids(30, 4);
+        let net = TestNet::new(&ids);
+        let key = NodeId::from_name("block/0");
+        for p in 0..4 {
+            iterative_store(
+                &net,
+                &ids[..2],
+                key,
+                Record::new(ids[p], format!("srv{p}").into_bytes(), 0, 60_000),
+            );
+        }
+        let found = iterative_find_value(&net, &[ids[20]], key);
+        assert_eq!(found.len(), 4);
+    }
+}

@@ -1,0 +1,156 @@
+//! Kademlia routing table: 256 k-buckets with least-recently-seen
+//! eviction gated on a liveness probe of the oldest entry.
+
+use crate::dht::id::NodeId;
+
+/// Bucket capacity (Kademlia k). Also the replication factor for
+/// [`crate::dht::iterative_store`].
+pub const K: usize = 8;
+
+/// One k-bucket: most-recently-seen peers at the back.
+#[derive(Debug, Default, Clone)]
+struct Bucket {
+    peers: Vec<NodeId>,
+}
+
+/// Routing table of the 256-bit XOR space.
+pub struct RoutingTable {
+    me: NodeId,
+    buckets: Vec<Bucket>,
+}
+
+impl RoutingTable {
+    pub fn new(me: NodeId) -> Self {
+        RoutingTable { me, buckets: vec![Bucket::default(); 256] }
+    }
+
+    pub fn me(&self) -> NodeId {
+        self.me
+    }
+
+    /// Record contact with a peer. On a full bucket, Kademlia pings the
+    /// least-recently-seen entry and keeps it if alive (old nodes are
+    /// more reliable); `probe` supplies liveness.
+    pub fn insert(&mut self, peer: NodeId, probe: impl Fn(&NodeId) -> bool) -> bool {
+        let Some(idx) = self.me.bucket_index(&peer) else {
+            return false; // never insert self
+        };
+        let bucket = &mut self.buckets[idx];
+        if let Some(pos) = bucket.peers.iter().position(|p| *p == peer) {
+            let p = bucket.peers.remove(pos);
+            bucket.peers.push(p); // refresh recency
+            return true;
+        }
+        if bucket.peers.len() < K {
+            bucket.peers.push(peer);
+            return true;
+        }
+        // full: probe the oldest
+        let oldest = bucket.peers[0];
+        if probe(&oldest) {
+            // keep the old node, move to back; drop the new one
+            bucket.peers.remove(0);
+            bucket.peers.push(oldest);
+            false
+        } else {
+            bucket.peers.remove(0);
+            bucket.peers.push(peer);
+            true
+        }
+    }
+
+    pub fn remove(&mut self, peer: &NodeId) {
+        if let Some(idx) = self.me.bucket_index(peer) {
+            self.buckets[idx].peers.retain(|p| p != peer);
+        }
+    }
+
+    /// The `n` peers closest to `target` by XOR distance.
+    pub fn closest(&self, target: NodeId, n: usize) -> Vec<NodeId> {
+        let mut all: Vec<NodeId> = self
+            .buckets
+            .iter()
+            .flat_map(|b| b.peers.iter().copied())
+            .collect();
+        all.sort_by_key(|p| p.distance(&target));
+        all.truncate(n);
+        all
+    }
+
+    pub fn len(&self) -> usize {
+        self.buckets.iter().map(|b| b.peers.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Rng;
+
+    #[test]
+    fn insert_dedup_and_self_skip() {
+        let mut rng = Rng::new(0);
+        let me = NodeId::random(&mut rng);
+        let mut t = RoutingTable::new(me);
+        assert!(!t.insert(me, |_| true));
+        let p = NodeId::random(&mut rng);
+        assert!(t.insert(p, |_| true));
+        assert!(t.insert(p, |_| true));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn closest_is_sorted_by_distance() {
+        let mut rng = Rng::new(1);
+        let me = NodeId::random(&mut rng);
+        let mut t = RoutingTable::new(me);
+        let peers: Vec<NodeId> = (0..100).map(|_| NodeId::random(&mut rng)).collect();
+        for &p in &peers {
+            t.insert(p, |_| true);
+        }
+        let target = NodeId::random(&mut rng);
+        let got = t.closest(target, 10);
+        for w in got.windows(2) {
+            assert!(w[0].distance(&target) <= w[1].distance(&target));
+        }
+    }
+
+    #[test]
+    fn full_bucket_keeps_live_oldest() {
+        // construct peers all landing in the same bucket relative to me
+        let me = NodeId([0u8; 32]);
+        let mut t = RoutingTable::new(me);
+        let mk = |i: u8| {
+            let mut b = [0u8; 32];
+            b[0] = 0x80; // same top bit -> same bucket 255
+            b[31] = i;
+            NodeId(b)
+        };
+        for i in 0..K as u8 {
+            assert!(t.insert(mk(i), |_| true));
+        }
+        // bucket full; live oldest -> new peer rejected
+        assert!(!t.insert(mk(100), |_| true));
+        assert_eq!(t.len(), K);
+        // dead oldest -> evicted, new peer admitted
+        assert!(t.insert(mk(101), |_| false));
+        assert_eq!(t.len(), K);
+        let closest = t.closest(mk(101), K);
+        assert!(closest.contains(&mk(101)));
+    }
+
+    #[test]
+    fn remove_deletes() {
+        let mut rng = Rng::new(2);
+        let me = NodeId::random(&mut rng);
+        let mut t = RoutingTable::new(me);
+        let p = NodeId::random(&mut rng);
+        t.insert(p, |_| true);
+        t.remove(&p);
+        assert_eq!(t.len(), 0);
+    }
+}

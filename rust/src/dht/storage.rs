@@ -1,0 +1,124 @@
+//! TTL record store: Kademlia values expire unless republished, which is
+//! exactly how Petals server announcements age out when a server leaves
+//! (§3.2 — "each server periodically announces its active blocks").
+
+use crate::dht::id::NodeId;
+use std::collections::HashMap;
+
+/// A stored value with publisher identity and expiry.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Record {
+    pub publisher: NodeId,
+    pub payload: Vec<u8>,
+    /// Milliseconds since epoch (virtual or real — storage is agnostic).
+    pub stored_at_ms: u64,
+    pub ttl_ms: u64,
+}
+
+impl Record {
+    pub fn new(publisher: NodeId, payload: Vec<u8>, now_ms: u64, ttl_ms: u64) -> Self {
+        Record { publisher, payload, stored_at_ms: now_ms, ttl_ms }
+    }
+
+    pub fn expired(&self, now_ms: u64) -> bool {
+        now_ms.saturating_sub(self.stored_at_ms) >= self.ttl_ms
+    }
+}
+
+/// Key -> records, one per publisher (a republish replaces the
+/// publisher's previous record).
+#[derive(Default)]
+pub struct Storage {
+    map: HashMap<NodeId, Vec<Record>>,
+}
+
+impl Storage {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put(&mut self, key: NodeId, rec: Record) {
+        let recs = self.map.entry(key).or_default();
+        recs.retain(|r| r.publisher != rec.publisher);
+        recs.push(rec);
+    }
+
+    /// Live records under a key.
+    pub fn get(&self, key: &NodeId, now_ms: u64) -> Vec<Record> {
+        self.map
+            .get(key)
+            .map(|v| v.iter().filter(|r| !r.expired(now_ms)).cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// Drop expired records everywhere; returns how many were removed.
+    pub fn sweep(&mut self, now_ms: u64) -> usize {
+        let mut removed = 0;
+        self.map.retain(|_, recs| {
+            let before = recs.len();
+            recs.retain(|r| !r.expired(now_ms));
+            removed += before - recs.len();
+            !recs.is_empty()
+        });
+        removed
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.values().map(|v| v.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Rng;
+
+    fn id(seed: u64) -> NodeId {
+        NodeId::random(&mut Rng::new(seed))
+    }
+
+    #[test]
+    fn put_get_expire() {
+        let mut s = Storage::new();
+        let key = id(1);
+        s.put(key, Record::new(id(2), b"v".to_vec(), 1000, 500));
+        assert_eq!(s.get(&key, 1200).len(), 1);
+        assert_eq!(s.get(&key, 1500).len(), 0, "expired at stored+ttl");
+    }
+
+    #[test]
+    fn republish_replaces_same_publisher() {
+        let mut s = Storage::new();
+        let key = id(1);
+        let pubr = id(2);
+        s.put(key, Record::new(pubr, b"old".to_vec(), 0, 1000));
+        s.put(key, Record::new(pubr, b"new".to_vec(), 500, 1000));
+        let recs = s.get(&key, 600);
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].payload, b"new");
+    }
+
+    #[test]
+    fn distinct_publishers_coexist() {
+        let mut s = Storage::new();
+        let key = id(1);
+        s.put(key, Record::new(id(2), b"a".to_vec(), 0, 1000));
+        s.put(key, Record::new(id(3), b"b".to_vec(), 0, 1000));
+        assert_eq!(s.get(&key, 10).len(), 2);
+    }
+
+    #[test]
+    fn sweep_reclaims() {
+        let mut s = Storage::new();
+        for i in 0..10 {
+            s.put(id(i), Record::new(id(100 + i), b"x".to_vec(), 0, 100));
+        }
+        assert_eq!(s.len(), 10);
+        assert_eq!(s.sweep(1000), 10);
+        assert!(s.is_empty());
+    }
+}

@@ -1,0 +1,66 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Unified error for all petals subsystems.
+#[derive(Debug)]
+pub enum Error {
+    /// I/O (artifact files, sockets).
+    Io(std::io::Error),
+    /// Manifest / config parsing.
+    Parse(String),
+    /// PJRT / XLA failures.
+    Xla(String),
+    /// A request referenced an unknown entry point / block / session.
+    NotFound(String),
+    /// Shape or dtype mismatch between caller and artifact.
+    Shape(String),
+    /// The server chain broke (peer failed / left) — retryable.
+    ChainBroken(String),
+    /// Routing could not cover all blocks with live servers.
+    NoRoute(String),
+    /// Protocol violation on the wire.
+    Protocol(String),
+    /// Anything else.
+    Other(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Parse(m) => write!(f, "parse: {m}"),
+            Error::Xla(m) => write!(f, "xla: {m}"),
+            Error::NotFound(m) => write!(f, "not found: {m}"),
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::ChainBroken(m) => write!(f, "chain broken: {m}"),
+            Error::NoRoute(m) => write!(f, "no route: {m}"),
+            Error::Protocol(m) => write!(f, "protocol: {m}"),
+            Error::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    /// True for failures a session should respond to by re-routing
+    /// around the failed server rather than aborting (§3.2).
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, Error::ChainBroken(_) | Error::Io(_))
+    }
+}

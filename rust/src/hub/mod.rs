@@ -1,0 +1,244 @@
+//! Module hub (§2.3): sharing and reusing trained adapters.
+//!
+//! "we support sharing modules trained by users via the Hugging Face
+//! Hub [...] the primary navigation mechanism [...] are tags [...]
+//! Uploading the weights and the code of the fine-tuned module is done
+//! by committing them to a Git repository."
+//!
+//! This is a local, file-backed stand-in with the same workflow:
+//! content-addressed blob store, named modules with tags (task, base
+//! model, model *version* — §4 "Making changes to the main model"
+//! discusses version-annotated adapters) and commit-like revisions. Tag
+//! search answers "give me adapters for task X on base model Y".
+
+use crate::config::json::Value;
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// FNV-1a-based content hash (the store's integrity check; the paper's
+/// hub delegates integrity to git).
+fn content_hash(data: &[u8]) -> String {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    let mut h2: u64 = 0x9E3779B97F4A7C15;
+    for &b in data.iter().rev() {
+        h2 ^= b as u64;
+        h2 = h2.wrapping_mul(0x100000001b3);
+    }
+    format!("{h:016x}{h2:016x}")
+}
+
+/// One published revision of a module.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Revision {
+    pub hash: String,
+    pub message: String,
+    pub seq: u64,
+}
+
+/// A named module with tags and revision history.
+#[derive(Debug, Clone)]
+pub struct ModuleInfo {
+    pub name: String,
+    pub tags: BTreeMap<String, String>,
+    pub revisions: Vec<Revision>,
+}
+
+/// File-backed hub: `<root>/blobs/<hash>` + `<root>/modules/<name>.json`.
+pub struct Hub {
+    root: PathBuf,
+}
+
+impl Hub {
+    pub fn open(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        std::fs::create_dir_all(root.join("blobs"))?;
+        std::fs::create_dir_all(root.join("modules"))?;
+        Ok(Hub { root })
+    }
+
+    fn module_path(&self, name: &str) -> PathBuf {
+        // flatten path separators out of names
+        self.root.join("modules").join(format!("{}.json", name.replace('/', "__")))
+    }
+
+    /// Publish (or update) a module: stores the payload, appends a
+    /// revision, merges tags. Returns the content hash.
+    pub fn publish(
+        &self,
+        name: &str,
+        payload: &[u8],
+        tags: &BTreeMap<String, String>,
+        message: &str,
+    ) -> Result<String> {
+        let hash = content_hash(payload);
+        std::fs::write(self.root.join("blobs").join(&hash), payload)?;
+        let mut info = self.info(name).unwrap_or(ModuleInfo {
+            name: name.to_string(),
+            tags: BTreeMap::new(),
+            revisions: vec![],
+        });
+        for (k, v) in tags {
+            info.tags.insert(k.clone(), v.clone());
+        }
+        let seq = info.revisions.len() as u64 + 1;
+        info.revisions.push(Revision { hash: hash.clone(), message: message.to_string(), seq });
+        self.write_info(&info)?;
+        Ok(hash)
+    }
+
+    /// Fetch the latest (or a specific) revision's payload.
+    pub fn fetch(&self, name: &str, rev: Option<u64>) -> Result<Vec<u8>> {
+        let info = self
+            .info(name)
+            .ok_or_else(|| Error::NotFound(format!("module {name}")))?;
+        let r = match rev {
+            None => info.revisions.last(),
+            Some(seq) => info.revisions.iter().find(|r| r.seq == seq),
+        }
+        .ok_or_else(|| Error::NotFound(format!("revision {rev:?} of {name}")))?;
+        let data = std::fs::read(self.root.join("blobs").join(&r.hash))?;
+        if content_hash(&data) != r.hash {
+            return Err(Error::Parse(format!("blob corrupted for {name}@{}", r.seq)));
+        }
+        Ok(data)
+    }
+
+    /// All modules whose tags include every (k, v) in `filter` —
+    /// the Hub's "filter the list by the required tags".
+    pub fn search(&self, filter: &BTreeMap<String, String>) -> Vec<ModuleInfo> {
+        let Ok(entries) = std::fs::read_dir(self.root.join("modules")) else {
+            return vec![];
+        };
+        let mut out: Vec<ModuleInfo> = entries
+            .filter_map(|e| e.ok())
+            .filter_map(|e| std::fs::read_to_string(e.path()).ok())
+            .filter_map(|s| Self::parse_info(&s).ok())
+            .filter(|m| filter.iter().all(|(k, v)| m.tags.get(k) == Some(v)))
+            .collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+
+    pub fn info(&self, name: &str) -> Option<ModuleInfo> {
+        let s = std::fs::read_to_string(self.module_path(name)).ok()?;
+        Self::parse_info(&s).ok()
+    }
+
+    fn write_info(&self, info: &ModuleInfo) -> Result<()> {
+        let mut obj = BTreeMap::new();
+        obj.insert("name".into(), Value::Str(info.name.clone()));
+        obj.insert(
+            "tags".into(),
+            Value::Obj(
+                info.tags
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Value::Str(v.clone())))
+                    .collect(),
+            ),
+        );
+        obj.insert(
+            "revisions".into(),
+            Value::Arr(
+                info.revisions
+                    .iter()
+                    .map(|r| {
+                        let mut m = BTreeMap::new();
+                        m.insert("hash".into(), Value::Str(r.hash.clone()));
+                        m.insert("message".into(), Value::Str(r.message.clone()));
+                        m.insert("seq".into(), Value::Num(r.seq as f64));
+                        Value::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        std::fs::write(self.module_path(&info.name), Value::Obj(obj).render())?;
+        Ok(())
+    }
+
+    fn parse_info(s: &str) -> Result<ModuleInfo> {
+        let v = Value::parse(s)?;
+        let tags = v
+            .get("tags")?
+            .obj()?
+            .iter()
+            .map(|(k, val)| Ok((k.clone(), val.str()?.to_string())))
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        let revisions = v
+            .get("revisions")?
+            .arr()?
+            .iter()
+            .map(|r| {
+                Ok(Revision {
+                    hash: r.get("hash")?.str()?.to_string(),
+                    message: r.get("message")?.str()?.to_string(),
+                    seq: r.get("seq")?.u64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModuleInfo { name: v.get("name")?.str()?.to_string(), tags, revisions })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_hub(tag: &str) -> Hub {
+        let dir = std::env::temp_dir().join(format!("petals_hub_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        Hub::open(dir).unwrap()
+    }
+
+    fn tags(pairs: &[(&str, &str)]) -> BTreeMap<String, String> {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    #[test]
+    fn publish_fetch_roundtrip() {
+        let hub = tmp_hub("a");
+        let payload = b"prompt weights v1".to_vec();
+        let hash = hub
+            .publish("alice/sst2-prompts", &payload, &tags(&[("task", "sst2")]), "init")
+            .unwrap();
+        assert_eq!(hash.len(), 32);
+        assert_eq!(hub.fetch("alice/sst2-prompts", None).unwrap(), payload);
+    }
+
+    #[test]
+    fn revisions_append_and_fetch_by_seq() {
+        let hub = tmp_hub("b");
+        hub.publish("m", b"v1", &tags(&[]), "first").unwrap();
+        hub.publish("m", b"v2", &tags(&[]), "better").unwrap();
+        assert_eq!(hub.fetch("m", Some(1)).unwrap(), b"v1");
+        assert_eq!(hub.fetch("m", Some(2)).unwrap(), b"v2");
+        assert_eq!(hub.fetch("m", None).unwrap(), b"v2");
+        assert_eq!(hub.info("m").unwrap().revisions.len(), 2);
+    }
+
+    #[test]
+    fn tag_search_filters() {
+        let hub = tmp_hub("c");
+        hub.publish("a", b"x", &tags(&[("task", "sst2"), ("base", "bloom-mini@1")]), "").unwrap();
+        hub.publish("b", b"y", &tags(&[("task", "qa"), ("base", "bloom-mini@1")]), "").unwrap();
+        hub.publish("c", b"z", &tags(&[("task", "sst2"), ("base", "other")]), "").unwrap();
+        let found = hub.search(&tags(&[("task", "sst2"), ("base", "bloom-mini@1")]));
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].name, "a");
+        assert_eq!(hub.search(&tags(&[])).len(), 3);
+    }
+
+    #[test]
+    fn missing_module_and_corruption_detected() {
+        let hub = tmp_hub("d");
+        assert!(matches!(hub.fetch("nope", None), Err(Error::NotFound(_))));
+        let hash = hub.publish("m", b"data", &tags(&[]), "").unwrap();
+        // corrupt the blob
+        std::fs::write(hub.root.join("blobs").join(&hash), b"tampered!").unwrap();
+        assert!(hub.fetch("m", None).is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! Incentive points (§4 "Incentives for peers to contribute").
+//!
+//! "peers running servers would earn special points, which can be spent
+//! on high-priority inference and fine-tuning or exchanged for other
+//! rewards." The paper sketches this as future work; we implement the
+//! ledger + priority hook so the mechanism is a first-class feature:
+//! servers accrue points per block-request served, clients spend points
+//! to jump the queue.
+
+use crate::dht::NodeId;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Points accrual rates.
+#[derive(Debug, Clone)]
+pub struct Tariff {
+    /// Points a server earns per (block x request) served.
+    pub earn_per_block_request: f64,
+    /// Points one priority request costs per block traversed.
+    pub priority_cost_per_block: f64,
+}
+
+impl Default for Tariff {
+    fn default() -> Self {
+        Tariff { earn_per_block_request: 1.0, priority_cost_per_block: 4.0 }
+    }
+}
+
+/// Request priority classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    Normal,
+    High,
+}
+
+/// Thread-safe points ledger.
+#[derive(Default)]
+pub struct Ledger {
+    balances: Mutex<HashMap<NodeId, f64>>,
+}
+
+impl Ledger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn balance(&self, peer: NodeId) -> f64 {
+        *self.balances.lock().unwrap().get(&peer).unwrap_or(&0.0)
+    }
+
+    /// Server `peer` served `blocks` blocks for one request.
+    pub fn credit_service(&self, peer: NodeId, blocks: usize, tariff: &Tariff) {
+        let mut b = self.balances.lock().unwrap();
+        *b.entry(peer).or_insert(0.0) += blocks as f64 * tariff.earn_per_block_request;
+    }
+
+    /// Try to pay for a high-priority request spanning `blocks` blocks.
+    /// Returns the granted priority (falls back to Normal if the client
+    /// cannot afford it).
+    pub fn request_priority(&self, client: NodeId, blocks: usize, tariff: &Tariff) -> Priority {
+        let cost = blocks as f64 * tariff.priority_cost_per_block;
+        let mut b = self.balances.lock().unwrap();
+        let bal = b.entry(client).or_insert(0.0);
+        if *bal >= cost {
+            *bal -= cost;
+            Priority::High
+        } else {
+            Priority::Normal
+        }
+    }
+
+    /// Transfer (reward exchange).
+    pub fn transfer(&self, from: NodeId, to: NodeId, amount: f64) -> bool {
+        let mut b = self.balances.lock().unwrap();
+        let fb = b.entry(from).or_insert(0.0);
+        if *fb < amount || amount < 0.0 {
+            return false;
+        }
+        *fb -= amount;
+        *b.entry(to).or_insert(0.0) += amount;
+        true
+    }
+}
+
+/// Priority queue discipline for a server's request queue: High before
+/// Normal, FIFO within a class.
+pub fn order_queue<T>(queue: &mut Vec<(Priority, u64, T)>) {
+    // stable sort: (priority desc, arrival asc)
+    queue.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn id(n: &str) -> NodeId {
+        NodeId::from_name(n)
+    }
+
+    #[test]
+    fn serving_accrues_points() {
+        let l = Ledger::new();
+        let t = Tariff::default();
+        l.credit_service(id("srv"), 24, &t);
+        l.credit_service(id("srv"), 24, &t);
+        assert_eq!(l.balance(id("srv")), 48.0);
+    }
+
+    #[test]
+    fn priority_costs_points_and_falls_back() {
+        let l = Ledger::new();
+        let t = Tariff::default();
+        l.credit_service(id("peer"), 100, &t); // 100 points
+        assert_eq!(l.request_priority(id("peer"), 20, &t), Priority::High); // -80
+        assert_eq!(l.balance(id("peer")), 20.0);
+        assert_eq!(l.request_priority(id("peer"), 20, &t), Priority::Normal);
+        assert_eq!(l.balance(id("peer")), 20.0, "failed request is free");
+    }
+
+    #[test]
+    fn transfer_guarded() {
+        let l = Ledger::new();
+        let t = Tariff::default();
+        l.credit_service(id("a"), 10, &t);
+        assert!(l.transfer(id("a"), id("b"), 6.0));
+        assert!(!l.transfer(id("a"), id("b"), 6.0), "insufficient");
+        assert!(!l.transfer(id("b"), id("a"), -1.0), "negative");
+        assert_eq!(l.balance(id("b")), 6.0);
+    }
+
+    #[test]
+    fn queue_orders_high_first_fifo_within() {
+        let mut q = vec![
+            (Priority::Normal, 1, "n1"),
+            (Priority::High, 2, "h1"),
+            (Priority::Normal, 3, "n2"),
+            (Priority::High, 4, "h2"),
+        ];
+        order_queue(&mut q);
+        let names: Vec<&str> = q.iter().map(|x| x.2).collect();
+        assert_eq!(names, vec!["h1", "h2", "n1", "n2"]);
+    }
+}

@@ -1,0 +1,63 @@
+//! # petals — reproduction of PETALS (ACL 2023)
+//!
+//! *Petals: Collaborative Inference and Fine-tuning of Large Models*
+//! (Borzunov et al., ACL 2023 demo) as a three-layer Rust + JAX + Pallas
+//! stack. This crate is Layer 3: the swarm coordinator. All model math is
+//! AOT-compiled from JAX/Pallas to HLO text (`make artifacts`) and executed
+//! through the PJRT C API ([`runtime`]); Python never runs on the request
+//! path.
+//!
+//! ## Architecture
+//!
+//! - [`dht`] — Kademlia-style distributed hash table: how servers announce
+//!   which Transformer blocks they hold (§3.2 of the paper).
+//! - [`server`] — a Petals *server*: hosts a contiguous span of blocks,
+//!   keeps per-session attention caches, serves inference / parallel
+//!   forward / backward requests.
+//! - [`coordinator`] — the client side: chain routing (beam search over
+//!   per-block server sets), inference sessions with KV replay on failure,
+//!   batch splitting for parallel forwards, and the server-side block
+//!   assignment / rebalancing policy.
+//! - [`net`] — transports: a deterministic bandwidth+latency simulator
+//!   (used by the paper-table benches) and a real framed-TCP transport
+//!   (used by the end-to-end examples).
+//! - [`quant`] — dynamic blockwise int8 codec for hidden-state transfer
+//!   (§3.1), bit-compatible with the Pallas kernel's format.
+//! - [`offload`] — the RAM/SSD-offloading baseline Petals is compared
+//!   against in Table 3.
+//! - [`finetune`] — distributed parameter-efficient fine-tuning (§2.2):
+//!   clients own soft prompts + heads; servers run frozen blocks fwd/bwd.
+//! - [`hub`] — sharing trained adapters with tags and versions (§2.3).
+//! - [`incentives`] — the points ledger sketched in §4.
+//! - [`sim`] — discrete-event swarm scenarios regenerating Table 3.
+//! - [`api`] — the chat-application HTTP backend (Figure 3).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use petals::model::ModelHome;
+//! use petals::runtime::Runtime;
+//!
+//! let home = ModelHome::open("artifacts").unwrap();
+//! let rt = Runtime::load(&home).unwrap();
+//! // ... build a local swarm; see examples/quickstart.rs
+//! ```
+
+pub mod api;
+pub mod config;
+pub mod coordinator;
+pub mod dht;
+pub mod error;
+pub mod finetune;
+pub mod hub;
+pub mod incentives;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod offload;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+
+pub use error::{Error, Result};

@@ -1,0 +1,282 @@
+//! petals CLI — the leader entrypoint.
+//!
+//! Subcommands (hand-rolled arg parsing — no clap in the offline crate
+//! set):
+//!
+//! ```text
+//! petals server   --artifacts DIR --name N --blocks A..B [--precision f16|int8]
+//!                 [--listen ADDR] [--compress]
+//! petals generate --artifacts DIR --peers n1=addr1,n2=addr2 --prompt 1,2,3
+//!                 [--max-new N] [--topk K]
+//! petals chat     --artifacts DIR --peers ... [--listen ADDR]
+//! petals sim      [--preset 3xa100|12virtual|14real] [--net gbit5|mbit100-5|mbit100-100]
+//!                 [--workload inference|forward|multiclient]
+//! petals info     --artifacts DIR
+//! ```
+
+use petals::config::profiles::{NetworkProfile, SwarmPreset};
+use petals::coordinator::client::{LocalHead, Sampler, SwarmGenerator};
+use petals::coordinator::routing::RouteQuery;
+use petals::coordinator::session::SessionConfig;
+use petals::model::{ModelHome, Precision, Weights};
+use petals::runtime::Runtime;
+use petals::server::service::{serve, TcpSwarm};
+use petals::server::ServerNode;
+use petals::sim::SwarmSim;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("server") => cmd_server(&parse_flags(&args[1..])),
+        Some("generate") => cmd_generate(&parse_flags(&args[1..])),
+        Some("chat") => cmd_chat(&parse_flags(&args[1..])),
+        Some("sim") => cmd_sim(&parse_flags(&args[1..])),
+        Some("info") => cmd_info(&parse_flags(&args[1..])),
+        _ => {
+            eprintln!("usage: petals <server|generate|chat|sim|info> [flags]");
+            eprintln!("see rust/src/main.rs header for the flag reference");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// `--key value` and bare `--flag` parsing.
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                map.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                map.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    map
+}
+
+fn artifacts_dir(flags: &HashMap<String, String>) -> String {
+    flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into())
+}
+
+fn fail(msg: &str) -> i32 {
+    eprintln!("error: {msg}");
+    1
+}
+
+fn cmd_info(flags: &HashMap<String, String>) -> i32 {
+    let home = match ModelHome::open(artifacts_dir(flags)) {
+        Ok(h) => h,
+        Err(e) => return fail(&e.to_string()),
+    };
+    let g = home.geometry();
+    println!("BLOOM-mini artifacts @ {}", home.root().display());
+    println!("  hidden={} layers={} heads={} vocab={} max_seq={}", g.hidden, g.n_layers, g.n_heads, g.vocab, g.max_seq);
+    println!("  block bytes: f16={} int8={} (ratio {:.2})", g.block_bytes_f16, g.block_bytes_int8, g.block_bytes_f16 as f64 / g.block_bytes_int8 as f64);
+    println!("  entry points ({}):", home.manifest.entries.len());
+    for name in home.manifest.entries.keys() {
+        println!("    {name}");
+    }
+    0
+}
+
+fn cmd_server(flags: &HashMap<String, String>) -> i32 {
+    let home = match ModelHome::open(artifacts_dir(flags)) {
+        Ok(h) => h,
+        Err(e) => return fail(&e.to_string()),
+    };
+    let name = flags.get("name").cloned().unwrap_or_else(|| "server-0".into());
+    let n_layers = home.geometry().n_layers;
+    let blocks = flags.get("blocks").cloned().unwrap_or(format!("0..{n_layers}"));
+    let Some((a, b)) = blocks.split_once("..") else {
+        return fail("--blocks must be A..B");
+    };
+    let (Ok(start), Ok(end)) = (a.parse::<usize>(), b.parse::<usize>()) else {
+        return fail("--blocks must be numeric A..B");
+    };
+    let precision = match flags.get("precision").map(|s| s.as_str()) {
+        Some("int8") => Precision::Int8,
+        _ => Precision::F16,
+    };
+    let listen = flags.get("listen").cloned().unwrap_or_else(|| "127.0.0.1:0".into());
+    let compress = flags.contains_key("compress");
+
+    println!("loading artifacts + compiling entry points...");
+    let rt = match Runtime::load(&home) {
+        Ok(r) => Arc::new(r),
+        Err(e) => return fail(&e.to_string()),
+    };
+    let node = match ServerNode::start(&name, &home, rt, start..end, precision, compress) {
+        Ok(n) => n,
+        Err(e) => return fail(&e.to_string()),
+    };
+    let handle = match serve(node, &listen) {
+        Ok(h) => h,
+        Err(e) => return fail(&e.to_string()),
+    };
+    println!("petals server '{name}' hosting blocks {start}..{end} ({precision:?}) on {}", handle.addr);
+    println!("press Ctrl-C to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn parse_peers(flags: &HashMap<String, String>) -> Option<Vec<(String, String)>> {
+    let peers = flags.get("peers")?;
+    Some(
+        peers
+            .split(',')
+            .filter_map(|p| p.split_once('='))
+            .map(|(n, a)| (n.to_string(), a.to_string()))
+            .collect(),
+    )
+}
+
+fn session_cfg(home: &ModelHome, prefix_len: usize, max_new: usize) -> SessionConfig {
+    let g = home.geometry();
+    SessionConfig {
+        n_blocks: g.n_layers,
+        batch: 1,
+        prefill_width: 128,
+        prefix_len,
+        max_new,
+        route: RouteQuery {
+            n_blocks: g.n_layers,
+            msg_bytes: (g.hidden * 4) as u64,
+            beam_width: 8,
+            queue_penalty_s: 0.05,
+        },
+        max_recoveries: 3,
+    }
+}
+
+fn cmd_generate(flags: &HashMap<String, String>) -> i32 {
+    let home = match ModelHome::open(artifacts_dir(flags)) {
+        Ok(h) => h,
+        Err(e) => return fail(&e.to_string()),
+    };
+    let Some(peers) = parse_peers(flags) else {
+        return fail("--peers name=addr[,name=addr...] required");
+    };
+    let prompt: Vec<i32> = flags
+        .get("prompt")
+        .map(|s| s.split(',').filter_map(|t| t.trim().parse().ok()).collect())
+        .unwrap_or_default();
+    if prompt.is_empty() {
+        return fail("--prompt id,id,... required");
+    }
+    let max_new: usize = flags.get("max-new").and_then(|s| s.parse().ok()).unwrap_or(16);
+
+    let rt = match Runtime::load_filtered(&home, |n| n.contains("_b1_") || n.ends_with("_b1")) {
+        Ok(r) => Arc::new(r),
+        Err(e) => return fail(&e.to_string()),
+    };
+    let weights = match Weights::load(&home, Precision::F16) {
+        Ok(w) => w,
+        Err(e) => return fail(&e.to_string()),
+    };
+    let head = match LocalHead::new(&home, rt, &weights) {
+        Ok(h) => h,
+        Err(e) => return fail(&e.to_string()),
+    };
+    let swarm = TcpSwarm::connect(&peers);
+    let sampler = match flags.get("topk").and_then(|s| s.parse::<usize>().ok()) {
+        Some(k) => Sampler::TopK { k, temperature: 0.8, seed: 0 },
+        None => Sampler::Greedy,
+    };
+    let cfg = session_cfg(&home, prompt.len(), max_new);
+    let generator = SwarmGenerator { swarm: &swarm, head: &head, cfg, sampler };
+    match generator.generate(&[prompt], max_new, 1) {
+        Ok(out) => {
+            let steps_per_s = out.steps as f64 / out.wall.as_secs_f64();
+            println!("tokens: {:?}", out.tokens[0]);
+            println!("{} steps in {:?} = {:.2} steps/s ({} recoveries)", out.steps, out.wall, steps_per_s, out.recoveries);
+            0
+        }
+        Err(e) => fail(&e.to_string()),
+    }
+}
+
+fn cmd_chat(flags: &HashMap<String, String>) -> i32 {
+    use petals::api::ChatBackend;
+    let home = match ModelHome::open(artifacts_dir(flags)) {
+        Ok(h) => h,
+        Err(e) => return fail(&e.to_string()),
+    };
+    let Some(peers) = parse_peers(flags) else {
+        return fail("--peers name=addr[,name=addr...] required");
+    };
+    let listen = flags.get("listen").cloned().unwrap_or_else(|| "127.0.0.1:8080".into());
+    let rt = match Runtime::load_filtered(&home, |n| n.contains("_b1_") || n.ends_with("_b1")) {
+        Ok(r) => Arc::new(r),
+        Err(e) => return fail(&e.to_string()),
+    };
+    let weights = match Weights::load(&home, Precision::F16) {
+        Ok(w) => w,
+        Err(e) => return fail(&e.to_string()),
+    };
+    let head = match LocalHead::new(&home, rt, &weights) {
+        Ok(h) => Arc::new(h),
+        Err(e) => return fail(&e.to_string()),
+    };
+    let swarm = Arc::new(TcpSwarm::connect(&peers));
+    let cfg = session_cfg(&home, 8, 32);
+    let backend = ChatBackend::new(swarm, head, cfg);
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    match backend.serve(&listen, stop) {
+        Ok(addr) => {
+            println!("chat backend on http://{addr} (POST /api/v1/generate)");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => fail(&e.to_string()),
+    }
+}
+
+fn cmd_sim(flags: &HashMap<String, String>) -> i32 {
+    let preset = match flags.get("preset").map(|s| s.as_str()) {
+        Some("12virtual") => SwarmPreset::TwelveVirtual,
+        Some("14real") => SwarmPreset::FourteenRealWorld,
+        _ => SwarmPreset::ThreeA100,
+    };
+    let net = match flags.get("net").map(|s| s.as_str()) {
+        Some("mbit100-5") => NetworkProfile::MBIT100_5MS,
+        Some("mbit100-100") => NetworkProfile::MBIT100_100MS,
+        _ => NetworkProfile::GBIT_5MS,
+    };
+    let workload = flags.get("workload").cloned().unwrap_or_else(|| "inference".into());
+    let mut sim = SwarmSim::build(preset.build(net, !flags.contains_key("no-compress")), 0);
+    println!("swarm: {preset:?} over {net:?}");
+    for s in &sim.servers {
+        println!("  {} {} blocks {:?}", s.id.short(), s.spec.device.name, s.span);
+    }
+    match workload.as_str() {
+        "forward" => {
+            let r = sim.run_forward(64, 128, 4).unwrap();
+            println!("parallel forward: {:.1} tokens/s ({} tokens in {:.2}s)", r.tokens_per_s, r.tokens, r.wall_s);
+        }
+        "multiclient" => {
+            let solo = sim.run_inference(128, 32, 1).unwrap().steps_per_s;
+            let many = sim.run_inference_concurrent(8, 128, 32).unwrap();
+            let mean: f64 = many.iter().sum::<f64>() / many.len() as f64;
+            println!("1 client:  {solo:.2} steps/s");
+            println!("8 clients: {mean:.2} steps/s each ({:.0}% slowdown)", (1.0 - mean / solo) * 100.0);
+        }
+        _ => {
+            for seq in [128usize, 2048] {
+                let r = sim.run_inference(seq.min(2048), 32, 1).unwrap();
+                println!("inference seq={seq}: {:.2} steps/s (chain of {})", r.steps_per_s, r.chain_len);
+            }
+        }
+    }
+    0
+}

@@ -1,0 +1,208 @@
+//! Metrics substrate: counters, latency histograms, throughput meters.
+//!
+//! Thread-safe, allocation-free on the record path (atomics + fixed
+//! log-scale buckets), so servers can record every request without
+//! perturbing the hot loop.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-scale histogram over microseconds: bucket i covers
+/// [2^i, 2^(i+1)) µs, 48 buckets ≈ 9 years of range.
+pub struct Histogram {
+    buckets: [AtomicU64; 48],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    pub fn record_us(&self, us: u64) {
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(47);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate quantile (upper bound of the bucket holding it).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << 48
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.0}us p50<={}us p90<={}us p99<={}us",
+            self.count(),
+            self.mean_us(),
+            self.quantile_us(0.50),
+            self.quantile_us(0.90),
+            self.quantile_us(0.99),
+        )
+    }
+}
+
+/// Events-per-second meter (whole-run).
+pub struct Throughput {
+    started: std::time::Instant,
+    events: Counter,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput { started: std::time::Instant::now(), events: Counter::new() }
+    }
+
+    pub fn record(&self, n: u64) {
+        self.events.add(n);
+    }
+
+    pub fn per_second(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.events.get() as f64 / secs
+        }
+    }
+}
+
+/// Standard metric set every server/client carries.
+#[derive(Default)]
+pub struct NodeMetrics {
+    pub requests: Counter,
+    pub failures: Counter,
+    pub bytes_in: Counter,
+    pub bytes_out: Counter,
+    pub step_latency: Histogram,
+}
+
+impl NodeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} failures={} in={}B out={}B step[{}]",
+            self.requests.get(),
+            self.failures.get(),
+            self.bytes_in.get(),
+            self.bytes_out.get(),
+            self.step_latency.summary()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::new();
+        for us in [10u64, 100, 1000, 10_000, 100_000] {
+            for _ in 0..20 {
+                h.record_us(us);
+            }
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile_us(0.5);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 >= 1000, "p50 bucket should cover the median value");
+        assert!((h.mean_us() - 22222.0).abs() / 22222.0 < 0.01);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn histogram_extremes() {
+        let h = Histogram::new();
+        h.record_us(0); // clamped to 1
+        h.record_us(u64::MAX); // clamped to last bucket
+        assert_eq!(h.count(), 2);
+    }
+}

@@ -1,0 +1,326 @@
+//! `artifacts/manifest.json` schema (written by `python/compile/aot.py`),
+//! parsed with the in-tree JSON substrate (`config::json`).
+
+use crate::config::json::Value;
+use crate::error::Result;
+use crate::model::tensor::DType;
+use std::collections::BTreeMap;
+
+/// BLOOM-mini geometry, exported by aot.py.
+#[derive(Debug, Clone)]
+pub struct Geometry {
+    pub hidden: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub ffn: usize,
+    /// Bytes one Transformer block occupies server-side in the "16-bit"
+    /// path (f32 on this CPU testbed; the int8-vs-16bit *ratio* is what
+    /// the paper's 44->22 node claim rests on).
+    pub block_bytes_f16: u64,
+    pub block_bytes_int8: u64,
+    pub params_per_block: u64,
+}
+
+impl Geometry {
+    fn parse(v: &Value) -> Result<Self> {
+        Ok(Geometry {
+            hidden: v.get("hidden")?.usize()?,
+            n_layers: v.get("n_layers")?.usize()?,
+            n_heads: v.get("n_heads")?.usize()?,
+            head_dim: v.get("head_dim")?.usize()?,
+            vocab: v.get("vocab")?.usize()?,
+            max_seq: v.get("max_seq")?.usize()?,
+            ffn: v.get("ffn")?.usize()?,
+            block_bytes_f16: v.get("block_bytes_f16")?.u64()?,
+            block_bytes_int8: v.get("block_bytes_int8")?.u64()?,
+            params_per_block: v.get("params_per_block")?.u64()?,
+        })
+    }
+
+    /// FLOPs of one token through one block (2*params matmul convention).
+    pub fn flops_per_token_block(&self) -> f64 {
+        let h = self.hidden as f64;
+        let f = self.ffn as f64;
+        2.0 * (h * 3.0 * h + h * h + h * f + f * h)
+    }
+
+    /// Hidden-state bytes for one token at f32 (what crosses the wire
+    /// per pipeline hop without compression).
+    pub fn hidden_bytes_f32(&self) -> u64 {
+        (self.hidden * 4) as u64
+    }
+}
+
+/// Shape+dtype+file of one exported tensor.
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub file: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    fn parse(v: &Value) -> Result<Self> {
+        Ok(TensorMeta {
+            file: v.get("file")?.str()?.to_string(),
+            shape: v.get("shape")?.usize_vec()?,
+            dtype: v.get("dtype")?.str()?.to_string(),
+        })
+    }
+
+    pub fn dtype(&self) -> DType {
+        parse_dtype(&self.dtype)
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+fn parse_dtype(s: &str) -> DType {
+    match s {
+        "f32" => DType::F32,
+        "i8" => DType::I8,
+        "i32" => DType::I32,
+        other => panic!("unknown dtype in manifest: {other}"),
+    }
+}
+
+/// Golden input/output vectors for one entry point.
+#[derive(Debug, Clone)]
+pub struct GoldenMeta {
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// One AOT entry point: its HLO file and arg/output signatures.
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub file: String,
+    pub args: Vec<ArgMeta>,
+    pub outputs: Vec<ArgMeta>,
+    pub golden: Option<GoldenMeta>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArgMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArgMeta {
+    fn parse(v: &Value) -> Result<Self> {
+        Ok(ArgMeta {
+            shape: v.get("shape")?.usize_vec()?,
+            dtype: v.get("dtype")?.str()?.to_string(),
+        })
+    }
+
+    pub fn dtype(&self) -> DType {
+        parse_dtype(&self.dtype)
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+impl EntryMeta {
+    fn parse(v: &Value) -> Result<Self> {
+        let args = v
+            .get("args")?
+            .arr()?
+            .iter()
+            .map(ArgMeta::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = v
+            .get("outputs")?
+            .arr()?
+            .iter()
+            .map(ArgMeta::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let golden = match v.opt("golden") {
+            Some(g) => Some(GoldenMeta {
+                inputs: g
+                    .get("inputs")?
+                    .arr()?
+                    .iter()
+                    .map(TensorMeta::parse)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: g
+                    .get("outputs")?
+                    .arr()?
+                    .iter()
+                    .map(TensorMeta::parse)
+                    .collect::<Result<Vec<_>>>()?,
+            }),
+            None => None,
+        };
+        Ok(EntryMeta {
+            file: v.get("file")?.str()?.to_string(),
+            args,
+            outputs,
+            golden,
+        })
+    }
+}
+
+/// int8 pack of one matmul weight.
+#[derive(Debug, Clone)]
+pub struct Int8Pack {
+    pub w_q: TensorMeta,
+    pub w_scale: TensorMeta,
+    pub w_out: TensorMeta,
+    pub mask: TensorMeta,
+}
+
+/// Per-block int8 entry: either a pack (matmul) or a reference to the
+/// f32 tensor (LN gains, biases).
+#[derive(Debug, Clone)]
+pub enum Int8ParamMeta {
+    Pack(Int8Pack),
+    Ref(String),
+}
+
+impl Int8ParamMeta {
+    fn parse(v: &Value) -> Result<Self> {
+        if let Some(r) = v.opt("ref") {
+            Ok(Int8ParamMeta::Ref(r.str()?.to_string()))
+        } else {
+            Ok(Int8ParamMeta::Pack(Int8Pack {
+                w_q: TensorMeta::parse(v.get("w_q")?)?,
+                w_scale: TensorMeta::parse(v.get("w_scale")?)?,
+                w_out: TensorMeta::parse(v.get("w_out")?)?,
+                mask: TensorMeta::parse(v.get("mask")?)?,
+            }))
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightsIndex {
+    pub embedding: TensorMeta,
+    pub ln_emb_g: TensorMeta,
+    pub ln_emb_b: TensorMeta,
+    pub ln_f_g: TensorMeta,
+    pub ln_f_b: TensorMeta,
+    pub blocks: Vec<BTreeMap<String, TensorMeta>>,
+    pub blocks_int8: Vec<BTreeMap<String, Int8ParamMeta>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct GoldenGenerate {
+    pub prefix: TensorMeta,
+    pub tokens: TensorMeta,
+    pub logits_last: TensorMeta,
+}
+
+/// Top-level manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: Geometry,
+    pub entries: BTreeMap<String, EntryMeta>,
+    pub weights: WeightsIndex,
+    pub golden_generate: GoldenGenerate,
+}
+
+impl Manifest {
+    pub fn parse(src: &str) -> Result<Self> {
+        let v = Value::parse(src)?;
+        let config = Geometry::parse(v.get("config")?)?;
+
+        let mut entries = BTreeMap::new();
+        for (name, e) in v.get("entries")?.obj()? {
+            entries.insert(name.clone(), EntryMeta::parse(e)?);
+        }
+
+        let w = v.get("weights")?;
+        let mut blocks = Vec::new();
+        for b in w.get("blocks")?.arr()? {
+            let mut m = BTreeMap::new();
+            for (k, t) in b.obj()? {
+                m.insert(k.clone(), TensorMeta::parse(t)?);
+            }
+            blocks.push(m);
+        }
+        let mut blocks_int8 = Vec::new();
+        for b in w.get("blocks_int8")?.arr()? {
+            let mut m = BTreeMap::new();
+            for (k, t) in b.obj()? {
+                m.insert(k.clone(), Int8ParamMeta::parse(t)?);
+            }
+            blocks_int8.push(m);
+        }
+        let weights = WeightsIndex {
+            embedding: TensorMeta::parse(w.get("embedding")?)?,
+            ln_emb_g: TensorMeta::parse(w.get("ln_emb_g")?)?,
+            ln_emb_b: TensorMeta::parse(w.get("ln_emb_b")?)?,
+            ln_f_g: TensorMeta::parse(w.get("ln_f_g")?)?,
+            ln_f_b: TensorMeta::parse(w.get("ln_f_b")?)?,
+            blocks,
+            blocks_int8,
+        };
+
+        let gg = v.get("golden_generate")?;
+        let golden_generate = GoldenGenerate {
+            prefix: TensorMeta::parse(gg.get("prefix")?)?,
+            tokens: TensorMeta::parse(gg.get("tokens")?)?,
+            logits_last: TensorMeta::parse(gg.get("logits_last")?)?,
+        };
+
+        Ok(Manifest { config, entries, weights, golden_generate })
+    }
+}
+
+/// Block parameter names in entry-point argument order. Mirror of
+/// `python/compile/model.py::BLOCK_PARAM_NAMES`.
+pub const BLOCK_PARAM_NAMES: [&str; 12] = [
+    "ln1_g", "ln1_b", "w_qkv", "b_qkv", "w_o", "b_o",
+    "ln2_g", "ln2_b", "w_fc", "b_fc", "w_proj", "b_proj",
+];
+
+/// Names that expand to (w_q, w_scale, w_out, mask) in the int8 format.
+pub const INT8_MATMULS: [&str; 4] = ["w_qkv", "w_o", "w_fc", "w_proj"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_order_matches_python() {
+        assert_eq!(BLOCK_PARAM_NAMES[2], "w_qkv");
+        assert_eq!(BLOCK_PARAM_NAMES[11], "b_proj");
+        assert!(INT8_MATMULS.iter().all(|m| BLOCK_PARAM_NAMES.contains(m)));
+    }
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let src = r#"{
+          "config": {"hidden":128,"n_layers":1,"n_heads":4,"head_dim":32,
+                     "vocab":256,"max_seq":64,"ffn":512,
+                     "block_bytes_f16":100,"block_bytes_int8":30,
+                     "params_per_block":25},
+          "entries": {"e1": {"file":"e1.hlo.txt",
+                             "args":[{"shape":[1,2],"dtype":"i32"}],
+                             "outputs":[{"shape":[1,2,128],"dtype":"f32"}]}},
+          "weights": {
+            "embedding":{"file":"w/e.bin","shape":[256,128],"dtype":"f32"},
+            "ln_emb_g":{"file":"w/a.bin","shape":[128],"dtype":"f32"},
+            "ln_emb_b":{"file":"w/b.bin","shape":[128],"dtype":"f32"},
+            "ln_f_g":{"file":"w/c.bin","shape":[128],"dtype":"f32"},
+            "ln_f_b":{"file":"w/d.bin","shape":[128],"dtype":"f32"},
+            "blocks":[], "blocks_int8":[]},
+          "golden_generate": {
+            "prefix":{"file":"g/p.bin","shape":[1,8],"dtype":"i32"},
+            "tokens":{"file":"g/t.bin","shape":[1,8],"dtype":"i32"},
+            "logits_last":{"file":"g/l.bin","shape":[1,256],"dtype":"f32"}}
+        }"#;
+        let m = Manifest::parse(src).unwrap();
+        assert_eq!(m.config.hidden, 128);
+        assert_eq!(m.entries["e1"].args[0].dtype(), DType::I32);
+        assert!(m.entries["e1"].golden.is_none());
+    }
+}

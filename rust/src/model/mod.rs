@@ -1,0 +1,109 @@
+//! Model metadata and weights: the bridge between `artifacts/` (produced
+//! once by `make artifacts`) and the Rust request path.
+//!
+//! [`ModelHome`] parses `manifest.json` and lazily loads weight tensors
+//! (raw little-endian files exported by `python/compile/aot.py`). The
+//! block-parameter ordering here mirrors `BLOCK_PARAM_NAMES` /
+//! `flatten_int8_params` in `python/compile/model.py` — keep in sync.
+
+pub mod manifest;
+pub mod tensor;
+pub mod weights;
+
+pub use manifest::{EntryMeta, Geometry, Manifest, TensorMeta};
+pub use tensor::{DType, Tensor};
+pub use weights::{BlockWeights, Precision, Weights};
+
+use crate::error::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Root handle over the `artifacts/` directory.
+pub struct ModelHome {
+    root: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl ModelHome {
+    /// Open an artifacts directory and parse its manifest.
+    pub fn open(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        let manifest_path = root.join("manifest.json");
+        let data = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Parse(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let manifest = Manifest::parse(&data)?;
+        Ok(Self { root, manifest })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn geometry(&self) -> &Geometry {
+        &self.manifest.config
+    }
+
+    /// Absolute path of an artifact-relative file.
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+
+    /// Load a tensor referenced by the manifest.
+    pub fn load_tensor(&self, meta: &TensorMeta) -> Result<Tensor> {
+        Tensor::read_file(&self.path(&meta.file), &meta.shape, meta.dtype())
+    }
+
+    /// Load all model weights at a given precision.
+    pub fn load_weights(&self, precision: Precision) -> Result<Weights> {
+        Weights::load(self, precision)
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_home() -> ModelHome {
+    let root = std::env::var("PETALS_ARTIFACTS")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string());
+    ModelHome::open(root).expect("artifacts not built; run `make artifacts`")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_and_geometry() {
+        let home = test_home();
+        let g = home.geometry();
+        assert_eq!(g.hidden % 64, 0, "quant block layout requires hidden%64==0");
+        assert!(g.n_layers >= 1);
+        assert_eq!(g.head_dim * g.n_heads, g.hidden);
+    }
+
+    #[test]
+    fn manifest_entries_present() {
+        let home = test_home();
+        for required in [
+            "embed_b1_s1",
+            "lm_head_b1",
+            "block_prefill_b1_s128",
+            "block_decode_b1_c256",
+            "block_decode_int8_b1_c256",
+            "block_bwd_b4_s64",
+        ] {
+            assert!(
+                home.manifest.entries.contains_key(required),
+                "missing entry {required}"
+            );
+        }
+    }
+
+    #[test]
+    fn int8_block_is_smaller() {
+        let home = test_home();
+        let g = home.geometry();
+        assert!(g.block_bytes_int8 * 2 < g.block_bytes_f16);
+    }
+}

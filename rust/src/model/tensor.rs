@@ -1,0 +1,214 @@
+//! Minimal host-side tensor: shape + dtype + contiguous bytes.
+//!
+//! This is deliberately not an ndarray library — the request path only
+//! moves buffers between the wire, the quantization codec, and PJRT
+//! literals. All math happens inside the AOT artifacts.
+
+use crate::error::{Error, Result};
+use std::path::Path;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I8,
+    I32,
+}
+
+impl DType {
+    pub fn size(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+
+    pub(crate) fn element_type(&self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I8 => xla::ElementType::S8,
+            DType::I32 => xla::ElementType::S32,
+        }
+    }
+}
+
+/// Contiguous row-major host tensor.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize], dtype: DType) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), dtype, data: vec![0u8; n * dtype.size()] }
+    }
+
+    pub fn from_f32(shape: &[usize], values: &[f32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { shape: shape.to_vec(), dtype: DType::F32, data }
+    }
+
+    pub fn from_i32(shape: &[usize], values: &[i32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { shape: shape.to_vec(), dtype: DType::I32, data }
+    }
+
+    pub fn from_i8(shape: &[usize], values: &[i8]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let data = values.iter().map(|v| *v as u8).collect();
+        Tensor { shape: shape.to_vec(), dtype: DType::I8, data }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// View the payload as f32 (little-endian host assumed; we only
+    /// target x86-64/aarch64 like the artifacts).
+    pub fn as_f32(&self) -> &[f32] {
+        assert_eq!(self.dtype, DType::F32);
+        unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const f32, self.elements())
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        assert_eq!(self.dtype, DType::F32);
+        unsafe {
+            std::slice::from_raw_parts_mut(self.data.as_mut_ptr() as *mut f32, self.elements())
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        assert_eq!(self.dtype, DType::I32);
+        unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const i32, self.elements())
+        }
+    }
+
+    pub fn as_i8(&self) -> &[i8] {
+        assert_eq!(self.dtype, DType::I8);
+        unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const i8, self.elements())
+        }
+    }
+
+    /// Read a raw little-endian tensor file exported by aot.py.
+    pub fn read_file(path: &Path, shape: &[usize], dtype: DType) -> Result<Self> {
+        let data = std::fs::read(path)?;
+        let expect = shape.iter().product::<usize>() * dtype.size();
+        if data.len() != expect {
+            return Err(Error::Shape(format!(
+                "{}: file has {} bytes, shape {:?} needs {}",
+                path.display(),
+                data.len(),
+                shape,
+                expect
+            )));
+        }
+        Ok(Tensor { shape: shape.to_vec(), dtype, data })
+    }
+
+    /// Convert to a PJRT literal (copies once).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<usize> = self.shape.clone();
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            self.dtype.element_type(),
+            &dims,
+            &self.data,
+        )?;
+        Ok(lit)
+    }
+
+    /// Build from a PJRT literal (copies once).
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize], dtype: DType) -> Result<Self> {
+        let mut t = Tensor::zeros(shape, dtype);
+        match dtype {
+            DType::F32 => {
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        t.data.as_mut_ptr() as *mut f32,
+                        t.elements(),
+                    )
+                };
+                lit.copy_raw_to::<f32>(dst)?;
+            }
+            DType::I32 => {
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        t.data.as_mut_ptr() as *mut i32,
+                        t.elements(),
+                    )
+                };
+                lit.copy_raw_to::<i32>(dst)?;
+            }
+            DType::I8 => {
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(t.data.as_mut_ptr() as *mut i8, t.elements())
+                };
+                lit.copy_raw_to::<i8>(dst)?;
+            }
+        }
+        Ok(t)
+    }
+
+    /// Max |a - b| over two f32 tensors (test helper).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        let a = self.as_f32();
+        let b = other.as_f32();
+        assert_eq!(a.len(), b.len());
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::from_f32(&[2, 3], &[1.0, -2.5, 3.0, 0.0, 1e-7, -1e9]);
+        assert_eq!(t.byte_len(), 24);
+        assert_eq!(t.as_f32()[1], -2.5);
+        assert_eq!(t.as_f32()[5], -1e9);
+    }
+
+    #[test]
+    fn roundtrip_i8() {
+        let t = Tensor::from_i8(&[4], &[-127, 0, 1, 127]);
+        assert_eq!(t.as_i8(), &[-127, 0, 1, 127]);
+    }
+
+    #[test]
+    fn zeros_shape() {
+        let t = Tensor::zeros(&[3, 5, 7], DType::F32);
+        assert_eq!(t.elements(), 105);
+        assert!(t.as_f32().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("petals_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, [0u8; 10]).unwrap();
+        assert!(Tensor::read_file(&p, &[4], DType::F32).is_err());
+    }
+}

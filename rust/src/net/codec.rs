@@ -1,0 +1,275 @@
+//! Wire protocol: message types + hand-rolled binary encoding.
+//!
+//! Layout: `[u8 tag][fields...]`; integers little-endian; tensors as
+//! [`TensorPayload`]. The frame length prefix lives one layer down
+//! ([`super::framed`]).
+
+use crate::model::tensor::{DType, Tensor};
+use crate::quant::{self, QuantizedTensor};
+
+/// A tensor on the wire: raw f32 or §3.1-compressed.
+#[derive(Debug, Clone)]
+pub enum TensorPayload {
+    Raw(Tensor),
+    Compressed(QuantizedTensor),
+}
+
+impl TensorPayload {
+    pub fn raw(t: &Tensor) -> Self {
+        TensorPayload::Raw(t.clone())
+    }
+
+    pub fn compressed(t: &Tensor) -> Self {
+        TensorPayload::Compressed(quant::quantize(t))
+    }
+
+    /// Encode per `compress` flag (the client/server negotiated policy).
+    pub fn encode_policy(t: &Tensor, compress: bool) -> Self {
+        if compress {
+            Self::compressed(t)
+        } else {
+            Self::raw(t)
+        }
+    }
+
+    pub fn to_tensor(&self) -> Option<Tensor> {
+        match self {
+            TensorPayload::Raw(t) => Some(t.clone()),
+            TensorPayload::Compressed(q) => Some(quant::dequantize(q)),
+        }
+    }
+
+    pub fn wire_len(&self) -> usize {
+        match self {
+            TensorPayload::Raw(t) => 1 + 1 + 4 + t.shape.len() * 4 + t.data.len(),
+            TensorPayload::Compressed(q) => 1 + quant::encode(q).len(),
+        }
+    }
+
+    fn write(&self, out: &mut Vec<u8>) {
+        match self {
+            TensorPayload::Raw(t) => {
+                out.push(0);
+                out.push(match t.dtype {
+                    DType::F32 => 0,
+                    DType::I8 => 1,
+                    DType::I32 => 2,
+                });
+                out.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+                for &d in &t.shape {
+                    out.extend_from_slice(&(d as u32).to_le_bytes());
+                }
+                out.extend_from_slice(&t.data);
+            }
+            TensorPayload::Compressed(q) => {
+                out.push(1);
+                out.extend_from_slice(&quant::encode(q));
+            }
+        }
+    }
+
+    fn read(r: &mut Reader) -> Option<Self> {
+        match r.u8()? {
+            0 => {
+                let dtype = match r.u8()? {
+                    0 => DType::F32,
+                    1 => DType::I8,
+                    2 => DType::I32,
+                    _ => return None,
+                };
+                let rank = r.u32()? as usize;
+                if rank > 8 {
+                    return None;
+                }
+                let mut shape = Vec::with_capacity(rank);
+                for _ in 0..rank {
+                    shape.push(r.u32()? as usize);
+                }
+                let n: usize = shape.iter().product::<usize>() * dtype.size();
+                let data = r.bytes(n)?.to_vec();
+                Some(TensorPayload::Raw(Tensor { shape, dtype, data }))
+            }
+            1 => {
+                let rest = r.rest();
+                let q = quant::decode(rest)?;
+                let used = quant::encode(&q).len();
+                r.advance(used);
+                Some(TensorPayload::Compressed(q))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Every message of the Petals protocol.
+#[derive(Debug, Clone)]
+pub enum Message {
+    /// Latency probe (client-side routing pings nearby servers, §3.2).
+    Ping,
+    /// Probe reply: hosted span + self-measured throughput + load.
+    Pong { start: u32, end: u32, throughput: f32, queue_depth: u32 },
+    /// Create an inference session with per-session KV cache.
+    OpenSession { session: u64, batch: u32, prefix_len: u32, max_new: u32 },
+    SessionOpened { session: u64 },
+    /// Run the prefix through this server's blocks, filling its caches.
+    Prefill { session: u64, hidden: TensorPayload },
+    /// One decode step: hidden [B,1,H] in, hidden [B,1,H] out.
+    InferStep { session: u64, cache_len: u32, hidden: TensorPayload },
+    /// Reply to Prefill / InferStep / Forward / Backward.
+    HiddenResult { hidden: TensorPayload },
+    /// Stateless parallel forward (fine-tuning & batch inference, §2.2).
+    Forward { hidden: TensorPayload },
+    /// Backward through frozen blocks: returns grad wrt activations.
+    Backward { hidden: TensorPayload, grad: TensorPayload },
+    CloseSession { session: u64 },
+    Error { message: String },
+}
+
+impl Message {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64);
+        match self {
+            Message::Ping => out.push(0),
+            Message::Pong { start, end, throughput, queue_depth } => {
+                out.push(1);
+                out.extend_from_slice(&start.to_le_bytes());
+                out.extend_from_slice(&end.to_le_bytes());
+                out.extend_from_slice(&throughput.to_le_bytes());
+                out.extend_from_slice(&queue_depth.to_le_bytes());
+            }
+            Message::OpenSession { session, batch, prefix_len, max_new } => {
+                out.push(2);
+                out.extend_from_slice(&session.to_le_bytes());
+                out.extend_from_slice(&batch.to_le_bytes());
+                out.extend_from_slice(&prefix_len.to_le_bytes());
+                out.extend_from_slice(&max_new.to_le_bytes());
+            }
+            Message::SessionOpened { session } => {
+                out.push(3);
+                out.extend_from_slice(&session.to_le_bytes());
+            }
+            Message::Prefill { session, hidden } => {
+                out.push(4);
+                out.extend_from_slice(&session.to_le_bytes());
+                hidden.write(&mut out);
+            }
+            Message::InferStep { session, cache_len, hidden } => {
+                out.push(5);
+                out.extend_from_slice(&session.to_le_bytes());
+                out.extend_from_slice(&cache_len.to_le_bytes());
+                hidden.write(&mut out);
+            }
+            Message::HiddenResult { hidden } => {
+                out.push(6);
+                hidden.write(&mut out);
+            }
+            Message::Forward { hidden } => {
+                out.push(7);
+                hidden.write(&mut out);
+            }
+            Message::Backward { hidden, grad } => {
+                out.push(8);
+                hidden.write(&mut out);
+                grad.write(&mut out);
+            }
+            Message::CloseSession { session } => {
+                out.push(9);
+                out.extend_from_slice(&session.to_le_bytes());
+            }
+            Message::Error { message } => {
+                out.push(10);
+                out.extend_from_slice(&(message.len() as u32).to_le_bytes());
+                out.extend_from_slice(message.as_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Option<Message> {
+        let mut r = Reader { b: buf, pos: 0 };
+        let msg = match r.u8()? {
+            0 => Message::Ping,
+            1 => Message::Pong {
+                start: r.u32()?,
+                end: r.u32()?,
+                throughput: r.f32()?,
+                queue_depth: r.u32()?,
+            },
+            2 => Message::OpenSession {
+                session: r.u64()?,
+                batch: r.u32()?,
+                prefix_len: r.u32()?,
+                max_new: r.u32()?,
+            },
+            3 => Message::SessionOpened { session: r.u64()? },
+            4 => Message::Prefill { session: r.u64()?, hidden: TensorPayload::read(&mut r)? },
+            5 => Message::InferStep {
+                session: r.u64()?,
+                cache_len: r.u32()?,
+                hidden: TensorPayload::read(&mut r)?,
+            },
+            6 => Message::HiddenResult { hidden: TensorPayload::read(&mut r)? },
+            7 => Message::Forward { hidden: TensorPayload::read(&mut r)? },
+            8 => Message::Backward {
+                hidden: TensorPayload::read(&mut r)?,
+                grad: TensorPayload::read(&mut r)?,
+            },
+            9 => Message::CloseSession { session: r.u64()? },
+            10 => {
+                let n = r.u32()? as usize;
+                let bytes = r.bytes(n)?;
+                Message::Error { message: String::from_utf8(bytes.to_vec()).ok()? }
+            }
+            _ => return None,
+        };
+        if r.pos != buf.len() {
+            return None; // trailing junk => corrupt frame
+        }
+        Some(msg)
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn u8(&mut self) -> Option<u8> {
+        let v = *self.b.get(self.pos)?;
+        self.pos += 1;
+        Some(v)
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        let v = u32::from_le_bytes(self.b.get(self.pos..self.pos + 4)?.try_into().ok()?);
+        self.pos += 4;
+        Some(v)
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        let v = u64::from_le_bytes(self.b.get(self.pos..self.pos + 8)?.try_into().ok()?);
+        self.pos += 8;
+        Some(v)
+    }
+
+    fn f32(&mut self) -> Option<f32> {
+        let v = f32::from_le_bytes(self.b.get(self.pos..self.pos + 4)?.try_into().ok()?);
+        self.pos += 4;
+        Some(v)
+    }
+
+    fn bytes(&mut self, n: usize) -> Option<&'a [u8]> {
+        let v = self.b.get(self.pos..self.pos + n)?;
+        self.pos += n;
+        Some(v)
+    }
+
+    fn rest(&self) -> &'a [u8] {
+        &self.b[self.pos..]
+    }
+
+    fn advance(&mut self, n: usize) {
+        self.pos += n;
+    }
+}

@@ -1,0 +1,108 @@
+//! Length-prefixed framing over any `Read`/`Write` stream (TCP in
+//! practice): `[u32 len][payload]`, 64 MiB frame cap.
+
+use crate::error::{Error, Result};
+use crate::net::codec::Message;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+const MAX_FRAME: u32 = 64 << 20;
+
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    if payload.len() as u32 > MAX_FRAME {
+        return Err(Error::Protocol(format!("frame too large: {}", payload.len())));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len);
+    if len > MAX_FRAME {
+        return Err(Error::Protocol(format!("frame too large: {len}")));
+    }
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// A request/response connection carrying [`Message`]s.
+pub struct FramedConn {
+    stream: TcpStream,
+}
+
+impl FramedConn {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(FramedConn { stream })
+    }
+
+    pub fn from_stream(stream: TcpStream) -> Result<Self> {
+        stream.set_nodelay(true)?;
+        Ok(FramedConn { stream })
+    }
+
+    pub fn send(&mut self, msg: &Message) -> Result<()> {
+        write_frame(&mut self.stream, &msg.encode())
+    }
+
+    pub fn recv(&mut self) -> Result<Message> {
+        let frame = read_frame(&mut self.stream)?;
+        Message::decode(&frame)
+            .ok_or_else(|| Error::Protocol("undecodable frame".into()))
+    }
+
+    /// One request/response round trip.
+    pub fn call(&mut self, msg: &Message) -> Result<Message> {
+        self.send(msg)?;
+        let resp = self.recv()?;
+        if let Message::Error { message } = &resp {
+            return Err(Error::ChainBroken(message.clone()));
+        }
+        Ok(resp)
+    }
+
+    pub fn peer_addr(&self) -> String {
+        self.stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "?".into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_various_sizes() {
+        for n in [0usize, 1, 1000, 100_000] {
+            let payload = vec![7u8; n];
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &payload).unwrap();
+            let got = read_frame(&mut &buf[..]).unwrap();
+            assert_eq!(got, payload);
+        }
+    }
+
+    #[test]
+    fn oversize_frame_rejected() {
+        // forged header claiming 1 GiB
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(1u32 << 30).to_le_bytes());
+        assert!(read_frame(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn truncated_frame_is_io_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &[1, 2, 3, 4]).unwrap();
+        buf.truncate(buf.len() - 2);
+        assert!(read_frame(&mut &buf[..]).is_err());
+    }
+}

@@ -1,0 +1,229 @@
+//! Parameter-offloading baseline (Table 3 bottom rows).
+//!
+//! The paper compares Petals with RAM/SSD offloading (ZeRO-Offload /
+//! ZeRO-Infinity style): weights stream over PCIe layer by layer,
+//! just-in-time for each forward pass. The paper computes an *upper
+//! bound* on offloading speed — zero latency, full PCIe bandwidth — and
+//! so do we:
+//!
+//! - single-batch decode: every step must stream all `total_bytes` of
+//!   weights over PCIe once per GPU sweep; compute overlaps and is
+//!   negligible at batch 1,
+//! - parallel forward: per sweep, the batch's compute can hide the
+//!   transfer once batch x FLOPs exceeds transfer time (double
+//!   buffering), so sweep time = max(transfer, compute),
+//! - multi-GPU: weights shard across GPUs, but each pair shares a PCIe
+//!   switch at half bandwidth and sweeps synchronize per layer — the
+//!   paper's own numbers halve again from 1 to 3 GPUs; we model this
+//!   with a per-GPU sync overhead factor.
+//!
+//! This module also runs a *real* offloading execution for BLOOM-mini
+//! (layer-streamed PJRT execution with throttled "PCIe") so the baseline
+//! is exercised in code, not just by formula — see `examples/` and the
+//! table3_offload bench.
+
+use crate::config::profiles::DeviceProfile;
+use crate::error::Result;
+use crate::model::tensor::Tensor;
+use crate::model::{ModelHome, Precision, Weights};
+use crate::runtime::Runtime;
+use std::sync::Arc;
+
+/// Analytic upper-bound model (paper §3.3 methodology).
+#[derive(Debug, Clone)]
+pub struct OffloadModel {
+    /// Total model bytes that must cross PCIe per sweep.
+    pub total_bytes: u64,
+    /// PCIe bandwidth, bits/s (256 Gbit/s = x16 PCIe 4.0; 128 Gbit/s
+    /// when two GPUs share a switch).
+    pub pcie_bps: f64,
+    pub n_gpus: usize,
+    /// Achieved compute rate for the forward path, FLOP/s per GPU.
+    pub flops_eff: f64,
+    /// FLOPs per token per block and total blocks (compute side).
+    pub flops_per_token_block: f64,
+    pub n_blocks: usize,
+}
+
+impl OffloadModel {
+    pub fn bloom176b_int8(pcie_gbit: f64, n_gpus: usize) -> Self {
+        use crate::config::profiles::bloom176b::*;
+        OffloadModel {
+            total_bytes: BLOCK_BYTES_INT8 * N_BLOCKS as u64,
+            pcie_bps: pcie_gbit * 1e9,
+            n_gpus,
+            flops_eff: DeviceProfile::A100_80G.flops_eff,
+            flops_per_token_block: FLOPS_PER_TOKEN_BLOCK,
+            n_blocks: N_BLOCKS,
+        }
+    }
+
+    /// Seconds for one full weight sweep over PCIe.
+    pub fn sweep_s(&self) -> f64 {
+        // Sharding divides bytes per GPU but per-layer synchronization
+        // across GPUs serializes the pipeline; the paper's measured
+        // numbers halve per doubling of GPUs — model as a sync factor.
+        // The paper's measured multi-GPU numbers (0.18 -> 0.09 steps/s
+        // from 1 to 3 GPUs at 256 Gbit/s) show per-layer lockstep makes
+        // the sharded sweep ~(n+1)/2 x SLOWER than single-GPU despite
+        // fewer bytes per GPU (pairs share PCIe switches + per-layer
+        // barriers).
+        let sync_factor = (self.n_gpus as f64 + 1.0) / 2.0;
+        self.total_bytes as f64 * 8.0 / self.pcie_bps * sync_factor
+    }
+
+    /// Upper-bound single-batch decode steps/s (paper: 0.18 for 1xA100
+    /// at 256 Gbit/s).
+    pub fn decode_steps_per_s(&self) -> f64 {
+        1.0 / self.sweep_s()
+    }
+
+    /// Upper-bound parallel forward tokens/s for `batch` sequences of
+    /// `seq_len` tokens: compute can hide transfer with double
+    /// buffering, so sweep = max(transfer, compute).
+    pub fn forward_tokens_per_s(&self, batch: usize, seq_len: usize) -> f64 {
+        let tokens = (batch * seq_len) as f64;
+        let compute =
+            tokens * self.flops_per_token_block * self.n_blocks as f64
+                / (self.flops_eff * self.n_gpus as f64);
+        let sweep = self.sweep_s().max(compute);
+        tokens / sweep
+    }
+}
+
+/// Real offloading execution at BLOOM-mini scale: stream block weights
+/// "over PCIe" (throttled memcpy) before executing each block, exactly
+/// the ZeRO-Offload dataflow. Used to validate the analytic model's
+/// *shape* against real execution in the bench.
+pub struct OffloadExecutor {
+    runtime: Arc<Runtime>,
+    weights: Weights,
+    geometry: crate::model::manifest::Geometry,
+    /// Simulated PCIe bandwidth in bytes/s for the weight stream
+    /// (None = unthrottled: pure execution cost).
+    pub pcie_bytes_per_s: Option<f64>,
+}
+
+impl OffloadExecutor {
+    pub fn new(home: &ModelHome, runtime: Arc<Runtime>, precision: Precision) -> Result<Self> {
+        Ok(OffloadExecutor {
+            runtime,
+            weights: Weights::load(home, precision)?,
+            geometry: home.geometry().clone(),
+            pcie_bytes_per_s: None,
+        })
+    }
+
+    /// One full forward pass, streaming weights block by block (every
+    /// block's literals are re-created per sweep — that's the point of
+    /// offloading: nothing stays resident).
+    pub fn forward_sweep(&self, h: &Tensor) -> Result<(Tensor, std::time::Duration)> {
+        let t0 = std::time::Instant::now();
+        let (b, w) = (h.shape[0], h.shape[1]);
+        let ex = self.runtime.entry(&format!("block_prefill_b{b}_s{w}"))?;
+        let mut h_lit = h.to_literal()?;
+        for block in &self.weights.blocks {
+            // "PCIe transfer": weights move into the accelerator afresh
+            let mut moved = 0usize;
+            let lits = block
+                .flat
+                .iter()
+                .map(|t| {
+                    moved += t.byte_len();
+                    t.to_literal()
+                })
+                .collect::<Result<Vec<_>>>()?;
+            if let Some(bw) = self.pcie_bytes_per_s {
+                let delay = moved as f64 / bw;
+                std::thread::sleep(std::time::Duration::from_secs_f64(delay));
+            }
+            let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + lits.len());
+            args.push(&h_lit);
+            args.extend(lits.iter());
+            let mut out = ex.call_literals(&args)?;
+            h_lit = out.remove(0);
+        }
+        let out = ex.output_tensor(&h_lit, 0)?;
+        Ok((out, t0.elapsed()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_upper_bounds_reproduced() {
+        // 176 GB int8 over 256 Gbit/s = 5.3..5.7 s -> ~0.18 steps/s
+        let m = OffloadModel::bloom176b_int8(256.0, 1);
+        assert!((m.sweep_s() - 5.5).abs() < 0.5, "{}", m.sweep_s());
+        assert!((m.decode_steps_per_s() - 0.18).abs() < 0.02);
+        // 128 Gbit/s halves it
+        let m2 = OffloadModel::bloom176b_int8(128.0, 1);
+        assert!((m2.decode_steps_per_s() - 0.09).abs() < 0.01);
+        // 3 GPUs: paper reports 0.09 / 0.05 — slower despite more HW
+        let m3 = OffloadModel::bloom176b_int8(256.0, 3);
+        assert!(m3.decode_steps_per_s() < m.decode_steps_per_s());
+    }
+
+    #[test]
+    fn forward_becomes_compute_bound_at_large_batch() {
+        let m = OffloadModel::bloom176b_int8(256.0, 1);
+        let t1 = m.forward_tokens_per_s(1, 128);
+        let t64 = m.forward_tokens_per_s(64, 128);
+        // small batch: transfer-bound, grows ~linearly with batch
+        assert!(t64 > 5.0 * t1);
+        // large batch approaches the compute roofline
+        let roofline = m.flops_eff / (m.flops_per_token_block * m.n_blocks as f64);
+        assert!(t64 <= roofline * 1.01);
+    }
+
+    #[test]
+    fn offload_vs_petals_shape_single_batch() {
+        // THE headline: Petals ~order of magnitude faster than offloading
+        // for single-batch inference
+        use crate::config::profiles::{NetworkProfile, SwarmPreset};
+        let mut sim = crate::sim::SwarmSim::build(
+            SwarmPreset::ThreeA100.build(NetworkProfile::GBIT_5MS, true),
+            0,
+        );
+        let petals = sim.run_inference(128, 32, 1).unwrap().steps_per_s;
+        let offload = OffloadModel::bloom176b_int8(256.0, 1).decode_steps_per_s();
+        assert!(
+            petals / offload > 5.0,
+            "petals {petals} should be >=5x offload {offload}"
+        );
+    }
+
+    /// Real mini-scale offloading run: streamed execution matches the
+    /// resident-weight forward numerically.
+    #[test]
+    fn real_offload_sweep_matches_resident() {
+        let home = crate::model::test_home();
+        let rt = Arc::new(
+            Runtime::load_filtered(&home, |n| n == "block_prefill_b1_s128").unwrap(),
+        );
+        let off = OffloadExecutor::new(&home, rt.clone(), Precision::F16).unwrap();
+        let g = home.geometry().clone();
+        let mut vals = vec![0f32; 128 * g.hidden];
+        let mut rng = crate::config::Rng::new(1);
+        for v in vals.iter_mut() {
+            *v = (rng.f64() as f32 - 0.5) * 0.5;
+        }
+        let h = Tensor::from_f32(&[1, 128, g.hidden], &vals);
+        let (out, _dt) = off.forward_sweep(&h).unwrap();
+
+        // resident execution for comparison
+        let node = crate::server::ServerNode::start(
+            "resident",
+            &home,
+            rt,
+            0..g.n_layers,
+            Precision::F16,
+            false,
+        )
+        .unwrap();
+        let want = node.forward(&h).unwrap();
+        assert!(out.max_abs_diff(&want) < 1e-4);
+    }
+}

@@ -1,0 +1,215 @@
+//! One compiled entry point + typed execute helpers.
+//!
+//! Hot-path design: the `xla` crate's `execute` uploads input literals and
+//! returns the program's (single, tuple) output buffer; the C wrapper
+//! compiles with `untuple_result=false`, so outputs come back as one tuple
+//! literal that we decompose on host. Two consequences the coordinator
+//! exploits (see EXPERIMENTS.md §Perf):
+//!
+//! 1. **Weights are converted to literals once** at server start
+//!    ([`Executor::to_literals`]) — re-encoding ~13 MB of block params per
+//!    call would dominate a decode step.
+//! 2. **KV caches round-trip as literals**, never as [`Tensor`]s: a decode
+//!    step feeds the previous step's output literals straight back in
+//!    ([`Executor::call_literals`]), skipping two 4 MB repacks per block.
+
+use crate::error::{Error, Result};
+use crate::model::manifest::EntryMeta;
+use crate::model::tensor::Tensor;
+use std::path::Path;
+use std::sync::Arc;
+
+/// A compiled artifact plus its manifest signature.
+pub struct Executor {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: EntryMeta,
+    pub name: String,
+}
+
+// The underlying PJRT CPU client is thread-safe; the xla crate just
+// doesn't mark its wrappers Send/Sync. Executors are shared behind Arcs
+// and PJRT serializes execution internally.
+unsafe impl Send for Executor {}
+unsafe impl Sync for Executor {}
+
+impl Executor {
+    pub fn compile(
+        client: Arc<xla::PjRtClient>,
+        hlo_path: &Path,
+        meta: &EntryMeta,
+    ) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| Error::Parse("non-utf8 artifact path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Executor {
+            exe,
+            meta: meta.clone(),
+            name: hlo_path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+
+    fn check_args(&self, n: usize) -> Result<()> {
+        if n != self.meta.args.len() {
+            return Err(Error::Shape(format!(
+                "{}: got {} args, artifact expects {}",
+                self.name,
+                n,
+                self.meta.args.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Execute with host tensors in, host tensors out. Entry points are
+    /// lowered with `return_tuple=True`, so output is always a tuple.
+    pub fn call(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.check_args(args.len())?;
+        let lits: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        let outs = self.call_literals(&refs)?;
+        outs.iter()
+            .zip(&self.meta.outputs)
+            .map(|(lit, sig)| Tensor::from_literal(lit, &sig.shape, sig.dtype()))
+            .collect()
+    }
+
+    /// Execute with pre-built literals (cached weights, prior-step caches)
+    /// and return the decomposed output literals, refeedable as-is.
+    pub fn call_literals(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.check_args(args.len())?;
+        let out = self.exe.execute::<&xla::Literal>(args)?;
+        let tuple = out[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.meta.outputs.len() {
+            return Err(Error::Shape(format!(
+                "{}: artifact returned {} outputs, manifest says {}",
+                self.name,
+                parts.len(),
+                self.meta.outputs.len()
+            )));
+        }
+        Ok(parts)
+    }
+
+    /// Convert one output literal to a host tensor using the i-th output
+    /// signature from the manifest.
+    pub fn output_tensor(&self, lit: &xla::Literal, out_idx: usize) -> Result<Tensor> {
+        let sig = &self.meta.outputs[out_idx];
+        Tensor::from_literal(lit, &sig.shape, sig.dtype())
+    }
+
+    /// Output count per the manifest.
+    pub fn n_outputs(&self) -> usize {
+        self.meta.outputs.len()
+    }
+
+    /// Pre-convert a parameter set to literals (server start, not hot path).
+    pub fn to_literals(tensors: &[Tensor]) -> Result<Vec<xla::Literal>> {
+        tensors.iter().map(|t| t.to_literal()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{test_home, ModelHome};
+    use crate::model::tensor::DType;
+    use crate::runtime::Runtime;
+
+    fn golden_io(home: &ModelHome, entry: &str) -> (Vec<Tensor>, Vec<Tensor>) {
+        let meta = &home.manifest.entries[entry];
+        let golden = meta.golden.as_ref().expect("entry has no golden vectors");
+        let ins = golden
+            .inputs
+            .iter()
+            .map(|m| home.load_tensor(m).unwrap())
+            .collect();
+        let outs = golden
+            .outputs
+            .iter()
+            .map(|m| home.load_tensor(m).unwrap())
+            .collect();
+        (ins, outs)
+    }
+
+    /// The core L3<-L2 numerics check: every goldened entry point must
+    /// reproduce the jax outputs within f32 tolerance.
+    #[test]
+    fn golden_numerics_all_entries() {
+        let home = test_home();
+        let names: Vec<String> = home
+            .manifest
+            .entries
+            .iter()
+            .filter(|(_, e)| e.golden.is_some())
+            .map(|(n, _)| n.clone())
+            .collect();
+        assert!(!names.is_empty());
+        let rt = Runtime::load_filtered(&home, |n| names.iter().any(|x| x == n)).unwrap();
+        for name in &names {
+            let (ins, want) = golden_io(&home, name);
+            let refs: Vec<&Tensor> = ins.iter().collect();
+            let got = rt.entry(name).unwrap().call(&refs).unwrap();
+            assert_eq!(got.len(), want.len(), "{name}: output arity");
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                match g.dtype {
+                    DType::F32 => {
+                        let diff = g.max_abs_diff(w);
+                        let scale = w
+                            .as_f32()
+                            .iter()
+                            .fold(0.0f32, |a, &b| a.max(b.abs()))
+                            .max(1e-6);
+                        assert!(
+                            diff / scale < 2e-4,
+                            "{name} out{i}: rel diff {}",
+                            diff / scale
+                        );
+                    }
+                    DType::I8 => assert_eq!(g.as_i8(), w.as_i8(), "{name} out{i}"),
+                    DType::I32 => assert_eq!(g.as_i32(), w.as_i32(), "{name} out{i}"),
+                }
+            }
+        }
+    }
+
+    /// The literal path (cached weights + refed caches) must agree with
+    /// the tensor path, and decode literals must be refeedable.
+    #[test]
+    fn literal_path_matches_and_refeeds() {
+        let home = test_home();
+        let rt = Runtime::load_filtered(&home, |n| n == "block_decode_b1_c256").unwrap();
+        let ex = rt.entry("block_decode_b1_c256").unwrap();
+        let (ins, _) = golden_io(&home, "block_decode_b1_c256");
+        let refs: Vec<&Tensor> = ins.iter().collect();
+        let host_out = ex.call(&refs).unwrap();
+
+        let lits = Executor::to_literals(&ins).unwrap();
+        let lrefs: Vec<&xla::Literal> = lits.iter().collect();
+        let out1 = ex.call_literals(&lrefs).unwrap();
+        let h1 = ex.output_tensor(&out1[0], 0).unwrap();
+        assert!(host_out[0].max_abs_diff(&h1) < 1e-6);
+
+        // refeed: step again with the updated caches and len+1
+        let len_val = ins[3].as_i32()[0] + 1;
+        let len2 = Tensor::from_i32(&[1], &[len_val]).to_literal().unwrap();
+        let args2: Vec<&xla::Literal> = std::iter::once(&lits[0])
+            .chain([&out1[1], &out1[2], &len2].into_iter())
+            .chain(lits[4..].iter())
+            .collect();
+        let out2 = ex.call_literals(&args2).unwrap();
+        let h2 = ex.output_tensor(&out2[0], 0).unwrap();
+        // different cache state must give different output
+        assert!(h2.max_abs_diff(&h1) > 0.0);
+    }
+}

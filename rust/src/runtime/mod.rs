@@ -1,0 +1,92 @@
+//! PJRT runtime: loads the AOT artifacts and executes them on the hot path.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format — the crate's xla_extension 0.5.1
+//! rejects jax≥0.5 serialized protos (64-bit instruction ids); the text
+//! parser reassigns ids.
+//!
+//! Performance notes (see EXPERIMENTS.md §Perf):
+//! - Executables are compiled once at [`Runtime::load`] and cached.
+//! - Weights are pre-converted to literals; KV caches are refed between
+//!   decode steps as literals (see `executor.rs` module docs).
+
+mod executor;
+
+pub use executor::Executor;
+
+use crate::error::{Error, Result};
+use crate::model::ModelHome;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Compiled-artifact registry over one PJRT client.
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+    executors: HashMap<String, Arc<Executor>>,
+}
+
+// The PJRT CPU client is internally thread-safe; the `xla` crate wrapper
+// just uses Rc. Runtime is shared behind Arc across server threads.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Compile every entry in the manifest. ~1-2 s per entry on CPU;
+    /// called once at server start (never on the request path).
+    pub fn load(home: &ModelHome) -> Result<Self> {
+        Self::load_filtered(home, |_| true)
+    }
+
+    /// Compile only entries accepted by `keep` (servers don't need every
+    /// batch-size variant; benches load exactly what they measure).
+    pub fn load_filtered(home: &ModelHome, keep: impl Fn(&str) -> bool) -> Result<Self> {
+        let client = Arc::new(xla::PjRtClient::cpu()?);
+        let mut executors = HashMap::new();
+        for (name, entry) in &home.manifest.entries {
+            if !keep(name) {
+                continue;
+            }
+            let path = home.path(&entry.file);
+            let exec = Executor::compile(client.clone(), &path, entry)?;
+            executors.insert(name.clone(), Arc::new(exec));
+        }
+        Ok(Runtime { client, executors })
+    }
+
+    pub fn client(&self) -> &Arc<xla::PjRtClient> {
+        &self.client
+    }
+
+    /// Look up a compiled entry point.
+    pub fn entry(&self, name: &str) -> Result<Arc<Executor>> {
+        self.executors
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::NotFound(format!("entry point {name} (loaded: {:?})",
+                self.executors.keys().collect::<Vec<_>>())))
+    }
+
+    pub fn has_entry(&self, name: &str) -> bool {
+        self.executors.contains_key(name)
+    }
+
+    pub fn entry_names(&self) -> impl Iterator<Item = &String> {
+        self.executors.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::test_home;
+
+    #[test]
+    fn load_subset_and_list() {
+        let home = test_home();
+        let rt = Runtime::load_filtered(&home, |n| n == "lm_head_b1").unwrap();
+        assert!(rt.has_entry("lm_head_b1"));
+        assert!(!rt.has_entry("embed_b1_s1"));
+        assert!(rt.entry("embed_b1_s1").is_err());
+    }
+}

@@ -1,0 +1,322 @@
+//! In-process cluster: a [`ChainClient`] over [`ServerNode`]s living in
+//! the same process. Used by the quickstart example and the
+//! failure-injection tests; the TCP swarm ([`super::service`]) shares
+//! every code path except the socket.
+
+use crate::coordinator::routing::ServerView;
+use crate::coordinator::session::ChainClient;
+use crate::dht::NodeId;
+use crate::error::{Error, Result};
+use crate::model::tensor::Tensor;
+use crate::server::ServerNode;
+use std::sync::{Arc, Mutex, RwLock};
+
+/// A set of in-process servers with kill/revive switches (failure
+/// injection) and per-server simulated link stats for routing.
+pub struct LocalCluster {
+    servers: RwLock<Vec<LocalMember>>,
+    /// session counter for unique ids
+    next_session: Mutex<u64>,
+}
+
+struct LocalMember {
+    node: Arc<ServerNode>,
+    alive: bool,
+    latency_s: f64,
+    bandwidth_bps: f64,
+}
+
+impl LocalCluster {
+    pub fn new() -> Self {
+        LocalCluster { servers: RwLock::new(Vec::new()), next_session: Mutex::new(1) }
+    }
+
+    pub fn add(&self, node: Arc<ServerNode>) {
+        self.add_with_link(node, 0.0005, 10e9);
+    }
+
+    pub fn add_with_link(&self, node: Arc<ServerNode>, latency_s: f64, bandwidth_bps: f64) {
+        self.servers.write().unwrap().push(LocalMember {
+            node,
+            alive: true,
+            latency_s,
+            bandwidth_bps,
+        });
+    }
+
+    pub fn kill(&self, id: NodeId) {
+        for m in self.servers.write().unwrap().iter_mut() {
+            if m.node.id == id {
+                m.alive = false;
+            }
+        }
+    }
+
+    pub fn revive(&self, id: NodeId) {
+        for m in self.servers.write().unwrap().iter_mut() {
+            if m.node.id == id {
+                m.alive = true;
+            }
+        }
+    }
+
+    pub fn fresh_session_id(&self) -> u64 {
+        let mut s = self.next_session.lock().unwrap();
+        *s += 1;
+        *s
+    }
+
+    fn with_node<T>(
+        &self,
+        id: NodeId,
+        f: impl FnOnce(&Arc<ServerNode>) -> Result<T>,
+    ) -> Result<T> {
+        let servers = self.servers.read().unwrap();
+        let m = servers
+            .iter()
+            .find(|m| m.node.id == id)
+            .ok_or_else(|| Error::NotFound(format!("server {}", id.short())))?;
+        if !m.alive {
+            return Err(Error::ChainBroken(format!("server {} is down", id.short())));
+        }
+        f(&m.node)
+    }
+
+    /// Direct access for tests/examples.
+    pub fn node(&self, id: NodeId) -> Option<Arc<ServerNode>> {
+        self.servers
+            .read()
+            .unwrap()
+            .iter()
+            .find(|m| m.node.id == id)
+            .map(|m| m.node.clone())
+    }
+
+    pub fn ids(&self) -> Vec<NodeId> {
+        self.servers.read().unwrap().iter().map(|m| m.node.id).collect()
+    }
+}
+
+impl Default for LocalCluster {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ChainClient for LocalCluster {
+    fn discover(&self) -> Vec<ServerView> {
+        let servers = self.servers.read().unwrap();
+        servers
+            .iter()
+            .filter(|m| m.alive)
+            .map(|m| {
+                let measured = m.node.measured_throughput();
+                // before any traffic: estimate compute time from span
+                // length (every block costs roughly the same on CPU)
+                let span_compute_s = if measured > 0.0 {
+                    1.0 / measured
+                } else {
+                    0.01 * m.node.span_len() as f64
+                };
+                ServerView {
+                    id: m.node.id,
+                    start: m.node.start,
+                    end: m.node.end,
+                    latency_s: m.latency_s,
+                    bandwidth_bps: m.bandwidth_bps,
+                    span_compute_s,
+                    queue_depth: m.node.queue_depth(),
+                }
+            })
+            .collect()
+    }
+
+    fn open_session(
+        &self,
+        server: NodeId,
+        session: u64,
+        batch: usize,
+        _prefix_len: usize,
+        _max_new: usize,
+    ) -> Result<()> {
+        self.with_node(server, |n| n.open_session(session, batch))
+    }
+
+    fn prefill(&self, server: NodeId, session: u64, hidden: &Tensor) -> Result<Tensor> {
+        self.with_node(server, |n| n.prefill(session, hidden))
+    }
+
+    fn step(&self, server: NodeId, session: u64, cache_len: usize, hidden: &Tensor) -> Result<Tensor> {
+        self.with_node(server, |n| n.step(session, cache_len, hidden))
+    }
+
+    fn close_session(&self, server: NodeId, session: u64) {
+        let _ = self.with_node(server, |n| {
+            n.close_session(session);
+            Ok(())
+        });
+    }
+
+    fn forward(&self, server: NodeId, hidden: &Tensor) -> Result<Tensor> {
+        self.with_node(server, |n| n.forward(hidden))
+    }
+
+    fn backward(&self, server: NodeId, hidden: &Tensor, grad: &Tensor) -> Result<Tensor> {
+        self.with_node(server, |n| n.backward(hidden, grad))
+    }
+}
+
+/// Build a local swarm covering all blocks with `n_servers` equal spans.
+pub fn spawn_even_swarm(
+    home: &crate::model::ModelHome,
+    runtime: Arc<crate::runtime::Runtime>,
+    n_servers: usize,
+    precision: crate::model::Precision,
+) -> Result<LocalCluster> {
+    let n_blocks = home.geometry().n_layers;
+    let cluster = LocalCluster::new();
+    let per = n_blocks.div_ceil(n_servers);
+    for i in 0..n_servers {
+        let start = i * per;
+        let end = ((i + 1) * per).min(n_blocks);
+        if start >= end {
+            break;
+        }
+        let node = ServerNode::start(
+            &format!("server-{i}"),
+            home,
+            runtime.clone(),
+            start..end,
+            precision,
+            false,
+        )?;
+        cluster.add(node);
+    }
+    Ok(cluster)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::client::{LocalHead, Sampler, SwarmGenerator};
+    use crate::coordinator::routing::RouteQuery;
+    use crate::coordinator::session::SessionConfig;
+    use crate::model::{test_home, Precision, Weights};
+    use crate::runtime::Runtime;
+
+    fn setup() -> (crate::model::ModelHome, Arc<Runtime>) {
+        let home = test_home();
+        let rt = Arc::new(
+            Runtime::load_filtered(&home, |n| n.contains("_b1_") || n.ends_with("_b1")).unwrap(),
+        );
+        (home, rt)
+    }
+
+    fn session_cfg(n_blocks: usize, hidden: usize) -> SessionConfig {
+        SessionConfig {
+            n_blocks,
+            batch: 1,
+            prefill_width: 128,
+            prefix_len: 8,
+            max_new: 8,
+            route: RouteQuery {
+                n_blocks,
+                msg_bytes: (hidden * 4) as u64,
+                beam_width: 8,
+                queue_penalty_s: 0.05,
+            },
+            max_recoveries: 3,
+        }
+    }
+
+    /// Whole-system check: generation over a 2-server local swarm equals
+    /// the jax golden token sequence.
+    #[test]
+    fn swarm_generation_matches_golden() {
+        let (home, rt) = setup();
+        let g = home.geometry().clone();
+        let cluster = spawn_even_swarm(&home, rt.clone(), 2, Precision::F16).unwrap();
+        let weights = Weights::load(&home, Precision::F16).unwrap();
+        let head = LocalHead::new(&home, rt, &weights).unwrap();
+
+        let gg = &home.manifest.golden_generate;
+        let prefix_t = home.load_tensor(&gg.prefix).unwrap();
+        let want = home.load_tensor(&gg.tokens).unwrap();
+        let prefix: Vec<Vec<i32>> = vec![prefix_t.as_i32().to_vec()];
+
+        let gen = SwarmGenerator {
+            swarm: &cluster,
+            head: &head,
+            cfg: session_cfg(g.n_layers, g.hidden),
+            sampler: Sampler::Greedy,
+        };
+        let out = gen.generate(&prefix, want.elements(), 42).unwrap();
+        assert_eq!(out.tokens[0], want.as_i32().to_vec());
+        assert_eq!(out.recoveries, 0);
+    }
+
+    /// Kill a server mid-generation; the session must recover and still
+    /// produce the golden tokens (KV replay correctness end-to-end).
+    #[test]
+    fn failover_mid_generation_keeps_tokens_identical() {
+        let (home, rt) = setup();
+        let g = home.geometry().clone();
+        let cluster = spawn_even_swarm(&home, rt.clone(), 2, Precision::F16).unwrap();
+        // add a standby replica for the second half
+        let half = g.n_layers / 2;
+        let standby = crate::server::ServerNode::start(
+            "standby",
+            &home,
+            rt.clone(),
+            half..g.n_layers,
+            Precision::F16,
+            false,
+        )
+        .unwrap();
+        cluster.add(standby);
+
+        let weights = Weights::load(&home, Precision::F16).unwrap();
+        let head = LocalHead::new(&home, rt, &weights).unwrap();
+        let gg = &home.manifest.golden_generate;
+        let prefix_t = home.load_tensor(&gg.prefix).unwrap();
+        let want = home.load_tensor(&gg.tokens).unwrap();
+        let n_new = want.elements();
+
+        // generate the first half of tokens, then kill server-1
+        let cfg = session_cfg(g.n_layers, g.hidden);
+        let mut session =
+            crate::coordinator::session::InferenceSession::open(&cluster, cfg.clone(), 77).unwrap();
+        let p = prefix_t.elements();
+        let mut ids = vec![0i32; cfg.prefill_width];
+        ids[..p].copy_from_slice(prefix_t.as_i32());
+        let h0 = head.embed(&Tensor::from_i32(&[1, cfg.prefill_width], &ids)).unwrap();
+        let h_pre = session.prefill(h0).unwrap();
+        let hidden = g.hidden;
+        let mut last = {
+            let src = h_pre.as_f32();
+            Tensor::from_f32(&[1, hidden], &src[(p - 1) * hidden..p * hidden])
+        };
+        let mut got = Vec::new();
+        for step in 0..n_new {
+            if step == n_new / 2 {
+                // kill whichever server currently serves the 2nd half
+                let victim = session
+                    .chain()
+                    .iter()
+                    .find(|h| h.start == half)
+                    .unwrap()
+                    .server;
+                cluster.kill(victim);
+            }
+            let logits = head.lm_head(&last).unwrap();
+            let next = Sampler::Greedy.sample(&logits);
+            got.push(next[0]);
+            let h = head.embed(&Tensor::from_i32(&[1, 1], &next)).unwrap();
+            let h_out = session.step(h).unwrap();
+            last = Tensor::from_f32(&[1, hidden], h_out.as_f32());
+        }
+        assert_eq!(got, want.as_i32().to_vec(), "tokens diverged after failover");
+        assert_eq!(session.recoveries(), 1);
+        session.close();
+    }
+}

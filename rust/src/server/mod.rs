@@ -1,0 +1,508 @@
+//! A Petals server (§2.1): hosts a contiguous span of Transformer
+//! blocks, keeps per-session attention caches, and serves inference
+//! steps, parallel forwards, and backward passes — all compute through
+//! the AOT artifacts via PJRT.
+//!
+//! Submodules: [`local`] (in-process cluster implementing
+//! [`crate::coordinator::ChainClient`] — tests, quickstart) and
+//! [`service`] (framed-TCP server + client — the real swarm used by the
+//! examples).
+
+pub mod local;
+pub mod service;
+
+use crate::coordinator::throughput::MeasuredThroughput;
+use crate::dht::NodeId;
+use crate::error::{Error, Result};
+use crate::metrics::NodeMetrics;
+use crate::model::manifest::Geometry;
+use crate::model::tensor::Tensor;
+use crate::model::weights::{BlockWeights, Precision};
+use crate::model::ModelHome;
+use crate::net::{Message, TensorPayload};
+use crate::runtime::Runtime;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Literal wrapper: PJRT CPU literals are plain host buffers; the xla
+/// crate just doesn't mark them Send.
+struct SendLit(xla::Literal);
+unsafe impl Send for SendLit {}
+unsafe impl Sync for SendLit {}
+
+/// Per-session state on one server: KV cache literals per hosted block.
+struct SessionState {
+    batch: usize,
+    caches: Vec<Option<(SendLit, SendLit)>>, // per block in span
+}
+
+/// One Petals server node.
+pub struct ServerNode {
+    pub id: NodeId,
+    pub start: usize,
+    pub end: usize,
+    pub precision: Precision,
+    geometry: Geometry,
+    runtime: Arc<Runtime>,
+    /// Per hosted block: flat parameter literals (pre-converted once —
+    /// the decisive hot-path optimization, §Perf).
+    block_lits: Vec<Vec<SendLit>>,
+    sessions: Mutex<HashMap<u64, SessionState>>,
+    pub metrics: NodeMetrics,
+    throughput: Mutex<MeasuredThroughput>,
+    active: AtomicU32,
+    /// Whether replies compress hidden states (§3.1).
+    pub compress: bool,
+}
+
+impl ServerNode {
+    /// Load a span of blocks at a precision and pin weights as literals.
+    pub fn start(
+        name: &str,
+        home: &ModelHome,
+        runtime: Arc<Runtime>,
+        span: std::ops::Range<usize>,
+        precision: Precision,
+        compress: bool,
+    ) -> Result<Arc<Self>> {
+        let blocks = crate::model::Weights::load_span(home, precision, span.clone())?;
+        let block_lits = blocks
+            .iter()
+            .map(|b: &BlockWeights| {
+                b.flat
+                    .iter()
+                    .map(|t| t.to_literal().map(SendLit))
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Arc::new(ServerNode {
+            id: NodeId::from_name(name),
+            start: span.start,
+            end: span.end,
+            precision,
+            geometry: home.geometry().clone(),
+            runtime,
+            block_lits,
+            sessions: Mutex::new(HashMap::new()),
+            metrics: NodeMetrics::new(),
+            throughput: Mutex::new(MeasuredThroughput::new()),
+            active: AtomicU32::new(0),
+        compress,
+        }))
+    }
+
+    pub fn span_len(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// Current measured throughput (requests/s), 0 before first request.
+    pub fn measured_throughput(&self) -> f64 {
+        self.throughput.lock().unwrap().rate()
+    }
+
+    pub fn queue_depth(&self) -> u32 {
+        self.active.load(Ordering::Relaxed)
+    }
+
+    fn entry_name(&self, kind: &str, batch: usize, width: usize) -> String {
+        let tag = match self.precision {
+            Precision::F16 => "",
+            Precision::Int8 => "_int8",
+        };
+        match kind {
+            "prefill" => format!("block_prefill{tag}_b{batch}_s{width}"),
+            "decode" => format!("block_decode{tag}_b{batch}_c{}", self.geometry.max_seq),
+            "bwd" => format!("block_bwd_b{batch}_s{width}"),
+            _ => unreachable!(),
+        }
+    }
+
+    // --- request handlers ---------------------------------------------------
+
+    pub fn open_session(&self, session: u64, batch: usize) -> Result<()> {
+        let n = self.span_len();
+        let mut sessions = self.sessions.lock().unwrap();
+        sessions.insert(session, SessionState { batch, caches: (0..n).map(|_| None).collect() });
+        Ok(())
+    }
+
+    pub fn close_session(&self, session: u64) {
+        self.sessions.lock().unwrap().remove(&session);
+    }
+
+    /// Prefill: h [B,W,H] through all hosted blocks; fills KV caches
+    /// (padded to cache capacity) and returns the span's output.
+    pub fn prefill(&self, session: u64, h: &Tensor) -> Result<Tensor> {
+        let t0 = std::time::Instant::now();
+        self.active.fetch_add(1, Ordering::Relaxed);
+        let result = self.prefill_inner(session, h);
+        self.active.fetch_sub(1, Ordering::Relaxed);
+        self.observe(t0);
+        result
+    }
+
+    fn prefill_inner(&self, session: u64, h: &Tensor) -> Result<Tensor> {
+        let (b, w) = (h.shape[0], h.shape[1]);
+        let name = self.entry_name("prefill", b, w);
+        let ex = self.runtime.entry(&name)?;
+        let g = &self.geometry;
+        let cap = g.max_seq;
+        let mut h_lit = h.to_literal()?;
+        let mut new_caches: Vec<(SendLit, SendLit)> = Vec::with_capacity(self.span_len());
+        for lits in &self.block_lits {
+            let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + lits.len());
+            args.push(&h_lit);
+            args.extend(lits.iter().map(|l| &l.0));
+            let mut out = ex.call_literals(&args)?;
+            // out = (h_out, k [B,Hh,W,D], v [B,Hh,W,D])
+            let k = ex.output_tensor(&out[1], 1)?;
+            let v = ex.output_tensor(&out[2], 2)?;
+            let k_pad = pad_cache(&k, cap)?.to_literal()?;
+            let v_pad = pad_cache(&v, cap)?.to_literal()?;
+            new_caches.push((SendLit(k_pad), SendLit(v_pad)));
+            h_lit = out.remove(0);
+        }
+        let mut sessions = self.sessions.lock().unwrap();
+        let st = sessions
+            .get_mut(&session)
+            .ok_or_else(|| Error::NotFound(format!("session {session}")))?;
+        if st.batch != b {
+            return Err(Error::Shape(format!("session batch {} != prefill batch {b}", st.batch)));
+        }
+        for (slot, kv) in st.caches.iter_mut().zip(new_caches) {
+            *slot = Some(kv);
+        }
+        ex.output_tensor(&h_lit, 0)
+    }
+
+    /// One decode step: h [B,1,H] -> h [B,1,H], caches advance in place.
+    pub fn step(&self, session: u64, cache_len: usize, h: &Tensor) -> Result<Tensor> {
+        let t0 = std::time::Instant::now();
+        self.active.fetch_add(1, Ordering::Relaxed);
+        let result = self.step_inner(session, cache_len, h);
+        self.active.fetch_sub(1, Ordering::Relaxed);
+        self.observe(t0);
+        result
+    }
+
+    fn step_inner(&self, session: u64, cache_len: usize, h: &Tensor) -> Result<Tensor> {
+        let b = h.shape[0];
+        let name = self.entry_name("decode", b, 0);
+        let ex = self.runtime.entry(&name)?;
+        if cache_len + 1 > self.geometry.max_seq {
+            return Err(Error::Shape(format!(
+                "cache overflow: {} + 1 > {}",
+                cache_len, self.geometry.max_seq
+            )));
+        }
+        let len_lit = Tensor::from_i32(&[1], &[cache_len as i32]).to_literal()?;
+        let mut h_lit = h.to_literal()?;
+        let mut sessions = self.sessions.lock().unwrap();
+        let st = sessions
+            .get_mut(&session)
+            .ok_or_else(|| Error::NotFound(format!("session {session}")))?;
+        for (bi, lits) in self.block_lits.iter().enumerate() {
+            let (k, v) = st.caches[bi]
+                .take()
+                .ok_or_else(|| Error::Protocol(format!("step before prefill (block {bi})")))?;
+            let mut args: Vec<&xla::Literal> = Vec::with_capacity(4 + lits.len());
+            args.push(&h_lit);
+            args.push(&k.0);
+            args.push(&v.0);
+            args.push(&len_lit);
+            args.extend(lits.iter().map(|l| &l.0));
+            let mut out = ex.call_literals(&args)?;
+            // out = (h_out, k', v') — refeed caches as literals (§Perf)
+            let v_new = out.pop().unwrap();
+            let k_new = out.pop().unwrap();
+            st.caches[bi] = Some((SendLit(k_new), SendLit(v_new)));
+            h_lit = out.pop().unwrap();
+        }
+        ex.output_tensor(&h_lit, 0)
+    }
+
+    /// Stateless forward over the span: h [B,S,H] -> h' (no cache writes).
+    pub fn forward(&self, h: &Tensor) -> Result<Tensor> {
+        let t0 = std::time::Instant::now();
+        self.active.fetch_add(1, Ordering::Relaxed);
+        let r = self.forward_inner(h);
+        self.active.fetch_sub(1, Ordering::Relaxed);
+        self.observe(t0);
+        r
+    }
+
+    fn forward_inner(&self, h: &Tensor) -> Result<Tensor> {
+        let (b, w) = (h.shape[0], h.shape[1]);
+        let ex = self.runtime.entry(&self.entry_name("prefill", b, w))?;
+        let mut h_lit = h.to_literal()?;
+        for lits in &self.block_lits {
+            let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + lits.len());
+            args.push(&h_lit);
+            args.extend(lits.iter().map(|l| &l.0));
+            let mut out = ex.call_literals(&args)?;
+            h_lit = out.remove(0);
+        }
+        ex.output_tensor(&h_lit, 0)
+    }
+
+    /// Backward over the span (§2.2): given the span's *input* h and the
+    /// gradient wrt its output, recompute intermediate activations and
+    /// chain `block_bwd` in reverse. Server parameters stay frozen.
+    pub fn backward(&self, h_in: &Tensor, g_out: &Tensor) -> Result<Tensor> {
+        let t0 = std::time::Instant::now();
+        self.active.fetch_add(1, Ordering::Relaxed);
+        let r = self.backward_inner(h_in, g_out);
+        self.active.fetch_sub(1, Ordering::Relaxed);
+        self.observe(t0);
+        r
+    }
+
+    fn backward_inner(&self, h_in: &Tensor, g_out: &Tensor) -> Result<Tensor> {
+        let (b, w) = (h_in.shape[0], h_in.shape[1]);
+        if self.precision != Precision::F16 {
+            return Err(Error::Protocol(
+                "backward requires an f16-precision server (int8 grads unsupported)".into(),
+            ));
+        }
+        let fwd = self.runtime.entry(&self.entry_name("prefill", b, w))?;
+        let bwd = self.runtime.entry(&self.entry_name("bwd", b, w))?;
+        // forward pass storing each block's input activation
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.span_len());
+        let mut h_lit = h_in.to_literal()?;
+        for lits in &self.block_lits {
+            let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + lits.len());
+            args.push(&h_lit);
+            args.extend(lits.iter().map(|l| &l.0));
+            let mut out = fwd.call_literals(&args)?;
+            let next = out.remove(0);
+            inputs.push(h_lit);
+            h_lit = next;
+        }
+        // reverse sweep
+        let mut g_lit = g_out.to_literal()?;
+        for (bi, lits) in self.block_lits.iter().enumerate().rev() {
+            let mut args: Vec<&xla::Literal> = Vec::with_capacity(2 + lits.len());
+            args.push(&inputs[bi]);
+            args.push(&g_lit);
+            args.extend(lits.iter().map(|l| &l.0));
+            let mut out = bwd.call_literals(&args)?;
+            g_lit = out.remove(0);
+        }
+        bwd.output_tensor(&g_lit, 0)
+    }
+
+    fn observe(&self, t0: std::time::Instant) {
+        let dt = t0.elapsed();
+        self.metrics.requests.inc();
+        self.metrics.step_latency.record(dt);
+        self.throughput.lock().unwrap().observe(dt.as_secs_f64());
+    }
+
+    /// Protocol-level dispatch (shared by the TCP service and tests).
+    pub fn handle(&self, msg: &Message) -> Message {
+        let reply = |r: Result<Tensor>, compress: bool| match r {
+            Ok(t) => Message::HiddenResult { hidden: TensorPayload::encode_policy(&t, compress) },
+            Err(e) => Message::Error { message: e.to_string() },
+        };
+        match msg {
+            Message::Ping => Message::Pong {
+                start: self.start as u32,
+                end: self.end as u32,
+                throughput: self.measured_throughput() as f32,
+                queue_depth: self.queue_depth(),
+            },
+            Message::OpenSession { session, batch, .. } => {
+                match self.open_session(*session, *batch as usize) {
+                    Ok(()) => Message::SessionOpened { session: *session },
+                    Err(e) => Message::Error { message: e.to_string() },
+                }
+            }
+            Message::Prefill { session, hidden } => {
+                let Some(t) = hidden.to_tensor() else {
+                    return Message::Error { message: "bad tensor".into() };
+                };
+                reply(self.prefill(*session, &t), self.compress)
+            }
+            Message::InferStep { session, cache_len, hidden } => {
+                let Some(t) = hidden.to_tensor() else {
+                    return Message::Error { message: "bad tensor".into() };
+                };
+                reply(self.step(*session, *cache_len as usize, &t), self.compress)
+            }
+            Message::Forward { hidden } => {
+                let Some(t) = hidden.to_tensor() else {
+                    return Message::Error { message: "bad tensor".into() };
+                };
+                reply(self.forward(&t), self.compress)
+            }
+            Message::Backward { hidden, grad } => {
+                let (Some(h), Some(g)) = (hidden.to_tensor(), grad.to_tensor()) else {
+                    return Message::Error { message: "bad tensor".into() };
+                };
+                reply(self.backward(&h, &g), self.compress)
+            }
+            Message::CloseSession { session } => {
+                self.close_session(*session);
+                Message::SessionOpened { session: *session }
+            }
+            other => Message::Error { message: format!("unexpected message {other:?}") },
+        }
+    }
+}
+
+/// Pad prefill KV [B,Hh,W,D] into cache capacity [B,Hh,C,D] with zeros.
+fn pad_cache(kv: &Tensor, cap: usize) -> Result<Tensor> {
+    let (b, hh, w, d) = (kv.shape[0], kv.shape[1], kv.shape[2], kv.shape[3]);
+    if w > cap {
+        return Err(Error::Shape(format!("prefill width {w} exceeds cache {cap}")));
+    }
+    let mut out = Tensor::zeros(&[b, hh, cap, d], kv.dtype);
+    let src = kv.as_f32();
+    let dst = out.as_f32_mut();
+    for bi in 0..b {
+        for hi in 0..hh {
+            let src_off = ((bi * hh + hi) * w) * d;
+            let dst_off = ((bi * hh + hi) * cap) * d;
+            dst[dst_off..dst_off + w * d].copy_from_slice(&src[src_off..src_off + w * d]);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::test_home;
+
+    fn rt_for(home: &ModelHome, batch: usize) -> Arc<Runtime> {
+        Arc::new(
+            Runtime::load_filtered(home, |n| {
+                n.contains(&format!("_b{batch}_")) || n.ends_with(&format!("_b{batch}"))
+            })
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn pad_cache_layout() {
+        let kv = Tensor::from_f32(&[1, 2, 2, 3], &[1., 2., 3., 4., 5., 6., 7., 8., 9., 10., 11., 12.]);
+        let out = pad_cache(&kv, 4).unwrap();
+        assert_eq!(out.shape, vec![1, 2, 4, 3]);
+        let o = out.as_f32();
+        assert_eq!(&o[0..6], &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(&o[6..12], &[0.; 6]);
+        assert_eq!(&o[12..18], &[7., 8., 9., 10., 11., 12.]);
+        assert!(pad_cache(&kv, 1).is_err());
+    }
+
+    /// Distributed decode must reproduce the single-process golden
+    /// generation: two servers splitting the blocks, real PJRT compute.
+    #[test]
+    fn prefill_and_step_match_manifest_golden() {
+        let home = test_home();
+        let g = home.geometry().clone();
+        let rt = rt_for(&home, 1);
+        let half = g.n_layers / 2;
+        let s1 = ServerNode::start("s1", &home, rt.clone(), 0..half, Precision::F16, false).unwrap();
+        let s2 = ServerNode::start("s2", &home, rt.clone(), half..g.n_layers, Precision::F16, false).unwrap();
+
+        // golden generation fixture from the manifest
+        let gg = &home.manifest.golden_generate;
+        let prefix = home.load_tensor(&gg.prefix).unwrap();
+        let want_tokens = home.load_tensor(&gg.tokens).unwrap();
+        let (b, p) = (prefix.shape[0], prefix.shape[1]);
+
+        let weights = crate::model::Weights::load(&home, Precision::F16).unwrap();
+        let head = crate::coordinator::client::LocalHead::new(&home, rt.clone(), &weights).unwrap();
+
+        // pad ids to the prefill width
+        let w = 128;
+        let mut ids = vec![0i32; b * w];
+        ids[..p].copy_from_slice(prefix.as_i32());
+        let h0 = head.embed(&Tensor::from_i32(&[b, w], &ids)).unwrap();
+
+        s1.open_session(1, b).unwrap();
+        s2.open_session(1, b).unwrap();
+        let h1 = s1.prefill(1, &h0).unwrap();
+        let h2 = s2.prefill(1, &h1).unwrap();
+
+        // greedy decode 8 tokens, checking each against jax's output
+        let hidden = g.hidden;
+        let mut last = {
+            let src = h2.as_f32();
+            let mut v = Vec::with_capacity(b * hidden);
+            for i in 0..b {
+                let off = (i * w + (p - 1)) * hidden;
+                v.extend_from_slice(&src[off..off + hidden]);
+            }
+            Tensor::from_f32(&[b, hidden], &v)
+        };
+        let want = want_tokens.as_i32();
+        for step in 0..want.len() {
+            let logits = head.lm_head(&last).unwrap();
+            let next = crate::coordinator::client::Sampler::Greedy.sample(&logits);
+            assert_eq!(next[0], want[step], "token {step} diverged");
+            let h = head.embed(&Tensor::from_i32(&[b, 1], &next)).unwrap();
+            let cache_len = p + step;
+            let h_mid = s1.step(1, cache_len, &h).unwrap();
+            let h_out = s2.step(1, cache_len, &h_mid).unwrap();
+            last = Tensor::from_f32(&[b, hidden], h_out.as_f32());
+        }
+        assert!(s1.metrics.requests.get() >= 9);
+        assert!(s1.measured_throughput() > 0.0);
+    }
+
+    #[test]
+    fn step_before_prefill_rejected() {
+        let home = test_home();
+        let rt = rt_for(&home, 1);
+        let s = ServerNode::start("x", &home, rt, 0..1, Precision::F16, false).unwrap();
+        s.open_session(5, 1).unwrap();
+        let h = Tensor::zeros(&[1, 1, home.geometry().hidden], crate::model::tensor::DType::F32);
+        assert!(s.step(5, 0, &h).is_err());
+    }
+
+    #[test]
+    fn unknown_session_rejected() {
+        let home = test_home();
+        let rt = rt_for(&home, 1);
+        let s = ServerNode::start("x", &home, rt, 0..1, Precision::F16, false).unwrap();
+        let h = Tensor::zeros(&[1, 128, home.geometry().hidden], crate::model::tensor::DType::F32);
+        assert!(matches!(s.prefill(99, &h), Err(Error::NotFound(_))));
+    }
+
+    #[test]
+    fn cache_overflow_rejected() {
+        let home = test_home();
+        let rt = rt_for(&home, 1);
+        let g = home.geometry().clone();
+        let s = ServerNode::start("x", &home, rt, 0..1, Precision::F16, false).unwrap();
+        s.open_session(1, 1).unwrap();
+        let h = Tensor::zeros(&[1, 1, g.hidden], crate::model::tensor::DType::F32);
+        assert!(s.step(1, g.max_seq, &h).is_err());
+    }
+
+    /// int8 servers produce outputs close to f16 servers (Table 1's
+    /// mechanism at the serving layer).
+    #[test]
+    fn int8_server_close_to_f16() {
+        let home = test_home();
+        let rt = rt_for(&home, 1);
+        let f = ServerNode::start("f", &home, rt.clone(), 0..2, Precision::F16, false).unwrap();
+        let q = ServerNode::start("q", &home, rt.clone(), 0..2, Precision::Int8, false).unwrap();
+        let g = home.geometry().clone();
+        let mut vals = vec![0f32; 128 * g.hidden];
+        let mut rng = crate::config::Rng::new(3);
+        for v in vals.iter_mut() {
+            *v = (rng.f64() as f32 - 0.5) * 2.0;
+        }
+        let h = Tensor::from_f32(&[1, 128, g.hidden], &vals);
+        f.open_session(1, 1).unwrap();
+        q.open_session(1, 1).unwrap();
+        let a = f.prefill(1, &h).unwrap();
+        let b = q.prefill(1, &h).unwrap();
+        let scale = a.as_f32().iter().fold(0f32, |m, v| m.max(v.abs()));
+        assert!(a.max_abs_diff(&b) / scale < 0.05, "rel {}", a.max_abs_diff(&b) / scale);
+    }
+}

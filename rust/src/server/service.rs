@@ -1,0 +1,237 @@
+//! Framed-TCP swarm service: serve a [`ServerNode`] on a socket and a
+//! [`ChainClient`] that talks to such services — the "real" deployment
+//! path used by examples/swarm_serve.rs and the chat backend.
+//!
+//! Threading model: thread-per-connection (the offline crate set has no
+//! async runtime; PJRT calls are blocking anyway, so threads map 1:1 to
+//! in-flight requests and the listener thread stays trivial).
+
+use crate::coordinator::routing::ServerView;
+use crate::coordinator::session::ChainClient;
+use crate::dht::NodeId;
+use crate::error::{Error, Result};
+use crate::model::tensor::Tensor;
+use crate::net::{FramedConn, Message, TensorPayload};
+use crate::server::ServerNode;
+use std::collections::HashMap;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Handle to a running TCP server; dropping does not stop it — call
+/// [`ServerHandle::shutdown`].
+pub struct ServerHandle {
+    pub addr: String,
+    pub node: Arc<ServerNode>,
+    stop: Arc<AtomicBool>,
+}
+
+impl ServerHandle {
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // poke the listener so accept() returns
+        let _ = std::net::TcpStream::connect(&self.addr);
+    }
+}
+
+/// Serve a node on `addr` ("127.0.0.1:0" for an ephemeral port).
+/// Returns once the listener is bound.
+pub fn serve(node: Arc<ServerNode>, addr: &str) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?.to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let node2 = node.clone();
+    std::thread::Builder::new()
+        .name(format!("petals-server-{}", node.id.short()))
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let node3 = node2.clone();
+                let stop3 = stop2.clone();
+                std::thread::spawn(move || {
+                    let Ok(mut framed) = FramedConn::from_stream(stream) else {
+                        return;
+                    };
+                    while !stop3.load(Ordering::SeqCst) {
+                        let msg = match framed.recv() {
+                            Ok(m) => m,
+                            Err(_) => break, // peer hung up
+                        };
+                        let reply = node3.handle(&msg);
+                        if framed.send(&reply).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+        })
+        .map_err(|e| Error::Other(format!("spawn: {e}")))?;
+    Ok(ServerHandle { addr: local, node, stop })
+}
+
+/// Client-side record of one remote server.
+struct Remote {
+    addr: String,
+    conn: Mutex<Option<FramedConn>>,
+    /// Last Pong info + measured RTT.
+    view: Mutex<Option<ServerView>>,
+}
+
+/// [`ChainClient`] over TCP: discovers by pinging a static peer list
+/// (stands in for DHT bootstrap on localhost swarms), keeps one pooled
+/// connection per server, measures real ping RTTs for routing.
+pub struct TcpSwarm {
+    peers: HashMap<NodeId, Remote>,
+    /// Assumed symmetric bandwidth for routing cost (real localhost
+    /// links don't need modelling; wide-area deployments would measure).
+    pub assumed_bandwidth_bps: f64,
+}
+
+impl TcpSwarm {
+    /// `peers`: (name, addr) pairs; names must match the served nodes'.
+    pub fn connect(peers: &[(String, String)]) -> Self {
+        let map = peers
+            .iter()
+            .map(|(name, addr)| {
+                (
+                    NodeId::from_name(name),
+                    Remote {
+                        addr: addr.clone(),
+                        conn: Mutex::new(None),
+                        view: Mutex::new(None),
+                    },
+                )
+            })
+            .collect();
+        TcpSwarm { peers: map, assumed_bandwidth_bps: 10e9 }
+    }
+
+    fn call(&self, server: NodeId, msg: &Message) -> Result<Message> {
+        let remote = self
+            .peers
+            .get(&server)
+            .ok_or_else(|| Error::NotFound(format!("peer {}", server.short())))?;
+        let mut guard = remote.conn.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(
+                FramedConn::connect(&remote.addr)
+                    .map_err(|e| Error::ChainBroken(format!("connect: {e}")))?,
+            );
+        }
+        let result = guard.as_mut().unwrap().call(msg);
+        if result.is_err() {
+            *guard = None; // drop broken connection; next call redials
+        }
+        result
+    }
+
+    fn expect_hidden(msg: Message) -> Result<Tensor> {
+        match msg {
+            Message::HiddenResult { hidden } => hidden
+                .to_tensor()
+                .ok_or_else(|| Error::Protocol("bad tensor".into())),
+            Message::Error { message } => Err(Error::ChainBroken(message)),
+            other => Err(Error::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// Ping every peer, measuring RTT and span info (client routing, §3.2).
+    pub fn refresh(&self) {
+        for (id, remote) in &self.peers {
+            let t0 = std::time::Instant::now();
+            match self.call(*id, &Message::Ping) {
+                Ok(Message::Pong { start, end, throughput, queue_depth }) => {
+                    let rtt = t0.elapsed().as_secs_f64();
+                    let span = (end - start) as usize;
+                    let span_compute_s = if throughput > 0.0 {
+                        1.0 / throughput as f64
+                    } else {
+                        0.01 * span as f64
+                    };
+                    *remote.view.lock().unwrap() = Some(ServerView {
+                        id: *id,
+                        start: start as usize,
+                        end: end as usize,
+                        latency_s: rtt / 2.0,
+                        bandwidth_bps: self.assumed_bandwidth_bps,
+                        span_compute_s,
+                        queue_depth,
+                    });
+                }
+                _ => {
+                    *remote.view.lock().unwrap() = None;
+                }
+            }
+        }
+    }
+}
+
+impl ChainClient for TcpSwarm {
+    fn discover(&self) -> Vec<ServerView> {
+        self.refresh();
+        self.peers
+            .values()
+            .filter_map(|r| r.view.lock().unwrap().clone())
+            .collect()
+    }
+
+    fn open_session(
+        &self,
+        server: NodeId,
+        session: u64,
+        batch: usize,
+        prefix_len: usize,
+        max_new: usize,
+    ) -> Result<()> {
+        match self.call(
+            server,
+            &Message::OpenSession {
+                session,
+                batch: batch as u32,
+                prefix_len: prefix_len as u32,
+                max_new: max_new as u32,
+            },
+        )? {
+            Message::SessionOpened { .. } => Ok(()),
+            other => Err(Error::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
+    fn prefill(&self, server: NodeId, session: u64, hidden: &Tensor) -> Result<Tensor> {
+        let msg = Message::Prefill {
+            session,
+            hidden: TensorPayload::compressed(hidden),
+        };
+        Self::expect_hidden(self.call(server, &msg)?)
+    }
+
+    fn step(&self, server: NodeId, session: u64, cache_len: usize, hidden: &Tensor) -> Result<Tensor> {
+        let msg = Message::InferStep {
+            session,
+            cache_len: cache_len as u32,
+            hidden: TensorPayload::compressed(hidden),
+        };
+        Self::expect_hidden(self.call(server, &msg)?)
+    }
+
+    fn close_session(&self, server: NodeId, session: u64) {
+        let _ = self.call(server, &Message::CloseSession { session });
+    }
+
+    fn forward(&self, server: NodeId, hidden: &Tensor) -> Result<Tensor> {
+        let msg = Message::Forward { hidden: TensorPayload::compressed(hidden) };
+        Self::expect_hidden(self.call(server, &msg)?)
+    }
+
+    fn backward(&self, server: NodeId, hidden: &Tensor, grad: &Tensor) -> Result<Tensor> {
+        let msg = Message::Backward {
+            hidden: TensorPayload::compressed(hidden),
+            grad: TensorPayload::compressed(grad),
+        };
+        Self::expect_hidden(self.call(server, &msg)?)
+    }
+}

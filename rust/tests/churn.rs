@@ -1,0 +1,113 @@
+//! Integration: churn — servers joining, leaving, failing en masse —
+//! exercising the §3.2 claims that the balancer keeps the swarm alive
+//! and sessions survive.
+
+use petals::config::profiles::{NetworkProfile, SwarmPreset};
+use petals::config::Rng;
+use petals::sim::SwarmSim;
+
+/// Long random churn sequence: at every event kill or revive capacity,
+/// rebalance, and assert the invariant "if total capacity can cover all
+/// blocks, rebalancing restores full coverage".
+#[test]
+fn random_churn_rebalancing_keeps_coverage() {
+    for seed in 0..5 {
+        let mut sim = SwarmSim::build(
+            SwarmPreset::TwelveVirtual.build(NetworkProfile::GBIT_5MS, true),
+            seed,
+        );
+        let mut rng = Rng::new(seed + 100);
+        let n_blocks = sim.profile.n_blocks;
+        for event in 0..12 {
+            // kill one random live server (keep at least 6 alive)
+            let alive: Vec<usize> = sim
+                .servers
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.alive)
+                .map(|(i, _)| i)
+                .collect();
+            if alive.len() > 6 {
+                sim.kill(alive[rng.usize_below(alive.len())]);
+            }
+            sim.rebalance();
+            let capacity: usize = sim
+                .servers
+                .iter()
+                .filter(|s| s.alive)
+                .map(|s| s.spec.device.capacity_blocks(sim.profile.bytes_per_block))
+                .sum();
+            if capacity >= n_blocks {
+                assert!(
+                    sim.total_throughput() > 0.0,
+                    "seed {seed} event {event}: coverage lost despite sufficient capacity"
+                );
+                assert!(
+                    sim.run_inference(128, 2, 1).is_some(),
+                    "seed {seed} event {event}: no route"
+                );
+            }
+        }
+    }
+}
+
+/// The paper's specific scenario: "if all peers serving certain blocks
+/// suddenly leave the system, this procedure quickly redistributes the
+/// remaining resources to close the emerged gaps."
+#[test]
+fn mass_departure_gap_closes() {
+    let mut sim = SwarmSim::build(
+        SwarmPreset::FourteenRealWorld.build(NetworkProfile::MBIT100_5MS, true),
+        3,
+    );
+    let before = sim.total_throughput();
+    assert!(before > 0.0);
+    // kill every server covering the last block
+    let n = sim.profile.n_blocks;
+    let victims: Vec<usize> = sim
+        .servers
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.alive && s.span.end == n)
+        .map(|(i, _)| i)
+        .collect();
+    assert!(!victims.is_empty());
+    for v in victims {
+        sim.kill(v);
+    }
+    assert_eq!(sim.total_throughput(), 0.0, "gap must open");
+    let moves = sim.rebalance();
+    assert!(moves > 0, "rebalancer must act");
+    assert!(sim.total_throughput() > 0.0, "gap must close");
+}
+
+/// Throughput after rebalance is never worse than before (monotonicity
+/// across a churn storm).
+#[test]
+fn rebalance_monotone_under_storm() {
+    let mut sim = SwarmSim::build(
+        SwarmPreset::TwelveVirtual.build(NetworkProfile::MBIT100_5MS, true),
+        9,
+    );
+    let mut rng = Rng::new(42);
+    for _ in 0..8 {
+        let alive: Vec<usize> = sim
+            .servers
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.alive)
+            .map(|(i, _)| i)
+            .collect();
+        if alive.len() <= 4 {
+            break;
+        }
+        sim.kill(alive[rng.usize_below(alive.len())]);
+        let before = sim.total_throughput();
+        sim.rebalance();
+        let after = sim.total_throughput();
+        assert!(
+            after >= before - 1e-12,
+            "rebalance lost throughput: {before} -> {after}"
+        );
+    }
+}

@@ -1,0 +1,136 @@
+//! Integration: the DHT as the swarm's discovery plane — servers
+//! announce spans with TTL, clients snapshot coverage, the balancer
+//! consumes DHT data, and announcements age out after departure.
+
+use petals::config::Rng;
+use petals::coordinator::balancer::{self, BlockCoverage};
+use petals::dht::{BlockDirectory, NodeId, Record, ServerEntry, Storage};
+
+mod util {
+    use super::*;
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+
+    /// An in-memory Kademlia swarm with per-node clocks (the library's
+    /// test net is crate-private; integration tests build their own).
+    pub struct Net {
+        pub nodes: RefCell<HashMap<NodeId, (petals::dht::RoutingTable, Storage, bool)>>,
+        pub now_ms: std::cell::Cell<u64>,
+    }
+
+    impl Net {
+        pub fn new(ids: &[NodeId]) -> Self {
+            let mut nodes = HashMap::new();
+            for &id in ids {
+                let mut table = petals::dht::RoutingTable::new(id);
+                for &other in ids {
+                    if other != id {
+                        table.insert(other, |_| true);
+                    }
+                }
+                nodes.insert(id, (table, Storage::new(), true));
+            }
+            Net { nodes: RefCell::new(nodes), now_ms: std::cell::Cell::new(0) }
+        }
+    }
+
+    impl petals::dht::Rpc for Net {
+        fn find_node(&self, callee: NodeId, target: NodeId) -> Vec<NodeId> {
+            let nodes = self.nodes.borrow();
+            match nodes.get(&callee) {
+                Some((t, _, true)) => t.closest(target, petals::dht::K),
+                _ => vec![],
+            }
+        }
+        fn find_value(&self, callee: NodeId, key: NodeId) -> Option<Vec<Record>> {
+            let nodes = self.nodes.borrow();
+            let (_, store, alive) = nodes.get(&callee)?;
+            if !alive {
+                return None;
+            }
+            let recs = store.get(&key, self.now_ms.get());
+            if recs.is_empty() {
+                None
+            } else {
+                Some(recs)
+            }
+        }
+        fn store(&self, callee: NodeId, key: NodeId, rec: Record) {
+            let mut nodes = self.nodes.borrow_mut();
+            if let Some((_, store, true)) = nodes.get_mut(&callee) {
+                store.put(key, rec);
+            }
+        }
+        fn ping(&self, callee: NodeId) -> bool {
+            self.nodes
+                .borrow()
+                .get(&callee)
+                .map(|(_, _, alive)| *alive)
+                .unwrap_or(false)
+        }
+    }
+}
+
+#[test]
+fn announcements_drive_balancer_and_expire() {
+    let mut rng = Rng::new(1);
+    let ids: Vec<NodeId> = (0..40).map(|_| NodeId::random(&mut rng)).collect();
+    let net = util::Net::new(&ids);
+    let dir = BlockDirectory::new(&net, ids[..3].to_vec(), "bloom-mini");
+    let n_blocks = 8u32;
+
+    // three servers announce spans
+    let servers = [
+        ServerEntry { server: ids[0], start: 0, end: 4, throughput: 2.0 },
+        ServerEntry { server: ids[1], start: 2, end: 6, throughput: 1.0 },
+        ServerEntry { server: ids[2], start: 4, end: 8, throughput: 1.5 },
+    ];
+    for s in &servers {
+        dir.announce(s, 0);
+    }
+
+    // a client snapshots coverage through the DHT
+    let snap = dir.snapshot(n_blocks);
+    let cov = BlockCoverage::from_entries(n_blocks as usize, snap.iter().flatten());
+    assert!(balancer::swarm_throughput(&cov) > 0.0);
+    assert_eq!(snap[3].len(), 2, "blocks 2..4 covered by two servers");
+
+    // a joining server consults the same data: weakest window is 6..8
+    // plus... compute from coverage
+    let join = balancer::choose_join_span(&cov, 2);
+    let worst = balancer::swarm_throughput(&cov);
+    assert!(cov.per_block[join.clone()].iter().any(|&t| t <= worst + 1e-9));
+
+    // time passes beyond TTL without republish: records age out
+    net.now_ms.set(dir.announce_ttl_ms + 1);
+    let snap = dir.snapshot(n_blocks);
+    assert!(snap.iter().all(|s| s.is_empty()), "stale announcements must expire");
+
+    // republish (what live servers do periodically) restores coverage
+    for s in &servers {
+        dir.announce(s, net.now_ms.get());
+    }
+    let snap = dir.snapshot(n_blocks);
+    let cov = BlockCoverage::from_entries(n_blocks as usize, snap.iter().flatten());
+    assert!(balancer::swarm_throughput(&cov) > 0.0);
+}
+
+#[test]
+fn departed_server_invisible_after_ttl_but_others_persist() {
+    let mut rng = Rng::new(2);
+    let ids: Vec<NodeId> = (0..30).map(|_| NodeId::random(&mut rng)).collect();
+    let net = util::Net::new(&ids);
+    let dir = BlockDirectory::new(&net, ids[..3].to_vec(), "bloom-mini");
+
+    dir.announce(&ServerEntry { server: ids[0], start: 0, end: 4, throughput: 1.0 }, 0);
+    // half-TTL later the second server announces
+    let half = dir.announce_ttl_ms / 2;
+    net.now_ms.set(half);
+    dir.announce(&ServerEntry { server: ids[1], start: 0, end: 4, throughput: 2.0 }, half);
+
+    // just past the first server's expiry: only the second remains
+    net.now_ms.set(dir.announce_ttl_ms + 1);
+    let found = dir.lookup(0);
+    assert_eq!(found.len(), 1);
+    assert_eq!(found[0].server, ids[1]);
+}

@@ -1,0 +1,180 @@
+//! Integration: the full TCP path — servers on sockets, ping discovery,
+//! routed sessions, compressed activations, failover over TCP, and the
+//! HTTP chat backend on top.
+
+use petals::coordinator::client::{LocalHead, Sampler, SwarmGenerator};
+use petals::coordinator::routing::RouteQuery;
+use petals::coordinator::session::{ChainClient, SessionConfig};
+use petals::model::{ModelHome, Precision, Weights};
+use petals::runtime::Runtime;
+use petals::server::service::{serve, ServerHandle, TcpSwarm};
+use petals::server::ServerNode;
+use std::sync::Arc;
+
+fn home() -> ModelHome {
+    let root = std::env::var("PETALS_ARTIFACTS")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string());
+    ModelHome::open(root).expect("run `make artifacts` first")
+}
+
+fn runtime(home: &ModelHome) -> Arc<Runtime> {
+    Arc::new(
+        Runtime::load_filtered(home, |n| n.contains("_b1_") || n.ends_with("_b1")).unwrap(),
+    )
+}
+
+fn cfg(home: &ModelHome) -> SessionConfig {
+    let g = home.geometry();
+    SessionConfig {
+        n_blocks: g.n_layers,
+        batch: 1,
+        prefill_width: 128,
+        prefix_len: 8,
+        max_new: 8,
+        route: RouteQuery {
+            n_blocks: g.n_layers,
+            msg_bytes: (g.hidden + g.hidden / 64 * 4) as u64,
+            beam_width: 8,
+            queue_penalty_s: 0.05,
+        },
+        max_recoveries: 3,
+    }
+}
+
+fn spawn(home: &ModelHome, rt: &Arc<Runtime>, name: &str, span: std::ops::Range<usize>) -> ServerHandle {
+    let node = ServerNode::start(name, home, rt.clone(), span, Precision::F16, true).unwrap();
+    serve(node, "127.0.0.1:0").unwrap()
+}
+
+/// Golden generation over real sockets with compressed activations: the
+/// comm codec (quantize -> wire -> dequantize, both directions) must not
+/// change a single greedy token on this model.
+#[test]
+fn tcp_generation_matches_golden() {
+    let home = home();
+    let g = home.geometry().clone();
+    let rt = runtime(&home);
+    let half = g.n_layers / 2;
+    let h1 = spawn(&home, &rt, "t1", 0..half);
+    let h2 = spawn(&home, &rt, "t2", half..g.n_layers);
+    let peers = vec![
+        ("t1".to_string(), h1.addr.clone()),
+        ("t2".to_string(), h2.addr.clone()),
+    ];
+    let swarm = TcpSwarm::connect(&peers);
+    assert_eq!(swarm.discover().len(), 2);
+
+    let weights = Weights::load(&home, Precision::F16).unwrap();
+    let head = LocalHead::new(&home, rt, &weights).unwrap();
+
+    let gg = &home.manifest.golden_generate;
+    let prefix = home.load_tensor(&gg.prefix).unwrap().as_i32().to_vec();
+    let want = home.load_tensor(&gg.tokens).unwrap().as_i32().to_vec();
+
+    let generator = SwarmGenerator {
+        swarm: &swarm,
+        head: &head,
+        cfg: cfg(&home),
+        sampler: Sampler::Greedy,
+    };
+    let out = generator.generate(&[prefix], want.len(), 1).unwrap();
+    assert_eq!(out.tokens[0], want, "TCP + compression changed tokens");
+    h1.shutdown();
+    h2.shutdown();
+}
+
+/// Kill a TCP server mid-generation; the session recovers over the
+/// socket layer (broken connection -> redial -> replacement) and the
+/// tokens stay golden.
+#[test]
+fn tcp_failover_recovers() {
+    let home = home();
+    let g = home.geometry().clone();
+    let rt = runtime(&home);
+    let half = g.n_layers / 2;
+    let h1 = spawn(&home, &rt, "f1", 0..half);
+    let h2 = spawn(&home, &rt, "f2", half..g.n_layers);
+    let h2b = spawn(&home, &rt, "f2-backup", half..g.n_layers);
+    let peers = vec![
+        ("f1".to_string(), h1.addr.clone()),
+        ("f2".to_string(), h2.addr.clone()),
+        ("f2-backup".to_string(), h2b.addr.clone()),
+    ];
+    let swarm = TcpSwarm::connect(&peers);
+    let weights = Weights::load(&home, Precision::F16).unwrap();
+    let head = LocalHead::new(&home, rt, &weights).unwrap();
+
+    let gg = &home.manifest.golden_generate;
+    let prefix = home.load_tensor(&gg.prefix).unwrap().as_i32().to_vec();
+    let want = home.load_tensor(&gg.tokens).unwrap().as_i32().to_vec();
+
+    // custom loop so we can kill a server at step 3
+    use petals::coordinator::session::InferenceSession;
+    use petals::model::tensor::Tensor;
+    let scfg = cfg(&home);
+    let mut session = InferenceSession::open(&swarm, scfg.clone(), 5).unwrap();
+    let mut ids = vec![0i32; scfg.prefill_width];
+    ids[..prefix.len()].copy_from_slice(&prefix);
+    let h0 = head.embed(&Tensor::from_i32(&[1, scfg.prefill_width], &ids)).unwrap();
+    let h_pre = session.prefill(h0).unwrap();
+    let p = prefix.len();
+    let hidden = g.hidden;
+    let mut last = Tensor::from_f32(&[1, hidden], &h_pre.as_f32()[(p - 1) * hidden..p * hidden]);
+    let mut got = Vec::new();
+    for step in 0..want.len() {
+        if step == 3 {
+            // kill whichever of f2/f2-backup is in the chain
+            let second = session.chain().iter().find(|h| h.start == half).unwrap().server;
+            if second == petals::dht::NodeId::from_name("f2") {
+                h2.shutdown();
+            } else {
+                h2b.shutdown();
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+        let logits = head.lm_head(&last).unwrap();
+        let next = Sampler::Greedy.sample(&logits);
+        got.push(next[0]);
+        let h = head.embed(&Tensor::from_i32(&[1, 1], &next)).unwrap();
+        let out = session.step(h).unwrap();
+        last = Tensor::from_f32(&[1, hidden], out.as_f32());
+    }
+    assert_eq!(got, want, "tokens diverged after TCP failover");
+    assert!(session.recoveries() >= 1);
+    session.close();
+    h1.shutdown();
+}
+
+/// HTTP chat backend over a TCP swarm: full 4-layer stack
+/// (HTTP -> client -> TCP protocol -> PJRT).
+#[test]
+fn http_backend_over_tcp_swarm() {
+    let home = home();
+    let g = home.geometry().clone();
+    let rt = runtime(&home);
+    let half = g.n_layers / 2;
+    let h1 = spawn(&home, &rt, "c1", 0..half);
+    let h2 = spawn(&home, &rt, "c2", half..g.n_layers);
+    let peers = vec![
+        ("c1".to_string(), h1.addr.clone()),
+        ("c2".to_string(), h2.addr.clone()),
+    ];
+    let swarm = Arc::new(TcpSwarm::connect(&peers));
+    let weights = Weights::load(&home, Precision::F16).unwrap();
+    let head = Arc::new(LocalHead::new(&home, rt, &weights).unwrap());
+    let backend = petals::api::ChatBackend::new(swarm, head, cfg(&home));
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let addr = backend.serve("127.0.0.1:0", stop.clone()).unwrap();
+
+    let reply = petals::api::http_post(
+        &addr,
+        "/api/v1/generate",
+        r#"{"inputs": [5,6,7,8,9,10,11,12], "max_new_tokens": 3}"#,
+    )
+    .unwrap();
+    let v = petals::config::json::Value::parse(&reply).unwrap();
+    assert_eq!(v.get("outputs").unwrap().arr().unwrap().len(), 3);
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    h1.shutdown();
+    h2.shutdown();
+}
