@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints, docs, tests — in that order, fail fast.
+#
+#   ci/check.sh          # everything (fmt, clippy, doc, build, test)
+#   ci/check.sh quick    # fmt + clippy only (pre-commit)
+#
+# Doc warnings are promoted to errors so `cargo doc --no-deps` regressions
+# (broken intra-doc links, malformed headings) fail here instead of
+# rotting silently.
+
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+step() { printf '\n==> %s\n' "$*"; }
+
+step "cargo fmt --check"
+cargo fmt --all -- --check
+
+step "cargo clippy -- -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+if [[ "${1:-}" == "quick" ]]; then
+    echo "quick mode: skipping doc/build/test"
+    exit 0
+fi
+
+step "cargo doc --no-deps (warnings fatal)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+step "cargo build --release"
+cargo build --release
+
+step "cargo test"
+cargo test -q
+
+echo
+echo "all checks passed"

@@ -45,6 +45,7 @@ fn main() -> petals::Result<()> {
         msg_bytes: (b * s * g.hidden * 4) as u64,
         beam_width: 8,
         queue_penalty_s: 0.05,
+        pool_penalty_s: 0.05,
     };
 
     let mut rng = Rng::new(42);

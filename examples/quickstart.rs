@@ -50,6 +50,7 @@ fn main() -> petals::Result<()> {
             msg_bytes: (g.hidden * 4) as u64,
             beam_width: 8,
             queue_penalty_s: 0.05,
+            pool_penalty_s: 0.05,
         },
         max_recoveries: 3,
     };

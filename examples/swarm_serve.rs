@@ -76,6 +76,7 @@ fn main() -> petals::Result<()> {
             msg_bytes: (g.hidden + g.hidden / 64 * 4) as u64, // compressed
             beam_width: 8,
             queue_penalty_s: 0.05,
+            pool_penalty_s: 0.05,
         },
         max_recoveries: 3,
     };

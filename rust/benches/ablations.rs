@@ -39,6 +39,7 @@ fn random_views(rng: &mut Rng, n_blocks: usize, n_servers: usize) -> Vec<ServerV
                 bandwidth_bps: rng.range_f64(50e6, 1e9),
                 span_compute_s: rng.range_f64(0.02, 0.4),
                 queue_depth: rng.usize_below(4) as u32,
+                free_ratio: rng.range_f64(0.0, 1.0),
             }
         })
         .collect()
@@ -99,7 +100,13 @@ fn random_chain(servers: &[ServerView], q: &RouteQuery, rng: &mut Rng) -> Option
 fn routing_ablation() {
     println!("ablation 1: routing policy (500 random swarms, 24 blocks)\n");
     let mut rng = Rng::new(0xAB1);
-    let q = RouteQuery { n_blocks: 24, msg_bytes: 60_000, beam_width: 8, queue_penalty_s: 0.05 };
+    let q = RouteQuery {
+        n_blocks: 24,
+        msg_bytes: 60_000,
+        beam_width: 8,
+        queue_penalty_s: 0.05,
+        pool_penalty_s: 0.05,
+    };
     let (mut beam_sum, mut greedy_sum, mut random_sum) = (0.0, 0.0, 0.0);
     let mut count = 0;
     for _ in 0..500 {

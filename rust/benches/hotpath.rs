@@ -55,7 +55,7 @@ fn main() -> petals::Result<()> {
     // --- single-block execution --------------------------------------------
     println!("\nblock execution (per block, per step):");
     let f16 = ServerNode::start("f16", &home, rt.clone(), 0..1, Precision::F16, false)?;
-    f16.open_session(1, 1)?;
+    f16.open_session(1, 1, 0)?;
     let wide = Tensor::zeros(&[1, 128, g.hidden], DType::F32);
     f16.prefill(1, &wide)?;
     let mut step = 8usize;
@@ -67,7 +67,7 @@ fn main() -> petals::Result<()> {
         }
     });
     let int8 = ServerNode::start("int8", &home, rt.clone(), 0..1, Precision::Int8, false)?;
-    int8.open_session(1, 1)?;
+    int8.open_session(1, 1, 0)?;
     int8.prefill(1, &wide)?;
     let mut step8 = 8usize;
     bench("int8 decode step (1 block incl. caches)", 20, || {
@@ -108,10 +108,17 @@ fn main() -> petals::Result<()> {
                 bandwidth_bps: 1e8,
                 span_compute_s: 0.2,
                 queue_depth: 0,
+                free_ratio: 1.0,
             }
         })
         .collect();
-    let q = RouteQuery { n_blocks: 70, msg_bytes: 15_000, beam_width: 8, queue_penalty_s: 0.05 };
+    let q = RouteQuery {
+        n_blocks: 70,
+        msg_bytes: 15_000,
+        beam_width: 8,
+        queue_penalty_s: 0.05,
+        pool_penalty_s: 0.05,
+    };
     bench("beam-search route (70 blocks, 14 servers)", 2000, || {
         let _ = find_chain(&views, &q);
     });

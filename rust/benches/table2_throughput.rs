@@ -77,7 +77,7 @@ fn generation_throughput(
             ids[row * w + s] = rng.below(g.vocab as u64) as i32;
         }
     }
-    server.open_session(batch as u64, batch)?;
+    server.open_session(batch as u64, batch, 0)?;
     let h0 = head.embed(&Tensor::from_i32(&[batch, w], &ids))?;
     let h = server.prefill(batch as u64, &h0)?;
     let hidden = g.hidden;

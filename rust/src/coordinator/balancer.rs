@@ -38,6 +38,27 @@ impl BlockCoverage {
         c
     }
 
+    /// Like [`Self::from_entries`], but discounts each server's announced
+    /// throughput by its KV-pool occupancy: a server whose pool is nearly
+    /// full cannot admit new sessions, so counting its full throughput
+    /// would hide an admission bottleneck from the rebalancer. A server
+    /// at occupancy `o` contributes `throughput * (1 - o/2)` — half
+    /// weight when completely full (it still serves its live sessions),
+    /// full weight when idle or when it predates the v2 announcement.
+    pub fn from_entries_load_aware<'a>(
+        n_blocks: usize,
+        entries: impl Iterator<Item = &'a crate::dht::ServerEntry>,
+    ) -> Self {
+        let mut c = Self::new(n_blocks);
+        for e in entries {
+            let discount = 1.0 - (1.0 - e.free_ratio()) / 2.0;
+            for b in e.start..e.end.min(n_blocks as u32) {
+                c.per_block[b as usize] += e.throughput as f64 * discount;
+            }
+        }
+        c
+    }
+
     pub fn add_span(&mut self, span: std::ops::Range<usize>, throughput: f64) {
         for b in span {
             self.per_block[b] += throughput;
@@ -220,6 +241,32 @@ mod tests {
         assert!(moves >= 1);
         let total = swarm_throughput(&BlockCoverage::from_spans(n, &servers));
         assert!(total > 0.0, "gap closed: {servers:?}");
+    }
+
+    #[test]
+    fn load_aware_coverage_discounts_full_pools() {
+        use crate::dht::{NodeId, ServerEntry};
+        let mk = |free: u32, total: u32| ServerEntry {
+            server: NodeId::from_name("s"),
+            start: 0,
+            end: 4,
+            throughput: 2.0,
+            free_pages: free,
+            total_pages: total,
+            batch_width: 8,
+        };
+        let idle = [mk(100, 100)];
+        let full = [mk(0, 100)];
+        let legacy = [mk(0, 0)];
+        let t = |es: &[ServerEntry]| {
+            swarm_throughput(&BlockCoverage::from_entries_load_aware(4, es.iter()))
+        };
+        assert_eq!(t(&idle), 2.0);
+        assert_eq!(t(&full), 1.0, "a full pool counts at half weight");
+        assert_eq!(t(&legacy), 2.0, "legacy entries are not penalized");
+        // the plain variant ignores occupancy entirely
+        let plain = swarm_throughput(&BlockCoverage::from_entries(4, full.iter()));
+        assert_eq!(plain, 2.0);
     }
 
     #[test]

@@ -30,6 +30,10 @@ pub struct ServerView {
     pub span_compute_s: f64,
     /// Current queue depth (multi-client contention signal).
     pub queue_depth: u32,
+    /// Fraction of the server's KV-cache pool still free, in [0, 1]
+    /// (from Pong / DHT announcements). 1.0 when unknown — legacy
+    /// servers never get penalized for data they don't report.
+    pub free_ratio: f64,
 }
 
 impl ServerView {
@@ -49,11 +53,21 @@ pub struct RouteQuery {
     /// Extra seconds charged per queued request at a server (models
     /// waiting behind other clients).
     pub queue_penalty_s: f64,
+    /// Extra seconds charged proportionally to a server's KV-pool
+    /// occupancy (`(1 - free_ratio) * pool_penalty_s`): steers sessions
+    /// toward servers that will not reject admission.
+    pub pool_penalty_s: f64,
 }
 
 impl Default for RouteQuery {
     fn default() -> Self {
-        RouteQuery { n_blocks: 0, msg_bytes: 0, beam_width: 8, queue_penalty_s: 0.05 }
+        RouteQuery {
+            n_blocks: 0,
+            msg_bytes: 0,
+            beam_width: 8,
+            queue_penalty_s: 0.05,
+            pool_penalty_s: 0.05,
+        }
     }
 }
 
@@ -112,9 +126,10 @@ pub fn find_chain(servers: &[ServerView], q: &RouteQuery) -> Option<(Vec<ChainHo
                 // before the first real step).
                 let hop_in = s.msg_time(q.msg_bytes);
                 let queue = s.queue_depth as f64 * q.queue_penalty_s;
+                let pool = (1.0 - s.free_ratio.clamp(0.0, 1.0)) * q.pool_penalty_s;
                 // compute prorated to the sub-span actually used
                 let frac = (next - block) as f64 / (s.end - s.start) as f64;
-                let cost = p.cost + hop_in + s.span_compute_s * frac + queue;
+                let cost = p.cost + hop_in + s.span_compute_s * frac + queue + pool;
                 let mut hops = p.hops.clone();
                 hops.push((ci, block));
                 let beam = beams.entry(next).or_default();
@@ -201,11 +216,18 @@ mod tests {
             bandwidth_bps: 1e9,
             span_compute_s: comp,
             queue_depth: 0,
+            free_ratio: 1.0,
         }
     }
 
     fn q(n: usize) -> RouteQuery {
-        RouteQuery { n_blocks: n, msg_bytes: 2048, beam_width: 8, queue_penalty_s: 0.05 }
+        RouteQuery {
+            n_blocks: n,
+            msg_bytes: 2048,
+            beam_width: 8,
+            queue_penalty_s: 0.05,
+            pool_penalty_s: 0.05,
+        }
     }
 
     #[test]
@@ -279,6 +301,23 @@ mod tests {
         let idle = sv("idle", 0, 8, 0.02, 0.12);
         let (hops, _) = find_chain(&[busy, idle], &q(8)).unwrap();
         assert_eq!(hops[0].server, NodeId::from_name("idle"));
+    }
+
+    #[test]
+    fn pool_pressure_steers_away() {
+        // a nearly-full KV pool costs more than a slightly slower link,
+        // so new sessions land where admission will succeed
+        let mut full = sv("full", 0, 8, 0.010, 0.1);
+        full.free_ratio = 0.02;
+        let roomy = sv("roomy", 0, 8, 0.012, 0.1);
+        let (hops, _) = find_chain(&[full.clone(), roomy], &q(8)).unwrap();
+        assert_eq!(hops[0].server, NodeId::from_name("roomy"));
+        // with the penalty disabled the faster-but-full server wins again
+        let mut q0 = q(8);
+        q0.pool_penalty_s = 0.0;
+        let roomy = sv("roomy", 0, 8, 0.012, 0.1);
+        let (hops, _) = find_chain(&[full, roomy], &q0).unwrap();
+        assert_eq!(hops[0].server, NodeId::from_name("full"));
     }
 
     #[test]
@@ -365,7 +404,8 @@ mod tests {
                     let c = cost
                         + s.msg_time(q.msg_bytes)
                         + s.span_compute_s * frac
-                        + s.queue_depth as f64 * q.queue_penalty_s;
+                        + s.queue_depth as f64 * q.queue_penalty_s
+                        + (1.0 - s.free_ratio.clamp(0.0, 1.0)) * q.pool_penalty_s;
                     if next == q.n_blocks {
                         let total = c + s.msg_time(q.msg_bytes);
                         if best.map(|b| total < b).unwrap_or(true) {

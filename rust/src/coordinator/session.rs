@@ -23,6 +23,11 @@ pub struct PongInfo {
     pub end: usize,
     pub throughput: f32,
     pub queue_depth: u32,
+    /// KV-pool pages free / total (v2 Pong; 0/0 when unknown).
+    pub free_pages: u32,
+    pub total_pages: u32,
+    /// Max sessions the server fuses per decode step.
+    pub batch_width: u32,
     pub latency_s: f64,
     pub bandwidth_bps: f64,
 }
@@ -93,13 +98,24 @@ pub struct InferenceSession<'a, C: ChainClient> {
 }
 
 impl<'a, C: ChainClient> InferenceSession<'a, C> {
-    /// Discover servers, pick a chain, open per-server sessions.
+    /// Discover servers, pick a chain, open per-server sessions. If any
+    /// hop rejects the open (e.g. [`Error::Busy`] admission control),
+    /// the hops already opened are closed before the error propagates —
+    /// otherwise their KV-page reservations would leak until the
+    /// server's pool drained (servers have no session TTL).
     pub fn open(client: &'a C, cfg: SessionConfig, session_id: u64) -> Result<Self> {
         let servers = client.discover();
         let (chain, _cost) = routing::find_chain(&servers, &cfg.route)
             .ok_or_else(|| Error::NoRoute("no chain covers all blocks".into()))?;
-        for hop in &chain {
-            client.open_session(hop.server, session_id, cfg.batch, cfg.prefix_len, cfg.max_new)?;
+        for (i, hop) in chain.iter().enumerate() {
+            if let Err(e) =
+                client.open_session(hop.server, session_id, cfg.batch, cfg.prefix_len, cfg.max_new)
+            {
+                for opened in &chain[..i] {
+                    client.close_session(opened.server, session_id);
+                }
+                return Err(e);
+            }
         }
         let history = vec![HopHistory::default(); chain.len()];
         let cache_len = cfg.prefix_len;
@@ -175,11 +191,16 @@ impl<'a, C: ChainClient> InferenceSession<'a, C> {
             )));
         }
         let failed = self.chain[i].clone();
+        // exclude EVERY server already in the chain, not just the failed
+        // one: per-server session state is keyed by session id alone, so
+        // re-opening this session on an in-chain server would clobber the
+        // caches it holds for its other span
+        let in_chain: Vec<NodeId> = self.chain.iter().map(|h| h.server).collect();
         let servers: Vec<ServerView> = self
             .client
             .discover()
             .into_iter()
-            .filter(|s| s.id != failed.server)
+            .filter(|s| !in_chain.contains(&s.id))
             .collect();
         let sub = routing::find_subchain(&servers, &self.cfg.route, failed.start, failed.end)
             .ok_or_else(|| {
@@ -188,34 +209,47 @@ impl<'a, C: ChainClient> InferenceSession<'a, C> {
                     failed.start, failed.end
                 ))
             })?;
-        // open sessions on the replacements
-        for hop in &sub {
-            self.client.open_session(
-                hop.server,
-                self.session_id,
-                self.cfg.batch,
-                self.cfg.prefix_len,
-                self.cfg.max_new,
-            )?;
-        }
-        // replay history through the subchain (§3.2: "the client sends
-        // all previous inputs to the replacement server")
-        let old_history = self.history[i].clone();
-        let mut sub_history = vec![HopHistory::default(); sub.len()];
-        if let Some(pre) = &old_history.prefill_input {
-            let mut h = pre.clone();
-            for (j, hop) in sub.iter().enumerate() {
-                sub_history[j].prefill_input = Some(h.clone());
-                h = self.client.prefill(hop.server, self.session_id, &h)?;
+        // open sessions on the replacements + replay history (§3.2: "the
+        // client sends all previous inputs to the replacement server");
+        // on any failure, close what was opened so pool reservations on
+        // the replacements don't leak
+        let result = (|| -> Result<Vec<HopHistory>> {
+            for hop in &sub {
+                self.client.open_session(
+                    hop.server,
+                    self.session_id,
+                    self.cfg.batch,
+                    self.cfg.prefix_len,
+                    self.cfg.max_new,
+                )?;
             }
-        }
-        for (cache_len, inp) in &old_history.step_inputs {
-            let mut h = inp.clone();
-            for (j, hop) in sub.iter().enumerate() {
-                sub_history[j].step_inputs.push((*cache_len, h.clone()));
-                h = self.client.step(hop.server, self.session_id, *cache_len, &h)?;
+            let old_history = self.history[i].clone();
+            let mut sub_history = vec![HopHistory::default(); sub.len()];
+            if let Some(pre) = &old_history.prefill_input {
+                let mut h = pre.clone();
+                for (j, hop) in sub.iter().enumerate() {
+                    sub_history[j].prefill_input = Some(h.clone());
+                    h = self.client.prefill(hop.server, self.session_id, &h)?;
+                }
             }
-        }
+            for (cache_len, inp) in &old_history.step_inputs {
+                let mut h = inp.clone();
+                for (j, hop) in sub.iter().enumerate() {
+                    sub_history[j].step_inputs.push((*cache_len, h.clone()));
+                    h = self.client.step(hop.server, self.session_id, *cache_len, &h)?;
+                }
+            }
+            Ok(sub_history)
+        })();
+        let sub_history = match result {
+            Ok(h) => h,
+            Err(e) => {
+                for hop in &sub {
+                    self.client.close_session(hop.server, self.session_id);
+                }
+                return Err(e);
+            }
+        };
         // splice the replacement hop(s) in
         self.chain.splice(i..=i, sub);
         self.history.splice(i..=i, sub_history);
@@ -273,7 +307,8 @@ mod tests {
         alive: bool,
         // session -> (#prefills, #steps) — to verify replay
         sessions: HashMap<u64, (usize, Vec<usize>)>,
-        fail_next: usize, // fail this many next requests
+        fail_next: usize,      // fail this many next prefill/step requests
+        fail_open_next: usize, // reject this many next open_session calls (Busy)
     }
 
     impl FakeSwarm {
@@ -287,6 +322,7 @@ mod tests {
                     alive: true,
                     sessions: HashMap::new(),
                     fail_next: 0,
+                    fail_open_next: 0,
                 })
                 .collect();
             FakeSwarm { state: RefCell::new(FakeState { servers, open_calls: 0 }) }
@@ -333,6 +369,7 @@ mod tests {
                     bandwidth_bps: 1e9,
                     span_compute_s: 0.01 * (s.end - s.start) as f64,
                     queue_depth: 0,
+                    free_ratio: 1.0,
                 })
                 .collect()
         }
@@ -343,6 +380,10 @@ mod tests {
             let srv = st.servers.iter_mut().find(|s| s.id == server).unwrap();
             if !srv.alive {
                 return Err(Error::ChainBroken("dead".into()));
+            }
+            if srv.fail_open_next > 0 {
+                srv.fail_open_next -= 1;
+                return Err(Error::Busy("kv pool full (fake)".into()));
             }
             srv.sessions.insert(session, (0, vec![]));
             Ok(())
@@ -400,7 +441,13 @@ mod tests {
             prefill_width: 4,
             prefix_len: 2,
             max_new: 8,
-            route: RouteQuery { n_blocks, msg_bytes: 64, beam_width: 8, queue_penalty_s: 0.05 },
+            route: RouteQuery {
+                n_blocks,
+                msg_bytes: 64,
+                beam_width: 8,
+                queue_penalty_s: 0.05,
+                pool_penalty_s: 0.05,
+            },
             max_recoveries: 4,
         }
     }
@@ -471,6 +518,25 @@ mod tests {
         let out = s.prefill(Tensor::from_f32(&[1, 4, 4], &[0.0; 16])).unwrap();
         assert!(out.as_f32().iter().all(|&v| v == 8.0));
         assert!(s.recoveries() <= 1);
+    }
+
+    /// Regression: a Busy admission rejection mid-chain-open must close
+    /// the hops already opened, or their KV-page reservations leak on
+    /// healthy servers (which have no session TTL).
+    #[test]
+    fn failed_open_closes_earlier_hops() {
+        let swarm = FakeSwarm::new(&[("a", 0, 3), ("b", 3, 8)]);
+        {
+            let mut st = swarm.state.borrow_mut();
+            st.servers[1].fail_open_next = 1;
+        }
+        let err = InferenceSession::open(&swarm, cfg(8), 4).unwrap_err();
+        assert!(matches!(err, Error::Busy(_)), "{err}");
+        let st = swarm.state.borrow();
+        assert!(
+            st.servers[0].sessions.is_empty(),
+            "hop 'a' was opened before 'b' rejected — it must be closed again"
+        );
     }
 
     #[test]

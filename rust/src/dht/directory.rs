@@ -11,6 +11,11 @@ use crate::dht::storage::Record;
 use crate::dht::{iterative_find_value, iterative_store, Rpc};
 
 /// One server's announcement for a span of blocks.
+///
+/// v2 (see docs/WIRE_PROTOCOL.md §Versioning) appends KV-pool occupancy
+/// and the server's fused batch width so the balancer and client routing
+/// can prefer under-loaded servers. v1 records (44 bytes) still decode —
+/// the new fields read as zero, which every consumer treats as "unknown".
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServerEntry {
     pub server: NodeId,
@@ -20,34 +25,63 @@ pub struct ServerEntry {
     /// Self-measured end-to-end throughput, requests/s (network+compute —
     /// §3.2 "it measures its own throughput (both network and compute)").
     pub throughput: f32,
+    /// KV-pool pages free for new admissions (v2; 0 = unknown/legacy).
+    pub free_pages: u32,
+    /// KV-pool capacity in pages (v2; 0 = unknown/legacy).
+    pub total_pages: u32,
+    /// Max sessions fused per decode step (v2; 0 = unknown/legacy).
+    pub batch_width: u32,
 }
+
+/// v1 record length (through `throughput`).
+const ENTRY_V1_LEN: usize = 44;
+/// v2 record length (v1 + free_pages + total_pages + batch_width).
+const ENTRY_V2_LEN: usize = 56;
 
 impl ServerEntry {
     pub fn encode(&self) -> Vec<u8> {
-        let mut v = Vec::with_capacity(44);
+        let mut v = Vec::with_capacity(ENTRY_V2_LEN);
         v.extend_from_slice(&self.server.0);
         v.extend_from_slice(&self.start.to_le_bytes());
         v.extend_from_slice(&self.end.to_le_bytes());
         v.extend_from_slice(&self.throughput.to_le_bytes());
+        v.extend_from_slice(&self.free_pages.to_le_bytes());
+        v.extend_from_slice(&self.total_pages.to_le_bytes());
+        v.extend_from_slice(&self.batch_width.to_le_bytes());
         v
     }
 
     pub fn decode(b: &[u8]) -> Option<Self> {
-        if b.len() != 44 {
+        if b.len() != ENTRY_V1_LEN && b.len() != ENTRY_V2_LEN {
             return None;
         }
         let mut id = [0u8; 32];
         id.copy_from_slice(&b[..32]);
+        let v2 = b.len() == ENTRY_V2_LEN;
         Some(ServerEntry {
             server: NodeId(id),
             start: u32::from_le_bytes(b[32..36].try_into().ok()?),
             end: u32::from_le_bytes(b[36..40].try_into().ok()?),
             throughput: f32::from_le_bytes(b[40..44].try_into().ok()?),
+            free_pages: if v2 { u32::from_le_bytes(b[44..48].try_into().ok()?) } else { 0 },
+            total_pages: if v2 { u32::from_le_bytes(b[48..52].try_into().ok()?) } else { 0 },
+            batch_width: if v2 { u32::from_le_bytes(b[52..56].try_into().ok()?) } else { 0 },
         })
     }
 
     pub fn covers(&self, block: u32) -> bool {
         self.start <= block && block < self.end
+    }
+
+    /// Fraction of the announced KV pool that is free; 1.0 when the
+    /// announcement predates the pool fields (legacy servers are never
+    /// penalized for data they don't report).
+    pub fn free_ratio(&self) -> f64 {
+        if self.total_pages == 0 {
+            1.0
+        } else {
+            (self.free_pages as f64 / self.total_pages as f64).clamp(0.0, 1.0)
+        }
     }
 }
 
@@ -116,10 +150,33 @@ mod tests {
             start: 3,
             end: 11,
             throughput: 2.5,
+            free_pages: 120,
+            total_pages: 512,
+            batch_width: 8,
         };
         assert_eq!(ServerEntry::decode(&e.encode()), Some(e.clone()));
         assert!(e.covers(3) && e.covers(10) && !e.covers(11) && !e.covers(2));
+        assert!((e.free_ratio() - 120.0 / 512.0).abs() < 1e-12);
         assert_eq!(ServerEntry::decode(&[0u8; 10]), None);
+    }
+
+    #[test]
+    fn legacy_v1_entry_decodes_with_unknown_pool() {
+        let e = ServerEntry {
+            server: NodeId::from_name("old"),
+            start: 0,
+            end: 4,
+            throughput: 1.5,
+            free_pages: 99,
+            total_pages: 100,
+            batch_width: 4,
+        };
+        // a v1 peer would have written only the first 44 bytes
+        let v1 = e.encode()[..44].to_vec();
+        let back = ServerEntry::decode(&v1).unwrap();
+        assert_eq!(back.throughput, 1.5);
+        assert_eq!(back.total_pages, 0);
+        assert_eq!(back.free_ratio(), 1.0, "legacy entries read as unloaded");
     }
 
     #[test]
@@ -128,7 +185,7 @@ mod tests {
         let ids: Vec<NodeId> = (0..30).map(|_| NodeId::random(&mut rng)).collect();
         let net = TestNet::new(&ids);
         let dir = BlockDirectory::new(&net, ids[..3].to_vec(), "bloom");
-        let e = ServerEntry { server: ids[0], start: 0, end: 4, throughput: 1.0 };
+        let e = ServerEntry { server: ids[0], start: 0, end: 4, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0 };
         dir.announce(&e, 0);
         for b in 0..4 {
             let got = dir.lookup(b);
@@ -144,8 +201,8 @@ mod tests {
         let ids: Vec<NodeId> = (0..30).map(|_| NodeId::random(&mut rng)).collect();
         let net = TestNet::new(&ids);
         let dir = BlockDirectory::new(&net, ids[..3].to_vec(), "bloom");
-        dir.announce(&ServerEntry { server: ids[0], start: 0, end: 4, throughput: 1.0 }, 0);
-        dir.announce(&ServerEntry { server: ids[1], start: 2, end: 8, throughput: 2.0 }, 0);
+        dir.announce(&ServerEntry { server: ids[0], start: 0, end: 4, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0 }, 0);
+        dir.announce(&ServerEntry { server: ids[1], start: 2, end: 8, throughput: 2.0, free_pages: 0, total_pages: 0, batch_width: 0 }, 0);
         let snap = dir.snapshot(8);
         assert_eq!(snap[0].len(), 1);
         assert_eq!(snap[2].len(), 2);
@@ -160,10 +217,10 @@ mod tests {
         let net = TestNet::new(&ids);
         let dir = BlockDirectory::new(&net, ids[..3].to_vec(), "bloom");
         let srv = ids[0];
-        dir.announce(&ServerEntry { server: srv, start: 0, end: 4, throughput: 1.0 }, 0);
+        dir.announce(&ServerEntry { server: srv, start: 0, end: 4, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0 }, 0);
         // server rebalances to a different span; old per-block records
         // are replaced where keys overlap and age out elsewhere
-        dir.announce(&ServerEntry { server: srv, start: 2, end: 6, throughput: 1.0 }, 0);
+        dir.announce(&ServerEntry { server: srv, start: 2, end: 6, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0 }, 0);
         let at2 = dir.lookup(2);
         assert_eq!(at2.len(), 1);
         assert_eq!(at2[0].start, 2);

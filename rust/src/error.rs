@@ -19,6 +19,9 @@ pub enum Error {
     ChainBroken(String),
     /// Routing could not cover all blocks with live servers.
     NoRoute(String),
+    /// The server is at capacity (KV-cache pool full) — retryable: the
+    /// client should route to a less-loaded replica.
+    Busy(String),
     /// Protocol violation on the wire.
     Protocol(String),
     /// Anything else.
@@ -37,6 +40,7 @@ impl fmt::Display for Error {
             Error::Shape(m) => write!(f, "shape mismatch: {m}"),
             Error::ChainBroken(m) => write!(f, "chain broken: {m}"),
             Error::NoRoute(m) => write!(f, "no route: {m}"),
+            Error::Busy(m) => write!(f, "busy: {m}"),
             Error::Protocol(m) => write!(f, "protocol: {m}"),
             Error::Other(m) => write!(f, "{m}"),
         }
@@ -57,10 +61,58 @@ impl From<xla::Error> for Error {
     }
 }
 
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The Display form and `from_wire` must stay inverse for Busy —
+    /// that's the wire protocol's one string contract.
+    #[test]
+    fn wire_roundtrip_preserves_busy() {
+        let e = Error::Busy("kv pool full".into());
+        assert!(e.is_retryable());
+        match Error::from_wire(e.to_string()) {
+            Error::Busy(m) => assert_eq!(m, "kv pool full"),
+            other => panic!("expected Busy, got {other:?}"),
+        }
+        assert!(matches!(Error::from_wire("xla: boom".into()), Error::ChainBroken(_)));
+    }
+}
+
 impl Error {
     /// True for failures a session should respond to by re-routing
     /// around the failed server rather than aborting (§3.2).
     pub fn is_retryable(&self) -> bool {
-        matches!(self, Error::ChainBroken(_) | Error::Io(_))
+        matches!(self, Error::ChainBroken(_) | Error::Io(_) | Error::Busy(_))
+    }
+
+    /// Classify an `Error` reply received over the wire. The only string
+    /// contract is the `busy:` prefix (docs/WIRE_PROTOCOL.md) — it maps
+    /// back to [`Error::Busy`] so clients route the work to a
+    /// less-loaded replica; everything else is a retryable chain break.
+    /// Kept next to `Display` so the prefix can't silently drift.
+    pub fn from_wire(message: String) -> Error {
+        match message.strip_prefix("busy: ") {
+            Some(m) => Error::Busy(m.to_string()),
+            None => Error::ChainBroken(message),
+        }
+    }
+
+    /// Structural copy (the wrapped `std` errors are not `Clone`): used
+    /// when one fused batch failure must be reported to every session in
+    /// the batch.
+    pub fn duplicate(&self) -> Error {
+        match self {
+            Error::Io(e) => Error::Io(std::io::Error::new(e.kind(), e.to_string())),
+            Error::Parse(m) => Error::Parse(m.clone()),
+            Error::Xla(m) => Error::Xla(m.clone()),
+            Error::NotFound(m) => Error::NotFound(m.clone()),
+            Error::Shape(m) => Error::Shape(m.clone()),
+            Error::ChainBroken(m) => Error::ChainBroken(m.clone()),
+            Error::NoRoute(m) => Error::NoRoute(m.clone()),
+            Error::Busy(m) => Error::Busy(m.clone()),
+            Error::Protocol(m) => Error::Protocol(m.clone()),
+            Error::Other(m) => Error::Other(m.clone()),
+        }
     }
 }

@@ -73,6 +73,8 @@ pub struct StepReport {
 }
 
 impl PromptTuner {
+    /// Fresh tuner: `n_prompts` trainable prompt embeddings (~N(0, 0.02))
+    /// plus a zero-initialized linear head, optimized with Adam at `lr`.
     pub fn new(n_prompts: usize, hidden: usize, n_classes: usize, lr: f32, seed: u64) -> Self {
         let mut rng = Rng::new(seed);
         let mut prompts = vec![0f32; n_prompts * hidden];
@@ -342,6 +344,7 @@ mod tests {
                     bandwidth_bps: 1e9,
                     span_compute_s: 0.0,
                     queue_depth: 0,
+                    free_ratio: 1.0,
                 }]
             }
             fn open_session(&self, _: NodeId, _: u64, _: usize, _: usize, _: usize) -> Result<()> {
@@ -366,7 +369,13 @@ mod tests {
         let b = 8;
         let s = 4;
         let mut tuner = PromptTuner::new(1, h, 2, 0.05, 0);
-        let route = RouteQuery { n_blocks: 1, msg_bytes: 64, beam_width: 4, queue_penalty_s: 0.0 };
+        let route = RouteQuery {
+            n_blocks: 1,
+            msg_bytes: 64,
+            beam_width: 4,
+            queue_penalty_s: 0.0,
+            pool_penalty_s: 0.0,
+        };
         let swarm = Identity;
         let mut rng = Rng::new(5);
 

@@ -54,6 +54,7 @@ pub struct Hub {
 }
 
 impl Hub {
+    /// Open (creating if needed) a hub rooted at `root`.
     pub fn open(root: impl AsRef<Path>) -> Result<Self> {
         let root = root.as_ref().to_path_buf();
         std::fs::create_dir_all(root.join("blobs"))?;

@@ -40,10 +40,12 @@ pub struct Ledger {
 }
 
 impl Ledger {
+    /// Empty ledger (all balances zero).
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Current points balance for `peer` (0.0 if never seen).
     pub fn balance(&self, peer: NodeId) -> f64 {
         *self.balances.lock().unwrap().get(&peer).unwrap_or(&0.0)
     }

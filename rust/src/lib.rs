@@ -10,10 +10,12 @@
 //! ## Architecture
 //!
 //! - [`dht`] — Kademlia-style distributed hash table: how servers announce
-//!   which Transformer blocks they hold (§3.2 of the paper).
+//!   which Transformer blocks they hold (§3.2 of the paper), including
+//!   KV-pool occupancy for load-aware placement (v2 entries).
 //! - [`server`] — a Petals *server*: hosts a contiguous span of blocks,
-//!   keeps per-session attention caches, serves inference / parallel
-//!   forward / backward requests.
+//!   keeps session KV caches in a paged pool ([`server::kvpool`]) with
+//!   admission control, and fuses concurrent sessions' decode steps into
+//!   batched forwards ([`server::scheduler`] — continuous batching).
 //! - [`coordinator`] — the client side: chain routing (beam search over
 //!   per-block server sets), inference sessions with KV replay on failure,
 //!   batch splitting for parallel forwards, and the server-side block
@@ -29,8 +31,19 @@
 //!   clients own soft prompts + heads; servers run frozen blocks fwd/bwd.
 //! - [`hub`] — sharing trained adapters with tags and versions (§2.3).
 //! - [`incentives`] — the points ledger sketched in §4.
-//! - [`sim`] — discrete-event swarm scenarios regenerating Table 3.
+//! - [`sim`] — discrete-event swarm scenarios regenerating Table 3, with
+//!   a continuous-batching service model mirroring the real server.
 //! - [`api`] — the chat-application HTTP backend (Figure 3).
+//! - [`model`] / [`runtime`] — artifact manifest, host tensors, weight
+//!   packs, and the PJRT executor registry.
+//! - [`config`] — JSON substrate, deterministic PRNG, device/network
+//!   profiles behind every simulated Table-3 row.
+//! - [`metrics`] — counters, gauges, histograms (lock-free record path).
+//! - [`error`] — the crate-wide [`Error`] type; `Busy` signals
+//!   admission-control rejections that clients should route around.
+//!
+//! See `rust/README.md` for the architecture walkthrough and
+//! `docs/WIRE_PROTOCOL.md` for the framing and versioning rules.
 //!
 //! ## Quickstart
 //!

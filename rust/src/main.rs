@@ -153,6 +153,7 @@ fn session_cfg(home: &ModelHome, prefix_len: usize, max_new: usize) -> SessionCo
             msg_bytes: (g.hidden * 4) as u64,
             beam_width: 8,
             queue_penalty_s: 0.05,
+            pool_penalty_s: 0.05,
         },
         max_recoveries: 3,
     }

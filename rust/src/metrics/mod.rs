@@ -29,6 +29,24 @@ impl Counter {
     }
 }
 
+/// Last-write-wins gauge (pool occupancy, queue depths).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Gauge(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
 /// Log-scale histogram over microseconds: bucket i covers
 /// [2^i, 2^(i+1)) µs, 48 buckets ≈ 9 years of range.
 pub struct Histogram {
@@ -144,6 +162,17 @@ pub struct NodeMetrics {
     pub bytes_in: Counter,
     pub bytes_out: Counter,
     pub step_latency: Histogram,
+    /// KV-cache pool capacity, pages (set at server start).
+    pub kv_pages_total: Gauge,
+    /// KV-cache pages currently free for new admissions.
+    pub kv_pages_free: Gauge,
+    /// Decode steps that ran through a fused (multi-session) batch.
+    pub batched_steps: Counter,
+    /// Total rows executed inside fused batches (fused_rows /
+    /// batched_steps = mean batch width).
+    pub fused_rows: Counter,
+    /// Sessions rejected by pool admission control.
+    pub admission_rejects: Counter,
 }
 
 impl NodeMetrics {
@@ -153,12 +182,18 @@ impl NodeMetrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} failures={} in={}B out={}B step[{}]",
+            "requests={} failures={} in={}B out={}B step[{}] kv_pages={}/{} \
+             batched={} fused_rows={} rejects={}",
             self.requests.get(),
             self.failures.get(),
             self.bytes_in.get(),
             self.bytes_out.get(),
-            self.step_latency.summary()
+            self.step_latency.summary(),
+            self.kv_pages_free.get(),
+            self.kv_pages_total.get(),
+            self.batched_steps.get(),
+            self.fused_rows.get(),
+            self.admission_rejects.get(),
         )
     }
 }
@@ -173,6 +208,15 @@ mod tests {
         c.inc();
         c.add(4);
         assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn gauge_last_write_wins() {
+        let g = Gauge::new();
+        assert_eq!(g.get(), 0);
+        g.set(7);
+        g.set(3);
+        assert_eq!(g.get(), 3);
     }
 
     #[test]

@@ -166,6 +166,57 @@ impl Tensor {
         Ok(t)
     }
 
+    /// Concatenate along dimension 0 (batch rows). All parts must share
+    /// dtype and trailing shape. Used by the continuous-batching server
+    /// to fuse per-session hidden states into one executor call.
+    pub fn concat_rows(parts: &[&Tensor]) -> Result<Tensor> {
+        let first = parts
+            .first()
+            .ok_or_else(|| Error::Shape("concat_rows: empty input".into()))?;
+        let tail = &first.shape[1..];
+        let mut rows = 0usize;
+        for p in parts {
+            if p.dtype != first.dtype || &p.shape[1..] != tail {
+                return Err(Error::Shape(format!(
+                    "concat_rows: {:?}/{:?} incompatible with {:?}/{:?}",
+                    p.shape, p.dtype, first.shape, first.dtype
+                )));
+            }
+            rows += p.shape[0];
+        }
+        let mut shape = first.shape.clone();
+        shape[0] = rows;
+        let mut data = Vec::with_capacity(parts.iter().map(|p| p.data.len()).sum());
+        for p in parts {
+            data.extend_from_slice(&p.data);
+        }
+        Ok(Tensor { shape, dtype: first.dtype, data })
+    }
+
+    /// Copy out `n` rows starting at row `start` along dimension 0 (the
+    /// inverse of [`Self::concat_rows`]: splitting a fused batch back
+    /// into per-session results).
+    pub fn slice_rows(&self, start: usize, n: usize) -> Result<Tensor> {
+        let total = *self
+            .shape
+            .first()
+            .ok_or_else(|| Error::Shape("slice_rows: rank-0 tensor".into()))?;
+        if start + n > total {
+            return Err(Error::Shape(format!(
+                "slice_rows: rows {start}..{} out of {total}",
+                start + n
+            )));
+        }
+        let row_bytes = if total == 0 { 0 } else { self.data.len() / total };
+        let mut shape = self.shape.clone();
+        shape[0] = n;
+        Ok(Tensor {
+            shape,
+            dtype: self.dtype,
+            data: self.data[start * row_bytes..(start + n) * row_bytes].to_vec(),
+        })
+    }
+
     /// Max |a - b| over two f32 tensors (test helper).
     pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
         let a = self.as_f32();
@@ -188,6 +239,24 @@ mod tests {
         assert_eq!(t.byte_len(), 24);
         assert_eq!(t.as_f32()[1], -2.5);
         assert_eq!(t.as_f32()[5], -1e9);
+    }
+
+    #[test]
+    fn concat_and_slice_rows_roundtrip() {
+        let a = Tensor::from_f32(&[1, 2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_f32(&[2, 2, 2], &[5.0, 6.0, 7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let cat = Tensor::concat_rows(&[&a, &b]).unwrap();
+        assert_eq!(cat.shape, vec![3, 2, 2]);
+        assert_eq!(cat.as_f32()[..4], [1.0, 2.0, 3.0, 4.0]);
+        let back_a = cat.slice_rows(0, 1).unwrap();
+        let back_b = cat.slice_rows(1, 2).unwrap();
+        assert_eq!(back_a.max_abs_diff(&a), 0.0);
+        assert_eq!(back_b.max_abs_diff(&b), 0.0);
+        // shape mismatches rejected
+        let c = Tensor::from_f32(&[1, 3], &[0.0; 3]);
+        assert!(Tensor::concat_rows(&[&a, &c]).is_err());
+        assert!(Tensor::concat_rows(&[]).is_err());
+        assert!(cat.slice_rows(2, 2).is_err());
     }
 
     #[test]

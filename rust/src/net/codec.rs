@@ -106,8 +106,19 @@ impl TensorPayload {
 pub enum Message {
     /// Latency probe (client-side routing pings nearby servers, §3.2).
     Ping,
-    /// Probe reply: hosted span + self-measured throughput + load.
-    Pong { start: u32, end: u32, throughput: f32, queue_depth: u32 },
+    /// Probe reply: hosted span + self-measured throughput + load +
+    /// KV-pool occupancy (`free_pages`/`total_pages`) and the widest
+    /// decode batch the server fuses (`batch_width`). Clients use the
+    /// pool fields to route around servers that would reject admission.
+    Pong {
+        start: u32,
+        end: u32,
+        throughput: f32,
+        queue_depth: u32,
+        free_pages: u32,
+        total_pages: u32,
+        batch_width: u32,
+    },
     /// Create an inference session with per-session KV cache.
     OpenSession { session: u64, batch: u32, prefix_len: u32, max_new: u32 },
     SessionOpened { session: u64 },
@@ -130,12 +141,23 @@ impl Message {
         let mut out = Vec::with_capacity(64);
         match self {
             Message::Ping => out.push(0),
-            Message::Pong { start, end, throughput, queue_depth } => {
+            Message::Pong {
+                start,
+                end,
+                throughput,
+                queue_depth,
+                free_pages,
+                total_pages,
+                batch_width,
+            } => {
                 out.push(1);
                 out.extend_from_slice(&start.to_le_bytes());
                 out.extend_from_slice(&end.to_le_bytes());
                 out.extend_from_slice(&throughput.to_le_bytes());
                 out.extend_from_slice(&queue_depth.to_le_bytes());
+                out.extend_from_slice(&free_pages.to_le_bytes());
+                out.extend_from_slice(&total_pages.to_le_bytes());
+                out.extend_from_slice(&batch_width.to_le_bytes());
             }
             Message::OpenSession { session, batch, prefix_len, max_new } => {
                 out.push(2);
@@ -194,6 +216,9 @@ impl Message {
                 end: r.u32()?,
                 throughput: r.f32()?,
                 queue_depth: r.u32()?,
+                free_pages: r.u32()?,
+                total_pages: r.u32()?,
+                batch_width: r.u32()?,
             },
             2 => Message::OpenSession {
                 session: r.u64()?,

@@ -16,6 +16,12 @@ pub use framed::{read_frame, write_frame, FramedConn};
 /// Default TCP port base for local swarms.
 pub const BASE_PORT: u16 = 31337;
 
+/// Wire protocol version (see docs/WIRE_PROTOCOL.md for the versioning
+/// rules). v2 widened `Pong` with KV-pool occupancy + batch width; the
+/// codec has no inline negotiation, so mixed-version swarms must not
+/// share a model namespace.
+pub const PROTOCOL_VERSION: u32 = 2;
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -26,7 +32,15 @@ mod tests {
         let t = Tensor::from_f32(&[2, 64], &vec![0.5f32; 128]);
         let msgs = vec![
             Message::Ping,
-            Message::Pong { start: 3, end: 9, throughput: 1.5, queue_depth: 2 },
+            Message::Pong {
+                start: 3,
+                end: 9,
+                throughput: 1.5,
+                queue_depth: 2,
+                free_pages: 100,
+                total_pages: 512,
+                batch_width: 8,
+            },
             Message::OpenSession { session: 42, batch: 1, prefix_len: 8, max_new: 16 },
             Message::SessionOpened { session: 42 },
             Message::InferStep {
@@ -92,7 +106,16 @@ mod tests {
             assert!(matches!(msg, Message::Ping));
             write_frame(
                 &mut conn,
-                &Message::Pong { start: 0, end: 4, throughput: 9.0, queue_depth: 0 }.encode(),
+                &Message::Pong {
+                    start: 0,
+                    end: 4,
+                    throughput: 9.0,
+                    queue_depth: 0,
+                    free_pages: 7,
+                    total_pages: 9,
+                    batch_width: 4,
+                }
+                .encode(),
             )
             .unwrap();
         });

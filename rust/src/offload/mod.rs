@@ -46,6 +46,7 @@ pub struct OffloadModel {
 }
 
 impl OffloadModel {
+    /// BLOOM-176B at int8 over `n_gpus` GPUs sharing `pcie_gbit` PCIe.
     pub fn bloom176b_int8(pcie_gbit: f64, n_gpus: usize) -> Self {
         use crate::config::profiles::bloom176b::*;
         OffloadModel {

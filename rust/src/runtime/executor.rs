@@ -9,9 +9,22 @@
 //! 1. **Weights are converted to literals once** at server start
 //!    ([`Executor::to_literals`]) — re-encoding ~13 MB of block params per
 //!    call would dominate a decode step.
-//! 2. **KV caches round-trip as literals**, never as [`Tensor`]s: a decode
-//!    step feeds the previous step's output literals straight back in
-//!    ([`Executor::call_literals`]), skipping two 4 MB repacks per block.
+//! 2. **KV caches lived as refeedable literals** in the pre-pool server:
+//!    a decode step fed the previous step's output literals straight back
+//!    in ([`Executor::call_literals`]), skipping two 4 MB repacks per
+//!    block. The paged-pool server instead gathers page tables into a
+//!    padded literal per step — trading that single-session fast path for
+//!    cross-session batching and bounded memory (see `server/kvpool.rs`;
+//!    restoring a per-session literal cache on top of the pool is an open
+//!    ROADMAP item).
+//!
+//! Since the continuous-batching refactor the decode artifacts double as
+//! the server's **batched step entry point**: the `block_decode_b{N}`
+//! family computes N independent rows per call, so the server gathers N
+//! sessions' hidden states ([`Executor::fuse_rows`]) and paged KV caches
+//! into one call and scatters the outputs back per session. Rows are
+//! independent in the artifact's arithmetic, which is what makes fused
+//! and sequential execution bitwise-comparable.
 
 use crate::error::{Error, Result};
 use crate::model::manifest::EntryMeta;
@@ -116,6 +129,13 @@ impl Executor {
     /// Pre-convert a parameter set to literals (server start, not hot path).
     pub fn to_literals(tensors: &[Tensor]) -> Result<Vec<xla::Literal>> {
         tensors.iter().map(|t| t.to_literal()).collect()
+    }
+
+    /// Fuse per-session rows into one batched input literal (dimension 0
+    /// is the batch). The continuous-batching gather half; the scatter
+    /// half is [`Tensor::slice_rows`] on the outputs.
+    pub fn fuse_rows(rows: &[&Tensor]) -> Result<xla::Literal> {
+        Tensor::concat_rows(rows)?.to_literal()
     }
 }
 

@@ -1,0 +1,701 @@
+//! Paged KV-cache pool — the memory substrate behind continuous batching.
+//!
+//! The seed server kept one monolithic cache literal per (session, block)
+//! padded to `max_seq`, so every open session cost the worst-case memory
+//! whether it generated 2 tokens or 2000, and the server had no principled
+//! way to say "no" to a new session before thrashing. This module replaces
+//! that with a vLLM-style paged pool:
+//!
+//! - **Fixed-size pages.** A page stores `page_tokens` token positions of
+//!   K *or* V for one block and one batch row, laid out `[n_heads,
+//!   page_tokens, head_dim]` (head-major, so gathering a page into the
+//!   `[B, Hh, C, D]` padded tensor the decode artifact expects is one
+//!   contiguous `memcpy` per head).
+//! - **Per-session page tables.** Each session owns, per hosted block,
+//!   per K/V half, per batch row, an ordered list of page ids. Sessions
+//!   only hold pages for tokens actually written; the `max_seq` padding
+//!   exists transiently at gather time.
+//! - **Admission control.** Opening a session *reserves* (but does not yet
+//!   allocate) the pages its `prefix_len + max_new` budget implies; if the
+//!   reservation does not fit, the open is rejected with
+//!   [`Error::Busy`] and the client routes around this server. Reserved
+//!   pages are allocated lazily as tokens are written, so transient
+//!   sessions never touch most of their budget.
+//! - **Defrag.** [`KvPool::defrag`] compacts live pages into the lowest
+//!   page ids so the high watermark tracks actual occupancy — on this CPU
+//!   testbed that bounds host memory; on an accelerator port it is what
+//!   lets the backing arena shrink.
+//!
+//! Capacity accounting is exact: `used + reserved_unwritten <= capacity`
+//! is an invariant (checked in debug builds), so admission decisions never
+//! oversubscribe the pool.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// A page id: index into the pool's page vector.
+pub type PageId = u32;
+
+/// Static pool shape, fixed at server start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvPoolConfig {
+    /// KV heads per block.
+    pub n_heads: usize,
+    /// Floats per head per token.
+    pub head_dim: usize,
+    /// Token positions per page.
+    pub page_tokens: usize,
+    /// Total pages in the pool.
+    pub capacity_pages: usize,
+}
+
+impl KvPoolConfig {
+    /// Floats in one page: `n_heads * page_tokens * head_dim`.
+    pub fn page_floats(&self) -> usize {
+        self.n_heads * self.page_tokens * self.head_dim
+    }
+
+    /// Pages a session of `batch` rows over `n_blocks` blocks needs to
+    /// hold `tokens` positions (both K and V halves).
+    pub fn pages_for(&self, batch: usize, n_blocks: usize, tokens: usize) -> usize {
+        2 * batch * n_blocks * tokens.div_ceil(self.page_tokens.max(1))
+    }
+}
+
+/// Page-table entry for one (block, k/v, row) run of a session.
+#[derive(Debug, Default, Clone)]
+struct PageRun {
+    pages: Vec<PageId>,
+}
+
+/// One session's slice of the pool.
+#[derive(Debug)]
+struct SessionTable {
+    batch: usize,
+    n_blocks: usize,
+    /// Token positions written so far (uniform across blocks: the whole
+    /// span advances in lockstep).
+    len: usize,
+    /// Token positions admission has promised this session.
+    reserved_tokens: usize,
+    /// Indexed by `(block * 2 + kv) * batch + row`.
+    runs: Vec<PageRun>,
+}
+
+impl SessionTable {
+    fn run_index(&self, block: usize, kv: usize, row: usize) -> usize {
+        (block * 2 + kv) * self.batch + row
+    }
+}
+
+/// The paged KV-cache pool. Not internally synchronized: the server wraps
+/// it in its state mutex (one pool per [`crate::server::ServerNode`]).
+pub struct KvPool {
+    cfg: KvPoolConfig,
+    /// Backing storage; pages materialize on first allocation and are
+    /// zeroed on reuse so no session can observe another's KV data.
+    pages: Vec<Vec<f32>>,
+    /// Free list (LIFO: recently-freed pages are cache-warm).
+    free: Vec<PageId>,
+    /// Pages handed out to sessions.
+    used_pages: usize,
+    /// Pages promised to open sessions but not yet written.
+    reserved_unwritten: usize,
+    tables: HashMap<u64, SessionTable>,
+}
+
+impl KvPool {
+    pub fn new(cfg: KvPoolConfig) -> Self {
+        KvPool {
+            cfg,
+            pages: Vec::new(),
+            free: Vec::new(),
+            used_pages: 0,
+            reserved_unwritten: 0,
+            tables: HashMap::new(),
+        }
+    }
+
+    pub fn config(&self) -> &KvPoolConfig {
+        &self.cfg
+    }
+
+    pub fn capacity_pages(&self) -> usize {
+        self.cfg.capacity_pages
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.used_pages
+    }
+
+    /// Pages available to *new* reservations (capacity minus used minus
+    /// outstanding promises).
+    pub fn free_pages(&self) -> usize {
+        self.cfg
+            .capacity_pages
+            .saturating_sub(self.used_pages + self.reserved_unwritten)
+    }
+
+    /// Occupancy in [0, 1] (used + promised over capacity).
+    pub fn occupancy(&self) -> f64 {
+        if self.cfg.capacity_pages == 0 {
+            return 1.0;
+        }
+        (self.used_pages + self.reserved_unwritten) as f64 / self.cfg.capacity_pages as f64
+    }
+
+    pub fn n_sessions(&self) -> usize {
+        self.tables.len()
+    }
+
+    pub fn has_session(&self, session: u64) -> bool {
+        self.tables.contains_key(&session)
+    }
+
+    pub fn session_batch(&self, session: u64) -> Option<usize> {
+        self.tables.get(&session).map(|t| t.batch)
+    }
+
+    pub fn session_len(&self, session: u64) -> Option<usize> {
+        self.tables.get(&session).map(|t| t.len)
+    }
+
+    /// Admission control: open a session reserving `max_tokens` positions.
+    /// Rejects with [`Error::Busy`] when the reservation would
+    /// oversubscribe the pool (the client treats Busy as retryable and
+    /// routes to a less-loaded replica).
+    pub fn open_session(
+        &mut self,
+        session: u64,
+        batch: usize,
+        n_blocks: usize,
+        max_tokens: usize,
+    ) -> Result<()> {
+        if batch == 0 || n_blocks == 0 {
+            return Err(Error::Protocol(format!(
+                "session {session}: batch {batch} x blocks {n_blocks} is empty"
+            )));
+        }
+        if self.tables.contains_key(&session) {
+            // re-open replaces the previous state (a stale session from
+            // an aborted chain open or failed recovery); free it first so
+            // the new reservation is judged against true capacity — the
+            // same clobber semantics the pre-pool server had
+            self.close_session(session);
+        }
+        let need = self.cfg.pages_for(batch, n_blocks, max_tokens);
+        if need > self.free_pages() {
+            return Err(Error::Busy(format!(
+                "kv pool full: session {session} needs {need} pages, {} free of {}",
+                self.free_pages(),
+                self.cfg.capacity_pages
+            )));
+        }
+        self.reserved_unwritten += need;
+        self.tables.insert(
+            session,
+            SessionTable {
+                batch,
+                n_blocks,
+                len: 0,
+                reserved_tokens: max_tokens,
+                runs: vec![PageRun::default(); n_blocks * 2 * batch],
+            },
+        );
+        self.check_invariant();
+        Ok(())
+    }
+
+    /// Grow a session's token reservation to `max_tokens` (no-op if it is
+    /// already at least that large). Used when a prefill wider than the
+    /// admission hint arrives.
+    pub fn reserve_tokens(&mut self, session: u64, max_tokens: usize) -> Result<()> {
+        let t = self
+            .tables
+            .get(&session)
+            .ok_or_else(|| Error::NotFound(format!("session {session}")))?;
+        if max_tokens <= t.reserved_tokens {
+            return Ok(());
+        }
+        let old = self.cfg.pages_for(t.batch, t.n_blocks, t.reserved_tokens);
+        let new = self.cfg.pages_for(t.batch, t.n_blocks, max_tokens);
+        let extra = new.saturating_sub(old);
+        if extra > self.free_pages() {
+            return Err(Error::Busy(format!(
+                "kv pool full: session {session} growth needs {extra} more pages, {} free",
+                self.free_pages()
+            )));
+        }
+        self.reserved_unwritten += extra;
+        self.tables.get_mut(&session).unwrap().reserved_tokens = max_tokens;
+        self.check_invariant();
+        Ok(())
+    }
+
+    /// Release everything the session holds: its pages return to the free
+    /// list, its unused reservation is released, its table is dropped.
+    pub fn close_session(&mut self, session: u64) {
+        let Some(t) = self.tables.remove(&session) else {
+            return;
+        };
+        let reserved = self.cfg.pages_for(t.batch, t.n_blocks, t.reserved_tokens);
+        let mut held = 0usize;
+        for run in &t.runs {
+            for &p in &run.pages {
+                self.free.push(p);
+                held += 1;
+            }
+        }
+        self.used_pages -= held;
+        self.reserved_unwritten -= reserved.saturating_sub(held);
+        self.check_invariant();
+    }
+
+    /// Allocate one page, zeroing recycled storage.
+    fn alloc_page(&mut self) -> Result<PageId> {
+        let pf = self.cfg.page_floats();
+        if let Some(id) = self.free.pop() {
+            self.pages[id as usize].iter_mut().for_each(|v| *v = 0.0);
+            self.used_pages += 1;
+            return Ok(id);
+        }
+        if self.pages.len() >= self.cfg.capacity_pages {
+            return Err(Error::Busy(format!(
+                "kv pool exhausted: {} pages in use",
+                self.used_pages
+            )));
+        }
+        let id = self.pages.len() as PageId;
+        self.pages.push(vec![0.0; pf]);
+        self.used_pages += 1;
+        Ok(id)
+    }
+
+    /// Make sure the session's runs can address token `pos` in every
+    /// block, allocating pages against the reservation. Fails with Busy
+    /// only when `pos` exceeds the reservation *and* the pool cannot grow
+    /// it — callers invoke this *before* running any compute so an errored
+    /// step never leaves caches half-written.
+    pub fn prepare_write(&mut self, session: u64, pos: usize) -> Result<()> {
+        let t = self
+            .tables
+            .get(&session)
+            .ok_or_else(|| Error::NotFound(format!("session {session}")))?;
+        if pos >= t.reserved_tokens {
+            self.reserve_tokens(session, pos + 1)?;
+        }
+        let page_idx = pos / self.cfg.page_tokens;
+        let t = self.tables.get(&session).unwrap();
+        let n_runs = t.runs.len();
+        // pages written so far vs pages the reservation promised: the
+        // difference transfers from reserved to used as we allocate
+        for run_i in 0..n_runs {
+            while self.tables[&session].runs[run_i].pages.len() <= page_idx {
+                let id = self.alloc_page()?;
+                self.reserved_unwritten = self.reserved_unwritten.saturating_sub(1);
+                self.tables.get_mut(&session).unwrap().runs[run_i].pages.push(id);
+            }
+        }
+        self.check_invariant();
+        Ok(())
+    }
+
+    /// Write a prefill's K or V output `[B, Hh, W, D]` for one block.
+    /// Pages must have been prepared via [`Self::prepare_write`] for
+    /// position `w - 1`. Does not advance `len` — call
+    /// [`Self::commit_len`] once after all blocks are written.
+    pub fn write_prefill(
+        &mut self,
+        session: u64,
+        block: usize,
+        kv: usize,
+        src: &[f32],
+        width: usize,
+    ) -> Result<()> {
+        let (hh, d, pt) = (self.cfg.n_heads, self.cfg.head_dim, self.cfg.page_tokens);
+        let t = self
+            .tables
+            .get(&session)
+            .ok_or_else(|| Error::NotFound(format!("session {session}")))?;
+        let batch = t.batch;
+        if src.len() != batch * hh * width * d {
+            return Err(Error::Shape(format!(
+                "prefill kv: got {} floats, expected {}x{hh}x{width}x{d}",
+                src.len(),
+                batch
+            )));
+        }
+        for row in 0..batch {
+            let run_idx = t.run_index(block, kv, row);
+            let page_ids: Vec<PageId> = self.tables[&session].runs[run_idx].pages.clone();
+            for (pi, &pid) in page_ids.iter().enumerate() {
+                let t0 = pi * pt;
+                if t0 >= width {
+                    break;
+                }
+                let n_tok = pt.min(width - t0);
+                let page = &mut self.pages[pid as usize];
+                for h in 0..hh {
+                    let src_off = ((row * hh + h) * width + t0) * d;
+                    let dst_off = h * pt * d;
+                    page[dst_off..dst_off + n_tok * d]
+                        .copy_from_slice(&src[src_off..src_off + n_tok * d]);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Write one decode step's K or V column for one block: `src` holds
+    /// `[B, Hh, D]` floats for token position `pos` (extracted from the
+    /// artifact's updated cache). Pages must be prepared for `pos`.
+    pub fn write_column(
+        &mut self,
+        session: u64,
+        block: usize,
+        kv: usize,
+        pos: usize,
+        src: &[f32],
+    ) -> Result<()> {
+        let (hh, d, pt) = (self.cfg.n_heads, self.cfg.head_dim, self.cfg.page_tokens);
+        let t = self
+            .tables
+            .get(&session)
+            .ok_or_else(|| Error::NotFound(format!("session {session}")))?;
+        let batch = t.batch;
+        if src.len() != batch * hh * d {
+            return Err(Error::Shape(format!(
+                "kv column: got {} floats, expected {batch}x{hh}x{d}",
+                src.len()
+            )));
+        }
+        let (page_idx, in_page) = (pos / pt, pos % pt);
+        for row in 0..batch {
+            let run_idx = t.run_index(block, kv, row);
+            let pid = *self.tables[&session].runs[run_idx]
+                .pages
+                .get(page_idx)
+                .ok_or_else(|| {
+                    Error::Protocol(format!("write at {pos} before prepare (session {session})"))
+                })?;
+            let page = &mut self.pages[pid as usize];
+            for h in 0..hh {
+                let src_off = (row * hh + h) * d;
+                let dst_off = (h * pt + in_page) * d;
+                page[dst_off..dst_off + d].copy_from_slice(&src[src_off..src_off + d]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Record that the session now holds `len` valid token positions.
+    pub fn commit_len(&mut self, session: u64, len: usize) {
+        if let Some(t) = self.tables.get_mut(&session) {
+            t.len = t.len.max(len);
+        }
+    }
+
+    /// Gather one block's K or V into the padded `[B, Hh, cap, D]` layout
+    /// the decode artifact expects; positions past the session length are
+    /// zero (exactly the seed's `pad_cache` semantics).
+    pub fn gather_padded(
+        &self,
+        session: u64,
+        block: usize,
+        kv: usize,
+        cap: usize,
+        dst: &mut [f32],
+    ) -> Result<()> {
+        let (hh, d, pt) = (self.cfg.n_heads, self.cfg.head_dim, self.cfg.page_tokens);
+        let t = self
+            .tables
+            .get(&session)
+            .ok_or_else(|| Error::NotFound(format!("session {session}")))?;
+        let batch = t.batch;
+        if dst.len() != batch * hh * cap * d {
+            return Err(Error::Shape(format!(
+                "gather dst: got {} floats, expected {batch}x{hh}x{cap}x{d}",
+                dst.len()
+            )));
+        }
+        dst.iter_mut().for_each(|v| *v = 0.0);
+        let len = t.len.min(cap);
+        for row in 0..batch {
+            let run = &t.runs[t.run_index(block, kv, row)];
+            for (pi, &pid) in run.pages.iter().enumerate() {
+                let t0 = pi * pt;
+                if t0 >= len {
+                    break;
+                }
+                let n_tok = pt.min(len - t0);
+                let page = &self.pages[pid as usize];
+                for h in 0..hh {
+                    let src_off = h * pt * d;
+                    let dst_off = ((row * hh + h) * cap + t0) * d;
+                    dst[dst_off..dst_off + n_tok * d]
+                        .copy_from_slice(&page[src_off..src_off + n_tok * d]);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Compact live pages into the lowest page ids, rewriting every page
+    /// table. Returns the number of pages moved. After defrag the backing
+    /// vector can be truncated to the high watermark, so long-running
+    /// servers do not hold peak-load memory forever.
+    pub fn defrag(&mut self) -> usize {
+        // lowest-id-first free list so future allocs fill holes
+        self.free.sort_unstable();
+        let mut moves = 0;
+        // walk live pages from the top; move each into the lowest free hole
+        let live: usize = self.used_pages;
+        for t in self.tables.values_mut() {
+            for run in &mut t.runs {
+                for p in &mut run.pages {
+                    if (*p as usize) < live {
+                        continue; // already below the watermark
+                    }
+                    // find a hole below the watermark
+                    let hole = match self.free.iter().position(|&f| (f as usize) < live) {
+                        Some(i) => self.free.remove(i),
+                        None => continue,
+                    };
+                    self.free.push(*p); // old slot becomes free (above watermark)
+                    let moved = std::mem::take(&mut self.pages[*p as usize]);
+                    self.pages[hole as usize] = moved;
+                    *p = hole;
+                    moves += 1;
+                }
+            }
+        }
+        // drop free pages above the watermark entirely
+        self.free.retain(|&f| (f as usize) < live);
+        self.pages.truncate(live);
+        moves
+    }
+
+    #[inline]
+    fn check_invariant(&self) {
+        debug_assert!(
+            self.used_pages + self.reserved_unwritten <= self.cfg.capacity_pages,
+            "kv pool oversubscribed: used {} + reserved {} > capacity {}",
+            self.used_pages,
+            self.reserved_unwritten,
+            self.cfg.capacity_pages
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(capacity_pages: usize) -> KvPoolConfig {
+        KvPoolConfig { n_heads: 2, head_dim: 3, page_tokens: 4, capacity_pages }
+    }
+
+    /// Column-major reference write: token `t` of row `r`, head `h` holds
+    /// value `base + t` in every dim.
+    fn kv_src(batch: usize, hh: usize, width: usize, d: usize, base: f32) -> Vec<f32> {
+        let mut v = vec![0.0; batch * hh * width * d];
+        for r in 0..batch {
+            for h in 0..hh {
+                for t in 0..width {
+                    for k in 0..d {
+                        v[((r * hh + h) * width + t) * d + k] =
+                            base + (r * 1000 + h * 100 + t) as f32;
+                    }
+                }
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn pages_for_accounting() {
+        let c = cfg(100);
+        // 2 halves x batch 1 x 3 blocks x ceil(9/4)=3 pages
+        assert_eq!(c.pages_for(1, 3, 9), 18);
+        assert_eq!(c.pages_for(2, 1, 4), 4);
+        assert_eq!(c.page_floats(), 2 * 4 * 3);
+    }
+
+    #[test]
+    fn alloc_free_reuse() {
+        let mut p = KvPool::new(cfg(8));
+        p.open_session(1, 1, 1, 8).unwrap(); // needs 2*1*1*2 = 4 pages
+        assert_eq!(p.free_pages(), 4);
+        p.prepare_write(1, 7).unwrap(); // materialize all 4
+        assert_eq!(p.used_pages(), 4);
+        assert_eq!(p.free_pages(), 4);
+        p.close_session(1);
+        assert_eq!(p.used_pages(), 0);
+        assert_eq!(p.free_pages(), 8);
+        // reuse: a second session gets the recycled pages, zeroed
+        p.open_session(2, 1, 1, 8).unwrap();
+        p.prepare_write(2, 7).unwrap();
+        let mut dst = vec![1.0f32; 2 * 3 * 8]; // [1,2,8,3]
+        p.gather_padded(2, 0, 0, 8, &mut dst).unwrap();
+        // nothing written yet, len == 0 -> all zeros (no stale data)
+        assert!(dst.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn out_of_capacity_admission_rejected() {
+        let mut p = KvPool::new(cfg(4));
+        p.open_session(1, 1, 1, 8).unwrap(); // reserves all 4 pages
+        let err = p.open_session(2, 1, 1, 4).unwrap_err();
+        assert!(matches!(err, Error::Busy(_)), "{err}");
+        // closing the first admits the second (pages recycled)
+        p.close_session(1);
+        p.open_session(2, 1, 1, 4).unwrap();
+        assert!(p.has_session(2));
+    }
+
+    #[test]
+    fn reopen_replaces_previous_session() {
+        let mut p = KvPool::new(cfg(8));
+        p.open_session(1, 1, 1, 8).unwrap(); // 4 pages
+        p.prepare_write(1, 7).unwrap();
+        let w = kv_src(1, 2, 8, 3, 1.0);
+        p.write_prefill(1, 0, 0, &w, 8).unwrap();
+        p.commit_len(1, 8);
+        // re-opening the same id frees the old pages and starts fresh
+        p.open_session(1, 1, 1, 8).unwrap();
+        assert_eq!(p.session_len(1), Some(0));
+        assert_eq!(p.used_pages(), 0);
+        assert_eq!(p.free_pages(), 4, "one reservation outstanding, not two");
+    }
+
+    #[test]
+    fn reservation_growth_bounded() {
+        let mut p = KvPool::new(cfg(6));
+        p.open_session(1, 1, 1, 8).unwrap(); // 4 pages reserved, 2 left
+        p.reserve_tokens(1, 12).unwrap(); // +2 pages -> exactly full
+        assert_eq!(p.free_pages(), 0);
+        assert!(matches!(p.reserve_tokens(1, 16), Err(Error::Busy(_))));
+        // shrinking requests are no-ops
+        p.reserve_tokens(1, 4).unwrap();
+        assert_eq!(p.free_pages(), 0);
+    }
+
+    #[test]
+    fn write_gather_roundtrip() {
+        let c = cfg(64);
+        let (hh, d, w, cap) = (c.n_heads, c.head_dim, 6, 12);
+        let mut p = KvPool::new(c);
+        p.open_session(9, 2, 2, cap).unwrap();
+        p.prepare_write(9, w - 1).unwrap();
+        let k = kv_src(2, hh, w, d, 0.5);
+        p.write_prefill(9, 1, 0, &k, w).unwrap();
+        p.commit_len(9, w);
+        let mut dst = vec![7.0f32; 2 * hh * cap * d];
+        p.gather_padded(9, 1, 0, cap, &mut dst).unwrap();
+        for r in 0..2 {
+            for h in 0..hh {
+                for t in 0..cap {
+                    for kd in 0..d {
+                        let got = dst[((r * hh + h) * cap + t) * d + kd];
+                        let want = if t < w {
+                            0.5 + (r * 1000 + h * 100 + t) as f32
+                        } else {
+                            0.0 // padded tail
+                        };
+                        assert_eq!(got, want, "r{r} h{h} t{t} d{kd}");
+                    }
+                }
+            }
+        }
+        // the other (block, kv) runs stay zero
+        p.gather_padded(9, 0, 1, cap, &mut dst).unwrap();
+        assert!(dst.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn decode_column_overwrites_and_appends() {
+        let c = cfg(64);
+        let (hh, d) = (c.n_heads, c.head_dim);
+        let mut p = KvPool::new(c);
+        p.open_session(3, 1, 1, 16).unwrap();
+        p.prepare_write(3, 5).unwrap();
+        let pre = kv_src(1, hh, 6, d, 0.0);
+        p.write_prefill(3, 0, 0, &pre, 6).unwrap();
+        p.commit_len(3, 6);
+        // overwrite position 2 (decode inside the prefill region)
+        let col = vec![42.0f32; hh * d];
+        p.write_column(3, 0, 0, 2, &col).unwrap();
+        // append position 6 (past the current length)
+        p.prepare_write(3, 6).unwrap();
+        p.write_column(3, 0, 0, 6, &col).unwrap();
+        p.commit_len(3, 7);
+        let cap = 8;
+        let mut dst = vec![0.0f32; hh * cap * d];
+        p.gather_padded(3, 0, 0, cap, &mut dst).unwrap();
+        for h in 0..hh {
+            assert_eq!(dst[(h * cap + 2) * d], 42.0);
+            assert_eq!(dst[(h * cap + 6) * d], 42.0);
+            assert_eq!(dst[(h * cap + 1) * d], (h * 100 + 1) as f32);
+        }
+    }
+
+    #[test]
+    fn page_table_correct_after_close() {
+        let mut p = KvPool::new(cfg(16));
+        p.open_session(1, 1, 2, 8).unwrap();
+        p.open_session(2, 1, 2, 8).unwrap();
+        p.prepare_write(1, 7).unwrap();
+        p.prepare_write(2, 7).unwrap();
+        let w = kv_src(1, 2, 8, 3, 1.0);
+        p.write_prefill(1, 0, 0, &w, 8).unwrap();
+        p.write_prefill(2, 0, 0, &w, 8).unwrap();
+        p.commit_len(1, 8);
+        p.commit_len(2, 8);
+        assert_eq!(p.used_pages(), 16);
+        p.close_session(1);
+        assert_eq!(p.used_pages(), 8);
+        assert!(!p.has_session(1));
+        assert!(matches!(p.gather_padded(1, 0, 0, 8, &mut [0.0; 48]), Err(Error::NotFound(_))));
+        // survivor's data intact after the neighbor's pages were freed
+        let mut dst = vec![0.0f32; 2 * 8 * 3];
+        p.gather_padded(2, 0, 0, 8, &mut dst).unwrap();
+        assert_eq!(dst[0], 1.0);
+        // double close is a no-op
+        p.close_session(1);
+        assert_eq!(p.used_pages(), 8);
+    }
+
+    #[test]
+    fn defrag_compacts_to_low_ids() {
+        let mut p = KvPool::new(cfg(32));
+        p.open_session(1, 1, 2, 8).unwrap(); // 8 pages
+        p.open_session(2, 1, 2, 8).unwrap(); // 8 pages
+        p.prepare_write(1, 7).unwrap(); // ids 0..8
+        p.prepare_write(2, 7).unwrap(); // ids 8..16
+        let w = kv_src(1, 2, 8, 3, 2.0);
+        p.write_prefill(2, 1, 1, &w, 8).unwrap();
+        p.commit_len(2, 8);
+        p.close_session(1); // holes at ids 0..8
+        let moved = p.defrag();
+        assert!(moved > 0, "live pages above the watermark must move");
+        assert_eq!(p.used_pages(), 8);
+        // all live ids now below the watermark, data preserved
+        let mut dst = vec![0.0f32; 2 * 8 * 3];
+        p.gather_padded(2, 1, 1, 8, &mut dst).unwrap();
+        assert_eq!(dst[0], 2.0 + 0.0);
+        assert_eq!(dst[3], 2.0 + 1.0); // head 0, token 1
+    }
+
+    #[test]
+    fn occupancy_tracks_reservations() {
+        let mut p = KvPool::new(cfg(8));
+        assert_eq!(p.occupancy(), 0.0);
+        p.open_session(1, 1, 1, 8).unwrap(); // 4 pages promised
+        assert!((p.occupancy() - 0.5).abs() < 1e-12);
+        p.prepare_write(1, 7).unwrap(); // promise converts to real pages
+        assert!((p.occupancy() - 0.5).abs() < 1e-12);
+        assert_eq!(p.free_pages(), 4);
+        let zero = KvPool::new(cfg(0));
+        assert_eq!(zero.occupancy(), 1.0);
+    }
+}

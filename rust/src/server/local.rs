@@ -118,6 +118,8 @@ impl ChainClient for LocalCluster {
                 } else {
                     0.01 * m.node.span_len() as f64
                 };
+                let (free, total) = m.node.pool_stats();
+                let free_ratio = if total > 0 { free as f64 / total as f64 } else { 1.0 };
                 ServerView {
                     id: m.node.id,
                     start: m.node.start,
@@ -126,6 +128,7 @@ impl ChainClient for LocalCluster {
                     bandwidth_bps: m.bandwidth_bps,
                     span_compute_s,
                     queue_depth: m.node.queue_depth(),
+                    free_ratio,
                 }
             })
             .collect()
@@ -136,10 +139,10 @@ impl ChainClient for LocalCluster {
         server: NodeId,
         session: u64,
         batch: usize,
-        _prefix_len: usize,
-        _max_new: usize,
+        prefix_len: usize,
+        max_new: usize,
     ) -> Result<()> {
-        self.with_node(server, |n| n.open_session(session, batch))
+        self.with_node(server, |n| n.open_session(session, batch, prefix_len + max_new))
     }
 
     fn prefill(&self, server: NodeId, session: u64, hidden: &Tensor) -> Result<Tensor> {
@@ -224,6 +227,7 @@ mod tests {
                 msg_bytes: (hidden * 4) as u64,
                 beam_width: 8,
                 queue_penalty_s: 0.05,
+                pool_penalty_s: 0.05,
             },
             max_recoveries: 3,
         }

@@ -1,29 +1,61 @@
 //! A Petals server (§2.1): hosts a contiguous span of Transformer
-//! blocks, keeps per-session attention caches, and serves inference
-//! steps, parallel forwards, and backward passes — all compute through
-//! the AOT artifacts via PJRT.
+//! blocks, keeps per-session attention caches in a paged pool, and
+//! serves inference steps, parallel forwards, and backward passes — all
+//! compute through the AOT artifacts via PJRT.
+//!
+//! Since the continuous-batching refactor the server is built from three
+//! pieces:
+//!
+//! - [`kvpool`] — block-granular paged KV-cache storage with admission
+//!   control (fixed-size pages, per-session page tables, alloc/free/
+//!   defrag, exact capacity accounting);
+//! - [`scheduler`] — the group-commit step scheduler that coalesces
+//!   decode steps from concurrent sessions into one fused executor call
+//!   per hosted span (gather active rows → single batched forward →
+//!   scatter results);
+//! - [`ServerNode`] — the request handlers tying both to the runtime.
+//!
+//! Decode steps are *staged*: pages are prepared before any compute, the
+//! new KV columns are buffered during the span walk, and the pool is
+//! only written after every block succeeded — so an errored step rolls
+//! back cleanly instead of corrupting the session (the seed took cache
+//! slots out of the session before executing and lost them on error).
 //!
 //! Submodules: [`local`] (in-process cluster implementing
 //! [`crate::coordinator::ChainClient`] — tests, quickstart) and
 //! [`service`] (framed-TCP server + client — the real swarm used by the
 //! examples).
 
+pub mod kvpool;
 pub mod local;
+pub mod scheduler;
 pub mod service;
+
+pub use kvpool::{KvPool, KvPoolConfig};
+pub use scheduler::{StepRequest, StepScheduler};
 
 use crate::coordinator::throughput::MeasuredThroughput;
 use crate::dht::NodeId;
 use crate::error::{Error, Result};
 use crate::metrics::NodeMetrics;
 use crate::model::manifest::Geometry;
-use crate::model::tensor::Tensor;
+use crate::model::tensor::{DType, Tensor};
 use crate::model::weights::{BlockWeights, Precision};
 use crate::model::ModelHome;
 use crate::net::{Message, TensorPayload};
 use crate::runtime::Runtime;
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Token positions per KV page (16 pages per 256-token cache on the
+/// test geometry; coarse enough that page tables stay tiny, fine enough
+/// that short sessions hold a fraction of `max_seq`).
+pub const PAGE_TOKENS: usize = 16;
+
+/// Default pool sizing: how many full-length batch-1 sessions the pool
+/// can hold when the caller does not size it explicitly.
+pub const DEFAULT_POOL_SESSIONS: usize = 16;
 
 /// Literal wrapper: PJRT CPU literals are plain host buffers; the xla
 /// crate just doesn't mark them Send.
@@ -31,10 +63,25 @@ struct SendLit(xla::Literal);
 unsafe impl Send for SendLit {}
 unsafe impl Sync for SendLit {}
 
-/// Per-session state on one server: KV cache literals per hosted block.
-struct SessionState {
-    batch: usize,
-    caches: Vec<Option<(SendLit, SendLit)>>, // per block in span
+/// Tunables for [`ServerNode::start_with`].
+#[derive(Debug, Clone)]
+pub struct ServerOptions {
+    /// Total KV pages in the pool; `None` sizes for
+    /// [`DEFAULT_POOL_SESSIONS`] full-length sessions.
+    pub pool_pages: Option<usize>,
+    /// How long a batch leader lingers for co-batchable decode steps.
+    /// Zero (the default) fuses only requests already queued while the
+    /// previous batch executed — continuous batching with no added
+    /// latency for a lone client.
+    pub batch_window: Duration,
+    /// Maximum sessions fused into one decode call.
+    pub max_batch_width: usize,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions { pool_pages: None, batch_window: Duration::ZERO, max_batch_width: 8 }
+    }
 }
 
 /// One Petals server node.
@@ -48,7 +95,10 @@ pub struct ServerNode {
     /// Per hosted block: flat parameter literals (pre-converted once —
     /// the decisive hot-path optimization, §Perf).
     block_lits: Vec<Vec<SendLit>>,
-    sessions: Mutex<HashMap<u64, SessionState>>,
+    /// Paged KV-cache pool holding every session's caches.
+    pool: Mutex<KvPool>,
+    /// Group-commit scheduler fusing concurrent decode steps.
+    scheduler: StepScheduler,
     pub metrics: NodeMetrics,
     throughput: Mutex<MeasuredThroughput>,
     active: AtomicU32,
@@ -57,7 +107,8 @@ pub struct ServerNode {
 }
 
 impl ServerNode {
-    /// Load a span of blocks at a precision and pin weights as literals.
+    /// Load a span of blocks at a precision and pin weights as literals,
+    /// with default pool/scheduler tuning.
     pub fn start(
         name: &str,
         home: &ModelHome,
@@ -65,6 +116,19 @@ impl ServerNode {
         span: std::ops::Range<usize>,
         precision: Precision,
         compress: bool,
+    ) -> Result<Arc<Self>> {
+        Self::start_with(name, home, runtime, span, precision, compress, ServerOptions::default())
+    }
+
+    /// [`Self::start`] with explicit pool capacity and batching knobs.
+    pub fn start_with(
+        name: &str,
+        home: &ModelHome,
+        runtime: Arc<Runtime>,
+        span: std::ops::Range<usize>,
+        precision: Precision,
+        compress: bool,
+        opts: ServerOptions,
     ) -> Result<Arc<Self>> {
         let blocks = crate::model::Weights::load_span(home, precision, span.clone())?;
         let block_lits = blocks
@@ -76,19 +140,33 @@ impl ServerNode {
                     .collect::<Result<Vec<_>>>()
             })
             .collect::<Result<Vec<_>>>()?;
+        let g = home.geometry().clone();
+        let page_tokens = PAGE_TOKENS.min(g.max_seq.max(1));
+        let span_len = span.end - span.start;
+        let per_session = 2 * span_len * g.max_seq.div_ceil(page_tokens);
+        let pool_cfg = KvPoolConfig {
+            n_heads: g.n_heads,
+            head_dim: g.head_dim,
+            page_tokens,
+            capacity_pages: opts.pool_pages.unwrap_or(per_session * DEFAULT_POOL_SESSIONS),
+        };
+        let metrics = NodeMetrics::new();
+        metrics.kv_pages_total.set(pool_cfg.capacity_pages as u64);
+        metrics.kv_pages_free.set(pool_cfg.capacity_pages as u64);
         Ok(Arc::new(ServerNode {
             id: NodeId::from_name(name),
             start: span.start,
             end: span.end,
             precision,
-            geometry: home.geometry().clone(),
+            geometry: g,
             runtime,
             block_lits,
-            sessions: Mutex::new(HashMap::new()),
-            metrics: NodeMetrics::new(),
+            pool: Mutex::new(KvPool::new(pool_cfg)),
+            scheduler: StepScheduler::new(opts.batch_window, opts.max_batch_width),
+            metrics,
             throughput: Mutex::new(MeasuredThroughput::new()),
             active: AtomicU32::new(0),
-        compress,
+            compress,
         }))
     }
 
@@ -103,6 +181,38 @@ impl ServerNode {
 
     pub fn queue_depth(&self) -> u32 {
         self.active.load(Ordering::Relaxed)
+    }
+
+    /// KV pool occupancy: (free pages, total pages).
+    pub fn pool_stats(&self) -> (u64, u64) {
+        let pool = self.pool.lock().unwrap();
+        (pool.free_pages() as u64, pool.capacity_pages() as u64)
+    }
+
+    /// Max sessions the scheduler fuses into one decode call.
+    pub fn batch_width(&self) -> usize {
+        self.scheduler.max_width
+    }
+
+    /// The v2 DHT announcement for this server: span, measured
+    /// throughput, and live pool occupancy (see docs/WIRE_PROTOCOL.md).
+    /// Re-announced periodically so the balancer and client routing see
+    /// fresh load.
+    pub fn dht_entry(&self) -> crate::dht::ServerEntry {
+        let (free_pages, total_pages) = self.pool_stats();
+        crate::dht::ServerEntry {
+            server: self.id,
+            start: self.start as u32,
+            end: self.end as u32,
+            throughput: self.measured_throughput() as f32,
+            free_pages: free_pages as u32,
+            total_pages: total_pages as u32,
+            batch_width: self.batch_width() as u32,
+        }
+    }
+
+    fn refresh_pool_gauges(&self, pool: &KvPool) {
+        self.metrics.kv_pages_free.set(pool.free_pages() as u64);
     }
 
     fn entry_name(&self, kind: &str, batch: usize, width: usize) -> String {
@@ -120,19 +230,30 @@ impl ServerNode {
 
     // --- request handlers ---------------------------------------------------
 
-    pub fn open_session(&self, session: u64, batch: usize) -> Result<()> {
-        let n = self.span_len();
-        let mut sessions = self.sessions.lock().unwrap();
-        sessions.insert(session, SessionState { batch, caches: (0..n).map(|_| None).collect() });
-        Ok(())
+    /// Open a session, reserving pool pages for `max_tokens` positions
+    /// (`0` reserves the full cache capacity). Rejects with
+    /// [`Error::Busy`] when the pool cannot hold the reservation — the
+    /// admission-control half of continuous batching.
+    pub fn open_session(&self, session: u64, batch: usize, max_tokens: usize) -> Result<()> {
+        let cap = self.geometry.max_seq;
+        let max_t = if max_tokens == 0 { cap } else { max_tokens.min(cap) };
+        let mut pool = self.pool.lock().unwrap();
+        let r = pool.open_session(session, batch, self.span_len(), max_t);
+        if matches!(r, Err(Error::Busy(_))) {
+            self.metrics.admission_rejects.inc();
+        }
+        self.refresh_pool_gauges(&pool);
+        r
     }
 
     pub fn close_session(&self, session: u64) {
-        self.sessions.lock().unwrap().remove(&session);
+        let mut pool = self.pool.lock().unwrap();
+        pool.close_session(session);
+        self.refresh_pool_gauges(&pool);
     }
 
-    /// Prefill: h [B,W,H] through all hosted blocks; fills KV caches
-    /// (padded to cache capacity) and returns the span's output.
+    /// Prefill: h [B,W,H] through all hosted blocks; writes the span's
+    /// KV into the paged pool and returns the span's output.
     pub fn prefill(&self, session: u64, h: &Tensor) -> Result<Tensor> {
         let t0 = std::time::Instant::now();
         self.active.fetch_add(1, Ordering::Relaxed);
@@ -144,12 +265,27 @@ impl ServerNode {
 
     fn prefill_inner(&self, session: u64, h: &Tensor) -> Result<Tensor> {
         let (b, w) = (h.shape[0], h.shape[1]);
-        let name = self.entry_name("prefill", b, w);
-        let ex = self.runtime.entry(&name)?;
-        let g = &self.geometry;
-        let cap = g.max_seq;
+        if w > self.geometry.max_seq {
+            return Err(Error::Shape(format!(
+                "prefill width {w} exceeds cache {}",
+                self.geometry.max_seq
+            )));
+        }
+        {
+            // admission + page preparation before any compute
+            let mut pool = self.pool.lock().unwrap();
+            let sb = pool
+                .session_batch(session)
+                .ok_or_else(|| Error::NotFound(format!("session {session}")))?;
+            if sb != b {
+                return Err(Error::Shape(format!("session batch {sb} != prefill batch {b}")));
+            }
+            pool.reserve_tokens(session, w)?;
+            pool.prepare_write(session, w.saturating_sub(1))?;
+        }
+        let ex = self.runtime.entry(&self.entry_name("prefill", b, w))?;
         let mut h_lit = h.to_literal()?;
-        let mut new_caches: Vec<(SendLit, SendLit)> = Vec::with_capacity(self.span_len());
+        let mut staged: Vec<(Tensor, Tensor)> = Vec::with_capacity(self.span_len());
         for lits in &self.block_lits {
             let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + lits.len());
             args.push(&h_lit);
@@ -158,68 +294,219 @@ impl ServerNode {
             // out = (h_out, k [B,Hh,W,D], v [B,Hh,W,D])
             let k = ex.output_tensor(&out[1], 1)?;
             let v = ex.output_tensor(&out[2], 2)?;
-            let k_pad = pad_cache(&k, cap)?.to_literal()?;
-            let v_pad = pad_cache(&v, cap)?.to_literal()?;
-            new_caches.push((SendLit(k_pad), SendLit(v_pad)));
+            staged.push((k, v));
             h_lit = out.remove(0);
         }
-        let mut sessions = self.sessions.lock().unwrap();
-        let st = sessions
-            .get_mut(&session)
-            .ok_or_else(|| Error::NotFound(format!("session {session}")))?;
-        if st.batch != b {
-            return Err(Error::Shape(format!("session batch {} != prefill batch {b}", st.batch)));
+        // commit: every block succeeded, write the pages
+        let mut pool = self.pool.lock().unwrap();
+        if !pool.has_session(session) {
+            return Err(Error::NotFound(format!("session {session} closed mid-prefill")));
         }
-        for (slot, kv) in st.caches.iter_mut().zip(new_caches) {
-            *slot = Some(kv);
+        for (bi, (k, v)) in staged.iter().enumerate() {
+            pool.write_prefill(session, bi, 0, k.as_f32(), w)?;
+            pool.write_prefill(session, bi, 1, v.as_f32(), w)?;
         }
+        pool.commit_len(session, w);
+        self.refresh_pool_gauges(&pool);
         ex.output_tensor(&h_lit, 0)
     }
 
-    /// One decode step: h [B,1,H] -> h [B,1,H], caches advance in place.
+    /// One decode step: h [B,1,H] -> h [B,1,H]. The step enters the
+    /// group-commit scheduler and may execute fused with other sessions'
+    /// concurrent steps (one batched forward per hosted span).
     pub fn step(&self, session: u64, cache_len: usize, h: &Tensor) -> Result<Tensor> {
         let t0 = std::time::Instant::now();
         self.active.fetch_add(1, Ordering::Relaxed);
-        let result = self.step_inner(session, cache_len, h);
+        let req = StepRequest { session, cache_len, hidden: h.clone() };
+        let result = self.scheduler.submit(req, |reqs| self.step_batch(reqs));
         self.active.fetch_sub(1, Ordering::Relaxed);
         self.observe(t0);
         result
     }
 
-    fn step_inner(&self, session: u64, cache_len: usize, h: &Tensor) -> Result<Tensor> {
-        let b = h.shape[0];
-        let name = self.entry_name("decode", b, 0);
-        let ex = self.runtime.entry(&name)?;
-        if cache_len + 1 > self.geometry.max_seq {
+    /// Execute a group of decode steps, fusing them into one batched
+    /// executor call when possible (uniform `cache_len`, distinct
+    /// sessions, and a compiled entry for the combined batch size);
+    /// otherwise each request runs through the same paged path alone.
+    /// Results align with `reqs` by index.
+    pub fn step_batch(&self, reqs: &[StepRequest]) -> Vec<Result<Tensor>> {
+        if reqs.is_empty() {
+            return Vec::new();
+        }
+        let cap = self.geometry.max_seq;
+        let mut results: Vec<Option<Result<Tensor>>> = reqs.iter().map(|_| None).collect();
+        let mut ok_idx: Vec<usize> = Vec::new();
+        {
+            // validation + page preparation happen before any compute, so
+            // a failing step cannot leave half-written caches behind
+            let mut pool = self.pool.lock().unwrap();
+            for (i, r) in reqs.iter().enumerate() {
+                match Self::validate_step(&mut pool, r, cap) {
+                    Ok(()) => ok_idx.push(i),
+                    Err(e) => {
+                        if matches!(e, Error::Busy(_)) {
+                            self.metrics.admission_rejects.inc();
+                        }
+                        results[i] = Some(Err(e));
+                    }
+                }
+            }
+        }
+        if !ok_idx.is_empty() {
+            let group: Vec<&StepRequest> = ok_idx.iter().map(|&i| &reqs[i]).collect();
+            let uniform_len = group.windows(2).all(|w| w[0].cache_len == w[1].cache_len);
+            let distinct = group
+                .iter()
+                .enumerate()
+                .all(|(k, r)| group[..k].iter().all(|p| p.session != r.session));
+            let total_b: usize = group.iter().map(|r| r.hidden.shape[0]).sum();
+            let fusable = group.len() > 1
+                && uniform_len
+                && distinct
+                && self.runtime.has_entry(&self.entry_name("decode", total_b, 0));
+            if fusable {
+                self.metrics.batched_steps.inc();
+                self.metrics.fused_rows.add(total_b as u64);
+                match self.execute_span(&group) {
+                    Ok(outs) => {
+                        for (out, &i) in outs.into_iter().zip(&ok_idx) {
+                            results[i] = Some(out);
+                        }
+                    }
+                    Err(e) => {
+                        for &i in &ok_idx {
+                            results[i] = Some(Err(e.duplicate()));
+                        }
+                    }
+                }
+            } else {
+                for &i in &ok_idx {
+                    let single = [&reqs[i]];
+                    results[i] = Some(match self.execute_span(&single) {
+                        Ok(mut outs) => outs.pop().unwrap(),
+                        Err(e) => Err(e),
+                    });
+                }
+            }
+        }
+        results.into_iter().map(|r| r.unwrap()).collect()
+    }
+
+    /// Per-request admission: session exists, batch matches, cache has
+    /// room, prefill happened, and the pool can address the new column.
+    fn validate_step(pool: &mut KvPool, r: &StepRequest, cap: usize) -> Result<()> {
+        let b = pool
+            .session_batch(r.session)
+            .ok_or_else(|| Error::NotFound(format!("session {}", r.session)))?;
+        if r.hidden.shape[0] != b {
             return Err(Error::Shape(format!(
-                "cache overflow: {} + 1 > {}",
-                cache_len, self.geometry.max_seq
+                "session batch {b} != step batch {}",
+                r.hidden.shape[0]
             )));
         }
+        if r.cache_len + 1 > cap {
+            return Err(Error::Shape(format!(
+                "cache overflow: {} + 1 > {cap}",
+                r.cache_len
+            )));
+        }
+        if pool.session_len(r.session).unwrap_or(0) == 0 {
+            return Err(Error::Protocol(format!(
+                "step before prefill (session {})",
+                r.session
+            )));
+        }
+        pool.prepare_write(r.session, r.cache_len)
+    }
+
+    /// Gather → one batched executor call per block → scatter. `group`
+    /// must be pre-validated and share one `cache_len`. The outer error
+    /// means the whole group failed *before* any cache write; inner
+    /// per-request errors can only come from the commit phase.
+    fn execute_span(&self, group: &[&StepRequest]) -> Result<Vec<Result<Tensor>>> {
+        let g = &self.geometry;
+        let (hh, d, cap) = (g.n_heads, g.head_dim, g.max_seq);
+        let n_span = self.span_len();
+        let cache_len = group[0].cache_len;
+        let batches: Vec<usize> = group.iter().map(|r| r.hidden.shape[0]).collect();
+        let total_b: usize = batches.iter().sum();
+        let ex = self.runtime.entry(&self.entry_name("decode", total_b, 0))?;
+        // gather: page tables -> padded [Σb,Hh,cap,D] per block
+        let mut k_cat: Vec<Tensor> = Vec::with_capacity(n_span);
+        let mut v_cat: Vec<Tensor> = Vec::with_capacity(n_span);
+        {
+            let pool = self.pool.lock().unwrap();
+            let floats = hh * cap * d;
+            for bi in 0..n_span {
+                let mut kt = Tensor::zeros(&[total_b, hh, cap, d], DType::F32);
+                let mut vt = Tensor::zeros(&[total_b, hh, cap, d], DType::F32);
+                let mut row0 = 0;
+                for (r, &b) in group.iter().zip(&batches) {
+                    pool.gather_padded(
+                        r.session,
+                        bi,
+                        0,
+                        cap,
+                        &mut kt.as_f32_mut()[row0 * floats..(row0 + b) * floats],
+                    )?;
+                    pool.gather_padded(
+                        r.session,
+                        bi,
+                        1,
+                        cap,
+                        &mut vt.as_f32_mut()[row0 * floats..(row0 + b) * floats],
+                    )?;
+                    row0 += b;
+                }
+                k_cat.push(kt);
+                v_cat.push(vt);
+            }
+        }
+        // one fused forward per block; new KV columns are staged and only
+        // committed once the whole span succeeded
+        let hs: Vec<&Tensor> = group.iter().map(|r| &r.hidden).collect();
         let len_lit = Tensor::from_i32(&[1], &[cache_len as i32]).to_literal()?;
-        let mut h_lit = h.to_literal()?;
-        let mut sessions = self.sessions.lock().unwrap();
-        let st = sessions
-            .get_mut(&session)
-            .ok_or_else(|| Error::NotFound(format!("session {session}")))?;
+        let mut h_lit = crate::runtime::Executor::fuse_rows(&hs)?;
+        let mut staged_k: Vec<Vec<f32>> = Vec::with_capacity(n_span);
+        let mut staged_v: Vec<Vec<f32>> = Vec::with_capacity(n_span);
         for (bi, lits) in self.block_lits.iter().enumerate() {
-            let (k, v) = st.caches[bi]
-                .take()
-                .ok_or_else(|| Error::Protocol(format!("step before prefill (block {bi})")))?;
+            let k_lit = k_cat[bi].to_literal()?;
+            let v_lit = v_cat[bi].to_literal()?;
             let mut args: Vec<&xla::Literal> = Vec::with_capacity(4 + lits.len());
             args.push(&h_lit);
-            args.push(&k.0);
-            args.push(&v.0);
+            args.push(&k_lit);
+            args.push(&v_lit);
             args.push(&len_lit);
             args.extend(lits.iter().map(|l| &l.0));
             let mut out = ex.call_literals(&args)?;
-            // out = (h_out, k', v') — refeed caches as literals (§Perf)
+            // out = (h_out, k', v'); only the column at cache_len changed
             let v_new = out.pop().unwrap();
             let k_new = out.pop().unwrap();
-            st.caches[bi] = Some((SendLit(k_new), SendLit(v_new)));
+            staged_k.push(extract_column(&ex.output_tensor(&k_new, 1)?, hh, d, cache_len));
+            staged_v.push(extract_column(&ex.output_tensor(&v_new, 2)?, hh, d, cache_len));
             h_lit = out.pop().unwrap();
         }
-        ex.output_tensor(&h_lit, 0)
+        let h_out = ex.output_tensor(&h_lit, 0)?;
+        // commit: scatter the staged columns into each session's pages
+        let mut pool = self.pool.lock().unwrap();
+        let mut outs = Vec::with_capacity(group.len());
+        let mut row0 = 0;
+        for (r, &b) in group.iter().zip(&batches) {
+            let commit = (|| -> Result<Tensor> {
+                for bi in 0..n_span {
+                    let kc = &staged_k[bi][row0 * hh * d..(row0 + b) * hh * d];
+                    pool.write_column(r.session, bi, 0, cache_len, kc)?;
+                    let vc = &staged_v[bi][row0 * hh * d..(row0 + b) * hh * d];
+                    pool.write_column(r.session, bi, 1, cache_len, vc)?;
+                }
+                pool.commit_len(r.session, cache_len + 1);
+                h_out.slice_rows(row0, b)
+            })();
+            outs.push(commit);
+            row0 += b;
+        }
+        self.refresh_pool_gauges(&pool);
+        Ok(outs)
     }
 
     /// Stateless forward over the span: h [B,S,H] -> h' (no cache writes).
@@ -306,14 +593,21 @@ impl ServerNode {
             Err(e) => Message::Error { message: e.to_string() },
         };
         match msg {
-            Message::Ping => Message::Pong {
-                start: self.start as u32,
-                end: self.end as u32,
-                throughput: self.measured_throughput() as f32,
-                queue_depth: self.queue_depth(),
-            },
-            Message::OpenSession { session, batch, .. } => {
-                match self.open_session(*session, *batch as usize) {
+            Message::Ping => {
+                let (free_pages, total_pages) = self.pool_stats();
+                Message::Pong {
+                    start: self.start as u32,
+                    end: self.end as u32,
+                    throughput: self.measured_throughput() as f32,
+                    queue_depth: self.queue_depth(),
+                    free_pages: free_pages as u32,
+                    total_pages: total_pages as u32,
+                    batch_width: self.batch_width() as u32,
+                }
+            }
+            Message::OpenSession { session, batch, prefix_len, max_new } => {
+                let max_tokens = (*prefix_len + *max_new) as usize;
+                match self.open_session(*session, *batch as usize, max_tokens) {
                     Ok(()) => Message::SessionOpened { session: *session },
                     Err(e) => Message::Error { message: e.to_string() },
                 }
@@ -351,23 +645,21 @@ impl ServerNode {
     }
 }
 
-/// Pad prefill KV [B,Hh,W,D] into cache capacity [B,Hh,C,D] with zeros.
-fn pad_cache(kv: &Tensor, cap: usize) -> Result<Tensor> {
-    let (b, hh, w, d) = (kv.shape[0], kv.shape[1], kv.shape[2], kv.shape[3]);
-    if w > cap {
-        return Err(Error::Shape(format!("prefill width {w} exceeds cache {cap}")));
-    }
-    let mut out = Tensor::zeros(&[b, hh, cap, d], kv.dtype);
-    let src = kv.as_f32();
-    let dst = out.as_f32_mut();
-    for bi in 0..b {
-        for hi in 0..hh {
-            let src_off = ((bi * hh + hi) * w) * d;
-            let dst_off = ((bi * hh + hi) * cap) * d;
-            dst[dst_off..dst_off + w * d].copy_from_slice(&src[src_off..src_off + w * d]);
+/// Pull one token column out of an updated cache `[R, Hh, C, D]` at
+/// position `pos`, as `[R, Hh, D]` floats — the only slice a decode step
+/// actually changed, and all that gets scattered back into the pool.
+fn extract_column(t: &Tensor, hh: usize, d: usize, pos: usize) -> Vec<f32> {
+    let (rows, cap) = (t.shape[0], t.shape[2]);
+    let src = t.as_f32();
+    let mut col = vec![0.0f32; rows * hh * d];
+    for r in 0..rows {
+        for h in 0..hh {
+            let s = ((r * hh + h) * cap + pos) * d;
+            let o = (r * hh + h) * d;
+            col[o..o + d].copy_from_slice(&src[s..s + d]);
         }
     }
-    Ok(out)
+    col
 }
 
 #[cfg(test)]
@@ -384,20 +676,9 @@ mod tests {
         )
     }
 
-    #[test]
-    fn pad_cache_layout() {
-        let kv = Tensor::from_f32(&[1, 2, 2, 3], &[1., 2., 3., 4., 5., 6., 7., 8., 9., 10., 11., 12.]);
-        let out = pad_cache(&kv, 4).unwrap();
-        assert_eq!(out.shape, vec![1, 2, 4, 3]);
-        let o = out.as_f32();
-        assert_eq!(&o[0..6], &[1., 2., 3., 4., 5., 6.]);
-        assert_eq!(&o[6..12], &[0.; 6]);
-        assert_eq!(&o[12..18], &[7., 8., 9., 10., 11., 12.]);
-        assert!(pad_cache(&kv, 1).is_err());
-    }
-
     /// Distributed decode must reproduce the single-process golden
-    /// generation: two servers splitting the blocks, real PJRT compute.
+    /// generation: two servers splitting the blocks, real PJRT compute —
+    /// now through the paged pool and the step scheduler.
     #[test]
     fn prefill_and_step_match_manifest_golden() {
         let home = test_home();
@@ -422,8 +703,8 @@ mod tests {
         ids[..p].copy_from_slice(prefix.as_i32());
         let h0 = head.embed(&Tensor::from_i32(&[b, w], &ids)).unwrap();
 
-        s1.open_session(1, b).unwrap();
-        s2.open_session(1, b).unwrap();
+        s1.open_session(1, b, 0).unwrap();
+        s2.open_session(1, b, 0).unwrap();
         let h1 = s1.prefill(1, &h0).unwrap();
         let h2 = s2.prefill(1, &h1).unwrap();
 
@@ -451,6 +732,157 @@ mod tests {
         }
         assert!(s1.metrics.requests.get() >= 9);
         assert!(s1.measured_throughput() > 0.0);
+        // pool pages were allocated for the session and only for it
+        let (free, total) = s1.pool_stats();
+        assert!(free < total);
+        s1.close_session(1);
+        let (free_after, _) = s1.pool_stats();
+        assert!(free_after > free, "closing the session returns its pages");
+    }
+
+    /// Two concurrent sessions stepped through the batched path must be
+    /// bitwise identical to the same sessions stepped sequentially on an
+    /// untouched server (the continuous-batching determinism contract).
+    #[test]
+    fn batched_steps_bitwise_match_sequential() {
+        let home = test_home();
+        let g = home.geometry().clone();
+        let rt = rt_for(&home, 1);
+        let a = ServerNode::start("a", &home, rt.clone(), 0..g.n_layers, Precision::F16, false).unwrap();
+        let b = ServerNode::start("b", &home, rt.clone(), 0..g.n_layers, Precision::F16, false).unwrap();
+
+        let mut vals = vec![0f32; 128 * g.hidden];
+        let mut rng = crate::config::Rng::new(11);
+        for v in vals.iter_mut() {
+            *v = (rng.f64() as f32 - 0.5) * 2.0;
+        }
+        let h0 = Tensor::from_f32(&[1, 128, g.hidden], &vals);
+        let h_step = Tensor::from_f32(&[1, 1, g.hidden], &vals[..g.hidden]);
+
+        // batched server: two sessions, one step_batch call
+        a.open_session(1, 1, 0).unwrap();
+        a.open_session(2, 1, 0).unwrap();
+        a.prefill(1, &h0).unwrap();
+        a.prefill(2, &h0).unwrap();
+        let reqs = [
+            StepRequest { session: 1, cache_len: 8, hidden: h_step.clone() },
+            StepRequest { session: 2, cache_len: 8, hidden: h_step.clone() },
+        ];
+        let outs = a.step_batch(&reqs);
+        let o1 = outs[0].as_ref().unwrap();
+        let o2 = outs[1].as_ref().unwrap();
+
+        // sequential reference: a fresh server, one session at a time
+        b.open_session(9, 1, 0).unwrap();
+        b.prefill(9, &h0).unwrap();
+        let o_ref = b.step(9, 8, &h_step).unwrap();
+        assert_eq!(o1.max_abs_diff(&o_ref), 0.0, "batched row 0 != sequential");
+        assert_eq!(o2.max_abs_diff(&o_ref), 0.0, "batched row 1 != sequential");
+
+        // a second step must also agree: caches advanced identically
+        let outs2 = a.step_batch(&[
+            StepRequest { session: 1, cache_len: 9, hidden: h_step.clone() },
+            StepRequest { session: 2, cache_len: 9, hidden: h_step.clone() },
+        ]);
+        let o_ref2 = b.step(9, 9, &h_step).unwrap();
+        assert_eq!(outs2[0].as_ref().unwrap().max_abs_diff(&o_ref2), 0.0);
+        assert_eq!(outs2[1].as_ref().unwrap().max_abs_diff(&o_ref2), 0.0);
+    }
+
+    /// Regression: the seed took cache literals out of the session before
+    /// executing, so an errored step left empty slots and the *next* step
+    /// failed with "step before prefill". With staged commits the session
+    /// must stay fully usable after a failed step.
+    #[test]
+    fn errored_step_leaves_session_usable() {
+        let home = test_home();
+        let g = home.geometry().clone();
+        let rt = rt_for(&home, 1);
+        let s = ServerNode::start("x", &home, rt.clone(), 0..g.n_layers, Precision::F16, false).unwrap();
+        let clean = ServerNode::start("c", &home, rt, 0..g.n_layers, Precision::F16, false).unwrap();
+        let mut vals = vec![0f32; 128 * g.hidden];
+        let mut rng = crate::config::Rng::new(13);
+        for v in vals.iter_mut() {
+            *v = (rng.f64() as f32 - 0.5) * 2.0;
+        }
+        let h0 = Tensor::from_f32(&[1, 128, g.hidden], &vals);
+        let h_good = Tensor::from_f32(&[1, 1, g.hidden], &vals[..g.hidden]);
+        for node in [&s, &clean] {
+            node.open_session(1, 1, 0).unwrap();
+            node.prefill(1, &h0).unwrap();
+            node.step(1, 8, &h_good).unwrap();
+        }
+
+        // malformed hidden dim -> the executor call fails; staged commit
+        // means nothing may have been written to the pool
+        let h_bad = Tensor::zeros(&[1, 1, g.hidden + 3], crate::model::tensor::DType::F32);
+        assert!(s.step(1, 9, &h_bad).is_err());
+
+        // the session must remain bitwise in sync with a server that
+        // never saw the bad step (the seed instead died here with
+        // "step before prefill" because the taken cache slots were lost)
+        let after = s.step(1, 9, &h_good).unwrap();
+        let want = clean.step(1, 9, &h_good).unwrap();
+        assert_eq!(after.max_abs_diff(&want), 0.0, "caches corrupted by errored step");
+        assert!(s.step(1, 10, &h_good).is_ok());
+    }
+
+    #[test]
+    fn admission_control_rejects_when_pool_full() {
+        let home = test_home();
+        let g = home.geometry().clone();
+        let rt = rt_for(&home, 1);
+        // pool sized for exactly one full-length batch-1 session
+        let one_session = 2 * g.max_seq.div_ceil(PAGE_TOKENS);
+        let opts = ServerOptions { pool_pages: Some(one_session), ..Default::default() };
+        let s = ServerNode::start_with("x", &home, rt, 0..1, Precision::F16, false, opts).unwrap();
+        s.open_session(1, 1, 0).unwrap();
+        let err = s.open_session(2, 1, 0).unwrap_err();
+        assert!(matches!(err, Error::Busy(_)), "{err}");
+        assert!(err.is_retryable(), "Busy must be retryable so clients re-route");
+        assert_eq!(s.metrics.admission_rejects.get(), 1);
+        // closing frees the reservation; the next open succeeds
+        s.close_session(1);
+        s.open_session(2, 1, 0).unwrap();
+        let (free, total) = s.pool_stats();
+        assert_eq!(free, 0);
+        assert_eq!(total, one_session as u64);
+    }
+
+    #[test]
+    fn dht_entry_carries_live_occupancy() {
+        let home = test_home();
+        let rt = rt_for(&home, 1);
+        let s = ServerNode::start("x", &home, rt, 0..2, Precision::F16, false).unwrap();
+        let before = s.dht_entry();
+        assert_eq!((before.start, before.end), (0, 2));
+        assert_eq!(before.free_pages, before.total_pages);
+        s.open_session(1, 1, 0).unwrap();
+        let after = s.dht_entry();
+        assert!(after.free_pages < before.free_pages);
+        assert_eq!(after.total_pages, before.total_pages);
+        assert!(after.batch_width >= 1);
+        // round-trips through the v2 record format
+        assert_eq!(crate::dht::ServerEntry::decode(&after.encode()), Some(after));
+    }
+
+    #[test]
+    fn pong_reports_pool_occupancy() {
+        let home = test_home();
+        let rt = rt_for(&home, 1);
+        let s = ServerNode::start("x", &home, rt, 0..1, Precision::F16, false).unwrap();
+        let Message::Pong { free_pages, total_pages, batch_width, .. } = s.handle(&Message::Ping)
+        else {
+            panic!("expected Pong");
+        };
+        assert!(total_pages > 0);
+        assert_eq!(free_pages, total_pages);
+        assert!(batch_width >= 1);
+        s.open_session(5, 1, 0).unwrap();
+        let Message::Pong { free_pages: after, .. } = s.handle(&Message::Ping) else {
+            panic!("expected Pong");
+        };
+        assert!(after < free_pages, "open session must consume pool budget");
     }
 
     #[test]
@@ -458,7 +890,7 @@ mod tests {
         let home = test_home();
         let rt = rt_for(&home, 1);
         let s = ServerNode::start("x", &home, rt, 0..1, Precision::F16, false).unwrap();
-        s.open_session(5, 1).unwrap();
+        s.open_session(5, 1, 0).unwrap();
         let h = Tensor::zeros(&[1, 1, home.geometry().hidden], crate::model::tensor::DType::F32);
         assert!(s.step(5, 0, &h).is_err());
     }
@@ -478,7 +910,7 @@ mod tests {
         let rt = rt_for(&home, 1);
         let g = home.geometry().clone();
         let s = ServerNode::start("x", &home, rt, 0..1, Precision::F16, false).unwrap();
-        s.open_session(1, 1).unwrap();
+        s.open_session(1, 1, 0).unwrap();
         let h = Tensor::zeros(&[1, 1, g.hidden], crate::model::tensor::DType::F32);
         assert!(s.step(1, g.max_seq, &h).is_err());
     }
@@ -498,8 +930,8 @@ mod tests {
             *v = (rng.f64() as f32 - 0.5) * 2.0;
         }
         let h = Tensor::from_f32(&[1, 128, g.hidden], &vals);
-        f.open_session(1, 1).unwrap();
-        q.open_session(1, 1).unwrap();
+        f.open_session(1, 1, 0).unwrap();
+        q.open_session(1, 1, 0).unwrap();
         let a = f.prefill(1, &h).unwrap();
         let b = q.prefill(1, &h).unwrap();
         let scale = a.as_f32().iter().fold(0f32, |m, v| m.max(v.abs()));

@@ -1,0 +1,325 @@
+//! Continuous-batching step scheduler — group commit for decode steps.
+//!
+//! The seed server executed sessions strictly one-at-a-time: with N
+//! concurrent clients a server streamed its block weights N times per
+//! "round" of decode steps. But a decode step is memory-bound — the
+//! weight stream is the cost, the per-row math is nearly free — so
+//! coalescing the steps of many sessions into one batched forward
+//! amortizes the stream across all of them. That is the paper's central
+//! throughput lever (each server runs "at batch size hundreds" by serving
+//! many clients), and what the follow-up work calls server-side
+//! continuous batching.
+//!
+//! Mechanism (group commit, same shape as WAL batching in databases):
+//!
+//! 1. Every request thread enqueues its [`StepRequest`] and, if no leader
+//!    is active, becomes the **leader**.
+//! 2. The leader waits up to `window` for more arrivals (bounded by
+//!    `max_width` fused rows), then drains the longest *compatible* run:
+//!    requests with the same `cache_len` (the decode artifact takes one
+//!    position scalar for the whole batch) and pairwise-distinct sessions.
+//! 3. The leader executes the whole group via the caller-provided closure
+//!    (one gathered executor call in [`crate::server::ServerNode`]),
+//!    publishes per-ticket results, steps down, and wakes everyone.
+//! 4. Followers block until their ticket's result appears; leftover
+//!    queued requests elect the next leader.
+//!
+//! The batch is sorted by session id before execution so the fused row
+//! order — and therefore the arithmetic — is independent of thread
+//! arrival order: two concurrent sessions produce bitwise-identical
+//! outputs to the same sessions run back-to-back (asserted in the server
+//! tests).
+//!
+//! The scheduler is transport-agnostic: it takes the execution closure
+//! per call, owns no model state, and is driven by the same
+//! thread-per-connection model the TCP service already uses (a waiting
+//! request thread *is* the batch's timer; no extra runtime needed).
+
+use crate::error::Result;
+use crate::model::tensor::Tensor;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One session's decode step, as queued for fusion.
+#[derive(Debug, Clone)]
+pub struct StepRequest {
+    pub session: u64,
+    /// Tokens already in the cache (the artifact's position scalar).
+    pub cache_len: usize,
+    /// Hidden states `[B, 1, H]` for this session's rows.
+    pub hidden: Tensor,
+}
+
+struct SchedState {
+    next_ticket: u64,
+    queue: VecDeque<(u64, StepRequest)>,
+    results: HashMap<u64, Result<Tensor>>,
+    leader_active: bool,
+}
+
+/// Group-commit scheduler; one per [`crate::server::ServerNode`].
+pub struct StepScheduler {
+    state: Mutex<SchedState>,
+    arrived: Condvar,
+    done: Condvar,
+    /// How long a leader lingers for co-batchable arrivals. Zero means
+    /// "fuse only what is already queued" — the right setting for tests
+    /// and for single-client deployments.
+    pub window: Duration,
+    /// Upper bound on fused requests per batch.
+    pub max_width: usize,
+}
+
+impl StepScheduler {
+    pub fn new(window: Duration, max_width: usize) -> Self {
+        StepScheduler {
+            state: Mutex::new(SchedState {
+                next_ticket: 0,
+                queue: VecDeque::new(),
+                results: HashMap::new(),
+                leader_active: false,
+            }),
+            arrived: Condvar::new(),
+            done: Condvar::new(),
+            window,
+            max_width: max_width.max(1),
+        }
+    }
+
+    /// Requests currently queued (for metrics / Pong).
+    pub fn queue_len(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    /// Submit one step and block until its result is ready. `exec`
+    /// receives the fused, session-sorted batch this request ends up in
+    /// (possibly just itself) and must return one result per request, in
+    /// order.
+    pub fn submit<F>(&self, req: StepRequest, exec: F) -> Result<Tensor>
+    where
+        F: Fn(&[StepRequest]) -> Vec<Result<Tensor>>,
+    {
+        let mut st = self.state.lock().unwrap();
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        st.queue.push_back((ticket, req));
+        self.arrived.notify_one();
+        loop {
+            if let Some(r) = st.results.remove(&ticket) {
+                return r;
+            }
+            if !st.leader_active {
+                st.leader_active = true;
+                // linger for co-batchable arrivals
+                if !self.window.is_zero() {
+                    let deadline = Instant::now() + self.window;
+                    loop {
+                        let now = Instant::now();
+                        if now >= deadline || st.queue.len() >= self.max_width {
+                            break;
+                        }
+                        let (guard, _) = self
+                            .arrived
+                            .wait_timeout(st, deadline - now)
+                            .unwrap();
+                        st = guard;
+                    }
+                }
+                let batch = Self::take_compatible(&mut st.queue, self.max_width);
+                drop(st);
+                let reqs: Vec<StepRequest> = batch.iter().map(|(_, r)| r.clone()).collect();
+                let mut outs = exec(&reqs);
+                debug_assert_eq!(outs.len(), reqs.len(), "exec must return one result per request");
+                // defensive: never strand a follower waiting on a ticket
+                // the executor forgot — a missing result becomes an error
+                while outs.len() < batch.len() {
+                    outs.push(Err(crate::error::Error::Other(
+                        "step executor returned too few results".into(),
+                    )));
+                }
+                outs.truncate(batch.len());
+                let mut st2 = self.state.lock().unwrap();
+                for ((t, _), out) in batch.into_iter().zip(outs) {
+                    st2.results.insert(t, out);
+                }
+                st2.leader_active = false;
+                // wake followers for their results and one queued stranger
+                // to lead the next (incompatible) group
+                self.done.notify_all();
+                self.arrived.notify_one();
+                st = st2;
+                continue;
+            }
+            st = self.done.wait(st).unwrap();
+        }
+    }
+
+    /// Drain the head-compatible group: same `cache_len` as the oldest
+    /// queued request, pairwise-distinct sessions, up to `max_width`.
+    /// Returned sorted by session id for order-independent arithmetic.
+    fn take_compatible(
+        queue: &mut VecDeque<(u64, StepRequest)>,
+        max_width: usize,
+    ) -> Vec<(u64, StepRequest)> {
+        let Some(key_len) = queue.front().map(|(_, r)| r.cache_len) else {
+            return Vec::new();
+        };
+        let mut batch: Vec<(u64, StepRequest)> = Vec::new();
+        let mut rest: VecDeque<(u64, StepRequest)> = VecDeque::new();
+        while let Some((t, r)) = queue.pop_front() {
+            let compatible = batch.len() < max_width
+                && r.cache_len == key_len
+                && batch.iter().all(|(_, b)| b.session != r.session);
+            if compatible {
+                batch.push((t, r));
+            } else {
+                rest.push_back((t, r));
+            }
+        }
+        *queue = rest;
+        batch.sort_by_key(|(_, r)| r.session);
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tensor::Tensor;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    fn req(session: u64, cache_len: usize, v: f32) -> StepRequest {
+        StepRequest { session, cache_len, hidden: Tensor::from_f32(&[1, 1, 2], &[v, v]) }
+    }
+
+    /// Echo executor: adds 1.0 to each request's hidden, tagging results
+    /// so routing back to tickets is observable.
+    fn echo(reqs: &[StepRequest]) -> Vec<Result<Tensor>> {
+        reqs.iter()
+            .map(|r| {
+                let mut t = r.hidden.clone();
+                t.as_f32_mut().iter_mut().for_each(|x| *x += 1.0);
+                Ok(t)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_request_executes_immediately() {
+        let s = StepScheduler::new(Duration::ZERO, 8);
+        let out = s.submit(req(1, 5, 3.0), echo).unwrap();
+        assert_eq!(out.as_f32(), &[4.0, 4.0]);
+        assert_eq!(s.queue_len(), 0);
+    }
+
+    #[test]
+    fn concurrent_requests_fuse_and_route_results() {
+        let s = Arc::new(StepScheduler::new(Duration::from_millis(50), 8));
+        let widths = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for c in 0..4u64 {
+            let s = s.clone();
+            let widths = widths.clone();
+            handles.push(std::thread::spawn(move || {
+                let out = s
+                    .submit(req(c, 7, c as f32), move |reqs| {
+                        widths.lock().unwrap().push(reqs.len());
+                        // batch must be session-sorted and duplicate-free
+                        assert!(reqs.windows(2).all(|w| w[0].session < w[1].session));
+                        echo(reqs)
+                    })
+                    .unwrap();
+                // each session gets ITS OWN result back (+1 on its value)
+                assert_eq!(out.as_f32()[0], c as f32 + 1.0);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // all 4 ran; at least one batch fused >1 request under the window
+        let w = widths.lock().unwrap();
+        let total: usize = w.iter().sum();
+        assert_eq!(total, 4);
+        assert!(w.len() <= 4);
+    }
+
+    #[test]
+    fn mixed_cache_lens_split_into_groups() {
+        let s = Arc::new(StepScheduler::new(Duration::from_millis(30), 8));
+        let mut handles = Vec::new();
+        for c in 0..6u64 {
+            let s = s.clone();
+            let len = if c % 2 == 0 { 10 } else { 20 };
+            handles.push(std::thread::spawn(move || {
+                let out = s
+                    .submit(req(c, len, 0.0), |reqs| {
+                        // a fused group never mixes cache lengths
+                        assert!(reqs.windows(2).all(|w| w[0].cache_len == w[1].cache_len));
+                        echo(reqs)
+                    })
+                    .unwrap();
+                assert_eq!(out.as_f32()[0], 1.0);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn same_session_never_fused() {
+        // two queued steps of one session must run in separate groups
+        let mut q: VecDeque<(u64, StepRequest)> = VecDeque::new();
+        q.push_back((0, req(9, 4, 0.0)));
+        q.push_back((1, req(9, 4, 0.0)));
+        q.push_back((2, req(5, 4, 0.0)));
+        let batch = StepScheduler::take_compatible(&mut q, 8);
+        assert_eq!(batch.len(), 2); // sessions 9 and 5
+        assert_eq!(batch[0].1.session, 5); // sorted by session
+        assert_eq!(q.len(), 1); // duplicate left for the next group
+        assert_eq!(q[0].0, 1);
+    }
+
+    #[test]
+    fn max_width_caps_group() {
+        let mut q: VecDeque<(u64, StepRequest)> = VecDeque::new();
+        for c in 0..5u64 {
+            q.push_back((c, req(c, 3, 0.0)));
+        }
+        let batch = StepScheduler::take_compatible(&mut q, 2);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn errors_propagate_to_the_right_caller() {
+        let s = Arc::new(StepScheduler::new(Duration::from_millis(30), 8));
+        let calls = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for c in 0..3u64 {
+            let s = s.clone();
+            let calls = calls.clone();
+            handles.push(std::thread::spawn(move || {
+                let r = s.submit(req(c, 1, 0.0), move |reqs| {
+                    calls.fetch_add(1, Ordering::SeqCst);
+                    reqs.iter()
+                        .map(|r| {
+                            if r.session == 1 {
+                                Err(crate::error::Error::Shape("bad row".into()))
+                            } else {
+                                Ok(r.hidden.clone())
+                            }
+                        })
+                        .collect()
+                });
+                (c, r.is_ok())
+            }));
+        }
+        let results: Vec<(u64, bool)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for (c, ok) in results {
+            assert_eq!(ok, c != 1, "session {c}");
+        }
+    }
+}

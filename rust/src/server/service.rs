@@ -134,7 +134,9 @@ impl TcpSwarm {
             Message::HiddenResult { hidden } => hidden
                 .to_tensor()
                 .ok_or_else(|| Error::Protocol("bad tensor".into())),
-            Message::Error { message } => Err(Error::ChainBroken(message)),
+            // admission rejections (pool growth mid-session) come back
+            // typed as Busy; anything else is a retryable chain break
+            Message::Error { message } => Err(Error::from_wire(message)),
             other => Err(Error::Protocol(format!("unexpected {other:?}"))),
         }
     }
@@ -144,13 +146,26 @@ impl TcpSwarm {
         for (id, remote) in &self.peers {
             let t0 = std::time::Instant::now();
             match self.call(*id, &Message::Ping) {
-                Ok(Message::Pong { start, end, throughput, queue_depth }) => {
+                Ok(Message::Pong {
+                    start,
+                    end,
+                    throughput,
+                    queue_depth,
+                    free_pages,
+                    total_pages,
+                    batch_width: _,
+                }) => {
                     let rtt = t0.elapsed().as_secs_f64();
                     let span = (end - start) as usize;
                     let span_compute_s = if throughput > 0.0 {
                         1.0 / throughput as f64
                     } else {
                         0.01 * span as f64
+                    };
+                    let free_ratio = if total_pages > 0 {
+                        free_pages as f64 / total_pages as f64
+                    } else {
+                        1.0
                     };
                     *remote.view.lock().unwrap() = Some(ServerView {
                         id: *id,
@@ -160,6 +175,7 @@ impl TcpSwarm {
                         bandwidth_bps: self.assumed_bandwidth_bps,
                         span_compute_s,
                         queue_depth,
+                        free_ratio,
                     });
                 }
                 _ => {
@@ -197,6 +213,9 @@ impl ChainClient for TcpSwarm {
             },
         )? {
             Message::SessionOpened { .. } => Ok(()),
+            // admission rejections arrive as Error replies; surface them
+            // as retryable Busy so the session layer can route elsewhere
+            Message::Error { message } => Err(Error::from_wire(message)),
             other => Err(Error::Protocol(format!("unexpected {other:?}"))),
         }
     }

@@ -81,9 +81,9 @@ fn announcements_drive_balancer_and_expire() {
 
     // three servers announce spans
     let servers = [
-        ServerEntry { server: ids[0], start: 0, end: 4, throughput: 2.0 },
-        ServerEntry { server: ids[1], start: 2, end: 6, throughput: 1.0 },
-        ServerEntry { server: ids[2], start: 4, end: 8, throughput: 1.5 },
+        ServerEntry { server: ids[0], start: 0, end: 4, throughput: 2.0, free_pages: 0, total_pages: 0, batch_width: 0 },
+        ServerEntry { server: ids[1], start: 2, end: 6, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0 },
+        ServerEntry { server: ids[2], start: 4, end: 8, throughput: 1.5, free_pages: 0, total_pages: 0, batch_width: 0 },
     ];
     for s in &servers {
         dir.announce(s, 0);
@@ -115,6 +115,51 @@ fn announcements_drive_balancer_and_expire() {
     assert!(balancer::swarm_throughput(&cov) > 0.0);
 }
 
+/// The v2 announcement loop end-to-end: entries carrying pool occupancy
+/// (the shape `ServerNode::dht_entry` produces from live state) travel
+/// through the DHT, and the load-aware balancer reads occupancy back
+/// out — a full replica loses half its weight in coverage.
+#[test]
+fn pool_occupancy_flows_through_dht_to_balancer() {
+    let mut rng = Rng::new(3);
+    let ids: Vec<NodeId> = (0..30).map(|_| NodeId::random(&mut rng)).collect();
+    let net = util::Net::new(&ids);
+    let dir = BlockDirectory::new(&net, ids[..3].to_vec(), "bloom-mini");
+    let n_blocks = 4u32;
+
+    // two replicas of the same span; one pool is fully reserved
+    let idle = ServerEntry {
+        server: ids[0],
+        start: 0,
+        end: n_blocks,
+        throughput: 2.0,
+        free_pages: 64,
+        total_pages: 64,
+        batch_width: 8,
+    };
+    let full = ServerEntry { server: ids[1], free_pages: 0, ..idle.clone() };
+    dir.announce(&idle, 0);
+    dir.announce(&full, 0);
+
+    let snap = dir.snapshot(n_blocks);
+    let plain = balancer::swarm_throughput(&BlockCoverage::from_entries(
+        n_blocks as usize,
+        snap.iter().flatten(),
+    ));
+    let aware = balancer::swarm_throughput(&BlockCoverage::from_entries_load_aware(
+        n_blocks as usize,
+        snap.iter().flatten(),
+    ));
+    assert_eq!(plain, 4.0);
+    assert_eq!(aware, 3.0, "the full replica counts at half weight");
+
+    // round-trip sanity on the occupancy fields through the DHT
+    let got = dir.lookup(0);
+    let full_back = got.iter().find(|e| e.server == ids[1]).unwrap();
+    assert_eq!(full_back.free_ratio(), 0.0);
+    assert_eq!(full_back.batch_width, 8);
+}
+
 #[test]
 fn departed_server_invisible_after_ttl_but_others_persist() {
     let mut rng = Rng::new(2);
@@ -122,11 +167,11 @@ fn departed_server_invisible_after_ttl_but_others_persist() {
     let net = util::Net::new(&ids);
     let dir = BlockDirectory::new(&net, ids[..3].to_vec(), "bloom-mini");
 
-    dir.announce(&ServerEntry { server: ids[0], start: 0, end: 4, throughput: 1.0 }, 0);
+    dir.announce(&ServerEntry { server: ids[0], start: 0, end: 4, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0 }, 0);
     // half-TTL later the second server announces
     let half = dir.announce_ttl_ms / 2;
     net.now_ms.set(half);
-    dir.announce(&ServerEntry { server: ids[1], start: 0, end: 4, throughput: 2.0 }, half);
+    dir.announce(&ServerEntry { server: ids[1], start: 0, end: 4, throughput: 2.0, free_pages: 0, total_pages: 0, batch_width: 0 }, half);
 
     // just past the first server's expiry: only the second remains
     net.now_ms.set(dir.announce_ttl_ms + 1);

@@ -42,6 +42,7 @@ fn prompt_tuning_loss_decreases_through_real_blocks() {
         msg_bytes: (b * s * g.hidden * 4) as u64,
         beam_width: 8,
         queue_penalty_s: 0.05,
+        pool_penalty_s: 0.05,
     };
     let mut rng = Rng::new(7);
     let half = (g.vocab / 2) as i32;
@@ -105,6 +106,7 @@ fn server_weights_frozen_during_training() {
                 msg_bytes: (g.hidden * 4) as u64,
                 beam_width: 8,
                 queue_penalty_s: 0.05,
+                pool_penalty_s: 0.05,
             },
             max_recoveries: 1,
         };
@@ -125,6 +127,7 @@ fn server_weights_frozen_during_training() {
         msg_bytes: (b * s * g.hidden * 4) as u64,
         beam_width: 8,
         queue_penalty_s: 0.05,
+        pool_penalty_s: 0.05,
     };
     let ids = vec![5i32; b * s];
     let embeds = head.embed(&Tensor::from_i32(&[b, s], &ids)).unwrap();

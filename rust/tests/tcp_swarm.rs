@@ -36,6 +36,7 @@ fn cfg(home: &ModelHome) -> SessionConfig {
             msg_bytes: (g.hidden + g.hidden / 64 * 4) as u64,
             beam_width: 8,
             queue_penalty_s: 0.05,
+            pool_penalty_s: 0.05,
         },
         max_recoveries: 3,
     }
