@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Perf trajectory gate: run the shared-prefix multiclient bench and emit
+# a machine-readable summary so successive PRs can be compared.
+#
+#   ci/bench.sh [OUT.json]     # default: BENCH_prefix_cache.json (cwd)
+#
+# The bench needs the AOT artifacts (`make artifacts`); it exercises the
+# real paged pool + prefix cache at BLOOM-mini scale and the simulator at
+# BLOOM-176B scale, then writes:
+#   pages_first_session / pages_per_extra_session  — marginal-cost check
+#   prefix_hit_rate, prefill_skips, cow_forks      — cache behaviour
+#   aggregate_steps_per_s                          — multiclient decode
+#   sim_ttft_cold_s / sim_ttft_warm_s              — TTFT win at scale
+
+set -euo pipefail
+OUT="${1:-$(pwd)/BENCH_prefix_cache.json}"
+cd "$(dirname "$0")/../rust"
+
+echo "==> cargo bench --bench multiclient (BENCH_OUT=$OUT)"
+BENCH_OUT="$OUT" cargo bench --bench multiclient
+
+test -s "$OUT" || { echo "bench did not write $OUT" >&2; exit 1; }
+echo
+echo "==> $OUT"
+cat "$OUT"

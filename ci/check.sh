@@ -30,6 +30,9 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 step "cargo build --release"
 cargo build --release
 
+step "cargo build --release --examples"
+cargo build --release --examples
+
 step "cargo test"
 cargo test -q
 

@@ -40,11 +40,10 @@ fn main() -> petals::Result<()> {
         route: RouteQuery {
             n_blocks: g.n_layers,
             msg_bytes: (g.hidden * 4) as u64,
-            beam_width: 8,
-            queue_penalty_s: 0.05,
-            pool_penalty_s: 0.05,
+            ..Default::default()
         },
         max_recoveries: 3,
+        prefix_tokens: vec![],
     };
     let backend = ChatBackend::new(swarm, head, cfg);
     let stop = Arc::new(AtomicBool::new(false));

@@ -49,11 +49,10 @@ fn main() -> petals::Result<()> {
         route: RouteQuery {
             n_blocks: g.n_layers,
             msg_bytes: (g.hidden * 4) as u64,
-            beam_width: 8,
-            queue_penalty_s: 0.05,
-            pool_penalty_s: 0.05,
+            ..Default::default()
         },
         max_recoveries: 5,
+        prefix_tokens: vec![],
     };
 
     // --- reference run, no failures -------------------------------------

@@ -43,9 +43,7 @@ fn main() -> petals::Result<()> {
     let route = RouteQuery {
         n_blocks: g.n_layers,
         msg_bytes: (b * s * g.hidden * 4) as u64,
-        beam_width: 8,
-        queue_penalty_s: 0.05,
-        pool_penalty_s: 0.05,
+        ..Default::default()
     };
 
     let mut rng = Rng::new(42);

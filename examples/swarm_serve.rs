@@ -74,11 +74,10 @@ fn main() -> petals::Result<()> {
         route: RouteQuery {
             n_blocks: g.n_layers,
             msg_bytes: (g.hidden + g.hidden / 64 * 4) as u64, // compressed
-            beam_width: 8,
-            queue_penalty_s: 0.05,
-            pool_penalty_s: 0.05,
+            ..Default::default()
         },
         max_recoveries: 3,
+        prefix_tokens: vec![],
     };
 
     println!("\nserving {n_requests} generation requests ({n_new} tokens each)...");

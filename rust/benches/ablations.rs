@@ -40,6 +40,7 @@ fn random_views(rng: &mut Rng, n_blocks: usize, n_servers: usize) -> Vec<ServerV
                 span_compute_s: rng.range_f64(0.02, 0.4),
                 queue_depth: rng.usize_below(4) as u32,
                 free_ratio: rng.range_f64(0.0, 1.0),
+                prefix_fps: vec![],
             }
         })
         .collect()
@@ -103,9 +104,7 @@ fn routing_ablation() {
     let q = RouteQuery {
         n_blocks: 24,
         msg_bytes: 60_000,
-        beam_width: 8,
-        queue_penalty_s: 0.05,
-        pool_penalty_s: 0.05,
+        ..Default::default()
     };
     let (mut beam_sum, mut greedy_sum, mut random_sum) = (0.0, 0.0, 0.0);
     let mut count = 0;

@@ -127,11 +127,10 @@ fn main() -> petals::Result<()> {
         route: RouteQuery {
             n_blocks: g.n_layers,
             msg_bytes: (g.hidden * 4) as u64,
-            beam_width: 8,
-            queue_penalty_s: 0.05,
-            pool_penalty_s: 0.05,
+            ..Default::default()
         },
         max_recoveries: 2,
+        prefix_tokens: vec![],
     };
     let prefix: Vec<i32> = vec![9, 8, 7, 6, 5, 4, 3, 2];
 

@@ -109,15 +109,14 @@ fn main() -> petals::Result<()> {
                 span_compute_s: 0.2,
                 queue_depth: 0,
                 free_ratio: 1.0,
+                prefix_fps: vec![],
             }
         })
         .collect();
     let q = RouteQuery {
         n_blocks: 70,
         msg_bytes: 15_000,
-        beam_width: 8,
-        queue_penalty_s: 0.05,
-        pool_penalty_s: 0.05,
+        ..Default::default()
     };
     bench("beam-search route (70 blocks, 14 servers)", 2000, || {
         let _ = find_chain(&views, &q);

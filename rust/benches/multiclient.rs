@@ -12,6 +12,13 @@
 //! at BLOOM-mini scale — sessions flow through the paged KV pool and the
 //! group-commit step scheduler; contention through actual PJRT
 //! serialization.
+//! Part 3: the shared-prefix scenario — N clients sending one system
+//! prompt. Simulated at BLOOM-176B scale (time-to-first-token with the
+//! prefix cache on/off) and real at BLOOM-mini scale (pool pages per
+//! session drop to the marginal suffix cost; prefills after the first
+//! are answered from the cache). Emits `BENCH_prefix_cache.json`
+//! (override the path with `BENCH_OUT`) so CI tracks the perf
+//! trajectory.
 //!
 //! Run: `cargo bench --bench multiclient`
 
@@ -19,9 +26,11 @@ use petals::config::profiles::{NetworkProfile, SwarmPreset};
 use petals::coordinator::client::{LocalHead, Sampler, SwarmGenerator};
 use petals::coordinator::routing::RouteQuery;
 use petals::coordinator::session::SessionConfig;
+use petals::model::tensor::Tensor;
 use petals::model::{ModelHome, Precision, Weights};
 use petals::runtime::Runtime;
 use petals::server::local::spawn_even_swarm;
+use petals::server::ServerNode;
 use petals::sim::SwarmSim;
 use std::sync::Arc;
 
@@ -82,11 +91,10 @@ fn main() -> petals::Result<()> {
         route: RouteQuery {
             n_blocks: g.n_layers,
             msg_bytes: (g.hidden * 4) as u64,
-            beam_width: 8,
-            queue_penalty_s: 0.05,
-            pool_penalty_s: 0.05,
+            ..Default::default()
         },
         max_recoveries: 2,
+        prefix_tokens: vec![],
     };
 
     // sequential per-session baseline: 4 sessions, one after another
@@ -142,5 +150,76 @@ fn main() -> petals::Result<()> {
     }
     println!("(CPU PJRT serializes executions; fused batches need b>1 decode artifacts — the");
     println!(" scheduler falls back to per-session execution when only b1 entries are compiled)");
+
+    // ---- shared-prefix serving ------------------------------------------
+    println!("\nshared-prefix arrival mix (sim, 8 clients, one 128-token template):");
+    let mut cold = sim_swarm(false);
+    let cold_r = cold.run_inference_concurrent_mix(8, 128, 32, 1).unwrap();
+    let mut warm = sim_swarm(false);
+    warm.prefix_cache = true;
+    let warm_r = warm.run_inference_concurrent_mix(8, 128, 32, 1).unwrap();
+    println!(
+        "  time-to-first-token: {:.2}s cold -> {:.2}s with prefix cache ({} prefill hits)",
+        cold_r.mean_ttft_s, warm_r.mean_ttft_s, warm_r.prefix_hits
+    );
+
+    println!("\nreal shared-prefix pool accounting (BLOOM-mini, 8 sessions, 128-token prompt):");
+    let node =
+        ServerNode::start("prefix", &home, rt.clone(), 0..g.n_layers, Precision::F16, false)?;
+    let w = 128usize;
+    let n_sessions = 8u64;
+    let tokens: Vec<i32> = (0..w as i32).map(|i| i % 97).collect();
+    let mut vals = vec![0f32; w * g.hidden];
+    let mut rng = petals::config::Rng::new(17);
+    for v in vals.iter_mut() {
+        *v = (rng.f64() as f32 - 0.5) * 2.0;
+    }
+    let h0 = Tensor::from_f32(&[1, w, g.hidden], &vals);
+    let h_step = Tensor::from_f32(&[1, 1, g.hidden], &vals[..g.hidden]);
+    let mut page_costs: Vec<u64> = Vec::new();
+    for sid in 1..=n_sessions {
+        let (free_before, _) = node.pool_stats();
+        node.open_session_with_prefix(sid, 1, w + 16, &tokens, w)?;
+        node.prefill(sid, &h0)?;
+        let (free_after, _) = node.pool_stats();
+        page_costs.push(free_before - free_after);
+    }
+    let pages_first = page_costs[0];
+    let pages_extra =
+        page_costs[1..].iter().sum::<u64>() as f64 / (n_sessions - 1) as f64;
+    let hits = node.metrics.prefix_hits.get();
+    let hit_rate = hits as f64 / n_sessions as f64;
+    println!("  pages: {pages_first} for the first session, {pages_extra:.1}/extra session");
+    println!(
+        "  prefix hits {hits}/{n_sessions} (prefill skips {}), shared pages {}",
+        node.metrics.prefix_prefill_skips.get(),
+        node.metrics.kv_pages_shared.get()
+    );
+    // aggregate decode throughput over the 8 shared sessions
+    let t0 = std::time::Instant::now();
+    let n_decode = 8usize;
+    for step in 0..n_decode {
+        for sid in 1..=n_sessions {
+            node.step(sid, w + step, &h_step)?;
+        }
+    }
+    let agg_steps_s = (n_decode as u64 * n_sessions) as f64 / t0.elapsed().as_secs_f64();
+    println!("  aggregate decode: {agg_steps_s:.2} steps/s over {n_sessions} shared sessions");
+    println!("  server: {}", node.metrics.report());
+
+    let json = format!(
+        "{{\n  \"clients\": {n_sessions},\n  \"prefix_tokens\": {w},\n  \
+         \"pages_first_session\": {pages_first},\n  \"pages_per_extra_session\": {pages_extra:.2},\n  \
+         \"prefix_hit_rate\": {hit_rate:.3},\n  \"prefill_skips\": {},\n  \
+         \"cow_forks\": {},\n  \"aggregate_steps_per_s\": {agg_steps_s:.3},\n  \
+         \"sim_ttft_cold_s\": {:.3},\n  \"sim_ttft_warm_s\": {:.3}\n}}\n",
+        node.metrics.prefix_prefill_skips.get(),
+        node.metrics.cow_forks.get(),
+        cold_r.mean_ttft_s,
+        warm_r.mean_ttft_s,
+    );
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_prefix_cache.json".into());
+    std::fs::write(&out, &json)?;
+    println!("\nwrote {out}");
     Ok(())
 }

@@ -199,11 +199,10 @@ mod tests {
             route: RouteQuery {
                 n_blocks: g.n_layers,
                 msg_bytes: (g.hidden * 4) as u64,
-                beam_width: 8,
-                queue_penalty_s: 0.05,
-                pool_penalty_s: 0.05,
+                ..Default::default()
             },
             max_recoveries: 2,
+            prefix_tokens: vec![],
         };
         ChatBackend::new(cluster, head, cfg)
     }

@@ -254,6 +254,7 @@ mod tests {
             free_pages: free,
             total_pages: total,
             batch_width: 8,
+            prefix_fps: vec![],
         };
         let idle = [mk(100, 100)];
         let full = [mk(0, 100)];

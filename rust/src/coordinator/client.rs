@@ -164,7 +164,35 @@ impl<'a, C: ChainClient> SwarmGenerator<'a, C> {
         let ids_t = Tensor::from_i32(&[b, w], &ids);
         let h0 = self.head.embed(&ids_t)?;
 
-        let mut session = InferenceSession::open(self.swarm, self.cfg.clone(), session_id)?;
+        // thread prefix identity end-to-end: batch-1 sessions carry their
+        // prompt token ids so servers can attach cached shared-prefix KV
+        // pages (wire v3) and routing can stick to servers that already
+        // hold the prefix (cache-aware sticky routing)
+        let mut cfg = self.cfg.clone();
+        if b == 1 {
+            if cfg.prefix_tokens.is_empty() {
+                cfg.prefix_tokens = prefix[0].clone();
+            } else if cfg.prefix_tokens != prefix[0] {
+                // the declared identity MUST be the whole prompt: a
+                // shorter "template" declaration would full-hit another
+                // session's registration and be served *its* cached
+                // prefill output — silently wrong tokens
+                return Err(Error::Protocol(
+                    "cfg.prefix_tokens must equal the batch-1 prompt exactly".into(),
+                ));
+            }
+        } else if !cfg.prefix_tokens.is_empty() {
+            return Err(Error::Protocol("prefix_tokens requires batch 1".into()));
+        }
+        if cfg.route.prefix_fp.is_none() && !cfg.prefix_tokens.is_empty() {
+            // hint over the page-aligned leading span, so prompts sharing
+            // a template (but not a suffix) still route sticky
+            cfg.route.prefix_fp = Some(crate::server::prefixcache::template_fingerprint(
+                &cfg.prefix_tokens,
+                crate::server::PAGE_TOKENS,
+            ));
+        }
+        let mut session = InferenceSession::open(self.swarm, cfg, session_id)?;
         let h_pre = session.prefill(h0)?;
 
         // last *valid* position of the prefill output

@@ -34,6 +34,11 @@ pub struct ServerView {
     /// (from Pong / DHT announcements). 1.0 when unknown — legacy
     /// servers never get penalized for data they don't report.
     pub free_ratio: f64,
+    /// Fingerprints of the server's hottest cached prompt prefixes (v3
+    /// DHT announcements; empty when unknown). Used for cache-aware
+    /// sticky routing: a server already holding the session's prefix
+    /// skips the prefill recompute and charges only marginal KV pages.
+    pub prefix_fps: Vec<u64>,
 }
 
 impl ServerView {
@@ -57,6 +62,17 @@ pub struct RouteQuery {
     /// occupancy (`(1 - free_ratio) * pool_penalty_s`): steers sessions
     /// toward servers that will not reject admission.
     pub pool_penalty_s: f64,
+    /// Fingerprint of this session's prompt prefix
+    /// ([`crate::server::prefixcache::fingerprint`]); `None` disables
+    /// cache-aware routing.
+    pub prefix_fp: Option<u64>,
+    /// Extra seconds charged to servers that do *not* advertise
+    /// `prefix_fp` when it is set — the sticky-routing lever that lands
+    /// template traffic on servers already holding the prefix (which
+    /// skip the prefill recompute and charge only marginal pages).
+    /// Servers with no announcement are penalized uniformly, so relative
+    /// ranking among legacy servers is unchanged.
+    pub prefix_miss_penalty_s: f64,
 }
 
 impl Default for RouteQuery {
@@ -67,6 +83,8 @@ impl Default for RouteQuery {
             beam_width: 8,
             queue_penalty_s: 0.05,
             pool_penalty_s: 0.05,
+            prefix_fp: None,
+            prefix_miss_penalty_s: 0.05,
         }
     }
 }
@@ -127,9 +145,13 @@ pub fn find_chain(servers: &[ServerView], q: &RouteQuery) -> Option<(Vec<ChainHo
                 let hop_in = s.msg_time(q.msg_bytes);
                 let queue = s.queue_depth as f64 * q.queue_penalty_s;
                 let pool = (1.0 - s.free_ratio.clamp(0.0, 1.0)) * q.pool_penalty_s;
+                let prefix = match q.prefix_fp {
+                    Some(fp) if !s.prefix_fps.contains(&fp) => q.prefix_miss_penalty_s,
+                    _ => 0.0,
+                };
                 // compute prorated to the sub-span actually used
                 let frac = (next - block) as f64 / (s.end - s.start) as f64;
-                let cost = p.cost + hop_in + s.span_compute_s * frac + queue + pool;
+                let cost = p.cost + hop_in + s.span_compute_s * frac + queue + pool + prefix;
                 let mut hops = p.hops.clone();
                 hops.push((ci, block));
                 let beam = beams.entry(next).or_default();
@@ -217,17 +239,12 @@ mod tests {
             span_compute_s: comp,
             queue_depth: 0,
             free_ratio: 1.0,
+            prefix_fps: vec![],
         }
     }
 
     fn q(n: usize) -> RouteQuery {
-        RouteQuery {
-            n_blocks: n,
-            msg_bytes: 2048,
-            beam_width: 8,
-            queue_penalty_s: 0.05,
-            pool_penalty_s: 0.05,
-        }
+        RouteQuery { n_blocks: n, msg_bytes: 2048, ..Default::default() }
     }
 
     #[test]
@@ -321,6 +338,32 @@ mod tests {
     }
 
     #[test]
+    fn prefix_holder_wins_sticky_routing() {
+        // a slightly slower server that already caches the session's
+        // prefix beats a faster cold one (it skips the prefill recompute)
+        let fp = 0xfeed_beefu64;
+        let mut warm = sv("warm", 0, 8, 0.012, 0.1);
+        warm.prefix_fps = vec![1, fp, 2];
+        let cold = sv("cold", 0, 8, 0.010, 0.1);
+        let mut query = q(8);
+        query.prefix_fp = Some(fp);
+        let (hops, _) = find_chain(&[warm.clone(), cold], &query).unwrap();
+        assert_eq!(hops[0].server, NodeId::from_name("warm"));
+        // without the fingerprint the faster server wins again
+        query.prefix_fp = None;
+        let cold = sv("cold", 0, 8, 0.010, 0.1);
+        let (hops, _) = find_chain(&[warm, cold], &query).unwrap();
+        assert_eq!(hops[0].server, NodeId::from_name("cold"));
+        // legacy servers (no fps) are penalized uniformly: ranking kept
+        let mut query = q(8);
+        query.prefix_fp = Some(fp);
+        let a = sv("a", 0, 8, 0.010, 0.1);
+        let b = sv("b", 0, 8, 0.020, 0.1);
+        let (hops, _) = find_chain(&[a, b], &query).unwrap();
+        assert_eq!(hops[0].server, NodeId::from_name("a"));
+    }
+
+    #[test]
     fn subchain_replaces_failed_span() {
         let servers = [
             sv("a", 0, 3, 0.01, 0.1),
@@ -405,7 +448,11 @@ mod tests {
                         + s.msg_time(q.msg_bytes)
                         + s.span_compute_s * frac
                         + s.queue_depth as f64 * q.queue_penalty_s
-                        + (1.0 - s.free_ratio.clamp(0.0, 1.0)) * q.pool_penalty_s;
+                        + (1.0 - s.free_ratio.clamp(0.0, 1.0)) * q.pool_penalty_s
+                        + match q.prefix_fp {
+                            Some(fp) if !s.prefix_fps.contains(&fp) => q.prefix_miss_penalty_s,
+                            _ => 0.0,
+                        };
                     if next == q.n_blocks {
                         let total = c + s.msg_time(q.msg_bytes);
                         if best.map(|b| total < b).unwrap_or(true) {

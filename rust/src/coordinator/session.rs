@@ -46,6 +46,24 @@ pub trait ChainClient {
         prefix_len: usize,
         max_new: usize,
     ) -> Result<()>;
+    /// Open carrying the session's prefix token ids + prefill width
+    /// (wire v3), so the server can attach cached shared-prefix KV pages
+    /// and skip recomputing the prefix. The default forwards to the
+    /// legacy [`Self::open_session`], so transports and test fakes that
+    /// predate prefix sharing keep working unchanged.
+    #[allow(clippy::too_many_arguments)]
+    fn open_session_prefixed(
+        &self,
+        server: NodeId,
+        session: u64,
+        batch: usize,
+        prefix_len: usize,
+        max_new: usize,
+        _prefix_tokens: &[i32],
+        _prefill_width: usize,
+    ) -> Result<()> {
+        self.open_session(server, session, batch, prefix_len, max_new)
+    }
     /// Run the (padded) prefix through the server's span, filling its KV
     /// caches; returns the hidden states for the next span.
     fn prefill(&self, server: NodeId, session: u64, hidden: &Tensor) -> Result<Tensor>;
@@ -77,6 +95,15 @@ pub struct SessionConfig {
     pub route: RouteQuery,
     /// Retries across re-routing before giving up.
     pub max_recoveries: usize,
+    /// The session's prefix token ids (batch-1 sessions; empty disables
+    /// prefix identity). MUST equal the session's *entire* prompt — a
+    /// truncated "template" here would exact-match another session's
+    /// registration and be served its cached prefill output
+    /// ([`crate::coordinator::client::SwarmGenerator`] enforces this).
+    /// Sent with wire-v3 opens so servers can share cached prefix KV;
+    /// also the source of `route.prefix_fp` (fingerprinted over the
+    /// page-aligned leading span) for cache-aware sticky routing.
+    pub prefix_tokens: Vec<i32>,
 }
 
 /// Per-hop replay history: what the client sent to this server.
@@ -108,9 +135,15 @@ impl<'a, C: ChainClient> InferenceSession<'a, C> {
         let (chain, _cost) = routing::find_chain(&servers, &cfg.route)
             .ok_or_else(|| Error::NoRoute("no chain covers all blocks".into()))?;
         for (i, hop) in chain.iter().enumerate() {
-            if let Err(e) =
-                client.open_session(hop.server, session_id, cfg.batch, cfg.prefix_len, cfg.max_new)
-            {
+            if let Err(e) = client.open_session_prefixed(
+                hop.server,
+                session_id,
+                cfg.batch,
+                cfg.prefix_len,
+                cfg.max_new,
+                &cfg.prefix_tokens,
+                cfg.prefill_width,
+            ) {
                 for opened in &chain[..i] {
                     client.close_session(opened.server, session_id);
                 }
@@ -215,12 +248,14 @@ impl<'a, C: ChainClient> InferenceSession<'a, C> {
         // the replacements don't leak
         let result = (|| -> Result<Vec<HopHistory>> {
             for hop in &sub {
-                self.client.open_session(
+                self.client.open_session_prefixed(
                     hop.server,
                     self.session_id,
                     self.cfg.batch,
                     self.cfg.prefix_len,
                     self.cfg.max_new,
+                    &self.cfg.prefix_tokens,
+                    self.cfg.prefill_width,
                 )?;
             }
             let old_history = self.history[i].clone();
@@ -370,6 +405,7 @@ mod tests {
                     span_compute_s: 0.01 * (s.end - s.start) as f64,
                     queue_depth: 0,
                     free_ratio: 1.0,
+                    prefix_fps: vec![],
                 })
                 .collect()
         }
@@ -441,14 +477,9 @@ mod tests {
             prefill_width: 4,
             prefix_len: 2,
             max_new: 8,
-            route: RouteQuery {
-                n_blocks,
-                msg_bytes: 64,
-                beam_width: 8,
-                queue_penalty_s: 0.05,
-                pool_penalty_s: 0.05,
-            },
+            route: RouteQuery { n_blocks, msg_bytes: 64, ..Default::default() },
             max_recoveries: 4,
+            prefix_tokens: vec![],
         }
     }
 

@@ -14,8 +14,11 @@ use crate::dht::{iterative_find_value, iterative_store, Rpc};
 ///
 /// v2 (see docs/WIRE_PROTOCOL.md §Versioning) appends KV-pool occupancy
 /// and the server's fused batch width so the balancer and client routing
-/// can prefer under-loaded servers. v1 records (44 bytes) still decode —
-/// the new fields read as zero, which every consumer treats as "unknown".
+/// can prefer under-loaded servers. v3 appends the fingerprints of the
+/// server's hottest cached prompt prefixes, the hint behind cache-aware
+/// sticky routing. Records stay length-distinguishable: v1 (44 bytes)
+/// and v2 (56 bytes) still decode — the newer fields read as zero/empty,
+/// which every consumer treats as "unknown".
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServerEntry {
     pub server: NodeId,
@@ -31,16 +34,24 @@ pub struct ServerEntry {
     pub total_pages: u32,
     /// Max sessions fused per decode step (v2; 0 = unknown/legacy).
     pub batch_width: u32,
+    /// Fingerprints of the server's hottest cached prefixes (v3; empty =
+    /// unknown/legacy). Capped at [`MAX_PREFIX_FPS`] on encode.
+    pub prefix_fps: Vec<u64>,
 }
 
 /// v1 record length (through `throughput`).
 const ENTRY_V1_LEN: usize = 44;
 /// v2 record length (v1 + free_pages + total_pages + batch_width).
 const ENTRY_V2_LEN: usize = 56;
+/// v3 fixed-part length (v2 + fingerprint count); fingerprints follow.
+const ENTRY_V3_LEN: usize = 60;
+/// Most prefix fingerprints one record carries.
+pub const MAX_PREFIX_FPS: usize = 8;
 
 impl ServerEntry {
     pub fn encode(&self) -> Vec<u8> {
-        let mut v = Vec::with_capacity(ENTRY_V2_LEN);
+        let fps: Vec<u64> = self.prefix_fps.iter().copied().take(MAX_PREFIX_FPS).collect();
+        let mut v = Vec::with_capacity(ENTRY_V3_LEN + 8 * fps.len());
         v.extend_from_slice(&self.server.0);
         v.extend_from_slice(&self.start.to_le_bytes());
         v.extend_from_slice(&self.end.to_le_bytes());
@@ -48,16 +59,35 @@ impl ServerEntry {
         v.extend_from_slice(&self.free_pages.to_le_bytes());
         v.extend_from_slice(&self.total_pages.to_le_bytes());
         v.extend_from_slice(&self.batch_width.to_le_bytes());
+        v.extend_from_slice(&(fps.len() as u32).to_le_bytes());
+        for fp in &fps {
+            v.extend_from_slice(&fp.to_le_bytes());
+        }
         v
     }
 
     pub fn decode(b: &[u8]) -> Option<Self> {
-        if b.len() != ENTRY_V1_LEN && b.len() != ENTRY_V2_LEN {
+        let v3 = b.len() >= ENTRY_V3_LEN && (b.len() - ENTRY_V3_LEN) % 8 == 0;
+        if b.len() != ENTRY_V1_LEN && b.len() != ENTRY_V2_LEN && !v3 {
             return None;
         }
         let mut id = [0u8; 32];
         id.copy_from_slice(&b[..32]);
-        let v2 = b.len() == ENTRY_V2_LEN;
+        let v2 = b.len() >= ENTRY_V2_LEN;
+        let prefix_fps = if v3 {
+            let n = u32::from_le_bytes(b[56..60].try_into().ok()?) as usize;
+            if n > MAX_PREFIX_FPS || n * 8 != b.len() - ENTRY_V3_LEN {
+                return None;
+            }
+            (0..n)
+                .map(|i| {
+                    let off = ENTRY_V3_LEN + i * 8;
+                    b[off..off + 8].try_into().ok().map(u64::from_le_bytes)
+                })
+                .collect::<Option<Vec<u64>>>()?
+        } else {
+            Vec::new()
+        };
         Some(ServerEntry {
             server: NodeId(id),
             start: u32::from_le_bytes(b[32..36].try_into().ok()?),
@@ -66,11 +96,17 @@ impl ServerEntry {
             free_pages: if v2 { u32::from_le_bytes(b[44..48].try_into().ok()?) } else { 0 },
             total_pages: if v2 { u32::from_le_bytes(b[48..52].try_into().ok()?) } else { 0 },
             batch_width: if v2 { u32::from_le_bytes(b[52..56].try_into().ok()?) } else { 0 },
+            prefix_fps,
         })
     }
 
     pub fn covers(&self, block: u32) -> bool {
         self.start <= block && block < self.end
+    }
+
+    /// Whether this server advertises the given prefix fingerprint.
+    pub fn has_prefix(&self, fp: u64) -> bool {
+        self.prefix_fps.contains(&fp)
     }
 
     /// Fraction of the announced KV pool that is free; 1.0 when the
@@ -153,11 +189,40 @@ mod tests {
             free_pages: 120,
             total_pages: 512,
             batch_width: 8,
+            prefix_fps: vec![0xdead_beef, 42],
         };
         assert_eq!(ServerEntry::decode(&e.encode()), Some(e.clone()));
         assert!(e.covers(3) && e.covers(10) && !e.covers(11) && !e.covers(2));
         assert!((e.free_ratio() - 120.0 / 512.0).abs() < 1e-12);
+        assert!(e.has_prefix(42) && !e.has_prefix(43));
         assert_eq!(ServerEntry::decode(&[0u8; 10]), None);
+        // corrupt v3: count disagrees with the record length
+        let mut bad = e.encode();
+        bad[56] = 7;
+        assert_eq!(ServerEntry::decode(&bad), None);
+        // a fingerprint-free v3 record is 60 bytes and round-trips
+        let bare = ServerEntry { prefix_fps: vec![], ..e.clone() };
+        assert_eq!(bare.encode().len(), 60);
+        assert_eq!(ServerEntry::decode(&bare.encode()), Some(bare));
+    }
+
+    #[test]
+    fn legacy_v2_entry_decodes_with_empty_fingerprints() {
+        let e = ServerEntry {
+            server: NodeId::from_name("v2"),
+            start: 0,
+            end: 4,
+            throughput: 1.5,
+            free_pages: 9,
+            total_pages: 10,
+            batch_width: 4,
+            prefix_fps: vec![1, 2, 3],
+        };
+        // a v2 peer would have written only the first 56 bytes
+        let v2 = e.encode()[..56].to_vec();
+        let back = ServerEntry::decode(&v2).unwrap();
+        assert_eq!(back.free_pages, 9);
+        assert!(back.prefix_fps.is_empty(), "v2 records read as no-hints");
     }
 
     #[test]
@@ -185,7 +250,7 @@ mod tests {
         let ids: Vec<NodeId> = (0..30).map(|_| NodeId::random(&mut rng)).collect();
         let net = TestNet::new(&ids);
         let dir = BlockDirectory::new(&net, ids[..3].to_vec(), "bloom");
-        let e = ServerEntry { server: ids[0], start: 0, end: 4, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0 };
+        let e = ServerEntry { server: ids[0], start: 0, end: 4, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![] };
         dir.announce(&e, 0);
         for b in 0..4 {
             let got = dir.lookup(b);
@@ -201,8 +266,8 @@ mod tests {
         let ids: Vec<NodeId> = (0..30).map(|_| NodeId::random(&mut rng)).collect();
         let net = TestNet::new(&ids);
         let dir = BlockDirectory::new(&net, ids[..3].to_vec(), "bloom");
-        dir.announce(&ServerEntry { server: ids[0], start: 0, end: 4, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0 }, 0);
-        dir.announce(&ServerEntry { server: ids[1], start: 2, end: 8, throughput: 2.0, free_pages: 0, total_pages: 0, batch_width: 0 }, 0);
+        dir.announce(&ServerEntry { server: ids[0], start: 0, end: 4, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![] }, 0);
+        dir.announce(&ServerEntry { server: ids[1], start: 2, end: 8, throughput: 2.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![] }, 0);
         let snap = dir.snapshot(8);
         assert_eq!(snap[0].len(), 1);
         assert_eq!(snap[2].len(), 2);
@@ -217,10 +282,10 @@ mod tests {
         let net = TestNet::new(&ids);
         let dir = BlockDirectory::new(&net, ids[..3].to_vec(), "bloom");
         let srv = ids[0];
-        dir.announce(&ServerEntry { server: srv, start: 0, end: 4, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0 }, 0);
+        dir.announce(&ServerEntry { server: srv, start: 0, end: 4, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![] }, 0);
         // server rebalances to a different span; old per-block records
         // are replaced where keys overlap and age out elsewhere
-        dir.announce(&ServerEntry { server: srv, start: 2, end: 6, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0 }, 0);
+        dir.announce(&ServerEntry { server: srv, start: 2, end: 6, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![] }, 0);
         let at2 = dir.lookup(2);
         assert_eq!(at2.len(), 1);
         assert_eq!(at2[0].start, 2);

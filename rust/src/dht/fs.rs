@@ -1,0 +1,216 @@
+//! Filesystem bootstrap directory — liveness announcements without
+//! static peer lists.
+//!
+//! Single-host (and shared-filesystem) swarms don't need the full
+//! Kademlia machinery to find each other, but the seed `main.rs serve`
+//! loop had *no* discovery at all: clients carried `--peers name=addr`
+//! lists and a server that died or joined was invisible. This module is
+//! the minimal bootstrap path that lets `petals server` publish the same
+//! [`ServerEntry`] record it would announce to the DHT — span, measured
+//! throughput, KV-pool occupancy, hot prefix fingerprints — plus its
+//! listen address, into a shared directory:
+//!
+//! ```text
+//! <dir>/<node-id-prefix>.entry  =  [u16 addr_len][addr utf8][ServerEntry bytes]
+//! ```
+//!
+//! Writers re-announce periodically (atomic tmp+rename, so readers never
+//! see a torn record); readers treat a file older than `ttl` as a
+//! departed server — exactly the TTL semantics of the real DHT records.
+//! When a networked DHT transport lands, `announce`/`discover` here are
+//! the drop-in seam: the record format is already the wire format.
+
+use crate::dht::directory::ServerEntry;
+use crate::error::{Error, Result};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, SystemTime};
+
+/// One discovered server: where to dial it + its announcement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FsAnnouncement {
+    pub addr: String,
+    pub entry: ServerEntry,
+}
+
+/// A directory of liveness records (see module docs).
+pub struct FsDirectory {
+    dir: PathBuf,
+    /// Announcements older than this are treated as departed.
+    pub ttl: Duration,
+}
+
+impl FsDirectory {
+    /// Open (creating if needed) the shared announcement directory.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Ok(FsDirectory { dir, ttl: Duration::from_secs(30) })
+    }
+
+    fn record_path(&self, entry: &ServerEntry) -> PathBuf {
+        // 16 hex chars of the node id are plenty to avoid collisions and
+        // keep re-announcements overwriting the same file
+        let id: String = entry.server.0[..8].iter().map(|b| format!("{b:02x}")).collect();
+        self.dir.join(format!("{id}.entry"))
+    }
+
+    /// Publish (or refresh) this server's record atomically.
+    pub fn announce(&self, addr: &str, entry: &ServerEntry) -> Result<()> {
+        if addr.len() > u16::MAX as usize {
+            return Err(Error::Protocol(format!("address too long: {} bytes", addr.len())));
+        }
+        let mut buf = Vec::with_capacity(2 + addr.len() + 64);
+        buf.extend_from_slice(&(addr.len() as u16).to_le_bytes());
+        buf.extend_from_slice(addr.as_bytes());
+        buf.extend_from_slice(&entry.encode());
+        let path = self.record_path(entry);
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, &buf)?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+
+    /// Remove this server's record (clean shutdown; crashed servers age
+    /// out via the TTL instead).
+    pub fn withdraw(&self, entry: &ServerEntry) {
+        let _ = std::fs::remove_file(self.record_path(entry));
+    }
+
+    /// All live (fresh, decodable) announcements.
+    pub fn discover(&self) -> Vec<FsAnnouncement> {
+        let Ok(read) = std::fs::read_dir(&self.dir) else {
+            return Vec::new();
+        };
+        let now = SystemTime::now();
+        let mut out = Vec::new();
+        for dent in read.flatten() {
+            let path = dent.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("entry") {
+                continue;
+            }
+            if !self.is_fresh(&path, now) {
+                continue;
+            }
+            if let Some(a) = Self::parse(&path) {
+                out.push(a);
+            }
+        }
+        // deterministic order for routing reproducibility
+        out.sort_by(|a, b| a.entry.server.0.cmp(&b.entry.server.0));
+        out
+    }
+
+    /// Live peers as `(NodeId, addr)` pairs — the
+    /// [`crate::server::service::TcpSwarm::connect_ids`] input.
+    pub fn peers(&self) -> Vec<(crate::dht::NodeId, String)> {
+        self.discover()
+            .into_iter()
+            .map(|a| (a.entry.server, a.addr))
+            .collect()
+    }
+
+    fn is_fresh(&self, path: &Path, now: SystemTime) -> bool {
+        let Ok(meta) = std::fs::metadata(path) else {
+            return false;
+        };
+        let Ok(modified) = meta.modified() else {
+            return false;
+        };
+        match now.duration_since(modified) {
+            Ok(age) => age <= self.ttl,
+            Err(_) => true, // clock skew: written "in the future" is fresh
+        }
+    }
+
+    fn parse(path: &Path) -> Option<FsAnnouncement> {
+        let buf = std::fs::read(path).ok()?;
+        if buf.len() < 2 {
+            return None;
+        }
+        let n = u16::from_le_bytes([buf[0], buf[1]]) as usize;
+        if buf.len() < 2 + n {
+            return None;
+        }
+        let addr = String::from_utf8(buf[2..2 + n].to_vec()).ok()?;
+        let entry = ServerEntry::decode(&buf[2 + n..])?;
+        Some(FsAnnouncement { addr, entry })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dht::NodeId;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "petals-fsdir-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn entry(name: &str) -> ServerEntry {
+        ServerEntry {
+            server: NodeId::from_name(name),
+            start: 0,
+            end: 4,
+            throughput: 1.0,
+            free_pages: 10,
+            total_pages: 32,
+            batch_width: 8,
+            prefix_fps: vec![7, 9],
+        }
+    }
+
+    #[test]
+    fn announce_discover_roundtrip() {
+        let dir = FsDirectory::open(tmpdir("rt")).unwrap();
+        dir.announce("127.0.0.1:4001", &entry("a")).unwrap();
+        dir.announce("127.0.0.1:4002", &entry("b")).unwrap();
+        let got = dir.discover();
+        assert_eq!(got.len(), 2);
+        assert!(got.iter().any(|a| a.addr == "127.0.0.1:4001"
+            && a.entry == entry("a")));
+        let peers = dir.peers();
+        assert_eq!(peers.len(), 2);
+        assert!(peers.contains(&(NodeId::from_name("b"), "127.0.0.1:4002".into())));
+    }
+
+    #[test]
+    fn reannounce_replaces_and_withdraw_removes() {
+        let dir = FsDirectory::open(tmpdir("re")).unwrap();
+        dir.announce("127.0.0.1:4001", &entry("a")).unwrap();
+        let mut fresh = entry("a");
+        fresh.free_pages = 1;
+        dir.announce("127.0.0.1:5001", &fresh).unwrap();
+        let got = dir.discover();
+        assert_eq!(got.len(), 1, "same server overwrites its record");
+        assert_eq!(got[0].addr, "127.0.0.1:5001");
+        assert_eq!(got[0].entry.free_pages, 1);
+        dir.withdraw(&fresh);
+        assert!(dir.discover().is_empty());
+    }
+
+    #[test]
+    fn stale_records_age_out() {
+        let mut dir = FsDirectory::open(tmpdir("ttl")).unwrap();
+        dir.announce("127.0.0.1:4001", &entry("a")).unwrap();
+        assert_eq!(dir.discover().len(), 1);
+        dir.ttl = Duration::ZERO;
+        // a zero TTL makes everything written in the past stale
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(dir.discover().is_empty(), "departed servers must age out");
+    }
+
+    #[test]
+    fn junk_files_ignored() {
+        let root = tmpdir("junk");
+        let dir = FsDirectory::open(&root).unwrap();
+        std::fs::write(root.join("notes.txt"), b"hello").unwrap();
+        std::fs::write(root.join("bad.entry"), b"\x05\x00abc").unwrap();
+        dir.announce("127.0.0.1:4001", &entry("a")).unwrap();
+        assert_eq!(dir.discover().len(), 1);
+    }
+}

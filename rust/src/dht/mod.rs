@@ -14,11 +14,13 @@
 //! and routing.
 
 pub mod directory;
+pub mod fs;
 mod id;
 mod routing;
 mod storage;
 
 pub use directory::{BlockDirectory, ServerEntry};
+pub use fs::{FsAnnouncement, FsDirectory};
 pub use id::NodeId;
 pub use routing::{RoutingTable, K};
 pub use storage::{Record, Storage};

@@ -345,6 +345,7 @@ mod tests {
                     span_compute_s: 0.0,
                     queue_depth: 0,
                     free_ratio: 1.0,
+                    prefix_fps: vec![],
                 }]
             }
             fn open_session(&self, _: NodeId, _: u64, _: usize, _: usize, _: usize) -> Result<()> {
@@ -375,6 +376,7 @@ mod tests {
             beam_width: 4,
             queue_penalty_s: 0.0,
             pool_penalty_s: 0.0,
+            ..Default::default()
         };
         let swarm = Identity;
         let mut rng = Rng::new(5);

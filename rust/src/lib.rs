@@ -11,11 +11,15 @@
 //!
 //! - [`dht`] — Kademlia-style distributed hash table: how servers announce
 //!   which Transformer blocks they hold (§3.2 of the paper), including
-//!   KV-pool occupancy for load-aware placement (v2 entries).
+//!   KV-pool occupancy for load-aware placement (v2 entries) and hot
+//!   prefix fingerprints for cache-aware sticky routing (v3), plus a
+//!   filesystem bootstrap directory ([`dht::fs`]) for single-host swarms.
 //! - [`server`] — a Petals *server*: hosts a contiguous span of blocks,
-//!   keeps session KV caches in a paged pool ([`server::kvpool`]) with
-//!   admission control, and fuses concurrent sessions' decode steps into
-//!   batched forwards ([`server::scheduler`] — continuous batching).
+//!   keeps session KV caches in a paged, ref-counted pool
+//!   ([`server::kvpool`]) with admission control and copy-on-write
+//!   shared-prefix pages ([`server::prefixcache`]), and fuses concurrent
+//!   sessions' decode steps into batched forwards ([`server::scheduler`]
+//!   — continuous batching).
 //! - [`coordinator`] — the client side: chain routing (beam search over
 //!   per-block server sets), inference sessions with KV replay on failure,
 //!   batch splitting for parallel forwards, and the server-side block

@@ -6,13 +6,21 @@
 //! ```text
 //! petals server   --artifacts DIR --name N --blocks A..B [--precision f16|int8]
 //!                 [--listen ADDR] [--compress]
-//! petals generate --artifacts DIR --peers n1=addr1,n2=addr2 --prompt 1,2,3
-//!                 [--max-new N] [--topk K]
-//! petals chat     --artifacts DIR --peers ... [--listen ADDR]
+//!                 [--announce-dir DIR [--announce-every SECS]]
+//! petals generate --artifacts DIR (--peers n1=addr1,... | --announce-dir DIR)
+//!                 --prompt 1,2,3 [--max-new N] [--topk K]
+//! petals chat     --artifacts DIR (--peers ... | --announce-dir DIR) [--listen ADDR]
 //! petals sim      [--preset 3xa100|12virtual|14real] [--net gbit5|mbit100-5|mbit100-100]
-//!                 [--workload inference|forward|multiclient]
+//!                 [--workload inference|forward|multiclient|shared-prefix]
 //! petals info     --artifacts DIR
 //! ```
+//!
+//! `--announce-dir` replaces static peer lists on single-host (or
+//! shared-filesystem) swarms: each server periodically publishes its
+//! [`petals::dht::ServerEntry`] — liveness, span, throughput, KV-pool
+//! occupancy, hot prefix fingerprints — plus its listen address into the
+//! directory ([`petals::dht::FsDirectory`]), and clients discover
+//! whatever is live there.
 
 use petals::config::profiles::{NetworkProfile, SwarmPreset};
 use petals::coordinator::client::{LocalHead, Sampler, SwarmGenerator};
@@ -123,6 +131,28 @@ fn cmd_server(flags: &HashMap<String, String>) -> i32 {
         Err(e) => return fail(&e.to_string()),
     };
     println!("petals server '{name}' hosting blocks {start}..{end} ({precision:?}) on {}", handle.addr);
+    // periodic DHT-style announcements: liveness + pool occupancy +
+    // prefix fingerprints, so clients need no static peer list
+    if let Some(dir) = flags.get("announce-dir") {
+        let every = flags
+            .get("announce-every")
+            .and_then(|s| s.parse::<u64>().ok())
+            .unwrap_or(5)
+            .max(1);
+        let fsdir = match petals::dht::FsDirectory::open(dir) {
+            Ok(d) => d,
+            Err(e) => return fail(&e.to_string()),
+        };
+        let node = handle.node.clone();
+        let addr = handle.addr.clone();
+        println!("announcing to {dir} every {every}s");
+        std::thread::spawn(move || loop {
+            if let Err(e) = fsdir.announce(&addr, &node.dht_entry()) {
+                eprintln!("announce failed: {e}");
+            }
+            std::thread::sleep(std::time::Duration::from_secs(every));
+        });
+    }
     println!("press Ctrl-C to stop");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -140,6 +170,27 @@ fn parse_peers(flags: &HashMap<String, String>) -> Option<Vec<(String, String)>>
     )
 }
 
+/// Build the TCP swarm client from `--peers` (static list) or
+/// `--announce-dir` (filesystem discovery; see module docs).
+fn connect_swarm(flags: &HashMap<String, String>) -> std::result::Result<TcpSwarm, String> {
+    if let Some(peers) = parse_peers(flags) {
+        if !peers.is_empty() {
+            return Ok(TcpSwarm::connect(&peers));
+        }
+    }
+    if let Some(dir) = flags.get("announce-dir") {
+        let fsdir = petals::dht::FsDirectory::open(dir).map_err(|e| e.to_string())?;
+        let found = fsdir.discover();
+        if found.is_empty() {
+            return Err(format!("no live servers announced under {dir}"));
+        }
+        println!("discovered {} live server(s) under {dir}", found.len());
+        // keep the announced prefix fingerprints as sticky-routing hints
+        return Ok(TcpSwarm::connect_discovered(found));
+    }
+    Err("--peers name=addr[,name=addr...] or --announce-dir DIR required".into())
+}
+
 fn session_cfg(home: &ModelHome, prefix_len: usize, max_new: usize) -> SessionConfig {
     let g = home.geometry();
     SessionConfig {
@@ -151,11 +202,10 @@ fn session_cfg(home: &ModelHome, prefix_len: usize, max_new: usize) -> SessionCo
         route: RouteQuery {
             n_blocks: g.n_layers,
             msg_bytes: (g.hidden * 4) as u64,
-            beam_width: 8,
-            queue_penalty_s: 0.05,
-            pool_penalty_s: 0.05,
+            ..Default::default()
         },
         max_recoveries: 3,
+        prefix_tokens: vec![],
     }
 }
 
@@ -164,8 +214,9 @@ fn cmd_generate(flags: &HashMap<String, String>) -> i32 {
         Ok(h) => h,
         Err(e) => return fail(&e.to_string()),
     };
-    let Some(peers) = parse_peers(flags) else {
-        return fail("--peers name=addr[,name=addr...] required");
+    let swarm = match connect_swarm(flags) {
+        Ok(s) => s,
+        Err(m) => return fail(&m),
     };
     let prompt: Vec<i32> = flags
         .get("prompt")
@@ -188,7 +239,6 @@ fn cmd_generate(flags: &HashMap<String, String>) -> i32 {
         Ok(h) => h,
         Err(e) => return fail(&e.to_string()),
     };
-    let swarm = TcpSwarm::connect(&peers);
     let sampler = match flags.get("topk").and_then(|s| s.parse::<usize>().ok()) {
         Some(k) => Sampler::TopK { k, temperature: 0.8, seed: 0 },
         None => Sampler::Greedy,
@@ -212,8 +262,9 @@ fn cmd_chat(flags: &HashMap<String, String>) -> i32 {
         Ok(h) => h,
         Err(e) => return fail(&e.to_string()),
     };
-    let Some(peers) = parse_peers(flags) else {
-        return fail("--peers name=addr[,name=addr...] required");
+    let swarm = match connect_swarm(flags) {
+        Ok(s) => Arc::new(s),
+        Err(m) => return fail(&m),
     };
     let listen = flags.get("listen").cloned().unwrap_or_else(|| "127.0.0.1:8080".into());
     let rt = match Runtime::load_filtered(&home, |n| n.contains("_b1_") || n.ends_with("_b1")) {
@@ -228,7 +279,6 @@ fn cmd_chat(flags: &HashMap<String, String>) -> i32 {
         Ok(h) => Arc::new(h),
         Err(e) => return fail(&e.to_string()),
     };
-    let swarm = Arc::new(TcpSwarm::connect(&peers));
     let cfg = session_cfg(&home, 8, 32);
     let backend = ChatBackend::new(swarm, head, cfg);
     let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
@@ -271,6 +321,20 @@ fn cmd_sim(flags: &HashMap<String, String>) -> i32 {
             let mean: f64 = many.iter().sum::<f64>() / many.len() as f64;
             println!("1 client:  {solo:.2} steps/s");
             println!("8 clients: {mean:.2} steps/s each ({:.0}% slowdown)", (1.0 - mean / solo) * 100.0);
+        }
+        "shared-prefix" => {
+            // 8 clients sharing one 128-token system prompt
+            let cold = sim.run_inference_concurrent_mix(8, 128, 32, 1).unwrap();
+            sim.prefix_cache = true;
+            let warm = sim.run_inference_concurrent_mix(8, 128, 32, 1).unwrap();
+            println!("prefix cache off: TTFT {:.2}s", cold.mean_ttft_s);
+            println!(
+                "prefix cache on:  TTFT {:.2}s ({} prefill hits)",
+                warm.mean_ttft_s, warm.prefix_hits
+            );
+            let full = petals::sim::pages_per_session(128, 32, 16, 4, false);
+            let marginal = petals::sim::pages_per_session(128, 32, 16, 4, true);
+            println!("pool pages/session: {full} private vs {marginal} marginal (4 blocks)");
         }
         _ => {
             for seq in [128usize, 2048] {

@@ -173,6 +173,23 @@ pub struct NodeMetrics {
     pub fused_rows: Counter,
     /// Sessions rejected by pool admission control.
     pub admission_rejects: Counter,
+    /// Session opens that attached a cached shared prefix (full or
+    /// partial trie hit).
+    pub prefix_hits: Counter,
+    /// Session opens that carried prefix tokens but matched nothing.
+    pub prefix_misses: Counter,
+    /// Prefills answered from a cached output (full hit: executor call
+    /// skipped entirely).
+    pub prefix_prefill_skips: Counter,
+    /// Prefixes registered (pinned) into the cache after a prefill.
+    pub prefix_registered: Counter,
+    /// KV pages currently referenced by more than one holder.
+    pub kv_pages_shared: Gauge,
+    /// Copy-on-write page forks (first divergent write into a shared page).
+    pub cow_forks: Counter,
+    /// Single-session decode steps served from the cached K/V literals
+    /// (pool gather + upload skipped).
+    pub fastpath_hits: Counter,
 }
 
 impl NodeMetrics {
@@ -183,7 +200,8 @@ impl NodeMetrics {
     pub fn report(&self) -> String {
         format!(
             "requests={} failures={} in={}B out={}B step[{}] kv_pages={}/{} \
-             batched={} fused_rows={} rejects={}",
+             batched={} fused_rows={} rejects={} prefix_hit={}/{} \
+             prefill_skips={} shared_pages={} cow_forks={} fastpath={}",
             self.requests.get(),
             self.failures.get(),
             self.bytes_in.get(),
@@ -194,6 +212,12 @@ impl NodeMetrics {
             self.batched_steps.get(),
             self.fused_rows.get(),
             self.admission_rejects.get(),
+            self.prefix_hits.get(),
+            self.prefix_hits.get() + self.prefix_misses.get(),
+            self.prefix_prefill_skips.get(),
+            self.kv_pages_shared.get(),
+            self.cow_forks.get(),
+            self.fastpath_hits.get(),
         )
     }
 }

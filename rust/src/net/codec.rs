@@ -134,6 +134,24 @@ pub enum Message {
     Backward { hidden: TensorPayload, grad: TensorPayload },
     CloseSession { session: u64 },
     Error { message: String },
+    /// v3 session open (wire v3): like `OpenSession`, plus the prefix
+    /// token ids and the client's prefill width — the identity the
+    /// server's prefix cache matches on to attach shared KV pages and
+    /// skip recomputing an already-cached prefix. Legacy servers reject
+    /// the unknown tag (dropped connection), which clients treat as
+    /// retryable and downgrade to the v2 `OpenSession`.
+    OpenSessionV3 {
+        session: u64,
+        batch: u32,
+        prefix_len: u32,
+        max_new: u32,
+        prefill_width: u32,
+        prefix_tokens: Vec<i32>,
+    },
+    /// Reply to `OpenSessionV3`: token positions attached from the
+    /// server's prefix cache (0 = cold open, the prefill will run and
+    /// register the prefix).
+    SessionOpenedV3 { session: u64, shared_tokens: u32 },
 }
 
 impl Message {
@@ -203,6 +221,30 @@ impl Message {
                 out.extend_from_slice(&(message.len() as u32).to_le_bytes());
                 out.extend_from_slice(message.as_bytes());
             }
+            Message::OpenSessionV3 {
+                session,
+                batch,
+                prefix_len,
+                max_new,
+                prefill_width,
+                prefix_tokens,
+            } => {
+                out.push(11);
+                out.extend_from_slice(&session.to_le_bytes());
+                out.extend_from_slice(&batch.to_le_bytes());
+                out.extend_from_slice(&prefix_len.to_le_bytes());
+                out.extend_from_slice(&max_new.to_le_bytes());
+                out.extend_from_slice(&prefill_width.to_le_bytes());
+                out.extend_from_slice(&(prefix_tokens.len() as u32).to_le_bytes());
+                for t in prefix_tokens {
+                    out.extend_from_slice(&t.to_le_bytes());
+                }
+            }
+            Message::SessionOpenedV3 { session, shared_tokens } => {
+                out.push(12);
+                out.extend_from_slice(&session.to_le_bytes());
+                out.extend_from_slice(&shared_tokens.to_le_bytes());
+            }
         }
         out
     }
@@ -245,6 +287,30 @@ impl Message {
                 let bytes = r.bytes(n)?;
                 Message::Error { message: String::from_utf8(bytes.to_vec()).ok()? }
             }
+            11 => {
+                let session = r.u64()?;
+                let batch = r.u32()?;
+                let prefix_len = r.u32()?;
+                let max_new = r.u32()?;
+                let prefill_width = r.u32()?;
+                let n = r.u32()? as usize;
+                if n > 1 << 20 {
+                    return None; // bound allocation on hostile input
+                }
+                let mut prefix_tokens = Vec::with_capacity(n);
+                for _ in 0..n {
+                    prefix_tokens.push(r.u32()? as i32);
+                }
+                Message::OpenSessionV3 {
+                    session,
+                    batch,
+                    prefix_len,
+                    max_new,
+                    prefill_width,
+                    prefix_tokens,
+                }
+            }
+            12 => Message::SessionOpenedV3 { session: r.u64()?, shared_tokens: r.u32()? },
             _ => return None,
         };
         if r.pos != buf.len() {

@@ -17,10 +17,13 @@ pub use framed::{read_frame, write_frame, FramedConn};
 pub const BASE_PORT: u16 = 31337;
 
 /// Wire protocol version (see docs/WIRE_PROTOCOL.md for the versioning
-/// rules). v2 widened `Pong` with KV-pool occupancy + batch width; the
+/// rules). v2 widened `Pong` with KV-pool occupancy + batch width; v3
+/// added the `OpenSessionV3`/`SessionOpenedV3` tags carrying prefix
+/// token ids for shared-prefix serving (new tags, so v2 frames still
+/// decode; v2 servers reject the new tag and clients downgrade). The
 /// codec has no inline negotiation, so mixed-version swarms must not
 /// share a model namespace.
-pub const PROTOCOL_VERSION: u32 = 2;
+pub const PROTOCOL_VERSION: u32 = 3;
 
 #[cfg(test)]
 mod tests {
@@ -62,6 +65,23 @@ mod tests {
             },
             Message::CloseSession { session: 42 },
             Message::Error { message: "boom".into() },
+            Message::OpenSessionV3 {
+                session: 42,
+                batch: 1,
+                prefix_len: 8,
+                max_new: 16,
+                prefill_width: 128,
+                prefix_tokens: vec![5, -1, 0, 1 << 30],
+            },
+            Message::OpenSessionV3 {
+                session: 43,
+                batch: 1,
+                prefix_len: 0,
+                max_new: 4,
+                prefill_width: 128,
+                prefix_tokens: vec![],
+            },
+            Message::SessionOpenedV3 { session: 42, shared_tokens: 128 },
         ];
         for m in msgs {
             let bytes = m.encode();

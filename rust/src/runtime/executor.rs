@@ -9,14 +9,15 @@
 //! 1. **Weights are converted to literals once** at server start
 //!    ([`Executor::to_literals`]) — re-encoding ~13 MB of block params per
 //!    call would dominate a decode step.
-//! 2. **KV caches lived as refeedable literals** in the pre-pool server:
-//!    a decode step fed the previous step's output literals straight back
-//!    in ([`Executor::call_literals`]), skipping two 4 MB repacks per
-//!    block. The paged-pool server instead gathers page tables into a
-//!    padded literal per step — trading that single-session fast path for
-//!    cross-session batching and bounded memory (see `server/kvpool.rs`;
-//!    restoring a per-session literal cache on top of the pool is an open
-//!    ROADMAP item).
+//! 2. **KV caches live as refeedable literals** on the single-session
+//!    fast path: a decode step feeds the previous step's output literals
+//!    straight back in ([`Executor::call_literals`]), skipping two 4 MB
+//!    repacks per block. The paged-pool server gathers page tables into
+//!    a padded literal only on the first step (and whenever the warm
+//!    literals are invalidated by a page-table change or a fused batch)
+//!    — the pool stays authoritative, the literals are a cache. See
+//!    `server/mod.rs` (`StepLitCache`) and `server/kvpool.rs`
+//!    (`table_epoch`).
 //!
 //! Since the continuous-batching refactor the decode artifacts double as
 //! the server's **batched step entry point**: the `block_decode_b{N}`

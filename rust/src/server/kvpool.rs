@@ -1,4 +1,5 @@
-//! Paged KV-cache pool — the memory substrate behind continuous batching.
+//! Paged KV-cache pool — the memory substrate behind continuous batching
+//! and shared-prefix serving.
 //!
 //! The seed server kept one monolithic cache literal per (session, block)
 //! padded to `max_seq`, so every open session cost the worst-case memory
@@ -21,14 +22,34 @@
 //!   [`Error::Busy`] and the client routes around this server. Reserved
 //!   pages are allocated lazily as tokens are written, so transient
 //!   sessions never touch most of their budget.
+//! - **Page reference counting + copy-on-write.** Since the shared-prefix
+//!   refactor a page may be referenced by several sessions (clients that
+//!   sent the same prompt template) and by *pinned prefix sets* kept
+//!   alive by the server's prefix cache. A session opened against a
+//!   pinned prefix ([`KvPool::open_session_shared`]) attaches the shared
+//!   pages by reference and is charged only the **marginal** pages of its
+//!   private suffix `[write_from, max_tokens)`. The first write into a
+//!   shared page forks it ([`KvPool::prepare_write_range`]): a private
+//!   copy is allocated (against the session's reservation when the write
+//!   position is inside the budgeted span), the shared original keeps its
+//!   other holders. Shared pages are freed only at refcount zero.
 //! - **Defrag.** [`KvPool::defrag`] compacts live pages into the lowest
-//!   page ids so the high watermark tracks actual occupancy — on this CPU
-//!   testbed that bounds host memory; on an accelerator port it is what
-//!   lets the backing arena shrink.
+//!   page ids so the high watermark tracks actual occupancy. With sharing
+//!   a page can be referenced from many tables, so defrag computes a
+//!   remap and rewrites every session table *and* every pinned prefix
+//!   set in one pass.
 //!
 //! Capacity accounting is exact: `used + reserved_unwritten <= capacity`
 //! is an invariant (checked in debug builds), so admission decisions never
-//! oversubscribe the pool.
+//! oversubscribe the pool. Each session tracks its outstanding page
+//! budget explicitly (`reserved_pages_left`), which makes the marginal
+//! charging of shared sessions exact rather than derived.
+//!
+//! Every structural change to a session's page table (open, attach,
+//! CoW fork, defrag move) bumps that session's **epoch**
+//! ([`KvPool::table_epoch`]); the server's single-session decode fast
+//! path keys its cached padded K/V literals on `(len, epoch)` so any
+//! table change invalidates them.
 
 use crate::error::{Error, Result};
 use std::collections::HashMap;
@@ -60,6 +81,25 @@ impl KvPoolConfig {
     pub fn pages_for(&self, batch: usize, n_blocks: usize, tokens: usize) -> usize {
         2 * batch * n_blocks * tokens.div_ceil(self.page_tokens.max(1))
     }
+
+    /// Pages a session must be able to allocate privately to write the
+    /// span `[write_from, max_tokens)`: pages wholly below `write_from`
+    /// stay shared, every page touched at or after it needs a private
+    /// copy (fresh page or CoW fork).
+    pub fn private_pages(
+        &self,
+        batch: usize,
+        n_blocks: usize,
+        write_from: usize,
+        max_tokens: usize,
+    ) -> usize {
+        if max_tokens <= write_from {
+            return 0;
+        }
+        let pt = self.page_tokens.max(1);
+        let per_run = (max_tokens - 1) / pt - write_from / pt + 1;
+        2 * batch * n_blocks * per_run
+    }
 }
 
 /// Page-table entry for one (block, k/v, row) run of a session.
@@ -78,6 +118,16 @@ struct SessionTable {
     len: usize,
     /// Token positions admission has promised this session.
     reserved_tokens: usize,
+    /// First position this session will write itself (0 for private
+    /// sessions; the shared-span boundary for prefix-sharing sessions).
+    write_from: usize,
+    /// Pages the session may still allocate against its reservation.
+    reserved_pages_left: usize,
+    /// Token positions attached from a shared prefix at open (0 = none).
+    shared_tokens: usize,
+    /// Bumped on every structural change to this table (open, fork,
+    /// defrag move) — the fast-path literal-cache invalidation key.
+    epoch: u64,
     /// Indexed by `(block * 2 + kv) * batch + row`.
     runs: Vec<PageRun>,
 }
@@ -88,6 +138,19 @@ impl SessionTable {
     }
 }
 
+/// A pinned, ref-counted snapshot of a session's leading pages — the
+/// storage half of a prefix-cache entry. Owned by the pool (so defrag can
+/// rewrite its page ids); indexed by the id [`KvPool::pin_prefix`]
+/// returned.
+#[derive(Debug)]
+struct PrefixPages {
+    /// Token positions covered (a multiple of `page_tokens`).
+    tokens: usize,
+    n_blocks: usize,
+    /// Indexed by `block * 2 + kv` (pinned prefixes are batch-1 only).
+    runs: Vec<Vec<PageId>>,
+}
+
 /// The paged KV-cache pool. Not internally synchronized: the server wraps
 /// it in its state mutex (one pool per [`crate::server::ServerNode`]).
 pub struct KvPool {
@@ -95,13 +158,25 @@ pub struct KvPool {
     /// Backing storage; pages materialize on first allocation and are
     /// zeroed on reuse so no session can observe another's KV data.
     pages: Vec<Vec<f32>>,
+    /// Per-page reference count (sessions + pinned prefixes); 0 = free.
+    refs: Vec<u32>,
     /// Free list (LIFO: recently-freed pages are cache-warm).
     free: Vec<PageId>,
-    /// Pages handed out to sessions.
+    /// Distinct pages with at least one reference.
     used_pages: usize,
     /// Pages promised to open sessions but not yet written.
     reserved_unwritten: usize,
     tables: HashMap<u64, SessionTable>,
+    /// Pinned prefix page-sets, keyed by pin id.
+    pinned: HashMap<u64, PrefixPages>,
+    next_pin: u64,
+    /// Monotonic structural-change counter; also the epoch source.
+    version: u64,
+    /// Copy-on-write forks performed over the pool's lifetime.
+    cow_forks: u64,
+    /// Pages with refcount > 1, maintained incrementally (the gauge is
+    /// read on every commit; scanning `refs` there would be O(pool)).
+    shared_count: usize,
 }
 
 impl KvPool {
@@ -109,10 +184,16 @@ impl KvPool {
         KvPool {
             cfg,
             pages: Vec::new(),
+            refs: Vec::new(),
             free: Vec::new(),
             used_pages: 0,
             reserved_unwritten: 0,
             tables: HashMap::new(),
+            pinned: HashMap::new(),
+            next_pin: 1,
+            version: 0,
+            cow_forks: 0,
+            shared_count: 0,
         }
     }
 
@@ -160,6 +241,42 @@ impl KvPool {
         self.tables.get(&session).map(|t| t.len)
     }
 
+    /// Token positions this session attached from a shared prefix.
+    pub fn session_shared_tokens(&self, session: u64) -> Option<usize> {
+        self.tables.get(&session).map(|t| t.shared_tokens)
+    }
+
+    /// Structural-change epoch of a session's page table (fast-path
+    /// invalidation key; see module docs).
+    pub fn table_epoch(&self, session: u64) -> Option<u64> {
+        self.tables.get(&session).map(|t| t.epoch)
+    }
+
+    /// Pages currently referenced by more than one holder.
+    pub fn shared_pages(&self) -> usize {
+        debug_assert_eq!(
+            self.shared_count,
+            self.refs.iter().filter(|&&r| r > 1).count(),
+            "shared-page counter drifted"
+        );
+        self.shared_count
+    }
+
+    /// Copy-on-write forks performed so far.
+    pub fn cow_forks(&self) -> u64 {
+        self.cow_forks
+    }
+
+    /// Pages held alive by pinned prefix sets (counting each once).
+    pub fn pinned_prefixes(&self) -> usize {
+        self.pinned.len()
+    }
+
+    fn next_epoch(&mut self) -> u64 {
+        self.version += 1;
+        self.version
+    }
+
     /// Admission control: open a session reserving `max_tokens` positions.
     /// Rejects with [`Error::Busy`] when the reservation would
     /// oversubscribe the pool (the client treats Busy as retryable and
@@ -192,6 +309,7 @@ impl KvPool {
             )));
         }
         self.reserved_unwritten += need;
+        let epoch = self.next_epoch();
         self.tables.insert(
             session,
             SessionTable {
@@ -199,11 +317,99 @@ impl KvPool {
                 n_blocks,
                 len: 0,
                 reserved_tokens: max_tokens,
+                write_from: 0,
+                reserved_pages_left: need,
+                shared_tokens: 0,
+                epoch,
                 runs: vec![PageRun::default(); n_blocks * 2 * batch],
             },
         );
         self.check_invariant();
         Ok(())
+    }
+
+    /// Open a batch-1 session on top of a pinned prefix: the first
+    /// `share_tokens` positions of the pinned pages are attached by
+    /// reference (refcount bumped), the session's `len` starts there,
+    /// and admission charges only the **marginal** pages of the private
+    /// span `[write_from, max_tokens)`. `share_tokens` must be
+    /// page-aligned and at most the pin's coverage — a *partial* trie
+    /// hit attaches only the matched span, never the pin's tail (which
+    /// holds the donor's own divergent tokens / padding). `write_from`
+    /// is the first position this session will write (its own prefix
+    /// length for a full-prefix hit — decode overwrites from there and
+    /// CoW-forks the pages it touches).
+    ///
+    /// Returns the number of shared token positions attached.
+    pub fn open_session_shared(
+        &mut self,
+        session: u64,
+        n_blocks: usize,
+        max_tokens: usize,
+        pin: u64,
+        share_tokens: usize,
+        write_from: usize,
+    ) -> Result<usize> {
+        if n_blocks == 0 {
+            return Err(Error::Protocol(format!("session {session}: 0 blocks")));
+        }
+        let (covered, pin_blocks) = match self.pinned.get(&pin) {
+            Some(p) => (p.tokens, p.n_blocks),
+            None => return Err(Error::NotFound(format!("pinned prefix {pin}"))),
+        };
+        if pin_blocks != n_blocks {
+            return Err(Error::Protocol(format!(
+                "pinned prefix {pin} spans {pin_blocks} blocks, session wants {n_blocks}"
+            )));
+        }
+        let pt = self.cfg.page_tokens.max(1);
+        let shared = share_tokens.min(covered);
+        if shared == 0 || shared % pt != 0 {
+            return Err(Error::Protocol(format!(
+                "shared span {shared} is not a positive multiple of page_tokens {pt}"
+            )));
+        }
+        if self.tables.contains_key(&session) {
+            self.close_session(session);
+        }
+        let wf = write_from.min(shared);
+        let need = self.cfg.private_pages(1, n_blocks, wf, max_tokens);
+        if need > self.free_pages() {
+            return Err(Error::Busy(format!(
+                "kv pool full: session {session} needs {need} marginal pages, {} free of {}",
+                self.free_pages(),
+                self.cfg.capacity_pages
+            )));
+        }
+        let n_pages = shared / pt;
+        let mut runs = vec![PageRun::default(); n_blocks * 2];
+        let pp = self.pinned.get(&pin).unwrap();
+        for (ri, pages) in pp.runs.iter().enumerate() {
+            runs[ri].pages = pages[..n_pages].to_vec();
+        }
+        let attach: Vec<PageId> =
+            runs.iter().flat_map(|r| r.pages.iter().copied()).collect();
+        for p in attach {
+            self.retain_page(p);
+        }
+        self.reserved_unwritten += need;
+        let epoch = self.next_epoch();
+        self.tables.insert(
+            session,
+            SessionTable {
+                batch: 1,
+                n_blocks,
+                len: shared,
+                reserved_tokens: max_tokens.max(wf),
+                write_from: wf,
+                reserved_pages_left: need,
+                shared_tokens: shared,
+                epoch,
+                runs,
+            },
+        );
+        self.check_invariant();
+        Ok(shared)
     }
 
     /// Grow a session's token reservation to `max_tokens` (no-op if it is
@@ -217,8 +423,12 @@ impl KvPool {
         if max_tokens <= t.reserved_tokens {
             return Ok(());
         }
-        let old = self.cfg.pages_for(t.batch, t.n_blocks, t.reserved_tokens);
-        let new = self.cfg.pages_for(t.batch, t.n_blocks, max_tokens);
+        let old = self
+            .cfg
+            .private_pages(t.batch, t.n_blocks, t.write_from, t.reserved_tokens);
+        let new = self
+            .cfg
+            .private_pages(t.batch, t.n_blocks, t.write_from, max_tokens);
         let extra = new.saturating_sub(old);
         if extra > self.free_pages() {
             return Err(Error::Busy(format!(
@@ -227,35 +437,119 @@ impl KvPool {
             )));
         }
         self.reserved_unwritten += extra;
-        self.tables.get_mut(&session).unwrap().reserved_tokens = max_tokens;
+        let t = self.tables.get_mut(&session).unwrap();
+        t.reserved_tokens = max_tokens;
+        t.reserved_pages_left += extra;
         self.check_invariant();
         Ok(())
     }
 
-    /// Release everything the session holds: its pages return to the free
-    /// list, its unused reservation is released, its table is dropped.
+    /// Release everything the session holds: its page references are
+    /// dropped (pages return to the free list at refcount zero — shared
+    /// pages survive for their other holders), its unused reservation is
+    /// released, its table is dropped.
     pub fn close_session(&mut self, session: u64) {
         let Some(t) = self.tables.remove(&session) else {
             return;
         };
-        let reserved = self.cfg.pages_for(t.batch, t.n_blocks, t.reserved_tokens);
-        let mut held = 0usize;
         for run in &t.runs {
             for &p in &run.pages {
-                self.free.push(p);
-                held += 1;
+                self.release_page(p);
             }
         }
-        self.used_pages -= held;
-        self.reserved_unwritten -= reserved.saturating_sub(held);
+        self.reserved_unwritten = self.reserved_unwritten.saturating_sub(t.reserved_pages_left);
         self.check_invariant();
     }
 
-    /// Allocate one page, zeroing recycled storage.
+    /// Pin the leading `tokens` positions of `session`'s page tables as a
+    /// shared prefix (refcount bump on every covered page). `tokens` must
+    /// be page-aligned and materialized. Returns the pin id to pass to
+    /// [`Self::open_session_shared`] / [`Self::unpin_prefix`]. Batch-1
+    /// sessions only.
+    pub fn pin_prefix(&mut self, session: u64, tokens: usize) -> Result<u64> {
+        let t = self
+            .tables
+            .get(&session)
+            .ok_or_else(|| Error::NotFound(format!("session {session}")))?;
+        if t.batch != 1 {
+            return Err(Error::Protocol(format!(
+                "prefix pinning requires batch 1 (session {session} has {})",
+                t.batch
+            )));
+        }
+        let pt = self.cfg.page_tokens.max(1);
+        if tokens == 0 || tokens % pt != 0 {
+            return Err(Error::Protocol(format!(
+                "prefix length {tokens} is not a multiple of page_tokens {pt}"
+            )));
+        }
+        let n_pages = tokens / pt;
+        let mut runs = Vec::with_capacity(t.runs.len());
+        for run in &t.runs {
+            if run.pages.len() < n_pages {
+                return Err(Error::Protocol(format!(
+                    "prefix covers {n_pages} pages but session {session} materialized {}",
+                    run.pages.len()
+                )));
+            }
+            runs.push(run.pages[..n_pages].to_vec());
+        }
+        let n_blocks = t.n_blocks;
+        let pin_pages: Vec<PageId> = runs.iter().flat_map(|r| r.iter().copied()).collect();
+        for p in pin_pages {
+            self.retain_page(p);
+        }
+        let pin = self.next_pin;
+        self.next_pin += 1;
+        self.pinned.insert(pin, PrefixPages { tokens, n_blocks, runs });
+        Ok(pin)
+    }
+
+    /// Drop a pinned prefix; its pages are freed once no session shares
+    /// them anymore. Returns false if the pin was unknown.
+    pub fn unpin_prefix(&mut self, pin: u64) -> bool {
+        let Some(pp) = self.pinned.remove(&pin) else {
+            return false;
+        };
+        for run in &pp.runs {
+            for &p in run {
+                self.release_page(p);
+            }
+        }
+        self.check_invariant();
+        true
+    }
+
+    /// Add one reference to a live page (prefix attach / pin).
+    fn retain_page(&mut self, id: PageId) {
+        let r = &mut self.refs[id as usize];
+        debug_assert!(*r > 0, "retaining free page {id}");
+        *r += 1;
+        if *r == 2 {
+            self.shared_count += 1;
+        }
+    }
+
+    /// Drop one reference to a page; recycle it at refcount zero.
+    fn release_page(&mut self, id: PageId) {
+        let r = &mut self.refs[id as usize];
+        debug_assert!(*r > 0, "releasing free page {id}");
+        *r -= 1;
+        if *r == 1 {
+            self.shared_count -= 1;
+        }
+        if *r == 0 {
+            self.free.push(id);
+            self.used_pages -= 1;
+        }
+    }
+
+    /// Allocate one page (refcount 1), zeroing recycled storage.
     fn alloc_page(&mut self) -> Result<PageId> {
         let pf = self.cfg.page_floats();
         if let Some(id) = self.free.pop() {
             self.pages[id as usize].iter_mut().for_each(|v| *v = 0.0);
+            self.refs[id as usize] = 1;
             self.used_pages += 1;
             return Ok(id);
         }
@@ -267,42 +561,96 @@ impl KvPool {
         }
         let id = self.pages.len() as PageId;
         self.pages.push(vec![0.0; pf]);
+        self.refs.push(1);
         self.used_pages += 1;
         Ok(id)
     }
 
-    /// Make sure the session's runs can address token `pos` in every
-    /// block, allocating pages against the reservation. Fails with Busy
-    /// only when `pos` exceeds the reservation *and* the pool cannot grow
-    /// it — callers invoke this *before* running any compute so an errored
-    /// step never leaves caches half-written.
-    pub fn prepare_write(&mut self, session: u64, pos: usize) -> Result<()> {
-        let t = self
+    /// Allocate a page for `session`: against its reservation when budget
+    /// remains, else from free capacity (CoW forks outside the budgeted
+    /// span land here), rejecting with Busy when neither has room.
+    fn alloc_for(&mut self, session: u64) -> Result<PageId> {
+        let has_budget = self
             .tables
             .get(&session)
-            .ok_or_else(|| Error::NotFound(format!("session {session}")))?;
-        if pos >= t.reserved_tokens {
-            self.reserve_tokens(session, pos + 1)?;
+            .map(|t| t.reserved_pages_left > 0)
+            .unwrap_or(false);
+        if !has_budget && self.free_pages() == 0 {
+            return Err(Error::Busy(format!(
+                "kv pool full: session {session} needs a page beyond its reservation"
+            )));
         }
-        let page_idx = pos / self.cfg.page_tokens;
-        let t = self.tables.get(&session).unwrap();
-        let n_runs = t.runs.len();
-        // pages written so far vs pages the reservation promised: the
-        // difference transfers from reserved to used as we allocate
+        let id = self.alloc_page()?;
+        if has_budget {
+            self.tables.get_mut(&session).unwrap().reserved_pages_left -= 1;
+            self.reserved_unwritten -= 1;
+        }
+        Ok(id)
+    }
+
+    /// Make sure the session's runs can address token `pos` in every
+    /// block, allocating pages against the reservation and CoW-forking a
+    /// shared page about to be overwritten. Fails with Busy only when the
+    /// pool cannot grow — callers invoke this *before* running any
+    /// compute so an errored step never leaves caches half-written.
+    pub fn prepare_write(&mut self, session: u64, pos: usize) -> Result<usize> {
+        self.prepare_write_range(session, pos, pos)
+    }
+
+    /// [`Self::prepare_write`] over the write span `[from, to]`: pages up
+    /// to `to` exist afterwards, and every page that will be written
+    /// (those covering `[from, to]`) is private to this session — shared
+    /// pages in that range are forked (allocate + copy + release the
+    /// shared original). Returns the number of CoW forks performed.
+    pub fn prepare_write_range(&mut self, session: u64, from: usize, to: usize) -> Result<usize> {
+        if !self.tables.contains_key(&session) {
+            return Err(Error::NotFound(format!("session {session}")));
+        }
+        if to >= self.tables[&session].reserved_tokens {
+            self.reserve_tokens(session, to + 1)?;
+        }
+        let pt = self.cfg.page_tokens.max(1);
+        let (first, last) = (from.min(to) / pt, to / pt);
+        let n_runs = self.tables[&session].runs.len();
+        let mut forks = 0usize;
         for run_i in 0..n_runs {
-            while self.tables[&session].runs[run_i].pages.len() <= page_idx {
-                let id = self.alloc_page()?;
-                self.reserved_unwritten = self.reserved_unwritten.saturating_sub(1);
+            // materialize missing pages up to `last`
+            while self.tables[&session].runs[run_i].pages.len() <= last {
+                let id = self.alloc_for(session)?;
                 self.tables.get_mut(&session).unwrap().runs[run_i].pages.push(id);
+            }
+            // privatize the pages that will be written
+            for pi in first..=last {
+                let pid = self.tables[&session].runs[run_i].pages[pi];
+                if self.refs[pid as usize] > 1 {
+                    let fresh = self.alloc_for(session)?;
+                    // single memcpy, no temp allocation: split the page
+                    // vec around the higher index (pid != fresh — fresh
+                    // was just allocated, pid is still multiply held)
+                    let hi = pid.max(fresh) as usize;
+                    let (head, tail) = self.pages.split_at_mut(hi);
+                    if (pid as usize) == hi {
+                        head[fresh as usize].copy_from_slice(&tail[0]);
+                    } else {
+                        tail[0].copy_from_slice(&head[pid as usize]);
+                    }
+                    self.release_page(pid);
+                    let epoch = self.next_epoch();
+                    let t = self.tables.get_mut(&session).unwrap();
+                    t.runs[run_i].pages[pi] = fresh;
+                    t.epoch = epoch;
+                    self.cow_forks += 1;
+                    forks += 1;
+                }
             }
         }
         self.check_invariant();
-        Ok(())
+        Ok(forks)
     }
 
     /// Write a prefill's K or V output `[B, Hh, W, D]` for one block.
-    /// Pages must have been prepared via [`Self::prepare_write`] for
-    /// position `w - 1`. Does not advance `len` — call
+    /// Pages must have been prepared via [`Self::prepare_write_range`]
+    /// for positions up to `width - 1`. Does not advance `len` — call
     /// [`Self::commit_len`] once after all blocks are written.
     pub fn write_prefill(
         &mut self,
@@ -311,6 +659,22 @@ impl KvPool {
         kv: usize,
         src: &[f32],
         width: usize,
+    ) -> Result<()> {
+        self.write_prefill_from(session, block, kv, src, width, 0)
+    }
+
+    /// [`Self::write_prefill`] skipping positions below `from` — the
+    /// shared-prefix span whose pages this session holds by reference
+    /// (writing them would corrupt the other holders; their content is
+    /// identical by construction). `from` must be page-aligned.
+    pub fn write_prefill_from(
+        &mut self,
+        session: u64,
+        block: usize,
+        kv: usize,
+        src: &[f32],
+        width: usize,
+        from: usize,
     ) -> Result<()> {
         let (hh, d, pt) = (self.cfg.n_heads, self.cfg.head_dim, self.cfg.page_tokens);
         let t = self
@@ -325,6 +689,11 @@ impl KvPool {
                 batch
             )));
         }
+        if from % pt != 0 {
+            return Err(Error::Protocol(format!(
+                "prefill write offset {from} is not page-aligned ({pt})"
+            )));
+        }
         for row in 0..batch {
             let run_idx = t.run_index(block, kv, row);
             let page_ids: Vec<PageId> = self.tables[&session].runs[run_idx].pages.clone();
@@ -333,7 +702,15 @@ impl KvPool {
                 if t0 >= width {
                     break;
                 }
+                if t0 + pt <= from {
+                    continue; // fully inside the shared prefix — skip
+                }
                 let n_tok = pt.min(width - t0);
+                debug_assert!(
+                    self.refs[pid as usize] == 1,
+                    "writing shared page {pid} (refs {})",
+                    self.refs[pid as usize]
+                );
                 let page = &mut self.pages[pid as usize];
                 for h in 0..hh {
                     let src_off = ((row * hh + h) * width + t0) * d;
@@ -378,6 +755,11 @@ impl KvPool {
                 .ok_or_else(|| {
                     Error::Protocol(format!("write at {pos} before prepare (session {session})"))
                 })?;
+            debug_assert!(
+                self.refs[pid as usize] == 1,
+                "column write into shared page {pid} (refs {}) — prepare_write must fork first",
+                self.refs[pid as usize]
+            );
             let page = &mut self.pages[pid as usize];
             for h in 0..hh {
                 let src_off = (row * hh + h) * d;
@@ -440,38 +822,72 @@ impl KvPool {
         Ok(())
     }
 
-    /// Compact live pages into the lowest page ids, rewriting every page
-    /// table. Returns the number of pages moved. After defrag the backing
-    /// vector can be truncated to the high watermark, so long-running
-    /// servers do not hold peak-load memory forever.
+    /// Compact live pages into the lowest page ids. A shared page may be
+    /// referenced from many session tables and pinned prefix sets, so the
+    /// move pass builds an old→new remap first and then rewrites every
+    /// holder. Sessions whose tables changed get their epoch bumped (the
+    /// fast-path literal cache re-validates). Returns pages moved. After
+    /// defrag the backing vector is truncated to the high watermark, so
+    /// long-running servers do not hold peak-load memory forever.
     pub fn defrag(&mut self) -> usize {
-        // lowest-id-first free list so future allocs fill holes
-        self.free.sort_unstable();
-        let mut moves = 0;
-        // walk live pages from the top; move each into the lowest free hole
-        let live: usize = self.used_pages;
-        for t in self.tables.values_mut() {
-            for run in &mut t.runs {
-                for p in &mut run.pages {
-                    if (*p as usize) < live {
-                        continue; // already below the watermark
+        let live = self.used_pages;
+        // holes below the watermark, lowest-first for popping
+        let mut holes: Vec<PageId> = self
+            .free
+            .iter()
+            .copied()
+            .filter(|&f| (f as usize) < live)
+            .collect();
+        holes.sort_unstable_by(|a, b| b.cmp(a)); // pop() yields lowest
+        let mut remap: HashMap<PageId, PageId> = HashMap::new();
+        for id in live..self.pages.len() {
+            if self.refs[id] == 0 {
+                continue;
+            }
+            let Some(hole) = holes.pop() else { break };
+            self.pages[hole as usize] = std::mem::take(&mut self.pages[id]);
+            self.refs[hole as usize] = self.refs[id];
+            self.refs[id] = 0;
+            remap.insert(id as PageId, hole);
+        }
+        let moves = remap.len();
+        if moves > 0 {
+            let mut bumps: Vec<u64> = Vec::new();
+            for (&sid, t) in self.tables.iter_mut() {
+                let mut touched = false;
+                for run in &mut t.runs {
+                    for p in &mut run.pages {
+                        if let Some(&n) = remap.get(p) {
+                            *p = n;
+                            touched = true;
+                        }
                     }
-                    // find a hole below the watermark
-                    let hole = match self.free.iter().position(|&f| (f as usize) < live) {
-                        Some(i) => self.free.remove(i),
-                        None => continue,
-                    };
-                    self.free.push(*p); // old slot becomes free (above watermark)
-                    let moved = std::mem::take(&mut self.pages[*p as usize]);
-                    self.pages[hole as usize] = moved;
-                    *p = hole;
-                    moves += 1;
+                }
+                if touched {
+                    bumps.push(sid);
+                }
+            }
+            for sid in bumps {
+                let epoch = self.next_epoch();
+                self.tables.get_mut(&sid).unwrap().epoch = epoch;
+            }
+            for pp in self.pinned.values_mut() {
+                for run in &mut pp.runs {
+                    for p in &mut run.pages {
+                        if let Some(&n) = remap.get(p) {
+                            *p = n;
+                        }
+                    }
                 }
             }
         }
-        // drop free pages above the watermark entirely
-        self.free.retain(|&f| (f as usize) < live);
+        // rebuild the free list: drop ids above the watermark (storage
+        // truncated) and holes that were just filled by moved pages
+        let refs = &self.refs;
+        self.free
+            .retain(|&f| (f as usize) < live && refs[f as usize] == 0);
         self.pages.truncate(live);
+        self.refs.truncate(live);
         moves
     }
 
@@ -519,6 +935,12 @@ mod tests {
         assert_eq!(c.pages_for(1, 3, 9), 18);
         assert_eq!(c.pages_for(2, 1, 4), 4);
         assert_eq!(c.page_floats(), 2 * 4 * 3);
+        // private span [4, 12): pages 1..2 inclusive = 2 per run
+        assert_eq!(c.private_pages(1, 1, 4, 12), 4);
+        // degenerate: nothing to write
+        assert_eq!(c.private_pages(1, 1, 8, 8), 0);
+        // write_from 0 equals the classic formula
+        assert_eq!(c.private_pages(1, 3, 0, 9), c.pages_for(1, 3, 9));
     }
 
     #[test]
@@ -697,5 +1119,149 @@ mod tests {
         assert_eq!(p.free_pages(), 4);
         let zero = KvPool::new(cfg(0));
         assert_eq!(zero.occupancy(), 1.0);
+    }
+
+    // ---- shared-prefix / refcount / CoW -----------------------------------
+
+    /// Open a donor, write an 8-token prefix (2 pages/run), pin it.
+    /// Returns (pool, pin). Geometry: 1 block, page_tokens 4.
+    fn donor_with_pin(capacity: usize) -> (KvPool, u64) {
+        let mut p = KvPool::new(cfg(capacity));
+        p.open_session(1, 1, 1, 8).unwrap();
+        p.prepare_write_range(1, 0, 7).unwrap();
+        let w = kv_src(1, 2, 8, 3, 1.0);
+        p.write_prefill(1, 0, 0, &w, 8).unwrap();
+        p.write_prefill(1, 0, 1, &w, 8).unwrap();
+        p.commit_len(1, 8);
+        let pin = p.pin_prefix(1, 8).unwrap();
+        (p, pin)
+    }
+
+    #[test]
+    fn shared_open_charges_only_marginal_pages() {
+        let (mut p, pin) = donor_with_pin(32);
+        let used_before = p.used_pages();
+        let free_before = p.free_pages();
+        // sharer writes only [8, 12): one marginal page per run
+        let shared = p.open_session_shared(2, 1, 12, pin, 8, 8).unwrap();
+        assert_eq!(shared, 8);
+        assert_eq!(p.session_len(2), Some(8), "sharer starts at the prefix length");
+        assert_eq!(p.used_pages(), used_before, "no pages materialized yet");
+        // marginal reservation: private_pages(1,1,8,12) = 2 runs * 1 page
+        assert_eq!(free_before - p.free_pages(), 2);
+        // the donor's full-width cost was pages_for(1,1,8) = 4
+        assert!(free_before - p.free_pages() < p.config().pages_for(1, 1, 12));
+        // sharer reads the donor's data through the shared pages
+        let mut dst = vec![0.0f32; 2 * 8 * 3];
+        p.gather_padded(2, 0, 0, 8, &mut dst).unwrap();
+        assert_eq!(dst[0], 1.0);
+        assert!(p.shared_pages() >= 4, "prefix pages are multiply referenced");
+    }
+
+    #[test]
+    fn cow_fork_isolates_writers() {
+        let (mut p, pin) = donor_with_pin(32);
+        // sharer overwrites position 2 — inside the shared prefix
+        p.open_session_shared(2, 1, 12, pin, 8, 2).unwrap();
+        let epoch_before = p.table_epoch(2).unwrap();
+        let forks = p.prepare_write(2, 2).unwrap();
+        assert_eq!(forks, 2, "page 0 of both K and V runs forked");
+        assert_eq!(p.cow_forks(), 2);
+        assert!(p.table_epoch(2).unwrap() > epoch_before, "fork bumps the epoch");
+        let col = vec![-9.0f32; 2 * 3];
+        p.write_column(2, 0, 0, 2, &col).unwrap();
+        // sharer sees its write...
+        let mut dst = vec![0.0f32; 2 * 8 * 3];
+        p.gather_padded(2, 0, 0, 8, &mut dst).unwrap();
+        assert_eq!(dst[2 * 3], -9.0);
+        // ...the donor does not (its page was never touched)
+        p.gather_padded(1, 0, 0, 8, &mut dst).unwrap();
+        assert_eq!(dst[2 * 3], 1.0 + 2.0);
+        // donor's own write at the same spot forks again (pin still holds)
+        let forks2 = p.prepare_write(1, 2).unwrap();
+        assert!(forks2 >= 1, "pinned page must fork under the donor too");
+    }
+
+    #[test]
+    fn close_one_sharer_keeps_pages_alive() {
+        let (mut p, pin) = donor_with_pin(32);
+        p.open_session_shared(2, 1, 12, pin, 8, 8).unwrap();
+        p.open_session_shared(3, 1, 12, pin, 8, 8).unwrap();
+        // donor leaves mid-generation: shared pages must survive
+        p.close_session(1);
+        let mut dst = vec![0.0f32; 2 * 8 * 3];
+        p.gather_padded(2, 0, 0, 8, &mut dst).unwrap();
+        assert_eq!(dst[0], 1.0);
+        // one sharer leaves: the other still reads the prefix
+        p.close_session(2);
+        p.gather_padded(3, 0, 0, 8, &mut dst).unwrap();
+        assert_eq!(dst[0], 1.0);
+        // last sharer + the pin gone -> pages actually free
+        p.close_session(3);
+        assert!(p.used_pages() > 0, "pin keeps the prefix warm");
+        assert!(p.unpin_prefix(pin));
+        assert_eq!(p.used_pages(), 0, "refcount zero frees the prefix");
+        assert!(!p.unpin_prefix(pin), "double unpin is a no-op");
+    }
+
+    #[test]
+    fn defrag_remaps_shared_and_pinned_pages() {
+        let mut p = KvPool::new(cfg(64));
+        // filler session first so the donor's pages land at high ids
+        p.open_session(7, 1, 1, 16).unwrap();
+        p.prepare_write(7, 15).unwrap(); // ids 0..8
+        let (pin, _) = {
+            p.open_session(1, 1, 1, 8).unwrap();
+            p.prepare_write_range(1, 0, 7).unwrap(); // ids 8..12
+            let w = kv_src(1, 2, 8, 3, 5.0);
+            p.write_prefill(1, 0, 0, &w, 8).unwrap();
+            p.commit_len(1, 8);
+            (p.pin_prefix(1, 8).unwrap(), ())
+        };
+        p.open_session_shared(2, 1, 12, pin, 8, 8).unwrap();
+        p.close_session(7); // holes at 0..8, live pages above
+        let epoch_before = p.table_epoch(2).unwrap();
+        let moved = p.defrag();
+        assert!(moved > 0);
+        // both the sharer and the donor still read the same bytes
+        let mut dst = vec![0.0f32; 2 * 8 * 3];
+        p.gather_padded(2, 0, 0, 8, &mut dst).unwrap();
+        assert_eq!(dst[0], 5.0);
+        p.gather_padded(1, 0, 0, 8, &mut dst).unwrap();
+        assert_eq!(dst[0], 5.0);
+        assert!(p.table_epoch(2).unwrap() > epoch_before, "defrag bumps moved epochs");
+        // a shared open against the (remapped) pin still works
+        p.open_session_shared(3, 1, 12, pin, 8, 8).unwrap();
+        p.gather_padded(3, 0, 0, 8, &mut dst).unwrap();
+        assert_eq!(dst[0], 5.0);
+    }
+
+    #[test]
+    fn fork_under_fragmentation_rejected_then_recovers() {
+        // capacity exactly: donor 4 pages + pin (no extra) + sharer 2 marginal
+        let (mut p, pin) = donor_with_pin(6);
+        p.open_session_shared(2, 1, 12, pin, 8, 8).unwrap();
+        p.prepare_write_range(2, 8, 11).unwrap(); // consumes the marginal pages
+        // a write inside the shared span needs a fork beyond the budget
+        let err = p.prepare_write(2, 0).unwrap_err();
+        assert!(matches!(err, Error::Busy(_)), "{err}");
+        // freeing the donor's private claim is not enough (pages shared),
+        // but closing the donor AND unpinning releases real capacity
+        p.close_session(1);
+        p.unpin_prefix(pin);
+        // now the shared pages belong to session 2 alone: refcount 1, the
+        // "fork" is no longer needed — prepare succeeds without allocating
+        let forks = p.prepare_write(2, 0).unwrap();
+        assert_eq!(forks, 0, "sole holder writes in place");
+    }
+
+    #[test]
+    fn shared_reservation_released_on_close() {
+        let (mut p, pin) = donor_with_pin(32);
+        let free0 = p.free_pages();
+        p.open_session_shared(2, 1, 16, pin, 8, 8).unwrap();
+        p.prepare_write(2, 8).unwrap(); // one marginal page materialized
+        p.close_session(2);
+        assert_eq!(p.free_pages(), free0, "marginal pages + reservation fully returned");
     }
 }

@@ -129,6 +129,7 @@ impl ChainClient for LocalCluster {
                     span_compute_s,
                     queue_depth: m.node.queue_depth(),
                     free_ratio,
+                    prefix_fps: m.node.prefix_fingerprints(4),
                 }
             })
             .collect()
@@ -143,6 +144,29 @@ impl ChainClient for LocalCluster {
         max_new: usize,
     ) -> Result<()> {
         self.with_node(server, |n| n.open_session(session, batch, prefix_len + max_new))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn open_session_prefixed(
+        &self,
+        server: NodeId,
+        session: u64,
+        batch: usize,
+        prefix_len: usize,
+        max_new: usize,
+        prefix_tokens: &[i32],
+        prefill_width: usize,
+    ) -> Result<()> {
+        self.with_node(server, |n| {
+            n.open_session_with_prefix(
+                session,
+                batch,
+                prefix_len + max_new,
+                prefix_tokens,
+                prefill_width,
+            )
+            .map(|_| ())
+        })
     }
 
     fn prefill(&self, server: NodeId, session: u64, hidden: &Tensor) -> Result<Tensor> {
@@ -225,11 +249,10 @@ mod tests {
             route: RouteQuery {
                 n_blocks,
                 msg_bytes: (hidden * 4) as u64,
-                beam_width: 8,
-                queue_penalty_s: 0.05,
-                pool_penalty_s: 0.05,
+                ..Default::default()
             },
             max_recoveries: 3,
+            prefix_tokens: vec![],
         }
     }
 
@@ -322,5 +345,42 @@ mod tests {
         assert_eq!(got, want.as_i32().to_vec(), "tokens diverged after failover");
         assert_eq!(session.recoveries(), 1);
         session.close();
+    }
+
+    /// Two identical prompts through the swarm: the second session
+    /// attaches the cached prefix on every hop, skips its prefills, and
+    /// still produces exactly the golden tokens (sharing must be
+    /// invisible in the output).
+    #[test]
+    fn shared_prompt_second_session_hits_cache_and_matches() {
+        let (home, rt) = setup();
+        let g = home.geometry().clone();
+        let cluster = spawn_even_swarm(&home, rt.clone(), 2, Precision::F16).unwrap();
+        let weights = Weights::load(&home, Precision::F16).unwrap();
+        let head = LocalHead::new(&home, rt, &weights).unwrap();
+
+        let gg = &home.manifest.golden_generate;
+        let prefix_t = home.load_tensor(&gg.prefix).unwrap();
+        let want = home.load_tensor(&gg.tokens).unwrap();
+        let prefix: Vec<Vec<i32>> = vec![prefix_t.as_i32().to_vec()];
+
+        let gen = SwarmGenerator {
+            swarm: &cluster,
+            head: &head,
+            cfg: session_cfg(g.n_layers, g.hidden),
+            sampler: Sampler::Greedy,
+        };
+        let a = gen.generate(&prefix, want.elements(), 50).unwrap();
+        let b = gen.generate(&prefix, want.elements(), 51).unwrap();
+        assert_eq!(a.tokens[0], want.as_i32().to_vec());
+        assert_eq!(a.tokens, b.tokens, "prefix sharing changed the tokens");
+        let (mut hits, mut skips) = (0, 0);
+        for id in cluster.ids() {
+            let n = cluster.node(id).unwrap();
+            hits += n.metrics.prefix_hits.get();
+            skips += n.metrics.prefix_prefill_skips.get();
+        }
+        assert!(hits >= 2, "second session must hit the cache on both hops (got {hits})");
+        assert!(skips >= 2, "second prefill must be answered from the cache (got {skips})");
     }
 }

@@ -3,23 +3,43 @@
 //! serves inference steps, parallel forwards, and backward passes — all
 //! compute through the AOT artifacts via PJRT.
 //!
-//! Since the continuous-batching refactor the server is built from three
-//! pieces:
+//! Since the continuous-batching and shared-prefix refactors the server
+//! is built from four pieces:
 //!
 //! - [`kvpool`] — block-granular paged KV-cache storage with admission
-//!   control (fixed-size pages, per-session page tables, alloc/free/
-//!   defrag, exact capacity accounting);
+//!   control (fixed-size pages, ref-counted with copy-on-write forks,
+//!   per-session page tables, alloc/free/defrag, exact capacity
+//!   accounting);
+//! - [`prefixcache`] — the shared-prefix index: a radix trie over token
+//!   id prefixes mapping prompt templates to pinned KV pages and cached
+//!   prefill outputs, so sessions sharing a system prompt pay only the
+//!   **marginal** (suffix) pages and — on an exact match — skip the
+//!   prefill executor call entirely;
 //! - [`scheduler`] — the group-commit step scheduler that coalesces
 //!   decode steps from concurrent sessions into one fused executor call
 //!   per hosted span (gather active rows → single batched forward →
 //!   scatter results);
-//! - [`ServerNode`] — the request handlers tying both to the runtime.
+//! - [`ServerNode`] — the request handlers tying all three to the
+//!   runtime.
 //!
-//! Decode steps are *staged*: pages are prepared before any compute, the
+//! Decode steps are *staged*: pages are prepared before any compute
+//! (including CoW forks of shared pages about to be overwritten), the
 //! new KV columns are buffered during the span walk, and the pool is
 //! only written after every block succeeded — so an errored step rolls
 //! back cleanly instead of corrupting the session (the seed took cache
 //! slots out of the session before executing and lost them on error).
+//!
+//! A lone session additionally gets the **decode fast path**: the padded
+//! K/V literals from its previous step are cached and refed straight
+//! into the next decode call, skipping the per-step pool gather + host →
+//! device upload. The cache is keyed on `(cache_len, page-table epoch)`
+//! so any structural change — CoW fork, defrag move, re-open, or an
+//! intervening *fused* step — invalidates it and the next step falls
+//! back to a pool gather.
+//!
+//! Lock order (deadlock discipline): `prefix_cache` before `pool`;
+//! the session-tracker maps and the step-literal cache are leaf locks,
+//! never held while acquiring another.
 //!
 //! Submodules: [`local`] (in-process cluster implementing
 //! [`crate::coordinator::ChainClient`] — tests, quickstart) and
@@ -28,10 +48,12 @@
 
 pub mod kvpool;
 pub mod local;
+pub mod prefixcache;
 pub mod scheduler;
 pub mod service;
 
 pub use kvpool::{KvPool, KvPoolConfig};
+pub use prefixcache::{fingerprint, PrefixCache, PrefixHit};
 pub use scheduler::{StepRequest, StepScheduler};
 
 use crate::coordinator::throughput::MeasuredThroughput;
@@ -44,7 +66,8 @@ use crate::model::weights::{BlockWeights, Precision};
 use crate::model::ModelHome;
 use crate::net::{Message, TensorPayload};
 use crate::runtime::Runtime;
-use std::sync::atomic::{AtomicU32, Ordering};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -76,12 +99,38 @@ pub struct ServerOptions {
     pub batch_window: Duration,
     /// Maximum sessions fused into one decode call.
     pub max_batch_width: usize,
+    /// Maximum prompt templates the shared-prefix cache pins (0 disables
+    /// prefix sharing entirely).
+    pub prefix_cache_entries: usize,
+    /// Sessions whose padded K/V literals are kept warm between decode
+    /// steps (the single-session fast path; 0 disables it). Each slot
+    /// costs one full padded cache per hosted block, so keep it small.
+    pub step_literal_cache: usize,
 }
 
 impl Default for ServerOptions {
     fn default() -> Self {
-        ServerOptions { pool_pages: None, batch_window: Duration::ZERO, max_batch_width: 8 }
+        ServerOptions {
+            pool_pages: None,
+            batch_window: Duration::ZERO,
+            max_batch_width: 8,
+            prefix_cache_entries: 8,
+            step_literal_cache: 2,
+        }
     }
+}
+
+/// One session's warm decode literals (the single-session fast path).
+struct StepLitCache {
+    /// Pool page-table epoch the literals were captured under.
+    epoch: u64,
+    /// Cache length the literals are valid for.
+    len: usize,
+    /// Per hosted block: the artifact's updated K / V caches, refeedable.
+    k: Vec<SendLit>,
+    v: Vec<SendLit>,
+    /// LRU tick.
+    tick: u64,
 }
 
 /// One Petals server node.
@@ -97,6 +146,19 @@ pub struct ServerNode {
     block_lits: Vec<Vec<SendLit>>,
     /// Paged KV-cache pool holding every session's caches.
     pool: Mutex<KvPool>,
+    /// Shared-prefix index (lock before `pool`, never after).
+    prefix_cache: Mutex<PrefixCache>,
+    /// Sessions that should register their prefix after prefill
+    /// (session → declared prefix token ids). Leaf lock.
+    pending_register: Mutex<HashMap<u64, Vec<i32>>>,
+    /// Sessions opened on an exact prefix hit (session → pin id): their
+    /// prefill is answered from the cached output. Leaf lock.
+    full_hits: Mutex<HashMap<u64, u64>>,
+    /// Warm K/V literals for the single-session decode fast path. Leaf
+    /// lock.
+    step_lits: Mutex<HashMap<u64, StepLitCache>>,
+    step_lit_cap: usize,
+    lit_tick: AtomicU64,
     /// Group-commit scheduler fusing concurrent decode steps.
     scheduler: StepScheduler,
     pub metrics: NodeMetrics,
@@ -162,6 +224,12 @@ impl ServerNode {
             runtime,
             block_lits,
             pool: Mutex::new(KvPool::new(pool_cfg)),
+            prefix_cache: Mutex::new(PrefixCache::new(page_tokens, opts.prefix_cache_entries)),
+            pending_register: Mutex::new(HashMap::new()),
+            full_hits: Mutex::new(HashMap::new()),
+            step_lits: Mutex::new(HashMap::new()),
+            step_lit_cap: opts.step_literal_cache,
+            lit_tick: AtomicU64::new(0),
             scheduler: StepScheduler::new(opts.batch_window, opts.max_batch_width),
             metrics,
             throughput: Mutex::new(MeasuredThroughput::new()),
@@ -194,8 +262,10 @@ impl ServerNode {
         self.scheduler.max_width
     }
 
-    /// The v2 DHT announcement for this server: span, measured
-    /// throughput, and live pool occupancy (see docs/WIRE_PROTOCOL.md).
+    /// The v3 DHT announcement for this server: span, measured
+    /// throughput, live pool occupancy, and the fingerprints of its
+    /// hottest cached prefixes (see docs/WIRE_PROTOCOL.md) — the hint
+    /// cache-aware routing uses to keep template traffic sticky.
     /// Re-announced periodically so the balancer and client routing see
     /// fresh load.
     pub fn dht_entry(&self) -> crate::dht::ServerEntry {
@@ -208,11 +278,26 @@ impl ServerNode {
             free_pages: free_pages as u32,
             total_pages: total_pages as u32,
             batch_width: self.batch_width() as u32,
+            prefix_fps: self.prefix_fingerprints(4),
         }
+    }
+
+    /// Fingerprints of the hottest cached prefixes (routing hint).
+    pub fn prefix_fingerprints(&self, k: usize) -> Vec<u64> {
+        self.prefix_cache.lock().unwrap().hot_fingerprints(k)
     }
 
     fn refresh_pool_gauges(&self, pool: &KvPool) {
         self.metrics.kv_pages_free.set(pool.free_pages() as u64);
+        self.metrics.kv_pages_shared.set(pool.shared_pages() as u64);
+    }
+
+    /// Forget per-session bookkeeping outside the pool (pending prefix
+    /// registration, full-hit marker, warm step literals).
+    fn clear_session_trackers(&self, session: u64) {
+        self.pending_register.lock().unwrap().remove(&session);
+        self.full_hits.lock().unwrap().remove(&session);
+        self.step_lits.lock().unwrap().remove(&session);
     }
 
     fn entry_name(&self, kind: &str, batch: usize, width: usize) -> String {
@@ -233,20 +318,133 @@ impl ServerNode {
     /// Open a session, reserving pool pages for `max_tokens` positions
     /// (`0` reserves the full cache capacity). Rejects with
     /// [`Error::Busy`] when the pool cannot hold the reservation — the
-    /// admission-control half of continuous batching.
+    /// admission-control half of continuous batching. Legacy (wire v2)
+    /// path: no prefix identity, always a private session.
     pub fn open_session(&self, session: u64, batch: usize, max_tokens: usize) -> Result<()> {
+        self.open_session_with_prefix(session, batch, max_tokens, &[], 0)
+            .map(|_| ())
+    }
+
+    /// Wire-v3 open: `prefix_tokens` are the session's leading token ids
+    /// and `prefill_width` the padded width its prefill will arrive at.
+    /// Consults the prefix cache: an exact match attaches every cached
+    /// page and later answers the prefill from the cached output; a
+    /// partial match attaches the page-aligned shared span; a miss opens
+    /// a private session and schedules the prefix for registration after
+    /// its prefill. Admission charges only the *marginal* (non-shared)
+    /// pages; under pool pressure cold prefixes are evicted LRU-first
+    /// before giving up with [`Error::Busy`].
+    ///
+    /// Returns the number of token positions attached from the cache.
+    pub fn open_session_with_prefix(
+        &self,
+        session: u64,
+        batch: usize,
+        max_tokens: usize,
+        prefix_tokens: &[i32],
+        prefill_width: usize,
+    ) -> Result<usize> {
         let cap = self.geometry.max_seq;
         let max_t = if max_tokens == 0 { cap } else { max_tokens.min(cap) };
-        let mut pool = self.pool.lock().unwrap();
-        let r = pool.open_session(session, batch, self.span_len(), max_t);
-        if matches!(r, Err(Error::Busy(_))) {
-            self.metrics.admission_rejects.inc();
+        self.clear_session_trackers(session);
+        let n_blocks = self.span_len();
+        let eligible = batch == 1 && !prefix_tokens.is_empty();
+        let mut cache = self.prefix_cache.lock().unwrap();
+        let hit = if eligible {
+            cache.lookup(prefix_tokens, prefill_width)
+        } else {
+            PrefixHit::Miss
+        };
+        let result = {
+            let mut pool = self.pool.lock().unwrap();
+            let r = match &hit {
+                PrefixHit::Full { pin } => {
+                    // exact match: every covered page aliases; decode
+                    // diverges (CoW) from this session's prefix length
+                    let (pin, share, wf) = (*pin, prefill_width, prefix_tokens.len());
+                    Self::admit(&mut cache, &mut pool, Some(pin), |p| {
+                        p.open_session_shared(session, n_blocks, max_t, pin, share, wf)
+                    })
+                }
+                PrefixHit::Partial { pin, shared_tokens, .. } => {
+                    // attach only the matched page-aligned span — the
+                    // pin's tail holds the donor's own divergent tokens
+                    let (pin, share) = (*pin, *shared_tokens);
+                    let wf = share.min(prefix_tokens.len());
+                    Self::admit(&mut cache, &mut pool, Some(pin), |p| {
+                        p.open_session_shared(session, n_blocks, max_t, pin, share, wf)
+                    })
+                }
+                PrefixHit::Miss => Self::admit(&mut cache, &mut pool, None, |p| {
+                    p.open_session(session, batch, n_blocks, max_t).map(|_| 0)
+                }),
+            };
+            if matches!(r, Err(Error::Busy(_))) {
+                self.metrics.admission_rejects.inc();
+            }
+            self.refresh_pool_gauges(&pool);
+            r
+        };
+        drop(cache);
+        if let Ok(shared) = &result {
+            if eligible {
+                if *shared > 0 {
+                    self.metrics.prefix_hits.inc();
+                } else {
+                    self.metrics.prefix_misses.inc();
+                }
+            }
+            match hit {
+                PrefixHit::Full { pin } => {
+                    self.full_hits.lock().unwrap().insert(session, pin);
+                }
+                PrefixHit::Partial { exact: false, .. } | PrefixHit::Miss if eligible => {
+                    // register the (longer or unseen) prefix after prefill
+                    self.pending_register
+                        .lock()
+                        .unwrap()
+                        .insert(session, prefix_tokens.to_vec());
+                }
+                _ => {}
+            }
         }
-        self.refresh_pool_gauges(&pool);
-        r
+        result
+    }
+
+    /// Run `open` against the pool, evicting cold pinned prefixes (never
+    /// `keep`, the one being attached) while it reports Busy. Eviction is
+    /// the pressure valve that keeps a template cache from starving live
+    /// sessions — but it stops as soon as an eviction frees no pages
+    /// (the victim's pages were all shared with live sessions): draining
+    /// the rest of the cache could not help admission and would destroy
+    /// every warm template for nothing.
+    fn admit<T>(
+        cache: &mut PrefixCache,
+        pool: &mut KvPool,
+        keep: Option<u64>,
+        mut open: impl FnMut(&mut KvPool) -> Result<T>,
+    ) -> Result<T> {
+        loop {
+            match open(pool) {
+                Err(Error::Busy(_)) if !cache.is_empty() => {
+                    let free_before = pool.free_pages();
+                    match cache.evict_lru_except(keep) {
+                        Some(victim) => {
+                            pool.unpin_prefix(victim);
+                            if pool.free_pages() == free_before {
+                                return open(pool);
+                            }
+                        }
+                        None => return open(pool),
+                    }
+                }
+                r => return r,
+            }
+        }
     }
 
     pub fn close_session(&self, session: u64) {
+        self.clear_session_trackers(session);
         let mut pool = self.pool.lock().unwrap();
         pool.close_session(session);
         self.refresh_pool_gauges(&pool);
@@ -271,8 +469,28 @@ impl ServerNode {
                 self.geometry.max_seq
             )));
         }
-        {
-            // admission + page preparation before any compute
+        // Full-hit fast path: the session attached an exactly-matching
+        // prefix at open, and the cache still holds the span's prefill
+        // output for that prefix — the executor call (and every page
+        // write) is skipped; the shared pages already hold the KV.
+        let full_pin = self.full_hits.lock().unwrap().get(&session).copied();
+        if let Some(pin) = full_pin {
+            let cache = self.prefix_cache.lock().unwrap();
+            if let Some(out) = cache.prefill_output(pin) {
+                if out.shape == h.shape {
+                    let out = out.clone();
+                    drop(cache);
+                    self.metrics.prefix_prefill_skips.inc();
+                    return Ok(out);
+                }
+            }
+            // entry evicted (or an unexpected width): recompute below —
+            // the attached pages stay valid, writes are skipped
+        }
+        let from = {
+            // admission + page preparation before any compute; `from` is
+            // the shared-prefix span this session holds by reference and
+            // must not (and need not) rewrite
             let mut pool = self.pool.lock().unwrap();
             let sb = pool
                 .session_batch(session)
@@ -280,9 +498,14 @@ impl ServerNode {
             if sb != b {
                 return Err(Error::Shape(format!("session batch {sb} != prefill batch {b}")));
             }
-            pool.reserve_tokens(session, w)?;
-            pool.prepare_write(session, w.saturating_sub(1))?;
-        }
+            let from = pool.session_shared_tokens(session).unwrap_or(0).min(w);
+            if from < w {
+                pool.reserve_tokens(session, w)?;
+                let forks = pool.prepare_write_range(session, from, w - 1)?;
+                self.metrics.cow_forks.add(forks as u64);
+            }
+            from
+        };
         let ex = self.runtime.entry(&self.entry_name("prefill", b, w))?;
         let mut h_lit = h.to_literal()?;
         let mut staged: Vec<(Tensor, Tensor)> = Vec::with_capacity(self.span_len());
@@ -297,18 +520,48 @@ impl ServerNode {
             staged.push((k, v));
             h_lit = out.remove(0);
         }
-        // commit: every block succeeded, write the pages
+        // commit: every block succeeded, write the (non-shared) pages
+        {
+            let mut pool = self.pool.lock().unwrap();
+            if !pool.has_session(session) {
+                return Err(Error::NotFound(format!("session {session} closed mid-prefill")));
+            }
+            if from < w {
+                for (bi, (k, v)) in staged.iter().enumerate() {
+                    pool.write_prefill_from(session, bi, 0, k.as_f32(), w, from)?;
+                    pool.write_prefill_from(session, bi, 1, v.as_f32(), w, from)?;
+                }
+            }
+            pool.commit_len(session, w);
+            self.refresh_pool_gauges(&pool);
+        }
+        let out = ex.output_tensor(&h_lit, 0)?;
+        self.register_prefix(session, w, &out);
+        Ok(out)
+    }
+
+    /// If this session's open scheduled a prefix registration, pin its
+    /// leading pages and index them (with the span's prefill output, so
+    /// the next identical prompt skips the executor). Failures here are
+    /// soft: registration is an optimization, never a correctness
+    /// requirement.
+    fn register_prefix(&self, session: u64, width: usize, out: &Tensor) {
+        let tokens = match self.pending_register.lock().unwrap().remove(&session) {
+            Some(t) => t,
+            None => return,
+        };
+        let mut cache = self.prefix_cache.lock().unwrap();
         let mut pool = self.pool.lock().unwrap();
-        if !pool.has_session(session) {
-            return Err(Error::NotFound(format!("session {session} closed mid-prefill")));
+        if width == 0 || width % pool.config().page_tokens != 0 {
+            return; // only page-aligned widths are pinnable
         }
-        for (bi, (k, v)) in staged.iter().enumerate() {
-            pool.write_prefill(session, bi, 0, k.as_f32(), w)?;
-            pool.write_prefill(session, bi, 1, v.as_f32(), w)?;
+        if let Ok(pin) = pool.pin_prefix(session, width) {
+            for victim in cache.insert(&tokens, width, pin, Some(out.clone())) {
+                pool.unpin_prefix(victim);
+            }
+            self.metrics.prefix_registered.inc();
+            self.refresh_pool_gauges(&pool);
         }
-        pool.commit_len(session, w);
-        self.refresh_pool_gauges(&pool);
-        ex.output_tensor(&h_lit, 0)
     }
 
     /// One decode step: h [B,1,H] -> h [B,1,H]. The step enters the
@@ -342,7 +595,10 @@ impl ServerNode {
             let mut pool = self.pool.lock().unwrap();
             for (i, r) in reqs.iter().enumerate() {
                 match Self::validate_step(&mut pool, r, cap) {
-                    Ok(()) => ok_idx.push(i),
+                    Ok(forks) => {
+                        self.metrics.cow_forks.add(forks as u64);
+                        ok_idx.push(i);
+                    }
                     Err(e) => {
                         if matches!(e, Error::Busy(_)) {
                             self.metrics.admission_rejects.inc();
@@ -393,8 +649,11 @@ impl ServerNode {
     }
 
     /// Per-request admission: session exists, batch matches, cache has
-    /// room, prefill happened, and the pool can address the new column.
-    fn validate_step(pool: &mut KvPool, r: &StepRequest, cap: usize) -> Result<()> {
+    /// room, prefill happened, and the pool can address the new column —
+    /// including CoW-forking a shared page about to be overwritten, so a
+    /// sharer's first divergent write is budgeted before any compute.
+    /// Returns the number of forks performed.
+    fn validate_step(pool: &mut KvPool, r: &StepRequest, cap: usize) -> Result<usize> {
         let b = pool
             .session_batch(r.session)
             .ok_or_else(|| Error::NotFound(format!("session {}", r.session)))?;
@@ -423,6 +682,14 @@ impl ServerNode {
     /// must be pre-validated and share one `cache_len`. The outer error
     /// means the whole group failed *before* any cache write; inner
     /// per-request errors can only come from the commit phase.
+    ///
+    /// A lone request takes the fast path when its previous step's K/V
+    /// output literals are still warm and valid (`cache_len` advanced by
+    /// exactly one and the page-table epoch is unchanged): the pool
+    /// gather and the host→device upload are skipped and the artifact's
+    /// own cache outputs are refed — the ROADMAP's restored
+    /// single-session fast path. The pool still receives the new column,
+    /// so fused batches and prefix registration always see true state.
     fn execute_span(&self, group: &[&StepRequest]) -> Result<Vec<Result<Tensor>>> {
         let g = &self.geometry;
         let (hh, d, cap) = (g.n_heads, g.head_dim, g.max_seq);
@@ -431,37 +698,65 @@ impl ServerNode {
         let batches: Vec<usize> = group.iter().map(|r| r.hidden.shape[0]).collect();
         let total_b: usize = batches.iter().sum();
         let ex = self.runtime.entry(&self.entry_name("decode", total_b, 0))?;
-        // gather: page tables -> padded [Σb,Hh,cap,D] per block
-        let mut k_cat: Vec<Tensor> = Vec::with_capacity(n_span);
-        let mut v_cat: Vec<Tensor> = Vec::with_capacity(n_span);
-        {
-            let pool = self.pool.lock().unwrap();
-            let floats = hh * cap * d;
-            for bi in 0..n_span {
-                let mut kt = Tensor::zeros(&[total_b, hh, cap, d], DType::F32);
-                let mut vt = Tensor::zeros(&[total_b, hh, cap, d], DType::F32);
-                let mut row0 = 0;
-                for (r, &b) in group.iter().zip(&batches) {
-                    pool.gather_padded(
-                        r.session,
-                        bi,
-                        0,
-                        cap,
-                        &mut kt.as_f32_mut()[row0 * floats..(row0 + b) * floats],
-                    )?;
-                    pool.gather_padded(
-                        r.session,
-                        bi,
-                        1,
-                        cap,
-                        &mut vt.as_f32_mut()[row0 * floats..(row0 + b) * floats],
-                    )?;
-                    row0 += b;
+        let single = group.len() == 1;
+        let sess0 = group[0].session;
+        // try the warm literals (single-session fast path)
+        let mut warm: Option<StepLitCache> = None;
+        if single && self.step_lit_cap > 0 {
+            let prev = self.step_lits.lock().unwrap().remove(&sess0);
+            if let Some(e) = prev {
+                let valid = {
+                    let pool = self.pool.lock().unwrap();
+                    e.len == cache_len && pool.table_epoch(sess0) == Some(e.epoch)
+                };
+                if valid {
+                    warm = Some(e); // stale entries are simply dropped
                 }
-                k_cat.push(kt);
-                v_cat.push(vt);
             }
         }
+        let (k_in, v_in): (Vec<SendLit>, Vec<SendLit>) = if let Some(w) = warm {
+            self.metrics.fastpath_hits.inc();
+            (w.k, w.v)
+        } else {
+            // gather: page tables -> padded [Σb,Hh,cap,D] per block
+            let mut k_cat: Vec<Tensor> = Vec::with_capacity(n_span);
+            let mut v_cat: Vec<Tensor> = Vec::with_capacity(n_span);
+            {
+                let pool = self.pool.lock().unwrap();
+                let floats = hh * cap * d;
+                for bi in 0..n_span {
+                    let mut kt = Tensor::zeros(&[total_b, hh, cap, d], DType::F32);
+                    let mut vt = Tensor::zeros(&[total_b, hh, cap, d], DType::F32);
+                    let mut row0 = 0;
+                    for (r, &b) in group.iter().zip(&batches) {
+                        pool.gather_padded(
+                            r.session,
+                            bi,
+                            0,
+                            cap,
+                            &mut kt.as_f32_mut()[row0 * floats..(row0 + b) * floats],
+                        )?;
+                        pool.gather_padded(
+                            r.session,
+                            bi,
+                            1,
+                            cap,
+                            &mut vt.as_f32_mut()[row0 * floats..(row0 + b) * floats],
+                        )?;
+                        row0 += b;
+                    }
+                    k_cat.push(kt);
+                    v_cat.push(vt);
+                }
+            }
+            let mut ks = Vec::with_capacity(n_span);
+            let mut vs = Vec::with_capacity(n_span);
+            for bi in 0..n_span {
+                ks.push(SendLit(k_cat[bi].to_literal()?));
+                vs.push(SendLit(v_cat[bi].to_literal()?));
+            }
+            (ks, vs)
+        };
         // one fused forward per block; new KV columns are staged and only
         // committed once the whole span succeeded
         let hs: Vec<&Tensor> = group.iter().map(|r| &r.hidden).collect();
@@ -469,13 +764,13 @@ impl ServerNode {
         let mut h_lit = crate::runtime::Executor::fuse_rows(&hs)?;
         let mut staged_k: Vec<Vec<f32>> = Vec::with_capacity(n_span);
         let mut staged_v: Vec<Vec<f32>> = Vec::with_capacity(n_span);
+        let mut new_k: Vec<SendLit> = Vec::new();
+        let mut new_v: Vec<SendLit> = Vec::new();
         for (bi, lits) in self.block_lits.iter().enumerate() {
-            let k_lit = k_cat[bi].to_literal()?;
-            let v_lit = v_cat[bi].to_literal()?;
             let mut args: Vec<&xla::Literal> = Vec::with_capacity(4 + lits.len());
             args.push(&h_lit);
-            args.push(&k_lit);
-            args.push(&v_lit);
+            args.push(&k_in[bi].0);
+            args.push(&v_in[bi].0);
             args.push(&len_lit);
             args.extend(lits.iter().map(|l| &l.0));
             let mut out = ex.call_literals(&args)?;
@@ -484,6 +779,11 @@ impl ServerNode {
             let k_new = out.pop().unwrap();
             staged_k.push(extract_column(&ex.output_tensor(&k_new, 1)?, hh, d, cache_len));
             staged_v.push(extract_column(&ex.output_tensor(&v_new, 2)?, hh, d, cache_len));
+            if single && self.step_lit_cap > 0 {
+                // keep the artifact's cache outputs warm for the next step
+                new_k.push(SendLit(k_new));
+                new_v.push(SendLit(v_new));
+            }
             h_lit = out.pop().unwrap();
         }
         let h_out = ex.output_tensor(&h_lit, 0)?;
@@ -506,6 +806,28 @@ impl ServerNode {
             row0 += b;
         }
         self.refresh_pool_gauges(&pool);
+        // park the new literals for the next single-session step; the
+        // epoch is read under the pool lock so a concurrent fork/defrag
+        // cannot race the capture
+        if single && self.step_lit_cap > 0 && outs[0].is_ok() {
+            if let Some(epoch) = pool.table_epoch(sess0) {
+                let tick = self.lit_tick.fetch_add(1, Ordering::Relaxed);
+                let mut lits = self.step_lits.lock().unwrap();
+                lits.insert(
+                    sess0,
+                    StepLitCache { epoch, len: cache_len + 1, k: new_k, v: new_v, tick },
+                );
+                while lits.len() > self.step_lit_cap {
+                    let oldest = lits.iter().min_by_key(|(_, e)| e.tick).map(|(s, _)| *s);
+                    match oldest {
+                        Some(s) => {
+                            lits.remove(&s);
+                        }
+                        None => break,
+                    }
+                }
+            }
+        }
         Ok(outs)
     }
 
@@ -606,9 +928,34 @@ impl ServerNode {
                 }
             }
             Message::OpenSession { session, batch, prefix_len, max_new } => {
-                let max_tokens = (*prefix_len + *max_new) as usize;
+                let max_tokens = prefix_len.saturating_add(*max_new) as usize;
                 match self.open_session(*session, *batch as usize, max_tokens) {
                     Ok(()) => Message::SessionOpened { session: *session },
+                    Err(e) => Message::Error { message: e.to_string() },
+                }
+            }
+            Message::OpenSessionV3 {
+                session,
+                batch,
+                prefix_len,
+                max_new,
+                prefill_width,
+                prefix_tokens,
+            } => {
+                // saturate: a hostile frame must not overflow-panic a
+                // debug-built connection thread
+                let max_tokens = prefix_len.saturating_add(*max_new) as usize;
+                match self.open_session_with_prefix(
+                    *session,
+                    *batch as usize,
+                    max_tokens,
+                    prefix_tokens,
+                    *prefill_width as usize,
+                ) {
+                    Ok(shared) => Message::SessionOpenedV3 {
+                        session: *session,
+                        shared_tokens: shared as u32,
+                    },
                     Err(e) => Message::Error { message: e.to_string() },
                 }
             }
@@ -936,5 +1283,171 @@ mod tests {
         let b = q.prefill(1, &h).unwrap();
         let scale = a.as_f32().iter().fold(0f32, |m, v| m.max(v.abs()));
         assert!(a.max_abs_diff(&b) / scale < 0.05, "rel {}", a.max_abs_diff(&b) / scale);
+    }
+
+    fn random_hidden(g: &Geometry, w: usize, seed: u64) -> (Tensor, Tensor) {
+        let mut vals = vec![0f32; w * g.hidden];
+        let mut rng = crate::config::Rng::new(seed);
+        for v in vals.iter_mut() {
+            *v = (rng.f64() as f32 - 0.5) * 2.0;
+        }
+        (
+            Tensor::from_f32(&[1, w, g.hidden], &vals),
+            Tensor::from_f32(&[1, 1, g.hidden], &vals[..g.hidden]),
+        )
+    }
+
+    /// The acceptance scenario: sessions sharing a 128-token system
+    /// prompt pay only the marginal (suffix) pool pages, their prefill is
+    /// answered from the cache, and every output stays bit-identical to
+    /// a server with sharing disabled — including after one sharer
+    /// closes mid-generation.
+    #[test]
+    fn shared_prefix_marginal_pages_and_bitwise_outputs() {
+        let home = test_home();
+        let g = home.geometry().clone();
+        let rt = rt_for(&home, 1);
+        let s =
+            ServerNode::start("p", &home, rt.clone(), 0..g.n_layers, Precision::F16, false).unwrap();
+        // control: prefix sharing and the fast path disabled
+        let opts =
+            ServerOptions { prefix_cache_entries: 0, step_literal_cache: 0, ..Default::default() };
+        let c = ServerNode::start_with("c", &home, rt, 0..g.n_layers, Precision::F16, false, opts)
+            .unwrap();
+
+        let w = 128;
+        let tokens: Vec<i32> = (0..w as i32).map(|i| i % 50).collect();
+        let (h0, h_step) = random_hidden(&g, w, 21);
+
+        let (free0, _) = s.pool_stats();
+        let shared1 = s.open_session_with_prefix(1, 1, w + 8, &tokens, w).unwrap();
+        assert_eq!(shared1, 0, "cold cache: nothing to share yet");
+        let o1 = s.prefill(1, &h0).unwrap();
+        assert_eq!(s.metrics.prefix_registered.get(), 1);
+        let (free1, _) = s.pool_stats();
+        let cost_first = free0 - free1;
+
+        // second session, same prompt: full hit, prefill skipped
+        let shared2 = s.open_session_with_prefix(2, 1, w + 8, &tokens, w).unwrap();
+        assert_eq!(shared2, w, "whole prefix attached");
+        assert_eq!(s.metrics.prefix_hits.get(), 1);
+        let o2 = s.prefill(2, &h0).unwrap();
+        assert_eq!(s.metrics.prefix_prefill_skips.get(), 1, "executor call skipped");
+        assert_eq!(o1.max_abs_diff(&o2), 0.0, "cached prefill output must be bit-identical");
+        let (free2, _) = s.pool_stats();
+        let cost_second = free1 - free2;
+        assert!(
+            cost_second * 4 <= cost_first,
+            "extra session must cost marginal pages: {cost_second} vs {cost_first}"
+        );
+        assert!(s.metrics.kv_pages_shared.get() > 0, "prefix pages multiply referenced");
+
+        // decode: both sharers track a no-sharing control bitwise
+        c.open_session(9, 1, 0).unwrap();
+        c.prefill(9, &h0).unwrap();
+        for step in 0..4 {
+            let cl = w + step;
+            let a = s.step(1, cl, &h_step).unwrap();
+            let b = s.step(2, cl, &h_step).unwrap();
+            let r = c.step(9, cl, &h_step).unwrap();
+            assert_eq!(a.max_abs_diff(&r), 0.0, "donor diverged at step {step}");
+            assert_eq!(b.max_abs_diff(&r), 0.0, "sharer diverged at step {step}");
+        }
+        // one sharer leaves mid-generation; the survivor stays exact
+        s.close_session(1);
+        let b = s.step(2, w + 4, &h_step).unwrap();
+        let r = c.step(9, w + 4, &h_step).unwrap();
+        assert_eq!(b.max_abs_diff(&r), 0.0, "close of a sharer corrupted shared pages");
+    }
+
+    /// Wire v3 round-trip through `handle`: shared tokens reported, the
+    /// legacy v2 frame still decodes and serves, and the DHT entry
+    /// gossips the prefix fingerprint.
+    #[test]
+    fn wire_v3_open_reports_shared_tokens() {
+        let home = test_home();
+        let g = home.geometry().clone();
+        let rt = rt_for(&home, 1);
+        let s = ServerNode::start("w3", &home, rt, 0..2, Precision::F16, false).unwrap();
+        let tokens: Vec<i32> = (0..128).collect();
+        let open = |sess: u64| Message::OpenSessionV3 {
+            session: sess,
+            batch: 1,
+            prefix_len: 128,
+            max_new: 8,
+            prefill_width: 128,
+            prefix_tokens: tokens.clone(),
+        };
+        let Message::SessionOpenedV3 { shared_tokens, .. } = s.handle(&open(1)) else {
+            panic!("expected SessionOpenedV3");
+        };
+        assert_eq!(shared_tokens, 0);
+        let (h0, _) = random_hidden(&g, 128, 33);
+        s.prefill(1, &h0).unwrap();
+        let Message::SessionOpenedV3 { shared_tokens, .. } = s.handle(&open(2)) else {
+            panic!("expected SessionOpenedV3");
+        };
+        assert_eq!(shared_tokens, 128, "second open attaches the registered prefix");
+        // legacy wire-v2 OpenSession still decodes and opens privately
+        let legacy = Message::decode(
+            &Message::OpenSession { session: 3, batch: 1, prefix_len: 8, max_new: 8 }.encode(),
+        )
+        .unwrap();
+        assert!(matches!(s.handle(&legacy), Message::SessionOpened { session: 3 }));
+        // the announcement carries the fingerprint, and round-trips as v3
+        let e = s.dht_entry();
+        assert!(e.prefix_fps.contains(&fingerprint(&tokens)));
+        assert_eq!(crate::dht::ServerEntry::decode(&e.encode()), Some(e));
+    }
+
+    /// The restored single-session decode fast path must be exercised
+    /// (metric) and bitwise identical to a server with it disabled.
+    #[test]
+    fn decode_fast_path_hits_and_matches() {
+        let home = test_home();
+        let g = home.geometry().clone();
+        let rt = rt_for(&home, 1);
+        let f = ServerNode::start("fast", &home, rt.clone(), 0..g.n_layers, Precision::F16, false)
+            .unwrap();
+        let opts = ServerOptions { step_literal_cache: 0, ..Default::default() };
+        let n = ServerNode::start_with("nofp", &home, rt, 0..g.n_layers, Precision::F16, false, opts)
+            .unwrap();
+        let (h0, h_step) = random_hidden(&g, 128, 7);
+        for node in [&f, &n] {
+            node.open_session(1, 1, 0).unwrap();
+            node.prefill(1, &h0).unwrap();
+        }
+        for step in 0..3 {
+            let a = f.step(1, 8 + step, &h_step).unwrap();
+            let b = n.step(1, 8 + step, &h_step).unwrap();
+            assert_eq!(a.max_abs_diff(&b), 0.0, "fast path diverged at step {step}");
+        }
+        assert!(f.metrics.fastpath_hits.get() >= 2, "warm literals never used");
+        assert_eq!(n.metrics.fastpath_hits.get(), 0);
+    }
+
+    /// Under pool pressure, cold pinned prefixes are evicted before an
+    /// open is rejected.
+    #[test]
+    fn prefix_eviction_relieves_pool_pressure() {
+        let home = test_home();
+        let g = home.geometry().clone();
+        let rt = rt_for(&home, 1);
+        // span of 1 block; capacity: one full-length session (32 pages) +
+        // half a prefix (8) — the pinned prefix must yield
+        let one_session = 2 * g.max_seq.div_ceil(PAGE_TOKENS);
+        let opts = ServerOptions { pool_pages: Some(one_session + 8), ..Default::default() };
+        let s = ServerNode::start_with("e", &home, rt, 0..1, Precision::F16, false, opts).unwrap();
+        let tokens: Vec<i32> = (0..128).collect();
+        s.open_session_with_prefix(1, 1, 136, &tokens, 128).unwrap();
+        let (h0, _) = random_hidden(&g, 128, 11);
+        s.prefill(1, &h0).unwrap();
+        assert_eq!(s.metrics.prefix_registered.get(), 1);
+        s.close_session(1);
+        assert!(s.pool_stats().0 < one_session as u64 + 8, "pin holds pages");
+        // a full-capacity private open only fits if the prefix is evicted
+        s.open_session(2, 1, 0).unwrap();
+        assert_eq!(s.metrics.admission_rejects.get(), 0, "eviction, not rejection");
+        assert!(s.prefix_fingerprints(4).is_empty(), "the cold prefix was dropped");
     }
 }

@@ -1,0 +1,474 @@
+//! Shared-prefix cache index — the policy half of prefix sharing.
+//!
+//! Millions of users hitting a handful of prompt templates means almost
+//! every session's prefill recomputes and re-stores the same KV prefix.
+//! This module maintains a **radix trie over token-id prefixes** mapping
+//! each registered prefix to:
+//!
+//! - a *pin id* into the [`crate::server::KvPool`]'s pinned page sets
+//!   (the ref-counted KV pages holding that prefix's keys/values), and
+//! - optionally the span's **prefill output** hidden states, so a session
+//!   opening with an exactly-matching prefix skips the prefill executor
+//!   call entirely and is handed the cached output.
+//!
+//! Division of labor: this index owns *identity and policy* (matching,
+//! LRU eviction order, hit statistics, fingerprints for routing hints);
+//! the pool owns *storage and lifetime* (page refcounts, defrag, CoW).
+//! The two are linked only by pin ids, so defrag can move pages without
+//! this module noticing.
+//!
+//! Matching rules (correctness-critical — see `server/mod.rs` docs for
+//! why):
+//!
+//! - **Full hit**: the query tokens equal a registered prefix exactly
+//!   *and* the prefill widths match. The registered pages cover the whole
+//!   padded prefill width (padding-derived KV included), which is only
+//!   valid when both sessions pad identically — hence the width check.
+//! - **Partial hit**: a registered prefix is a *strict* prefix of the
+//!   query (or widths differ). Only whole pages of real-prefix KV are
+//!   shareable, so the shared span is the registered length rounded
+//!   *down* to a page boundary; the session recomputes and stores its own
+//!   suffix.
+//! - Trust model: the server never sees token ids during prefill, so it
+//!   trusts the ids declared at `OpenSession`. A client lying about its
+//!   prefix corrupts only its own generation (shared pages are CoW — it
+//!   cannot write through them), which matches the paper's §4 assumption
+//!   that clients are motivated to get correct outputs.
+
+use crate::model::tensor::Tensor;
+use std::collections::HashMap;
+
+/// 64-bit FNV-1a over the little-endian token bytes: the prefix identity
+/// compact enough to gossip through DHT announcements (`ServerEntry` v3)
+/// and to fold into routing cost as a stickiness hint. Collisions only
+/// mis-rank routing; correctness always re-checks full token ids here.
+pub fn fingerprint(tokens: &[i32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// The fingerprint actually gossiped and matched for routing: taken over
+/// the page-aligned *leading span* of the tokens (what the trie can
+/// physically share), so two prompts built from the same template plus
+/// different user suffixes map to the same hint. Prefixes shorter than
+/// one page fall back to the full tokens (they only ever match exactly).
+pub fn template_fingerprint(tokens: &[i32], page_tokens: usize) -> u64 {
+    let pt = page_tokens.max(1);
+    let n = tokens.len() / pt * pt;
+    if n == 0 {
+        fingerprint(tokens)
+    } else {
+        fingerprint(&tokens[..n])
+    }
+}
+
+/// Outcome of a cache lookup at session-open time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PrefixHit {
+    /// Exact token + width match: attach all covered pages; prefill can
+    /// be answered from the cached output.
+    Full { pin: u64 },
+    /// A registered prefix covers the leading `shared_tokens` positions
+    /// (page-aligned). `exact` is true when the query tokens equal the
+    /// registered prefix (only the width differed) — the caller must not
+    /// re-register in that case, the trie slot is taken.
+    Partial { pin: u64, shared_tokens: usize, exact: bool },
+    Miss,
+}
+
+/// One registered prefix.
+struct Entry {
+    tokens: Vec<i32>,
+    /// Prefill width the pinned pages cover (tokens + padding span).
+    width: usize,
+    fingerprint: u64,
+    hits: u64,
+    last_used: u64,
+    /// The span's prefill output `[1, width, hidden]` for full-hit skips.
+    prefill_out: Option<Tensor>,
+}
+
+/// Compressed radix-trie node. Children are keyed by the first token of
+/// their edge label; `pin` marks a registered prefix ending here.
+#[derive(Default)]
+struct Node {
+    children: HashMap<i32, Child>,
+    pin: Option<u64>,
+}
+
+struct Child {
+    seg: Vec<i32>,
+    node: Box<Node>,
+}
+
+/// The prefix-cache index; one per [`crate::server::ServerNode`], behind
+/// its own mutex (always acquired *before* the pool's — see the server's
+/// lock-order note).
+pub struct PrefixCache {
+    page_tokens: usize,
+    max_entries: usize,
+    clock: u64,
+    root: Node,
+    entries: HashMap<u64, Entry>,
+}
+
+impl PrefixCache {
+    /// `max_entries == 0` disables the cache (every lookup misses, every
+    /// insert is dropped).
+    pub fn new(page_tokens: usize, max_entries: usize) -> Self {
+        PrefixCache {
+            page_tokens: page_tokens.max(1),
+            max_entries,
+            clock: 0,
+            root: Node::default(),
+            entries: HashMap::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Longest registered prefix of `tokens` (full or partial per the
+    /// module rules). Bumps the matched entry's LRU/hit stats.
+    pub fn lookup(&mut self, tokens: &[i32], width: usize) -> PrefixHit {
+        if tokens.is_empty() || self.max_entries == 0 {
+            return PrefixHit::Miss;
+        }
+        let Some(pin) = Self::longest_pin(&self.root, tokens) else {
+            return PrefixHit::Miss;
+        };
+        let pt = self.page_tokens;
+        let hit = {
+            let e = self.entries.get(&pin).expect("trie pin without entry");
+            if e.tokens.len() == tokens.len() && e.width == width {
+                PrefixHit::Full { pin }
+            } else {
+                let shared_tokens = e.tokens.len() / pt * pt;
+                if shared_tokens == 0 {
+                    PrefixHit::Miss
+                } else {
+                    PrefixHit::Partial { pin, shared_tokens, exact: e.tokens.len() == tokens.len() }
+                }
+            }
+        };
+        // only real hits accrue heat: a sub-page entry that degrades to
+        // Miss must not resist LRU eviction or pollute the hot gossip
+        if hit != PrefixHit::Miss {
+            self.clock += 1;
+            let clock = self.clock;
+            let e = self.entries.get_mut(&pin).unwrap();
+            e.hits += 1;
+            e.last_used = clock;
+        }
+        hit
+    }
+
+    /// Register a prefix under `pin`. Returns the pins displaced — the
+    /// caller must `unpin_prefix` each in the pool: a previous entry for
+    /// the same tokens (concurrent registration race) and any LRU entries
+    /// evicted to respect `max_entries`. When the cache is disabled the
+    /// new pin itself comes back for immediate release.
+    pub fn insert(
+        &mut self,
+        tokens: &[i32],
+        width: usize,
+        pin: u64,
+        prefill_out: Option<Tensor>,
+    ) -> Vec<u64> {
+        if tokens.is_empty() || self.max_entries == 0 {
+            return vec![pin];
+        }
+        let mut displaced = Vec::new();
+        if let Some(old) = Self::set_pin(&mut self.root, tokens, pin) {
+            self.entries.remove(&old);
+            displaced.push(old);
+        }
+        self.clock += 1;
+        self.entries.insert(
+            pin,
+            Entry {
+                tokens: tokens.to_vec(),
+                width,
+                fingerprint: template_fingerprint(tokens, self.page_tokens),
+                hits: 0,
+                last_used: self.clock,
+                prefill_out,
+            },
+        );
+        while self.entries.len() > self.max_entries {
+            match self.evict_lru_except(Some(pin)) {
+                Some(old) => displaced.push(old),
+                None => break,
+            }
+        }
+        displaced
+    }
+
+    /// Cached prefill output for a pin (full-hit compute skip).
+    pub fn prefill_output(&self, pin: u64) -> Option<&Tensor> {
+        self.entries.get(&pin).and_then(|e| e.prefill_out.as_ref())
+    }
+
+    /// Evict the least-recently-used entry, skipping `keep` (the entry a
+    /// caller is mid-flight on). Returns the pin for the caller to unpin.
+    pub fn evict_lru_except(&mut self, keep: Option<u64>) -> Option<u64> {
+        let victim = self
+            .entries
+            .iter()
+            .filter(|(p, _)| Some(**p) != keep)
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(p, _)| *p)?;
+        let tokens = self.entries[&victim].tokens.clone();
+        Self::clear_pin(&mut self.root, &tokens);
+        self.entries.remove(&victim);
+        Some(victim)
+    }
+
+    /// The hottest registered fingerprints (by hit count, then recency) —
+    /// the hint gossiped in DHT `ServerEntry` v3 records for cache-aware
+    /// sticky routing.
+    pub fn hot_fingerprints(&self, k: usize) -> Vec<u64> {
+        let mut all: Vec<(&u64, &Entry)> = self.entries.iter().collect();
+        all.sort_by(|a, b| (b.1.hits, b.1.last_used).cmp(&(a.1.hits, a.1.last_used)));
+        all.into_iter().take(k).map(|(_, e)| e.fingerprint).collect()
+    }
+
+    // ---- radix-trie internals --------------------------------------------
+
+    fn lcp(a: &[i32], b: &[i32]) -> usize {
+        a.iter().zip(b).take_while(|(x, y)| x == y).count()
+    }
+
+    /// Deepest node whose full path is a prefix of `query` and carries a
+    /// pin.
+    fn longest_pin(root: &Node, query: &[i32]) -> Option<u64> {
+        let mut best = root.pin;
+        let mut node = root;
+        let mut rest = query;
+        while let Some(&first) = rest.first() {
+            let Some(child) = node.children.get(&first) else { break };
+            if child.seg.len() > rest.len() || Self::lcp(&child.seg, rest) < child.seg.len() {
+                break; // query ends (or diverges) inside the edge
+            }
+            rest = &rest[child.seg.len()..];
+            node = &child.node;
+            if node.pin.is_some() {
+                best = node.pin;
+            }
+        }
+        best
+    }
+
+    /// Set the pin at `tokens`, splitting edges as needed. Returns the
+    /// pin previously registered for exactly these tokens, if any.
+    fn set_pin(node: &mut Node, tokens: &[i32], pin: u64) -> Option<u64> {
+        if tokens.is_empty() {
+            return node.pin.replace(pin);
+        }
+        let first = tokens[0];
+        match node.children.get_mut(&first) {
+            None => {
+                let leaf = Node { children: HashMap::new(), pin: Some(pin) };
+                node.children
+                    .insert(first, Child { seg: tokens.to_vec(), node: Box::new(leaf) });
+                None
+            }
+            Some(child) => {
+                let common = Self::lcp(&child.seg, tokens);
+                if common == child.seg.len() {
+                    return Self::set_pin(&mut child.node, &tokens[common..], pin);
+                }
+                // split the edge at `common`
+                let tail_seg = child.seg.split_off(common);
+                let tail_node = std::mem::take(&mut child.node);
+                let mid = &mut child.node;
+                mid.children
+                    .insert(tail_seg[0], Child { seg: tail_seg, node: tail_node });
+                Self::set_pin(mid, &tokens[common..], pin)
+            }
+        }
+    }
+
+    /// Clear the pin at exactly `tokens` (edges are left in place; the
+    /// trie is small and rebuilt-by-eviction, not compacted).
+    fn clear_pin(node: &mut Node, tokens: &[i32]) {
+        if tokens.is_empty() {
+            node.pin = None;
+            return;
+        }
+        let Some(child) = node.children.get_mut(&tokens[0]) else {
+            return;
+        };
+        let common = Self::lcp(&child.seg, tokens);
+        if common == child.seg.len() {
+            Self::clear_pin(&mut child.node, &tokens[common..]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_distinguishes_prefixes() {
+        assert_ne!(fingerprint(&[1, 2, 3]), fingerprint(&[1, 2, 4]));
+        assert_ne!(fingerprint(&[1, 2, 3]), fingerprint(&[1, 2]));
+        assert_eq!(fingerprint(&[1, 2, 3]), fingerprint(&[1, 2, 3]));
+        assert_ne!(fingerprint(&[]), fingerprint(&[0]));
+    }
+
+    #[test]
+    fn full_hit_requires_tokens_and_width() {
+        let mut c = PrefixCache::new(4, 8);
+        assert_eq!(c.lookup(&[1, 2, 3, 4], 16), PrefixHit::Miss);
+        assert!(c.insert(&[1, 2, 3, 4], 16, 10, None).is_empty());
+        assert_eq!(c.lookup(&[1, 2, 3, 4], 16), PrefixHit::Full { pin: 10 });
+        // same tokens, different prefill width -> only page-aligned share
+        assert_eq!(
+            c.lookup(&[1, 2, 3, 4], 32),
+            PrefixHit::Partial { pin: 10, shared_tokens: 4, exact: true }
+        );
+        // different tokens entirely
+        assert_eq!(c.lookup(&[9, 9, 9, 9], 16), PrefixHit::Miss);
+    }
+
+    #[test]
+    fn longer_query_gets_partial_share() {
+        let mut c = PrefixCache::new(4, 8);
+        c.insert(&[1, 2, 3, 4, 5, 6], 16, 7, None);
+        // registered 6 tokens; shareable span rounds down to 4
+        assert_eq!(
+            c.lookup(&[1, 2, 3, 4, 5, 6, 7, 8], 16),
+            PrefixHit::Partial { pin: 7, shared_tokens: 4, exact: false }
+        );
+        // a registered prefix shorter than one page shares nothing
+        let mut c2 = PrefixCache::new(4, 8);
+        c2.insert(&[1, 2, 3], 16, 9, None);
+        assert_eq!(c2.lookup(&[1, 2, 3, 4], 16), PrefixHit::Miss);
+    }
+
+    #[test]
+    fn longest_of_nested_prefixes_wins() {
+        let mut c = PrefixCache::new(2, 8);
+        c.insert(&[1, 2], 16, 1, None);
+        c.insert(&[1, 2, 3, 4], 16, 2, None);
+        c.insert(&[1, 9], 16, 3, None);
+        assert_eq!(
+            c.lookup(&[1, 2, 3, 4, 5], 16),
+            PrefixHit::Partial { pin: 2, shared_tokens: 4, exact: false }
+        );
+        assert_eq!(c.lookup(&[1, 2], 16), PrefixHit::Full { pin: 1 });
+        assert_eq!(c.lookup(&[1, 9], 16), PrefixHit::Full { pin: 3 });
+        assert_eq!(c.lookup(&[2, 2], 16), PrefixHit::Miss);
+    }
+
+    #[test]
+    fn reregistration_displaces_old_pin() {
+        let mut c = PrefixCache::new(4, 8);
+        c.insert(&[5, 6, 7, 8], 16, 1, None);
+        let displaced = c.insert(&[5, 6, 7, 8], 16, 2, None);
+        assert_eq!(displaced, vec![1], "the raced pin comes back for unpinning");
+        assert_eq!(c.lookup(&[5, 6, 7, 8], 16), PrefixHit::Full { pin: 2 });
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn lru_eviction_respects_cap_and_keep() {
+        let mut c = PrefixCache::new(1, 2);
+        c.insert(&[1], 4, 1, None);
+        c.insert(&[2], 4, 2, None);
+        c.lookup(&[1], 4); // entry 1 is now hotter
+        let displaced = c.insert(&[3], 4, 3, None);
+        assert_eq!(displaced, vec![2], "LRU (never-hit) entry evicted");
+        assert_eq!(c.len(), 2);
+        // explicit eviction skips the protected pin
+        let v = c.evict_lru_except(Some(1));
+        assert_eq!(v, Some(3));
+        assert_eq!(c.evict_lru_except(Some(1)), None, "only the kept entry remains");
+    }
+
+    #[test]
+    fn disabled_cache_rejects_everything() {
+        let mut c = PrefixCache::new(4, 0);
+        assert_eq!(c.insert(&[1, 2, 3, 4], 16, 5, None), vec![5]);
+        assert_eq!(c.lookup(&[1, 2, 3, 4], 16), PrefixHit::Miss);
+    }
+
+    #[test]
+    fn hot_fingerprints_rank_by_hits() {
+        let mut c = PrefixCache::new(1, 8);
+        c.insert(&[1], 4, 1, None);
+        c.insert(&[2], 4, 2, None);
+        for _ in 0..3 {
+            c.lookup(&[2], 4);
+        }
+        c.lookup(&[1], 4);
+        let hot = c.hot_fingerprints(2);
+        assert_eq!(hot[0], fingerprint(&[2]));
+        assert_eq!(hot[1], fingerprint(&[1]));
+        assert_eq!(c.hot_fingerprints(1).len(), 1);
+    }
+
+    #[test]
+    fn template_fingerprint_ignores_suffix_past_page_boundary() {
+        let template: Vec<i32> = (0..8).collect();
+        let mut a = template.clone();
+        a.extend([100, 101]);
+        let mut b = template.clone();
+        b.extend([200, 201, 202]);
+        // page 4: aligned leading span of both is the 8-token template
+        assert_eq!(template_fingerprint(&a, 4), template_fingerprint(&b, 4));
+        assert_eq!(template_fingerprint(&a, 4), fingerprint(&template));
+        // sub-page prefixes fall back to exact-token fingerprints
+        assert_ne!(template_fingerprint(&[1, 2], 4), template_fingerprint(&[1, 3], 4));
+        assert_eq!(template_fingerprint(&[1, 2], 4), fingerprint(&[1, 2]));
+    }
+
+    #[test]
+    fn degraded_misses_accrue_no_heat() {
+        let mut c = PrefixCache::new(4, 8);
+        c.insert(&[1, 2, 3], 16, 1, None); // sub-page: never shareable
+        c.insert(&[4, 5, 6, 7], 16, 2, None);
+        for _ in 0..5 {
+            // matches the sub-page entry but degrades to Miss
+            assert_eq!(c.lookup(&[1, 2, 3, 9], 16), PrefixHit::Miss);
+        }
+        c.lookup(&[4, 5, 6, 7], 16); // one real hit
+        assert_eq!(c.hot_fingerprints(1)[0], template_fingerprint(&[4, 5, 6, 7], 4));
+        // and the unusable entry is the LRU victim
+        assert_eq!(c.evict_lru_except(None), Some(1));
+    }
+
+    #[test]
+    fn prefill_output_roundtrip() {
+        let mut c = PrefixCache::new(4, 8);
+        let t = Tensor::from_f32(&[1, 4, 2], &[0.5; 8]);
+        c.insert(&[1, 2, 3, 4], 4, 11, Some(t.clone()));
+        assert_eq!(c.prefill_output(11).unwrap().shape, t.shape);
+        assert_eq!(c.prefill_output(99), None);
+    }
+
+    #[test]
+    fn edge_split_keeps_both_entries() {
+        let mut c = PrefixCache::new(2, 8);
+        c.insert(&[1, 2, 3, 4], 8, 1, None);
+        // diverges inside the first edge -> split
+        c.insert(&[1, 2, 9, 9], 8, 2, None);
+        assert_eq!(c.lookup(&[1, 2, 3, 4], 8), PrefixHit::Full { pin: 1 });
+        assert_eq!(c.lookup(&[1, 2, 9, 9], 8), PrefixHit::Full { pin: 2 });
+        // the split point itself is not registered
+        assert_eq!(c.lookup(&[1, 2], 8), PrefixHit::Miss);
+    }
+}

@@ -79,6 +79,10 @@ struct Remote {
     conn: Mutex<Option<FramedConn>>,
     /// Last Pong info + measured RTT.
     view: Mutex<Option<ServerView>>,
+    /// Prefix fingerprints learned at discovery time (v3 announcement
+    /// records); folded into every refreshed view so cache-aware sticky
+    /// routing works on discovered swarms even though `Pong` stays v2.
+    hint_fps: Vec<u64>,
 }
 
 /// [`ChainClient`] over TCP: discovers by pinging a static peer list
@@ -94,15 +98,42 @@ pub struct TcpSwarm {
 impl TcpSwarm {
     /// `peers`: (name, addr) pairs; names must match the served nodes'.
     pub fn connect(peers: &[(String, String)]) -> Self {
+        Self::connect_ids(
+            peers
+                .iter()
+                .map(|(name, addr)| (NodeId::from_name(name), addr.clone()))
+                .collect(),
+        )
+    }
+
+    /// Connect by node id directly — the shape
+    /// [`crate::dht::FsDirectory::peers`] (and any future DHT bootstrap)
+    /// returns, so discovery needs no name↔id convention.
+    pub fn connect_ids(peers: Vec<(NodeId, String)>) -> Self {
+        Self::from_remotes(peers.into_iter().map(|(id, addr)| (id, addr, Vec::new())))
+    }
+
+    /// Connect from full discovery announcements, keeping each server's
+    /// advertised prefix fingerprints as routing hints (the announcement
+    /// records carry them; `Pong` does not).
+    pub fn connect_discovered(peers: Vec<crate::dht::FsAnnouncement>) -> Self {
+        Self::from_remotes(
+            peers
+                .into_iter()
+                .map(|a| (a.entry.server, a.addr, a.entry.prefix_fps)),
+        )
+    }
+
+    fn from_remotes(peers: impl Iterator<Item = (NodeId, String, Vec<u64>)>) -> Self {
         let map = peers
-            .iter()
-            .map(|(name, addr)| {
+            .map(|(id, addr, hint_fps)| {
                 (
-                    NodeId::from_name(name),
+                    id,
                     Remote {
-                        addr: addr.clone(),
+                        addr,
                         conn: Mutex::new(None),
                         view: Mutex::new(None),
+                        hint_fps,
                     },
                 )
             })
@@ -176,6 +207,12 @@ impl TcpSwarm {
                         span_compute_s,
                         queue_depth,
                         free_ratio,
+                        // Pong stays a v2 message (widening it would
+                        // break mixed swarms); prefix hints come from the
+                        // v3 announcement records captured at discovery.
+                        // Static peer lists have none: no stickiness,
+                        // never a mis-ranking.
+                        prefix_fps: remote.hint_fps.clone(),
                     });
                 }
                 _ => {
@@ -217,6 +254,41 @@ impl ChainClient for TcpSwarm {
             // as retryable Busy so the session layer can route elsewhere
             Message::Error { message } => Err(Error::from_wire(message)),
             other => Err(Error::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn open_session_prefixed(
+        &self,
+        server: NodeId,
+        session: u64,
+        batch: usize,
+        prefix_len: usize,
+        max_new: usize,
+        prefix_tokens: &[i32],
+        prefill_width: usize,
+    ) -> Result<()> {
+        if prefix_tokens.is_empty() {
+            return self.open_session(server, session, batch, prefix_len, max_new);
+        }
+        let v3 = Message::OpenSessionV3 {
+            session,
+            batch: batch as u32,
+            prefix_len: prefix_len as u32,
+            max_new: max_new as u32,
+            prefill_width: prefill_width as u32,
+            prefix_tokens: prefix_tokens.to_vec(),
+        };
+        match self.call(server, &v3) {
+            Ok(Message::SessionOpenedV3 { .. }) | Ok(Message::SessionOpened { .. }) => Ok(()),
+            Ok(Message::Error { message }) => Err(Error::from_wire(message)),
+            Ok(other) => Err(Error::Protocol(format!("unexpected {other:?}"))),
+            // a legacy (wire v2) server rejects the unknown tag and drops
+            // the connection — downgrade to the v2 open once
+            Err(Error::ChainBroken(_)) | Err(Error::Io(_)) => {
+                self.open_session(server, session, batch, prefix_len, max_new)
+            }
+            Err(e) => Err(e),
         }
     }
 

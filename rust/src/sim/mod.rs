@@ -61,6 +61,15 @@ pub struct SwarmSim {
     pub max_batch_width: usize,
     /// Requests that joined an in-flight batch (diagnostics).
     pub batched_joins: usize,
+    /// Model server-side shared-prefix caching: the first prefill of a
+    /// prompt template on a server pays the full prefix compute and
+    /// registers it; every later prefill of the same template on that
+    /// server runs at [`PREFIX_HIT_COST`] of it (KV pages attached, no
+    /// recompute). Mirrors the real server's
+    /// [`crate::server::prefixcache`].
+    pub prefix_cache: bool,
+    /// Prefills served from a warm template (diagnostics).
+    pub prefix_hits: usize,
     /// Shared bandwidth-token availability per physical GPU group.
     group_busy: std::collections::HashMap<usize, f64>,
     /// Recent claim times per GPU group (processor-sharing window).
@@ -83,6 +92,50 @@ pub struct ForwardReport {
     pub tokens: usize,
     pub wall_s: f64,
     pub tokens_per_s: f64,
+}
+
+/// Fraction of the full prefill compute a warm-template prefill costs
+/// (attach shared KV pages + marginal bookkeeping, no block recompute).
+pub const PREFIX_HIT_COST: f64 = 0.05;
+
+/// Result of a shared-prefix arrival mix
+/// ([`SwarmSim::run_inference_concurrent_mix`]).
+#[derive(Debug, Clone)]
+pub struct SharedMixReport {
+    /// Per-client steady-state decode steps/s.
+    pub per_client: Vec<f64>,
+    /// Mean seconds from a client's arrival to its first decoded token —
+    /// the latency the prefix cache attacks.
+    pub mean_ttft_s: f64,
+    /// Prefills served from a warm template across all servers.
+    pub prefix_hits: usize,
+}
+
+/// KV pages one session costs under the paged pool: the full cost of a
+/// private session vs the marginal (suffix-only) cost when its
+/// `prefix_len`-token prefix is shared — the acceptance metric for the
+/// shared-prefix subsystem. Delegates to the *real* pool's accounting
+/// ([`crate::server::KvPoolConfig`]) so the sim can never drift from
+/// what admission actually charges.
+pub fn pages_per_session(
+    prefix_len: usize,
+    new_tokens: usize,
+    page_tokens: usize,
+    n_blocks: usize,
+    shared: bool,
+) -> usize {
+    let cfg = crate::server::KvPoolConfig {
+        n_heads: 1,
+        head_dim: 1,
+        page_tokens,
+        capacity_pages: 0,
+    };
+    let total = prefix_len + new_tokens;
+    if shared {
+        cfg.private_pages(1, n_blocks, prefix_len, total)
+    } else {
+        cfg.pages_for(1, n_blocks, total)
+    }
 }
 
 impl SwarmSim {
@@ -123,6 +176,8 @@ impl SwarmSim {
             continuous_batching: false,
             max_batch_width: 8,
             batched_joins: 0,
+            prefix_cache: false,
+            prefix_hits: 0,
             group_busy: Default::default(),
             group_claims: Default::default(),
             rng,
@@ -193,6 +248,7 @@ impl SwarmSim {
                     ),
                     queue_depth: 0,
                     free_ratio: 1.0,
+                    prefix_fps: vec![],
                 }
             })
             .collect()
@@ -202,9 +258,7 @@ impl SwarmSim {
         let q = RouteQuery {
             n_blocks: self.profile.n_blocks,
             msg_bytes: step_msg_bytes(&self.profile, batch),
-            beam_width: 8,
-            queue_penalty_s: 0.05,
-            pool_penalty_s: 0.05,
+            ..Default::default()
         };
         routing::find_chain(&self.views(), &q).map(|(hops, _)| hops)
     }
@@ -435,10 +489,10 @@ impl SwarmSim {
     }
 
     /// `n_clients` concurrent sequential-inference clients sharing the
-    /// swarm (the §3.3 multi-client experiment). A per-hop discrete-event
-    /// loop processes resource claims in strict global time order (a
-    /// per-client loop would let a future-phased client drag the FIFO
-    /// tokens forward and phantom-block earlier clients). Returns
+    /// swarm (the §3.3 multi-client experiment), each with a distinct
+    /// prompt. Delegates to [`Self::run_inference_concurrent_mix`] with
+    /// one template per client and the prefix cache forced off, so the
+    /// two workloads share one discrete-event service model. Returns
     /// per-client steady-state decode steps/s.
     pub fn run_inference_concurrent(
         &mut self,
@@ -446,6 +500,28 @@ impl SwarmSim {
         prefix_len: usize,
         n_steps: usize,
     ) -> Option<Vec<f64>> {
+        let cached = self.prefix_cache;
+        self.prefix_cache = false;
+        let r = self.run_inference_concurrent_mix(n_clients, prefix_len, n_steps, n_clients);
+        self.prefix_cache = cached;
+        r.map(|rep| rep.per_client)
+    }
+
+    /// `n_clients` concurrent clients whose prompts are drawn from
+    /// `n_templates` shared prompt templates (client `c` uses template
+    /// `c % n_templates`) — the heavy-traffic scenario the prefix-cache
+    /// subsystem targets. With [`Self::prefix_cache`] on, the first
+    /// prefill of a template on a server pays full compute and warms it;
+    /// later prefills of that template on that server cost
+    /// [`PREFIX_HIT_COST`] of the full pass. Decode is unaffected (the
+    /// suffix KV is private either way).
+    pub fn run_inference_concurrent_mix(
+        &mut self,
+        n_clients: usize,
+        prefix_len: usize,
+        n_steps: usize,
+        n_templates: usize,
+    ) -> Option<SharedMixReport> {
         for s in &mut self.servers {
             s.busy_until = 0.0;
             s.batch_width_now = 0;
@@ -456,18 +532,20 @@ impl SwarmSim {
         let msg = step_msg_bytes(&self.profile, 1);
         let hidden = self.profile.hidden;
         let n_hops = chain.len();
+        let n_templates = n_templates.max(1);
+        let mut warm: std::collections::HashSet<(NodeId, usize)> = Default::default();
+        let mut hits = 0usize;
 
-        // client state: (clock, step [0 = prefill], hop)
         let mut clock: Vec<f64> = (0..n_clients)
             .map(|c| c as f64 * 0.001 + self.rng.f64() * 2.0)
             .collect();
-        let mut step = vec![0usize; n_clients]; // 0 = prefill, 1..=n_steps decode
+        let arrival = clock.clone();
+        let mut step = vec![0usize; n_clients]; // 0 = prefill
         let mut hop = vec![0usize; n_clients];
         let mut decode_start = vec![0.0f64; n_clients];
         let mut done_at = vec![0.0f64; n_clients];
 
         loop {
-            // next event: the unfinished client with the smallest clock
             let Some(c) = (0..n_clients)
                 .filter(|&c| step[c] <= n_steps)
                 .min_by(|&a, &b| clock[a].total_cmp(&clock[b]))
@@ -483,10 +561,17 @@ impl SwarmSim {
                 let d = &s.spec.device;
                 let n = h.end - h.start;
                 if is_prefill {
-                    (
-                        net.message_s(msg * prefix_len as u64),
-                        d.forward_time(n, prefix_len, self.profile.flops_per_token_block),
-                    )
+                    let full =
+                        d.forward_time(n, prefix_len, self.profile.flops_per_token_block);
+                    let tmpl = c % n_templates;
+                    let compute = if self.prefix_cache && warm.contains(&(sid, tmpl)) {
+                        hits += 1;
+                        full * PREFIX_HIT_COST
+                    } else {
+                        warm.insert((sid, tmpl));
+                        full
+                    };
+                    (net.message_s(msg * prefix_len as u64), compute)
                 } else {
                     let kv_bytes = (prefix_len + step[c] - 1) as f64 * 4.0 * hidden as f64;
                     (
@@ -496,13 +581,15 @@ impl SwarmSim {
                     )
                 }
             };
-            // jittered network hop, then FIFO-claim the server
             let arrive = clock[c] + net_msg * (1.0 + 0.1 * self.rng.f64());
             clock[c] = self.occupy(sid, arrive, compute, c);
             hop[c] += 1;
             if hop[c] == n_hops {
-                // return leg + client think, then the next step
-                let last = self.servers.iter().find(|s| s.id == chain[n_hops - 1].server).unwrap();
+                let last = self
+                    .servers
+                    .iter()
+                    .find(|s| s.id == chain[n_hops - 1].server)
+                    .unwrap();
                 clock[c] += last.net(&self.profile.default_net).message_s(msg);
                 if is_prefill {
                     decode_start[c] = clock[c];
@@ -514,11 +601,15 @@ impl SwarmSim {
                 hop[c] = 0;
             }
         }
-        Some(
-            (0..n_clients)
-                .map(|c| n_steps as f64 / (done_at[c] - decode_start[c]))
-                .collect(),
-        )
+        self.prefix_hits += hits;
+        let per_client: Vec<f64> = (0..n_clients)
+            .map(|c| n_steps as f64 / (done_at[c] - decode_start[c]))
+            .collect();
+        let mean_ttft_s = (0..n_clients)
+            .map(|c| decode_start[c] - arrival[c])
+            .sum::<f64>()
+            / n_clients as f64;
+        Some(SharedMixReport { per_client, mean_ttft_s, prefix_hits: hits })
     }
 
     /// Parallel forward (Table 3 right columns): `batch` sequences of
@@ -686,6 +777,52 @@ mod tests {
             agg_batched > 2.0 * solo,
             "8 batched clients must beat the sequential baseline by far: {agg_batched} vs solo {solo}"
         );
+    }
+
+    #[test]
+    fn shared_prefix_cache_cuts_time_to_first_token() {
+        // 8 clients all sending the same system prompt: with the prefix
+        // cache on, every prefill after the first per (server, template)
+        // is nearly free, so mean time-to-first-token drops; steady-state
+        // decode is untouched.
+        let run = |cached: bool| {
+            let mut s = sim(SwarmPreset::TwelveVirtual, NetworkProfile::MBIT100_100MS);
+            s.prefix_cache = cached;
+            s.run_inference_concurrent_mix(8, 128, 16, 1).unwrap()
+        };
+        let cold = run(false);
+        let warm = run(true);
+        assert_eq!(cold.prefix_hits, 0);
+        assert!(warm.prefix_hits > 0, "repeat templates must hit");
+        assert!(
+            warm.mean_ttft_s < cold.mean_ttft_s * 0.9,
+            "prefix cache must cut TTFT: warm {} vs cold {}",
+            warm.mean_ttft_s,
+            cold.mean_ttft_s
+        );
+        // unique prompts (8 templates for 8 clients): no benefit claimed
+        let mut s = sim(SwarmPreset::TwelveVirtual, NetworkProfile::MBIT100_100MS);
+        s.prefix_cache = true;
+        let unique = s.run_inference_concurrent_mix(8, 128, 16, 8).unwrap();
+        assert_eq!(unique.prefix_hits, 0, "distinct templates never alias");
+    }
+
+    #[test]
+    fn marginal_pages_shrink_with_sharing() {
+        // the acceptance arithmetic: 8 clients sharing a 128-token prompt
+        // (16-token pages, 4 blocks), each decoding 8 tokens
+        let full = pages_per_session(128, 8, 16, 4, false);
+        let marginal = pages_per_session(128, 8, 16, 4, true);
+        assert_eq!(full, 2 * 4 * 9);
+        assert_eq!(marginal, 2 * 4, "suffix-only cost");
+        assert!(marginal * 8 < full);
+        // 1 shared + 7 marginal sessions vs 8 private sessions
+        let pool_shared = full + 7 * marginal;
+        let pool_private = 8 * full;
+        assert!(pool_shared * 4 < pool_private);
+        // degenerate cases
+        assert_eq!(pages_per_session(128, 0, 16, 4, true), 0);
+        assert!(pages_per_session(120, 8, 16, 4, true) >= 2 * 4);
     }
 
     #[test]

@@ -81,9 +81,9 @@ fn announcements_drive_balancer_and_expire() {
 
     // three servers announce spans
     let servers = [
-        ServerEntry { server: ids[0], start: 0, end: 4, throughput: 2.0, free_pages: 0, total_pages: 0, batch_width: 0 },
-        ServerEntry { server: ids[1], start: 2, end: 6, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0 },
-        ServerEntry { server: ids[2], start: 4, end: 8, throughput: 1.5, free_pages: 0, total_pages: 0, batch_width: 0 },
+        ServerEntry { server: ids[0], start: 0, end: 4, throughput: 2.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![] },
+        ServerEntry { server: ids[1], start: 2, end: 6, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![] },
+        ServerEntry { server: ids[2], start: 4, end: 8, throughput: 1.5, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![] },
     ];
     for s in &servers {
         dir.announce(s, 0);
@@ -136,6 +136,7 @@ fn pool_occupancy_flows_through_dht_to_balancer() {
         free_pages: 64,
         total_pages: 64,
         batch_width: 8,
+        prefix_fps: vec![],
     };
     let full = ServerEntry { server: ids[1], free_pages: 0, ..idle.clone() };
     dir.announce(&idle, 0);
@@ -167,11 +168,11 @@ fn departed_server_invisible_after_ttl_but_others_persist() {
     let net = util::Net::new(&ids);
     let dir = BlockDirectory::new(&net, ids[..3].to_vec(), "bloom-mini");
 
-    dir.announce(&ServerEntry { server: ids[0], start: 0, end: 4, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0 }, 0);
+    dir.announce(&ServerEntry { server: ids[0], start: 0, end: 4, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![] }, 0);
     // half-TTL later the second server announces
     let half = dir.announce_ttl_ms / 2;
     net.now_ms.set(half);
-    dir.announce(&ServerEntry { server: ids[1], start: 0, end: 4, throughput: 2.0, free_pages: 0, total_pages: 0, batch_width: 0 }, half);
+    dir.announce(&ServerEntry { server: ids[1], start: 0, end: 4, throughput: 2.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![] }, half);
 
     // just past the first server's expiry: only the second remains
     net.now_ms.set(dir.announce_ttl_ms + 1);

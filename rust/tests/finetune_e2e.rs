@@ -40,9 +40,7 @@ fn prompt_tuning_loss_decreases_through_real_blocks() {
     let route = RouteQuery {
         n_blocks: g.n_layers,
         msg_bytes: (b * s * g.hidden * 4) as u64,
-        beam_width: 8,
-        queue_penalty_s: 0.05,
-        pool_penalty_s: 0.05,
+        ..Default::default()
     };
     let mut rng = Rng::new(7);
     let half = (g.vocab / 2) as i32;
@@ -104,11 +102,10 @@ fn server_weights_frozen_during_training() {
             route: RouteQuery {
                 n_blocks: g.n_layers,
                 msg_bytes: (g.hidden * 4) as u64,
-                beam_width: 8,
-                queue_penalty_s: 0.05,
-                pool_penalty_s: 0.05,
+                ..Default::default()
             },
             max_recoveries: 1,
+            prefix_tokens: vec![],
         };
         let generator = SwarmGenerator { swarm: &swarm, head: &head, cfg, sampler: Sampler::Greedy };
         generator
@@ -125,9 +122,7 @@ fn server_weights_frozen_during_training() {
     let route = RouteQuery {
         n_blocks: g.n_layers,
         msg_bytes: (b * s * g.hidden * 4) as u64,
-        beam_width: 8,
-        queue_penalty_s: 0.05,
-        pool_penalty_s: 0.05,
+        ..Default::default()
     };
     let ids = vec![5i32; b * s];
     let embeds = head.embed(&Tensor::from_i32(&[b, s], &ids)).unwrap();

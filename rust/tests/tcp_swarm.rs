@@ -34,11 +34,10 @@ fn cfg(home: &ModelHome) -> SessionConfig {
         route: RouteQuery {
             n_blocks: g.n_layers,
             msg_bytes: (g.hidden + g.hidden / 64 * 4) as u64,
-            beam_width: 8,
-            queue_penalty_s: 0.05,
-            pool_penalty_s: 0.05,
+            ..Default::default()
         },
         max_recoveries: 3,
+        prefix_tokens: vec![],
     }
 }
 
@@ -144,6 +143,67 @@ fn tcp_failover_recovers() {
     assert!(session.recoveries() >= 1);
     session.close();
     h1.shutdown();
+}
+
+/// Shared-prefix serving over real sockets: the generator sends wire-v3
+/// opens carrying the prompt tokens, the second identical prompt hits
+/// the servers' prefix caches (prefill answered without compute), and
+/// the greedy tokens stay golden — sharing must be invisible on the
+/// wire and in the output.
+#[test]
+fn tcp_shared_prompt_hits_prefix_cache() {
+    let home = home();
+    let g = home.geometry().clone();
+    let rt = runtime(&home);
+    let half = g.n_layers / 2;
+    let h1 = spawn(&home, &rt, "p1", 0..half);
+    let h2 = spawn(&home, &rt, "p2", half..g.n_layers);
+    let peers = vec![
+        ("p1".to_string(), h1.addr.clone()),
+        ("p2".to_string(), h2.addr.clone()),
+    ];
+    let swarm = TcpSwarm::connect(&peers);
+    let weights = Weights::load(&home, Precision::F16).unwrap();
+    let head = LocalHead::new(&home, rt, &weights).unwrap();
+
+    let gg = &home.manifest.golden_generate;
+    let prefix = home.load_tensor(&gg.prefix).unwrap().as_i32().to_vec();
+    let want = home.load_tensor(&gg.tokens).unwrap().as_i32().to_vec();
+
+    let generator = SwarmGenerator {
+        swarm: &swarm,
+        head: &head,
+        cfg: cfg(&home),
+        sampler: Sampler::Greedy,
+    };
+    let fp = petals::server::fingerprint(&prefix);
+    let a = generator.generate(&[prefix.clone()], want.len(), 21).unwrap();
+    let b = generator.generate(&[prefix], want.len(), 22).unwrap();
+    assert_eq!(a.tokens[0], want, "first session diverged");
+    assert_eq!(b.tokens[0], want, "shared-prefix session diverged");
+    let hits: u64 = [&h1, &h2].iter().map(|h| h.node.metrics.prefix_hits.get()).sum();
+    let skips: u64 =
+        [&h1, &h2].iter().map(|h| h.node.metrics.prefix_prefill_skips.get()).sum();
+    assert!(hits >= 2, "v3 opens must hit the cache on both hops (got {hits})");
+    assert!(skips >= 2, "cached prefills must be served (got {skips})");
+
+    // a freshly *discovered* client learns the servers' hot-prefix
+    // fingerprints from their v3 announcements and carries them into its
+    // routing views (Pong itself stays v2)
+    let ann = vec![
+        petals::dht::FsAnnouncement { addr: h1.addr.clone(), entry: h1.node.dht_entry() },
+        petals::dht::FsAnnouncement { addr: h2.addr.clone(), entry: h2.node.dht_entry() },
+    ];
+    assert!(ann.iter().all(|x| x.entry.prefix_fps.contains(&fp)), "announcements carry the fp");
+    let discovered = TcpSwarm::connect_discovered(ann);
+    let views = discovered.discover();
+    assert_eq!(views.len(), 2);
+    assert!(
+        views.iter().all(|v| v.prefix_fps.contains(&fp)),
+        "discovered views must keep the sticky-routing hints"
+    );
+    h1.shutdown();
+    h2.shutdown();
 }
 
 /// HTTP chat backend over a TCP swarm: full 4-layer stack
