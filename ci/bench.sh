@@ -1,25 +1,49 @@
 #!/usr/bin/env bash
-# Perf trajectory gate: run the shared-prefix multiclient bench and emit
-# a machine-readable summary so successive PRs can be compared.
+# Perf trajectory: run the machine-readable benches and emit BENCH_*.json
+# so successive PRs can be compared (see ci/bench_compare.sh for the
+# regression gate).
 #
-#   ci/bench.sh [OUT.json]     # default: BENCH_prefix_cache.json (cwd)
+#   ci/bench.sh [OUTDIR]     # default: the repo root
 #
-# The bench needs the AOT artifacts (`make artifacts`); it exercises the
-# real paged pool + prefix cache at BLOOM-mini scale and the simulator at
-# BLOOM-176B scale, then writes:
-#   pages_first_session / pages_per_extra_session  — marginal-cost check
-#   prefix_hit_rate, prefill_skips, cow_forks      — cache behaviour
-#   aggregate_steps_per_s                          — multiclient decode
-#   sim_ttft_cold_s / sim_ttft_warm_s              — TTFT win at scale
+# Emits:
+#   OUTDIR/BENCH_dht.json           — iterative-lookup hop count & latency,
+#                                     churn reconvergence (sim + loopback
+#                                     TCP); needs no artifacts
+#   OUTDIR/BENCH_prefix_cache.json  — shared-prefix multiclient bench:
+#                                     pages/session, hit rate,
+#                                     aggregate_steps_per_s, sim TTFT;
+#                                     needs the AOT artifacts
+#                                     (`make artifacts`) — skipped with an
+#                                     explicit message when they are absent
 
 set -euo pipefail
-OUT="${1:-$(pwd)/BENCH_prefix_cache.json}"
+# shellcheck source=ci/preflight.sh
+. "$(dirname "$0")/preflight.sh"
+OUTDIR="$(cd "${1:-$(dirname "$0")/..}" && pwd)"
 cd "$(dirname "$0")/../rust"
 
-echo "==> cargo bench --bench multiclient (BENCH_OUT=$OUT)"
-BENCH_OUT="$OUT" cargo bench --bench multiclient
+preflight_toolchain
+preflight_manifest
 
-test -s "$OUT" || { echo "bench did not write $OUT" >&2; exit 1; }
+echo "==> cargo bench --bench dht_lookup (BENCH_OUT=$OUTDIR/BENCH_dht.json)"
+BENCH_OUT="$OUTDIR/BENCH_dht.json" cargo bench --bench dht_lookup
+test -s "$OUTDIR/BENCH_dht.json" || { echo "bench did not write BENCH_dht.json" >&2; exit 1; }
 echo
-echo "==> $OUT"
-cat "$OUT"
+echo "==> $OUTDIR/BENCH_dht.json"
+cat "$OUTDIR/BENCH_dht.json"
+
+if [[ ! -f artifacts/manifest.json ]]; then
+    echo
+    echo "SKIP: rust/artifacts/manifest.json not found — the multiclient"
+    echo "      bench needs the AOT artifacts ('make artifacts'); skipping"
+    echo "      BENCH_prefix_cache.json in this environment."
+    exit 0
+fi
+
+echo
+echo "==> cargo bench --bench multiclient (BENCH_OUT=$OUTDIR/BENCH_prefix_cache.json)"
+BENCH_OUT="$OUTDIR/BENCH_prefix_cache.json" cargo bench --bench multiclient
+test -s "$OUTDIR/BENCH_prefix_cache.json" || { echo "bench did not write BENCH_prefix_cache.json" >&2; exit 1; }
+echo
+echo "==> $OUTDIR/BENCH_prefix_cache.json"
+cat "$OUTDIR/BENCH_prefix_cache.json"

@@ -1,0 +1,60 @@
+#!/usr/bin/env bash
+# Bench-trajectory gate: diff a freshly produced BENCH_*.json against the
+# committed previous run and fail on a significant regression.
+#
+#   ci/bench_compare.sh [NEW.json] [KEY] [MAX_DROP_PCT]
+#
+# Defaults: NEW = ./BENCH_prefix_cache.json, KEY = aggregate_steps_per_s,
+# MAX_DROP_PCT = 10. The baseline is the file of the same *name* committed
+# at the repo root at HEAD (`git show HEAD:<basename>`), so NEW may live
+# in a scratch directory (CI writes fresh results to bench-out/ precisely
+# so a skipped bench can never be compared against itself via the stale
+# committed copy). Higher-is-better semantics: the gate fails when
+# NEW[KEY] < BASE[KEY] * (1 - MAX_DROP_PCT/100).
+#
+# Exit codes: 0 pass (or no baseline yet — the first run *starts* the
+# trajectory), 1 regression, 2 usage/parse error.
+
+set -euo pipefail
+NEW="${1:-BENCH_prefix_cache.json}"
+KEY="${2:-aggregate_steps_per_s}"
+MAX_DROP="${3:-10}"
+
+if [[ ! -s "$NEW" ]]; then
+    echo "error: '$NEW' missing or empty — run ci/bench.sh first" >&2
+    exit 2
+fi
+
+REPO_ROOT="$(git -C "$(dirname "$NEW")" rev-parse --show-toplevel)"
+REL="$(basename "$NEW")"
+
+if ! BASE_JSON="$(git -C "$REPO_ROOT" show "HEAD:$REL" 2>/dev/null)"; then
+    echo "no committed baseline for $REL at HEAD — skipping compare."
+    echo "(commit a fresh $REL at the repo root to start the perf trajectory)"
+    exit 0
+fi
+
+export BASE_JSON
+python3 - "$NEW" "$KEY" "$MAX_DROP" <<'EOF'
+import json, os, sys
+
+new_path, key, max_drop = sys.argv[1], sys.argv[2], float(sys.argv[3])
+try:
+    new = json.load(open(new_path))
+    base = json.loads(os.environ["BASE_JSON"])
+except (OSError, json.JSONDecodeError) as e:
+    print(f"error: cannot parse bench JSON: {e}", file=sys.stderr)
+    sys.exit(2)
+if key not in new or key not in base:
+    print(f"error: key '{key}' missing (new: {key in new}, base: {key in base})", file=sys.stderr)
+    sys.exit(2)
+new_v, base_v = float(new[key]), float(base[key])
+floor = base_v * (1 - max_drop / 100)
+delta = (new_v / base_v - 1) * 100 if base_v else float("inf")
+print(f"{key}: baseline {base_v:.3f} -> new {new_v:.3f} ({delta:+.1f}%)")
+if new_v < floor:
+    print(f"REGRESSION: {new_v:.3f} is below the {max_drop:.0f}% floor ({floor:.3f})",
+          file=sys.stderr)
+    sys.exit(1)
+print(f"ok (floor {floor:.3f})")
+EOF

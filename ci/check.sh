@@ -1,17 +1,35 @@
 #!/usr/bin/env bash
 # CI gate: formatting, lints, docs, tests — in that order, fail fast.
 #
-#   ci/check.sh          # everything (fmt, clippy, doc, build, test)
-#   ci/check.sh quick    # fmt + clippy only (pre-commit)
+#   ci/check.sh            # everything (fmt, clippy, doc, build, test)
+#   ci/check.sh quick      # fmt + clippy only (pre-commit)
+#   ci/check.sh test-only  # build + test only (fast iteration loop)
 #
 # Doc warnings are promoted to errors so `cargo doc --no-deps` regressions
 # (broken intra-doc links, malformed headings) fail here instead of
 # rotting silently.
 
 set -euo pipefail
+# shellcheck source=ci/preflight.sh
+. "$(dirname "$0")/preflight.sh"
 cd "$(dirname "$0")/../rust"
 
 step() { printf '\n==> %s\n' "$*"; }
+
+preflight_toolchain
+preflight_manifest
+
+MODE="${1:-}"
+
+if [[ "$MODE" == "test-only" ]]; then
+    # fast iteration loop: dev-profile tests only — a release build here
+    # would be paid in full and never used by `cargo test`
+    step "cargo test"
+    cargo test -q
+    echo
+    echo "test-only checks passed"
+    exit 0
+fi
 
 step "cargo fmt --check"
 cargo fmt --all -- --check
@@ -19,7 +37,7 @@ cargo fmt --all -- --check
 step "cargo clippy -- -D warnings"
 cargo clippy --all-targets -- -D warnings
 
-if [[ "${1:-}" == "quick" ]]; then
+if [[ "$MODE" == "quick" ]]; then
     echo "quick mode: skipping doc/build/test"
     exit 0
 fi

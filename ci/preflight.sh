@@ -1,0 +1,30 @@
+# Shared toolchain preflight — source from ci/*.sh (not executable on
+# its own). A missing cargo/rustc should read as "install the toolchain"
+# (exit 3), not as a bash failure halfway through a script.
+# rust-toolchain.toml at the repo root pins the version rustup installs.
+
+preflight_toolchain() {
+    for tool in cargo rustc; do
+        if ! command -v "$tool" >/dev/null 2>&1; then
+            echo "error: '$tool' not found in PATH." >&2
+            echo "hint: install via https://rustup.rs — rustup reads the pinned" >&2
+            echo "      version from rust-toolchain.toml automatically." >&2
+            exit 3
+        fi
+    done
+}
+
+# The repo currently ships no rust/Cargo.toml (the seed's `xla` dependency
+# is unvendored — see ROADMAP.md; authoring the manifest is the next
+# CI-enabling step). Until it lands, cargo-based gates degrade with an
+# explicit SKIP instead of a confusing "could not find Cargo.toml" error.
+# Call from inside rust/.
+preflight_manifest() {
+    if [[ ! -f Cargo.toml ]]; then
+        echo "SKIP: rust/Cargo.toml is not in this repo yet — the crate cannot be"
+        echo "      built (unvendored 'xla' dependency; see ROADMAP.md). Exiting 0"
+        echo "      so CI gates what exists; this becomes a real build gate the"
+        echo "      moment a manifest is committed."
+        exit 0
+    fi
+}

@@ -1,0 +1,167 @@
+//! Discovery-plane perf: Kademlia iterative-lookup cost and churn
+//! convergence, on the CI perf trajectory as `BENCH_dht.json`.
+//!
+//! Two layers, mirroring the compute benches:
+//!
+//! 1. **Simulated** ([`petals::sim::dht`]) at swarm sizes real sockets
+//!    would make slow and flaky: metered RPC counts (hops) and virtual
+//!    latency at the paper's ~100 ms real-world RTT, plus convergence
+//!    time after killing a third of the swarm and republishing.
+//! 2. **Real loopback TCP**: a 5-node [`petals::dht::DhtNode`] swarm —
+//!    wall-clock iterative `FIND_VALUE` latency through `TcpRpc`, and
+//!    wall-clock convergence after a node death + republish.
+//!
+//! Needs no artifacts, so it runs in every environment that can build
+//! the crate. Run: `cargo bench --bench dht_lookup`
+//! (`BENCH_OUT` overrides the output path).
+
+use petals::dht::{
+    now_ms, BlockDirectory, DhtConfig, DhtNode, NodeId, ServerEntry,
+};
+use petals::sim::dht::SimDhtNet;
+use std::time::{Duration, Instant};
+
+fn main() -> petals::Result<()> {
+    println!("kademlia discovery-plane benchmarks\n");
+
+    // ---- simulated swarm: hop counts vs size ----------------------------
+    let hop_latency_s = 0.1; // paper's real-world profile: ~100 ms RTT
+    println!("simulated swarms @ {:.0} ms/hop:", hop_latency_s * 1000.0);
+    println!("| nodes | lookup rpcs (mean) | lookup latency s | churn reconverge s |");
+    println!("|---|---|---|---|");
+    let mut sim_rows: Vec<(usize, f64, f64, f64)> = Vec::new();
+    for &n in &[32usize, 128, 512] {
+        let (net, ids) = SimDhtNet::build(n, 42, hop_latency_s);
+        // publish 8 block keys from distinct publishers
+        let keys: Vec<NodeId> =
+            (0..8).map(|i| NodeId::from_name(&format!("bloom/block/{i}"))).collect();
+        let ttl_ms = 120_000u64;
+        for (i, &key) in keys.iter().enumerate() {
+            net.publish(ids[1 + i], &[ids[0]], key, vec![i as u8], ttl_ms);
+        }
+        // metered lookups from spread-out query nodes
+        let (mut rpcs, mut lat) = (0.0f64, 0.0f64);
+        let mut samples = 0usize;
+        for (i, &key) in keys.iter().enumerate() {
+            for q in 0..4 {
+                let from = ids[(i * 29 + q * 7 + 11) % n];
+                let cost = net.measure_lookup(&[from], key);
+                assert!(cost.found >= 1, "sim lookup lost key {i}");
+                rpcs += cost.rpcs as f64;
+                lat += cost.latency_s;
+                samples += 1;
+            }
+        }
+        let (rpcs, lat) = (rpcs / samples as f64, lat / samples as f64);
+        // churn: kill a third (sparing publishers + seed), wait out the
+        // TTL, republish, and charge the convergence to the clock
+        let mut killed = 0usize;
+        for i in (9..n).step_by(3) {
+            net.kill(ids[i]);
+            killed += 1;
+        }
+        net.advance_s(ttl_ms as f64 / 1000.0 + 1.0);
+        let t0 = net.clock_s();
+        for (i, &key) in keys.iter().enumerate() {
+            net.publish(ids[1 + i], &[ids[0]], key, vec![i as u8], ttl_ms);
+            assert!(net.measure_lookup(&[ids[0]], key).found >= 1, "reconverge lost key {i}");
+        }
+        let reconverge = net.clock_s() - t0;
+        println!("| {n} (-{killed}) | {rpcs:.1} | {lat:.2} | {reconverge:.2} |");
+        sim_rows.push((n, rpcs, lat, reconverge));
+    }
+
+    // ---- real loopback swarm -------------------------------------------
+    println!("\nreal loopback TCP swarm (5 DhtNodes, one seed):");
+    let cfg = |bootstrap: Vec<String>| DhtConfig {
+        bootstrap,
+        rpc_timeout: Duration::from_millis(800),
+        sweep_every: Duration::from_millis(200),
+        ..DhtConfig::default()
+    };
+    let seed =
+        DhtNode::spawn(NodeId::from_name("bench/seed"), "127.0.0.1:0", cfg(vec![]))?;
+    let mut nodes = vec![seed];
+    for i in 1..5 {
+        let n = DhtNode::spawn(
+            NodeId::from_name(&format!("bench/n{i}")),
+            "127.0.0.1:0",
+            cfg(vec![nodes[0].addr()]),
+        )?;
+        n.bootstrap();
+        nodes.push(n);
+    }
+    let entry = ServerEntry {
+        server: nodes[1].id(),
+        start: 0,
+        end: 4,
+        throughput: 1.0,
+        free_pages: 8,
+        total_pages: 32,
+        batch_width: 8,
+        prefix_fps: vec![],
+    };
+    let churn_ttl_ms = 800u64;
+    let publish = |node: &DhtNode, ttl_ms: u64| -> petals::Result<usize> {
+        let rpc = node.rpc();
+        let mut dir = BlockDirectory::new(&rpc, node.seeds(), "bloom-mini");
+        dir.announce_ttl_ms = ttl_ms;
+        dir.announce_addressed("127.0.0.1:7001", &entry, now_ms())
+    };
+    // measurement phase uses a long TTL: 20 iterative lookups at a few
+    // ms per dial must not race the record's expiry on a loaded runner
+    publish(&nodes[1], 60_000)?;
+    let reader = nodes[4].clone();
+    let lookup_ok = |node: &DhtNode| {
+        let rpc = node.rpc();
+        let dir = BlockDirectory::new(&rpc, node.seeds(), "bloom-mini");
+        !dir.lookup_addressed(0).is_empty()
+    };
+    // warm + measured lookups
+    assert!(lookup_ok(&reader), "tcp lookup must resolve");
+    let n_lookups = 20usize;
+    let t0 = Instant::now();
+    for _ in 0..n_lookups {
+        assert!(lookup_ok(&reader));
+    }
+    let tcp_lookup_ms = t0.elapsed().as_secs_f64() * 1000.0 / n_lookups as f64;
+    println!("  iterative FIND_VALUE: {tcp_lookup_ms:.2} ms/lookup (mean of {n_lookups})");
+
+    // churn: swap in a short-TTL record (same publisher replaces), kill
+    // a replica holder, let the TTL expire, republish, and measure wall
+    // time until the swarm resolves the entry again
+    publish(&nodes[1], churn_ttl_ms)?;
+    nodes[2].shutdown();
+    std::thread::sleep(Duration::from_millis(churn_ttl_ms + 300));
+    assert!(!lookup_ok(&reader), "expired entry must be invisible");
+    let t0 = Instant::now();
+    publish(&nodes[1], churn_ttl_ms)?;
+    let mut tcp_reconverge_ms = -1.0f64;
+    while t0.elapsed() < Duration::from_secs(5) {
+        if lookup_ok(&reader) {
+            tcp_reconverge_ms = t0.elapsed().as_secs_f64() * 1000.0;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(tcp_reconverge_ms >= 0.0, "swarm never reconverged");
+    println!("  churn reconverge (kill + TTL expiry + republish): {tcp_reconverge_ms:.1} ms");
+    for n in &nodes {
+        n.shutdown();
+    }
+
+    // ---- trajectory JSON ------------------------------------------------
+    let (big_n, big_rpcs, big_lat, big_reconv) = *sim_rows.last().unwrap();
+    let json = format!(
+        "{{\n  \"sim_hop_latency_ms\": {:.0},\n  \"sim_nodes\": {big_n},\n  \
+         \"sim_lookup_rpcs_mean\": {big_rpcs:.2},\n  \"sim_lookup_latency_s\": {big_lat:.3},\n  \
+         \"sim_churn_reconverge_s\": {big_reconv:.3},\n  \"tcp_nodes\": {},\n  \
+         \"tcp_lookup_ms_mean\": {tcp_lookup_ms:.3},\n  \"tcp_churn_reconverge_ms\": {tcp_reconverge_ms:.1}\n}}\n",
+        hop_latency_s * 1000.0,
+        nodes.len(),
+    );
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_dht.json".into());
+    std::fs::write(&out, &json)?;
+    println!("\nwrote {out}");
+    Ok(())
+}

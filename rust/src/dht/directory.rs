@@ -171,6 +171,76 @@ impl<'a> BlockDirectory<'a> {
     pub fn snapshot(&self, n_blocks: u32) -> Vec<Vec<ServerEntry>> {
         (0..n_blocks).map(|b| self.lookup(b)).collect()
     }
+
+    /// Announce an *addressed* record (entry + the server's dialable
+    /// service address, [`crate::dht::FsAnnouncement`] wire format) under
+    /// every covered block key — what networked swarms publish, since a
+    /// bare [`ServerEntry`] tells a client *who* serves a block but not
+    /// where to dial it. Returns the total replicas that accepted a
+    /// record across all covered keys: **0 means the announcement is
+    /// resolvable nowhere** (every closest node refused or was
+    /// unreachable) and callers should say so. `Err` only for an
+    /// oversized address.
+    pub fn announce_addressed(
+        &self,
+        addr: &str,
+        entry: &ServerEntry,
+        now_ms: u64,
+    ) -> crate::error::Result<usize> {
+        let payload =
+            crate::dht::FsAnnouncement { addr: addr.to_string(), entry: entry.clone() }
+                .encode()?;
+        let mut stored = 0;
+        for block in entry.start..entry.end {
+            let rec = Record::new(entry.server, payload.clone(), now_ms, self.announce_ttl_ms);
+            stored += iterative_store(self.rpc, &self.seeds, block_key(&self.model, block), rec);
+        }
+        Ok(stored)
+    }
+
+    /// Live addressed announcements covering `block`, freshest per
+    /// publisher. A replica that dropped out of a key's closest set can
+    /// serve a pre-rebalance record until its TTL runs out, and the
+    /// lookup's `(publisher, payload)` dedup keeps both versions — the
+    /// larger remaining lifetime identifies the newer announcement (all
+    /// merged records were re-stamped with one clock at receipt).
+    pub fn lookup_addressed(&self, block: u32) -> Vec<crate::dht::FsAnnouncement> {
+        let mut best: std::collections::BTreeMap<NodeId, (u64, crate::dht::FsAnnouncement)> =
+            std::collections::BTreeMap::new();
+        for r in iterative_find_value(self.rpc, &self.seeds, block_key(&self.model, block)) {
+            let Some(a) = crate::dht::FsAnnouncement::decode(&r.payload) else {
+                continue;
+            };
+            if !a.entry.covers(block) {
+                continue;
+            }
+            let expires = r.stored_at_ms.saturating_add(r.ttl_ms);
+            match best.get(&r.publisher) {
+                Some((seen, _)) if *seen >= expires => {}
+                _ => {
+                    best.insert(r.publisher, (expires, a));
+                }
+            }
+        }
+        best.into_values().map(|(_, a)| a).collect()
+    }
+
+    /// Every distinct live server found under blocks `0..n_blocks` —
+    /// the input [`crate::server::service::TcpSwarm::connect_discovered`]
+    /// expects. One announcement per server id; where per-block lookups
+    /// disagree (a TTL-bounded stale record on some keys), any surviving
+    /// version is self-consistent: clients ping before routing and the
+    /// `Pong` span is authoritative.
+    pub fn discover_addressed(&self, n_blocks: u32) -> Vec<crate::dht::FsAnnouncement> {
+        let mut by_server: std::collections::BTreeMap<NodeId, crate::dht::FsAnnouncement> =
+            std::collections::BTreeMap::new();
+        for block in 0..n_blocks {
+            for a in self.lookup_addressed(block) {
+                by_server.insert(a.entry.server, a);
+            }
+        }
+        by_server.into_values().collect()
+    }
 }
 
 #[cfg(test)]
@@ -258,6 +328,27 @@ mod tests {
             assert_eq!(got[0], e);
         }
         assert!(dir.lookup(4).is_empty());
+    }
+
+    #[test]
+    fn addressed_records_roundtrip_and_dedupe() {
+        let mut rng = Rng::new(11);
+        let ids: Vec<NodeId> = (0..30).map(|_| NodeId::random(&mut rng)).collect();
+        let net = TestNet::new(&ids);
+        let dir = BlockDirectory::new(&net, ids[..3].to_vec(), "bloom");
+        let e1 = ServerEntry { server: ids[0], start: 0, end: 4, throughput: 1.0, free_pages: 3, total_pages: 8, batch_width: 2, prefix_fps: vec![9] };
+        let e2 = ServerEntry { server: ids[1], start: 2, end: 6, throughput: 2.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![] };
+        dir.announce_addressed("127.0.0.1:4001", &e1, 0).unwrap();
+        dir.announce_addressed("127.0.0.1:4002", &e2, 0).unwrap();
+        let at3 = dir.lookup_addressed(3);
+        assert_eq!(at3.len(), 2);
+        assert!(at3.iter().any(|a| a.addr == "127.0.0.1:4001" && a.entry == e1));
+        // discovery dedupes by server across overlapping blocks
+        let all = dir.discover_addressed(6);
+        assert_eq!(all.len(), 2);
+        assert!(dir.lookup_addressed(5).iter().all(|a| a.entry.server == ids[1]));
+        // bare-entry lookups do not see addressed payloads (format guard)
+        assert!(dir.lookup(3).is_empty());
     }
 
     #[test]

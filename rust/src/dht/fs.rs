@@ -32,6 +32,40 @@ pub struct FsAnnouncement {
     pub entry: ServerEntry,
 }
 
+impl FsAnnouncement {
+    /// The addressed-record wire format (module docs): this is both the
+    /// `.entry` file body *and* the payload the networked DHT stores
+    /// under block keys ([`crate::dht::BlockDirectory::announce_addressed`])
+    /// — the seam the module docs promised ("the record format is
+    /// already the wire format").
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        if self.addr.len() > u16::MAX as usize {
+            return Err(Error::Protocol(format!(
+                "address too long: {} bytes",
+                self.addr.len()
+            )));
+        }
+        let mut buf = Vec::with_capacity(2 + self.addr.len() + 64);
+        buf.extend_from_slice(&(self.addr.len() as u16).to_le_bytes());
+        buf.extend_from_slice(self.addr.as_bytes());
+        buf.extend_from_slice(&self.entry.encode());
+        Ok(buf)
+    }
+
+    pub fn decode(buf: &[u8]) -> Option<Self> {
+        if buf.len() < 2 {
+            return None;
+        }
+        let n = u16::from_le_bytes([buf[0], buf[1]]) as usize;
+        if buf.len() < 2 + n {
+            return None;
+        }
+        let addr = String::from_utf8(buf[2..2 + n].to_vec()).ok()?;
+        let entry = ServerEntry::decode(&buf[2 + n..])?;
+        Some(FsAnnouncement { addr, entry })
+    }
+}
+
 /// A directory of liveness records (see module docs).
 pub struct FsDirectory {
     dir: PathBuf,
@@ -56,13 +90,8 @@ impl FsDirectory {
 
     /// Publish (or refresh) this server's record atomically.
     pub fn announce(&self, addr: &str, entry: &ServerEntry) -> Result<()> {
-        if addr.len() > u16::MAX as usize {
-            return Err(Error::Protocol(format!("address too long: {} bytes", addr.len())));
-        }
-        let mut buf = Vec::with_capacity(2 + addr.len() + 64);
-        buf.extend_from_slice(&(addr.len() as u16).to_le_bytes());
-        buf.extend_from_slice(addr.as_bytes());
-        buf.extend_from_slice(&entry.encode());
+        let buf =
+            FsAnnouncement { addr: addr.to_string(), entry: entry.clone() }.encode()?;
         let path = self.record_path(entry);
         let tmp = path.with_extension("tmp");
         std::fs::write(&tmp, &buf)?;
@@ -123,17 +152,7 @@ impl FsDirectory {
     }
 
     fn parse(path: &Path) -> Option<FsAnnouncement> {
-        let buf = std::fs::read(path).ok()?;
-        if buf.len() < 2 {
-            return None;
-        }
-        let n = u16::from_le_bytes([buf[0], buf[1]]) as usize;
-        if buf.len() < 2 + n {
-            return None;
-        }
-        let addr = String::from_utf8(buf[2..2 + n].to_vec()).ok()?;
-        let entry = ServerEntry::decode(&buf[2 + n..])?;
-        Some(FsAnnouncement { addr, entry })
+        FsAnnouncement::decode(&std::fs::read(path).ok()?)
     }
 }
 

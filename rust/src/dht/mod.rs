@@ -6,8 +6,9 @@
 //! structures and iterative lookup faithfully — XOR metric, k-buckets,
 //! iterative `FIND_NODE`/`FIND_VALUE` with α-parallelism, TTL records
 //! with republish — over a pluggable [`Rpc`] trait so the same logic runs
-//! in-process (tests), over the deterministic network simulator, and
-//! over real sockets.
+//! in-process (tests), over the deterministic network simulator
+//! ([`crate::sim::dht`]), and over real sockets ([`node`]: a framed-TCP
+//! [`DhtNode`] service plus the [`TcpRpc`] client, wire v4).
 //!
 //! On top sits the Petals-specific [`directory`]: block → server
 //! announcements with throughput metadata, the input to load balancing
@@ -16,12 +17,14 @@
 pub mod directory;
 pub mod fs;
 mod id;
+pub mod node;
 mod routing;
 mod storage;
 
 pub use directory::{BlockDirectory, ServerEntry};
 pub use fs::{FsAnnouncement, FsDirectory};
 pub use id::NodeId;
+pub use node::{client_rpc, now_ms, DhtConfig, DhtNode, TcpRpc};
 pub use routing::{RoutingTable, K};
 pub use storage::{Record, Storage};
 
@@ -37,8 +40,10 @@ pub trait Rpc {
     fn find_node(&self, callee: NodeId, target: NodeId) -> Vec<NodeId>;
     /// Value lookup; `Some` short-circuits the iterative search.
     fn find_value(&self, callee: NodeId, key: NodeId) -> Option<Vec<Record>>;
-    /// Store a record at the callee.
-    fn store(&self, callee: NodeId, key: NodeId, rec: Record);
+    /// Store a record at the callee; `true` iff the callee accepted it
+    /// (a full or unreachable callee refuses — publishers must not
+    /// count a refusal as a replica).
+    fn store(&self, callee: NodeId, key: NodeId, rec: Record) -> bool;
     /// Liveness check.
     fn ping(&self, callee: NodeId) -> bool;
 }
@@ -135,13 +140,15 @@ pub fn iterative_find_value(
     found
 }
 
-/// Store a record on the K nodes closest to `key`.
+/// Store a record on the K nodes closest to `key`. Returns how many
+/// actually accepted it (0 = the record is resolvable nowhere).
 pub fn iterative_store(rpc: &dyn Rpc, seeds: &[NodeId], key: NodeId, rec: Record) -> usize {
     let closest = iterative_find_node(rpc, seeds, key);
     let mut stored = 0;
     for node in closest {
-        rpc.store(node, key, rec.clone());
-        stored += 1;
+        if rpc.store(node, key, rec.clone()) {
+            stored += 1;
+        }
     }
     stored
 }
@@ -209,13 +216,15 @@ pub(crate) mod testnet {
             }
         }
 
-        fn store(&self, callee: NodeId, key: NodeId, rec: Record) {
+        fn store(&self, callee: NodeId, key: NodeId, rec: Record) -> bool {
             let mut nodes = self.nodes.borrow_mut();
             if let Some(n) = nodes.get_mut(&callee) {
                 if n.alive {
                     n.store.put(key, rec);
+                    return true;
                 }
             }
+            false
         }
 
         fn ping(&self, callee: NodeId) -> bool {

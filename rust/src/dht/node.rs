@@ -1,0 +1,826 @@
+//! Networked Kademlia node: the [`Rpc`] trait over real sockets.
+//!
+//! This closes the ROADMAP item "a networked DHT transport (replacing
+//! the filesystem seam with real Kademlia RPC over TCP)". A [`DhtNode`]
+//! answers `PING` / `FIND_NODE` / `FIND_VALUE` / `STORE` on its own
+//! framed-TCP listener (wire v4 tags, `net/codec.rs`), and [`TcpRpc`]
+//! is the client half: it implements [`Rpc`], so
+//! [`crate::dht::iterative_find_node`] /
+//! [`crate::dht::iterative_find_value`] / [`crate::dht::iterative_store`]
+//! run *unchanged* over sockets — the same lookup logic the in-memory
+//! test net and the deterministic simulator ([`crate::sim::dht`])
+//! exercise.
+//!
+//! Design notes:
+//!
+//! - **Address book.** The abstract [`Rpc`] speaks node ids; TCP needs
+//!   addresses. Every request carries the caller's [`DhtContact`]
+//!   (id + dialable address) and every `FIND_NODE` reply carries the
+//!   contacts of the returned peers, so both sides learn addresses as a
+//!   side effect of ordinary traffic — exactly how Kademlia's routing
+//!   state is meant to be populated. Undialable callers (pure clients)
+//!   send an empty address, which is never inserted anywhere.
+//! - **Routing-table maintenance.** Inbound contact refreshes the
+//!   caller's bucket; a full bucket probes its least-recently-seen
+//!   entry with a live `DhtPing` and keeps it if it answers — old nodes
+//!   are more reliable (Maymounkov & Mazieres §2.2, the paper's §3.2
+//!   liveness assumption). Probes run on capped background threads,
+//!   never in the request path: a synchronous probe would delay the
+//!   reply by the probe's own timeout, and probe chains (the probed
+//!   peer probing in turn) would compound it.
+//! - **Clocks.** Records travel with *remaining* TTL and every node
+//!   re-stamps `stored_at` against its own clock, so nodes only have to
+//!   agree on durations, never on an epoch. A maintenance thread sweeps
+//!   expired records ([`crate::dht::Storage::sweep`]); liveness comes
+//!   from publishers republishing (the serve-loop announcer).
+//! - **Per-call dialing.** RPCs dial fresh connections with a deadline
+//!   ([`FramedConn::connect_timeout`]). Under churn that trades a little
+//!   latency for a lot of robustness: a dead peer costs one timeout and
+//!   there is no pooled-connection state to invalidate.
+
+use crate::dht::id::NodeId;
+use crate::dht::storage::{Record, Storage};
+use crate::dht::{iterative_find_node, RoutingTable, Rpc, K};
+use crate::error::{Error, Result};
+use crate::net::{DhtContact, DhtWireRecord, FramedConn, Message};
+use std::collections::HashMap;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Milliseconds since the Unix epoch — the clock every node stamps its
+/// own records with (never compared across machines; see module docs).
+pub fn now_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Tunables for a [`DhtNode`] / [`TcpRpc`].
+#[derive(Debug, Clone)]
+pub struct DhtConfig {
+    /// Addresses of existing swarm members to join through.
+    pub bootstrap: Vec<String>,
+    /// The address peers should *dial us back* at. Defaults to the
+    /// resolved bind address — correct for explicit-interface binds,
+    /// wrong for wildcard binds (`0.0.0.0:PORT` is not dialable from
+    /// another host): multi-host deployments binding a wildcard must
+    /// set this to their externally reachable `host:port`
+    /// (`--dht-advertise` on the CLI).
+    pub advertise: Option<String>,
+    /// Dial + read/write deadline per RPC.
+    pub rpc_timeout: Duration,
+    /// How often the maintenance thread sweeps expired records.
+    pub sweep_every: Duration,
+}
+
+impl Default for DhtConfig {
+    fn default() -> Self {
+        DhtConfig {
+            bootstrap: Vec::new(),
+            advertise: None,
+            rpc_timeout: Duration::from_secs(2),
+            sweep_every: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Read deadline on accepted connections: a peer silent this long is
+/// hung up on, bounding the threads/fds idle clients can pin. RPC
+/// clients dial per call, so well-behaved peers never sit idle anywhere
+/// near this.
+const IDLE_CONN_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Longest lifetime a peer-supplied record is granted (24 h). Clamped at
+/// every ingress point: honest announcements live ~30 s, so only hostile
+/// TTLs are affected — without the clamp a `ttl_ms` near `u64::MAX`
+/// would overflow the `stored_at + ttl` expiry arithmetic and, because
+/// [`Record::expired`] saturates, poison the key with a record the sweep
+/// can never reclaim.
+pub const MAX_TTL_MS: u64 = 24 * 3600 * 1000;
+
+/// Most id→address entries a [`TcpRpc`] book retains. Honest swarms sit
+/// far below this (dead entries are pruned on failed pings); the cap
+/// bounds what a flood of fabricated contacts can make us remember.
+const MAX_BOOK: usize = 4096;
+
+/// Most records one node stores across all keys. With the 64 KiB codec
+/// payload cap this bounds hostile `STORE` floods to ~1 GiB worst-case
+/// (honest announcements are <1 KiB, so honest swarms use a few MB).
+/// At the cap, expired records are swept first; if still full, only
+/// republishes (replacing an existing publisher's record under the key)
+/// are accepted — a full store never blocks a live server's refresh.
+const MAX_STORE_RECORDS: usize = 16 * 1024;
+
+/// Most live records one *key* holds (one per publisher). Honest keys
+/// carry one record per replica server; without this cap an attacker
+/// could park thousands of forged-publisher records under a single key
+/// and every `FIND_VALUE` for it would clone them all (Storage::get
+/// deep-copies) just to truncate to the codec's reply cap. Matches that
+/// reply cap, so an at-cap key still serves a full reply.
+const MAX_KEY_RECORDS: usize = crate::net::MAX_DHT_RECORDS;
+
+/// Most concurrent handler threads (one per open connection). Past the
+/// cap, fresh connections are dropped at accept — honest RPC clients
+/// dial per call and retry, so a flood degrades service instead of
+/// exhausting the process's threads/memory.
+const MAX_ACTIVE_CONNS: usize = 256;
+
+/// Most concurrent background LRS probes. At the cap a full bucket
+/// simply keeps its old entry (Kademlia's preference anyway) instead of
+/// queueing another probe.
+const MAX_ACTIVE_PROBES: usize = 16;
+
+/// Address-book entries the maintenance thread ping-verifies per sweep
+/// cycle. A full [`MAX_BOOK`] book is revisited in
+/// `MAX_BOOK / BOOK_VERIFY_BATCH` cycles (~43 min at the 5 s default),
+/// so even a book wedged full by a contact flood drains back to honest
+/// entries without any foreground cost.
+const BOOK_VERIFY_BATCH: usize = 8;
+
+/// Shared id→address map (learned from traffic; see module docs).
+type AddressBook = Arc<Mutex<HashMap<NodeId, String>>>;
+
+/// [`Rpc`] over framed TCP. Cheap to clone (shares the address book).
+#[derive(Clone)]
+pub struct TcpRpc {
+    /// Who we claim to be on the wire; an empty `addr` marks an
+    /// undialable client and is never inserted by callees.
+    me: DhtContact,
+    book: AddressBook,
+    timeout: Duration,
+}
+
+impl TcpRpc {
+    pub fn new(me: DhtContact, timeout: Duration) -> Self {
+        TcpRpc { me, book: Arc::new(Mutex::new(HashMap::new())), timeout }
+    }
+
+    /// The local identity this RPC stamps on outgoing requests.
+    pub fn me(&self) -> &DhtContact {
+        &self.me
+    }
+
+    /// Record a peer's dialable address. Bounded (at [`MAX_BOOK`]
+    /// distinct peers, only existing entries update) and
+    /// **first-claim-wins**: an unauthenticated claim never remaps an
+    /// id that already has a *different* address — otherwise one forged
+    /// `DhtPing { from: (victim_id, attacker_addr) }` would poison the
+    /// victim's entry and get it pruned on the next failed ping. A peer
+    /// that legitimately moved re-enters through that same pruning: its
+    /// old address fails a ping, the entry drops, and the next claim
+    /// lands. Addresses longer than the codec cap are refused — serving
+    /// them inside a `DhtNodes` reply would make the whole frame
+    /// undecodable at the receiver. [`TcpRpc::ping_addr`] bypasses the
+    /// first-claim guard because it *verified* the id at that address.
+    pub fn learn(&self, contact: &DhtContact) {
+        if contact.addr.is_empty()
+            || contact.addr.len() > crate::net::MAX_DHT_ADDR
+            || contact.id == self.me.id
+        {
+            return;
+        }
+        let mut book = self.book.lock().unwrap();
+        if book.contains_key(&contact.id) {
+            return; // first claim wins (see doc comment)
+        }
+        if book.len() < MAX_BOOK {
+            book.insert(contact.id, contact.addr.clone());
+        }
+    }
+
+    /// [`TcpRpc::learn`] for a *verified* binding (the peer answered a
+    /// ping at this address as this id): always overwrites.
+    fn learn_verified(&self, contact: &DhtContact) {
+        if contact.addr.is_empty()
+            || contact.addr.len() > crate::net::MAX_DHT_ADDR
+            || contact.id == self.me.id
+        {
+            return;
+        }
+        let mut book = self.book.lock().unwrap();
+        if book.len() >= MAX_BOOK && !book.contains_key(&contact.id) {
+            return;
+        }
+        book.insert(contact.id, contact.addr.clone());
+    }
+
+    /// Known address of a peer, if any.
+    pub fn addr_of(&self, id: &NodeId) -> Option<String> {
+        self.book.lock().unwrap().get(id).cloned()
+    }
+
+    /// Snapshot of every known (id, addr) pair.
+    pub fn known(&self) -> Vec<(NodeId, String)> {
+        let mut v: Vec<(NodeId, String)> =
+            self.book.lock().unwrap().iter().map(|(k, a)| (*k, a.clone())).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    fn call_addr(&self, addr: &str, msg: &Message) -> Result<Message> {
+        let mut conn = FramedConn::connect_timeout(addr, self.timeout)?;
+        match conn.call(msg) {
+            Err(Error::Io(_)) => {
+                // the dial succeeded but the exchange died — the peer's
+                // listener shed us at its connection cap, or it was
+                // mid-restart. One redial before the caller declares the
+                // peer dead (all DHT RPCs are idempotent); genuinely
+                // dead peers fail the *dial* and still cost one timeout.
+                let mut conn = FramedConn::connect_timeout(addr, self.timeout)?;
+                conn.call(msg)
+            }
+            r => r,
+        }
+    }
+
+    /// Ping an address directly (bootstrap: the peer's id is not yet
+    /// known). Learns the id→addr mapping on success. Addresses over
+    /// the codec cap are rejected up front — they could never be
+    /// re-served to other peers (see [`TcpRpc::learn`]).
+    pub fn ping_addr(&self, addr: &str) -> Option<NodeId> {
+        if addr.len() > crate::net::MAX_DHT_ADDR {
+            return None;
+        }
+        match self.call_addr(addr, &Message::DhtPing { from: self.me.clone() }) {
+            Ok(Message::DhtPong { id }) => {
+                self.learn_verified(&DhtContact { id, addr: addr.to_string() });
+                Some(id)
+            }
+            _ => None,
+        }
+    }
+}
+
+impl Rpc for TcpRpc {
+    fn find_node(&self, callee: NodeId, target: NodeId) -> Vec<NodeId> {
+        let Some(addr) = self.addr_of(&callee) else {
+            return vec![];
+        };
+        match self.call_addr(&addr, &Message::DhtFindNode { from: self.me.clone(), target }) {
+            Ok(Message::DhtNodes { nodes }) => nodes
+                .into_iter()
+                .map(|c| {
+                    self.learn(&c);
+                    c.id
+                })
+                .collect(),
+            _ => vec![],
+        }
+    }
+
+    fn find_value(&self, callee: NodeId, key: NodeId) -> Option<Vec<Record>> {
+        let addr = self.addr_of(&callee)?;
+        match self.call_addr(&addr, &Message::DhtFindValue { from: self.me.clone(), key }) {
+            Ok(Message::DhtValues { found }) if !found.is_empty() => {
+                let now = now_ms();
+                Some(
+                    found
+                        .into_iter()
+                        .map(|r| Record::new(r.publisher, r.payload, now, r.ttl_ms.min(MAX_TTL_MS)))
+                        .collect(),
+                )
+            }
+            _ => None,
+        }
+    }
+
+    fn store(&self, callee: NodeId, key: NodeId, rec: Record) -> bool {
+        let Some(addr) = self.addr_of(&callee) else {
+            return false;
+        };
+        // ship the *remaining* lifetime; the callee re-stamps
+        let ttl_ms = rec.stored_at_ms.saturating_add(rec.ttl_ms).saturating_sub(now_ms());
+        if ttl_ms == 0 {
+            return false;
+        }
+        let msg = Message::DhtStore {
+            from: self.me.clone(),
+            key,
+            rec: DhtWireRecord { publisher: rec.publisher, payload: rec.payload, ttl_ms },
+        };
+        // only an explicit ack counts: a refusal ("busy: dht store
+        // full") or a dead dial must not be reported as a replica
+        matches!(self.call_addr(&addr, &msg), Ok(Message::DhtStored))
+    }
+
+    fn ping(&self, callee: NodeId) -> bool {
+        let Some(addr) = self.addr_of(&callee) else {
+            return false;
+        };
+        match self.call_addr(&addr, &Message::DhtPing { from: self.me.clone() }) {
+            Ok(Message::DhtPong { id }) if id == callee => true,
+            _ => {
+                // unreachable, undecodable, or answering as someone else
+                // (port reuse after a restart): drop the mapping — this
+                // is also what keeps the book from accumulating dead
+                // entries forever; live peers are re-learned from the
+                // next reply that names them. Never prune the self
+                // entry: nothing would ever re-insert it (learn() skips
+                // self), and losing it would silently stop a node from
+                // storing/serving its own records after one transient
+                // self-dial failure (e.g. a connection-flooded accept).
+                if callee != self.me.id {
+                    self.book.lock().unwrap().remove(&callee);
+                }
+                false
+            }
+        }
+    }
+}
+
+struct NodeState {
+    me: DhtContact,
+    /// The locally bound listener address (`me.addr` may be an advertise
+    /// override that is not reachable from this host, e.g. behind NAT
+    /// without hairpinning — shutdown's wake-up poke must use this one).
+    bind_addr: String,
+    table: Mutex<RoutingTable>,
+    store: Mutex<Storage>,
+    rpc: TcpRpc,
+    cfg: DhtConfig,
+    stop: AtomicBool,
+    /// Live handler threads (accept drops connections at the cap).
+    active_conns: std::sync::atomic::AtomicUsize,
+    /// Live background LRS probes (see [`MAX_ACTIVE_PROBES`]).
+    active_probes: std::sync::atomic::AtomicUsize,
+}
+
+/// A running networked DHT node (listener + maintenance threads). Clone
+/// freely — all clones share the same state; [`DhtNode::shutdown`] stops
+/// the threads.
+#[derive(Clone)]
+pub struct DhtNode {
+    state: Arc<NodeState>,
+}
+
+impl DhtNode {
+    /// Bind `listen` ("127.0.0.1:0" for an ephemeral port), start the
+    /// accept loop and the sweep thread, and return the handle. Call
+    /// [`DhtNode::bootstrap`] afterwards to join an existing swarm.
+    pub fn spawn(id: NodeId, listen: &str, cfg: DhtConfig) -> Result<DhtNode> {
+        if let Some(a) = &cfg.advertise {
+            // an oversized contact would make every outgoing frame
+            // undecodable at the peer with no diagnostic — reject here
+            if a.is_empty() || a.len() > crate::net::MAX_DHT_ADDR {
+                return Err(Error::Protocol(format!(
+                    "advertise address must be 1..={} bytes, got {}",
+                    crate::net::MAX_DHT_ADDR,
+                    a.len()
+                )));
+            }
+        }
+        let listener = TcpListener::bind(listen)?;
+        let bind_addr = listener.local_addr()?.to_string();
+        let addr = match &cfg.advertise {
+            Some(a) => a.clone(),
+            None => bind_addr.clone(),
+        };
+        let me = DhtContact { id, addr };
+        let rpc = TcpRpc::new(me.clone(), cfg.rpc_timeout);
+        // the node can dial itself: a lone first server then stores its
+        // own announcements locally through the ordinary RPC path, so a
+        // swarm of one is already resolvable (learn() skips self — this
+        // is the one deliberate self-entry). It maps to the *bind*
+        // address, not the advertised one: an advertise address may not
+        // route back to this host (NAT without hairpinning), and this
+        // entry exists precisely so local dials always work.
+        rpc.book.lock().unwrap().insert(me.id, bind_addr.clone());
+        let state = Arc::new(NodeState {
+            me: me.clone(),
+            bind_addr,
+            table: Mutex::new(RoutingTable::new(id)),
+            store: Mutex::new(Storage::new()),
+            rpc,
+            cfg,
+            stop: AtomicBool::new(false),
+            active_conns: std::sync::atomic::AtomicUsize::new(0),
+            active_probes: std::sync::atomic::AtomicUsize::new(0),
+        });
+        let accept_state = state.clone();
+        std::thread::Builder::new()
+            .name(format!("dht-{}", id.short()))
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if accept_state.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    // bound concurrent handlers: past the cap the stream
+                    // drops on the floor and honest clients redial
+                    if accept_state.active_conns.load(Ordering::SeqCst) >= MAX_ACTIVE_CONNS {
+                        continue;
+                    }
+                    // reap idle/hostile connections: without a read
+                    // deadline a client that connects and goes silent
+                    // would pin this handler thread (and its fd) forever
+                    let _ = stream.set_read_timeout(Some(IDLE_CONN_TIMEOUT));
+                    accept_state.active_conns.fetch_add(1, Ordering::SeqCst);
+                    let st = accept_state.clone();
+                    std::thread::spawn(move || {
+                        if let Ok(mut framed) = FramedConn::from_stream(stream) {
+                            while !st.stop.load(Ordering::SeqCst) {
+                                let msg = match framed.recv() {
+                                    Ok(m) => m,
+                                    Err(_) => break,
+                                };
+                                let reply = DhtNode::handle(&st, &msg);
+                                if framed.send(&reply).is_err() {
+                                    break;
+                                }
+                            }
+                        }
+                        st.active_conns.fetch_sub(1, Ordering::SeqCst);
+                    });
+                }
+            })
+            .map_err(|e| Error::Other(format!("spawn: {e}")))?;
+        let sweep_state = state.clone();
+        std::thread::Builder::new()
+            .name(format!("dht-sweep-{}", id.short()))
+            .spawn(move || {
+                let mut cursor = 0usize;
+                while !sweep_state.stop.load(Ordering::SeqCst) {
+                    std::thread::sleep(sweep_state.cfg.sweep_every);
+                    sweep_state.store.lock().unwrap().sweep(now_ms());
+                    // verify a rotating slice of the address book: entries
+                    // the node never dials (fabricated contacts from a
+                    // flood, long-departed peers) would otherwise stay
+                    // forever — ping failures prune them, reopening the
+                    // capped book for honest joiners
+                    let known = sweep_state.rpc.known();
+                    if !known.is_empty() {
+                        for i in 0..BOOK_VERIFY_BATCH.min(known.len()) {
+                            let (id, _) = &known[(cursor + i) % known.len()];
+                            if *id != sweep_state.me.id {
+                                sweep_state.rpc.ping(*id); // failure prunes
+                            }
+                        }
+                        cursor = (cursor + BOOK_VERIFY_BATCH) % known.len();
+                    }
+                }
+            })
+            .map_err(|e| Error::Other(format!("spawn: {e}")))?;
+        Ok(DhtNode { state })
+    }
+
+    pub fn id(&self) -> NodeId {
+        self.state.me.id
+    }
+
+    /// The dialable address peers are told to reach us at: the
+    /// `advertise` override when set, else the resolved bind address
+    /// (ephemeral port included). See [`DhtNode::bind_addr`] for the
+    /// local listener.
+    pub fn addr(&self) -> String {
+        self.state.me.addr.clone()
+    }
+
+    /// The locally bound listener address (always reachable from this
+    /// host, unlike a NAT'd advertise address).
+    pub fn bind_addr(&self) -> String {
+        self.state.bind_addr.clone()
+    }
+
+    /// A client RPC bound to this node's identity and address book.
+    pub fn rpc(&self) -> TcpRpc {
+        self.state.rpc.clone()
+    }
+
+    /// Seed ids for iterative lookups: the closest live peers we know,
+    /// plus this node itself (it is dialable, and a routing table never
+    /// holds its owner — without the self-seed a lone node could store
+    /// records it can never look up, and a two-node swarm would skip
+    /// the one replica it holds locally).
+    pub fn seeds(&self) -> Vec<NodeId> {
+        let mut seeds = self.state.table.lock().unwrap().closest(self.state.me.id, K);
+        seeds.push(self.state.me.id);
+        seeds
+    }
+
+    /// Peers currently in the routing table.
+    pub fn table_len(&self) -> usize {
+        self.state.table.lock().unwrap().len()
+    }
+
+    /// Live records held locally (post-sweep truth for tests).
+    pub fn store_len(&self) -> usize {
+        let mut store = self.state.store.lock().unwrap();
+        store.sweep(now_ms());
+        store.len()
+    }
+
+    /// Drop expired records now; returns how many were removed.
+    pub fn sweep(&self) -> usize {
+        self.state.store.lock().unwrap().sweep(now_ms())
+    }
+
+    /// Join the swarm: contact every bootstrap address, then run an
+    /// iterative self-lookup (the canonical Kademlia join — it walks the
+    /// swarm toward our own id, populating buckets on both sides) and
+    /// fold everything learned into the routing table. Returns how many
+    /// peers ended up in the table; 0 with a non-empty bootstrap list
+    /// means every seed was unreachable.
+    pub fn bootstrap(&self) -> usize {
+        let mut seeds = Vec::new();
+        for addr in &self.state.cfg.bootstrap {
+            if let Some(id) = self.state.rpc.ping_addr(addr) {
+                seeds.push(id);
+            }
+        }
+        if !seeds.is_empty() {
+            iterative_find_node(&self.state.rpc, &seeds, self.state.me.id);
+        }
+        // the address book now holds everything the lookup *heard of* —
+        // including peers only named in FIND_NODE replies and never
+        // reached. Probe each candidate before seeding the table: dead
+        // entries would otherwise cost a full dial timeout on every
+        // later lookup, and the returned count would overstate the swarm.
+        // Cheap in practice: peers the lookup queried and found dead were
+        // already pruned from the book by their failed ping, so what's
+        // left is answerers (fast round trip) + unqueried hearsay.
+        let known = self.state.rpc.known();
+        let live: Vec<NodeId> = known
+            .into_iter()
+            .filter(|(id, _)| *id != self.state.me.id && self.state.rpc.ping(*id))
+            .map(|(id, _)| id)
+            .collect();
+        let mut table = self.state.table.lock().unwrap();
+        for id in live {
+            table.insert(id, |_| true);
+        }
+        table.len()
+    }
+
+    /// Fold an inbound caller into the routing table + address book.
+    /// Full buckets probe their least-recently-seen entry with a live
+    /// ping before evicting (Kademlia's LRS rule). The probe dials, so
+    /// it runs in a background thread, never in the request path: a
+    /// synchronous probe would delay our reply by the probe's timeout,
+    /// and since the probed peer may itself be probing (chains of
+    /// full-bucket observes under churn), no fixed fraction of the
+    /// deadline makes that safe — live callees would read as dead.
+    /// Probes are capped; past the cap the old entry simply stays
+    /// (Kademlia prefers old nodes anyway).
+    fn observe(state: &Arc<NodeState>, from: &DhtContact) {
+        if from.addr.is_empty() || from.id == state.me.id {
+            return;
+        }
+        state.rpc.learn(from);
+        let lrs = {
+            let mut table = state.table.lock().unwrap();
+            match table.lrs(&from.id) {
+                None => {
+                    // bucket has room (or already holds the peer):
+                    // the probe closure is never consulted
+                    table.insert(from.id, |_| true);
+                    return;
+                }
+                Some(oldest) => oldest,
+            }
+        };
+        if state.active_probes.fetch_add(1, Ordering::SeqCst) >= MAX_ACTIVE_PROBES {
+            state.active_probes.fetch_sub(1, Ordering::SeqCst);
+            return; // probe budget spent: keep the old entry
+        }
+        let st = state.clone();
+        let newcomer = from.id;
+        std::thread::spawn(move || {
+            let alive = st.rpc.ping(lrs);
+            {
+                let mut table = st.table.lock().unwrap();
+                if alive {
+                    // old nodes are more reliable: refresh, drop the newcomer
+                    table.insert(lrs, |_| true);
+                } else {
+                    table.remove(&lrs);
+                    table.insert(newcomer, |_| true);
+                }
+            }
+            st.active_probes.fetch_sub(1, Ordering::SeqCst);
+        });
+    }
+
+    /// Serve one DHT request (the accept loop calls this per frame).
+    fn handle(state: &Arc<NodeState>, msg: &Message) -> Message {
+        match msg {
+            Message::DhtPing { from } => {
+                Self::observe(state, from);
+                Message::DhtPong { id: state.me.id }
+            }
+            Message::DhtFindNode { from, target } => {
+                Self::observe(state, from);
+                let closest = state.table.lock().unwrap().closest(*target, K);
+                let nodes = closest
+                    .into_iter()
+                    .filter(|id| id != &from.id) // the caller knows itself
+                    .filter_map(|id| {
+                        state.rpc.addr_of(&id).map(|addr| DhtContact { id, addr })
+                    })
+                    .collect();
+                Message::DhtNodes { nodes }
+            }
+            Message::DhtFindValue { from, key } => {
+                Self::observe(state, from);
+                let now = now_ms();
+                let mut recs = state.store.lock().unwrap().get(key, now);
+                // the codec rejects oversized replies (MAX_DHT_RECORDS):
+                // under extreme fan-in keep the freshest records rather
+                // than produce a frame the caller cannot decode
+                if recs.len() > crate::net::MAX_DHT_RECORDS {
+                    recs.sort_by_key(|r| std::cmp::Reverse(r.stored_at_ms.saturating_add(r.ttl_ms)));
+                    recs.truncate(crate::net::MAX_DHT_RECORDS);
+                }
+                let found = recs
+                    .into_iter()
+                    .map(|r| DhtWireRecord {
+                        publisher: r.publisher,
+                        payload: r.payload,
+                        ttl_ms: r.stored_at_ms.saturating_add(r.ttl_ms).saturating_sub(now),
+                    })
+                    .collect();
+                Message::DhtValues { found }
+            }
+            Message::DhtStore { from, key, rec } => {
+                Self::observe(state, from);
+                let now = now_ms();
+                let mut store = state.store.lock().unwrap();
+                if store.len() >= MAX_STORE_RECORDS {
+                    store.sweep(now);
+                }
+                // republishes (replacing this publisher's record) always
+                // get through; fresh publishers are bounded globally and
+                // per key (both checks are clone-free)
+                if !store.has_publisher(key, &rec.publisher, now)
+                    && (store.len() >= MAX_STORE_RECORDS
+                        || store.live_len(key, now) >= MAX_KEY_RECORDS)
+                {
+                    return Message::Error { message: "busy: dht store full".into() };
+                }
+                store.put(
+                    *key,
+                    Record::new(rec.publisher, rec.payload.clone(), now, rec.ttl_ms.min(MAX_TTL_MS)),
+                );
+                Message::DhtStored
+            }
+            other => Message::Error {
+                message: format!("dht node: unexpected {}", other.kind()),
+            },
+        }
+    }
+
+    /// Stop the accept + sweep threads. In-flight handlers finish their
+    /// current frame.
+    pub fn shutdown(&self) {
+        self.state.stop.store(true, Ordering::SeqCst);
+        // poke the listener so accept() returns — via the *bind* address
+        // (the advertise address may not route back to this host)
+        let _ = std::net::TcpStream::connect(&self.state.bind_addr);
+    }
+}
+
+/// Build a client-side [`TcpRpc`] (undialable identity) from bootstrap
+/// addresses, returning the RPC and the seed ids it learned — the two
+/// inputs every iterative lookup needs. This is what `petals generate
+/// --bootstrap` uses to resolve the block directory without running a
+/// DHT listener of its own.
+pub fn client_rpc(bootstrap: &[String], timeout: Duration) -> Result<(TcpRpc, Vec<NodeId>)> {
+    let ephemeral = NodeId::from_name(&format!(
+        "dht-client/{}/{}",
+        std::process::id(),
+        now_ms()
+    ));
+    let rpc = TcpRpc::new(DhtContact { id: ephemeral, addr: String::new() }, timeout);
+    let mut seeds = Vec::new();
+    for addr in bootstrap {
+        if let Some(id) = rpc.ping_addr(addr) {
+            seeds.push(id);
+        }
+    }
+    if seeds.is_empty() {
+        return Err(Error::NoRoute(format!(
+            "no bootstrap peer reachable out of {}",
+            bootstrap.len()
+        )));
+    }
+    Ok((rpc, seeds))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dht::{iterative_find_value, iterative_store};
+
+    fn quick_cfg(bootstrap: Vec<String>) -> DhtConfig {
+        DhtConfig {
+            bootstrap,
+            rpc_timeout: Duration::from_millis(500),
+            sweep_every: Duration::from_millis(200),
+            ..DhtConfig::default()
+        }
+    }
+
+    #[test]
+    fn ping_findnode_learn_addresses() {
+        let a = DhtNode::spawn(NodeId::from_name("na"), "127.0.0.1:0", quick_cfg(vec![]))
+            .unwrap();
+        let b = DhtNode::spawn(
+            NodeId::from_name("nb"),
+            "127.0.0.1:0",
+            quick_cfg(vec![a.addr()]),
+        )
+        .unwrap();
+        assert_eq!(b.bootstrap(), 1, "b learns a");
+        // a observed b's inbound ping: both tables are populated
+        assert_eq!(a.table_len(), 1);
+        let rpc = b.rpc();
+        assert!(rpc.ping(a.id()));
+        assert_eq!(rpc.addr_of(&a.id()), Some(a.addr()));
+        a.shutdown();
+        b.shutdown();
+    }
+
+    #[test]
+    fn store_and_find_value_over_sockets() {
+        let seed =
+            DhtNode::spawn(NodeId::from_name("seed"), "127.0.0.1:0", quick_cfg(vec![])).unwrap();
+        let n1 = DhtNode::spawn(
+            NodeId::from_name("n1"),
+            "127.0.0.1:0",
+            quick_cfg(vec![seed.addr()]),
+        )
+        .unwrap();
+        n1.bootstrap();
+        let key = NodeId::from_name("k");
+        let rec = Record::new(n1.id(), b"payload".to_vec(), now_ms(), 60_000);
+        let stored = iterative_store(&n1.rpc(), &n1.seeds(), key, rec);
+        assert!(stored >= 1);
+        let found = iterative_find_value(&seed.rpc(), &seed.seeds(), key);
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].payload, b"payload");
+        seed.shutdown();
+        n1.shutdown();
+    }
+
+    #[test]
+    fn dead_peer_pings_false_and_expires() {
+        let a = DhtNode::spawn(NodeId::from_name("pa"), "127.0.0.1:0", quick_cfg(vec![]))
+            .unwrap();
+        let b = DhtNode::spawn(
+            NodeId::from_name("pb"),
+            "127.0.0.1:0",
+            quick_cfg(vec![a.addr()]),
+        )
+        .unwrap();
+        b.bootstrap();
+        let key = NodeId::from_name("short-lived");
+        a.rpc().learn(&DhtContact { id: b.id(), addr: b.addr() });
+        // store a short-TTL record directly at a, then let it expire
+        b.rpc().store(a.id(), key, Record::new(b.id(), b"x".to_vec(), now_ms(), 150));
+        assert_eq!(a.store_len(), 1);
+        std::thread::sleep(Duration::from_millis(200));
+        assert_eq!(a.store_len(), 0, "expired record must sweep out");
+        // killed peer answers no pings
+        b.shutdown();
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!a.rpc().ping(b.id()));
+        a.shutdown();
+    }
+
+    /// A hostile (or buggy) peer shipping `ttl_ms` near `u64::MAX` must
+    /// not poison a key: receivers clamp to [`MAX_TTL_MS`], expiry
+    /// arithmetic saturates, and lookups report a bounded lifetime.
+    #[test]
+    fn hostile_ttl_clamped_at_ingress() {
+        let a = DhtNode::spawn(NodeId::from_name("ta"), "127.0.0.1:0", quick_cfg(vec![]))
+            .unwrap();
+        let b = DhtNode::spawn(
+            NodeId::from_name("tb"),
+            "127.0.0.1:0",
+            quick_cfg(vec![a.addr()]),
+        )
+        .unwrap();
+        b.bootstrap();
+        let key = NodeId::from_name("forever");
+        b.rpc()
+            .store(a.id(), key, Record::new(b.id(), b"x".to_vec(), now_ms(), u64::MAX));
+        assert_eq!(a.store_len(), 1, "clamped record is stored, not poisoned");
+        let found = iterative_find_value(&b.rpc(), &[a.id()], key);
+        assert_eq!(found.len(), 1);
+        assert!(found[0].ttl_ms <= MAX_TTL_MS, "ttl {} not clamped", found[0].ttl_ms);
+        a.shutdown();
+        b.shutdown();
+    }
+
+    #[test]
+    fn client_rpc_requires_a_live_seed() {
+        // nothing listens on this port (bound then dropped)
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        assert!(client_rpc(&[dead], Duration::from_millis(300)).is_err());
+    }
+}

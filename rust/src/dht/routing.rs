@@ -59,6 +59,22 @@ impl RoutingTable {
         }
     }
 
+    /// The least-recently-seen entry of the bucket `peer` maps to, but
+    /// only when that bucket is full (i.e. inserting `peer` would demand
+    /// an eviction decision). Callers that must not block inside the
+    /// table lock (the networked node: probing means dialing) read the
+    /// LRS candidate with this, probe it unlocked, then re-enter with
+    /// the verdict.
+    pub fn lrs(&self, peer: &NodeId) -> Option<NodeId> {
+        let idx = self.me.bucket_index(peer)?;
+        let bucket = &self.buckets[idx];
+        if bucket.peers.len() >= K && !bucket.peers.contains(peer) {
+            bucket.peers.first().copied()
+        } else {
+            None
+        }
+    }
+
     pub fn remove(&mut self, peer: &NodeId) {
         if let Some(idx) = self.me.bucket_index(peer) {
             self.buckets[idx].peers.retain(|p| p != peer);

@@ -51,6 +51,23 @@ impl Storage {
             .unwrap_or_default()
     }
 
+    /// Live records under a key, without cloning payloads (hot-path
+    /// bound checks; [`Storage::get`] deep-copies every payload).
+    pub fn live_len(&self, key: &NodeId, now_ms: u64) -> usize {
+        self.map
+            .get(key)
+            .map(|v| v.iter().filter(|r| !r.expired(now_ms)).count())
+            .unwrap_or(0)
+    }
+
+    /// Whether `publisher` holds a live record under `key` (clone-free).
+    pub fn has_publisher(&self, key: &NodeId, publisher: &NodeId, now_ms: u64) -> bool {
+        self.map
+            .get(key)
+            .map(|v| v.iter().any(|r| r.publisher == *publisher && !r.expired(now_ms)))
+            .unwrap_or(false)
+    }
+
     /// Drop expired records everywhere; returns how many were removed.
     pub fn sweep(&mut self, now_ms: u64) -> usize {
         let mut removed = 0;
@@ -109,6 +126,12 @@ mod tests {
         s.put(key, Record::new(id(2), b"a".to_vec(), 0, 1000));
         s.put(key, Record::new(id(3), b"b".to_vec(), 0, 1000));
         assert_eq!(s.get(&key, 10).len(), 2);
+        // the clone-free views agree with `get`
+        assert_eq!(s.live_len(&key, 10), 2);
+        assert_eq!(s.live_len(&key, 2000), 0, "expiry respected");
+        assert!(s.has_publisher(&key, &id(2), 10));
+        assert!(!s.has_publisher(&key, &id(4), 10));
+        assert!(!s.has_publisher(&key, &id(2), 2000), "expired is not live");
     }
 
     #[test]

@@ -12,8 +12,11 @@
 //! - [`dht`] — Kademlia-style distributed hash table: how servers announce
 //!   which Transformer blocks they hold (§3.2 of the paper), including
 //!   KV-pool occupancy for load-aware placement (v2 entries) and hot
-//!   prefix fingerprints for cache-aware sticky routing (v3), plus a
-//!   filesystem bootstrap directory ([`dht::fs`]) for single-host swarms.
+//!   prefix fingerprints for cache-aware sticky routing (v3). Three
+//!   transports share the iterative-lookup logic: a filesystem bootstrap
+//!   directory ([`dht::fs`]) for single-host swarms, a networked
+//!   framed-TCP node ([`dht::node`], wire v4) for multi-host swarms, and
+//!   the deterministic simulator ([`sim::dht`]) for metered experiments.
 //! - [`server`] — a Petals *server*: hosts a contiguous span of blocks,
 //!   keeps session KV caches in a paged, ref-counted pool
 //!   ([`server::kvpool`]) with admission control and copy-on-write

@@ -5,22 +5,37 @@
 //!
 //! ```text
 //! petals server   --artifacts DIR --name N --blocks A..B [--precision f16|int8]
-//!                 [--listen ADDR] [--compress]
-//!                 [--announce-dir DIR [--announce-every SECS]]
-//! petals generate --artifacts DIR (--peers n1=addr1,... | --announce-dir DIR)
+//!                 [--listen ADDR] [--advertise HOST:PORT] [--compress] [--model NAME]
+//!                 [--announce-dir DIR] [--announce-every SECS]
+//!                 [--dht-listen ADDR] [--dht-advertise HOST:PORT] [--bootstrap ADDR,...]
+//! petals generate --artifacts DIR (--peers n1=addr1,... | --announce-dir DIR
+//!                 | --bootstrap ADDR,...) [--model NAME]
 //!                 --prompt 1,2,3 [--max-new N] [--topk K]
-//! petals chat     --artifacts DIR (--peers ... | --announce-dir DIR) [--listen ADDR]
+//! petals chat     --artifacts DIR (--peers ... | --announce-dir DIR
+//!                 | --bootstrap ADDR,...) [--model NAME] [--listen ADDR]
 //! petals sim      [--preset 3xa100|12virtual|14real] [--net gbit5|mbit100-5|mbit100-100]
 //!                 [--workload inference|forward|multiclient|shared-prefix]
 //! petals info     --artifacts DIR
 //! ```
 //!
-//! `--announce-dir` replaces static peer lists on single-host (or
-//! shared-filesystem) swarms: each server periodically publishes its
-//! [`petals::dht::ServerEntry`] — liveness, span, throughput, KV-pool
-//! occupancy, hot prefix fingerprints — plus its listen address into the
-//! directory ([`petals::dht::FsDirectory`]), and clients discover
-//! whatever is live there.
+//! Discovery, in increasing deployment reach:
+//!
+//! - `--peers name=addr,...` — static list, debugging only;
+//! - `--announce-dir DIR` — single-host (or shared-filesystem) swarms:
+//!   each server periodically publishes its
+//!   [`petals::dht::ServerEntry`] — liveness, span, throughput, KV-pool
+//!   occupancy, hot prefix fingerprints — plus its listen address into
+//!   the directory ([`petals::dht::FsDirectory`]);
+//! - `--dht-listen`/`--bootstrap` — **multi-host swarms** over the
+//!   networked Kademlia DHT ([`petals::dht::DhtNode`]): each server runs
+//!   a DHT node, joins through any live peer's `--dht-listen` address,
+//!   and republishes the same addressed record under every covered
+//!   block key; `generate`/`chat --bootstrap` resolve the block
+//!   directory by iterative lookup — no shared filesystem, no static
+//!   lists. `--model` namespaces the DHT keys (default `bloom-mini`).
+//!   When binding wildcards (`0.0.0.0:PORT`), set `--advertise` /
+//!   `--dht-advertise` to the externally dialable `host:port` — those
+//!   are the addresses peers and clients are told to dial back.
 
 use petals::config::profiles::{NetworkProfile, SwarmPreset};
 use petals::coordinator::client::{LocalHead, Sampler, SwarmGenerator};
@@ -73,6 +88,20 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
 
 fn artifacts_dir(flags: &HashMap<String, String>) -> String {
     flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into())
+}
+
+/// DHT model namespace (`<model>/block/<i>` keys).
+fn model_name(flags: &HashMap<String, String>) -> String {
+    flags.get("model").cloned().unwrap_or_else(|| "bloom-mini".into())
+}
+
+/// `--bootstrap a,b,c` as a cleaned address list (shared by server join
+/// and client discovery, so the accepted format can never diverge).
+fn parse_bootstrap(flags: &HashMap<String, String>) -> Vec<String> {
+    flags
+        .get("bootstrap")
+        .map(|s| s.split(',').map(|a| a.trim().to_string()).filter(|a| !a.is_empty()).collect())
+        .unwrap_or_default()
 }
 
 fn fail(msg: &str) -> i32 {
@@ -131,24 +160,112 @@ fn cmd_server(flags: &HashMap<String, String>) -> i32 {
         Err(e) => return fail(&e.to_string()),
     };
     println!("petals server '{name}' hosting blocks {start}..{end} ({precision:?}) on {}", handle.addr);
+    let every = flags
+        .get("announce-every")
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(5)
+        .max(1);
     // periodic DHT-style announcements: liveness + pool occupancy +
     // prefix fingerprints, so clients need no static peer list
     if let Some(dir) = flags.get("announce-dir") {
-        let every = flags
-            .get("announce-every")
-            .and_then(|s| s.parse::<u64>().ok())
-            .unwrap_or(5)
-            .max(1);
         let fsdir = match petals::dht::FsDirectory::open(dir) {
             Ok(d) => d,
             Err(e) => return fail(&e.to_string()),
         };
+        if std::time::Duration::from_secs(every) >= fsdir.ttl {
+            // readers apply their own (default 30s) TTL; announcing
+            // slower than that blinks this server out of the directory
+            eprintln!(
+                "warning: --announce-every {every}s is not below the directory TTL \
+                 ({:?}) — clients will intermittently see this server as departed",
+                fsdir.ttl
+            );
+        }
         let node = handle.node.clone();
         let addr = handle.addr.clone();
         println!("announcing to {dir} every {every}s");
         std::thread::spawn(move || loop {
             if let Err(e) = fsdir.announce(&addr, &node.dht_entry()) {
                 eprintln!("announce failed: {e}");
+            }
+            std::thread::sleep(std::time::Duration::from_secs(every));
+        });
+    }
+    if flags.contains_key("bootstrap") && !flags.contains_key("dht-listen") {
+        // a server can only join the networked DHT by running a node
+        eprintln!("warning: --bootstrap given without --dht-listen — ignored.");
+        eprintln!("         add --dht-listen ADDR to join and announce into the swarm");
+    }
+    // networked Kademlia DHT: run a DhtNode next to the service socket,
+    // join through --bootstrap, and republish the addressed entry under
+    // every covered block key (the TTL republish loop — records age out
+    // ~30s after this server dies)
+    if let Some(dht_listen) = flags.get("dht-listen") {
+        let bootstrap = parse_bootstrap(flags);
+        let model = model_name(flags);
+        // wildcard binds are not dialable from other hosts: peers must
+        // be given an externally reachable address instead
+        let wildcard = |a: &str| a.starts_with("0.0.0.0:") || a.starts_with("[::]");
+        if wildcard(dht_listen) && !flags.contains_key("dht-advertise") {
+            eprintln!(
+                "warning: --dht-listen {dht_listen} binds a wildcard; peers will be told to \
+                 dial it back verbatim. Set --dht-advertise host:port for multi-host swarms."
+            );
+        }
+        let has_bootstrap = !bootstrap.is_empty();
+        let cfg = petals::dht::DhtConfig {
+            bootstrap,
+            advertise: flags.get("dht-advertise").cloned(),
+            ..Default::default()
+        };
+        let dht = match petals::dht::DhtNode::spawn(handle.node.id, dht_listen, cfg) {
+            Ok(d) => d,
+            Err(e) => return fail(&e.to_string()),
+        };
+        let peers = dht.bootstrap();
+        println!(
+            "dht node {} on {} ({peers} peer(s) after bootstrap); announcing '{model}' every {every}s",
+            dht.id().short(),
+            dht.addr()
+        );
+        let node = handle.node.clone();
+        // the *service* address published in announcements has the same
+        // wildcard constraint; --advertise overrides what clients dial
+        let addr = flags.get("advertise").cloned().unwrap_or_else(|| handle.addr.clone());
+        if wildcard(&addr) {
+            eprintln!(
+                "warning: announcing service address {addr}; set --advertise host:port \
+                 so remote clients can dial it."
+            );
+        }
+        // records must outlive the republish interval or the server
+        // blinks out of the directory between announcements: keep the
+        // default 30s TTL but stretch it to cover ~3 missed beats of a
+        // slow interval
+        let ttl_ms = 30_000u64.max(every.saturating_mul(3_000));
+        std::thread::spawn(move || loop {
+            // self-heal a failed or lost join: a bootstrap peer that was
+            // briefly down at startup must not leave this server
+            // permanently partitioned (announcing only to itself) — the
+            // fs path self-heals every beat, the DHT path must too
+            if has_bootstrap && dht.table_len() == 0 {
+                let n = dht.bootstrap();
+                if n > 0 {
+                    println!("dht re-join succeeded ({n} peer(s))");
+                }
+            }
+            let rpc = dht.rpc();
+            // seeds include the node itself: a lone first server stores
+            // its records locally and is immediately resolvable
+            let mut dir = petals::dht::BlockDirectory::new(&rpc, dht.seeds(), &model);
+            dir.announce_ttl_ms = ttl_ms;
+            match dir.announce_addressed(&addr, &node.dht_entry(), petals::dht::now_ms()) {
+                Err(e) => eprintln!("dht announce failed: {e}"),
+                Ok(0) => eprintln!(
+                    "dht announce stored 0 replicas — this server is currently \
+                     unresolvable (peers full or unreachable); retrying in {every}s"
+                ),
+                Ok(_) => {}
             }
             std::thread::sleep(std::time::Duration::from_secs(every));
         });
@@ -170,9 +287,13 @@ fn parse_peers(flags: &HashMap<String, String>) -> Option<Vec<(String, String)>>
     )
 }
 
-/// Build the TCP swarm client from `--peers` (static list) or
-/// `--announce-dir` (filesystem discovery; see module docs).
-fn connect_swarm(flags: &HashMap<String, String>) -> std::result::Result<TcpSwarm, String> {
+/// Build the TCP swarm client from `--peers` (static list),
+/// `--announce-dir` (filesystem discovery), or `--bootstrap` (networked
+/// DHT iterative lookup; see module docs).
+fn connect_swarm(
+    flags: &HashMap<String, String>,
+    home: &ModelHome,
+) -> std::result::Result<TcpSwarm, String> {
     if let Some(peers) = parse_peers(flags) {
         if !peers.is_empty() {
             return Ok(TcpSwarm::connect(&peers));
@@ -188,7 +309,22 @@ fn connect_swarm(flags: &HashMap<String, String>) -> std::result::Result<TcpSwar
         // keep the announced prefix fingerprints as sticky-routing hints
         return Ok(TcpSwarm::connect_discovered(found));
     }
-    Err("--peers name=addr[,name=addr...] or --announce-dir DIR required".into())
+    if flags.contains_key("bootstrap") {
+        let addrs = parse_bootstrap(flags);
+        let (rpc, seeds) =
+            petals::dht::client_rpc(&addrs, std::time::Duration::from_secs(2))
+                .map_err(|e| e.to_string())?;
+        let model = model_name(flags);
+        let n_blocks = home.geometry().n_layers as u32;
+        let swarm = TcpSwarm::connect_via_dht(&rpc, &seeds, &model, n_blocks)
+            .map_err(|e| e.to_string())?;
+        println!(
+            "resolved {} live server(s) for '{model}' through the dht",
+            swarm.peer_count()
+        );
+        return Ok(swarm);
+    }
+    Err("--peers name=addr[,...], --announce-dir DIR, or --bootstrap ADDR[,...] required".into())
 }
 
 fn session_cfg(home: &ModelHome, prefix_len: usize, max_new: usize) -> SessionConfig {
@@ -214,7 +350,7 @@ fn cmd_generate(flags: &HashMap<String, String>) -> i32 {
         Ok(h) => h,
         Err(e) => return fail(&e.to_string()),
     };
-    let swarm = match connect_swarm(flags) {
+    let swarm = match connect_swarm(flags, &home) {
         Ok(s) => s,
         Err(m) => return fail(&m),
     };
@@ -262,7 +398,7 @@ fn cmd_chat(flags: &HashMap<String, String>) -> i32 {
         Ok(h) => h,
         Err(e) => return fail(&e.to_string()),
     };
-    let swarm = match connect_swarm(flags) {
+    let swarm = match connect_swarm(flags, &home) {
         Ok(s) => Arc::new(s),
         Err(m) => return fail(&m),
     };

@@ -4,8 +4,80 @@
 //! [`TensorPayload`]. The frame length prefix lives one layer down
 //! ([`super::framed`]).
 
+use crate::dht::NodeId;
 use crate::model::tensor::{DType, Tensor};
 use crate::quant::{self, QuantizedTensor};
+
+/// Most peers one `DhtNodes` reply may carry (bounds allocation; the
+/// Kademlia `K` closest is far below this).
+pub const MAX_DHT_NODES: usize = 64;
+/// Most records one `DhtValues` reply may carry.
+pub const MAX_DHT_RECORDS: usize = 128;
+/// Largest DHT record payload (announcement records are < 1 KiB).
+pub const MAX_DHT_PAYLOAD: usize = 64 << 10;
+/// Longest dialable address string in a [`DhtContact`].
+pub const MAX_DHT_ADDR: usize = 256;
+
+/// A DHT peer on the wire: node id + the address it can be dialed at.
+/// Requests carry the *caller's* contact so the callee can fold the
+/// caller into its routing table (Kademlia learns peers from inbound
+/// traffic). Clients that are not dialable send an empty address, which
+/// callees must not insert.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DhtContact {
+    pub id: NodeId,
+    pub addr: String,
+}
+
+impl DhtContact {
+    fn write(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.id.0);
+        out.extend_from_slice(&(self.addr.len() as u16).to_le_bytes());
+        out.extend_from_slice(self.addr.as_bytes());
+    }
+
+    fn read(r: &mut Reader) -> Option<Self> {
+        let mut id = [0u8; 32];
+        id.copy_from_slice(r.bytes(32)?);
+        let n = r.u16()? as usize;
+        if n > MAX_DHT_ADDR {
+            return None;
+        }
+        let addr = String::from_utf8(r.bytes(n)?.to_vec()).ok()?;
+        Some(DhtContact { id: NodeId(id), addr })
+    }
+}
+
+/// A TTL record in transit. `ttl_ms` is the *remaining* lifetime at send
+/// time: each hop re-stamps `stored_at` against its own clock, so nodes
+/// never have to agree on an epoch (only on durations).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DhtWireRecord {
+    pub publisher: NodeId,
+    pub payload: Vec<u8>,
+    pub ttl_ms: u64,
+}
+
+impl DhtWireRecord {
+    fn write(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.publisher.0);
+        out.extend_from_slice(&self.ttl_ms.to_le_bytes());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.payload);
+    }
+
+    fn read(r: &mut Reader) -> Option<Self> {
+        let mut id = [0u8; 32];
+        id.copy_from_slice(r.bytes(32)?);
+        let ttl_ms = r.u64()?;
+        let n = r.u32()? as usize;
+        if n > MAX_DHT_PAYLOAD {
+            return None;
+        }
+        let payload = r.bytes(n)?.to_vec();
+        Some(DhtWireRecord { publisher: NodeId(id), payload, ttl_ms })
+    }
+}
 
 /// A tensor on the wire: raw f32 or §3.1-compressed.
 #[derive(Debug, Clone)]
@@ -85,7 +157,9 @@ impl TensorPayload {
                 for _ in 0..rank {
                     shape.push(r.u32()? as usize);
                 }
-                let n: usize = shape.iter().product::<usize>() * dtype.size();
+                let n = shape
+                    .iter()
+                    .try_fold(dtype.size(), |a, &d| a.checked_mul(d))?;
                 let data = r.bytes(n)?.to_vec();
                 Some(TensorPayload::Raw(Tensor { shape, dtype, data }))
             }
@@ -152,9 +226,58 @@ pub enum Message {
     /// server's prefix cache (0 = cold open, the prefill will run and
     /// register the prefix).
     SessionOpenedV3 { session: u64, shared_tokens: u32 },
+    /// Kademlia liveness probe (wire v4). Distinct from [`Message::Ping`]:
+    /// DHT traffic runs on a separate listener (`--dht-listen`) and the
+    /// reply names the callee so the caller can detect address reuse.
+    DhtPing { from: DhtContact },
+    /// Reply to `DhtPing`.
+    DhtPong { id: NodeId },
+    /// `FIND_NODE target` (wire v4): ask for the callee's closest peers.
+    DhtFindNode { from: DhtContact, target: NodeId },
+    /// Reply to `DhtFindNode` (and taught to the caller's address book).
+    DhtNodes { nodes: Vec<DhtContact> },
+    /// `FIND_VALUE key` (wire v4).
+    DhtFindValue { from: DhtContact, key: NodeId },
+    /// Reply to `DhtFindValue`; empty = the callee holds nothing live
+    /// under the key (the iterative lookup then widens via `FIND_NODE`).
+    DhtValues { found: Vec<DhtWireRecord> },
+    /// `STORE key -> record` (wire v4).
+    DhtStore { from: DhtContact, key: NodeId, rec: DhtWireRecord },
+    /// Reply to `DhtStore`.
+    DhtStored,
 }
 
 impl Message {
+    /// The variant name — for error replies and logs. Never interpolate
+    /// a whole `Message` with `{:?}` into an error string: tensor-
+    /// carrying variants Debug-print their payload bytes, turning one
+    /// hostile 64 MiB frame into a ~4x larger allocation per reply.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Message::Ping => "Ping",
+            Message::Pong { .. } => "Pong",
+            Message::OpenSession { .. } => "OpenSession",
+            Message::SessionOpened { .. } => "SessionOpened",
+            Message::Prefill { .. } => "Prefill",
+            Message::InferStep { .. } => "InferStep",
+            Message::HiddenResult { .. } => "HiddenResult",
+            Message::Forward { .. } => "Forward",
+            Message::Backward { .. } => "Backward",
+            Message::CloseSession { .. } => "CloseSession",
+            Message::Error { .. } => "Error",
+            Message::OpenSessionV3 { .. } => "OpenSessionV3",
+            Message::SessionOpenedV3 { .. } => "SessionOpenedV3",
+            Message::DhtPing { .. } => "DhtPing",
+            Message::DhtPong { .. } => "DhtPong",
+            Message::DhtFindNode { .. } => "DhtFindNode",
+            Message::DhtNodes { .. } => "DhtNodes",
+            Message::DhtFindValue { .. } => "DhtFindValue",
+            Message::DhtValues { .. } => "DhtValues",
+            Message::DhtStore { .. } => "DhtStore",
+            Message::DhtStored => "DhtStored",
+        }
+    }
+
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(64);
         match self {
@@ -245,6 +368,45 @@ impl Message {
                 out.extend_from_slice(&session.to_le_bytes());
                 out.extend_from_slice(&shared_tokens.to_le_bytes());
             }
+            Message::DhtPing { from } => {
+                out.push(13);
+                from.write(&mut out);
+            }
+            Message::DhtPong { id } => {
+                out.push(14);
+                out.extend_from_slice(&id.0);
+            }
+            Message::DhtFindNode { from, target } => {
+                out.push(15);
+                from.write(&mut out);
+                out.extend_from_slice(&target.0);
+            }
+            Message::DhtNodes { nodes } => {
+                out.push(16);
+                out.extend_from_slice(&(nodes.len() as u32).to_le_bytes());
+                for n in nodes {
+                    n.write(&mut out);
+                }
+            }
+            Message::DhtFindValue { from, key } => {
+                out.push(17);
+                from.write(&mut out);
+                out.extend_from_slice(&key.0);
+            }
+            Message::DhtValues { found } => {
+                out.push(18);
+                out.extend_from_slice(&(found.len() as u32).to_le_bytes());
+                for rec in found {
+                    rec.write(&mut out);
+                }
+            }
+            Message::DhtStore { from, key, rec } => {
+                out.push(19);
+                from.write(&mut out);
+                out.extend_from_slice(&key.0);
+                rec.write(&mut out);
+            }
+            Message::DhtStored => out.push(20),
         }
         out
     }
@@ -311,6 +473,54 @@ impl Message {
                 }
             }
             12 => Message::SessionOpenedV3 { session: r.u64()?, shared_tokens: r.u32()? },
+            13 => Message::DhtPing { from: DhtContact::read(&mut r)? },
+            14 => {
+                let mut id = [0u8; 32];
+                id.copy_from_slice(r.bytes(32)?);
+                Message::DhtPong { id: NodeId(id) }
+            }
+            15 => {
+                let from = DhtContact::read(&mut r)?;
+                let mut t = [0u8; 32];
+                t.copy_from_slice(r.bytes(32)?);
+                Message::DhtFindNode { from, target: NodeId(t) }
+            }
+            16 => {
+                let n = r.u32()? as usize;
+                if n > MAX_DHT_NODES {
+                    return None;
+                }
+                let mut nodes = Vec::with_capacity(n);
+                for _ in 0..n {
+                    nodes.push(DhtContact::read(&mut r)?);
+                }
+                Message::DhtNodes { nodes }
+            }
+            17 => {
+                let from = DhtContact::read(&mut r)?;
+                let mut k = [0u8; 32];
+                k.copy_from_slice(r.bytes(32)?);
+                Message::DhtFindValue { from, key: NodeId(k) }
+            }
+            18 => {
+                let n = r.u32()? as usize;
+                if n > MAX_DHT_RECORDS {
+                    return None;
+                }
+                let mut found = Vec::with_capacity(n);
+                for _ in 0..n {
+                    found.push(DhtWireRecord::read(&mut r)?);
+                }
+                Message::DhtValues { found }
+            }
+            19 => {
+                let from = DhtContact::read(&mut r)?;
+                let mut k = [0u8; 32];
+                k.copy_from_slice(r.bytes(32)?);
+                let rec = DhtWireRecord::read(&mut r)?;
+                Message::DhtStore { from, key: NodeId(k), rec }
+            }
+            20 => Message::DhtStored,
             _ => return None,
         };
         if r.pos != buf.len() {
@@ -329,6 +539,12 @@ impl<'a> Reader<'a> {
     fn u8(&mut self) -> Option<u8> {
         let v = *self.b.get(self.pos)?;
         self.pos += 1;
+        Some(v)
+    }
+
+    fn u16(&mut self) -> Option<u16> {
+        let v = u16::from_le_bytes(self.b.get(self.pos..self.pos + 2)?.try_into().ok()?);
+        self.pos += 2;
         Some(v)
     }
 
@@ -362,5 +578,142 @@ impl<'a> Reader<'a> {
 
     fn advance(&mut self, n: usize) {
         self.pos += n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! DHT-frame coverage lives here next to the codec; the cross-tag
+    //! round-trips for the inference messages are in `net/mod.rs`.
+    use super::*;
+
+    fn contact(name: &str, addr: &str) -> DhtContact {
+        DhtContact { id: NodeId::from_name(name), addr: addr.to_string() }
+    }
+
+    fn dht_messages() -> Vec<Message> {
+        vec![
+            Message::DhtPing { from: contact("a", "127.0.0.1:4100") },
+            Message::DhtPing { from: contact("client", "") }, // undialable caller
+            Message::DhtPong { id: NodeId::from_name("b") },
+            Message::DhtFindNode {
+                from: contact("a", "127.0.0.1:4100"),
+                target: NodeId::from_name("t"),
+            },
+            Message::DhtNodes { nodes: vec![] },
+            Message::DhtNodes {
+                nodes: (0..8).map(|i| contact(&format!("n{i}"), &format!("10.0.0.{i}:31337"))).collect(),
+            },
+            Message::DhtFindValue {
+                from: contact("a", "127.0.0.1:4100"),
+                key: NodeId::from_name("bloom/block/3"),
+            },
+            Message::DhtValues { found: vec![] },
+            Message::DhtValues {
+                found: vec![
+                    DhtWireRecord {
+                        publisher: NodeId::from_name("s1"),
+                        payload: vec![1, 2, 3],
+                        ttl_ms: 30_000,
+                    },
+                    DhtWireRecord {
+                        publisher: NodeId::from_name("s2"),
+                        payload: vec![],
+                        ttl_ms: 1,
+                    },
+                ],
+            },
+            Message::DhtStore {
+                from: contact("a", "127.0.0.1:4100"),
+                key: NodeId::from_name("bloom/block/0"),
+                rec: DhtWireRecord {
+                    publisher: NodeId::from_name("s1"),
+                    payload: b"announcement".to_vec(),
+                    ttl_ms: 30_000,
+                },
+            },
+            Message::DhtStored,
+        ]
+    }
+
+    #[test]
+    fn dht_messages_roundtrip() {
+        for m in dht_messages() {
+            let bytes = m.encode();
+            let back = Message::decode(&bytes).expect("decode");
+            assert_eq!(bytes, back.encode(), "{m:?}");
+        }
+    }
+
+    /// Fuzz-ish robustness: every truncation of every DHT frame must
+    /// decode as `None` (a legacy-compatible protocol error — the same
+    /// signal an unknown tag produces), never panic, and never alias to
+    /// a different valid message.
+    #[test]
+    fn truncated_dht_frames_rejected() {
+        for m in dht_messages() {
+            let bytes = m.encode();
+            for cut in 0..bytes.len() {
+                assert!(
+                    Message::decode(&bytes[..cut]).is_none(),
+                    "truncated {m:?} at {cut} decoded"
+                );
+            }
+        }
+    }
+
+    /// Corrupt tag bytes: unknown tags (the signal a v3 peer sees for
+    /// every v4 frame) and cross-tag payloads must reject cleanly.
+    #[test]
+    fn unknown_and_swapped_tags_rejected() {
+        // all unknown tags reject on a representative payload
+        let body = Message::DhtPing { from: contact("a", "127.0.0.1:1") }.encode();
+        for tag in 21..=255u8 {
+            let mut b = body.clone();
+            b[0] = tag;
+            assert!(Message::decode(&b).is_none(), "tag {tag} accepted");
+        }
+        // a v4 frame shown to a decoder as each *known* tag must not
+        // panic (it may legitimately alias for container-free tags)
+        for m in dht_messages() {
+            let bytes = m.encode();
+            for tag in 0..=20u8 {
+                let mut b = bytes.clone();
+                b[0] = tag;
+                let _ = Message::decode(&b); // no panic is the assertion
+            }
+        }
+    }
+
+    /// Hostile counts/lengths: a forged node/record count or an oversized
+    /// payload length must be rejected before allocation.
+    #[test]
+    fn hostile_counts_bounded() {
+        let mut b = vec![16u8]; // DhtNodes
+        b.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(Message::decode(&b).is_none());
+        let mut b = vec![18u8]; // DhtValues
+        b.extend_from_slice(&((MAX_DHT_RECORDS as u32) + 1).to_le_bytes());
+        assert!(Message::decode(&b).is_none());
+        // record with a payload length far past the frame end
+        let mut b = vec![18u8];
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&[7u8; 32]); // publisher
+        b.extend_from_slice(&1000u64.to_le_bytes()); // ttl
+        b.extend_from_slice(&((MAX_DHT_PAYLOAD as u32) + 1).to_le_bytes());
+        assert!(Message::decode(&b).is_none());
+        // contact with an oversized address length
+        let mut b = vec![13u8];
+        b.extend_from_slice(&[1u8; 32]);
+        b.extend_from_slice(&u16::MAX.to_le_bytes());
+        assert!(Message::decode(&b).is_none());
+    }
+
+    /// Trailing junk after a complete DHT message is a corrupt frame.
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut b = Message::DhtStored.encode();
+        b.push(0);
+        assert!(Message::decode(&b).is_none());
     }
 }

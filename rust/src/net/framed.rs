@@ -4,7 +4,7 @@
 use crate::error::{Error, Result};
 use crate::net::codec::Message;
 use std::io::{Read, Write};
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
 
 const MAX_FRAME: u32 = 64 << 20;
 
@@ -39,6 +39,31 @@ impl FramedConn {
     pub fn connect(addr: &str) -> Result<Self> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
+        Ok(FramedConn { stream })
+    }
+
+    /// Connect with a deadline on the dial *and* on every subsequent
+    /// read/write. The DHT layer uses this so a dead peer costs one
+    /// timeout, not a hung lookup (its liveness verdicts feed routing
+    /// tables, which must converge under churn). Numeric `ip:port`
+    /// addresses parse without touching the resolver; hostname
+    /// addresses (operator-supplied `--bootstrap`/`--advertise`
+    /// convenience) fall back to `getaddrinfo`, whose OS-level timeout
+    /// is *not* bounded by `timeout` — peers that advertise slow or
+    /// dead hostnames cost resolver time, so latency-sensitive swarms
+    /// should advertise numeric addresses.
+    pub fn connect_timeout(addr: &str, timeout: std::time::Duration) -> Result<Self> {
+        let sockaddr = match addr.parse::<std::net::SocketAddr>() {
+            Ok(a) => a,
+            Err(_) => addr
+                .to_socket_addrs()?
+                .next()
+                .ok_or_else(|| Error::Protocol(format!("unresolvable address: {addr}")))?,
+        };
+        let stream = TcpStream::connect_timeout(&sockaddr, timeout)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
         Ok(FramedConn { stream })
     }
 

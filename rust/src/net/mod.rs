@@ -10,7 +10,10 @@
 mod codec;
 mod framed;
 
-pub use codec::{Message, TensorPayload};
+pub use codec::{
+    DhtContact, DhtWireRecord, Message, TensorPayload, MAX_DHT_ADDR, MAX_DHT_NODES,
+    MAX_DHT_RECORDS,
+};
 pub use framed::{read_frame, write_frame, FramedConn};
 
 /// Default TCP port base for local swarms.
@@ -19,11 +22,14 @@ pub const BASE_PORT: u16 = 31337;
 /// Wire protocol version (see docs/WIRE_PROTOCOL.md for the versioning
 /// rules). v2 widened `Pong` with KV-pool occupancy + batch width; v3
 /// added the `OpenSessionV3`/`SessionOpenedV3` tags carrying prefix
-/// token ids for shared-prefix serving (new tags, so v2 frames still
-/// decode; v2 servers reject the new tag and clients downgrade). The
-/// codec has no inline negotiation, so mixed-version swarms must not
-/// share a model namespace.
-pub const PROTOCOL_VERSION: u32 = 3;
+/// token ids for shared-prefix serving; v4 added the Kademlia RPC tags
+/// (`DhtPing`..`DhtStored`, tags 13–20) behind the networked DHT. Each
+/// step appended new tags only, so v3 (and older) frames still decode
+/// byte-for-byte; older peers reject the newer tags as undecodable
+/// frames, which callers treat as "peer does not speak this version".
+/// The codec has no inline negotiation, so mixed-version swarms must
+/// not share a model namespace.
+pub const PROTOCOL_VERSION: u32 = 4;
 
 #[cfg(test)]
 mod tests {

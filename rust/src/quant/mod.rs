@@ -107,11 +107,17 @@ pub fn decode(buf: &[u8]) -> Option<QuantizedTensor> {
         Some(v)
     };
     let rank = rd_u32(&mut pos)? as usize;
+    if rank > 8 {
+        return None; // bound allocation on hostile input (codec cap)
+    }
     let mut shape = Vec::with_capacity(rank);
     for _ in 0..rank {
         shape.push(rd_u32(&mut pos)? as usize);
     }
     let n_scales = rd_u32(&mut pos)? as usize;
+    if n_scales > buf.len() / 4 {
+        return None; // each scale needs 4 encoded bytes
+    }
     let mut scales = Vec::with_capacity(n_scales);
     for _ in 0..n_scales {
         scales.push(f32::from_le_bytes(buf.get(pos..pos + 4)?.try_into().ok()?));
@@ -119,7 +125,8 @@ pub fn decode(buf: &[u8]) -> Option<QuantizedTensor> {
     }
     let n = n_scales * QUANT_BLOCK;
     let bytes = buf.get(pos..pos + n)?;
-    if shape.iter().product::<usize>() != n {
+    let elems = shape.iter().try_fold(1usize, |a, &d| a.checked_mul(d));
+    if elems != Some(n) {
         return None;
     }
     let payload = bytes.iter().map(|&b| b as i8).collect();

@@ -125,6 +125,21 @@ struct SessionTable {
     reserved_pages_left: usize,
     /// Token positions attached from a shared prefix at open (0 = none).
     shared_tokens: usize,
+    /// Unconsumed fork-budget pages granted by [`KvPool::pin_prefix`]
+    /// (0 = no outstanding grant; only ever decreases once granted).
+    /// Guards against stacking grants on re-pins and lets
+    /// `unpin_prefix` revoke what the donor never used.
+    fork_budget_granted: usize,
+    /// How many tokens `pin_prefix`'s grant actually raised
+    /// `reserved_tokens` by — rolled back with the grant so the
+    /// pages-promised-per-token accounting stays exact (an un-rolled
+    /// bump would make a later `reserve_tokens` under-charge and break
+    /// its admission promise).
+    fork_tokens_bump: usize,
+    /// `reserved_tokens` as of the grant. If a later `reserve_tokens`
+    /// grew past it, the grant's pages back part of that *paid* promise
+    /// and revocation must not touch them (or the tokens).
+    fork_tokens_after: usize,
     /// Bumped on every structural change to this table (open, fork,
     /// defrag move) — the fast-path literal-cache invalidation key.
     epoch: u64,
@@ -147,6 +162,9 @@ struct PrefixPages {
     /// Token positions covered (a multiple of `page_tokens`).
     tokens: usize,
     n_blocks: usize,
+    /// The session whose pages were pinned — so unpinning can revoke
+    /// the fork budget granted to it (if it is still open and unused).
+    donor: u64,
     /// Indexed by `block * 2 + kv` (pinned prefixes are batch-1 only).
     runs: Vec<Vec<PageId>>,
 }
@@ -320,6 +338,9 @@ impl KvPool {
                 write_from: 0,
                 reserved_pages_left: need,
                 shared_tokens: 0,
+                fork_budget_granted: 0,
+                fork_tokens_bump: 0,
+                fork_tokens_after: 0,
                 epoch,
                 runs: vec![PageRun::default(); n_blocks * 2 * batch],
             },
@@ -404,6 +425,9 @@ impl KvPool {
                 write_from: wf,
                 reserved_pages_left: need,
                 shared_tokens: shared,
+                fork_budget_granted: 0,
+                fork_tokens_bump: 0,
+                fork_tokens_after: 0,
                 epoch,
                 runs,
             },
@@ -466,6 +490,17 @@ impl KvPool {
     /// be page-aligned and materialized. Returns the pin id to pass to
     /// [`Self::open_session_shared`] / [`Self::unpin_prefix`]. Batch-1
     /// sessions only.
+    ///
+    /// Pinning also **over-reserves the donor by one fork budget** (one
+    /// page per run, i.e. `2 * n_blocks` pages, plus one page-width of
+    /// token headroom) when the pool has room. Without it, a donor whose
+    /// budget was fully materialized by its prefill could hit a
+    /// transient [`Error::Busy`] on its *first divergent decode* in a
+    /// full pool — the write needs a private page (a fresh append or a
+    /// CoW fork of a now-shared page) that admission never charged it
+    /// for, because the pages only became shared when the pin landed.
+    /// The grant is all-or-nothing and best-effort: a pool too full to
+    /// cover it pins anyway and keeps the old transient-Busy behavior.
     pub fn pin_prefix(&mut self, session: u64, tokens: usize) -> Result<u64> {
         let t = self
             .tables
@@ -501,12 +536,35 @@ impl KvPool {
         }
         let pin = self.next_pin;
         self.next_pin += 1;
-        self.pinned.insert(pin, PrefixPages { tokens, n_blocks, runs });
+        self.pinned.insert(pin, PrefixPages { tokens, n_blocks, donor: session, runs });
+        // donor fork budget (see doc comment): one private page per run
+        // + pt tokens of reservation headroom so the first divergent
+        // write neither grows the reservation nor competes with later
+        // admissions for free pages. At most one outstanding grant per
+        // session (a re-pin must not stack reservations), revoked on
+        // unpin if still unused.
+        let fork_budget = 2 * n_blocks;
+        let granted = self.tables.get(&session).map_or(0, |t| t.fork_budget_granted);
+        if granted == 0 && fork_budget <= self.free_pages() {
+            self.reserved_unwritten += fork_budget;
+            let t = self.tables.get_mut(&session).unwrap();
+            t.reserved_pages_left += fork_budget;
+            t.fork_budget_granted = fork_budget;
+            let before = t.reserved_tokens;
+            t.reserved_tokens = before.max(tokens + pt);
+            t.fork_tokens_bump = t.reserved_tokens - before;
+            t.fork_tokens_after = t.reserved_tokens;
+        }
+        self.check_invariant();
         Ok(pin)
     }
 
     /// Drop a pinned prefix; its pages are freed once no session shares
-    /// them anymore. Returns false if the pin was unknown.
+    /// them anymore, and the donor's unused fork budget is revoked (the
+    /// pages are no longer shared, so the donor writes in place — keeping
+    /// the reservation would leak admission capacity until the donor
+    /// closes, spurious `Busy` in a pool with real room). Returns false
+    /// if the pin was unknown.
     pub fn unpin_prefix(&mut self, pin: u64) -> bool {
         let Some(pp) = self.pinned.remove(&pin) else {
             return false;
@@ -514,6 +572,33 @@ impl KvPool {
         for run in &pp.runs {
             for &p in run {
                 self.release_page(p);
+            }
+        }
+        // revoke only when this was the donor's LAST pin: with another
+        // pin outstanding its pages are still shared, and the grant's
+        // first-divergent-write guarantee must keep holding
+        if !self.pinned.values().any(|q| q.donor == pp.donor) {
+            if let Some(t) = self.tables.get_mut(&pp.donor) {
+                // all-or-nothing: revoke only a fully unconsumed grant,
+                // and roll back the token bump with it, so the
+                // pages-promised(reserved_tokens) accounting stays exact.
+                // A partially consumed grant keeps its *tracker* too —
+                // zeroing it here would let the next re-pin grant again
+                // on top of the unconsumed remainder, ratcheting
+                // reserved capacity per pin/unpin cycle; with the
+                // tracker kept, the leak is bounded by one grant per
+                // donor lifetime.
+                let full = 2 * t.n_blocks;
+                if t.fork_budget_granted == full && t.reserved_tokens == t.fork_tokens_after {
+                    // a reservation grown past the grant absorbed the
+                    // grant's pages into a *paid* promise — revoking
+                    // would Busy a span reserve_tokens already accepted
+                    t.reserved_pages_left -= full;
+                    t.reserved_tokens -= t.fork_tokens_bump;
+                    self.reserved_unwritten -= full;
+                    t.fork_budget_granted = 0;
+                    t.fork_tokens_bump = 0;
+                }
             }
         }
         self.check_invariant();
@@ -582,7 +667,13 @@ impl KvPool {
         }
         let id = self.alloc_page()?;
         if has_budget {
-            self.tables.get_mut(&session).unwrap().reserved_pages_left -= 1;
+            let t = self.tables.get_mut(&session).unwrap();
+            t.reserved_pages_left -= 1;
+            // the fork grant is the *tail* of the budget: once the
+            // remaining reservation drops below it, that much of the
+            // grant was consumed — unpin must then revoke less (never a
+            // later, legitimately re-reserved span)
+            t.fork_budget_granted = t.fork_budget_granted.min(t.reserved_pages_left);
             self.reserved_unwritten -= 1;
         }
         Ok(id)
@@ -1238,8 +1329,10 @@ mod tests {
 
     #[test]
     fn fork_under_fragmentation_rejected_then_recovers() {
-        // capacity exactly: donor 4 pages + pin (no extra) + sharer 2 marginal
-        let (mut p, pin) = donor_with_pin(6);
+        // capacity exactly: donor 4 pages + its pin-time fork budget (2)
+        // + sharer 2 marginal — the *sharer* has no fork budget, so its
+        // write into the shared span still rejects in a full pool
+        let (mut p, pin) = donor_with_pin(8);
         p.open_session_shared(2, 1, 12, pin, 8, 8).unwrap();
         p.prepare_write_range(2, 8, 11).unwrap(); // consumes the marginal pages
         // a write inside the shared span needs a fork beyond the budget
@@ -1253,6 +1346,142 @@ mod tests {
         // "fork" is no longer needed — prepare succeeds without allocating
         let forks = p.prepare_write(2, 0).unwrap();
         assert_eq!(forks, 0, "sole holder writes in place");
+    }
+
+    /// ROADMAP regression: a pinned donor's *first divergent decode*
+    /// (the append right after its prefill span) must never hit a
+    /// transient Busy in a full pool — the pin-time fork budget covers
+    /// it even after sharers consume every remaining page.
+    #[test]
+    fn pinned_donor_first_divergent_decode_never_busy() {
+        let (mut p, pin) = donor_with_pin(8);
+        // a sharer's marginal reservation takes the last free pages
+        p.open_session_shared(2, 1, 12, pin, 8, 8).unwrap();
+        assert_eq!(p.free_pages(), 0, "pool fully spoken for");
+        // donor appends its first divergent token at position 8
+        p.prepare_write(1, 8).expect("fork budget must cover the first divergent write");
+        let col = vec![3.5f32; 2 * 3];
+        p.write_column(1, 0, 0, 8, &col).unwrap();
+        p.commit_len(1, 9);
+        // the budget is one fork deep: the *next* page boundary without
+        // fresh capacity is still (correctly) a transient Busy
+        let err = p.prepare_write(1, 12).unwrap_err();
+        assert!(matches!(err, Error::Busy(_)), "{err}");
+        // and the sharer still reads the untouched shared prefix
+        let mut dst = vec![0.0f32; 2 * 8 * 3];
+        p.gather_padded(2, 0, 0, 8, &mut dst).unwrap();
+        assert_eq!(dst[0], 1.0);
+    }
+
+    /// Same guarantee for the CoW direction: a donor overwriting inside
+    /// its now-shared prefix forks from the pin-time budget even when
+    /// private sessions have drained the pool.
+    #[test]
+    fn pinned_donor_first_fork_never_busy() {
+        let (mut p, pin) = donor_with_pin(10);
+        // a private session takes everything the pin left free
+        p.open_session(3, 1, 1, 8).unwrap();
+        assert_eq!(p.free_pages(), 0, "pool fully spoken for");
+        let forks = p
+            .prepare_write(1, 0)
+            .expect("fork budget must cover the donor's first CoW fork");
+        assert_eq!(forks, 2, "page 0 of both K and V runs forked");
+        let col = vec![-1.0f32; 2 * 3];
+        p.write_column(1, 0, 0, 0, &col).unwrap();
+        // pinned original unchanged: a fresh sharer still sees the
+        // donor's pre-fork bytes
+        p.close_session(3);
+        p.open_session_shared(4, 1, 12, pin, 8, 8).unwrap();
+        let mut dst = vec![0.0f32; 2 * 8 * 3];
+        p.gather_padded(4, 0, 0, 8, &mut dst).unwrap();
+        assert_eq!(dst[0], 1.0, "sharer reads the pinned original");
+        p.gather_padded(1, 0, 0, 8, &mut dst).unwrap();
+        assert_eq!(dst[0], -1.0, "donor reads its forked copy");
+    }
+
+    /// Unpinning revokes the donor's unused fork budget (the pages are
+    /// private again, so the insurance is moot) and re-pins never stack
+    /// grants — otherwise eviction-under-pressure would leak admission
+    /// capacity until the donor closed.
+    #[test]
+    fn unpin_revokes_unused_fork_budget_and_repins_never_stack() {
+        let (mut p, pin) = donor_with_pin(32);
+        let with_grant = p.free_pages();
+        assert!(p.unpin_prefix(pin));
+        assert_eq!(p.free_pages(), with_grant + 2, "unused grant returns to the pool");
+        // sole holder again: writes in place, no budget needed
+        assert_eq!(p.prepare_write(1, 0).unwrap(), 0);
+        // a fresh pin grants exactly once; a second pin does not stack
+        let pin2 = p.pin_prefix(1, 8).unwrap();
+        assert_eq!(p.free_pages(), with_grant);
+        let pin3 = p.pin_prefix(1, 8).unwrap();
+        assert_eq!(p.free_pages(), with_grant, "re-pin must not stack grants");
+        // revocation waits for the donor's LAST pin: pages stay shared
+        // (and the guarantee stays needed) while any pin remains
+        assert!(p.unpin_prefix(pin3));
+        assert_eq!(p.free_pages(), with_grant, "grant survives while a pin remains");
+        assert!(p.unpin_prefix(pin2));
+        assert_eq!(p.free_pages(), with_grant + 2, "last unpin returns the grant");
+        // a closed donor makes re-pin revocation a no-op
+        let pin4 = p.pin_prefix(1, 8).unwrap();
+        p.close_session(1);
+        assert!(p.unpin_prefix(pin4));
+        assert_eq!(p.used_pages(), 0);
+    }
+
+    /// Revoking a grant also rolls back its token bump: a later
+    /// `reserve_tokens` must charge the full span again, or its
+    /// admission promise would be under-backed and a "reserved" write
+    /// could Busy in a full pool.
+    #[test]
+    fn revoked_grant_rolls_back_token_promise() {
+        let (mut p, pin) = donor_with_pin(32);
+        assert!(p.unpin_prefix(pin));
+        // grow the reservation to 16 tokens: with the bump rolled back
+        // this must charge pages for the whole 8..16 span (4 pages)
+        let free_before = p.free_pages();
+        p.reserve_tokens(1, 16).unwrap();
+        assert_eq!(free_before - p.free_pages(), 4, "full span re-charged");
+        // drain the rest of the pool, then write the promised span: the
+        // reservation must actually back it — no transient Busy
+        let rest = p.free_pages();
+        p.open_session(9, 1, 1, rest * 2).unwrap();
+        assert_eq!(p.free_pages(), 0);
+        p.prepare_write_range(1, 8, 15).expect("reserved span must be writable");
+    }
+
+    /// A reservation grown past the grant absorbs the grant's pages
+    /// into a paid promise: unpin must then revoke nothing, and the
+    /// promised span stays writable in a full pool.
+    #[test]
+    fn grown_reservation_blocks_grant_revocation() {
+        let (mut p, pin) = donor_with_pin(32);
+        p.reserve_tokens(1, 16).unwrap();
+        let free_before = p.free_pages();
+        assert!(p.unpin_prefix(pin));
+        assert_eq!(p.free_pages(), free_before, "no revocation after growth");
+        let rest = p.free_pages();
+        p.open_session(9, 1, 1, rest * 2).unwrap();
+        assert_eq!(p.free_pages(), 0);
+        p.prepare_write_range(1, 8, 15).expect("grown promise must stay writable");
+    }
+
+    /// The fork budget is best-effort: pinning in an already-full pool
+    /// still succeeds (no new Busy source), just without the guarantee.
+    #[test]
+    fn pin_without_headroom_still_pins() {
+        let mut p = KvPool::new(cfg(8));
+        p.open_session(1, 1, 1, 8).unwrap();
+        p.prepare_write_range(1, 0, 7).unwrap();
+        let w = kv_src(1, 2, 8, 3, 1.0);
+        p.write_prefill(1, 0, 0, &w, 8).unwrap();
+        p.commit_len(1, 8);
+        // fill the rest of the pool before pinning
+        p.open_session(2, 1, 1, 8).unwrap();
+        assert_eq!(p.free_pages(), 0);
+        let pin = p.pin_prefix(1, 8).expect("pin must not require headroom");
+        assert_eq!(p.free_pages(), 0, "no budget granted, none charged");
+        assert!(p.unpin_prefix(pin));
     }
 
     #[test]

@@ -987,7 +987,7 @@ impl ServerNode {
                 self.close_session(*session);
                 Message::SessionOpened { session: *session }
             }
-            other => Message::Error { message: format!("unexpected message {other:?}") },
+            other => Message::Error { message: format!("unexpected message {}", other.kind()) },
         }
     }
 }

@@ -113,6 +113,30 @@ impl TcpSwarm {
         Self::from_remotes(peers.into_iter().map(|(id, addr)| (id, addr, Vec::new())))
     }
 
+    /// Resolve the block directory through a (networked) DHT and connect
+    /// to every server found: one iterative `FIND_VALUE` per block key,
+    /// addressed announcements decoded and deduped
+    /// ([`crate::dht::BlockDirectory::discover_addressed`]). This is the
+    /// multi-host replacement for directory scans: `petals generate
+    /// --bootstrap ADDR,...` needs one live DHT peer, not a shared
+    /// filesystem or a static peer list. Errors with `NoRoute` when no
+    /// live server covers any block.
+    pub fn connect_via_dht(
+        rpc: &dyn crate::dht::Rpc,
+        seeds: &[crate::dht::NodeId],
+        model: &str,
+        n_blocks: u32,
+    ) -> Result<Self> {
+        let dir = crate::dht::BlockDirectory::new(rpc, seeds.to_vec(), model);
+        let found = dir.discover_addressed(n_blocks);
+        if found.is_empty() {
+            return Err(Error::NoRoute(format!(
+                "dht lookup found no live servers for model '{model}' ({n_blocks} blocks)"
+            )));
+        }
+        Ok(Self::connect_discovered(found))
+    }
+
     /// Connect from full discovery announcements, keeping each server's
     /// advertised prefix fingerprints as routing hints (the announcement
     /// records carry them; `Pong` does not).
@@ -122,6 +146,12 @@ impl TcpSwarm {
                 .into_iter()
                 .map(|a| (a.entry.server, a.addr, a.entry.prefix_fps)),
         )
+    }
+
+    /// Servers this client knows how to dial (no network traffic —
+    /// [`ChainClient::discover`] is the pinging, view-refreshing call).
+    pub fn peer_count(&self) -> usize {
+        self.peers.len()
     }
 
     fn from_remotes(peers: impl Iterator<Item = (NodeId, String, Vec<u64>)>) -> Self {
@@ -168,7 +198,7 @@ impl TcpSwarm {
             // admission rejections (pool growth mid-session) come back
             // typed as Busy; anything else is a retryable chain break
             Message::Error { message } => Err(Error::from_wire(message)),
-            other => Err(Error::Protocol(format!("unexpected {other:?}"))),
+            other => Err(Error::Protocol(format!("unexpected {}", other.kind()))),
         }
     }
 
@@ -253,7 +283,7 @@ impl ChainClient for TcpSwarm {
             // admission rejections arrive as Error replies; surface them
             // as retryable Busy so the session layer can route elsewhere
             Message::Error { message } => Err(Error::from_wire(message)),
-            other => Err(Error::Protocol(format!("unexpected {other:?}"))),
+            other => Err(Error::Protocol(format!("unexpected {}", other.kind()))),
         }
     }
 
@@ -282,7 +312,7 @@ impl ChainClient for TcpSwarm {
         match self.call(server, &v3) {
             Ok(Message::SessionOpenedV3 { .. }) | Ok(Message::SessionOpened { .. }) => Ok(()),
             Ok(Message::Error { message }) => Err(Error::from_wire(message)),
-            Ok(other) => Err(Error::Protocol(format!("unexpected {other:?}"))),
+            Ok(other) => Err(Error::Protocol(format!("unexpected {}", other.kind()))),
             // a legacy (wire v2) server rejects the unknown tag and drops
             // the connection — downgrade to the v2 open once
             Err(Error::ChainBroken(_)) | Err(Error::Io(_)) => {

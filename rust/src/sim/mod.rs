@@ -14,6 +14,13 @@
 //! - parallel forward tokens/s (GPipe-style microbatch pipelining),
 //! - the ≈20% per-client slowdown with 8 concurrent clients,
 //! - churn experiments (servers leaving; rebalancing closing gaps).
+//!
+//! The [`dht`] submodule simulates the *discovery* plane the same way:
+//! a metered Kademlia swarm with realistic sparse routing tables, used
+//! by `benches/dht_lookup.rs` to track lookup hops and churn
+//! convergence on the perf trajectory.
+
+pub mod dht;
 
 use crate::config::profiles::{NetworkProfile, ServerSpec, SwarmProfile};
 use crate::config::Rng;

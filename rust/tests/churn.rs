@@ -1,6 +1,9 @@
 //! Integration: churn — servers joining, leaving, failing en masse —
 //! exercising the §3.2 claims that the balancer keeps the swarm alive
-//! and sessions survive.
+//! and sessions survive. The `tcp_dht_*` test runs the discovery-plane
+//! half of the story over real loopback sockets: a networked Kademlia
+//! swarm losing a node, announcements aging out, republish restoring
+//! resolution.
 
 use petals::config::profiles::{NetworkProfile, SwarmPreset};
 use petals::config::Rng;
@@ -79,6 +82,93 @@ fn mass_departure_gap_closes() {
     let moves = sim.rebalance();
     assert!(moves > 0, "rebalancer must act");
     assert!(sim.total_throughput() > 0.0, "gap must close");
+}
+
+/// Networked-DHT churn (acceptance scenario): a 4-node loopback swarm
+/// keeps resolving a published `ServerEntry` after one node dies
+/// (records are replicated to the K closest), the record ages out once
+/// its TTL passes without republish, and a republish from the live
+/// publisher restores resolution.
+#[test]
+fn tcp_dht_survives_node_death_ttl_expiry_and_republish() {
+    use petals::dht::{now_ms, BlockDirectory, DhtConfig, DhtNode, NodeId, ServerEntry};
+    use std::time::Duration;
+
+    let cfg = |bootstrap: Vec<String>| DhtConfig {
+        bootstrap,
+        rpc_timeout: Duration::from_millis(800),
+        sweep_every: Duration::from_millis(150),
+        ..DhtConfig::default()
+    };
+    let seed = DhtNode::spawn(NodeId::from_name("churn/seed"), "127.0.0.1:0", cfg(vec![]))
+        .unwrap();
+    let mut nodes = vec![seed];
+    for i in 1..4 {
+        let n = DhtNode::spawn(
+            NodeId::from_name(&format!("churn/n{i}")),
+            "127.0.0.1:0",
+            cfg(vec![nodes[0].addr()]),
+        )
+        .unwrap();
+        assert!(n.bootstrap() >= 1);
+        nodes.push(n);
+    }
+
+    let entry = ServerEntry {
+        server: nodes[1].id(),
+        start: 0,
+        end: 2,
+        throughput: 2.0,
+        free_pages: 4,
+        total_pages: 16,
+        batch_width: 4,
+        prefix_fps: vec![],
+    };
+    let ttl_ms = 1000u64;
+    let publish = |node: &DhtNode| {
+        let rpc = node.rpc();
+        let mut dir = BlockDirectory::new(&rpc, node.seeds(), "bloom-mini");
+        dir.announce_ttl_ms = ttl_ms;
+        dir.announce_addressed("127.0.0.1:7001", &entry, now_ms()).unwrap();
+    };
+    let resolves = |node: &DhtNode| {
+        let rpc = node.rpc();
+        let dir = BlockDirectory::new(&rpc, node.seeds(), "bloom-mini");
+        !dir.lookup_addressed(0).is_empty()
+    };
+
+    publish(&nodes[1]);
+    assert!(resolves(&nodes[3]), "published entry must resolve");
+
+    // one replica holder dies: the record survives on the others and
+    // the dead peer reads as dead (its liveness feeds LRS eviction)
+    nodes[2].shutdown();
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(!nodes[3].rpc().ping(nodes[2].id()), "dead node must ping false");
+    assert!(resolves(&nodes[3]), "replicated record must survive one death");
+
+    // TTL passes with no republish: the announcement ages out everywhere
+    // (a crashed *server* disappears from the directory the same way)
+    std::thread::sleep(Duration::from_millis(ttl_ms + 250));
+    assert!(!resolves(&nodes[3]), "expired announcement must be invisible");
+    assert_eq!(nodes[0].store_len(), 0, "sweep reclaims expired records");
+
+    // the republish loop fires again: resolution converges back
+    publish(&nodes[1]);
+    let t0 = std::time::Instant::now();
+    let mut restored = false;
+    while t0.elapsed() < Duration::from_secs(3) {
+        if resolves(&nodes[3]) {
+            restored = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(restored, "republish must restore resolution");
+
+    for n in &nodes {
+        n.shutdown();
+    }
 }
 
 /// Throughput after rebalance is never worse than before (monotonicity

@@ -1,10 +1,16 @@
 //! Integration: the DHT as the swarm's discovery plane — servers
 //! announce spans with TTL, clients snapshot coverage, the balancer
-//! consumes DHT data, and announcements age out after departure.
+//! consumes DHT data, and announcements age out after departure. The
+//! `tcp_*` tests run the same flows over the *networked* DHT: real
+//! `DhtNode`s on loopback sockets, iterative lookups through `TcpRpc`.
 
 use petals::config::Rng;
 use petals::coordinator::balancer::{self, BlockCoverage};
-use petals::dht::{BlockDirectory, NodeId, Record, ServerEntry, Storage};
+use petals::dht::{
+    client_rpc, now_ms, BlockDirectory, DhtConfig, DhtNode, NodeId, Record, ServerEntry,
+    Storage,
+};
+use std::time::Duration;
 
 mod util {
     use super::*;
@@ -55,11 +61,13 @@ mod util {
                 Some(recs)
             }
         }
-        fn store(&self, callee: NodeId, key: NodeId, rec: Record) {
+        fn store(&self, callee: NodeId, key: NodeId, rec: Record) -> bool {
             let mut nodes = self.nodes.borrow_mut();
             if let Some((_, store, true)) = nodes.get_mut(&callee) {
                 store.put(key, rec);
+                return true;
             }
+            false
         }
         fn ping(&self, callee: NodeId) -> bool {
             self.nodes
@@ -159,6 +167,134 @@ fn pool_occupancy_flows_through_dht_to_balancer() {
     let full_back = got.iter().find(|e| e.server == ids[1]).unwrap();
     assert_eq!(full_back.free_ratio(), 0.0);
     assert_eq!(full_back.batch_width, 8);
+}
+
+// ---- networked (loopback TCP) variants ---------------------------------
+
+fn spawn_tcp_swarm(n: usize, tag: &str) -> Vec<DhtNode> {
+    let cfg = |bootstrap: Vec<String>| DhtConfig {
+        bootstrap,
+        rpc_timeout: Duration::from_millis(800),
+        sweep_every: Duration::from_millis(250),
+        ..DhtConfig::default()
+    };
+    let seed = DhtNode::spawn(
+        NodeId::from_name(&format!("{tag}/seed")),
+        "127.0.0.1:0",
+        cfg(vec![]),
+    )
+    .unwrap();
+    let mut nodes = vec![seed];
+    for i in 1..n {
+        let node = DhtNode::spawn(
+            NodeId::from_name(&format!("{tag}/n{i}")),
+            "127.0.0.1:0",
+            cfg(vec![nodes[0].addr()]),
+        )
+        .unwrap();
+        assert!(node.bootstrap() >= 1, "node {i} found no peers");
+        nodes.push(node);
+    }
+    nodes
+}
+
+fn entry_for(node: &DhtNode, start: u32, end: u32) -> ServerEntry {
+    ServerEntry {
+        server: node.id(),
+        start,
+        end,
+        throughput: 1.5,
+        free_pages: 12,
+        total_pages: 64,
+        batch_width: 8,
+        prefix_fps: vec![0xfeed],
+    }
+}
+
+/// Acceptance scenario: ≥4 nodes bootstrapped from one seed address
+/// converge, and an addressed `ServerEntry` published by one node
+/// resolves by iterative `FIND_VALUE` over `TcpRpc` from another —
+/// including through a pure-client RPC that only knows the seed address
+/// (what `petals generate --bootstrap` does).
+#[test]
+fn tcp_swarm_converges_and_resolves_entries() {
+    let nodes = spawn_tcp_swarm(5, "conv");
+    // convergence: every joiner holds peers; the seed learned them all
+    // from inbound traffic
+    assert!(nodes[0].table_len() >= 4, "seed table: {}", nodes[0].table_len());
+    for n in &nodes[1..] {
+        assert!(n.table_len() >= 1);
+    }
+
+    // node 1 publishes its addressed entry under every covered block key
+    let publisher = &nodes[1];
+    let entry = entry_for(publisher, 0, 4);
+    let rpc = publisher.rpc();
+    let dir = BlockDirectory::new(&rpc, publisher.seeds(), "bloom-mini");
+    dir.announce_addressed("127.0.0.1:7001", &entry, now_ms()).unwrap();
+
+    // a *different* node resolves it by iterative lookup
+    let reader = &nodes[4];
+    let rrpc = reader.rpc();
+    let rdir = BlockDirectory::new(&rrpc, reader.seeds(), "bloom-mini");
+    for block in 0..4 {
+        let found = rdir.lookup_addressed(block);
+        assert_eq!(found.len(), 1, "block {block}");
+        assert_eq!(found[0].entry, entry);
+        assert_eq!(found[0].addr, "127.0.0.1:7001");
+    }
+    assert!(rdir.lookup_addressed(4).is_empty(), "uncovered block stays empty");
+
+    // a client that only knows the seed's *address* gets the same view
+    let (crpc, seeds) = client_rpc(&[nodes[0].addr()], Duration::from_millis(800)).unwrap();
+    let cdir = BlockDirectory::new(&crpc, seeds.clone(), "bloom-mini");
+    let discovered = cdir.discover_addressed(4);
+    assert_eq!(discovered.len(), 1);
+    assert_eq!(discovered[0].entry.server, publisher.id());
+    assert!(discovered[0].entry.has_prefix(0xfeed), "v3 hints survive the wire");
+    // ...and the one-call swarm constructor wires the same discovery
+    // (construction only — the announced service addr is not served here)
+    petals::server::service::TcpSwarm::connect_via_dht(&crpc, &seeds, "bloom-mini", 4)
+        .expect("connect_via_dht must resolve the published swarm");
+    assert!(
+        petals::server::service::TcpSwarm::connect_via_dht(&crpc, &seeds, "other-model", 4)
+            .is_err(),
+        "a foreign model namespace must resolve nothing"
+    );
+
+    for n in &nodes {
+        n.shutdown();
+    }
+}
+
+/// Two publishers with overlapping spans merge per block, and a
+/// republish with a moved span replaces the publisher's old record —
+/// over sockets, same semantics as the in-memory directory.
+#[test]
+fn tcp_multiple_publishers_merge_and_replace() {
+    let nodes = spawn_tcp_swarm(4, "merge");
+    let (a, b) = (&nodes[1], &nodes[2]);
+    let (arpc, brpc) = (a.rpc(), b.rpc());
+    let adir = BlockDirectory::new(&arpc, a.seeds(), "bloom-mini");
+    let bdir = BlockDirectory::new(&brpc, b.seeds(), "bloom-mini");
+    adir.announce_addressed("127.0.0.1:7001", &entry_for(a, 0, 4), now_ms()).unwrap();
+    bdir.announce_addressed("127.0.0.1:7002", &entry_for(b, 2, 6), now_ms()).unwrap();
+
+    let reader = &nodes[3];
+    let rrpc = reader.rpc();
+    let rdir = BlockDirectory::new(&rrpc, reader.seeds(), "bloom-mini");
+    assert_eq!(rdir.lookup_addressed(3).len(), 2, "overlap merges");
+    assert_eq!(rdir.discover_addressed(6).len(), 2);
+
+    // a rebalances to 1..5: same publisher replaces its per-key record
+    adir.announce_addressed("127.0.0.1:7001", &entry_for(a, 1, 5), now_ms()).unwrap();
+    let at2 = rdir.lookup_addressed(2);
+    let a_rec = at2.iter().find(|x| x.entry.server == a.id()).unwrap();
+    assert_eq!(a_rec.entry.start, 1, "republish replaced the old span");
+
+    for n in &nodes {
+        n.shutdown();
+    }
 }
 
 #[test]
