@@ -21,11 +21,20 @@ preflight_manifest
 
 MODE="${1:-}"
 
+# artifact-gated suites switch on only when `make artifacts` has run
+TEST_FEATURES="$(preflight_test_features)"
+if [[ -n "$TEST_FEATURES" ]]; then
+    echo "artifacts present: running with $TEST_FEATURES"
+else
+    echo "no artifacts: artifact-gated suites are compiled out (run 'make artifacts' to enable)"
+fi
+
 if [[ "$MODE" == "test-only" ]]; then
     # fast iteration loop: dev-profile tests only — a release build here
     # would be paid in full and never used by `cargo test`
     step "cargo test"
-    cargo test -q
+    # shellcheck disable=SC2086
+    cargo test -q $TEST_FEATURES
     echo
     echo "test-only checks passed"
     exit 0
@@ -35,7 +44,9 @@ step "cargo fmt --check"
 cargo fmt --all -- --check
 
 step "cargo clippy -- -D warnings"
-cargo clippy --all-targets -- -D warnings
+# --features artifact-tests so the gated suites stay linted even where
+# the artifacts themselves are absent (they only gate *running*)
+cargo clippy --all-targets --features artifact-tests -- -D warnings
 
 if [[ "$MODE" == "quick" ]]; then
     echo "quick mode: skipping doc/build/test"
@@ -52,7 +63,8 @@ step "cargo build --release --examples"
 cargo build --release --examples
 
 step "cargo test"
-cargo test -q
+# shellcheck disable=SC2086
+cargo test -q $TEST_FEATURES
 
 echo
 echo "all checks passed"

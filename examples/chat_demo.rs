@@ -1,16 +1,19 @@
-//! Chat application demo (Figure 3): the HTTP backend serving a swarm,
-//! driven by a tiny chat "frontend" loop over HTTP.
+//! Chat application demo (Figure 3) on the v2 streaming API: the HTTP
+//! backend serving a swarm, driven by a tiny chat "frontend" that
+//! watches tokens arrive one NDJSON event at a time and keeps the
+//! conversation's KV server-side across turns.
 //!
 //! BLOOM-mini's tokenizer is synthetic, so the frontend maps characters
 //! to token ids (mod vocab) — the point here is the *backend plumbing*:
-//! HTTP -> PETALS client -> swarm sessions -> HTTP reply, like the
-//! paper's Flask backend at https://chat.petals.ml.
+//! HTTP -> PETALS client -> swarm sessions -> per-token events, like
+//! the paper's backend at https://chat.petals.ml but with streaming and
+//! persistent sessions.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example chat_demo
 //! ```
 
-use petals::api::{http_post, ChatBackend};
+use petals::api::{http_post, http_post_stream, ApiServer, StreamEvent};
 use petals::config::json::Value;
 use petals::coordinator::client::LocalHead;
 use petals::coordinator::routing::RouteQuery;
@@ -18,6 +21,7 @@ use petals::coordinator::session::SessionConfig;
 use petals::model::{ModelHome, Precision, Weights};
 use petals::runtime::Runtime;
 use petals::server::local::spawn_even_swarm;
+use std::io::Write;
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
@@ -33,10 +37,7 @@ fn main() -> petals::Result<()> {
 
     let cfg = SessionConfig {
         n_blocks: g.n_layers,
-        batch: 1,
-        prefill_width: 128,
-        prefix_len: 8,
-        max_new: 16,
+        max_new: 32,
         route: RouteQuery {
             n_blocks: g.n_layers,
             msg_bytes: (g.hidden * 4) as u64,
@@ -45,22 +46,67 @@ fn main() -> petals::Result<()> {
         max_recoveries: 3,
         prefix_tokens: vec![],
     };
-    let backend = ChatBackend::new(swarm, head, cfg);
+    let backend = ApiServer::new(swarm, head, cfg);
     let stop = Arc::new(AtomicBool::new(false));
     let addr = backend.serve("127.0.0.1:0", stop.clone())?;
-    println!("chat backend listening on http://{addr}\n");
+    println!("api server listening on http://{addr}\n");
 
-    // --- the "frontend": three chat turns over real HTTP ----------------
     let vocab = g.vocab as i32;
-    for user_msg in ["Hi! I am choosing a name for my new cat,", "what would you recommend?", "something short?"] {
+    let tokenize = |text: &str| -> Vec<i32> {
+        text.bytes().map(|b| (b as i32) % vocab).collect()
+    };
+
+    // --- part 1: watch tokens stream in (POST /api/v1/stream) -----------
+    println!("-- streaming: one NDJSON event per token, as produced --");
+    let ids = tokenize("Hi! I am choosing a name for my new cat,");
+    let body = format!(
+        "{{\"inputs\":[{}],\"max_new_tokens\":12,\
+         \"sampler\":{{\"kind\":\"top_p\",\"p\":0.9,\"temperature\":0.8,\"seed\":7}}}}",
+        ids.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")
+    );
+    print!("AI (token ids):");
+    http_post_stream(&addr, "/api/v1/stream", &body, |line| {
+        match StreamEvent::parse(line) {
+            Ok(StreamEvent::Token(t)) => {
+                print!(" {}", t.token);
+                let _ = std::io::stdout().flush();
+            }
+            Ok(StreamEvent::Stats(s)) => {
+                println!("\n  [{} tokens @ {:.2} steps/s, finish={}]", s.steps, s.steps_per_s, s.finish);
+            }
+            Ok(StreamEvent::Error { code, message }) => println!("\n  [error {code}: {message}]"),
+            Err(_) => {}
+        }
+    })?;
+
+    // --- part 2: a multi-turn chat on one persistent session ------------
+    // the server keeps the conversation's KV between turns, so each turn
+    // costs only its own tokens — no re-prefill of the history
+    println!("\n-- persistent session: chat turns reuse server-side KV --");
+    let open = http_post(
+        &addr,
+        "/api/v1/session/open",
+        &format!(
+            "{{\"inputs\":[{}]}}",
+            tokenize("You are a helpful cat-naming assistant.")
+                .iter()
+                .map(|i| i.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        ),
+    )?;
+    let sid = Value::parse(&open)?.get("session")?.u64()?;
+    for user_msg in ["what would you recommend?", "something short?"] {
         println!("Human: {user_msg}");
-        // char-level "tokenizer"
-        let ids: Vec<i32> = user_msg.bytes().map(|b| (b as i32) % vocab).collect();
-        let body = format!(
-            "{{\"inputs\": [{}], \"max_new_tokens\": 12}}",
-            ids.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")
-        );
-        let reply = http_post(&addr, "/api/v1/generate", &body)?;
+        let ids = tokenize(user_msg);
+        let reply = http_post(
+            &addr,
+            "/api/v1/session/append",
+            &format!(
+                "{{\"session\":{sid},\"inputs\":[{}],\"max_new_tokens\":10}}",
+                ids.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")
+            ),
+        )?;
         let v = Value::parse(&reply)?;
         let out: Vec<i64> = v
             .get("outputs")?
@@ -68,9 +114,13 @@ fn main() -> petals::Result<()> {
             .iter()
             .map(|x| x.f64().unwrap() as i64)
             .collect();
-        let rate = v.get("steps_per_s")?.f64()?;
-        println!("AI (token ids @ {rate:.2} steps/s): {out:?}\n");
+        println!(
+            "AI (token ids @ {:.2} steps/s, cache {} tokens): {out:?}\n",
+            v.get("steps_per_s")?.f64()?,
+            v.get("cache_len")?.usize()?
+        );
     }
+    http_post(&addr, "/api/v1/session/close", &format!("{{\"session\":{sid}}}"))?;
     println!("(BLOOM-mini has synthetic weights — token ids stand in for text; the backend/plumbing is the demo)");
     Ok(())
 }

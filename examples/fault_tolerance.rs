@@ -8,7 +8,7 @@
 
 use petals::coordinator::client::{LocalHead, Sampler};
 use petals::coordinator::routing::RouteQuery;
-use petals::coordinator::session::{InferenceSession, SessionConfig};
+use petals::coordinator::session::{InferenceSession, PromptShape, SessionConfig};
 use petals::model::tensor::Tensor;
 use petals::model::{ModelHome, Precision, Weights};
 use petals::runtime::Runtime;
@@ -42,9 +42,6 @@ fn main() -> petals::Result<()> {
     let n_new = 12;
     let cfg = SessionConfig {
         n_blocks: g.n_layers,
-        batch: 1,
-        prefill_width: 128,
-        prefix_len: prefix.len(),
         max_new: n_new,
         route: RouteQuery {
             n_blocks: g.n_layers,
@@ -85,8 +82,10 @@ fn generate(
     for id in cluster.ids() {
         cluster.revive(id);
     }
-    let mut session = InferenceSession::open(cluster, cfg.clone(), session_id)?;
-    let w = cfg.prefill_width;
+    // prompt geometry is derived from the prompt, not configured
+    let w = head.derive_prefill_width(1, prefix.len())?;
+    let shape = PromptShape { batch: 1, prefix_len: prefix.len(), prefill_width: w };
+    let mut session = InferenceSession::open(cluster, cfg.clone(), shape, session_id)?;
     let mut ids = vec![0i32; w];
     ids[..prefix.len()].copy_from_slice(prefix);
     let h0 = head.embed(&Tensor::from_i32(&[1, w], &ids))?;

@@ -1,6 +1,9 @@
-//! Distributed soft prompt tuning (§2.2, Figure 4): the client owns
-//! trainable prompts + a classification head; servers run frozen blocks
-//! forward AND backward, returning activation gradients.
+//! Distributed soft prompt tuning (§2.2, Figure 4) **through the public
+//! HTTP API**: the client owns trainable prompts + a classification
+//! head; servers run frozen blocks forward AND backward behind
+//! `POST /api/v1/forward` / `POST /api/v1/backward` — the raw-activation
+//! access that makes the swarm a research platform, not just a text
+//! endpoint.
 //!
 //! Task: synthetic 2-class sequence classification — class decided by
 //! which half of the vocabulary dominates the sequence. Real PJRT
@@ -10,13 +13,16 @@
 //! make artifacts && cargo run --release --example prompt_tune
 //! ```
 
+use petals::api::ApiServer;
 use petals::config::Rng;
 use petals::coordinator::routing::RouteQuery;
-use petals::finetune::PromptTuner;
+use petals::coordinator::session::SessionConfig;
+use petals::finetune::{HttpActivations, PromptTuner};
 use petals::model::tensor::Tensor;
 use petals::model::{ModelHome, Precision, Weights};
 use petals::runtime::Runtime;
 use petals::server::local::spawn_even_swarm;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 fn main() -> petals::Result<()> {
@@ -24,7 +30,7 @@ fn main() -> petals::Result<()> {
     let g = home.geometry().clone();
     // fine-tuning entries are exported at batch 4, seq 64
     let (b, s) = (4usize, 64usize);
-    println!("== distributed soft prompt tuning (batch {b}, seq {s}) ==");
+    println!("== distributed soft prompt tuning over the HTTP API (batch {b}, seq {s}) ==");
 
     let rt = Arc::new(Runtime::load_filtered(&home, |n| {
         n == format!("embed_b{b}_s{s}")
@@ -33,18 +39,31 @@ fn main() -> petals::Result<()> {
     })?);
 
     // servers host frozen blocks (2 servers, f16 — backward needs f16)
-    let swarm = spawn_even_swarm(&home, rt.clone(), 2, Precision::F16)?;
+    let swarm = Arc::new(spawn_even_swarm(&home, rt.clone(), 2, Precision::F16)?);
     let weights = Weights::load(&home, Precision::F16)?;
-    let head = petals::coordinator::client::LocalHead::new(&home, rt.clone(), &weights)?;
+    let head = Arc::new(petals::coordinator::client::LocalHead::new(&home, rt.clone(), &weights)?);
+
+    // the public API surface in front of the swarm
+    let cfg = SessionConfig {
+        n_blocks: g.n_layers,
+        max_new: 32,
+        route: RouteQuery {
+            n_blocks: g.n_layers,
+            msg_bytes: (b * s * g.hidden * 4) as u64,
+            ..Default::default()
+        },
+        max_recoveries: 2,
+        prefix_tokens: vec![],
+    };
+    let api = ApiServer::new(swarm, head.clone(), cfg);
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = api.serve("127.0.0.1:0", stop.clone())?;
+    println!("api server on http://{addr} (forward/backward over raw activations)\n");
+    let backend = HttpActivations { addr };
 
     let n_prompts = 4;
     let n_classes = 2;
     let mut tuner = PromptTuner::new(n_prompts, g.hidden, n_classes, 0.01, 0);
-    let route = RouteQuery {
-        n_blocks: g.n_layers,
-        msg_bytes: (b * s * g.hidden * 4) as u64,
-        ..Default::default()
-    };
 
     let mut rng = Rng::new(42);
     let half = (g.vocab / 2) as i32;
@@ -66,7 +85,7 @@ fn main() -> petals::Result<()> {
         // client-side embedding (prompt slots get overwritten by the
         // trainable prompt vectors inside train_step)
         let embeds = head.embed(&Tensor::from_i32(&[b, s], &ids))?;
-        let report = tuner.train_step(&swarm, &route, &embeds, &labels, s - 1)?;
+        let report = tuner.train_step(&backend, &embeds, &labels, s - 1)?;
         final_acc = report.accuracy;
         println!("{step:4} | {:.4} | {:.2}", report.loss, report.accuracy);
     }
@@ -82,5 +101,6 @@ fn main() -> petals::Result<()> {
     println!("published to hub: demo/synthetic-cls-prompts @ {hash}");
     let found = hub.search(&tags);
     println!("hub search by tags found {} module(s)", found.len());
+    stop.store(true, Ordering::SeqCst);
     Ok(())
 }

@@ -41,9 +41,6 @@ fn main() -> petals::Result<()> {
     let prefix: Vec<i32> = vec![11, 22, 33, 44, 55, 66, 77, 88];
     let cfg = SessionConfig {
         n_blocks: g.n_layers,
-        batch: 1,
-        prefill_width: 128,
-        prefix_len: prefix.len(),
         max_new: 32,
         route: RouteQuery {
             n_blocks: g.n_layers,

@@ -67,9 +67,6 @@ fn main() -> petals::Result<()> {
     let n_requests = 12;
     let cfg = SessionConfig {
         n_blocks: g.n_layers,
-        batch: 1,
-        prefill_width: 128,
-        prefix_len,
         max_new: n_new,
         route: RouteQuery {
             n_blocks: g.n_layers,

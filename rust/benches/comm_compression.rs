@@ -120,9 +120,6 @@ fn main() -> petals::Result<()> {
 
     let cfg = SessionConfig {
         n_blocks: g.n_layers,
-        batch: 1,
-        prefill_width: 128,
-        prefix_len: 8,
         max_new: 16,
         route: RouteQuery {
             n_blocks: g.n_layers,

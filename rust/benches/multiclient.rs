@@ -84,9 +84,6 @@ fn main() -> petals::Result<()> {
     let head = Arc::new(LocalHead::new(&home, rt, &weights)?);
     let cfg = SessionConfig {
         n_blocks: g.n_layers,
-        batch: 1,
-        prefill_width: 128,
-        prefix_len: 8,
         max_new: 8,
         route: RouteQuery {
             n_blocks: g.n_layers,

@@ -1,0 +1,658 @@
+//! HTTP API server (v2) — the swarm's client-facing surface.
+//!
+//! A minimal HTTP/1.1 server (hand-rolled — no web framework in the
+//! offline crate set) exposing the typed, streaming API the paper's
+//! interactive workloads need:
+//!
+//! | Endpoint | Purpose |
+//! |---|---|
+//! | `POST /api/v1/generate` | batch generation (a `collect()` over the stream path) |
+//! | `POST /api/v1/stream` | chunked NDJSON: one event per token **as produced**, then stats |
+//! | `POST /api/v1/forward` | final-layer hidden states for a prompt (or raw embeddings) |
+//! | `POST /api/v1/backward` | activation gradients through the frozen blocks |
+//! | `POST /api/v1/session/open` | persistent session: prefill once, keep server-side KV |
+//! | `POST /api/v1/session/append` | feed tokens + generate, reusing the KV (chat turns) |
+//! | `POST /api/v1/session/close` | release the session's pool pages |
+//! | `GET /health` | liveness |
+//!
+//! Requests and responses are typed ([`crate::api::types`]); errors
+//! carry stable codes and HTTP statuses (a too-long prompt is a 413
+//! `prompt_too_long`, never a silent truncation). Persistent sessions
+//! idle past [`ApiServer::session_ttl`] are garbage-collected so a
+//! crashed client cannot leak server-side KV-pool pages. Schema and
+//! curl examples: `docs/HTTP_API.md`.
+
+use crate::api::stream::{StreamEvent, StreamStats, TokenEvent};
+use crate::api::types::{
+    parse_ids, tensor_from_json, tensor_to_json, ApiError, GenerateRequest, SamplerSpec,
+};
+use crate::config::json::Value;
+use crate::coordinator::client::{
+    GenOptions, LocalHead, SamplerState, SwarmGenerator, TokenStep,
+};
+use crate::coordinator::session::{
+    chain_backward, chain_forward, ChainClient, InferenceSession, PromptShape, SessionConfig,
+};
+use crate::error::{Error, Result};
+use crate::model::tensor::Tensor;
+use std::collections::{BTreeMap, HashMap};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A persistent API session: a live swarm session plus the local decode
+/// state needed to continue it (sampler RNG, last hidden state).
+struct OpenApiSession<C: ChainClient> {
+    inner: InferenceSession<Arc<C>>,
+    sampler: SamplerState,
+    /// Hidden state [1,H] feeding the next lm_head call.
+    last: Tensor,
+    last_used: Instant,
+}
+
+/// The API backend over any swarm implementation.
+pub struct ApiServer<C: ChainClient> {
+    pub swarm: Arc<C>,
+    pub head: Arc<LocalHead>,
+    pub cfg: SessionConfig,
+    next_session: AtomicU64,
+    sessions: Mutex<HashMap<u64, OpenApiSession<C>>>,
+    /// Persistent sessions idle longer than this are closed by the GC
+    /// sweep (their swarm-side KV pages are released).
+    pub session_ttl: Duration,
+}
+
+/// Largest request body the server will buffer. Requests are JSON —
+/// even the raw-activation endpoints at BLOOM-mini scale stay well
+/// under this — and an unbounded `Content-Length` allocation would be
+/// a one-request DoS (the TCP codec caps its frames for the same
+/// reason).
+pub const MAX_HTTP_BODY: usize = 64 << 20;
+
+fn num(n: f64) -> Value {
+    Value::Num(n)
+}
+
+fn ids_value(ids: &[i32]) -> Value {
+    Value::Arr(ids.iter().map(|&t| Value::Num(t as f64)).collect())
+}
+
+impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
+    pub fn new(swarm: Arc<C>, head: Arc<LocalHead>, cfg: SessionConfig) -> Arc<Self> {
+        Self::with_session_ttl(swarm, head, cfg, Duration::from_secs(600))
+    }
+
+    pub fn with_session_ttl(
+        swarm: Arc<C>,
+        head: Arc<LocalHead>,
+        cfg: SessionConfig,
+        session_ttl: Duration,
+    ) -> Arc<Self> {
+        Arc::new(ApiServer {
+            swarm,
+            head,
+            cfg,
+            next_session: AtomicU64::new(1000),
+            sessions: Mutex::new(HashMap::new()),
+            session_ttl,
+        })
+    }
+
+    fn fresh_id(&self) -> u64 {
+        self.next_session.fetch_add(1, Ordering::SeqCst)
+    }
+
+    fn generator(&self, sampler: &SamplerSpec) -> SwarmGenerator<'_, C> {
+        SwarmGenerator {
+            swarm: self.swarm.as_ref(),
+            head: self.head.as_ref(),
+            cfg: self.cfg.clone(),
+            sampler: sampler.to_sampler(),
+        }
+    }
+
+    fn gen_options(&self, req: &GenerateRequest) -> GenOptions {
+        GenOptions {
+            max_new: req.max_new_tokens.min(self.cfg.max_new),
+            stop_tokens: req.stop_tokens.clone(),
+            want_logits: req.return_logits,
+            want_hidden: req.return_hidden,
+        }
+    }
+
+    // --- /api/v1/generate ---------------------------------------------------
+
+    /// Handle one batch generation request body; returns the JSON reply
+    /// body. Internally a `collect()` over the same [`SwarmGenerator::
+    /// stream`] the streaming endpoint drives, so both produce identical
+    /// tokens for identical requests.
+    pub fn generate_json(&self, body: &str) -> Result<String> {
+        let v = Value::parse(body)?;
+        let req = GenerateRequest::from_json(&v, self.head.vocab)?;
+        let gen = self.generator(&req.sampler);
+        let mut stream = gen.stream(
+            std::slice::from_ref(&req.inputs),
+            self.gen_options(&req),
+            self.fresh_id(),
+        )?;
+        let mut steps: Vec<TokenStep> = Vec::new();
+        while let Some(step) = stream.next_step()? {
+            steps.push(step);
+        }
+        let result = stream.finish()?;
+
+        let mut obj = BTreeMap::new();
+        obj.insert("outputs".to_string(), ids_value(&result.tokens[0]));
+        obj.insert("steps".to_string(), num(result.steps as f64));
+        obj.insert(
+            "steps_per_s".to_string(),
+            num(result.steps as f64 / result.wall.as_secs_f64().max(1e-9)),
+        );
+        obj.insert("recoveries".to_string(), num(result.recoveries as f64));
+        obj.insert("finish".to_string(), Value::Str(result.finish.as_str().to_string()));
+        if req.return_logits {
+            obj.insert(
+                "logits".to_string(),
+                Value::Arr(
+                    steps
+                        .iter()
+                        .map(|s| {
+                            let l = s.logits.as_ref().expect("requested logits");
+                            Value::Arr(l.as_f32().iter().map(|&x| num(x as f64)).collect())
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        if req.return_hidden {
+            obj.insert(
+                "hidden".to_string(),
+                Value::Arr(
+                    steps
+                        .iter()
+                        .map(|s| {
+                            let h = s.hidden.as_ref().expect("requested hidden");
+                            Value::Arr(h.as_f32().iter().map(|&x| num(x as f64)).collect())
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        Ok(Value::Obj(obj).render())
+    }
+
+    // --- /api/v1/forward & /api/v1/backward ---------------------------------
+
+    /// Final-layer hidden states for a prompt — the research /
+    /// prompt-tuning workload ("PETALS natively exposes hidden states
+    /// of served models"). Accepts either `inputs` (token ids, embedded
+    /// locally; the reply is trimmed to the valid positions and matches
+    /// `InferenceSession::prefill` output exactly) or `embeds` (raw
+    /// [B,S,H] activations, e.g. with trainable prompts spliced in).
+    pub fn forward_json(&self, body: &str) -> Result<String> {
+        let v = Value::parse(body)?;
+        let mut obj = BTreeMap::new();
+        if let Some(emb) = v.opt("embeds") {
+            let h0 = tensor_from_json(emb)?;
+            if h0.shape.len() != 3 {
+                return Err(Error::Parse("embeds must be [B,S,H]".into()));
+            }
+            let out = chain_forward(self.swarm.as_ref(), &self.cfg.route, h0)?;
+            obj.insert("hidden".to_string(), tensor_to_json(&out));
+        } else {
+            let inputs = parse_ids(&v, "inputs", self.head.vocab)?;
+            let prefix_len = inputs.len();
+            let w = self.head.derive_prefill_width(1, prefix_len)?;
+            let mut ids = vec![0i32; w];
+            ids[..prefix_len].copy_from_slice(&inputs);
+            let h0 = self.head.embed(&Tensor::from_i32(&[1, w], &ids))?;
+            let out = chain_forward(self.swarm.as_ref(), &self.cfg.route, h0)?;
+            // trim the padded tail: clients see hidden states for their
+            // prompt positions only, shape [prefix_len, H]
+            let hidden = self.head.hidden;
+            let valid = &out.as_f32()[..prefix_len * hidden];
+            obj.insert(
+                "hidden".to_string(),
+                tensor_to_json(&Tensor::from_f32(&[prefix_len, hidden], valid)),
+            );
+            obj.insert("prefix_len".to_string(), num(prefix_len as f64));
+        }
+        Ok(Value::Obj(obj).render())
+    }
+
+    /// Gradient of the chain wrt raw input activations: `{embeds, grad}`
+    /// (both [B,S,H]) → `{grad}`. Servers recompute their span forward
+    /// internally; parameters stay frozen (§2.2).
+    pub fn backward_json(&self, body: &str) -> Result<String> {
+        let v = Value::parse(body)?;
+        let x0 = tensor_from_json(v.get("embeds")?)?;
+        let g_out = tensor_from_json(v.get("grad")?)?;
+        if x0.shape != g_out.shape || x0.shape.len() != 3 {
+            return Err(Error::Parse("embeds and grad must share one [B,S,H] shape".into()));
+        }
+        let g_in = chain_backward(self.swarm.as_ref(), &self.cfg.route, &x0, &g_out)?;
+        let mut obj = BTreeMap::new();
+        obj.insert("grad".to_string(), tensor_to_json(&g_in));
+        Ok(Value::Obj(obj).render())
+    }
+
+    // --- persistent sessions -------------------------------------------------
+
+    /// Open a persistent session: prefill the prompt once; the swarm
+    /// keeps the KV server-side so later `append` calls (chat turns)
+    /// skip re-prefilling the whole history.
+    pub fn session_open_json(&self, body: &str) -> Result<String> {
+        let v = Value::parse(body)?;
+        let inputs = parse_ids(&v, "inputs", self.head.vocab)?;
+        let sampler = SamplerSpec::from_json(v.opt("sampler"))?;
+        let prefix_len = inputs.len();
+        let w = self.head.derive_prefill_width(1, prefix_len)?;
+        let shape = PromptShape { batch: 1, prefix_len, prefill_width: w };
+        let mut cfg = self.cfg.clone();
+        cfg.prefix_tokens = inputs.clone();
+        if cfg.route.prefix_fp.is_none() {
+            cfg.route.prefix_fp = Some(crate::server::prefixcache::template_fingerprint(
+                &inputs,
+                crate::server::PAGE_TOKENS,
+            ));
+        }
+        // embed BEFORE opening: an embed failure after the open would
+        // strand per-server sessions (InferenceSession has no Drop)
+        let mut ids = vec![0i32; w];
+        ids[..prefix_len].copy_from_slice(&inputs);
+        let h0 = self.head.embed(&Tensor::from_i32(&[1, w], &ids))?;
+        let id = self.fresh_id();
+        let mut session = InferenceSession::open(self.swarm.clone(), cfg, shape, id)?;
+        let h_pre = match session.prefill(h0) {
+            Ok(h) => h,
+            Err(e) => {
+                session.close();
+                return Err(e);
+            }
+        };
+        let hidden = self.head.hidden;
+        let last = Tensor::from_f32(
+            &[1, hidden],
+            &h_pre.as_f32()[(prefix_len - 1) * hidden..prefix_len * hidden],
+        );
+        self.sessions.lock().unwrap().insert(
+            id,
+            OpenApiSession {
+                inner: session,
+                sampler: sampler.to_sampler().start(),
+                last,
+                last_used: Instant::now(),
+            },
+        );
+        let mut obj = BTreeMap::new();
+        obj.insert("session".to_string(), num(id as f64));
+        obj.insert("prefix_len".to_string(), num(prefix_len as f64));
+        Ok(Value::Obj(obj).render())
+    }
+
+    /// Append tokens to a session (teacher-forced through the existing
+    /// KV) and/or generate new ones. The server-side cache holds the
+    /// whole conversation, so a chat turn costs `len(inputs) + max_new`
+    /// decode steps — no re-prefill of the history.
+    pub fn session_append_json(&self, body: &str) -> Result<String> {
+        let v = Value::parse(body)?;
+        let id = v.get("session")?.u64()?;
+        let extra: Vec<i32> = match v.opt("inputs") {
+            Some(_) => parse_ids(&v, "inputs", self.head.vocab)?,
+            None => vec![],
+        };
+        // same budget clamp as the generate/stream endpoints — one
+        // request must not monopolize the handler or grow the KV
+        // reservation unboundedly
+        let max_new = v
+            .opt("max_new_tokens")
+            .map(|x| x.usize())
+            .transpose()?
+            .unwrap_or(8)
+            .min(self.cfg.max_new);
+        let stop_tokens: Vec<i32> = match v.opt("stop_tokens") {
+            Some(arr) => arr.arr()?.iter().map(|x| Ok(x.f64()? as i32)).collect::<Result<_>>()?,
+            None => vec![],
+        };
+        // take the session out of the map for the duration of the call:
+        // long decode loops must not hold the map lock, and concurrent
+        // appends to one session would interleave cache writes
+        let mut entry = self
+            .sessions
+            .lock()
+            .unwrap()
+            .remove(&id)
+            .ok_or_else(|| Error::NotFound(format!("session {id}")))?;
+        let started = Instant::now();
+        let result = (|| -> Result<(Vec<i32>, &'static str)> {
+            let hidden = self.head.hidden;
+            let mut step_once = |entry: &mut OpenApiSession<C>, token: i32| -> Result<()> {
+                let h = self.head.embed(&Tensor::from_i32(&[1, 1], &[token]))?;
+                let h_out = entry.inner.step(h)?;
+                entry.last = Tensor::from_f32(&[1, hidden], h_out.as_f32());
+                Ok(())
+            };
+            for &t in &extra {
+                step_once(&mut entry, t)?;
+            }
+            let mut out = Vec::with_capacity(max_new);
+            let mut finish = "length";
+            for _ in 0..max_new {
+                let logits = self.head.lm_head(&entry.last)?;
+                let next = entry.sampler.sample(&logits)[0];
+                out.push(next);
+                // the sampled token always enters the KV — the next
+                // append's context must include it
+                step_once(&mut entry, next)?;
+                if stop_tokens.contains(&next) {
+                    finish = "stop";
+                    break;
+                }
+            }
+            Ok((out, finish))
+        })();
+        match result {
+            Ok((out, finish)) => {
+                entry.last_used = Instant::now();
+                let cache_len = entry.inner.cache_len();
+                self.sessions.lock().unwrap().insert(id, entry);
+                let mut obj = BTreeMap::new();
+                obj.insert("outputs".to_string(), ids_value(&out));
+                obj.insert("steps".to_string(), num(out.len() as f64));
+                obj.insert(
+                    "steps_per_s".to_string(),
+                    num(out.len() as f64 / started.elapsed().as_secs_f64().max(1e-9)),
+                );
+                obj.insert("cache_len".to_string(), num(cache_len as f64));
+                obj.insert("finish".to_string(), Value::Str(finish.to_string()));
+                Ok(Value::Obj(obj).render())
+            }
+            Err(e) => {
+                // a failed step may have desynced client/server state —
+                // close rather than reinsert a corrupt session
+                entry.inner.close();
+                Err(e)
+            }
+        }
+    }
+
+    pub fn session_close_json(&self, body: &str) -> Result<String> {
+        let v = Value::parse(body)?;
+        let id = v.get("session")?.u64()?;
+        let entry = self
+            .sessions
+            .lock()
+            .unwrap()
+            .remove(&id)
+            .ok_or_else(|| Error::NotFound(format!("session {id}")))?;
+        entry.inner.close();
+        Ok(r#"{"closed":true}"#.to_string())
+    }
+
+    /// Close sessions idle past the TTL; returns how many were swept.
+    /// (The gateway-side half of abandoned-session cleanup; servers run
+    /// their own sweep for clients that bypass this gateway.)
+    pub fn sweep_sessions(&self) -> usize {
+        let now = Instant::now();
+        let expired: Vec<OpenApiSession<C>> = {
+            let mut map = self.sessions.lock().unwrap();
+            let dead: Vec<u64> = map
+                .iter()
+                .filter(|(_, s)| now.duration_since(s.last_used) >= self.session_ttl)
+                .map(|(&id, _)| id)
+                .collect();
+            dead.into_iter().filter_map(|id| map.remove(&id)).collect()
+        };
+        let n = expired.len();
+        for s in expired {
+            s.inner.close();
+        }
+        n
+    }
+
+    /// Live persistent sessions (tests / introspection).
+    pub fn open_sessions(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+
+    // --- HTTP plumbing -------------------------------------------------------
+
+    /// Serve HTTP on `addr` until `stop` is set; also runs the session
+    /// GC sweep. Returns the bound address.
+    pub fn serve(self: Arc<Self>, addr: &str, stop: Arc<AtomicBool>) -> Result<String> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?.to_string();
+        let gc = self.clone();
+        let gc_stop = stop.clone();
+        std::thread::spawn(move || {
+            let beat = (gc.session_ttl / 4).max(Duration::from_millis(50));
+            while !gc_stop.load(Ordering::SeqCst) {
+                std::thread::sleep(beat);
+                gc.sweep_sessions();
+            }
+        });
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let backend = self.clone();
+                std::thread::spawn(move || {
+                    let _ = backend.handle_conn(stream);
+                });
+            }
+        });
+        Ok(local)
+    }
+
+    fn handle_conn(&self, stream: std::net::TcpStream) -> Result<()> {
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut stream = stream;
+        loop {
+            // request line
+            let mut line = String::new();
+            if reader.read_line(&mut line)? == 0 {
+                return Ok(()); // closed
+            }
+            let mut parts = line.split_whitespace();
+            let method = parts.next().unwrap_or("").to_string();
+            let path = parts.next().unwrap_or("").to_string();
+            // headers
+            let mut content_len = 0usize;
+            let mut keep_alive = true;
+            loop {
+                let mut h = String::new();
+                reader.read_line(&mut h)?;
+                let h = h.trim();
+                if h.is_empty() {
+                    break;
+                }
+                let lower = h.to_ascii_lowercase();
+                if let Some(v) = lower.strip_prefix("content-length:") {
+                    content_len = v.trim().parse().unwrap_or(0);
+                }
+                if lower.starts_with("connection:") && lower.contains("close") {
+                    keep_alive = false;
+                }
+            }
+            if content_len > MAX_HTTP_BODY {
+                // refuse before allocating — a hostile Content-Length
+                // must not abort the process on a failed allocation
+                let e = Error::Parse(format!(
+                    "request body {content_len} bytes exceeds the {MAX_HTTP_BODY}-byte cap"
+                ));
+                write_error_response(&mut stream, &e)?;
+                return Ok(());
+            }
+            let mut body = vec![0u8; content_len];
+            reader.read_exact(&mut body)?;
+            let body = String::from_utf8_lossy(&body).to_string();
+
+            if (method.as_str(), path.as_str()) == ("POST", "/api/v1/stream") {
+                // streaming response: chunked NDJSON, connection closes
+                // after the terminal event
+                self.handle_stream(&body, &mut stream)?;
+                return Ok(());
+            }
+
+            let result = match (method.as_str(), path.as_str()) {
+                ("POST", "/api/v1/generate") => Some(self.generate_json(&body)),
+                ("POST", "/api/v1/forward") => Some(self.forward_json(&body)),
+                ("POST", "/api/v1/backward") => Some(self.backward_json(&body)),
+                ("POST", "/api/v1/session/open") => Some(self.session_open_json(&body)),
+                ("POST", "/api/v1/session/append") => Some(self.session_append_json(&body)),
+                ("POST", "/api/v1/session/close") => Some(self.session_close_json(&body)),
+                ("GET", "/health") => Some(Ok("{\"status\":\"ok\"}".to_string())),
+                _ => None,
+            };
+            let (status, reply) = match result {
+                Some(Ok(json)) => ("200 OK".to_string(), json),
+                Some(Err(e)) => {
+                    let ae = ApiError::from_error(&e);
+                    (ae.status_line(), ae.body())
+                }
+                None => (
+                    "404 Not Found".to_string(),
+                    ApiError {
+                        status: 404,
+                        code: "not_found",
+                        message: format!("no route {method} {path}"),
+                    }
+                    .body(),
+                ),
+            };
+            write!(
+                stream,
+                "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+                reply.len(),
+                reply
+            )?;
+            stream.flush()?;
+            if !keep_alive {
+                return Ok(());
+            }
+        }
+    }
+
+    /// `POST /api/v1/stream`: one chunk per event, flushed as produced,
+    /// so the client sees the first token while generation continues.
+    fn handle_stream<W: Write>(&self, body: &str, out: &mut W) -> Result<()> {
+        let parsed = (|| -> Result<(GenerateRequest, Value)> {
+            let v = Value::parse(body)?;
+            let req = GenerateRequest::from_json(&v, self.head.vocab)?;
+            Ok((req, v))
+        })();
+        let (req, _v) = match parsed {
+            Ok(p) => p,
+            Err(e) => return write_error_response(out, &e),
+        };
+        let gen = self.generator(&req.sampler);
+        let mut stream =
+            match gen.stream(std::slice::from_ref(&req.inputs), self.gen_options(&req), self.fresh_id()) {
+                Ok(s) => s,
+                Err(e) => return write_error_response(out, &e),
+            };
+        write!(
+            out,
+            "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+        )?;
+        out.flush()?;
+        let started = Instant::now();
+        loop {
+            match stream.next_step() {
+                Ok(Some(step)) => {
+                    let ev = StreamEvent::Token(TokenEvent {
+                        step: step.step,
+                        token: step.tokens[0],
+                        step_s: step.step_s,
+                        logits: step.logits.as_ref().map(|t| t.as_f32().to_vec()),
+                        hidden: step.hidden.as_ref().map(|t| t.as_f32().to_vec()),
+                    });
+                    write_chunk_line(out, &ev.render())?;
+                }
+                Ok(None) => {
+                    let wall_s = started.elapsed().as_secs_f64();
+                    let ev = StreamEvent::Stats(StreamStats {
+                        steps: stream.steps(),
+                        steps_per_s: stream.steps() as f64 / wall_s.max(1e-9),
+                        recoveries: stream.recoveries(),
+                        finish: stream
+                            .finish_reason()
+                            .map(|f| f.as_str().to_string())
+                            .unwrap_or_else(|| "length".to_string()),
+                        wall_s,
+                    });
+                    write_chunk_line(out, &ev.render())?;
+                    break;
+                }
+                Err(e) => {
+                    // the 200 was already committed — report in-band
+                    let ae = ApiError::from_error(&e);
+                    let ev = StreamEvent::Error {
+                        code: ae.code.to_string(),
+                        message: ae.message,
+                    };
+                    write_chunk_line(out, &ev.render())?;
+                    break;
+                }
+            }
+        }
+        out.write_all(b"0\r\n\r\n")?;
+        out.flush()?;
+        Ok(())
+    }
+}
+
+fn write_chunk_line<W: Write>(out: &mut W, line: &str) -> Result<()> {
+    // one event per chunk, flushed immediately: the whole point of the
+    // endpoint is that events leave the server as they are produced
+    write!(out, "{:x}\r\n{line}\n\r\n", line.len() + 1)?;
+    out.flush()?;
+    Ok(())
+}
+
+fn write_error_response<W: Write>(out: &mut W, e: &Error) -> Result<()> {
+    let ae = ApiError::from_error(e);
+    let body = ae.body();
+    write!(
+        out,
+        "HTTP/1.1 {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        ae.status_line(),
+        body.len(),
+        body
+    )?;
+    out.flush()?;
+    Ok(())
+}
+
+/// Tiny HTTP client for tests/examples (same offline constraint).
+/// Returns the body regardless of status; use [`http_post_status`] when
+/// the code matters.
+pub fn http_post(addr: &str, path: &str, body: &str) -> Result<String> {
+    http_post_status(addr, path, body).map(|(_, b)| b)
+}
+
+/// POST returning `(status, body)` (typed-error tests need the code).
+pub fn http_post_status(addr: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    write!(
+        stream,
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    let mut buf = String::new();
+    BufReader::new(stream).read_to_string(&mut buf)?;
+    let status: u16 = buf
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| Error::Protocol("bad status line".into()))?;
+    let idx = buf
+        .find("\r\n\r\n")
+        .ok_or_else(|| Error::Protocol("no http body".into()))?;
+    Ok((status, buf[idx + 4..].to_string()))
+}

@@ -1,201 +1,57 @@
-//! Chat-application backend (§2.1 "Chat application", Figure 3).
+//! Client-facing HTTP API (v2): typed requests, per-token streaming,
+//! and exposed hidden states / logits.
 //!
-//! "The backend is a Flask web server that uses the PETALS client to run
-//! inference over the swarm. It accepts requests via HTTP [...] so
-//! anyone can develop their own applications using our backend."
+//! The paper's differentiator over hosted inference APIs is that PETALS
+//! "natively exposes hidden states of served models" and serves
+//! *interactive* sessions at ~1 step/s. This module is that surface:
 //!
-//! Here: a minimal HTTP/1.1 server (hand-rolled — no web framework in
-//! the offline crate set) exposing `POST /api/v1/generate` with a JSON
-//! body `{"inputs": [ids...], "max_new_tokens": n}` and a JSON reply
-//! `{"outputs": [ids...], "steps_per_s": x}`. Token ids in/out: the demo
-//! model's tokenizer is synthetic, so the chat example maps characters
-//! to ids client-side.
+//! - [`types`] — typed request/response structs with stable error codes
+//!   (a too-long prompt is HTTP 413 `prompt_too_long`, never a silent
+//!   pad/truncate like the v1 backend);
+//! - [`stream`] — NDJSON per-token events + a chunked-decoding HTTP
+//!   client, so callers observe each token (optionally with its logits
+//!   and final-layer hidden state) while generation is still running;
+//! - [`http`] — the [`ApiServer`]: batch + streaming generation,
+//!   `/api/v1/forward` / `backward` raw-activation access (the
+//!   prompt-tuning workload), and persistent `/api/v1/session/*`
+//!   endpoints that keep server-side KV between chat turns, with a TTL
+//!   sweep for abandoned sessions.
+//!
+//! Wire reference: `docs/HTTP_API.md`.
 
-use crate::config::json::Value;
-use crate::coordinator::client::{LocalHead, Sampler, SwarmGenerator};
-use crate::coordinator::session::{ChainClient, SessionConfig};
-use crate::error::{Error, Result};
-use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Read, Write};
-use std::net::TcpListener;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+pub mod http;
+pub mod stream;
+pub mod types;
 
-/// Backend over any swarm implementation.
-pub struct ChatBackend<C: ChainClient> {
-    pub swarm: Arc<C>,
-    pub head: Arc<LocalHead>,
-    pub cfg: SessionConfig,
-    next_session: AtomicU64,
-}
+pub use http::{http_post, http_post_status, ApiServer};
+pub use stream::{http_post_stream, StreamEvent, StreamStats, TokenEvent};
+pub use types::{ApiError, GenerateRequest, SamplerSpec};
 
-impl<C: ChainClient + Send + Sync + 'static> ChatBackend<C> {
-    pub fn new(swarm: Arc<C>, head: Arc<LocalHead>, cfg: SessionConfig) -> Arc<Self> {
-        Arc::new(ChatBackend { swarm, head, cfg, next_session: AtomicU64::new(1000) })
-    }
-
-    /// Handle one generation request body; returns the JSON reply body.
-    pub fn generate_json(&self, body: &str) -> Result<String> {
-        let v = Value::parse(body)?;
-        let inputs: Vec<i32> = v
-            .get("inputs")?
-            .arr()?
-            .iter()
-            .map(|x| Ok(x.f64()? as i32))
-            .collect::<Result<Vec<_>>>()?;
-        let max_new = v.opt("max_new_tokens").map(|x| x.usize()).transpose()?.unwrap_or(8);
-        let vocab = self.head.vocab as i32;
-        if inputs.is_empty() || inputs.iter().any(|&t| t < 0 || t >= vocab) {
-            return Err(Error::Parse("inputs empty or out of vocab".into()));
-        }
-
-        // clamp/pad the prefix to the session's expected length
-        let want = self.cfg.prefix_len;
-        let mut prefix = inputs.clone();
-        prefix.truncate(want);
-        while prefix.len() < want {
-            prefix.insert(0, 0);
-        }
-        let max_new = max_new.min(self.cfg.max_new);
-
-        let sampler = Sampler::Greedy;
-        let generator = SwarmGenerator {
-            swarm: self.swarm.as_ref(),
-            head: self.head.as_ref(),
-            cfg: self.cfg.clone(),
-            sampler,
-        };
-        let session = self.next_session.fetch_add(1, Ordering::SeqCst);
-        let out = generator.generate(&[prefix], max_new, session)?;
-
-        let mut obj = BTreeMap::new();
-        obj.insert(
-            "outputs".to_string(),
-            Value::Arr(out.tokens[0].iter().map(|&t| Value::Num(t as f64)).collect()),
-        );
-        obj.insert(
-            "steps_per_s".to_string(),
-            Value::Num(out.steps as f64 / out.wall.as_secs_f64().max(1e-9)),
-        );
-        obj.insert("recoveries".to_string(), Value::Num(out.recoveries as f64));
-        Ok(Value::Obj(obj).render())
-    }
-
-    /// Serve HTTP on `addr` until `stop` is set. Returns the bound addr.
-    pub fn serve(self: Arc<Self>, addr: &str, stop: Arc<AtomicBool>) -> Result<String> {
-        let listener = TcpListener::bind(addr)?;
-        let local = listener.local_addr()?.to_string();
-        std::thread::spawn(move || {
-            for conn in listener.incoming() {
-                if stop.load(Ordering::SeqCst) {
-                    break;
-                }
-                let Ok(stream) = conn else { continue };
-                let backend = self.clone();
-                std::thread::spawn(move || {
-                    let _ = backend.handle_conn(stream);
-                });
-            }
-        });
-        Ok(local)
-    }
-
-    fn handle_conn(&self, stream: std::net::TcpStream) -> Result<()> {
-        let mut reader = BufReader::new(stream.try_clone()?);
-        let mut stream = stream;
-        loop {
-            // request line
-            let mut line = String::new();
-            if reader.read_line(&mut line)? == 0 {
-                return Ok(()); // closed
-            }
-            let mut parts = line.split_whitespace();
-            let method = parts.next().unwrap_or("").to_string();
-            let path = parts.next().unwrap_or("").to_string();
-            // headers
-            let mut content_len = 0usize;
-            let mut keep_alive = true;
-            loop {
-                let mut h = String::new();
-                reader.read_line(&mut h)?;
-                let h = h.trim();
-                if h.is_empty() {
-                    break;
-                }
-                let lower = h.to_ascii_lowercase();
-                if let Some(v) = lower.strip_prefix("content-length:") {
-                    content_len = v.trim().parse().unwrap_or(0);
-                }
-                if lower.starts_with("connection:") && lower.contains("close") {
-                    keep_alive = false;
-                }
-            }
-            let mut body = vec![0u8; content_len];
-            reader.read_exact(&mut body)?;
-            let body = String::from_utf8_lossy(&body).to_string();
-
-            let (status, reply) = match (method.as_str(), path.as_str()) {
-                ("POST", "/api/v1/generate") => match self.generate_json(&body) {
-                    Ok(json) => ("200 OK", json),
-                    Err(e) => ("400 Bad Request", format!("{{\"error\":\"{e}\"}}")),
-                },
-                ("GET", "/health") => ("200 OK", "{\"status\":\"ok\"}".to_string()),
-                _ => ("404 Not Found", "{\"error\":\"not found\"}".to_string()),
-            };
-            write!(
-                stream,
-                "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
-                reply.len(),
-                reply
-            )?;
-            stream.flush()?;
-            if !keep_alive {
-                return Ok(());
-            }
-        }
-    }
-}
-
-/// Tiny HTTP client for tests/examples (same offline constraint).
-pub fn http_post(addr: &str, path: &str, body: &str) -> Result<String> {
-    let mut stream = std::net::TcpStream::connect(addr)?;
-    write!(
-        stream,
-        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
-        body.len()
-    )?;
-    stream.flush()?;
-    let mut buf = String::new();
-    BufReader::new(stream).read_to_string(&mut buf)?;
-    let idx = buf
-        .find("\r\n\r\n")
-        .ok_or_else(|| Error::Protocol("no http body".into()))?;
-    Ok(buf[idx + 4..].to_string())
-}
-
-#[cfg(test)]
+#[cfg(all(test, feature = "artifact-tests"))]
 mod tests {
     use super::*;
+    use crate::config::json::Value;
+    use crate::coordinator::client::{LocalHead, Sampler, SwarmGenerator};
     use crate::coordinator::routing::RouteQuery;
+    use crate::coordinator::session::{InferenceSession, PromptShape, SessionConfig};
+    use crate::model::tensor::Tensor;
     use crate::model::{test_home, Precision, Weights};
     use crate::runtime::Runtime;
-    use crate::server::local::spawn_even_swarm;
+    use crate::server::local::{spawn_even_swarm, LocalCluster};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
 
-    fn backend() -> Arc<ChatBackend<crate::server::local::LocalCluster>> {
-        let home = test_home();
-        let g = home.geometry().clone();
-        let rt = Arc::new(
-            Runtime::load_filtered(&home, |n| n.contains("_b1_") || n.ends_with("_b1")).unwrap(),
-        );
-        let cluster = Arc::new(spawn_even_swarm(&home, rt.clone(), 2, Precision::F16).unwrap());
-        let weights = Weights::load(&home, Precision::F16).unwrap();
-        let head = Arc::new(LocalHead::new(&home, rt, &weights).unwrap());
-        let cfg = SessionConfig {
+    struct Fixture {
+        server: Arc<ApiServer<LocalCluster>>,
+        home: crate::model::ModelHome,
+    }
+
+    fn cfg_for(home: &crate::model::ModelHome) -> SessionConfig {
+        let g = home.geometry();
+        SessionConfig {
             n_blocks: g.n_layers,
-            batch: 1,
-            prefill_width: 128,
-            prefix_len: 8,
-            max_new: 8,
+            max_new: 64,
             route: RouteQuery {
                 n_blocks: g.n_layers,
                 msg_bytes: (g.hidden * 4) as u64,
@@ -203,42 +59,349 @@ mod tests {
             },
             max_recoveries: 2,
             prefix_tokens: vec![],
-        };
-        ChatBackend::new(cluster, head, cfg)
+        }
     }
 
-    #[test]
-    fn generate_json_roundtrip() {
-        let b = backend();
-        let reply = b
-            .generate_json(r#"{"inputs": [5, 6, 7, 8, 9, 10, 11, 12], "max_new_tokens": 4}"#)
-            .unwrap();
-        let v = Value::parse(&reply).unwrap();
-        assert_eq!(v.get("outputs").unwrap().arr().unwrap().len(), 4);
-        assert!(v.get("steps_per_s").unwrap().f64().unwrap() > 0.0);
+    fn fixture() -> Fixture {
+        let home = test_home();
+        let rt = Arc::new(
+            Runtime::load_filtered(&home, |n| n.contains("_b1_") || n.ends_with("_b1")).unwrap(),
+        );
+        let cluster = Arc::new(spawn_even_swarm(&home, rt.clone(), 2, Precision::F16).unwrap());
+        let weights = Weights::load(&home, Precision::F16).unwrap();
+        let head = Arc::new(LocalHead::new(&home, rt, &weights).unwrap());
+        let cfg = cfg_for(&home);
+        let server = ApiServer::new(cluster, head, cfg);
+        Fixture { server, home }
     }
 
-    #[test]
-    fn rejects_bad_inputs() {
-        let b = backend();
-        assert!(b.generate_json(r#"{"inputs": []}"#).is_err());
-        assert!(b.generate_json(r#"{"inputs": [999999]}"#).is_err());
-        assert!(b.generate_json("not json").is_err());
-    }
-
-    #[test]
-    fn http_end_to_end() {
-        let b = backend();
+    fn serve(f: &Fixture) -> (String, Arc<AtomicBool>) {
         let stop = Arc::new(AtomicBool::new(false));
-        let addr = b.serve("127.0.0.1:0", stop.clone()).unwrap();
-        let reply = http_post(
-            &addr,
-            "/api/v1/generate",
-            r#"{"inputs": [1,2,3,4,5,6,7,8], "max_new_tokens": 2}"#,
+        let addr = f.server.clone().serve("127.0.0.1:0", stop.clone()).unwrap();
+        (addr, stop)
+    }
+
+    fn outputs_of(reply: &str) -> Vec<i32> {
+        Value::parse(reply)
+            .unwrap()
+            .get("outputs")
+            .unwrap()
+            .arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.f64().unwrap() as i32)
+            .collect()
+    }
+
+    /// Regression (satellite #1): the v1 backend silently left-padded /
+    /// truncated every prompt to a fixed prefix_len, corrupting it. A
+    /// short prompt must now round-trip unmodified: the API's tokens
+    /// equal a direct in-process generation from the exact same ids.
+    #[test]
+    fn short_prompt_roundtrips_unmodified() {
+        let f = fixture();
+        let prompt = vec![5, 6, 7];
+        let reply = f
+            .server
+            .generate_json(r#"{"inputs": [5, 6, 7], "max_new_tokens": 4}"#)
+            .unwrap();
+        let got = outputs_of(&reply);
+        assert_eq!(got.len(), 4);
+
+        let gen = SwarmGenerator {
+            swarm: f.server.swarm.as_ref(),
+            head: f.server.head.as_ref(),
+            cfg: f.server.cfg.clone(),
+            sampler: Sampler::Greedy,
+        };
+        let want = gen.generate(&[prompt], 4, 999).unwrap();
+        assert_eq!(got, want.tokens[0], "HTTP path must see the prompt verbatim");
+    }
+
+    /// Over-long prompts get a typed 413, never truncation.
+    #[test]
+    fn overlong_prompt_rejected_typed() {
+        let f = fixture();
+        let (addr, stop) = serve(&f);
+        let too_long: Vec<String> = (0..200).map(|i| (i % 50).to_string()).collect();
+        let body = format!("{{\"inputs\":[{}],\"max_new_tokens\":1}}", too_long.join(","));
+        let (status, reply) = http_post_status(&addr, "/api/v1/generate", &body).unwrap();
+        assert_eq!(status, 413, "reply: {reply}");
+        let v = Value::parse(&reply).unwrap();
+        assert_eq!(
+            v.get("error").unwrap().get("code").unwrap().str().unwrap(),
+            "prompt_too_long"
+        );
+        // malformed JSON and unknown routes are typed too
+        let (status, reply) = http_post_status(&addr, "/api/v1/generate", "not json").unwrap();
+        assert_eq!(status, 400, "reply: {reply}");
+        let (status, _) = http_post_status(&addr, "/api/v1/nope", "{}").unwrap();
+        assert_eq!(status, 404);
+        stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Acceptance: two prompts of different lengths generate correctly
+    /// over the same backend, with no padding visible to the model —
+    /// the golden prompt reproduces the jax golden tokens through the
+    /// HTTP path, and a different-length prompt matches a direct
+    /// generation.
+    #[test]
+    fn variable_length_prompts_generate_correctly() {
+        let f = fixture();
+        let gg = &f.home.manifest.golden_generate;
+        let golden_prefix = f.home.load_tensor(&gg.prefix).unwrap().as_i32().to_vec();
+        let golden_tokens = f.home.load_tensor(&gg.tokens).unwrap().as_i32().to_vec();
+
+        let body = format!(
+            "{{\"inputs\":[{}],\"max_new_tokens\":{}}}",
+            golden_prefix.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(","),
+            golden_tokens.len()
+        );
+        let reply = f.server.generate_json(&body).unwrap();
+        assert_eq!(outputs_of(&reply), golden_tokens, "golden prompt diverged over HTTP");
+
+        // a different length over the same backend
+        let other: Vec<i32> = (0..23).map(|i| (i * 7 + 3) % 50).collect();
+        let body = format!(
+            "{{\"inputs\":[{}],\"max_new_tokens\":5}}",
+            other.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",")
+        );
+        let got = outputs_of(&f.server.generate_json(&body).unwrap());
+        let gen = SwarmGenerator {
+            swarm: f.server.swarm.as_ref(),
+            head: f.server.head.as_ref(),
+            cfg: f.server.cfg.clone(),
+            sampler: Sampler::Greedy,
+        };
+        let want = gen.generate(&[other], 5, 998).unwrap();
+        assert_eq!(got, want.tokens[0], "23-token prompt diverged over HTTP");
+    }
+
+    /// Acceptance: the streaming endpoint delivers max_new token events
+    /// plus one terminal stats event; the first event arrives before the
+    /// stream closes; batch and stream produce bitwise-identical tokens
+    /// for a fixed seed.
+    #[test]
+    fn streaming_end_to_end() {
+        let f = fixture();
+        let (addr, stop) = serve(&f);
+        let max_new = 6;
+        let body = format!(
+            "{{\"inputs\":[3,1,4,1,5],\"max_new_tokens\":{max_new},\
+             \"sampler\":{{\"kind\":\"top_p\",\"p\":0.9,\"temperature\":0.8,\"seed\":11}}}}"
+        );
+        let mut events: Vec<(StreamEvent, std::time::Instant)> = Vec::new();
+        let status = http_post_stream(&addr, "/api/v1/stream", &body, |line| {
+            events.push((StreamEvent::parse(line).unwrap(), std::time::Instant::now()));
+        })
+        .unwrap();
+        let closed_at = std::time::Instant::now();
+        assert_eq!(status, 200);
+        assert_eq!(events.len(), max_new + 1, "max_new token events + 1 stats event");
+        let mut tokens = Vec::new();
+        for (i, (ev, at)) in events.iter().enumerate() {
+            assert!(*at < closed_at, "event {i} must arrive before stream close");
+            match ev {
+                StreamEvent::Token(t) => {
+                    assert_eq!(t.step, i, "events must arrive in step order");
+                    assert!(t.step_s >= 0.0);
+                    tokens.push(t.token);
+                }
+                StreamEvent::Stats(s) => {
+                    assert_eq!(i, max_new, "stats must be the terminal event");
+                    assert_eq!(s.steps, max_new);
+                    assert_eq!(s.finish, "length");
+                    assert!(s.steps_per_s > 0.0);
+                }
+                StreamEvent::Error { code, message } => {
+                    panic!("unexpected error event {code}: {message}")
+                }
+            }
+        }
+
+        // bitwise-identical to the batch endpoint for the same seed
+        let reply = http_post(&addr, "/api/v1/generate", &body).unwrap();
+        assert_eq!(
+            outputs_of(&reply),
+            tokens,
+            "batch and stream must share one code path (fixed seed)"
+        );
+        stop.store(true, Ordering::SeqCst);
+    }
+
+    /// return_logits / return_hidden attach per-token arrays; a stop
+    /// token ends the stream early with finish == "stop".
+    #[test]
+    fn stream_exposes_logits_hidden_and_stops() {
+        let f = fixture();
+        let g = f.home.geometry().clone();
+        let (addr, stop) = serve(&f);
+        // learn the first greedy token, then stop on it
+        let first = outputs_of(
+            &f.server
+                .generate_json(r#"{"inputs":[9,8,7],"max_new_tokens":1}"#)
+                .unwrap(),
+        )[0];
+        let body = format!(
+            "{{\"inputs\":[9,8,7],\"max_new_tokens\":5,\"stop_tokens\":[{first}],\
+             \"return_logits\":true,\"return_hidden\":true}}"
+        );
+        let mut events = Vec::new();
+        http_post_stream(&addr, "/api/v1/stream", &body, |line| {
+            events.push(StreamEvent::parse(line).unwrap());
+        })
+        .unwrap();
+        assert_eq!(events.len(), 2, "one token (the stop token) + stats");
+        let StreamEvent::Token(t) = &events[0] else { panic!("expected token event") };
+        assert_eq!(t.token, first);
+        assert_eq!(t.logits.as_ref().unwrap().len(), g.vocab, "logits over the vocab");
+        assert_eq!(t.hidden.as_ref().unwrap().len(), g.hidden, "final-layer hidden state");
+        // the logits must actually argmax to the sampled (greedy) token
+        let l = t.logits.as_ref().unwrap();
+        let am = l
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0 as i32;
+        assert_eq!(am, first);
+        let StreamEvent::Stats(s) = &events[1] else { panic!("expected stats event") };
+        assert_eq!(s.finish, "stop");
+        stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Acceptance: `/api/v1/forward` returns hidden states that match
+    /// the in-process `InferenceSession::prefill` output exactly.
+    #[test]
+    fn forward_matches_prefill_exactly() {
+        let f = fixture();
+        let g = f.home.geometry().clone();
+        let prompt: Vec<i32> = (0..11).map(|i| (i * 3 + 2) % 40).collect();
+        let body = format!(
+            "{{\"inputs\":[{}]}}",
+            prompt.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",")
+        );
+        let reply = f.server.forward_json(&body).unwrap();
+        let v = Value::parse(&reply).unwrap();
+        assert_eq!(v.get("prefix_len").unwrap().usize().unwrap(), prompt.len());
+        let got = crate::api::types::tensor_from_json(v.get("hidden").unwrap()).unwrap();
+        assert_eq!(got.shape, vec![prompt.len(), g.hidden]);
+
+        // in-process reference: open a session and prefill
+        let head = f.server.head.as_ref();
+        let w = head.derive_prefill_width(1, prompt.len()).unwrap();
+        let shape = PromptShape { batch: 1, prefix_len: prompt.len(), prefill_width: w };
+        let mut ids = vec![0i32; w];
+        ids[..prompt.len()].copy_from_slice(&prompt);
+        let h0 = head.embed(&Tensor::from_i32(&[1, w], &ids)).unwrap();
+        let mut session = InferenceSession::open(
+            f.server.swarm.as_ref(),
+            f.server.cfg.clone(),
+            shape,
+            12345,
         )
         .unwrap();
-        let v = Value::parse(&reply).unwrap();
-        assert_eq!(v.get("outputs").unwrap().arr().unwrap().len(), 2);
+        let h_pre = session.prefill(h0).unwrap();
+        session.close();
+        let want = &h_pre.as_f32()[..prompt.len() * g.hidden];
+        assert_eq!(got.as_f32(), want, "forward endpoint must match prefill bit-for-bit");
+    }
+
+    /// Persistent sessions: a chat turn reuses the server-side KV. The
+    /// continued session must produce exactly the tokens a from-scratch
+    /// generation over the concatenated history produces.
+    #[test]
+    fn session_endpoints_reuse_kv_across_turns() {
+        let f = fixture();
+        let (addr, stop) = serve(&f);
+        let open = http_post(&addr, "/api/v1/session/open", r#"{"inputs":[4,5,6]}"#).unwrap();
+        let v = Value::parse(&open).unwrap();
+        let sid = v.get("session").unwrap().u64().unwrap();
+        assert_eq!(v.get("prefix_len").unwrap().usize().unwrap(), 3);
+
+        // turn 1: generate 2 tokens
+        let r1 = http_post(
+            &addr,
+            "/api/v1/session/append",
+            &format!(r#"{{"session":{sid},"max_new_tokens":2}}"#),
+        )
+        .unwrap();
+        let v1 = Value::parse(&r1).unwrap();
+        let t1 = outputs_of(&r1);
+        assert_eq!(t1.len(), 2);
+        // prefix (3) + 2 generated tokens all entered the cache
+        assert_eq!(v1.get("cache_len").unwrap().usize().unwrap(), 5);
+        let direct = {
+            let gen = SwarmGenerator {
+                swarm: f.server.swarm.as_ref(),
+                head: f.server.head.as_ref(),
+                cfg: f.server.cfg.clone(),
+                sampler: Sampler::Greedy,
+            };
+            gen.generate(&[vec![4, 5, 6]], 2, 7771).unwrap().tokens[0].clone()
+        };
+        assert_eq!(t1, direct, "session turn 1 diverged from direct generation");
+
+        // turn 2: append a user token, generate 1 more — must equal a
+        // fresh generation over the full history (KV-reuse correctness)
+        let r2 = http_post(
+            &addr,
+            "/api/v1/session/append",
+            &format!(r#"{{"session":{sid},"inputs":[9],"max_new_tokens":1}}"#),
+        )
+        .unwrap();
+        let t2 = outputs_of(&r2);
+        assert_eq!(Value::parse(&r2).unwrap().get("cache_len").unwrap().usize().unwrap(), 7);
+        let mut history = vec![4, 5, 6];
+        history.extend_from_slice(&t1);
+        history.push(9);
+        let want = {
+            let gen = SwarmGenerator {
+                swarm: f.server.swarm.as_ref(),
+                head: f.server.head.as_ref(),
+                cfg: f.server.cfg.clone(),
+                sampler: Sampler::Greedy,
+            };
+            gen.generate(&[history], 1, 7772).unwrap().tokens[0].clone()
+        };
+        assert_eq!(t2, want, "turn 2 must continue the KV exactly");
+
+        let closed = http_post(&addr, "/api/v1/session/close", &format!(r#"{{"session":{sid}}}"#))
+            .unwrap();
+        assert!(closed.contains("true"));
+        // closing twice is a typed 404
+        let (status, _) =
+            http_post_status(&addr, "/api/v1/session/close", &format!(r#"{{"session":{sid}}}"#))
+                .unwrap();
+        assert_eq!(status, 404);
         stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Abandoned persistent sessions are swept after the TTL, releasing
+    /// their swarm-side KV pages.
+    #[test]
+    fn gateway_session_gc_sweeps_idle() {
+        let home = test_home();
+        let rt = Arc::new(
+            Runtime::load_filtered(&home, |n| n.contains("_b1_") || n.ends_with("_b1")).unwrap(),
+        );
+        let cluster = Arc::new(spawn_even_swarm(&home, rt.clone(), 2, Precision::F16).unwrap());
+        let weights = Weights::load(&home, Precision::F16).unwrap();
+        let head = Arc::new(LocalHead::new(&home, rt, &weights).unwrap());
+        let server = ApiServer::with_session_ttl(
+            cluster.clone(),
+            head,
+            cfg_for(&home),
+            Duration::from_millis(60),
+        );
+        server.session_open_json(r#"{"inputs":[1,2,3,4]}"#).unwrap();
+        assert_eq!(server.open_sessions(), 1);
+        let free_before: u64 = cluster.ids().iter().map(|&id| cluster.node(id).unwrap().pool_stats().0).sum();
+        assert_eq!(server.sweep_sessions(), 0, "fresh session must survive the sweep");
+        std::thread::sleep(Duration::from_millis(90));
+        assert_eq!(server.sweep_sessions(), 1, "idle session must be swept");
+        assert_eq!(server.open_sessions(), 0);
+        let free_after: u64 = cluster.ids().iter().map(|&id| cluster.node(id).unwrap().pool_stats().0).sum();
+        assert!(free_after > free_before, "sweep must release swarm-side KV pages");
     }
 }

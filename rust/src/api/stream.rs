@@ -1,0 +1,286 @@
+//! NDJSON stream events + a chunked-transfer HTTP client.
+//!
+//! `POST /api/v1/stream` replies with `Transfer-Encoding: chunked` and
+//! one JSON event per line: a [`StreamEvent::Token`] per generated
+//! token as it is produced (server flushes after every event), then one
+//! terminal [`StreamEvent::Stats`]. Errors after streaming has begun
+//! arrive as a final [`StreamEvent::Error`] line (the HTTP status was
+//! already committed). See `docs/HTTP_API.md` for the schema.
+
+use crate::config::json::Value;
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+
+/// One per-token event on the wire (batch-1 streams).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TokenEvent {
+    /// 0-based step index.
+    pub step: usize,
+    pub token: i32,
+    /// Wall seconds this step took (the paper's "≈ 1 step/s" metric,
+    /// observable per token).
+    pub step_s: f64,
+    /// Logits over the vocab that produced `token` (when
+    /// `return_logits` was set).
+    pub logits: Option<Vec<f32>>,
+    /// Final-layer hidden state that produced the logits (when
+    /// `return_hidden` was set).
+    pub hidden: Option<Vec<f32>>,
+}
+
+/// Terminal stats event closing every stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamStats {
+    pub steps: usize,
+    pub steps_per_s: f64,
+    pub recoveries: usize,
+    /// `"length"` or `"stop"`.
+    pub finish: String,
+    pub wall_s: f64,
+}
+
+/// One NDJSON line of a streaming response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamEvent {
+    Token(TokenEvent),
+    Stats(StreamStats),
+    /// Mid-stream failure (after the 200 status was committed).
+    Error { code: String, message: String },
+}
+
+fn f32s_to_value(xs: &[f32]) -> Value {
+    Value::Arr(xs.iter().map(|&x| Value::Num(x as f64)).collect())
+}
+
+fn value_to_f32s(v: &Value) -> Result<Vec<f32>> {
+    v.arr()?.iter().map(|x| Ok(x.f64()? as f32)).collect()
+}
+
+impl StreamEvent {
+    /// Compact single-line JSON (no trailing newline).
+    pub fn render(&self) -> String {
+        let mut obj = BTreeMap::new();
+        match self {
+            StreamEvent::Token(t) => {
+                obj.insert("event".into(), Value::Str("token".into()));
+                obj.insert("step".into(), Value::Num(t.step as f64));
+                obj.insert("token".into(), Value::Num(t.token as f64));
+                obj.insert("step_s".into(), Value::Num(t.step_s));
+                if let Some(l) = &t.logits {
+                    obj.insert("logits".into(), f32s_to_value(l));
+                }
+                if let Some(h) = &t.hidden {
+                    obj.insert("hidden".into(), f32s_to_value(h));
+                }
+            }
+            StreamEvent::Stats(s) => {
+                obj.insert("event".into(), Value::Str("stats".into()));
+                obj.insert("steps".into(), Value::Num(s.steps as f64));
+                obj.insert("steps_per_s".into(), Value::Num(s.steps_per_s));
+                obj.insert("recoveries".into(), Value::Num(s.recoveries as f64));
+                obj.insert("finish".into(), Value::Str(s.finish.clone()));
+                obj.insert("wall_s".into(), Value::Num(s.wall_s));
+            }
+            StreamEvent::Error { code, message } => {
+                obj.insert("event".into(), Value::Str("error".into()));
+                obj.insert("code".into(), Value::Str(code.clone()));
+                obj.insert("message".into(), Value::Str(message.clone()));
+            }
+        }
+        Value::Obj(obj).render()
+    }
+
+    pub fn parse(line: &str) -> Result<StreamEvent> {
+        let v = Value::parse(line.trim())?;
+        match v.get("event")?.str()? {
+            "token" => Ok(StreamEvent::Token(TokenEvent {
+                step: v.get("step")?.usize()?,
+                token: v.get("token")?.f64()? as i32,
+                step_s: v.get("step_s")?.f64()?,
+                logits: v.opt("logits").map(value_to_f32s).transpose()?,
+                hidden: v.opt("hidden").map(value_to_f32s).transpose()?,
+            })),
+            "stats" => Ok(StreamEvent::Stats(StreamStats {
+                steps: v.get("steps")?.usize()?,
+                steps_per_s: v.get("steps_per_s")?.f64()?,
+                recoveries: v.get("recoveries")?.usize()?,
+                finish: v.get("finish")?.str()?.to_string(),
+                wall_s: v.get("wall_s")?.f64()?,
+            })),
+            "error" => Ok(StreamEvent::Error {
+                code: v.get("code")?.str()?.to_string(),
+                message: v.get("message")?.str()?.to_string(),
+            }),
+            other => Err(Error::Protocol(format!("unknown stream event {other:?}"))),
+        }
+    }
+}
+
+/// POST `body` and deliver the response incrementally: `on_line` fires
+/// once per complete NDJSON line *as it arrives* (chunked responses are
+/// decoded on the fly, which is what lets a caller observe the first
+/// token while the server is still generating). Non-chunked responses
+/// (errors) deliver their whole body as one line. Returns the HTTP
+/// status code.
+pub fn http_post_stream(
+    addr: &str,
+    path: &str,
+    body: &str,
+    mut on_line: impl FnMut(&str),
+) -> Result<u16> {
+    let stream = std::net::TcpStream::connect(addr)?;
+    let mut writer = stream.try_clone()?;
+    write!(
+        writer,
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    writer.flush()?;
+    let mut reader = BufReader::new(stream);
+
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| Error::Protocol(format!("bad status line {status_line:?}")))?;
+    let mut chunked = false;
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            return Err(Error::Protocol("connection closed in headers".into()));
+        }
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        let lower = h.to_ascii_lowercase();
+        if lower.starts_with("transfer-encoding:") && lower.contains("chunked") {
+            chunked = true;
+        }
+        if let Some(v) = lower.strip_prefix("content-length:") {
+            content_len = v.trim().parse().unwrap_or(0);
+        }
+    }
+
+    if !chunked {
+        let mut body = vec![0u8; content_len];
+        reader.read_exact(&mut body)?;
+        on_line(String::from_utf8_lossy(&body).trim_end());
+        return Ok(status);
+    }
+
+    // chunked: decode sizes, re-split the byte stream on newlines so
+    // each complete event line is delivered exactly once
+    let mut pending = String::new();
+    loop {
+        let mut size_line = String::new();
+        if reader.read_line(&mut size_line)? == 0 {
+            break; // peer closed without the 0-chunk; deliver what we have
+        }
+        let size = usize::from_str_radix(size_line.trim(), 16)
+            .map_err(|_| Error::Protocol(format!("bad chunk size {size_line:?}")))?;
+        if size == 0 {
+            break;
+        }
+        if size > 64 << 20 {
+            // a hostile/buggy server must not make us allocate unboundedly
+            return Err(Error::Protocol(format!("chunk of {size} bytes exceeds cap")));
+        }
+        let mut chunk = vec![0u8; size + 2]; // payload + CRLF
+        reader.read_exact(&mut chunk)?;
+        chunk.truncate(size);
+        pending.push_str(&String::from_utf8_lossy(&chunk));
+        while let Some(pos) = pending.find('\n') {
+            let line: String = pending.drain(..=pos).collect();
+            let line = line.trim_end();
+            if !line.is_empty() {
+                on_line(line);
+            }
+        }
+    }
+    if !pending.trim().is_empty() {
+        on_line(pending.trim_end());
+    }
+    Ok(status)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_roundtrip() {
+        let t = StreamEvent::Token(TokenEvent {
+            step: 3,
+            token: 42,
+            step_s: 0.125,
+            logits: Some(vec![0.5, -1.25]),
+            hidden: None,
+        });
+        assert_eq!(StreamEvent::parse(&t.render()).unwrap(), t);
+
+        let s = StreamEvent::Stats(StreamStats {
+            steps: 8,
+            steps_per_s: 3.5,
+            recoveries: 1,
+            finish: "length".into(),
+            wall_s: 2.25,
+        });
+        assert_eq!(StreamEvent::parse(&s.render()).unwrap(), s);
+
+        let e = StreamEvent::Error { code: "busy".into(), message: "pool full".into() };
+        assert_eq!(StreamEvent::parse(&e.render()).unwrap(), e);
+
+        assert!(StreamEvent::parse(r#"{"event":"nope"}"#).is_err());
+        assert!(StreamEvent::parse("not json").is_err());
+    }
+
+    /// A hand-rolled chunked server: events must arrive line-by-line in
+    /// order through the chunk decoder, including lines split across
+    /// chunk boundaries.
+    #[test]
+    fn chunked_client_reassembles_lines() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            // drain the request head
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut line = String::new();
+            let mut content_len = 0usize;
+            loop {
+                line.clear();
+                r.read_line(&mut line).unwrap();
+                let lower = line.to_ascii_lowercase();
+                if let Some(v) = lower.strip_prefix("content-length:") {
+                    content_len = v.trim().parse().unwrap();
+                }
+                if line.trim().is_empty() {
+                    break;
+                }
+            }
+            let mut body = vec![0u8; content_len];
+            r.read_exact(&mut body).unwrap();
+            write!(
+                s,
+                "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+            )
+            .unwrap();
+            // one full line, then one line split across two chunks
+            for chunk in ["{\"a\":1}\n{\"b\"", ":2}\n"] {
+                write!(s, "{:x}\r\n{}\r\n", chunk.len(), chunk).unwrap();
+                s.flush().unwrap();
+            }
+            write!(s, "0\r\n\r\n").unwrap();
+        });
+        let mut lines = Vec::new();
+        let status = http_post_stream(&addr, "/x", "{}", |l| lines.push(l.to_string())).unwrap();
+        handle.join().unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(lines, vec!["{\"a\":1}", "{\"b\":2}"]);
+    }
+}

@@ -1,0 +1,296 @@
+//! Typed request/response layer for the HTTP API (v2).
+//!
+//! Every endpoint parses its JSON body into one of these structs up
+//! front — validation errors surface as [`ApiError`]s with stable codes
+//! and HTTP statuses instead of silently "fixing" the request (the v1
+//! backend padded/truncated prompts to a fixed width; see
+//! `docs/HTTP_API.md` for the schema and `api/http.rs` for the server).
+
+use crate::config::json::Value;
+use crate::coordinator::client::Sampler;
+use crate::error::{Error, Result};
+use crate::model::tensor::{DType, Tensor};
+use std::collections::BTreeMap;
+
+/// Sampler selection, decoded from the request's `"sampler"` object.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SamplerSpec {
+    Greedy,
+    TopK { k: usize, temperature: f32, seed: u64 },
+    TopP { p: f32, temperature: f32, seed: u64 },
+}
+
+impl Default for SamplerSpec {
+    fn default() -> Self {
+        SamplerSpec::Greedy
+    }
+}
+
+impl SamplerSpec {
+    /// Parse `{"kind": "greedy" | "top_k" | "top_p", ...}`; `None` (the
+    /// field was absent) means greedy.
+    pub fn from_json(v: Option<&Value>) -> Result<Self> {
+        let Some(v) = v else {
+            return Ok(SamplerSpec::Greedy);
+        };
+        let kind = v.get("kind")?.str()?;
+        let temperature = match v.opt("temperature") {
+            Some(t) => t.f64()? as f32,
+            None => 1.0,
+        };
+        if !(temperature.is_finite() && temperature > 0.0) {
+            return Err(Error::Parse("temperature must be finite and > 0".into()));
+        }
+        let seed = match v.opt("seed") {
+            Some(s) => s.u64()?,
+            None => 0,
+        };
+        match kind {
+            "greedy" => Ok(SamplerSpec::Greedy),
+            "top_k" => {
+                let k = v.get("k")?.usize()?;
+                if k == 0 {
+                    return Err(Error::Parse("top_k needs k >= 1".into()));
+                }
+                Ok(SamplerSpec::TopK { k, temperature, seed })
+            }
+            "top_p" => {
+                let p = v.get("p")?.f64()? as f32;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(Error::Parse("top_p needs 0 <= p <= 1".into()));
+                }
+                Ok(SamplerSpec::TopP { p, temperature, seed })
+            }
+            other => Err(Error::Parse(format!(
+                "unknown sampler kind {other:?} (greedy | top_k | top_p)"
+            ))),
+        }
+    }
+
+    pub fn to_sampler(&self) -> Sampler {
+        match *self {
+            SamplerSpec::Greedy => Sampler::Greedy,
+            SamplerSpec::TopK { k, temperature, seed } => Sampler::TopK { k, temperature, seed },
+            SamplerSpec::TopP { p, temperature, seed } => Sampler::TopP { p, temperature, seed },
+        }
+    }
+}
+
+/// Body of `POST /api/v1/generate` and `POST /api/v1/stream`.
+#[derive(Debug, Clone)]
+pub struct GenerateRequest {
+    pub inputs: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub sampler: SamplerSpec,
+    /// Sampling any of these ends generation (the stop token is still
+    /// reported).
+    pub stop_tokens: Vec<i32>,
+    pub return_logits: bool,
+    pub return_hidden: bool,
+}
+
+impl GenerateRequest {
+    pub fn from_json(v: &Value, vocab: usize) -> Result<Self> {
+        let inputs = parse_ids(v, "inputs", vocab)?;
+        let max_new_tokens =
+            v.opt("max_new_tokens").map(|x| x.usize()).transpose()?.unwrap_or(8);
+        let sampler = SamplerSpec::from_json(v.opt("sampler"))?;
+        let stop_tokens = match v.opt("stop_tokens") {
+            Some(arr) => arr
+                .arr()?
+                .iter()
+                .map(|x| Ok(x.f64()? as i32))
+                .collect::<Result<Vec<_>>>()?,
+            None => vec![],
+        };
+        let flag = |key: &str| -> Result<bool> {
+            v.opt(key).map(|x| x.bool()).transpose().map(|o| o.unwrap_or(false))
+        };
+        Ok(GenerateRequest {
+            inputs,
+            max_new_tokens,
+            sampler,
+            stop_tokens,
+            return_logits: flag("return_logits")?,
+            return_hidden: flag("return_hidden")?,
+        })
+    }
+}
+
+/// Parse a required token-id array, validating range against the vocab.
+pub fn parse_ids(v: &Value, key: &str, vocab: usize) -> Result<Vec<i32>> {
+    let ids: Vec<i32> = v
+        .get(key)?
+        .arr()?
+        .iter()
+        .map(|x| Ok(x.f64()? as i32))
+        .collect::<Result<Vec<_>>>()?;
+    if ids.is_empty() {
+        return Err(Error::Parse(format!("{key:?} must be a non-empty id array")));
+    }
+    if let Some(&bad) = ids.iter().find(|&&t| t < 0 || t as usize >= vocab) {
+        return Err(Error::Parse(format!("token id {bad} outside vocab 0..{vocab}")));
+    }
+    Ok(ids)
+}
+
+/// Encode an f32 tensor as `{"shape": [...], "data": [...]}`. JSON
+/// numbers round-trip exactly (f32 → f64 is lossless and the renderer
+/// emits shortest-roundtrip f64), so hidden states survive the wire
+/// bit-for-bit — the property the `/api/v1/forward` contract relies on.
+pub fn tensor_to_json(t: &Tensor) -> Value {
+    let mut obj = BTreeMap::new();
+    obj.insert(
+        "shape".to_string(),
+        Value::Arr(t.shape.iter().map(|&d| Value::Num(d as f64)).collect()),
+    );
+    obj.insert(
+        "data".to_string(),
+        Value::Arr(t.as_f32().iter().map(|&x| Value::Num(x as f64)).collect()),
+    );
+    Value::Obj(obj)
+}
+
+/// Decode a tensor encoded by [`tensor_to_json`].
+pub fn tensor_from_json(v: &Value) -> Result<Tensor> {
+    let shape = v.get("shape")?.usize_vec()?;
+    let data = v.get("data")?.arr()?;
+    let n: usize = shape.iter().product();
+    if shape.is_empty() || n == 0 || n != data.len() {
+        return Err(Error::Parse(format!(
+            "tensor shape {shape:?} does not match {} data elements",
+            data.len()
+        )));
+    }
+    let mut t = Tensor::zeros(&shape, DType::F32);
+    for (dst, src) in t.as_f32_mut().iter_mut().zip(data) {
+        *dst = src.f64()? as f32;
+    }
+    Ok(t)
+}
+
+/// A typed API failure: stable machine-readable `code` + HTTP status.
+#[derive(Debug, Clone)]
+pub struct ApiError {
+    pub status: u16,
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn from_error(e: &Error) -> ApiError {
+        let (status, code) = match e {
+            Error::Parse(_) => (400, "bad_request"),
+            Error::PromptTooLong(_) => (413, "prompt_too_long"),
+            Error::NotFound(_) => (404, "not_found"),
+            Error::Busy(_) => (503, "busy"),
+            Error::NoRoute(_) => (503, "no_route"),
+            Error::Shape(_) => (400, "bad_shape"),
+            Error::Protocol(_) => (400, "protocol"),
+            Error::ChainBroken(_) => (502, "chain_broken"),
+            Error::Io(_) | Error::Xla(_) | Error::Other(_) => (500, "internal"),
+        };
+        ApiError { status, code, message: e.to_string() }
+    }
+
+    /// `"400 Bad Request"`-style status line fragment.
+    pub fn status_line(&self) -> String {
+        let reason = match self.status {
+            400 => "Bad Request",
+            404 => "Not Found",
+            409 => "Conflict",
+            413 => "Payload Too Large",
+            502 => "Bad Gateway",
+            503 => "Service Unavailable",
+            _ => "Internal Server Error",
+        };
+        format!("{} {}", self.status, reason)
+    }
+
+    /// `{"error": {"code": ..., "message": ...}}`
+    pub fn body(&self) -> String {
+        let mut inner = BTreeMap::new();
+        inner.insert("code".to_string(), Value::Str(self.code.to_string()));
+        inner.insert("message".to_string(), Value::Str(self.message.clone()));
+        let mut obj = BTreeMap::new();
+        obj.insert("error".to_string(), Value::Obj(inner));
+        Value::Obj(obj).render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampler_spec_parses_all_kinds() {
+        let v = Value::parse(r#"{"kind":"top_p","p":0.9,"temperature":0.7,"seed":5}"#).unwrap();
+        assert_eq!(
+            SamplerSpec::from_json(Some(&v)).unwrap(),
+            SamplerSpec::TopP { p: 0.9, temperature: 0.7, seed: 5 }
+        );
+        let v = Value::parse(r#"{"kind":"top_k","k":4}"#).unwrap();
+        assert_eq!(
+            SamplerSpec::from_json(Some(&v)).unwrap(),
+            SamplerSpec::TopK { k: 4, temperature: 1.0, seed: 0 }
+        );
+        assert_eq!(SamplerSpec::from_json(None).unwrap(), SamplerSpec::Greedy);
+        let bad = Value::parse(r#"{"kind":"beam"}"#).unwrap();
+        assert!(SamplerSpec::from_json(Some(&bad)).is_err());
+        let bad = Value::parse(r#"{"kind":"top_p","p":1.5}"#).unwrap();
+        assert!(SamplerSpec::from_json(Some(&bad)).is_err());
+        let bad = Value::parse(r#"{"kind":"top_k","k":0}"#).unwrap();
+        assert!(SamplerSpec::from_json(Some(&bad)).is_err());
+    }
+
+    #[test]
+    fn generate_request_defaults_and_validation() {
+        let v = Value::parse(r#"{"inputs":[1,2,3]}"#).unwrap();
+        let r = GenerateRequest::from_json(&v, 100).unwrap();
+        assert_eq!(r.inputs, vec![1, 2, 3]);
+        assert_eq!(r.max_new_tokens, 8);
+        assert_eq!(r.sampler, SamplerSpec::Greedy);
+        assert!(r.stop_tokens.is_empty() && !r.return_logits && !r.return_hidden);
+
+        let v = Value::parse(
+            r#"{"inputs":[1],"max_new_tokens":2,"stop_tokens":[0],"return_logits":true,
+                "return_hidden":true,"sampler":{"kind":"greedy"}}"#,
+        )
+        .unwrap();
+        let r = GenerateRequest::from_json(&v, 100).unwrap();
+        assert!(r.return_logits && r.return_hidden);
+        assert_eq!(r.stop_tokens, vec![0]);
+
+        // out-of-vocab and empty inputs are typed 400s, never "fixed"
+        let v = Value::parse(r#"{"inputs":[]}"#).unwrap();
+        assert!(GenerateRequest::from_json(&v, 100).is_err());
+        let v = Value::parse(r#"{"inputs":[100]}"#).unwrap();
+        assert!(GenerateRequest::from_json(&v, 100).is_err());
+    }
+
+    #[test]
+    fn tensor_json_roundtrip_is_bitwise() {
+        let vals: Vec<f32> = (0..24)
+            .map(|i| ((i as f32) * 0.37).sin() * 1e-3 + 1.0 / (i as f32 + 1.0))
+            .collect();
+        let t = Tensor::from_f32(&[2, 3, 4], &vals);
+        let v = Value::parse(&tensor_to_json(&t).render()).unwrap();
+        let back = tensor_from_json(&v).unwrap();
+        assert_eq!(back.shape, t.shape);
+        assert_eq!(back.as_f32(), t.as_f32(), "JSON round-trip must be exact");
+        // malformed shapes rejected
+        let bad = Value::parse(r#"{"shape":[2,2],"data":[1.0]}"#).unwrap();
+        assert!(tensor_from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn api_error_mapping() {
+        let e = ApiError::from_error(&Error::PromptTooLong("140 > 128".into()));
+        assert_eq!((e.status, e.code), (413, "prompt_too_long"));
+        assert!(e.status_line().starts_with("413"));
+        let v = Value::parse(&e.body()).unwrap();
+        assert_eq!(v.get("error").unwrap().get("code").unwrap().str().unwrap(), "prompt_too_long");
+        assert_eq!(ApiError::from_error(&Error::Busy("full".into())).status, 503);
+        assert_eq!(ApiError::from_error(&Error::Parse("x".into())).status, 400);
+    }
+}

@@ -29,4 +29,4 @@ pub mod throughput;
 
 pub use balancer::{choose_join_span, plan_rebalance, swarm_throughput, BlockCoverage};
 pub use routing::{find_chain, ChainHop, RouteQuery, ServerView};
-pub use session::{ChainClient, InferenceSession, PongInfo, SessionConfig};
+pub use session::{ChainClient, InferenceSession, PongInfo, PromptShape, SessionConfig};

@@ -82,15 +82,165 @@ pub trait ChainClient {
     fn backward(&self, server: NodeId, hidden: &Tensor, grad: &Tensor) -> Result<Tensor>;
 }
 
-/// Session parameters.
+/// Forwarding impls so sessions can either borrow a swarm (`&C`, the
+/// generator / test path) or co-own it (`Arc<C>`, the HTTP API's
+/// persistent-session store, which must hold sessions across requests).
+impl<T: ChainClient + ?Sized> ChainClient for &T {
+    fn discover(&self) -> Vec<ServerView> {
+        (**self).discover()
+    }
+    fn open_session(
+        &self,
+        server: NodeId,
+        session: u64,
+        batch: usize,
+        prefix_len: usize,
+        max_new: usize,
+    ) -> Result<()> {
+        (**self).open_session(server, session, batch, prefix_len, max_new)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn open_session_prefixed(
+        &self,
+        server: NodeId,
+        session: u64,
+        batch: usize,
+        prefix_len: usize,
+        max_new: usize,
+        prefix_tokens: &[i32],
+        prefill_width: usize,
+    ) -> Result<()> {
+        (**self).open_session_prefixed(
+            server,
+            session,
+            batch,
+            prefix_len,
+            max_new,
+            prefix_tokens,
+            prefill_width,
+        )
+    }
+    fn prefill(&self, server: NodeId, session: u64, hidden: &Tensor) -> Result<Tensor> {
+        (**self).prefill(server, session, hidden)
+    }
+    fn step(
+        &self,
+        server: NodeId,
+        session: u64,
+        cache_len: usize,
+        hidden: &Tensor,
+    ) -> Result<Tensor> {
+        (**self).step(server, session, cache_len, hidden)
+    }
+    fn close_session(&self, server: NodeId, session: u64) {
+        (**self).close_session(server, session)
+    }
+    fn forward(&self, server: NodeId, hidden: &Tensor) -> Result<Tensor> {
+        (**self).forward(server, hidden)
+    }
+    fn backward(&self, server: NodeId, hidden: &Tensor, grad: &Tensor) -> Result<Tensor> {
+        (**self).backward(server, hidden, grad)
+    }
+}
+
+impl<T: ChainClient + ?Sized> ChainClient for std::sync::Arc<T> {
+    fn discover(&self) -> Vec<ServerView> {
+        (**self).discover()
+    }
+    fn open_session(
+        &self,
+        server: NodeId,
+        session: u64,
+        batch: usize,
+        prefix_len: usize,
+        max_new: usize,
+    ) -> Result<()> {
+        (**self).open_session(server, session, batch, prefix_len, max_new)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn open_session_prefixed(
+        &self,
+        server: NodeId,
+        session: u64,
+        batch: usize,
+        prefix_len: usize,
+        max_new: usize,
+        prefix_tokens: &[i32],
+        prefill_width: usize,
+    ) -> Result<()> {
+        (**self).open_session_prefixed(
+            server,
+            session,
+            batch,
+            prefix_len,
+            max_new,
+            prefix_tokens,
+            prefill_width,
+        )
+    }
+    fn prefill(&self, server: NodeId, session: u64, hidden: &Tensor) -> Result<Tensor> {
+        (**self).prefill(server, session, hidden)
+    }
+    fn step(
+        &self,
+        server: NodeId,
+        session: u64,
+        cache_len: usize,
+        hidden: &Tensor,
+    ) -> Result<Tensor> {
+        (**self).step(server, session, cache_len, hidden)
+    }
+    fn close_session(&self, server: NodeId, session: u64) {
+        (**self).close_session(server, session)
+    }
+    fn forward(&self, server: NodeId, hidden: &Tensor) -> Result<Tensor> {
+        (**self).forward(server, hidden)
+    }
+    fn backward(&self, server: NodeId, hidden: &Tensor, grad: &Tensor) -> Result<Tensor> {
+        (**self).backward(server, hidden, grad)
+    }
+}
+
+/// Per-request prompt geometry — *derived from the prompt itself*, never
+/// caller-configured. The streaming API redesign removed the fixed
+/// `prefix_len`/`prefill_width` coupling from [`SessionConfig`]: clients
+/// now pick the smallest compiled prefill width that fits the prompt
+/// ([`crate::coordinator::client::LocalHead::derive_prefill_width`]) and
+/// reject over-long prompts with [`Error::PromptTooLong`] instead of
+/// padding/truncating.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PromptShape {
+    pub batch: usize,
+    /// Valid prompt length (<= prefill_width).
+    pub prefix_len: usize,
+    /// Padded width the prefill artifact expects. Padding sits *after*
+    /// the valid positions, so causal masking keeps it invisible.
+    pub prefill_width: usize,
+}
+
+impl PromptShape {
+    pub fn validate(&self) -> Result<()> {
+        if self.batch == 0 || self.prefix_len == 0 {
+            return Err(Error::Shape("empty prompt".into()));
+        }
+        if self.prefix_len > self.prefill_width {
+            return Err(Error::Shape(format!(
+                "prefix_len {} exceeds prefill width {}",
+                self.prefix_len, self.prefill_width
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Session parameters that are genuinely *session policy* (routing,
+/// retry budget, decode-token reservation). Prompt geometry moved to
+/// [`PromptShape`].
 #[derive(Debug, Clone)]
 pub struct SessionConfig {
     pub n_blocks: usize,
-    pub batch: usize,
-    /// True (padded) prefix width the prefill entry expects.
-    pub prefill_width: usize,
-    /// Valid prefix length (<= prefill_width).
-    pub prefix_len: usize,
+    /// Decode-token budget reserved on servers at open (admission
+    /// control); generation requests may ask for fewer.
     pub max_new: usize,
     pub route: RouteQuery,
     /// Retries across re-routing before giving up.
@@ -113,10 +263,15 @@ struct HopHistory {
     step_inputs: Vec<(usize, Tensor)>, // (cache_len, hidden)
 }
 
-/// A live pipeline-parallel inference session.
-pub struct InferenceSession<'a, C: ChainClient> {
-    client: &'a C,
+/// A live pipeline-parallel inference session. Owns its `ChainClient`
+/// handle (`&C` and `Arc<C>` both implement [`ChainClient`] by
+/// forwarding), so a session can either borrow the swarm for one
+/// request or co-own it across HTTP requests (the persistent-session
+/// endpoints).
+pub struct InferenceSession<C: ChainClient> {
+    client: C,
     cfg: SessionConfig,
+    shape: PromptShape,
     chain: Vec<ChainHop>,
     history: Vec<HopHistory>,
     session_id: u64,
@@ -124,13 +279,14 @@ pub struct InferenceSession<'a, C: ChainClient> {
     recoveries: usize,
 }
 
-impl<'a, C: ChainClient> InferenceSession<'a, C> {
+impl<C: ChainClient> InferenceSession<C> {
     /// Discover servers, pick a chain, open per-server sessions. If any
     /// hop rejects the open (e.g. [`Error::Busy`] admission control),
     /// the hops already opened are closed before the error propagates —
     /// otherwise their KV-page reservations would leak until the
-    /// server's pool drained (servers have no session TTL).
-    pub fn open(client: &'a C, cfg: SessionConfig, session_id: u64) -> Result<Self> {
+    /// server's idle-session sweep reclaimed them.
+    pub fn open(client: C, cfg: SessionConfig, shape: PromptShape, session_id: u64) -> Result<Self> {
+        shape.validate()?;
         let servers = client.discover();
         let (chain, _cost) = routing::find_chain(&servers, &cfg.route)
             .ok_or_else(|| Error::NoRoute("no chain covers all blocks".into()))?;
@@ -138,11 +294,11 @@ impl<'a, C: ChainClient> InferenceSession<'a, C> {
             if let Err(e) = client.open_session_prefixed(
                 hop.server,
                 session_id,
-                cfg.batch,
-                cfg.prefix_len,
+                shape.batch,
+                shape.prefix_len,
                 cfg.max_new,
                 &cfg.prefix_tokens,
-                cfg.prefill_width,
+                shape.prefill_width,
             ) {
                 for opened in &chain[..i] {
                     client.close_session(opened.server, session_id);
@@ -151,8 +307,17 @@ impl<'a, C: ChainClient> InferenceSession<'a, C> {
             }
         }
         let history = vec![HopHistory::default(); chain.len()];
-        let cache_len = cfg.prefix_len;
-        Ok(InferenceSession { client, cfg, chain, history, session_id, cache_len, recoveries: 0 })
+        let cache_len = shape.prefix_len;
+        Ok(InferenceSession {
+            client,
+            cfg,
+            shape,
+            chain,
+            history,
+            session_id,
+            cache_len,
+            recoveries: 0,
+        })
     }
 
     pub fn chain(&self) -> &[ChainHop] {
@@ -161,6 +326,10 @@ impl<'a, C: ChainClient> InferenceSession<'a, C> {
 
     pub fn cache_len(&self) -> usize {
         self.cache_len
+    }
+
+    pub fn shape(&self) -> PromptShape {
+        self.shape
     }
 
     pub fn recoveries(&self) -> usize {
@@ -251,11 +420,11 @@ impl<'a, C: ChainClient> InferenceSession<'a, C> {
                 self.client.open_session_prefixed(
                     hop.server,
                     self.session_id,
-                    self.cfg.batch,
-                    self.cfg.prefix_len,
+                    self.shape.batch,
+                    self.shape.prefix_len,
                     self.cfg.max_new,
                     &self.cfg.prefix_tokens,
-                    self.cfg.prefill_width,
+                    self.shape.prefill_width,
                 )?;
             }
             let old_history = self.history[i].clone();
@@ -314,6 +483,33 @@ pub fn chain_forward<C: ChainClient>(
         h = client.forward(hop.server, &h)?;
     }
     Ok(h)
+}
+
+/// Stateless backward through a chain (§2.2): re-runs the forward to
+/// collect each span's input activation, then chains `backward` in
+/// reverse. Returns the gradient wrt `x0`. Callers that already hold
+/// the span inputs from a matching forward can skip the recompute (see
+/// `finetune::ChainActivations`).
+pub fn chain_backward<C: ChainClient>(
+    client: &C,
+    route: &RouteQuery,
+    x0: &Tensor,
+    grad_out: &Tensor,
+) -> Result<Tensor> {
+    let servers = client.discover();
+    let (chain, _) = routing::find_chain(&servers, route)
+        .ok_or_else(|| Error::NoRoute("no chain".into()))?;
+    let mut inputs = Vec::with_capacity(chain.len());
+    let mut h = x0.clone();
+    for hop in &chain {
+        inputs.push(h.clone());
+        h = client.forward(hop.server, &h)?;
+    }
+    let mut g = grad_out.clone();
+    for (i, hop) in chain.iter().enumerate().rev() {
+        g = client.backward(hop.server, &inputs[i], &g)?;
+    }
+    Ok(g)
 }
 
 #[cfg(test)]
@@ -473,14 +669,15 @@ mod tests {
     fn cfg(n_blocks: usize) -> SessionConfig {
         SessionConfig {
             n_blocks,
-            batch: 1,
-            prefill_width: 4,
-            prefix_len: 2,
             max_new: 8,
             route: RouteQuery { n_blocks, msg_bytes: 64, ..Default::default() },
             max_recoveries: 4,
             prefix_tokens: vec![],
         }
+    }
+
+    fn shape() -> PromptShape {
+        PromptShape { batch: 1, prefix_len: 2, prefill_width: 4 }
     }
 
     fn h1() -> Tensor {
@@ -490,7 +687,7 @@ mod tests {
     #[test]
     fn full_pipeline_sums_all_blocks() {
         let swarm = FakeSwarm::new(&[("a", 0, 3), ("b", 3, 8)]);
-        let mut s = InferenceSession::open(&swarm, cfg(8), 1).unwrap();
+        let mut s = InferenceSession::open(&swarm, cfg(8), shape(), 1).unwrap();
         let pre = Tensor::from_f32(&[1, 4, 4], &[0.0; 16]);
         let out = s.prefill(pre).unwrap();
         // +3 from a, +5 from b = 8 added to every element
@@ -504,7 +701,7 @@ mod tests {
     #[test]
     fn step_failure_recovers_and_replays() {
         let swarm = FakeSwarm::new(&[("a", 0, 3), ("b", 3, 8), ("b2", 3, 8)]);
-        let mut s = InferenceSession::open(&swarm, cfg(8), 7).unwrap();
+        let mut s = InferenceSession::open(&swarm, cfg(8), shape(), 7).unwrap();
         let pre = Tensor::from_f32(&[1, 4, 4], &[0.0; 16]);
         s.prefill(pre).unwrap();
         s.step(h1()).unwrap();
@@ -530,7 +727,7 @@ mod tests {
     #[test]
     fn unrecoverable_when_no_replacement() {
         let swarm = FakeSwarm::new(&[("a", 0, 3), ("b", 3, 8)]);
-        let mut s = InferenceSession::open(&swarm, cfg(8), 9).unwrap();
+        let mut s = InferenceSession::open(&swarm, cfg(8), shape(), 9).unwrap();
         s.prefill(Tensor::from_f32(&[1, 4, 4], &[0.0; 16])).unwrap();
         swarm.kill("b");
         let err = s.step(h1()).unwrap_err();
@@ -545,7 +742,7 @@ mod tests {
             st.servers[0].fail_next = 1; // one transient failure
             st.servers[1].fail_next = 0;
         }
-        let mut s = InferenceSession::open(&swarm, cfg(8), 3).unwrap();
+        let mut s = InferenceSession::open(&swarm, cfg(8), shape(), 3).unwrap();
         let out = s.prefill(Tensor::from_f32(&[1, 4, 4], &[0.0; 16])).unwrap();
         assert!(out.as_f32().iter().all(|&v| v == 8.0));
         assert!(s.recoveries() <= 1);
@@ -561,7 +758,7 @@ mod tests {
             let mut st = swarm.state.borrow_mut();
             st.servers[1].fail_open_next = 1;
         }
-        let err = InferenceSession::open(&swarm, cfg(8), 4).unwrap_err();
+        let err = InferenceSession::open(&swarm, cfg(8), shape(), 4).unwrap_err();
         assert!(matches!(err, Error::Busy(_)), "{err}");
         let st = swarm.state.borrow();
         assert!(
@@ -574,7 +771,7 @@ mod tests {
     fn open_fails_with_no_servers() {
         let swarm = FakeSwarm::new(&[]);
         assert!(matches!(
-            InferenceSession::open(&swarm, cfg(8), 1),
+            InferenceSession::open(&swarm, cfg(8), shape(), 1),
             Err(Error::NoRoute(_))
         ));
     }
@@ -601,7 +798,7 @@ mod tests {
                 ("c", 5, 8),
                 ("c2", 5, 8),
             ]);
-            let mut s = InferenceSession::open(&swarm, cfg(8), trial).unwrap();
+            let mut s = InferenceSession::open(&swarm, cfg(8), shape(), trial).unwrap();
             s.prefill(Tensor::from_f32(&[1, 4, 4], &[0.0; 16])).unwrap();
             let n_steps = 1 + rng.usize_below(5);
             for _ in 0..n_steps {
@@ -619,7 +816,7 @@ mod tests {
                 out.as_f32().iter().all(|&v| v == 8.0),
                 "trial {trial}: output corrupted after recovery"
             );
-            assert_eq!(s.cache_len(), cfg(8).prefix_len + n_steps + 1);
+            assert_eq!(s.cache_len(), shape().prefix_len + n_steps + 1);
         }
     }
 }

@@ -37,20 +37,27 @@ pub const ALPHA: usize = 3;
 /// in-memory (tests), simulator-charged (sim), framed-TCP (real swarm).
 pub trait Rpc {
     /// Peers closest to `target` from the callee's routing table.
-    fn find_node(&self, callee: NodeId, target: NodeId) -> Vec<NodeId>;
+    /// `None` means the callee is unreachable/dead — the query itself is
+    /// the liveness probe, so the iterative lookups need no ping
+    /// preflight (over TCP that preflight used to *double* the dials
+    /// per contacted peer).
+    fn find_node(&self, callee: NodeId, target: NodeId) -> Option<Vec<NodeId>>;
     /// Value lookup; `Some` short-circuits the iterative search.
     fn find_value(&self, callee: NodeId, key: NodeId) -> Option<Vec<Record>>;
     /// Store a record at the callee; `true` iff the callee accepted it
     /// (a full or unreachable callee refuses — publishers must not
     /// count a refusal as a replica).
     fn store(&self, callee: NodeId, key: NodeId, rec: Record) -> bool;
-    /// Liveness check.
+    /// Liveness check — bootstrap verification and bucket maintenance;
+    /// the iterative lookups no longer call it.
     fn ping(&self, callee: NodeId) -> bool;
 }
 
 /// Iterative node lookup: starting from `seeds`, repeatedly query the α
 /// closest unqueried peers until the closest-K set stabilizes.
-/// Returns the K closest live nodes to `target`.
+/// Returns the K closest live nodes to `target`. Dead peers are
+/// detected by the query itself (`find_node -> None`) and dropped from
+/// the shortlist — one dial per contacted peer, no ping preflight.
 pub fn iterative_find_node(
     rpc: &dyn Rpc,
     seeds: &[NodeId],
@@ -73,12 +80,16 @@ pub fn iterative_find_node(
         }
         for peer in next {
             queried.insert(peer);
-            if !rpc.ping(peer) {
-                shortlist.remove(&peer.distance(&target));
-                continue;
-            }
-            for found in rpc.find_node(peer, target) {
-                shortlist.entry(found.distance(&target)).or_insert(found);
+            match rpc.find_node(peer, target) {
+                Some(found) => {
+                    for f in found {
+                        shortlist.entry(f.distance(&target)).or_insert(f);
+                    }
+                }
+                None => {
+                    // unreachable: prune it from the candidate set
+                    shortlist.remove(&peer.distance(&target));
+                }
             }
         }
         // keep the closest 2K candidates to bound work
@@ -91,7 +102,9 @@ pub fn iterative_find_node(
 }
 
 /// Iterative value lookup (returns merged records from the first
-/// holders found plus closest nodes for caching).
+/// holders found plus closest nodes for caching). Like
+/// [`iterative_find_node`], dead peers are detected by the queries
+/// themselves — no ping preflight.
 pub fn iterative_find_value(
     rpc: &dyn Rpc,
     seeds: &[NodeId],
@@ -115,15 +128,22 @@ pub fn iterative_find_value(
         }
         for peer in next {
             queried.insert(peer);
-            if !rpc.ping(peer) {
-                shortlist.remove(&peer.distance(&key));
-                continue;
+            // find_node first: its None detects a dead peer in ONE dial,
+            // so the (ambiguous) find_value is never dialed at the dead
+            // — a dead candidate costs one timeout, same as node lookups
+            match rpc.find_node(peer, key) {
+                Some(neighbors) => {
+                    for f in neighbors {
+                        shortlist.entry(f.distance(&key)).or_insert(f);
+                    }
+                }
+                None => {
+                    shortlist.remove(&peer.distance(&key));
+                    continue;
+                }
             }
             if let Some(recs) = rpc.find_value(peer, key) {
                 found.extend(recs);
-            }
-            for f in rpc.find_node(peer, key) {
-                shortlist.entry(f.distance(&key)).or_insert(f);
             }
         }
         if !found.is_empty() {
@@ -194,11 +214,11 @@ pub(crate) mod testnet {
     }
 
     impl Rpc for TestNet {
-        fn find_node(&self, callee: NodeId, target: NodeId) -> Vec<NodeId> {
+        fn find_node(&self, callee: NodeId, target: NodeId) -> Option<Vec<NodeId>> {
             let nodes = self.nodes.borrow();
             match nodes.get(&callee) {
-                Some(n) if n.alive => n.table.closest(target, K),
-                _ => vec![],
+                Some(n) if n.alive => Some(n.table.closest(target, K)),
+                _ => None,
             }
         }
 

@@ -151,11 +151,24 @@ pub struct TcpRpc {
     me: DhtContact,
     book: AddressBook,
     timeout: Duration,
+    /// TCP dials attempted (shared across clones) — the observable the
+    /// no-ping-preflight regression test pins down.
+    dials: Arc<std::sync::atomic::AtomicU64>,
 }
 
 impl TcpRpc {
     pub fn new(me: DhtContact, timeout: Duration) -> Self {
-        TcpRpc { me, book: Arc::new(Mutex::new(HashMap::new())), timeout }
+        TcpRpc {
+            me,
+            book: Arc::new(Mutex::new(HashMap::new())),
+            timeout,
+            dials: Arc::new(std::sync::atomic::AtomicU64::new(0)),
+        }
+    }
+
+    /// Total TCP dials attempted through this RPC (including redials).
+    pub fn dial_count(&self) -> u64 {
+        self.dials.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// The local identity this RPC stamps on outgoing requests.
@@ -221,6 +234,7 @@ impl TcpRpc {
     }
 
     fn call_addr(&self, addr: &str, msg: &Message) -> Result<Message> {
+        self.dials.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let mut conn = FramedConn::connect_timeout(addr, self.timeout)?;
         match conn.call(msg) {
             Err(Error::Io(_)) => {
@@ -229,6 +243,7 @@ impl TcpRpc {
                 // mid-restart. One redial before the caller declares the
                 // peer dead (all DHT RPCs are idempotent); genuinely
                 // dead peers fail the *dial* and still cost one timeout.
+                self.dials.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 let mut conn = FramedConn::connect_timeout(addr, self.timeout)?;
                 conn.call(msg)
             }
@@ -255,19 +270,23 @@ impl TcpRpc {
 }
 
 impl Rpc for TcpRpc {
-    fn find_node(&self, callee: NodeId, target: NodeId) -> Vec<NodeId> {
-        let Some(addr) = self.addr_of(&callee) else {
-            return vec![];
-        };
+    fn find_node(&self, callee: NodeId, target: NodeId) -> Option<Vec<NodeId>> {
+        // the dial doubles as the liveness probe: an unknown address or
+        // a dead peer returns None and the iterative lookup prunes it —
+        // no separate ping preflight (which used to double the dials
+        // per contacted peer)
+        let addr = self.addr_of(&callee)?;
         match self.call_addr(&addr, &Message::DhtFindNode { from: self.me.clone(), target }) {
-            Ok(Message::DhtNodes { nodes }) => nodes
-                .into_iter()
-                .map(|c| {
-                    self.learn(&c);
-                    c.id
-                })
-                .collect(),
-            _ => vec![],
+            Ok(Message::DhtNodes { nodes }) => Some(
+                nodes
+                    .into_iter()
+                    .map(|c| {
+                        self.learn(&c);
+                        c.id
+                    })
+                    .collect(),
+            ),
+            _ => None,
         }
     }
 
@@ -762,6 +781,51 @@ mod tests {
         assert_eq!(found[0].payload, b"payload");
         seed.shutdown();
         n1.shutdown();
+    }
+
+    /// Satellite: iterative lookups dial each contacted peer once per
+    /// query — the old ping preflight doubled this. On a lone node, a
+    /// value lookup is exactly two dials (find_value + find_node) and a
+    /// node lookup exactly one; a dead seed costs exactly one failed
+    /// dial, not a ping *and* a query timeout.
+    #[test]
+    fn lookup_dial_counts_have_no_ping_preflight() {
+        let a = DhtNode::spawn(NodeId::from_name("da"), "127.0.0.1:0", quick_cfg(vec![]))
+            .unwrap();
+        let key = NodeId::from_name("k");
+        a.rpc()
+            .store(a.id(), key, Record::new(a.id(), b"x".to_vec(), now_ms(), 60_000));
+        let client = TcpRpc::new(
+            DhtContact { id: NodeId::from_name("client"), addr: String::new() },
+            Duration::from_millis(500),
+        );
+        client.learn(&DhtContact { id: a.id(), addr: a.addr() });
+
+        let d0 = client.dial_count();
+        let found = iterative_find_value(&client, &[a.id()], key);
+        assert_eq!(found.len(), 1);
+        assert_eq!(
+            client.dial_count() - d0,
+            2,
+            "value lookup on one live peer = find_node + find_value, no ping dial"
+        );
+        let d1 = client.dial_count();
+        let nodes = iterative_find_node(&client, &[a.id()], NodeId::from_name("t"));
+        assert!(nodes.contains(&a.id()));
+        assert_eq!(client.dial_count() - d1, 1, "node lookup on one peer = one dial");
+
+        // a dead peer costs one failed dial and is pruned from results —
+        // on value lookups too (find_node runs first, so the ambiguous
+        // find_value is never dialed at a dead peer)
+        a.shutdown();
+        std::thread::sleep(Duration::from_millis(50));
+        let d2 = client.dial_count();
+        let nodes = iterative_find_node(&client, &[a.id()], NodeId::from_name("t"));
+        assert!(nodes.is_empty(), "dead peer must be pruned by the query itself");
+        assert_eq!(client.dial_count() - d2, 1, "dead peer = one failed dial, no ping");
+        let d3 = client.dial_count();
+        assert!(iterative_find_value(&client, &[a.id()], key).is_empty());
+        assert_eq!(client.dial_count() - d3, 1, "dead peer value lookup = one failed dial");
     }
 
     #[test]

@@ -22,6 +22,10 @@ pub enum Error {
     /// The server is at capacity (KV-cache pool full) — retryable: the
     /// client should route to a less-loaded replica.
     Busy(String),
+    /// The prompt does not fit any compiled prefill width — a client
+    /// error, never retryable. The streaming API maps this to HTTP 413
+    /// instead of silently truncating the prompt (the seed behavior).
+    PromptTooLong(String),
     /// Protocol violation on the wire.
     Protocol(String),
     /// Anything else.
@@ -41,6 +45,7 @@ impl fmt::Display for Error {
             Error::ChainBroken(m) => write!(f, "chain broken: {m}"),
             Error::NoRoute(m) => write!(f, "no route: {m}"),
             Error::Busy(m) => write!(f, "busy: {m}"),
+            Error::PromptTooLong(m) => write!(f, "prompt too long: {m}"),
             Error::Protocol(m) => write!(f, "protocol: {m}"),
             Error::Other(m) => write!(f, "{m}"),
         }
@@ -111,6 +116,7 @@ impl Error {
             Error::ChainBroken(m) => Error::ChainBroken(m.clone()),
             Error::NoRoute(m) => Error::NoRoute(m.clone()),
             Error::Busy(m) => Error::Busy(m.clone()),
+            Error::PromptTooLong(m) => Error::PromptTooLong(m.clone()),
             Error::Protocol(m) => Error::Protocol(m.clone()),
             Error::Other(m) => Error::Other(m.clone()),
         }

@@ -13,12 +13,133 @@
 //! local Adam step. All heavy math (blocks fwd/bwd) runs on servers via
 //! AOT artifacts; the prompt/head math is tiny and lives here in plain
 //! Rust (it would be a <1% slice of any profile).
+//!
+//! Since the streaming-API redesign the trainer talks to the swarm
+//! through [`ActivationBackend`] — either [`ChainActivations`] (direct
+//! [`ChainClient`] routing, in-process or TCP) or
+//! [`crate::api::http`]-backed `HttpActivations` below, which drives
+//! the public `POST /api/v1/forward` / `backward` endpoints. The same
+//! trainer runs against both, so the prompt-tuning example exercises
+//! the real public API path.
 
 use crate::config::Rng;
 use crate::coordinator::routing::{self, RouteQuery};
 use crate::coordinator::session::ChainClient;
 use crate::error::{Error, Result};
 use crate::model::tensor::Tensor;
+use std::sync::Mutex;
+
+/// The two swarm calls prompt tuning needs: a stateless chain forward
+/// over raw activations, and the matching backward returning the
+/// gradient wrt the input. Implementations: [`ChainActivations`]
+/// (direct swarm access) and [`HttpActivations`] (the public HTTP API).
+pub trait ActivationBackend {
+    /// [B,S,H] activations -> final-layer hidden states [B,S,H].
+    fn forward(&self, x: &Tensor) -> Result<Tensor>;
+    /// Gradient wrt `x` given the gradient wrt `forward(x)`.
+    fn backward(&self, x: &Tensor, grad_out: &Tensor) -> Result<Tensor>;
+}
+
+/// One remembered forward pass: the chain used and each span's input,
+/// so a matching `backward` skips recomputing the forward.
+struct ForwardTrace {
+    x0: Tensor,
+    chain: Vec<crate::coordinator::routing::ChainHop>,
+    span_inputs: Vec<Tensor>,
+}
+
+/// [`ActivationBackend`] over any [`ChainClient`]: routes a chain,
+/// pipes activations through every span, and remembers the last
+/// forward's span inputs so the paired backward replays them instead of
+/// re-running the forward.
+pub struct ChainActivations<'a, C: ChainClient> {
+    pub swarm: &'a C,
+    pub route: RouteQuery,
+    trace: Mutex<Option<ForwardTrace>>,
+}
+
+impl<'a, C: ChainClient> ChainActivations<'a, C> {
+    pub fn new(swarm: &'a C, route: RouteQuery) -> Self {
+        ChainActivations { swarm, route, trace: Mutex::new(None) }
+    }
+}
+
+impl<'a, C: ChainClient> ActivationBackend for ChainActivations<'a, C> {
+    fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        let servers = self.swarm.discover();
+        let (chain, _) = routing::find_chain(&servers, &self.route)
+            .ok_or_else(|| Error::NoRoute("no chain".into()))?;
+        let mut span_inputs = Vec::with_capacity(chain.len());
+        let mut h = x.clone();
+        for hop in &chain {
+            span_inputs.push(h.clone());
+            h = self.swarm.forward(hop.server, &h)?;
+        }
+        *self.trace.lock().unwrap() =
+            Some(ForwardTrace { x0: x.clone(), chain, span_inputs });
+        Ok(h)
+    }
+
+    fn backward(&self, x: &Tensor, grad_out: &Tensor) -> Result<Tensor> {
+        // reuse the remembered span inputs when this backward pairs with
+        // the last forward (the common train-step pattern); anything
+        // else falls back to the generic route-and-replay helper
+        let trace = self.trace.lock().unwrap().take();
+        match trace {
+            Some(t) if t.x0.shape == x.shape && t.x0.data == x.data => {
+                let mut g = grad_out.clone();
+                for (i, hop) in t.chain.iter().enumerate().rev() {
+                    g = self.swarm.backward(hop.server, &t.span_inputs[i], &g)?;
+                }
+                Ok(g)
+            }
+            _ => crate::coordinator::session::chain_backward(
+                self.swarm,
+                &self.route,
+                x,
+                grad_out,
+            ),
+        }
+    }
+}
+
+/// [`ActivationBackend`] over the public HTTP API: `POST
+/// /api/v1/forward` / `POST /api/v1/backward` with raw `[B,S,H]`
+/// activations — the paper's "exposes hidden states" research workload
+/// driven end-to-end through the served surface.
+pub struct HttpActivations {
+    /// `host:port` of a running [`crate::api::ApiServer`].
+    pub addr: String,
+}
+
+impl ActivationBackend for HttpActivations {
+    fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        let body = format!(
+            "{{\"embeds\":{}}}",
+            crate::api::types::tensor_to_json(x).render()
+        );
+        let reply = crate::api::http::http_post(&self.addr, "/api/v1/forward", &body)?;
+        let v = crate::config::json::Value::parse(&reply)?;
+        if let Some(err) = v.opt("error") {
+            return Err(Error::Protocol(format!("forward failed: {}", err.render())));
+        }
+        crate::api::types::tensor_from_json(v.get("hidden")?)
+    }
+
+    fn backward(&self, x: &Tensor, grad_out: &Tensor) -> Result<Tensor> {
+        let body = format!(
+            "{{\"embeds\":{},\"grad\":{}}}",
+            crate::api::types::tensor_to_json(x).render(),
+            crate::api::types::tensor_to_json(grad_out).render()
+        );
+        let reply = crate::api::http::http_post(&self.addr, "/api/v1/backward", &body)?;
+        let v = crate::config::json::Value::parse(&reply)?;
+        if let Some(err) = v.opt("error") {
+            return Err(Error::Protocol(format!("backward failed: {}", err.render())));
+        }
+        crate::api::types::tensor_from_json(v.get("grad")?)
+    }
+}
 
 /// Trainable soft prompts + classifier head (client-owned).
 pub struct PromptTuner {
@@ -169,11 +290,12 @@ impl PromptTuner {
     /// 5. Adam step on client-owned params only
     ///
     /// `last_valid` is the sequence position whose hidden state feeds the
-    /// classifier (last real token).
-    pub fn train_step<C: ChainClient>(
+    /// classifier (last real token). The backend is either direct swarm
+    /// access ([`ChainActivations`]) or the public HTTP API
+    /// ([`HttpActivations`]).
+    pub fn train_step<B: ActivationBackend>(
         &mut self,
-        swarm: &C,
-        route: &RouteQuery,
+        backend: &B,
         embeds: &Tensor,
         labels: &[usize],
         last_valid: usize,
@@ -182,19 +304,10 @@ impl PromptTuner {
         if b != labels.len() {
             return Err(Error::Shape(format!("batch {b} vs {} labels", labels.len())));
         }
-        let servers = swarm.discover();
-        let (chain, _) = routing::find_chain(&servers, route)
-            .ok_or_else(|| Error::NoRoute("no chain".into()))?;
 
         // ---- forward ----
         let x0 = self.apply_prompts(embeds);
-        // keep each span's input for the backward sweep
-        let mut span_inputs: Vec<Tensor> = Vec::with_capacity(chain.len());
-        let mut hcur = x0.clone();
-        for hop in &chain {
-            span_inputs.push(hcur.clone());
-            hcur = swarm.forward(hop.server, &hcur)?;
-        }
+        let hcur = backend.forward(&x0)?;
 
         // ---- head + loss ----
         let feats: Vec<f32> = {
@@ -234,9 +347,7 @@ impl PromptTuner {
                 dst[off..off + h].copy_from_slice(&d_feats[bi * h..(bi + 1) * h]);
             }
         }
-        for (i, hop) in chain.iter().enumerate().rev() {
-            dh = swarm.backward(hop.server, &span_inputs[i], &dh)?;
-        }
+        let dh = backend.backward(&x0, &dh)?;
 
         // ---- prompt grads = grad at prompt positions, summed over batch
         let mut d_prompts = vec![0f32; self.n_prompts * h];
@@ -379,6 +490,7 @@ mod tests {
             ..Default::default()
         };
         let swarm = Identity;
+        let backend = ChainActivations::new(&swarm, route);
         let mut rng = Rng::new(5);
 
         let mut last_acc = 0.0;
@@ -396,7 +508,7 @@ mod tests {
             }
             let embeds = Tensor::from_f32(&[b, s, h], &vals);
             let rep = tuner
-                .train_step(&swarm, &route, &embeds, &labels, s - 1)
+                .train_step(&backend, &embeds, &labels, s - 1)
                 .unwrap();
             if step >= 50 {
                 last_acc = rep.accuracy;

@@ -40,7 +40,10 @@
 //! - [`incentives`] — the points ledger sketched in §4.
 //! - [`sim`] — discrete-event swarm scenarios regenerating Table 3, with
 //!   a continuous-batching service model mirroring the real server.
-//! - [`api`] — the chat-application HTTP backend (Figure 3).
+//! - [`api`] — the client-facing HTTP API v2 (Figure 3): typed
+//!   requests, chunked-NDJSON per-token streaming, raw hidden-state /
+//!   logits access (`/api/v1/forward`, `/backward`), and persistent
+//!   chat sessions with server-side KV reuse (`docs/HTTP_API.md`).
 //! - [`model`] / [`runtime`] — artifact manifest, host tensors, weight
 //!   packs, and the PJRT executor registry.
 //! - [`config`] — JSON substrate, deterministic PRNG, device/network

@@ -6,13 +6,13 @@
 //! ```text
 //! petals server   --artifacts DIR --name N --blocks A..B [--precision f16|int8]
 //!                 [--listen ADDR] [--advertise HOST:PORT] [--compress] [--model NAME]
-//!                 [--announce-dir DIR] [--announce-every SECS]
+//!                 [--announce-dir DIR] [--announce-every SECS] [--session-ttl SECS]
 //!                 [--dht-listen ADDR] [--dht-advertise HOST:PORT] [--bootstrap ADDR,...]
 //! petals generate --artifacts DIR (--peers n1=addr1,... | --announce-dir DIR
 //!                 | --bootstrap ADDR,...) [--model NAME]
-//!                 --prompt 1,2,3 [--max-new N] [--topk K]
+//!                 --prompt 1,2,3 [--max-new N] [--topk K | --topp P] [--stream]
 //! petals chat     --artifacts DIR (--peers ... | --announce-dir DIR
-//!                 | --bootstrap ADDR,...) [--model NAME] [--listen ADDR]
+//!                 | --bootstrap ADDR,...) [--model NAME] [--listen ADDR] [--stream]
 //! petals sim      [--preset 3xa100|12virtual|14real] [--net gbit5|mbit100-5|mbit100-100]
 //!                 [--workload inference|forward|multiclient|shared-prefix]
 //! petals info     --artifacts DIR
@@ -151,7 +151,15 @@ fn cmd_server(flags: &HashMap<String, String>) -> i32 {
         Ok(r) => Arc::new(r),
         Err(e) => return fail(&e.to_string()),
     };
-    let node = match ServerNode::start(&name, &home, rt, start..end, precision, compress) {
+    // idle-session GC: 0 disables; default 600 s (see ServerOptions)
+    let mut opts = petals::server::ServerOptions::default();
+    if let Some(ttl) = flags.get("session-ttl").and_then(|s| s.parse::<u64>().ok()) {
+        opts.session_ttl =
+            if ttl == 0 { None } else { Some(std::time::Duration::from_secs(ttl)) };
+    }
+    let node = match ServerNode::start_with(
+        &name, &home, rt, start..end, precision, compress, opts,
+    ) {
         Ok(n) => n,
         Err(e) => return fail(&e.to_string()),
     };
@@ -327,13 +335,10 @@ fn connect_swarm(
     Err("--peers name=addr[,...], --announce-dir DIR, or --bootstrap ADDR[,...] required".into())
 }
 
-fn session_cfg(home: &ModelHome, prefix_len: usize, max_new: usize) -> SessionConfig {
+fn session_cfg(home: &ModelHome, max_new: usize) -> SessionConfig {
     let g = home.geometry();
     SessionConfig {
         n_blocks: g.n_layers,
-        batch: 1,
-        prefill_width: 128,
-        prefix_len,
         max_new,
         route: RouteQuery {
             n_blocks: g.n_layers,
@@ -375,12 +380,40 @@ fn cmd_generate(flags: &HashMap<String, String>) -> i32 {
         Ok(h) => h,
         Err(e) => return fail(&e.to_string()),
     };
-    let sampler = match flags.get("topk").and_then(|s| s.parse::<usize>().ok()) {
-        Some(k) => Sampler::TopK { k, temperature: 0.8, seed: 0 },
-        None => Sampler::Greedy,
+    let sampler = if let Some(k) = flags.get("topk").and_then(|s| s.parse::<usize>().ok()) {
+        Sampler::TopK { k, temperature: 0.8, seed: 0 }
+    } else if let Some(p) = flags.get("topp").and_then(|s| s.parse::<f32>().ok()) {
+        Sampler::TopP { p, temperature: 0.8, seed: 0 }
+    } else {
+        Sampler::Greedy
     };
-    let cfg = session_cfg(&home, prompt.len(), max_new);
+    let cfg = session_cfg(&home, max_new);
     let generator = SwarmGenerator { swarm: &swarm, head: &head, cfg, sampler };
+    if flags.contains_key("stream") {
+        // pull-based stream: print each token the moment it is produced
+        use petals::coordinator::client::GenOptions;
+        let opts = GenOptions { max_new, ..Default::default() };
+        let mut stream = match generator.stream(&[prompt], opts, 1) {
+            Ok(s) => s,
+            Err(e) => return fail(&e.to_string()),
+        };
+        loop {
+            match stream.next_step() {
+                Ok(Some(step)) => {
+                    println!("token {:3}: {:5}  ({:.3}s)", step.step, step.tokens[0], step.step_s);
+                }
+                Ok(None) => break,
+                Err(e) => return fail(&e.to_string()),
+            }
+        }
+        let out = match stream.finish() {
+            Ok(o) => o,
+            Err(e) => return fail(&e.to_string()),
+        };
+        let steps_per_s = out.steps as f64 / out.wall.as_secs_f64();
+        println!("{} steps in {:?} = {:.2} steps/s ({} recoveries)", out.steps, out.wall, steps_per_s, out.recoveries);
+        return 0;
+    }
     match generator.generate(&[prompt], max_new, 1) {
         Ok(out) => {
             let steps_per_s = out.steps as f64 / out.wall.as_secs_f64();
@@ -393,7 +426,7 @@ fn cmd_generate(flags: &HashMap<String, String>) -> i32 {
 }
 
 fn cmd_chat(flags: &HashMap<String, String>) -> i32 {
-    use petals::api::ChatBackend;
+    use petals::api::ApiServer;
     let home = match ModelHome::open(artifacts_dir(flags)) {
         Ok(h) => h,
         Err(e) => return fail(&e.to_string()),
@@ -415,17 +448,66 @@ fn cmd_chat(flags: &HashMap<String, String>) -> i32 {
         Ok(h) => Arc::new(h),
         Err(e) => return fail(&e.to_string()),
     };
-    let cfg = session_cfg(&home, 8, 32);
-    let backend = ChatBackend::new(swarm, head, cfg);
+    let vocab = home.geometry().vocab as i32;
+    let cfg = session_cfg(&home, 32);
+    let backend = ApiServer::new(swarm, head, cfg);
     let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
-    match backend.serve(&listen, stop) {
+    let addr = match backend.serve(&listen, stop) {
         Ok(addr) => {
-            println!("chat backend on http://{addr} (POST /api/v1/generate)");
-            loop {
-                std::thread::sleep(std::time::Duration::from_secs(3600));
-            }
+            println!("chat backend on http://{addr} (see docs/HTTP_API.md for endpoints)");
+            addr
         }
-        Err(e) => fail(&e.to_string()),
+        Err(e) => return fail(&e.to_string()),
+    };
+    if !flags.contains_key("stream") {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    // --stream: an interactive REPL over the backend's own streaming
+    // endpoint — tokens print as the swarm produces them (~1 step/s on
+    // paper-scale models is watchable, which is the point)
+    println!("streaming chat REPL — type a message, Ctrl-D to exit");
+    let stdin = std::io::stdin();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        use std::io::BufRead;
+        match stdin.lock().read_line(&mut line) {
+            Ok(0) | Err(_) => return 0, // EOF
+            Ok(_) => {}
+        }
+        let msg = line.trim();
+        if msg.is_empty() {
+            continue;
+        }
+        // char-level "tokenizer" (BLOOM-mini's tokenizer is synthetic)
+        let ids: Vec<String> =
+            msg.bytes().map(|b| ((b as i32) % vocab).to_string()).collect();
+        let body = format!(
+            "{{\"inputs\":[{}],\"max_new_tokens\":16}}",
+            ids.join(",")
+        );
+        print!("swarm:");
+        let result = petals::api::http_post_stream(&addr, "/api/v1/stream", &body, |l| {
+            match petals::api::StreamEvent::parse(l) {
+                Ok(petals::api::StreamEvent::Token(t)) => {
+                    print!(" {}", t.token);
+                    use std::io::Write;
+                    let _ = std::io::stdout().flush();
+                }
+                Ok(petals::api::StreamEvent::Stats(st)) => {
+                    println!("\n  [{} tokens @ {:.2} steps/s]", st.steps, st.steps_per_s);
+                }
+                Ok(petals::api::StreamEvent::Error { code, message }) => {
+                    println!("\n  [error {code}: {message}]");
+                }
+                Err(_) => {}
+            }
+        });
+        if let Err(e) = result {
+            println!("\nrequest failed: {e}");
+        }
     }
 }
 

@@ -190,6 +190,9 @@ pub struct NodeMetrics {
     /// Single-session decode steps served from the cached K/V literals
     /// (pool gather + upload skipped).
     pub fastpath_hits: Counter,
+    /// Sessions closed by the idle-TTL sweep (abandoned clients whose
+    /// KV-pool reservations would otherwise leak forever).
+    pub sessions_swept: Counter,
 }
 
 impl NodeMetrics {
@@ -201,7 +204,7 @@ impl NodeMetrics {
         format!(
             "requests={} failures={} in={}B out={}B step[{}] kv_pages={}/{} \
              batched={} fused_rows={} rejects={} prefix_hit={}/{} \
-             prefill_skips={} shared_pages={} cow_forks={} fastpath={}",
+             prefill_skips={} shared_pages={} cow_forks={} fastpath={} swept={}",
             self.requests.get(),
             self.failures.get(),
             self.bytes_in.get(),
@@ -218,6 +221,7 @@ impl NodeMetrics {
             self.kv_pages_shared.get(),
             self.cow_forks.get(),
             self.fastpath_hits.get(),
+            self.sessions_swept.get(),
         )
     }
 }

@@ -63,13 +63,14 @@ impl ModelHome {
 }
 
 #[cfg(test)]
+#[allow(dead_code)] // unused when artifact-tests is off
 pub(crate) fn test_home() -> ModelHome {
     let root = std::env::var("PETALS_ARTIFACTS")
         .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string());
     ModelHome::open(root).expect("artifacts not built; run `make artifacts`")
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "artifact-tests"))]
 mod tests {
     use super::*;
 

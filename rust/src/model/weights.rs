@@ -133,7 +133,7 @@ fn load_int8_block(
     Ok(BlockWeights { flat, precision: Precision::Int8 })
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "artifact-tests"))]
 mod tests {
     use super::*;
     use crate::model::test_home;

@@ -198,6 +198,7 @@ mod tests {
 
     /// Real mini-scale offloading run: streamed execution matches the
     /// resident-weight forward numerically.
+    #[cfg(feature = "artifact-tests")]
     #[test]
     fn real_offload_sweep_matches_resident() {
         let home = crate::model::test_home();

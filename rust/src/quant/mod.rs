@@ -145,6 +145,7 @@ pub fn wire_bytes(elems: usize, compressed: bool) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    #[cfg(feature = "artifact-tests")]
     use crate::model::test_home;
 
     #[test]
@@ -200,6 +201,7 @@ mod tests {
     }
 
     /// Bit-compatibility with the Pallas kernel (golden artifacts).
+    #[cfg(feature = "artifact-tests")]
     #[test]
     fn matches_pallas_golden() {
         let home = test_home();

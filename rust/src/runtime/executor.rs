@@ -140,7 +140,7 @@ impl Executor {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "artifact-tests"))]
 mod tests {
     use super::*;
     use crate::model::{test_home, ModelHome};

@@ -76,7 +76,7 @@ impl Runtime {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "artifact-tests"))]
 mod tests {
     use super::*;
     use crate::model::test_home;

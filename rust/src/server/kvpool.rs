@@ -247,6 +247,15 @@ impl KvPool {
         self.tables.len()
     }
 
+    /// Ids of every open session (sorted — deterministic sweeps). The
+    /// idle-TTL sweep walks this to find reservations whose client
+    /// vanished without closing.
+    pub fn session_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.tables.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
     pub fn has_session(&self, session: u64) -> bool {
         self.tables.contains_key(&session)
     }
@@ -1052,6 +1061,40 @@ mod tests {
         p.gather_padded(2, 0, 0, 8, &mut dst).unwrap();
         // nothing written yet, len == 0 -> all zeros (no stale data)
         assert!(dst.iter().all(|&v| v == 0.0));
+    }
+
+    /// Regression (server session TTL/GC): the idle sweep reclaims
+    /// abandoned sessions by walking `session_ids()` through the normal
+    /// `close_session` path — every session's pages come back (a CoW
+    /// sharer included), while pinned prefix pages survive until their
+    /// pin is dropped.
+    #[test]
+    fn sweep_by_session_ids_frees_pages_keeps_pins() {
+        let mut p = KvPool::new(cfg(32));
+        // donor writes an 8-token prefix (1 block, batch 1) and pins it
+        p.open_session(1, 1, 1, 8).unwrap();
+        p.prepare_write(1, 7).unwrap();
+        let w = kv_src(1, 2, 8, 3, 1.0);
+        p.write_prefill(1, 0, 0, &w, 8).unwrap();
+        p.write_prefill(1, 0, 1, &w, 8).unwrap();
+        p.commit_len(1, 8);
+        let pin = p.pin_prefix(1, 8).unwrap();
+        // an abandoned sharer holds the pinned span by reference
+        p.open_session_shared(2, 1, 8, pin, 8, 8).unwrap();
+        assert_eq!(p.session_ids(), vec![1, 2]);
+
+        // the sweep: close every abandoned session
+        for id in p.session_ids() {
+            p.close_session(id);
+        }
+        assert_eq!(p.n_sessions(), 0);
+        assert!(p.session_ids().is_empty());
+        assert!(p.used_pages() > 0, "pinned prefix pages must survive the sweep");
+        assert_eq!(p.pinned_prefixes(), 1);
+        // dropping the pin releases the last pages — nothing leaks
+        assert!(p.unpin_prefix(pin));
+        assert_eq!(p.used_pages(), 0);
+        assert_eq!(p.free_pages(), 32);
     }
 
     #[test]

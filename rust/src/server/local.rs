@@ -222,7 +222,7 @@ pub fn spawn_even_swarm(
     Ok(cluster)
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "artifact-tests"))]
 mod tests {
     use super::*;
     use crate::coordinator::client::{LocalHead, Sampler, SwarmGenerator};
@@ -242,9 +242,6 @@ mod tests {
     fn session_cfg(n_blocks: usize, hidden: usize) -> SessionConfig {
         SessionConfig {
             n_blocks,
-            batch: 1,
-            prefill_width: 128,
-            prefix_len: 8,
             max_new: 8,
             route: RouteQuery {
                 n_blocks,
@@ -311,12 +308,19 @@ mod tests {
 
         // generate the first half of tokens, then kill server-1
         let cfg = session_cfg(g.n_layers, g.hidden);
-        let mut session =
-            crate::coordinator::session::InferenceSession::open(&cluster, cfg.clone(), 77).unwrap();
         let p = prefix_t.elements();
-        let mut ids = vec![0i32; cfg.prefill_width];
+        let w = head.derive_prefill_width(1, p).unwrap();
+        let shape = crate::coordinator::session::PromptShape {
+            batch: 1,
+            prefix_len: p,
+            prefill_width: w,
+        };
+        let mut session =
+            crate::coordinator::session::InferenceSession::open(&cluster, cfg.clone(), shape, 77)
+                .unwrap();
+        let mut ids = vec![0i32; w];
         ids[..p].copy_from_slice(prefix_t.as_i32());
-        let h0 = head.embed(&Tensor::from_i32(&[1, cfg.prefill_width], &ids)).unwrap();
+        let h0 = head.embed(&Tensor::from_i32(&[1, w], &ids)).unwrap();
         let h_pre = session.prefill(h0).unwrap();
         let hidden = g.hidden;
         let mut last = {

@@ -106,6 +106,11 @@ pub struct ServerOptions {
     /// steps (the single-session fast path; 0 disables it). Each slot
     /// costs one full padded cache per hosted block, so keep it small.
     pub step_literal_cache: usize,
+    /// Close sessions idle longer than this (crashed clients, streams
+    /// abandoned mid-generation, opens never followed by a `close`) so
+    /// their KV-pool reservations cannot leak forever. `None` disables
+    /// the sweep; [`service::serve`] runs it on a background thread.
+    pub session_ttl: Option<Duration>,
 }
 
 impl Default for ServerOptions {
@@ -116,6 +121,7 @@ impl Default for ServerOptions {
             max_batch_width: 8,
             prefix_cache_entries: 8,
             step_literal_cache: 2,
+            session_ttl: Some(Duration::from_secs(600)),
         }
     }
 }
@@ -159,6 +165,12 @@ pub struct ServerNode {
     step_lits: Mutex<HashMap<u64, StepLitCache>>,
     step_lit_cap: usize,
     lit_tick: AtomicU64,
+    /// Last request time per session (leaf lock) — the idle-TTL sweep's
+    /// evidence. Touched on open/prefill/step, dropped on close.
+    last_seen: Mutex<HashMap<u64, std::time::Instant>>,
+    /// Idle TTL after which [`Self::sweep_idle_sessions`] closes a
+    /// session (None disables).
+    pub session_ttl: Option<Duration>,
     /// Group-commit scheduler fusing concurrent decode steps.
     scheduler: StepScheduler,
     pub metrics: NodeMetrics,
@@ -230,6 +242,8 @@ impl ServerNode {
             step_lits: Mutex::new(HashMap::new()),
             step_lit_cap: opts.step_literal_cache,
             lit_tick: AtomicU64::new(0),
+            last_seen: Mutex::new(HashMap::new()),
+            session_ttl: opts.session_ttl,
             scheduler: StepScheduler::new(opts.batch_window, opts.max_batch_width),
             metrics,
             throughput: Mutex::new(MeasuredThroughput::new()),
@@ -293,11 +307,50 @@ impl ServerNode {
     }
 
     /// Forget per-session bookkeeping outside the pool (pending prefix
-    /// registration, full-hit marker, warm step literals).
+    /// registration, full-hit marker, warm step literals, idle clock).
     fn clear_session_trackers(&self, session: u64) {
         self.pending_register.lock().unwrap().remove(&session);
         self.full_hits.lock().unwrap().remove(&session);
         self.step_lits.lock().unwrap().remove(&session);
+        self.last_seen.lock().unwrap().remove(&session);
+    }
+
+    /// Reset a session's idle clock (leaf lock).
+    fn touch_session(&self, session: u64) {
+        self.last_seen
+            .lock()
+            .unwrap()
+            .insert(session, std::time::Instant::now());
+    }
+
+    /// Close every session idle for at least `ttl` — the abandoned-
+    /// session GC. A session whose client crashed mid-stream (or never
+    /// sent `close`) holds pool pages and pins forever otherwise; the
+    /// sweep frees them through the ordinary [`Self::close_session`]
+    /// path, so shared-prefix refcounts and pinned pages stay correct.
+    /// Returns the swept session ids.
+    pub fn sweep_idle_sessions(&self, ttl: Duration) -> Vec<u64> {
+        let now = std::time::Instant::now();
+        let ids = {
+            let pool = self.pool.lock().unwrap();
+            pool.session_ids()
+        };
+        let idle: Vec<u64> = {
+            let mut seen = self.last_seen.lock().unwrap();
+            // sessions that somehow predate tracking start their clock
+            // now rather than being reaped blind
+            ids.iter()
+                .filter(|&&id| {
+                    now.duration_since(*seen.entry(id).or_insert(now)) >= ttl
+                })
+                .copied()
+                .collect()
+        };
+        for &id in &idle {
+            self.close_session(id);
+            self.metrics.sessions_swept.inc();
+        }
+        idle
     }
 
     fn entry_name(&self, kind: &str, batch: usize, width: usize) -> String {
@@ -387,6 +440,7 @@ impl ServerNode {
         };
         drop(cache);
         if let Ok(shared) = &result {
+            self.touch_session(session);
             if eligible {
                 if *shared > 0 {
                     self.metrics.prefix_hits.inc();
@@ -454,6 +508,7 @@ impl ServerNode {
     /// KV into the paged pool and returns the span's output.
     pub fn prefill(&self, session: u64, h: &Tensor) -> Result<Tensor> {
         let t0 = std::time::Instant::now();
+        self.touch_session(session);
         self.active.fetch_add(1, Ordering::Relaxed);
         let result = self.prefill_inner(session, h);
         self.active.fetch_sub(1, Ordering::Relaxed);
@@ -569,6 +624,7 @@ impl ServerNode {
     /// concurrent steps (one batched forward per hosted span).
     pub fn step(&self, session: u64, cache_len: usize, h: &Tensor) -> Result<Tensor> {
         let t0 = std::time::Instant::now();
+        self.touch_session(session);
         self.active.fetch_add(1, Ordering::Relaxed);
         let req = StepRequest { session, cache_len, hidden: h.clone() };
         let result = self.scheduler.submit(req, |reqs| self.step_batch(reqs));
@@ -1009,7 +1065,7 @@ fn extract_column(t: &Tensor, hh: usize, d: usize, pos: usize) -> Vec<f32> {
     col
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "artifact-tests"))]
 mod tests {
     use super::*;
     use crate::model::test_home;
@@ -1230,6 +1286,38 @@ mod tests {
             panic!("expected Pong");
         };
         assert!(after < free_pages, "open session must consume pool budget");
+    }
+
+    /// Satellite: abandoned sessions (client crashed mid-stream, never
+    /// closed) are reclaimed by the idle-TTL sweep; active sessions
+    /// survive and stay usable.
+    #[test]
+    fn idle_session_ttl_sweep_frees_pool() {
+        let home = test_home();
+        let g = home.geometry().clone();
+        let rt = rt_for(&home, 1);
+        let s = ServerNode::start("ttl", &home, rt, 0..1, Precision::F16, false).unwrap();
+        s.open_session(1, 1, 0).unwrap();
+        s.open_session(2, 1, 0).unwrap();
+        let (free_open, total) = s.pool_stats();
+        assert!(free_open < total);
+        // nothing is idle yet
+        assert!(s.sweep_idle_sessions(Duration::from_millis(60)).is_empty());
+        std::thread::sleep(Duration::from_millis(80));
+        // keep session 2 warm; session 1's client has vanished
+        let h0 = Tensor::zeros(&[1, 128, g.hidden], crate::model::tensor::DType::F32);
+        s.prefill(2, &h0).unwrap();
+        let swept = s.sweep_idle_sessions(Duration::from_millis(60));
+        assert_eq!(swept, vec![1], "only the abandoned session is swept");
+        assert_eq!(s.metrics.sessions_swept.get(), 1);
+        let (free_after, _) = s.pool_stats();
+        assert!(free_after > free_open, "sweeping must free the leaked pages");
+        // the survivor keeps serving
+        let h_step = Tensor::zeros(&[1, 1, g.hidden], crate::model::tensor::DType::F32);
+        s.step(2, 128, &h_step).unwrap();
+        assert!(s.sweep_idle_sessions(Duration::from_secs(60)).is_empty());
+        // a swept id can re-open cleanly
+        s.open_session(1, 1, 0).unwrap();
     }
 
     #[test]

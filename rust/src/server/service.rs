@@ -40,6 +40,32 @@ pub fn serve(node: Arc<ServerNode>, addr: &str) -> Result<ServerHandle> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?.to_string();
     let stop = Arc::new(AtomicBool::new(false));
+    // idle-session GC: clients that crashed mid-stream (or never sent
+    // CloseSession) would otherwise hold their KV-pool reservation
+    // forever — the sweep returns those pages through the ordinary
+    // close path
+    if let Some(ttl) = node.session_ttl {
+        let gc_node = node.clone();
+        let gc_stop = stop.clone();
+        std::thread::Builder::new()
+            .name(format!("petals-gc-{}", node.id.short()))
+            .spawn(move || {
+                let beat = (ttl / 4).max(std::time::Duration::from_millis(50));
+                while !gc_stop.load(Ordering::SeqCst) {
+                    std::thread::sleep(beat);
+                    let swept = gc_node.sweep_idle_sessions(ttl);
+                    if !swept.is_empty() {
+                        eprintln!(
+                            "[{}] swept {} idle session(s): {:?}",
+                            gc_node.id.short(),
+                            swept.len(),
+                            swept
+                        );
+                    }
+                }
+            })
+            .map_err(|e| Error::Other(format!("spawn gc: {e}")))?;
+    }
     let stop2 = stop.clone();
     let node2 = node.clone();
     std::thread::Builder::new()

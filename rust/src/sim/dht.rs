@@ -35,6 +35,7 @@ pub struct SimDhtNet {
     pub hop_latency_s: f64,
     clock_s: Cell<f64>,
     rpcs: Cell<u64>,
+    pings: Cell<u64>,
 }
 
 /// One metered lookup: RPCs issued and virtual time charged.
@@ -60,6 +61,7 @@ impl SimDhtNet {
             hop_latency_s,
             clock_s: Cell::new(0.0),
             rpcs: Cell::new(0),
+            pings: Cell::new(0),
         };
         net.nodes.borrow_mut().insert(
             ids[0],
@@ -116,6 +118,12 @@ impl SimDhtNet {
         self.rpcs.get()
     }
 
+    /// Pings issued (the iterative lookups must issue none — their
+    /// queries double as the liveness probe; see `dht::Rpc::find_node`).
+    pub fn ping_count(&self) -> u64 {
+        self.pings.get()
+    }
+
     pub fn kill(&self, id: NodeId) {
         if let Some(n) = self.nodes.borrow_mut().get_mut(&id) {
             n.alive = false;
@@ -158,12 +166,12 @@ impl SimDhtNet {
 }
 
 impl Rpc for SimDhtNet {
-    fn find_node(&self, callee: NodeId, target: NodeId) -> Vec<NodeId> {
+    fn find_node(&self, callee: NodeId, target: NodeId) -> Option<Vec<NodeId>> {
         self.charge();
         let nodes = self.nodes.borrow();
         match nodes.get(&callee) {
-            Some(n) if n.alive => n.table.closest(target, K),
-            _ => vec![],
+            Some(n) if n.alive => Some(n.table.closest(target, K)),
+            _ => None,
         }
     }
 
@@ -197,6 +205,7 @@ impl Rpc for SimDhtNet {
 
     fn ping(&self, callee: NodeId) -> bool {
         self.charge();
+        self.pings.set(self.pings.get() + 1);
         self.nodes.borrow().get(&callee).map(|n| n.alive).unwrap_or(false)
     }
 }
@@ -223,6 +232,29 @@ mod tests {
             assert!(cost.found >= 1, "key {i} unresolvable");
             assert!(cost.rpcs > 0 && cost.latency_s > 0.0);
         }
+    }
+
+    /// Satellite: the iterative lookups must not ping-preflight — the
+    /// query RPC doubles as the liveness probe, so a lookup costs one
+    /// `find_node` (plus at most one `find_value`) per contacted peer
+    /// instead of two dials each.
+    #[test]
+    fn lookups_issue_no_ping_preflight() {
+        let (net, ids) = SimDhtNet::build(64, 5, 0.05);
+        let key = NodeId::from_name("bloom/block/2");
+        net.publish(ids[3], &[ids[0]], key, b"srv".to_vec(), 600_000);
+        let pings_before = net.ping_count();
+        let cost = net.measure_lookup(&[ids[40]], key);
+        assert!(cost.found >= 1);
+        assert_eq!(net.ping_count(), pings_before, "lookup must issue zero pings");
+        // ...and a pure node lookup too
+        let r0 = net.rpc_count();
+        let _ = iterative_find_node(&net, &[ids[10]], NodeId::from_name("probe"));
+        let dials = net.rpc_count() - r0;
+        assert_eq!(net.ping_count(), pings_before, "find_node lookup must issue zero pings");
+        assert!(dials > 0);
+        // every dial is a find_node — with the old preflight this same
+        // lookup cost 2x (ping + find_node per contacted peer)
     }
 
     #[test]

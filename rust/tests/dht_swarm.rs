@@ -41,11 +41,11 @@ mod util {
     }
 
     impl petals::dht::Rpc for Net {
-        fn find_node(&self, callee: NodeId, target: NodeId) -> Vec<NodeId> {
+        fn find_node(&self, callee: NodeId, target: NodeId) -> Option<Vec<NodeId>> {
             let nodes = self.nodes.borrow();
             match nodes.get(&callee) {
-                Some((t, _, true)) => t.closest(target, petals::dht::K),
-                _ => vec![],
+                Some((t, _, true)) => Some(t.closest(target, petals::dht::K)),
+                _ => None,
             }
         }
         fn find_value(&self, callee: NodeId, key: NodeId) -> Option<Vec<Record>> {

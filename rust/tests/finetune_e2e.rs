@@ -3,7 +3,7 @@
 
 use petals::config::Rng;
 use petals::coordinator::routing::RouteQuery;
-use petals::finetune::PromptTuner;
+use petals::finetune::{ChainActivations, PromptTuner};
 use petals::model::tensor::Tensor;
 use petals::model::{ModelHome, Precision, Weights};
 use petals::runtime::Runtime;
@@ -42,6 +42,7 @@ fn prompt_tuning_loss_decreases_through_real_blocks() {
         msg_bytes: (b * s * g.hidden * 4) as u64,
         ..Default::default()
     };
+    let backend = ChainActivations::new(&swarm, route);
     let mut rng = Rng::new(7);
     let half = (g.vocab / 2) as i32;
     let mut first_loss = 0.0;
@@ -59,7 +60,7 @@ fn prompt_tuning_loss_decreases_through_real_blocks() {
             }
         }
         let embeds = head.embed(&Tensor::from_i32(&[b, s], &ids)).unwrap();
-        let rep = tuner.train_step(&swarm, &route, &embeds, &labels, s - 1).unwrap();
+        let rep = tuner.train_step(&backend, &embeds, &labels, s - 1).unwrap();
         if step == 0 {
             first_loss = rep.loss;
         }
@@ -69,6 +70,68 @@ fn prompt_tuning_loss_decreases_through_real_blocks() {
         last_loss < first_loss * 0.98,
         "loss did not decrease: {first_loss} -> {last_loss}"
     );
+}
+
+/// Acceptance: the public HTTP API path (`/api/v1/forward` +
+/// `/api/v1/backward`, what examples/prompt_tune.rs drives) must match
+/// direct chain access bit-for-bit — activations and gradients survive
+/// the JSON wire exactly.
+#[test]
+fn http_activation_backend_matches_direct() {
+    use petals::api::ApiServer;
+    use petals::coordinator::session::SessionConfig;
+    use petals::finetune::{ActivationBackend, HttpActivations};
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let home = home();
+    let g = home.geometry().clone();
+    let (b, s) = (4usize, 64usize);
+    let rt = Arc::new(
+        Runtime::load_filtered(&home, |n| {
+            n == format!("embed_b{b}_s{s}")
+                || n == format!("block_prefill_b{b}_s{s}")
+                || n == format!("block_bwd_b{b}_s{s}")
+        })
+        .unwrap(),
+    );
+    let swarm = Arc::new(spawn_even_swarm(&home, rt.clone(), 2, Precision::F16).unwrap());
+    let weights = Weights::load(&home, Precision::F16).unwrap();
+    let head = Arc::new(petals::coordinator::client::LocalHead::new(&home, rt, &weights).unwrap());
+    let route = RouteQuery {
+        n_blocks: g.n_layers,
+        msg_bytes: (b * s * g.hidden * 4) as u64,
+        ..Default::default()
+    };
+    let cfg = SessionConfig {
+        n_blocks: g.n_layers,
+        max_new: 8,
+        route: route.clone(),
+        max_recoveries: 1,
+        prefix_tokens: vec![],
+    };
+    let api = ApiServer::new(swarm.clone(), head.clone(), cfg);
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = api.serve("127.0.0.1:0", stop.clone()).unwrap();
+
+    let mut rng = Rng::new(3);
+    let ids: Vec<i32> = (0..b * s).map(|_| rng.below(g.vocab as u64) as i32).collect();
+    let x = head.embed(&Tensor::from_i32(&[b, s], &ids)).unwrap();
+    let mut gvals = vec![0f32; b * s * g.hidden];
+    for v in gvals.iter_mut() {
+        *v = (rng.f64() as f32 - 0.5) * 0.1;
+    }
+    let grad = Tensor::from_f32(&[b, s, g.hidden], &gvals);
+
+    let direct = ChainActivations::new(swarm.as_ref(), route);
+    let http = HttpActivations { addr };
+    let f_direct = direct.forward(&x).unwrap();
+    let f_http = http.forward(&x).unwrap();
+    assert_eq!(f_http.shape, f_direct.shape);
+    assert_eq!(f_http.as_f32(), f_direct.as_f32(), "HTTP forward must be bit-exact");
+    let b_direct = direct.backward(&x, &grad).unwrap();
+    let b_http = http.backward(&x, &grad).unwrap();
+    assert_eq!(b_http.as_f32(), b_direct.as_f32(), "HTTP backward must be bit-exact");
+    stop.store(true, Ordering::SeqCst);
 }
 
 /// Server-side invariant: fine-tuning must NOT change server weights —
@@ -95,9 +158,6 @@ fn server_weights_frozen_during_training() {
         use petals::coordinator::session::SessionConfig;
         let cfg = SessionConfig {
             n_blocks: g.n_layers,
-            batch: 1,
-            prefill_width: 128,
-            prefix_len: 8,
             max_new: 4,
             route: RouteQuery {
                 n_blocks: g.n_layers,
@@ -126,7 +186,8 @@ fn server_weights_frozen_during_training() {
     };
     let ids = vec![5i32; b * s];
     let embeds = head.embed(&Tensor::from_i32(&[b, s], &ids)).unwrap();
-    tuner.train_step(&swarm, &route, &embeds, &[0, 1, 0, 1], s - 1).unwrap();
+    let backend = ChainActivations::new(&swarm, route);
+    tuner.train_step(&backend, &embeds, &[0, 1, 0, 1], s - 1).unwrap();
 
     let after = gen(2);
     assert_eq!(before, after, "training mutated server-side behaviour");

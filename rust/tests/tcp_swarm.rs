@@ -27,9 +27,6 @@ fn cfg(home: &ModelHome) -> SessionConfig {
     let g = home.geometry();
     SessionConfig {
         n_blocks: g.n_layers,
-        batch: 1,
-        prefill_width: 128,
-        prefix_len: 8,
         max_new: 8,
         route: RouteQuery {
             n_blocks: g.n_layers,
@@ -109,13 +106,15 @@ fn tcp_failover_recovers() {
     let want = home.load_tensor(&gg.tokens).unwrap().as_i32().to_vec();
 
     // custom loop so we can kill a server at step 3
-    use petals::coordinator::session::InferenceSession;
+    use petals::coordinator::session::{InferenceSession, PromptShape};
     use petals::model::tensor::Tensor;
     let scfg = cfg(&home);
-    let mut session = InferenceSession::open(&swarm, scfg.clone(), 5).unwrap();
-    let mut ids = vec![0i32; scfg.prefill_width];
+    let w = head.derive_prefill_width(1, prefix.len()).unwrap();
+    let shape = PromptShape { batch: 1, prefix_len: prefix.len(), prefill_width: w };
+    let mut session = InferenceSession::open(&swarm, scfg.clone(), shape, 5).unwrap();
+    let mut ids = vec![0i32; w];
     ids[..prefix.len()].copy_from_slice(&prefix);
-    let h0 = head.embed(&Tensor::from_i32(&[1, scfg.prefill_width], &ids)).unwrap();
+    let h0 = head.embed(&Tensor::from_i32(&[1, w], &ids)).unwrap();
     let h_pre = session.prefill(h0).unwrap();
     let p = prefix.len();
     let hidden = g.hidden;
@@ -206,8 +205,8 @@ fn tcp_shared_prompt_hits_prefix_cache() {
     h2.shutdown();
 }
 
-/// HTTP chat backend over a TCP swarm: full 4-layer stack
-/// (HTTP -> client -> TCP protocol -> PJRT).
+/// HTTP API server over a TCP swarm: full 4-layer stack
+/// (HTTP -> client -> TCP protocol -> PJRT), batch and streaming.
 #[test]
 fn http_backend_over_tcp_swarm() {
     let home = home();
@@ -223,7 +222,7 @@ fn http_backend_over_tcp_swarm() {
     let swarm = Arc::new(TcpSwarm::connect(&peers));
     let weights = Weights::load(&home, Precision::F16).unwrap();
     let head = Arc::new(LocalHead::new(&home, rt, &weights).unwrap());
-    let backend = petals::api::ChatBackend::new(swarm, head, cfg(&home));
+    let backend = petals::api::ApiServer::new(swarm, head, cfg(&home));
     let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
     let addr = backend.serve("127.0.0.1:0", stop.clone()).unwrap();
 
@@ -234,7 +233,36 @@ fn http_backend_over_tcp_swarm() {
     )
     .unwrap();
     let v = petals::config::json::Value::parse(&reply).unwrap();
-    assert_eq!(v.get("outputs").unwrap().arr().unwrap().len(), 3);
+    let batch: Vec<i64> = v
+        .get("outputs")
+        .unwrap()
+        .arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.f64().unwrap() as i64)
+        .collect();
+    assert_eq!(batch.len(), 3);
+
+    // the streaming endpoint over the same TCP swarm produces the same
+    // tokens, one event at a time, closed by a stats event
+    let mut events = Vec::new();
+    petals::api::http_post_stream(
+        &addr,
+        "/api/v1/stream",
+        r#"{"inputs": [5,6,7,8,9,10,11,12], "max_new_tokens": 3}"#,
+        |line| events.push(petals::api::StreamEvent::parse(line).unwrap()),
+    )
+    .unwrap();
+    assert_eq!(events.len(), 4);
+    let streamed: Vec<i64> = events[..3]
+        .iter()
+        .map(|e| match e {
+            petals::api::StreamEvent::Token(t) => t.token as i64,
+            other => panic!("expected token event, got {other:?}"),
+        })
+        .collect();
+    assert_eq!(streamed, batch, "stream and batch must match over TCP");
+    assert!(matches!(events[3], petals::api::StreamEvent::Stats(_)));
     stop.store(true, std::sync::atomic::Ordering::SeqCst);
     h1.shutdown();
     h2.shutdown();
