@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Perf trajectory: run the machine-readable benches and emit BENCH_*.json
 # so successive PRs can be compared (see ci/bench_compare.sh for the
-# regression gate).
+# multi-metric regression gate and ci/README.md for the baseline
+# workflow).
 #
 #   ci/bench.sh [OUTDIR]     # default: the repo root
 #
@@ -9,6 +10,10 @@
 #   OUTDIR/BENCH_dht.json           — iterative-lookup hop count & latency,
 #                                     churn reconvergence (sim + loopback
 #                                     TCP); needs no artifacts
+#   OUTDIR/BENCH_ragged.json        — ragged continuous batching: mixed-
+#                                     length sim sweep (occupancy,
+#                                     aggregate steps/s, p50 TTFT); needs
+#                                     no artifacts — always produced
 #   OUTDIR/BENCH_prefix_cache.json  — shared-prefix multiclient bench:
 #                                     pages/session, hit rate,
 #                                     aggregate_steps_per_s, sim TTFT;
@@ -32,17 +37,26 @@ echo
 echo "==> $OUTDIR/BENCH_dht.json"
 cat "$OUTDIR/BENCH_dht.json"
 
+# the multiclient bench runs its artifact-free ragged sim sweep FIRST and
+# always writes BENCH_ragged.json; the real-swarm sections (and
+# BENCH_prefix_cache.json) only run when the AOT artifacts exist
+echo
+echo "==> cargo bench --bench multiclient (BENCH_RAGGED_OUT=$OUTDIR/BENCH_ragged.json)"
+BENCH_RAGGED_OUT="$OUTDIR/BENCH_ragged.json" \
+BENCH_OUT="$OUTDIR/BENCH_prefix_cache.json" cargo bench --bench multiclient
+test -s "$OUTDIR/BENCH_ragged.json" || { echo "bench did not write BENCH_ragged.json" >&2; exit 1; }
+echo
+echo "==> $OUTDIR/BENCH_ragged.json"
+cat "$OUTDIR/BENCH_ragged.json"
+
 if [[ ! -f artifacts/manifest.json ]]; then
     echo
-    echo "SKIP: rust/artifacts/manifest.json not found — the multiclient"
-    echo "      bench needs the AOT artifacts ('make artifacts'); skipping"
-    echo "      BENCH_prefix_cache.json in this environment."
+    echo "SKIP: rust/artifacts/manifest.json not found — BENCH_prefix_cache.json"
+    echo "      needs the AOT artifacts ('make artifacts'); skipped in this"
+    echo "      environment (BENCH_dht.json and BENCH_ragged.json are complete)."
     exit 0
 fi
 
-echo
-echo "==> cargo bench --bench multiclient (BENCH_OUT=$OUTDIR/BENCH_prefix_cache.json)"
-BENCH_OUT="$OUTDIR/BENCH_prefix_cache.json" cargo bench --bench multiclient
 test -s "$OUTDIR/BENCH_prefix_cache.json" || { echo "bench did not write BENCH_prefix_cache.json" >&2; exit 1; }
 echo
 echo "==> $OUTDIR/BENCH_prefix_cache.json"

@@ -1,41 +1,55 @@
 #!/usr/bin/env bash
-# Bench-trajectory gate: diff a freshly produced BENCH_*.json against the
-# committed previous run and fail on a significant regression.
+# Bench-trajectory gate: diff freshly produced BENCH_*.json files against
+# the committed baselines and fail on any significant per-metric
+# regression.
 #
-#   ci/bench_compare.sh [NEW.json] [KEY] [MAX_DROP_PCT]
+# Multi-file mode (what CI runs):
+#   ci/bench_compare.sh NEWDIR
+#     Iterates every BENCH_*.json committed at the repo root at HEAD.
+#     For each baseline, the fresh twin is NEWDIR/<basename>; a missing
+#     twin is reported as SKIP (that bench did not run — e.g. artifacts
+#     absent), never a failure. Every metric listed in the baseline's
+#     "gates" object is compared with its declared direction and
+#     threshold:
+#         "gates": { "<metric>": {"dir": "higher"|"lower", "pct": N} }
+#     dir=higher fails when NEW < BASE * (1 - N/100)  (throughput-like);
+#     dir=lower  fails when NEW > BASE * (1 + N/100)  (latency-like).
+#     A baseline without a "gates" object contributes nothing (warned).
 #
-# Defaults: NEW = ./BENCH_prefix_cache.json, KEY = aggregate_steps_per_s,
-# MAX_DROP_PCT = 10. The baseline is the file of the same *name* committed
-# at the repo root at HEAD (`git show HEAD:<basename>`), so NEW may live
-# in a scratch directory (CI writes fresh results to bench-out/ precisely
-# so a skipped bench can never be compared against itself via the stale
-# committed copy). Higher-is-better semantics: the gate fails when
-# NEW[KEY] < BASE[KEY] * (1 - MAX_DROP_PCT/100).
+# Single-file mode (legacy interface, kept for scripts/tests):
+#   ci/bench_compare.sh NEW.json KEY [MAX_DROP_PCT]
+#     Gates one higher-is-better metric exactly as before.
 #
-# Exit codes: 0 pass (or no baseline yet — the first run *starts* the
-# trajectory), 1 regression, 2 usage/parse error.
+# Exit codes: 0 pass (including "no baseline yet" — the first run STARTS
+# the trajectory — and skipped files), 1 regression, 2 usage/parse error.
 
 set -euo pipefail
-NEW="${1:-BENCH_prefix_cache.json}"
-KEY="${2:-aggregate_steps_per_s}"
-MAX_DROP="${3:-10}"
 
-if [[ ! -s "$NEW" ]]; then
-    echo "error: '$NEW' missing or empty — run ci/bench.sh first" >&2
+usage() {
+    echo "usage: ci/bench_compare.sh NEWDIR | NEW.json KEY [MAX_DROP_PCT]" >&2
     exit 2
-fi
+}
 
-REPO_ROOT="$(git -C "$(dirname "$NEW")" rev-parse --show-toplevel)"
-REL="$(basename "$NEW")"
+[[ $# -ge 1 ]] || usage
 
-if ! BASE_JSON="$(git -C "$REPO_ROOT" show "HEAD:$REL" 2>/dev/null)"; then
-    echo "no committed baseline for $REL at HEAD — skipping compare."
-    echo "(commit a fresh $REL at the repo root to start the perf trajectory)"
-    exit 0
-fi
-
-export BASE_JSON
-python3 - "$NEW" "$KEY" "$MAX_DROP" <<'EOF'
+# ---- single-file legacy mode ------------------------------------------
+if [[ ! -d "$1" ]]; then
+    NEW="$1"
+    KEY="${2:-aggregate_steps_per_s}"
+    MAX_DROP="${3:-10}"
+    if [[ ! -s "$NEW" ]]; then
+        echo "error: '$NEW' missing or empty — run ci/bench.sh first" >&2
+        exit 2
+    fi
+    REPO_ROOT="$(git -C "$(dirname "$NEW")" rev-parse --show-toplevel)"
+    REL="$(basename "$NEW")"
+    if ! BASE_JSON="$(git -C "$REPO_ROOT" show "HEAD:$REL" 2>/dev/null)"; then
+        echo "no committed baseline for $REL at HEAD — skipping compare."
+        echo "(commit a fresh $REL at the repo root to start the perf trajectory)"
+        exit 0
+    fi
+    export BASE_JSON
+    python3 - "$NEW" "$KEY" "$MAX_DROP" <<'EOF'
 import json, os, sys
 
 new_path, key, max_drop = sys.argv[1], sys.argv[2], float(sys.argv[3])
@@ -58,3 +72,96 @@ if new_v < floor:
     sys.exit(1)
 print(f"ok (floor {floor:.3f})")
 EOF
+    exit $?
+fi
+
+# ---- multi-file, multi-metric mode ------------------------------------
+NEWDIR="$(cd "$1" && pwd)"
+REPO_ROOT="$(git rev-parse --show-toplevel)"
+
+BASELINES="$(git -C "$REPO_ROOT" ls-tree --name-only HEAD \
+    | grep -E '^BENCH_[A-Za-z0-9_.-]*\.json$' || true)"
+if [[ -z "$BASELINES" ]]; then
+    echo "no BENCH_*.json baselines committed at the repo root — nothing to gate."
+    echo "(commit fresh bench JSONs at the root to start the perf trajectory)"
+    exit 0
+fi
+
+FAIL=0
+COMPARED=0
+for REL in $BASELINES; do
+    NEW="$NEWDIR/$REL"
+    if [[ ! -s "$NEW" ]]; then
+        echo "SKIP $REL: no fresh result in $NEWDIR (that bench did not run)"
+        continue
+    fi
+    if ! BASE_JSON="$(git -C "$REPO_ROOT" show "HEAD:$REL" 2>/dev/null)"; then
+        echo "SKIP $REL: unreadable baseline at HEAD"
+        continue
+    fi
+    export BASE_JSON
+    set +e
+    python3 - "$NEW" "$REL" <<'EOF'
+import json, os, sys
+
+new_path, rel = sys.argv[1], sys.argv[2]
+try:
+    new = json.load(open(new_path))
+    base = json.loads(os.environ["BASE_JSON"])
+except (OSError, json.JSONDecodeError) as e:
+    print(f"error: {rel}: cannot parse bench JSON: {e}", file=sys.stderr)
+    sys.exit(2)
+gates = base.get("gates")
+if not isinstance(gates, dict) or not gates:
+    print(f"warn: {rel}: baseline declares no gates — nothing enforced")
+    sys.exit(0)
+failed = []
+for key, spec in sorted(gates.items()):
+    if not isinstance(spec, dict) or spec.get("dir") not in ("higher", "lower"):
+        print(f"error: {rel}: gate '{key}' needs dir higher|lower", file=sys.stderr)
+        sys.exit(2)
+    try:
+        pct = float(spec["pct"])
+    except (KeyError, TypeError, ValueError):
+        print(f"error: {rel}: gate '{key}' needs a numeric pct", file=sys.stderr)
+        sys.exit(2)
+    if key not in base:
+        print(f"error: {rel}: gated metric '{key}' missing from baseline", file=sys.stderr)
+        sys.exit(2)
+    if key not in new:
+        print(f"error: {rel}: gated metric '{key}' missing from fresh result", file=sys.stderr)
+        sys.exit(2)
+    base_v, new_v = float(base[key]), float(new[key])
+    delta = (new_v / base_v - 1) * 100 if base_v else float("inf")
+    if spec["dir"] == "higher":
+        bound = base_v * (1 - pct / 100)
+        bad = new_v < bound
+        kind, word = "floor", "below"
+    else:
+        bound = base_v * (1 + pct / 100)
+        bad = new_v > bound
+        kind, word = "ceiling", "above"
+    mark = "REGRESSION" if bad else "ok"
+    print(f"  {mark:10s} {rel}:{key}: {base_v:.4g} -> {new_v:.4g} "
+          f"({delta:+.1f}%, {kind} {bound:.4g})")
+    if bad:
+        failed.append(f"{key} {word} its {pct:.0f}% {kind}")
+if failed:
+    print(f"{rel}: {len(failed)} gated metric(s) regressed: {'; '.join(failed)}",
+          file=sys.stderr)
+    sys.exit(1)
+EOF
+    rc=$?
+    set -e
+    case $rc in
+        0) COMPARED=$((COMPARED + 1)) ;;
+        1) COMPARED=$((COMPARED + 1)); FAIL=1 ;;
+        *) exit 2 ;;
+    esac
+done
+
+if [[ "$FAIL" == 1 ]]; then
+    echo "bench trajectory REGRESSED (see per-metric report above)" >&2
+    exit 1
+fi
+echo "bench trajectory ok ($COMPARED file(s) compared)"

@@ -10,11 +10,17 @@
 # rotting silently.
 
 set -euo pipefail
+CI_DIR="$(cd "$(dirname "$0")" && pwd)"
 # shellcheck source=ci/preflight.sh
-. "$(dirname "$0")/preflight.sh"
-cd "$(dirname "$0")/../rust"
+. "$CI_DIR/preflight.sh"
+cd "$CI_DIR/../rust"
 
 step() { printf '\n==> %s\n' "$*"; }
+
+# the bench-compare gate's own tests run FIRST and need no toolchain —
+# a broken gate silently waves perf regressions through
+step "ci/test_bench_compare.sh"
+"$CI_DIR/test_bench_compare.sh"
 
 preflight_toolchain
 preflight_manifest

@@ -1,0 +1,132 @@
+#!/usr/bin/env bash
+# Self-test for ci/bench_compare.sh: skip / pass / fail paths in both the
+# multi-file multi-metric mode and the legacy single-file mode, run in a
+# throwaway git repo. Needs only bash + git + python3 (no toolchain), so
+# it runs everywhere check.sh does — and first, because a broken gate
+# silently waves regressions through.
+#
+#   ci/test_bench_compare.sh
+
+set -euo pipefail
+COMPARE="$(cd "$(dirname "$0")" && pwd)/bench_compare.sh"
+TMP="$(mktemp -d)"
+trap 'rm -rf "$TMP"' EXIT
+
+fail() { echo "FAIL: $*" >&2; exit 1; }
+
+mkrepo() {
+    git -C "$1" init -q
+    git -C "$1" -c user.email=ci@test -c user.name=ci commit -q --allow-empty -m init
+}
+
+commit_all() {
+    git -C "$1" add -A
+    git -C "$1" -c user.email=ci@test -c user.name=ci commit -q -m baseline
+}
+
+# ---- multi-file mode ---------------------------------------------------
+REPO="$TMP/repo"
+mkdir -p "$REPO/out"
+mkrepo "$REPO"
+
+# no baselines committed -> exit 0 (trajectory not started)
+(cd "$REPO" && "$COMPARE" out) || fail "no-baseline multi mode must exit 0"
+
+# two baselines: one throughput-like (higher), one latency-like (lower)
+cat > "$REPO/BENCH_a.json" <<'EOF'
+{"aggregate_steps_per_s": 100.0, "occupancy": 0.5,
+ "gates": {"aggregate_steps_per_s": {"dir": "higher", "pct": 10},
+           "occupancy": {"dir": "higher", "pct": 15}}}
+EOF
+cat > "$REPO/BENCH_b.json" <<'EOF'
+{"lookup_ms": 20.0, "gates": {"lookup_ms": {"dir": "lower", "pct": 50}}}
+EOF
+commit_all "$REPO"
+
+# fresh twin missing entirely -> SKIP, exit 0
+(cd "$REPO" && "$COMPARE" out) || fail "missing fresh results must SKIP, not fail"
+
+# both fresh and within bounds -> pass
+cat > "$REPO/out/BENCH_a.json" <<'EOF'
+{"aggregate_steps_per_s": 95.0, "occupancy": 0.48}
+EOF
+cat > "$REPO/out/BENCH_b.json" <<'EOF'
+{"lookup_ms": 24.0}
+EOF
+(cd "$REPO" && "$COMPARE" out) || fail "in-bounds results must pass"
+
+# higher-is-better metric under its floor -> exit 1
+cat > "$REPO/out/BENCH_a.json" <<'EOF'
+{"aggregate_steps_per_s": 80.0, "occupancy": 0.48}
+EOF
+if (cd "$REPO" && "$COMPARE" out); then
+    fail "throughput drop below the floor must exit 1"
+fi
+cat > "$REPO/out/BENCH_a.json" <<'EOF'
+{"aggregate_steps_per_s": 95.0, "occupancy": 0.48}
+EOF
+
+# lower-is-better metric above its ceiling -> exit 1
+cat > "$REPO/out/BENCH_b.json" <<'EOF'
+{"lookup_ms": 31.0}
+EOF
+if (cd "$REPO" && "$COMPARE" out); then
+    fail "latency rise above the ceiling must exit 1"
+fi
+cat > "$REPO/out/BENCH_b.json" <<'EOF'
+{"lookup_ms": 19.0}
+EOF
+
+# one skipped + one compared still passes (and says so)
+rm "$REPO/out/BENCH_a.json"
+OUT="$(cd "$REPO" && "$COMPARE" out)" || fail "skip+pass mix must exit 0"
+echo "$OUT" | grep -q "SKIP BENCH_a.json" || fail "skip not reported"
+echo "$OUT" | grep -q "1 file(s) compared" || fail "compared count wrong"
+
+# a gated metric missing from the fresh result is a hard usage error
+cat > "$REPO/out/BENCH_b.json" <<'EOF'
+{"something_else": 1.0}
+EOF
+rc=0
+(cd "$REPO" && "$COMPARE" out) || rc=$?
+[[ "$rc" == 2 ]] || fail "missing gated metric must exit 2 (got $rc)"
+rm "$REPO/out/BENCH_b.json"
+
+# a baseline without gates is warned about, never enforced
+cat > "$REPO/BENCH_c.json" <<'EOF'
+{"metric": 1.0}
+EOF
+commit_all "$REPO"
+cat > "$REPO/out/BENCH_c.json" <<'EOF'
+{"metric": 0.0001}
+EOF
+OUT="$(cd "$REPO" && "$COMPARE" out)" || fail "gate-less baseline must not fail"
+echo "$OUT" | grep -q "declares no gates" || fail "gate-less baseline not warned"
+
+# ---- legacy single-file mode ------------------------------------------
+LREPO="$TMP/legacy"
+mkdir -p "$LREPO"
+mkrepo "$LREPO"
+echo '{"aggregate_steps_per_s": 50.0}' > "$LREPO/BENCH_x.json"
+
+# no committed baseline -> skip
+(cd "$LREPO" && "$COMPARE" BENCH_x.json) || fail "legacy no-baseline must exit 0"
+commit_all "$LREPO"
+
+# pass within the drop budget
+echo '{"aggregate_steps_per_s": 47.0}' > "$LREPO/BENCH_x.json"
+(cd "$LREPO" && "$COMPARE" BENCH_x.json aggregate_steps_per_s 10) \
+    || fail "legacy in-bounds must pass"
+
+# regression
+echo '{"aggregate_steps_per_s": 40.0}' > "$LREPO/BENCH_x.json"
+if (cd "$LREPO" && "$COMPARE" BENCH_x.json aggregate_steps_per_s 10); then
+    fail "legacy regression must exit 1"
+fi
+
+# missing file -> usage error
+rc=0
+(cd "$LREPO" && "$COMPARE" BENCH_missing.json key 10) || rc=$?
+[[ "$rc" == 2 ]] || fail "legacy missing file must exit 2 (got $rc)"
+
+echo "bench_compare self-test: all paths ok"

@@ -217,6 +217,21 @@ def main():
                 lambda x, kc, vc, ln, *p: M.block_decode_int8_fn(cfg, x, kc, vc, ln, *p),
                 dec_specs + block8_specs,
                 golden_args=([g_h, g_k, g_v, g_len] + list(flat0_8)) if b == 1 else None)
+        # ragged decode: one cache length PER ROW, so the server can fuse
+        # sessions at different decode depths into one call (cross-row
+        # equivalence to the uniform entry is pinned by
+        # python/tests/test_ragged_decode.py)
+        g_lens = jnp.array([7 + 3 * i for i in range(b)], jnp.int32)
+        rag_specs = [spec((b, 1, h)), spec((b, hh, c, d)), spec((b, hh, c, d)),
+                     spec((b,), jnp.int32)]
+        em.emit(f"block_decode_ragged_b{b}_c{c}",
+                lambda x, kc, vc, ln, *p: M.block_decode_ragged_fn(cfg, x, kc, vc, ln, *p),
+                rag_specs + block_specs,
+                golden_args=([g_h, g_k, g_v, g_lens] + flat0) if b == 1 else None)
+        em.emit(f"block_decode_ragged_int8_b{b}_c{c}",
+                lambda x, kc, vc, ln, *p: M.block_decode_ragged_int8_fn(cfg, x, kc, vc, ln, *p),
+                rag_specs + block8_specs,
+                golden_args=([g_h, g_k, g_v, g_lens] + list(flat0_8)) if b == 1 else None)
 
     # --- backward (fine-tuning) --------------------------------------------
     fb, fs = prefills[-1]  # finetune shape (default 4x64)

@@ -73,7 +73,12 @@ def _make_decode_kernel(bs):
 
         d = q.shape[-1]
         scale = 1.0 / jnp.sqrt(jnp.float32(d))
-        logits = jnp.einsum("bd,bsd->bs", q, k) * scale   # [B, bs]
+        # broadcast-multiply + axis sum, NOT einsum: a batched dot-general
+        # ("bd,bsd->bs") vectorizes across rows on CPU XLA and is not
+        # batch-invariant — row r of a width-B call would differ in the
+        # last ulp from the same row at width 1, breaking the fused-vs-
+        # serial bitwise contract continuous batching is pinned to
+        logits = jnp.sum(q[:, None, :] * k, axis=-1) * scale   # [B, bs]
 
         pos = s_idx * bs + jax.lax.iota(jnp.int32, bs)
         dist = (cache_len - 1) - pos
@@ -86,7 +91,7 @@ def _make_decode_kernel(bs):
         alpha = jnp.exp(m_prev - m_cur)                    # [B]
         p = jnp.exp(logits - m_cur[:, None])               # [B, bs]
         l_cur = l_ref[...] * alpha + jnp.sum(p, axis=1)
-        acc_cur = acc_ref[...] * alpha[:, None] + jnp.einsum("bs,bsd->bd", p, v)
+        acc_cur = acc_ref[...] * alpha[:, None] + jnp.sum(p[:, :, None] * v, axis=1)
 
         m_ref[...] = m_cur
         l_ref[...] = l_cur
@@ -97,6 +102,99 @@ def _make_decode_kernel(bs):
             o_ref[:, 0, :] = acc_ref[...] / l_ref[...][:, None]
 
     return _decode_kernel
+
+
+def _make_ragged_decode_kernel(bs):
+    """Kernel body for per-row cache lengths (ragged continuous
+    batching): `len_ref` holds one valid-position count PER ROW, so a
+    fused batch can mix sessions at different decode depths. Per-row
+    arithmetic is identical to [`_make_decode_kernel`]'s — same einsum,
+    same ALiBi bias, same online-softmax fold — only the mask and the
+    distance term broadcast over a `[B]` length vector instead of a
+    scalar, which keeps each row bitwise equal to running it alone
+    (asserted in python/tests/test_ragged_decode.py)."""
+
+    def _ragged_kernel(len_ref, slope_ref, q_ref, k_ref, v_ref,
+                       o_ref, m_ref, l_ref, acc_ref):
+        s_idx = pl.program_id(1)
+        n_s = pl.num_programs(1)
+
+        @pl.when(s_idx == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        q = q_ref[:, 0, :]                       # [B, D]
+        k = k_ref[:, 0, :, :]                    # [B, bs, D]
+        v = v_ref[:, 0, :, :]                    # [B, bs, D]
+        lens = len_ref[...]                      # [B]
+        slope = slope_ref[0]
+
+        d = q.shape[-1]
+        scale = 1.0 / jnp.sqrt(jnp.float32(d))
+        # batch-invariant formulation — see the uniform kernel's comment
+        logits = jnp.sum(q[:, None, :] * k, axis=-1) * scale   # [B, bs]
+
+        pos = s_idx * bs + jax.lax.iota(jnp.int32, bs)
+        dist = (lens[:, None] - 1) - pos[None, :]          # [B, bs]
+        logits = logits - slope * dist.astype(jnp.float32)
+        # rows past their own length see NEG_INF — a fully masked tile
+        # (a short row in a deep batch) folds in exp(NEG_INF - m) == 0,
+        # so padding stays causally invisible per row
+        logits = jnp.where(pos[None, :] < lens[:, None], logits, NEG_INF)
+
+        m_prev = m_ref[...]                                # [B]
+        m_cur = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)                    # [B]
+        p = jnp.exp(logits - m_cur[:, None])               # [B, bs]
+        l_cur = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_cur = acc_ref[...] * alpha[:, None] + jnp.sum(p[:, :, None] * v, axis=1)
+
+        m_ref[...] = m_cur
+        l_ref[...] = l_cur
+        acc_ref[...] = acc_cur
+
+        @pl.when(s_idx == n_s - 1)
+        def _finish():
+            o_ref[:, 0, :] = acc_ref[...] / l_ref[...][:, None]
+
+    return _ragged_kernel
+
+
+@functools.partial(jax.jit, static_argnames=())
+def ragged_decode_attention(q, k_cache, v_cache, cache_lens):
+    """Per-row ALiBi attention over the KV cache — the ragged-batching
+    twin of [`decode_attention`].
+
+    q: [B, H, D];  k_cache, v_cache: [B, H, S, D];
+    cache_lens: i32[B] — valid positions PER ROW (each row's current
+    token already written at cache_lens[b]-1). Returns [B, H, D] f32.
+    """
+    b, h, s, d = k_cache.shape
+    bs = _seq_tile(s)
+    len_arr = jnp.asarray(cache_lens, jnp.int32).reshape(b)
+    slopes = _alibi_slopes(h)
+
+    return pl.pallas_call(
+        _make_ragged_decode_kernel(bs),
+        grid=(h, s // bs),
+        in_specs=[
+            pl.BlockSpec((b,), lambda j, t: (0,)),
+            pl.BlockSpec((1,), lambda j, t: (j,)),
+            pl.BlockSpec((b, 1, d), lambda j, t: (0, j, 0)),
+            pl.BlockSpec((b, 1, bs, d), lambda j, t: (0, j, t, 0)),
+            pl.BlockSpec((b, 1, bs, d), lambda j, t: (0, j, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, 1, d), lambda j, t: (0, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((b,), jnp.float32),   # running max
+            pltpu.VMEM((b,), jnp.float32),   # running sum
+            pltpu.VMEM((b, d), jnp.float32), # weighted V accumulator
+        ],
+        interpret=True,
+    )(len_arr, slopes, q, k_cache, v_cache)
 
 
 @functools.partial(jax.jit, static_argnames=())

@@ -320,6 +320,49 @@ def block_decode_int8_fn(cfg, h, k_cache, v_cache, cache_len, *flat_params):
     return _decode_step(cfg, h, k_cache, v_cache, cache_len, p, _mm_int8)
 
 
+def _decode_step_ragged(cfg, h, k_cache, v_cache, cache_lens, p, mm):
+    """[`_decode_step`] with one cache length PER ROW (`cache_lens`
+    i32[B]) — the fused executor call behind ragged continuous batching.
+    Row b writes its new K/V at index cache_lens[b] (a bitwise select,
+    so untouched cache values pass through exactly) and attends over its
+    own cache_lens[b]+1 positions; everything else is the per-row
+    arithmetic of the uniform step, so a fused ragged batch reproduces
+    each session's solo outputs bit for bit."""
+    b, one, hd = h.shape
+    x = _layernorm(h, p["ln1_g"], p["ln1_b"])
+    qkv = mm(x.reshape(b, hd), p["w_qkv"]).reshape(b, 1, 3 * hd) + p["b_qkv"]
+    q, k_new, v_new = jnp.split(qkv, 3, axis=-1)
+    d = cfg.head_dim
+    q = q.reshape(b, cfg.n_heads, d)
+    k_new = k_new.reshape(b, cfg.n_heads, 1, d)
+    v_new = v_new.reshape(b, cfg.n_heads, 1, d)
+    c = k_cache.shape[2]
+    pos = jax.lax.iota(jnp.int32, c)                                   # [C]
+    write = pos[None, None, :, None] == cache_lens[:, None, None, None]
+    k_cache = jnp.where(write, k_new, k_cache)
+    v_cache = jnp.where(write, v_new, v_cache)
+    attn = attn_kernel.ragged_decode_attention(q, k_cache, v_cache, cache_lens + 1)
+    attn = attn.reshape(b, hd)
+    h = h + (mm(attn, p["w_o"]) + p["b_o"]).reshape(b, 1, hd)
+    x2 = _layernorm(h, p["ln2_g"], p["ln2_b"])
+    inner = _gelu(mm(x2.reshape(b, hd), p["w_fc"]) + p["b_fc"])
+    h = h + (mm(inner, p["w_proj"]) + p["b_proj"]).reshape(b, 1, hd)
+    return h, k_cache, v_cache
+
+
+def block_decode_ragged_fn(cfg, h, k_cache, v_cache, cache_lens, *flat_params):
+    """Ragged decode: h [B,1,H], caches [B,Hh,C,D], cache_lens i32[B]
+    (# valid positions BEFORE this token, per row) -> (h_out, k_cache',
+    v_cache')."""
+    p = dict(zip(BLOCK_PARAM_NAMES, flat_params))
+    return _decode_step_ragged(cfg, h, k_cache, v_cache, cache_lens, p, _mm)
+
+
+def block_decode_ragged_int8_fn(cfg, h, k_cache, v_cache, cache_lens, *flat_params):
+    p = unflatten_int8_params(flat_params)
+    return _decode_step_ragged(cfg, h, k_cache, v_cache, cache_lens, p, _mm_int8)
+
+
 def lm_head_fn(cfg, h, ln_g, ln_b, embedding):
     """h [B,H] -> logits [B,V] (final LN + tied-embedding projection)."""
     x = _layernorm(h, ln_g, ln_b)

@@ -4,6 +4,12 @@
 //! latency, if 8 clients run inference concurrently, each of them gets
 //! ≈20% slowdown compared to the case when it runs inference alone."
 //!
+//! Part 0: the RAGGED mixed-length sweep (pure sim, no artifacts) — the
+//! pre-ragged same-depth join gate vs the per-row-cache_len scheduler
+//! over one arrival trace; emits `BENCH_ragged.json` (occupancy,
+//! aggregate steps/s, p50 TTFT + its gate declarations) so CI tracks
+//! and enforces the ragged trajectory even on artifact-less runners
+//! (`BENCH_RAGGED_OUT` overrides the path).
 //! Part 1: the simulator at BLOOM-176B scale — client-count sweep with
 //! server-side continuous batching OFF (the seed's serialized servers)
 //! and ON (requests arriving at a busy server join the in-flight batch),
@@ -41,8 +47,62 @@ fn sim_swarm(batched: bool) -> SwarmSim {
     s
 }
 
+/// Mixed-length ragged sweep (pure sim — no artifacts, no toolchain
+/// beyond cargo): the pre-ragged same-depth join gate vs the ragged
+/// scheduler over one arrival trace of mixed prompt lengths. Emits
+/// `BENCH_ragged.json` with its gate declarations so
+/// `ci/bench_compare.sh` can enforce the trajectory on main.
+fn bench_ragged_mix() -> petals::Result<()> {
+    println!("ragged continuous batching: mixed-length arrival mix (sim, BLOOM-176B):");
+    let lens: Vec<usize> = vec![32, 48, 64, 96, 128, 160, 192, 224];
+    let run = |gate: bool| {
+        let mut s = sim_swarm(true);
+        s.uniform_depth_gate = gate;
+        s.run_inference_ragged_mix(&lens, 32).unwrap()
+    };
+    let old = run(true);
+    let new = run(false);
+    println!("| scheduler | occupancy | aggregate steps/s | p50 TTFT |");
+    println!("|---|---|---|---|");
+    println!(
+        "| uniform-depth gate (pre-ragged) | {:.3} | {:.2} | {:.2}s |",
+        old.occupancy, old.aggregate_steps_per_s, old.p50_ttft_s
+    );
+    println!(
+        "| ragged (per-row cache_len) | {:.3} | {:.2} | {:.2}s |",
+        new.occupancy, new.aggregate_steps_per_s, new.p50_ttft_s
+    );
+    assert!(
+        new.aggregate_steps_per_s > old.aggregate_steps_per_s,
+        "ragged batching must lift aggregate throughput on a mixed-length mix"
+    );
+    let json = format!(
+        "{{\n  \"clients\": {},\n  \"mix_lens\": [{}],\n  \"occupancy\": {:.4},\n  \
+         \"aggregate_steps_per_s\": {:.3},\n  \"p50_ttft_s\": {:.3},\n  \
+         \"uniform_gate_occupancy\": {:.4},\n  \"uniform_gate_aggregate_steps_per_s\": {:.3},\n  \
+         \"gates\": {{\n    \"occupancy\": {{\"dir\": \"higher\", \"pct\": 15}},\n    \
+         \"aggregate_steps_per_s\": {{\"dir\": \"higher\", \"pct\": 10}},\n    \
+         \"p50_ttft_s\": {{\"dir\": \"lower\", \"pct\": 20}}\n  }}\n}}\n",
+        lens.len(),
+        lens.iter().map(|l| l.to_string()).collect::<Vec<_>>().join(", "),
+        new.occupancy,
+        new.aggregate_steps_per_s,
+        new.p50_ttft_s,
+        old.occupancy,
+        old.aggregate_steps_per_s,
+    );
+    let out =
+        std::env::var("BENCH_RAGGED_OUT").unwrap_or_else(|_| "BENCH_ragged.json".into());
+    std::fs::write(&out, &json)?;
+    println!("wrote {out}\n");
+    Ok(())
+}
+
 fn main() -> petals::Result<()> {
     println!("multi-client slowdown & continuous batching (§3.3 + follow-up)\n");
+    // the ragged sweep runs FIRST and needs no artifacts: CI always gets
+    // a fresh BENCH_ragged.json even on artifact-less runners
+    bench_ragged_mix()?;
     println!("simulated 12-virtual swarm @ 100 Mbit/s, 100 ms RTT (BLOOM-176B):");
     let solo = sim_swarm(false).run_inference(128, 32, 1).unwrap().steps_per_s;
     println!("sequential per-session baseline: {solo:.2} steps/s aggregate (one session at a time)\n");
@@ -72,9 +132,19 @@ fn main() -> petals::Result<()> {
     println!("(paper: 8 clients -> ~20% per-client slowdown without batching)\n");
 
     // ---- real concurrent clients on BLOOM-mini --------------------------
+    // everything below executes AOT artifacts; without them the sim
+    // numbers above (including BENCH_ragged.json) are still complete
+    let home = match ModelHome::open("artifacts") {
+        Ok(h) => h,
+        Err(_) => {
+            println!("\nSKIP: no AOT artifacts (run 'make artifacts') — the real-swarm");
+            println!("      sections and BENCH_prefix_cache.json are skipped; the sim");
+            println!("      sweep and BENCH_ragged.json above are complete.");
+            return Ok(());
+        }
+    };
     println!("real concurrent clients, BLOOM-mini local swarm (CPU PJRT),");
     println!("sessions served from the paged KV pool through the step scheduler:");
-    let home = ModelHome::open("artifacts")?;
     let g = home.geometry().clone();
     let rt = Arc::new(Runtime::load_filtered(&home, |n| {
         n.contains("_b1_") || n.ends_with("_b1")
@@ -209,7 +279,9 @@ fn main() -> petals::Result<()> {
          \"pages_first_session\": {pages_first},\n  \"pages_per_extra_session\": {pages_extra:.2},\n  \
          \"prefix_hit_rate\": {hit_rate:.3},\n  \"prefill_skips\": {},\n  \
          \"cow_forks\": {},\n  \"aggregate_steps_per_s\": {agg_steps_s:.3},\n  \
-         \"sim_ttft_cold_s\": {:.3},\n  \"sim_ttft_warm_s\": {:.3}\n}}\n",
+         \"sim_ttft_cold_s\": {:.3},\n  \"sim_ttft_warm_s\": {:.3},\n  \
+         \"gates\": {{\n    \"aggregate_steps_per_s\": {{\"dir\": \"higher\", \"pct\": 10}},\n    \
+         \"prefix_hit_rate\": {{\"dir\": \"higher\", \"pct\": 10}}\n  }}\n}}\n",
         node.metrics.prefix_prefill_skips.get(),
         node.metrics.cow_forks.get(),
         cold_r.mean_ttft_s,

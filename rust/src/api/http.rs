@@ -127,16 +127,15 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
     /// Handle one batch generation request body; returns the JSON reply
     /// body. Internally a `collect()` over the same [`SwarmGenerator::
     /// stream`] the streaming endpoint drives, so both produce identical
-    /// tokens for identical requests.
+    /// tokens for identical requests. Multi-prompt bodies (nested
+    /// `inputs` rows, lengths may differ) run as ONE ragged swarm
+    /// session — per-row cache lengths server-side — instead of N
+    /// sessions; `outputs` is then an array of per-row token arrays.
     pub fn generate_json(&self, body: &str) -> Result<String> {
         let v = Value::parse(body)?;
         let req = GenerateRequest::from_json(&v, self.head.vocab)?;
         let gen = self.generator(&req.sampler);
-        let mut stream = gen.stream(
-            std::slice::from_ref(&req.inputs),
-            self.gen_options(&req),
-            self.fresh_id(),
-        )?;
+        let mut stream = gen.stream(&req.inputs, self.gen_options(&req), self.fresh_id())?;
         let mut steps: Vec<TokenStep> = Vec::new();
         while let Some(step) = stream.next_step()? {
             steps.push(step);
@@ -144,7 +143,14 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
         let result = stream.finish()?;
 
         let mut obj = BTreeMap::new();
-        obj.insert("outputs".to_string(), ids_value(&result.tokens[0]));
+        let outputs = if req.inputs.len() == 1 {
+            // single prompt keeps the v2 flat shape
+            ids_value(&result.tokens[0])
+        } else {
+            Value::Arr(result.tokens.iter().map(|row| ids_value(row)).collect())
+        };
+        obj.insert("outputs".to_string(), outputs);
+        obj.insert("rows".to_string(), num(req.inputs.len() as f64));
         obj.insert("steps".to_string(), num(result.steps as f64));
         obj.insert(
             "steps_per_s".to_string(),
@@ -549,9 +555,19 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             Ok(p) => p,
             Err(e) => return write_error_response(out, &e),
         };
+        if req.inputs.len() != 1 {
+            // the NDJSON event schema carries one token per event; route
+            // multi-prompt traffic through /api/v1/generate
+            let e = Error::Parse(
+                "/api/v1/stream serves single prompts; \
+                 use /api/v1/generate for multi-prompt bodies"
+                    .into(),
+            );
+            return write_error_response(out, &e);
+        }
         let gen = self.generator(&req.sampler);
         let mut stream =
-            match gen.stream(std::slice::from_ref(&req.inputs), self.gen_options(&req), self.fresh_id()) {
+            match gen.stream(&req.inputs, self.gen_options(&req), self.fresh_id()) {
                 Ok(s) => s,
                 Err(e) => return write_error_response(out, &e),
             };

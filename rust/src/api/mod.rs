@@ -177,6 +177,68 @@ mod tests {
         assert_eq!(got, want.tokens[0], "23-token prompt diverged over HTTP");
     }
 
+    /// The ragged API acceptance: a multi-prompt request whose rows have
+    /// DIFFERENT lengths runs as ONE swarm session (per-row cache
+    /// lengths server-side, the `block_decode_ragged_b8` artifact) and
+    /// every row's tokens equal a separate single-prompt generation of
+    /// that row — the PR-4 "ragged batches" follow-up closed end-to-end.
+    #[test]
+    fn multi_prompt_ragged_one_session_matches_per_prompt() {
+        let home = test_home();
+        let rt = Arc::new(
+            Runtime::load_filtered(&home, |n| {
+                n.contains("_b1_") || n.ends_with("_b1") || n.contains("_b8_") || n.ends_with("_b8")
+            })
+            .unwrap(),
+        );
+        let cluster = Arc::new(spawn_even_swarm(&home, rt.clone(), 2, Precision::F16).unwrap());
+        let weights = Weights::load(&home, Precision::F16).unwrap();
+        let head = Arc::new(LocalHead::new(&home, rt, &weights).unwrap());
+        let server = ApiServer::new(cluster, head, cfg_for(&home));
+        // 8 rows, every length distinct
+        let rows: Vec<Vec<i32>> = (0..8usize)
+            .map(|r| (0..3 + r * 2).map(|i| ((r * 13 + i * 7) % 40) as i32).collect())
+            .collect();
+        let body = format!(
+            "{{\"inputs\":[{}],\"max_new_tokens\":3}}",
+            rows.iter()
+                .map(|row| format!(
+                    "[{}]",
+                    row.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",")
+                ))
+                .collect::<Vec<_>>()
+                .join(",")
+        );
+        let reply = server.generate_json(&body).unwrap();
+        let v = Value::parse(&reply).unwrap();
+        assert_eq!(v.get("rows").unwrap().f64().unwrap() as usize, 8);
+        let outs = v.get("outputs").unwrap().arr().unwrap();
+        assert_eq!(outs.len(), 8, "multi-prompt reply nests per-row outputs");
+        // one ragged session fused mixed depths on every server
+        let mut ragged = 0;
+        for id in server.swarm.ids() {
+            ragged += server.swarm.node(id).unwrap().metrics.ragged_steps.get();
+        }
+        assert!(ragged > 0, "multi-prompt request never took the ragged fused path");
+        // each row bitwise-matches its own single-prompt generation
+        let gen = SwarmGenerator {
+            swarm: server.swarm.as_ref(),
+            head: server.head.as_ref(),
+            cfg: server.cfg.clone(),
+            sampler: Sampler::Greedy,
+        };
+        for (r, row) in rows.iter().enumerate() {
+            let got: Vec<i32> = outs[r]
+                .arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.f64().unwrap() as i32)
+                .collect();
+            let want = gen.generate(&[row.clone()], 3, 5000 + r as u64).unwrap();
+            assert_eq!(got, want.tokens[0], "row {r} diverged from its solo generation");
+        }
+    }
+
     /// Acceptance: the streaming endpoint delivers max_new token events
     /// plus one terminal stats event; the first event arrives before the
     /// stream closes; batch and stream produce bitwise-identical tokens

@@ -79,11 +79,15 @@ impl SamplerSpec {
 /// Body of `POST /api/v1/generate` and `POST /api/v1/stream`.
 #[derive(Debug, Clone)]
 pub struct GenerateRequest {
-    pub inputs: Vec<i32>,
+    /// Prompt rows. `"inputs"` accepts a flat id array (one prompt — the
+    /// v2 shape, unchanged) or an array of id arrays (multi-prompt; rows
+    /// may have DIFFERENT lengths and run as ONE ragged swarm session
+    /// with per-row cache lengths server-side).
+    pub inputs: Vec<Vec<i32>>,
     pub max_new_tokens: usize,
     pub sampler: SamplerSpec,
     /// Sampling any of these ends generation (the stop token is still
-    /// reported).
+    /// reported). Single-prompt requests only.
     pub stop_tokens: Vec<i32>,
     pub return_logits: bool,
     pub return_hidden: bool,
@@ -91,7 +95,7 @@ pub struct GenerateRequest {
 
 impl GenerateRequest {
     pub fn from_json(v: &Value, vocab: usize) -> Result<Self> {
-        let inputs = parse_ids(v, "inputs", vocab)?;
+        let inputs = parse_prompt_rows(v, "inputs", vocab)?;
         let max_new_tokens =
             v.opt("max_new_tokens").map(|x| x.usize()).transpose()?.unwrap_or(8);
         let sampler = SamplerSpec::from_json(v.opt("sampler"))?;
@@ -117,11 +121,11 @@ impl GenerateRequest {
     }
 }
 
-/// Parse a required token-id array, validating range against the vocab.
-pub fn parse_ids(v: &Value, key: &str, vocab: usize) -> Result<Vec<i32>> {
-    let ids: Vec<i32> = v
-        .get(key)?
-        .arr()?
+/// Parse one JSON array of token ids, enforcing non-emptiness and the
+/// vocab range — the single copy of the id-validation rule shared by
+/// [`parse_ids`] and [`parse_prompt_rows`].
+fn ids_from_values(values: &[Value], key: &str, vocab: usize) -> Result<Vec<i32>> {
+    let ids: Vec<i32> = values
         .iter()
         .map(|x| Ok(x.f64()? as i32))
         .collect::<Result<Vec<_>>>()?;
@@ -132,6 +136,39 @@ pub fn parse_ids(v: &Value, key: &str, vocab: usize) -> Result<Vec<i32>> {
         return Err(Error::Parse(format!("token id {bad} outside vocab 0..{vocab}")));
     }
     Ok(ids)
+}
+
+/// Parse a required token-id array, validating range against the vocab.
+pub fn parse_ids(v: &Value, key: &str, vocab: usize) -> Result<Vec<i32>> {
+    ids_from_values(v.get(key)?.arr()?, key, vocab)
+}
+
+/// Most prompt rows one request may carry (bounds work per request).
+pub const MAX_PROMPT_ROWS: usize = 64;
+
+/// Parse prompt rows: a flat id array (one row) or an array of id
+/// arrays (multi-prompt, possibly ragged). Every row is validated like
+/// [`parse_ids`]; empty rows and empty row lists are typed 400s.
+pub fn parse_prompt_rows(v: &Value, key: &str, vocab: usize) -> Result<Vec<Vec<i32>>> {
+    let arr = v.get(key)?.arr()?;
+    if arr.is_empty() {
+        return Err(Error::Parse(format!("{key:?} must be non-empty")));
+    }
+    let nested = arr.iter().all(|x| x.arr().is_ok());
+    let rows: Vec<Vec<i32>> = if nested {
+        if arr.len() > MAX_PROMPT_ROWS {
+            return Err(Error::Parse(format!(
+                "{} prompt rows exceed the per-request cap {MAX_PROMPT_ROWS}",
+                arr.len()
+            )));
+        }
+        arr.iter()
+            .map(|row| ids_from_values(row.arr()?, key, vocab))
+            .collect::<Result<Vec<_>>>()?
+    } else {
+        vec![ids_from_values(arr, key, vocab)?]
+    };
+    Ok(rows)
 }
 
 /// Encode an f32 tensor as `{"shape": [...], "data": [...]}`. JSON
@@ -247,7 +284,7 @@ mod tests {
     fn generate_request_defaults_and_validation() {
         let v = Value::parse(r#"{"inputs":[1,2,3]}"#).unwrap();
         let r = GenerateRequest::from_json(&v, 100).unwrap();
-        assert_eq!(r.inputs, vec![1, 2, 3]);
+        assert_eq!(r.inputs, vec![vec![1, 2, 3]], "flat array = one prompt row");
         assert_eq!(r.max_new_tokens, 8);
         assert_eq!(r.sampler, SamplerSpec::Greedy);
         assert!(r.stop_tokens.is_empty() && !r.return_logits && !r.return_hidden);
@@ -265,6 +302,28 @@ mod tests {
         let v = Value::parse(r#"{"inputs":[]}"#).unwrap();
         assert!(GenerateRequest::from_json(&v, 100).is_err());
         let v = Value::parse(r#"{"inputs":[100]}"#).unwrap();
+        assert!(GenerateRequest::from_json(&v, 100).is_err());
+    }
+
+    #[test]
+    fn generate_request_multi_prompt_ragged_rows() {
+        // nested arrays: multiple prompts, lengths may differ
+        let v = Value::parse(r#"{"inputs":[[1,2,3],[4],[5,6]]}"#).unwrap();
+        let r = GenerateRequest::from_json(&v, 100).unwrap();
+        assert_eq!(r.inputs, vec![vec![1, 2, 3], vec![4], vec![5, 6]]);
+
+        // empty row / empty row list / out-of-vocab row are typed 400s
+        for bad in [
+            r#"{"inputs":[[1,2],[]]}"#,
+            r#"{"inputs":[[]]}"#,
+            r#"{"inputs":[[1],[100]]}"#,
+        ] {
+            let v = Value::parse(bad).unwrap();
+            assert!(GenerateRequest::from_json(&v, 100).is_err(), "{bad}");
+        }
+        // the row cap is enforced
+        let many: Vec<String> = (0..65).map(|_| "[1]".to_string()).collect();
+        let v = Value::parse(&format!(r#"{{"inputs":[{}]}}"#, many.join(","))).unwrap();
         assert!(GenerateRequest::from_json(&v, 100).is_err());
     }
 

@@ -317,11 +317,14 @@ pub struct SwarmGenerator<'a, C: ChainClient> {
 }
 
 impl<'a, C: ChainClient> SwarmGenerator<'a, C> {
-    /// Open a session for `prefix` ids ([B][prefix_len], equal-length
-    /// rows), run the prefill, and return a pull-based stream yielding
-    /// one token per [`GenerationStream::next_step`] call. The prefill
-    /// width is derived from the prompt (smallest compiled width that
-    /// fits); over-long prompts fail with [`Error::PromptTooLong`].
+    /// Open a session for `prefix` ids ([B] rows of token ids — rows may
+    /// have DIFFERENT lengths since the ragged refactor), run the
+    /// prefill, and return a pull-based stream yielding one token per
+    /// row per [`GenerationStream::next_step`] call. A multi-prompt
+    /// request of mixed lengths travels as ONE ragged session (per-row
+    /// cache lengths server-side) instead of N sessions. The prefill
+    /// width is derived from the longest row (smallest compiled width
+    /// that fits); over-long prompts fail with [`Error::PromptTooLong`].
     pub fn stream(
         &self,
         prefix: &[Vec<i32>],
@@ -330,28 +333,23 @@ impl<'a, C: ChainClient> SwarmGenerator<'a, C> {
     ) -> Result<GenerationStream<'a, C>> {
         let started = std::time::Instant::now();
         let b = prefix.len();
-        let prefix_len = prefix.first().map(|p| p.len()).unwrap_or(0);
-        if b == 0 || prefix_len == 0 {
+        let row_lens: Vec<usize> = prefix.iter().map(|p| p.len()).collect();
+        let prefix_len = row_lens.iter().copied().max().unwrap_or(0);
+        if b == 0 || row_lens.iter().any(|&l| l == 0) {
             return Err(Error::Shape("empty prompt".into()));
-        }
-        if prefix.iter().any(|row| row.len() != prefix_len) {
-            // the swarm shares one cache_len per session; ragged batches
-            // must be split into per-length requests by the caller
-            return Err(Error::Shape(format!(
-                "ragged batch: all rows must have length {prefix_len}"
-            )));
         }
         if !opts.stop_tokens.is_empty() && b != 1 {
             return Err(Error::Protocol("stop_tokens require batch 1".into()));
         }
-        // prefill width derived from the prompt, not caller-configured;
-        // padding sits AFTER the valid positions (causal masking keeps it
-        // invisible; servers track cache_len = prefix_len)
+        // prefill width derived from the longest prompt, not caller-
+        // configured; each row's padding sits AFTER its valid positions
+        // (per-row causal masking keeps it invisible; servers track one
+        // cache length per row)
         let w = self.head.derive_prefill_width(b, prefix_len)?;
         let shape = PromptShape { batch: b, prefix_len, prefill_width: w };
         let mut ids = vec![0i32; b * w];
         for (i, row) in prefix.iter().enumerate() {
-            ids[i * w..i * w + prefix_len].copy_from_slice(row);
+            ids[i * w..i * w + row.len()].copy_from_slice(row);
         }
         let ids_t = Tensor::from_i32(&[b, w], &ids);
         let h0 = self.head.embed(&ids_t)?;
@@ -359,7 +357,11 @@ impl<'a, C: ChainClient> SwarmGenerator<'a, C> {
         // thread prefix identity end-to-end: batch-1 sessions carry their
         // prompt token ids so servers can attach cached shared-prefix KV
         // pages (wire v3) and routing can stick to servers that already
-        // hold the prefix (cache-aware sticky routing)
+        // hold the prefix (cache-aware sticky routing). Multi-row
+        // sessions declare the rows' LONGEST COMMON PREFIX — the shared
+        // template every row can alias (servers attach it to every row
+        // and degrade full hits to partial, so a declared template never
+        // substitutes one row's cached prefill for another's).
         let mut cfg = self.cfg.clone();
         if b == 1 {
             if cfg.prefix_tokens.is_empty() {
@@ -373,8 +375,15 @@ impl<'a, C: ChainClient> SwarmGenerator<'a, C> {
                     "cfg.prefix_tokens must equal the batch-1 prompt exactly".into(),
                 ));
             }
-        } else if !cfg.prefix_tokens.is_empty() {
-            return Err(Error::Protocol("prefix_tokens requires batch 1".into()));
+        } else {
+            let lcp = common_prefix(prefix);
+            if cfg.prefix_tokens.is_empty() {
+                cfg.prefix_tokens = lcp;
+            } else if !lcp.starts_with(&cfg.prefix_tokens) {
+                return Err(Error::Protocol(
+                    "cfg.prefix_tokens must be a common prefix of every row".into(),
+                ));
+            }
         }
         if cfg.route.prefix_fp.is_none() && !cfg.prefix_tokens.is_empty() {
             // hint over the page-aligned leading span, so prompts sharing
@@ -385,7 +394,8 @@ impl<'a, C: ChainClient> SwarmGenerator<'a, C> {
             ));
         }
         let sampler = self.sampler.start();
-        let mut session = InferenceSession::open(self.swarm, cfg, shape, session_id)?;
+        let mut session =
+            InferenceSession::open_ragged(self.swarm, cfg, shape, row_lens.clone(), session_id)?;
         let h_pre = match session.prefill(h0) {
             Ok(h) => h,
             Err(e) => {
@@ -395,9 +405,9 @@ impl<'a, C: ChainClient> SwarmGenerator<'a, C> {
             }
         };
 
-        // last *valid* position of the prefill output
+        // last *valid* position of each row's prefill output
         let hidden = self.head.hidden;
-        let last = Tensor::from_f32(&[b, hidden], &extract_positions(&h_pre, prefix_len - 1));
+        let last = Tensor::from_f32(&[b, hidden], &extract_row_positions(&h_pre, &row_lens));
         Ok(GenerationStream {
             head: self.head,
             session: Some(session),
@@ -548,15 +558,39 @@ impl<'a, C: ChainClient> Drop for GenerationStream<'a, C> {
 
 /// Pull position `pos` out of a [B,S,H] tensor -> flat [B*H].
 fn extract_positions(h: &Tensor, pos: usize) -> Vec<f32> {
+    extract_row_positions(h, &vec![pos + 1; h.shape[0]])
+}
+
+/// Pull each row's LAST VALID position (`lens[i] - 1`) out of a [B,S,H]
+/// tensor -> flat [B*H] — the ragged twin of [`extract_positions`]: a
+/// multi-prompt batch reads each row's hidden state at that row's own
+/// prompt end, not at a shared offset.
+fn extract_row_positions(h: &Tensor, lens: &[usize]) -> Vec<f32> {
     let (b, s, hd) = (h.shape[0], h.shape[1], h.shape[2]);
-    assert!(pos < s);
+    assert_eq!(b, lens.len());
     let src = h.as_f32();
     let mut out = Vec::with_capacity(b * hd);
-    for i in 0..b {
-        let off = (i * s + pos) * hd;
+    for (i, &len) in lens.iter().enumerate() {
+        assert!(len >= 1 && len <= s);
+        let off = (i * s + (len - 1)) * hd;
         out.extend_from_slice(&src[off..off + hd]);
     }
     out
+}
+
+/// Longest common leading token run across rows (the shared template a
+/// multi-prompt session declares as its prefix identity).
+fn common_prefix(rows: &[Vec<i32>]) -> Vec<i32> {
+    let Some(first) = rows.first() else {
+        return Vec::new();
+    };
+    let mut n = first.len();
+    for row in &rows[1..] {
+        n = n
+            .min(row.len())
+            .min(first.iter().zip(row.iter()).take_while(|(a, b)| a == b).count());
+    }
+    first[..n].to_vec()
 }
 
 #[cfg(test)]
@@ -695,5 +729,19 @@ mod tests {
         );
         assert_eq!(extract_positions(&h, 1), vec![10., 11., 110., 111.]);
         assert_eq!(extract_positions(&h, 2), vec![20., 21., 120., 121.]);
+        // ragged: row 0 ends at position 0, row 1 at position 2
+        assert_eq!(extract_row_positions(&h, &[1, 3]), vec![0., 1., 120., 121.]);
+        assert_eq!(extract_row_positions(&h, &[2, 1]), vec![10., 11., 100., 101.]);
+    }
+
+    #[test]
+    fn common_prefix_of_rows() {
+        let rows = vec![vec![1, 2, 3, 4], vec![1, 2, 9], vec![1, 2, 3]];
+        assert_eq!(common_prefix(&rows), vec![1, 2]);
+        assert_eq!(common_prefix(&[vec![5, 6], vec![5, 6]]), vec![5, 6]);
+        assert_eq!(common_prefix(&[vec![1], vec![2]]), Vec::<i32>::new());
+        assert_eq!(common_prefix(&[]), Vec::<i32>::new());
+        // one row: the whole row is the common prefix
+        assert_eq!(common_prefix(&[vec![7, 8, 9]]), vec![7, 8, 9]);
     }
 }

@@ -75,6 +75,29 @@ pub trait ChainClient {
         cache_len: usize,
         hidden: &Tensor,
     ) -> Result<Tensor>;
+    /// One RAGGED decode step: `row_lens[r]` is row r's own cache
+    /// length, so a multi-prompt session advances rows at different
+    /// depths in one call (wire v5). The default forwards uniform
+    /// batches to [`Self::step`] — transports and test fakes that
+    /// predate ragged batching keep working for lockstep traffic — and
+    /// rejects genuinely mixed depths.
+    fn step_ragged(
+        &self,
+        server: NodeId,
+        session: u64,
+        row_lens: &[usize],
+        hidden: &Tensor,
+    ) -> Result<Tensor> {
+        match row_lens.first() {
+            Some(&l) if row_lens.iter().all(|&x| x == l) => {
+                self.step(server, session, l, hidden)
+            }
+            Some(_) => Err(Error::Protocol(
+                "transport does not support ragged (mixed-depth) steps".into(),
+            )),
+            None => Err(Error::Shape("empty row_lens".into())),
+        }
+    }
     fn close_session(&self, server: NodeId, session: u64);
     /// Stateless parallel forward over the span (fine-tuning, §2.2).
     fn forward(&self, server: NodeId, hidden: &Tensor) -> Result<Tensor>;
@@ -131,6 +154,15 @@ impl<T: ChainClient + ?Sized> ChainClient for &T {
         hidden: &Tensor,
     ) -> Result<Tensor> {
         (**self).step(server, session, cache_len, hidden)
+    }
+    fn step_ragged(
+        &self,
+        server: NodeId,
+        session: u64,
+        row_lens: &[usize],
+        hidden: &Tensor,
+    ) -> Result<Tensor> {
+        (**self).step_ragged(server, session, row_lens, hidden)
     }
     fn close_session(&self, server: NodeId, session: u64) {
         (**self).close_session(server, session)
@@ -189,6 +221,15 @@ impl<T: ChainClient + ?Sized> ChainClient for std::sync::Arc<T> {
         hidden: &Tensor,
     ) -> Result<Tensor> {
         (**self).step(server, session, cache_len, hidden)
+    }
+    fn step_ragged(
+        &self,
+        server: NodeId,
+        session: u64,
+        row_lens: &[usize],
+        hidden: &Tensor,
+    ) -> Result<Tensor> {
+        (**self).step_ragged(server, session, row_lens, hidden)
     }
     fn close_session(&self, server: NodeId, session: u64) {
         (**self).close_session(server, session)
@@ -260,7 +301,7 @@ pub struct SessionConfig {
 #[derive(Clone, Default)]
 struct HopHistory {
     prefill_input: Option<Tensor>,
-    step_inputs: Vec<(usize, Tensor)>, // (cache_len, hidden)
+    step_inputs: Vec<(Vec<usize>, Tensor)>, // (per-row cache lens, hidden)
 }
 
 /// A live pipeline-parallel inference session. Owns its `ChainClient`
@@ -275,7 +316,10 @@ pub struct InferenceSession<C: ChainClient> {
     chain: Vec<ChainHop>,
     history: Vec<HopHistory>,
     session_id: u64,
-    cache_len: usize,
+    /// Per-row cache lengths (`row_lens.len() == shape.batch`). Uniform
+    /// sessions keep every slot equal; a ragged multi-prompt session's
+    /// rows advance from their own prompt lengths.
+    row_lens: Vec<usize>,
     recoveries: usize,
 }
 
@@ -286,7 +330,37 @@ impl<C: ChainClient> InferenceSession<C> {
     /// otherwise their KV-page reservations would leak until the
     /// server's idle-session sweep reclaimed them.
     pub fn open(client: C, cfg: SessionConfig, shape: PromptShape, session_id: u64) -> Result<Self> {
+        let lens = vec![shape.prefix_len; shape.batch];
+        Self::open_ragged(client, cfg, shape, lens, session_id)
+    }
+
+    /// [`Self::open`] with per-row prompt lengths — the multi-prompt
+    /// ragged path: one session whose rows start (and keep advancing) at
+    /// different cache depths. `shape.prefix_len` must equal the deepest
+    /// row (`row_lens.iter().max()`), and every row must be non-empty.
+    pub fn open_ragged(
+        client: C,
+        cfg: SessionConfig,
+        shape: PromptShape,
+        row_lens: Vec<usize>,
+        session_id: u64,
+    ) -> Result<Self> {
         shape.validate()?;
+        if row_lens.len() != shape.batch {
+            return Err(Error::Shape(format!(
+                "{} row lens for batch {}",
+                row_lens.len(),
+                shape.batch
+            )));
+        }
+        if row_lens.iter().any(|&l| l == 0 || l > shape.prefix_len)
+            || row_lens.iter().max() != Some(&shape.prefix_len)
+        {
+            return Err(Error::Shape(format!(
+                "row lens {row_lens:?} inconsistent with prefix_len {}",
+                shape.prefix_len
+            )));
+        }
         let servers = client.discover();
         let (chain, _cost) = routing::find_chain(&servers, &cfg.route)
             .ok_or_else(|| Error::NoRoute("no chain covers all blocks".into()))?;
@@ -307,7 +381,6 @@ impl<C: ChainClient> InferenceSession<C> {
             }
         }
         let history = vec![HopHistory::default(); chain.len()];
-        let cache_len = shape.prefix_len;
         Ok(InferenceSession {
             client,
             cfg,
@@ -315,7 +388,7 @@ impl<C: ChainClient> InferenceSession<C> {
             chain,
             history,
             session_id,
-            cache_len,
+            row_lens,
             recoveries: 0,
         })
     }
@@ -324,8 +397,15 @@ impl<C: ChainClient> InferenceSession<C> {
         &self.chain
     }
 
+    /// The deepest row's cache length (the uniform length for lockstep
+    /// sessions).
     pub fn cache_len(&self) -> usize {
-        self.cache_len
+        self.row_lens.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Per-row cache lengths (ragged sessions' rows differ).
+    pub fn row_lens(&self) -> &[usize] {
+        &self.row_lens
     }
 
     pub fn shape(&self) -> PromptShape {
@@ -359,13 +439,21 @@ impl<C: ChainClient> InferenceSession<C> {
     }
 
     /// One decode step through the whole chain: hidden [B,1,H] in/out.
-    /// `cache_len` is managed internally (starts at prefix_len).
+    /// Per-row cache lengths are managed internally (each row starts at
+    /// its own prompt length and advances by one per step); uniform
+    /// sessions travel as classic `InferStep` frames, ragged ones as
+    /// wire-v5 `InferStepRagged`.
     pub fn step(&mut self, hidden: Tensor) -> Result<Tensor> {
         let mut h = hidden;
         let mut i = 0;
         while i < self.chain.len() {
-            self.history[i].step_inputs.push((self.cache_len, h.clone()));
-            match self.client.step(self.chain[i].server, self.session_id, self.cache_len, &h) {
+            self.history[i].step_inputs.push((self.row_lens.clone(), h.clone()));
+            match self.client.step_ragged(
+                self.chain[i].server,
+                self.session_id,
+                &self.row_lens,
+                &h,
+            ) {
                 Ok(next) => {
                     h = next;
                     i += 1;
@@ -378,7 +466,9 @@ impl<C: ChainClient> InferenceSession<C> {
                 Err(e) => return Err(e),
             }
         }
-        self.cache_len += 1;
+        for l in &mut self.row_lens {
+            *l += 1;
+        }
         Ok(h)
     }
 
@@ -436,11 +526,11 @@ impl<C: ChainClient> InferenceSession<C> {
                     h = self.client.prefill(hop.server, self.session_id, &h)?;
                 }
             }
-            for (cache_len, inp) in &old_history.step_inputs {
+            for (lens, inp) in &old_history.step_inputs {
                 let mut h = inp.clone();
                 for (j, hop) in sub.iter().enumerate() {
-                    sub_history[j].step_inputs.push((*cache_len, h.clone()));
-                    h = self.client.step(hop.server, self.session_id, *cache_len, &h)?;
+                    sub_history[j].step_inputs.push((lens.clone(), h.clone()));
+                    h = self.client.step_ragged(hop.server, self.session_id, lens, &h)?;
                 }
             }
             Ok(sub_history)
@@ -538,6 +628,8 @@ mod tests {
         alive: bool,
         // session -> (#prefills, #steps) — to verify replay
         sessions: HashMap<u64, (usize, Vec<usize>)>,
+        // per-row cache-length vectors served via step_ragged
+        ragged_served: Vec<Vec<usize>>,
         fail_next: usize,      // fail this many next prefill/step requests
         fail_open_next: usize, // reject this many next open_session calls (Busy)
     }
@@ -552,6 +644,7 @@ mod tests {
                     end: *e,
                     alive: true,
                     sessions: HashMap::new(),
+                    ragged_served: Vec::new(),
                     fail_next: 0,
                     fail_open_next: 0,
                 })
@@ -645,6 +738,30 @@ mod tests {
             Ok(FakeSwarm::apply(hidden, span))
         }
 
+        fn step_ragged(
+            &self,
+            server: NodeId,
+            session: u64,
+            row_lens: &[usize],
+            hidden: &Tensor,
+        ) -> Result<Tensor> {
+            // uniform batches ride the legacy path (like a real transport
+            // downgrading to InferStep); mixed depths are recorded so the
+            // replay tests can assert the exact per-row lens replayed
+            if row_lens.windows(2).all(|w| w[0] == w[1]) {
+                return self.step(server, session, row_lens[0], hidden);
+            }
+            let mut st = self.state.borrow_mut();
+            let srv = st.servers.iter_mut().find(|s| s.id == server).unwrap();
+            if !srv.alive || srv.fail_next > 0 {
+                srv.fail_next = srv.fail_next.saturating_sub(1);
+                return Err(Error::ChainBroken("ragged step failed".into()));
+            }
+            let span = srv.end - srv.start;
+            srv.ragged_served.push(row_lens.to_vec());
+            Ok(FakeSwarm::apply(hidden, span))
+        }
+
         fn close_session(&self, server: NodeId, session: u64) {
             let mut st = self.state.borrow_mut();
             if let Some(srv) = st.servers.iter_mut().find(|s| s.id == server) {
@@ -722,6 +839,90 @@ mod tests {
         // cache_lens 2,3 (replay) then 4 (current)
         assert_eq!(swarm.steps_served(replacement, 7), vec![2, 3, 4]);
         assert_eq!(s.cache_len(), 5);
+    }
+
+    /// A ragged session's rows advance from their own prompt lengths,
+    /// ragged steps travel through `step_ragged`, and recovery replays
+    /// the exact per-row length vectors so a replacement server rebuilds
+    /// identical per-row caches.
+    #[test]
+    fn ragged_session_steps_and_recovers_with_row_lens() {
+        let swarm = FakeSwarm::new(&[("a", 0, 3), ("b", 3, 8), ("b2", 3, 8)]);
+        let shape = PromptShape { batch: 2, prefix_len: 4, prefill_width: 4 };
+        let mut s =
+            InferenceSession::open_ragged(&swarm, cfg(8), shape, vec![2, 4], 11).unwrap();
+        assert_eq!(s.row_lens(), &[2, 4]);
+        s.prefill(Tensor::from_f32(&[2, 4, 4], &[0.0; 32])).unwrap();
+        let h = Tensor::from_f32(&[2, 1, 4], &[0.0; 8]);
+        s.step(h.clone()).unwrap();
+        s.step(h.clone()).unwrap();
+        assert_eq!(s.row_lens(), &[4, 6], "each row advanced independently");
+        assert_eq!(s.cache_len(), 6);
+        // every hop saw the ragged length vectors in order
+        let served = |name: &str| {
+            let st = swarm.state.borrow();
+            st.servers
+                .iter()
+                .find(|x| x.id == NodeId::from_name(name))
+                .unwrap()
+                .ragged_served
+                .clone()
+        };
+        let hop1 = s.chain()[1].server;
+        let (victim, replacement) =
+            if hop1 == NodeId::from_name("b") { ("b", "b2") } else { ("b2", "b") };
+        assert_eq!(served(victim), vec![vec![2, 4], vec![3, 5]]);
+        // kill the second hop mid-generation: the replacement must replay
+        // BOTH historical ragged steps, then serve the new one
+        swarm.kill(victim);
+        let out = s.step(h).unwrap();
+        assert!(out.as_f32().iter().all(|&v| v == 8.0), "math unchanged");
+        assert_eq!(s.recoveries(), 1);
+        assert_eq!(
+            served(replacement),
+            vec![vec![2, 4], vec![3, 5], vec![4, 6]],
+            "replacement replayed the per-row history"
+        );
+        assert_eq!(s.row_lens(), &[5, 7]);
+    }
+
+    /// Defaulted transports (no step_ragged override) serve uniform
+    /// sessions and reject mixed depths with a typed error.
+    #[test]
+    fn default_step_ragged_forwards_uniform_rejects_mixed() {
+        struct Uniform;
+        impl ChainClient for Uniform {
+            fn discover(&self) -> Vec<ServerView> {
+                vec![]
+            }
+            fn open_session(&self, _: NodeId, _: u64, _: usize, _: usize, _: usize) -> Result<()> {
+                Ok(())
+            }
+            fn prefill(&self, _: NodeId, _: u64, h: &Tensor) -> Result<Tensor> {
+                Ok(h.clone())
+            }
+            fn step(&self, _: NodeId, _: u64, cache_len: usize, h: &Tensor) -> Result<Tensor> {
+                // tag the output with the scalar len the default passed
+                let mut t = h.clone();
+                t.as_f32_mut()[0] = cache_len as f32;
+                Ok(t)
+            }
+            fn close_session(&self, _: NodeId, _: u64) {}
+            fn forward(&self, _: NodeId, h: &Tensor) -> Result<Tensor> {
+                Ok(h.clone())
+            }
+            fn backward(&self, _: NodeId, _: &Tensor, g: &Tensor) -> Result<Tensor> {
+                Ok(g.clone())
+            }
+        }
+        let u = Uniform;
+        let id = NodeId::from_name("x");
+        let h = Tensor::from_f32(&[2, 1, 2], &[0.0; 4]);
+        let out = u.step_ragged(id, 1, &[7, 7], &h).unwrap();
+        assert_eq!(out.as_f32()[0], 7.0, "uniform rows forwarded to step()");
+        let err = u.step_ragged(id, 1, &[7, 9], &h).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err}");
+        assert!(matches!(u.step_ragged(id, 1, &[], &h), Err(Error::Shape(_))));
     }
 
     #[test]

@@ -101,6 +101,59 @@ pub fn iterative_find_node(
     shortlist.values().take(K).copied().collect()
 }
 
+/// Refresh stale routing-table buckets from a maintenance timer (the
+/// long-idle-node fix): for every non-empty bucket that has seen no
+/// contact for `max_age_ms`, run one [`iterative_find_node`] toward a
+/// pseudo-random id in that bucket's XOR range and fold everything the
+/// lookup met back into the table. A node that sat idle through churn
+/// otherwise keeps routing toward dead peers until its whole world view
+/// has died; periodic refresh keeps every populated range stocked with
+/// peers that answered a query *this* interval.
+///
+/// At most `max_lookups` buckets are refreshed per call (deepest —
+/// closest to self — first, where routing quality matters most); the
+/// rest wait for the next timer beat. Lookups run OUTSIDE the table
+/// lock (over TCP each contact is a dial), so concurrent request
+/// handling never stalls on maintenance. Refreshed buckets are stamped
+/// whether or not the lookup found anyone, so an entirely dead range is
+/// retried next interval instead of every sweep. Returns the number of
+/// buckets refreshed.
+pub fn refresh_stale_buckets(
+    rpc: &dyn Rpc,
+    table: &std::sync::Mutex<RoutingTable>,
+    now_ms: u64,
+    max_age_ms: u64,
+    max_lookups: usize,
+) -> usize {
+    let (plan, seeds) = {
+        let t = table.lock().unwrap();
+        let mut stale = t.stale_buckets(now_ms, max_age_ms);
+        stale.sort_unstable_by(|a, b| b.cmp(a)); // deepest ranges first
+        stale.truncate(max_lookups);
+        let plan: Vec<(usize, NodeId)> = stale
+            .into_iter()
+            .map(|b| (b, t.refresh_target(b, now_ms)))
+            .collect();
+        (plan, t.closest(t.me(), K))
+    };
+    if plan.is_empty() || seeds.is_empty() {
+        return 0;
+    }
+    let mut refreshed = 0;
+    for (bucket, target) in plan {
+        let met = iterative_find_node(rpc, &seeds, target);
+        let mut t = table.lock().unwrap();
+        for id in met {
+            // peers that just answered a query; full buckets keep their
+            // (live-presumed) oldest rather than probing from here
+            t.insert_at(id, now_ms, |_| true);
+        }
+        t.touch_bucket(bucket, now_ms);
+        refreshed += 1;
+    }
+    refreshed
+}
+
 /// Iterative value lookup (returns merged records from the first
 /// holders found plus closest nodes for caching). Like
 /// [`iterative_find_node`], dead peers are detected by the queries

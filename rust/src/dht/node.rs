@@ -74,6 +74,14 @@ pub struct DhtConfig {
     pub rpc_timeout: Duration,
     /// How often the maintenance thread sweeps expired records.
     pub sweep_every: Duration,
+    /// Refresh a routing-table bucket whose range has seen no contact
+    /// for this long (the long-idle-node fix —
+    /// [`crate::dht::refresh_stale_buckets`]): without it an idle node's
+    /// buckets decay to dead peers through churn and its first lookup
+    /// after the nap walks a graveyard. Kademlia's canonical interval is
+    /// an hour; the default is shorter because swarm TTLs here are tens
+    /// of seconds.
+    pub bucket_refresh_after: Duration,
 }
 
 impl Default for DhtConfig {
@@ -83,9 +91,14 @@ impl Default for DhtConfig {
             advertise: None,
             rpc_timeout: Duration::from_secs(2),
             sweep_every: Duration::from_secs(5),
+            bucket_refresh_after: Duration::from_secs(300),
         }
     }
 }
+
+/// Most stale buckets one maintenance beat refreshes (each refresh is an
+/// iterative lookup — a few dials); the rest wait for the next beat.
+const MAX_BUCKET_REFRESH_PER_SWEEP: usize = 2;
 
 /// Read deadline on accepted connections: a peer silent this long is
 /// hung up on, bounding the threads/fds idle clients can pin. RPC
@@ -479,6 +492,17 @@ impl DhtNode {
                         }
                         cursor = (cursor + BOOK_VERIFY_BATCH) % known.len();
                     }
+                    // bucket refresh on the same timer: ranges idle past
+                    // the threshold get one lookup each, outside the
+                    // table lock (ROADMAP: long-idle nodes must keep
+                    // resolving after churn)
+                    crate::dht::refresh_stale_buckets(
+                        &sweep_state.rpc,
+                        &sweep_state.table,
+                        now_ms(),
+                        sweep_state.cfg.bucket_refresh_after.as_millis() as u64,
+                        MAX_BUCKET_REFRESH_PER_SWEEP,
+                    );
                 }
             })
             .map_err(|e| Error::Other(format!("spawn: {e}")))?;
@@ -568,7 +592,7 @@ impl DhtNode {
             .collect();
         let mut table = self.state.table.lock().unwrap();
         for id in live {
-            table.insert(id, |_| true);
+            table.insert_at(id, now_ms(), |_| true);
         }
         table.len()
     }
@@ -594,7 +618,7 @@ impl DhtNode {
                 None => {
                     // bucket has room (or already holds the peer):
                     // the probe closure is never consulted
-                    table.insert(from.id, |_| true);
+                    table.insert_at(from.id, now_ms(), |_| true);
                     return;
                 }
                 Some(oldest) => oldest,
@@ -612,10 +636,10 @@ impl DhtNode {
                 let mut table = st.table.lock().unwrap();
                 if alive {
                     // old nodes are more reliable: refresh, drop the newcomer
-                    table.insert(lrs, |_| true);
+                    table.insert_at(lrs, now_ms(), |_| true);
                 } else {
                     table.remove(&lrs);
-                    table.insert(newcomer, |_| true);
+                    table.insert_at(newcomer, now_ms(), |_| true);
                 }
             }
             st.active_probes.fetch_sub(1, Ordering::SeqCst);
@@ -759,6 +783,55 @@ mod tests {
         assert_eq!(rpc.addr_of(&a.id()), Some(a.addr()));
         a.shutdown();
         b.shutdown();
+    }
+
+    /// ROADMAP satellite, TCP wiring: the maintenance thread refreshes
+    /// buckets idle past `bucket_refresh_after`, so a node that heard
+    /// nothing learns swarm members that joined while it idled.
+    #[test]
+    fn maintenance_thread_refreshes_stale_buckets() {
+        // the hub's own maintenance must stay quiet: its book-verify
+        // pings would otherwise refresh the idler's bucket (inbound
+        // contact IS activity) and the staleness under test never occurs
+        let quiet = |bootstrap: Vec<String>| DhtConfig {
+            bootstrap,
+            rpc_timeout: Duration::from_millis(500),
+            sweep_every: Duration::from_secs(30),
+            ..DhtConfig::default()
+        };
+        let hub =
+            DhtNode::spawn(NodeId::from_name("hub"), "127.0.0.1:0", quiet(vec![])).unwrap();
+        let idle_cfg = DhtConfig {
+            bootstrap: vec![hub.addr()],
+            rpc_timeout: Duration::from_millis(500),
+            sweep_every: Duration::from_millis(100),
+            bucket_refresh_after: Duration::from_millis(300),
+            ..DhtConfig::default()
+        };
+        let idle =
+            DhtNode::spawn(NodeId::from_name("idler"), "127.0.0.1:0", idle_cfg).unwrap();
+        assert_eq!(idle.bootstrap(), 1, "idler learns the hub");
+        // a newcomer joins through the hub; the idler hears nothing
+        let nc = DhtNode::spawn(
+            NodeId::from_name("newcomer"),
+            "127.0.0.1:0",
+            quiet(vec![hub.addr()]),
+        )
+        .unwrap();
+        assert!(nc.bootstrap() >= 1);
+        // ... until its maintenance refresh walks the stale bucket range
+        let t0 = std::time::Instant::now();
+        while idle.table_len() < 2 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        assert!(
+            idle.table_len() >= 2,
+            "bucket refresh never learned the newcomer (table {})",
+            idle.table_len()
+        );
+        hub.shutdown();
+        idle.shutdown();
+        nc.shutdown();
     }
 
     #[test]

@@ -1,5 +1,9 @@
 //! Kademlia routing table: 256 k-buckets with least-recently-seen
-//! eviction gated on a liveness probe of the oldest entry.
+//! eviction gated on a liveness probe of the oldest entry, plus
+//! per-bucket activity clocks for the maintenance-timer bucket refresh
+//! (a long-idle node's buckets decay to dead peers; refreshing stale
+//! ranges with a lookup keeps it routable — see
+//! [`crate::dht::refresh_stale_buckets`]).
 
 use crate::dht::id::NodeId;
 
@@ -11,6 +15,9 @@ pub const K: usize = 8;
 #[derive(Debug, Default, Clone)]
 struct Bucket {
     peers: Vec<NodeId>,
+    /// Wall-ish ms of the last contact/refresh in this bucket's range
+    /// (0 = never — immediately refresh-eligible once non-empty).
+    last_touch: u64,
 }
 
 /// Routing table of the 256-bit XOR space.
@@ -28,14 +35,28 @@ impl RoutingTable {
         self.me
     }
 
-    /// Record contact with a peer. On a full bucket, Kademlia pings the
+    /// Record contact with a peer (no clock — test/sim callers that
+    /// never refresh). On a full bucket, Kademlia pings the
     /// least-recently-seen entry and keeps it if alive (old nodes are
     /// more reliable); `probe` supplies liveness.
     pub fn insert(&mut self, peer: NodeId, probe: impl Fn(&NodeId) -> bool) -> bool {
+        self.insert_at(peer, 0, probe)
+    }
+
+    /// [`Self::insert`] stamping the peer's bucket with `now_ms` — any
+    /// contact from a bucket's range counts as that range being alive,
+    /// postponing its maintenance refresh.
+    pub fn insert_at(
+        &mut self,
+        peer: NodeId,
+        now_ms: u64,
+        probe: impl Fn(&NodeId) -> bool,
+    ) -> bool {
         let Some(idx) = self.me.bucket_index(&peer) else {
             return false; // never insert self
         };
         let bucket = &mut self.buckets[idx];
+        bucket.last_touch = bucket.last_touch.max(now_ms);
         if let Some(pos) = bucket.peers.iter().position(|p| *p == peer) {
             let p = bucket.peers.remove(pos);
             bucket.peers.push(p); // refresh recency
@@ -100,6 +121,73 @@ impl RoutingTable {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    // ---- maintenance-timer bucket refresh --------------------------------
+
+    /// Indices of non-empty buckets whose range has seen no contact for
+    /// at least `max_age_ms` — the refresh candidates. (Empty buckets
+    /// hold nothing to lose; they repopulate through ordinary lookups.)
+    pub fn stale_buckets(&self, now_ms: u64, max_age_ms: u64) -> Vec<usize> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| {
+                !b.peers.is_empty() && now_ms.saturating_sub(b.last_touch) >= max_age_ms
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Stamp a bucket as refreshed at `now_ms` (called after its refresh
+    /// lookup completed — successful or not, so a dead range is retried
+    /// next interval rather than every sweep).
+    pub fn touch_bucket(&mut self, bucket: usize, now_ms: u64) {
+        if let Some(b) = self.buckets.get_mut(bucket) {
+            b.last_touch = b.last_touch.max(now_ms);
+        }
+    }
+
+    /// A pseudo-random id inside `bucket`'s XOR range of `me` — the
+    /// canonical Kademlia refresh target: looking it up walks the swarm
+    /// through exactly that distance range, repopulating the bucket.
+    /// Deterministic in `(me, bucket, salt)` so tests are reproducible;
+    /// vary `salt` (e.g. the clock) across refreshes.
+    pub fn refresh_target(&self, bucket: usize, salt: u64) -> NodeId {
+        let bucket = bucket.min(255);
+        // FNV-1a over (me, bucket, salt) seeds a splitmix-style filler
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut fold = |byte: u8| {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        for &b in &self.me.0 {
+            fold(b);
+        }
+        for b in (bucket as u64).to_le_bytes() {
+            fold(b);
+        }
+        for b in salt.to_le_bytes() {
+            fold(b);
+        }
+        let mut next = move || {
+            h = h.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (h >> 32) as u8
+        };
+        // XOR distance with its highest set bit at `bucket`: byte
+        // (31 - bucket/8), bit (bucket % 8); lower bits/bytes random
+        let mut d = [0u8; 32];
+        let (byte, bit) = (31 - bucket / 8, bucket % 8);
+        let low_mask = (1u16 << bit) as u8 - 1;
+        d[byte] = (1u8 << bit) | (next() & low_mask);
+        for slot in d.iter_mut().skip(byte + 1) {
+            *slot = next();
+        }
+        let mut id = [0u8; 32];
+        for (i, slot) in id.iter_mut().enumerate() {
+            *slot = self.me.0[i] ^ d[i];
+        }
+        NodeId(id)
+    }
 }
 
 #[cfg(test)]
@@ -157,6 +245,54 @@ mod tests {
         assert_eq!(t.len(), K);
         let closest = t.closest(mk(101), K);
         assert!(closest.contains(&mk(101)));
+    }
+
+    #[test]
+    fn stale_buckets_and_touch() {
+        let mut rng = Rng::new(7);
+        let me = NodeId::random(&mut rng);
+        let mut t = RoutingTable::new(me);
+        // empty table: nothing to refresh
+        assert!(t.stale_buckets(1_000_000, 10).is_empty());
+        let p = NodeId::random(&mut rng);
+        let q = NodeId::random(&mut rng);
+        t.insert_at(p, 1_000, |_| true);
+        t.insert_at(q, 5_000, |_| true);
+        let bp = me.bucket_index(&p).unwrap();
+        let bq = me.bucket_index(&q).unwrap();
+        if bp == bq {
+            return; // astronomically unlikely; nothing to distinguish
+        }
+        // at t=4000 with max_age 2000 only p's bucket is stale
+        let stale = t.stale_buckets(4_000, 2_000);
+        assert!(stale.contains(&bp));
+        assert!(!stale.contains(&bq));
+        // touching postpones the refresh
+        t.touch_bucket(bp, 4_000);
+        assert!(!t.stale_buckets(4_500, 2_000).contains(&bp));
+        // and activity via insert_at does too
+        assert!(t.stale_buckets(9_000, 2_000).contains(&bq));
+        t.insert_at(q, 9_000, |_| true);
+        assert!(!t.stale_buckets(9_500, 2_000).contains(&bq));
+    }
+
+    #[test]
+    fn refresh_target_lands_in_its_bucket() {
+        let mut rng = Rng::new(11);
+        let me = NodeId::random(&mut rng);
+        let t = RoutingTable::new(me);
+        for bucket in [0usize, 1, 7, 8, 63, 100, 200, 254, 255] {
+            for salt in 0..4u64 {
+                let target = t.refresh_target(bucket, salt);
+                assert_eq!(
+                    me.bucket_index(&target),
+                    Some(bucket),
+                    "target for bucket {bucket} (salt {salt}) landed elsewhere"
+                );
+            }
+        }
+        // different salts give different targets (deep buckets have room)
+        assert_ne!(t.refresh_target(200, 1), t.refresh_target(200, 2));
     }
 
     #[test]

@@ -193,6 +193,9 @@ pub struct NodeMetrics {
     /// Sessions closed by the idle-TTL sweep (abandoned clients whose
     /// KV-pool reservations would otherwise leak forever).
     pub sessions_swept: Counter,
+    /// Fused decode batches whose rows mixed DIFFERENT cache lengths
+    /// (the ragged-batching lever; a subset of `batched_steps`).
+    pub ragged_steps: Counter,
 }
 
 impl NodeMetrics {
@@ -203,7 +206,7 @@ impl NodeMetrics {
     pub fn report(&self) -> String {
         format!(
             "requests={} failures={} in={}B out={}B step[{}] kv_pages={}/{} \
-             batched={} fused_rows={} rejects={} prefix_hit={}/{} \
+             batched={} ragged={} fused_rows={} rejects={} prefix_hit={}/{} \
              prefill_skips={} shared_pages={} cow_forks={} fastpath={} swept={}",
             self.requests.get(),
             self.failures.get(),
@@ -213,6 +216,7 @@ impl NodeMetrics {
             self.kv_pages_free.get(),
             self.kv_pages_total.get(),
             self.batched_steps.get(),
+            self.ragged_steps.get(),
             self.fused_rows.get(),
             self.admission_rejects.get(),
             self.prefix_hits.get(),

@@ -17,6 +17,9 @@ pub const MAX_DHT_RECORDS: usize = 128;
 pub const MAX_DHT_PAYLOAD: usize = 64 << 10;
 /// Longest dialable address string in a [`DhtContact`].
 pub const MAX_DHT_ADDR: usize = 256;
+/// Most per-row cache lengths one `InferStepRagged` frame may carry
+/// (bounds allocation; real batches are far below this).
+pub const MAX_RAGGED_ROWS: usize = 4096;
 
 /// A DHT peer on the wire: node id + the address it can be dialed at.
 /// Requests carry the *caller's* contact so the callee can fold the
@@ -245,6 +248,14 @@ pub enum Message {
     DhtStore { from: DhtContact, key: NodeId, rec: DhtWireRecord },
     /// Reply to `DhtStore`.
     DhtStored,
+    /// One RAGGED decode step (wire v5): like [`Message::InferStep`] but
+    /// with one cache length PER ROW of the session's batch, so a
+    /// multi-prompt session advances rows at different decode depths in
+    /// one frame. `cache_lens.len()` must equal the hidden tensor's
+    /// leading (batch) dimension. Legacy servers reject the unknown tag
+    /// (dropped connection); clients downgrade to per-row `InferStep`
+    /// frames only when the rows are uniform.
+    InferStepRagged { session: u64, cache_lens: Vec<u32>, hidden: TensorPayload },
 }
 
 impl Message {
@@ -275,6 +286,7 @@ impl Message {
             Message::DhtValues { .. } => "DhtValues",
             Message::DhtStore { .. } => "DhtStore",
             Message::DhtStored => "DhtStored",
+            Message::InferStepRagged { .. } => "InferStepRagged",
         }
     }
 
@@ -407,6 +419,15 @@ impl Message {
                 rec.write(&mut out);
             }
             Message::DhtStored => out.push(20),
+            Message::InferStepRagged { session, cache_lens, hidden } => {
+                out.push(21);
+                out.extend_from_slice(&session.to_le_bytes());
+                out.extend_from_slice(&(cache_lens.len() as u32).to_le_bytes());
+                for l in cache_lens {
+                    out.extend_from_slice(&l.to_le_bytes());
+                }
+                hidden.write(&mut out);
+            }
         }
         out
     }
@@ -521,6 +542,22 @@ impl Message {
                 Message::DhtStore { from, key: NodeId(k), rec }
             }
             20 => Message::DhtStored,
+            21 => {
+                let session = r.u64()?;
+                let n = r.u32()? as usize;
+                if n > MAX_RAGGED_ROWS {
+                    return None; // bound allocation on hostile input
+                }
+                let mut cache_lens = Vec::with_capacity(n);
+                for _ in 0..n {
+                    cache_lens.push(r.u32()?);
+                }
+                Message::InferStepRagged {
+                    session,
+                    cache_lens,
+                    hidden: TensorPayload::read(&mut r)?,
+                }
+            }
             _ => return None,
         };
         if r.pos != buf.len() {
@@ -666,18 +703,19 @@ mod tests {
     /// every v4 frame) and cross-tag payloads must reject cleanly.
     #[test]
     fn unknown_and_swapped_tags_rejected() {
-        // all unknown tags reject on a representative payload
+        // all unknown tags reject on a representative payload (22 is the
+        // first unassigned tag after wire v5's InferStepRagged)
         let body = Message::DhtPing { from: contact("a", "127.0.0.1:1") }.encode();
-        for tag in 21..=255u8 {
+        for tag in 22..=255u8 {
             let mut b = body.clone();
             b[0] = tag;
             assert!(Message::decode(&b).is_none(), "tag {tag} accepted");
         }
-        // a v4 frame shown to a decoder as each *known* tag must not
+        // a frame shown to a decoder as each *known* tag must not
         // panic (it may legitimately alias for container-free tags)
         for m in dht_messages() {
             let bytes = m.encode();
-            for tag in 0..=20u8 {
+            for tag in 0..=21u8 {
                 let mut b = bytes.clone();
                 b[0] = tag;
                 let _ = Message::decode(&b); // no panic is the assertion

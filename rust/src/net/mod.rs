@@ -12,7 +12,7 @@ mod framed;
 
 pub use codec::{
     DhtContact, DhtWireRecord, Message, TensorPayload, MAX_DHT_ADDR, MAX_DHT_NODES,
-    MAX_DHT_RECORDS,
+    MAX_DHT_RECORDS, MAX_RAGGED_ROWS,
 };
 pub use framed::{read_frame, write_frame, FramedConn};
 
@@ -23,13 +23,15 @@ pub const BASE_PORT: u16 = 31337;
 /// rules). v2 widened `Pong` with KV-pool occupancy + batch width; v3
 /// added the `OpenSessionV3`/`SessionOpenedV3` tags carrying prefix
 /// token ids for shared-prefix serving; v4 added the Kademlia RPC tags
-/// (`DhtPing`..`DhtStored`, tags 13–20) behind the networked DHT. Each
-/// step appended new tags only, so v3 (and older) frames still decode
-/// byte-for-byte; older peers reject the newer tags as undecodable
-/// frames, which callers treat as "peer does not speak this version".
-/// The codec has no inline negotiation, so mixed-version swarms must
-/// not share a model namespace.
-pub const PROTOCOL_VERSION: u32 = 4;
+/// (`DhtPing`..`DhtStored`, tags 13–20) behind the networked DHT; v5
+/// added `InferStepRagged` (tag 21), the per-row `cache_len` step frame
+/// behind ragged continuous batching. Each step appended new tags only,
+/// so v4 (and older) frames still decode byte-for-byte; older peers
+/// reject the newer tags as undecodable frames, which callers treat as
+/// "peer does not speak this version". The codec has no inline
+/// negotiation, so mixed-version swarms must not share a model
+/// namespace.
+pub const PROTOCOL_VERSION: u32 = 5;
 
 #[cfg(test)]
 mod tests {
@@ -88,6 +90,16 @@ mod tests {
                 prefix_tokens: vec![],
             },
             Message::SessionOpenedV3 { session: 42, shared_tokens: 128 },
+            Message::InferStepRagged {
+                session: 42,
+                cache_lens: vec![7, 19, 128],
+                hidden: TensorPayload::raw(&t),
+            },
+            Message::InferStepRagged {
+                session: 43,
+                cache_lens: vec![1],
+                hidden: TensorPayload::compressed(&t),
+            },
         ];
         for m in msgs {
             let bytes = m.encode();

@@ -138,6 +138,28 @@ impl Executor {
     pub fn fuse_rows(rows: &[&Tensor]) -> Result<xla::Literal> {
         Tensor::concat_rows(rows)?.to_literal()
     }
+
+    /// [`Self::fuse_rows`] plus the per-row cache-length vector the
+    /// ragged decode artifacts take (`cache_lens i32[ΣB]`): each fused
+    /// row carries its OWN position, so sessions at different decode
+    /// depths share one executor call — the padding/mask discipline
+    /// lives in the artifact's per-row attention mask.
+    pub fn fuse_rows_ragged(
+        rows: &[&Tensor],
+        row_lens: &[usize],
+    ) -> Result<(xla::Literal, xla::Literal)> {
+        let fused = Tensor::concat_rows(rows)?;
+        let total: usize = fused.shape.first().copied().unwrap_or(0);
+        if row_lens.len() != total {
+            return Err(Error::Shape(format!(
+                "fuse_rows_ragged: {} lens for {total} fused rows",
+                row_lens.len()
+            )));
+        }
+        let lens: Vec<i32> = row_lens.iter().map(|&l| l as i32).collect();
+        let len_lit = Tensor::from_i32(&[total], &lens).to_literal()?;
+        Ok((fused.to_literal()?, len_lit))
+    }
 }
 
 #[cfg(all(test, feature = "artifact-tests"))]

@@ -27,12 +27,21 @@
 //!   sent the same prompt template) and by *pinned prefix sets* kept
 //!   alive by the server's prefix cache. A session opened against a
 //!   pinned prefix ([`KvPool::open_session_shared`]) attaches the shared
-//!   pages by reference and is charged only the **marginal** pages of its
-//!   private suffix `[write_from, max_tokens)`. The first write into a
-//!   shared page forks it ([`KvPool::prepare_write_range`]): a private
-//!   copy is allocated (against the session's reservation when the write
-//!   position is inside the budgeted span), the shared original keeps its
-//!   other holders. Shared pages are freed only at refcount zero.
+//!   pages by reference — since the ragged-batching refactor to EVERY
+//!   row of a multi-row session — and is charged only the **marginal**
+//!   pages of its private suffix `[write_from, max_tokens)` per row. The
+//!   first write into a shared page forks it
+//!   ([`KvPool::prepare_write_range`] for lockstep sessions,
+//!   [`KvPool::prepare_write_row`] for one ragged row): a private copy
+//!   is allocated (against the session's reservation when the write
+//!   position is inside the budgeted span), the shared original keeps
+//!   its other holders — so rows fork independently on their first
+//!   divergent write. Shared pages are freed only at refcount zero.
+//! - **Per-row lengths.** Each row of a session tracks its own valid
+//!   token count ([`KvPool::session_row_lens`], [`KvPool::commit_row_len`]):
+//!   a ragged fused decode writes row r's column at row r's own cache
+//!   position, and [`KvPool::gather_padded`] zero-pads each row past its
+//!   own length.
 //! - **Defrag.** [`KvPool::defrag`] compacts live pages into the lowest
 //!   page ids so the high watermark tracks actual occupancy. With sharing
 //!   a page can be referenced from many tables, so defrag computes a
@@ -113,9 +122,12 @@ struct PageRun {
 struct SessionTable {
     batch: usize,
     n_blocks: usize,
-    /// Token positions written so far (uniform across blocks: the whole
-    /// span advances in lockstep).
-    len: usize,
+    /// Token positions written so far, PER ROW (uniform across blocks:
+    /// each row's span advances in lockstep over the hosted blocks, but
+    /// since ragged batching the rows of one session advance
+    /// independently — a multi-prompt session holds rows at different
+    /// decode depths).
+    row_lens: Vec<usize>,
     /// Token positions admission has promised this session.
     reserved_tokens: usize,
     /// First position this session will write itself (0 for private
@@ -150,6 +162,12 @@ struct SessionTable {
 impl SessionTable {
     fn run_index(&self, block: usize, kv: usize, row: usize) -> usize {
         (block * 2 + kv) * self.batch + row
+    }
+
+    /// The deepest row's length — what capacity checks and the legacy
+    /// uniform paths key on.
+    fn max_len(&self) -> usize {
+        self.row_lens.iter().copied().max().unwrap_or(0)
     }
 }
 
@@ -264,8 +282,16 @@ impl KvPool {
         self.tables.get(&session).map(|t| t.batch)
     }
 
+    /// The session's deepest row length (the uniform length for
+    /// sessions whose rows advance in lockstep).
     pub fn session_len(&self, session: u64) -> Option<usize> {
-        self.tables.get(&session).map(|t| t.len)
+        self.tables.get(&session).map(|t| t.max_len())
+    }
+
+    /// Per-row token lengths — the ragged-batching truth. One entry per
+    /// batch row.
+    pub fn session_row_lens(&self, session: u64) -> Option<Vec<usize>> {
+        self.tables.get(&session).map(|t| t.row_lens.clone())
     }
 
     /// Token positions this session attached from a shared prefix.
@@ -342,7 +368,7 @@ impl KvPool {
             SessionTable {
                 batch,
                 n_blocks,
-                len: 0,
+                row_lens: vec![0; batch],
                 reserved_tokens: max_tokens,
                 write_from: 0,
                 reserved_pages_left: need,
@@ -358,30 +384,37 @@ impl KvPool {
         Ok(())
     }
 
-    /// Open a batch-1 session on top of a pinned prefix: the first
-    /// `share_tokens` positions of the pinned pages are attached by
-    /// reference (refcount bumped), the session's `len` starts there,
-    /// and admission charges only the **marginal** pages of the private
-    /// span `[write_from, max_tokens)`. `share_tokens` must be
-    /// page-aligned and at most the pin's coverage — a *partial* trie
-    /// hit attaches only the matched span, never the pin's tail (which
-    /// holds the donor's own divergent tokens / padding). `write_from`
-    /// is the first position this session will write (its own prefix
-    /// length for a full-prefix hit — decode overwrites from there and
+    /// Open a session of `batch` rows on top of a pinned prefix: the
+    /// first `share_tokens` positions of the pinned pages are attached
+    /// by reference to EVERY row (refcount bumped once per row), each
+    /// row's length starts there, and admission charges only the
+    /// **marginal** pages of the private span `[write_from, max_tokens)`
+    /// per row. Rows fork independently on their first divergent write
+    /// ([`Self::prepare_write_row`]) — the batch>1 prefix sharing the
+    /// ragged API path relies on. `share_tokens` must be page-aligned
+    /// and at most the pin's coverage — a *partial* trie hit attaches
+    /// only the matched span, never the pin's tail (which holds the
+    /// donor's own divergent tokens / padding). `write_from` is the
+    /// first position this session will write (its own prefix length
+    /// for a full-prefix hit — decode overwrites from there and
     /// CoW-forks the pages it touches).
     ///
     /// Returns the number of shared token positions attached.
+    #[allow(clippy::too_many_arguments)]
     pub fn open_session_shared(
         &mut self,
         session: u64,
+        batch: usize,
         n_blocks: usize,
         max_tokens: usize,
         pin: u64,
         share_tokens: usize,
         write_from: usize,
     ) -> Result<usize> {
-        if n_blocks == 0 {
-            return Err(Error::Protocol(format!("session {session}: 0 blocks")));
+        if batch == 0 || n_blocks == 0 {
+            return Err(Error::Protocol(format!(
+                "session {session}: batch {batch} x blocks {n_blocks} is empty"
+            )));
         }
         let (covered, pin_blocks) = match self.pinned.get(&pin) {
             Some(p) => (p.tokens, p.n_blocks),
@@ -403,7 +436,7 @@ impl KvPool {
             self.close_session(session);
         }
         let wf = write_from.min(shared);
-        let need = self.cfg.private_pages(1, n_blocks, wf, max_tokens);
+        let need = self.cfg.private_pages(batch, n_blocks, wf, max_tokens);
         if need > self.free_pages() {
             return Err(Error::Busy(format!(
                 "kv pool full: session {session} needs {need} marginal pages, {} free of {}",
@@ -412,10 +445,15 @@ impl KvPool {
             )));
         }
         let n_pages = shared / pt;
-        let mut runs = vec![PageRun::default(); n_blocks * 2];
+        // every row of the session aliases the same pinned pages; the
+        // run layout is (block*2 + kv)*batch + row, so row r of run
+        // (block, kv) maps to the pin's run (block*2 + kv)
+        let mut runs = vec![PageRun::default(); n_blocks * 2 * batch];
         let pp = self.pinned.get(&pin).unwrap();
-        for (ri, pages) in pp.runs.iter().enumerate() {
-            runs[ri].pages = pages[..n_pages].to_vec();
+        for (bk, pages) in pp.runs.iter().enumerate() {
+            for row in 0..batch {
+                runs[bk * batch + row].pages = pages[..n_pages].to_vec();
+            }
         }
         let attach: Vec<PageId> =
             runs.iter().flat_map(|r| r.pages.iter().copied()).collect();
@@ -427,9 +465,9 @@ impl KvPool {
         self.tables.insert(
             session,
             SessionTable {
-                batch: 1,
+                batch,
                 n_blocks,
-                len: shared,
+                row_lens: vec![shared; batch],
                 reserved_tokens: max_tokens.max(wf),
                 write_from: wf,
                 reserved_pages_left: need,
@@ -703,6 +741,49 @@ impl KvPool {
     /// pages in that range are forked (allocate + copy + release the
     /// shared original). Returns the number of CoW forks performed.
     pub fn prepare_write_range(&mut self, session: u64, from: usize, to: usize) -> Result<usize> {
+        let n_runs = match self.tables.get(&session) {
+            Some(t) => t.runs.len(),
+            None => return Err(Error::NotFound(format!("session {session}"))),
+        };
+        self.prepare_runs(session, (0..n_runs).collect(), from, to)
+    }
+
+    /// Per-row [`Self::prepare_write_range`]: materialize + privatize
+    /// only `row`'s runs (every hosted block, both K/V halves) for the
+    /// span `[from, to]` — the ragged-decode preparation, where each
+    /// fused row writes at its OWN cache position and rows sharing a
+    /// pinned prefix fork independently on their first divergent write.
+    /// Returns the CoW forks performed for this row.
+    pub fn prepare_write_row(
+        &mut self,
+        session: u64,
+        row: usize,
+        from: usize,
+        to: usize,
+    ) -> Result<usize> {
+        let (batch, n_blocks) = match self.tables.get(&session) {
+            Some(t) => (t.batch, t.n_blocks),
+            None => return Err(Error::NotFound(format!("session {session}"))),
+        };
+        if row >= batch {
+            return Err(Error::Shape(format!(
+                "row {row} out of batch {batch} (session {session})"
+            )));
+        }
+        let runs: Vec<usize> = (0..n_blocks * 2).map(|bk| bk * batch + row).collect();
+        self.prepare_runs(session, runs, from, to)
+    }
+
+    /// Shared body of the prepare paths: materialize pages up to `to`
+    /// and privatize pages covering `[from, to]` for the given run
+    /// indices.
+    fn prepare_runs(
+        &mut self,
+        session: u64,
+        run_ids: Vec<usize>,
+        from: usize,
+        to: usize,
+    ) -> Result<usize> {
         if !self.tables.contains_key(&session) {
             return Err(Error::NotFound(format!("session {session}")));
         }
@@ -711,9 +792,8 @@ impl KvPool {
         }
         let pt = self.cfg.page_tokens.max(1);
         let (first, last) = (from.min(to) / pt, to / pt);
-        let n_runs = self.tables[&session].runs.len();
         let mut forks = 0usize;
-        for run_i in 0..n_runs {
+        for run_i in run_ids {
             // materialize missing pages up to `last`
             while self.tables[&session].runs[run_i].pages.len() <= last {
                 let id = self.alloc_for(session)?;
@@ -834,52 +914,118 @@ impl KvPool {
         pos: usize,
         src: &[f32],
     ) -> Result<()> {
-        let (hh, d, pt) = (self.cfg.n_heads, self.cfg.head_dim, self.cfg.page_tokens);
-        let t = self
+        let batch = self
             .tables
             .get(&session)
+            .map(|t| t.batch)
             .ok_or_else(|| Error::NotFound(format!("session {session}")))?;
-        let batch = t.batch;
+        let (hh, d) = (self.cfg.n_heads, self.cfg.head_dim);
         if src.len() != batch * hh * d {
             return Err(Error::Shape(format!(
                 "kv column: got {} floats, expected {batch}x{hh}x{d}",
                 src.len()
             )));
         }
-        let (page_idx, in_page) = (pos / pt, pos % pt);
         for row in 0..batch {
-            let run_idx = t.run_index(block, kv, row);
-            let pid = *self.tables[&session].runs[run_idx]
-                .pages
-                .get(page_idx)
-                .ok_or_else(|| {
-                    Error::Protocol(format!("write at {pos} before prepare (session {session})"))
-                })?;
-            debug_assert!(
-                self.refs[pid as usize] == 1,
-                "column write into shared page {pid} (refs {}) — prepare_write must fork first",
-                self.refs[pid as usize]
-            );
-            let page = &mut self.pages[pid as usize];
-            for h in 0..hh {
-                let src_off = (row * hh + h) * d;
-                let dst_off = (h * pt + in_page) * d;
-                page[dst_off..dst_off + d].copy_from_slice(&src[src_off..src_off + d]);
-            }
+            self.write_column_row(session, block, kv, row, pos, &src[row * hh * d..(row + 1) * hh * d])?;
         }
         Ok(())
     }
 
-    /// Record that the session now holds `len` valid token positions.
+    /// Write one row's decode K or V column for one block at that row's
+    /// OWN position — the ragged-decode scatter. `src` holds `[Hh, D]`
+    /// floats. Pages must be prepared for `pos` via
+    /// [`Self::prepare_write_row`].
+    pub fn write_column_row(
+        &mut self,
+        session: u64,
+        block: usize,
+        kv: usize,
+        row: usize,
+        pos: usize,
+        src: &[f32],
+    ) -> Result<()> {
+        let (hh, d, pt) = (self.cfg.n_heads, self.cfg.head_dim, self.cfg.page_tokens);
+        let t = self
+            .tables
+            .get(&session)
+            .ok_or_else(|| Error::NotFound(format!("session {session}")))?;
+        if row >= t.batch {
+            return Err(Error::Shape(format!(
+                "row {row} out of batch {} (session {session})",
+                t.batch
+            )));
+        }
+        if src.len() != hh * d {
+            return Err(Error::Shape(format!(
+                "kv row column: got {} floats, expected {hh}x{d}",
+                src.len()
+            )));
+        }
+        let (page_idx, in_page) = (pos / pt, pos % pt);
+        let run_idx = t.run_index(block, kv, row);
+        let pid = *t.runs[run_idx].pages.get(page_idx).ok_or_else(|| {
+            Error::Protocol(format!("write at {pos} before prepare (session {session})"))
+        })?;
+        debug_assert!(
+            self.refs[pid as usize] == 1,
+            "column write into shared page {pid} (refs {}) — prepare_write must fork first",
+            self.refs[pid as usize]
+        );
+        let page = &mut self.pages[pid as usize];
+        for h in 0..hh {
+            let dst_off = (h * pt + in_page) * d;
+            page[dst_off..dst_off + d].copy_from_slice(&src[h * d..(h + 1) * d]);
+        }
+        Ok(())
+    }
+
+    /// Record that every row of the session now holds (at least) `len`
+    /// valid token positions — the uniform-prefill commit.
     pub fn commit_len(&mut self, session: u64, len: usize) {
         if let Some(t) = self.tables.get_mut(&session) {
-            t.len = t.len.max(len);
+            for l in &mut t.row_lens {
+                *l = (*l).max(len);
+            }
+        }
+    }
+
+    /// Record per-row valid lengths in one call. Today's wire protocol
+    /// carries no per-row prompt lengths at prefill (servers commit the
+    /// padded width uniformly and rely on the per-row attention mask),
+    /// so production callers use [`Self::commit_row_len`] from the
+    /// decode path; this batch form serves tests and a future per-row
+    /// prefill commit. Lengths only ever grow; extra entries are
+    /// ignored.
+    pub fn commit_row_lens(&mut self, session: u64, lens: &[usize]) {
+        if let Some(t) = self.tables.get_mut(&session) {
+            for (l, &new) in t.row_lens.iter_mut().zip(lens) {
+                *l = (*l).max(new);
+            }
+        }
+    }
+
+    /// Record that row `row` now holds `len` valid token positions —
+    /// the ragged-decode commit (rows advance independently).
+    pub fn commit_row_len(&mut self, session: u64, row: usize, len: usize) {
+        if let Some(t) = self.tables.get_mut(&session) {
+            if let Some(l) = t.row_lens.get_mut(row) {
+                *l = (*l).max(len);
+            }
         }
     }
 
     /// Gather one block's K or V into the padded `[B, Hh, cap, D]` layout
-    /// the decode artifact expects; positions past the session length are
-    /// zero (exactly the seed's `pad_cache` semantics).
+    /// the decode artifact expects; positions past EACH ROW's committed
+    /// length are zero (the seed's `pad_cache` semantics, per row).
+    /// Note the validity contract: a prefill commits every row at the
+    /// full padded width (the server never learns per-row prompt
+    /// lengths), so positions between a row's true prompt end and the
+    /// padded width hold the prefill's padding K/V, and causal
+    /// invisibility there comes from the per-row attention mask
+    /// (`cache_lens`) — exactly the uniform path's long-standing
+    /// semantics. The per-row zeroing guards positions past the
+    /// committed length (decode columns rows have not reached).
     pub fn gather_padded(
         &self,
         session: u64,
@@ -901,8 +1047,8 @@ impl KvPool {
             )));
         }
         dst.iter_mut().for_each(|v| *v = 0.0);
-        let len = t.len.min(cap);
         for row in 0..batch {
+            let len = t.row_lens[row].min(cap);
             let run = &t.runs[t.run_index(block, kv, row)];
             for (pi, &pid) in run.pages.iter().enumerate() {
                 let t0 = pi * pt;
@@ -1080,7 +1226,7 @@ mod tests {
         p.commit_len(1, 8);
         let pin = p.pin_prefix(1, 8).unwrap();
         // an abandoned sharer holds the pinned span by reference
-        p.open_session_shared(2, 1, 8, pin, 8, 8).unwrap();
+        p.open_session_shared(2, 1, 1, 8, pin, 8, 8).unwrap();
         assert_eq!(p.session_ids(), vec![1, 2]);
 
         // the sweep: close every abandoned session
@@ -1277,7 +1423,7 @@ mod tests {
         let used_before = p.used_pages();
         let free_before = p.free_pages();
         // sharer writes only [8, 12): one marginal page per run
-        let shared = p.open_session_shared(2, 1, 12, pin, 8, 8).unwrap();
+        let shared = p.open_session_shared(2, 1, 1, 12, pin, 8, 8).unwrap();
         assert_eq!(shared, 8);
         assert_eq!(p.session_len(2), Some(8), "sharer starts at the prefix length");
         assert_eq!(p.used_pages(), used_before, "no pages materialized yet");
@@ -1296,7 +1442,7 @@ mod tests {
     fn cow_fork_isolates_writers() {
         let (mut p, pin) = donor_with_pin(32);
         // sharer overwrites position 2 — inside the shared prefix
-        p.open_session_shared(2, 1, 12, pin, 8, 2).unwrap();
+        p.open_session_shared(2, 1, 1, 12, pin, 8, 2).unwrap();
         let epoch_before = p.table_epoch(2).unwrap();
         let forks = p.prepare_write(2, 2).unwrap();
         assert_eq!(forks, 2, "page 0 of both K and V runs forked");
@@ -1319,8 +1465,8 @@ mod tests {
     #[test]
     fn close_one_sharer_keeps_pages_alive() {
         let (mut p, pin) = donor_with_pin(32);
-        p.open_session_shared(2, 1, 12, pin, 8, 8).unwrap();
-        p.open_session_shared(3, 1, 12, pin, 8, 8).unwrap();
+        p.open_session_shared(2, 1, 1, 12, pin, 8, 8).unwrap();
+        p.open_session_shared(3, 1, 1, 12, pin, 8, 8).unwrap();
         // donor leaves mid-generation: shared pages must survive
         p.close_session(1);
         let mut dst = vec![0.0f32; 2 * 8 * 3];
@@ -1352,7 +1498,7 @@ mod tests {
             p.commit_len(1, 8);
             (p.pin_prefix(1, 8).unwrap(), ())
         };
-        p.open_session_shared(2, 1, 12, pin, 8, 8).unwrap();
+        p.open_session_shared(2, 1, 1, 12, pin, 8, 8).unwrap();
         p.close_session(7); // holes at 0..8, live pages above
         let epoch_before = p.table_epoch(2).unwrap();
         let moved = p.defrag();
@@ -1365,7 +1511,7 @@ mod tests {
         assert_eq!(dst[0], 5.0);
         assert!(p.table_epoch(2).unwrap() > epoch_before, "defrag bumps moved epochs");
         // a shared open against the (remapped) pin still works
-        p.open_session_shared(3, 1, 12, pin, 8, 8).unwrap();
+        p.open_session_shared(3, 1, 1, 12, pin, 8, 8).unwrap();
         p.gather_padded(3, 0, 0, 8, &mut dst).unwrap();
         assert_eq!(dst[0], 5.0);
     }
@@ -1376,7 +1522,7 @@ mod tests {
         // + sharer 2 marginal — the *sharer* has no fork budget, so its
         // write into the shared span still rejects in a full pool
         let (mut p, pin) = donor_with_pin(8);
-        p.open_session_shared(2, 1, 12, pin, 8, 8).unwrap();
+        p.open_session_shared(2, 1, 1, 12, pin, 8, 8).unwrap();
         p.prepare_write_range(2, 8, 11).unwrap(); // consumes the marginal pages
         // a write inside the shared span needs a fork beyond the budget
         let err = p.prepare_write(2, 0).unwrap_err();
@@ -1399,7 +1545,7 @@ mod tests {
     fn pinned_donor_first_divergent_decode_never_busy() {
         let (mut p, pin) = donor_with_pin(8);
         // a sharer's marginal reservation takes the last free pages
-        p.open_session_shared(2, 1, 12, pin, 8, 8).unwrap();
+        p.open_session_shared(2, 1, 1, 12, pin, 8, 8).unwrap();
         assert_eq!(p.free_pages(), 0, "pool fully spoken for");
         // donor appends its first divergent token at position 8
         p.prepare_write(1, 8).expect("fork budget must cover the first divergent write");
@@ -1434,7 +1580,7 @@ mod tests {
         // pinned original unchanged: a fresh sharer still sees the
         // donor's pre-fork bytes
         p.close_session(3);
-        p.open_session_shared(4, 1, 12, pin, 8, 8).unwrap();
+        p.open_session_shared(4, 1, 1, 12, pin, 8, 8).unwrap();
         let mut dst = vec![0.0f32; 2 * 8 * 3];
         p.gather_padded(4, 0, 0, 8, &mut dst).unwrap();
         assert_eq!(dst[0], 1.0, "sharer reads the pinned original");
@@ -1531,9 +1677,187 @@ mod tests {
     fn shared_reservation_released_on_close() {
         let (mut p, pin) = donor_with_pin(32);
         let free0 = p.free_pages();
-        p.open_session_shared(2, 1, 16, pin, 8, 8).unwrap();
+        p.open_session_shared(2, 1, 1, 16, pin, 8, 8).unwrap();
         p.prepare_write(2, 8).unwrap(); // one marginal page materialized
         p.close_session(2);
         assert_eq!(p.free_pages(), free0, "marginal pages + reservation fully returned");
+    }
+
+    // ---- multi-row sessions / ragged rows ---------------------------------
+
+    #[test]
+    fn multirow_shared_open_attaches_prefix_to_every_row() {
+        let (mut p, pin) = donor_with_pin(64);
+        let free_before = p.free_pages();
+        let shared = p.open_session_shared(2, 3, 1, 12, pin, 8, 8).unwrap();
+        assert_eq!(shared, 8);
+        assert_eq!(p.session_row_lens(2), Some(vec![8, 8, 8]));
+        // marginal charge scales per row: private_pages(3,1,8,12) = 6
+        assert_eq!(free_before - p.free_pages(), 6);
+        // every row reads the donor's prefix through the shared pages
+        let mut dst = vec![0.0f32; 3 * 2 * 8 * 3];
+        p.gather_padded(2, 0, 0, 8, &mut dst).unwrap();
+        for row in 0..3 {
+            assert_eq!(dst[row * 2 * 8 * 3], 1.0, "row {row} lost the prefix");
+        }
+        // prefix pages carry donor + pin + 3 rows worth of references
+        assert!(p.shared_pages() >= 4);
+    }
+
+    #[test]
+    fn multirow_rows_fork_independently_on_divergent_write() {
+        let (mut p, pin) = donor_with_pin(64);
+        p.open_session_shared(2, 3, 1, 16, pin, 8, 8).unwrap();
+        // only row 1 overwrites inside the shared span: exactly its K and
+        // V page fork, the other rows keep aliasing the pinned original
+        let forks = p.prepare_write_row(2, 1, 2, 2).unwrap();
+        assert_eq!(forks, 2, "one page per K/V half for the single row");
+        let col = vec![-5.0f32; 2 * 3];
+        p.write_column_row(2, 0, 0, 1, 2, &col).unwrap();
+        p.write_column_row(2, 0, 1, 1, 2, &col).unwrap();
+        let mut dst = vec![0.0f32; 3 * 2 * 8 * 3];
+        p.gather_padded(2, 0, 0, 8, &mut dst).unwrap();
+        let stride = 2 * 8 * 3;
+        assert_eq!(dst[stride + 2 * 3], -5.0, "row 1 sees its write");
+        assert_eq!(dst[2 * 3], 1.0 + 2.0, "row 0 still reads the donor bytes");
+        assert_eq!(dst[2 * stride + 2 * 3], 1.0 + 2.0, "row 2 still reads the donor bytes");
+        // the donor itself is untouched
+        p.gather_padded(1, 0, 0, 8, &mut dst[..stride]).unwrap();
+        assert_eq!(dst[2 * 3], 1.0 + 2.0);
+    }
+
+    #[test]
+    fn multirow_rows_advance_independently() {
+        let mut p = KvPool::new(cfg(64));
+        p.open_session(5, 3, 1, 16).unwrap();
+        p.prepare_write(5, 7).unwrap();
+        let w = kv_src(3, 2, 8, 3, 1.0);
+        p.write_prefill(5, 0, 0, &w, 8).unwrap();
+        // ragged prompts: rows hold 3, 5, 8 valid tokens after prefill
+        p.commit_row_lens(5, &[3, 5, 8]);
+        assert_eq!(p.session_row_lens(5), Some(vec![3, 5, 8]));
+        assert_eq!(p.session_len(5), Some(8), "uniform view = deepest row");
+        // each row decodes at its own position
+        for (row, pos) in [(0usize, 3usize), (1, 5), (2, 8)] {
+            p.prepare_write_row(5, row, pos, pos).unwrap();
+            let col = vec![90.0 + row as f32; 2 * 3];
+            p.write_column_row(5, 0, 0, row, pos, &col).unwrap();
+            p.commit_row_len(5, row, pos + 1);
+        }
+        assert_eq!(p.session_row_lens(5), Some(vec![4, 6, 9]));
+        // gather zero-pads each row past its OWN length
+        let cap = 12;
+        let mut dst = vec![7.0f32; 3 * 2 * cap * 3];
+        p.gather_padded(5, 0, 0, cap, &mut dst).unwrap();
+        let at = |row: usize, h: usize, t: usize| dst[((row * 2 + h) * cap + t) * 3];
+        assert_eq!(at(0, 0, 3), 90.0);
+        assert_eq!(at(0, 0, 4), 0.0, "row 0 padded past len 4");
+        assert_eq!(at(1, 0, 5), 91.0);
+        assert_eq!(at(1, 0, 7), 0.0, "row 1 padded past len 6");
+        assert_eq!(at(2, 0, 8), 92.0);
+        // row 2's prefill bytes are intact below its write position
+        assert_eq!(at(2, 0, 1), 1.0 + (2 * 1000 + 1) as f32);
+    }
+
+    /// The pool-level half of the ragged bitwise-determinism contract:
+    /// a multi-row ragged gather must be byte-identical, row for row, to
+    /// gathering the same data from independent single-row sessions.
+    #[test]
+    fn ragged_gather_matches_serial_single_row_sessions() {
+        let lens = [3usize, 6, 8];
+        let cap = 8;
+        let stride = 2 * cap * 3;
+        // fused: one 3-row session, per-row lens
+        let mut fused = KvPool::new(cfg(64));
+        fused.open_session(1, 3, 1, cap).unwrap();
+        fused.prepare_write(1, cap - 1).unwrap();
+        let w = kv_src(3, 2, cap, 3, 4.0);
+        fused.write_prefill(1, 0, 0, &w, cap).unwrap();
+        fused.commit_row_lens(1, &lens);
+        let mut got = vec![0.0f32; 3 * stride];
+        fused.gather_padded(1, 0, 0, cap, &mut got).unwrap();
+        // serial: three batch-1 sessions, one per row, same bytes
+        for (row, &len) in lens.iter().enumerate() {
+            let mut solo = KvPool::new(cfg(64));
+            solo.open_session(9, 1, 1, cap).unwrap();
+            solo.prepare_write(9, cap - 1).unwrap();
+            // row `row` of the fused source, re-laid-out as batch 1
+            let src = kv_src(3, 2, cap, 3, 4.0);
+            let row_src: Vec<f32> = src[row * 2 * cap * 3..(row + 1) * 2 * cap * 3].to_vec();
+            solo.write_prefill(9, 0, 0, &row_src, cap).unwrap();
+            solo.commit_len(9, len);
+            let mut want = vec![0.0f32; stride];
+            solo.gather_padded(9, 0, 0, cap, &mut want).unwrap();
+            assert_eq!(
+                &got[row * stride..(row + 1) * stride],
+                &want[..],
+                "fused row {row} != serial session"
+            );
+        }
+    }
+
+    #[test]
+    fn multirow_fork_under_fragmentation_rejected_then_recovers() {
+        // donor (4 pages) + pin grant (2) + 2-row sharer's marginal
+        // reservation (4 = 2 rows x 2 runs x 1 page): exactly 10 pages
+        let (mut p, pin) = donor_with_pin(10);
+        p.open_session_shared(2, 2, 1, 12, pin, 8, 8).unwrap();
+        p.prepare_write_row(2, 0, 8, 11).unwrap();
+        p.prepare_write_row(2, 1, 8, 11).unwrap(); // marginal budget spent
+        // a fork inside the shared span now needs pages beyond any budget
+        let err = p.prepare_write_row(2, 0, 0, 0).unwrap_err();
+        assert!(matches!(err, Error::Busy(_)), "{err}");
+        // closing the donor + unpinning returns real capacity, but the
+        // pages are STILL shared between the session's own two rows —
+        // row 0's write must fork against row 1
+        p.close_session(1);
+        p.unpin_prefix(pin);
+        let forks = p.prepare_write_row(2, 0, 0, 0).unwrap();
+        assert_eq!(forks, 2, "rows of one session CoW against each other");
+        // after row 0 forked away, row 1 is the pages' sole holder and
+        // writes in place
+        assert_eq!(p.prepare_write_row(2, 1, 0, 0).unwrap(), 0, "sole holder, no fork");
+    }
+
+    #[test]
+    fn defrag_remaps_multirow_shared_rows() {
+        let mut p = KvPool::new(cfg(64));
+        p.open_session(7, 1, 1, 16).unwrap();
+        p.prepare_write(7, 15).unwrap(); // filler at low ids
+        p.open_session(1, 1, 1, 8).unwrap();
+        p.prepare_write_range(1, 0, 7).unwrap();
+        let w = kv_src(1, 2, 8, 3, 6.0);
+        p.write_prefill(1, 0, 0, &w, 8).unwrap();
+        p.commit_len(1, 8);
+        let pin = p.pin_prefix(1, 8).unwrap();
+        p.open_session_shared(2, 2, 1, 12, pin, 8, 8).unwrap();
+        p.close_session(7); // holes below the live pages
+        let epoch_before = p.table_epoch(2).unwrap();
+        assert!(p.defrag() > 0);
+        assert!(p.table_epoch(2).unwrap() > epoch_before);
+        // both rows still read the (moved) prefix bytes
+        let mut dst = vec![0.0f32; 2 * 2 * 8 * 3];
+        p.gather_padded(2, 0, 0, 8, &mut dst).unwrap();
+        assert_eq!(dst[0], 6.0);
+        assert_eq!(dst[2 * 8 * 3], 6.0);
+        // and a post-defrag per-row fork still works
+        assert_eq!(p.prepare_write_row(2, 1, 0, 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn sweep_frees_multirow_session_keeps_pin() {
+        let (mut p, pin) = donor_with_pin(64);
+        p.open_session_shared(2, 3, 1, 12, pin, 8, 8).unwrap();
+        p.prepare_write_row(2, 0, 8, 8).unwrap(); // one row materialized a page
+        p.close_session(1);
+        for id in p.session_ids() {
+            p.close_session(id);
+        }
+        assert_eq!(p.n_sessions(), 0);
+        assert!(p.used_pages() > 0, "pinned prefix survives the sweep");
+        assert_eq!(p.pinned_prefixes(), 1);
+        assert!(p.unpin_prefix(pin));
+        assert_eq!(p.used_pages(), 0, "all rows' references released, nothing leaks");
+        assert_eq!(p.free_pages(), 64);
     }
 }

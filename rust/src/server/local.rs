@@ -177,6 +177,16 @@ impl ChainClient for LocalCluster {
         self.with_node(server, |n| n.step(session, cache_len, hidden))
     }
 
+    fn step_ragged(
+        &self,
+        server: NodeId,
+        session: u64,
+        row_lens: &[usize],
+        hidden: &Tensor,
+    ) -> Result<Tensor> {
+        self.with_node(server, |n| n.step_ragged(session, row_lens, hidden))
+    }
+
     fn close_session(&self, server: NodeId, session: u64) {
         let _ = self.with_node(server, |n| {
             n.close_session(session);

@@ -18,7 +18,12 @@
 //! - [`scheduler`] — the group-commit step scheduler that coalesces
 //!   decode steps from concurrent sessions into one fused executor call
 //!   per hosted span (gather active rows → single batched forward →
-//!   scatter results);
+//!   scatter results). Since the RAGGED refactor the group may mix cache
+//!   lengths: a per-row `cache_len` vector travels with every request,
+//!   mixed-depth groups run the `block_decode_ragged_*` artifacts (per-
+//!   row attention masks), and each row stays bitwise identical to its
+//!   serial execution (the kernels are batch-invariant by construction —
+//!   see python/compile/kernels/attention.py);
 //! - [`ServerNode`] — the request handlers tying all three to the
 //!   runtime.
 //!
@@ -130,8 +135,9 @@ impl Default for ServerOptions {
 struct StepLitCache {
     /// Pool page-table epoch the literals were captured under.
     epoch: u64,
-    /// Cache length the literals are valid for.
-    len: usize,
+    /// Per-row cache lengths the literals are valid for (one entry per
+    /// batch row; a ragged session's rows differ).
+    lens: Vec<usize>,
     /// Per hosted block: the artifact's updated K / V caches, refeedable.
     k: Vec<SendLit>,
     v: Vec<SendLit>,
@@ -361,6 +367,11 @@ impl ServerNode {
         match kind {
             "prefill" => format!("block_prefill{tag}_b{batch}_s{width}"),
             "decode" => format!("block_decode{tag}_b{batch}_c{}", self.geometry.max_seq),
+            // per-row cache_len vector — the fused entry behind ragged
+            // continuous batching (mixed decode depths in one call)
+            "decode_ragged" => {
+                format!("block_decode_ragged{tag}_b{batch}_c{}", self.geometry.max_seq)
+            }
             "bwd" => format!("block_bwd_b{batch}_s{width}"),
             _ => unreachable!(),
         }
@@ -388,6 +399,16 @@ impl ServerNode {
     /// pages; under pool pressure cold prefixes are evicted LRU-first
     /// before giving up with [`Error::Busy`].
     ///
+    /// Multi-row sessions share too (batch>1 prefix sharing): every row
+    /// attaches the matched span by reference and forks independently on
+    /// its first divergent write. A multi-row session declares the
+    /// COMMON leading tokens of its rows (the ragged API path sends the
+    /// rows' longest common prefix), so an exact trie match still only
+    /// covers the shared template — the full-hit prefill skip stays
+    /// batch-1 (the cached output is one row's; the other rows' suffixes
+    /// must run). Registration also stays batch-1 (pins snapshot one
+    /// row's pages).
+    ///
     /// Returns the number of token positions attached from the cache.
     pub fn open_session_with_prefix(
         &self,
@@ -401,10 +422,25 @@ impl ServerNode {
         let max_t = if max_tokens == 0 { cap } else { max_tokens.min(cap) };
         self.clear_session_trackers(session);
         let n_blocks = self.span_len();
-        let eligible = batch == 1 && !prefix_tokens.is_empty();
+        let eligible = !prefix_tokens.is_empty();
         let mut cache = self.prefix_cache.lock().unwrap();
         let hit = if eligible {
-            cache.lookup(prefix_tokens, prefill_width)
+            let mut h = cache.lookup(prefix_tokens, prefill_width);
+            if batch > 1 {
+                // a multi-row session can alias shared pages but not the
+                // cached batch-1 prefill output: degrade Full to the
+                // page-aligned partial attach
+                if let PrefixHit::Full { pin } = h {
+                    let pt = self.pool.lock().unwrap().config().page_tokens;
+                    let share = prefix_tokens.len() / pt * pt;
+                    h = if share == 0 {
+                        PrefixHit::Miss
+                    } else {
+                        PrefixHit::Partial { pin, shared_tokens: share, exact: true }
+                    };
+                }
+            }
+            h
         } else {
             PrefixHit::Miss
         };
@@ -416,7 +452,7 @@ impl ServerNode {
                     // diverges (CoW) from this session's prefix length
                     let (pin, share, wf) = (*pin, prefill_width, prefix_tokens.len());
                     Self::admit(&mut cache, &mut pool, Some(pin), |p| {
-                        p.open_session_shared(session, n_blocks, max_t, pin, share, wf)
+                        p.open_session_shared(session, batch, n_blocks, max_t, pin, share, wf)
                     })
                 }
                 PrefixHit::Partial { pin, shared_tokens, .. } => {
@@ -425,7 +461,7 @@ impl ServerNode {
                     let (pin, share) = (*pin, *shared_tokens);
                     let wf = share.min(prefix_tokens.len());
                     Self::admit(&mut cache, &mut pool, Some(pin), |p| {
-                        p.open_session_shared(session, n_blocks, max_t, pin, share, wf)
+                        p.open_session_shared(session, batch, n_blocks, max_t, pin, share, wf)
                     })
                 }
                 PrefixHit::Miss => Self::admit(&mut cache, &mut pool, None, |p| {
@@ -452,7 +488,9 @@ impl ServerNode {
                 PrefixHit::Full { pin } => {
                     self.full_hits.lock().unwrap().insert(session, pin);
                 }
-                PrefixHit::Partial { exact: false, .. } | PrefixHit::Miss if eligible => {
+                PrefixHit::Partial { exact: false, .. } | PrefixHit::Miss
+                    if eligible && batch == 1 =>
+                {
                     // register the (longer or unseen) prefix after prefill
                     self.pending_register
                         .lock()
@@ -621,12 +659,28 @@ impl ServerNode {
 
     /// One decode step: h [B,1,H] -> h [B,1,H]. The step enters the
     /// group-commit scheduler and may execute fused with other sessions'
-    /// concurrent steps (one batched forward per hosted span).
+    /// concurrent steps (one batched forward per hosted span) — since the
+    /// ragged refactor, even when the sessions sit at different cache
+    /// lengths.
     pub fn step(&self, session: u64, cache_len: usize, h: &Tensor) -> Result<Tensor> {
+        self.submit_step(StepRequest::uniform(session, cache_len, h.clone()))
+    }
+
+    /// A ragged decode step: `row_lens[r]` is row r's own cache length,
+    /// so one multi-prompt session advances rows at different depths in
+    /// one call (the wire-v5 `InferStepRagged` handler).
+    pub fn step_ragged(&self, session: u64, row_lens: &[usize], h: &Tensor) -> Result<Tensor> {
+        self.submit_step(StepRequest {
+            session,
+            row_lens: row_lens.to_vec(),
+            hidden: h.clone(),
+        })
+    }
+
+    fn submit_step(&self, req: StepRequest) -> Result<Tensor> {
         let t0 = std::time::Instant::now();
-        self.touch_session(session);
+        self.touch_session(req.session);
         self.active.fetch_add(1, Ordering::Relaxed);
-        let req = StepRequest { session, cache_len, hidden: h.clone() };
         let result = self.scheduler.submit(req, |reqs| self.step_batch(reqs));
         self.active.fetch_sub(1, Ordering::Relaxed);
         self.observe(t0);
@@ -634,10 +688,12 @@ impl ServerNode {
     }
 
     /// Execute a group of decode steps, fusing them into one batched
-    /// executor call when possible (uniform `cache_len`, distinct
-    /// sessions, and a compiled entry for the combined batch size);
-    /// otherwise each request runs through the same paged path alone.
-    /// Results align with `reqs` by index.
+    /// executor call when possible (distinct sessions and a compiled
+    /// entry for the combined batch size — mixed cache lengths run
+    /// through the ragged entry, uniform ones through the classic one);
+    /// when no fused entry covers the whole group, uniform-depth
+    /// sub-groups are fused and the rest run alone. Results align with
+    /// `reqs` by index.
     pub fn step_batch(&self, reqs: &[StepRequest]) -> Vec<Result<Tensor>> {
         if reqs.is_empty() {
             return Vec::new();
@@ -664,66 +720,120 @@ impl ServerNode {
                 }
             }
         }
-        if !ok_idx.is_empty() {
-            let group: Vec<&StepRequest> = ok_idx.iter().map(|&i| &reqs[i]).collect();
-            let uniform_len = group.windows(2).all(|w| w[0].cache_len == w[1].cache_len);
-            let distinct = group
-                .iter()
-                .enumerate()
-                .all(|(k, r)| group[..k].iter().all(|p| p.session != r.session));
-            let total_b: usize = group.iter().map(|r| r.hidden.shape[0]).sum();
-            let fusable = group.len() > 1
-                && uniform_len
-                && distinct
-                && self.runtime.has_entry(&self.entry_name("decode", total_b, 0));
-            if fusable {
+        for unit in self.plan_units(reqs, &ok_idx) {
+            let group: Vec<&StepRequest> = unit.iter().map(|&i| &reqs[i]).collect();
+            if group.len() > 1 {
+                let total_b: usize = group.iter().map(|r| r.hidden.shape[0]).sum();
                 self.metrics.batched_steps.inc();
                 self.metrics.fused_rows.add(total_b as u64);
-                match self.execute_span(&group) {
-                    Ok(outs) => {
-                        for (out, &i) in outs.into_iter().zip(&ok_idx) {
-                            results[i] = Some(out);
-                        }
-                    }
-                    Err(e) => {
-                        for &i in &ok_idx {
-                            results[i] = Some(Err(e.duplicate()));
-                        }
+                let mixed = {
+                    let mut lens = group.iter().flat_map(|r| r.row_lens.iter());
+                    let first = lens.next().copied();
+                    lens.any(|l| Some(*l) != first)
+                };
+                if mixed {
+                    self.metrics.ragged_steps.inc();
+                }
+            }
+            match self.execute_span(&group) {
+                Ok(outs) => {
+                    for (out, &i) in outs.into_iter().zip(&unit) {
+                        results[i] = Some(out);
                     }
                 }
-            } else {
-                for &i in &ok_idx {
-                    let single = [&reqs[i]];
-                    results[i] = Some(match self.execute_span(&single) {
-                        Ok(mut outs) => outs.pop().unwrap(),
-                        Err(e) => Err(e),
-                    });
+                Err(e) => {
+                    for &i in &unit {
+                        results[i] = Some(Err(e.duplicate()));
+                    }
                 }
             }
         }
         results.into_iter().map(|r| r.unwrap()).collect()
     }
 
+    /// Partition validated requests into execution units. Preference
+    /// order: the WHOLE group in one fused call (ragged entry when depths
+    /// mix, classic entry when uniform); else uniform-depth sub-groups
+    /// that have a compiled entry; else one unit per request.
+    fn plan_units(&self, reqs: &[StepRequest], ok_idx: &[usize]) -> Vec<Vec<usize>> {
+        if ok_idx.is_empty() {
+            return Vec::new();
+        }
+        if ok_idx.len() == 1 {
+            return vec![ok_idx.to_vec()];
+        }
+        let width =
+            |idxs: &[usize]| idxs.iter().map(|&i| reqs[i].hidden.shape[0]).sum::<usize>();
+        let distinct = |idxs: &[usize]| {
+            idxs.iter()
+                .enumerate()
+                .all(|(k, &i)| idxs[..k].iter().all(|&j| reqs[j].session != reqs[i].session))
+        };
+        let uniform = {
+            let mut lens = ok_idx.iter().flat_map(|&i| reqs[i].row_lens.iter());
+            let first = lens.next().copied();
+            lens.all(|l| Some(*l) == first)
+        };
+        let whole_entry = self.entry_name(
+            if uniform { "decode" } else { "decode_ragged" },
+            width(ok_idx),
+            0,
+        );
+        if distinct(ok_idx) && self.runtime.has_entry(&whole_entry) {
+            return vec![ok_idx.to_vec()];
+        }
+        // no fused entry at full width (or duplicate sessions): fall back
+        // to same-depth sub-groups — exactly the pre-ragged fusion rule
+        let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+        let mut singles: Vec<usize> = Vec::new();
+        for &i in ok_idx {
+            if reqs[i].is_uniform() && !reqs[i].row_lens.is_empty() {
+                let l = reqs[i].row_lens[0];
+                match groups.iter_mut().find(|(gl, idxs)| {
+                    *gl == l && idxs.iter().all(|&j| reqs[j].session != reqs[i].session)
+                }) {
+                    Some((_, idxs)) => idxs.push(i),
+                    None => groups.push((l, vec![i])),
+                }
+            } else {
+                singles.push(i);
+            }
+        }
+        let mut units: Vec<Vec<usize>> = Vec::new();
+        for (_, idxs) in groups {
+            if idxs.len() > 1 && self.runtime.has_entry(&self.entry_name("decode", width(&idxs), 0))
+            {
+                units.push(idxs);
+            } else {
+                singles.extend(idxs);
+            }
+        }
+        singles.sort_unstable(); // results align with request order
+        units.extend(singles.into_iter().map(|i| vec![i]));
+        units
+    }
+
     /// Per-request admission: session exists, batch matches, cache has
-    /// room, prefill happened, and the pool can address the new column —
-    /// including CoW-forking a shared page about to be overwritten, so a
-    /// sharer's first divergent write is budgeted before any compute.
+    /// room, prefill happened, and the pool can address every row's new
+    /// column — including CoW-forking a shared page about to be
+    /// overwritten, so a sharer's first divergent write is budgeted
+    /// before any compute. Each row prepares at its OWN position.
     /// Returns the number of forks performed.
     fn validate_step(pool: &mut KvPool, r: &StepRequest, cap: usize) -> Result<usize> {
         let b = pool
             .session_batch(r.session)
             .ok_or_else(|| Error::NotFound(format!("session {}", r.session)))?;
-        if r.hidden.shape[0] != b {
+        if r.hidden.shape[0] != b || r.row_lens.len() != b {
             return Err(Error::Shape(format!(
-                "session batch {b} != step batch {}",
-                r.hidden.shape[0]
+                "session batch {b} != step batch {} ({} row lens)",
+                r.hidden.shape[0],
+                r.row_lens.len()
             )));
         }
-        if r.cache_len + 1 > cap {
-            return Err(Error::Shape(format!(
-                "cache overflow: {} + 1 > {cap}",
-                r.cache_len
-            )));
+        for &l in &r.row_lens {
+            if l + 1 > cap {
+                return Err(Error::Shape(format!("cache overflow: {l} + 1 > {cap}")));
+            }
         }
         if pool.session_len(r.session).unwrap_or(0) == 0 {
             return Err(Error::Protocol(format!(
@@ -731,29 +841,44 @@ impl ServerNode {
                 r.session
             )));
         }
-        pool.prepare_write(r.session, r.cache_len)
+        let mut forks = 0;
+        for (row, &l) in r.row_lens.iter().enumerate() {
+            forks += pool.prepare_write_row(r.session, row, l, l)?;
+        }
+        Ok(forks)
     }
 
     /// Gather → one batched executor call per block → scatter. `group`
-    /// must be pre-validated and share one `cache_len`. The outer error
-    /// means the whole group failed *before* any cache write; inner
-    /// per-request errors can only come from the commit phase.
+    /// must be pre-validated. Uniform-depth groups run the classic
+    /// scalar-`cache_len` entry; mixed-depth groups run the
+    /// `decode_ragged` entry with a per-row length vector (per-row
+    /// attention masks keep each row's padding causally invisible, and
+    /// the batch-invariant kernels keep every row bitwise identical to
+    /// its serial execution). The outer error means the whole group
+    /// failed *before* any cache write; inner per-request errors can
+    /// only come from the commit phase.
     ///
     /// A lone request takes the fast path when its previous step's K/V
-    /// output literals are still warm and valid (`cache_len` advanced by
-    /// exactly one and the page-table epoch is unchanged): the pool
-    /// gather and the host→device upload are skipped and the artifact's
-    /// own cache outputs are refed — the ROADMAP's restored
-    /// single-session fast path. The pool still receives the new column,
-    /// so fused batches and prefix registration always see true state.
+    /// output literals are still warm and valid (every row's cache
+    /// length advanced by exactly one and the page-table epoch is
+    /// unchanged): the pool gather and the host→device upload are
+    /// skipped and the artifact's own cache outputs are refed — the
+    /// ROADMAP's restored single-session fast path, now keyed on the
+    /// per-row length vector so ragged sessions get it too. The pool
+    /// still receives the new columns, so fused batches and prefix
+    /// registration always see true state.
     fn execute_span(&self, group: &[&StepRequest]) -> Result<Vec<Result<Tensor>>> {
         let g = &self.geometry;
         let (hh, d, cap) = (g.n_heads, g.head_dim, g.max_seq);
         let n_span = self.span_len();
-        let cache_len = group[0].cache_len;
         let batches: Vec<usize> = group.iter().map(|r| r.hidden.shape[0]).collect();
         let total_b: usize = batches.iter().sum();
-        let ex = self.runtime.entry(&self.entry_name("decode", total_b, 0))?;
+        // flattened per-row cache lengths across the fused batch
+        let row_lens: Vec<usize> =
+            group.iter().flat_map(|r| r.row_lens.iter().copied()).collect();
+        let uniform = row_lens.windows(2).all(|w| w[0] == w[1]);
+        let kind = if uniform { "decode" } else { "decode_ragged" };
+        let ex = self.runtime.entry(&self.entry_name(kind, total_b, 0))?;
         let single = group.len() == 1;
         let sess0 = group[0].session;
         // try the warm literals (single-session fast path)
@@ -763,7 +888,7 @@ impl ServerNode {
             if let Some(e) = prev {
                 let valid = {
                     let pool = self.pool.lock().unwrap();
-                    e.len == cache_len && pool.table_epoch(sess0) == Some(e.epoch)
+                    e.lens == row_lens && pool.table_epoch(sess0) == Some(e.epoch)
                 };
                 if valid {
                     warm = Some(e); // stale entries are simply dropped
@@ -816,8 +941,15 @@ impl ServerNode {
         // one fused forward per block; new KV columns are staged and only
         // committed once the whole span succeeded
         let hs: Vec<&Tensor> = group.iter().map(|r| &r.hidden).collect();
-        let len_lit = Tensor::from_i32(&[1], &[cache_len as i32]).to_literal()?;
-        let mut h_lit = crate::runtime::Executor::fuse_rows(&hs)?;
+        let (mut h_lit, len_lit) = if uniform {
+            // classic entry: one position scalar for the whole batch
+            (
+                crate::runtime::Executor::fuse_rows(&hs)?,
+                Tensor::from_i32(&[1], &[row_lens[0] as i32]).to_literal()?,
+            )
+        } else {
+            crate::runtime::Executor::fuse_rows_ragged(&hs, &row_lens)?
+        };
         let mut staged_k: Vec<Vec<f32>> = Vec::with_capacity(n_span);
         let mut staged_v: Vec<Vec<f32>> = Vec::with_capacity(n_span);
         let mut new_k: Vec<SendLit> = Vec::new();
@@ -830,11 +962,12 @@ impl ServerNode {
             args.push(&len_lit);
             args.extend(lits.iter().map(|l| &l.0));
             let mut out = ex.call_literals(&args)?;
-            // out = (h_out, k', v'); only the column at cache_len changed
+            // out = (h_out, k', v'); only each row's column at its own
+            // cache length changed
             let v_new = out.pop().unwrap();
             let k_new = out.pop().unwrap();
-            staged_k.push(extract_column(&ex.output_tensor(&k_new, 1)?, hh, d, cache_len));
-            staged_v.push(extract_column(&ex.output_tensor(&v_new, 2)?, hh, d, cache_len));
+            staged_k.push(extract_columns(&ex.output_tensor(&k_new, 1)?, hh, d, &row_lens));
+            staged_v.push(extract_columns(&ex.output_tensor(&v_new, 2)?, hh, d, &row_lens));
             if single && self.step_lit_cap > 0 {
                 // keep the artifact's cache outputs warm for the next step
                 new_k.push(SendLit(k_new));
@@ -843,19 +976,37 @@ impl ServerNode {
             h_lit = out.pop().unwrap();
         }
         let h_out = ex.output_tensor(&h_lit, 0)?;
-        // commit: scatter the staged columns into each session's pages
+        // commit: scatter the staged columns into each session's pages,
+        // row by row at each row's own position
         let mut pool = self.pool.lock().unwrap();
         let mut outs = Vec::with_capacity(group.len());
         let mut row0 = 0;
         for (r, &b) in group.iter().zip(&batches) {
             let commit = (|| -> Result<Tensor> {
                 for bi in 0..n_span {
-                    let kc = &staged_k[bi][row0 * hh * d..(row0 + b) * hh * d];
-                    pool.write_column(r.session, bi, 0, cache_len, kc)?;
-                    let vc = &staged_v[bi][row0 * hh * d..(row0 + b) * hh * d];
-                    pool.write_column(r.session, bi, 1, cache_len, vc)?;
+                    for (row, &pos) in r.row_lens.iter().enumerate() {
+                        let off = (row0 + row) * hh * d;
+                        pool.write_column_row(
+                            r.session,
+                            bi,
+                            0,
+                            row,
+                            pos,
+                            &staged_k[bi][off..off + hh * d],
+                        )?;
+                        pool.write_column_row(
+                            r.session,
+                            bi,
+                            1,
+                            row,
+                            pos,
+                            &staged_v[bi][off..off + hh * d],
+                        )?;
+                    }
                 }
-                pool.commit_len(r.session, cache_len + 1);
+                for (row, &pos) in r.row_lens.iter().enumerate() {
+                    pool.commit_row_len(r.session, row, pos + 1);
+                }
                 h_out.slice_rows(row0, b)
             })();
             outs.push(commit);
@@ -868,10 +1019,11 @@ impl ServerNode {
         if single && self.step_lit_cap > 0 && outs[0].is_ok() {
             if let Some(epoch) = pool.table_epoch(sess0) {
                 let tick = self.lit_tick.fetch_add(1, Ordering::Relaxed);
+                let next_lens: Vec<usize> = row_lens.iter().map(|&l| l + 1).collect();
                 let mut lits = self.step_lits.lock().unwrap();
                 lits.insert(
                     sess0,
-                    StepLitCache { epoch, len: cache_len + 1, k: new_k, v: new_v, tick },
+                    StepLitCache { epoch, lens: next_lens, k: new_k, v: new_v, tick },
                 );
                 while lits.len() > self.step_lit_cap {
                     let oldest = lits.iter().min_by_key(|(_, e)| e.tick).map(|(s, _)| *s);
@@ -1027,6 +1179,13 @@ impl ServerNode {
                 };
                 reply(self.step(*session, *cache_len as usize, &t), self.compress)
             }
+            Message::InferStepRagged { session, cache_lens, hidden } => {
+                let Some(t) = hidden.to_tensor() else {
+                    return Message::Error { message: "bad tensor".into() };
+                };
+                let lens: Vec<usize> = cache_lens.iter().map(|&l| l as usize).collect();
+                reply(self.step_ragged(*session, &lens, &t), self.compress)
+            }
             Message::Forward { hidden } => {
                 let Some(t) = hidden.to_tensor() else {
                     return Message::Error { message: "bad tensor".into() };
@@ -1048,14 +1207,16 @@ impl ServerNode {
     }
 }
 
-/// Pull one token column out of an updated cache `[R, Hh, C, D]` at
-/// position `pos`, as `[R, Hh, D]` floats — the only slice a decode step
-/// actually changed, and all that gets scattered back into the pool.
-fn extract_column(t: &Tensor, hh: usize, d: usize, pos: usize) -> Vec<f32> {
+/// Pull each row's token column out of an updated cache `[R, Hh, C, D]`
+/// at that ROW's own position (`lens[r]`), as `[R, Hh, D]` floats — the
+/// only slices a (possibly ragged) decode step actually changed, and all
+/// that gets scattered back into the pool.
+fn extract_columns(t: &Tensor, hh: usize, d: usize, lens: &[usize]) -> Vec<f32> {
     let (rows, cap) = (t.shape[0], t.shape[2]);
+    debug_assert_eq!(rows, lens.len());
     let src = t.as_f32();
     let mut col = vec![0.0f32; rows * hh * d];
-    for r in 0..rows {
+    for (r, &pos) in lens.iter().enumerate().take(rows) {
         for h in 0..hh {
             let s = ((r * hh + h) * cap + pos) * d;
             let o = (r * hh + h) * d;
@@ -1168,8 +1329,8 @@ mod tests {
         a.prefill(1, &h0).unwrap();
         a.prefill(2, &h0).unwrap();
         let reqs = [
-            StepRequest { session: 1, cache_len: 8, hidden: h_step.clone() },
-            StepRequest { session: 2, cache_len: 8, hidden: h_step.clone() },
+            StepRequest::uniform(1, 8, h_step.clone()),
+            StepRequest::uniform(2, 8, h_step.clone()),
         ];
         let outs = a.step_batch(&reqs);
         let o1 = outs[0].as_ref().unwrap();
@@ -1184,12 +1345,70 @@ mod tests {
 
         // a second step must also agree: caches advanced identically
         let outs2 = a.step_batch(&[
-            StepRequest { session: 1, cache_len: 9, hidden: h_step.clone() },
-            StepRequest { session: 2, cache_len: 9, hidden: h_step.clone() },
+            StepRequest::uniform(1, 9, h_step.clone()),
+            StepRequest::uniform(2, 9, h_step.clone()),
         ]);
         let o_ref2 = b.step(9, 9, &h_step).unwrap();
         assert_eq!(outs2[0].as_ref().unwrap().max_abs_diff(&o_ref2), 0.0);
         assert_eq!(outs2[1].as_ref().unwrap().max_abs_diff(&o_ref2), 0.0);
+    }
+
+    /// THE ragged acceptance test: a fused step over sessions at
+    /// DISTINCT cache lengths (through the `block_decode_ragged_b8`
+    /// artifact) must be bitwise identical to stepping each session
+    /// serially on an untouched server — padding and neighbor rows are
+    /// causally invisible, and the batch-invariant kernels keep every
+    /// row's arithmetic exactly its solo arithmetic.
+    #[test]
+    fn ragged_fused_steps_bitwise_match_serial() {
+        let home = test_home();
+        let g = home.geometry().clone();
+        let rt = Arc::new(
+            Runtime::load_filtered(&home, |n| {
+                n.contains("_b1_") || n.ends_with("_b1") || n.contains("_b8_")
+            })
+            .unwrap(),
+        );
+        let a = ServerNode::start("rag", &home, rt.clone(), 0..g.n_layers, Precision::F16, false)
+            .unwrap();
+        let b = ServerNode::start("ser", &home, rt, 0..g.n_layers, Precision::F16, false).unwrap();
+        let (h0, h_step) = random_hidden(&g, 128, 55);
+        // 8 sessions, session s advanced to depth 128 + (s-1) on BOTH
+        // servers, so the fused group genuinely mixes cache lengths
+        for s in 1..=8u64 {
+            for node in [&a, &b] {
+                node.open_session(s, 1, 0).unwrap();
+                node.prefill(s, &h0).unwrap();
+            }
+            for extra in 0..(s - 1) as usize {
+                a.step(s, 128 + extra, &h_step).unwrap();
+                b.step(s, 128 + extra, &h_step).unwrap();
+            }
+        }
+        let depth = |s: u64| 128 + (s - 1) as usize;
+        let reqs: Vec<StepRequest> =
+            (1..=8u64).map(|s| StepRequest::uniform(s, depth(s), h_step.clone())).collect();
+        let outs = a.step_batch(&reqs);
+        assert_eq!(a.metrics.ragged_steps.get(), 1, "mixed-depth group must fuse ragged");
+        assert_eq!(a.metrics.fused_rows.get(), 8);
+        for (i, s) in (1..=8u64).enumerate() {
+            let want = b.step(s, depth(s), &h_step).unwrap();
+            let got = outs[i].as_ref().unwrap();
+            assert_eq!(got.max_abs_diff(&want), 0.0, "session {s} diverged in the ragged batch");
+        }
+        // the caches advanced per-row: a second fused round must agree too
+        let reqs2: Vec<StepRequest> =
+            (1..=8u64).map(|s| StepRequest::uniform(s, depth(s) + 1, h_step.clone())).collect();
+        let outs2 = a.step_batch(&reqs2);
+        assert_eq!(a.metrics.ragged_steps.get(), 2);
+        for (i, s) in (1..=8u64).enumerate() {
+            let want = b.step(s, depth(s) + 1, &h_step).unwrap();
+            assert_eq!(
+                outs2[i].as_ref().unwrap().max_abs_diff(&want),
+                0.0,
+                "session {s} diverged on the second ragged round"
+            );
+        }
     }
 
     /// Regression: the seed took cache literals out of the session before

@@ -16,8 +16,13 @@
 //!    is active, becomes the **leader**.
 //! 2. The leader waits up to `window` for more arrivals (bounded by
 //!    `max_width` fused rows), then drains the longest *compatible* run:
-//!    requests with the same `cache_len` (the decode artifact takes one
-//!    position scalar for the whole batch) and pairwise-distinct sessions.
+//!    pairwise-distinct sessions. Since the ragged-batching refactor a
+//!    group may MIX cache lengths — each request carries its per-row
+//!    `row_lens` vector and the ragged decode artifact applies a per-row
+//!    attention mask — so near-full batch occupancy no longer depends on
+//!    sessions happening to be at the same decode depth (the old
+//!    same-`cache_len` gate, which at depth-uniform odds of ~1/len left
+//!    most arrivals running alone).
 //! 3. The leader executes the whole group via the caller-provided closure
 //!    (one gathered executor call in [`crate::server::ServerNode`]),
 //!    publishes per-ticket results, steps down, and wakes everyone.
@@ -45,10 +50,27 @@ use std::time::{Duration, Instant};
 #[derive(Debug, Clone)]
 pub struct StepRequest {
     pub session: u64,
-    /// Tokens already in the cache (the artifact's position scalar).
-    pub cache_len: usize,
+    /// Tokens already in the cache, PER ROW of this session's batch
+    /// (`row_lens.len() == hidden.shape[0]`). Uniform sessions carry the
+    /// same value in every slot; a ragged multi-prompt session's rows sit
+    /// at different depths.
+    pub row_lens: Vec<usize>,
     /// Hidden states `[B, 1, H]` for this session's rows.
     pub hidden: Tensor,
+}
+
+impl StepRequest {
+    /// Convenience for the (common) uniform case: every row at
+    /// `cache_len`.
+    pub fn uniform(session: u64, cache_len: usize, hidden: Tensor) -> Self {
+        let rows = hidden.shape.first().copied().unwrap_or(1);
+        StepRequest { session, row_lens: vec![cache_len; rows], hidden }
+    }
+
+    /// Whether every row sits at the same depth.
+    pub fn is_uniform(&self) -> bool {
+        self.row_lens.windows(2).all(|w| w[0] == w[1])
+    }
 }
 
 struct SchedState {
@@ -155,21 +177,22 @@ impl StepScheduler {
         }
     }
 
-    /// Drain the head-compatible group: same `cache_len` as the oldest
-    /// queued request, pairwise-distinct sessions, up to `max_width`.
+    /// Drain the head-compatible group: pairwise-distinct sessions, up
+    /// to `max_width`. Cache lengths may differ — the executor runs
+    /// mixed-depth groups through the ragged decode artifact (and falls
+    /// back to uniform sub-groups where no ragged entry is compiled).
     /// Returned sorted by session id for order-independent arithmetic.
     fn take_compatible(
         queue: &mut VecDeque<(u64, StepRequest)>,
         max_width: usize,
     ) -> Vec<(u64, StepRequest)> {
-        let Some(key_len) = queue.front().map(|(_, r)| r.cache_len) else {
+        if queue.is_empty() {
             return Vec::new();
-        };
+        }
         let mut batch: Vec<(u64, StepRequest)> = Vec::new();
         let mut rest: VecDeque<(u64, StepRequest)> = VecDeque::new();
         while let Some((t, r)) = queue.pop_front() {
             let compatible = batch.len() < max_width
-                && r.cache_len == key_len
                 && batch.iter().all(|(_, b)| b.session != r.session);
             if compatible {
                 batch.push((t, r));
@@ -191,7 +214,7 @@ mod tests {
     use std::sync::Arc;
 
     fn req(session: u64, cache_len: usize, v: f32) -> StepRequest {
-        StepRequest { session, cache_len, hidden: Tensor::from_f32(&[1, 1, 2], &[v, v]) }
+        StepRequest::uniform(session, cache_len, Tensor::from_f32(&[1, 1, 2], &[v, v]))
     }
 
     /// Echo executor: adds 1.0 to each request's hidden, tagging results
@@ -246,26 +269,49 @@ mod tests {
     }
 
     #[test]
-    fn mixed_cache_lens_split_into_groups() {
+    fn mixed_cache_lens_fuse_into_one_group() {
+        // the ragged contract: distinct sessions at DIFFERENT depths are
+        // co-batchable; results still route to the right callers
         let s = Arc::new(StepScheduler::new(Duration::from_millis(30), 8));
+        let widths = Arc::new(Mutex::new(Vec::new()));
         let mut handles = Vec::new();
         for c in 0..6u64 {
             let s = s.clone();
-            let len = if c % 2 == 0 { 10 } else { 20 };
+            let widths = widths.clone();
+            let len = 10 + c as usize * 3; // all depths distinct
             handles.push(std::thread::spawn(move || {
                 let out = s
-                    .submit(req(c, len, 0.0), |reqs| {
-                        // a fused group never mixes cache lengths
-                        assert!(reqs.windows(2).all(|w| w[0].cache_len == w[1].cache_len));
+                    .submit(req(c, len, c as f32), move |reqs| {
+                        widths.lock().unwrap().push(reqs.len());
+                        assert!(reqs.windows(2).all(|w| w[0].session < w[1].session));
                         echo(reqs)
                     })
                     .unwrap();
-                assert_eq!(out.as_f32()[0], 1.0);
+                assert_eq!(out.as_f32()[0], c as f32 + 1.0);
             }));
         }
         for h in handles {
             h.join().unwrap();
         }
+        // mixed depths never force singleton groups anymore
+        let w = widths.lock().unwrap();
+        assert_eq!(w.iter().sum::<usize>(), 6);
+    }
+
+    #[test]
+    fn mixed_lens_take_compatible_fuses() {
+        let mut q: VecDeque<(u64, StepRequest)> = VecDeque::new();
+        q.push_back((0, req(3, 10, 0.0)));
+        q.push_back((1, req(1, 25, 0.0)));
+        q.push_back((2, req(2, 7, 0.0)));
+        let batch = StepScheduler::take_compatible(&mut q, 8);
+        assert_eq!(batch.len(), 3, "different cache lengths fuse");
+        assert_eq!(
+            batch.iter().map(|(_, r)| r.session).collect::<Vec<_>>(),
+            vec![1, 2, 3],
+            "sorted by session"
+        );
+        assert!(q.is_empty());
     }
 
     #[test]

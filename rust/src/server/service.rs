@@ -365,6 +365,30 @@ impl ChainClient for TcpSwarm {
         Self::expect_hidden(self.call(server, &msg)?)
     }
 
+    fn step_ragged(
+        &self,
+        server: NodeId,
+        session: u64,
+        row_lens: &[usize],
+        hidden: &Tensor,
+    ) -> Result<Tensor> {
+        // uniform batches travel as the classic frame — every wire
+        // version serves them; only genuinely mixed depths need the v5
+        // tag (a legacy server drops the connection on it, which the
+        // session layer treats as a retryable chain break)
+        if let Some(&l) = row_lens.first() {
+            if row_lens.iter().all(|&x| x == l) {
+                return self.step(server, session, l, hidden);
+            }
+        }
+        let msg = Message::InferStepRagged {
+            session,
+            cache_lens: row_lens.iter().map(|&l| l as u32).collect(),
+            hidden: TensorPayload::compressed(hidden),
+        };
+        Self::expect_hidden(self.call(server, &msg)?)
+    }
+
     fn close_session(&self, server: NodeId, session: u64) {
         let _ = self.call(server, &Message::CloseSession { session });
     }

@@ -279,6 +279,62 @@ mod tests {
         );
     }
 
+    /// ROADMAP satellite: bucket-refresh lookups on a timer keep a
+    /// long-idle node routable through churn. A client whose table was
+    /// populated long ago refreshes its stale buckets (learning the
+    /// CURRENT swarm members); when every originally-known peer then
+    /// dies, it still resolves fresh records. A control client with the
+    /// identical starting table and no refresh is stranded.
+    #[test]
+    fn bucket_refresh_keeps_long_idle_node_resolving_after_churn() {
+        use crate::dht::refresh_stale_buckets;
+        use std::sync::Mutex;
+
+        let (net, ids) = SimDhtNet::build(48, 13, 0.05);
+        let mut rng = Rng::new(99);
+        let me = NodeId::random(&mut rng);
+        // both clients knew the same 5 peers, at t=0
+        let known: Vec<NodeId> = ids[5..10].to_vec();
+        let refreshed = Mutex::new(RoutingTable::new(me));
+        let control = Mutex::new(RoutingTable::new(me));
+        for &p in &known {
+            refreshed.lock().unwrap().insert_at(p, 0, |_| true);
+            control.lock().unwrap().insert_at(p, 0, |_| true);
+        }
+        // the refreshed client's maintenance timer fires while its old
+        // peers are still alive: stale buckets (idle > 60 s) get lookups
+        net.advance_s(120.0);
+        let now = net.now_ms();
+        let n = refresh_stale_buckets(&net, &refreshed, now, 60_000, 256);
+        assert!(n > 0, "idle buckets must be refresh candidates");
+        let grown = refreshed.lock().unwrap().len();
+        assert!(grown > known.len(), "refresh must learn current swarm members");
+
+        // churn: every originally-known peer dies, then a fresh record
+        // is published on the surviving swarm
+        for &p in &known {
+            net.kill(p);
+        }
+        let key = NodeId::from_name("bloom/block/9");
+        net.publish(ids[20], &[ids[0]], key, b"srv".to_vec(), 600_000);
+
+        // the control client's whole world view is dead: unresolvable
+        let control_seeds = control.lock().unwrap().closest(key, K);
+        assert_eq!(
+            net.measure_lookup(&control_seeds, key).found,
+            0,
+            "control (no refresh) must be stranded — all its seeds died"
+        );
+        // the refreshed client routes through the peers it learned
+        let seeds = refreshed.lock().unwrap().closest(key, K);
+        assert!(
+            net.measure_lookup(&seeds, key).found >= 1,
+            "refreshed client must still resolve after churn"
+        );
+        // a second refresh with everything fresh is a no-op
+        assert_eq!(refresh_stale_buckets(&net, &refreshed, net.now_ms(), 600_000, 256), 0);
+    }
+
     #[test]
     fn churn_expiry_and_republish_converge() {
         let (net, ids) = SimDhtNet::build(48, 3, 0.05);

@@ -43,6 +43,10 @@ pub struct SimServer {
     /// Rows in the decode batch currently in flight (continuous-batching
     /// mode only; resets when the server goes idle).
     pub batch_width_now: usize,
+    /// Depth class (cache length) of the in-flight batch — what the
+    /// pre-ragged scheduler gated joins on (`None` = prefill/forward
+    /// pass, never depth-gated).
+    pub batch_class: Option<u64>,
     /// Physical-GPU group; virtual servers on one card share compute.
     pub gpu_group: usize,
     pub alive: bool,
@@ -66,8 +70,19 @@ pub struct SwarmSim {
     pub continuous_batching: bool,
     /// Max rows fused per simulated decode batch.
     pub max_batch_width: usize,
+    /// Model the PRE-ragged scheduler: a decode step may only join an
+    /// in-flight batch whose rows sit at the SAME cache depth (the old
+    /// same-`cache_len` fusion gate). False (the default) models the
+    /// ragged scheduler: any distinct session joins regardless of depth.
+    /// Only meaningful with [`Self::continuous_batching`] on.
+    pub uniform_depth_gate: bool,
     /// Requests that joined an in-flight batch (diagnostics).
     pub batched_joins: usize,
+    /// Decode step-hops that joined an in-flight batch (the numerator of
+    /// [`Self::decode_occupancy`]).
+    pub decode_joins: usize,
+    /// Total decode step-hops offered to batched servers.
+    pub decode_step_hops: usize,
     /// Model server-side shared-prefix caching: the first prefill of a
     /// prompt template on a server pays the full prefix compute and
     /// registers it; every later prefill of the same template on that
@@ -116,6 +131,25 @@ pub struct SharedMixReport {
     pub mean_ttft_s: f64,
     /// Prefills served from a warm template across all servers.
     pub prefix_hits: usize,
+}
+
+/// Result of a mixed-length arrival mix
+/// ([`SwarmSim::run_inference_ragged_mix`]) — the numbers
+/// `BENCH_ragged.json` tracks on the CI bench trajectory.
+#[derive(Debug, Clone)]
+pub struct RaggedMixReport {
+    /// Per-client steady-state decode steps/s.
+    pub per_client: Vec<f64>,
+    /// Sum of per-client rates — the swarm's aggregate decode rate.
+    pub aggregate_steps_per_s: f64,
+    /// Share of decode step-hops that joined an in-flight fused batch
+    /// ([`SwarmSim::decode_occupancy`]).
+    pub occupancy: f64,
+    /// Median seconds from a client's arrival to its first decoded
+    /// token.
+    pub p50_ttft_s: f64,
+    /// Raw decode joins (diagnostics).
+    pub decode_joins: usize,
 }
 
 /// KV pages one session costs under the paged pool: the full cost of a
@@ -173,6 +207,7 @@ impl SwarmSim {
                 span,
                 busy_until: 0.0,
                 batch_width_now: 0,
+                batch_class: None,
                 gpu_group,
                 alive: true,
             });
@@ -182,7 +217,10 @@ impl SwarmSim {
             servers,
             continuous_batching: false,
             max_batch_width: 8,
+            uniform_depth_gate: false,
             batched_joins: 0,
+            decode_joins: 0,
+            decode_step_hops: 0,
             prefix_cache: false,
             prefix_hits: 0,
             group_busy: Default::default(),
@@ -282,9 +320,16 @@ impl SwarmSim {
     ///   each request holds a group-wide "bandwidth token" for
     ///   GROUP_SHARE of its compute time (decode is memory-bound, but
     ///   MIG-style partitions overlap compute with each other).
-    fn occupy(&mut self, id: NodeId, arrive: f64, compute: f64, client: usize) -> f64 {
+    fn occupy(
+        &mut self,
+        id: NodeId,
+        arrive: f64,
+        compute: f64,
+        client: usize,
+        class: Option<u64>,
+    ) -> f64 {
         if self.continuous_batching {
-            return self.occupy_batched(id, arrive, compute, client);
+            return self.occupy_batched(id, arrive, compute, client, class);
         }
         // A request's memory streaming overlaps other requests' compute
         // (CUDA streams / DMA vs ALU): a server admits the next request
@@ -340,19 +385,33 @@ impl SwarmSim {
     /// opens a new batch — subject to the SAME processor-sharing
     /// inflation as the serial model, so batched-vs-serial comparisons
     /// isolate the batching effect rather than dropping contention
-    /// physics.
-    fn occupy_batched(&mut self, id: NodeId, arrive: f64, compute: f64, client: usize) -> f64 {
+    /// physics. With [`Self::uniform_depth_gate`] on, a decode step may
+    /// only join a batch of its own depth class — the pre-ragged
+    /// scheduler, whose joins collapse as soon as clients desynchronize.
+    fn occupy_batched(
+        &mut self,
+        id: NodeId,
+        arrive: f64,
+        compute: f64,
+        client: usize,
+        class: Option<u64>,
+    ) -> f64 {
         /// Marginal cost of one extra fused row, as a fraction of the
         /// full-batch pass (per-row math + KV read vs the weight stream).
         const BATCH_MARGINAL: f64 = 0.07;
         const PS_ALPHA: f64 = 0.02;
         const PS_WINDOW: f64 = 1.0;
         let max_w = self.max_batch_width;
-        let (group, own_busy, width) = {
+        let (group, own_busy, width, in_flight_class) = {
             let s = self.servers.iter().find(|s| s.id == id).unwrap();
-            (s.gpu_group, s.busy_until, s.batch_width_now)
+            (s.gpu_group, s.busy_until, s.batch_width_now, s.batch_class)
         };
-        if arrive < own_busy && width > 0 && width < max_w {
+        if class.is_some() {
+            self.decode_step_hops += 1;
+        }
+        let depth_ok =
+            !self.uniform_depth_gate || class.is_none() || in_flight_class == class;
+        if arrive < own_busy && width > 0 && width < max_w && depth_ok {
             // join the batch already streaming weights; fused rows share
             // the pass, so no extra PS tax beyond the marginal cost
             let done = own_busy + compute * BATCH_MARGINAL;
@@ -360,11 +419,14 @@ impl SwarmSim {
             s.busy_until = done;
             s.batch_width_now += 1;
             self.batched_joins += 1;
+            if class.is_some() {
+                self.decode_joins += 1;
+            }
             return done;
         }
-        // idle (or width-capped) server: full pass, new batch. Co-located
-        // traffic on the physical card still inflates the pass exactly as
-        // in the serial model.
+        // idle (or width-capped or depth-incompatible) server: full pass,
+        // new batch. Co-located traffic on the physical card still
+        // inflates the pass exactly as in the serial model.
         let claims = self.group_claims.entry(group).or_default();
         while claims.front().map(|&(t, _)| t < arrive - PS_WINDOW).unwrap_or(false) {
             claims.pop_front();
@@ -384,12 +446,23 @@ impl SwarmSim {
             let s = self.server_by_id(id);
             s.busy_until = done;
             s.batch_width_now = 1;
+            s.batch_class = class;
         }
         if !solo {
             // fused batches still hold the physical card's bandwidth token
             self.group_busy.insert(group, start + compute * 0.33);
         }
         done
+    }
+
+    /// Share of decode step-hops that rode an in-flight fused batch —
+    /// the sim's batch-occupancy figure for the bench trajectory.
+    pub fn decode_occupancy(&self) -> f64 {
+        if self.decode_step_hops == 0 {
+            0.0
+        } else {
+            self.decode_joins as f64 / self.decode_step_hops as f64
+        }
     }
 
     /// One client generating `n_steps` tokens after a `prefix_len`
@@ -425,7 +498,7 @@ impl SwarmSim {
             };
             let j = self.jitter(net_msg);
             t += net_msg + j;
-            t = self.occupy(sid, t, compute, 0);
+            t = self.occupy(sid, t, compute, 0, None);
         }
         let prefill_done = t;
         // decode steps
@@ -455,7 +528,7 @@ impl SwarmSim {
                 };
                 let j = self.jitter(net_msg);
                 t += net_msg + j;
-                t = self.occupy(sid, t, compute, 0);
+                t = self.occupy(sid, t, compute, 0, Some((prefix_len + step) as u64));
             }
             // return leg to the client
             let last = chain.last().unwrap();
@@ -483,6 +556,7 @@ impl SwarmSim {
         for s in &mut self.servers {
             s.busy_until = 0.0;
             s.batch_width_now = 0;
+            s.batch_class = None;
         }
         let (prefill_done, wall) = self.run_inference_from(&chain, 0.0, prefix_len, n_steps, batch);
         Some(InferenceReport {
@@ -532,6 +606,7 @@ impl SwarmSim {
         for s in &mut self.servers {
             s.busy_until = 0.0;
             s.batch_width_now = 0;
+            s.batch_class = None;
         }
         self.group_busy.clear();
         self.group_claims.clear();
@@ -589,7 +664,12 @@ impl SwarmSim {
                 }
             };
             let arrive = clock[c] + net_msg * (1.0 + 0.1 * self.rng.f64());
-            clock[c] = self.occupy(sid, arrive, compute, c);
+            let class = if is_prefill {
+                None
+            } else {
+                Some((prefix_len + step[c] - 1) as u64)
+            };
+            clock[c] = self.occupy(sid, arrive, compute, c, class);
             hop[c] += 1;
             if hop[c] == n_hops {
                 let last = self
@@ -617,6 +697,117 @@ impl SwarmSim {
             .sum::<f64>()
             / n_clients as f64;
         Some(SharedMixReport { per_client, mean_ttft_s, prefix_hits: hits })
+    }
+
+    /// Mixed-length arrival mix — the ragged-batching workload: client
+    /// `c` sends a `prefix_lens[c]`-token prompt, so clients prefill for
+    /// different durations, desynchronize, and sit at DIFFERENT cache
+    /// depths for the whole decode phase. Under
+    /// [`Self::uniform_depth_gate`] (the pre-ragged scheduler) almost no
+    /// step can join an in-flight batch; with the gate off (ragged
+    /// scheduler) any distinct session joins — the occupancy and
+    /// aggregate-throughput delta between the two is exactly what
+    /// `BENCH_ragged.json` tracks.
+    pub fn run_inference_ragged_mix(
+        &mut self,
+        prefix_lens: &[usize],
+        n_steps: usize,
+    ) -> Option<RaggedMixReport> {
+        let n_clients = prefix_lens.len();
+        if n_clients == 0 {
+            return None;
+        }
+        for s in &mut self.servers {
+            s.busy_until = 0.0;
+            s.batch_width_now = 0;
+            s.batch_class = None;
+        }
+        self.group_busy.clear();
+        self.group_claims.clear();
+        self.decode_joins = 0;
+        self.decode_step_hops = 0;
+        let chain = self.route(1)?;
+        let msg = step_msg_bytes(&self.profile, 1);
+        let hidden = self.profile.hidden;
+        let n_hops = chain.len();
+
+        let mut clock: Vec<f64> = (0..n_clients)
+            .map(|c| c as f64 * 0.001 + self.rng.f64() * 2.0)
+            .collect();
+        let arrival = clock.clone();
+        let mut step = vec![0usize; n_clients]; // 0 = prefill
+        let mut hop = vec![0usize; n_clients];
+        let mut decode_start = vec![0.0f64; n_clients];
+        let mut done_at = vec![0.0f64; n_clients];
+
+        loop {
+            let Some(c) = (0..n_clients)
+                .filter(|&c| step[c] <= n_steps)
+                .min_by(|&a, &b| clock[a].total_cmp(&clock[b]))
+            else {
+                break;
+            };
+            let plen = prefix_lens[c];
+            let h = &chain[hop[c]];
+            let sid = h.server;
+            let is_prefill = step[c] == 0;
+            let (net_msg, compute) = {
+                let s = self.servers.iter().find(|s| s.id == sid).unwrap();
+                let net = s.net(&self.profile.default_net);
+                let d = &s.spec.device;
+                let n = h.end - h.start;
+                if is_prefill {
+                    (
+                        net.message_s(msg * plen as u64),
+                        d.forward_time(n, plen, self.profile.flops_per_token_block),
+                    )
+                } else {
+                    let kv_bytes = (plen + step[c] - 1) as f64 * 4.0 * hidden as f64;
+                    (
+                        net.message_s(msg),
+                        d.decode_time(n, self.profile.bytes_per_block, 1)
+                            + n as f64 * kv_bytes / d.mem_bw,
+                    )
+                }
+            };
+            let arrive = clock[c] + net_msg * (1.0 + 0.1 * self.rng.f64());
+            let class = if is_prefill {
+                None
+            } else {
+                Some((plen + step[c] - 1) as u64)
+            };
+            clock[c] = self.occupy(sid, arrive, compute, c, class);
+            hop[c] += 1;
+            if hop[c] == n_hops {
+                let last = self
+                    .servers
+                    .iter()
+                    .find(|s| s.id == chain[n_hops - 1].server)
+                    .unwrap();
+                clock[c] += last.net(&self.profile.default_net).message_s(msg);
+                if is_prefill {
+                    decode_start[c] = clock[c];
+                } else if step[c] == n_steps {
+                    done_at[c] = clock[c];
+                }
+                clock[c] += self.profile.client.step_overhead_s * (0.5 + self.rng.f64());
+                step[c] += 1;
+                hop[c] = 0;
+            }
+        }
+        let per_client: Vec<f64> = (0..n_clients)
+            .map(|c| n_steps as f64 / (done_at[c] - decode_start[c]))
+            .collect();
+        let mut ttfts: Vec<f64> = (0..n_clients).map(|c| decode_start[c] - arrival[c]).collect();
+        ttfts.sort_by(|a, b| a.total_cmp(b));
+        let p50_ttft_s = ttfts[ttfts.len() / 2];
+        Some(RaggedMixReport {
+            aggregate_steps_per_s: per_client.iter().sum(),
+            per_client,
+            occupancy: self.decode_occupancy(),
+            p50_ttft_s,
+            decode_joins: self.decode_joins,
+        })
     }
 
     /// Parallel forward (Table 3 right columns): `batch` sequences of
@@ -784,6 +975,44 @@ mod tests {
             agg_batched > 2.0 * solo,
             "8 batched clients must beat the sequential baseline by far: {agg_batched} vs solo {solo}"
         );
+    }
+
+    /// The ragged-batching claim at sim scale: with mixed-length
+    /// prompts, the pre-ragged same-depth join gate almost never fires
+    /// (clients desynchronize during their different-length prefills),
+    /// while the ragged scheduler keeps fusing — higher occupancy AND
+    /// higher aggregate throughput, from the same arrival trace.
+    #[test]
+    fn ragged_mix_lifts_occupancy_and_aggregate() {
+        let lens: Vec<usize> = vec![32, 48, 64, 96, 128, 160, 192, 224];
+        let run = |gate: bool| {
+            let mut s = sim(SwarmPreset::TwelveVirtual, NetworkProfile::MBIT100_100MS);
+            s.continuous_batching = true;
+            s.uniform_depth_gate = gate;
+            s.run_inference_ragged_mix(&lens, 16).unwrap()
+        };
+        let old = run(true); // pre-ragged scheduler
+        let new = run(false); // ragged scheduler
+        assert!(
+            new.occupancy > old.occupancy,
+            "ragged must lift occupancy: {} vs {}",
+            new.occupancy,
+            old.occupancy
+        );
+        assert!(
+            new.aggregate_steps_per_s > old.aggregate_steps_per_s,
+            "ragged must lift aggregate steps/s: {} vs {}",
+            new.aggregate_steps_per_s,
+            old.aggregate_steps_per_s
+        );
+        assert!(new.decode_joins > old.decode_joins);
+        assert!(new.p50_ttft_s > 0.0 && old.p50_ttft_s > 0.0);
+        assert_eq!(new.per_client.len(), lens.len());
+        // without continuous batching the ragged mix still completes
+        let mut s = sim(SwarmPreset::TwelveVirtual, NetworkProfile::MBIT100_100MS);
+        let serial = s.run_inference_ragged_mix(&lens, 8).unwrap();
+        assert_eq!(serial.decode_joins, 0);
+        assert_eq!(serial.occupancy, 0.0);
     }
 
     #[test]
