@@ -12,8 +12,11 @@
 #                                     TCP); needs no artifacts
 #   OUTDIR/BENCH_ragged.json        — ragged continuous batching: mixed-
 #                                     length sim sweep (occupancy,
-#                                     aggregate steps/s, p50 TTFT); needs
-#                                     no artifacts — always produced
+#                                     aggregate steps/s, p50 TTFT) plus
+#                                     the session-durability timings
+#                                     (migration_ms, resume_ttft_ms —
+#                                     tracked, not gated); needs no
+#                                     artifacts — always produced
 #   OUTDIR/BENCH_prefix_cache.json  — shared-prefix multiclient bench:
 #                                     pages/session, hit rate,
 #                                     aggregate_steps_per_s, sim TTFT;

@@ -41,6 +41,12 @@ if [[ "$MODE" == "test-only" ]]; then
     step "cargo test"
     # shellcheck disable=SC2086
     cargo test -q $TEST_FEATURES
+    step "cargo test --test fault_injection --test churn (session durability gate)"
+    # named gate: the fault-injection harness and the churn/migration
+    # suite pin the durability invariants (bitwise recovery, zero-loss
+    # drains) — run them explicitly so a test filter can never silently
+    # drop them. Pure in-process mocks: no artifacts, no sockets.
+    cargo test -q --test fault_injection --test churn
     echo
     echo "test-only checks passed"
     exit 0
@@ -71,6 +77,11 @@ cargo build --release --examples
 step "cargo test"
 # shellcheck disable=SC2086
 cargo test -q $TEST_FEATURES
+
+step "cargo test --test fault_injection --test churn (session durability gate)"
+# named gate (see test-only mode above): durability invariants must not
+# be droppable by a test filter
+cargo test -q --test fault_injection --test churn
 
 echo
 echo "all checks passed"

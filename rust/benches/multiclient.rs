@@ -31,12 +31,13 @@
 use petals::config::profiles::{NetworkProfile, SwarmPreset};
 use petals::coordinator::client::{LocalHead, Sampler, SwarmGenerator};
 use petals::coordinator::routing::RouteQuery;
-use petals::coordinator::session::SessionConfig;
+use petals::coordinator::session::{InferenceSession, PromptShape, SessionConfig};
 use petals::model::tensor::Tensor;
 use petals::model::{ModelHome, Precision, Weights};
 use petals::runtime::Runtime;
 use petals::server::local::spawn_even_swarm;
-use petals::server::ServerNode;
+use petals::server::{KvPool, KvPoolConfig, ServerNode, SessionSnapshot};
+use petals::sim::faults::MockChain;
 use petals::sim::SwarmSim;
 use std::sync::Arc;
 
@@ -47,12 +48,90 @@ fn sim_swarm(batched: bool) -> SwarmSim {
     s
 }
 
+/// Session-durability micro-bench (pure Rust, no artifacts): the two
+/// wall-clock costs the migration/resume machinery adds to the serving
+/// path. Returns `(migration_ms, resume_ttft_ms)`:
+///
+/// - `migration_ms` — mean time to move one session's KV state through
+///   the full live-migration payload path: `snapshot_session` → wire
+///   `encode` → `decode` → `restore_session` onto a fresh pool. This is
+///   the donor+target CPU cost per migrated session (network excluded).
+/// - `resume_ttft_ms` — mean time from `InferenceSession::restore` of a
+///   client-side snapshot to the first post-resume step output, i.e.
+///   how long a crashed client waits for its first token after
+///   re-attaching (replay included, transport is the in-process mock).
+///
+/// Both are reported in `BENCH_ragged.json` as tracked metrics but NOT
+/// gated: sub-millisecond wall timings are runner-noisy, and the
+/// deterministic sim numbers remain the regression gates.
+fn bench_session_durability() -> petals::Result<(f64, f64)> {
+    println!("session durability: migration payload + client resume (pure Rust):");
+
+    // ---- migration_ms: KvPool snapshot/encode/decode/restore ----------
+    // BLOOM-mini-ish session: 16 heads x 64 dims, 24 blocks, 256 tokens.
+    let cfg = KvPoolConfig { n_heads: 16, head_dim: 64, page_tokens: 16, capacity_pages: 1024 };
+    let (n_blocks, tokens) = (24usize, 256usize);
+    let mut pool = KvPool::new(cfg.clone());
+    pool.open_session(1, 1, n_blocks, tokens)?;
+    pool.prepare_write(1, tokens - 1)?;
+    let src: Vec<f32> =
+        (0..cfg.n_heads * tokens * cfg.head_dim).map(|i| (i % 251) as f32 * 0.01).collect();
+    for block in 0..n_blocks {
+        for kv in 0..2 {
+            pool.write_prefill(1, block, kv, &src, tokens)?;
+        }
+    }
+    pool.commit_len(1, tokens);
+    let iters = 5;
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        let snap = pool.snapshot_session(1)?;
+        let bytes = snap.encode();
+        let back = SessionSnapshot::decode(&bytes)?;
+        let mut fresh = KvPool::new(cfg.clone());
+        fresh.restore_session(&back)?;
+        assert!(fresh.has_session(1));
+    }
+    let migration_ms = t0.elapsed().as_secs_f64() * 1000.0 / iters as f64;
+    let payload_mb = (pool.snapshot_session(1)?.encode().len() as f64) / (1024.0 * 1024.0);
+    println!("  migration round-trip: {migration_ms:.2} ms/session ({payload_mb:.1} MiB payload)");
+
+    // ---- resume_ttft_ms: client snapshot -> restore -> first step -----
+    let scfg = || SessionConfig {
+        n_blocks: 8,
+        max_new: 64,
+        route: RouteQuery { n_blocks: 8, msg_bytes: 64, ..Default::default() },
+        max_recoveries: 2,
+        prefix_tokens: vec![],
+    };
+    let chain = MockChain::new(&[("bench-a", 0, 4), ("bench-b", 4, 8)]);
+    let shape = PromptShape { batch: 1, prefix_len: 2, prefill_width: 4 };
+    let mut s = InferenceSession::open(&chain, scfg(), shape, 900)?;
+    s.prefill(Tensor::from_f32(&[1, 4, 4], &[0.5; 16]))?;
+    let step_in = |i: usize| Tensor::from_f32(&[1, 1, 4], &[i as f32 * 0.25; 4]);
+    for i in 0..4 {
+        s.step(step_in(i))?;
+    }
+    let state = s.snapshot();
+    drop(s); // the "crashed" client never closes
+    let iters = 20;
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        let mut r = InferenceSession::restore(&chain, scfg(), state.clone())?;
+        r.step(step_in(4))?;
+    }
+    let resume_ttft_ms = t0.elapsed().as_secs_f64() * 1000.0 / iters as f64;
+    println!("  resume-to-first-token: {resume_ttft_ms:.2} ms (replay of 1 prefill + 4 steps)\n");
+    Ok((migration_ms, resume_ttft_ms))
+}
+
 /// Mixed-length ragged sweep (pure sim — no artifacts, no toolchain
 /// beyond cargo): the pre-ragged same-depth join gate vs the ragged
 /// scheduler over one arrival trace of mixed prompt lengths. Emits
 /// `BENCH_ragged.json` with its gate declarations so
-/// `ci/bench_compare.sh` can enforce the trajectory on main.
-fn bench_ragged_mix() -> petals::Result<()> {
+/// `ci/bench_compare.sh` can enforce the trajectory on main. The two
+/// durability timings ride along as ungated, tracked fields.
+fn bench_ragged_mix(migration_ms: f64, resume_ttft_ms: f64) -> petals::Result<()> {
     println!("ragged continuous batching: mixed-length arrival mix (sim, BLOOM-176B):");
     let lens: Vec<usize> = vec![32, 48, 64, 96, 128, 160, 192, 224];
     let run = |gate: bool| {
@@ -80,6 +159,7 @@ fn bench_ragged_mix() -> petals::Result<()> {
         "{{\n  \"clients\": {},\n  \"mix_lens\": [{}],\n  \"occupancy\": {:.4},\n  \
          \"aggregate_steps_per_s\": {:.3},\n  \"p50_ttft_s\": {:.3},\n  \
          \"uniform_gate_occupancy\": {:.4},\n  \"uniform_gate_aggregate_steps_per_s\": {:.3},\n  \
+         \"migration_ms\": {migration_ms:.3},\n  \"resume_ttft_ms\": {resume_ttft_ms:.3},\n  \
          \"gates\": {{\n    \"occupancy\": {{\"dir\": \"higher\", \"pct\": 15}},\n    \
          \"aggregate_steps_per_s\": {{\"dir\": \"higher\", \"pct\": 10}},\n    \
          \"p50_ttft_s\": {{\"dir\": \"lower\", \"pct\": 20}}\n  }}\n}}\n",
@@ -100,9 +180,11 @@ fn bench_ragged_mix() -> petals::Result<()> {
 
 fn main() -> petals::Result<()> {
     println!("multi-client slowdown & continuous batching (§3.3 + follow-up)\n");
-    // the ragged sweep runs FIRST and needs no artifacts: CI always gets
-    // a fresh BENCH_ragged.json even on artifact-less runners
-    bench_ragged_mix()?;
+    // the durability timings and ragged sweep run FIRST and need no
+    // artifacts: CI always gets a fresh BENCH_ragged.json even on
+    // artifact-less runners
+    let (migration_ms, resume_ttft_ms) = bench_session_durability()?;
+    bench_ragged_mix(migration_ms, resume_ttft_ms)?;
     println!("simulated 12-virtual swarm @ 100 Mbit/s, 100 ms RTT (BLOOM-176B):");
     let solo = sim_swarm(false).run_inference(128, 32, 1).unwrap().steps_per_s;
     println!("sequential per-session baseline: {solo:.2} steps/s aggregate (one session at a time)\n");

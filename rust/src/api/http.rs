@@ -8,6 +8,7 @@
 //! |---|---|
 //! | `POST /api/v1/generate` | batch generation (a `collect()` over the stream path) |
 //! | `POST /api/v1/stream` | chunked NDJSON: one event per token **as produced**, then stats |
+//! | `POST /api/v1/stream/resume` | re-attach a dropped stream at the exact next event |
 //! | `POST /api/v1/forward` | final-layer hidden states for a prompt (or raw embeddings) |
 //! | `POST /api/v1/backward` | activation gradients through the frozen blocks |
 //! | `POST /api/v1/session/open` | persistent session: prefill once, keep server-side KV |
@@ -24,7 +25,8 @@
 
 use crate::api::stream::{StreamEvent, StreamStats, TokenEvent};
 use crate::api::types::{
-    parse_ids, tensor_from_json, tensor_to_json, ApiError, GenerateRequest, SamplerSpec,
+    parse_ids, parse_resume_token, tensor_from_json, tensor_to_json, ApiError,
+    GenerateRequest, SamplerSpec,
 };
 use crate::config::json::Value;
 use crate::coordinator::client::{
@@ -52,6 +54,35 @@ struct OpenApiSession<C: ChainClient> {
     last_used: Instant,
 }
 
+/// A streaming generation that can survive its HTTP connection: the
+/// live swarm session (until finished), the decode state, and every
+/// event produced so far. Parked in [`ApiServer::resumables`] whenever
+/// its connection drops (or it finishes); `/api/v1/stream/resume`
+/// re-attaches at any buffered index and continues generating — the
+/// churn story's third leg (snapshot, migrate, RESUME).
+struct ResumableGen<C: ChainClient> {
+    /// `None` once generation finished (the swarm-side KV is released
+    /// eagerly; the buffered tail + stats stay replayable until the TTL
+    /// sweep).
+    session: Option<InferenceSession<Arc<C>>>,
+    sampler: SamplerState,
+    /// Hidden state [1,H] feeding the next lm_head call.
+    last: Tensor,
+    opts: GenOptions,
+    /// Everything produced so far, each carrying its resumption token.
+    events: Vec<TokenEvent>,
+    finished: Option<String>,
+    stats: Option<StreamStats>,
+    /// Generation wall time accumulated across attachments.
+    wall_s: f64,
+    last_used: Instant,
+}
+
+/// Most disconnected streams kept resumable at once; beyond this the
+/// stalest is evicted (its swarm session closed) so clients that never
+/// resume cannot pin unbounded event buffers.
+pub const MAX_RESUMABLE_STREAMS: usize = 256;
+
 /// The API backend over any swarm implementation.
 pub struct ApiServer<C: ChainClient> {
     pub swarm: Arc<C>,
@@ -59,6 +90,8 @@ pub struct ApiServer<C: ChainClient> {
     pub cfg: SessionConfig,
     next_session: AtomicU64,
     sessions: Mutex<HashMap<u64, OpenApiSession<C>>>,
+    /// Disconnected (or finished) streams awaiting `/stream/resume`.
+    resumables: Mutex<HashMap<u64, ResumableGen<C>>>,
     /// Persistent sessions idle longer than this are closed by the GC
     /// sweep (their swarm-side KV pages are released).
     pub session_ttl: Duration,
@@ -96,6 +129,7 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             cfg,
             next_session: AtomicU64::new(1000),
             sessions: Mutex::new(HashMap::new()),
+            resumables: Mutex::new(HashMap::new()),
             session_ttl,
         })
     }
@@ -415,12 +449,34 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
         for s in expired {
             s.inner.close();
         }
-        n
+        // disconnected streams expire the same way — an abandoned
+        // resumable must not pin its swarm-side KV pages forever
+        let stale: Vec<ResumableGen<C>> = {
+            let mut map = self.resumables.lock().unwrap();
+            let dead: Vec<u64> = map
+                .iter()
+                .filter(|(_, g)| now.duration_since(g.last_used) >= self.session_ttl)
+                .map(|(&id, _)| id)
+                .collect();
+            dead.into_iter().filter_map(|id| map.remove(&id)).collect()
+        };
+        let m = stale.len();
+        for mut g in stale {
+            if let Some(s) = g.session.take() {
+                s.close();
+            }
+        }
+        n + m
     }
 
     /// Live persistent sessions (tests / introspection).
     pub fn open_sessions(&self) -> usize {
         self.sessions.lock().unwrap().len()
+    }
+
+    /// Parked resumable streams (tests / introspection).
+    pub fn open_resumables(&self) -> usize {
+        self.resumables.lock().unwrap().len()
     }
 
     // --- HTTP plumbing -------------------------------------------------------
@@ -503,6 +559,10 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
                 self.handle_stream(&body, &mut stream)?;
                 return Ok(());
             }
+            if (method.as_str(), path.as_str()) == ("POST", "/api/v1/stream/resume") {
+                self.handle_stream_resume(&body, &mut stream)?;
+                return Ok(());
+            }
 
             let result = match (method.as_str(), path.as_str()) {
                 ("POST", "/api/v1/generate") => Some(self.generate_json(&body)),
@@ -545,14 +605,16 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
 
     /// `POST /api/v1/stream`: one chunk per event, flushed as produced,
     /// so the client sees the first token while generation continues.
+    /// Every token event carries a resumption token; if the connection
+    /// drops mid-stream the generation state is parked and
+    /// `/api/v1/stream/resume` re-attaches at the exact next event.
     fn handle_stream<W: Write>(&self, body: &str, out: &mut W) -> Result<()> {
-        let parsed = (|| -> Result<(GenerateRequest, Value)> {
+        let parsed = (|| -> Result<GenerateRequest> {
             let v = Value::parse(body)?;
-            let req = GenerateRequest::from_json(&v, self.head.vocab)?;
-            Ok((req, v))
+            GenerateRequest::from_json(&v, self.head.vocab)
         })();
-        let (req, _v) = match parsed {
-            Ok(p) => p,
+        let req = match parsed {
+            Ok(r) => r,
             Err(e) => return write_error_response(out, &e),
         };
         if req.inputs.len() != 1 {
@@ -565,59 +627,224 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             );
             return write_error_response(out, &e);
         }
-        let gen = self.generator(&req.sampler);
-        let mut stream =
-            match gen.stream(&req.inputs, self.gen_options(&req), self.fresh_id()) {
-                Ok(s) => s,
-                Err(e) => return write_error_response(out, &e),
-            };
-        write!(
-            out,
-            "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
-        )?;
-        out.flush()?;
-        let started = Instant::now();
-        loop {
-            match stream.next_step() {
-                Ok(Some(step)) => {
-                    let ev = StreamEvent::Token(TokenEvent {
-                        step: step.step,
-                        token: step.tokens[0],
-                        step_s: step.step_s,
-                        logits: step.logits.as_ref().map(|t| t.as_f32().to_vec()),
-                        hidden: step.hidden.as_ref().map(|t| t.as_f32().to_vec()),
-                    });
-                    write_chunk_line(out, &ev.render())?;
-                }
-                Ok(None) => {
-                    let wall_s = started.elapsed().as_secs_f64();
-                    let ev = StreamEvent::Stats(StreamStats {
-                        steps: stream.steps(),
-                        steps_per_s: stream.steps() as f64 / wall_s.max(1e-9),
-                        recoveries: stream.recoveries(),
-                        finish: stream
-                            .finish_reason()
-                            .map(|f| f.as_str().to_string())
-                            .unwrap_or_else(|| "length".to_string()),
-                        wall_s,
-                    });
-                    write_chunk_line(out, &ev.render())?;
-                    break;
-                }
-                Err(e) => {
-                    // the 200 was already committed — report in-band
-                    let ae = ApiError::from_error(&e);
-                    let ev = StreamEvent::Error {
-                        code: ae.code.to_string(),
-                        message: ae.message,
-                    };
-                    write_chunk_line(out, &ev.render())?;
-                    break;
+        let gid = self.fresh_id();
+        let gen = match self.start_resumable(&req, gid) {
+            Ok(g) => g,
+            Err(e) => return write_error_response(out, &e),
+        };
+        self.pump(gid, gen, 0, out)
+    }
+
+    /// `POST /api/v1/stream/resume` `{"resume": "<gen>.<next>"}`:
+    /// replay the buffered events from `next` onward, then continue
+    /// generating live on the same swarm session — no token duplicated,
+    /// none skipped. Unknown ids (expired, never existed, or currently
+    /// attached to a live connection) are 404s.
+    fn handle_stream_resume<W: Write>(&self, body: &str, out: &mut W) -> Result<()> {
+        let parsed = (|| -> Result<(u64, usize)> {
+            let v = Value::parse(body)?;
+            parse_resume_token(v.get("resume")?.str()?)
+        })();
+        let (gid, from) = match parsed {
+            Ok(p) => p,
+            Err(e) => return write_error_response(out, &e),
+        };
+        let gen = self.resumables.lock().unwrap().remove(&gid);
+        let Some(gen) = gen else {
+            let e = Error::NotFound(format!("no resumable stream {gid}"));
+            return write_error_response(out, &e);
+        };
+        if from > gen.events.len() {
+            // ahead of what was ever produced: reject WITHOUT destroying
+            // the state — a typo'd index must not kill the generation
+            let n = gen.events.len();
+            self.park(gid, gen);
+            let e = Error::Parse(format!(
+                "resume index {from} is ahead of the stream ({n} events produced)"
+            ));
+            return write_error_response(out, &e);
+        }
+        self.pump(gid, gen, from, out)
+    }
+
+    /// Open the swarm session and run the prefill for a resumable
+    /// stream (mirrors `session_open_json`'s ordering: embed before
+    /// open, close on prefill failure — nothing may strand server KV).
+    fn start_resumable(&self, req: &GenerateRequest, gid: u64) -> Result<ResumableGen<C>> {
+        let inputs = &req.inputs[0];
+        let prefix_len = inputs.len();
+        let w = self.head.derive_prefill_width(1, prefix_len)?;
+        let shape = PromptShape { batch: 1, prefix_len, prefill_width: w };
+        let mut cfg = self.cfg.clone();
+        cfg.prefix_tokens = inputs.clone();
+        if cfg.route.prefix_fp.is_none() {
+            cfg.route.prefix_fp = Some(crate::server::prefixcache::template_fingerprint(
+                inputs,
+                crate::server::PAGE_TOKENS,
+            ));
+        }
+        let mut ids = vec![0i32; w];
+        ids[..prefix_len].copy_from_slice(inputs);
+        let h0 = self.head.embed(&Tensor::from_i32(&[1, w], &ids))?;
+        let mut session = InferenceSession::open(self.swarm.clone(), cfg, shape, gid)?;
+        let h_pre = match session.prefill(h0) {
+            Ok(h) => h,
+            Err(e) => {
+                session.close();
+                return Err(e);
+            }
+        };
+        let hidden = self.head.hidden;
+        let last = Tensor::from_f32(
+            &[1, hidden],
+            &h_pre.as_f32()[(prefix_len - 1) * hidden..prefix_len * hidden],
+        );
+        Ok(ResumableGen {
+            session: Some(session),
+            sampler: req.sampler.to_sampler().start(),
+            last,
+            opts: self.gen_options(req),
+            events: Vec::new(),
+            finished: None,
+            stats: None,
+            wall_s: 0.0,
+            last_used: Instant::now(),
+        })
+    }
+
+    /// Produce ONE token event (lm_head → sample → record → step), the
+    /// same order as the non-resumable decode loop, so a stream that
+    /// disconnects and resumes N times emits the identical sequence.
+    fn gen_step(&self, gid: u64, g: &mut ResumableGen<C>) -> Result<()> {
+        let session = g.session.as_mut().expect("unfinished stream has a session");
+        let t0 = Instant::now();
+        let logits = self.head.lm_head(&g.last)?;
+        let token = g.sampler.sample(&logits)[0];
+        let step = g.events.len();
+        let hidden_vec = g.opts.want_hidden.then(|| g.last.as_f32().to_vec());
+        let logits_vec = g.opts.want_logits.then(|| logits.as_f32().to_vec());
+        // the sampled token always enters the KV before the stop check
+        // (same rule as session_append), keeping server state aligned
+        // with what the events claim was produced
+        let h = self.head.embed(&Tensor::from_i32(&[1, 1], &[token]))?;
+        let h_out = session.step(h)?;
+        g.last = Tensor::from_f32(&[1, self.head.hidden], h_out.as_f32());
+        let step_s = t0.elapsed().as_secs_f64();
+        g.wall_s += step_s;
+        g.events.push(TokenEvent {
+            step,
+            token,
+            step_s,
+            logits: logits_vec,
+            hidden: hidden_vec,
+            resume: Some(format!("{gid}.{}", step + 1)),
+        });
+        if g.opts.stop_tokens.contains(&token) {
+            Self::finish_gen(g, "stop");
+        }
+        Ok(())
+    }
+
+    /// Seal a resumable stream: release the swarm session's KV
+    /// immediately, freeze the stats. The buffered events stay
+    /// replayable until the TTL sweep collects them.
+    fn finish_gen(g: &mut ResumableGen<C>, finish: &str) {
+        let recoveries = g.session.as_ref().map(|s| s.recoveries()).unwrap_or(0);
+        if let Some(s) = g.session.take() {
+            s.close();
+        }
+        g.finished = Some(finish.to_string());
+        g.stats = Some(StreamStats {
+            steps: g.events.len(),
+            steps_per_s: g.events.len() as f64 / g.wall_s.max(1e-9),
+            recoveries,
+            finish: finish.to_string(),
+            wall_s: g.wall_s,
+        });
+    }
+
+    /// Park a stream for later resumption, evicting the stalest entry
+    /// if the buffer cap is hit.
+    fn park(&self, gid: u64, mut g: ResumableGen<C>) {
+        g.last_used = Instant::now();
+        let mut map = self.resumables.lock().unwrap();
+        if map.len() >= MAX_RESUMABLE_STREAMS {
+            if let Some(oldest) =
+                map.iter().min_by_key(|(_, g)| g.last_used).map(|(&id, _)| id)
+            {
+                if let Some(mut dead) = map.remove(&oldest) {
+                    if let Some(s) = dead.session.take() {
+                        s.close();
+                    }
                 }
             }
         }
-        out.write_all(b"0\r\n\r\n")?;
-        out.flush()?;
+        map.insert(gid, g);
+    }
+
+    /// Drive one attachment of a resumable stream: commit the 200,
+    /// replay `events[from..]`, keep generating until finished, then the
+    /// stats event. ANY write failure means the client went away — the
+    /// state is parked mid-word and the next `/stream/resume` picks up
+    /// at the exact event the client names.
+    fn pump<W: Write>(
+        &self,
+        gid: u64,
+        mut g: ResumableGen<C>,
+        from: usize,
+        out: &mut W,
+    ) -> Result<()> {
+        let header = write!(
+            out,
+            "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+        )
+        .and_then(|_| out.flush());
+        if header.is_err() {
+            self.park(gid, g);
+            return Ok(());
+        }
+        let mut idx = from;
+        loop {
+            // replay whatever the client has not seen (buffered events
+            // from before the disconnect, or the one just produced)
+            while idx < g.events.len() {
+                let line = StreamEvent::Token(g.events[idx].clone()).render();
+                if write_chunk_line(out, &line).is_err() {
+                    self.park(gid, g);
+                    return Ok(());
+                }
+                idx += 1;
+            }
+            if g.finished.is_some() {
+                break;
+            }
+            if g.events.len() >= g.opts.max_new {
+                Self::finish_gen(&mut g, "length");
+                continue;
+            }
+            if let Err(e) = self.gen_step(gid, &mut g) {
+                // generation (not connection) failure: client and server
+                // KV may have desynced — report in-band and discard
+                if let Some(s) = g.session.take() {
+                    s.close();
+                }
+                let ae = ApiError::from_error(&e);
+                let ev =
+                    StreamEvent::Error { code: ae.code.to_string(), message: ae.message };
+                let _ = write_chunk_line(out, &ev.render());
+                let _ = out.write_all(b"0\r\n\r\n");
+                let _ = out.flush();
+                return Ok(());
+            }
+        }
+        let stats = g.stats.clone().expect("finished stream has stats");
+        let done = write_chunk_line(out, &StreamEvent::Stats(stats).render())
+            .and_then(|_| Ok(out.write_all(b"0\r\n\r\n")?))
+            .and_then(|_| Ok(out.flush()?));
+        let _ = done;
+        // keep the finished stream parked: a client that lost the TAIL
+        // can still resume and collect the remaining events + stats
+        self.park(gid, g);
         Ok(())
     }
 }

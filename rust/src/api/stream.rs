@@ -27,6 +27,11 @@ pub struct TokenEvent {
     /// Final-layer hidden state that produced the logits (when
     /// `return_hidden` was set).
     pub hidden: Option<Vec<f32>>,
+    /// Resumption token: POST it as `{"resume": ...}` to
+    /// `/api/v1/stream/resume` after a dropped connection and the
+    /// stream re-attaches at exactly the next event — no token is ever
+    /// duplicated or skipped. Absent on streams that predate resumption.
+    pub resume: Option<String>,
 }
 
 /// Terminal stats event closing every stream.
@@ -73,6 +78,9 @@ impl StreamEvent {
                 if let Some(h) = &t.hidden {
                     obj.insert("hidden".into(), f32s_to_value(h));
                 }
+                if let Some(r) = &t.resume {
+                    obj.insert("resume".into(), Value::Str(r.clone()));
+                }
             }
             StreamEvent::Stats(s) => {
                 obj.insert("event".into(), Value::Str("stats".into()));
@@ -100,6 +108,7 @@ impl StreamEvent {
                 step_s: v.get("step_s")?.f64()?,
                 logits: v.opt("logits").map(value_to_f32s).transpose()?,
                 hidden: v.opt("hidden").map(value_to_f32s).transpose()?,
+                resume: v.opt("resume").map(|x| Ok(x.str()?.to_string())).transpose()?,
             })),
             "stats" => Ok(StreamEvent::Stats(StreamStats {
                 steps: v.get("steps")?.usize()?,
@@ -220,6 +229,17 @@ mod tests {
             step_s: 0.125,
             logits: Some(vec![0.5, -1.25]),
             hidden: None,
+            resume: None,
+        });
+        assert_eq!(StreamEvent::parse(&t.render()).unwrap(), t);
+
+        let t = StreamEvent::Token(TokenEvent {
+            step: 0,
+            token: 7,
+            step_s: 0.5,
+            logits: None,
+            hidden: None,
+            resume: Some("1007.1".into()),
         });
         assert_eq!(StreamEvent::parse(&t.render()).unwrap(), t);
 

@@ -86,8 +86,9 @@ pub struct GenerateRequest {
     pub inputs: Vec<Vec<i32>>,
     pub max_new_tokens: usize,
     pub sampler: SamplerSpec,
-    /// Sampling any of these ends generation (the stop token is still
-    /// reported). Single-prompt requests only.
+    /// Sampling any of these finishes a row (the stop token is still
+    /// reported). Per-row for multi-prompt bodies: a stopped row exits
+    /// the ragged session early while its siblings keep decoding.
     pub stop_tokens: Vec<i32>,
     pub return_logits: bool,
     pub return_hidden: bool,
@@ -206,6 +207,16 @@ pub fn tensor_from_json(v: &Value) -> Result<Tensor> {
     Ok(t)
 }
 
+/// Parse a stream resumption token (`"<gen>.<next>"` — the generation
+/// id plus the 0-based index of the FIRST event the caller still needs;
+/// every [`crate::api::TokenEvent`] carries the token that resumes
+/// after itself). Malformed tokens are typed 400s.
+pub fn parse_resume_token(tok: &str) -> Result<(u64, usize)> {
+    let bad = || Error::Parse(format!("resume token {tok:?} is not \"<gen>.<next>\""));
+    let (gen, next) = tok.split_once('.').ok_or_else(bad)?;
+    Ok((gen.parse().map_err(|_| bad())?, next.parse().map_err(|_| bad())?))
+}
+
 /// A typed API failure: stable machine-readable `code` + HTTP status.
 #[derive(Debug, Clone)]
 pub struct ApiError {
@@ -221,6 +232,7 @@ impl ApiError {
             Error::PromptTooLong(_) => (413, "prompt_too_long"),
             Error::NotFound(_) => (404, "not_found"),
             Error::Busy(_) => (503, "busy"),
+            Error::Moved(_) => (503, "moved"),
             Error::NoRoute(_) => (503, "no_route"),
             Error::Shape(_) => (400, "bad_shape"),
             Error::Protocol(_) => (400, "protocol"),
@@ -340,6 +352,15 @@ mod tests {
         // malformed shapes rejected
         let bad = Value::parse(r#"{"shape":[2,2],"data":[1.0]}"#).unwrap();
         assert!(tensor_from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn resume_token_parsing() {
+        assert_eq!(parse_resume_token("1007.12").unwrap(), (1007, 12));
+        assert_eq!(parse_resume_token("3.0").unwrap(), (3, 0));
+        for bad in ["", "1007", "a.b", "7.", ".3", "7.-1", "7.3.1"] {
+            assert!(parse_resume_token(bad).is_err(), "{bad:?}");
+        }
     }
 
     #[test]

@@ -94,6 +94,18 @@ impl Rng {
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.usize_below(xs.len())]
     }
+
+    /// Export the raw generator state — the session-durability snapshot
+    /// path serializes this so a restored sampler continues the exact
+    /// draw sequence it would have produced uninterrupted.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from an exported [`Self::state`].
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Rng { s }
+    }
 }
 
 #[cfg(test)]

@@ -157,6 +157,21 @@ pub struct SamplerState {
 }
 
 impl SamplerState {
+    /// Export the RNG's raw state. Together with the [`Sampler`] policy
+    /// this is the complete sampler snapshot: a stream resumed via
+    /// [`Self::restore`] draws the exact sequence the uninterrupted run
+    /// would have.
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Rebuild a mid-stream sampler from a policy + an exported
+    /// [`Self::rng_state`] (session durability: resumed streams must not
+    /// re-seed, which would fork the token sequence).
+    pub fn restore(sampler: Sampler, rng_state: [u64; 4]) -> Self {
+        SamplerState { sampler, rng: Rng::from_state(rng_state) }
+    }
+
     /// logits [B,V] -> one token per row.
     pub fn sample(&mut self, logits: &Tensor) -> Vec<i32> {
         let b = logits.shape[0];
@@ -281,8 +296,12 @@ impl FinishReason {
 pub struct GenOptions {
     /// Tokens to generate (the stream ends earlier on a stop token).
     pub max_new: usize,
-    /// Batch-1 only: sampling any of these ends the stream (the stop
-    /// token itself is still reported).
+    /// Sampling any of these finishes the sampling row (the stop token
+    /// itself is still reported). Per-row for multi-prompt batches: a
+    /// finished row exits the ragged session immediately — its KV pages
+    /// free on every hop for concurrent sessions to reuse — while the
+    /// remaining rows keep decoding; the stream ends when every row has
+    /// stopped (or at `max_new`).
     pub stop_tokens: Vec<i32>,
     /// Attach the logits that produced each token to its [`TokenStep`].
     pub want_logits: bool,
@@ -294,8 +313,13 @@ pub struct GenOptions {
 /// One per-token event from a [`GenerationStream`].
 #[derive(Debug, Clone)]
 pub struct TokenStep {
-    /// The sampled token, one per batch row.
+    /// The sampled token, one per batch row. Rows that already stopped
+    /// (`active[r] == false`) still occupy a slot so the batch keeps its
+    /// shape, but their value is padding, not output.
     pub tokens: Vec<i32>,
+    /// Which rows were still producing when this step sampled
+    /// (`active.len() == tokens.len()`).
+    pub active: Vec<bool>,
     /// 0-based step index.
     pub step: usize,
     /// Wall time this step took (lm_head + sample + decode step).
@@ -337,9 +361,6 @@ impl<'a, C: ChainClient> SwarmGenerator<'a, C> {
         let prefix_len = row_lens.iter().copied().max().unwrap_or(0);
         if b == 0 || row_lens.iter().any(|&l| l == 0) {
             return Err(Error::Shape("empty prompt".into()));
-        }
-        if !opts.stop_tokens.is_empty() && b != 1 {
-            return Err(Error::Protocol("stop_tokens require batch 1".into()));
         }
         // prefill width derived from the longest prompt, not caller-
         // configured; each row's padding sits AFTER its valid positions
@@ -415,6 +436,7 @@ impl<'a, C: ChainClient> SwarmGenerator<'a, C> {
             opts,
             last,
             produced: vec![Vec::new(); b],
+            row_done: vec![false; b],
             steps: 0,
             finish: None,
             recoveries: 0,
@@ -451,6 +473,9 @@ pub struct GenerationStream<'a, C: ChainClient> {
     /// Hidden state [B,H] feeding the next lm_head call.
     last: Tensor,
     produced: Vec<Vec<i32>>,
+    /// Rows that sampled a stop token and exited the batch early (their
+    /// KV pages are already freed server-side via `close_row`).
+    row_done: Vec<bool>,
     steps: usize,
     finish: Option<FinishReason>,
     recoveries: usize,
@@ -472,13 +497,30 @@ impl<'a, C: ChainClient> GenerationStream<'a, C> {
         let t0 = std::time::Instant::now();
         let logits = self.head.lm_head(&self.last)?;
         let next = self.sampler.sample(&logits);
-        for (row, &t) in self.produced.iter_mut().zip(&next) {
-            row.push(t);
+        let active: Vec<bool> = self.row_done.iter().map(|&d| !d).collect();
+        for (row, (produced, &t)) in self.produced.iter_mut().zip(&next).enumerate() {
+            if !self.row_done[row] {
+                produced.push(t);
+            }
         }
         let hidden_out = self.opts.want_hidden.then(|| self.last.clone());
         let step = self.steps;
         self.steps += 1;
-        if self.batch == 1 && self.opts.stop_tokens.contains(&next[0]) {
+        // per-row stop: a row that samples a stop token exits the batch
+        // NOW — its KV pages free on every hop while the rest keep
+        // decoding (the freed pages are immediately reusable by
+        // concurrent sessions; the batch keeps its shape)
+        if !self.opts.stop_tokens.is_empty() {
+            for (row, &t) in next.iter().enumerate() {
+                if !self.row_done[row] && self.opts.stop_tokens.contains(&t) {
+                    self.row_done[row] = true;
+                    if let Some(session) = &self.session {
+                        session.close_row(row);
+                    }
+                }
+            }
+        }
+        if self.row_done.iter().all(|&d| d) {
             self.finish = Some(FinishReason::Stop);
         } else if self.steps >= self.opts.max_new {
             self.finish = Some(FinishReason::Length);
@@ -501,6 +543,7 @@ impl<'a, C: ChainClient> GenerationStream<'a, C> {
         }
         Ok(Some(TokenStep {
             tokens: next,
+            active,
             step,
             step_s: t0.elapsed().as_secs_f64(),
             logits: self.opts.want_logits.then_some(logits),
@@ -515,6 +558,17 @@ impl<'a, C: ChainClient> GenerationStream<'a, C> {
 
     pub fn steps(&self) -> usize {
         self.steps
+    }
+
+    /// The live sampler (policy + advancing RNG) — its
+    /// [`SamplerState::rng_state`] is part of a resumption snapshot.
+    pub fn sampler_state(&self) -> &SamplerState {
+        &self.sampler
+    }
+
+    /// Which rows already stopped (`true` = exited the batch early).
+    pub fn rows_done(&self) -> &[bool] {
+        &self.row_done
     }
 
     /// Recoveries performed so far (final total once the stream ends).

@@ -99,6 +99,21 @@ pub trait ChainClient {
         }
     }
     fn close_session(&self, server: NodeId, session: u64);
+    /// Release one finished row of a multi-row session (wire v6
+    /// `CloseSessionRow`): its KV pages free immediately while the batch
+    /// keeps its shape. Best-effort — the default no-op keeps transports
+    /// and fakes that predate per-row exit working (a legacy server
+    /// treats the unknown tag as a connection error, which callers
+    /// swallow the same way).
+    fn close_row(&self, _server: NodeId, _session: u64, _row: usize) -> Result<()> {
+        Ok(())
+    }
+    /// Resolve a wire-v6 `moved:` redirect address to a dialable server
+    /// id. The default (`None`) sends clients down the replay-based
+    /// recovery path instead of the cheap redirect.
+    fn resolve_moved(&self, _addr: &str) -> Option<NodeId> {
+        None
+    }
     /// Stateless parallel forward over the span (fine-tuning, §2.2).
     fn forward(&self, server: NodeId, hidden: &Tensor) -> Result<Tensor>;
     /// Backward over the span; returns grad wrt the span's input.
@@ -167,6 +182,12 @@ impl<T: ChainClient + ?Sized> ChainClient for &T {
     fn close_session(&self, server: NodeId, session: u64) {
         (**self).close_session(server, session)
     }
+    fn close_row(&self, server: NodeId, session: u64, row: usize) -> Result<()> {
+        (**self).close_row(server, session, row)
+    }
+    fn resolve_moved(&self, addr: &str) -> Option<NodeId> {
+        (**self).resolve_moved(addr)
+    }
     fn forward(&self, server: NodeId, hidden: &Tensor) -> Result<Tensor> {
         (**self).forward(server, hidden)
     }
@@ -233,6 +254,12 @@ impl<T: ChainClient + ?Sized> ChainClient for std::sync::Arc<T> {
     }
     fn close_session(&self, server: NodeId, session: u64) {
         (**self).close_session(server, session)
+    }
+    fn close_row(&self, server: NodeId, session: u64, row: usize) -> Result<()> {
+        (**self).close_row(server, session, row)
+    }
+    fn resolve_moved(&self, addr: &str) -> Option<NodeId> {
+        (**self).resolve_moved(addr)
     }
     fn forward(&self, server: NodeId, hidden: &Tensor) -> Result<Tensor> {
         (**self).forward(server, hidden)
@@ -303,6 +330,39 @@ struct HopHistory {
     prefill_input: Option<Tensor>,
     step_inputs: Vec<(Vec<usize>, Tensor)>, // (per-row cache lens, hidden)
 }
+
+/// One hop's portion of a [`SessionState`] snapshot: the block span it
+/// covered and the exact inputs the client sent it (the §3.2 replay
+/// history, which is also everything a *different* chain needs to
+/// rebuild identical KV for those blocks).
+#[derive(Clone)]
+pub struct HopState {
+    pub start: usize,
+    pub end: usize,
+    pub prefill_input: Option<Tensor>,
+    /// `(per-row cache lens, hidden)` per decode step, in order.
+    pub step_inputs: Vec<(Vec<usize>, Tensor)>,
+}
+
+/// A client-side snapshot of a live session — everything needed to
+/// rebuild it on a fresh chain ([`InferenceSession::restore`]) with
+/// bitwise-identical KV state: prompt geometry, per-row cache lengths,
+/// and each hop's replay history. The durability complement to the
+/// server-side KV snapshot (`server::SessionSnapshot`): that one moves
+/// caches between servers, this one survives losing the whole chain.
+#[derive(Clone)]
+pub struct SessionState {
+    pub session_id: u64,
+    pub shape: PromptShape,
+    pub row_lens: Vec<usize>,
+    pub hops: Vec<HopState>,
+}
+
+/// How many NotFound replies a client tolerates right after following a
+/// `moved:` redirect (at 10ms apart): the redirect can reach the target
+/// before the donor's migration push finishes restoring the session
+/// there. After the grace window, the client falls back to replay.
+const MOVED_GRACE_TRIES: usize = 50;
 
 /// A live pipeline-parallel inference session. Owns its `ChainClient`
 /// handle (`&C` and `Arc<C>` both implement [`ChainClient`] by
@@ -421,12 +481,30 @@ impl<C: ChainClient> InferenceSession<C> {
     pub fn prefill(&mut self, hidden: Tensor) -> Result<Tensor> {
         let mut h = hidden;
         let mut i = 0;
+        let mut moved_grace = 0usize;
         while i < self.chain.len() {
             self.history[i].prefill_input = Some(h.clone());
             match self.client.prefill(self.chain[i].server, self.session_id, &h) {
                 Ok(next) => {
                     h = next;
                     i += 1;
+                    moved_grace = 0;
+                }
+                Err(Error::Moved(addr)) => {
+                    // live migration: follow the redirect (no replay —
+                    // the new server holds the KV already); fall back to
+                    // replay recovery when the address is unknown
+                    if self.redirect(i, &addr) {
+                        moved_grace = MOVED_GRACE_TRIES;
+                    } else {
+                        self.recover(i)?;
+                    }
+                }
+                Err(Error::NotFound(_)) if moved_grace > 0 => {
+                    // redirect raced the migration push: the new server
+                    // has not restored the session yet — wait briefly
+                    moved_grace -= 1;
+                    std::thread::sleep(std::time::Duration::from_millis(10));
                 }
                 Err(e) if e.is_retryable() => {
                     self.recover(i)?;
@@ -446,6 +524,7 @@ impl<C: ChainClient> InferenceSession<C> {
     pub fn step(&mut self, hidden: Tensor) -> Result<Tensor> {
         let mut h = hidden;
         let mut i = 0;
+        let mut moved_grace = 0usize;
         while i < self.chain.len() {
             self.history[i].step_inputs.push((self.row_lens.clone(), h.clone()));
             match self.client.step_ragged(
@@ -457,6 +536,25 @@ impl<C: ChainClient> InferenceSession<C> {
                 Ok(next) => {
                     h = next;
                     i += 1;
+                    moved_grace = 0;
+                }
+                Err(Error::Moved(addr)) => {
+                    // live migration: the new server already holds this
+                    // session's KV — swap the hop and retry WITHOUT
+                    // replaying (replay would double-write the caches)
+                    self.history[i].step_inputs.pop();
+                    if self.redirect(i, &addr) {
+                        moved_grace = MOVED_GRACE_TRIES;
+                    } else {
+                        self.recover(i)?;
+                    }
+                }
+                Err(Error::NotFound(_)) if moved_grace > 0 => {
+                    // the redirect outran the migration push; the session
+                    // appears on the new server within milliseconds
+                    self.history[i].step_inputs.pop();
+                    moved_grace -= 1;
+                    std::thread::sleep(std::time::Duration::from_millis(10));
                 }
                 Err(e) if e.is_retryable() => {
                     // drop the just-recorded input; recovery replays it
@@ -470,6 +568,28 @@ impl<C: ChainClient> InferenceSession<C> {
             *l += 1;
         }
         Ok(h)
+    }
+
+    /// Follow a wire-v6 `moved:` redirect for hop `i`: resolve the new
+    /// address and swap the hop in place, keeping its replay history (the
+    /// migrated server holds the same KV the old one did). Returns false
+    /// when the address cannot be resolved — or resolves to a server
+    /// already serving another span of this chain, which would collide on
+    /// the session id — in which case the caller replays instead.
+    fn redirect(&mut self, i: usize, addr: &str) -> bool {
+        match self.client.resolve_moved(addr) {
+            Some(id)
+                if !self
+                    .chain
+                    .iter()
+                    .enumerate()
+                    .any(|(j, h)| j != i && h.server == id) =>
+            {
+                self.chain[i].server = id;
+                true
+            }
+            _ => false,
+        }
     }
 
     /// Replace the failed hop `i` with a fresh subchain and replay its
@@ -548,6 +668,129 @@ impl<C: ChainClient> InferenceSession<C> {
         self.chain.splice(i..=i, sub);
         self.history.splice(i..=i, sub_history);
         Ok(())
+    }
+
+    /// Release one finished row's KV pages on every hop (per-row early
+    /// exit). Best-effort: a hop that predates wire v6 drops the frame's
+    /// connection, which the transport maps to an error we ignore — the
+    /// row's pages then free at session close like before.
+    pub fn close_row(&self, row: usize) {
+        for hop in &self.chain {
+            let _ = self.client.close_row(hop.server, self.session_id, row);
+        }
+    }
+
+    /// Capture a client-side snapshot: prompt geometry, per-row cache
+    /// lengths, and every hop's replay history. [`Self::restore`] rebuilds
+    /// an equivalent session on a *fresh* chain from this alone.
+    pub fn snapshot(&self) -> SessionState {
+        SessionState {
+            session_id: self.session_id,
+            shape: self.shape,
+            row_lens: self.row_lens.clone(),
+            hops: self
+                .chain
+                .iter()
+                .zip(&self.history)
+                .map(|(hop, hist)| HopState {
+                    start: hop.start,
+                    end: hop.end,
+                    prefill_input: hist.prefill_input.clone(),
+                    step_inputs: hist.step_inputs.clone(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Rebuild a session from a [`SessionState`] snapshot on whatever
+    /// servers are currently available, replaying each saved hop's
+    /// history so the new chain holds bitwise-identical KV. The original
+    /// chain is assumed gone (client restart, total chain loss); servers
+    /// that DO still hold the session id are excluded per-span only by
+    /// the usual no-duplicate rule, so prefer a fresh `session_id` in the
+    /// snapshot when the old chain may be partially alive.
+    pub fn restore(client: C, cfg: SessionConfig, state: SessionState) -> Result<Self> {
+        state.shape.validate()?;
+        if state.row_lens.len() != state.shape.batch {
+            return Err(Error::Shape(format!(
+                "{} row lens for batch {}",
+                state.row_lens.len(),
+                state.shape.batch
+            )));
+        }
+        if state.hops.is_empty() {
+            return Err(Error::Shape("snapshot has no hops".into()));
+        }
+        let servers = client.discover();
+        let mut chain: Vec<ChainHop> = Vec::new();
+        let mut history: Vec<HopHistory> = Vec::new();
+        let result = (|| -> Result<()> {
+            for hs in &state.hops {
+                // per-server session state is keyed by session id alone,
+                // so no server may serve two spans of the same session
+                let used: Vec<NodeId> = chain.iter().map(|h| h.server).collect();
+                let avail: Vec<ServerView> = servers
+                    .iter()
+                    .filter(|s| !used.contains(&s.id))
+                    .cloned()
+                    .collect();
+                let sub = routing::find_subchain(&avail, &cfg.route, hs.start, hs.end)
+                    .ok_or_else(|| {
+                        Error::NoRoute(format!(
+                            "no chain covers blocks {}..{} for restore",
+                            hs.start, hs.end
+                        ))
+                    })?;
+                let base = chain.len();
+                for hop in &sub {
+                    client.open_session_prefixed(
+                        hop.server,
+                        state.session_id,
+                        state.shape.batch,
+                        state.shape.prefix_len,
+                        cfg.max_new,
+                        &cfg.prefix_tokens,
+                        state.shape.prefill_width,
+                    )?;
+                    // record immediately so the error path closes it
+                    chain.push(hop.clone());
+                    history.push(HopHistory::default());
+                }
+                // replay this hop's saved inputs through its sub-chain,
+                // recording what each replacement hop actually saw
+                if let Some(pre) = &hs.prefill_input {
+                    let mut h = pre.clone();
+                    for (j, hop) in sub.iter().enumerate() {
+                        history[base + j].prefill_input = Some(h.clone());
+                        h = client.prefill(hop.server, state.session_id, &h)?;
+                    }
+                }
+                for (lens, inp) in &hs.step_inputs {
+                    let mut h = inp.clone();
+                    for (j, hop) in sub.iter().enumerate() {
+                        history[base + j].step_inputs.push((lens.clone(), h.clone()));
+                        h = client.step_ragged(hop.server, state.session_id, lens, &h)?;
+                    }
+                }
+            }
+            Ok(())
+        })();
+        if let Err(e) = result {
+            for hop in &chain {
+                client.close_session(hop.server, state.session_id);
+            }
+            return Err(e);
+        }
+        Ok(InferenceSession {
+            client,
+            cfg,
+            shape: state.shape,
+            chain,
+            history,
+            session_id: state.session_id,
+            row_lens: state.row_lens,
+            recoveries: 0,
+        })
     }
 
     /// Close all per-server sessions.
@@ -632,6 +875,12 @@ mod tests {
         ragged_served: Vec<Vec<usize>>,
         fail_next: usize,      // fail this many next prefill/step requests
         fail_open_next: usize, // reject this many next open_session calls (Busy)
+        // live migration fake: requests bounce with Moved(addr)
+        moved_to: Option<String>,
+        // restore lag: serve this many NotFound replies for unknown
+        // sessions before "the migration push lands" (auto-registers)
+        restore_after: usize,
+        rows_closed: Vec<(u64, usize)>,
     }
 
     impl FakeSwarm {
@@ -647,6 +896,9 @@ mod tests {
                     ragged_served: Vec::new(),
                     fail_next: 0,
                     fail_open_next: 0,
+                    moved_to: None,
+                    restore_after: 0,
+                    rows_closed: Vec::new(),
                 })
                 .collect();
             FakeSwarm { state: RefCell::new(FakeState { servers, open_calls: 0 }) }
@@ -656,6 +908,19 @@ mod tests {
             let id = NodeId::from_name(name);
             let mut st = self.state.borrow_mut();
             st.servers.iter_mut().find(|s| s.id == id).unwrap().alive = false;
+        }
+
+        /// Fake a live migration of `session` from `victim` to `target`:
+        /// the victim starts bouncing requests with `Moved(target)`, and
+        /// the target "restores" the pushed KV after serving `lag`
+        /// NotFound replies (modelling the redirect racing the push).
+        fn migrate(&self, victim: &str, target: &str, lag: usize) {
+            let vid = NodeId::from_name(victim);
+            let tid = NodeId::from_name(target);
+            let mut st = self.state.borrow_mut();
+            st.servers.iter_mut().find(|s| s.id == vid).unwrap().moved_to =
+                Some(target.to_string());
+            st.servers.iter_mut().find(|s| s.id == tid).unwrap().restore_after = lag;
         }
 
         fn steps_served(&self, name: &str, session: u64) -> Vec<usize> {
@@ -721,6 +986,9 @@ mod tests {
                 srv.fail_next = srv.fail_next.saturating_sub(1);
                 return Err(Error::ChainBroken("prefill failed".into()));
             }
+            if let Some(addr) = &srv.moved_to {
+                return Err(Error::Moved(addr.clone()));
+            }
             let span = srv.end - srv.start;
             srv.sessions.get_mut(&session).unwrap().0 += 1;
             Ok(FakeSwarm::apply(hidden, span))
@@ -732,6 +1000,18 @@ mod tests {
             if !srv.alive || srv.fail_next > 0 {
                 srv.fail_next = srv.fail_next.saturating_sub(1);
                 return Err(Error::ChainBroken("step failed".into()));
+            }
+            if let Some(addr) = &srv.moved_to {
+                return Err(Error::Moved(addr.clone()));
+            }
+            if !srv.sessions.contains_key(&session) {
+                if srv.restore_after > 0 {
+                    // migration push hasn't landed yet
+                    srv.restore_after -= 1;
+                    return Err(Error::NotFound("no such session".into()));
+                }
+                // the push "lands": KV arrives migrated, not replayed
+                srv.sessions.insert(session, (0, vec![]));
             }
             let span = srv.end - srv.start;
             srv.sessions.get_mut(&session).unwrap().1.push(cache_len);
@@ -767,6 +1047,19 @@ mod tests {
             if let Some(srv) = st.servers.iter_mut().find(|s| s.id == server) {
                 srv.sessions.remove(&session);
             }
+        }
+
+        fn close_row(&self, server: NodeId, session: u64, row: usize) -> Result<()> {
+            let mut st = self.state.borrow_mut();
+            let srv = st.servers.iter_mut().find(|s| s.id == server).unwrap();
+            srv.rows_closed.push((session, row));
+            Ok(())
+        }
+
+        fn resolve_moved(&self, addr: &str) -> Option<NodeId> {
+            let id = NodeId::from_name(addr);
+            let st = self.state.borrow();
+            st.servers.iter().find(|s| s.id == id && s.alive).map(|s| s.id)
         }
 
         fn forward(&self, server: NodeId, hidden: &Tensor) -> Result<Tensor> {
@@ -983,6 +1276,123 @@ mod tests {
         let route = cfg(8).route;
         let out = chain_forward(&swarm, &route, Tensor::from_f32(&[2, 3, 4], &[1.0; 24])).unwrap();
         assert!(out.as_f32().iter().all(|&v| v == 9.0));
+    }
+
+    /// A `moved:` redirect swaps the hop WITHOUT replaying: the target
+    /// already holds the migrated KV, so the only traffic it sees is the
+    /// step that triggered the redirect (after riding out the NotFound
+    /// window while the migration push lands).
+    #[test]
+    fn moved_redirect_swaps_hop_without_replay() {
+        let swarm = FakeSwarm::new(&[("a", 0, 3), ("b", 3, 8), ("b2", 3, 8)]);
+        let mut s = InferenceSession::open(&swarm, cfg(8), shape(), 21).unwrap();
+        s.prefill(Tensor::from_f32(&[1, 4, 4], &[0.0; 16])).unwrap();
+        s.step(h1()).unwrap();
+        s.step(h1()).unwrap();
+        let hop1 = s.chain()[1].server;
+        let (victim, target) =
+            if hop1 == NodeId::from_name("b") { ("b", "b2") } else { ("b2", "b") };
+        // drain victim -> target, with 2 NotFound replies of restore lag
+        swarm.migrate(victim, target, 2);
+        let out = s.step(h1()).unwrap();
+        assert!(out.as_f32().iter().all(|&v| v == 8.0), "math unchanged");
+        assert_eq!(s.recoveries(), 0, "redirect is not a recovery");
+        assert_eq!(s.chain()[1].server, NodeId::from_name(target));
+        // crucially NO replay: target served only the in-flight step
+        // (cache_len 4), not the historical 2,3
+        assert_eq!(swarm.steps_served(target, 21), vec![4]);
+        // the session keeps working on the new chain
+        s.step(h1()).unwrap();
+        assert_eq!(swarm.steps_served(target, 21), vec![4, 5]);
+    }
+
+    /// When the redirect address doesn't resolve (e.g. the target is
+    /// unknown to this client), the session falls back to replay-based
+    /// recovery and still makes progress.
+    #[test]
+    fn moved_to_unknown_address_falls_back_to_recovery() {
+        let swarm = FakeSwarm::new(&[("a", 0, 3), ("b", 3, 8), ("b2", 3, 8)]);
+        let mut s = InferenceSession::open(&swarm, cfg(8), shape(), 22).unwrap();
+        s.prefill(Tensor::from_f32(&[1, 4, 4], &[0.0; 16])).unwrap();
+        s.step(h1()).unwrap();
+        let hop1 = s.chain()[1].server;
+        let (victim, replacement) =
+            if hop1 == NodeId::from_name("b") { ("b", "b2") } else { ("b2", "b") };
+        {
+            // victim announces a move to an address nobody can resolve
+            let vid = NodeId::from_name(victim);
+            let mut st = swarm.state.borrow_mut();
+            st.servers.iter_mut().find(|x| x.id == vid).unwrap().moved_to =
+                Some("unknown-host:1".into());
+        }
+        let out = s.step(h1()).unwrap();
+        assert!(out.as_f32().iter().all(|&v| v == 8.0));
+        assert_eq!(s.recoveries(), 1, "unresolvable redirect went through replay");
+        assert_eq!(s.chain()[1].server, NodeId::from_name(replacement));
+        // replacement replayed step history (cache_lens 2) + the new step
+        assert_eq!(swarm.steps_served(replacement, 22), vec![2, 3]);
+    }
+
+    /// `snapshot()` + `restore()` rebuilds the session on a fresh swarm
+    /// with identical semantics: replayed history, matching row lens, and
+    /// identical outputs afterwards.
+    #[test]
+    fn snapshot_restore_roundtrip_on_fresh_swarm() {
+        let swarm = FakeSwarm::new(&[("a", 0, 3), ("b", 3, 8)]);
+        let mut s = InferenceSession::open(&swarm, cfg(8), shape(), 31).unwrap();
+        s.prefill(Tensor::from_f32(&[1, 4, 4], &[0.0; 16])).unwrap();
+        s.step(h1()).unwrap();
+        s.step(h1()).unwrap();
+        let state = s.snapshot();
+        assert_eq!(state.row_lens, vec![4]);
+        assert_eq!(state.hops.len(), 2);
+        // a completely different swarm (the old chain is gone)
+        let swarm2 = FakeSwarm::new(&[("x", 0, 4), ("y", 4, 8)]);
+        let mut r = InferenceSession::restore(&swarm2, cfg(8), state).unwrap();
+        assert_eq!(r.row_lens(), &[4]);
+        // the new hops replayed: prefill + both historical steps
+        let st = swarm2.state.borrow();
+        for srv in &st.servers {
+            let (prefills, steps) = &srv.sessions[&31];
+            assert_eq!(*prefills, 1, "restored hop ran the saved prefill");
+            assert_eq!(steps, &vec![2, 3], "restored hop replayed step history");
+        }
+        drop(st);
+        let out = r.step(h1()).unwrap();
+        assert!(out.as_f32().iter().all(|&v| v == 8.0), "semantics preserved");
+        assert_eq!(r.cache_len(), 5);
+    }
+
+    /// Restore fails cleanly (no leaked opens) when no chain covers a
+    /// saved hop's span.
+    #[test]
+    fn restore_without_route_closes_opened_hops() {
+        let swarm = FakeSwarm::new(&[("a", 0, 3), ("b", 3, 8)]);
+        let mut s = InferenceSession::open(&swarm, cfg(8), shape(), 32).unwrap();
+        s.prefill(Tensor::from_f32(&[1, 4, 4], &[0.0; 16])).unwrap();
+        let state = s.snapshot();
+        // the new swarm covers the first span only
+        let swarm2 = FakeSwarm::new(&[("x", 0, 3)]);
+        let err = InferenceSession::restore(&swarm2, cfg(8), state).unwrap_err();
+        assert!(matches!(err, Error::NoRoute(_)), "{err}");
+        let st = swarm2.state.borrow();
+        assert!(
+            st.servers[0].sessions.is_empty(),
+            "hop opened before the NoRoute must be closed again"
+        );
+    }
+
+    /// `close_row` fans out to every hop; defaulted transports are a
+    /// no-op (legacy downgrade).
+    #[test]
+    fn close_row_reaches_every_hop() {
+        let swarm = FakeSwarm::new(&[("a", 0, 3), ("b", 3, 8)]);
+        let s = InferenceSession::open(&swarm, cfg(8), shape(), 33).unwrap();
+        s.close_row(0);
+        let st = swarm.state.borrow();
+        for srv in &st.servers {
+            assert_eq!(srv.rows_closed, vec![(33, 0)]);
+        }
     }
 
     #[test]

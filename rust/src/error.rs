@@ -22,6 +22,10 @@ pub enum Error {
     /// The server is at capacity (KV-cache pool full) — retryable: the
     /// client should route to a less-loaded replica.
     Busy(String),
+    /// The session was live-migrated to another server (wire v6 drain):
+    /// the payload is the new server's dialable address. Clients follow
+    /// the redirect instead of replaying KV history.
+    Moved(String),
     /// The prompt does not fit any compiled prefill width — a client
     /// error, never retryable. The streaming API maps this to HTTP 413
     /// instead of silently truncating the prompt (the seed behavior).
@@ -45,6 +49,7 @@ impl fmt::Display for Error {
             Error::ChainBroken(m) => write!(f, "chain broken: {m}"),
             Error::NoRoute(m) => write!(f, "no route: {m}"),
             Error::Busy(m) => write!(f, "busy: {m}"),
+            Error::Moved(m) => write!(f, "moved: {m}"),
             Error::PromptTooLong(m) => write!(f, "prompt too long: {m}"),
             Error::Protocol(m) => write!(f, "protocol: {m}"),
             Error::Other(m) => write!(f, "{m}"),
@@ -82,25 +87,44 @@ mod tests {
         }
         assert!(matches!(Error::from_wire("xla: boom".into()), Error::ChainBroken(_)));
     }
+
+    /// Same inverse contract for the wire-v6 `moved:` redirect.
+    #[test]
+    fn wire_roundtrip_preserves_moved() {
+        let e = Error::Moved("10.0.0.7:31337".into());
+        assert!(e.is_retryable());
+        match Error::from_wire(e.to_string()) {
+            Error::Moved(addr) => assert_eq!(addr, "10.0.0.7:31337"),
+            other => panic!("expected Moved, got {other:?}"),
+        }
+    }
 }
 
 impl Error {
     /// True for failures a session should respond to by re-routing
     /// around the failed server rather than aborting (§3.2).
     pub fn is_retryable(&self) -> bool {
-        matches!(self, Error::ChainBroken(_) | Error::Io(_) | Error::Busy(_))
+        matches!(
+            self,
+            Error::ChainBroken(_) | Error::Io(_) | Error::Busy(_) | Error::Moved(_)
+        )
     }
 
-    /// Classify an `Error` reply received over the wire. The only string
-    /// contract is the `busy:` prefix (docs/WIRE_PROTOCOL.md) — it maps
-    /// back to [`Error::Busy`] so clients route the work to a
-    /// less-loaded replica; everything else is a retryable chain break.
-    /// Kept next to `Display` so the prefix can't silently drift.
+    /// Classify an `Error` reply received over the wire. The string
+    /// contracts are the `busy:` prefix (maps back to [`Error::Busy`] so
+    /// clients route the work to a less-loaded replica) and the wire-v6
+    /// `moved:` prefix (maps to [`Error::Moved`] so clients follow a
+    /// live-migration redirect — docs/WIRE_PROTOCOL.md); everything else
+    /// is a retryable chain break. Kept next to `Display` so the
+    /// prefixes can't silently drift.
     pub fn from_wire(message: String) -> Error {
-        match message.strip_prefix("busy: ") {
-            Some(m) => Error::Busy(m.to_string()),
-            None => Error::ChainBroken(message),
+        if let Some(m) = message.strip_prefix("busy: ") {
+            return Error::Busy(m.to_string());
         }
+        if let Some(m) = message.strip_prefix("moved: ") {
+            return Error::Moved(m.to_string());
+        }
+        Error::ChainBroken(message)
     }
 
     /// Structural copy (the wrapped `std` errors are not `Clone`): used
@@ -116,6 +140,7 @@ impl Error {
             Error::ChainBroken(m) => Error::ChainBroken(m.clone()),
             Error::NoRoute(m) => Error::NoRoute(m.clone()),
             Error::Busy(m) => Error::Busy(m.clone()),
+            Error::Moved(m) => Error::Moved(m.clone()),
             Error::PromptTooLong(m) => Error::PromptTooLong(m.clone()),
             Error::Protocol(m) => Error::Protocol(m.clone()),
             Error::Other(m) => Error::Other(m.clone()),

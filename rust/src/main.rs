@@ -8,6 +8,7 @@
 //!                 [--listen ADDR] [--advertise HOST:PORT] [--compress] [--model NAME]
 //!                 [--announce-dir DIR] [--announce-every SECS] [--session-ttl SECS]
 //!                 [--dht-listen ADDR] [--dht-advertise HOST:PORT] [--bootstrap ADDR,...]
+//!                 [--drain SECS]
 //! petals generate --artifacts DIR (--peers n1=addr1,... | --announce-dir DIR
 //!                 | --bootstrap ADDR,...) [--model NAME]
 //!                 --prompt 1,2,3 [--max-new N] [--topk K | --topp P] [--stream]
@@ -277,6 +278,28 @@ fn cmd_server(flags: &HashMap<String, String>) -> i32 {
             }
             std::thread::sleep(std::time::Duration::from_secs(every));
         });
+    }
+    // --drain SECS: serve for SECS, then stop admitting sessions, hand
+    // every live session to a covering peer over wire-v6 live migration
+    // (clients follow the moved redirect — no replay), and exit. The
+    // rolling-restart story: scripted churn never loses a session.
+    if let Some(secs) = flags.get("drain").and_then(|s| s.parse::<u64>().ok()) {
+        println!("serving; will drain and exit after {secs}s");
+        std::thread::sleep(std::time::Duration::from_secs(secs));
+        match connect_swarm(flags, &home) {
+            Ok(swarm) => {
+                let n = handle.drain(&swarm);
+                println!("drain complete: {n} session(s) migrated; exiting");
+            }
+            Err(m) => {
+                // no discovery configured: still stop admitting, but
+                // there is nobody to hand the sessions to
+                handle.node.set_draining(true);
+                let stranded = handle.node.live_sessions().len();
+                eprintln!("drain: no peers discoverable ({m}); {stranded} session(s) stranded");
+            }
+        }
+        return 0;
     }
     println!("press Ctrl-C to stop");
     loop {

@@ -196,6 +196,13 @@ pub struct NodeMetrics {
     /// Fused decode batches whose rows mixed DIFFERENT cache lengths
     /// (the ragged-batching lever; a subset of `batched_steps`).
     pub ragged_steps: Counter,
+    /// Sessions pushed to a peer by a drain (wire-v6 live migration).
+    pub sessions_migrated_out: Counter,
+    /// Sessions restored from a peer's migration push.
+    pub sessions_migrated_in: Counter,
+    /// Batch rows released early (per-row stop: pages freed before the
+    /// rest of the batch finished).
+    pub rows_exited: Counter,
 }
 
 impl NodeMetrics {
@@ -207,7 +214,8 @@ impl NodeMetrics {
         format!(
             "requests={} failures={} in={}B out={}B step[{}] kv_pages={}/{} \
              batched={} ragged={} fused_rows={} rejects={} prefix_hit={}/{} \
-             prefill_skips={} shared_pages={} cow_forks={} fastpath={} swept={}",
+             prefill_skips={} shared_pages={} cow_forks={} fastpath={} swept={} \
+             migrated_out={} migrated_in={} rows_exited={}",
             self.requests.get(),
             self.failures.get(),
             self.bytes_in.get(),
@@ -226,6 +234,9 @@ impl NodeMetrics {
             self.cow_forks.get(),
             self.fastpath_hits.get(),
             self.sessions_swept.get(),
+            self.sessions_migrated_out.get(),
+            self.sessions_migrated_in.get(),
+            self.rows_exited.get(),
         )
     }
 }

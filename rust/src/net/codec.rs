@@ -20,6 +20,13 @@ pub const MAX_DHT_ADDR: usize = 256;
 /// Most per-row cache lengths one `InferStepRagged` frame may carry
 /// (bounds allocation; real batches are far below this).
 pub const MAX_RAGGED_ROWS: usize = 4096;
+/// Largest data payload one `MigrateSessionChunk` frame may carry
+/// (wire v6): snapshots stream in chunks of at most this size so one
+/// hostile frame can never force a giant allocation.
+pub const MAX_MIGRATE_CHUNK: usize = 4 << 20;
+/// Largest *total* serialized session snapshot a migration target will
+/// accept across all chunks (wire v6 `MigrateSessionOffer.total_bytes`).
+pub const MAX_MIGRATE_TOTAL: usize = 256 << 20;
 
 /// A DHT peer on the wire: node id + the address it can be dialed at.
 /// Requests carry the *caller's* contact so the callee can fold the
@@ -256,6 +263,35 @@ pub enum Message {
     /// (dropped connection); clients downgrade to per-row `InferStep`
     /// frames only when the rows are uniform.
     InferStepRagged { session: u64, cache_lens: Vec<u32>, hidden: TensorPayload },
+    /// Offer a live session's serialized KV state to a peer (wire v6):
+    /// a draining server pushes its sessions to the least-loaded peer
+    /// covering the same span instead of forcing clients to replay.
+    /// `total_bytes` is the full snapshot size (the target rejects
+    /// offers past [`MAX_MIGRATE_TOTAL`] or beyond its free pages);
+    /// `prefix_fp` is the shared-prefix fingerprint (0 = none) so the
+    /// target can re-pin a prefix it already caches instead of storing
+    /// a deep copy.
+    MigrateSessionOffer { session: u64, total_bytes: u64, prefix_fp: u64 },
+    /// Reply to `MigrateSessionOffer`. `accept == 0` declines (the
+    /// donor tries the next candidate); `shared_tokens` is how many
+    /// prefix tokens the target attached from its own prefix cache
+    /// (the donor then skips those pages in the chunk stream).
+    MigrateSessionAccept { session: u64, accept: u8, shared_tokens: u32 },
+    /// One chunk of the serialized snapshot, ≤ [`MAX_MIGRATE_CHUNK`]
+    /// bytes, `seq` strictly increasing from 0. Acked with
+    /// `SessionOpened` so the donor detects a dead target mid-stream.
+    MigrateSessionChunk { session: u64, seq: u32, data: Vec<u8> },
+    /// End of the chunk stream: the target reassembles, decodes, and
+    /// restores the session into its own pool, then acks with
+    /// `SessionOpened` (or `Error` if the snapshot fails validation).
+    MigrateSessionDone { session: u64 },
+    /// Close ONE row of a ragged session (wire v6 per-row early exit):
+    /// the server frees that row's private KV pages immediately while
+    /// the rest of the batch keeps decoding. Acked with
+    /// `SessionOpened`. Legacy servers reject the unknown tag (dropped
+    /// connection); clients treat that as a no-op — the pages are
+    /// reclaimed at session close instead.
+    CloseSessionRow { session: u64, row: u32 },
 }
 
 impl Message {
@@ -287,6 +323,11 @@ impl Message {
             Message::DhtStore { .. } => "DhtStore",
             Message::DhtStored => "DhtStored",
             Message::InferStepRagged { .. } => "InferStepRagged",
+            Message::MigrateSessionOffer { .. } => "MigrateSessionOffer",
+            Message::MigrateSessionAccept { .. } => "MigrateSessionAccept",
+            Message::MigrateSessionChunk { .. } => "MigrateSessionChunk",
+            Message::MigrateSessionDone { .. } => "MigrateSessionDone",
+            Message::CloseSessionRow { .. } => "CloseSessionRow",
         }
     }
 
@@ -428,6 +469,34 @@ impl Message {
                 }
                 hidden.write(&mut out);
             }
+            Message::MigrateSessionOffer { session, total_bytes, prefix_fp } => {
+                out.push(22);
+                out.extend_from_slice(&session.to_le_bytes());
+                out.extend_from_slice(&total_bytes.to_le_bytes());
+                out.extend_from_slice(&prefix_fp.to_le_bytes());
+            }
+            Message::MigrateSessionAccept { session, accept, shared_tokens } => {
+                out.push(23);
+                out.extend_from_slice(&session.to_le_bytes());
+                out.push(*accept);
+                out.extend_from_slice(&shared_tokens.to_le_bytes());
+            }
+            Message::MigrateSessionChunk { session, seq, data } => {
+                out.push(24);
+                out.extend_from_slice(&session.to_le_bytes());
+                out.extend_from_slice(&seq.to_le_bytes());
+                out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+                out.extend_from_slice(data);
+            }
+            Message::MigrateSessionDone { session } => {
+                out.push(25);
+                out.extend_from_slice(&session.to_le_bytes());
+            }
+            Message::CloseSessionRow { session, row } => {
+                out.push(26);
+                out.extend_from_slice(&session.to_le_bytes());
+                out.extend_from_slice(&row.to_le_bytes());
+            }
         }
         out
     }
@@ -558,6 +627,28 @@ impl Message {
                     hidden: TensorPayload::read(&mut r)?,
                 }
             }
+            22 => Message::MigrateSessionOffer {
+                session: r.u64()?,
+                total_bytes: r.u64()?,
+                prefix_fp: r.u64()?,
+            },
+            23 => Message::MigrateSessionAccept {
+                session: r.u64()?,
+                accept: r.u8()?,
+                shared_tokens: r.u32()?,
+            },
+            24 => {
+                let session = r.u64()?;
+                let seq = r.u32()?;
+                let n = r.u32()? as usize;
+                if n > MAX_MIGRATE_CHUNK {
+                    return None; // bound allocation on hostile input
+                }
+                let data = r.bytes(n)?.to_vec();
+                Message::MigrateSessionChunk { session, seq, data }
+            }
+            25 => Message::MigrateSessionDone { session: r.u64()? },
+            26 => Message::CloseSessionRow { session: r.u64()?, row: r.u32()? },
             _ => return None,
         };
         if r.pos != buf.len() {
@@ -703,10 +794,10 @@ mod tests {
     /// every v4 frame) and cross-tag payloads must reject cleanly.
     #[test]
     fn unknown_and_swapped_tags_rejected() {
-        // all unknown tags reject on a representative payload (22 is the
-        // first unassigned tag after wire v5's InferStepRagged)
+        // all unknown tags reject on a representative payload (27 is the
+        // first unassigned tag after wire v6's CloseSessionRow)
         let body = Message::DhtPing { from: contact("a", "127.0.0.1:1") }.encode();
-        for tag in 22..=255u8 {
+        for tag in 27..=255u8 {
             let mut b = body.clone();
             b[0] = tag;
             assert!(Message::decode(&b).is_none(), "tag {tag} accepted");
@@ -715,7 +806,7 @@ mod tests {
         // panic (it may legitimately alias for container-free tags)
         for m in dht_messages() {
             let bytes = m.encode();
-            for tag in 0..=21u8 {
+            for tag in 0..=26u8 {
                 let mut b = bytes.clone();
                 b[0] = tag;
                 let _ = Message::decode(&b); // no panic is the assertion
@@ -752,6 +843,76 @@ mod tests {
     fn trailing_bytes_rejected() {
         let mut b = Message::DhtStored.encode();
         b.push(0);
+        assert!(Message::decode(&b).is_none());
+    }
+
+    fn migrate_messages() -> Vec<Message> {
+        vec![
+            Message::MigrateSessionOffer {
+                session: 0xDEAD_BEEF,
+                total_bytes: 1 << 20,
+                prefix_fp: 0x1234_5678_9ABC_DEF0,
+            },
+            Message::MigrateSessionOffer { session: 1, total_bytes: 0, prefix_fp: 0 },
+            Message::MigrateSessionAccept { session: 7, accept: 1, shared_tokens: 16 },
+            Message::MigrateSessionAccept { session: 7, accept: 0, shared_tokens: 0 },
+            Message::MigrateSessionChunk { session: 7, seq: 0, data: vec![1, 2, 3, 4] },
+            Message::MigrateSessionChunk { session: 7, seq: 3, data: vec![] },
+            Message::MigrateSessionDone { session: 7 },
+            Message::CloseSessionRow { session: 7, row: 2 },
+        ]
+    }
+
+    /// Wire-v6 migration frames round-trip byte-exact.
+    #[test]
+    fn migrate_messages_roundtrip() {
+        for m in migrate_messages() {
+            let bytes = m.encode();
+            let back = Message::decode(&bytes).expect("decode");
+            assert_eq!(bytes, back.encode(), "{}", m.kind());
+        }
+    }
+
+    /// Every truncation of every migration frame rejects cleanly — the
+    /// same hardening bar tags 13–21 meet.
+    #[test]
+    fn truncated_migrate_frames_rejected() {
+        for m in migrate_messages() {
+            let bytes = m.encode();
+            for cut in 0..bytes.len() {
+                assert!(
+                    Message::decode(&bytes[..cut]).is_none(),
+                    "truncated {} at {cut} decoded",
+                    m.kind()
+                );
+            }
+        }
+    }
+
+    /// A forged chunk length past [`MAX_MIGRATE_CHUNK`] (or past the
+    /// frame end) must be rejected before allocation; trailing junk
+    /// after a complete migration frame is a corrupt frame.
+    #[test]
+    fn hostile_migrate_frames_rejected() {
+        // chunk length > cap
+        let mut b = vec![24u8];
+        b.extend_from_slice(&7u64.to_le_bytes());
+        b.extend_from_slice(&0u32.to_le_bytes());
+        b.extend_from_slice(&((MAX_MIGRATE_CHUNK as u32) + 1).to_le_bytes());
+        assert!(Message::decode(&b).is_none());
+        // chunk length within cap but past the frame end
+        let mut b = vec![24u8];
+        b.extend_from_slice(&7u64.to_le_bytes());
+        b.extend_from_slice(&0u32.to_le_bytes());
+        b.extend_from_slice(&1024u32.to_le_bytes());
+        b.extend_from_slice(&[0u8; 16]);
+        assert!(Message::decode(&b).is_none());
+        // trailing junk
+        let mut b = Message::MigrateSessionDone { session: 7 }.encode();
+        b.push(0);
+        assert!(Message::decode(&b).is_none());
+        let mut b = Message::CloseSessionRow { session: 7, row: 0 }.encode();
+        b.push(9);
         assert!(Message::decode(&b).is_none());
     }
 }

@@ -12,7 +12,7 @@ mod framed;
 
 pub use codec::{
     DhtContact, DhtWireRecord, Message, TensorPayload, MAX_DHT_ADDR, MAX_DHT_NODES,
-    MAX_DHT_RECORDS, MAX_RAGGED_ROWS,
+    MAX_DHT_RECORDS, MAX_MIGRATE_CHUNK, MAX_MIGRATE_TOTAL, MAX_RAGGED_ROWS,
 };
 pub use framed::{read_frame, write_frame, FramedConn};
 
@@ -25,13 +25,16 @@ pub const BASE_PORT: u16 = 31337;
 /// token ids for shared-prefix serving; v4 added the Kademlia RPC tags
 /// (`DhtPing`..`DhtStored`, tags 13–20) behind the networked DHT; v5
 /// added `InferStepRagged` (tag 21), the per-row `cache_len` step frame
-/// behind ragged continuous batching. Each step appended new tags only,
-/// so v4 (and older) frames still decode byte-for-byte; older peers
-/// reject the newer tags as undecodable frames, which callers treat as
-/// "peer does not speak this version". The codec has no inline
-/// negotiation, so mixed-version swarms must not share a model
-/// namespace.
-pub const PROTOCOL_VERSION: u32 = 5;
+/// behind ragged continuous batching; v6 added the live-migration tags
+/// (`MigrateSessionOffer`..`MigrateSessionDone`, tags 22–25) plus
+/// `CloseSessionRow` (tag 26) for per-row early exit, and the `moved:`
+/// error-string contract for post-migration redirects. Each step
+/// appended new tags only, so v5 (and older) frames still decode
+/// byte-for-byte; older peers reject the newer tags as undecodable
+/// frames, which callers treat as "peer does not speak this version".
+/// The codec has no inline negotiation, so mixed-version swarms must
+/// not share a model namespace.
+pub const PROTOCOL_VERSION: u32 = 6;
 
 #[cfg(test)]
 mod tests {

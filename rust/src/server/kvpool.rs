@@ -117,6 +117,177 @@ struct PageRun {
     pages: Vec<PageId>,
 }
 
+/// Most rows a serialized snapshot may claim (mirrors the wire codec's
+/// `MAX_RAGGED_ROWS` bound — decodes reject bigger before allocating).
+pub const MAX_SNAPSHOT_ROWS: usize = 4096;
+/// Most token positions one snapshot row may claim.
+pub const MAX_SNAPSHOT_TOKENS: usize = 1 << 20;
+/// Magic prefix of the serialized snapshot encoding (versioned: bump
+/// the digit on any layout change so old bytes reject cleanly).
+const SNAPSHOT_MAGIC: &[u8; 4] = b"KVS1";
+
+/// A session's complete KV state, dereferenced out of the pool — the
+/// serialization unit behind live migration and server-side durability.
+/// `data` holds one gathered `[batch, n_heads, cap, head_dim]` run per
+/// `(block, kv)` pair (`cap` = the deepest row's committed length),
+/// i.e. exactly what [`KvPool::gather_padded`] feeds the decode
+/// artifact: positions past each row's length are zero, which is
+/// invisible to future steps (gathers re-pad, decode overwrites at the
+/// append position), so a restore is bitwise-equivalent for every step
+/// the session has left.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionSnapshot {
+    pub session: u64,
+    pub batch: usize,
+    pub n_blocks: usize,
+    /// The donor's token reservation (admission hint for the restore).
+    pub max_tokens: usize,
+    /// Shared-prefix positions the donor attached at open (0 = none).
+    pub shared_tokens: usize,
+    /// True when every shared-span page was still multiply referenced
+    /// at snapshot time — no row CoW-forked inside the prefix, so a
+    /// restore may re-attach a matching pinned prefix on the target
+    /// ([`KvPool::restore_session_shared`]) instead of deep-copying.
+    pub shared_intact: bool,
+    pub row_lens: Vec<usize>,
+    /// Rows that exited early before the snapshot (restored as exited).
+    pub exited: Vec<bool>,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub page_tokens: usize,
+    /// `n_blocks * 2` runs of `batch * n_heads * cap * head_dim` floats,
+    /// indexed `block * 2 + kv`; `cap` = max row length (0 = empty).
+    pub data: Vec<f32>,
+}
+
+impl SessionSnapshot {
+    /// The gather cap the data runs were serialized at.
+    pub fn cap(&self) -> usize {
+        self.row_lens.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Floats in one `(block, kv)` run of `data`.
+    fn run_floats(&self) -> usize {
+        self.batch * self.n_heads * self.cap() * self.head_dim
+    }
+
+    /// Serialize to the wire-v6 migration payload (chunked by the
+    /// transport; this is the reassembled byte string).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 + self.data.len() * 4);
+        out.extend_from_slice(SNAPSHOT_MAGIC);
+        out.extend_from_slice(&self.session.to_le_bytes());
+        out.extend_from_slice(&(self.batch as u32).to_le_bytes());
+        out.extend_from_slice(&(self.n_blocks as u32).to_le_bytes());
+        out.extend_from_slice(&(self.max_tokens as u32).to_le_bytes());
+        out.extend_from_slice(&(self.shared_tokens as u32).to_le_bytes());
+        out.push(self.shared_intact as u8);
+        out.extend_from_slice(&(self.n_heads as u32).to_le_bytes());
+        out.extend_from_slice(&(self.head_dim as u32).to_le_bytes());
+        out.extend_from_slice(&(self.page_tokens as u32).to_le_bytes());
+        for &l in &self.row_lens {
+            out.extend_from_slice(&(l as u32).to_le_bytes());
+        }
+        for &e in &self.exited {
+            out.push(e as u8);
+        }
+        out.extend_from_slice(&(self.data.len() as u64).to_le_bytes());
+        for &v in &self.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Decode a serialized snapshot, rejecting hostile input (forged
+    /// counts, truncation, trailing junk) before allocating — the same
+    /// hardening bar the wire codec holds.
+    pub fn decode(buf: &[u8]) -> Result<SessionSnapshot> {
+        fn bad(why: &str) -> Error {
+            Error::Protocol(format!("session snapshot: {why}"))
+        }
+        fn take<'a>(buf: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+            let end = pos.checked_add(n).ok_or_else(|| bad("truncated"))?;
+            let s = buf.get(*pos..end).ok_or_else(|| bad("truncated"))?;
+            *pos = end;
+            Ok(s)
+        }
+        fn u32le(s: &[u8]) -> usize {
+            u32::from_le_bytes(s.try_into().unwrap()) as usize
+        }
+        let mut pos = 0usize;
+        if take(buf, &mut pos, 4)? != SNAPSHOT_MAGIC {
+            return Err(bad("bad magic"));
+        }
+        let session = u64::from_le_bytes(take(buf, &mut pos, 8)?.try_into().unwrap());
+        let batch = u32le(take(buf, &mut pos, 4)?);
+        let n_blocks = u32le(take(buf, &mut pos, 4)?);
+        let max_tokens = u32le(take(buf, &mut pos, 4)?);
+        let shared_tokens = u32le(take(buf, &mut pos, 4)?);
+        let shared_intact = take(buf, &mut pos, 1)?[0] != 0;
+        let n_heads = u32le(take(buf, &mut pos, 4)?);
+        let head_dim = u32le(take(buf, &mut pos, 4)?);
+        let page_tokens = u32le(take(buf, &mut pos, 4)?);
+        if batch == 0 || batch > MAX_SNAPSHOT_ROWS {
+            return Err(bad("row count out of bounds"));
+        }
+        if n_blocks == 0 || n_blocks > 4096 || n_heads == 0 || n_heads > 4096
+            || head_dim == 0 || head_dim > 65536 || page_tokens == 0
+            || page_tokens > 65536
+        {
+            return Err(bad("geometry out of bounds"));
+        }
+        let mut row_lens = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let l = u32le(take(buf, &mut pos, 4)?);
+            if l > MAX_SNAPSHOT_TOKENS {
+                return Err(bad("row length out of bounds"));
+            }
+            row_lens.push(l);
+        }
+        let mut exited = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            exited.push(take(buf, &mut pos, 1)?[0] != 0);
+        }
+        let n_data = u64::from_le_bytes(take(buf, &mut pos, 8)?.try_into().unwrap());
+        let cap = row_lens.iter().copied().max().unwrap_or(0);
+        let want = (n_blocks * 2)
+            .checked_mul(batch)
+            .and_then(|v| v.checked_mul(n_heads))
+            .and_then(|v| v.checked_mul(cap))
+            .and_then(|v| v.checked_mul(head_dim))
+            .ok_or_else(|| bad("data size overflows"))?;
+        if n_data != want as u64 {
+            return Err(bad("data length does not match geometry"));
+        }
+        let raw = take(
+            buf,
+            &mut pos,
+            want.checked_mul(4).ok_or_else(|| bad("data size overflows"))?,
+        )?;
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        if pos != buf.len() {
+            return Err(bad("trailing junk"));
+        }
+        Ok(SessionSnapshot {
+            session,
+            batch,
+            n_blocks,
+            max_tokens,
+            shared_tokens,
+            shared_intact,
+            row_lens,
+            exited,
+            n_heads,
+            head_dim,
+            page_tokens,
+            data,
+        })
+    }
+}
+
 /// One session's slice of the pool.
 #[derive(Debug)]
 struct SessionTable {
@@ -155,6 +326,17 @@ struct SessionTable {
     /// Bumped on every structural change to this table (open, fork,
     /// defrag move) — the fast-path literal-cache invalidation key.
     epoch: u64,
+    /// True between a `prepare_write*` and the matching commit: pages
+    /// may hold half-written state, so a snapshot taken now could
+    /// capture bytes no committed step ever produced.
+    /// [`KvPool::snapshot_session`] rejects staged sessions instead of
+    /// serializing corruption.
+    staged: bool,
+    /// Rows that exited early ([`KvPool::release_row`]): their pages
+    /// are freed, writes to them are no-ops, gathers zero-fill them —
+    /// the batch keeps its shape so fused kernels stay bitwise for the
+    /// surviving rows.
+    exited: Vec<bool>,
     /// Indexed by `(block * 2 + kv) * batch + row`.
     runs: Vec<PageRun>,
 }
@@ -299,6 +481,20 @@ impl KvPool {
         self.tables.get(&session).map(|t| t.shared_tokens)
     }
 
+    /// Which rows exited early ([`Self::release_row`]) — one flag per
+    /// batch row.
+    pub fn session_exited_rows(&self, session: u64) -> Option<Vec<bool>> {
+        self.tables.get(&session).map(|t| t.exited.clone())
+    }
+
+    /// True while the session holds a prepared-but-uncommitted write (a
+    /// decode step is mid-flight between page preparation and commit).
+    /// [`Self::snapshot_session`] rejects such sessions; callers poll
+    /// this to retry once the in-flight step commits.
+    pub fn session_staged(&self, session: u64) -> Option<bool> {
+        self.tables.get(&session).map(|t| t.staged)
+    }
+
     /// Structural-change epoch of a session's page table (fast-path
     /// invalidation key; see module docs).
     pub fn table_epoch(&self, session: u64) -> Option<u64> {
@@ -377,6 +573,8 @@ impl KvPool {
                 fork_tokens_bump: 0,
                 fork_tokens_after: 0,
                 epoch,
+                staged: false,
+                exited: vec![false; batch],
                 runs: vec![PageRun::default(); n_blocks * 2 * batch],
             },
         );
@@ -476,6 +674,8 @@ impl KvPool {
                 fork_tokens_bump: 0,
                 fork_tokens_after: 0,
                 epoch,
+                staged: false,
+                exited: vec![false; batch],
                 runs,
             },
         );
@@ -530,6 +730,50 @@ impl KvPool {
         }
         self.reserved_unwritten = self.reserved_unwritten.saturating_sub(t.reserved_pages_left);
         self.check_invariant();
+    }
+
+    /// Retire one row of a multi-row session early (per-row stop_tokens
+    /// hit its stop while the rest of the batch keeps decoding): the
+    /// row's page references are dropped immediately — pages return to
+    /// the free list at refcount zero, so a *concurrent* session can
+    /// reuse them before this batch finishes — and the row becomes a
+    /// no-op for all future writes while [`Self::gather_padded`]
+    /// zero-fills it. The batch keeps its shape, so the fused kernel's
+    /// arithmetic on surviving rows is unchanged (bitwise). Returns the
+    /// number of pages actually freed (shared pages survive for their
+    /// other holders).
+    pub fn release_row(&mut self, session: u64, row: usize) -> Result<usize> {
+        let t = self
+            .tables
+            .get(&session)
+            .ok_or_else(|| Error::NotFound(format!("session {session}")))?;
+        if row >= t.batch {
+            return Err(Error::Shape(format!(
+                "row {row} out of batch {} (session {session})",
+                t.batch
+            )));
+        }
+        if t.exited[row] {
+            return Ok(0); // double release is a no-op
+        }
+        let (batch, n_blocks) = (t.batch, t.n_blocks);
+        let pages: Vec<PageId> = (0..n_blocks * 2)
+            .flat_map(|bk| t.runs[bk * batch + row].pages.iter().copied())
+            .collect();
+        let used_before = self.used_pages;
+        for p in pages {
+            self.release_page(p);
+        }
+        let epoch = self.next_epoch();
+        let t = self.tables.get_mut(&session).unwrap();
+        t.exited[row] = true;
+        t.row_lens[row] = 0;
+        for bk in 0..n_blocks * 2 {
+            t.runs[bk * batch + row].pages.clear();
+        }
+        t.epoch = epoch;
+        self.check_invariant();
+        Ok(used_before - self.used_pages)
     }
 
     /// Pin the leading `tokens` positions of `session`'s page tables as a
@@ -770,6 +1014,9 @@ impl KvPool {
                 "row {row} out of batch {batch} (session {session})"
             )));
         }
+        if self.tables[&session].exited[row] {
+            return Ok(0); // the row left the batch; nothing to prepare
+        }
         let runs: Vec<usize> = (0..n_blocks * 2).map(|bk| bk * batch + row).collect();
         self.prepare_runs(session, runs, from, to)
     }
@@ -824,6 +1071,9 @@ impl KvPool {
                 }
             }
         }
+        // a prepared write is now in flight: the session is un-snapshot-
+        // table until the owning step commits (see `SessionTable::staged`)
+        self.tables.get_mut(&session).unwrap().staged = true;
         self.check_invariant();
         Ok(forks)
     }
@@ -875,6 +1125,9 @@ impl KvPool {
             )));
         }
         for row in 0..batch {
+            if t.exited[row] {
+                continue; // exited rows hold no pages
+            }
             let run_idx = t.run_index(block, kv, row);
             let page_ids: Vec<PageId> = self.tables[&session].runs[run_idx].pages.clone();
             for (pi, &pid) in page_ids.iter().enumerate() {
@@ -962,6 +1215,9 @@ impl KvPool {
                 src.len()
             )));
         }
+        if t.exited[row] {
+            return Ok(()); // the row left the batch; drop the write
+        }
         let (page_idx, in_page) = (pos / pt, pos % pt);
         let run_idx = t.run_index(block, kv, row);
         let pid = *t.runs[run_idx].pages.get(page_idx).ok_or_else(|| {
@@ -984,9 +1240,12 @@ impl KvPool {
     /// valid token positions — the uniform-prefill commit.
     pub fn commit_len(&mut self, session: u64, len: usize) {
         if let Some(t) = self.tables.get_mut(&session) {
-            for l in &mut t.row_lens {
-                *l = (*l).max(len);
+            for (row, l) in t.row_lens.iter_mut().enumerate() {
+                if !t.exited[row] {
+                    *l = (*l).max(len);
+                }
             }
+            t.staged = false;
         }
     }
 
@@ -999,9 +1258,12 @@ impl KvPool {
     /// ignored.
     pub fn commit_row_lens(&mut self, session: u64, lens: &[usize]) {
         if let Some(t) = self.tables.get_mut(&session) {
-            for (l, &new) in t.row_lens.iter_mut().zip(lens) {
-                *l = (*l).max(new);
+            for (row, (l, &new)) in t.row_lens.iter_mut().zip(lens).enumerate() {
+                if !t.exited[row] {
+                    *l = (*l).max(new);
+                }
             }
+            t.staged = false;
         }
     }
 
@@ -1009,9 +1271,12 @@ impl KvPool {
     /// the ragged-decode commit (rows advance independently).
     pub fn commit_row_len(&mut self, session: u64, row: usize, len: usize) {
         if let Some(t) = self.tables.get_mut(&session) {
-            if let Some(l) = t.row_lens.get_mut(row) {
-                *l = (*l).max(len);
+            if !t.exited.get(row).copied().unwrap_or(true) {
+                if let Some(l) = t.row_lens.get_mut(row) {
+                    *l = (*l).max(len);
+                }
             }
+            t.staged = false;
         }
     }
 
@@ -1065,6 +1330,224 @@ impl KvPool {
                 }
             }
         }
+        Ok(())
+    }
+
+    /// Serialize a session's full KV state ([`SessionSnapshot`]) —
+    /// shared-prefix pages are dereferenced (the snapshot is
+    /// self-contained), per-row lengths and early exits are carried,
+    /// and positions past each row's length serialize as zero (exactly
+    /// the bytes [`Self::gather_padded`] would feed compute, so a
+    /// restored session is bitwise-equivalent for all future steps).
+    ///
+    /// A session with a prepared-but-uncommitted write (staged) is
+    /// **rejected** — its pages may hold half-written state, and
+    /// serializing that would migrate corruption. Callers retry after
+    /// the in-flight step commits.
+    pub fn snapshot_session(&self, session: u64) -> Result<SessionSnapshot> {
+        let t = self
+            .tables
+            .get(&session)
+            .ok_or_else(|| Error::NotFound(format!("session {session}")))?;
+        if t.staged {
+            return Err(Error::Protocol(format!(
+                "session {session} has a staged uncommitted write — snapshot would capture torn state"
+            )));
+        }
+        let (hh, d) = (self.cfg.n_heads, self.cfg.head_dim);
+        let cap = t.max_len();
+        let run_floats = t.batch * hh * cap * d;
+        let mut data = vec![0.0f32; t.n_blocks * 2 * run_floats];
+        for block in 0..t.n_blocks {
+            for kv in 0..2 {
+                let run = block * 2 + kv;
+                if run_floats > 0 {
+                    self.gather_padded(
+                        session,
+                        block,
+                        kv,
+                        cap,
+                        &mut data[run * run_floats..(run + 1) * run_floats],
+                    )?;
+                }
+            }
+        }
+        // intact := every shared-span page is still multiply referenced
+        // (this session + the pin/other holders). A refcount of 1 means
+        // some row CoW-forked inside the prefix — the prefix bytes are
+        // no longer the pinned original's, so a restore must deep-copy.
+        let pt = self.cfg.page_tokens.max(1);
+        let mut shared_intact = t.shared_tokens > 0;
+        if shared_intact {
+            let n_shared = t.shared_tokens / pt;
+            'scan: for run in &t.runs {
+                for &pid in run.pages.iter().take(n_shared) {
+                    if self.refs[pid as usize] <= 1 {
+                        shared_intact = false;
+                        break 'scan;
+                    }
+                }
+            }
+        }
+        Ok(SessionSnapshot {
+            session,
+            batch: t.batch,
+            n_blocks: t.n_blocks,
+            max_tokens: t.reserved_tokens,
+            shared_tokens: t.shared_tokens,
+            shared_intact,
+            row_lens: t.row_lens.clone(),
+            exited: t.exited.clone(),
+            n_heads: hh,
+            head_dim: d,
+            page_tokens: self.cfg.page_tokens,
+            data,
+        })
+    }
+
+    /// Rebuild a session from a snapshot as fully private pages (the
+    /// deep-copy restore — always correct, charges the full page
+    /// budget). Fails with [`Error::Busy`] when the pool lacks room and
+    /// [`Error::Protocol`] on a geometry mismatch; on error the pool is
+    /// unchanged (the half-open session is torn down).
+    pub fn restore_session(&mut self, snap: &SessionSnapshot) -> Result<()> {
+        self.check_snapshot_geometry(snap)?;
+        let cap = snap.cap();
+        self.open_session(
+            snap.session,
+            snap.batch,
+            snap.n_blocks,
+            snap.max_tokens.max(cap),
+        )?;
+        if let Err(e) = self.restore_rows(snap, 0) {
+            self.close_session(snap.session);
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Rebuild a session from a snapshot on top of a pinned prefix the
+    /// target already holds: the first `share` positions attach by
+    /// reference (marginal page cost only), the private suffix is
+    /// deep-copied. Only sound when the snapshot's shared span still
+    /// held the pinned original's bytes (`snap.shared_intact`) AND the
+    /// target's pin covers the same prefix — the caller establishes the
+    /// content match (prefix fingerprint); this method enforces the
+    /// structural half and rejects otherwise.
+    pub fn restore_session_shared(
+        &mut self,
+        snap: &SessionSnapshot,
+        pin: u64,
+        share: usize,
+    ) -> Result<()> {
+        self.check_snapshot_geometry(snap)?;
+        if !snap.shared_intact {
+            return Err(Error::Protocol(format!(
+                "session {}: snapshot forked inside its shared span — deep-copy restore required",
+                snap.session
+            )));
+        }
+        let pt = self.cfg.page_tokens.max(1);
+        if share == 0 || share % pt != 0 || share > snap.shared_tokens {
+            return Err(Error::Protocol(format!(
+                "share span {share} invalid (page_tokens {pt}, snapshot shared {})",
+                snap.shared_tokens
+            )));
+        }
+        let min_live = snap
+            .row_lens
+            .iter()
+            .zip(&snap.exited)
+            .filter(|&(_, &e)| !e)
+            .map(|(&l, _)| l)
+            .min()
+            .unwrap_or(0);
+        if share > min_live {
+            return Err(Error::Protocol(format!(
+                "share span {share} exceeds a live row's length {min_live}"
+            )));
+        }
+        let cap = snap.cap();
+        self.open_session_shared(
+            snap.session,
+            snap.batch,
+            snap.n_blocks,
+            snap.max_tokens.max(cap),
+            pin,
+            share,
+            share,
+        )?;
+        if let Err(e) = self.restore_rows(snap, share) {
+            self.close_session(snap.session);
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    fn check_snapshot_geometry(&self, snap: &SessionSnapshot) -> Result<()> {
+        if snap.n_heads != self.cfg.n_heads
+            || snap.head_dim != self.cfg.head_dim
+            || snap.page_tokens != self.cfg.page_tokens
+        {
+            return Err(Error::Protocol(format!(
+                "snapshot geometry {}x{}x{} does not match pool {}x{}x{}",
+                snap.n_heads,
+                snap.head_dim,
+                snap.page_tokens,
+                self.cfg.n_heads,
+                self.cfg.head_dim,
+                self.cfg.page_tokens
+            )));
+        }
+        if snap.row_lens.len() != snap.batch || snap.exited.len() != snap.batch {
+            return Err(Error::Protocol(
+                "snapshot row metadata does not match its batch".into(),
+            ));
+        }
+        let want = snap.n_blocks * 2 * snap.run_floats();
+        if snap.data.len() != want {
+            return Err(Error::Protocol(format!(
+                "snapshot data holds {} floats, geometry implies {want}",
+                snap.data.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Shared tail of the restore paths: re-apply early exits, write
+    /// each live row's bytes above `from`, commit the per-row lengths.
+    /// The session `snap.session` must already be open.
+    fn restore_rows(&mut self, snap: &SessionSnapshot, from: usize) -> Result<()> {
+        let id = snap.session;
+        // mark exits FIRST so their pages are never materialized
+        for (row, &e) in snap.exited.iter().enumerate() {
+            if e {
+                self.release_row(id, row)?;
+            }
+        }
+        let cap = snap.cap();
+        if cap > from {
+            for (row, &e) in snap.exited.iter().enumerate() {
+                if !e {
+                    self.prepare_write_row(id, row, from, cap - 1)?;
+                }
+            }
+            let run_floats = snap.run_floats();
+            for block in 0..snap.n_blocks {
+                for kv in 0..2 {
+                    let run = block * 2 + kv;
+                    self.write_prefill_from(
+                        id,
+                        block,
+                        kv,
+                        &snap.data[run * run_floats..(run + 1) * run_floats],
+                        cap,
+                        from,
+                    )?;
+                }
+            }
+        }
+        self.commit_row_lens(id, &snap.row_lens);
         Ok(())
     }
 
@@ -1859,5 +2342,308 @@ mod tests {
         assert!(p.unpin_prefix(pin));
         assert_eq!(p.used_pages(), 0, "all rows' references released, nothing leaks");
         assert_eq!(p.free_pages(), 64);
+    }
+
+    // ---- per-row early exit ------------------------------------------------
+
+    /// A released row's pages are reusable by a CONCURRENT session
+    /// before the batch finishes, its writes become no-ops, and the
+    /// surviving rows' bytes are untouched (the fused-with-exits ==
+    /// serial bitwise contract at the pool level).
+    #[test]
+    fn release_row_frees_pages_for_concurrent_session_and_keeps_survivors_bitwise() {
+        // capacity exactly one 3-row session: 2 halves x 3 rows x 2 pages
+        let mut p = KvPool::new(cfg(12));
+        p.open_session(1, 3, 1, 8).unwrap();
+        p.prepare_write(1, 7).unwrap();
+        let w = kv_src(3, 2, 8, 3, 1.0);
+        p.write_prefill(1, 0, 0, &w, 8).unwrap();
+        p.commit_row_lens(1, &[8, 8, 8]);
+        assert_eq!(p.free_pages(), 0, "pool fully spoken for");
+        assert!(matches!(p.open_session(2, 1, 1, 8), Err(Error::Busy(_))));
+        // row 1 hits its stop token and exits early
+        let freed = p.release_row(1, 1).unwrap();
+        assert_eq!(freed, 4, "both K/V runs' 2 pages freed");
+        assert_eq!(p.session_exited_rows(1), Some(vec![false, true, false]));
+        assert_eq!(p.session_row_lens(1), Some(vec![8, 0, 8]));
+        // the freed pages admit a concurrent session IMMEDIATELY
+        p.open_session(2, 1, 1, 8)
+            .expect("released pages must be admissible before the batch finishes");
+        p.prepare_write(2, 7).unwrap();
+        // writes to the exited row are dropped; survivors still advance
+        let col = vec![42.0f32; 2 * 3];
+        p.prepare_write_row(1, 1, 8, 8).unwrap(); // no-op, not an error
+        p.write_column_row(1, 0, 0, 1, 8, &col).unwrap(); // dropped
+        p.commit_row_len(1, 1, 9); // ignored
+        assert_eq!(p.session_row_lens(1), Some(vec![8, 0, 8]));
+        // surviving rows' bytes match an exit-free run of the same data
+        let mut got = vec![0.0f32; 3 * 2 * 8 * 3];
+        p.gather_padded(1, 0, 0, 8, &mut got).unwrap();
+        let mut clean = KvPool::new(cfg(12));
+        clean.open_session(1, 3, 1, 8).unwrap();
+        clean.prepare_write(1, 7).unwrap();
+        clean.write_prefill(1, 0, 0, &w, 8).unwrap();
+        clean.commit_row_lens(1, &[8, 8, 8]);
+        let mut want = vec![0.0f32; 3 * 2 * 8 * 3];
+        clean.gather_padded(1, 0, 0, 8, &mut want).unwrap();
+        let stride = 2 * 8 * 3;
+        assert_eq!(&got[..stride], &want[..stride], "row 0 bitwise");
+        assert_eq!(&got[2 * stride..], &want[2 * stride..], "row 2 bitwise");
+        assert!(got[stride..2 * stride].iter().all(|&v| v == 0.0), "exited row zero-filled");
+        // double release is a no-op; close still balances
+        assert_eq!(p.release_row(1, 1).unwrap(), 0);
+        p.close_session(1);
+        p.close_session(2);
+        assert_eq!(p.used_pages(), 0);
+        assert_eq!(p.free_pages(), 12);
+    }
+
+    /// Releasing a row that shares a pinned prefix drops only its
+    /// references — the pin and sibling rows keep reading the bytes.
+    #[test]
+    fn release_row_respects_shared_prefix() {
+        let (mut p, pin) = donor_with_pin(64);
+        p.open_session_shared(2, 2, 1, 12, pin, 8, 8).unwrap();
+        p.release_row(2, 0).unwrap();
+        let mut dst = vec![0.0f32; 2 * 2 * 8 * 3];
+        p.gather_padded(2, 0, 0, 8, &mut dst).unwrap();
+        let stride = 2 * 8 * 3;
+        assert!(dst[..stride].iter().all(|&v| v == 0.0), "exited row zeroed");
+        assert_eq!(dst[stride], 1.0, "sibling row still reads the prefix");
+        p.close_session(2);
+        p.close_session(1);
+        assert!(p.used_pages() > 0, "pin keeps the prefix alive");
+        p.unpin_prefix(pin);
+        assert_eq!(p.used_pages(), 0);
+    }
+
+    // ---- session snapshots -------------------------------------------------
+
+    /// Bitwise helper: every (block, kv) gather of `a` equals `b`.
+    fn assert_pools_agree(a: &KvPool, b: &KvPool, session: u64, n_blocks: usize, cap: usize) {
+        let batch = a.session_batch(session).unwrap();
+        assert_eq!(b.session_batch(session), Some(batch));
+        assert_eq!(a.session_row_lens(session), b.session_row_lens(session));
+        let n = batch * 2 * cap * 3;
+        for block in 0..n_blocks {
+            for kv in 0..2 {
+                let mut ga = vec![0.0f32; n];
+                let mut gb = vec![0.0f32; n];
+                a.gather_padded(session, block, kv, cap, &mut ga).unwrap();
+                b.gather_padded(session, block, kv, cap, &mut gb).unwrap();
+                assert_eq!(ga, gb, "block {block} kv {kv} diverged");
+            }
+        }
+    }
+
+    /// Round-trip under fragmentation: snapshot a session whose pages
+    /// are scattered by neighbor churn, encode/decode the bytes, restore
+    /// on a FRESH pool — every future gather and decode step is bitwise
+    /// identical.
+    #[test]
+    fn snapshot_roundtrip_under_fragmentation() {
+        let mut p = KvPool::new(cfg(64));
+        // interleave opens so session 5's pages are non-contiguous
+        p.open_session(7, 1, 2, 8).unwrap();
+        p.prepare_write(7, 7).unwrap();
+        p.open_session(5, 2, 2, 12).unwrap();
+        p.prepare_write(5, 7).unwrap();
+        p.open_session(8, 1, 2, 8).unwrap();
+        p.prepare_write(8, 7).unwrap();
+        for block in 0..2 {
+            for kv in 0..2 {
+                let w = kv_src(2, 2, 8, 3, (block * 2 + kv) as f32);
+                p.write_prefill(5, block, kv, &w, 8).unwrap();
+            }
+        }
+        p.commit_row_lens(5, &[6, 8]);
+        p.close_session(7); // fragmentation: holes below session 5's pages
+        // ragged decode advances row 0 before the snapshot
+        p.prepare_write_row(5, 0, 6, 6).unwrap();
+        let col = vec![77.0f32; 2 * 3];
+        p.write_column_row(5, 0, 0, 0, 6, &col).unwrap();
+        p.commit_row_len(5, 0, 7);
+
+        let snap = p.snapshot_session(5).unwrap();
+        assert_eq!(snap.batch, 2);
+        assert_eq!(snap.row_lens, vec![7, 8]);
+        let bytes = snap.encode();
+        let back = SessionSnapshot::decode(&bytes).unwrap();
+        assert_eq!(back, snap, "encode/decode round-trip");
+
+        let mut fresh = KvPool::new(cfg(64));
+        fresh.restore_session(&back).unwrap();
+        assert_pools_agree(&p, &fresh, 5, 2, 10);
+        // future steps stay bitwise: the same ragged decode on both
+        for pool in [&mut p, &mut fresh] {
+            pool.prepare_write_row(5, 0, 7, 7).unwrap();
+            let c = vec![-3.0f32; 2 * 3];
+            pool.write_column_row(5, 1, 0, 0, 7, &c).unwrap();
+            pool.commit_row_len(5, 0, 8);
+        }
+        assert_pools_agree(&p, &fresh, 5, 2, 10);
+    }
+
+    /// CoW-forked rows snapshot their FORKED bytes (`shared_intact`
+    /// goes false), deep-copy restore reproduces them, and the re-pin
+    /// restore path refuses (it would resurrect the pre-fork bytes).
+    #[test]
+    fn snapshot_cow_forked_rows_deep_copies_and_repin_rejects() {
+        let (mut p, pin) = donor_with_pin(64);
+        p.open_session_shared(2, 2, 1, 16, pin, 8, 8).unwrap();
+        // row 1 diverges INSIDE the shared prefix
+        p.prepare_write_row(2, 1, 2, 2).unwrap();
+        let col = vec![-5.0f32; 2 * 3];
+        p.write_column_row(2, 0, 0, 1, 2, &col).unwrap();
+        p.write_column_row(2, 0, 1, 1, 2, &col).unwrap();
+        p.commit_row_len(2, 1, 8);
+        let snap = p.snapshot_session(2).unwrap();
+        assert!(!snap.shared_intact, "fork inside the prefix must be detected");
+
+        // deep-copy restore reproduces the forked bytes on a fresh pool
+        let mut fresh = KvPool::new(cfg(64));
+        fresh.restore_session(&snap).unwrap();
+        assert_pools_agree(&p, &fresh, 2, 1, 8);
+        let mut dst = vec![0.0f32; 2 * 2 * 8 * 3];
+        fresh.gather_padded(2, 0, 0, 8, &mut dst).unwrap();
+        let stride = 2 * 8 * 3;
+        assert_eq!(dst[stride + 2 * 3], -5.0, "forked byte survives the migration");
+        assert_eq!(dst[2 * 3], 1.0 + 2.0, "unforked row keeps the donor bytes");
+
+        // the shared restore path must refuse a forked snapshot even
+        // against a matching pin
+        let (mut target, tpin) = donor_with_pin(64);
+        let err = target.restore_session_shared(&snap, tpin, 8).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err}");
+        assert!(!target.has_session(2), "rejected restore leaves no residue");
+    }
+
+    /// Un-forked shared sessions restore through a matching pin at
+    /// marginal page cost — and still bitwise (restore must re-pin OR
+    /// deep-copy; this is the re-pin path, the test above is the
+    /// deep-copy path).
+    #[test]
+    fn snapshot_restores_through_matching_pin_at_marginal_cost() {
+        let (mut p, pin) = donor_with_pin(64);
+        p.open_session_shared(2, 2, 1, 16, pin, 8, 8).unwrap();
+        // both rows decode past the prefix — no fork inside it
+        for row in 0..2 {
+            p.prepare_write_row(2, row, 8, 8).unwrap();
+            let col = vec![10.0 + row as f32; 2 * 3];
+            p.write_column_row(2, 0, 0, row, 8, &col).unwrap();
+            p.write_column_row(2, 0, 1, row, 8, &col).unwrap();
+            p.commit_row_len(2, row, 9);
+        }
+        let snap = p.snapshot_session(2).unwrap();
+        assert!(snap.shared_intact);
+        assert_eq!(snap.shared_tokens, 8);
+
+        // target already serves the same prefix (same bytes, own pin)
+        let (mut target, tpin) = donor_with_pin(64);
+        let used_before = target.used_pages();
+        target.restore_session_shared(&snap, tpin, 8).unwrap();
+        assert_pools_agree(&p, &target, 2, 1, 9);
+        // marginal restore: only suffix pages materialized (1 page per
+        // K/V half per row = 4), never the 2-page prefix per run
+        assert_eq!(target.used_pages() - used_before, 4, "prefix attached by reference");
+        assert!(target.shared_pages() >= 4, "pin pages multiply referenced again");
+
+        // compare against the deep-copy restore: strictly more pages
+        let mut deep = KvPool::new(cfg(64));
+        deep.restore_session(&snap).unwrap();
+        assert_pools_agree(&p, &deep, 2, 1, 9);
+        assert!(
+            deep.used_pages() > target.used_pages() - used_before,
+            "deep copy must cost more pages than the re-pin restore"
+        );
+    }
+
+    /// Snapshot of a mid-staged-commit session is rejected — and the
+    /// session is NOT corrupted: the in-flight step commits and a
+    /// retried snapshot round-trips.
+    #[test]
+    fn staged_commit_snapshot_rejected_not_corrupted() {
+        let mut p = KvPool::new(cfg(32));
+        p.open_session(3, 1, 1, 16).unwrap();
+        p.prepare_write(3, 7).unwrap();
+        let w = kv_src(1, 2, 8, 3, 2.0);
+        p.write_prefill(3, 0, 0, &w, 8).unwrap();
+        p.commit_len(3, 8);
+        // a decode step stages its write...
+        p.prepare_write(3, 8).unwrap();
+        let err = p.snapshot_session(3).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err}");
+        // ...the step finishes; the session snapshots cleanly after
+        let col = vec![9.0f32; 2 * 3];
+        p.write_column(3, 0, 0, 8, &col).unwrap();
+        p.commit_len(3, 9);
+        let snap = p.snapshot_session(3).unwrap();
+        let mut fresh = KvPool::new(cfg(32));
+        fresh.restore_session(&SessionSnapshot::decode(&snap.encode()).unwrap()).unwrap();
+        assert_pools_agree(&p, &fresh, 3, 1, 9);
+    }
+
+    /// Early-exited rows survive the snapshot: restored as exited (no
+    /// pages, zero-filled, writes dropped) while live rows are bitwise.
+    #[test]
+    fn snapshot_carries_early_exits() {
+        let mut p = KvPool::new(cfg(32));
+        p.open_session(4, 3, 1, 8).unwrap();
+        p.prepare_write(4, 7).unwrap();
+        let w = kv_src(3, 2, 8, 3, 1.0);
+        p.write_prefill(4, 0, 0, &w, 8).unwrap();
+        p.commit_row_lens(4, &[8, 8, 8]);
+        p.release_row(4, 1).unwrap();
+        let snap = p.snapshot_session(4).unwrap();
+        assert_eq!(snap.exited, vec![false, true, false]);
+        let mut fresh = KvPool::new(cfg(32));
+        fresh.restore_session(&snap).unwrap();
+        assert_eq!(fresh.session_exited_rows(4), Some(vec![false, true, false]));
+        assert_pools_agree(&p, &fresh, 4, 1, 8);
+        // the restored exited row holds no pages and drops writes
+        let col = vec![5.0f32; 2 * 3];
+        fresh.write_column_row(4, 0, 0, 1, 0, &col).unwrap();
+        assert_eq!(fresh.session_row_lens(4), Some(vec![8, 0, 8]));
+    }
+
+    /// Hostile snapshot bytes: every truncation rejects, forged counts
+    /// reject before allocation, trailing junk rejects, and a geometry
+    /// mismatch at restore time rejects without pool damage.
+    #[test]
+    fn hostile_snapshot_bytes_rejected() {
+        let (mut p, _pin) = donor_with_pin(32);
+        let snap = p.snapshot_session(1).unwrap();
+        let bytes = snap.encode();
+        for cut in 0..bytes.len() {
+            assert!(
+                SessionSnapshot::decode(&bytes[..cut]).is_err(),
+                "truncation at {cut} accepted"
+            );
+        }
+        let mut junk = bytes.clone();
+        junk.push(0);
+        assert!(SessionSnapshot::decode(&junk).is_err(), "trailing junk accepted");
+        // forged row count far past the cap
+        let mut forged = bytes.clone();
+        forged[12..16].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(SessionSnapshot::decode(&forged).is_err(), "forged batch accepted");
+        // wrong magic
+        let mut magic = bytes.clone();
+        magic[0] = b'X';
+        assert!(SessionSnapshot::decode(&magic).is_err());
+        // geometry mismatch at restore: a pool with different heads
+        let mut other = KvPool::new(KvPoolConfig {
+            n_heads: 4,
+            head_dim: 3,
+            page_tokens: 4,
+            capacity_pages: 32,
+        });
+        let err = other.restore_session(&snap).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err}");
+        assert_eq!(other.used_pages(), 0, "failed restore leaves nothing behind");
+        // a restore into a FULL pool is Busy, not corruption
+        let mut tiny = KvPool::new(cfg(2));
+        assert!(matches!(tiny.restore_session(&snap), Err(Error::Busy(_))));
+        assert_eq!(tiny.n_sessions(), 0);
     }
 }

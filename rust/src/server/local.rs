@@ -8,8 +8,15 @@ use crate::coordinator::session::ChainClient;
 use crate::dht::NodeId;
 use crate::error::{Error, Result};
 use crate::model::tensor::Tensor;
+use crate::net::{Message, MAX_MIGRATE_CHUNK};
 use crate::server::ServerNode;
 use std::sync::{Arc, Mutex, RwLock};
+
+/// The "dial address" an in-process node advertises in its `moved:`
+/// redirects — resolvable only by [`LocalCluster::resolve_moved`].
+fn local_addr(id: NodeId) -> String {
+    format!("local:{}", id.short())
+}
 
 /// A set of in-process servers with kill/revive switches (failure
 /// injection) and per-server simulated link stats for routing.
@@ -95,6 +102,99 @@ impl LocalCluster {
     pub fn ids(&self) -> Vec<NodeId> {
         self.servers.read().unwrap().iter().map(|m| m.node.id).collect()
     }
+
+    /// Live-migrate one session between two in-process nodes, driving
+    /// the SAME wire-v6 state machine the TCP path uses (offer → chunks
+    /// → done through [`ServerNode::handle`]), so fault-injection tests
+    /// pin the real protocol without sockets. Ordering matches
+    /// `service::migrate_session`: mark moved first, snapshot second.
+    pub fn migrate_session(&self, donor: NodeId, target: NodeId, session: u64) -> Result<()> {
+        let d = self
+            .node(donor)
+            .ok_or_else(|| Error::NotFound(format!("server {}", donor.short())))?;
+        let t = self
+            .node(target)
+            .ok_or_else(|| Error::NotFound(format!("server {}", target.short())))?;
+        d.begin_migration_out(session, &local_addr(target));
+        let result = (|| -> Result<()> {
+            let bytes = d.snapshot_session_bytes(session)?;
+            let offer = Message::MigrateSessionOffer {
+                session,
+                total_bytes: bytes.len() as u64,
+                prefix_fp: d.session_prefix_fingerprint(session),
+            };
+            match t.handle(&offer) {
+                Message::MigrateSessionAccept { accept: 1, .. } => {}
+                Message::MigrateSessionAccept { .. } => {
+                    return Err(Error::Busy("target declined migration".into()))
+                }
+                Message::Error { message } => return Err(Error::from_wire(message)),
+                other => return Err(Error::Protocol(format!("unexpected {}", other.kind()))),
+            }
+            for (seq, chunk) in bytes.chunks(MAX_MIGRATE_CHUNK).enumerate() {
+                let msg = Message::MigrateSessionChunk {
+                    session,
+                    seq: seq as u32,
+                    data: chunk.to_vec(),
+                };
+                match t.handle(&msg) {
+                    Message::SessionOpened { .. } => {}
+                    Message::Error { message } => return Err(Error::from_wire(message)),
+                    other => {
+                        return Err(Error::Protocol(format!("unexpected {}", other.kind())))
+                    }
+                }
+            }
+            match t.handle(&Message::MigrateSessionDone { session }) {
+                Message::SessionOpened { .. } => Ok(()),
+                Message::Error { message } => Err(Error::from_wire(message)),
+                other => Err(Error::Protocol(format!("unexpected {}", other.kind()))),
+            }
+        })();
+        match result {
+            Ok(()) => {
+                d.finish_migration_out(session);
+                Ok(())
+            }
+            Err(e) => {
+                d.abort_migration_out(session);
+                Err(e)
+            }
+        }
+    }
+
+    /// Drain one node: stop admissions, push every live session to the
+    /// first sibling whose span covers the drainer's; returns how many
+    /// migrated (the rest stay local).
+    pub fn drain(&self, id: NodeId) -> Result<usize> {
+        let d = self
+            .node(id)
+            .ok_or_else(|| Error::NotFound(format!("server {}", id.short())))?;
+        d.set_draining(true);
+        let candidates: Vec<NodeId> = {
+            let servers = self.servers.read().unwrap();
+            servers
+                .iter()
+                .filter(|m| {
+                    m.alive
+                        && m.node.id != id
+                        && m.node.start <= d.start
+                        && m.node.end >= d.end
+                })
+                .map(|m| m.node.id)
+                .collect()
+        };
+        let mut migrated = 0;
+        for session in d.live_sessions() {
+            for &cand in &candidates {
+                if self.migrate_session(id, cand, session).is_ok() {
+                    migrated += 1;
+                    break;
+                }
+            }
+        }
+        Ok(migrated)
+    }
 }
 
 impl Default for LocalCluster {
@@ -170,11 +270,22 @@ impl ChainClient for LocalCluster {
     }
 
     fn prefill(&self, server: NodeId, session: u64, hidden: &Tensor) -> Result<Tensor> {
-        self.with_node(server, |n| n.prefill(session, hidden))
+        self.with_node(server, |n| {
+            // same bounce the TCP path sends for migrated-away sessions
+            if let Some(addr) = n.moved_addr(session) {
+                return Err(Error::Moved(addr));
+            }
+            n.prefill(session, hidden)
+        })
     }
 
     fn step(&self, server: NodeId, session: u64, cache_len: usize, hidden: &Tensor) -> Result<Tensor> {
-        self.with_node(server, |n| n.step(session, cache_len, hidden))
+        self.with_node(server, |n| {
+            if let Some(addr) = n.moved_addr(session) {
+                return Err(Error::Moved(addr));
+            }
+            n.step(session, cache_len, hidden)
+        })
     }
 
     fn step_ragged(
@@ -184,7 +295,12 @@ impl ChainClient for LocalCluster {
         row_lens: &[usize],
         hidden: &Tensor,
     ) -> Result<Tensor> {
-        self.with_node(server, |n| n.step_ragged(session, row_lens, hidden))
+        self.with_node(server, |n| {
+            if let Some(addr) = n.moved_addr(session) {
+                return Err(Error::Moved(addr));
+            }
+            n.step_ragged(session, row_lens, hidden)
+        })
     }
 
     fn close_session(&self, server: NodeId, session: u64) {
@@ -192,6 +308,18 @@ impl ChainClient for LocalCluster {
             n.close_session(session);
             Ok(())
         });
+    }
+
+    fn close_row(&self, server: NodeId, session: u64, row: usize) -> Result<()> {
+        self.with_node(server, |n| n.close_session_row(session, row).map(|_| ()))
+    }
+
+    fn resolve_moved(&self, addr: &str) -> Option<NodeId> {
+        let servers = self.servers.read().unwrap();
+        servers
+            .iter()
+            .find(|m| m.alive && local_addr(m.node.id) == addr)
+            .map(|m| m.node.id)
     }
 
     fn forward(&self, server: NodeId, hidden: &Tensor) -> Result<Tensor> {

@@ -57,8 +57,8 @@ pub mod prefixcache;
 pub mod scheduler;
 pub mod service;
 
-pub use kvpool::{KvPool, KvPoolConfig};
-pub use prefixcache::{fingerprint, PrefixCache, PrefixHit};
+pub use kvpool::{KvPool, KvPoolConfig, SessionSnapshot};
+pub use prefixcache::{fingerprint, template_fingerprint, PrefixCache, PrefixHit};
 pub use scheduler::{StepRequest, StepScheduler};
 
 use crate::coordinator::throughput::MeasuredThroughput;
@@ -69,10 +69,10 @@ use crate::model::manifest::Geometry;
 use crate::model::tensor::{DType, Tensor};
 use crate::model::weights::{BlockWeights, Precision};
 use crate::model::ModelHome;
-use crate::net::{Message, TensorPayload};
+use crate::net::{Message, TensorPayload, MAX_MIGRATE_CHUNK, MAX_MIGRATE_TOTAL};
 use crate::runtime::Runtime;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -131,6 +131,21 @@ impl Default for ServerOptions {
     }
 }
 
+/// One in-flight inbound migration (wire v6): the reassembly buffer a
+/// target accumulates between `MigrateSessionOffer` and
+/// `MigrateSessionDone`.
+struct MigrationIn {
+    /// Total snapshot bytes the offer declared (chunks must sum to it).
+    total: usize,
+    /// Next expected chunk sequence number (strictly increasing from 0).
+    next_seq: u32,
+    buf: Vec<u8>,
+    /// A matching pinned prefix on THIS server (pin id, page-aligned
+    /// width), resolved from the offer's fingerprint — lets the restore
+    /// re-attach the shared span at marginal page cost.
+    pin: Option<(u64, usize)>,
+}
+
 /// One session's warm decode literals (the single-session fast path).
 struct StepLitCache {
     /// Pool page-table epoch the literals were captured under.
@@ -184,6 +199,22 @@ pub struct ServerNode {
     active: AtomicU32,
     /// Whether replies compress hidden states (§3.1).
     pub compress: bool,
+    /// Set while the server is draining (wire v6): opens bounce with
+    /// Busy, inbound migration offers are declined, live sessions are
+    /// being pushed to peers.
+    draining: AtomicBool,
+    /// Sessions this server migrated away (session → the new server's
+    /// dialable address). Requests for them get the `moved:` redirect
+    /// instead of an execution attempt. Leaf lock; entries persist past
+    /// the local close so late requests still learn the new home.
+    moved: Mutex<HashMap<u64, String>>,
+    /// In-flight inbound migrations (session → reassembly state). Leaf
+    /// lock.
+    migrations_in: Mutex<HashMap<u64, MigrationIn>>,
+    /// Template fingerprint each live session declared at open (leaf
+    /// lock) — gossiped in this session's outbound `MigrateSessionOffer`
+    /// so a target pinning the same template re-attaches it cheaply.
+    session_prefix_fp: Mutex<HashMap<u64, u64>>,
 }
 
 impl ServerNode {
@@ -255,6 +286,10 @@ impl ServerNode {
             throughput: Mutex::new(MeasuredThroughput::new()),
             active: AtomicU32::new(0),
             compress,
+            draining: AtomicBool::new(false),
+            moved: Mutex::new(HashMap::new()),
+            migrations_in: Mutex::new(HashMap::new()),
+            session_prefix_fp: Mutex::new(HashMap::new()),
         }))
     }
 
@@ -319,6 +354,9 @@ impl ServerNode {
         self.full_hits.lock().unwrap().remove(&session);
         self.step_lits.lock().unwrap().remove(&session);
         self.last_seen.lock().unwrap().remove(&session);
+        self.session_prefix_fp.lock().unwrap().remove(&session);
+        // deliberately NOT `moved`: the redirect must outlive the local
+        // close so a late request still learns the session's new home
     }
 
     /// Reset a session's idle clock (leaf lock).
@@ -421,6 +459,9 @@ impl ServerNode {
         let cap = self.geometry.max_seq;
         let max_t = if max_tokens == 0 { cap } else { max_tokens.min(cap) };
         self.clear_session_trackers(session);
+        // a re-used session id starts a NEW session: drop a stale
+        // migration redirect so its requests reach this server again
+        self.moved.lock().unwrap().remove(&session);
         let n_blocks = self.span_len();
         let eligible = !prefix_tokens.is_empty();
         let mut cache = self.prefix_cache.lock().unwrap();
@@ -483,6 +524,12 @@ impl ServerNode {
                 } else {
                     self.metrics.prefix_misses.inc();
                 }
+                // remember the template identity for outbound migration
+                let pt = self.pool.lock().unwrap().config().page_tokens;
+                self.session_prefix_fp
+                    .lock()
+                    .unwrap()
+                    .insert(session, template_fingerprint(prefix_tokens, pt));
             }
             match hit {
                 PrefixHit::Full { pin } => {
@@ -540,6 +587,239 @@ impl ServerNode {
         let mut pool = self.pool.lock().unwrap();
         pool.close_session(session);
         self.refresh_pool_gauges(&pool);
+    }
+
+    // --- live migration (wire v6) -------------------------------------------
+
+    /// Enter/leave drain mode: while draining, session opens bounce with
+    /// [`Error::Busy`] and inbound migration offers are declined — the
+    /// server only finishes in-flight work and pushes its sessions away.
+    pub fn set_draining(&self, on: bool) {
+        self.draining.store(on, Ordering::SeqCst);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Ids of every session currently holding pool state (the drain
+    /// loop's work list).
+    pub fn live_sessions(&self) -> Vec<u64> {
+        self.pool.lock().unwrap().session_ids()
+    }
+
+    /// The template fingerprint a session declared at open (0 = none) —
+    /// carried in its outbound `MigrateSessionOffer`.
+    pub fn session_prefix_fingerprint(&self, session: u64) -> u64 {
+        self.session_prefix_fp
+            .lock()
+            .unwrap()
+            .get(&session)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Serialize a session's complete KV state for migration. A session
+    /// with a staged (prepared-but-uncommitted) decode step is retried
+    /// briefly — the in-flight step commits in milliseconds — and only
+    /// then rejected. The caller marks the session moved FIRST
+    /// ([`Self::begin_migration_out`]) so no new step can commit tokens
+    /// after the bytes are taken.
+    pub fn snapshot_session_bytes(&self, session: u64) -> Result<Vec<u8>> {
+        for _ in 0..500 {
+            {
+                let pool = self.pool.lock().unwrap();
+                if pool.session_staged(session) != Some(true) {
+                    return Ok(pool.snapshot_session(session)?.encode());
+                }
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        Err(Error::Busy(format!(
+            "session {session} never quiesced for snapshot"
+        )))
+    }
+
+    /// Phase 1 of an outbound migration: mark the session moved so every
+    /// subsequent Prefill/InferStep/Close gets the `moved:` redirect and
+    /// no further token can be committed locally. Must happen BEFORE the
+    /// snapshot is taken — the redirect is what freezes the session.
+    pub fn begin_migration_out(&self, session: u64, new_addr: &str) {
+        let mut moved = self.moved.lock().unwrap();
+        if moved.len() >= 4096 {
+            moved.clear(); // bounded: a redirect map, not a ledger
+        }
+        moved.insert(session, new_addr.to_string());
+    }
+
+    /// Roll back phase 1 (the target declined or the push failed): the
+    /// session resumes being served locally.
+    pub fn abort_migration_out(&self, session: u64) {
+        self.moved.lock().unwrap().remove(&session);
+    }
+
+    /// Phase 2: the target acknowledged `MigrateSessionDone` — drop the
+    /// local replica (the `moved` redirect stays).
+    pub fn finish_migration_out(&self, session: u64) {
+        self.close_session(session);
+        self.metrics.sessions_migrated_out.inc();
+    }
+
+    /// Where a migrated-away session now lives (None = still local).
+    /// In-process transports use this to synthesize the same
+    /// [`Error::Moved`] bounce the TCP path sends on the wire.
+    pub fn moved_addr(&self, session: u64) -> Option<String> {
+        self.moved.lock().unwrap().get(&session).cloned()
+    }
+
+    /// The `moved:` redirect reply for a migrated-away session, if any.
+    fn moved_reply(&self, session: u64) -> Option<Message> {
+        self.moved.lock().unwrap().get(&session).map(|addr| Message::Error {
+            message: Error::Moved(addr.clone()).to_string(),
+        })
+    }
+
+    /// Handle an inbound `MigrateSessionOffer`: decide whether this
+    /// server can host the session, and if the offer names a template
+    /// this server also pins, promise the shared span so the restore
+    /// re-attaches it at marginal page cost.
+    fn migrate_in_offer(&self, session: u64, total_bytes: u64, prefix_fp: u64) -> Message {
+        let decline = Message::MigrateSessionAccept { session, accept: 0, shared_tokens: 0 };
+        if self.is_draining() || total_bytes == 0 || total_bytes > MAX_MIGRATE_TOTAL as u64 {
+            return decline;
+        }
+        // lock order: prefix_cache before pool
+        let pin = if prefix_fp != 0 {
+            self.prefix_cache
+                .lock()
+                .unwrap()
+                .pin_by_fingerprint(prefix_fp)
+                .filter(|&(_, width)| width > 0)
+        } else {
+            None
+        };
+        {
+            let pool = self.pool.lock().unwrap();
+            if pool.has_session(session) {
+                return decline; // id collision: the donor keeps it
+            }
+            // coarse headroom check (floats → pages); the restore itself
+            // re-checks exactly and replies Busy on a lost race
+            let cfg = pool.config();
+            let page_floats = (cfg.n_heads * cfg.page_tokens * cfg.head_dim).max(1);
+            let pages_needed = (total_bytes as usize / 4).div_ceil(page_floats);
+            if pages_needed > pool.free_pages() {
+                return decline;
+            }
+        }
+        let shared_tokens = pin.map(|(_, w)| w).unwrap_or(0);
+        self.migrations_in.lock().unwrap().insert(
+            session,
+            MigrationIn { total: total_bytes as usize, next_seq: 0, buf: Vec::new(), pin },
+        );
+        Message::MigrateSessionAccept {
+            session,
+            accept: 1,
+            shared_tokens: shared_tokens as u32,
+        }
+    }
+
+    /// Append one migration chunk. Chunks must arrive in sequence and
+    /// never exceed the offered total — a violation aborts the whole
+    /// transfer (the donor keeps the session; nothing was restored).
+    fn migrate_in_chunk(&self, session: u64, seq: u32, data: &[u8]) -> Message {
+        let mut inflight = self.migrations_in.lock().unwrap();
+        let Some(m) = inflight.get_mut(&session) else {
+            return Message::Error { message: format!("no migration in flight for session {session}") };
+        };
+        if seq != m.next_seq || data.len() > MAX_MIGRATE_CHUNK
+            || m.buf.len() + data.len() > m.total
+        {
+            inflight.remove(&session);
+            return Message::Error {
+                message: format!("migration chunk {seq} for session {session} out of protocol"),
+            };
+        }
+        m.next_seq += 1;
+        m.buf.extend_from_slice(data);
+        Message::SessionOpened { session }
+    }
+
+    /// Reassembly complete: decode the snapshot and restore it into the
+    /// pool — through the promised pinned prefix when the snapshot's
+    /// shared span survived intact, deep-copied otherwise. On success the
+    /// session is live here and the donor may drop its replica.
+    fn migrate_in_done(&self, session: u64) -> Message {
+        let Some(m) = self.migrations_in.lock().unwrap().remove(&session) else {
+            return Message::Error { message: format!("no migration in flight for session {session}") };
+        };
+        if m.buf.len() != m.total {
+            return Message::Error {
+                message: format!(
+                    "migration for session {session} truncated: {} of {} bytes",
+                    m.buf.len(),
+                    m.total
+                ),
+            };
+        }
+        let snap = match SessionSnapshot::decode(&m.buf) {
+            Ok(s) if s.session == session => s,
+            Ok(s) => {
+                return Message::Error {
+                    message: format!("migration payload names session {}, not {session}", s.session),
+                }
+            }
+            Err(e) => return Message::Error { message: e.to_string() },
+        };
+        let result = {
+            let mut pool = self.pool.lock().unwrap();
+            let shared = m.pin.and_then(|(pin, width)| {
+                if !snap.shared_intact {
+                    return None;
+                }
+                let pt = pool.config().page_tokens.max(1);
+                let share = width.min(snap.shared_tokens) / pt * pt;
+                (share > 0).then_some((pin, share))
+            });
+            let r = match shared {
+                Some((pin, share)) => pool
+                    .restore_session_shared(&snap, pin, share)
+                    // structural mismatch (fork depth, row lens): restore
+                    // deep instead — correctness over page savings
+                    .or_else(|e| match e {
+                        Error::Protocol(_) => pool.restore_session(&snap),
+                        other => Err(other),
+                    }),
+                None => pool.restore_session(&snap),
+            };
+            self.refresh_pool_gauges(&pool);
+            r
+        };
+        match result {
+            Ok(()) => {
+                self.moved.lock().unwrap().remove(&session);
+                self.touch_session(session);
+                self.metrics.sessions_migrated_in.inc();
+                Message::SessionOpened { session }
+            }
+            Err(e) => Message::Error { message: e.to_string() },
+        }
+    }
+
+    /// Per-row early exit: free one finished row's pages immediately so
+    /// a concurrent session can reuse them before the rest of the batch
+    /// finishes. Idempotent; the batch keeps its shape (the freed row
+    /// rides along as a zero-filled no-op in later fused steps).
+    pub fn close_session_row(&self, session: u64, row: usize) -> Result<usize> {
+        self.touch_session(session);
+        let freed = {
+            let mut pool = self.pool.lock().unwrap();
+            let freed = pool.release_row(session, row)?;
+            self.refresh_pool_gauges(&pool);
+            freed
+        };
+        self.metrics.rows_exited.inc();
+        Ok(freed)
     }
 
     /// Prefill: h [B,W,H] through all hosted blocks; writes the span's
@@ -1136,6 +1416,11 @@ impl ServerNode {
                 }
             }
             Message::OpenSession { session, batch, prefix_len, max_new } => {
+                if self.is_draining() {
+                    return Message::Error {
+                        message: Error::Busy("server draining".into()).to_string(),
+                    };
+                }
                 let max_tokens = prefix_len.saturating_add(*max_new) as usize;
                 match self.open_session(*session, *batch as usize, max_tokens) {
                     Ok(()) => Message::SessionOpened { session: *session },
@@ -1150,6 +1435,11 @@ impl ServerNode {
                 prefill_width,
                 prefix_tokens,
             } => {
+                if self.is_draining() {
+                    return Message::Error {
+                        message: Error::Busy("server draining".into()).to_string(),
+                    };
+                }
                 // saturate: a hostile frame must not overflow-panic a
                 // debug-built connection thread
                 let max_tokens = prefix_len.saturating_add(*max_new) as usize;
@@ -1168,18 +1458,27 @@ impl ServerNode {
                 }
             }
             Message::Prefill { session, hidden } => {
+                if let Some(r) = self.moved_reply(*session) {
+                    return r;
+                }
                 let Some(t) = hidden.to_tensor() else {
                     return Message::Error { message: "bad tensor".into() };
                 };
                 reply(self.prefill(*session, &t), self.compress)
             }
             Message::InferStep { session, cache_len, hidden } => {
+                if let Some(r) = self.moved_reply(*session) {
+                    return r;
+                }
                 let Some(t) = hidden.to_tensor() else {
                     return Message::Error { message: "bad tensor".into() };
                 };
                 reply(self.step(*session, *cache_len as usize, &t), self.compress)
             }
             Message::InferStepRagged { session, cache_lens, hidden } => {
+                if let Some(r) = self.moved_reply(*session) {
+                    return r;
+                }
                 let Some(t) = hidden.to_tensor() else {
                     return Message::Error { message: "bad tensor".into() };
                 };
@@ -1199,9 +1498,28 @@ impl ServerNode {
                 reply(self.backward(&h, &g), self.compress)
             }
             Message::CloseSession { session } => {
+                if let Some(r) = self.moved_reply(*session) {
+                    return r; // close at the session's new home
+                }
                 self.close_session(*session);
                 Message::SessionOpened { session: *session }
             }
+            Message::CloseSessionRow { session, row } => {
+                if let Some(r) = self.moved_reply(*session) {
+                    return r;
+                }
+                match self.close_session_row(*session, *row as usize) {
+                    Ok(_) => Message::SessionOpened { session: *session },
+                    Err(e) => Message::Error { message: e.to_string() },
+                }
+            }
+            Message::MigrateSessionOffer { session, total_bytes, prefix_fp } => {
+                self.migrate_in_offer(*session, *total_bytes, *prefix_fp)
+            }
+            Message::MigrateSessionChunk { session, seq, data } => {
+                self.migrate_in_chunk(*session, *seq, data)
+            }
+            Message::MigrateSessionDone { session } => self.migrate_in_done(*session),
             other => Message::Error { message: format!("unexpected message {}", other.kind()) },
         }
     }

@@ -235,6 +235,22 @@ impl PrefixCache {
         Some(victim)
     }
 
+    /// The pin (and its page-aligned shareable width) registered under a
+    /// template fingerprint. Wire-v6 migration uses this on the *target*:
+    /// the donor's `MigrateSessionOffer` carries its session's prefix
+    /// fingerprint, and a target already pinning the same template
+    /// re-attaches the incoming session at marginal page cost instead of
+    /// deep-copying the prefix. Fingerprint collisions are tolerable
+    /// here for the same reason as in routing: the restore only aliases
+    /// pages the snapshot marked intact, and a collision merely restores
+    /// deep (the caller falls back when the structural checks fail).
+    pub fn pin_by_fingerprint(&self, fp: u64) -> Option<(u64, usize)> {
+        self.entries
+            .iter()
+            .find(|(_, e)| e.fingerprint == fp)
+            .map(|(p, e)| (*p, e.tokens.len() / self.page_tokens * self.page_tokens))
+    }
+
     /// The hottest registered fingerprints (by hit count, then recency) —
     /// the hint gossiped in DHT `ServerEntry` v3 records for cache-aware
     /// sticky routing.

@@ -11,7 +11,7 @@ use crate::coordinator::session::ChainClient;
 use crate::dht::NodeId;
 use crate::error::{Error, Result};
 use crate::model::tensor::Tensor;
-use crate::net::{FramedConn, Message, TensorPayload};
+use crate::net::{FramedConn, Message, TensorPayload, MAX_MIGRATE_CHUNK};
 use crate::server::ServerNode;
 use std::collections::HashMap;
 use std::net::TcpListener;
@@ -32,6 +32,111 @@ impl ServerHandle {
         // poke the listener so accept() returns
         let _ = std::net::TcpStream::connect(&self.addr);
     }
+
+    /// Drain this server: stop admitting sessions, push every live
+    /// session's KV to a covering peer (wire-v6 live migration), and
+    /// report how many migrated. Sessions with no willing target stay
+    /// live here — the caller decides whether to wait or hard-stop.
+    /// The listener keeps running so already-redirected clients that
+    /// still dial the old address get their `moved:` bounce.
+    pub fn drain(&self, swarm: &TcpSwarm) -> usize {
+        drain_node(&self.node, swarm)
+    }
+}
+
+/// Push one live session from `node` to `target` over `swarm`.
+///
+/// Ordering is the correctness-critical part: the session is marked
+/// moved FIRST (new steps bounce with `moved: ADDR` and commits
+/// freeze), THEN snapshotted (the snapshot call waits out any step
+/// already staged), then streamed. Any failure aborts the migration
+/// and the session resumes locally — the client saw at most a few
+/// retryable bounces.
+pub fn migrate_session(
+    node: &ServerNode,
+    swarm: &TcpSwarm,
+    session: u64,
+    target: NodeId,
+) -> Result<()> {
+    let addr = swarm
+        .peer_addr(target)
+        .ok_or_else(|| Error::NotFound(format!("peer {}", target.short())))?;
+    node.begin_migration_out(session, &addr);
+    let result = (|| -> Result<()> {
+        let bytes = node.snapshot_session_bytes(session)?;
+        let offer = Message::MigrateSessionOffer {
+            session,
+            total_bytes: bytes.len() as u64,
+            prefix_fp: node.session_prefix_fingerprint(session),
+        };
+        match swarm.call(target, &offer)? {
+            Message::MigrateSessionAccept { accept: 1, .. } => {}
+            Message::MigrateSessionAccept { .. } => {
+                return Err(Error::Busy("target declined migration".into()))
+            }
+            Message::Error { message } => return Err(Error::from_wire(message)),
+            other => return Err(Error::Protocol(format!("unexpected {}", other.kind()))),
+        }
+        for (seq, chunk) in bytes.chunks(MAX_MIGRATE_CHUNK).enumerate() {
+            let msg = Message::MigrateSessionChunk {
+                session,
+                seq: seq as u32,
+                data: chunk.to_vec(),
+            };
+            match swarm.call(target, &msg)? {
+                Message::SessionOpened { .. } => {}
+                Message::Error { message } => return Err(Error::from_wire(message)),
+                other => {
+                    return Err(Error::Protocol(format!("unexpected {}", other.kind())))
+                }
+            }
+        }
+        match swarm.call(target, &Message::MigrateSessionDone { session })? {
+            Message::SessionOpened { .. } => Ok(()),
+            Message::Error { message } => Err(Error::from_wire(message)),
+            other => Err(Error::Protocol(format!("unexpected {}", other.kind()))),
+        }
+    })();
+    match result {
+        Ok(()) => {
+            node.finish_migration_out(session);
+            Ok(())
+        }
+        Err(e) => {
+            node.abort_migration_out(session);
+            Err(e)
+        }
+    }
+}
+
+/// Drain `node`'s live sessions onto willing peers; returns how many
+/// migrated. Targets are ranked by pool pressure (freest first) among
+/// peers whose span covers this node's — a target serving a narrower
+/// span could not replay the session's blocks.
+pub fn drain_node(node: &ServerNode, swarm: &TcpSwarm) -> usize {
+    node.set_draining(true);
+    swarm.refresh();
+    let mut candidates: Vec<ServerView> = swarm
+        .views()
+        .into_iter()
+        .filter(|v| v.id != node.id && v.start <= node.start && v.end >= node.end)
+        .collect();
+    candidates.sort_by(|a, b| {
+        b.free_ratio.partial_cmp(&a.free_ratio).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut migrated = 0;
+    for session in node.live_sessions() {
+        for cand in &candidates {
+            match migrate_session(node, swarm, session, cand.id) {
+                Ok(()) => {
+                    migrated += 1;
+                    break;
+                }
+                Err(_) => continue, // declined/failed: session resumed locally
+            }
+        }
+    }
+    migrated
 }
 
 /// Serve a node on `addr` ("127.0.0.1:0" for an ephemeral port).
@@ -195,6 +300,20 @@ impl TcpSwarm {
             })
             .collect();
         TcpSwarm { peers: map, assumed_bandwidth_bps: 10e9 }
+    }
+
+    /// Dial address for a known peer (migration targets, redirects).
+    pub fn peer_addr(&self, id: NodeId) -> Option<String> {
+        self.peers.get(&id).map(|r| r.addr.clone())
+    }
+
+    /// Last refreshed views (no network traffic; call [`Self::refresh`]
+    /// first for current pool-pressure numbers).
+    pub fn views(&self) -> Vec<ServerView> {
+        self.peers
+            .values()
+            .filter_map(|r| r.view.lock().unwrap().clone())
+            .collect()
     }
 
     fn call(&self, server: NodeId, msg: &Message) -> Result<Message> {
@@ -391,6 +510,27 @@ impl ChainClient for TcpSwarm {
 
     fn close_session(&self, server: NodeId, session: u64) {
         let _ = self.call(server, &Message::CloseSession { session });
+    }
+
+    fn close_row(&self, server: NodeId, session: u64, row: usize) -> Result<()> {
+        let msg = Message::CloseSessionRow { session, row: row as u32 };
+        match self.call(server, &msg) {
+            Ok(Message::SessionOpened { .. }) => Ok(()),
+            Ok(Message::Error { message }) => Err(Error::from_wire(message)),
+            Ok(other) => Err(Error::Protocol(format!("unexpected {}", other.kind()))),
+            // a legacy (≤ v5) server drops the connection on the unknown
+            // tag: treat as a harmless no-op — the row's pages free at
+            // session close like they always did
+            Err(Error::ChainBroken(_)) | Err(Error::Io(_)) => Ok(()),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn resolve_moved(&self, addr: &str) -> Option<NodeId> {
+        self.peers
+            .iter()
+            .find(|(_, r)| r.addr == addr)
+            .map(|(id, _)| *id)
     }
 
     fn forward(&self, server: NodeId, hidden: &Tensor) -> Result<Tensor> {

@@ -1,0 +1,586 @@
+//! Fault-injection harness for session durability tests.
+//!
+//! [`MockChain`] is a [`ChainClient`] whose servers carry *stateful*
+//! per-session accumulators standing in for KV caches: every prefill and
+//! decode step folds its inputs (and per-row cache lengths) into the
+//! accumulator, and every output depends on the accumulator's value at
+//! that instant. A recovery that replays the wrong history, or a
+//! migration that moves the wrong bytes, therefore produces visibly
+//! different outputs — "the tokens still match" becomes a real assertion
+//! instead of a vacuous one.
+//!
+//! [`FaultyClient`] wraps any [`FaultInjectable`] transport and fires a
+//! scripted [`FaultPlan`] at exact decode-step call ordinals, so tests
+//! drive kills and live drains at deterministic points mid-generation.
+
+use crate::coordinator::routing::ServerView;
+use crate::coordinator::session::ChainClient;
+use crate::dht::NodeId;
+use crate::error::{Error, Result};
+use crate::model::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// The "dial address" a mock server advertises in `moved:` redirects.
+fn mock_addr(id: NodeId) -> String {
+    format!("mock:{}", id.short())
+}
+
+/// Per-session mock "KV state": a running accumulator every request
+/// folds into. Replaying identical inputs rebuilds an identical value;
+/// migrating copies it verbatim — exactly the two durability paths the
+/// real pool supports.
+#[derive(Debug, Clone, Default, PartialEq)]
+struct MockKv {
+    acc: f64,
+    prefills: usize,
+    steps: usize,
+}
+
+impl MockKv {
+    fn fold(&mut self, h: &Tensor, lens: &[usize]) {
+        // order-stable f64 arithmetic: two runs folding the same inputs
+        // in the same order land on bitwise-equal accumulators
+        let mut s = 0.0f64;
+        for &v in h.as_f32() {
+            s += v as f64;
+        }
+        for &l in lens {
+            s += l as f64 * 0.001;
+        }
+        self.acc = self.acc * 0.9990234375 + s; // exact in binary fp
+    }
+}
+
+struct MockServer {
+    id: NodeId,
+    start: usize,
+    end: usize,
+    alive: bool,
+    /// Per-session `moved:` redirects left behind by migrations (the
+    /// real server's moved map is per-session too — a drained server
+    /// can still accept and serve NEW sessions).
+    moved: HashMap<u64, String>,
+    sessions: HashMap<u64, MockKv>,
+    rows_closed: Vec<(u64, usize)>,
+}
+
+/// A deterministic in-memory swarm with stateful per-session compute.
+pub struct MockChain {
+    state: Mutex<Vec<MockServer>>,
+}
+
+impl MockChain {
+    /// `spans`: (name, start, end) per server.
+    pub fn new(spans: &[(&str, usize, usize)]) -> Self {
+        MockChain {
+            state: Mutex::new(
+                spans
+                    .iter()
+                    .map(|(n, s, e)| MockServer {
+                        id: NodeId::from_name(n),
+                        start: *s,
+                        end: *e,
+                        alive: true,
+                        moved: HashMap::new(),
+                        sessions: HashMap::new(),
+                        rows_closed: Vec::new(),
+                    })
+                    .collect(),
+            ),
+        }
+    }
+
+    pub fn kill(&self, id: NodeId) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(s) = st.iter_mut().find(|s| s.id == id) {
+            s.alive = false;
+        }
+    }
+
+    /// Live-migrate every session on `donor` to `target`: the per-session
+    /// state is copied VERBATIM (the mock twin of a KV snapshot push) and
+    /// the donor leaves a `moved:` redirect behind — the same observable
+    /// protocol [`crate::server::ServerNode`] speaks on the wire.
+    pub fn drain(&self, donor: NodeId, target: NodeId) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let addr = mock_addr(target);
+        let di = st
+            .iter()
+            .position(|s| s.id == donor)
+            .ok_or_else(|| Error::NotFound("donor".into()))?;
+        let ti = st
+            .iter()
+            .position(|s| s.id == target)
+            .ok_or_else(|| Error::NotFound("target".into()))?;
+        let moved: Vec<(u64, MockKv)> = st[di].sessions.drain().collect();
+        for (sid, kv) in moved {
+            st[di].moved.insert(sid, addr.clone());
+            // receiving a migration clears any stale redirect on the
+            // target (the real migrate_in_done's rule): it now OWNS the
+            // session and must serve, not bounce
+            st[ti].moved.remove(&sid);
+            st[ti].sessions.insert(sid, kv);
+        }
+        Ok(())
+    }
+
+    /// Rows released early on `server` (assertions on per-row exit).
+    pub fn rows_closed(&self, server: NodeId) -> Vec<(u64, usize)> {
+        let st = self.state.lock().unwrap();
+        st.iter()
+            .find(|s| s.id == server)
+            .map(|s| s.rows_closed.clone())
+            .unwrap_or_default()
+    }
+
+    /// How many sessions `server` currently holds state for.
+    pub fn session_count(&self, server: NodeId) -> usize {
+        let st = self.state.lock().unwrap();
+        st.iter().find(|s| s.id == server).map(|s| s.sessions.len()).unwrap_or(0)
+    }
+
+    fn apply(h: &Tensor, span: usize, acc: f64) -> Tensor {
+        let mut out = h.clone();
+        // every output element depends on the accumulator: divergent
+        // state becomes divergent output immediately
+        let tag = ((acc.rem_euclid(1024.0)) as f32) * 1e-4;
+        for v in out.as_f32_mut() {
+            *v += span as f32 + tag;
+        }
+        out
+    }
+
+    fn run(
+        &self,
+        server: NodeId,
+        session: u64,
+        lens: &[usize],
+        h: &Tensor,
+        is_prefill: bool,
+    ) -> Result<Tensor> {
+        let mut st = self.state.lock().unwrap();
+        let srv = st
+            .iter_mut()
+            .find(|s| s.id == server)
+            .ok_or_else(|| Error::NotFound(format!("server {}", server.short())))?;
+        if !srv.alive {
+            return Err(Error::ChainBroken(format!("server {} is down", server.short())));
+        }
+        if let Some(addr) = srv.moved.get(&session) {
+            return Err(Error::Moved(addr.clone()));
+        }
+        let span = srv.end - srv.start;
+        let kv = srv
+            .sessions
+            .get_mut(&session)
+            .ok_or_else(|| Error::NotFound(format!("session {session}")))?;
+        kv.fold(h, lens);
+        if is_prefill {
+            kv.prefills += 1;
+        } else {
+            kv.steps += 1;
+        }
+        let acc = kv.acc;
+        Ok(Self::apply(h, span, acc))
+    }
+}
+
+impl ChainClient for MockChain {
+    fn discover(&self) -> Vec<ServerView> {
+        let st = self.state.lock().unwrap();
+        st.iter()
+            .filter(|s| s.alive)
+            .map(|s| ServerView {
+                id: s.id,
+                start: s.start,
+                end: s.end,
+                latency_s: 0.001,
+                bandwidth_bps: 1e9,
+                span_compute_s: 0.01 * (s.end - s.start) as f64,
+                queue_depth: 0,
+                free_ratio: 1.0,
+                prefix_fps: vec![],
+            })
+            .collect()
+    }
+
+    fn open_session(
+        &self,
+        server: NodeId,
+        session: u64,
+        _batch: usize,
+        _prefix_len: usize,
+        _max_new: usize,
+    ) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let srv = st
+            .iter_mut()
+            .find(|s| s.id == server)
+            .ok_or_else(|| Error::NotFound(format!("server {}", server.short())))?;
+        if !srv.alive {
+            return Err(Error::ChainBroken(format!("server {} is down", server.short())));
+        }
+        srv.moved.remove(&session); // id reuse starts a new session
+        srv.sessions.insert(session, MockKv::default());
+        Ok(())
+    }
+
+    fn prefill(&self, server: NodeId, session: u64, hidden: &Tensor) -> Result<Tensor> {
+        self.run(server, session, &[], hidden, true)
+    }
+
+    fn step(
+        &self,
+        server: NodeId,
+        session: u64,
+        cache_len: usize,
+        hidden: &Tensor,
+    ) -> Result<Tensor> {
+        self.run(server, session, &[cache_len], hidden, false)
+    }
+
+    fn step_ragged(
+        &self,
+        server: NodeId,
+        session: u64,
+        row_lens: &[usize],
+        hidden: &Tensor,
+    ) -> Result<Tensor> {
+        self.run(server, session, row_lens, hidden, false)
+    }
+
+    fn close_session(&self, server: NodeId, session: u64) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(srv) = st.iter_mut().find(|s| s.id == server) {
+            srv.sessions.remove(&session);
+        }
+    }
+
+    fn close_row(&self, server: NodeId, session: u64, row: usize) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let srv = st
+            .iter_mut()
+            .find(|s| s.id == server)
+            .ok_or_else(|| Error::NotFound(format!("server {}", server.short())))?;
+        srv.rows_closed.push((session, row));
+        Ok(())
+    }
+
+    fn resolve_moved(&self, addr: &str) -> Option<NodeId> {
+        let st = self.state.lock().unwrap();
+        st.iter().find(|s| s.alive && mock_addr(s.id) == addr).map(|s| s.id)
+    }
+
+    fn forward(&self, server: NodeId, hidden: &Tensor) -> Result<Tensor> {
+        let st = self.state.lock().unwrap();
+        let srv = st
+            .iter()
+            .find(|s| s.id == server)
+            .ok_or_else(|| Error::NotFound(format!("server {}", server.short())))?;
+        if !srv.alive {
+            return Err(Error::ChainBroken("down".into()));
+        }
+        Ok(Self::apply(hidden, srv.end - srv.start, 0.0))
+    }
+
+    fn backward(&self, _server: NodeId, _hidden: &Tensor, grad: &Tensor) -> Result<Tensor> {
+        Ok(grad.clone())
+    }
+}
+
+/// A transport that supports injected faults — implemented by the mock
+/// swarm here and by [`crate::server::LocalCluster`] (real servers, real
+/// KV pools), so the same scripted scenarios run at both fidelities.
+pub trait FaultInjectable: ChainClient {
+    /// Hard-kill a server (crash: state lost, requests fail).
+    fn inject_kill(&self, server: NodeId);
+    /// Gracefully drain `donor` onto `target` (live migration: state
+    /// moves, requests redirect).
+    fn inject_drain(&self, donor: NodeId, target: NodeId) -> Result<()>;
+}
+
+impl FaultInjectable for MockChain {
+    fn inject_kill(&self, server: NodeId) {
+        self.kill(server);
+    }
+    fn inject_drain(&self, donor: NodeId, target: NodeId) -> Result<()> {
+        self.drain(donor, target)
+    }
+}
+
+impl FaultInjectable for crate::server::LocalCluster {
+    fn inject_kill(&self, server: NodeId) {
+        self.kill(server);
+    }
+    fn inject_drain(&self, donor: NodeId, target: NodeId) -> Result<()> {
+        let node = self
+            .node(donor)
+            .ok_or_else(|| Error::NotFound(format!("server {}", donor.short())))?;
+        node.set_draining(true);
+        for session in node.live_sessions() {
+            self.migrate_session(donor, target, session)?;
+        }
+        Ok(())
+    }
+}
+
+/// What to do when a [`FaultPlan`] fires.
+#[derive(Debug, Clone)]
+pub enum FaultAction {
+    Kill(NodeId),
+    Drain { donor: NodeId, target: NodeId },
+}
+
+/// Fire `action` immediately BEFORE the `at_step_call`-th decode-step
+/// request (0-based, counted across all hops) reaches the transport.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub at_step_call: usize,
+    pub action: FaultAction,
+}
+
+/// Wraps a [`FaultInjectable`] transport and fires scripted faults at
+/// exact decode-step ordinals — deterministic churn for durability
+/// tests. All non-step traffic passes through untouched.
+pub struct FaultyClient<C: FaultInjectable> {
+    inner: C,
+    plans: Mutex<Vec<FaultPlan>>,
+    step_calls: Mutex<usize>,
+}
+
+impl<C: FaultInjectable> FaultyClient<C> {
+    pub fn new(inner: C, plans: Vec<FaultPlan>) -> Self {
+        FaultyClient { inner, plans: Mutex::new(plans), step_calls: Mutex::new(0) }
+    }
+
+    pub fn inner(&self) -> &C {
+        &self.inner
+    }
+
+    /// Replace the fault script (e.g. after routing reveals which
+    /// replica actually serves a span).
+    pub fn script(&self, plans: Vec<FaultPlan>) {
+        *self.plans.lock().unwrap() = plans;
+    }
+
+    /// Faults that have not fired yet (0 = the full script ran).
+    pub fn pending_faults(&self) -> usize {
+        self.plans.lock().unwrap().len()
+    }
+
+    fn before_step(&self) {
+        let n = {
+            let mut c = self.step_calls.lock().unwrap();
+            let n = *c;
+            *c += 1;
+            n
+        };
+        let due: Vec<FaultPlan> = {
+            let mut plans = self.plans.lock().unwrap();
+            let (fire, keep): (Vec<_>, Vec<_>) =
+                plans.drain(..).partition(|p| p.at_step_call == n);
+            *plans = keep;
+            fire
+        };
+        for plan in due {
+            match plan.action {
+                FaultAction::Kill(id) => self.inner.inject_kill(id),
+                FaultAction::Drain { donor, target } => {
+                    // a failed drain leaves the session running on the
+                    // donor — the test's assertions decide if that's fatal
+                    let _ = self.inner.inject_drain(donor, target);
+                }
+            }
+        }
+    }
+}
+
+impl<C: FaultInjectable> ChainClient for FaultyClient<C> {
+    fn discover(&self) -> Vec<ServerView> {
+        self.inner.discover()
+    }
+    fn open_session(
+        &self,
+        server: NodeId,
+        session: u64,
+        batch: usize,
+        prefix_len: usize,
+        max_new: usize,
+    ) -> Result<()> {
+        self.inner.open_session(server, session, batch, prefix_len, max_new)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn open_session_prefixed(
+        &self,
+        server: NodeId,
+        session: u64,
+        batch: usize,
+        prefix_len: usize,
+        max_new: usize,
+        prefix_tokens: &[i32],
+        prefill_width: usize,
+    ) -> Result<()> {
+        self.inner.open_session_prefixed(
+            server,
+            session,
+            batch,
+            prefix_len,
+            max_new,
+            prefix_tokens,
+            prefill_width,
+        )
+    }
+    fn prefill(&self, server: NodeId, session: u64, hidden: &Tensor) -> Result<Tensor> {
+        self.inner.prefill(server, session, hidden)
+    }
+    fn step(
+        &self,
+        server: NodeId,
+        session: u64,
+        cache_len: usize,
+        hidden: &Tensor,
+    ) -> Result<Tensor> {
+        self.before_step();
+        self.inner.step(server, session, cache_len, hidden)
+    }
+    fn step_ragged(
+        &self,
+        server: NodeId,
+        session: u64,
+        row_lens: &[usize],
+        hidden: &Tensor,
+    ) -> Result<Tensor> {
+        self.before_step();
+        self.inner.step_ragged(server, session, row_lens, hidden)
+    }
+    fn close_session(&self, server: NodeId, session: u64) {
+        self.inner.close_session(server, session)
+    }
+    fn close_row(&self, server: NodeId, session: u64, row: usize) -> Result<()> {
+        self.inner.close_row(server, session, row)
+    }
+    fn resolve_moved(&self, addr: &str) -> Option<NodeId> {
+        self.inner.resolve_moved(addr)
+    }
+    fn forward(&self, server: NodeId, hidden: &Tensor) -> Result<Tensor> {
+        self.inner.forward(server, hidden)
+    }
+    fn backward(&self, server: NodeId, hidden: &Tensor, grad: &Tensor) -> Result<Tensor> {
+        self.inner.backward(server, hidden, grad)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::routing::RouteQuery;
+    use crate::coordinator::session::{InferenceSession, PromptShape, SessionConfig};
+
+    fn cfg(n_blocks: usize) -> SessionConfig {
+        SessionConfig {
+            n_blocks,
+            max_new: 16,
+            route: RouteQuery { n_blocks, msg_bytes: 64, ..Default::default() },
+            max_recoveries: 4,
+            prefix_tokens: vec![],
+        }
+    }
+
+    fn shape() -> PromptShape {
+        PromptShape { batch: 1, prefix_len: 2, prefill_width: 4 }
+    }
+
+    fn run_tokens<C: ChainClient>(client: C, sid: u64, n: usize) -> Vec<Vec<f32>> {
+        let mut s = InferenceSession::open(client, cfg(8), shape(), sid).unwrap();
+        s.prefill(Tensor::from_f32(&[1, 4, 4], &[0.5; 16])).unwrap();
+        let mut outs = Vec::new();
+        for i in 0..n {
+            let h = Tensor::from_f32(&[1, 1, 4], &[i as f32 * 0.25; 4]);
+            outs.push(s.step(h).unwrap().as_f32().to_vec());
+        }
+        s.close();
+        outs
+    }
+
+    /// The harness's reason to exist: outputs must DEPEND on accumulated
+    /// state, so a run with different history visibly diverges.
+    #[test]
+    fn outputs_depend_on_session_history() {
+        let chain = MockChain::new(&[("a", 0, 4), ("b", 4, 8)]);
+        let mut s = InferenceSession::open(&chain, cfg(8), shape(), 1).unwrap();
+        s.prefill(Tensor::from_f32(&[1, 4, 4], &[0.5; 16])).unwrap();
+        let h = Tensor::from_f32(&[1, 1, 4], &[1.0; 4]);
+        let first = s.step(h.clone()).unwrap();
+        let second = s.step(h).unwrap();
+        assert_ne!(
+            first.as_f32(),
+            second.as_f32(),
+            "identical inputs must produce different outputs as state accrues"
+        );
+        s.close();
+    }
+
+    /// A mid-generation kill recovers by replay and the output sequence
+    /// is bitwise-identical to the undisturbed run.
+    #[test]
+    fn kill_recovery_is_bitwise_identical() {
+        let baseline = run_tokens(
+            &MockChain::new(&[("a", 0, 4), ("b", 4, 8), ("b2", 4, 8)]),
+            1,
+            6,
+        );
+        let chain = MockChain::new(&[("a", 0, 4), ("b", 4, 8), ("b2", 4, 8)]);
+        let faulty = FaultyClient::new(chain, vec![]);
+        // killing BOTH replicas of the second span would strand the
+        // chain, so only script the one the route actually picked
+        let mut s = InferenceSession::open(&faulty, cfg(8), shape(), 1).unwrap();
+        let hop1 = s.chain()[1].server;
+        faulty.script(vec![FaultPlan { at_step_call: 6, action: FaultAction::Kill(hop1) }]);
+        s.prefill(Tensor::from_f32(&[1, 4, 4], &[0.5; 16])).unwrap();
+        let mut outs = Vec::new();
+        for i in 0..6 {
+            let h = Tensor::from_f32(&[1, 1, 4], &[i as f32 * 0.25; 4]);
+            outs.push(s.step(h).unwrap().as_f32().to_vec());
+        }
+        assert_eq!(s.recoveries(), 1, "the scripted kill must have fired");
+        assert_eq!(outs, baseline, "recovered run diverged from baseline");
+        assert_eq!(faulty.pending_faults(), 0);
+        s.close();
+    }
+
+    /// A scripted live drain redirects the client and the sequence stays
+    /// bitwise-identical WITHOUT any replay (state moved, not rebuilt).
+    #[test]
+    fn drain_migration_is_bitwise_identical_without_replay() {
+        let baseline = run_tokens(&MockChain::new(&[("a", 0, 4), ("b", 4, 8)]), 2, 6);
+        let chain = MockChain::new(&[("a", 0, 4), ("b", 4, 8), ("spare", 4, 8)]);
+        let faulty = FaultyClient::new(chain, vec![]);
+        let mut s = InferenceSession::open(&faulty, cfg(8), shape(), 2).unwrap();
+        // route may have picked either replica of the 4..8 span; drain
+        // whichever is live in the chain onto the other
+        let hop1 = s.chain()[1].server;
+        let target = if hop1 == NodeId::from_name("b") {
+            NodeId::from_name("spare")
+        } else {
+            NodeId::from_name("b")
+        };
+        faulty.script(vec![FaultPlan {
+            at_step_call: 6,
+            action: FaultAction::Drain { donor: hop1, target },
+        }]);
+        s.prefill(Tensor::from_f32(&[1, 4, 4], &[0.5; 16])).unwrap();
+        let mut outs = Vec::new();
+        for i in 0..6 {
+            let h = Tensor::from_f32(&[1, 1, 4], &[i as f32 * 0.25; 4]);
+            outs.push(s.step(h).unwrap().as_f32().to_vec());
+        }
+        assert_eq!(outs, baseline, "migrated run diverged from baseline");
+        assert_eq!(s.recoveries(), 0, "migration must not be a replay recovery");
+        assert_eq!(s.chain()[1].server, target);
+        let inner = faulty.inner();
+        assert_eq!(inner.session_count(hop1), 0, "donor dropped its replica");
+        assert_eq!(inner.session_count(target), 1, "target holds the session");
+        s.close();
+    }
+}

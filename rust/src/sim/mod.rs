@@ -21,6 +21,7 @@
 //! convergence on the perf trajectory.
 
 pub mod dht;
+pub mod faults;
 
 use crate::config::profiles::{NetworkProfile, ServerSpec, SwarmProfile};
 use crate::config::Rng;

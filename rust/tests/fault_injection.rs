@@ -1,0 +1,227 @@
+//! Integration: fault injection — scripted kills, live drains, client
+//! crashes, and sampler-state resumption, each pinned to the bitwise
+//! output of an undisturbed run.
+//!
+//! The harness (`petals::sim::faults`) gives every mock server genuine
+//! per-session state that each request folds into, so these tests fail
+//! loudly if recovery replays the wrong history, migration moves the
+//! wrong bytes, or resumption skips/duplicates a step. No artifacts or
+//! sockets needed — the whole suite runs in-process.
+
+use petals::coordinator::client::{Sampler, SamplerState};
+use petals::coordinator::routing::RouteQuery;
+use petals::coordinator::session::{InferenceSession, PromptShape, SessionConfig};
+use petals::dht::NodeId;
+use petals::model::tensor::Tensor;
+use petals::sim::faults::{FaultAction, FaultPlan, FaultyClient, MockChain};
+
+const N_BLOCKS: usize = 8;
+const HIDDEN: usize = 4;
+
+fn cfg() -> SessionConfig {
+    SessionConfig {
+        n_blocks: N_BLOCKS,
+        max_new: 32,
+        route: RouteQuery { n_blocks: N_BLOCKS, msg_bytes: 64, ..Default::default() },
+        max_recoveries: 6,
+        prefix_tokens: vec![],
+    }
+}
+
+fn shape() -> PromptShape {
+    PromptShape { batch: 1, prefix_len: 2, prefill_width: 4 }
+}
+
+fn prompt() -> Tensor {
+    Tensor::from_f32(&[1, 4, HIDDEN], &[0.5; 4 * HIDDEN])
+}
+
+fn step_input(i: usize) -> Tensor {
+    Tensor::from_f32(&[1, 1, HIDDEN], &[i as f32 * 0.25 - 0.1; HIDDEN])
+}
+
+/// Drive `n` decode steps and collect each step's output values.
+fn drive<C: petals::coordinator::session::ChainClient>(
+    s: &mut InferenceSession<C>,
+    from: usize,
+    n: usize,
+) -> Vec<Vec<f32>> {
+    (from..from + n).map(|i| s.step(step_input(i)).unwrap().as_f32().to_vec()).collect()
+}
+
+/// The undisturbed reference sequence: same spans, no faults.
+fn baseline(sid: u64, n: usize) -> Vec<Vec<f32>> {
+    let chain = MockChain::new(&[("base-a", 0, 4), ("base-b", 4, 8)]);
+    let mut s = InferenceSession::open(&chain, cfg(), shape(), sid).unwrap();
+    s.prefill(prompt()).unwrap();
+    let outs = drive(&mut s, 0, n);
+    s.close();
+    outs
+}
+
+/// A storm of scripted kills — one replica of each span dies at a
+/// different mid-generation ordinal — and the recovered sequence is
+/// bitwise-identical to the undisturbed run.
+#[test]
+fn scripted_kill_storm_recovers_bitwise() {
+    let sid = 11;
+    let want = baseline(sid, 8);
+    let chain = MockChain::new(&[
+        ("a", 0, 4),
+        ("a2", 0, 4),
+        ("b", 4, 8),
+        ("b2", 4, 8),
+    ]);
+    let faulty = FaultyClient::new(chain, vec![]);
+    let mut s = InferenceSession::open(&faulty, cfg(), shape(), sid).unwrap();
+    // kill whichever replicas the route picked, at two different points
+    let (hop0, hop1) = (s.chain()[0].server, s.chain()[1].server);
+    faulty.script(vec![
+        FaultPlan { at_step_call: 4, action: FaultAction::Kill(hop1) },
+        FaultPlan { at_step_call: 9, action: FaultAction::Kill(hop0) },
+    ]);
+    s.prefill(prompt()).unwrap();
+    let outs = drive(&mut s, 0, 8);
+    assert_eq!(outs, want, "kill-storm run diverged from the undisturbed sequence");
+    assert_eq!(s.recoveries(), 2, "both scripted kills must have fired and recovered");
+    assert_eq!(faulty.pending_faults(), 0, "the full fault script must have run");
+    s.close();
+}
+
+/// Migration COMPOSED with a later crash: the session is live-drained
+/// to a target, then the target dies, and replay recovery (from client
+/// history) rebuilds state that continues the sequence bitwise.
+#[test]
+fn drain_then_target_death_still_bitwise() {
+    let sid = 12;
+    let want = baseline(sid, 9);
+    let chain = MockChain::new(&[("a", 0, 4), ("b", 4, 8), ("c", 4, 8)]);
+    let faulty = FaultyClient::new(chain, vec![]);
+    let mut s = InferenceSession::open(&faulty, cfg(), shape(), sid).unwrap();
+    let donor = s.chain()[1].server;
+    let target =
+        if donor == NodeId::from_name("b") { NodeId::from_name("c") } else { NodeId::from_name("b") };
+    faulty.script(vec![
+        // drain mid-generation: client follows the redirect, no replay...
+        FaultPlan { at_step_call: 4, action: FaultAction::Drain { donor, target } },
+        // ...then the migration target crashes: replay recovery re-opens
+        // on the original donor (its redirect clears on session re-use)
+        FaultPlan { at_step_call: 12, action: FaultAction::Kill(target) },
+    ]);
+    s.prefill(prompt()).unwrap();
+    let outs = drive(&mut s, 0, 9);
+    assert_eq!(outs, want, "drain+death run diverged from the undisturbed sequence");
+    assert_eq!(s.recoveries(), 1, "only the kill may recover by replay — not the drain");
+    assert_eq!(s.chain()[1].server, donor, "replay must land back on the cleared donor");
+    s.close();
+}
+
+/// Client-process crash: snapshot the session state mid-generation,
+/// abandon the live session entirely, rebuild from the snapshot on the
+/// same swarm, and the continuation is bitwise-identical.
+#[test]
+fn client_crash_snapshot_restore_continues_bitwise() {
+    let sid = 13;
+    let want = baseline(sid, 10);
+    let chain = MockChain::new(&[("a", 0, 4), ("b", 4, 8)]);
+    let mut s = InferenceSession::open(&chain, cfg(), shape(), sid).unwrap();
+    s.prefill(prompt()).unwrap();
+    let head = drive(&mut s, 0, 4);
+    let state = s.snapshot();
+    drop(s); // client crashes: no close, server-side state stranded
+    let mut s = InferenceSession::restore(&chain, cfg(), state).unwrap();
+    let tail = drive(&mut s, 4, 6);
+    let outs: Vec<Vec<f32>> = head.into_iter().chain(tail).collect();
+    assert_eq!(outs, want, "restored session diverged from the undisturbed sequence");
+    s.close();
+}
+
+/// Snapshot/restore ACROSS a fault: the entire chain the snapshot was
+/// taken on dies; restore re-routes onto surviving replicas and the
+/// replayed state still continues bitwise.
+#[test]
+fn restore_after_total_chain_loss() {
+    let sid = 14;
+    let want = baseline(sid, 8);
+    let chain =
+        MockChain::new(&[("a", 0, 4), ("a2", 0, 4), ("b", 4, 8), ("b2", 4, 8)]);
+    let mut s = InferenceSession::open(&chain, cfg(), shape(), sid).unwrap();
+    s.prefill(prompt()).unwrap();
+    let head = drive(&mut s, 0, 3);
+    let state = s.snapshot();
+    // kill EVERY server the snapshot's chain references
+    let dead: Vec<NodeId> = s.chain().iter().map(|h| h.server).collect();
+    drop(s);
+    for id in &dead {
+        chain.kill(*id);
+    }
+    let mut s = InferenceSession::restore(&chain, cfg(), state).unwrap();
+    for hop in s.chain() {
+        assert!(!dead.contains(&hop.server), "restore must avoid dead servers");
+    }
+    let tail = drive(&mut s, 3, 5);
+    let outs: Vec<Vec<f32>> = head.into_iter().chain(tail).collect();
+    assert_eq!(outs, want, "re-routed restore diverged from the undisturbed sequence");
+    s.close();
+}
+
+/// Corrupt snapshots are rejected up front, not half-restored.
+#[test]
+fn restore_rejects_corrupt_state() {
+    let chain = MockChain::new(&[("a", 0, 4), ("b", 4, 8)]);
+    let mut s = InferenceSession::open(&chain, cfg(), shape(), 15).unwrap();
+    s.prefill(prompt()).unwrap();
+    let good = s.snapshot();
+    s.close();
+
+    let mut bad = good.clone();
+    bad.row_lens.push(7); // no longer matches shape.batch
+    assert!(InferenceSession::restore(&chain, cfg(), bad).is_err());
+
+    let mut bad = good.clone();
+    bad.hops.clear();
+    assert!(InferenceSession::restore(&chain, cfg(), bad).is_err());
+}
+
+/// Per-row early exit reaches every hop of the chain even when the
+/// transport is the fault-injection wrapper (pass-through traffic).
+#[test]
+fn close_row_fans_out_through_faulty_client() {
+    let chain = MockChain::new(&[("a", 0, 4), ("b", 4, 8)]);
+    let faulty = FaultyClient::new(chain, vec![]);
+    let mut s = InferenceSession::open(&faulty, cfg(), shape(), 16).unwrap();
+    s.prefill(prompt()).unwrap();
+    s.close_row(0);
+    for name in ["a", "b"] {
+        assert_eq!(
+            faulty.inner().rows_closed(NodeId::from_name(name)),
+            vec![(16, 0)],
+            "server {name} must see the row release"
+        );
+    }
+    s.close();
+}
+
+/// Sampler RNG state is part of the durability story: a generation
+/// resumed from a saved `rng_state` draws the exact same tokens the
+/// uninterrupted sampler would have drawn.
+#[test]
+fn sampler_rng_state_resumes_identically() {
+    let logits_at = |i: usize| {
+        let vals: Vec<f32> =
+            (0..8).map(|v| ((v * 7 + i * 3) % 5) as f32 * 0.5 - 1.0).collect();
+        Tensor::from_f32(&[1, 8], &vals)
+    };
+    let sampler = || Sampler::TopK { k: 4, temperature: 0.7, seed: 42 };
+
+    let mut live = sampler().start();
+    for i in 0..3 {
+        live.sample(&logits_at(i));
+    }
+    let saved = live.rng_state();
+    let tail: Vec<i32> = (3..10).map(|i| live.sample(&logits_at(i))[0]).collect();
+
+    let mut resumed = SamplerState::restore(sampler(), saved);
+    let replayed: Vec<i32> = (3..10).map(|i| resumed.sample(&logits_at(i))[0]).collect();
+    assert_eq!(replayed, tail, "resumed sampler must draw the identical token sequence");
+}
