@@ -14,8 +14,10 @@
 #                                     length sim sweep (occupancy,
 #                                     aggregate steps/s, p50 TTFT) plus
 #                                     the session-durability timings
-#                                     (migration_ms, resume_ttft_ms —
-#                                     tracked, not gated); needs no
+#                                     (migration_ms, resume_ttft_ms) and
+#                                     the Prometheus self-scrape result
+#                                     (scrape_ok, metrics_series) — the
+#                                     latter tracked, not gated; needs no
 #                                     artifacts — always produced
 #   OUTDIR/BENCH_prefix_cache.json  — shared-prefix multiclient bench:
 #                                     pages/session, hit rate,
@@ -51,6 +53,18 @@ test -s "$OUTDIR/BENCH_ragged.json" || { echo "bench did not write BENCH_ragged.
 echo
 echo "==> $OUTDIR/BENCH_ragged.json"
 cat "$OUTDIR/BENCH_ragged.json"
+
+# the bench stood up the Prometheus exporter and scraped itself over
+# loopback TCP; surface the recorded outcome here (tracked, NOT gated —
+# a fleeting port clash must not block a perf run, but the bench log
+# should say so loudly)
+if grep -q '"scrape_ok": true' "$OUTDIR/BENCH_ragged.json"; then
+    echo
+    echo "metrics self-scrape: ok ($(grep -o '"metrics_series": [0-9]*' "$OUTDIR/BENCH_ragged.json" | grep -o '[0-9]*') series)"
+else
+    echo
+    echo "WARNING: metrics self-scrape failed (scrape_ok=false in BENCH_ragged.json)" >&2
+fi
 
 if [[ ! -f artifacts/manifest.json ]]; then
     echo

@@ -47,6 +47,10 @@ if [[ "$MODE" == "test-only" ]]; then
     # drains) — run them explicitly so a test filter can never silently
     # drop them. Pure in-process mocks: no artifacts, no sockets.
     cargo test -q --test fault_injection --test churn
+    step "cargo test --test observability (observability gate)"
+    # named gate: Prometheus exposition validity + registry drift + the
+    # 3-hop trace-coverage bar. In-process mocks and loopback sockets.
+    cargo test -q --test observability
     echo
     echo "test-only checks passed"
     exit 0
@@ -82,6 +86,11 @@ step "cargo test --test fault_injection --test churn (session durability gate)"
 # named gate (see test-only mode above): durability invariants must not
 # be droppable by a test filter
 cargo test -q --test fault_injection --test churn
+
+step "cargo test --test observability (observability gate)"
+# named gate (see test-only mode above): exposition validity, registry
+# drift, and the per-hop trace coverage bar
+cargo test -q --test observability
 
 echo
 echo "all checks passed"

@@ -100,6 +100,9 @@ fn main() -> petals::Result<()> {
         total_pages: 32,
         batch_width: 8,
         prefix_fps: vec![],
+        p50_step_us: 0,
+        queue_depth: 0,
+        sessions_active: 0,
     };
     let churn_ttl_ms = 800u64;
     let publish = |node: &DhtNode, ttl_ms: u64| -> petals::Result<usize> {

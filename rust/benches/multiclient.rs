@@ -125,13 +125,58 @@ fn bench_session_durability() -> petals::Result<(f64, f64)> {
     Ok((migration_ms, resume_ttft_ms))
 }
 
+/// Observability smoke: stand up the Prometheus exporter on a loopback
+/// port, scrape it once over real TCP, and count the exposed series.
+/// Returns `(scrape_ok, metrics_series)` — recorded in
+/// `BENCH_ragged.json` as tracked (NOT gated) fields so CI notices if
+/// the exposition endpoint ever stops parsing, without making a
+/// wall-clock-noisy network check a merge blocker.
+fn bench_metrics_scrape() -> (bool, usize) {
+    use petals::metrics::NodeMetrics;
+    use petals::server::service::serve_metrics_with;
+    let m = Arc::new(NodeMetrics::new());
+    m.requests.inc();
+    m.step_latency.record_us(1500);
+    let render = {
+        let m = m.clone();
+        move || m.prometheus()
+    };
+    let handle = match serve_metrics_with(render, "bench-metrics", "127.0.0.1:0") {
+        Ok(h) => h,
+        Err(_) => return (false, 0),
+    };
+    let r = petals::api::http_get(&handle.addr, "/metrics");
+    handle.shutdown();
+    match r {
+        Ok((200, ct, body)) if ct.starts_with("text/plain") => {
+            let series =
+                body.lines().filter(|l| !l.is_empty() && !l.starts_with('#')).count();
+            println!(
+                "metrics self-scrape: ok ({series} series from one counter bump + one \
+                 histogram sample)\n"
+            );
+            (true, series)
+        }
+        _ => {
+            println!("metrics self-scrape: FAILED (tracked in BENCH_ragged.json)\n");
+            (false, 0)
+        }
+    }
+}
+
 /// Mixed-length ragged sweep (pure sim — no artifacts, no toolchain
 /// beyond cargo): the pre-ragged same-depth join gate vs the ragged
 /// scheduler over one arrival trace of mixed prompt lengths. Emits
 /// `BENCH_ragged.json` with its gate declarations so
 /// `ci/bench_compare.sh` can enforce the trajectory on main. The two
-/// durability timings ride along as ungated, tracked fields.
-fn bench_ragged_mix(migration_ms: f64, resume_ttft_ms: f64) -> petals::Result<()> {
+/// durability timings and the metrics scrape ride along as ungated,
+/// tracked fields.
+fn bench_ragged_mix(
+    migration_ms: f64,
+    resume_ttft_ms: f64,
+    scrape_ok: bool,
+    metrics_series: usize,
+) -> petals::Result<()> {
     println!("ragged continuous batching: mixed-length arrival mix (sim, BLOOM-176B):");
     let lens: Vec<usize> = vec![32, 48, 64, 96, 128, 160, 192, 224];
     let run = |gate: bool| {
@@ -160,6 +205,7 @@ fn bench_ragged_mix(migration_ms: f64, resume_ttft_ms: f64) -> petals::Result<()
          \"aggregate_steps_per_s\": {:.3},\n  \"p50_ttft_s\": {:.3},\n  \
          \"uniform_gate_occupancy\": {:.4},\n  \"uniform_gate_aggregate_steps_per_s\": {:.3},\n  \
          \"migration_ms\": {migration_ms:.3},\n  \"resume_ttft_ms\": {resume_ttft_ms:.3},\n  \
+         \"scrape_ok\": {scrape_ok},\n  \"metrics_series\": {metrics_series},\n  \
          \"gates\": {{\n    \"occupancy\": {{\"dir\": \"higher\", \"pct\": 15}},\n    \
          \"aggregate_steps_per_s\": {{\"dir\": \"higher\", \"pct\": 10}},\n    \
          \"p50_ttft_s\": {{\"dir\": \"lower\", \"pct\": 20}}\n  }}\n}}\n",
@@ -184,7 +230,8 @@ fn main() -> petals::Result<()> {
     // artifacts: CI always gets a fresh BENCH_ragged.json even on
     // artifact-less runners
     let (migration_ms, resume_ttft_ms) = bench_session_durability()?;
-    bench_ragged_mix(migration_ms, resume_ttft_ms)?;
+    let (scrape_ok, metrics_series) = bench_metrics_scrape();
+    bench_ragged_mix(migration_ms, resume_ttft_ms, scrape_ok, metrics_series)?;
     println!("simulated 12-virtual swarm @ 100 Mbit/s, 100 ms RTT (BLOOM-176B):");
     let solo = sim_swarm(false).run_inference(128, 32, 1).unwrap().steps_per_s;
     println!("sequential per-session baseline: {solo:.2} steps/s aggregate (one session at a time)\n");

@@ -36,7 +36,9 @@ use crate::coordinator::session::{
     chain_backward, chain_forward, ChainClient, InferenceSession, PromptShape, SessionConfig,
 };
 use crate::error::{Error, Result};
+use crate::metrics::{NodeMetrics, PROMETHEUS_CONTENT_TYPE};
 use crate::model::tensor::Tensor;
+use crate::trace::{fresh_span_id, fresh_trace_id, StepTrace, TraceContext, TraceRing};
 use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpListener;
@@ -69,6 +71,9 @@ struct ResumableGen<C: ChainClient> {
     /// Hidden state [1,H] feeding the next lm_head call.
     last: Tensor,
     opts: GenOptions,
+    /// `Some` when the request set `"trace": true` — the stream's wire-v7
+    /// trace id, carried on every decode step.
+    trace_ctx: Option<TraceContext>,
     /// Everything produced so far, each carrying its resumption token.
     events: Vec<TokenEvent>,
     finished: Option<String>,
@@ -95,6 +100,12 @@ pub struct ApiServer<C: ChainClient> {
     /// Persistent sessions idle longer than this are closed by the GC
     /// sweep (their swarm-side KV pages are released).
     pub session_ttl: Duration,
+    /// The gateway's own counters/latency histogram, served at
+    /// `GET /metrics` in Prometheus text exposition.
+    pub metrics: Arc<NodeMetrics>,
+    /// Recent traced decode steps (bounded ring), served at
+    /// `GET /api/v1/debug/traces`.
+    pub traces: TraceRing,
 }
 
 /// Largest request body the server will buffer. Requests are JSON —
@@ -131,6 +142,8 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             sessions: Mutex::new(HashMap::new()),
             resumables: Mutex::new(HashMap::new()),
             session_ttl,
+            metrics: Arc::new(NodeMetrics::new()),
+            traces: TraceRing::new(256),
         })
     }
 
@@ -153,6 +166,7 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             stop_tokens: req.stop_tokens.clone(),
             want_logits: req.return_logits,
             want_hidden: req.return_hidden,
+            trace: req.trace,
         }
     }
 
@@ -192,6 +206,18 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
         );
         obj.insert("recoveries".to_string(), num(result.recoveries as f64));
         obj.insert("finish".to_string(), Value::Str(result.finish.as_str().to_string()));
+        if req.trace {
+            // one hop-by-hop waterfall per decode step; each also lands
+            // in the debug ring for GET /api/v1/debug/traces
+            let mut traces = Vec::new();
+            for s in &steps {
+                if let Some(t) = &s.trace {
+                    traces.push(t.to_json());
+                    self.traces.push(t.clone());
+                }
+            }
+            obj.insert("traces".to_string(), Value::Arr(traces));
+        }
         if req.return_logits {
             obj.insert(
                 "logits".to_string(),
@@ -553,6 +579,27 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             reader.read_exact(&mut body)?;
             let body = String::from_utf8_lossy(&body).to_string();
 
+            self.metrics.requests.inc();
+            self.metrics.bytes_in.add(content_len as u64);
+
+            if (method.as_str(), path.as_str()) == ("GET", "/metrics") {
+                // Prometheus text exposition — its own content type, so
+                // it bypasses the JSON route table below
+                let reply = self.metrics.prometheus();
+                write!(
+                    stream,
+                    "HTTP/1.1 200 OK\r\nContent-Type: {PROMETHEUS_CONTENT_TYPE}\r\nContent-Length: {}\r\n\r\n{}",
+                    reply.len(),
+                    reply
+                )?;
+                stream.flush()?;
+                self.metrics.bytes_out.add(reply.len() as u64);
+                if !keep_alive {
+                    return Ok(());
+                }
+                continue;
+            }
+
             if (method.as_str(), path.as_str()) == ("POST", "/api/v1/stream") {
                 // streaming response: chunked NDJSON, connection closes
                 // after the terminal event
@@ -571,12 +618,14 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
                 ("POST", "/api/v1/session/open") => Some(self.session_open_json(&body)),
                 ("POST", "/api/v1/session/append") => Some(self.session_append_json(&body)),
                 ("POST", "/api/v1/session/close") => Some(self.session_close_json(&body)),
+                ("GET", "/api/v1/debug/traces") => Some(Ok(self.traces.to_json().render())),
                 ("GET", "/health") => Some(Ok("{\"status\":\"ok\"}".to_string())),
                 _ => None,
             };
             let (status, reply) = match result {
                 Some(Ok(json)) => ("200 OK".to_string(), json),
                 Some(Err(e)) => {
+                    self.metrics.failures.inc();
                     let ae = ApiError::from_error(&e);
                     (ae.status_line(), ae.body())
                 }
@@ -597,6 +646,7 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
                 reply
             )?;
             stream.flush()?;
+            self.metrics.bytes_out.add(reply.len() as u64);
             if !keep_alive {
                 return Ok(());
             }
@@ -704,6 +754,10 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             sampler: req.sampler.to_sampler().start(),
             last,
             opts: self.gen_options(req),
+            trace_ctx: req.trace.then(|| TraceContext {
+                trace_id: fresh_trace_id(),
+                parent_span: fresh_span_id(),
+            }),
             events: Vec::new(),
             finished: None,
             stats: None,
@@ -727,10 +781,26 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
         // (same rule as session_append), keeping server state aligned
         // with what the events claim was produced
         let h = self.head.embed(&Tensor::from_i32(&[1, 1], &[token]))?;
-        let h_out = session.step(h)?;
+        let (h_out, trace) = match &g.trace_ctx {
+            Some(ctx) => {
+                let ts = Instant::now();
+                let (h_out, hops) = session.step_traced(h, ctx)?;
+                let st = StepTrace {
+                    trace_id: ctx.trace_id,
+                    step,
+                    client_us: ts.elapsed().as_micros() as u64,
+                    hops,
+                };
+                let rendered = st.to_json();
+                self.traces.push(st);
+                (h_out, Some(rendered))
+            }
+            None => (session.step(h)?, None),
+        };
         g.last = Tensor::from_f32(&[1, self.head.hidden], h_out.as_f32());
         let step_s = t0.elapsed().as_secs_f64();
         g.wall_s += step_s;
+        self.metrics.step_latency.record_us((step_s * 1e6) as u64);
         g.events.push(TokenEvent {
             step,
             token,
@@ -738,6 +808,7 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             logits: logits_vec,
             hidden: hidden_vec,
             resume: Some(format!("{gid}.{}", step + 1)),
+            trace,
         });
         if g.opts.stop_tokens.contains(&token) {
             Self::finish_gen(g, "stop");
@@ -876,6 +947,33 @@ fn write_error_response<W: Write>(out: &mut W, e: &Error) -> Result<()> {
 /// the code matters.
 pub fn http_post(addr: &str, path: &str, body: &str) -> Result<String> {
     http_post_status(addr, path, body).map(|(_, b)| b)
+}
+
+/// GET returning `(status, content_type, body)` — used by the metrics
+/// scrape tests and the bench's self-scrape step.
+pub fn http_get(addr: &str, path: &str) -> Result<(u16, String, String)> {
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")?;
+    stream.flush()?;
+    let mut buf = String::new();
+    BufReader::new(stream).read_to_string(&mut buf)?;
+    let status: u16 = buf
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| Error::Protocol("bad status line".into()))?;
+    let idx = buf
+        .find("\r\n\r\n")
+        .ok_or_else(|| Error::Protocol("no http body".into()))?;
+    let content_type = buf[..idx]
+        .lines()
+        .find_map(|h| {
+            h.to_ascii_lowercase()
+                .starts_with("content-type:")
+                .then(|| h[h.find(':').unwrap() + 1..].trim().to_string())
+        })
+        .unwrap_or_default();
+    Ok((status, content_type, buf[idx + 4..].to_string()))
 }
 
 /// POST returning `(status, body)` (typed-error tests need the code).

@@ -23,7 +23,7 @@ pub mod http;
 pub mod stream;
 pub mod types;
 
-pub use http::{http_post, http_post_status, ApiServer};
+pub use http::{http_get, http_post, http_post_status, ApiServer};
 pub use stream::{http_post_stream, StreamEvent, StreamStats, TokenEvent};
 pub use types::{ApiError, GenerateRequest, SamplerSpec};
 

@@ -32,6 +32,11 @@ pub struct TokenEvent {
     /// stream re-attaches at exactly the next event — no token is ever
     /// duplicated or skipped. Absent on streams that predate resumption.
     pub resume: Option<String>,
+    /// Per-hop timing waterfall for the decode step that followed this
+    /// token (when the request set `"trace": true`): the rendered
+    /// [`crate::trace::StepTrace`] JSON. Carried opaquely so replaying /
+    /// resuming a stream preserves it bit-for-bit.
+    pub trace: Option<Value>,
 }
 
 /// Terminal stats event closing every stream.
@@ -81,6 +86,9 @@ impl StreamEvent {
                 if let Some(r) = &t.resume {
                     obj.insert("resume".into(), Value::Str(r.clone()));
                 }
+                if let Some(tr) = &t.trace {
+                    obj.insert("trace".into(), tr.clone());
+                }
             }
             StreamEvent::Stats(s) => {
                 obj.insert("event".into(), Value::Str("stats".into()));
@@ -109,6 +117,7 @@ impl StreamEvent {
                 logits: v.opt("logits").map(value_to_f32s).transpose()?,
                 hidden: v.opt("hidden").map(value_to_f32s).transpose()?,
                 resume: v.opt("resume").map(|x| Ok(x.str()?.to_string())).transpose()?,
+                trace: v.opt("trace").cloned(),
             })),
             "stats" => Ok(StreamEvent::Stats(StreamStats {
                 steps: v.get("steps")?.usize()?,
@@ -230,6 +239,7 @@ mod tests {
             logits: Some(vec![0.5, -1.25]),
             hidden: None,
             resume: None,
+            trace: None,
         });
         assert_eq!(StreamEvent::parse(&t.render()).unwrap(), t);
 
@@ -240,6 +250,19 @@ mod tests {
             logits: None,
             hidden: None,
             resume: Some("1007.1".into()),
+            trace: None,
+        });
+        assert_eq!(StreamEvent::parse(&t.render()).unwrap(), t);
+
+        // the opaque trace payload survives render/parse bit-for-bit
+        let t = StreamEvent::Token(TokenEvent {
+            step: 1,
+            token: 9,
+            step_s: 0.25,
+            logits: None,
+            hidden: None,
+            resume: None,
+            trace: Some(Value::parse(r#"{"trace_id":"00ff","hops":[{"rtt_us":120}]}"#).unwrap()),
         });
         assert_eq!(StreamEvent::parse(&t.render()).unwrap(), t);
 

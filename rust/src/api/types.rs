@@ -92,6 +92,9 @@ pub struct GenerateRequest {
     pub stop_tokens: Vec<i32>,
     pub return_logits: bool,
     pub return_hidden: bool,
+    /// Opt into wire-v7 per-hop tracing: each stream event carries a
+    /// `trace` object with the hop-by-hop timing waterfall.
+    pub trace: bool,
 }
 
 impl GenerateRequest {
@@ -118,6 +121,7 @@ impl GenerateRequest {
             stop_tokens,
             return_logits: flag("return_logits")?,
             return_hidden: flag("return_hidden")?,
+            trace: flag("trace")?,
         })
     }
 }
@@ -299,7 +303,10 @@ mod tests {
         assert_eq!(r.inputs, vec![vec![1, 2, 3]], "flat array = one prompt row");
         assert_eq!(r.max_new_tokens, 8);
         assert_eq!(r.sampler, SamplerSpec::Greedy);
-        assert!(r.stop_tokens.is_empty() && !r.return_logits && !r.return_hidden);
+        assert!(r.stop_tokens.is_empty() && !r.return_logits && !r.return_hidden && !r.trace);
+
+        let v = Value::parse(r#"{"inputs":[1,2,3],"trace":true}"#).unwrap();
+        assert!(GenerateRequest::from_json(&v, 100).unwrap().trace);
 
         let v = Value::parse(
             r#"{"inputs":[1],"max_new_tokens":2,"stop_tokens":[0],"return_logits":true,

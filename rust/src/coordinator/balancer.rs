@@ -255,6 +255,9 @@ mod tests {
             total_pages: total,
             batch_width: 8,
             prefix_fps: vec![],
+            p50_step_us: 0,
+            queue_depth: 0,
+            sessions_active: 0,
         };
         let idle = [mk(100, 100)];
         let full = [mk(0, 100)];

@@ -18,6 +18,7 @@ use crate::error::{Error, Result};
 use crate::model::tensor::Tensor;
 use crate::model::{ModelHome, Weights};
 use crate::runtime::Runtime;
+use crate::trace::{fresh_span_id, fresh_trace_id, StepTrace, TraceContext};
 use std::sync::Arc;
 
 /// Local embedding + LM head over AOT artifacts.
@@ -308,6 +309,10 @@ pub struct GenOptions {
     /// Attach the pre-LM-head hidden state to each [`TokenStep`] — the
     /// "natively exposes hidden states" differentiator.
     pub want_hidden: bool,
+    /// Carry a wire-v7 trace context on every decode step and attach the
+    /// per-hop timing waterfall to each [`TokenStep`]. Opt-in: untraced
+    /// streams send the classic frames and pay zero overhead.
+    pub trace: bool,
 }
 
 /// One per-token event from a [`GenerationStream`].
@@ -329,6 +334,10 @@ pub struct TokenStep {
     /// Final-layer hidden state [B,H] that produced `logits` (if
     /// requested).
     pub hidden: Option<Tensor>,
+    /// Per-hop timing waterfall for the decode step that FOLLOWED this
+    /// token (when [`GenOptions::trace`] is set and a step ran — the
+    /// final token of a stream has no decode step, hence no trace).
+    pub trace: Option<StepTrace>,
 }
 
 /// End-to-end generation driver: local embed/head + remote blocks —
@@ -429,11 +438,17 @@ impl<'a, C: ChainClient> SwarmGenerator<'a, C> {
         // last *valid* position of each row's prefill output
         let hidden = self.head.hidden;
         let last = Tensor::from_f32(&[b, hidden], &extract_row_positions(&h_pre, &row_lens));
+        // one trace id per stream; each decode step becomes a span under it
+        let trace_ctx = opts.trace.then(|| TraceContext {
+            trace_id: fresh_trace_id(),
+            parent_span: fresh_span_id(),
+        });
         Ok(GenerationStream {
             head: self.head,
             session: Some(session),
             sampler,
             opts,
+            trace_ctx,
             last,
             produced: vec![Vec::new(); b],
             row_done: vec![false; b],
@@ -470,6 +485,8 @@ pub struct GenerationStream<'a, C: ChainClient> {
     session: Option<InferenceSession<&'a C>>,
     sampler: SamplerState,
     opts: GenOptions,
+    /// `Some` when [`GenOptions::trace`] was set: the stream's trace id.
+    trace_ctx: Option<TraceContext>,
     /// Hidden state [B,H] feeding the next lm_head call.
     last: Tensor,
     produced: Vec<Vec<i32>>,
@@ -525,6 +542,7 @@ impl<'a, C: ChainClient> GenerationStream<'a, C> {
         } else if self.steps >= self.opts.max_new {
             self.finish = Some(FinishReason::Length);
         }
+        let mut trace = None;
         if self.finish.is_none() {
             // embed the new tokens and run one decode step through the
             // chain (recovery/re-routing happens inside `session.step`)
@@ -534,7 +552,20 @@ impl<'a, C: ChainClient> GenerationStream<'a, C> {
                 .session
                 .as_mut()
                 .ok_or_else(|| Error::Protocol("stream already closed".into()))?;
-            let h_out = session.step(h)?;
+            let h_out = match &self.trace_ctx {
+                Some(ctx) => {
+                    let ts = std::time::Instant::now();
+                    let (h_out, hops) = session.step_traced(h, ctx)?;
+                    trace = Some(StepTrace {
+                        trace_id: ctx.trace_id,
+                        step,
+                        client_us: ts.elapsed().as_micros() as u64,
+                        hops,
+                    });
+                    h_out
+                }
+                None => session.step(h)?,
+            };
             self.last = Tensor::from_f32(&[self.batch, self.head.hidden], h_out.as_f32());
         } else {
             // the final token needs no decode step — nothing will read
@@ -548,6 +579,7 @@ impl<'a, C: ChainClient> GenerationStream<'a, C> {
             step_s: t0.elapsed().as_secs_f64(),
             logits: self.opts.want_logits.then_some(logits),
             hidden: hidden_out,
+            trace,
         }))
     }
 

@@ -15,6 +15,7 @@ use crate::coordinator::routing::{self, ChainHop, RouteQuery, ServerView};
 use crate::dht::NodeId;
 use crate::error::{Error, Result};
 use crate::model::tensor::Tensor;
+use crate::trace::{HopTrace, StepBreakdown, TraceContext};
 
 /// Reply to a latency probe, plus client-measured link stats.
 #[derive(Debug, Clone)]
@@ -98,6 +99,22 @@ pub trait ChainClient {
             None => Err(Error::Shape("empty row_lens".into())),
         }
     }
+    /// One decode step carrying a wire-v7 trace context: the server
+    /// returns its per-stage timing breakdown (queue wait, fuse wait, KV
+    /// gather, executor, commit) alongside the hidden states. The
+    /// default forwards to [`Self::step_ragged`] and reports no
+    /// breakdown — transports and test fakes that predate tracing keep
+    /// working; the client just renders a hop with RTT only.
+    fn step_traced(
+        &self,
+        server: NodeId,
+        session: u64,
+        row_lens: &[usize],
+        hidden: &Tensor,
+        _ctx: &TraceContext,
+    ) -> Result<(Tensor, Option<StepBreakdown>)> {
+        self.step_ragged(server, session, row_lens, hidden).map(|t| (t, None))
+    }
     fn close_session(&self, server: NodeId, session: u64);
     /// Release one finished row of a multi-row session (wire v6
     /// `CloseSessionRow`): its KV pages free immediately while the batch
@@ -179,6 +196,16 @@ impl<T: ChainClient + ?Sized> ChainClient for &T {
     ) -> Result<Tensor> {
         (**self).step_ragged(server, session, row_lens, hidden)
     }
+    fn step_traced(
+        &self,
+        server: NodeId,
+        session: u64,
+        row_lens: &[usize],
+        hidden: &Tensor,
+        ctx: &TraceContext,
+    ) -> Result<(Tensor, Option<StepBreakdown>)> {
+        (**self).step_traced(server, session, row_lens, hidden, ctx)
+    }
     fn close_session(&self, server: NodeId, session: u64) {
         (**self).close_session(server, session)
     }
@@ -251,6 +278,16 @@ impl<T: ChainClient + ?Sized> ChainClient for std::sync::Arc<T> {
         hidden: &Tensor,
     ) -> Result<Tensor> {
         (**self).step_ragged(server, session, row_lens, hidden)
+    }
+    fn step_traced(
+        &self,
+        server: NodeId,
+        session: u64,
+        row_lens: &[usize],
+        hidden: &Tensor,
+        ctx: &TraceContext,
+    ) -> Result<(Tensor, Option<StepBreakdown>)> {
+        (**self).step_traced(server, session, row_lens, hidden, ctx)
     }
     fn close_session(&self, server: NodeId, session: u64) {
         (**self).close_session(server, session)
@@ -522,18 +559,59 @@ impl<C: ChainClient> InferenceSession<C> {
     /// sessions travel as classic `InferStep` frames, ragged ones as
     /// wire-v5 `InferStepRagged`.
     pub fn step(&mut self, hidden: Tensor) -> Result<Tensor> {
+        self.step_impl(hidden, None).map(|(h, _)| h)
+    }
+
+    /// [`Self::step`] carrying a wire-v7 trace context: returns the
+    /// hidden states plus one [`HopTrace`] per chain hop (client-side
+    /// RTT always; the server-side stage breakdown whenever the hop
+    /// speaks v7). Recovery and `moved:` redirects behave exactly as in
+    /// the untraced step — a hop that failed and was replaced is traced
+    /// under its replacement.
+    pub fn step_traced(
+        &mut self,
+        hidden: Tensor,
+        ctx: &TraceContext,
+    ) -> Result<(Tensor, Vec<HopTrace>)> {
+        self.step_impl(hidden, Some(ctx))
+    }
+
+    fn step_impl(
+        &mut self,
+        hidden: Tensor,
+        ctx: Option<&TraceContext>,
+    ) -> Result<(Tensor, Vec<HopTrace>)> {
         let mut h = hidden;
         let mut i = 0;
         let mut moved_grace = 0usize;
+        let mut hops: Vec<HopTrace> = Vec::new();
         while i < self.chain.len() {
             self.history[i].step_inputs.push((self.row_lens.clone(), h.clone()));
-            match self.client.step_ragged(
-                self.chain[i].server,
-                self.session_id,
-                &self.row_lens,
-                &h,
-            ) {
-                Ok(next) => {
+            let t0 = ctx.map(|_| std::time::Instant::now());
+            let outcome = match ctx {
+                Some(c) => self.client.step_traced(
+                    self.chain[i].server,
+                    self.session_id,
+                    &self.row_lens,
+                    &h,
+                    c,
+                ),
+                None => self
+                    .client
+                    .step_ragged(self.chain[i].server, self.session_id, &self.row_lens, &h)
+                    .map(|t| (t, None)),
+            };
+            match outcome {
+                Ok((next, breakdown)) => {
+                    if let Some(t0) = t0 {
+                        hops.push(HopTrace {
+                            server: self.chain[i].server.short(),
+                            start: self.chain[i].start,
+                            end: self.chain[i].end,
+                            rtt_us: t0.elapsed().as_micros().min(u32::MAX as u128) as u32,
+                            breakdown,
+                        });
+                    }
                     h = next;
                     i += 1;
                     moved_grace = 0;
@@ -567,7 +645,7 @@ impl<C: ChainClient> InferenceSession<C> {
         for l in &mut self.row_lens {
             *l += 1;
         }
-        Ok(h)
+        Ok((h, hops))
     }
 
     /// Follow a wire-v6 `moved:` redirect for hop `i`: resolve the new

@@ -16,9 +16,12 @@ use crate::dht::{iterative_find_value, iterative_store, Rpc};
 /// and the server's fused batch width so the balancer and client routing
 /// can prefer under-loaded servers. v3 appends the fingerprints of the
 /// server's hottest cached prompt prefixes, the hint behind cache-aware
-/// sticky routing. Records stay length-distinguishable: v1 (44 bytes)
-/// and v2 (56 bytes) still decode — the newer fields read as zero/empty,
-/// which every consumer treats as "unknown".
+/// sticky routing. v4 appends a telemetry tail — p50 step latency,
+/// queue depth, live session count — the fields the `petals top` swarm
+/// status view renders. Records stay length-distinguishable: v1 is 44
+/// bytes, v2 is 56, v3 is `60 + 8·n_fps` (≡ 4 mod 8), v4 is
+/// `72 + 8·n_fps` (≡ 0 mod 8 and ≥ 72) — older records still decode,
+/// with the newer fields reading as zero/empty ("unknown").
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServerEntry {
     pub server: NodeId,
@@ -37,6 +40,12 @@ pub struct ServerEntry {
     /// Fingerprints of the server's hottest cached prefixes (v3; empty =
     /// unknown/legacy). Capped at [`MAX_PREFIX_FPS`] on encode.
     pub prefix_fps: Vec<u64>,
+    /// Median step latency in µs (v4; 0 = unknown/legacy).
+    pub p50_step_us: u32,
+    /// Requests currently queued or executing (v4; 0 = unknown/legacy).
+    pub queue_depth: u32,
+    /// Sessions currently holding KV state (v4; 0 = unknown/legacy).
+    pub sessions_active: u32,
 }
 
 /// v1 record length (through `throughput`).
@@ -45,13 +54,17 @@ const ENTRY_V1_LEN: usize = 44;
 const ENTRY_V2_LEN: usize = 56;
 /// v3 fixed-part length (v2 + fingerprint count); fingerprints follow.
 const ENTRY_V3_LEN: usize = 60;
+/// v4 fixed-part length (v3 + p50_step_us + queue_depth +
+/// sessions_active); the telemetry tail sits AFTER the fingerprints so
+/// the v3 fixed layout is a prefix of v4's.
+const ENTRY_V4_LEN: usize = 72;
 /// Most prefix fingerprints one record carries.
 pub const MAX_PREFIX_FPS: usize = 8;
 
 impl ServerEntry {
     pub fn encode(&self) -> Vec<u8> {
         let fps: Vec<u64> = self.prefix_fps.iter().copied().take(MAX_PREFIX_FPS).collect();
-        let mut v = Vec::with_capacity(ENTRY_V3_LEN + 8 * fps.len());
+        let mut v = Vec::with_capacity(ENTRY_V4_LEN + 8 * fps.len());
         v.extend_from_slice(&self.server.0);
         v.extend_from_slice(&self.start.to_le_bytes());
         v.extend_from_slice(&self.end.to_le_bytes());
@@ -63,11 +76,18 @@ impl ServerEntry {
         for fp in &fps {
             v.extend_from_slice(&fp.to_le_bytes());
         }
+        v.extend_from_slice(&self.p50_step_us.to_le_bytes());
+        v.extend_from_slice(&self.queue_depth.to_le_bytes());
+        v.extend_from_slice(&self.sessions_active.to_le_bytes());
         v
     }
 
     pub fn decode(b: &[u8]) -> Option<Self> {
-        let v3 = b.len() >= ENTRY_V3_LEN && (b.len() - ENTRY_V3_LEN) % 8 == 0;
+        // length-distinguishable versions: v4 records are ≥ 72 bytes and
+        // ≡ 0 mod 8 (v2's 56 is below the floor); v3 records are ≥ 60
+        // and ≡ 4 mod 8 (v1's 44 is below that floor)
+        let v4 = b.len() >= ENTRY_V4_LEN && b.len() % 8 == 0;
+        let v3 = v4 || (b.len() >= ENTRY_V3_LEN && (b.len() - ENTRY_V3_LEN) % 8 == 0);
         if b.len() != ENTRY_V1_LEN && b.len() != ENTRY_V2_LEN && !v3 {
             return None;
         }
@@ -75,8 +95,9 @@ impl ServerEntry {
         id.copy_from_slice(&b[..32]);
         let v2 = b.len() >= ENTRY_V2_LEN;
         let prefix_fps = if v3 {
+            let fps_bytes = b.len() - if v4 { ENTRY_V4_LEN } else { ENTRY_V3_LEN };
             let n = u32::from_le_bytes(b[56..60].try_into().ok()?) as usize;
-            if n > MAX_PREFIX_FPS || n * 8 != b.len() - ENTRY_V3_LEN {
+            if n > MAX_PREFIX_FPS || n * 8 != fps_bytes {
                 return None;
             }
             (0..n)
@@ -88,6 +109,14 @@ impl ServerEntry {
         } else {
             Vec::new()
         };
+        let tail_u32 = |i: usize| {
+            if v4 {
+                let off = b.len() - 12 + 4 * i;
+                b[off..off + 4].try_into().ok().map(u32::from_le_bytes)
+            } else {
+                Some(0)
+            }
+        };
         Some(ServerEntry {
             server: NodeId(id),
             start: u32::from_le_bytes(b[32..36].try_into().ok()?),
@@ -97,6 +126,9 @@ impl ServerEntry {
             total_pages: if v2 { u32::from_le_bytes(b[48..52].try_into().ok()?) } else { 0 },
             batch_width: if v2 { u32::from_le_bytes(b[52..56].try_into().ok()?) } else { 0 },
             prefix_fps,
+            p50_step_us: tail_u32(0)?,
+            queue_depth: tail_u32(1)?,
+            sessions_active: tail_u32(2)?,
         })
     }
 
@@ -260,20 +292,49 @@ mod tests {
             total_pages: 512,
             batch_width: 8,
             prefix_fps: vec![0xdead_beef, 42],
+            p50_step_us: 1800,
+            queue_depth: 3,
+            sessions_active: 5,
         };
         assert_eq!(ServerEntry::decode(&e.encode()), Some(e.clone()));
         assert!(e.covers(3) && e.covers(10) && !e.covers(11) && !e.covers(2));
         assert!((e.free_ratio() - 120.0 / 512.0).abs() < 1e-12);
         assert!(e.has_prefix(42) && !e.has_prefix(43));
         assert_eq!(ServerEntry::decode(&[0u8; 10]), None);
-        // corrupt v3: count disagrees with the record length
+        // corrupt record: count disagrees with the record length
         let mut bad = e.encode();
         bad[56] = 7;
         assert_eq!(ServerEntry::decode(&bad), None);
-        // a fingerprint-free v3 record is 60 bytes and round-trips
+        // a fingerprint-free v4 record is exactly the fixed part
         let bare = ServerEntry { prefix_fps: vec![], ..e.clone() };
-        assert_eq!(bare.encode().len(), 60);
+        assert_eq!(bare.encode().len(), 72);
         assert_eq!(ServerEntry::decode(&bare.encode()), Some(bare));
+    }
+
+    #[test]
+    fn legacy_v3_entry_decodes_with_zero_telemetry() {
+        let e = ServerEntry {
+            server: NodeId::from_name("v3"),
+            start: 1,
+            end: 5,
+            throughput: 3.0,
+            free_pages: 7,
+            total_pages: 16,
+            batch_width: 4,
+            prefix_fps: vec![11, 22],
+            p50_step_us: 900,
+            queue_depth: 2,
+            sessions_active: 1,
+        };
+        // a v3 peer writes everything but the 12-byte telemetry tail
+        let enc = e.encode();
+        let v3 = enc[..enc.len() - 12].to_vec();
+        assert_eq!(v3.len() % 8, 4, "v3 length class");
+        let back = ServerEntry::decode(&v3).unwrap();
+        assert_eq!(back.prefix_fps, vec![11, 22], "fingerprints survive");
+        assert_eq!(back.p50_step_us, 0, "v3 records read as no-telemetry");
+        assert_eq!(back.queue_depth, 0);
+        assert_eq!(back.sessions_active, 0);
     }
 
     #[test]
@@ -287,6 +348,9 @@ mod tests {
             total_pages: 10,
             batch_width: 4,
             prefix_fps: vec![1, 2, 3],
+            p50_step_us: 0,
+            queue_depth: 0,
+            sessions_active: 0,
         };
         // a v2 peer would have written only the first 56 bytes
         let v2 = e.encode()[..56].to_vec();
@@ -305,6 +369,10 @@ mod tests {
             free_pages: 99,
             total_pages: 100,
             batch_width: 4,
+            prefix_fps: vec![],
+            p50_step_us: 0,
+            queue_depth: 0,
+            sessions_active: 0,
         };
         // a v1 peer would have written only the first 44 bytes
         let v1 = e.encode()[..44].to_vec();
@@ -320,7 +388,7 @@ mod tests {
         let ids: Vec<NodeId> = (0..30).map(|_| NodeId::random(&mut rng)).collect();
         let net = TestNet::new(&ids);
         let dir = BlockDirectory::new(&net, ids[..3].to_vec(), "bloom");
-        let e = ServerEntry { server: ids[0], start: 0, end: 4, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![] };
+        let e = ServerEntry { server: ids[0], start: 0, end: 4, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![], p50_step_us: 0, queue_depth: 0, sessions_active: 0 };
         dir.announce(&e, 0);
         for b in 0..4 {
             let got = dir.lookup(b);
@@ -336,8 +404,8 @@ mod tests {
         let ids: Vec<NodeId> = (0..30).map(|_| NodeId::random(&mut rng)).collect();
         let net = TestNet::new(&ids);
         let dir = BlockDirectory::new(&net, ids[..3].to_vec(), "bloom");
-        let e1 = ServerEntry { server: ids[0], start: 0, end: 4, throughput: 1.0, free_pages: 3, total_pages: 8, batch_width: 2, prefix_fps: vec![9] };
-        let e2 = ServerEntry { server: ids[1], start: 2, end: 6, throughput: 2.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![] };
+        let e1 = ServerEntry { server: ids[0], start: 0, end: 4, throughput: 1.0, free_pages: 3, total_pages: 8, batch_width: 2, prefix_fps: vec![9], p50_step_us: 700, queue_depth: 1, sessions_active: 2 };
+        let e2 = ServerEntry { server: ids[1], start: 2, end: 6, throughput: 2.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![], p50_step_us: 0, queue_depth: 0, sessions_active: 0 };
         dir.announce_addressed("127.0.0.1:4001", &e1, 0).unwrap();
         dir.announce_addressed("127.0.0.1:4002", &e2, 0).unwrap();
         let at3 = dir.lookup_addressed(3);
@@ -357,8 +425,8 @@ mod tests {
         let ids: Vec<NodeId> = (0..30).map(|_| NodeId::random(&mut rng)).collect();
         let net = TestNet::new(&ids);
         let dir = BlockDirectory::new(&net, ids[..3].to_vec(), "bloom");
-        dir.announce(&ServerEntry { server: ids[0], start: 0, end: 4, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![] }, 0);
-        dir.announce(&ServerEntry { server: ids[1], start: 2, end: 8, throughput: 2.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![] }, 0);
+        dir.announce(&ServerEntry { server: ids[0], start: 0, end: 4, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![], p50_step_us: 0, queue_depth: 0, sessions_active: 0 }, 0);
+        dir.announce(&ServerEntry { server: ids[1], start: 2, end: 8, throughput: 2.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![], p50_step_us: 0, queue_depth: 0, sessions_active: 0 }, 0);
         let snap = dir.snapshot(8);
         assert_eq!(snap[0].len(), 1);
         assert_eq!(snap[2].len(), 2);
@@ -373,10 +441,10 @@ mod tests {
         let net = TestNet::new(&ids);
         let dir = BlockDirectory::new(&net, ids[..3].to_vec(), "bloom");
         let srv = ids[0];
-        dir.announce(&ServerEntry { server: srv, start: 0, end: 4, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![] }, 0);
+        dir.announce(&ServerEntry { server: srv, start: 0, end: 4, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![], p50_step_us: 0, queue_depth: 0, sessions_active: 0 }, 0);
         // server rebalances to a different span; old per-block records
         // are replaced where keys overlap and age out elsewhere
-        dir.announce(&ServerEntry { server: srv, start: 2, end: 6, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![] }, 0);
+        dir.announce(&ServerEntry { server: srv, start: 2, end: 6, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![], p50_step_us: 0, queue_depth: 0, sessions_active: 0 }, 0);
         let at2 = dir.lookup(2);
         assert_eq!(at2.len(), 1);
         assert_eq!(at2[0].start, 2);

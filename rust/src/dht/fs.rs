@@ -180,6 +180,9 @@ mod tests {
             total_pages: 32,
             batch_width: 8,
             prefix_fps: vec![7, 9],
+            p50_step_us: 2500,
+            queue_depth: 2,
+            sessions_active: 4,
         }
     }
 

@@ -48,7 +48,11 @@
 //!   packs, and the PJRT executor registry.
 //! - [`config`] — JSON substrate, deterministic PRNG, device/network
 //!   profiles behind every simulated Table-3 row.
-//! - [`metrics`] — counters, gauges, histograms (lock-free record path).
+//! - [`metrics`] — counters, gauges, histograms, windowed rates
+//!   (lock-free record path) and the Prometheus `/metrics` exposition.
+//! - [`trace`] — per-hop distributed tracing (wire v7): trace context,
+//!   per-step stage breakdowns, the recent-traces ring behind
+//!   `/api/v1/debug/traces` (`docs/OBSERVABILITY.md`).
 //! - [`error`] — the crate-wide [`Error`] type; `Busy` signals
 //!   admission-control rejections that clients should route around.
 //!
@@ -82,5 +86,6 @@ pub mod quant;
 pub mod runtime;
 pub mod server;
 pub mod sim;
+pub mod trace;
 
 pub use error::{Error, Result};

@@ -8,7 +8,7 @@
 //!                 [--listen ADDR] [--advertise HOST:PORT] [--compress] [--model NAME]
 //!                 [--announce-dir DIR] [--announce-every SECS] [--session-ttl SECS]
 //!                 [--dht-listen ADDR] [--dht-advertise HOST:PORT] [--bootstrap ADDR,...]
-//!                 [--drain SECS]
+//!                 [--metrics-listen ADDR] [--drain SECS]
 //! petals generate --artifacts DIR (--peers n1=addr1,... | --announce-dir DIR
 //!                 | --bootstrap ADDR,...) [--model NAME]
 //!                 --prompt 1,2,3 [--max-new N] [--topk K | --topp P] [--stream]
@@ -16,8 +16,16 @@
 //!                 | --bootstrap ADDR,...) [--model NAME] [--listen ADDR] [--stream]
 //! petals sim      [--preset 3xa100|12virtual|14real] [--net gbit5|mbit100-5|mbit100-100]
 //!                 [--workload inference|forward|multiclient|shared-prefix]
+//! petals top      (--announce-dir DIR | --bootstrap ADDR,...) [--model NAME]
+//!                 [--interval SECS] [--once] [--n-blocks N] [--artifacts DIR]
 //! petals info     --artifacts DIR
 //! ```
+//!
+//! `top` is the live swarm status view: it polls the same
+//! [`petals::dht::ServerEntry`] telemetry servers announce for routing
+//! (span, throughput, KV-pool occupancy, p50 step latency, queue depth,
+//! live sessions) and renders a refreshing table — `--once` prints a
+//! single snapshot for scripts.
 //!
 //! Discovery, in increasing deployment reach:
 //!
@@ -57,9 +65,10 @@ fn main() {
         Some("generate") => cmd_generate(&parse_flags(&args[1..])),
         Some("chat") => cmd_chat(&parse_flags(&args[1..])),
         Some("sim") => cmd_sim(&parse_flags(&args[1..])),
+        Some("top") => cmd_top(&parse_flags(&args[1..])),
         Some("info") => cmd_info(&parse_flags(&args[1..])),
         _ => {
-            eprintln!("usage: petals <server|generate|chat|sim|info> [flags]");
+            eprintln!("usage: petals <server|generate|chat|sim|top|info> [flags]");
             eprintln!("see rust/src/main.rs header for the flag reference");
             2
         }
@@ -169,6 +178,14 @@ fn cmd_server(flags: &HashMap<String, String>) -> i32 {
         Err(e) => return fail(&e.to_string()),
     };
     println!("petals server '{name}' hosting blocks {start}..{end} ({precision:?}) on {}", handle.addr);
+    // Prometheus text exposition on a separate listener, so scrapes
+    // never contend with the binary wire socket
+    if let Some(maddr) = flags.get("metrics-listen") {
+        match petals::server::service::serve_metrics(handle.node.clone(), maddr) {
+            Ok(mh) => println!("prometheus exposition on http://{}/metrics", mh.addr),
+            Err(e) => return fail(&e.to_string()),
+        }
+    }
     let every = flags
         .get("announce-every")
         .and_then(|s| s.parse::<u64>().ok())
@@ -585,4 +602,163 @@ fn cmd_sim(flags: &HashMap<String, String>) -> i32 {
         }
     }
     0
+}
+
+/// Render the swarm status table from discovery announcements. Pure so
+/// the layout is unit-testable without a swarm.
+fn render_top_table(rows: &[petals::dht::FsAnnouncement]) -> String {
+    let mut rows: Vec<&petals::dht::FsAnnouncement> = rows.iter().collect();
+    rows.sort_by_key(|a| (a.entry.start, a.entry.server));
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<10} {:>7} {:>8} {:>8} {:>6} {:>5} {:>14} {:>4}  {}\n",
+        "SERVER", "BLOCKS", "REQ/S", "P50 MS", "QUEUE", "SESS", "KV FREE", "HOT", "ADDR"
+    ));
+    for a in rows {
+        let e = &a.entry;
+        let p50 = if e.p50_step_us == 0 {
+            "-".to_string()
+        } else {
+            format!("{:.2}", e.p50_step_us as f64 / 1000.0)
+        };
+        let kv = if e.total_pages == 0 {
+            "-".to_string()
+        } else {
+            format!("{}/{} {:.0}%", e.free_pages, e.total_pages, 100.0 * e.free_pages as f64 / e.total_pages as f64)
+        };
+        out.push_str(&format!(
+            "{:<10} {:>7} {:>8.1} {:>8} {:>6} {:>5} {:>14} {:>4}  {}\n",
+            e.server.short(),
+            format!("{}..{}", e.start, e.end),
+            e.throughput,
+            p50,
+            e.queue_depth,
+            e.sessions_active,
+            kv,
+            e.prefix_fps.len(),
+            a.addr,
+        ));
+    }
+    out
+}
+
+fn cmd_top(flags: &HashMap<String, String>) -> i32 {
+    let interval = flags.get("interval").and_then(|s| s.parse::<u64>().ok()).unwrap_or(2).max(1);
+    let once = flags.contains_key("once");
+    // the full ServerEntry telemetry rides on announcements (fs or DHT),
+    // not on Ping — so `top` needs a discovery source, not a peer list
+    let fetch: Box<dyn Fn() -> std::result::Result<Vec<petals::dht::FsAnnouncement>, String>> =
+        if let Some(dir) = flags.get("announce-dir") {
+            let fsdir = match petals::dht::FsDirectory::open(dir) {
+                Ok(d) => d,
+                Err(e) => return fail(&e.to_string()),
+            };
+            Box::new(move || Ok(fsdir.discover()))
+        } else if flags.contains_key("bootstrap") {
+            let addrs = parse_bootstrap(flags);
+            let model = model_name(flags);
+            // block keys to scan: explicit flag, else local artifacts'
+            // geometry, else a generous ceiling
+            let n_blocks = flags
+                .get("n-blocks")
+                .and_then(|s| s.parse::<u32>().ok())
+                .or_else(|| {
+                    ModelHome::open(artifacts_dir(flags)).ok().map(|h| h.geometry().n_layers as u32)
+                })
+                .unwrap_or(64);
+            let (rpc, seeds) =
+                match petals::dht::client_rpc(&addrs, std::time::Duration::from_secs(2)) {
+                    Ok(v) => v,
+                    Err(e) => return fail(&e.to_string()),
+                };
+            Box::new(move || {
+                let dir = petals::dht::BlockDirectory::new(&rpc, seeds.clone(), &model);
+                Ok(dir.discover_addressed(n_blocks))
+            })
+        } else {
+            return fail("--announce-dir DIR or --bootstrap ADDR[,...] required");
+        };
+    loop {
+        let rows = match fetch() {
+            Ok(r) => r,
+            Err(m) => return fail(&m),
+        };
+        if !once {
+            print!("\x1b[2J\x1b[H"); // clear + home, live-refresh style
+        }
+        println!(
+            "petals top — {} live server(s){}",
+            rows.len(),
+            if once { String::new() } else { format!(", refreshing every {interval}s (Ctrl-C to quit)") }
+        );
+        print!("{}", render_top_table(&rows));
+        use std::io::Write;
+        let _ = std::io::stdout().flush();
+        if once {
+            return 0;
+        }
+        std::thread::sleep(std::time::Duration::from_secs(interval));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use petals::dht::{FsAnnouncement, NodeId, ServerEntry};
+
+    #[test]
+    fn top_table_renders_telemetry_sorted_by_span() {
+        let mk = |name: &str, start, end, p50, q, sess, addr: &str| FsAnnouncement {
+            addr: addr.into(),
+            entry: ServerEntry {
+                server: NodeId::from_name(name),
+                start,
+                end,
+                throughput: 12.5,
+                free_pages: 120,
+                total_pages: 256,
+                batch_width: 4,
+                prefix_fps: vec![1, 2, 3],
+                p50_step_us: p50,
+                queue_depth: q,
+                sessions_active: sess,
+            },
+        };
+        let rows =
+            vec![mk("tail", 4, 8, 3200, 1, 4, "h2:1"), mk("head", 0, 4, 900, 0, 2, "h1:1")];
+        let table = render_top_table(&rows);
+        let lines: Vec<&str> = table.lines().collect();
+        assert_eq!(lines.len(), 3, "header + one row per server");
+        assert!(lines[0].contains("P50 MS") && lines[0].contains("SESS"));
+        // sorted by span start, not input order
+        assert!(lines[1].contains("0..4") && lines[1].contains("h1:1"));
+        assert!(lines[2].contains("4..8") && lines[2].contains("h2:1"));
+        assert!(lines[1].contains("0.90"), "p50 µs rendered as ms: {}", lines[1]);
+        assert!(lines[2].contains("120/256 47%"), "kv occupancy: {}", lines[2]);
+        assert!(lines[2].contains("3"), "hot-prefix count");
+    }
+
+    #[test]
+    fn top_table_marks_legacy_fields_unknown() {
+        let rows = vec![FsAnnouncement {
+            addr: "h:1".into(),
+            entry: ServerEntry {
+                server: NodeId::from_name("old"),
+                start: 0,
+                end: 8,
+                throughput: 1.0,
+                free_pages: 0,
+                total_pages: 0,
+                batch_width: 0,
+                prefix_fps: vec![],
+                p50_step_us: 0,
+                queue_depth: 0,
+                sessions_active: 0,
+            },
+        }];
+        let table = render_top_table(&rows);
+        let row = table.lines().nth(1).unwrap();
+        // v1/v2 records decode with zeroed telemetry: render "-" not "0.00"
+        assert!(row.contains(" - "), "unknown p50/kv render as dashes: {row}");
+    }
 }

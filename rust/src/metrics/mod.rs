@@ -1,11 +1,23 @@
-//! Metrics substrate: counters, latency histograms, throughput meters.
+//! Metrics substrate: counters, latency histograms, windowed rates, and
+//! the Prometheus text exposition.
 //!
 //! Thread-safe, allocation-free on the record path (atomics + fixed
 //! log-scale buckets), so servers can record every request without
 //! perturbing the hot loop.
+//!
+//! The node-wide metric set is declared ONCE through the
+//! `node_metrics!` registry macro, which generates the [`NodeMetrics`]
+//! struct, the human [`NodeMetrics::report`] line, the
+//! [`NodeMetrics::prometheus`] exposition and the [`METRIC_NAMES`]
+//! table — so the exported names, the report and the struct fields can
+//! never drift apart (a drift test in `tests/observability.rs` diffs
+//! the table against a live scrape).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
+
+/// Content-type for the Prometheus text exposition format 0.0.4.
+pub const PROMETHEUS_CONTENT_TYPE: &str = "text/plain; version=0.0.4";
 
 /// Monotonic counter.
 #[derive(Default)]
@@ -47,10 +59,13 @@ impl Gauge {
     }
 }
 
-/// Log-scale histogram over microseconds: bucket i covers
-/// [2^i, 2^(i+1)) µs, 48 buckets ≈ 9 years of range.
+/// Number of buckets in a [`Histogram`]: bucket `i` covers
+/// `[2^i, 2^(i+1))` µs, 48 buckets ≈ 9 years of range.
+pub const HISTOGRAM_BUCKETS: usize = 48;
+
+/// Log-scale histogram over microseconds.
 pub struct Histogram {
-    buckets: [AtomicU64; 48],
+    buckets: [AtomicU64; HISTOGRAM_BUCKETS],
     count: AtomicU64,
     sum_us: AtomicU64,
 }
@@ -75,7 +90,7 @@ impl Histogram {
     }
 
     pub fn record_us(&self, us: u64) {
-        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(47);
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(HISTOGRAM_BUCKETS - 1);
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_us.fetch_add(us, Ordering::Relaxed);
@@ -85,12 +100,24 @@ impl Histogram {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Total of all recorded values, microseconds.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the per-bucket counts (bucket `i` covers
+    /// `[2^i, 2^(i+1))` µs). Exposition renderers turn these into
+    /// cumulative `le` series.
+    pub fn bucket_counts(&self) -> [u64; HISTOGRAM_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
     pub fn mean_us(&self) -> f64 {
         let c = self.count();
         if c == 0 {
             0.0
         } else {
-            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+            self.sum_us() as f64 / c as f64
         }
     }
 
@@ -108,7 +135,7 @@ impl Histogram {
                 return 1u64 << (i + 1);
             }
         }
-        1u64 << 48
+        1u64 << HISTOGRAM_BUCKETS
     }
 
     pub fn summary(&self) -> String {
@@ -123,122 +150,263 @@ impl Histogram {
     }
 }
 
-/// Events-per-second meter (whole-run).
-pub struct Throughput {
+/// Sliding-bucket events-per-second meter.
+///
+/// A ring of one-second buckets stamped with the second they belong to;
+/// `per_second()` sums the buckets still inside the window, so a
+/// long-lived server reports its *current* rate instead of a lifetime
+/// average (what the DHT telemetry wants). Records are two relaxed
+/// atomic ops — safe on the hot loop.
+pub struct WindowedRate {
     started: std::time::Instant,
-    events: Counter,
+    /// Events recorded during the second named by the matching stamp.
+    buckets: [AtomicU64; Self::SLOTS],
+    /// Absolute second (since `started`) each bucket currently holds,
+    /// offset by 1 so 0 means "never written".
+    stamps: [AtomicU64; Self::SLOTS],
 }
 
-impl Default for Throughput {
+impl Default for WindowedRate {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl Throughput {
+impl WindowedRate {
+    const SLOTS: usize = 16;
+    /// Averaging window, seconds. Must be ≤ `SLOTS`.
+    pub const WINDOW_SECS: u64 = 10;
+
     pub fn new() -> Self {
-        Throughput { started: std::time::Instant::now(), events: Counter::new() }
+        WindowedRate {
+            started: std::time::Instant::now(),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            stamps: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    fn now_s(&self) -> u64 {
+        self.started.elapsed().as_secs()
     }
 
     pub fn record(&self, n: u64) {
-        self.events.add(n);
+        self.record_at(self.now_s(), n);
     }
 
+    /// Events/s over the trailing window (or over the run so far, when
+    /// the run is younger than the window).
     pub fn per_second(&self) -> f64 {
-        let secs = self.started.elapsed().as_secs_f64();
-        if secs == 0.0 {
-            0.0
-        } else {
-            self.events.get() as f64 / secs
+        let elapsed = self.started.elapsed().as_secs_f64();
+        self.per_second_at(self.now_s(), elapsed)
+    }
+
+    /// Record against an explicit clock — deterministic hook for tests
+    /// and sims; `record()` is the wall-clock entry point.
+    pub fn record_at(&self, now_s: u64, n: u64) {
+        let slot = (now_s as usize) % Self::SLOTS;
+        let stamp = now_s + 1;
+        if self.stamps[slot].swap(stamp, Ordering::Relaxed) != stamp {
+            // the slot belonged to an older lap of the ring: restart it
+            // (a racing record in the same second may be dropped — fine
+            // for a rate meter)
+            self.buckets[slot].store(0, Ordering::Relaxed);
+        }
+        self.buckets[slot].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Deterministic counterpart of [`WindowedRate::per_second`].
+    pub fn per_second_at(&self, now_s: u64, elapsed_s: f64) -> f64 {
+        let mut events = 0u64;
+        for slot in 0..Self::SLOTS {
+            let stamp = self.stamps[slot].load(Ordering::Relaxed);
+            if stamp == 0 {
+                continue;
+            }
+            let sec = stamp - 1;
+            if sec <= now_s && now_s - sec < Self::WINDOW_SECS {
+                events += self.buckets[slot].load(Ordering::Relaxed);
+            }
+        }
+        let denom = elapsed_s.clamp(1.0, Self::WINDOW_SECS as f64);
+        events as f64 / denom
+    }
+}
+
+/// Kind of an exported metric family (see [`METRIC_NAMES`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricKind {
+    /// The `# TYPE` keyword for this kind.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
         }
     }
 }
 
-/// Standard metric set every server/client carries.
-#[derive(Default)]
-pub struct NodeMetrics {
-    pub requests: Counter,
-    pub failures: Counter,
-    pub bytes_in: Counter,
-    pub bytes_out: Counter,
-    pub step_latency: Histogram,
-    /// KV-cache pool capacity, pages (set at server start).
-    pub kv_pages_total: Gauge,
-    /// KV-cache pages currently free for new admissions.
-    pub kv_pages_free: Gauge,
-    /// Decode steps that ran through a fused (multi-session) batch.
-    pub batched_steps: Counter,
-    /// Total rows executed inside fused batches (fused_rows /
-    /// batched_steps = mean batch width).
-    pub fused_rows: Counter,
-    /// Sessions rejected by pool admission control.
-    pub admission_rejects: Counter,
-    /// Session opens that attached a cached shared prefix (full or
-    /// partial trie hit).
-    pub prefix_hits: Counter,
-    /// Session opens that carried prefix tokens but matched nothing.
-    pub prefix_misses: Counter,
-    /// Prefills answered from a cached output (full hit: executor call
-    /// skipped entirely).
-    pub prefix_prefill_skips: Counter,
-    /// Prefixes registered (pinned) into the cache after a prefill.
-    pub prefix_registered: Counter,
-    /// KV pages currently referenced by more than one holder.
-    pub kv_pages_shared: Gauge,
-    /// Copy-on-write page forks (first divergent write into a shared page).
-    pub cow_forks: Counter,
-    /// Single-session decode steps served from the cached K/V literals
-    /// (pool gather + upload skipped).
-    pub fastpath_hits: Counter,
-    /// Sessions closed by the idle-TTL sweep (abandoned clients whose
-    /// KV-pool reservations would otherwise leak forever).
-    pub sessions_swept: Counter,
-    /// Fused decode batches whose rows mixed DIFFERENT cache lengths
-    /// (the ragged-batching lever; a subset of `batched_steps`).
-    pub ragged_steps: Counter,
-    /// Sessions pushed to a peer by a drain (wire-v6 live migration).
-    pub sessions_migrated_out: Counter,
-    /// Sessions restored from a peer's migration push.
-    pub sessions_migrated_in: Counter,
-    /// Batch rows released early (per-row stop: pages freed before the
-    /// rest of the batch finished).
-    pub rows_exited: Counter,
+// ---- exposition renderers (one per metric kind) -----------------------
+
+fn prom_counter(out: &mut String, name: &str, help: &str, v: u64) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"));
 }
 
-impl NodeMetrics {
-    pub fn new() -> Self {
-        Self::default()
-    }
+fn prom_gauge(out: &mut String, name: &str, help: &str, v: u64) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"));
+}
 
-    pub fn report(&self) -> String {
-        format!(
-            "requests={} failures={} in={}B out={}B step[{}] kv_pages={}/{} \
-             batched={} ragged={} fused_rows={} rejects={} prefix_hit={}/{} \
-             prefill_skips={} shared_pages={} cow_forks={} fastpath={} swept={} \
-             migrated_out={} migrated_in={} rows_exited={}",
-            self.requests.get(),
-            self.failures.get(),
-            self.bytes_in.get(),
-            self.bytes_out.get(),
-            self.step_latency.summary(),
-            self.kv_pages_free.get(),
-            self.kv_pages_total.get(),
-            self.batched_steps.get(),
-            self.ragged_steps.get(),
-            self.fused_rows.get(),
-            self.admission_rejects.get(),
-            self.prefix_hits.get(),
-            self.prefix_hits.get() + self.prefix_misses.get(),
-            self.prefix_prefill_skips.get(),
-            self.kv_pages_shared.get(),
-            self.cow_forks.get(),
-            self.fastpath_hits.get(),
-            self.sessions_swept.get(),
-            self.sessions_migrated_out.get(),
-            self.sessions_migrated_in.get(),
-            self.rows_exited.get(),
-        )
+/// Histograms export in SECONDS (Prometheus base-unit convention);
+/// bucket `i`'s upper bound is `2^(i+1)` µs, emitted cumulatively.
+fn prom_histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+    let mut cum = 0u64;
+    for (i, n) in h.bucket_counts().iter().enumerate() {
+        cum += n;
+        let le = (1u64 << (i + 1)) as f64 / 1e6;
+        out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
     }
+    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+    out.push_str(&format!("{name}_sum {}\n", h.sum_us() as f64 / 1e6));
+    out.push_str(&format!("{name}_count {cum}\n"));
+}
+
+// ---- registry macro ---------------------------------------------------
+
+/// Field type for a registry kind keyword.
+macro_rules! metric_type {
+    (counter) => { Counter };
+    (gauge) => { Gauge };
+    (histogram) => { Histogram };
+}
+
+/// Exported family name for a registry entry (compile-time const).
+/// Counters get the `_total` suffix, histograms export in seconds.
+macro_rules! metric_family {
+    (counter, $field:ident) => {
+        concat!("petals_", stringify!($field), "_total")
+    };
+    (gauge, $field:ident) => {
+        concat!("petals_", stringify!($field))
+    };
+    (histogram, $field:ident) => {
+        concat!("petals_", stringify!($field), "_seconds")
+    };
+}
+
+macro_rules! metric_kind {
+    (counter) => {
+        MetricKind::Counter
+    };
+    (gauge) => {
+        MetricKind::Gauge
+    };
+    (histogram) => {
+        MetricKind::Histogram
+    };
+}
+
+/// One metric's contribution to the human `report()` line.
+macro_rules! report_one {
+    ($self:ident, $out:ident, counter, $field:ident) => {
+        $out.push_str(&format!("{}={} ", stringify!($field), $self.$field.get()));
+    };
+    ($self:ident, $out:ident, gauge, $field:ident) => {
+        $out.push_str(&format!("{}={} ", stringify!($field), $self.$field.get()));
+    };
+    ($self:ident, $out:ident, histogram, $field:ident) => {
+        $out.push_str(&format!("{}[{}] ", stringify!($field), $self.$field.summary()));
+    };
+}
+
+/// One metric's contribution to the Prometheus exposition.
+macro_rules! prom_one {
+    ($self:ident, $out:ident, counter, $field:ident, $help:literal) => {
+        prom_counter(&mut $out, metric_family!(counter, $field), $help, $self.$field.get());
+    };
+    ($self:ident, $out:ident, gauge, $field:ident, $help:literal) => {
+        prom_gauge(&mut $out, metric_family!(gauge, $field), $help, $self.$field.get());
+    };
+    ($self:ident, $out:ident, histogram, $field:ident, $help:literal) => {
+        prom_histogram(&mut $out, metric_family!(histogram, $field), $help, &$self.$field);
+    };
+}
+
+/// Declares the node-wide metric set ONCE: generates the `NodeMetrics`
+/// struct (each help string doubles as the field's doc comment), the
+/// `METRIC_NAMES` registry table, `report()` and `prometheus()`.
+macro_rules! node_metrics {
+    ( $( $kind:ident $field:ident => $help:literal ),+ $(,)? ) => {
+        /// Standard metric set every server/client carries.
+        ///
+        /// Declared through the `node_metrics!` registry — struct
+        /// fields, exported names, `report()` and the Prometheus
+        /// exposition all expand from the same list.
+        #[derive(Default)]
+        pub struct NodeMetrics {
+            $( #[doc = $help] pub $field: metric_type!($kind), )+
+        }
+
+        /// Registry table: `(field name, exported family name, kind)`
+        /// for every `NodeMetrics` field, in declaration order.
+        pub const METRIC_NAMES: &[(&str, &str, MetricKind)] = &[
+            $( (stringify!($field), metric_family!($kind, $field), metric_kind!($kind)), )+
+        ];
+
+        impl NodeMetrics {
+            pub fn new() -> Self {
+                Self::default()
+            }
+
+            /// One-line human summary (log-friendly), generated from
+            /// the same registry as the Prometheus exposition.
+            pub fn report(&self) -> String {
+                let mut out = String::new();
+                $( report_one!(self, out, $kind, $field); )+
+                out.trim_end().to_string()
+            }
+
+            /// Render the full metric set in Prometheus text
+            /// exposition format 0.0.4 (serve with
+            /// [`PROMETHEUS_CONTENT_TYPE`]). Histograms export
+            /// cumulative `le` buckets in seconds plus `_sum`/`_count`.
+            pub fn prometheus(&self) -> String {
+                let mut out = String::new();
+                $( prom_one!(self, out, $kind, $field, $help); )+
+                out
+            }
+        }
+    };
+}
+
+node_metrics! {
+    counter requests => "Requests handled (any kind).",
+    counter failures => "Requests that returned an error.",
+    counter bytes_in => "Bytes received on the wire.",
+    counter bytes_out => "Bytes sent on the wire.",
+    histogram step_latency => "Server-side latency of one inference step.",
+    gauge kv_pages_total => "KV-cache pool capacity, pages (set at server start).",
+    gauge kv_pages_free => "KV-cache pages currently free for new admissions.",
+    counter batched_steps => "Decode steps that ran through a fused (multi-session) batch.",
+    counter fused_rows => "Total rows executed inside fused batches (fused_rows / batched_steps = mean batch width).",
+    counter admission_rejects => "Sessions rejected by pool admission control.",
+    counter prefix_hits => "Session opens that attached a cached shared prefix (full or partial trie hit).",
+    counter prefix_misses => "Session opens that carried prefix tokens but matched nothing.",
+    counter prefix_prefill_skips => "Prefills answered from a cached output (full hit: executor call skipped entirely).",
+    counter prefix_registered => "Prefixes registered (pinned) into the cache after a prefill.",
+    gauge kv_pages_shared => "KV pages currently referenced by more than one holder.",
+    counter cow_forks => "Copy-on-write page forks (first divergent write into a shared page).",
+    counter fastpath_hits => "Single-session decode steps served from the cached K/V literals (pool gather + upload skipped).",
+    counter sessions_swept => "Sessions closed by the idle-TTL sweep (abandoned clients whose KV-pool reservations would otherwise leak forever).",
+    counter ragged_steps => "Fused decode batches whose rows mixed DIFFERENT cache lengths (the ragged-batching lever; a subset of batched_steps).",
+    counter sessions_migrated_out => "Sessions pushed to a peer by a drain (wire-v6 live migration).",
+    counter sessions_migrated_in => "Sessions restored from a peer's migration push.",
+    counter rows_exited => "Batch rows released early (per-row stop: pages freed before the rest of the batch finished).",
 }
 
 #[cfg(test)]
@@ -291,5 +459,80 @@ mod tests {
         h.record_us(0); // clamped to 1
         h.record_us(u64::MAX); // clamped to last bucket
         assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn histogram_buckets_sum_to_count() {
+        let h = Histogram::new();
+        for us in [1u64, 5, 9, 1000, 100_000, 3] {
+            h.record_us(us);
+        }
+        let total: u64 = h.bucket_counts().iter().sum();
+        assert_eq!(total, h.count());
+        assert_eq!(h.sum_us(), 101_018);
+    }
+
+    #[test]
+    fn windowed_rate_tracks_current_window() {
+        let r = WindowedRate::new();
+        // 5 events/s for the first 20 seconds of a (virtual) run
+        for s in 0..20u64 {
+            r.record_at(s, 5);
+        }
+        let rate = r.per_second_at(19, 19.0);
+        assert!((rate - 5.0).abs() < 1e-9, "steady rate, got {rate}");
+        // the run goes quiet: 30s later the window is empty
+        assert_eq!(r.per_second_at(49, 49.0), 0.0);
+        // a fresh burst counts only the live window, not the lifetime
+        r.record_at(50, 100);
+        let burst = r.per_second_at(50, 50.0);
+        assert!((burst - 10.0).abs() < 1e-9, "100 events / 10s window, got {burst}");
+    }
+
+    #[test]
+    fn windowed_rate_young_run_divides_by_elapsed() {
+        let r = WindowedRate::new();
+        r.record_at(0, 8);
+        r.record_at(1, 8);
+        // 2s-old run: divide by max(elapsed, 1), not the full window
+        let rate = r.per_second_at(1, 2.0);
+        assert!((rate - 8.0).abs() < 1e-9, "16 events / 2s, got {rate}");
+    }
+
+    #[test]
+    fn windowed_rate_wallclock_smoke() {
+        let r = WindowedRate::new();
+        r.record(3);
+        assert!(r.per_second() >= 3.0);
+    }
+
+    #[test]
+    fn registry_has_every_field_once() {
+        let mut names: Vec<&str> = METRIC_NAMES.iter().map(|(f, _, _)| *f).collect();
+        let n = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate field in METRIC_NAMES");
+        assert!(n >= 22, "registry lost fields: {n}");
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let m = NodeMetrics::new();
+        m.requests.add(3);
+        m.kv_pages_free.set(17);
+        m.step_latency.record_us(500);
+        m.step_latency.record_us(1500);
+        let text = m.prometheus();
+        assert!(text.contains("# TYPE petals_requests_total counter"));
+        assert!(text.contains("petals_requests_total 3\n"));
+        assert!(text.contains("# TYPE petals_kv_pages_free gauge"));
+        assert!(text.contains("petals_kv_pages_free 17\n"));
+        assert!(text.contains("# TYPE petals_step_latency_seconds histogram"));
+        assert!(text.contains("petals_step_latency_seconds_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("petals_step_latency_seconds_count 2\n"));
+        assert!(text.contains("petals_step_latency_seconds_sum 0.002\n"));
+        // report() is generated from the same registry
+        assert!(m.report().contains("requests=3"));
     }
 }

@@ -7,6 +7,7 @@
 use crate::dht::NodeId;
 use crate::model::tensor::{DType, Tensor};
 use crate::quant::{self, QuantizedTensor};
+use crate::trace::{StepBreakdown, TraceContext};
 
 /// Most peers one `DhtNodes` reply may carry (bounds allocation; the
 /// Kademlia `K` closest is far below this).
@@ -27,6 +28,9 @@ pub const MAX_MIGRATE_CHUNK: usize = 4 << 20;
 /// Largest *total* serialized session snapshot a migration target will
 /// accept across all chunks (wire v6 `MigrateSessionOffer.total_bytes`).
 pub const MAX_MIGRATE_TOTAL: usize = 256 << 20;
+/// Most hot-prefix fingerprints one `PongV2` may gossip (wire v7;
+/// bounds allocation — servers announce at most 8 via the DHT too).
+pub const MAX_PONG_FPS: usize = 16;
 
 /// A DHT peer on the wire: node id + the address it can be dialed at.
 /// Requests carry the *caller's* contact so the callee can fold the
@@ -292,6 +296,57 @@ pub enum Message {
     /// connection); clients treat that as a no-op — the pages are
     /// reclaimed at session close instead.
     CloseSessionRow { session: u64, row: u32 },
+    /// One TRACED ragged decode step (wire v7): [`Message::InferStepRagged`]
+    /// plus a trace context (16-byte trace id + parent span id) so the
+    /// server can attribute its stage timings to the client's request.
+    /// Answered with [`Message::StepOutputTraced`]. Legacy servers
+    /// reject the unknown tag (dropped connection); clients downgrade
+    /// to the untraced `InferStepRagged` and record the hop with no
+    /// breakdown.
+    InferStepTraced {
+        session: u64,
+        cache_lens: Vec<u32>,
+        trace: TraceContext,
+        hidden: TensorPayload,
+    },
+    /// Reply to `InferStepTraced`: the hidden result plus where the
+    /// server spent the step (queue, fuse, gather, exec, commit —
+    /// microseconds, saturating) under a server-minted span id.
+    StepOutputTraced { breakdown: StepBreakdown, hidden: TensorPayload },
+    /// Traced session open (wire v7): [`Message::OpenSessionV3`] plus
+    /// the trace context, so the open itself lands in the server's
+    /// request log under the client's trace id. Servers answer with
+    /// `SessionOpenedV3` exactly as for V3; legacy servers reject the
+    /// unknown tag and clients downgrade to `OpenSessionV3`.
+    OpenSessionTraced {
+        session: u64,
+        batch: u32,
+        prefix_len: u32,
+        max_new: u32,
+        prefill_width: u32,
+        prefix_tokens: Vec<i32>,
+        trace: TraceContext,
+    },
+    /// Telemetry probe (wire v7): like [`Message::Ping`] but answered
+    /// with [`Message::PongV2`]. Legacy servers reject the unknown tag
+    /// (dropped connection); clients fall back to `Ping` per peer.
+    PingV2,
+    /// Reply to `PingV2`: everything `Pong` carries, plus live
+    /// telemetry (p50 step latency, sessions active) and the server's
+    /// hot-prefix fingerprints — gossiped here so static-peer-list TCP
+    /// swarms get cache-aware sticky routing without a DHT.
+    PongV2 {
+        start: u32,
+        end: u32,
+        throughput: f32,
+        queue_depth: u32,
+        free_pages: u32,
+        total_pages: u32,
+        batch_width: u32,
+        p50_step_us: u32,
+        sessions_active: u32,
+        prefix_fps: Vec<u64>,
+    },
 }
 
 impl Message {
@@ -328,6 +383,11 @@ impl Message {
             Message::MigrateSessionChunk { .. } => "MigrateSessionChunk",
             Message::MigrateSessionDone { .. } => "MigrateSessionDone",
             Message::CloseSessionRow { .. } => "CloseSessionRow",
+            Message::InferStepTraced { .. } => "InferStepTraced",
+            Message::StepOutputTraced { .. } => "StepOutputTraced",
+            Message::OpenSessionTraced { .. } => "OpenSessionTraced",
+            Message::PingV2 => "PingV2",
+            Message::PongV2 { .. } => "PongV2",
         }
     }
 
@@ -497,6 +557,78 @@ impl Message {
                 out.extend_from_slice(&session.to_le_bytes());
                 out.extend_from_slice(&row.to_le_bytes());
             }
+            Message::InferStepTraced { session, cache_lens, trace, hidden } => {
+                out.push(27);
+                out.extend_from_slice(&session.to_le_bytes());
+                out.extend_from_slice(&(cache_lens.len() as u32).to_le_bytes());
+                for l in cache_lens {
+                    out.extend_from_slice(&l.to_le_bytes());
+                }
+                out.extend_from_slice(&trace.trace_id);
+                out.extend_from_slice(&trace.parent_span.to_le_bytes());
+                hidden.write(&mut out);
+            }
+            Message::StepOutputTraced { breakdown, hidden } => {
+                out.push(28);
+                out.extend_from_slice(&breakdown.span_id.to_le_bytes());
+                out.extend_from_slice(&breakdown.queue_us.to_le_bytes());
+                out.extend_from_slice(&breakdown.fuse_us.to_le_bytes());
+                out.extend_from_slice(&breakdown.gather_us.to_le_bytes());
+                out.extend_from_slice(&breakdown.exec_us.to_le_bytes());
+                out.extend_from_slice(&breakdown.commit_us.to_le_bytes());
+                out.extend_from_slice(&breakdown.total_us.to_le_bytes());
+                hidden.write(&mut out);
+            }
+            Message::OpenSessionTraced {
+                session,
+                batch,
+                prefix_len,
+                max_new,
+                prefill_width,
+                prefix_tokens,
+                trace,
+            } => {
+                out.push(29);
+                out.extend_from_slice(&session.to_le_bytes());
+                out.extend_from_slice(&batch.to_le_bytes());
+                out.extend_from_slice(&prefix_len.to_le_bytes());
+                out.extend_from_slice(&max_new.to_le_bytes());
+                out.extend_from_slice(&prefill_width.to_le_bytes());
+                out.extend_from_slice(&trace.trace_id);
+                out.extend_from_slice(&trace.parent_span.to_le_bytes());
+                out.extend_from_slice(&(prefix_tokens.len() as u32).to_le_bytes());
+                for t in prefix_tokens {
+                    out.extend_from_slice(&t.to_le_bytes());
+                }
+            }
+            Message::PingV2 => out.push(30),
+            Message::PongV2 {
+                start,
+                end,
+                throughput,
+                queue_depth,
+                free_pages,
+                total_pages,
+                batch_width,
+                p50_step_us,
+                sessions_active,
+                prefix_fps,
+            } => {
+                out.push(31);
+                out.extend_from_slice(&start.to_le_bytes());
+                out.extend_from_slice(&end.to_le_bytes());
+                out.extend_from_slice(&throughput.to_le_bytes());
+                out.extend_from_slice(&queue_depth.to_le_bytes());
+                out.extend_from_slice(&free_pages.to_le_bytes());
+                out.extend_from_slice(&total_pages.to_le_bytes());
+                out.extend_from_slice(&batch_width.to_le_bytes());
+                out.extend_from_slice(&p50_step_us.to_le_bytes());
+                out.extend_from_slice(&sessions_active.to_le_bytes());
+                out.extend_from_slice(&(prefix_fps.len() as u32).to_le_bytes());
+                for fp in prefix_fps {
+                    out.extend_from_slice(&fp.to_le_bytes());
+                }
+            }
         }
         out
     }
@@ -649,6 +781,97 @@ impl Message {
             }
             25 => Message::MigrateSessionDone { session: r.u64()? },
             26 => Message::CloseSessionRow { session: r.u64()?, row: r.u32()? },
+            27 => {
+                let session = r.u64()?;
+                let n = r.u32()? as usize;
+                if n > MAX_RAGGED_ROWS {
+                    return None; // bound allocation on hostile input
+                }
+                let mut cache_lens = Vec::with_capacity(n);
+                for _ in 0..n {
+                    cache_lens.push(r.u32()?);
+                }
+                let mut trace_id = [0u8; 16];
+                trace_id.copy_from_slice(r.bytes(16)?);
+                let parent_span = r.u64()?;
+                Message::InferStepTraced {
+                    session,
+                    cache_lens,
+                    trace: TraceContext { trace_id, parent_span },
+                    hidden: TensorPayload::read(&mut r)?,
+                }
+            }
+            28 => Message::StepOutputTraced {
+                breakdown: StepBreakdown {
+                    span_id: r.u64()?,
+                    queue_us: r.u32()?,
+                    fuse_us: r.u32()?,
+                    gather_us: r.u32()?,
+                    exec_us: r.u32()?,
+                    commit_us: r.u32()?,
+                    total_us: r.u32()?,
+                },
+                hidden: TensorPayload::read(&mut r)?,
+            },
+            29 => {
+                let session = r.u64()?;
+                let batch = r.u32()?;
+                let prefix_len = r.u32()?;
+                let max_new = r.u32()?;
+                let prefill_width = r.u32()?;
+                let mut trace_id = [0u8; 16];
+                trace_id.copy_from_slice(r.bytes(16)?);
+                let parent_span = r.u64()?;
+                let n = r.u32()? as usize;
+                if n > 1 << 20 {
+                    return None; // bound allocation on hostile input
+                }
+                let mut prefix_tokens = Vec::with_capacity(n);
+                for _ in 0..n {
+                    prefix_tokens.push(r.u32()? as i32);
+                }
+                Message::OpenSessionTraced {
+                    session,
+                    batch,
+                    prefix_len,
+                    max_new,
+                    prefill_width,
+                    prefix_tokens,
+                    trace: TraceContext { trace_id, parent_span },
+                }
+            }
+            30 => Message::PingV2,
+            31 => {
+                let start = r.u32()?;
+                let end = r.u32()?;
+                let throughput = r.f32()?;
+                let queue_depth = r.u32()?;
+                let free_pages = r.u32()?;
+                let total_pages = r.u32()?;
+                let batch_width = r.u32()?;
+                let p50_step_us = r.u32()?;
+                let sessions_active = r.u32()?;
+                let n = r.u32()? as usize;
+                if n > MAX_PONG_FPS {
+                    return None; // bound allocation on hostile input
+                }
+                let mut prefix_fps = Vec::with_capacity(n);
+                for _ in 0..n {
+                    prefix_fps.push(r.u64()?);
+                }
+                Message::PongV2 {
+                    start,
+                    end,
+                    throughput,
+                    queue_depth,
+                    free_pages,
+                    total_pages,
+                    batch_width,
+                    p50_step_us,
+                    sessions_active,
+                    prefix_fps,
+                }
+            }
             _ => return None,
         };
         if r.pos != buf.len() {
@@ -794,10 +1017,10 @@ mod tests {
     /// every v4 frame) and cross-tag payloads must reject cleanly.
     #[test]
     fn unknown_and_swapped_tags_rejected() {
-        // all unknown tags reject on a representative payload (27 is the
-        // first unassigned tag after wire v6's CloseSessionRow)
+        // all unknown tags reject on a representative payload (32 is the
+        // first unassigned tag after wire v7's PongV2)
         let body = Message::DhtPing { from: contact("a", "127.0.0.1:1") }.encode();
-        for tag in 27..=255u8 {
+        for tag in 32..=255u8 {
             let mut b = body.clone();
             b[0] = tag;
             assert!(Message::decode(&b).is_none(), "tag {tag} accepted");
@@ -806,7 +1029,7 @@ mod tests {
         // panic (it may legitimately alias for container-free tags)
         for m in dht_messages() {
             let bytes = m.encode();
-            for tag in 0..=26u8 {
+            for tag in 0..=31u8 {
                 let mut b = bytes.clone();
                 b[0] = tag;
                 let _ = Message::decode(&b); // no panic is the assertion
@@ -913,6 +1136,133 @@ mod tests {
         assert!(Message::decode(&b).is_none());
         let mut b = Message::CloseSessionRow { session: 7, row: 0 }.encode();
         b.push(9);
+        assert!(Message::decode(&b).is_none());
+    }
+
+    fn traced_messages() -> Vec<Message> {
+        use crate::model::tensor::Tensor;
+        let ctx = TraceContext { trace_id: [0xA5; 16], parent_span: 0x1122_3344_5566_7788 };
+        let t = Tensor::zeros(&[2, 1, 4], DType::F32);
+        vec![
+            Message::InferStepTraced {
+                session: 7,
+                cache_lens: vec![3, 9],
+                trace: ctx,
+                hidden: TensorPayload::raw(&t),
+            },
+            Message::InferStepTraced {
+                session: 7,
+                cache_lens: vec![],
+                trace: ctx,
+                hidden: TensorPayload::raw(&t),
+            },
+            Message::StepOutputTraced {
+                breakdown: StepBreakdown {
+                    span_id: 42,
+                    queue_us: 1,
+                    fuse_us: 2,
+                    gather_us: 3,
+                    exec_us: 4,
+                    commit_us: 5,
+                    total_us: 20,
+                },
+                hidden: TensorPayload::raw(&t),
+            },
+            Message::OpenSessionTraced {
+                session: 7,
+                batch: 2,
+                prefix_len: 5,
+                max_new: 16,
+                prefill_width: 2,
+                prefix_tokens: vec![1, -2, 3],
+                trace: ctx,
+            },
+            Message::OpenSessionTraced {
+                session: 8,
+                batch: 1,
+                prefix_len: 0,
+                max_new: 1,
+                prefill_width: 1,
+                prefix_tokens: vec![],
+                trace: ctx,
+            },
+            Message::PingV2,
+            Message::PongV2 {
+                start: 0,
+                end: 4,
+                throughput: 3.5,
+                queue_depth: 2,
+                free_pages: 10,
+                total_pages: 64,
+                batch_width: 8,
+                p50_step_us: 900,
+                sessions_active: 3,
+                prefix_fps: vec![0xDEAD, 0xBEEF],
+            },
+            Message::PongV2 {
+                start: 1,
+                end: 2,
+                throughput: 0.0,
+                queue_depth: 0,
+                free_pages: 0,
+                total_pages: 0,
+                batch_width: 1,
+                p50_step_us: 0,
+                sessions_active: 0,
+                prefix_fps: vec![],
+            },
+        ]
+    }
+
+    /// Wire-v7 tracing/telemetry frames round-trip byte-exact.
+    #[test]
+    fn traced_messages_roundtrip() {
+        for m in traced_messages() {
+            let bytes = m.encode();
+            let back = Message::decode(&bytes).expect("decode");
+            assert_eq!(bytes, back.encode(), "{}", m.kind());
+        }
+    }
+
+    /// Every truncation of every v7 frame rejects cleanly — the same
+    /// hardening bar every prior tag meets.
+    #[test]
+    fn truncated_traced_frames_rejected() {
+        for m in traced_messages() {
+            let bytes = m.encode();
+            for cut in 0..bytes.len() {
+                assert!(
+                    Message::decode(&bytes[..cut]).is_none(),
+                    "truncated {} at {cut} decoded",
+                    m.kind()
+                );
+            }
+        }
+    }
+
+    /// Forged counts on the v7 container frames must be rejected before
+    /// allocation; trailing junk after a complete frame is corrupt.
+    #[test]
+    fn hostile_traced_frames_rejected() {
+        // InferStepTraced row count > cap
+        let mut b = vec![27u8];
+        b.extend_from_slice(&7u64.to_le_bytes());
+        b.extend_from_slice(&((MAX_RAGGED_ROWS as u32) + 1).to_le_bytes());
+        assert!(Message::decode(&b).is_none());
+        // PongV2 fingerprint count > cap
+        let mut b = vec![31u8];
+        b.extend_from_slice(&[0u8; 36]); // fixed fields
+        b.extend_from_slice(&((MAX_PONG_FPS as u32) + 1).to_le_bytes());
+        assert!(Message::decode(&b).is_none());
+        // OpenSessionTraced token count > cap
+        let mut b = vec![29u8];
+        b.extend_from_slice(&[0u8; 24]); // session + 4 u32s
+        b.extend_from_slice(&[0u8; 24]); // trace id + parent span
+        b.extend_from_slice(&((1u32 << 20) + 1).to_le_bytes());
+        assert!(Message::decode(&b).is_none());
+        // trailing junk
+        let mut b = Message::PingV2.encode();
+        b.push(0);
         assert!(Message::decode(&b).is_none());
     }
 }

@@ -12,7 +12,7 @@ mod framed;
 
 pub use codec::{
     DhtContact, DhtWireRecord, Message, TensorPayload, MAX_DHT_ADDR, MAX_DHT_NODES,
-    MAX_DHT_RECORDS, MAX_MIGRATE_CHUNK, MAX_MIGRATE_TOTAL, MAX_RAGGED_ROWS,
+    MAX_DHT_RECORDS, MAX_MIGRATE_CHUNK, MAX_MIGRATE_TOTAL, MAX_PONG_FPS, MAX_RAGGED_ROWS,
 };
 pub use framed::{read_frame, write_frame, FramedConn};
 
@@ -28,13 +28,17 @@ pub const BASE_PORT: u16 = 31337;
 /// behind ragged continuous batching; v6 added the live-migration tags
 /// (`MigrateSessionOffer`..`MigrateSessionDone`, tags 22–25) plus
 /// `CloseSessionRow` (tag 26) for per-row early exit, and the `moved:`
-/// error-string contract for post-migration redirects. Each step
-/// appended new tags only, so v5 (and older) frames still decode
+/// error-string contract for post-migration redirects; v7 added the
+/// tracing/telemetry tags (`InferStepTraced`/`StepOutputTraced`/
+/// `OpenSessionTraced`, tags 27–29, carrying a 16-byte trace id +
+/// span ids + per-stage step timings) and `PingV2`/`PongV2` (tags
+/// 30–31, live telemetry + gossiped hot-prefix fingerprints). Each
+/// step appended new tags only, so v6 (and older) frames still decode
 /// byte-for-byte; older peers reject the newer tags as undecodable
 /// frames, which callers treat as "peer does not speak this version".
 /// The codec has no inline negotiation, so mixed-version swarms must
 /// not share a model namespace.
-pub const PROTOCOL_VERSION: u32 = 6;
+pub const PROTOCOL_VERSION: u32 = 7;
 
 #[cfg(test)]
 mod tests {
@@ -102,6 +106,52 @@ mod tests {
                 session: 43,
                 cache_lens: vec![1],
                 hidden: TensorPayload::compressed(&t),
+            },
+            Message::InferStepTraced {
+                session: 42,
+                cache_lens: vec![7, 19],
+                trace: crate::trace::TraceContext {
+                    trace_id: [7; 16],
+                    parent_span: 99,
+                },
+                hidden: TensorPayload::compressed(&t),
+            },
+            Message::StepOutputTraced {
+                breakdown: crate::trace::StepBreakdown {
+                    span_id: 5,
+                    queue_us: 10,
+                    fuse_us: 20,
+                    gather_us: 30,
+                    exec_us: 40,
+                    commit_us: 50,
+                    total_us: 160,
+                },
+                hidden: TensorPayload::raw(&t),
+            },
+            Message::OpenSessionTraced {
+                session: 44,
+                batch: 1,
+                prefix_len: 8,
+                max_new: 16,
+                prefill_width: 128,
+                prefix_tokens: vec![5, -1],
+                trace: crate::trace::TraceContext {
+                    trace_id: [1; 16],
+                    parent_span: 2,
+                },
+            },
+            Message::PingV2,
+            Message::PongV2 {
+                start: 3,
+                end: 9,
+                throughput: 1.5,
+                queue_depth: 2,
+                free_pages: 100,
+                total_pages: 512,
+                batch_width: 8,
+                p50_step_us: 1200,
+                sessions_active: 4,
+                prefix_fps: vec![11, 22, 33],
             },
         ];
         for m in msgs {

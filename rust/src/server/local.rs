@@ -10,6 +10,7 @@ use crate::error::{Error, Result};
 use crate::model::tensor::Tensor;
 use crate::net::{Message, MAX_MIGRATE_CHUNK};
 use crate::server::ServerNode;
+use crate::trace::{StepBreakdown, TraceContext};
 use std::sync::{Arc, Mutex, RwLock};
 
 /// The "dial address" an in-process node advertises in its `moved:`
@@ -300,6 +301,22 @@ impl ChainClient for LocalCluster {
                 return Err(Error::Moved(addr));
             }
             n.step_ragged(session, row_lens, hidden)
+        })
+    }
+
+    fn step_traced(
+        &self,
+        server: NodeId,
+        session: u64,
+        row_lens: &[usize],
+        hidden: &Tensor,
+        _ctx: &TraceContext,
+    ) -> Result<(Tensor, Option<StepBreakdown>)> {
+        self.with_node(server, |n| {
+            if let Some(addr) = n.moved_addr(session) {
+                return Err(Error::Moved(addr));
+            }
+            n.step_traced(session, row_lens, hidden).map(|(t, bd)| (t, Some(bd)))
         })
     }
 

@@ -61,16 +61,16 @@ pub use kvpool::{KvPool, KvPoolConfig, SessionSnapshot};
 pub use prefixcache::{fingerprint, template_fingerprint, PrefixCache, PrefixHit};
 pub use scheduler::{StepRequest, StepScheduler};
 
-use crate::coordinator::throughput::MeasuredThroughput;
 use crate::dht::NodeId;
 use crate::error::{Error, Result};
-use crate::metrics::NodeMetrics;
+use crate::metrics::{NodeMetrics, WindowedRate};
 use crate::model::manifest::Geometry;
 use crate::model::tensor::{DType, Tensor};
 use crate::model::weights::{BlockWeights, Precision};
 use crate::model::ModelHome;
 use crate::net::{Message, TensorPayload, MAX_MIGRATE_CHUNK, MAX_MIGRATE_TOTAL};
 use crate::runtime::Runtime;
+use crate::trace::{StepBreakdown, StepTiming};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -195,7 +195,10 @@ pub struct ServerNode {
     /// Group-commit scheduler fusing concurrent decode steps.
     scheduler: StepScheduler,
     pub metrics: NodeMetrics,
-    throughput: Mutex<MeasuredThroughput>,
+    /// Windowed request rate (events over the last few seconds) — what
+    /// the DHT announcement and `Pong` report, so routing reacts to
+    /// load changes instead of averaging over the server's whole life.
+    throughput: WindowedRate,
     active: AtomicU32,
     /// Whether replies compress hidden states (§3.1).
     pub compress: bool,
@@ -283,7 +286,7 @@ impl ServerNode {
             session_ttl: opts.session_ttl,
             scheduler: StepScheduler::new(opts.batch_window, opts.max_batch_width),
             metrics,
-            throughput: Mutex::new(MeasuredThroughput::new()),
+            throughput: WindowedRate::new(),
             active: AtomicU32::new(0),
             compress,
             draining: AtomicBool::new(false),
@@ -297,9 +300,10 @@ impl ServerNode {
         self.end - self.start
     }
 
-    /// Current measured throughput (requests/s), 0 before first request.
+    /// Current measured throughput (requests/s over the rate window),
+    /// 0 before the first request — and back to 0 once load stops.
     pub fn measured_throughput(&self) -> f64 {
-        self.throughput.lock().unwrap().rate()
+        self.throughput.per_second()
     }
 
     pub fn queue_depth(&self) -> u32 {
@@ -317,12 +321,13 @@ impl ServerNode {
         self.scheduler.max_width
     }
 
-    /// The v3 DHT announcement for this server: span, measured
-    /// throughput, live pool occupancy, and the fingerprints of its
-    /// hottest cached prefixes (see docs/WIRE_PROTOCOL.md) — the hint
-    /// cache-aware routing uses to keep template traffic sticky.
-    /// Re-announced periodically so the balancer and client routing see
-    /// fresh load.
+    /// The v4 DHT announcement for this server: span, windowed
+    /// throughput, live pool occupancy, the fingerprints of its hottest
+    /// cached prefixes (the hint cache-aware routing uses to keep
+    /// template traffic sticky), and the telemetry tail `petals top`
+    /// renders — p50 step latency, queue depth, live session count (see
+    /// docs/WIRE_PROTOCOL.md). Re-announced periodically so the
+    /// balancer, client routing, and the status view see fresh load.
     pub fn dht_entry(&self) -> crate::dht::ServerEntry {
         let (free_pages, total_pages) = self.pool_stats();
         crate::dht::ServerEntry {
@@ -334,6 +339,9 @@ impl ServerNode {
             total_pages: total_pages as u32,
             batch_width: self.batch_width() as u32,
             prefix_fps: self.prefix_fingerprints(4),
+            p50_step_us: self.metrics.step_latency.quantile_us(0.5) as u32,
+            queue_depth: self.queue_depth(),
+            sessions_active: self.live_sessions().len() as u32,
         }
     }
 
@@ -954,7 +962,31 @@ impl ServerNode {
             session,
             row_lens: row_lens.to_vec(),
             hidden: h.clone(),
+            timing: None,
         })
+    }
+
+    /// A traced decode step (wire v7): identical scheduling and fusion
+    /// to [`Self::step_ragged`] — the timing cell changes what gets
+    /// *measured*, never which batch the request fuses into — returning
+    /// the output plus a [`StepBreakdown`] of where this server spent
+    /// the step (queue wait, fuse linger, KV gather, executor, commit).
+    pub fn step_traced(
+        &self,
+        session: u64,
+        row_lens: &[usize],
+        h: &Tensor,
+    ) -> Result<(Tensor, StepBreakdown)> {
+        let timing = Arc::new(StepTiming::new());
+        let t0 = std::time::Instant::now();
+        let out = self.submit_step(StepRequest {
+            session,
+            row_lens: row_lens.to_vec(),
+            hidden: h.clone(),
+            timing: Some(timing.clone()),
+        })?;
+        let total_us = t0.elapsed().as_micros() as u64;
+        Ok((out, timing.snapshot(crate::trace::fresh_span_id(), total_us)))
     }
 
     fn submit_step(&self, req: StepRequest) -> Result<Tensor> {
@@ -1161,6 +1193,11 @@ impl ServerNode {
         let ex = self.runtime.entry(&self.entry_name(kind, total_b, 0))?;
         let single = group.len() == 1;
         let sess0 = group[0].session;
+        // stage clocks, sampled only when a traced request rides in the
+        // group — untraced steps touch no extra clocks here
+        let traced = group.iter().any(|r| r.timing.is_some());
+        let clock = |on: bool| on.then(std::time::Instant::now);
+        let t_gather = clock(traced);
         // try the warm literals (single-session fast path)
         let mut warm: Option<StepLitCache> = None;
         if single && self.step_lit_cap > 0 {
@@ -1218,6 +1255,8 @@ impl ServerNode {
             }
             (ks, vs)
         };
+        let gather_us = t_gather.map_or(0, |t| t.elapsed().as_micros() as u64);
+        let t_exec = clock(traced);
         // one fused forward per block; new KV columns are staged and only
         // committed once the whole span succeeded
         let hs: Vec<&Tensor> = group.iter().map(|r| &r.hidden).collect();
@@ -1256,6 +1295,8 @@ impl ServerNode {
             h_lit = out.pop().unwrap();
         }
         let h_out = ex.output_tensor(&h_lit, 0)?;
+        let exec_us = t_exec.map_or(0, |t| t.elapsed().as_micros() as u64);
+        let t_commit = clock(traced);
         // commit: scatter the staged columns into each session's pages,
         // row by row at each row's own position
         let mut pool = self.pool.lock().unwrap();
@@ -1293,6 +1334,16 @@ impl ServerNode {
             row0 += b;
         }
         self.refresh_pool_gauges(&pool);
+        if traced {
+            let commit_us = t_commit.map_or(0, |t| t.elapsed().as_micros() as u64);
+            for r in group {
+                if let Some(tm) = &r.timing {
+                    tm.gather_us.store(gather_us, Ordering::Relaxed);
+                    tm.exec_us.store(exec_us, Ordering::Relaxed);
+                    tm.commit_us.store(commit_us, Ordering::Relaxed);
+                }
+            }
+        }
         // park the new literals for the next single-session step; the
         // epoch is read under the pool lock so a concurrent fork/defrag
         // cannot race the capture
@@ -1393,7 +1444,7 @@ impl ServerNode {
         let dt = t0.elapsed();
         self.metrics.requests.inc();
         self.metrics.step_latency.record(dt);
-        self.throughput.lock().unwrap().observe(dt.as_secs_f64());
+        self.throughput.record(1);
     }
 
     /// Protocol-level dispatch (shared by the TCP service and tests).
@@ -1484,6 +1535,70 @@ impl ServerNode {
                 };
                 let lens: Vec<usize> = cache_lens.iter().map(|&l| l as usize).collect();
                 reply(self.step_ragged(*session, &lens, &t), self.compress)
+            }
+            Message::InferStepTraced { session, cache_lens, trace: _, hidden } => {
+                // the trace identity is the client's to correlate; the
+                // server answers with where the step's time went
+                if let Some(r) = self.moved_reply(*session) {
+                    return r;
+                }
+                let Some(t) = hidden.to_tensor() else {
+                    return Message::Error { message: "bad tensor".into() };
+                };
+                let lens: Vec<usize> = cache_lens.iter().map(|&l| l as usize).collect();
+                match self.step_traced(*session, &lens, &t) {
+                    Ok((out, breakdown)) => Message::StepOutputTraced {
+                        breakdown,
+                        hidden: TensorPayload::encode_policy(&out, self.compress),
+                    },
+                    Err(e) => Message::Error { message: e.to_string() },
+                }
+            }
+            Message::OpenSessionTraced {
+                session,
+                batch,
+                prefix_len,
+                max_new,
+                prefill_width,
+                prefix_tokens,
+                trace: _,
+            } => {
+                // same semantics as OpenSessionV3; the trace id rides
+                // along purely for log correlation
+                if self.is_draining() {
+                    return Message::Error {
+                        message: Error::Busy("server draining".into()).to_string(),
+                    };
+                }
+                let max_tokens = prefix_len.saturating_add(*max_new) as usize;
+                match self.open_session_with_prefix(
+                    *session,
+                    *batch as usize,
+                    max_tokens,
+                    prefix_tokens,
+                    *prefill_width as usize,
+                ) {
+                    Ok(shared) => Message::SessionOpenedV3 {
+                        session: *session,
+                        shared_tokens: shared as u32,
+                    },
+                    Err(e) => Message::Error { message: e.to_string() },
+                }
+            }
+            Message::PingV2 => {
+                let (free_pages, total_pages) = self.pool_stats();
+                Message::PongV2 {
+                    start: self.start as u32,
+                    end: self.end as u32,
+                    throughput: self.measured_throughput() as f32,
+                    queue_depth: self.queue_depth(),
+                    free_pages: free_pages as u32,
+                    total_pages: total_pages as u32,
+                    batch_width: self.batch_width() as u32,
+                    p50_step_us: self.metrics.step_latency.quantile_us(0.5) as u32,
+                    sessions_active: self.live_sessions().len() as u32,
+                    prefix_fps: self.prefix_fingerprints(4),
+                }
             }
             Message::Forward { hidden } => {
                 let Some(t) = hidden.to_tensor() else {
@@ -1823,6 +1938,38 @@ mod tests {
             panic!("expected Pong");
         };
         assert!(after < free_pages, "open session must consume pool budget");
+    }
+
+    /// Wire v7: a traced step is bitwise identical to its untraced
+    /// twin, its stage sums stay within the client-observed step, and
+    /// `PingV2` answers with the telemetry tail.
+    #[test]
+    fn traced_step_breakdown_and_pong_v2() {
+        let home = test_home();
+        let g = home.geometry().clone();
+        let rt = rt_for(&home, 1);
+        let s = ServerNode::start("tr", &home, rt.clone(), 0..g.n_layers, Precision::F16, false)
+            .unwrap();
+        let c = ServerNode::start("un", &home, rt, 0..g.n_layers, Precision::F16, false).unwrap();
+        let (h0, h_step) = random_hidden(&g, 128, 77);
+        for node in [&s, &c] {
+            node.open_session(1, 1, 0).unwrap();
+            node.prefill(1, &h0).unwrap();
+        }
+        let t0 = std::time::Instant::now();
+        let (out, bd) = s.step_traced(1, &[128], &h_step).unwrap();
+        let client_us = t0.elapsed().as_micros() as u64;
+        let want = c.step(1, 128, &h_step).unwrap();
+        assert_eq!(out.max_abs_diff(&want), 0.0, "tracing changed the arithmetic");
+        assert!(bd.exec_us > 0, "executor stage unattributed");
+        assert!(bd.stage_sum_us() <= bd.total_us as u64 + 1000, "stages exceed the step");
+        assert!((bd.total_us as u64) <= client_us, "server step exceeds client wall time");
+        let Message::PongV2 { p50_step_us, sessions_active, .. } = s.handle(&Message::PingV2)
+        else {
+            panic!("expected PongV2");
+        };
+        assert!(p50_step_us > 0, "p50 must reflect the recorded steps");
+        assert_eq!(sessions_active, 1);
     }
 
     /// Satellite: abandoned sessions (client crashed mid-stream, never

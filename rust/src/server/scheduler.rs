@@ -42,8 +42,10 @@
 
 use crate::error::Result;
 use crate::model::tensor::Tensor;
+use crate::trace::StepTiming;
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// One session's decode step, as queued for fusion.
@@ -57,6 +59,12 @@ pub struct StepRequest {
     pub row_lens: Vec<usize>,
     /// Hidden states `[B, 1, H]` for this session's rows.
     pub hidden: Tensor,
+    /// Stage-timing cell for a TRACED step (wire v7): the scheduler
+    /// records queue/fuse waits into it, the executor the
+    /// gather/exec/commit stages. `None` (the untraced default) records
+    /// nothing — tracing never changes which batch a request fuses
+    /// into, only what gets measured.
+    pub timing: Option<Arc<StepTiming>>,
 }
 
 impl StepRequest {
@@ -64,7 +72,7 @@ impl StepRequest {
     /// `cache_len`.
     pub fn uniform(session: u64, cache_len: usize, hidden: Tensor) -> Self {
         let rows = hidden.shape.first().copied().unwrap_or(1);
-        StepRequest { session, row_lens: vec![cache_len; rows], hidden }
+        StepRequest { session, row_lens: vec![cache_len; rows], hidden, timing: None }
     }
 
     /// Whether every row sits at the same depth.
@@ -75,7 +83,7 @@ impl StepRequest {
 
 struct SchedState {
     next_ticket: u64,
-    queue: VecDeque<(u64, StepRequest)>,
+    queue: VecDeque<(u64, Instant, StepRequest)>,
     results: HashMap<u64, Result<Tensor>>,
     leader_active: bool,
 }
@@ -125,7 +133,7 @@ impl StepScheduler {
         let mut st = self.state.lock().unwrap();
         let ticket = st.next_ticket;
         st.next_ticket += 1;
-        st.queue.push_back((ticket, req));
+        st.queue.push_back((ticket, Instant::now(), req));
         self.arrived.notify_one();
         loop {
             if let Some(r) = st.results.remove(&ticket) {
@@ -133,9 +141,10 @@ impl StepScheduler {
             }
             if !st.leader_active {
                 st.leader_active = true;
+                let lead_start = Instant::now();
                 // linger for co-batchable arrivals
                 if !self.window.is_zero() {
-                    let deadline = Instant::now() + self.window;
+                    let deadline = lead_start + self.window;
                     loop {
                         let now = Instant::now();
                         if now >= deadline || st.queue.len() >= self.max_width {
@@ -150,7 +159,21 @@ impl StepScheduler {
                 }
                 let batch = Self::take_compatible(&mut st.queue, self.max_width);
                 drop(st);
-                let reqs: Vec<StepRequest> = batch.iter().map(|(_, r)| r.clone()).collect();
+                // traced members learn where their pre-exec wait went:
+                // queue = submitted → a leader picked the work up, fuse =
+                // linger spent collecting co-batchable peers. The two
+                // partition [submit, drain] exactly, so stage sums stay
+                // ≤ the whole step.
+                let drained = Instant::now();
+                for (_, submitted, r) in &batch {
+                    if let Some(tm) = &r.timing {
+                        let queue = lead_start.saturating_duration_since(*submitted);
+                        let fuse = drained.saturating_duration_since((*submitted).max(lead_start));
+                        tm.queue_us.store(queue.as_micros() as u64, atomic::Ordering::Relaxed);
+                        tm.fuse_us.store(fuse.as_micros() as u64, atomic::Ordering::Relaxed);
+                    }
+                }
+                let reqs: Vec<StepRequest> = batch.iter().map(|(_, _, r)| r.clone()).collect();
                 let mut outs = exec(&reqs);
                 debug_assert_eq!(outs.len(), reqs.len(), "exec must return one result per request");
                 // defensive: never strand a follower waiting on a ticket
@@ -162,7 +185,7 @@ impl StepScheduler {
                 }
                 outs.truncate(batch.len());
                 let mut st2 = self.state.lock().unwrap();
-                for ((t, _), out) in batch.into_iter().zip(outs) {
+                for ((t, _, _), out) in batch.into_iter().zip(outs) {
                     st2.results.insert(t, out);
                 }
                 st2.leader_active = false;
@@ -183,25 +206,25 @@ impl StepScheduler {
     /// back to uniform sub-groups where no ragged entry is compiled).
     /// Returned sorted by session id for order-independent arithmetic.
     fn take_compatible(
-        queue: &mut VecDeque<(u64, StepRequest)>,
+        queue: &mut VecDeque<(u64, Instant, StepRequest)>,
         max_width: usize,
-    ) -> Vec<(u64, StepRequest)> {
+    ) -> Vec<(u64, Instant, StepRequest)> {
         if queue.is_empty() {
             return Vec::new();
         }
-        let mut batch: Vec<(u64, StepRequest)> = Vec::new();
-        let mut rest: VecDeque<(u64, StepRequest)> = VecDeque::new();
-        while let Some((t, r)) = queue.pop_front() {
+        let mut batch: Vec<(u64, Instant, StepRequest)> = Vec::new();
+        let mut rest: VecDeque<(u64, Instant, StepRequest)> = VecDeque::new();
+        while let Some((t, at, r)) = queue.pop_front() {
             let compatible = batch.len() < max_width
-                && batch.iter().all(|(_, b)| b.session != r.session);
+                && batch.iter().all(|(_, _, b)| b.session != r.session);
             if compatible {
-                batch.push((t, r));
+                batch.push((t, at, r));
             } else {
-                rest.push_back((t, r));
+                rest.push_back((t, at, r));
             }
         }
         *queue = rest;
-        batch.sort_by_key(|(_, r)| r.session);
+        batch.sort_by_key(|(_, _, r)| r.session);
         batch
     }
 }
@@ -300,14 +323,15 @@ mod tests {
 
     #[test]
     fn mixed_lens_take_compatible_fuses() {
-        let mut q: VecDeque<(u64, StepRequest)> = VecDeque::new();
-        q.push_back((0, req(3, 10, 0.0)));
-        q.push_back((1, req(1, 25, 0.0)));
-        q.push_back((2, req(2, 7, 0.0)));
+        let now = Instant::now();
+        let mut q: VecDeque<(u64, Instant, StepRequest)> = VecDeque::new();
+        q.push_back((0, now, req(3, 10, 0.0)));
+        q.push_back((1, now, req(1, 25, 0.0)));
+        q.push_back((2, now, req(2, 7, 0.0)));
         let batch = StepScheduler::take_compatible(&mut q, 8);
         assert_eq!(batch.len(), 3, "different cache lengths fuse");
         assert_eq!(
-            batch.iter().map(|(_, r)| r.session).collect::<Vec<_>>(),
+            batch.iter().map(|(_, _, r)| r.session).collect::<Vec<_>>(),
             vec![1, 2, 3],
             "sorted by session"
         );
@@ -317,26 +341,66 @@ mod tests {
     #[test]
     fn same_session_never_fused() {
         // two queued steps of one session must run in separate groups
-        let mut q: VecDeque<(u64, StepRequest)> = VecDeque::new();
-        q.push_back((0, req(9, 4, 0.0)));
-        q.push_back((1, req(9, 4, 0.0)));
-        q.push_back((2, req(5, 4, 0.0)));
+        let now = Instant::now();
+        let mut q: VecDeque<(u64, Instant, StepRequest)> = VecDeque::new();
+        q.push_back((0, now, req(9, 4, 0.0)));
+        q.push_back((1, now, req(9, 4, 0.0)));
+        q.push_back((2, now, req(5, 4, 0.0)));
         let batch = StepScheduler::take_compatible(&mut q, 8);
         assert_eq!(batch.len(), 2); // sessions 9 and 5
-        assert_eq!(batch[0].1.session, 5); // sorted by session
+        assert_eq!(batch[0].2.session, 5); // sorted by session
         assert_eq!(q.len(), 1); // duplicate left for the next group
         assert_eq!(q[0].0, 1);
     }
 
     #[test]
     fn max_width_caps_group() {
-        let mut q: VecDeque<(u64, StepRequest)> = VecDeque::new();
+        let now = Instant::now();
+        let mut q: VecDeque<(u64, Instant, StepRequest)> = VecDeque::new();
         for c in 0..5u64 {
-            q.push_back((c, req(c, 3, 0.0)));
+            q.push_back((c, now, req(c, 3, 0.0)));
         }
         let batch = StepScheduler::take_compatible(&mut q, 2);
         assert_eq!(batch.len(), 2);
         assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn traced_request_records_queue_and_fuse_waits() {
+        use crate::trace::StepTiming;
+        let s = StepScheduler::new(Duration::from_millis(20), 8);
+        let timing = Arc::new(StepTiming::new());
+        let mut r = req(1, 5, 0.0);
+        r.timing = Some(timing.clone());
+        let t0 = Instant::now();
+        let out = s.submit(r, echo).unwrap();
+        let wall_us = t0.elapsed().as_micros() as u64;
+        assert_eq!(out.as_f32(), &[1.0, 1.0]);
+        let b = timing.snapshot(0, wall_us);
+        // a lone request rides out the full linger window as fuse wait
+        assert!(b.fuse_us >= 10_000, "fuse_us={} should cover the linger", b.fuse_us);
+        // queue + fuse partition [submit, drain]: never more than wall
+        assert!(
+            b.queue_us as u64 + b.fuse_us as u64 <= wall_us,
+            "queue={} fuse={} wall={wall_us}",
+            b.queue_us,
+            b.fuse_us
+        );
+    }
+
+    #[test]
+    fn untraced_and_traced_fuse_identically() {
+        // tracing must not change grouping: a traced and an untraced
+        // request for distinct sessions still fuse into one batch
+        let now = Instant::now();
+        let mut q: VecDeque<(u64, Instant, StepRequest)> = VecDeque::new();
+        let mut traced = req(2, 4, 0.0);
+        traced.timing = Some(Arc::new(crate::trace::StepTiming::new()));
+        q.push_back((0, now, req(1, 4, 0.0)));
+        q.push_back((1, now, traced));
+        let batch = StepScheduler::take_compatible(&mut q, 8);
+        assert_eq!(batch.len(), 2);
+        assert!(q.is_empty());
     }
 
     #[test]

@@ -13,6 +13,7 @@ use crate::error::{Error, Result};
 use crate::model::tensor::Tensor;
 use crate::net::{FramedConn, Message, TensorPayload, MAX_MIGRATE_CHUNK};
 use crate::server::ServerNode;
+use crate::trace::{StepBreakdown, TraceContext};
 use std::collections::HashMap;
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -204,6 +205,92 @@ pub fn serve(node: Arc<ServerNode>, addr: &str) -> Result<ServerHandle> {
     Ok(ServerHandle { addr: local, node, stop })
 }
 
+/// Serve a node's metrics as Prometheus text exposition
+/// (`GET /metrics`) on its own listener, separate from the framed-TCP
+/// inference port so scrapers never share a socket with tensor traffic.
+pub fn serve_metrics(node: Arc<ServerNode>, addr: &str) -> Result<MetricsHandle> {
+    let name = format!("petals-metrics-{}", node.id.short());
+    serve_metrics_with(move || node.metrics.prometheus(), &name, addr)
+}
+
+/// [`serve_metrics`] over any exposition renderer — the seam benches
+/// and tests use to export a bare [`crate::metrics::NodeMetrics`]
+/// without standing up a full [`ServerNode`].
+pub fn serve_metrics_with(
+    render: impl Fn() -> String + Send + Sync + 'static,
+    thread_name: &str,
+    addr: &str,
+) -> Result<MetricsHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?.to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let render = Arc::new(render);
+    std::thread::Builder::new()
+        .name(thread_name.to_string())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(mut stream) = conn else { continue };
+                let render = render.clone();
+                std::thread::spawn(move || {
+                    let _ = answer_scrape(&mut stream, &*render);
+                });
+            }
+        })
+        .map_err(|e| Error::Other(format!("spawn metrics: {e}")))?;
+    Ok(MetricsHandle { addr: local, stop })
+}
+
+/// One scrape: read the request line (+ drain headers), answer
+/// `/metrics` with the exposition, anything else with 404. HTTP/1.1,
+/// `Connection: close` — scrapes are rare and tiny, so a connection per
+/// scrape keeps the exporter stateless.
+fn answer_scrape(
+    stream: &mut std::net::TcpStream,
+    render: &(impl Fn() -> String + ?Sized),
+) -> std::io::Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 || h == "\r\n" || h == "\n" {
+            break;
+        }
+    }
+    let path = line.split_whitespace().nth(1).unwrap_or("");
+    let (status, ctype, body) = if line.starts_with("GET ") && path == "/metrics" {
+        ("200 OK", crate::metrics::PROMETHEUS_CONTENT_TYPE, render())
+    } else {
+        ("404 Not Found", "text/plain", "not found\n".to_string())
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()
+}
+
+/// Handle to a running metrics exporter; call
+/// [`MetricsHandle::shutdown`] to stop it.
+pub struct MetricsHandle {
+    pub addr: String,
+    stop: Arc<AtomicBool>,
+}
+
+impl MetricsHandle {
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = std::net::TcpStream::connect(&self.addr);
+    }
+}
+
 /// Client-side record of one remote server.
 struct Remote {
     addr: String,
@@ -211,9 +298,14 @@ struct Remote {
     /// Last Pong info + measured RTT.
     view: Mutex<Option<ServerView>>,
     /// Prefix fingerprints learned at discovery time (v3 announcement
-    /// records); folded into every refreshed view so cache-aware sticky
-    /// routing works on discovered swarms even though `Pong` stays v2.
+    /// records); the fallback hint when the peer predates the gossiping
+    /// `PongV2` — so cache-aware sticky routing works on discovered
+    /// swarms whatever the peer's wire version.
     hint_fps: Vec<u64>,
+    /// Set once this peer rejected a wire-v7 tag (dropped connection):
+    /// later pings and traced steps downgrade immediately instead of
+    /// paying a broken connection per call.
+    pre_v7: AtomicBool,
 }
 
 /// [`ChainClient`] over TCP: discovers by pinging a static peer list
@@ -295,6 +387,7 @@ impl TcpSwarm {
                         conn: Mutex::new(None),
                         view: Mutex::new(None),
                         hint_fps,
+                        pre_v7: AtomicBool::new(false),
                     },
                 )
             })
@@ -347,11 +440,83 @@ impl TcpSwarm {
         }
     }
 
-    /// Ping every peer, measuring RTT and span info (client routing, §3.2).
+    /// Ping every peer, measuring RTT and span info (client routing,
+    /// §3.2). Peers are probed with `PingV2` first: its `PongV2` answer
+    /// gossips the server's hot-prefix fingerprints (so static-peer-list
+    /// swarms get cache-aware sticky routing with no DHT records at
+    /// all) plus live telemetry. A pre-v7 peer rejects the unknown tag
+    /// by dropping the connection; the downgrade to the classic `Ping`
+    /// is remembered per peer.
     pub fn refresh(&self) {
         for (id, remote) in &self.peers {
-            let t0 = std::time::Instant::now();
-            match self.call(*id, &Message::Ping) {
+            let timed = |msg: &Message| {
+                let t0 = std::time::Instant::now();
+                let r = self.call(*id, msg);
+                (r, t0.elapsed().as_secs_f64())
+            };
+            let (reply, rtt) = if remote.pre_v7.load(Ordering::Relaxed) {
+                timed(&Message::Ping)
+            } else {
+                match timed(&Message::PingV2) {
+                    (Err(Error::ChainBroken(_)), _) | (Err(Error::Io(_)), _) => {
+                        remote.pre_v7.store(true, Ordering::Relaxed);
+                        timed(&Message::Ping)
+                    }
+                    r => r,
+                }
+            };
+            let make_view = |start: u32,
+                             end: u32,
+                             throughput: f32,
+                             queue_depth: u32,
+                             free_pages: u32,
+                             total_pages: u32,
+                             prefix_fps: Vec<u64>| {
+                let span = (end - start) as usize;
+                let span_compute_s = if throughput > 0.0 {
+                    1.0 / throughput as f64
+                } else {
+                    0.01 * span as f64
+                };
+                let free_ratio = if total_pages > 0 {
+                    free_pages as f64 / total_pages as f64
+                } else {
+                    1.0
+                };
+                ServerView {
+                    id: *id,
+                    start: start as usize,
+                    end: end as usize,
+                    latency_s: rtt / 2.0,
+                    bandwidth_bps: self.assumed_bandwidth_bps,
+                    span_compute_s,
+                    queue_depth,
+                    free_ratio,
+                    prefix_fps,
+                }
+            };
+            *remote.view.lock().unwrap() = match reply {
+                Ok(Message::PongV2 {
+                    start,
+                    end,
+                    throughput,
+                    queue_depth,
+                    free_pages,
+                    total_pages,
+                    prefix_fps,
+                    ..
+                }) => {
+                    // gossiped fingerprints are live truth; discovery
+                    // hints only fill in when the server gossips none
+                    let fps = if prefix_fps.is_empty() {
+                        remote.hint_fps.clone()
+                    } else {
+                        prefix_fps
+                    };
+                    Some(make_view(
+                        start, end, throughput, queue_depth, free_pages, total_pages, fps,
+                    ))
+                }
                 Ok(Message::Pong {
                     start,
                     end,
@@ -360,40 +525,19 @@ impl TcpSwarm {
                     free_pages,
                     total_pages,
                     batch_width: _,
-                }) => {
-                    let rtt = t0.elapsed().as_secs_f64();
-                    let span = (end - start) as usize;
-                    let span_compute_s = if throughput > 0.0 {
-                        1.0 / throughput as f64
-                    } else {
-                        0.01 * span as f64
-                    };
-                    let free_ratio = if total_pages > 0 {
-                        free_pages as f64 / total_pages as f64
-                    } else {
-                        1.0
-                    };
-                    *remote.view.lock().unwrap() = Some(ServerView {
-                        id: *id,
-                        start: start as usize,
-                        end: end as usize,
-                        latency_s: rtt / 2.0,
-                        bandwidth_bps: self.assumed_bandwidth_bps,
-                        span_compute_s,
-                        queue_depth,
-                        free_ratio,
-                        // Pong stays a v2 message (widening it would
-                        // break mixed swarms); prefix hints come from the
-                        // v3 announcement records captured at discovery.
-                        // Static peer lists have none: no stickiness,
-                        // never a mis-ranking.
-                        prefix_fps: remote.hint_fps.clone(),
-                    });
-                }
-                _ => {
-                    *remote.view.lock().unwrap() = None;
-                }
-            }
+                }) => Some(make_view(
+                    start,
+                    end,
+                    throughput,
+                    queue_depth,
+                    free_pages,
+                    total_pages,
+                    // a v2 pong gossips nothing: prefix hints come from
+                    // the announcement records captured at discovery
+                    remote.hint_fps.clone(),
+                )),
+                _ => None,
+            };
         }
     }
 }
@@ -508,6 +652,49 @@ impl ChainClient for TcpSwarm {
         Self::expect_hidden(self.call(server, &msg)?)
     }
 
+    fn step_traced(
+        &self,
+        server: NodeId,
+        session: u64,
+        row_lens: &[usize],
+        hidden: &Tensor,
+        ctx: &TraceContext,
+    ) -> Result<(Tensor, Option<StepBreakdown>)> {
+        if let Some(remote) = self.peers.get(&server) {
+            if remote.pre_v7.load(Ordering::Relaxed) {
+                // known-legacy peer: skip the doomed v7 frame entirely
+                return self
+                    .step_ragged(server, session, row_lens, hidden)
+                    .map(|t| (t, None));
+            }
+        }
+        let msg = Message::InferStepTraced {
+            session,
+            cache_lens: row_lens.iter().map(|&l| l as u32).collect(),
+            trace: *ctx,
+            hidden: TensorPayload::compressed(hidden),
+        };
+        match self.call(server, &msg) {
+            Ok(Message::StepOutputTraced { breakdown, hidden }) => match hidden.to_tensor() {
+                Some(t) => Ok((t, Some(breakdown))),
+                None => Err(Error::Protocol("bad tensor".into())),
+            },
+            Ok(Message::Error { message }) => Err(Error::from_wire(message)),
+            Ok(other) => Err(Error::Protocol(format!("unexpected {}", other.kind()))),
+            // a pre-v7 server drops the connection on the unknown tag:
+            // remember the downgrade so later traced steps don't pay a
+            // broken connection each, and retry untraced
+            Err(Error::ChainBroken(_)) | Err(Error::Io(_)) => {
+                if let Some(remote) = self.peers.get(&server) {
+                    remote.pre_v7.store(true, Ordering::Relaxed);
+                }
+                self.step_ragged(server, session, row_lens, hidden)
+                    .map(|t| (t, None))
+            }
+            Err(e) => Err(e),
+        }
+    }
+
     fn close_session(&self, server: NodeId, session: u64) {
         let _ = self.call(server, &Message::CloseSession { session });
     }
@@ -544,5 +731,44 @@ impl ChainClient for TcpSwarm {
             grad: TensorPayload::compressed(grad),
         };
         Self::expect_hidden(self.call(server, &msg)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{NodeMetrics, PROMETHEUS_CONTENT_TYPE};
+    use std::io::{Read as _, Write as _};
+
+    fn http_get(addr: &str, path: &str) -> String {
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn metrics_exporter_serves_prometheus_over_tcp() {
+        let metrics = Arc::new(NodeMetrics::new());
+        metrics.requests.inc();
+        metrics.step_latency.record_us(1500);
+        let m = metrics.clone();
+        let handle =
+            serve_metrics_with(move || m.prometheus(), "petals-metrics-test", "127.0.0.1:0")
+                .unwrap();
+
+        let resp = http_get(&handle.addr, "/metrics");
+        assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "got: {resp}");
+        assert!(resp.contains(&format!("Content-Type: {PROMETHEUS_CONTENT_TYPE}")));
+        let body = resp.split("\r\n\r\n").nth(1).unwrap();
+        assert!(body.contains("# TYPE petals_requests_total counter"));
+        assert!(body.contains("petals_requests_total 1"));
+        assert!(body.contains("petals_step_latency_seconds_count 1"));
+
+        let missing = http_get(&handle.addr, "/nope");
+        assert!(missing.starts_with("HTTP/1.1 404"), "got: {missing}");
+
+        handle.shutdown();
     }
 }

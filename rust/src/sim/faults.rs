@@ -18,8 +18,10 @@ use crate::coordinator::session::ChainClient;
 use crate::dht::NodeId;
 use crate::error::{Error, Result};
 use crate::model::tensor::Tensor;
+use crate::trace::{fresh_span_id, StepBreakdown, TraceContext};
 use std::collections::HashMap;
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 /// The "dial address" a mock server advertises in `moved:` redirects.
 fn mock_addr(id: NodeId) -> String {
@@ -68,6 +70,9 @@ struct MockServer {
 /// A deterministic in-memory swarm with stateful per-session compute.
 pub struct MockChain {
     state: Mutex<Vec<MockServer>>,
+    /// Artificial per-step compute time, so trace-coverage assertions
+    /// measure something larger than clock noise. Zero by default.
+    step_work: Mutex<Duration>,
 }
 
 impl MockChain {
@@ -88,7 +93,15 @@ impl MockChain {
                     })
                     .collect(),
             ),
+            step_work: Mutex::new(Duration::ZERO),
         }
+    }
+
+    /// Make every step (traced or not) burn `d` of wall clock inside the
+    /// "executor" stage. Applied identically on both paths so traced and
+    /// untraced runs stay bitwise-comparable.
+    pub fn set_step_work(&self, d: Duration) {
+        *self.step_work.lock().unwrap() = d;
     }
 
     pub fn kill(&self, id: NodeId) {
@@ -159,7 +172,27 @@ impl MockChain {
         h: &Tensor,
         is_prefill: bool,
     ) -> Result<Tensor> {
+        self.run_timed(server, session, lens, h, is_prefill).map(|(t, _)| t)
+    }
+
+    /// The compute path, instrumented with the same stage clocks the real
+    /// server uses: queue (lock wait), gather (session-state fetch + fold),
+    /// exec (apply + artificial work), commit (counter updates). `fuse` is
+    /// always zero — the mock has no fusion window.
+    fn run_timed(
+        &self,
+        server: NodeId,
+        session: u64,
+        lens: &[usize],
+        h: &Tensor,
+        is_prefill: bool,
+    ) -> Result<(Tensor, StepBreakdown)> {
+        let us = |d: Duration| d.as_micros().min(u32::MAX as u128) as u32;
+        let t0 = Instant::now();
+        let work = *self.step_work.lock().unwrap();
         let mut st = self.state.lock().unwrap();
+        let queue_us = us(t0.elapsed());
+        let t_gather = Instant::now();
         let srv = st
             .iter_mut()
             .find(|s| s.id == server)
@@ -176,13 +209,31 @@ impl MockChain {
             .get_mut(&session)
             .ok_or_else(|| Error::NotFound(format!("session {session}")))?;
         kv.fold(h, lens);
+        let gather_us = us(t_gather.elapsed());
+        let t_exec = Instant::now();
+        if !work.is_zero() {
+            std::thread::sleep(work);
+        }
+        let acc = kv.acc;
+        let out = Self::apply(h, span, acc);
+        let exec_us = us(t_exec.elapsed());
+        let t_commit = Instant::now();
         if is_prefill {
             kv.prefills += 1;
         } else {
             kv.steps += 1;
         }
-        let acc = kv.acc;
-        Ok(Self::apply(h, span, acc))
+        let commit_us = us(t_commit.elapsed());
+        let bd = StepBreakdown {
+            span_id: fresh_span_id(),
+            queue_us,
+            fuse_us: 0,
+            gather_us,
+            exec_us,
+            commit_us,
+            total_us: us(t0.elapsed()),
+        };
+        Ok((out, bd))
     }
 }
 
@@ -248,6 +299,17 @@ impl ChainClient for MockChain {
         hidden: &Tensor,
     ) -> Result<Tensor> {
         self.run(server, session, row_lens, hidden, false)
+    }
+
+    fn step_traced(
+        &self,
+        server: NodeId,
+        session: u64,
+        row_lens: &[usize],
+        hidden: &Tensor,
+        _ctx: &TraceContext,
+    ) -> Result<(Tensor, Option<StepBreakdown>)> {
+        self.run_timed(server, session, row_lens, hidden, false).map(|(t, bd)| (t, Some(bd)))
     }
 
     fn close_session(&self, server: NodeId, session: u64) {
@@ -454,6 +516,19 @@ impl<C: FaultInjectable> ChainClient for FaultyClient<C> {
         self.before_step();
         self.inner.step_ragged(server, session, row_lens, hidden)
     }
+    fn step_traced(
+        &self,
+        server: NodeId,
+        session: u64,
+        row_lens: &[usize],
+        hidden: &Tensor,
+        ctx: &TraceContext,
+    ) -> Result<(Tensor, Option<StepBreakdown>)> {
+        // a traced step consumes the same fault ordinal an untraced one
+        // would — scripted kills fire identically with tracing on
+        self.before_step();
+        self.inner.step_traced(server, session, row_lens, hidden, ctx)
+    }
     fn close_session(&self, server: NodeId, session: u64) {
         self.inner.close_session(server, session)
     }
@@ -581,6 +656,32 @@ mod tests {
         let inner = faulty.inner();
         assert_eq!(inner.session_count(hop1), 0, "donor dropped its replica");
         assert_eq!(inner.session_count(target), 1, "target holds the session");
+        s.close();
+    }
+
+    /// Tracing must be a pure observer: a traced run produces the exact
+    /// same token outputs as an untraced one, and every hop reports a
+    /// populated breakdown.
+    #[test]
+    fn traced_run_is_bitwise_identical_to_untraced() {
+        use crate::trace::{fresh_span_id, fresh_trace_id, TraceContext};
+        let baseline = run_tokens(&MockChain::new(&[("a", 0, 4), ("b", 4, 8)]), 7, 4);
+        let chain = MockChain::new(&[("a", 0, 4), ("b", 4, 8)]);
+        let ctx = TraceContext { trace_id: fresh_trace_id(), parent_span: fresh_span_id() };
+        let mut s = InferenceSession::open(&chain, cfg(8), shape(), 7).unwrap();
+        s.prefill(Tensor::from_f32(&[1, 4, 4], &[0.5; 16])).unwrap();
+        let mut outs = Vec::new();
+        for i in 0..4 {
+            let h = Tensor::from_f32(&[1, 1, 4], &[i as f32 * 0.25; 4]);
+            let (out, hops) = s.step_traced(h, &ctx).unwrap();
+            assert_eq!(hops.len(), 2, "one HopTrace per chain hop");
+            for hop in &hops {
+                let bd = hop.breakdown.expect("MockChain returns a native breakdown");
+                assert!(bd.stage_sum_us() <= bd.total_us as u64);
+            }
+            outs.push(out.as_f32().to_vec());
+        }
+        assert_eq!(outs, baseline, "tracing perturbed the computed outputs");
         s.close();
     }
 }

@@ -1,0 +1,345 @@
+//! Per-hop distributed tracing for chain inference (wire v7).
+//!
+//! A traced decode step carries a 16-byte trace id + parent span id to
+//! every server in the chain; each hop answers with a
+//! [`StepBreakdown`] — where that hop's milliseconds went (queue wait,
+//! fuse wait, KV gather, executor, commit) — so the client can render a
+//! per-token hop-by-hop waterfall.
+//!
+//! Tracing is strictly opt-in: untraced steps allocate nothing and
+//! touch no clocks beyond what the metrics substrate already records,
+//! and traced execution takes the exact same scheduling/fusion path as
+//! untraced execution (the determinism suites run with tracing enabled
+//! to pin that). Identifiers come from a timestamp + process-local
+//! counter — unique enough to correlate logs across a swarm without
+//! pulling in an RNG.
+
+use crate::config::json::Value;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Process-local uniquifier for trace/span ids.
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+fn unique_u64() -> u64 {
+    let seq = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    // golden-ratio multiply spreads the counter across the word so ids
+    // from two processes started the same nanosecond still differ
+    nanos ^ seq.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Mint a fresh 16-byte trace id.
+pub fn fresh_trace_id() -> [u8; 16] {
+    let mut id = [0u8; 16];
+    id[..8].copy_from_slice(&unique_u64().to_le_bytes());
+    id[8..].copy_from_slice(&unique_u64().to_le_bytes());
+    id
+}
+
+/// Mint a fresh span id.
+pub fn fresh_span_id() -> u64 {
+    unique_u64()
+}
+
+/// Lowercase-hex rendering of a trace id (the JSON/debug form).
+pub fn trace_id_hex(id: &[u8; 16]) -> String {
+    let mut s = String::with_capacity(32);
+    for b in id {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+/// Trace identity a client attaches to chain frames: which end-to-end
+/// request this step belongs to, and which client-side span fathered
+/// the hop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceContext {
+    pub trace_id: [u8; 16],
+    pub parent_span: u64,
+}
+
+impl TraceContext {
+    /// Fresh trace root (one per traced generation stream).
+    pub fn new() -> Self {
+        TraceContext { trace_id: fresh_trace_id(), parent_span: fresh_span_id() }
+    }
+}
+
+impl Default for TraceContext {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Where one hop's step spent its time, measured server-side.
+///
+/// Stages are disjoint sub-intervals of the server's handler: `queue`
+/// (submitted → picked up by a batch leader), `fuse` (linger spent
+/// waiting for fusable peers), `gather` (KV page gather + upload),
+/// `exec` (the executor forward), `commit` (staged KV writeback).
+/// `total_us` is the whole server-side step, so stage sums ≤ total and
+/// total ≤ the client-observed hop RTT.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StepBreakdown {
+    /// Server-minted span id for this hop's step.
+    pub span_id: u64,
+    pub queue_us: u32,
+    pub fuse_us: u32,
+    pub gather_us: u32,
+    pub exec_us: u32,
+    pub commit_us: u32,
+    /// Whole server-side step latency (submit → result published).
+    pub total_us: u32,
+}
+
+impl StepBreakdown {
+    /// Sum of the attributed stages (≤ `total_us` modulo clock grain).
+    pub fn stage_sum_us(&self) -> u64 {
+        self.queue_us as u64
+            + self.fuse_us as u64
+            + self.gather_us as u64
+            + self.exec_us as u64
+            + self.commit_us as u64
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("span_id".into(), Value::Str(format!("{:016x}", self.span_id)));
+        m.insert("queue_us".into(), Value::Num(self.queue_us as f64));
+        m.insert("fuse_us".into(), Value::Num(self.fuse_us as f64));
+        m.insert("gather_us".into(), Value::Num(self.gather_us as f64));
+        m.insert("exec_us".into(), Value::Num(self.exec_us as f64));
+        m.insert("commit_us".into(), Value::Num(self.commit_us as f64));
+        m.insert("total_us".into(), Value::Num(self.total_us as f64));
+        Value::Obj(m)
+    }
+}
+
+/// Mutable stage-timing cell a traced step threads through the
+/// scheduler and executor; atomics because the recording sites run on
+/// different threads (submitter, batch leader).
+#[derive(Debug, Default)]
+pub struct StepTiming {
+    pub queue_us: AtomicU64,
+    pub fuse_us: AtomicU64,
+    pub gather_us: AtomicU64,
+    pub exec_us: AtomicU64,
+    pub commit_us: AtomicU64,
+}
+
+fn sat32(v: u64) -> u32 {
+    v.min(u32::MAX as u64) as u32
+}
+
+impl StepTiming {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Freeze into a wire-ready breakdown.
+    pub fn snapshot(&self, span_id: u64, total_us: u64) -> StepBreakdown {
+        StepBreakdown {
+            span_id,
+            queue_us: sat32(self.queue_us.load(Ordering::Relaxed)),
+            fuse_us: sat32(self.fuse_us.load(Ordering::Relaxed)),
+            gather_us: sat32(self.gather_us.load(Ordering::Relaxed)),
+            exec_us: sat32(self.exec_us.load(Ordering::Relaxed)),
+            commit_us: sat32(self.commit_us.load(Ordering::Relaxed)),
+            total_us: sat32(total_us),
+        }
+    }
+}
+
+/// One hop of a traced step, as observed by the client.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HopTrace {
+    /// Server address (or id) the hop ran on.
+    pub server: String,
+    /// Block range `[start, end)` the hop covers.
+    pub start: usize,
+    pub end: usize,
+    /// Client-observed round-trip for this hop (send → reply).
+    pub rtt_us: u32,
+    /// Server-side breakdown; `None` when the hop spoke a pre-v7
+    /// protocol and the client downgraded to an untraced frame.
+    pub breakdown: Option<StepBreakdown>,
+}
+
+impl HopTrace {
+    pub fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("server".into(), Value::Str(self.server.clone()));
+        m.insert("start".into(), Value::Num(self.start as f64));
+        m.insert("end".into(), Value::Num(self.end as f64));
+        m.insert("rtt_us".into(), Value::Num(self.rtt_us as f64));
+        if let Some(b) = &self.breakdown {
+            m.insert("breakdown".into(), b.to_json());
+        }
+        Value::Obj(m)
+    }
+}
+
+/// A fully assembled per-token trace: every hop of one decode step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepTrace {
+    pub trace_id: [u8; 16],
+    /// Client-side step ordinal within the generation stream.
+    pub step: usize,
+    /// Client-observed wall time for the whole chain step.
+    pub client_us: u64,
+    pub hops: Vec<HopTrace>,
+}
+
+impl StepTrace {
+    /// Sum of every hop's server-side attributed stages.
+    pub fn stage_sum_us(&self) -> u64 {
+        self.hops
+            .iter()
+            .filter_map(|h| h.breakdown.as_ref())
+            .map(|b| b.stage_sum_us())
+            .sum()
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("trace_id".into(), Value::Str(trace_id_hex(&self.trace_id)));
+        m.insert("step".into(), Value::Num(self.step as f64));
+        m.insert("client_us".into(), Value::Num(self.client_us as f64));
+        m.insert(
+            "hops".into(),
+            Value::Arr(self.hops.iter().map(|h| h.to_json()).collect()),
+        );
+        Value::Obj(m)
+    }
+}
+
+/// Default capacity of a [`TraceRing`].
+pub const TRACE_RING_CAP: usize = 256;
+
+/// Bounded in-memory ring of recent step traces — what
+/// `/api/v1/debug/traces` serves. Oldest traces fall off the back.
+pub struct TraceRing {
+    inner: Mutex<VecDeque<StepTrace>>,
+    cap: usize,
+}
+
+impl Default for TraceRing {
+    fn default() -> Self {
+        Self::new(TRACE_RING_CAP)
+    }
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> Self {
+        TraceRing { inner: Mutex::new(VecDeque::new()), cap: cap.max(1) }
+    }
+
+    pub fn push(&self, t: StepTrace) {
+        let mut q = self.inner.lock().unwrap();
+        if q.len() == self.cap {
+            q.pop_front();
+        }
+        q.push_back(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All retained traces, oldest first, as a JSON array.
+    pub fn to_json(&self) -> Value {
+        let q = self.inner.lock().unwrap();
+        Value::Arr(q.iter().map(|t| t.to_json()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_unique() {
+        let a = fresh_trace_id();
+        let b = fresh_trace_id();
+        assert_ne!(a, b);
+        assert_ne!(fresh_span_id(), fresh_span_id());
+        assert_eq!(trace_id_hex(&[0xab; 16]).len(), 32);
+    }
+
+    #[test]
+    fn breakdown_stage_sum_and_json() {
+        let t = StepTiming::new();
+        t.queue_us.store(10, Ordering::Relaxed);
+        t.fuse_us.store(5, Ordering::Relaxed);
+        t.gather_us.store(20, Ordering::Relaxed);
+        t.exec_us.store(500, Ordering::Relaxed);
+        t.commit_us.store(15, Ordering::Relaxed);
+        let b = t.snapshot(7, 600);
+        assert_eq!(b.stage_sum_us(), 550);
+        assert_eq!(b.total_us, 600);
+        let j = b.to_json();
+        assert_eq!(j.get("exec_us").unwrap().u64().unwrap(), 500);
+        assert_eq!(j.get("span_id").unwrap().str().unwrap(), "0000000000000007");
+    }
+
+    #[test]
+    fn timing_saturates_to_u32() {
+        let t = StepTiming::new();
+        t.exec_us.store(u64::MAX, Ordering::Relaxed);
+        assert_eq!(t.snapshot(1, u64::MAX).exec_us, u32::MAX);
+    }
+
+    #[test]
+    fn step_trace_json_shape() {
+        let tr = StepTrace {
+            trace_id: [1; 16],
+            step: 3,
+            client_us: 1000,
+            hops: vec![
+                HopTrace {
+                    server: "a".into(),
+                    start: 0,
+                    end: 2,
+                    rtt_us: 400,
+                    breakdown: Some(StepBreakdown {
+                        span_id: 9,
+                        exec_us: 300,
+                        ..Default::default()
+                    }),
+                },
+                HopTrace { server: "b".into(), start: 2, end: 4, rtt_us: 500, breakdown: None },
+            ],
+        };
+        assert_eq!(tr.stage_sum_us(), 300);
+        let j = tr.to_json();
+        assert_eq!(j.get("hops").unwrap().arr().unwrap().len(), 2);
+        // legacy hop omits the breakdown key entirely
+        assert!(j.get("hops").unwrap().arr().unwrap()[1].opt("breakdown").is_none());
+        // renders to parseable JSON
+        let rendered = j.render();
+        assert!(Value::parse(&rendered).is_ok());
+    }
+
+    #[test]
+    fn trace_ring_bounded() {
+        let ring = TraceRing::new(3);
+        for step in 0..10 {
+            ring.push(StepTrace { trace_id: [0; 16], step, client_us: 1, hops: vec![] });
+        }
+        assert_eq!(ring.len(), 3);
+        let arr = ring.to_json();
+        let steps: Vec<u64> =
+            arr.arr().unwrap().iter().map(|t| t.get("step").unwrap().u64().unwrap()).collect();
+        assert_eq!(steps, vec![7, 8, 9]);
+    }
+}

@@ -123,6 +123,9 @@ fn tcp_dht_survives_node_death_ttl_expiry_and_republish() {
         total_pages: 16,
         batch_width: 4,
         prefix_fps: vec![],
+        p50_step_us: 0,
+        queue_depth: 0,
+        sessions_active: 0,
     };
     let ttl_ms = 1000u64;
     let publish = |node: &DhtNode| {

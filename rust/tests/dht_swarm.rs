@@ -89,9 +89,9 @@ fn announcements_drive_balancer_and_expire() {
 
     // three servers announce spans
     let servers = [
-        ServerEntry { server: ids[0], start: 0, end: 4, throughput: 2.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![] },
-        ServerEntry { server: ids[1], start: 2, end: 6, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![] },
-        ServerEntry { server: ids[2], start: 4, end: 8, throughput: 1.5, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![] },
+        ServerEntry { server: ids[0], start: 0, end: 4, throughput: 2.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![], p50_step_us: 0, queue_depth: 0, sessions_active: 0 },
+        ServerEntry { server: ids[1], start: 2, end: 6, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![], p50_step_us: 0, queue_depth: 0, sessions_active: 0 },
+        ServerEntry { server: ids[2], start: 4, end: 8, throughput: 1.5, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![], p50_step_us: 0, queue_depth: 0, sessions_active: 0 },
     ];
     for s in &servers {
         dir.announce(s, 0);
@@ -145,6 +145,9 @@ fn pool_occupancy_flows_through_dht_to_balancer() {
         total_pages: 64,
         batch_width: 8,
         prefix_fps: vec![],
+        p50_step_us: 0,
+        queue_depth: 0,
+        sessions_active: 0,
     };
     let full = ServerEntry { server: ids[1], free_pages: 0, ..idle.clone() };
     dir.announce(&idle, 0);
@@ -208,6 +211,9 @@ fn entry_for(node: &DhtNode, start: u32, end: u32) -> ServerEntry {
         total_pages: 64,
         batch_width: 8,
         prefix_fps: vec![0xfeed],
+        p50_step_us: 1500,
+        queue_depth: 1,
+        sessions_active: 3,
     }
 }
 
@@ -304,11 +310,11 @@ fn departed_server_invisible_after_ttl_but_others_persist() {
     let net = util::Net::new(&ids);
     let dir = BlockDirectory::new(&net, ids[..3].to_vec(), "bloom-mini");
 
-    dir.announce(&ServerEntry { server: ids[0], start: 0, end: 4, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![] }, 0);
+    dir.announce(&ServerEntry { server: ids[0], start: 0, end: 4, throughput: 1.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![], p50_step_us: 0, queue_depth: 0, sessions_active: 0 }, 0);
     // half-TTL later the second server announces
     let half = dir.announce_ttl_ms / 2;
     net.now_ms.set(half);
-    dir.announce(&ServerEntry { server: ids[1], start: 0, end: 4, throughput: 2.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![] }, half);
+    dir.announce(&ServerEntry { server: ids[1], start: 0, end: 4, throughput: 2.0, free_pages: 0, total_pages: 0, batch_width: 0, prefix_fps: vec![], p50_step_us: 0, queue_depth: 0, sessions_active: 0 }, half);
 
     // just past the first server's expiry: only the second remains
     net.now_ms.set(dir.announce_ttl_ms + 1);
