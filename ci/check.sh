@@ -51,6 +51,11 @@ if [[ "$MODE" == "test-only" ]]; then
     # named gate: Prometheus exposition validity + registry drift + the
     # 3-hop trace-coverage bar. In-process mocks and loopback sockets.
     cargo test -q --test observability
+    step "cargo test --test spec_decode (speculative-decode gate)"
+    # named gate: speculative greedy decode must stay bitwise identical
+    # to per-token decode under every acceptance pattern, and verify
+    # rounds must survive mid-round server kills. Pure in-process mocks.
+    cargo test -q --test spec_decode
     echo
     echo "test-only checks passed"
     exit 0
@@ -91,6 +96,11 @@ step "cargo test --test observability (observability gate)"
 # named gate (see test-only mode above): exposition validity, registry
 # drift, and the per-hop trace coverage bar
 cargo test -q --test observability
+
+step "cargo test --test spec_decode (speculative-decode gate)"
+# named gate (see test-only mode above): bitwise spec-vs-sequential
+# greedy identity + mid-verify fault recovery
+cargo test -q --test spec_decode
 
 echo
 echo "all checks passed"

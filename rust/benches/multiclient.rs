@@ -164,18 +164,60 @@ fn bench_metrics_scrape() -> (bool, usize) {
     }
 }
 
+/// Speculative-decoding sweep (pure sim — no artifacts): k=6 n-gram
+/// drafts shipped per `ProposeVerify` round (wire v8) at a range of
+/// per-draft hit rates on the high-latency 12-virtual swarm, against
+/// the sequential decode baseline from the same swarm. The PR's
+/// acceptance floor — ≥2× committed tokens/s at hit rate 0.6 — is
+/// asserted here, and the gate point rides into `BENCH_ragged.json`
+/// as gated trajectory metrics.
+///
+/// Returns `(tokens_per_round, accept_rate, tokens_per_s_speculative,
+/// tokens_per_s_sequential)` at the hit-0.6 gate point.
+fn bench_spec_sweep() -> (f64, f64, f64, f64) {
+    println!("speculative decoding: drafts over ProposeVerify (sim, BLOOM-176B, k=6):");
+    let base = sim_swarm(false).run_inference(128, 64, 1).unwrap().steps_per_s;
+    println!("sequential decode baseline: {base:.2} tokens/s");
+    println!("| per-draft hit rate | tokens/round | accept rate | tokens/s | vs sequential |");
+    println!("|---|---|---|---|---|");
+    let mut gate = (0.0f64, 0.0f64, 0.0f64);
+    for hit in [0.0, 0.5, 0.6, 0.7, 0.9] {
+        let mut s = sim_swarm(false);
+        let r = s.run_inference_speculative(128, 1024, 6, hit).unwrap();
+        println!(
+            "| {hit:.1} | {:.2} | {:.3} | {:.2} | {:.2}x |",
+            r.tokens_per_round,
+            r.accept_rate,
+            r.tokens_per_s,
+            r.tokens_per_s / base
+        );
+        if (hit - 0.6).abs() < 1e-9 {
+            gate = (r.tokens_per_round, r.accept_rate, r.tokens_per_s);
+        }
+    }
+    let (tpr, acc, tps) = gate;
+    assert!(
+        tps >= 2.0 * base,
+        "spec-decode floor: {tps:.2} tokens/s at hit 0.6 must be >=2x the sequential {base:.2}"
+    );
+    println!("(gate point: hit 0.6 -> {tpr:.2} tokens/round, {:.2}x sequential)\n", tps / base);
+    (tpr, acc, tps, base)
+}
+
 /// Mixed-length ragged sweep (pure sim — no artifacts, no toolchain
 /// beyond cargo): the pre-ragged same-depth join gate vs the ragged
 /// scheduler over one arrival trace of mixed prompt lengths. Emits
 /// `BENCH_ragged.json` with its gate declarations so
 /// `ci/bench_compare.sh` can enforce the trajectory on main. The two
-/// durability timings and the metrics scrape ride along as ungated,
-/// tracked fields.
+/// durability timings, the metrics scrape, and the speculative-decode
+/// gate point ride along as tracked fields (the spec tokens/s and
+/// speedup are gated).
 fn bench_ragged_mix(
     migration_ms: f64,
     resume_ttft_ms: f64,
     scrape_ok: bool,
     metrics_series: usize,
+    spec: (f64, f64, f64, f64),
 ) -> petals::Result<()> {
     println!("ragged continuous batching: mixed-length arrival mix (sim, BLOOM-176B):");
     let lens: Vec<usize> = vec![32, 48, 64, 96, 128, 160, 192, 224];
@@ -200,15 +242,22 @@ fn bench_ragged_mix(
         new.aggregate_steps_per_s > old.aggregate_steps_per_s,
         "ragged batching must lift aggregate throughput on a mixed-length mix"
     );
+    let (spec_tpr, spec_accept, spec_tps, seq_tps) = spec;
     let json = format!(
         "{{\n  \"clients\": {},\n  \"mix_lens\": [{}],\n  \"occupancy\": {:.4},\n  \
          \"aggregate_steps_per_s\": {:.3},\n  \"p50_ttft_s\": {:.3},\n  \
          \"uniform_gate_occupancy\": {:.4},\n  \"uniform_gate_aggregate_steps_per_s\": {:.3},\n  \
          \"migration_ms\": {migration_ms:.3},\n  \"resume_ttft_ms\": {resume_ttft_ms:.3},\n  \
          \"scrape_ok\": {scrape_ok},\n  \"metrics_series\": {metrics_series},\n  \
+         \"tokens_per_round\": {spec_tpr:.3},\n  \"accept_rate\": {spec_accept:.4},\n  \
+         \"tokens_per_s_speculative\": {spec_tps:.3},\n  \
+         \"tokens_per_s_sequential\": {seq_tps:.3},\n  \
+         \"spec_speedup\": {:.3},\n  \
          \"gates\": {{\n    \"occupancy\": {{\"dir\": \"higher\", \"pct\": 15}},\n    \
          \"aggregate_steps_per_s\": {{\"dir\": \"higher\", \"pct\": 10}},\n    \
-         \"p50_ttft_s\": {{\"dir\": \"lower\", \"pct\": 20}}\n  }}\n}}\n",
+         \"p50_ttft_s\": {{\"dir\": \"lower\", \"pct\": 20}},\n    \
+         \"tokens_per_s_speculative\": {{\"dir\": \"higher\", \"pct\": 10}},\n    \
+         \"spec_speedup\": {{\"dir\": \"higher\", \"pct\": 10}}\n  }}\n}}\n",
         lens.len(),
         lens.iter().map(|l| l.to_string()).collect::<Vec<_>>().join(", "),
         new.occupancy,
@@ -216,6 +265,7 @@ fn bench_ragged_mix(
         new.p50_ttft_s,
         old.occupancy,
         old.aggregate_steps_per_s,
+        spec_tps / seq_tps,
     );
     let out =
         std::env::var("BENCH_RAGGED_OUT").unwrap_or_else(|_| "BENCH_ragged.json".into());
@@ -231,7 +281,8 @@ fn main() -> petals::Result<()> {
     // artifact-less runners
     let (migration_ms, resume_ttft_ms) = bench_session_durability()?;
     let (scrape_ok, metrics_series) = bench_metrics_scrape();
-    bench_ragged_mix(migration_ms, resume_ttft_ms, scrape_ok, metrics_series)?;
+    let spec = bench_spec_sweep();
+    bench_ragged_mix(migration_ms, resume_ttft_ms, scrape_ok, metrics_series, spec)?;
     println!("simulated 12-virtual swarm @ 100 Mbit/s, 100 ms RTT (BLOOM-176B):");
     let solo = sim_swarm(false).run_inference(128, 32, 1).unwrap().steps_per_s;
     println!("sequential per-session baseline: {solo:.2} steps/s aggregate (one session at a time)\n");

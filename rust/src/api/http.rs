@@ -23,10 +23,11 @@
 //! crashed client cannot leak server-side KV-pool pages. Schema and
 //! curl examples: `docs/HTTP_API.md`.
 
-use crate::api::stream::{StreamEvent, StreamStats, TokenEvent};
+use crate::api::stream::{sse_frame, SpecSummary, StreamEvent, StreamStats, TokenEvent};
 use crate::api::types::{
-    parse_ids, parse_resume_token, tensor_from_json, tensor_to_json, ApiError,
-    GenerateRequest, SamplerSpec,
+    parse_ids, parse_resume_token, tensor_from_json, tensor_to_json, tensors_from_binary,
+    tensors_to_binary, unsupported_speculation_error, ApiError, GenerateRequest, SamplerSpec,
+    TENSOR_CONTENT_TYPE,
 };
 use crate::config::json::Value;
 use crate::coordinator::client::{
@@ -39,7 +40,7 @@ use crate::error::{Error, Result};
 use crate::metrics::{NodeMetrics, PROMETHEUS_CONTENT_TYPE};
 use crate::model::tensor::Tensor;
 use crate::trace::{fresh_span_id, fresh_trace_id, StepTrace, TraceContext, TraceRing};
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -81,6 +82,24 @@ struct ResumableGen<C: ChainClient> {
     /// Generation wall time accumulated across attachments.
     wall_s: f64,
     last_used: Instant,
+    /// Request prompt (row 0) — the draft source's history root on
+    /// speculative streams.
+    prompt: Vec<i32>,
+    /// Tokens a verify round produced but the stream has not emitted
+    /// yet. Parking/resuming preserves the buffer, so a connection drop
+    /// mid-round loses nothing.
+    spec_buf: VecDeque<PendingSpecTok>,
+    /// Speculation counters — `Some` iff this stream decodes
+    /// speculatively (traced streams fall back to per-token decoding).
+    spec: Option<SpecSummary>,
+}
+
+/// One buffered speculative emission awaiting its [`TokenEvent`].
+struct PendingSpecTok {
+    token: i32,
+    accepted: bool,
+    logits: Option<Vec<f32>>,
+    hidden: Option<Vec<f32>>,
 }
 
 /// Most disconnected streams kept resumable at once; beyond this the
@@ -160,14 +179,32 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
         }
     }
 
-    fn gen_options(&self, req: &GenerateRequest) -> GenOptions {
-        GenOptions {
+    fn gen_options(&self, req: &GenerateRequest) -> Result<GenOptions> {
+        let speculation = match &req.speculation {
+            Some(spec) => {
+                if req.inputs.len() != 1 {
+                    return Err(unsupported_speculation_error(
+                        "speculation serves single-prompt requests",
+                    ));
+                }
+                match spec.build() {
+                    Ok(Some(draft)) => {
+                        Some(crate::draft::SpecOptions { draft, max_k: spec.max_k })
+                    }
+                    Ok(None) => None, // "draft": "off"
+                    Err(m) => return Err(unsupported_speculation_error(m)),
+                }
+            }
+            None => None,
+        };
+        Ok(GenOptions {
             max_new: req.max_new_tokens.min(self.cfg.max_new),
             stop_tokens: req.stop_tokens.clone(),
             want_logits: req.return_logits,
             want_hidden: req.return_hidden,
             trace: req.trace,
-        }
+            speculation,
+        })
     }
 
     // --- /api/v1/generate ---------------------------------------------------
@@ -182,13 +219,19 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
     pub fn generate_json(&self, body: &str) -> Result<String> {
         let v = Value::parse(body)?;
         let req = GenerateRequest::from_json(&v, self.head.vocab)?;
+        let opts = self.gen_options(&req)?;
+        let spec_on = opts.speculation.is_some() && !req.trace;
         let gen = self.generator(&req.sampler);
-        let mut stream = gen.stream(&req.inputs, self.gen_options(&req), self.fresh_id())?;
+        let mut stream = gen.stream(&req.inputs, opts, self.fresh_id())?;
         let mut steps: Vec<TokenStep> = Vec::new();
         while let Some(step) = stream.next_step()? {
             steps.push(step);
         }
         let result = stream.finish()?;
+        if spec_on {
+            self.metrics.spec_proposed.add(result.spec.proposed);
+            self.metrics.spec_accepted.add(result.spec.accepted);
+        }
 
         let mut obj = BTreeMap::new();
         let outputs = if req.inputs.len() == 1 {
@@ -206,6 +249,13 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
         );
         obj.insert("recoveries".to_string(), num(result.recoveries as f64));
         obj.insert("finish".to_string(), Value::Str(result.finish.as_str().to_string()));
+        if spec_on {
+            let mut sp = BTreeMap::new();
+            sp.insert("proposed".to_string(), num(result.spec.proposed as f64));
+            sp.insert("accepted".to_string(), num(result.spec.accepted as f64));
+            sp.insert("rounds".to_string(), num(result.spec.rounds as f64));
+            obj.insert("spec_stats".to_string(), Value::Obj(sp));
+        }
         if req.trace {
             // one hop-by-hop waterfall per decode step; each also lands
             // in the debug ring for GET /api/v1/debug/traces
@@ -258,50 +308,114 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
     /// `InferenceSession::prefill` output exactly) or `embeds` (raw
     /// [B,S,H] activations, e.g. with trainable prompts spliced in).
     pub fn forward_json(&self, body: &str) -> Result<String> {
-        let v = Value::parse(body)?;
-        let mut obj = BTreeMap::new();
-        if let Some(emb) = v.opt("embeds") {
-            let h0 = tensor_from_json(emb)?;
+        let (_, bytes) = self.forward_negotiated(body.as_bytes(), false, false)?;
+        Ok(String::from_utf8_lossy(&bytes).to_string())
+    }
+
+    /// `/api/v1/forward` with per-direction transport negotiation:
+    /// `ct_bin` means the request body is the binary tensor framing
+    /// (one `[B,S,H]` embeds tensor — the ids form stays JSON-only,
+    /// ids are tiny); `accept_bin` means the caller asked for the
+    /// response activations in it. Both framings carry the same f32
+    /// bits, so a JSON request with a binary reply (or vice versa) is
+    /// bit-exact against all-JSON. Returns `(content type, body)`.
+    fn forward_negotiated(
+        &self,
+        body: &[u8],
+        ct_bin: bool,
+        accept_bin: bool,
+    ) -> Result<(String, Vec<u8>)> {
+        let out: Tensor;
+        let mut prefix_len: Option<usize> = None;
+        if ct_bin {
+            let mut t = tensors_from_binary(body)?;
+            if t.len() != 1 {
+                return Err(Error::Parse(format!(
+                    "forward expects one [B,S,H] embeds tensor, got {}",
+                    t.len()
+                )));
+            }
+            let h0 = t.pop().expect("len checked");
             if h0.shape.len() != 3 {
                 return Err(Error::Parse("embeds must be [B,S,H]".into()));
             }
-            let out = chain_forward(self.swarm.as_ref(), &self.cfg.route, h0)?;
-            obj.insert("hidden".to_string(), tensor_to_json(&out));
+            out = chain_forward(self.swarm.as_ref(), &self.cfg.route, h0)?;
         } else {
-            let inputs = parse_ids(&v, "inputs", self.head.vocab)?;
-            let prefix_len = inputs.len();
-            let w = self.head.derive_prefill_width(1, prefix_len)?;
-            let mut ids = vec![0i32; w];
-            ids[..prefix_len].copy_from_slice(&inputs);
-            let h0 = self.head.embed(&Tensor::from_i32(&[1, w], &ids))?;
-            let out = chain_forward(self.swarm.as_ref(), &self.cfg.route, h0)?;
-            // trim the padded tail: clients see hidden states for their
-            // prompt positions only, shape [prefix_len, H]
-            let hidden = self.head.hidden;
-            let valid = &out.as_f32()[..prefix_len * hidden];
-            obj.insert(
-                "hidden".to_string(),
-                tensor_to_json(&Tensor::from_f32(&[prefix_len, hidden], valid)),
-            );
-            obj.insert("prefix_len".to_string(), num(prefix_len as f64));
+            let v = Value::parse(&String::from_utf8_lossy(body))?;
+            if let Some(emb) = v.opt("embeds") {
+                let h0 = tensor_from_json(emb)?;
+                if h0.shape.len() != 3 {
+                    return Err(Error::Parse("embeds must be [B,S,H]".into()));
+                }
+                out = chain_forward(self.swarm.as_ref(), &self.cfg.route, h0)?;
+            } else {
+                let inputs = parse_ids(&v, "inputs", self.head.vocab)?;
+                let n = inputs.len();
+                let w = self.head.derive_prefill_width(1, n)?;
+                let mut ids = vec![0i32; w];
+                ids[..n].copy_from_slice(&inputs);
+                let h0 = self.head.embed(&Tensor::from_i32(&[1, w], &ids))?;
+                let full = chain_forward(self.swarm.as_ref(), &self.cfg.route, h0)?;
+                // trim the padded tail: clients see hidden states for
+                // their prompt positions only, shape [prefix_len, H]
+                let hidden = self.head.hidden;
+                out = Tensor::from_f32(&[n, hidden], &full.as_f32()[..n * hidden]);
+                prefix_len = Some(n);
+            }
         }
-        Ok(Value::Obj(obj).render())
+        if accept_bin {
+            return Ok((TENSOR_CONTENT_TYPE.to_string(), tensors_to_binary(&[&out])));
+        }
+        let mut obj = BTreeMap::new();
+        obj.insert("hidden".to_string(), tensor_to_json(&out));
+        if let Some(n) = prefix_len {
+            obj.insert("prefix_len".to_string(), num(n as f64));
+        }
+        Ok(("application/json".to_string(), Value::Obj(obj).render().into_bytes()))
     }
 
     /// Gradient of the chain wrt raw input activations: `{embeds, grad}`
     /// (both [B,S,H]) → `{grad}`. Servers recompute their span forward
     /// internally; parameters stay frozen (§2.2).
     pub fn backward_json(&self, body: &str) -> Result<String> {
-        let v = Value::parse(body)?;
-        let x0 = tensor_from_json(v.get("embeds")?)?;
-        let g_out = tensor_from_json(v.get("grad")?)?;
+        let (_, bytes) = self.backward_negotiated(body.as_bytes(), false, false)?;
+        Ok(String::from_utf8_lossy(&bytes).to_string())
+    }
+
+    /// `/api/v1/backward` with transport negotiation (see
+    /// [`Self::forward_negotiated`]). A binary request body carries
+    /// exactly two tensors, `[embeds, grad]`, in that order.
+    fn backward_negotiated(
+        &self,
+        body: &[u8],
+        ct_bin: bool,
+        accept_bin: bool,
+    ) -> Result<(String, Vec<u8>)> {
+        let (x0, g_out) = if ct_bin {
+            let mut t = tensors_from_binary(body)?;
+            if t.len() != 2 {
+                return Err(Error::Parse(format!(
+                    "backward expects [embeds, grad] (two tensors), got {}",
+                    t.len()
+                )));
+            }
+            let g = t.pop().expect("len checked");
+            let x = t.pop().expect("len checked");
+            (x, g)
+        } else {
+            let v = Value::parse(&String::from_utf8_lossy(body))?;
+            (tensor_from_json(v.get("embeds")?)?, tensor_from_json(v.get("grad")?)?)
+        };
         if x0.shape != g_out.shape || x0.shape.len() != 3 {
             return Err(Error::Parse("embeds and grad must share one [B,S,H] shape".into()));
         }
         let g_in = chain_backward(self.swarm.as_ref(), &self.cfg.route, &x0, &g_out)?;
+        if accept_bin {
+            return Ok((TENSOR_CONTENT_TYPE.to_string(), tensors_to_binary(&[&g_in])));
+        }
         let mut obj = BTreeMap::new();
         obj.insert("grad".to_string(), tensor_to_json(&g_in));
-        Ok(Value::Obj(obj).render())
+        Ok(("application/json".to_string(), Value::Obj(obj).render().into_bytes()))
     }
 
     // --- persistent sessions -------------------------------------------------
@@ -551,6 +665,8 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             // headers
             let mut content_len = 0usize;
             let mut keep_alive = true;
+            let mut content_type = String::new();
+            let mut accept = String::new();
             loop {
                 let mut h = String::new();
                 reader.read_line(&mut h)?;
@@ -561,6 +677,12 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
                 let lower = h.to_ascii_lowercase();
                 if let Some(v) = lower.strip_prefix("content-length:") {
                     content_len = v.trim().parse().unwrap_or(0);
+                }
+                if let Some(v) = lower.strip_prefix("content-type:") {
+                    content_type = v.trim().to_string();
+                }
+                if let Some(v) = lower.strip_prefix("accept:") {
+                    accept = v.trim().to_string();
                 }
                 if lower.starts_with("connection:") && lower.contains("close") {
                     keep_alive = false;
@@ -575,14 +697,61 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
                 write_error_response(&mut stream, &e)?;
                 return Ok(());
             }
-            let mut body = vec![0u8; content_len];
-            reader.read_exact(&mut body)?;
-            let body = String::from_utf8_lossy(&body).to_string();
+            let mut body_bytes = vec![0u8; content_len];
+            reader.read_exact(&mut body_bytes)?;
 
             self.metrics.requests.inc();
             self.metrics.bytes_in.add(content_len as u64);
 
-            if (method.as_str(), path.as_str()) == ("GET", "/metrics") {
+            // split off the query string: routes match on the bare path
+            let (route, query) = match path.split_once('?') {
+                Some((r, q)) => (r.to_string(), q.to_string()),
+                None => (path.clone(), String::new()),
+            };
+            let ct_bin = content_type.starts_with(TENSOR_CONTENT_TYPE);
+            let accept_bin = accept.contains(TENSOR_CONTENT_TYPE);
+            // SSE framing: `?format=sse` or `Accept: text/event-stream`
+            let sse = query.split('&').any(|kv| kv == "format=sse")
+                || accept.contains("text/event-stream");
+
+            // binary tensor transport on the activation endpoints —
+            // negotiated per direction, so it runs before the JSON
+            // route table (whose bodies must be UTF-8)
+            if (ct_bin || accept_bin)
+                && method == "POST"
+                && matches!(route.as_str(), "/api/v1/forward" | "/api/v1/backward")
+            {
+                let result = if route == "/api/v1/forward" {
+                    self.forward_negotiated(&body_bytes, ct_bin, accept_bin)
+                } else {
+                    self.backward_negotiated(&body_bytes, ct_bin, accept_bin)
+                };
+                match result {
+                    Ok((ctype, bytes)) => {
+                        write!(
+                            stream,
+                            "HTTP/1.1 200 OK\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\n\r\n",
+                            bytes.len()
+                        )?;
+                        stream.write_all(&bytes)?;
+                        stream.flush()?;
+                        self.metrics.bytes_out.add(bytes.len() as u64);
+                    }
+                    Err(e) => {
+                        self.metrics.failures.inc();
+                        write_error_response(&mut stream, &e)?;
+                        return Ok(());
+                    }
+                }
+                if !keep_alive {
+                    return Ok(());
+                }
+                continue;
+            }
+
+            let body = String::from_utf8_lossy(&body_bytes).to_string();
+
+            if (method.as_str(), route.as_str()) == ("GET", "/metrics") {
                 // Prometheus text exposition — its own content type, so
                 // it bypasses the JSON route table below
                 let reply = self.metrics.prometheus();
@@ -600,18 +769,18 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
                 continue;
             }
 
-            if (method.as_str(), path.as_str()) == ("POST", "/api/v1/stream") {
-                // streaming response: chunked NDJSON, connection closes
-                // after the terminal event
-                self.handle_stream(&body, &mut stream)?;
+            if (method.as_str(), route.as_str()) == ("POST", "/api/v1/stream") {
+                // streaming response: chunked NDJSON (or SSE), the
+                // connection closes after the terminal event
+                self.handle_stream(&body, sse, &mut stream)?;
                 return Ok(());
             }
-            if (method.as_str(), path.as_str()) == ("POST", "/api/v1/stream/resume") {
-                self.handle_stream_resume(&body, &mut stream)?;
+            if (method.as_str(), route.as_str()) == ("POST", "/api/v1/stream/resume") {
+                self.handle_stream_resume(&body, sse, &mut stream)?;
                 return Ok(());
             }
 
-            let result = match (method.as_str(), path.as_str()) {
+            let result = match (method.as_str(), route.as_str()) {
                 ("POST", "/api/v1/generate") => Some(self.generate_json(&body)),
                 ("POST", "/api/v1/forward") => Some(self.forward_json(&body)),
                 ("POST", "/api/v1/backward") => Some(self.backward_json(&body)),
@@ -658,7 +827,7 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
     /// Every token event carries a resumption token; if the connection
     /// drops mid-stream the generation state is parked and
     /// `/api/v1/stream/resume` re-attaches at the exact next event.
-    fn handle_stream<W: Write>(&self, body: &str, out: &mut W) -> Result<()> {
+    fn handle_stream<W: Write>(&self, body: &str, sse: bool, out: &mut W) -> Result<()> {
         let parsed = (|| -> Result<GenerateRequest> {
             let v = Value::parse(body)?;
             GenerateRequest::from_json(&v, self.head.vocab)
@@ -682,7 +851,7 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             Ok(g) => g,
             Err(e) => return write_error_response(out, &e),
         };
-        self.pump(gid, gen, 0, out)
+        self.pump(gid, gen, 0, sse, out)
     }
 
     /// `POST /api/v1/stream/resume` `{"resume": "<gen>.<next>"}`:
@@ -690,7 +859,7 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
     /// generating live on the same swarm session — no token duplicated,
     /// none skipped. Unknown ids (expired, never existed, or currently
     /// attached to a live connection) are 404s.
-    fn handle_stream_resume<W: Write>(&self, body: &str, out: &mut W) -> Result<()> {
+    fn handle_stream_resume<W: Write>(&self, body: &str, sse: bool, out: &mut W) -> Result<()> {
         let parsed = (|| -> Result<(u64, usize)> {
             let v = Value::parse(body)?;
             parse_resume_token(v.get("resume")?.str()?)
@@ -714,13 +883,17 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             ));
             return write_error_response(out, &e);
         }
-        self.pump(gid, gen, from, out)
+        self.pump(gid, gen, from, sse, out)
     }
 
     /// Open the swarm session and run the prefill for a resumable
     /// stream (mirrors `session_open_json`'s ordering: embed before
     /// open, close on prefill failure — nothing may strand server KV).
     fn start_resumable(&self, req: &GenerateRequest, gid: u64) -> Result<ResumableGen<C>> {
+        let opts = self.gen_options(req)?;
+        // traced streams fall back to per-token decoding (a verify
+        // round has no per-step hop waterfall to attach)
+        let spec_on = opts.speculation.is_some() && !req.trace;
         let inputs = &req.inputs[0];
         let prefix_len = inputs.len();
         let w = self.head.derive_prefill_width(1, prefix_len)?;
@@ -753,7 +926,7 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             session: Some(session),
             sampler: req.sampler.to_sampler().start(),
             last,
-            opts: self.gen_options(req),
+            opts,
             trace_ctx: req.trace.then(|| TraceContext {
                 trace_id: fresh_trace_id(),
                 parent_span: fresh_span_id(),
@@ -763,6 +936,9 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             stats: None,
             wall_s: 0.0,
             last_used: Instant::now(),
+            prompt: inputs.clone(),
+            spec_buf: VecDeque::new(),
+            spec: spec_on.then(SpecSummary::default),
         })
     }
 
@@ -770,6 +946,9 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
     /// same order as the non-resumable decode loop, so a stream that
     /// disconnects and resumes N times emits the identical sequence.
     fn gen_step(&self, gid: u64, g: &mut ResumableGen<C>) -> Result<()> {
+        if g.spec.is_some() {
+            return self.gen_step_spec(gid, g);
+        }
         let session = g.session.as_mut().expect("unfinished stream has a session");
         let t0 = Instant::now();
         let logits = self.head.lm_head(&g.last)?;
@@ -809,10 +988,125 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             hidden: hidden_vec,
             resume: Some(format!("{gid}.{}", step + 1)),
             trace,
+            accepted: None,
         });
         if g.opts.stop_tokens.contains(&token) {
             Self::finish_gen(g, "stop");
         }
+        Ok(())
+    }
+
+    /// Speculative variant of [`Self::gen_step`]: pop one buffered
+    /// token (running a verify round first when the buffer is dry) and
+    /// emit it as an event. The buffer is part of the parked state, so
+    /// disconnect/resume cycles preserve the round's unemitted tail.
+    fn gen_step_spec(&self, gid: u64, g: &mut ResumableGen<C>) -> Result<()> {
+        let t0 = Instant::now();
+        if g.spec_buf.is_empty() {
+            self.spec_round(g)?;
+        }
+        let p = g.spec_buf.pop_front().expect("verify round produced at least one token");
+        let step = g.events.len();
+        let step_s = t0.elapsed().as_secs_f64();
+        g.wall_s += step_s;
+        self.metrics.step_latency.record_us((step_s * 1e6) as u64);
+        g.events.push(TokenEvent {
+            step,
+            token: p.token,
+            step_s,
+            logits: p.logits,
+            hidden: p.hidden,
+            resume: Some(format!("{gid}.{}", step + 1)),
+            trace: None,
+            accepted: Some(p.accepted),
+        });
+        if g.opts.stop_tokens.contains(&p.token) {
+            // discard any buffered overshoot — the stream is over and
+            // the extra tokens were never observable
+            g.spec_buf.clear();
+            Self::finish_gen(g, "stop");
+        }
+        Ok(())
+    }
+
+    /// Run ONE verify round, refilling `spec_buf` with 1..=q+1 tokens.
+    /// Mirrors `GenerationStream`'s accept loop: every emitted token is
+    /// sampled from the TRUE model's output hidden for its position, in
+    /// exactly the order per-token decoding would sample it — so the
+    /// event stream is bitwise identical to the same request without
+    /// `speculation`; only the number of chain round-trips changes.
+    fn spec_round(&self, g: &mut ResumableGen<C>) -> Result<()> {
+        let hidden = self.head.hidden;
+        // round 0: nothing produced yet — the first token comes straight
+        // off the prefill hidden state, no chain call; it reaches the KV
+        // as the next round's anchor position
+        let Some(anchor) = g.events.last().map(|e| e.token) else {
+            let logits = self.head.lm_head(&g.last)?;
+            let token = g.sampler.sample(&logits)[0];
+            g.spec_buf.push_back(PendingSpecTok {
+                token,
+                accepted: false,
+                logits: g.opts.want_logits.then(|| logits.as_f32().to_vec()),
+                hidden: g.opts.want_hidden.then(|| g.last.as_f32().to_vec()),
+            });
+            return Ok(());
+        };
+        let spec = g.opts.speculation.clone().expect("speculative stream has options");
+        let mut history = g.prompt.clone();
+        history.extend(g.events.iter().map(|e| e.token));
+        let remaining = g.opts.max_new - g.events.len();
+        let q_cap = spec
+            .max_k
+            .min(crate::draft::MAX_SPEC_K - 1)
+            .min(remaining.saturating_sub(1));
+        let mut drafts = spec.draft.propose(&history, q_cap);
+        drafts.truncate(q_cap);
+        let q = drafts.len();
+        let m = q + 1;
+        // decode embeds are compiled at width 1; per-token embeds
+        // concatenated equal a width-m embed (embedding is positionless)
+        let mut payload = Vec::with_capacity(m * hidden);
+        for &t in std::iter::once(&anchor).chain(drafts.iter()) {
+            let h = self.head.embed(&Tensor::from_i32(&[1, 1], &[t]))?;
+            payload.extend_from_slice(h.as_f32());
+        }
+        let out = g
+            .session
+            .as_mut()
+            .expect("unfinished stream has a session")
+            .propose_verify(Tensor::from_f32(&[1, m, hidden], &payload))?;
+        let mut emitted = 0usize;
+        let mut accepted_n = 0usize;
+        for j in 0..m {
+            let o = Tensor::from_f32(&[1, hidden], &out.as_f32()[j * hidden..(j + 1) * hidden]);
+            let logits = self.head.lm_head(&o)?;
+            let s = g.sampler.sample(&logits)[0];
+            let hit = j < q && s == drafts[j];
+            g.spec_buf.push_back(PendingSpecTok {
+                token: s,
+                accepted: hit,
+                logits: g.opts.want_logits.then(|| logits.as_f32().to_vec()),
+                hidden: g.opts.want_hidden.then(|| o.as_f32().to_vec()),
+            });
+            emitted += 1;
+            g.last = o;
+            if hit {
+                accepted_n += 1;
+            } else {
+                break;
+            }
+        }
+        g.session
+            .as_mut()
+            .expect("unfinished stream has a session")
+            .commit_verify(emitted)?;
+        if let Some(sp) = &mut g.spec {
+            sp.rounds += 1;
+            sp.proposed += q as u64;
+            sp.accepted += accepted_n as u64;
+        }
+        self.metrics.spec_proposed.add(q as u64);
+        self.metrics.spec_accepted.add(accepted_n as u64);
         Ok(())
     }
 
@@ -831,6 +1125,7 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             recoveries,
             finish: finish.to_string(),
             wall_s: g.wall_s,
+            spec_stats: g.spec,
         });
     }
 
@@ -863,11 +1158,13 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
         gid: u64,
         mut g: ResumableGen<C>,
         from: usize,
+        sse: bool,
         out: &mut W,
     ) -> Result<()> {
+        let ctype = if sse { "text/event-stream" } else { "application/x-ndjson" };
         let header = write!(
             out,
-            "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+            "HTTP/1.1 200 OK\r\nContent-Type: {ctype}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
         )
         .and_then(|_| out.flush());
         if header.is_err() {
@@ -880,7 +1177,7 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             // from before the disconnect, or the one just produced)
             while idx < g.events.len() {
                 let line = StreamEvent::Token(g.events[idx].clone()).render();
-                if write_chunk_line(out, &line).is_err() {
+                if write_stream_line(out, &line, sse).is_err() {
                     self.park(gid, g);
                     return Ok(());
                 }
@@ -902,14 +1199,14 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
                 let ae = ApiError::from_error(&e);
                 let ev =
                     StreamEvent::Error { code: ae.code.to_string(), message: ae.message };
-                let _ = write_chunk_line(out, &ev.render());
+                let _ = write_stream_line(out, &ev.render(), sse);
                 let _ = out.write_all(b"0\r\n\r\n");
                 let _ = out.flush();
                 return Ok(());
             }
         }
         let stats = g.stats.clone().expect("finished stream has stats");
-        let done = write_chunk_line(out, &StreamEvent::Stats(stats).render())
+        let done = write_stream_line(out, &StreamEvent::Stats(stats).render(), sse)
             .and_then(|_| Ok(out.write_all(b"0\r\n\r\n")?))
             .and_then(|_| Ok(out.flush()?));
         let _ = done;
@@ -924,6 +1221,19 @@ fn write_chunk_line<W: Write>(out: &mut W, line: &str) -> Result<()> {
     // one event per chunk, flushed immediately: the whole point of the
     // endpoint is that events leave the server as they are produced
     write!(out, "{:x}\r\n{line}\n\r\n", line.len() + 1)?;
+    out.flush()?;
+    Ok(())
+}
+
+/// One stream event in the negotiated framing: the NDJSON line as its
+/// own chunk, or (SSE) the same JSON wrapped as a `data:` field with
+/// the blank-line event separator.
+fn write_stream_line<W: Write>(out: &mut W, line: &str, sse: bool) -> Result<()> {
+    if !sse {
+        return write_chunk_line(out, line);
+    }
+    let payload = sse_frame(line);
+    write!(out, "{:x}\r\n{payload}\r\n", payload.len())?;
     out.flush()?;
     Ok(())
 }

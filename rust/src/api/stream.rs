@@ -37,6 +37,19 @@ pub struct TokenEvent {
     /// [`crate::trace::StepTrace`] JSON. Carried opaquely so replaying /
     /// resuming a stream preserves it bit-for-bit.
     pub trace: Option<Value>,
+    /// On speculative streams: whether this token was a draft the
+    /// verifier accepted (`true` = it cost no chain round-trip of its
+    /// own). Absent on non-speculative streams.
+    pub accepted: Option<bool>,
+}
+
+/// Terminal speculative-decoding summary (the `spec_stats` object of a
+/// stats event). Present only on streams that ran with speculation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpecSummary {
+    pub proposed: u64,
+    pub accepted: u64,
+    pub rounds: u64,
 }
 
 /// Terminal stats event closing every stream.
@@ -48,6 +61,8 @@ pub struct StreamStats {
     /// `"length"` or `"stop"`.
     pub finish: String,
     pub wall_s: f64,
+    /// Speculative-decoding counters (absent on non-spec streams).
+    pub spec_stats: Option<SpecSummary>,
 }
 
 /// One NDJSON line of a streaming response.
@@ -89,6 +104,9 @@ impl StreamEvent {
                 if let Some(tr) = &t.trace {
                     obj.insert("trace".into(), tr.clone());
                 }
+                if let Some(a) = t.accepted {
+                    obj.insert("accepted".into(), Value::Bool(a));
+                }
             }
             StreamEvent::Stats(s) => {
                 obj.insert("event".into(), Value::Str("stats".into()));
@@ -97,6 +115,13 @@ impl StreamEvent {
                 obj.insert("recoveries".into(), Value::Num(s.recoveries as f64));
                 obj.insert("finish".into(), Value::Str(s.finish.clone()));
                 obj.insert("wall_s".into(), Value::Num(s.wall_s));
+                if let Some(sp) = &s.spec_stats {
+                    let mut o = BTreeMap::new();
+                    o.insert("proposed".into(), Value::Num(sp.proposed as f64));
+                    o.insert("accepted".into(), Value::Num(sp.accepted as f64));
+                    o.insert("rounds".into(), Value::Num(sp.rounds as f64));
+                    obj.insert("spec_stats".into(), Value::Obj(o));
+                }
             }
             StreamEvent::Error { code, message } => {
                 obj.insert("event".into(), Value::Str("error".into()));
@@ -118,6 +143,7 @@ impl StreamEvent {
                 hidden: v.opt("hidden").map(value_to_f32s).transpose()?,
                 resume: v.opt("resume").map(|x| Ok(x.str()?.to_string())).transpose()?,
                 trace: v.opt("trace").cloned(),
+                accepted: v.opt("accepted").map(|x| x.bool()).transpose()?,
             })),
             "stats" => Ok(StreamEvent::Stats(StreamStats {
                 steps: v.get("steps")?.usize()?,
@@ -125,6 +151,16 @@ impl StreamEvent {
                 recoveries: v.get("recoveries")?.usize()?,
                 finish: v.get("finish")?.str()?.to_string(),
                 wall_s: v.get("wall_s")?.f64()?,
+                spec_stats: v
+                    .opt("spec_stats")
+                    .map(|sp| {
+                        Ok(SpecSummary {
+                            proposed: sp.get("proposed")?.f64()? as u64,
+                            accepted: sp.get("accepted")?.f64()? as u64,
+                            rounds: sp.get("rounds")?.f64()? as u64,
+                        })
+                    })
+                    .transpose()?,
             })),
             "error" => Ok(StreamEvent::Error {
                 code: v.get("code")?.str()?.to_string(),
@@ -133,6 +169,22 @@ impl StreamEvent {
             other => Err(Error::Protocol(format!("unknown stream event {other:?}"))),
         }
     }
+}
+
+/// Server-Sent Events framing for one stream event: the same JSON line
+/// the NDJSON framing sends, wrapped as a `data:` field and terminated
+/// by the SSE blank-line event separator.
+pub fn sse_frame(event_json: &str) -> String {
+    format!("data: {event_json}\n\n")
+}
+
+/// Extract the payload of an SSE `data:` line, if it is one. Blank
+/// separator lines and comment/field lines yield `None`, so a client
+/// can feed every incoming line through this and parse the survivors
+/// exactly as it would NDJSON events.
+pub fn sse_data(line: &str) -> Option<&str> {
+    let rest = line.strip_prefix("data:")?;
+    Some(rest.strip_prefix(' ').unwrap_or(rest))
 }
 
 /// POST `body` and deliver the response incrementally: `on_line` fires
@@ -145,13 +197,29 @@ pub fn http_post_stream(
     addr: &str,
     path: &str,
     body: &str,
+    on_line: impl FnMut(&str),
+) -> Result<u16> {
+    http_post_stream_accept(addr, path, body, None, on_line)
+}
+
+/// [`http_post_stream`] with an explicit `Accept` header — how a client
+/// opts into SSE framing (`Accept: text/event-stream`) without the
+/// `?format=sse` query parameter. `on_line` still fires once per
+/// complete line; feed lines through [`sse_data`] when SSE was asked
+/// for.
+pub fn http_post_stream_accept(
+    addr: &str,
+    path: &str,
+    body: &str,
+    accept: Option<&str>,
     mut on_line: impl FnMut(&str),
 ) -> Result<u16> {
     let stream = std::net::TcpStream::connect(addr)?;
     let mut writer = stream.try_clone()?;
+    let accept_hdr = accept.map(|a| format!("Accept: {a}\r\n")).unwrap_or_default();
     write!(
         writer,
-        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n{accept_hdr}Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
     )?;
     writer.flush()?;
@@ -226,6 +294,72 @@ pub fn http_post_stream(
     Ok(status)
 }
 
+/// POST an arbitrary byte body with explicit `Content-Type` / `Accept`
+/// headers and return `(status, response content-type, response body)`.
+/// This is the client side of the binary tensor transport
+/// (`application/x-petals-tensor`) on `/api/v1/forward` and
+/// `/backward`; it also speaks JSON when pointed at JSON endpoints.
+/// Responses may be `Content-Length`-framed or close-delimited.
+pub fn http_post_bytes(
+    addr: &str,
+    path: &str,
+    content_type: &str,
+    accept: &str,
+    body: &[u8],
+) -> Result<(u16, String, Vec<u8>)> {
+    let stream = std::net::TcpStream::connect(addr)?;
+    let mut writer = stream.try_clone()?;
+    write!(
+        writer,
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: {content_type}\r\nAccept: {accept}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    writer.write_all(body)?;
+    writer.flush()?;
+    let mut reader = BufReader::new(stream);
+
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| Error::Protocol(format!("bad status line {status_line:?}")))?;
+    let mut content_len: Option<usize> = None;
+    let mut resp_type = String::new();
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            return Err(Error::Protocol("connection closed in headers".into()));
+        }
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        let lower = h.to_ascii_lowercase();
+        if let Some(v) = lower.strip_prefix("content-length:") {
+            content_len = v.trim().parse().ok();
+        }
+        if let Some(v) = lower.strip_prefix("content-type:") {
+            resp_type = v.trim().to_string();
+        }
+    }
+    let mut out = Vec::new();
+    match content_len {
+        Some(n) => {
+            if n > 64 << 20 {
+                return Err(Error::Protocol(format!("response of {n} bytes exceeds cap")));
+            }
+            out.resize(n, 0);
+            reader.read_exact(&mut out)?;
+        }
+        None => {
+            reader.read_to_end(&mut out)?;
+        }
+    }
+    Ok((status, resp_type, out))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -240,6 +374,7 @@ mod tests {
             hidden: None,
             resume: None,
             trace: None,
+            accepted: None,
         });
         assert_eq!(StreamEvent::parse(&t.render()).unwrap(), t);
 
@@ -251,8 +386,24 @@ mod tests {
             hidden: None,
             resume: Some("1007.1".into()),
             trace: None,
+            accepted: None,
         });
         assert_eq!(StreamEvent::parse(&t.render()).unwrap(), t);
+
+        // speculative per-token flag survives roundtrip for both values
+        for a in [true, false] {
+            let t = StreamEvent::Token(TokenEvent {
+                step: 2,
+                token: 5,
+                step_s: 0.01,
+                logits: None,
+                hidden: None,
+                resume: None,
+                trace: None,
+                accepted: Some(a),
+            });
+            assert_eq!(StreamEvent::parse(&t.render()).unwrap(), t);
+        }
 
         // the opaque trace payload survives render/parse bit-for-bit
         let t = StreamEvent::Token(TokenEvent {
@@ -263,6 +414,7 @@ mod tests {
             hidden: None,
             resume: None,
             trace: Some(Value::parse(r#"{"trace_id":"00ff","hops":[{"rtt_us":120}]}"#).unwrap()),
+            accepted: None,
         });
         assert_eq!(StreamEvent::parse(&t.render()).unwrap(), t);
 
@@ -272,6 +424,19 @@ mod tests {
             recoveries: 1,
             finish: "length".into(),
             wall_s: 2.25,
+            spec_stats: None,
+        });
+        assert_eq!(StreamEvent::parse(&s.render()).unwrap(), s);
+
+        // speculative terminal summary roundtrips (and is additive: a
+        // stats line without it parses as None, covered above)
+        let s = StreamEvent::Stats(StreamStats {
+            steps: 8,
+            steps_per_s: 3.5,
+            recoveries: 0,
+            finish: "stop".into(),
+            wall_s: 1.0,
+            spec_stats: Some(SpecSummary { proposed: 12, accepted: 9, rounds: 4 }),
         });
         assert_eq!(StreamEvent::parse(&s.render()).unwrap(), s);
 
@@ -280,6 +445,26 @@ mod tests {
 
         assert!(StreamEvent::parse(r#"{"event":"nope"}"#).is_err());
         assert!(StreamEvent::parse("not json").is_err());
+    }
+
+    #[test]
+    fn sse_framing_roundtrip() {
+        let e = StreamEvent::Error { code: "busy".into(), message: "pool full".into() };
+        let framed = sse_frame(&e.render());
+        assert!(framed.starts_with("data: {"));
+        assert!(framed.ends_with("\n\n"));
+        // every line of the frame goes through sse_data; only the data
+        // line survives and parses back to the original event
+        let mut parsed = Vec::new();
+        for line in framed.lines() {
+            if let Some(json) = sse_data(line) {
+                parsed.push(StreamEvent::parse(json).unwrap());
+            }
+        }
+        assert_eq!(parsed, vec![e]);
+        assert_eq!(sse_data("data:{\"x\":1}"), Some("{\"x\":1}"));
+        assert_eq!(sse_data(": comment"), None);
+        assert_eq!(sse_data(""), None);
     }
 
     /// A hand-rolled chunked server: events must arrive line-by-line in

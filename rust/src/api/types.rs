@@ -8,6 +8,7 @@
 
 use crate::config::json::Value;
 use crate::coordinator::client::Sampler;
+use crate::draft::{DraftSpec, DEFAULT_SPEC_K, MAX_SPEC_K};
 use crate::error::{Error, Result};
 use crate::model::tensor::{DType, Tensor};
 use std::collections::BTreeMap;
@@ -95,6 +96,14 @@ pub struct GenerateRequest {
     /// Opt into wire-v7 per-hop tracing: each stream event carries a
     /// `trace` object with the hop-by-hop timing waterfall.
     pub trace: bool,
+    /// Opt into swarm speculative decoding (wire v8):
+    /// `{"speculation": {"draft": "ngram", "max_k": 6}}`. Both inner
+    /// fields are optional (`draft` defaults to `"ngram"`, `max_k` to
+    /// [`DEFAULT_SPEC_K`]). Unknown draft kinds are rejected later with
+    /// the stable `unsupported_speculation` error code — here only the
+    /// JSON shape is validated, so the code stays distinguishable from
+    /// a plain 400. Additive: absent means non-speculative decoding.
+    pub speculation: Option<DraftSpec>,
 }
 
 impl GenerateRequest {
@@ -114,6 +123,7 @@ impl GenerateRequest {
         let flag = |key: &str| -> Result<bool> {
             v.opt(key).map(|x| x.bool()).transpose().map(|o| o.unwrap_or(false))
         };
+        let speculation = v.opt("speculation").map(parse_speculation).transpose()?;
         Ok(GenerateRequest {
             inputs,
             max_new_tokens,
@@ -122,8 +132,29 @@ impl GenerateRequest {
             return_logits: flag("return_logits")?,
             return_hidden: flag("return_hidden")?,
             trace: flag("trace")?,
+            speculation,
         })
     }
+}
+
+/// Parse the `"speculation"` object: `{"draft": <kind>, "max_k": <n>}`,
+/// both fields optional. `max_k` is clamped to [`MAX_SPEC_K`]; zero is
+/// a typed 400 (use `"draft": "off"` or omit the object to disable).
+fn parse_speculation(v: &Value) -> Result<DraftSpec> {
+    let kind = match v.opt("draft") {
+        Some(d) => d.str()?.to_string(),
+        None => "ngram".to_string(),
+    };
+    let max_k = match v.opt("max_k") {
+        Some(k) => k.usize()?,
+        None => DEFAULT_SPEC_K,
+    };
+    if max_k == 0 {
+        return Err(Error::Parse(
+            "speculation.max_k must be >= 1 (omit \"speculation\" to disable)".into(),
+        ));
+    }
+    Ok(DraftSpec { kind, max_k: max_k.min(MAX_SPEC_K) })
 }
 
 /// Parse one JSON array of token ids, enforcing non-emptiness and the
@@ -211,6 +242,99 @@ pub fn tensor_from_json(v: &Value) -> Result<Tensor> {
     Ok(t)
 }
 
+/// Media type of the binary tensor transport on `/api/v1/forward` and
+/// `/backward`. Clients opt in per direction: a request body with this
+/// `Content-Type` is decoded from the binary framing, and an `Accept`
+/// naming it gets the response activations in it. JSON stays the
+/// default; both framings carry f32s bit-exactly.
+pub const TENSOR_CONTENT_TYPE: &str = "application/x-petals-tensor";
+
+/// Magic prefix of a binary tensor payload (version 1).
+pub const TENSOR_MAGIC: &[u8; 4] = b"PTT1";
+
+const TENSOR_MAX_DIMS: usize = 8;
+
+/// Encode tensors in the binary transport framing: `"PTT1"`, then a
+/// little-endian `u32` tensor count, then per tensor a `u32` ndims,
+/// `ndims × u32` dims, and the row-major f32 data as little-endian
+/// bytes. Exactly the same f32 bits as the JSON framing — only cheaper
+/// to move (4 bytes/element instead of ~20 of decimal text).
+pub fn tensors_to_binary(tensors: &[&Tensor]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(
+        8 + tensors.iter().map(|t| 4 + 4 * t.shape.len() + 4 * t.as_f32().len()).sum::<usize>(),
+    );
+    out.extend_from_slice(TENSOR_MAGIC);
+    out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for t in tensors {
+        out.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+        for &d in &t.shape {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        for &x in t.as_f32() {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Decode a [`tensors_to_binary`] payload. Every length is validated
+/// against the actual byte count before any allocation sized from the
+/// wire, so a truncated or hostile body is a typed parse error, never
+/// a panic or an unbounded allocation.
+pub fn tensors_from_binary(bytes: &[u8]) -> Result<Vec<Tensor>> {
+    fn bad(what: &str) -> Error {
+        Error::Parse(format!("binary tensor payload: {what}"))
+    }
+    fn take<'a>(bytes: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+        let end =
+            pos.checked_add(n).filter(|&e| e <= bytes.len()).ok_or_else(|| bad("truncated"))?;
+        let s = &bytes[*pos..end];
+        *pos = end;
+        Ok(s)
+    }
+    fn take_u32(bytes: &[u8], pos: &mut usize) -> Result<u32> {
+        let b = take(bytes, pos, 4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    let mut pos = 0usize;
+    if take(bytes, &mut pos, 4)? != TENSOR_MAGIC {
+        return Err(bad("bad magic (want \"PTT1\")"));
+    }
+    let count = take_u32(bytes, &mut pos)? as usize;
+    // each tensor needs at least its ndims word — cheap sanity bound
+    if count > bytes.len() / 4 {
+        return Err(bad("tensor count exceeds payload size"));
+    }
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let ndims = take_u32(bytes, &mut pos)? as usize;
+        if ndims == 0 || ndims > TENSOR_MAX_DIMS {
+            return Err(bad(&format!("ndims {ndims} outside 1..={TENSOR_MAX_DIMS}")));
+        }
+        let mut shape = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            shape.push(take_u32(bytes, &mut pos)? as usize);
+        }
+        let n = shape
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .ok_or_else(|| bad("dim overflow"))?;
+        if n == 0 {
+            return Err(bad(&format!("empty shape {shape:?}")));
+        }
+        let data = take(bytes, &mut pos, n.checked_mul(4).ok_or_else(|| bad("dim overflow"))?)?;
+        let mut t = Tensor::zeros(&shape, DType::F32);
+        for (dst, src) in t.as_f32_mut().iter_mut().zip(data.chunks_exact(4)) {
+            *dst = f32::from_le_bytes([src[0], src[1], src[2], src[3]]);
+        }
+        out.push(t);
+    }
+    if pos != bytes.len() {
+        return Err(bad("trailing bytes after last tensor"));
+    }
+    Ok(out)
+}
+
 /// Parse a stream resumption token (`"<gen>.<next>"` — the generation
 /// id plus the 0-based index of the FIRST event the caller still needs;
 /// every [`crate::api::TokenEvent`] carries the token that resumes
@@ -229,9 +353,26 @@ pub struct ApiError {
     pub message: String,
 }
 
+/// Marker prefix [`ApiError::from_error`] recognizes so speculation
+/// rejections keep their stable code through the crate-wide [`Error`]
+/// plumbing (which has no slot for custom API codes).
+const UNSUPPORTED_SPECULATION_PREFIX: &str = "unsupported speculation: ";
+
+/// Build the error for a speculation config this deployment cannot
+/// honor (unknown draft kind, speculation on multi-prompt bodies). It
+/// surfaces as HTTP 400 with the stable `unsupported_speculation` code
+/// — distinguishable from a generic `bad_request`, so clients can fall
+/// back to non-speculative decoding programmatically.
+pub fn unsupported_speculation_error(msg: impl std::fmt::Display) -> Error {
+    Error::Parse(format!("{UNSUPPORTED_SPECULATION_PREFIX}{msg}"))
+}
+
 impl ApiError {
     pub fn from_error(e: &Error) -> ApiError {
         let (status, code) = match e {
+            Error::Parse(m) if m.starts_with(UNSUPPORTED_SPECULATION_PREFIX) => {
+                (400, "unsupported_speculation")
+            }
             Error::Parse(_) => (400, "bad_request"),
             Error::PromptTooLong(_) => (413, "prompt_too_long"),
             Error::NotFound(_) => (404, "not_found"),
@@ -244,6 +385,14 @@ impl ApiError {
             Error::Io(_) | Error::Xla(_) | Error::Other(_) => (500, "internal"),
         };
         ApiError { status, code, message: e.to_string() }
+    }
+
+    /// The stable code for a speculation config this deployment cannot
+    /// honor (unknown draft kind, speculation on multi-prompt bodies).
+    /// Distinguishable from a generic `bad_request` so clients can fall
+    /// back to non-speculative decoding programmatically.
+    pub fn unsupported_speculation(message: impl Into<String>) -> ApiError {
+        ApiError { status: 400, code: "unsupported_speculation", message: message.into() }
     }
 
     /// `"400 Bad Request"`-style status line fragment.
@@ -379,5 +528,88 @@ mod tests {
         assert_eq!(v.get("error").unwrap().get("code").unwrap().str().unwrap(), "prompt_too_long");
         assert_eq!(ApiError::from_error(&Error::Busy("full".into())).status, 503);
         assert_eq!(ApiError::from_error(&Error::Parse("x".into())).status, 400);
+        let e = ApiError::unsupported_speculation("no such draft");
+        assert_eq!((e.status, e.code), (400, "unsupported_speculation"));
+        // the marker survives the crate-wide Error plumbing
+        let e = ApiError::from_error(&unsupported_speculation_error("unknown draft \"x\""));
+        assert_eq!((e.status, e.code), (400, "unsupported_speculation"));
+        assert!(e.message.contains("unknown draft"));
+    }
+
+    #[test]
+    fn generate_request_speculation_parsing() {
+        // absent -> off
+        let v = Value::parse(r#"{"inputs":[1,2]}"#).unwrap();
+        assert!(GenerateRequest::from_json(&v, 100).unwrap().speculation.is_none());
+
+        // empty object -> defaults (ngram, DEFAULT_SPEC_K)
+        let v = Value::parse(r#"{"inputs":[1,2],"speculation":{}}"#).unwrap();
+        let s = GenerateRequest::from_json(&v, 100).unwrap().speculation.unwrap();
+        assert_eq!((s.kind.as_str(), s.max_k), ("ngram", DEFAULT_SPEC_K));
+
+        // explicit fields; max_k clamps to MAX_SPEC_K
+        let v = Value::parse(r#"{"inputs":[1],"speculation":{"draft":"off","max_k":999}}"#)
+            .unwrap();
+        let s = GenerateRequest::from_json(&v, 100).unwrap().speculation.unwrap();
+        assert_eq!((s.kind.as_str(), s.max_k), ("off", MAX_SPEC_K));
+
+        // unknown kinds PARSE fine (the gateway maps them to the stable
+        // unsupported_speculation code at build time), but max_k 0 is a 400
+        let v = Value::parse(r#"{"inputs":[1],"speculation":{"draft":"llama-68m"}}"#).unwrap();
+        assert_eq!(GenerateRequest::from_json(&v, 100).unwrap().speculation.unwrap().kind, "llama-68m");
+        let v = Value::parse(r#"{"inputs":[1],"speculation":{"max_k":0}}"#).unwrap();
+        assert!(GenerateRequest::from_json(&v, 100).is_err());
+    }
+
+    #[test]
+    fn binary_tensor_roundtrip_is_bitwise() {
+        let vals: Vec<f32> = (0..24)
+            .map(|i| ((i as f32) * 0.37).sin() * 1e-3 + 1.0 / (i as f32 + 1.0))
+            .collect();
+        let a = Tensor::from_f32(&[2, 3, 4], &vals);
+        let b = Tensor::from_f32(&[6], &vals[..6]);
+        let bytes = tensors_to_binary(&[&a, &b]);
+        assert_eq!(&bytes[..4], TENSOR_MAGIC);
+        let back = tensors_from_binary(&bytes).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].shape, a.shape);
+        assert_eq!(back[0].as_f32(), a.as_f32(), "binary round-trip must be exact");
+        assert_eq!(back[1].shape, b.shape);
+        assert_eq!(back[1].as_f32(), b.as_f32());
+
+        // binary and JSON framings agree bit-for-bit
+        let via_json =
+            tensor_from_json(&Value::parse(&tensor_to_json(&a).render()).unwrap()).unwrap();
+        assert_eq!(via_json.as_f32(), back[0].as_f32());
+    }
+
+    #[test]
+    fn binary_tensor_rejects_malformed_payloads() {
+        let t = Tensor::from_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        let good = tensors_to_binary(&[&t]);
+        // wrong magic
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(tensors_from_binary(&bad).is_err());
+        // every truncation point fails cleanly
+        for cut in 0..good.len() {
+            assert!(tensors_from_binary(&good[..cut]).is_err(), "cut at {cut}");
+        }
+        // trailing garbage is rejected, not ignored
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(tensors_from_binary(&bad).is_err());
+        // hostile tensor count / dim overflow cannot allocate unboundedly
+        let mut hostile = Vec::new();
+        hostile.extend_from_slice(TENSOR_MAGIC);
+        hostile.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(tensors_from_binary(&hostile).is_err());
+        let mut hostile = Vec::new();
+        hostile.extend_from_slice(TENSOR_MAGIC);
+        hostile.extend_from_slice(&1u32.to_le_bytes());
+        hostile.extend_from_slice(&2u32.to_le_bytes()); // ndims = 2
+        hostile.extend_from_slice(&u32::MAX.to_le_bytes());
+        hostile.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(tensors_from_binary(&hostile).is_err());
     }
 }

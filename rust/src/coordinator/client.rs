@@ -272,6 +272,8 @@ pub struct GenerationResult {
     pub wall: std::time::Duration,
     /// Why generation ended.
     pub finish: FinishReason,
+    /// Speculative-decoding counters (all zero on non-spec runs).
+    pub spec: SpecStats,
 }
 
 /// Why a generation stream ended.
@@ -313,6 +315,15 @@ pub struct GenOptions {
     /// per-hop timing waterfall to each [`TokenStep`]. Opt-in: untraced
     /// streams send the classic frames and pay zero overhead.
     pub trace: bool,
+    /// Swarm speculative decoding (wire v8): a local draft proposes up
+    /// to `max_k` candidate tokens per round and ONE fused
+    /// `ProposeVerify` chain round scores them all, so an accepted draft
+    /// costs no extra chain round-trip. The emitted token sequence is
+    /// bitwise identical to non-speculative decoding (the sampler draws
+    /// from the same logits in the same order either way). Active only
+    /// for batch-1 untraced streams: multi-row batches and traced steps
+    /// fall back to plain per-token decoding silently.
+    pub speculation: Option<crate::draft::SpecOptions>,
 }
 
 /// One per-token event from a [`GenerationStream`].
@@ -338,6 +349,21 @@ pub struct TokenStep {
     /// token (when [`GenOptions::trace`] is set and a step ran — the
     /// final token of a stream has no decode step, hence no trace).
     pub trace: Option<StepTrace>,
+    /// Whether this token was proposed by the speculative draft and
+    /// accepted by verification — i.e. it cost no chain round-trip of
+    /// its own. Always `false` on non-speculative streams.
+    pub accepted: bool,
+}
+
+/// Aggregate speculative-decoding counters for one stream.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// Draft tokens proposed into verify rounds.
+    pub proposed: u64,
+    /// Draft tokens accepted (`accepted / proposed` = acceptance rate).
+    pub accepted: u64,
+    /// Verify rounds run (each costs one chain round-trip).
+    pub rounds: u64,
 }
 
 /// End-to-end generation driver: local embed/head + remote blocks —
@@ -443,6 +469,7 @@ impl<'a, C: ChainClient> SwarmGenerator<'a, C> {
             trace_id: fresh_trace_id(),
             parent_span: fresh_span_id(),
         });
+        let prompt0 = prefix[0].clone();
         Ok(GenerationStream {
             head: self.head,
             session: Some(session),
@@ -457,6 +484,9 @@ impl<'a, C: ChainClient> SwarmGenerator<'a, C> {
             recoveries: 0,
             started,
             batch: b,
+            prompt0,
+            spec_buf: std::collections::VecDeque::new(),
+            spec_stats: SpecStats::default(),
         })
     }
 
@@ -498,12 +528,38 @@ pub struct GenerationStream<'a, C: ChainClient> {
     recoveries: usize,
     started: std::time::Instant,
     batch: usize,
+    /// Row 0's prompt ids — the draft source's history root (speculative
+    /// streams are batch-1, so row 0 IS the stream).
+    prompt0: Vec<i32>,
+    /// Tokens a verify round has emitted but [`Self::next_step`] has not
+    /// yet handed out — popped one per call so speculative and plain
+    /// streams present the identical per-token interface.
+    spec_buf: std::collections::VecDeque<PendingTok>,
+    spec_stats: SpecStats,
+}
+
+/// One buffered speculative emission awaiting its [`TokenStep`].
+struct PendingTok {
+    token: i32,
+    accepted: bool,
+    logits: Option<Tensor>,
+    hidden: Option<Tensor>,
 }
 
 impl<'a, C: ChainClient> GenerationStream<'a, C> {
+    /// Whether this stream runs the speculative accept/rollback loop:
+    /// configured, batch-1, untraced (the verify frame carries no trace
+    /// context, so traced streams keep the per-step waterfall instead).
+    fn spec_active(&self) -> bool {
+        self.batch == 1 && self.trace_ctx.is_none() && self.opts.speculation.is_some()
+    }
+
     /// Produce the next token, or `None` when generation is complete
     /// (the session is closed at that point).
     pub fn next_step(&mut self) -> Result<Option<TokenStep>> {
+        if self.spec_active() {
+            return self.next_step_spec();
+        }
         if self.finish.is_some() || self.steps >= self.opts.max_new {
             if self.finish.is_none() {
                 self.finish = Some(FinishReason::Length);
@@ -580,7 +636,156 @@ impl<'a, C: ChainClient> GenerationStream<'a, C> {
             logits: self.opts.want_logits.then_some(logits),
             hidden: hidden_out,
             trace,
+            accepted: false,
         }))
+    }
+
+    /// The speculative twin of [`Self::next_step`]: when the emission
+    /// buffer is dry, run one verify round (which yields 1..=max_k+1
+    /// tokens for a single chain round-trip) and then hand tokens out
+    /// one per call. The emitted sequence is bitwise identical to the
+    /// plain path: every token is sampled from the true model's logits
+    /// at its position, in order, consuming the sampler RNG exactly as
+    /// plain decoding would.
+    fn next_step_spec(&mut self) -> Result<Option<TokenStep>> {
+        if self.finish.is_some() || self.steps >= self.opts.max_new {
+            if self.finish.is_none() {
+                self.finish = Some(FinishReason::Length);
+            }
+            self.close_session();
+            return Ok(None);
+        }
+        let t0 = std::time::Instant::now();
+        if self.spec_buf.is_empty() {
+            self.run_verify_round()?;
+        }
+        let pending = self
+            .spec_buf
+            .pop_front()
+            .ok_or_else(|| Error::Protocol("verify round emitted no tokens".into()))?;
+        let step = self.steps;
+        self.steps += 1;
+        let token = pending.token;
+        self.produced[0].push(token);
+        if !self.opts.stop_tokens.is_empty() && self.opts.stop_tokens.contains(&token) {
+            // tokens buffered past a stop would never have been sampled
+            // by plain decoding — they are not output (their RNG draws
+            // happened, but the stream ends here so nothing observes it)
+            self.row_done[0] = true;
+            self.finish = Some(FinishReason::Stop);
+            self.spec_buf.clear();
+            self.close_session();
+        } else if self.steps >= self.opts.max_new {
+            self.finish = Some(FinishReason::Length);
+            self.spec_buf.clear();
+            self.close_session();
+        }
+        Ok(Some(TokenStep {
+            tokens: vec![token],
+            active: vec![true],
+            step,
+            step_s: t0.elapsed().as_secs_f64(),
+            logits: pending.logits,
+            hidden: pending.hidden,
+            trace: None,
+            accepted: pending.accepted,
+        }))
+    }
+
+    /// Run one speculative round and refill the emission buffer.
+    ///
+    /// Anchor-token scheme: the newest emitted token is not yet in the
+    /// swarm's KV (its decode was deferred); this round sends
+    /// `[anchor, d_1..d_q]` as one `ProposeVerify` frame, getting back
+    /// the chain outputs `o_0..o_q` for all positions. The client then
+    /// samples sequentially: `s_1 = sample(lm_head(o_0))` is emitted,
+    /// and while `s_i == d_i` the next draft's KV column is valid so
+    /// sampling continues from `o_i` — all without another round-trip.
+    /// The first non-matching sample ends the round: positions `0..i`
+    /// commit, the rejected suffix is abandoned (the servers shed it via
+    /// implicit rollback on the next frame), and `s_i` becomes the next
+    /// round's anchor. If every draft matches, one bonus token is
+    /// sampled from `o_q`. The very first round has no anchor yet and
+    /// just samples from the prefill output.
+    fn run_verify_round(&mut self) -> Result<()> {
+        let spec = self.opts.speculation.clone().expect("spec_active checked");
+        let remaining = self.opts.max_new - self.steps;
+        if self.produced[0].is_empty() {
+            // round 0: sample the first token from the prefill output;
+            // its decode step is deferred into the next round's anchor
+            let logits = self.head.lm_head(&self.last)?;
+            let t = self.sampler.sample(&logits)[0];
+            self.spec_buf.push_back(PendingTok {
+                token: t,
+                accepted: false,
+                logits: self.opts.want_logits.then_some(logits),
+                hidden: self.opts.want_hidden.then(|| self.last.clone()),
+            });
+            return Ok(());
+        }
+        let anchor = *self.produced[0].last().expect("non-empty");
+        let mut history = self.prompt0.clone();
+        history.extend_from_slice(&self.produced[0]);
+        // a round emits at most q+1 tokens; stay within max_new and the
+        // wire's per-frame position ceiling
+        let q_cap = spec
+            .max_k
+            .min(crate::draft::MAX_SPEC_K - 1)
+            .min(remaining.saturating_sub(1));
+        let mut drafts = if q_cap == 0 {
+            Vec::new()
+        } else {
+            spec.draft.propose(&history, q_cap)
+        };
+        drafts.truncate(q_cap);
+        let q = drafts.len();
+        let m = q + 1;
+        let hd = self.head.hidden;
+        // embed anchor + drafts position-by-position (the embedding is
+        // positionless, so per-token embeds concatenate bitwise equal to
+        // a width-m embed — and only width-1 is compiled for decode)
+        let mut payload = vec![0f32; m * hd];
+        for (j, &t) in std::iter::once(&anchor).chain(drafts.iter()).enumerate() {
+            let e = self.head.embed(&Tensor::from_i32(&[1, 1], &[t]))?;
+            payload[j * hd..(j + 1) * hd].copy_from_slice(e.as_f32());
+        }
+        let session = self
+            .session
+            .as_mut()
+            .ok_or_else(|| Error::Protocol("stream already closed".into()))?;
+        let out = session.propose_verify(Tensor::from_f32(&[1, m, hd], &payload))?;
+        let of = out.as_f32();
+        let mut accepted = 0usize;
+        let mut emitted = 0usize;
+        for j in 0..m {
+            // o_j = the chain's output after the token at position j —
+            // the exact hidden state plain decoding would have produced
+            let o_t = Tensor::from_f32(&[1, hd], &of[j * hd..(j + 1) * hd]);
+            let logits = self.head.lm_head(&o_t)?;
+            let s = self.sampler.sample(&logits)[0];
+            let draft_hit = j < q && s == drafts[j];
+            self.spec_buf.push_back(PendingTok {
+                token: s,
+                accepted: draft_hit,
+                logits: self.opts.want_logits.then_some(logits),
+                hidden: self.opts.want_hidden.then(|| o_t.clone()),
+            });
+            emitted += 1;
+            self.last = o_t;
+            if draft_hit {
+                accepted += 1;
+            } else {
+                // mismatch (the draft's KV column is wrong) or the
+                // all-accepted bonus sample: either way the round ends
+                break;
+            }
+        }
+        let session = self.session.as_mut().expect("checked above");
+        session.commit_verify(emitted)?;
+        self.spec_stats.rounds += 1;
+        self.spec_stats.proposed += q as u64;
+        self.spec_stats.accepted += accepted as u64;
+        Ok(())
     }
 
     /// Tokens produced so far, [B][steps].
@@ -603,6 +808,12 @@ impl<'a, C: ChainClient> GenerationStream<'a, C> {
         &self.row_done
     }
 
+    /// Speculative-decoding counters so far (all zero when speculation
+    /// is off).
+    pub fn spec_stats(&self) -> SpecStats {
+        self.spec_stats
+    }
+
     /// Recoveries performed so far (final total once the stream ends).
     pub fn recoveries(&self) -> usize {
         self.session.as_ref().map(|s| s.recoveries()).unwrap_or(self.recoveries)
@@ -623,6 +834,7 @@ impl<'a, C: ChainClient> GenerationStream<'a, C> {
             recoveries: self.recoveries(),
             wall: self.started.elapsed(),
             finish: self.finish.unwrap_or(FinishReason::Length),
+            spec: self.spec_stats,
         })
     }
 

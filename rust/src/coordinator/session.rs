@@ -115,6 +115,26 @@ pub trait ChainClient {
     ) -> Result<(Tensor, Option<StepBreakdown>)> {
         self.step_ragged(server, session, row_lens, hidden).map(|t| (t, None))
     }
+    /// One speculative VERIFY round (wire v8 `ProposeVerify`): `hidden`
+    /// is `[B, m, H]` — for each row, position `j` extends the cache at
+    /// depth `base_lens[row] + j`. Returns the span outputs for all
+    /// `B × m` positions in the same layout. Servers first roll the
+    /// session's KV back to `base_lens` (discarding any speculative
+    /// suffix a previous round left behind), then score the m positions
+    /// sequentially so position `j` attends to the K/V written by
+    /// positions `< j`. The default decomposes the round into m
+    /// sequential [`Self::step_ragged`] calls — bitwise identical by
+    /// construction, just one round-trip per position — so transports
+    /// and test fakes that predate wire v8 keep working.
+    fn propose_verify(
+        &self,
+        server: NodeId,
+        session: u64,
+        base_lens: &[usize],
+        hidden: &Tensor,
+    ) -> Result<Tensor> {
+        verify_round_via_steps(self, server, session, base_lens, hidden)
+    }
     fn close_session(&self, server: NodeId, session: u64);
     /// Release one finished row of a multi-row session (wire v6
     /// `CloseSessionRow`): its KV pages free immediately while the batch
@@ -135,6 +155,52 @@ pub trait ChainClient {
     fn forward(&self, server: NodeId, hidden: &Tensor) -> Result<Tensor>;
     /// Backward over the span; returns grad wrt the span's input.
     fn backward(&self, server: NodeId, hidden: &Tensor, grad: &Tensor) -> Result<Tensor>;
+}
+
+/// The pre-v8 decomposition of a speculative verify round: m sequential
+/// [`ChainClient::step_ragged`] calls over the `[B, m, H]` payload's
+/// position slices, at depths `base_lens + j`. Bitwise identical to the
+/// fused wire-v8 frame by construction (the server executes the fused
+/// frame as exactly these sub-steps) — only the round-trip count
+/// differs. This is both the trait's default `propose_verify` and the
+/// TCP transport's memoized downgrade for legacy peers.
+pub fn verify_round_via_steps<C: ChainClient + ?Sized>(
+    client: &C,
+    server: NodeId,
+    session: u64,
+    base_lens: &[usize],
+    hidden: &Tensor,
+) -> Result<Tensor> {
+    if hidden.shape.len() != 3 {
+        return Err(Error::Shape(format!(
+            "propose_verify wants [B, m, H], got {:?}",
+            hidden.shape
+        )));
+    }
+    let (b, m, h) = (hidden.shape[0], hidden.shape[1], hidden.shape[2]);
+    if b == 0 || m == 0 || base_lens.len() != b {
+        return Err(Error::Shape(format!(
+            "propose_verify: {b} rows x {m} positions vs {} base lens",
+            base_lens.len()
+        )));
+    }
+    let src = hidden.as_f32();
+    let mut out = vec![0f32; b * m * h];
+    for j in 0..m {
+        let mut pos = vec![0f32; b * h];
+        for r in 0..b {
+            pos[r * h..(r + 1) * h]
+                .copy_from_slice(&src[(r * m + j) * h..(r * m + j + 1) * h]);
+        }
+        let lens: Vec<usize> = base_lens.iter().map(|&l| l + j).collect();
+        let step =
+            client.step_ragged(server, session, &lens, &Tensor::from_f32(&[b, 1, h], &pos))?;
+        let sf = step.as_f32();
+        for r in 0..b {
+            out[(r * m + j) * h..(r * m + j + 1) * h].copy_from_slice(&sf[r * h..(r + 1) * h]);
+        }
+    }
+    Ok(Tensor::from_f32(&[b, m, h], &out))
 }
 
 /// Forwarding impls so sessions can either borrow a swarm (`&C`, the
@@ -205,6 +271,15 @@ impl<T: ChainClient + ?Sized> ChainClient for &T {
         ctx: &TraceContext,
     ) -> Result<(Tensor, Option<StepBreakdown>)> {
         (**self).step_traced(server, session, row_lens, hidden, ctx)
+    }
+    fn propose_verify(
+        &self,
+        server: NodeId,
+        session: u64,
+        base_lens: &[usize],
+        hidden: &Tensor,
+    ) -> Result<Tensor> {
+        (**self).propose_verify(server, session, base_lens, hidden)
     }
     fn close_session(&self, server: NodeId, session: u64) {
         (**self).close_session(server, session)
@@ -288,6 +363,15 @@ impl<T: ChainClient + ?Sized> ChainClient for std::sync::Arc<T> {
         ctx: &TraceContext,
     ) -> Result<(Tensor, Option<StepBreakdown>)> {
         (**self).step_traced(server, session, row_lens, hidden, ctx)
+    }
+    fn propose_verify(
+        &self,
+        server: NodeId,
+        session: u64,
+        base_lens: &[usize],
+        hidden: &Tensor,
+    ) -> Result<Tensor> {
+        (**self).propose_verify(server, session, base_lens, hidden)
     }
     fn close_session(&self, server: NodeId, session: u64) {
         (**self).close_session(server, session)
@@ -417,6 +501,12 @@ pub struct InferenceSession<C: ChainClient> {
     /// sessions keep every slot equal; a ragged multi-prompt session's
     /// rows advance from their own prompt lengths.
     row_lens: Vec<usize>,
+    /// Per-hop `[B, m, H]` inputs of an in-flight speculative verify
+    /// round ([`Self::propose_verify`]), held until the caller decides
+    /// how many positions survived ([`Self::commit_verify`]). Only the
+    /// committed slices enter `history` — replay history stays a truthful
+    /// per-token record that legacy replacement servers can replay.
+    pending_verify: Vec<Tensor>,
     recoveries: usize,
 }
 
@@ -486,6 +576,7 @@ impl<C: ChainClient> InferenceSession<C> {
             history,
             session_id,
             row_lens,
+            pending_verify: Vec::new(),
             recoveries: 0,
         })
     }
@@ -646,6 +737,110 @@ impl<C: ChainClient> InferenceSession<C> {
             *l += 1;
         }
         Ok((h, hops))
+    }
+
+    /// One speculative VERIFY round through the whole chain (wire v8):
+    /// `hidden` is `[B, m, H]` — position `j` of each row extends that
+    /// row's cache at depth `row_lens[row] + j`. Returns the chain's
+    /// outputs for all positions in the same layout. This does NOT
+    /// advance `row_lens` or record replay history: the caller inspects
+    /// the outputs, decides how many leading positions survive
+    /// verification, and calls [`Self::commit_verify`] — only the
+    /// committed per-token slices enter the replay history, so recovery
+    /// and restore work against legacy (pre-v8) replacement servers
+    /// unchanged. Rejected suffix KV on the servers needs no explicit
+    /// cleanup: the next frame's smaller declared lengths trigger the
+    /// server-side implicit rollback.
+    ///
+    /// Failure handling mirrors [`Self::step`]: `moved:` redirects are
+    /// followed, retryable hop failures recover by replaying the
+    /// (committed-only) history onto a replacement and re-sending this
+    /// round — bitwise-safe because the round is idempotent from the
+    /// committed base.
+    pub fn propose_verify(&mut self, hidden: Tensor) -> Result<Tensor> {
+        if hidden.shape.len() != 3 || hidden.shape[0] != self.shape.batch {
+            return Err(Error::Shape(format!(
+                "propose_verify wants [{}, m, H], got {:?}",
+                self.shape.batch, hidden.shape
+            )));
+        }
+        self.pending_verify.clear();
+        let mut h = hidden;
+        let mut i = 0;
+        let mut moved_grace = 0usize;
+        while i < self.chain.len() {
+            self.pending_verify.push(h.clone());
+            match self.client.propose_verify(
+                self.chain[i].server,
+                self.session_id,
+                &self.row_lens,
+                &h,
+            ) {
+                Ok(next) => {
+                    h = next;
+                    i += 1;
+                    moved_grace = 0;
+                }
+                Err(Error::Moved(addr)) => {
+                    self.pending_verify.pop();
+                    if self.redirect(i, &addr) {
+                        moved_grace = MOVED_GRACE_TRIES;
+                    } else {
+                        self.recover(i)?;
+                    }
+                }
+                Err(Error::NotFound(_)) if moved_grace > 0 => {
+                    self.pending_verify.pop();
+                    moved_grace -= 1;
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                Err(e) if e.is_retryable() => {
+                    self.pending_verify.pop();
+                    self.recover(i)?;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(h)
+    }
+
+    /// Commit the first `committed` positions of the verify round sent
+    /// by the last [`Self::propose_verify`]: each hop's `[B, m, H]`
+    /// input is sliced into `committed` per-token `[B, 1, H]` replay
+    /// entries (exactly the frames a non-speculative client would have
+    /// sent) and `row_lens` advances by `committed`. Positions past
+    /// `committed` vanish from client state; the servers shed them on
+    /// the next frame via implicit rollback.
+    pub fn commit_verify(&mut self, committed: usize) -> Result<()> {
+        if self.pending_verify.len() != self.chain.len() {
+            return Err(Error::Protocol(
+                "commit_verify without a completed propose_verify round".into(),
+            ));
+        }
+        let m = self.pending_verify.first().map(|t| t.shape[1]).unwrap_or(0);
+        if committed == 0 || committed > m {
+            return Err(Error::Shape(format!(
+                "commit_verify: {committed} of {m} positions"
+            )));
+        }
+        let pending = std::mem::take(&mut self.pending_verify);
+        for (hist, inp) in self.history.iter_mut().zip(&pending) {
+            let (b, hm, hd) = (inp.shape[0], inp.shape[1], inp.shape[2]);
+            let src = inp.as_f32();
+            for j in 0..committed.min(hm) {
+                let mut pos = vec![0f32; b * hd];
+                for r in 0..b {
+                    pos[r * hd..(r + 1) * hd]
+                        .copy_from_slice(&src[(r * hm + j) * hd..(r * hm + j + 1) * hd]);
+                }
+                let lens: Vec<usize> = self.row_lens.iter().map(|&l| l + j).collect();
+                hist.step_inputs.push((lens, Tensor::from_f32(&[b, 1, hd], &pos)));
+            }
+        }
+        for l in &mut self.row_lens {
+            *l += committed;
+        }
+        Ok(())
     }
 
     /// Follow a wire-v6 `moved:` redirect for hop `i`: resolve the new
@@ -867,6 +1062,7 @@ impl<C: ChainClient> InferenceSession<C> {
             history,
             session_id: state.session_id,
             row_lens: state.row_lens,
+            pending_verify: Vec::new(),
             recoveries: 0,
         })
     }

@@ -1,0 +1,285 @@
+//! Pluggable draft sources for swarm speculative decoding (wire v8).
+//!
+//! Per-token latency over a distributed chain is dominated by the
+//! pipeline round-trip (PAPER.md §3: one traversal per token).
+//! Speculative decoding amortizes it: a cheap local *draft* proposes up
+//! to `k` candidate tokens, and ONE fused `ProposeVerify` chain round
+//! scores the anchor token plus all candidates at depths `d+1..d+k` in
+//! a single ragged forward. The client then accepts the longest prefix
+//! of drafts that matches what the real model would have emitted and
+//! rolls the swarm's KV back past the first mismatch — so the output
+//! token sequence is **bitwise identical** to non-speculative decoding
+//! by construction (the sampler consumes RNG once per emitted token in
+//! the same order either way); only the number of round-trips changes.
+//!
+//! A draft source is **stateless over an explicit history**: `propose`
+//! sees the session's full token history (prompt + accepted tokens) and
+//! nothing else. That makes speculation transparent to recovery, stream
+//! resumption, and live migration — a resumed client rebuilds exactly
+//! the same draft state from the history it replays, with nothing extra
+//! to snapshot.
+//!
+//! The default [`NGramDraft`] needs no model at all: it finds the most
+//! recent earlier occurrence of the current suffix in the history and
+//! proposes the tokens that followed it — cheap, and effective on the
+//! repetitive spans (code, templated text, quoted context) where
+//! speculation pays best. [`ScriptedDraft`] forces exact acceptance
+//! patterns for tests and the sim. The trait is the extension point for
+//! a small local model draft once a resident small-model runtime lands.
+
+use std::sync::Arc;
+
+/// A source of speculative draft tokens.
+///
+/// Implementations must be deterministic functions of `(history, k)` —
+/// the accept/rollback loop replays histories across recovery and
+/// migration and relies on getting the same proposals back.
+pub trait DraftSource: Send + Sync {
+    /// Propose up to `k` candidate next tokens given the session's
+    /// token history (prompt + all accepted tokens, oldest first).
+    /// Returning fewer than `k` (or none) is always legal: the round
+    /// degrades gracefully toward plain per-token decoding.
+    fn propose(&self, history: &[i32], k: usize) -> Vec<i32>;
+
+    /// Short stable name, used in stats and error messages.
+    fn name(&self) -> &'static str;
+}
+
+impl<T: DraftSource + ?Sized> DraftSource for &T {
+    fn propose(&self, history: &[i32], k: usize) -> Vec<i32> {
+        (**self).propose(history, k)
+    }
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}
+
+impl<T: DraftSource + ?Sized> DraftSource for Arc<T> {
+    fn propose(&self, history: &[i32], k: usize) -> Vec<i32> {
+        (**self).propose(history, k)
+    }
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}
+
+/// Longest-suffix-match n-gram draft over the session's own history.
+///
+/// To propose after history `..., a, b, c`: scan for the most recent
+/// EARLIER occurrence of the longest matching suffix (up to
+/// `max_order` tokens) and propose the tokens that followed it, backing
+/// off to shorter suffixes when the long one never recurred. No match
+/// at any order proposes nothing (the round runs as a plain step).
+#[derive(Debug, Clone)]
+pub struct NGramDraft {
+    /// Longest suffix length to match (backs off toward 1).
+    pub max_order: usize,
+    /// Shortest suffix length worth trusting (1 = always try unigrams).
+    pub min_order: usize,
+}
+
+impl Default for NGramDraft {
+    fn default() -> Self {
+        NGramDraft { max_order: 4, min_order: 1 }
+    }
+}
+
+impl NGramDraft {
+    /// Find the end index (exclusive) of the most recent occurrence of
+    /// `suffix` in `history[..history.len() - suffix.len()]`... i.e. an
+    /// occurrence strictly before the terminal suffix itself.
+    fn find_recent(history: &[i32], suffix: &[i32]) -> Option<usize> {
+        let n = suffix.len();
+        let limit = history.len().checked_sub(n + 1)?;
+        // walk backward: the most recent prior occurrence wins (locality
+        // beats frequency on chat/code traffic)
+        for start in (0..=limit).rev() {
+            if &history[start..start + n] == suffix {
+                return Some(start + n);
+            }
+        }
+        None
+    }
+}
+
+impl DraftSource for NGramDraft {
+    fn propose(&self, history: &[i32], k: usize) -> Vec<i32> {
+        if k == 0 || history.is_empty() {
+            return Vec::new();
+        }
+        let max_order = self.max_order.max(1).min(history.len());
+        let min_order = self.min_order.clamp(1, max_order);
+        for order in (min_order..=max_order).rev() {
+            let suffix = &history[history.len() - order..];
+            if let Some(cont) = Self::find_recent(history, suffix) {
+                let end = (cont + k).min(history.len());
+                return history[cont..end].to_vec();
+            }
+        }
+        Vec::new()
+    }
+
+    fn name(&self) -> &'static str {
+        "ngram"
+    }
+}
+
+/// A draft that replays a fixed script of proposal rounds — the test
+/// and sim harness for forcing exact acceptance patterns (all-accept,
+/// all-reject, k=0 rounds) regardless of history content. Rounds past
+/// the script's end propose nothing.
+#[derive(Debug, Clone, Default)]
+pub struct ScriptedDraft {
+    rounds: Arc<std::sync::Mutex<Vec<Vec<i32>>>>,
+}
+
+impl ScriptedDraft {
+    /// Build from the per-round proposals, consumed front-to-back.
+    pub fn new(rounds: Vec<Vec<i32>>) -> Self {
+        let mut rev = rounds;
+        rev.reverse(); // pop() consumes in order
+        ScriptedDraft { rounds: Arc::new(std::sync::Mutex::new(rev)) }
+    }
+}
+
+impl DraftSource for ScriptedDraft {
+    fn propose(&self, _history: &[i32], k: usize) -> Vec<i32> {
+        let mut g = self.rounds.lock().unwrap();
+        let mut out = g.pop().unwrap_or_default();
+        out.truncate(k);
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "scripted"
+    }
+}
+
+/// Parsed draft configuration from the public API
+/// (`GenerateRequest.speculation`). Today's kinds: `"ngram"` (the
+/// default when `speculation` is present without a `draft` field) and
+/// `"off"`. Unknown kinds are the caller's stable
+/// `unsupported_speculation` error.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DraftSpec {
+    pub kind: String,
+    /// Most DRAFT tokens one verify round may carry beyond the anchor
+    /// position (a round's wire payload is `max_k + 1` positions at
+    /// most, and a round emits up to `max_k + 1` tokens when every
+    /// draft is accepted plus the bonus sample). Clamped to
+    /// [`MAX_SPEC_K`].
+    pub max_k: usize,
+}
+
+/// Resolved speculation configuration a generation stream runs with:
+/// the instantiated draft source plus the per-round draft budget.
+#[derive(Clone)]
+pub struct SpecOptions {
+    pub draft: Arc<dyn DraftSource>,
+    /// Max draft tokens proposed per verify round (see
+    /// [`DraftSpec::max_k`]).
+    pub max_k: usize,
+}
+
+impl std::fmt::Debug for SpecOptions {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SpecOptions")
+            .field("draft", &self.draft.name())
+            .field("max_k", &self.max_k)
+            .finish()
+    }
+}
+
+/// Hard ceiling on tokens per verify round — bounds the hidden-state
+/// payload one speculative frame may carry (the wire rejects ragged
+/// row counts, this bounds the per-row position count).
+pub const MAX_SPEC_K: usize = 32;
+
+/// Default `max_k` when the API enables speculation without one.
+pub const DEFAULT_SPEC_K: usize = 6;
+
+impl DraftSpec {
+    /// Instantiate the configured draft source, or `None` for `"off"`.
+    /// Unknown kinds return an error string (the API layer maps it to
+    /// the stable `unsupported_speculation` code).
+    pub fn build(&self) -> std::result::Result<Option<Arc<dyn DraftSource>>, String> {
+        match self.kind.as_str() {
+            "off" => Ok(None),
+            "ngram" => Ok(Some(Arc::new(NGramDraft::default()))),
+            other => Err(format!(
+                "unknown draft source {other:?} (supported: \"ngram\", \"off\")"
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ngram_proposes_repeated_continuation() {
+        let d = NGramDraft::default();
+        // history: A B C D A B C -> suffix [A B C] recurred; propose D
+        let h = [1, 2, 3, 4, 1, 2, 3];
+        assert_eq!(d.propose(&h, 1), vec![4]);
+        // k larger than the available continuation truncates at history end
+        assert_eq!(d.propose(&h, 8), vec![4, 1, 2, 3]);
+    }
+
+    #[test]
+    fn ngram_backs_off_to_shorter_orders() {
+        let d = NGramDraft { max_order: 3, min_order: 1 };
+        // no trigram/bigram repeat, but token 5 appeared before with 9 after
+        let h = [5, 9, 7, 5];
+        assert_eq!(d.propose(&h, 2), vec![9, 7]);
+    }
+
+    #[test]
+    fn ngram_prefers_most_recent_occurrence() {
+        let d = NGramDraft::default();
+        // suffix [2] occurred twice before; the later one (followed by 8)
+        // must win over the earlier (followed by 3)
+        let h = [2, 3, 1, 2, 8, 4, 2];
+        assert_eq!(d.propose(&h, 1), vec![8]);
+    }
+
+    #[test]
+    fn ngram_empty_and_novel_histories_propose_nothing() {
+        let d = NGramDraft::default();
+        assert!(d.propose(&[], 4).is_empty());
+        assert!(d.propose(&[1, 2, 3], 4).is_empty(), "no repeats -> no draft");
+        assert!(d.propose(&[1, 1], 0).is_empty(), "k = 0 -> nothing");
+    }
+
+    #[test]
+    fn ngram_is_deterministic_over_history() {
+        let d = NGramDraft::default();
+        let h = [1, 2, 1, 2, 1, 2, 9, 1, 2];
+        let a = d.propose(&h, 4);
+        let b = d.propose(&h, 4);
+        assert_eq!(a, b, "same history must always yield the same proposal");
+        assert_eq!(a, vec![9, 1, 2]);
+    }
+
+    #[test]
+    fn scripted_replays_rounds_in_order() {
+        let d = ScriptedDraft::new(vec![vec![7, 8], vec![], vec![9]]);
+        assert_eq!(d.propose(&[1], 4), vec![7, 8]);
+        assert_eq!(d.propose(&[1], 4), Vec::<i32>::new());
+        assert_eq!(d.propose(&[1], 4), vec![9]);
+        assert_eq!(d.propose(&[1], 4), Vec::<i32>::new(), "past the script: nothing");
+        // k clamps a scripted round
+        let d = ScriptedDraft::new(vec![vec![1, 2, 3, 4]]);
+        assert_eq!(d.propose(&[], 2), vec![1, 2]);
+    }
+
+    #[test]
+    fn spec_builds_known_kinds_and_rejects_unknown() {
+        let ok = DraftSpec { kind: "ngram".into(), max_k: 4 }.build().unwrap();
+        assert_eq!(ok.unwrap().name(), "ngram");
+        assert!(DraftSpec { kind: "off".into(), max_k: 4 }.build().unwrap().is_none());
+        let err = DraftSpec { kind: "llama-68m".into(), max_k: 4 }.build().unwrap_err();
+        assert!(err.contains("llama-68m"), "{err}");
+    }
+}

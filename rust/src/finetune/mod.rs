@@ -107,12 +107,70 @@ impl<'a, C: ChainClient> ActivationBackend for ChainActivations<'a, C> {
 /// /api/v1/forward` / `POST /api/v1/backward` with raw `[B,S,H]`
 /// activations — the paper's "exposes hidden states" research workload
 /// driven end-to-end through the served surface.
+///
+/// Speaks the binary tensor transport (`application/x-petals-tensor`,
+/// little-endian f32 + dims header) in BOTH directions: activations are
+/// the hot payload of the fine-tuning loop and the binary framing moves
+/// them at 4 bytes/element instead of ~20 of decimal text. The two
+/// framings are bit-exact, so training trajectories are identical
+/// either way — the JSON path stays available via
+/// [`HttpActivations::json`] for debugging against older gateways.
 pub struct HttpActivations {
     /// `host:port` of a running [`crate::api::ApiServer`].
     pub addr: String,
 }
 
+impl HttpActivations {
+    /// A JSON-transport variant of the same backend (legacy gateways,
+    /// wire debugging). Bit-identical results, more bytes on the wire.
+    pub fn json(addr: String) -> HttpJsonActivations {
+        HttpJsonActivations { addr }
+    }
+
+    fn post_tensors(&self, path: &str, tensors: &[&Tensor]) -> Result<Tensor> {
+        let body = crate::api::types::tensors_to_binary(tensors);
+        let (status, ctype, reply) = crate::api::stream::http_post_bytes(
+            &self.addr,
+            path,
+            crate::api::types::TENSOR_CONTENT_TYPE,
+            crate::api::types::TENSOR_CONTENT_TYPE,
+            &body,
+        )?;
+        if status != 200 {
+            return Err(Error::Protocol(format!(
+                "{path} failed ({status}): {}",
+                String::from_utf8_lossy(&reply)
+            )));
+        }
+        if !ctype.starts_with(crate::api::types::TENSOR_CONTENT_TYPE) {
+            return Err(Error::Protocol(format!(
+                "{path} replied {ctype:?}, not the binary tensor transport"
+            )));
+        }
+        let mut out = crate::api::types::tensors_from_binary(&reply)?;
+        match out.len() {
+            1 => Ok(out.pop().expect("len checked")),
+            n => Err(Error::Protocol(format!("{path} returned {n} tensors, want 1"))),
+        }
+    }
+}
+
 impl ActivationBackend for HttpActivations {
+    fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        self.post_tensors("/api/v1/forward", &[x])
+    }
+
+    fn backward(&self, x: &Tensor, grad_out: &Tensor) -> Result<Tensor> {
+        self.post_tensors("/api/v1/backward", &[x, grad_out])
+    }
+}
+
+/// JSON-transport [`ActivationBackend`] (see [`HttpActivations::json`]).
+pub struct HttpJsonActivations {
+    pub addr: String,
+}
+
+impl ActivationBackend for HttpJsonActivations {
     fn forward(&self, x: &Tensor) -> Result<Tensor> {
         let body = format!(
             "{{\"embeds\":{}}}",

@@ -27,6 +27,11 @@
 //!   per-block server sets), inference sessions with KV replay on failure,
 //!   batch splitting for parallel forwards, and the server-side block
 //!   assignment / rebalancing policy.
+//! - [`draft`] — pluggable client-side draft sources for swarm
+//!   speculative decoding (wire v8): an n-gram/suffix-match draft over
+//!   the session's own history by default, trait-extensible to a small
+//!   local model; drafts are verified by one fused `ProposeVerify`
+//!   chain round instead of k per-token round-trips.
 //! - [`net`] — transports: a deterministic bandwidth+latency simulator
 //!   (used by the paper-table benches) and a real framed-TCP transport
 //!   (used by the end-to-end examples).
@@ -74,6 +79,7 @@ pub mod api;
 pub mod config;
 pub mod coordinator;
 pub mod dht;
+pub mod draft;
 pub mod error;
 pub mod finetune;
 pub mod hub;

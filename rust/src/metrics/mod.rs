@@ -407,6 +407,8 @@ node_metrics! {
     counter sessions_migrated_out => "Sessions pushed to a peer by a drain (wire-v6 live migration).",
     counter sessions_migrated_in => "Sessions restored from a peer's migration push.",
     counter rows_exited => "Batch rows released early (per-row stop: pages freed before the rest of the batch finished).",
+    counter spec_proposed => "Draft tokens proposed into speculative verify rounds (wire-v8 ProposeVerify; servers count drafts carried, gateways count drafts the client proposed).",
+    counter spec_accepted => "Draft tokens accepted by speculative verification (spec_accepted / spec_proposed = the live draft acceptance rate).",
 }
 
 #[cfg(test)]

@@ -347,6 +347,19 @@ pub enum Message {
         sessions_active: u32,
         prefix_fps: Vec<u64>,
     },
+    /// One speculative verify round (wire v8): like
+    /// [`Message::InferStepRagged`] but the hidden tensor carries `m`
+    /// token positions PER ROW (`[B, m, H]`) — the anchor token plus the
+    /// draft candidates — written at cache positions
+    /// `base_lens[r] .. base_lens[r] + m - 1` in ONE fused forward.
+    /// Answered with [`Message::HiddenResult`] (`[B, m, H]`). A
+    /// `base_lens[r]` BELOW the row's committed length first rolls the
+    /// row back to it (rejected speculative suffixes free their pages);
+    /// the same implicit-rollback rule applies to every step frame, so
+    /// no separate rollback round-trip exists. Legacy servers reject
+    /// the unknown tag (dropped connection); clients downgrade to `m`
+    /// sequential ragged steps, which is bitwise-identical.
+    ProposeVerify { session: u64, base_lens: Vec<u32>, hidden: TensorPayload },
 }
 
 impl Message {
@@ -388,6 +401,7 @@ impl Message {
             Message::OpenSessionTraced { .. } => "OpenSessionTraced",
             Message::PingV2 => "PingV2",
             Message::PongV2 { .. } => "PongV2",
+            Message::ProposeVerify { .. } => "ProposeVerify",
         }
     }
 
@@ -628,6 +642,15 @@ impl Message {
                 for fp in prefix_fps {
                     out.extend_from_slice(&fp.to_le_bytes());
                 }
+            }
+            Message::ProposeVerify { session, base_lens, hidden } => {
+                out.push(32);
+                out.extend_from_slice(&session.to_le_bytes());
+                out.extend_from_slice(&(base_lens.len() as u32).to_le_bytes());
+                for l in base_lens {
+                    out.extend_from_slice(&l.to_le_bytes());
+                }
+                hidden.write(&mut out);
             }
         }
         out
@@ -872,6 +895,22 @@ impl Message {
                     prefix_fps,
                 }
             }
+            32 => {
+                let session = r.u64()?;
+                let n = r.u32()? as usize;
+                if n > MAX_RAGGED_ROWS {
+                    return None; // bound allocation on hostile input
+                }
+                let mut base_lens = Vec::with_capacity(n);
+                for _ in 0..n {
+                    base_lens.push(r.u32()?);
+                }
+                Message::ProposeVerify {
+                    session,
+                    base_lens,
+                    hidden: TensorPayload::read(&mut r)?,
+                }
+            }
             _ => return None,
         };
         if r.pos != buf.len() {
@@ -1017,10 +1056,10 @@ mod tests {
     /// every v4 frame) and cross-tag payloads must reject cleanly.
     #[test]
     fn unknown_and_swapped_tags_rejected() {
-        // all unknown tags reject on a representative payload (32 is the
-        // first unassigned tag after wire v7's PongV2)
+        // all unknown tags reject on a representative payload (33 is the
+        // first unassigned tag after wire v8's ProposeVerify)
         let body = Message::DhtPing { from: contact("a", "127.0.0.1:1") }.encode();
-        for tag in 32..=255u8 {
+        for tag in 33..=255u8 {
             let mut b = body.clone();
             b[0] = tag;
             assert!(Message::decode(&b).is_none(), "tag {tag} accepted");
@@ -1029,7 +1068,7 @@ mod tests {
         // panic (it may legitimately alias for container-free tags)
         for m in dht_messages() {
             let bytes = m.encode();
-            for tag in 0..=31u8 {
+            for tag in 0..=32u8 {
                 let mut b = bytes.clone();
                 b[0] = tag;
                 let _ = Message::decode(&b); // no panic is the assertion
@@ -1262,6 +1301,70 @@ mod tests {
         assert!(Message::decode(&b).is_none());
         // trailing junk
         let mut b = Message::PingV2.encode();
+        b.push(0);
+        assert!(Message::decode(&b).is_none());
+    }
+
+    fn spec_messages() -> Vec<Message> {
+        use crate::model::tensor::Tensor;
+        let t = Tensor::zeros(&[1, 4, 8], DType::F32);
+        let wide = Tensor::zeros(&[2, 3, 8], DType::F32);
+        vec![
+            Message::ProposeVerify {
+                session: 7,
+                base_lens: vec![12],
+                hidden: TensorPayload::raw(&t),
+            },
+            Message::ProposeVerify {
+                session: 0xFEED_FACE,
+                base_lens: vec![3, 9],
+                hidden: TensorPayload::raw(&wide),
+            },
+            Message::ProposeVerify {
+                session: 1,
+                base_lens: vec![],
+                hidden: TensorPayload::raw(&t),
+            },
+        ]
+    }
+
+    /// Wire-v8 speculative frames round-trip byte-exact.
+    #[test]
+    fn spec_messages_roundtrip() {
+        for m in spec_messages() {
+            let bytes = m.encode();
+            let back = Message::decode(&bytes).expect("decode");
+            assert_eq!(bytes, back.encode(), "{}", m.kind());
+        }
+    }
+
+    /// Every truncation of every v8 frame rejects cleanly — the same
+    /// hardening bar every prior tag meets.
+    #[test]
+    fn truncated_spec_frames_rejected() {
+        for m in spec_messages() {
+            let bytes = m.encode();
+            for cut in 0..bytes.len() {
+                assert!(
+                    Message::decode(&bytes[..cut]).is_none(),
+                    "truncated {} at {cut} decoded",
+                    m.kind()
+                );
+            }
+        }
+    }
+
+    /// A forged row count on `ProposeVerify` must be rejected before
+    /// allocation; trailing junk after a complete frame is corrupt.
+    #[test]
+    fn hostile_spec_frames_rejected() {
+        // row count > cap
+        let mut b = vec![32u8];
+        b.extend_from_slice(&7u64.to_le_bytes());
+        b.extend_from_slice(&((MAX_RAGGED_ROWS as u32) + 1).to_le_bytes());
+        assert!(Message::decode(&b).is_none());
+        // trailing junk
+        let mut b = spec_messages()[0].encode();
         b.push(0);
         assert!(Message::decode(&b).is_none());
     }

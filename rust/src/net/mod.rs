@@ -32,13 +32,18 @@ pub const BASE_PORT: u16 = 31337;
 /// tracing/telemetry tags (`InferStepTraced`/`StepOutputTraced`/
 /// `OpenSessionTraced`, tags 27–29, carrying a 16-byte trace id +
 /// span ids + per-stage step timings) and `PingV2`/`PongV2` (tags
-/// 30–31, live telemetry + gossiped hot-prefix fingerprints). Each
-/// step appended new tags only, so v6 (and older) frames still decode
+/// 30–31, live telemetry + gossiped hot-prefix fingerprints); v8 added
+/// `ProposeVerify` (tag 32), the speculative-decoding verify round
+/// carrying `m` token positions per row in one frame, plus the
+/// implicit-rollback rule: a step frame declaring a cache length below
+/// a row's committed length rolls that row back first (rejected draft
+/// suffixes free their pages with no extra round trip). Each step
+/// appended new tags only, so v7 (and older) frames still decode
 /// byte-for-byte; older peers reject the newer tags as undecodable
 /// frames, which callers treat as "peer does not speak this version".
 /// The codec has no inline negotiation, so mixed-version swarms must
 /// not share a model namespace.
-pub const PROTOCOL_VERSION: u32 = 7;
+pub const PROTOCOL_VERSION: u32 = 8;
 
 #[cfg(test)]
 mod tests {
@@ -152,6 +157,16 @@ mod tests {
                 p50_step_us: 1200,
                 sessions_active: 4,
                 prefix_fps: vec![11, 22, 33],
+            },
+            Message::ProposeVerify {
+                session: 42,
+                base_lens: vec![12],
+                hidden: TensorPayload::raw(&t),
+            },
+            Message::ProposeVerify {
+                session: 43,
+                base_lens: vec![7, 19],
+                hidden: TensorPayload::compressed(&t),
             },
         ];
         for m in msgs {

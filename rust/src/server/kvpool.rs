@@ -1280,6 +1280,85 @@ impl KvPool {
         }
     }
 
+    /// Roll each live row BACK to at most `lens[row]` committed
+    /// positions — the speculative-rollback primitive. Pages wholly past
+    /// a row's new length are released atomically (CoW-shared pages
+    /// survive for their other holders; pages at refcount zero return
+    /// to the free list AND to this session's reservation, so the next
+    /// verify round rewrites the span without competing with concurrent
+    /// admissions). The boundary page (covering the new length) stays;
+    /// its stale tail is invisible — gathers stop at the committed
+    /// length and future writes overwrite in place. Targets below the
+    /// session's shared-prefix span are clamped to it (rolling back
+    /// attached prefix pages would silently detach the prefix). Rows
+    /// whose entry in `lens` is missing or >= their current length are
+    /// untouched. Returns the number of pages actually freed.
+    pub fn rollback_rows_after(&mut self, session: u64, lens: &[usize]) -> Result<usize> {
+        let t = self
+            .tables
+            .get(&session)
+            .ok_or_else(|| Error::NotFound(format!("session {session}")))?;
+        let (batch, n_blocks) = (t.batch, t.n_blocks);
+        let pt = self.cfg.page_tokens.max(1);
+        let floor = t.shared_tokens;
+        let mut new_lens = t.row_lens.clone();
+        let mut keep_pages = vec![usize::MAX; batch];
+        let mut to_release: Vec<PageId> = Vec::new();
+        for row in 0..batch {
+            if t.exited[row] {
+                continue;
+            }
+            let target = lens.get(row).copied().unwrap_or(new_lens[row]).max(floor);
+            if target >= new_lens[row] {
+                continue;
+            }
+            new_lens[row] = target;
+            let keep = target.div_ceil(pt);
+            keep_pages[row] = keep;
+            for bk in 0..n_blocks * 2 {
+                let run = &t.runs[bk * batch + row];
+                to_release.extend(run.pages.iter().skip(keep).copied());
+            }
+        }
+        if to_release.is_empty() && keep_pages.iter().all(|&k| k == usize::MAX) {
+            return Ok(0);
+        }
+        let used_before = self.used_pages;
+        for p in to_release {
+            self.release_page(p);
+        }
+        let freed = used_before - self.used_pages;
+        self.reserved_unwritten += freed;
+        let epoch = self.next_epoch();
+        let t = self.tables.get_mut(&session).unwrap();
+        t.reserved_pages_left += freed;
+        t.row_lens = new_lens;
+        for row in 0..batch {
+            let keep = keep_pages[row];
+            if keep == usize::MAX {
+                continue;
+            }
+            for bk in 0..n_blocks * 2 {
+                t.runs[bk * batch + row].pages.truncate(keep);
+            }
+        }
+        t.epoch = epoch;
+        self.check_invariant();
+        Ok(freed)
+    }
+
+    /// Commit each live row to EXACTLY `lens[row]` valid positions —
+    /// the speculative-verify commit. Rows past their target roll back
+    /// first ([`Self::rollback_rows_after`], freeing the rejected
+    /// suffix's pages); rows below grow as in
+    /// [`Self::commit_row_lens`]. Clears the staged flag. Returns the
+    /// pages freed by the rollback half.
+    pub fn commit_rows_upto(&mut self, session: u64, lens: &[usize]) -> Result<usize> {
+        let freed = self.rollback_rows_after(session, lens)?;
+        self.commit_row_lens(session, lens);
+        Ok(freed)
+    }
+
     /// Gather one block's K or V into the padded `[B, Hh, cap, D]` layout
     /// the decode artifact expects; positions past EACH ROW's committed
     /// length are zero (the seed's `pad_cache` semantics, per row).
@@ -2645,5 +2724,140 @@ mod tests {
         let mut tiny = KvPool::new(cfg(2));
         assert!(matches!(tiny.restore_session(&snap), Err(Error::Busy(_))));
         assert_eq!(tiny.n_sessions(), 0);
+    }
+
+    // ---- speculative rollback (wire v8) -----------------------------------
+
+    /// Rolling back a speculative suffix frees whole pages past the new
+    /// length, returns them to the session's reservation, and leaves the
+    /// boundary page's committed span bitwise intact; the span rewrites
+    /// cleanly on the next round.
+    #[test]
+    fn rollback_frees_suffix_pages_and_rewrites() {
+        let mut p = KvPool::new(cfg(32));
+        p.open_session(1, 1, 1, 16).unwrap();
+        p.prepare_write(1, 7).unwrap();
+        let w = kv_src(1, 2, 8, 3, 1.0);
+        p.write_prefill(1, 0, 0, &w, 8).unwrap();
+        p.write_prefill(1, 0, 1, &w, 8).unwrap();
+        p.commit_len(1, 8);
+        // verify round: write positions 8..=14 (pages 2 and 3)
+        p.prepare_write_row(1, 0, 8, 14).unwrap();
+        let col = vec![42.0f32; 2 * 3];
+        for pos in 8..=14 {
+            p.write_column_row(1, 0, 0, 0, pos, &col).unwrap();
+            p.write_column_row(1, 0, 1, 0, pos, &col).unwrap();
+        }
+        p.commit_rows_upto(1, &[15]).unwrap();
+        assert_eq!(p.session_row_lens(1), Some(vec![15]));
+        let used_full = p.used_pages();
+        let free_before = p.free_pages();
+        // client accepted through position 8 only -> roll back to 9
+        let epoch_before = p.table_epoch(1).unwrap();
+        let freed = p.rollback_rows_after(1, &[9]).unwrap();
+        assert_eq!(freed, 2, "page 3 of both K and V runs freed");
+        assert_eq!(p.used_pages(), used_full - 2);
+        assert_eq!(p.free_pages(), free_before, "freed pages return to the reservation");
+        assert_eq!(p.session_row_lens(1), Some(vec![9]));
+        assert!(p.table_epoch(1).unwrap() > epoch_before, "rollback bumps the epoch");
+        // committed span unchanged, rolled-back tail invisible
+        let mut dst = vec![0.0f32; 2 * 16 * 3];
+        p.gather_padded(1, 0, 0, 16, &mut dst).unwrap();
+        assert_eq!(dst[0], 1.0);
+        assert_eq!(dst[8 * 3], 42.0, "accepted position survives");
+        for t in 9..16 {
+            assert_eq!(dst[t * 3], 0.0, "position {t} must be zero after rollback");
+        }
+        // next round rewrites the same span without Busy
+        p.prepare_write_row(1, 0, 9, 14).unwrap();
+        let col2 = vec![7.0f32; 2 * 3];
+        for pos in 9..=14 {
+            p.write_column_row(1, 0, 0, 0, pos, &col2).unwrap();
+        }
+        p.commit_rows_upto(1, &[15]).unwrap();
+        p.gather_padded(1, 0, 0, 16, &mut dst).unwrap();
+        assert_eq!(dst[9 * 3], 7.0);
+        assert_eq!(dst[14 * 3], 7.0);
+    }
+
+    /// Rollback on a prefix-sharing session never detaches the shared
+    /// span: targets below it clamp, shared pages keep their refcounts,
+    /// and the donor's bytes stay readable through both holders.
+    #[test]
+    fn rollback_under_cow_keeps_shared_prefix() {
+        let (mut p, pin) = donor_with_pin(32);
+        p.open_session_shared(2, 1, 1, 16, pin, 8, 8).unwrap();
+        // sharer speculates: writes 8..=11 (one private page per run)
+        p.prepare_write_row(2, 0, 8, 11).unwrap();
+        let col = vec![5.0f32; 2 * 3];
+        for pos in 8..=11 {
+            p.write_column_row(2, 0, 0, 0, pos, &col).unwrap();
+        }
+        p.commit_rows_upto(2, &[12]).unwrap();
+        let shared_before = p.shared_pages();
+        // hostile/over-eager rollback to 4 clamps at the shared span (8)
+        p.rollback_rows_after(2, &[4]).unwrap();
+        assert_eq!(p.session_row_lens(2), Some(vec![8]));
+        assert_eq!(p.shared_pages(), shared_before, "shared prefix pages untouched");
+        let mut dst = vec![0.0f32; 2 * 8 * 3];
+        p.gather_padded(2, 0, 0, 8, &mut dst).unwrap();
+        assert_eq!(dst[0], 1.0, "sharer still reads the donor's prefix");
+        p.gather_padded(1, 0, 0, 8, &mut dst).unwrap();
+        assert_eq!(dst[0], 1.0, "donor unaffected");
+    }
+
+    /// Rollback interacts cleanly with fragmentation: pages freed by a
+    /// rollback become defrag holes, and the surviving data is bitwise
+    /// after compaction.
+    #[test]
+    fn rollback_then_defrag_preserves_data() {
+        let mut p = KvPool::new(cfg(64));
+        p.open_session(1, 1, 1, 32).unwrap();
+        p.prepare_write(1, 7).unwrap();
+        let w = kv_src(1, 2, 8, 3, 3.0);
+        p.write_prefill(1, 0, 0, &w, 8).unwrap();
+        p.commit_len(1, 8);
+        // speculate deep (positions 8..=23), then reject everything
+        p.prepare_write_row(1, 0, 8, 23).unwrap();
+        p.commit_rows_upto(1, &[24]).unwrap();
+        p.open_session(2, 1, 1, 16).unwrap();
+        p.prepare_write(2, 7).unwrap();
+        let w2 = kv_src(1, 2, 8, 3, 9.0);
+        p.write_prefill(2, 0, 0, &w2, 8).unwrap();
+        p.commit_len(2, 8);
+        let freed = p.rollback_rows_after(1, &[8]).unwrap();
+        assert!(freed > 0);
+        p.defrag();
+        let mut dst = vec![0.0f32; 2 * 8 * 3];
+        p.gather_padded(1, 0, 0, 8, &mut dst).unwrap();
+        assert_eq!(dst[0], 3.0);
+        p.gather_padded(2, 0, 0, 8, &mut dst).unwrap();
+        assert_eq!(dst[0], 9.0);
+    }
+
+    /// Degenerate rollbacks: a no-op target (>= current), an exited
+    /// row, and a multi-row session where only one row rolls back.
+    #[test]
+    fn rollback_edge_cases() {
+        let mut p = KvPool::new(cfg(64));
+        p.open_session(1, 3, 1, 16).unwrap();
+        p.prepare_write(1, 7).unwrap();
+        let w = kv_src(3, 2, 8, 3, 1.0);
+        p.write_prefill(1, 0, 0, &w, 8).unwrap();
+        p.commit_row_lens(1, &[8, 8, 8]);
+        // no-op: targets at/above current lengths free nothing
+        assert_eq!(p.rollback_rows_after(1, &[8, 9, 8]).unwrap(), 0);
+        assert_eq!(p.session_row_lens(1), Some(vec![8, 8, 8]));
+        // row 1 exits; rollback must skip it (double-free guard)
+        p.release_row(1, 1).unwrap();
+        // rows 0 and 2 speculate to 12; only row 2 rolls back
+        p.prepare_write_row(1, 0, 8, 11).unwrap();
+        p.prepare_write_row(1, 2, 8, 11).unwrap();
+        p.commit_rows_upto(1, &[12, 0, 12]).unwrap();
+        let freed = p.rollback_rows_after(1, &[12, 0, 8]).unwrap();
+        assert_eq!(freed, 2, "only row 2's speculative page pair freed");
+        assert_eq!(p.session_row_lens(1), Some(vec![12, 0, 8]));
+        // unknown session errors cleanly
+        assert!(matches!(p.rollback_rows_after(99, &[0]), Err(Error::NotFound(_))));
     }
 }

@@ -304,6 +304,21 @@ impl ChainClient for LocalCluster {
         })
     }
 
+    fn propose_verify(
+        &self,
+        server: NodeId,
+        session: u64,
+        base_lens: &[usize],
+        hidden: &Tensor,
+    ) -> Result<Tensor> {
+        self.with_node(server, |n| {
+            if let Some(addr) = n.moved_addr(session) {
+                return Err(Error::Moved(addr));
+            }
+            n.propose_verify(session, base_lens, hidden)
+        })
+    }
+
     fn step_traced(
         &self,
         server: NodeId,

@@ -966,6 +966,65 @@ impl ServerNode {
         })
     }
 
+    /// One speculative verify round (wire v8): `h` is `[B, m, H]` — the
+    /// anchor token plus the draft candidates for each row — executed
+    /// at cache positions `base_lens[r] + j` for position `j`. A base
+    /// length below a row's committed length first rolls the row back
+    /// (implicit rollback: the client rejected a speculative suffix,
+    /// whose pages free atomically before anything new is staged). The
+    /// `m` positions then run as sequential staged sub-steps over the
+    /// hosted span inside this ONE request — position `j` must attend
+    /// to positions `< j`'s freshly written K/V columns, so they cannot
+    /// share one attention call, but each sub-step still fuses with
+    /// other sessions' concurrent steps as usual. The client pays one
+    /// chain round-trip instead of `m`; the output `[B, m, H]` is
+    /// bitwise identical to `m` sequential [`Self::step_ragged`] calls
+    /// (which is exactly the legacy-peer downgrade).
+    pub fn propose_verify(
+        &self,
+        session: u64,
+        base_lens: &[usize],
+        h: &Tensor,
+    ) -> Result<Tensor> {
+        if h.shape.len() != 3 {
+            return Err(Error::Shape(format!(
+                "propose_verify wants [B, m, H], got {:?}",
+                h.shape
+            )));
+        }
+        let (b, m, hd) = (h.shape[0], h.shape[1], h.shape[2]);
+        if m == 0 || b == 0 || base_lens.len() != b {
+            return Err(Error::Shape(format!(
+                "propose_verify: {b} rows x {m} positions with {} base lens",
+                base_lens.len()
+            )));
+        }
+        // every position beyond each row's anchor is a draft in flight
+        self.metrics.spec_proposed.add((b * (m - 1)) as u64);
+        {
+            let mut pool = self.pool.lock().unwrap();
+            pool.rollback_rows_after(session, base_lens)?;
+            self.refresh_pool_gauges(&pool);
+        }
+        let src = h.as_f32();
+        let mut out = vec![0.0f32; b * m * hd];
+        for j in 0..m {
+            let mut hj = vec![0.0f32; b * hd];
+            for r in 0..b {
+                let o = (r * m + j) * hd;
+                hj[r * hd..(r + 1) * hd].copy_from_slice(&src[o..o + hd]);
+            }
+            let lens: Vec<usize> = base_lens.iter().map(|&l| l + j).collect();
+            let oj = self.step_ragged(session, &lens, &Tensor::from_f32(&[b, 1, hd], &hj))?;
+            let od = oj.as_f32();
+            for r in 0..b {
+                let o = (r * m + j) * hd;
+                out[o..o + hd].copy_from_slice(&od[r * hd..(r + 1) * hd]);
+            }
+        }
+        Ok(Tensor::from_f32(&[b, m, hd], &out))
+    }
+
     /// A traced decode step (wire v7): identical scheduling and fusion
     /// to [`Self::step_ragged`] — the timing cell changes what gets
     /// *measured*, never which batch the request fuses into — returning
@@ -1153,6 +1212,13 @@ impl ServerNode {
                 r.session
             )));
         }
+        // implicit rollback (wire v8): a declared cache length below a
+        // row's committed length means the client rejected a speculative
+        // suffix — free it before preparing the new write, so committed
+        // lengths (and snapshots/migrations built from them) stay
+        // truthful even when the rejecting frame is a plain step from a
+        // legacy-downgraded path
+        pool.rollback_rows_after(r.session, &r.row_lens)?;
         let mut forks = 0;
         for (row, &l) in r.row_lens.iter().enumerate() {
             forks += pool.prepare_write_row(r.session, row, l, l)?;
@@ -1535,6 +1601,16 @@ impl ServerNode {
                 };
                 let lens: Vec<usize> = cache_lens.iter().map(|&l| l as usize).collect();
                 reply(self.step_ragged(*session, &lens, &t), self.compress)
+            }
+            Message::ProposeVerify { session, base_lens, hidden } => {
+                if let Some(r) = self.moved_reply(*session) {
+                    return r;
+                }
+                let Some(t) = hidden.to_tensor() else {
+                    return Message::Error { message: "bad tensor".into() };
+                };
+                let lens: Vec<usize> = base_lens.iter().map(|&l| l as usize).collect();
+                reply(self.propose_verify(*session, &lens, &t), self.compress)
             }
             Message::InferStepTraced { session, cache_lens, trace: _, hidden } => {
                 // the trace identity is the client's to correlate; the

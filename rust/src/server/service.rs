@@ -306,6 +306,10 @@ struct Remote {
     /// later pings and traced steps downgrade immediately instead of
     /// paying a broken connection per call.
     pre_v7: AtomicBool,
+    /// Set once this peer rejected the wire-v8 `ProposeVerify` tag:
+    /// later speculative rounds decompose into per-token steps
+    /// immediately instead of paying a broken connection per round.
+    pre_v8: AtomicBool,
 }
 
 /// [`ChainClient`] over TCP: discovers by pinging a static peer list
@@ -388,6 +392,7 @@ impl TcpSwarm {
                         view: Mutex::new(None),
                         hint_fps,
                         pre_v7: AtomicBool::new(false),
+                        pre_v8: AtomicBool::new(false),
                     },
                 )
             })
@@ -650,6 +655,48 @@ impl ChainClient for TcpSwarm {
             hidden: TensorPayload::compressed(hidden),
         };
         Self::expect_hidden(self.call(server, &msg)?)
+    }
+
+    fn propose_verify(
+        &self,
+        server: NodeId,
+        session: u64,
+        base_lens: &[usize],
+        hidden: &Tensor,
+    ) -> Result<Tensor> {
+        if let Some(remote) = self.peers.get(&server) {
+            if remote.pre_v8.load(Ordering::Relaxed) {
+                // known-legacy peer: skip the doomed v8 frame entirely
+                return crate::coordinator::session::verify_round_via_steps(
+                    self, server, session, base_lens, hidden,
+                );
+            }
+        }
+        let msg = Message::ProposeVerify {
+            session,
+            base_lens: base_lens.iter().map(|&l| l as u32).collect(),
+            hidden: TensorPayload::compressed(hidden),
+        };
+        match self.call(server, &msg) {
+            Ok(Message::HiddenResult { hidden }) => hidden
+                .to_tensor()
+                .ok_or_else(|| Error::Protocol("bad tensor".into())),
+            Ok(Message::Error { message }) => Err(Error::from_wire(message)),
+            Ok(other) => Err(Error::Protocol(format!("unexpected {}", other.kind()))),
+            // a pre-v8 server drops the connection on the unknown tag:
+            // remember the downgrade so later verify rounds don't pay a
+            // broken connection each, and decompose into per-token steps
+            // (bitwise identical, just one round-trip per position)
+            Err(Error::ChainBroken(_)) | Err(Error::Io(_)) => {
+                if let Some(remote) = self.peers.get(&server) {
+                    remote.pre_v8.store(true, Ordering::Relaxed);
+                }
+                crate::coordinator::session::verify_round_via_steps(
+                    self, server, session, base_lens, hidden,
+                )
+            }
+            Err(e) => Err(e),
+        }
     }
 
     fn step_traced(

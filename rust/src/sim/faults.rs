@@ -34,13 +34,20 @@ fn mock_addr(id: NodeId) -> String {
 /// real pool supports.
 #[derive(Debug, Clone, Default, PartialEq)]
 struct MockKv {
+    /// Every fold this session absorbed, in order: the declared per-row
+    /// cache lens (empty for prefills) and the folded contribution.
+    /// Keeping the entries — not just the running value — is what makes
+    /// the accumulator *rollbackable*: discarding a speculative suffix
+    /// truncates entries and replays the fold, exactly as the real pool
+    /// frees suffix pages and later rewrites them.
+    entries: Vec<(Vec<usize>, f64)>,
     acc: f64,
     prefills: usize,
     steps: usize,
 }
 
 impl MockKv {
-    fn fold(&mut self, h: &Tensor, lens: &[usize]) {
+    fn fold_value(h: &Tensor, lens: &[usize]) -> f64 {
         // order-stable f64 arithmetic: two runs folding the same inputs
         // in the same order land on bitwise-equal accumulators
         let mut s = 0.0f64;
@@ -50,7 +57,41 @@ impl MockKv {
         for &l in lens {
             s += l as f64 * 0.001;
         }
+        s
+    }
+
+    fn recompute(&mut self) {
+        self.acc = self.entries.iter().fold(0.0, |a, (_, s)| a * 0.9990234375 + s);
+    }
+
+    fn fold(&mut self, h: &Tensor, lens: &[usize]) {
+        let s = Self::fold_value(h, lens);
+        self.entries.push((lens.to_vec(), s));
         self.acc = self.acc * 0.9990234375 + s; // exact in binary fp
+    }
+
+    /// The server-side implicit-rollback rule (wire v8): a step that
+    /// declares cache lens at or below an already-folded step's lens
+    /// discards that speculative suffix first. Prefill entries (empty
+    /// lens) never roll back. Plain sequential traffic declares strictly
+    /// increasing lens, so this is a no-op for it.
+    fn rollback_to(&mut self, lens: &[usize]) {
+        let mut changed = false;
+        while let Some((el, _)) = self.entries.last() {
+            if !el.is_empty()
+                && el.len() == lens.len()
+                && el.iter().zip(lens).all(|(a, b)| a >= b)
+            {
+                self.entries.pop();
+                self.steps = self.steps.saturating_sub(1);
+                changed = true;
+            } else {
+                break;
+            }
+        }
+        if changed {
+            self.recompute();
+        }
     }
 }
 
@@ -208,6 +249,9 @@ impl MockChain {
             .sessions
             .get_mut(&session)
             .ok_or_else(|| Error::NotFound(format!("session {session}")))?;
+        if !is_prefill {
+            kv.rollback_to(lens);
+        }
         kv.fold(h, lens);
         let gather_us = us(t_gather.elapsed());
         let t_exec = Instant::now();
@@ -528,6 +572,18 @@ impl<C: FaultInjectable> ChainClient for FaultyClient<C> {
         // would — scripted kills fire identically with tracing on
         self.before_step();
         self.inner.step_traced(server, session, row_lens, hidden, ctx)
+    }
+    fn propose_verify(
+        &self,
+        server: NodeId,
+        session: u64,
+        base_lens: &[usize],
+        hidden: &Tensor,
+    ) -> Result<Tensor> {
+        // one verify round = one wire call = one fault ordinal, so
+        // scripts can kill a server exactly mid-round
+        self.before_step();
+        self.inner.propose_verify(server, session, base_lens, hidden)
     }
     fn close_session(&self, server: NodeId, session: u64) {
         self.inner.close_session(server, session)

@@ -28,6 +28,7 @@ use crate::config::Rng;
 use crate::coordinator::balancer::{self, BlockCoverage};
 use crate::coordinator::routing::{self, ChainHop, RouteQuery, ServerView};
 use crate::dht::NodeId;
+use crate::draft::MAX_SPEC_K;
 use crate::quant;
 
 /// A server in the simulated swarm.
@@ -115,6 +116,29 @@ pub struct ForwardReport {
     pub tokens: usize,
     pub wall_s: f64,
     pub tokens_per_s: f64,
+}
+
+/// Result of a speculative-decoding workload
+/// ([`SwarmSim::run_inference_speculative`]) — the numbers the
+/// spec-decode gate tracks in `BENCH_ragged.json`.
+#[derive(Debug, Clone)]
+pub struct SpecReport {
+    /// Committed tokens (always equals the requested `n_steps`).
+    pub tokens: usize,
+    /// `ProposeVerify` rounds the client issued.
+    pub rounds: usize,
+    pub wall_s: f64,
+    /// Steady-state committed tokens/s (prefill excluded) — compare
+    /// against [`InferenceReport::steps_per_s`] from the same swarm.
+    pub tokens_per_s: f64,
+    /// Mean committed tokens per round; 1.0 when every draft misses.
+    pub tokens_per_round: f64,
+    /// Measured acceptance: accepted drafts / proposed drafts. Lower
+    /// than the per-draft hit probability because a round stops
+    /// evaluating at its first miss (the tail drafts count as proposed
+    /// but can never be accepted).
+    pub accept_rate: f64,
+    pub chain_len: usize,
 }
 
 /// Fraction of the full prefill compute a warm-template prefill costs
@@ -570,6 +594,119 @@ impl SwarmSim {
         })
     }
 
+    /// Single-client speculative decoding (wire v8): each round ships
+    /// one anchor + up to `k` draft tokens down the chain in ONE
+    /// `ProposeVerify` message, the servers verify the m = q+1
+    /// positions in a fused pass, and the client keeps the leading run
+    /// of drafts that match the model — each draft hits independently
+    /// with probability `hit_rate` (drawn from the sim's seeded RNG, so
+    /// a given seed replays exactly).
+    ///
+    /// Cost model per round, mirroring the real execution path:
+    /// - hidden-state message grows ×m (one extra token per draft);
+    /// - per-hop verify compute is a batch-m decode pass — decode is
+    ///   memory-bound, the weight stream is shared across the m
+    ///   positions exactly as across fused batch rows — plus the
+    ///   per-position KV read;
+    /// - the client pays its embed+LM-head overhead once per *sampled*
+    ///   position (= committed tokens), identical per token to the
+    ///   sequential path.
+    ///
+    /// The win is paying the chain's round-trip latency once per ROUND
+    /// instead of once per TOKEN — exactly the latency-dominated decode
+    /// regime of Table 3's bottom rows. At `hit_rate` 0 speculation is
+    /// slightly *slower* than sequential decode (same round-trips,
+    /// fatter messages): the gate only clears when drafts actually hit.
+    pub fn run_inference_speculative(
+        &mut self,
+        prefix_len: usize,
+        n_steps: usize,
+        k: usize,
+        hit_rate: f64,
+    ) -> Option<SpecReport> {
+        let chain = self.route(1)?;
+        for s in &mut self.servers {
+            s.busy_until = 0.0;
+            s.batch_width_now = 0;
+            s.batch_class = None;
+        }
+        self.group_busy.clear();
+        self.group_claims.clear();
+        let (prefill_done, mut t) = self.run_inference_from(&chain, 0.0, prefix_len, 0, 1);
+        let msg = step_msg_bytes(&self.profile, 1);
+        let hidden = self.profile.hidden;
+        let mut produced = 0usize;
+        let mut rounds = 0usize;
+        let mut proposed = 0usize;
+        let mut accepted = 0usize;
+        while produced < n_steps {
+            let remaining = n_steps - produced;
+            // mirror the client's draft budget: never draft past the
+            // generation limit, never exceed the wire cap
+            let q = k.min(MAX_SPEC_K - 1).min(remaining.saturating_sub(1));
+            let m = q + 1;
+            for hop in &chain {
+                let sid = hop.server;
+                let (net_msg, compute) = {
+                    let s = self.servers.iter().find(|s| s.id == sid).unwrap();
+                    let net = s.net(&self.profile.default_net);
+                    let d = &s.spec.device;
+                    let n = hop.end - hop.start;
+                    // per-position KV read at the depth each candidate
+                    // actually occupies
+                    let mut kv_t = 0.0;
+                    for i in 0..m {
+                        let kv_bytes =
+                            (prefix_len + produced + i) as f64 * 4.0 * hidden as f64;
+                        kv_t += n as f64 * kv_bytes / d.mem_bw;
+                    }
+                    (
+                        net.message_s(msg * m as u64),
+                        d.decode_time(n, self.profile.bytes_per_block, m) + kv_t,
+                    )
+                };
+                let j = self.jitter(net_msg);
+                t += net_msg + j;
+                t = self.occupy(sid, t, compute, 0, None);
+            }
+            // return leg carries all m output positions
+            let last = chain.last().unwrap();
+            let net = {
+                let s = self.servers.iter().find(|s| s.id == last.server).unwrap();
+                s.net(&self.profile.default_net).message_s(msg * m as u64)
+            };
+            t += net;
+            // client samples positions in order until the first miss
+            // (or until every draft hit + the bonus position)
+            let mut committed = 1usize;
+            for _ in 0..q {
+                if self.rng.f64() < hit_rate {
+                    committed += 1;
+                } else {
+                    break;
+                }
+            }
+            t += self.profile.client.step_overhead_s * committed as f64;
+            proposed += q;
+            accepted += committed - 1;
+            produced += committed;
+            rounds += 1;
+        }
+        Some(SpecReport {
+            tokens: produced,
+            rounds,
+            wall_s: t,
+            tokens_per_s: produced as f64 / (t - prefill_done),
+            tokens_per_round: produced as f64 / rounds.max(1) as f64,
+            accept_rate: if proposed == 0 {
+                0.0
+            } else {
+                accepted as f64 / proposed as f64
+            },
+            chain_len: chain.len(),
+        })
+    }
+
     /// `n_clients` concurrent sequential-inference clients sharing the
     /// swarm (the §3.3 multi-client experiment), each with a distinct
     /// prompt. Delegates to [`Self::run_inference_concurrent_mix`] with
@@ -1014,6 +1151,63 @@ mod tests {
         let serial = s.run_inference_ragged_mix(&lens, 8).unwrap();
         assert_eq!(serial.decode_joins, 0);
         assert_eq!(serial.occupancy, 0.0);
+    }
+
+    #[test]
+    fn speculative_decode_doubles_throughput_on_slow_links() {
+        // the PR's acceptance gate at sim scale: k=6 drafts with a 0.6
+        // per-draft hit rate must at least double committed tokens/s on
+        // the high-latency swarm, where round-trips dominate decode
+        // (Table 3 bottom row) — the regime speculation targets.
+        let mut s = sim(SwarmPreset::TwelveVirtual, NetworkProfile::MBIT100_100MS);
+        let base = s.run_inference(128, 64, 1).unwrap().steps_per_s;
+        let mut s = sim(SwarmPreset::TwelveVirtual, NetworkProfile::MBIT100_100MS);
+        let spec = s.run_inference_speculative(128, 1024, 6, 0.6).unwrap();
+        assert_eq!(spec.tokens, 1024, "must commit exactly n_steps");
+        assert!(spec.rounds < 1024, "rounds {} must beat one-per-token", spec.rounds);
+        assert!(
+            (1.8..3.0).contains(&spec.tokens_per_round),
+            "tokens/round {} off the k=6 p=0.6 expectation (~2.4)",
+            spec.tokens_per_round
+        );
+        assert!(
+            spec.tokens_per_s >= 2.0 * base,
+            "speculation must double decode: {} vs sequential {}",
+            spec.tokens_per_s,
+            base
+        );
+        // measured acceptance < per-draft hit rate (rounds stop at the
+        // first miss, so tail drafts are proposed but never accepted)
+        assert!(spec.accept_rate > 0.0 && spec.accept_rate < 0.6, "{}", spec.accept_rate);
+    }
+
+    #[test]
+    fn speculative_decode_degrades_gracefully_with_hit_rate() {
+        let run = |hit: f64| {
+            let mut s = sim(SwarmPreset::TwelveVirtual, NetworkProfile::MBIT100_100MS);
+            s.run_inference_speculative(128, 256, 6, hit).unwrap()
+        };
+        let zero = run(0.0);
+        let mid = run(0.6);
+        let high = run(0.9);
+        // all-miss: one committed token per round, no drafts accepted
+        assert_eq!(zero.tokens_per_round, 1.0);
+        assert_eq!(zero.accept_rate, 0.0);
+        assert_eq!(zero.rounds, 256);
+        // throughput rises monotonically with the hit rate
+        assert!(mid.tokens_per_s > 1.5 * zero.tokens_per_s);
+        assert!(high.tokens_per_s > mid.tokens_per_s);
+        // at zero acceptance speculation must NOT look faster than the
+        // sequential path (it ships fatter messages for nothing)
+        let mut s = sim(SwarmPreset::TwelveVirtual, NetworkProfile::MBIT100_100MS);
+        let base = s.run_inference(128, 64, 1).unwrap().steps_per_s;
+        assert!(zero.tokens_per_s <= base * 1.02, "{} vs {}", zero.tokens_per_s, base);
+        // k = 0 degenerates to plain sequential stepping
+        let mut s = sim(SwarmPreset::TwelveVirtual, NetworkProfile::MBIT100_100MS);
+        let k0 = s.run_inference_speculative(128, 32, 0, 0.9).unwrap();
+        assert_eq!(k0.rounds, 32);
+        assert_eq!(k0.tokens_per_round, 1.0);
+        assert_eq!(k0.accept_rate, 0.0);
     }
 
     #[test]

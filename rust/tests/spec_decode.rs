@@ -1,0 +1,250 @@
+//! Integration: speculative decoding (wire v8 `ProposeVerify`) — the
+//! accept/rollback loop pinned bitwise against plain per-token decode.
+//!
+//! The mock swarm (`petals::sim::faults`) gives every server a stateful,
+//! ROLLBACKABLE per-session accumulator: a verify round folds one entry
+//! per candidate position, and a later frame that re-declares a depth
+//! triggers the same implicit rollback the real KV pool performs. Any
+//! client-side bookkeeping bug — committing the wrong positions,
+//! replaying speculative (uncommitted) history after a crash, failing to
+//! re-send a rejected suffix — lands on a different accumulator and
+//! visibly different outputs. No artifacts or sockets needed.
+//!
+//! This suite is a named CI gate (`cargo test --test spec_decode` in
+//! ci/check.sh): the bitwise spec-vs-sequential identity must not be
+//! droppable by a test filter.
+
+use petals::coordinator::routing::RouteQuery;
+use petals::coordinator::session::{ChainClient, InferenceSession, PromptShape, SessionConfig};
+use petals::model::tensor::Tensor;
+use petals::sim::faults::{FaultAction, FaultPlan, FaultyClient, MockChain};
+
+const N_BLOCKS: usize = 8;
+const HIDDEN: usize = 4;
+
+fn cfg() -> SessionConfig {
+    SessionConfig {
+        n_blocks: N_BLOCKS,
+        max_new: 32,
+        route: RouteQuery { n_blocks: N_BLOCKS, msg_bytes: 64, ..Default::default() },
+        max_recoveries: 6,
+        prefix_tokens: vec![],
+    }
+}
+
+fn shape() -> PromptShape {
+    PromptShape { batch: 1, prefix_len: 2, prefill_width: 4 }
+}
+
+fn prompt() -> Tensor {
+    Tensor::from_f32(&[1, 4, HIDDEN], &[0.5; 4 * HIDDEN])
+}
+
+/// The i-th decode-step input — shared by the sequential reference and
+/// the speculative runs, so position i always carries the same payload.
+fn step_input(i: usize) -> Tensor {
+    Tensor::from_f32(&[1, 1, HIDDEN], &[i as f32 * 0.25 - 0.1; HIDDEN])
+}
+
+/// The undisturbed per-token reference: plain sequential steps.
+fn baseline(sid: u64, n: usize) -> Vec<Vec<f32>> {
+    let chain = MockChain::new(&[("base-a", 0, 4), ("base-b", 4, 8)]);
+    let mut s = InferenceSession::open(&chain, cfg(), shape(), sid).unwrap();
+    s.prefill(prompt()).unwrap();
+    let outs =
+        (0..n).map(|i| s.step(step_input(i)).unwrap().as_f32().to_vec()).collect();
+    s.close();
+    outs
+}
+
+/// Drive one verify round of `m` positions starting at committed depth
+/// `d`, commit the first `c`, and assert ALL m outputs are bitwise equal
+/// to the reference sequence (every candidate sits at exactly the depth
+/// and history the sequential run would give it — rejection is the
+/// caller's decision, not a correctness event).
+fn verify_round<C: ChainClient>(
+    s: &mut InferenceSession<C>,
+    want: &[Vec<f32>],
+    d: usize,
+    m: usize,
+    c: usize,
+) {
+    let mut payload = Vec::with_capacity(m * HIDDEN);
+    for j in 0..m {
+        payload.extend_from_slice(step_input(d + j).as_f32());
+    }
+    let out = s.propose_verify(Tensor::from_f32(&[1, m, HIDDEN], &payload)).unwrap();
+    assert_eq!(out.shape, vec![1, m, HIDDEN]);
+    let of = out.as_f32();
+    for j in 0..m {
+        assert_eq!(
+            &of[j * HIDDEN..(j + 1) * HIDDEN],
+            want[d + j].as_slice(),
+            "round at depth {d}: position {j} diverged from the sequential reference"
+        );
+    }
+    s.commit_verify(c).unwrap();
+}
+
+/// Mixed acceptance patterns in one generation: full acceptance (with
+/// the bonus token), all-rejected, k=0 (a bare anchor), and partial
+/// commits — every committed position bitwise equal to sequential
+/// decode, with plain steps interleaved after the speculative phase.
+#[test]
+fn spec_rounds_match_sequential_bitwise_under_mixed_acceptance() {
+    let sid = 21;
+    let want = baseline(sid, 11);
+    let chain = MockChain::new(&[("a", 0, 4), ("b", 4, 8)]);
+    let mut s = InferenceSession::open(&chain, cfg(), shape(), sid).unwrap();
+    s.prefill(prompt()).unwrap();
+    // (m, committed): all-accepted, all-rejected, k=0, partial, full
+    let rounds = [(3usize, 3usize), (4, 1), (1, 1), (4, 2), (2, 2)];
+    let mut d = 0;
+    for (m, c) in rounds {
+        verify_round(&mut s, &want, d, m, c);
+        d += c;
+    }
+    assert_eq!(d, 9);
+    // plain per-token steps continue seamlessly after speculation —
+    // the servers shed the last round's rejected suffix implicitly
+    for i in d..11 {
+        let out = s.step(step_input(i)).unwrap();
+        assert_eq!(out.as_f32(), want[i].as_slice(), "post-spec step {i} diverged");
+    }
+    s.close();
+}
+
+/// Exhaustive single-round property: every (m, commit) pattern up to
+/// m=4, each followed by plain steps to depth 6, matches the sequential
+/// reference bitwise — including re-sending positions the servers
+/// already scored once (the implicit-rollback path).
+#[test]
+fn every_commit_pattern_continues_bitwise() {
+    let sid = 22;
+    let want = baseline(sid, 6);
+    for m in 1..=4usize {
+        for c in 1..=m {
+            let chain = MockChain::new(&[("a", 0, 4), ("b", 4, 8)]);
+            let mut s = InferenceSession::open(&chain, cfg(), shape(), sid).unwrap();
+            s.prefill(prompt()).unwrap();
+            verify_round(&mut s, &want, 0, m, c);
+            for i in c..6 {
+                let out = s.step(step_input(i)).unwrap();
+                assert_eq!(
+                    out.as_f32(),
+                    want[i].as_slice(),
+                    "pattern m={m} c={c}: step {i} diverged"
+                );
+            }
+            s.close();
+        }
+    }
+}
+
+/// Worst-case drafts: every round rejects all candidates, committing
+/// only the anchor. Each depth is scored up to twice (speculatively,
+/// then for real) and the sequence still matches sequential decode.
+#[test]
+fn all_rejected_rounds_match_sequential() {
+    let sid = 23;
+    let want = baseline(sid, 6);
+    let chain = MockChain::new(&[("a", 0, 4), ("b", 4, 8)]);
+    let mut s = InferenceSession::open(&chain, cfg(), shape(), sid).unwrap();
+    s.prefill(prompt()).unwrap();
+    for d in 0..6 {
+        let m = 4.min(6 - d);
+        verify_round(&mut s, &want, d, m, 1);
+    }
+    s.close();
+}
+
+/// Commit bookkeeping rejects nonsense instead of corrupting history.
+#[test]
+fn commit_verify_validates_its_round() {
+    let chain = MockChain::new(&[("a", 0, 4), ("b", 4, 8)]);
+    let mut s = InferenceSession::open(&chain, cfg(), shape(), 24).unwrap();
+    s.prefill(prompt()).unwrap();
+    // no round in flight
+    assert!(s.commit_verify(1).is_err());
+    let mut payload = Vec::new();
+    for j in 0..3 {
+        payload.extend_from_slice(step_input(j).as_f32());
+    }
+    s.propose_verify(Tensor::from_f32(&[1, 3, HIDDEN], &payload)).unwrap();
+    assert!(s.commit_verify(0).is_err(), "zero commits is a protocol error");
+    assert!(s.commit_verify(4).is_err(), "cannot commit more than m positions");
+    s.commit_verify(3).unwrap();
+    assert!(s.commit_verify(1).is_err(), "a round commits exactly once");
+    // shape guards on the round itself
+    assert!(s.propose_verify(Tensor::from_f32(&[1, HIDDEN], &[0.0; HIDDEN])).is_err());
+    assert!(s
+        .propose_verify(Tensor::from_f32(&[2, 1, HIDDEN], &[0.0; 2 * HIDDEN]))
+        .is_err());
+    s.close();
+}
+
+/// Servers killed mid-verify-round: one replica of each span dies at a
+/// different round boundary (one mid-round, between the two hops), and
+/// replay recovery — which replays only COMMITTED per-token history —
+/// rebuilds state that keeps every later round bitwise-identical.
+#[test]
+fn mid_verify_kill_recovers_bitwise() {
+    let sid = 25;
+    let want = baseline(sid, 10);
+    let chain = MockChain::new(&[("a", 0, 4), ("a2", 0, 4), ("b", 4, 8), ("b2", 4, 8)]);
+    let faulty = FaultyClient::new(chain, vec![]);
+    let mut s = InferenceSession::open(&faulty, cfg(), shape(), sid).unwrap();
+    let (hop0, hop1) = (s.chain()[0].server, s.chain()[1].server);
+    // each verify round consumes one fault ordinal per hop: without
+    // faults round r is ordinals (2r, 2r+1). Ordinal 3 kills the second
+    // hop MID-round (after hop 0 folded the round's candidates); its
+    // recovery replays hop 1's two committed frames (ordinals 4-5, the
+    // replay also rides this client) and re-sends the round (6), so
+    // ordinal 7 lands on round 2's FIRST hop — killing it right at a
+    // round boundary exercises the other recovery shape.
+    faulty.script(vec![
+        FaultPlan { at_step_call: 3, action: FaultAction::Kill(hop1) },
+        FaultPlan { at_step_call: 7, action: FaultAction::Kill(hop0) },
+    ]);
+    s.prefill(prompt()).unwrap();
+    let mut d = 0;
+    while d < 10 {
+        let m = 3.min(10 - d);
+        verify_round(&mut s, &want, d, m, 2.min(m));
+        d += 2.min(m);
+    }
+    assert_eq!(s.recoveries(), 2, "both scripted kills must have fired and recovered");
+    assert_eq!(faulty.pending_faults(), 0, "the full fault script must have run");
+    s.close();
+}
+
+/// Client crash with a verify round in flight: the snapshot carries only
+/// committed history (the uncommitted round vanishes with the client),
+/// and the restored session — whose replay re-opens the server sessions
+/// from that committed history — continues bitwise.
+#[test]
+fn snapshot_mid_round_restores_committed_state_only() {
+    let sid = 26;
+    let want = baseline(sid, 8);
+    let chain = MockChain::new(&[("a", 0, 4), ("b", 4, 8)]);
+    let mut s = InferenceSession::open(&chain, cfg(), shape(), sid).unwrap();
+    s.prefill(prompt()).unwrap();
+    verify_round(&mut s, &want, 0, 3, 3);
+    // a round is proposed but never committed when the client dies
+    let mut payload = Vec::new();
+    for j in 0..3 {
+        payload.extend_from_slice(step_input(3 + j).as_f32());
+    }
+    s.propose_verify(Tensor::from_f32(&[1, 3, HIDDEN], &payload)).unwrap();
+    let state = s.snapshot();
+    drop(s); // crash: no close, no commit
+    let mut s = InferenceSession::restore(&chain, cfg(), state).unwrap();
+    // the in-flight round's 3 tokens were never committed, so decoding
+    // resumes at depth 3 — speculative or plain, both must match
+    verify_round(&mut s, &want, 3, 3, 2);
+    for i in 5..8 {
+        let out = s.step(step_input(i)).unwrap();
+        assert_eq!(out.as_f32(), want[i].as_slice(), "post-restore step {i} diverged");
+    }
+    s.close();
+}
