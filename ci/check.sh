@@ -56,6 +56,11 @@ if [[ "$MODE" == "test-only" ]]; then
     # to per-token decode under every acceptance pattern, and verify
     # rounds must survive mid-round server kills. Pure in-process mocks.
     cargo test -q --test spec_decode
+    step "cargo test --test rebalance (rebalance churn gate)"
+    # named gate: live span moves must lose no sessions and change no
+    # outputs, and the 256-node churn model must show rebalancing
+    # beating static assignment. Deterministic in-process simulation.
+    cargo test -q --test rebalance
     echo
     echo "test-only checks passed"
     exit 0
@@ -101,6 +106,11 @@ step "cargo test --test spec_decode (speculative-decode gate)"
 # named gate (see test-only mode above): bitwise spec-vs-sequential
 # greedy identity + mid-verify fault recovery
 cargo test -q --test spec_decode
+
+step "cargo test --test rebalance (rebalance churn gate)"
+# named gate (see test-only mode above): zero-loss span moves + the
+# rebalancing-beats-static churn bar at 256 nodes
+cargo test -q --test rebalance
 
 echo
 echo "all checks passed"

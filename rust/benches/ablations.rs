@@ -41,6 +41,9 @@ fn random_views(rng: &mut Rng, n_blocks: usize, n_servers: usize) -> Vec<ServerV
                 queue_depth: rng.usize_below(4) as u32,
                 free_ratio: rng.range_f64(0.0, 1.0),
                 prefix_fps: vec![],
+                p50_step_us: 0,
+                measured_step_s: None,
+                measured_age_s: 0.0,
             }
         })
         .collect()

@@ -153,6 +153,31 @@ fn main() -> petals::Result<()> {
         n.shutdown();
     }
 
+    // ---- rebalancing vs static assignment under churn -------------------
+    // the ISSUE-9 trajectory metric: 256 virtual servers, continuous
+    // diurnal churn, identical event schedules in both arms; the
+    // rebalancing arm runs the daemon's planner (one elected mover per
+    // tick, dwell + min-gain hysteresis), the control keeps join-time
+    // spans forever. Deterministic (virtual clock, seeded RNG).
+    let churn_w = petals::sim::dht::ChurnWorkload::default();
+    let churn = petals::sim::dht::run_rebalance_churn(&churn_w);
+    println!(
+        "\nrebalancing churn model ({} servers, {} blocks, {:.0}s horizon):",
+        churn_w.n_servers, churn_w.n_blocks, churn_w.horizon_s
+    );
+    println!(
+        "  static assignment: {:.1} steps/s (dead {:.1}% of horizon)",
+        churn.static_steps_per_s,
+        churn.static_dead_frac * 100.0
+    );
+    println!(
+        "  live rebalancing:  {:.1} steps/s (dead {:.1}%, {} moves) — {:.2}x",
+        churn.rebalance_steps_per_s,
+        churn.rebalance_dead_frac * 100.0,
+        churn.moves,
+        churn.gain
+    );
+
     // ---- trajectory JSON ------------------------------------------------
     let (big_n, big_rpcs, big_lat, big_reconv) = *sim_rows.last().unwrap();
     // `gates` declares which metrics ci/bench_compare.sh enforces, with
@@ -164,11 +189,23 @@ fn main() -> petals::Result<()> {
          \"sim_lookup_rpcs_mean\": {big_rpcs:.2},\n  \"sim_lookup_latency_s\": {big_lat:.3},\n  \
          \"sim_churn_reconverge_s\": {big_reconv:.3},\n  \"tcp_nodes\": {},\n  \
          \"tcp_lookup_ms_mean\": {tcp_lookup_ms:.3},\n  \"tcp_churn_reconverge_ms\": {tcp_reconverge_ms:.1},\n  \
+         \"rebalance_churn_servers\": {},\n  \
+         \"rebalance_steps_per_s_churn\": {:.2},\n  \
+         \"static_steps_per_s_churn\": {:.2},\n  \
+         \"rebalance_moves_churn\": {},\n  \
+         \"static_vs_rebalance_gain\": {:.3},\n  \
          \"gates\": {{\n    \"sim_lookup_rpcs_mean\": {{\"dir\": \"lower\", \"pct\": 25}},\n    \
          \"sim_lookup_latency_s\": {{\"dir\": \"lower\", \"pct\": 25}},\n    \
-         \"tcp_lookup_ms_mean\": {{\"dir\": \"lower\", \"pct\": 200}}\n  }}\n}}\n",
+         \"tcp_lookup_ms_mean\": {{\"dir\": \"lower\", \"pct\": 200}},\n    \
+         \"rebalance_steps_per_s_churn\": {{\"dir\": \"higher\", \"pct\": 25}},\n    \
+         \"static_vs_rebalance_gain\": {{\"dir\": \"higher\", \"pct\": 25}}\n  }}\n}}\n",
         hop_latency_s * 1000.0,
         nodes.len(),
+        churn_w.n_servers,
+        churn.rebalance_steps_per_s,
+        churn.static_steps_per_s,
+        churn.moves,
+        churn.gain,
     );
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_dht.json".into());
     std::fs::write(&out, &json)?;

@@ -110,6 +110,9 @@ fn main() -> petals::Result<()> {
                 queue_depth: 0,
                 free_ratio: 1.0,
                 prefix_fps: vec![],
+                p50_step_us: 0,
+                measured_step_s: None,
+                measured_age_s: 0.0,
             }
         })
         .collect();

@@ -39,12 +39,47 @@ pub struct ServerView {
     /// sticky routing: a server already holding the session's prefix
     /// skips the prefill recompute and charges only marginal KV pages.
     pub prefix_fps: Vec<u64>,
+    /// Announced p50 step latency over the full span, microseconds (v4
+    /// DHT telemetry / `PongV2`); 0 when unknown. When present it is a
+    /// better full-span time estimate than the throughput-derived
+    /// `span_compute_s` — and it is the same number `petals top` shows,
+    /// so routing and the operator dashboard agree.
+    pub p50_step_us: u32,
+    /// Client-side EWMA of *measured* per-hop step seconds
+    /// ([`crate::coordinator::throughput::MeasuredHops`]); `None` until
+    /// this client has stepped through the server.
+    pub measured_step_s: Option<f64>,
+    /// Seconds since the last measurement sample (staleness of
+    /// `measured_step_s`).
+    pub measured_age_s: f64,
 }
 
 impl ServerView {
     /// Predicted time for a message of `bytes` to reach this server.
     fn msg_time(&self, bytes: u64) -> f64 {
         self.latency_s + bytes as f64 * 8.0 / self.bandwidth_bps
+    }
+
+    /// Best estimate of one step's seconds over the full span: the
+    /// client's own measurement when fresh, decaying back to the
+    /// announced value (p50 telemetry, else throughput-derived
+    /// `span_compute_s`) with half-life `half_life_s`. Minimizing the
+    /// per-step sum along a chain is maximizing estimated end-to-end
+    /// tokens/s.
+    pub fn effective_step_s(&self, half_life_s: f64) -> f64 {
+        let announced =
+            if self.p50_step_us > 0 { self.p50_step_us as f64 * 1e-6 } else { self.span_compute_s };
+        match self.measured_step_s {
+            Some(m) => {
+                let w = if half_life_s > 0.0 {
+                    0.5f64.powf(self.measured_age_s.max(0.0) / half_life_s)
+                } else {
+                    0.0
+                };
+                w * m + (1.0 - w) * announced
+            }
+            None => announced,
+        }
     }
 }
 
@@ -73,6 +108,11 @@ pub struct RouteQuery {
     /// Servers with no announcement are penalized uniformly, so relative
     /// ranking among legacy servers is unchanged.
     pub prefix_miss_penalty_s: f64,
+    /// Half-life, seconds, of the decay from a *measured* per-hop step
+    /// time back to the announced one
+    /// ([`ServerView::effective_step_s`]). 0 disables measurements
+    /// entirely (announced values only).
+    pub measured_half_life_s: f64,
 }
 
 impl Default for RouteQuery {
@@ -85,6 +125,7 @@ impl Default for RouteQuery {
             pool_penalty_s: 0.05,
             prefix_fp: None,
             prefix_miss_penalty_s: 0.05,
+            measured_half_life_s: 30.0,
         }
     }
 }
@@ -149,9 +190,12 @@ pub fn find_chain(servers: &[ServerView], q: &RouteQuery) -> Option<(Vec<ChainHo
                     Some(fp) if !s.prefix_fps.contains(&fp) => q.prefix_miss_penalty_s,
                     _ => 0.0,
                 };
-                // compute prorated to the sub-span actually used
+                // compute prorated to the sub-span actually used; the
+                // step-time estimate blends this client's own measured
+                // hop clocks with announced telemetry
                 let frac = (next - block) as f64 / (s.end - s.start) as f64;
-                let cost = p.cost + hop_in + s.span_compute_s * frac + queue + pool + prefix;
+                let step = s.effective_step_s(q.measured_half_life_s);
+                let cost = p.cost + hop_in + step * frac + queue + pool + prefix;
                 let mut hops = p.hops.clone();
                 hops.push((ci, block));
                 let beam = beams.entry(next).or_default();
@@ -240,6 +284,9 @@ mod tests {
             queue_depth: 0,
             free_ratio: 1.0,
             prefix_fps: vec![],
+            p50_step_us: 0,
+            measured_step_s: None,
+            measured_age_s: 0.0,
         }
     }
 
@@ -364,6 +411,60 @@ mod tests {
     }
 
     #[test]
+    fn p50_telemetry_overrides_throughput_estimate() {
+        // same announced span_compute, but the gossiped p50 step latency
+        // (the number `petals top` shows) says "slow" is 10x slower —
+        // routing must consult it and agree with the dashboard
+        let mut slow = sv("slow", 0, 8, 0.01, 0.1);
+        slow.p50_step_us = 1_000_000; // 1 s
+        let mut fast = sv("fast", 0, 8, 0.02, 0.1);
+        fast.p50_step_us = 100_000; // 0.1 s
+        let (hops, _) = find_chain(&[slow, fast], &q(8)).unwrap();
+        assert_eq!(hops[0].server, NodeId::from_name("fast"));
+    }
+
+    #[test]
+    fn fresh_measurement_beats_announced_rate() {
+        // "adv" announces a great rate but this client MEASURED it slow;
+        // "honest" announces slower but measures as announced. With a
+        // fresh measurement the honest server must win; with the
+        // measurement decayed far past its half-life, announced values
+        // take over again and "adv" wins.
+        let mk = |age: f64| {
+            let mut adv = sv("adv", 0, 8, 0.01, 0.05);
+            adv.measured_step_s = Some(0.8);
+            adv.measured_age_s = age;
+            let mut honest = sv("honest", 0, 8, 0.01, 0.2);
+            honest.measured_step_s = Some(0.2);
+            honest.measured_age_s = age;
+            [adv, honest]
+        };
+        let (hops, _) = find_chain(&mk(0.0), &q(8)).unwrap();
+        assert_eq!(hops[0].server, NodeId::from_name("honest"), "fresh measurement must win");
+        let (hops, _) = find_chain(&mk(10_000.0), &q(8)).unwrap();
+        assert_eq!(hops[0].server, NodeId::from_name("adv"), "stale must decay to announced");
+    }
+
+    #[test]
+    fn effective_step_blend_decays_toward_announced() {
+        let mut v = sv("v", 0, 8, 0.01, 0.4);
+        assert!((v.effective_step_s(30.0) - 0.4).abs() < 1e-12, "no data -> span_compute_s");
+        v.p50_step_us = 200_000;
+        assert!((v.effective_step_s(30.0) - 0.2).abs() < 1e-12, "p50 replaces derived estimate");
+        v.measured_step_s = Some(1.0);
+        v.measured_age_s = 0.0;
+        assert!((v.effective_step_s(30.0) - 1.0).abs() < 1e-12, "age 0 -> all measured");
+        v.measured_age_s = 30.0;
+        let half = v.effective_step_s(30.0);
+        assert!((half - 0.6).abs() < 1e-12, "one half-life -> midpoint, got {half}");
+        v.measured_age_s = 1e9;
+        assert!((v.effective_step_s(30.0) - 0.2).abs() < 1e-9, "ancient -> announced");
+        // half-life 0 disables measurements entirely
+        v.measured_age_s = 0.0;
+        assert!((v.effective_step_s(0.0) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
     fn subchain_replaces_failed_span() {
         let servers = [
             sv("a", 0, 3, 0.01, 0.1),
@@ -413,13 +514,24 @@ mod tests {
             for i in 0..1 + rng.usize_below(6) {
                 let start = rng.usize_below(n);
                 let end = (start + 1 + rng.usize_below(n - start)).min(n);
-                servers.push(sv(
+                let mut s = sv(
                     &format!("s{i}"),
                     start,
                     end,
                     rng.range_f64(0.001, 0.1),
                     rng.range_f64(0.01, 0.5),
-                ));
+                );
+                // randomize the telemetry/measurement fields too, so the
+                // brute-force cost model can never drift out of sync
+                // with the beam's on the measured-throughput terms
+                if rng.usize_below(2) == 0 {
+                    s.p50_step_us = 1 + rng.usize_below(400_000) as u32;
+                }
+                if rng.usize_below(2) == 0 {
+                    s.measured_step_s = Some(rng.range_f64(0.01, 0.5));
+                    s.measured_age_s = rng.range_f64(0.0, 120.0);
+                }
+                servers.push(s);
             }
             let mut query = q(n);
             query.beam_width = 64;
@@ -446,7 +558,7 @@ mod tests {
                     let frac = (next - at) as f64 / (s.end - s.start) as f64;
                     let c = cost
                         + s.msg_time(q.msg_bytes)
-                        + s.span_compute_s * frac
+                        + s.effective_step_s(q.measured_half_life_s) * frac
                         + s.queue_depth as f64 * q.queue_penalty_s
                         + (1.0 - s.free_ratio.clamp(0.0, 1.0)) * q.pool_penalty_s
                         + match q.prefix_fp {

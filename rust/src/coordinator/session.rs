@@ -151,6 +151,14 @@ pub trait ChainClient {
     fn resolve_moved(&self, _addr: &str) -> Option<NodeId> {
         None
     }
+    /// Report one *measured* hop: `wall_s` seconds from sending a step
+    /// to receiving its reply from `server`. Sessions call this on every
+    /// successful decode step; transports that keep a measurement
+    /// registry ([`crate::coordinator::throughput::MeasuredHops`])
+    /// override it to feed `ServerView::measured_step_s`, so the next
+    /// `find_chain` scores chains by what this client actually observed.
+    /// Default: no-op (fakes and transports without a registry).
+    fn observe_step(&self, _server: NodeId, _wall_s: f64) {}
     /// Stateless parallel forward over the span (fine-tuning, §2.2).
     fn forward(&self, server: NodeId, hidden: &Tensor) -> Result<Tensor>;
     /// Backward over the span; returns grad wrt the span's input.
@@ -290,6 +298,9 @@ impl<T: ChainClient + ?Sized> ChainClient for &T {
     fn resolve_moved(&self, addr: &str) -> Option<NodeId> {
         (**self).resolve_moved(addr)
     }
+    fn observe_step(&self, server: NodeId, wall_s: f64) {
+        (**self).observe_step(server, wall_s)
+    }
     fn forward(&self, server: NodeId, hidden: &Tensor) -> Result<Tensor> {
         (**self).forward(server, hidden)
     }
@@ -381,6 +392,9 @@ impl<T: ChainClient + ?Sized> ChainClient for std::sync::Arc<T> {
     }
     fn resolve_moved(&self, addr: &str) -> Option<NodeId> {
         (**self).resolve_moved(addr)
+    }
+    fn observe_step(&self, server: NodeId, wall_s: f64) {
+        (**self).observe_step(server, wall_s)
     }
     fn forward(&self, server: NodeId, hidden: &Tensor) -> Result<Tensor> {
         (**self).forward(server, hidden)
@@ -678,7 +692,11 @@ impl<C: ChainClient> InferenceSession<C> {
         let mut hops: Vec<HopTrace> = Vec::new();
         while i < self.chain.len() {
             self.history[i].step_inputs.push((self.row_lens.clone(), h.clone()));
-            let t0 = ctx.map(|_| std::time::Instant::now());
+            // every hop is clocked (not just traced ones): successful
+            // steps feed the transport's measurement registry so routing
+            // learns this client's real per-hop throughput
+            let clock = std::time::Instant::now();
+            let t0 = ctx.map(|_| clock);
             let outcome = match ctx {
                 Some(c) => self.client.step_traced(
                     self.chain[i].server,
@@ -694,6 +712,8 @@ impl<C: ChainClient> InferenceSession<C> {
             };
             match outcome {
                 Ok((next, breakdown)) => {
+                    self.client
+                        .observe_step(self.chain[i].server, clock.elapsed().as_secs_f64());
                     if let Some(t0) = t0 {
                         hops.push(HopTrace {
                             server: self.chain[i].server.short(),
@@ -1234,6 +1254,9 @@ mod tests {
                     queue_depth: 0,
                     free_ratio: 1.0,
                     prefix_fps: vec![],
+                    p50_step_us: 0,
+                    measured_step_s: None,
+                    measured_age_s: 0.0,
                 })
                 .collect()
         }

@@ -8,6 +8,10 @@
 //! hidden states).
 
 use crate::config::{DeviceProfile, NetworkProfile};
+use crate::dht::NodeId;
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
 
 /// Compute-side rate: steps/s for one decode over `n_blocks`.
 pub fn compute_rate(device: &DeviceProfile, n_blocks: usize, bytes_per_block: u64) -> f64 {
@@ -80,6 +84,106 @@ impl MeasuredThroughput {
     }
 }
 
+/// EWMA of *measured* per-hop step latency with a freshness stamp.
+///
+/// Unlike [`MeasuredThroughput`] (a server measuring itself), this is
+/// the CLIENT's view of one remote hop, fed from `InferenceSession`
+/// step clocks. The age lets routing decay stale measurements back
+/// toward announced values (see
+/// [`crate::coordinator::routing::ServerView::effective_step_s`]).
+#[derive(Debug, Clone)]
+pub struct StepEwma {
+    ema_s: f64,
+    samples: u64,
+    last: Instant,
+}
+
+impl Default for StepEwma {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StepEwma {
+    const ALPHA: f64 = 0.2;
+
+    pub fn new() -> Self {
+        StepEwma { ema_s: 0.0, samples: 0, last: Instant::now() }
+    }
+
+    pub fn observe(&mut self, latency_s: f64) {
+        if self.samples == 0 {
+            self.ema_s = latency_s;
+        } else {
+            self.ema_s = Self::ALPHA * latency_s + (1.0 - Self::ALPHA) * self.ema_s;
+        }
+        self.samples += 1;
+        self.last = Instant::now();
+    }
+
+    /// EWMA seconds; `None` until the first observation.
+    pub fn value_s(&self) -> Option<f64> {
+        (self.samples > 0).then_some(self.ema_s)
+    }
+
+    /// Seconds since the last observation (staleness).
+    pub fn age_s(&self) -> f64 {
+        self.last.elapsed().as_secs_f64()
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+}
+
+/// Thread-safe registry of measured per-hop step latencies, keyed by
+/// server id. One per swarm client: `InferenceSession` feeds it through
+/// [`crate::coordinator::session::ChainClient::observe_step`], and
+/// `discover()` stamps the resulting EWMAs onto the `ServerView`s so
+/// `find_chain` can score candidate chains by estimated end-to-end
+/// tokens/s instead of announced capacity alone.
+#[derive(Default)]
+pub struct MeasuredHops {
+    inner: Mutex<HashMap<NodeId, StepEwma>>,
+}
+
+impl MeasuredHops {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe(&self, id: NodeId, latency_s: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.entry(id).or_default().observe(latency_s);
+    }
+
+    /// `(ewma_seconds, age_seconds)` for `id`, if any sample exists.
+    pub fn get(&self, id: NodeId) -> Option<(f64, f64)> {
+        let m = self.inner.lock().unwrap();
+        let e = m.get(&id)?;
+        Some((e.value_s()?, e.age_s()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy this registry's measurements onto `views` (the discover-time
+    /// hook: announced telemetry stays, measurements overlay it).
+    pub fn stamp(&self, views: &mut [crate::coordinator::routing::ServerView]) {
+        for v in views.iter_mut() {
+            if let Some((s, age)) = self.get(v.id) {
+                v.measured_step_s = Some(s);
+                v.measured_age_s = age;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,5 +228,54 @@ mod tests {
             m.observe(0.2);
         }
         assert!((m.rate() - 5.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn step_ewma_seeds_and_converges() {
+        let mut e = StepEwma::new();
+        assert_eq!(e.value_s(), None);
+        e.observe(0.08);
+        // first sample seeds (no cold-start bias)
+        assert!((e.value_s().unwrap() - 0.08).abs() < 1e-12);
+        for _ in 0..100 {
+            e.observe(0.02);
+        }
+        assert!((e.value_s().unwrap() - 0.02).abs() < 1e-3);
+        assert_eq!(e.samples(), 101);
+        assert!(e.age_s() >= 0.0);
+    }
+
+    #[test]
+    fn measured_hops_registry_stamps_views() {
+        use crate::coordinator::routing::ServerView;
+        let hops = MeasuredHops::new();
+        assert!(hops.is_empty());
+        let a = NodeId::from_name("a");
+        let b = NodeId::from_name("b");
+        hops.observe(a, 0.5);
+        hops.observe(a, 0.5);
+        assert_eq!(hops.len(), 1);
+        assert!(hops.get(b).is_none());
+        let (v, age) = hops.get(a).unwrap();
+        assert!((v - 0.5).abs() < 1e-12);
+        assert!(age >= 0.0);
+        let mk = |id: NodeId| ServerView {
+            id,
+            start: 0,
+            end: 4,
+            latency_s: 0.01,
+            bandwidth_bps: 1e9,
+            span_compute_s: 0.1,
+            queue_depth: 0,
+            free_ratio: 1.0,
+            prefix_fps: vec![],
+            p50_step_us: 0,
+            measured_step_s: None,
+            measured_age_s: 0.0,
+        };
+        let mut views = vec![mk(a), mk(b)];
+        hops.stamp(&mut views);
+        assert!((views[0].measured_step_s.unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(views[1].measured_step_s, None);
     }
 }

@@ -230,6 +230,51 @@ impl<'a> BlockDirectory<'a> {
         Ok(stored)
     }
 
+    /// Proactively withdraw the keys a rebalancing server no longer
+    /// covers. After a move, the stale per-block records under
+    /// `old \ new` keys would keep routing clients to the departed span
+    /// until TTL expiry. A short-TTL tombstone cannot win the
+    /// freshest-per-publisher merge (the largest `stored_at + ttl`
+    /// survives), so instead the NEW entry is re-stored under each old
+    /// key at the normal TTL: same publisher + same key *replaces* the
+    /// stale record on every replica, and the decode-time
+    /// [`ServerEntry::covers`] filter hides the entry from that block's
+    /// lookups immediately.
+    pub fn withdraw(&self, entry: &ServerEntry, old: std::ops::Range<u32>, now_ms: u64) {
+        for block in old {
+            if entry.covers(block) {
+                continue; // still served: the ordinary announce owns it
+            }
+            let rec =
+                Record::new(entry.server, entry.encode(), now_ms, self.announce_ttl_ms);
+            iterative_store(self.rpc, &self.seeds, block_key(&self.model, block), rec);
+        }
+    }
+
+    /// Addressed variant of [`Self::withdraw`] — what networked swarms
+    /// use, mirroring [`Self::announce_addressed`]. Returns replicas
+    /// that accepted a replacement record.
+    pub fn withdraw_addressed(
+        &self,
+        addr: &str,
+        entry: &ServerEntry,
+        old: std::ops::Range<u32>,
+        now_ms: u64,
+    ) -> crate::error::Result<usize> {
+        let payload =
+            crate::dht::FsAnnouncement { addr: addr.to_string(), entry: entry.clone() }
+                .encode()?;
+        let mut stored = 0;
+        for block in old {
+            if entry.covers(block) {
+                continue;
+            }
+            let rec = Record::new(entry.server, payload.clone(), now_ms, self.announce_ttl_ms);
+            stored += iterative_store(self.rpc, &self.seeds, block_key(&self.model, block), rec);
+        }
+        Ok(stored)
+    }
+
     /// Live addressed announcements covering `block`, freshest per
     /// publisher. A replica that dropped out of a key's closest set can
     /// serve a pre-rebalance record until its TTL runs out, and the
@@ -454,5 +499,84 @@ mod tests {
         // eventual-consistency window the paper's TTL bounds.
         let at0 = dir.lookup(0);
         assert!(at0.len() <= 1);
+    }
+
+    /// ISSUE 9 satellite: a rebalancing server must not leave clients
+    /// routing to its old span for a whole TTL — `withdraw` replaces the
+    /// stale records under the dropped keys immediately.
+    #[test]
+    fn withdraw_hides_dropped_span_before_ttl() {
+        let mut rng = Rng::new(21);
+        let ids: Vec<NodeId> = (0..30).map(|_| NodeId::random(&mut rng)).collect();
+        let net = TestNet::new(&ids);
+        let dir = BlockDirectory::new(&net, ids[..3].to_vec(), "bloom");
+        let mk = |start: u32, end: u32| ServerEntry {
+            server: ids[0],
+            start,
+            end,
+            throughput: 1.0,
+            free_pages: 0,
+            total_pages: 0,
+            batch_width: 0,
+            prefix_fps: vec![],
+            p50_step_us: 0,
+            queue_depth: 0,
+            sessions_active: 0,
+        };
+        dir.announce(&mk(0, 4), 0);
+        assert_eq!(dir.lookup(0).len(), 1, "pre-move record resolvable");
+        // the server moves 0..4 -> 4..8 and withdraws the dropped keys;
+        // no TTL has to pass for the old span to stop resolving
+        let moved = mk(4, 8);
+        dir.announce(&moved, 1_000);
+        dir.withdraw(&moved, 0..4, 1_000);
+        for b in 0..4 {
+            assert!(dir.lookup(b).is_empty(), "block {b} must stop resolving immediately");
+        }
+        for b in 4..8 {
+            assert_eq!(dir.lookup(b), vec![moved.clone()], "block {b} serves the new span");
+        }
+    }
+
+    #[test]
+    fn withdraw_addressed_hides_dropped_span_and_beats_tombstone_race() {
+        let mut rng = Rng::new(22);
+        let ids: Vec<NodeId> = (0..30).map(|_| NodeId::random(&mut rng)).collect();
+        let net = TestNet::new(&ids);
+        let dir = BlockDirectory::new(&net, ids[..3].to_vec(), "bloom");
+        let mk = |start: u32, end: u32| ServerEntry {
+            server: ids[0],
+            start,
+            end,
+            throughput: 2.0,
+            free_pages: 4,
+            total_pages: 8,
+            batch_width: 2,
+            prefix_fps: vec![],
+            p50_step_us: 500,
+            queue_depth: 0,
+            sessions_active: 1,
+        };
+        dir.announce_addressed("127.0.0.1:5001", &mk(0, 4), 0).unwrap();
+        assert_eq!(dir.lookup_addressed(1).len(), 1);
+        let moved = mk(2, 6);
+        dir.announce_addressed("127.0.0.1:5001", &moved, 1_000).unwrap();
+        let stored = dir.withdraw_addressed("127.0.0.1:5001", &moved, 0..4, 1_000).unwrap();
+        assert!(stored > 0, "withdrawal must land on replicas");
+        // dropped blocks (0,1) stop resolving at once; kept blocks serve
+        // the new span; and because the withdrawal is a normal-TTL
+        // replacement (not a short-TTL tombstone), it cannot lose the
+        // freshest-per-publisher merge to the older record
+        assert!(dir.lookup_addressed(0).is_empty());
+        assert!(dir.lookup_addressed(1).is_empty());
+        for b in 2..6 {
+            let got = dir.lookup_addressed(b);
+            assert_eq!(got.len(), 1, "block {b}");
+            assert_eq!(got[0].entry, moved);
+        }
+        // swarm discovery sees exactly one server, on the new span
+        let all = dir.discover_addressed(8);
+        assert_eq!(all.len(), 1);
+        assert_eq!((all[0].entry.start, all[0].entry.end), (2, 6));
     }
 }

@@ -515,6 +515,9 @@ mod tests {
                     queue_depth: 0,
                     free_ratio: 1.0,
                     prefix_fps: vec![],
+                    p50_step_us: 0,
+                    measured_step_s: None,
+                    measured_age_s: 0.0,
                 }]
             }
             fn open_session(&self, _: NodeId, _: u64, _: usize, _: usize, _: usize) -> Result<()> {

@@ -32,6 +32,12 @@
 //!   the session's own history by default, trait-extensible to a small
 //!   local model; drafts are verified by one fused `ProposeVerify`
 //!   chain round instead of k per-token round-trips.
+//! - [`rebalance`] — live block rebalancing: a server-side daemon that
+//!   re-runs the greedy span selection against observed coverage (with
+//!   hysteresis and per-identity jitter), then moves the server — a
+//!   same-identity replacement node loads the new span, live sessions
+//!   drain over wire-v6 migration, and discovery records are re-announced
+//!   with proactive withdrawal of dropped block keys.
 //! - [`net`] — transports: a deterministic bandwidth+latency simulator
 //!   (used by the paper-table benches) and a real framed-TCP transport
 //!   (used by the end-to-end examples).
@@ -89,6 +95,7 @@ pub mod model;
 pub mod net;
 pub mod offload;
 pub mod quant;
+pub mod rebalance;
 pub mod runtime;
 pub mod server;
 pub mod sim;

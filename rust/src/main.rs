@@ -9,6 +9,7 @@
 //!                 [--announce-dir DIR] [--announce-every SECS] [--session-ttl SECS]
 //!                 [--dht-listen ADDR] [--dht-advertise HOST:PORT] [--bootstrap ADDR,...]
 //!                 [--metrics-listen ADDR] [--drain SECS]
+//!                 [--rebalance] [--rebalance-interval SECS] [--rebalance-min-gain RATIO]
 //! petals generate --artifacts DIR (--peers n1=addr1,... | --announce-dir DIR
 //!                 | --bootstrap ADDR,...) [--model NAME]
 //!                 --prompt 1,2,3 [--max-new N] [--topk K | --topp P] [--stream]
@@ -45,6 +46,16 @@
 //!   When binding wildcards (`0.0.0.0:PORT`), set `--advertise` /
 //!   `--dht-advertise` to the externally dialable `host:port` — those
 //!   are the addresses peers and clients are told to dial back.
+//!
+//! `--rebalance` starts the live rebalancing daemon
+//! ([`petals::rebalance`]): the server periodically (and on observed
+//! churn) re-plans the swarm's block assignment and, when it is the
+//! elected mover, relocates to the better span — live sessions drain
+//! over wire-v6 migration, the old listener keeps answering `moved:`
+//! bounces, and the new span is re-announced under the same identity
+//! with dropped block keys proactively withdrawn. Requires
+//! `--announce-dir` or `--dht-listen` (the daemon needs a discovery
+//! transport). See `docs/REBALANCING.md`.
 
 use petals::config::profiles::{NetworkProfile, SwarmPreset};
 use petals::coordinator::client::{LocalHead, Sampler, SwarmGenerator};
@@ -168,7 +179,7 @@ fn cmd_server(flags: &HashMap<String, String>) -> i32 {
             if ttl == 0 { None } else { Some(std::time::Duration::from_secs(ttl)) };
     }
     let node = match ServerNode::start_with(
-        &name, &home, rt, start..end, precision, compress, opts,
+        &name, &home, rt.clone(), start..end, precision, compress, opts.clone(),
     ) {
         Ok(n) => n,
         Err(e) => return fail(&e.to_string()),
@@ -178,10 +189,21 @@ fn cmd_server(flags: &HashMap<String, String>) -> i32 {
         Err(e) => return fail(&e.to_string()),
     };
     println!("petals server '{name}' hosting blocks {start}..{end} ({precision:?}) on {}", handle.addr);
+    // which node currently IS this server: announce loops, the metrics
+    // exposition and --drain all read the slot, so a live rebalance move
+    // (which swaps in a same-identity replacement on a new span/port)
+    // is picked up everywhere on the next beat
+    let slot = petals::rebalance::ServingSlot::new(handle.node.clone(), handle.addr.clone());
     // Prometheus text exposition on a separate listener, so scrapes
     // never contend with the binary wire socket
     if let Some(maddr) = flags.get("metrics-listen") {
-        match petals::server::service::serve_metrics(handle.node.clone(), maddr) {
+        let mslot = slot.clone();
+        let mname = format!("petals-metrics-{}", handle.node.id.short());
+        match petals::server::service::serve_metrics_with(
+            move || mslot.node().metrics.prometheus(),
+            &mname,
+            maddr,
+        ) {
             Ok(mh) => println!("prometheus exposition on http://{}/metrics", mh.addr),
             Err(e) => return fail(&e.to_string()),
         }
@@ -207,11 +229,10 @@ fn cmd_server(flags: &HashMap<String, String>) -> i32 {
                 fsdir.ttl
             );
         }
-        let node = handle.node.clone();
-        let addr = handle.addr.clone();
+        let aslot = slot.clone();
         println!("announcing to {dir} every {every}s");
         std::thread::spawn(move || loop {
-            if let Err(e) = fsdir.announce(&addr, &node.dht_entry()) {
+            if let Err(e) = fsdir.announce(&aslot.addr(), &aslot.entry()) {
                 eprintln!("announce failed: {e}");
             }
             std::thread::sleep(std::time::Duration::from_secs(every));
@@ -226,6 +247,7 @@ fn cmd_server(flags: &HashMap<String, String>) -> i32 {
     // join through --bootstrap, and republish the addressed entry under
     // every covered block key (the TTL republish loop — records age out
     // ~30s after this server dies)
+    let mut dht_for_rebalance: Option<(petals::dht::DhtNode, String, u64)> = None;
     if let Some(dht_listen) = flags.get("dht-listen") {
         let bootstrap = parse_bootstrap(flags);
         let model = model_name(flags);
@@ -254,10 +276,15 @@ fn cmd_server(flags: &HashMap<String, String>) -> i32 {
             dht.id().short(),
             dht.addr()
         );
-        let node = handle.node.clone();
+        let aslot = slot.clone();
         // the *service* address published in announcements has the same
-        // wildcard constraint; --advertise overrides what clients dial
-        let addr = flags.get("advertise").cloned().unwrap_or_else(|| handle.addr.clone());
+        // wildcard constraint; --advertise overrides what clients dial —
+        // but only while the original listener is the one serving: after
+        // a rebalance move the replacement binds a fresh ephemeral port
+        // that the static override cannot know about
+        let advertise = flags.get("advertise").cloned();
+        let home_addr = handle.addr.clone();
+        let addr = advertise.clone().unwrap_or_else(|| handle.addr.clone());
         if wildcard(&addr) {
             eprintln!(
                 "warning: announcing service address {addr}; set --advertise host:port \
@@ -269,6 +296,7 @@ fn cmd_server(flags: &HashMap<String, String>) -> i32 {
         // default 30s TTL but stretch it to cover ~3 missed beats of a
         // slow interval
         let ttl_ms = 30_000u64.max(every.saturating_mul(3_000));
+        dht_for_rebalance = Some((dht.clone(), model.clone(), ttl_ms));
         std::thread::spawn(move || loop {
             // self-heal a failed or lost join: a bootstrap peer that was
             // briefly down at startup must not leave this server
@@ -285,7 +313,12 @@ fn cmd_server(flags: &HashMap<String, String>) -> i32 {
             // its records locally and is immediately resolvable
             let mut dir = petals::dht::BlockDirectory::new(&rpc, dht.seeds(), &model);
             dir.announce_ttl_ms = ttl_ms;
-            match dir.announce_addressed(&addr, &node.dht_entry(), petals::dht::now_ms()) {
+            let cur = aslot.addr();
+            let addr = match &advertise {
+                Some(a) if cur == home_addr => a.clone(),
+                _ => cur,
+            };
+            match dir.announce_addressed(&addr, &aslot.entry(), petals::dht::now_ms()) {
                 Err(e) => eprintln!("dht announce failed: {e}"),
                 Ok(0) => eprintln!(
                     "dht announce stored 0 replicas — this server is currently \
@@ -296,6 +329,83 @@ fn cmd_server(flags: &HashMap<String, String>) -> i32 {
             std::thread::sleep(std::time::Duration::from_secs(every));
         });
     }
+    // --rebalance: background daemon that re-runs the greedy span
+    // selection against discovered coverage and, when THIS server is the
+    // elected mover, executes the move live (see petals::rebalance and
+    // docs/REBALANCING.md). Needs a discovery transport to see the swarm.
+    let mut _rebalance_daemon = None;
+    if flags.contains_key("rebalance") {
+        let interval = flags
+            .get("rebalance-interval")
+            .and_then(|s| s.parse::<u64>().ok())
+            .unwrap_or(60)
+            .max(1);
+        let min_gain = flags
+            .get("rebalance-min-gain")
+            .and_then(|s| s.parse::<f64>().ok())
+            .unwrap_or(0.05);
+        let cfg = petals::rebalance::RebalanceConfig {
+            interval: std::time::Duration::from_secs(interval),
+            min_gain_ratio: min_gain,
+            // a server that just moved sits out two full cycles: moves
+            // must pay for themselves before the next one is considered
+            min_dwell: std::time::Duration::from_secs(interval.saturating_mul(2)),
+            ..Default::default()
+        };
+        let disc: Option<Box<dyn petals::rebalance::Discovery>> =
+            if let Some((dht, model, ttl_ms)) = dht_for_rebalance {
+                Some(Box::new(petals::rebalance::DhtDiscovery {
+                    dht,
+                    model,
+                    n_blocks: n_layers as u32,
+                    announce_ttl_ms: ttl_ms,
+                }))
+            } else if let Some(dir) = flags.get("announce-dir") {
+                match petals::dht::FsDirectory::open(dir) {
+                    Ok(d) => Some(Box::new(d)),
+                    Err(e) => return fail(&e.to_string()),
+                }
+            } else {
+                None
+            };
+        match disc {
+            Some(disc) => {
+                let listen_host = listen
+                    .rsplit_once(':')
+                    .map(|(h, _)| h.to_string())
+                    .unwrap_or_else(|| "127.0.0.1".into());
+                let ctx = petals::rebalance::MoveContext {
+                    home: match ModelHome::open(artifacts_dir(flags)) {
+                        Ok(h) => h,
+                        Err(e) => return fail(&e.to_string()),
+                    },
+                    runtime: rt.clone(),
+                    opts: opts.clone(),
+                    listen_host,
+                };
+                match petals::rebalance::RebalanceDaemon::spawn(
+                    slot.clone(),
+                    ctx,
+                    disc,
+                    cfg,
+                    n_layers,
+                ) {
+                    Ok(d) => {
+                        println!(
+                            "rebalance daemon on: evaluating every {interval}s (+jitter), \
+                             min gain {min_gain}"
+                        );
+                        _rebalance_daemon = Some(d);
+                    }
+                    Err(e) => return fail(&e.to_string()),
+                }
+            }
+            None => eprintln!(
+                "warning: --rebalance needs --announce-dir or --dht-listen to see the \
+                 swarm — ignored"
+            ),
+        }
+    }
     // --drain SECS: serve for SECS, then stop admitting sessions, hand
     // every live session to a covering peer over wire-v6 live migration
     // (clients follow the moved redirect — no replay), and exit. The
@@ -303,16 +413,19 @@ fn cmd_server(flags: &HashMap<String, String>) -> i32 {
     if let Some(secs) = flags.get("drain").and_then(|s| s.parse::<u64>().ok()) {
         println!("serving; will drain and exit after {secs}s");
         std::thread::sleep(std::time::Duration::from_secs(secs));
+        // read the node through the slot: a rebalance move may have
+        // swapped in a replacement since startup
+        let node = slot.node();
         match connect_swarm(flags, &home) {
             Ok(swarm) => {
-                let n = handle.drain(&swarm);
+                let n = petals::server::service::drain_node(&node, &swarm);
                 println!("drain complete: {n} session(s) migrated; exiting");
             }
             Err(m) => {
                 // no discovery configured: still stop admitting, but
                 // there is nobody to hand the sessions to
-                handle.node.set_draining(true);
-                let stranded = handle.node.live_sessions().len();
+                node.set_draining(true);
+                let stranded = node.live_sessions().len();
                 eprintln!("drain: no peers discoverable ({m}); {stranded} session(s) stranded");
             }
         }

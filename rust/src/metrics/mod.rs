@@ -409,6 +409,10 @@ node_metrics! {
     counter rows_exited => "Batch rows released early (per-row stop: pages freed before the rest of the batch finished).",
     counter spec_proposed => "Draft tokens proposed into speculative verify rounds (wire-v8 ProposeVerify; servers count drafts carried, gateways count drafts the client proposed).",
     counter spec_accepted => "Draft tokens accepted by speculative verification (spec_accepted / spec_proposed = the live draft acceptance rate).",
+    counter rebalance_moves => "Span moves executed by the rebalance daemon (drain-migrate + re-serve + re-announce).",
+    counter blocks_loaded => "Transformer blocks loaded into memory by rebalance span moves.",
+    counter blocks_dropped => "Transformer blocks dropped from memory by rebalance span moves.",
+    counter chains_replanned => "Client chains re-planned after coverage changed under a live session (recovery reroutes).",
 }
 
 #[cfg(test)]

@@ -1,0 +1,606 @@
+//! Live block rebalancing (§3.2): servers periodically re-run the greedy
+//! span selection against the *observed* swarm and move to a better span
+//! while their current sessions keep running.
+//!
+//! The paper's balancing story has two halves. [`crate::coordinator::
+//! balancer`] is the pure policy: which span a joining server should
+//! host, and whether moving one server would raise the swarm's
+//! bottleneck throughput. This module is the *mechanism* that closes the
+//! loop on a live server:
+//!
+//! 1. a background daemon ([`RebalanceDaemon`]) rebuilds the coverage
+//!    snapshot from discovery (filesystem directory or DHT) every
+//!    `interval` — plus immediately when the snapshot's fingerprint
+//!    changes (churn), because that is exactly when holes appear;
+//! 2. hysteresis keeps the swarm from thrashing: a move must clear
+//!    `min_gain_ratio` of estimated swarm throughput
+//!    ([`crate::coordinator::balancer::plan_rebalance`]), a server that
+//!    just moved dwells for `min_dwell`, and every server offsets its
+//!    evaluation clock by a deterministic per-identity jitter
+//!    ([`jitter_delay`]) so the fleet does not re-plan in lockstep;
+//! 3. all servers plan over the same announced snapshot with the same
+//!    deterministic greedy policy, so they agree on *which single
+//!    server* the best move belongs to — [`SwarmSnapshot::plan_own_move`]
+//!    returns `Some` only on that server, and everyone else stands pat;
+//! 4. the move itself ([`execute_move`]) is session-preserving: a
+//!    replacement [`ServerNode`] with the SAME identity loads the new
+//!    span on a fresh listener, live sessions drain over the wire-v6
+//!    migration path (to the replacement when it still covers them,
+//!    else to covering peers), the old listener stays up to serve
+//!    `moved:` bounces, and the serving slot ([`ServingSlot`]) swaps so
+//!    announce loops publish the new span under the old identity;
+//! 5. re-announcing is withdrawal-aware: the new entry is re-stored
+//!    under every *dropped* block key too
+//!    ([`crate::dht::BlockDirectory::withdraw_addressed`]), so stale
+//!    coverage disappears immediately instead of after a TTL.
+//!
+//! Clients need no new protocol: coverage changes surface through the
+//! same discovery records, sessions follow `moved:` redirects with zero
+//! replay, and the measured-throughput chain scorer
+//! ([`crate::coordinator::routing::ServerView::effective_step_s`])
+//! re-plans new chains onto the moved span.
+//!
+//! CLI: `petals server --rebalance [--rebalance-interval SECS]`; knobs
+//! and the drain/migration interaction are documented in
+//! `docs/REBALANCING.md`.
+
+use crate::coordinator::balancer;
+use crate::dht::{FsAnnouncement, FsDirectory, NodeId, ServerEntry};
+use crate::error::{Error, Result};
+use crate::model::ModelHome;
+use crate::runtime::Runtime;
+use crate::server::service::{drain_node, serve, ServerHandle, TcpSwarm};
+use crate::server::{ServerNode, ServerOptions};
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+/// Hysteresis and pacing knobs for the rebalancing daemon.
+#[derive(Debug, Clone)]
+pub struct RebalanceConfig {
+    /// Base evaluation period (`--rebalance-interval`); churn triggers an
+    /// immediate extra evaluation.
+    pub interval: Duration,
+    /// Minimum relative swarm-throughput gain a move must clear
+    /// (paper's hysteresis threshold; `plan_rebalance` semantics).
+    pub min_gain_ratio: f64,
+    /// Fraction of `interval` spread across servers as deterministic
+    /// per-identity jitter, so evaluations de-synchronize fleet-wide.
+    pub jitter_frac: f64,
+    /// Minimum time between this server's own moves — a mover sits out
+    /// at least this long even if the planner keeps electing it.
+    pub min_dwell: Duration,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> Self {
+        RebalanceConfig {
+            interval: Duration::from_secs(60),
+            min_gain_ratio: 0.05,
+            jitter_frac: 0.5,
+            min_dwell: Duration::from_secs(120),
+        }
+    }
+}
+
+/// Deterministic per-identity evaluation offset in
+/// `[0, frac * interval)`: FNV over the node id, same on every run, so
+/// a server's phase is stable but the fleet's phases are spread.
+pub fn jitter_delay(id: NodeId, interval: Duration, frac: f64) -> Duration {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in id.0.iter() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    // top 53 bits -> uniform [0, 1)
+    let unit = (h >> 11) as f64 / (1u64 << 53) as f64;
+    interval.mul_f64(frac.clamp(0.0, 1.0) * unit)
+}
+
+/// Weight a server contributes to block coverage during planning: its
+/// announced throughput, or 1.0 while it has none measured yet (a fresh
+/// server must still count as coverage, or the planner would treat its
+/// blocks as holes and trigger spurious moves).
+pub fn planning_weight(e: &ServerEntry) -> f64 {
+    if e.throughput > 0.0 {
+        e.throughput as f64
+    } else {
+        1.0
+    }
+}
+
+/// The swarm as one server saw it at one instant: every announced
+/// `(identity, span, planning weight)`, deduped and id-sorted so all
+/// servers reading the same announcements build the same snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct SwarmSnapshot {
+    pub n_blocks: usize,
+    pub servers: Vec<(NodeId, Range<usize>, f64)>,
+}
+
+impl SwarmSnapshot {
+    pub fn from_entries<'a>(
+        n_blocks: usize,
+        entries: impl Iterator<Item = &'a ServerEntry>,
+    ) -> Self {
+        let mut servers: Vec<(NodeId, Range<usize>, f64)> = entries
+            .map(|e| {
+                let span = e.start as usize..(e.end as usize).min(n_blocks);
+                (e.server, span, planning_weight(e))
+            })
+            .filter(|(_, span, _)| span.start < span.end)
+            .collect();
+        servers.sort_by(|a, b| a.0.cmp(&b.0));
+        servers.dedup_by(|a, b| a.0 == b.0);
+        SwarmSnapshot { n_blocks, servers }
+    }
+
+    /// Guarantee `id` is present (a server's own announcement may lag its
+    /// first evaluation) without disturbing the deterministic order.
+    pub fn ensure(&mut self, id: NodeId, span: Range<usize>, weight: f64) {
+        if let Err(i) = self.servers.binary_search_by(|s| s.0.cmp(&id)) {
+            if span.start < span.end && span.end <= self.n_blocks {
+                self.servers.insert(i, (id, span, weight));
+            }
+        }
+    }
+
+    /// Order-independent digest of WHO covers WHAT (weights excluded —
+    /// load wobble must not read as churn). Changes exactly when a
+    /// server joins, leaves, or moves its span.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for (id, span, _) in &self.servers {
+            for &b in id.0.iter() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+            h ^= span.start as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            h ^= span.end as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
+    /// Estimated swarm throughput (bottleneck-block rule).
+    pub fn throughput(&self) -> f64 {
+        let mut cov = balancer::BlockCoverage::new(self.n_blocks);
+        for (_, span, w) in &self.servers {
+            cov.add_span(span.clone(), *w);
+        }
+        balancer::swarm_throughput(&cov)
+    }
+
+    /// The distributed agreement rule: run the deterministic global
+    /// planner and claim the move ONLY if it elects `me`. Every server
+    /// planning over the same snapshot computes the same single mover,
+    /// so at most one server relocates per observed coverage state.
+    pub fn plan_own_move(&self, me: NodeId, min_gain_ratio: f64) -> Option<Range<usize>> {
+        let spans: Vec<(Range<usize>, f64)> =
+            self.servers.iter().map(|(_, s, w)| (s.clone(), *w)).collect();
+        let mv = balancer::plan_rebalance(self.n_blocks, &spans, min_gain_ratio)?;
+        (self.servers[mv.server_idx].0 == me).then_some(mv.to)
+    }
+}
+
+/// How the daemon reads and writes swarm coverage — one trait over the
+/// filesystem announce directory and the networked DHT, so the daemon
+/// itself is transport-blind.
+pub trait Discovery: Send + 'static {
+    /// Current live announcements, self included.
+    fn discover(&self) -> Vec<FsAnnouncement>;
+    /// Publish `entry` as dialable at `addr`.
+    fn announce(&self, addr: &str, entry: &ServerEntry) -> Result<()>;
+    /// Proactively hide the blocks of `old` that `entry` no longer
+    /// covers. Transports where [`Discovery::announce`] atomically
+    /// replaces the whole per-server record (the fs directory keys one
+    /// file per identity) need no extra work.
+    fn withdraw(&self, _addr: &str, _entry: &ServerEntry, _old: Range<u32>) -> Result<()> {
+        Ok(())
+    }
+}
+
+impl Discovery for FsDirectory {
+    fn discover(&self) -> Vec<FsAnnouncement> {
+        FsDirectory::discover(self)
+    }
+    fn announce(&self, addr: &str, entry: &ServerEntry) -> Result<()> {
+        FsDirectory::announce(self, addr, entry)
+    }
+    // withdraw: default no-op — re-announcing overwrote the one record
+}
+
+/// [`Discovery`] over the networked Kademlia DHT: per-block addressed
+/// records, withdrawal by re-storing the new entry under dropped keys
+/// (see [`crate::dht::BlockDirectory::withdraw_addressed`] for why a
+/// tombstone cannot work under freshest-per-publisher merging).
+pub struct DhtDiscovery {
+    pub dht: crate::dht::DhtNode,
+    pub model: String,
+    pub n_blocks: u32,
+    pub announce_ttl_ms: u64,
+}
+
+impl Discovery for DhtDiscovery {
+    fn discover(&self) -> Vec<FsAnnouncement> {
+        let rpc = self.dht.rpc();
+        let dir = crate::dht::BlockDirectory::new(&rpc, self.dht.seeds(), &self.model);
+        dir.discover_addressed(self.n_blocks)
+    }
+    fn announce(&self, addr: &str, entry: &ServerEntry) -> Result<()> {
+        let rpc = self.dht.rpc();
+        let mut dir = crate::dht::BlockDirectory::new(&rpc, self.dht.seeds(), &self.model);
+        dir.announce_ttl_ms = self.announce_ttl_ms;
+        dir.announce_addressed(addr, entry, crate::dht::now_ms()).map(|_| ())
+    }
+    fn withdraw(&self, addr: &str, entry: &ServerEntry, old: Range<u32>) -> Result<()> {
+        let rpc = self.dht.rpc();
+        let mut dir = crate::dht::BlockDirectory::new(&rpc, self.dht.seeds(), &self.model);
+        dir.announce_ttl_ms = self.announce_ttl_ms;
+        dir.withdraw_addressed(addr, entry, old, crate::dht::now_ms()).map(|_| ())
+    }
+}
+
+/// The one cell announce loops and the daemon share: which
+/// [`ServerNode`] currently IS this server, and where it listens.
+/// [`execute_move`] swaps it atomically after a successful drain, so the
+/// next announce beat publishes the new span under the old identity.
+pub struct ServingSlot {
+    inner: RwLock<(Arc<ServerNode>, String)>,
+}
+
+impl ServingSlot {
+    pub fn new(node: Arc<ServerNode>, addr: impl Into<String>) -> Arc<Self> {
+        Arc::new(ServingSlot { inner: RwLock::new((node, addr.into())) })
+    }
+
+    pub fn node(&self) -> Arc<ServerNode> {
+        self.inner.read().unwrap().0.clone()
+    }
+
+    pub fn addr(&self) -> String {
+        self.inner.read().unwrap().1.clone()
+    }
+
+    /// The current announcement (span, load, telemetry) — what announce
+    /// loops should publish every beat.
+    pub fn entry(&self) -> ServerEntry {
+        self.node().dht_entry()
+    }
+
+    fn swap(&self, node: Arc<ServerNode>, addr: String) -> (Arc<ServerNode>, String) {
+        std::mem::replace(&mut *self.inner.write().unwrap(), (node, addr))
+    }
+}
+
+/// What [`execute_move`] needs to rebuild this server on a new span.
+pub struct MoveContext {
+    pub home: ModelHome,
+    pub runtime: Arc<Runtime>,
+    pub opts: ServerOptions,
+    /// Host the replacement listener binds (an ephemeral `:0` port is
+    /// appended) — the old port stays occupied serving `moved:` bounces.
+    pub listen_host: String,
+}
+
+/// Result of one executed span move.
+pub struct MoveOutcome {
+    /// The replacement's listener — keep it alive; dropping it does not
+    /// stop the server but forfeits shutdown.
+    pub handle: ServerHandle,
+    pub from: Range<usize>,
+    pub to: Range<usize>,
+    /// Sessions pushed over the wire-v6 migration path.
+    pub migrated: usize,
+    /// Sessions no target would take — they stay live on the old node.
+    pub stranded: usize,
+}
+
+/// Execute a planned span move with zero lost sessions.
+///
+/// Builds a replacement [`ServerNode`] with the SAME identity (same
+/// `name`, hence same [`NodeId`]) over `to`, serves it on a fresh
+/// ephemeral port, then drains the old node's live sessions over the
+/// wire-v6 migration path. The transfer swarm lists the replacement
+/// under a synthetic [`NodeId`] — old and new share the real one, and a
+/// swarm cannot hold both — plus every external peer; [`drain_node`]'s
+/// span filter then routes each session to the replacement when the new
+/// span still covers it, else to a covering peer, freest-first. The old
+/// listener is left running so already-redirected clients still get
+/// their `moved:` bounce; the caller owns its handle.
+pub fn execute_move(
+    slot: &ServingSlot,
+    ctx: &MoveContext,
+    to: Range<usize>,
+    peers: &[(NodeId, String)],
+) -> Result<MoveOutcome> {
+    let old = slot.node();
+    let from = old.start..old.end;
+    if to == from {
+        return Err(Error::Other("rebalance: target span equals current span".into()));
+    }
+    let replacement = ServerNode::start_with(
+        &old.name,
+        &ctx.home,
+        ctx.runtime.clone(),
+        to.clone(),
+        old.precision,
+        old.compress,
+        ctx.opts.clone(),
+    )?;
+    let handle = serve(replacement.clone(), &format!("{}:0", ctx.listen_host))?;
+    let transfer_id = NodeId::from_name(&format!("rebalance-transfer:{}", handle.addr));
+    let mut targets = vec![(transfer_id, handle.addr.clone())];
+    targets.extend(peers.iter().filter(|(id, _)| *id != old.id).cloned());
+    let swarm = TcpSwarm::connect_ids(targets);
+    let migrated = drain_node(&old, &swarm);
+    let stranded = old.live_sessions().len();
+    // account on the replacement: it is the node scraped from now on
+    replacement.metrics.rebalance_moves.inc();
+    let loaded = to.clone().filter(|b| !from.contains(b)).count() as u64;
+    let dropped = from.clone().filter(|b| !to.contains(b)).count() as u64;
+    replacement.metrics.blocks_loaded.add(loaded);
+    replacement.metrics.blocks_dropped.add(dropped);
+    slot.swap(replacement, handle.addr.clone());
+    Ok(MoveOutcome { handle, from, to, migrated, stranded })
+}
+
+/// One full evaluation against an already-fetched snapshot: plan, and if
+/// this server is the elected mover, execute + re-announce + withdraw.
+/// Split from the daemon loop so tests drive it without wall-clock.
+pub fn evaluate_once(
+    slot: &ServingSlot,
+    ctx: &MoveContext,
+    disc: &dyn Discovery,
+    min_gain_ratio: f64,
+    n_blocks: usize,
+    anns: &[FsAnnouncement],
+) -> Result<Option<MoveOutcome>> {
+    let me = slot.node().id;
+    let mut snap = SwarmSnapshot::from_entries(n_blocks, anns.iter().map(|a| &a.entry));
+    let own = slot.entry();
+    snap.ensure(me, own.start as usize..own.end as usize, planning_weight(&own));
+    let Some(to) = snap.plan_own_move(me, min_gain_ratio) else {
+        return Ok(None);
+    };
+    let peers: Vec<(NodeId, String)> = anns
+        .iter()
+        .filter(|a| a.entry.server != me)
+        .map(|a| (a.entry.server, a.addr.clone()))
+        .collect();
+    let out = execute_move(slot, ctx, to, &peers)?;
+    // publish the new span under the same identity, then hide the
+    // dropped block keys so routing stops offering them immediately
+    let entry = slot.entry();
+    let addr = slot.addr();
+    disc.announce(&addr, &entry)?;
+    disc.withdraw(&addr, &entry, out.from.start as u32..out.from.end as u32)?;
+    Ok(Some(out))
+}
+
+/// The background rebalancing daemon (`petals server --rebalance`).
+pub struct RebalanceDaemon {
+    stop: Arc<AtomicBool>,
+}
+
+impl RebalanceDaemon {
+    /// Start the daemon thread. It wakes every quarter-interval, refetches
+    /// discovery, and evaluates when the coverage fingerprint changed
+    /// (churn) or the jittered interval elapsed; `min_dwell` then gates
+    /// how often this server may itself move.
+    pub fn spawn(
+        slot: Arc<ServingSlot>,
+        ctx: MoveContext,
+        disc: Box<dyn Discovery>,
+        cfg: RebalanceConfig,
+        n_blocks: usize,
+    ) -> Result<RebalanceDaemon> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let name = format!("petals-rebalance-{}", slot.node().id.short());
+        std::thread::Builder::new()
+            .name(name)
+            .spawn(move || daemon_loop(slot, ctx, disc, cfg, n_blocks, stop2))
+            .map_err(|e| Error::Other(format!("spawn rebalance daemon: {e}")))?;
+        Ok(RebalanceDaemon { stop })
+    }
+
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+fn daemon_loop(
+    slot: Arc<ServingSlot>,
+    ctx: MoveContext,
+    disc: Box<dyn Discovery>,
+    cfg: RebalanceConfig,
+    n_blocks: usize,
+    stop: Arc<AtomicBool>,
+) {
+    let me = slot.node().id;
+    let jitter = jitter_delay(me, cfg.interval, cfg.jitter_frac);
+    let beat = (cfg.interval / 4)
+        .max(Duration::from_millis(50))
+        .min(Duration::from_secs(5));
+    let mut last_eval = Instant::now();
+    let mut last_move: Option<Instant> = None;
+    let mut last_fp: Option<u64> = None;
+    // retired replacements' listeners — kept so they remain stoppable
+    let mut handles: Vec<ServerHandle> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(beat);
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let anns = disc.discover();
+        let fp =
+            SwarmSnapshot::from_entries(n_blocks, anns.iter().map(|a| &a.entry)).fingerprint();
+        let churned = last_fp.map_or(false, |f| f != fp);
+        last_fp = Some(fp);
+        if !churned && last_eval.elapsed() < cfg.interval + jitter {
+            continue;
+        }
+        last_eval = Instant::now();
+        if last_move.map_or(false, |t| t.elapsed() < cfg.min_dwell) {
+            continue; // dwell: this server moved too recently
+        }
+        match evaluate_once(&slot, &ctx, disc.as_ref(), cfg.min_gain_ratio, n_blocks, &anns) {
+            Ok(Some(out)) => {
+                eprintln!(
+                    "[rebalance {}] moved span {:?} -> {:?} ({} migrated, {} stranded) now on {}",
+                    me.short(),
+                    out.from,
+                    out.to,
+                    out.migrated,
+                    out.stranded,
+                    out.handle.addr,
+                );
+                handles.push(out.handle);
+                last_move = Some(Instant::now());
+            }
+            Ok(None) => {}
+            Err(e) => eprintln!("[rebalance {}] move failed: {e}", me.short()),
+        }
+    }
+    for h in &handles {
+        h.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(name: &str, start: u32, end: u32, throughput: f32) -> ServerEntry {
+        ServerEntry {
+            server: NodeId::from_name(name),
+            start,
+            end,
+            throughput,
+            free_pages: 10,
+            total_pages: 10,
+            batch_width: 4,
+            prefix_fps: vec![],
+            p50_step_us: 0,
+            queue_depth: 0,
+            sessions_active: 0,
+        }
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        let iv = Duration::from_secs(60);
+        let a = jitter_delay(NodeId::from_name("a"), iv, 0.5);
+        let b = jitter_delay(NodeId::from_name("b"), iv, 0.5);
+        assert_eq!(a, jitter_delay(NodeId::from_name("a"), iv, 0.5));
+        assert!(a <= iv.mul_f64(0.5) && b <= iv.mul_f64(0.5));
+        assert_ne!(a, b, "distinct identities should land on distinct phases");
+        assert_eq!(jitter_delay(NodeId::from_name("a"), iv, 0.0), Duration::ZERO);
+    }
+
+    #[test]
+    fn snapshot_is_order_independent_and_deduped() {
+        let e1 = entry("a", 0, 4, 2.0);
+        let e2 = entry("b", 4, 8, 1.0);
+        let fwd = SwarmSnapshot::from_entries(8, [&e1, &e2].into_iter());
+        let rev = SwarmSnapshot::from_entries(8, [&e2, &e1, &e1].into_iter());
+        assert_eq!(fwd.servers, rev.servers, "order and duplicates must not matter");
+        assert_eq!(fwd.fingerprint(), rev.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_tracks_coverage_not_load() {
+        let base = SwarmSnapshot::from_entries(
+            8,
+            [&entry("a", 0, 4, 2.0), &entry("b", 4, 8, 1.0)].into_iter(),
+        );
+        // load wobble: same coverage, different throughput
+        let wobble = SwarmSnapshot::from_entries(
+            8,
+            [&entry("a", 0, 4, 9.0), &entry("b", 4, 8, 0.5)].into_iter(),
+        );
+        assert_eq!(base.fingerprint(), wobble.fingerprint());
+        // churn: b moved
+        let moved = SwarmSnapshot::from_entries(
+            8,
+            [&entry("a", 0, 4, 2.0), &entry("b", 0, 4, 1.0)].into_iter(),
+        );
+        assert_ne!(base.fingerprint(), moved.fingerprint());
+        // churn: c joined
+        let joined = SwarmSnapshot::from_entries(
+            8,
+            [&entry("a", 0, 4, 2.0), &entry("b", 4, 8, 1.0), &entry("c", 2, 6, 1.0)]
+                .into_iter(),
+        );
+        assert_ne!(base.fingerprint(), joined.fingerprint());
+    }
+
+    #[test]
+    fn fresh_servers_count_as_coverage() {
+        // zero announced throughput must not read as a coverage hole
+        let snap =
+            SwarmSnapshot::from_entries(8, [&entry("a", 0, 8, 0.0)].into_iter());
+        assert_eq!(snap.servers[0].2, 1.0);
+        assert!(snap.throughput() > 0.0);
+    }
+
+    #[test]
+    fn exactly_one_server_claims_the_move() {
+        // three stacked on 0..4, nobody on 4..8: the planner must elect
+        // exactly one mover, and every participant must agree on who
+        let entries =
+            [entry("a", 0, 4, 1.0), entry("b", 0, 4, 1.0), entry("c", 0, 4, 1.0)];
+        let snap = SwarmSnapshot::from_entries(8, entries.iter());
+        let movers: Vec<NodeId> = entries
+            .iter()
+            .filter(|e| snap.plan_own_move(e.server, 0.0).is_some())
+            .map(|e| e.server)
+            .collect();
+        assert_eq!(movers.len(), 1, "one snapshot, one elected mover");
+        let to = snap.plan_own_move(movers[0], 0.0).unwrap();
+        assert_eq!(to, 4..8, "the mover fills the uncovered half");
+    }
+
+    #[test]
+    fn hysteresis_threshold_blocks_marginal_moves() {
+        // moving `a` to 4..8 lifts the bottleneck 1.8 -> 2.0, a ~11%
+        // relative gain: above a 5% bar, below a 50% one
+        let entries = [
+            entry("a", 0, 4, 0.5),
+            entry("b", 0, 4, 2.0),
+            entry("c", 4, 8, 1.8),
+        ];
+        let snap = SwarmSnapshot::from_entries(8, entries.iter());
+        let any_mover = |g: f64| {
+            entries.iter().any(|e| snap.plan_own_move(e.server, g).is_some())
+        };
+        assert!(any_mover(0.05), "an 11% gain clears the default 5% bar");
+        assert!(!any_mover(0.5), "a 50% gain bar must reject it");
+    }
+
+    #[test]
+    fn snapshot_clamps_and_drops_degenerate_spans() {
+        let long = entry("a", 0, 99, 1.0); // past the model's end
+        let empty = entry("b", 5, 5, 1.0);
+        let snap = SwarmSnapshot::from_entries(8, [&long, &empty].into_iter());
+        assert_eq!(snap.servers.len(), 1);
+        assert_eq!(snap.servers[0].1, 0..8);
+    }
+
+    #[test]
+    fn ensure_inserts_self_once() {
+        let mut snap =
+            SwarmSnapshot::from_entries(8, [&entry("a", 0, 4, 1.0)].into_iter());
+        let me = NodeId::from_name("me");
+        snap.ensure(me, 4..8, 1.0);
+        snap.ensure(me, 4..8, 1.0);
+        assert_eq!(snap.servers.len(), 2);
+        let fp = snap.fingerprint();
+        snap.ensure(NodeId::from_name("a"), 0..4, 3.0); // present: no-op
+        assert_eq!(snap.servers.len(), 2);
+        assert_eq!(snap.fingerprint(), fp);
+    }
+}

@@ -231,6 +231,9 @@ impl ChainClient for LocalCluster {
                     queue_depth: m.node.queue_depth(),
                     free_ratio,
                     prefix_fps: m.node.prefix_fingerprints(4),
+                    p50_step_us: 0,
+                    measured_step_s: None,
+                    measured_age_s: 0.0,
                 }
             })
             .collect()

@@ -163,6 +163,10 @@ struct StepLitCache {
 /// One Petals server node.
 pub struct ServerNode {
     pub id: NodeId,
+    /// The name `id` was derived from (`NodeId::from_name`) — kept so a
+    /// live span move ([`crate::rebalance`]) can construct a replacement
+    /// node with the SAME identity over a different block range.
+    pub name: String,
     pub start: usize,
     pub end: usize,
     pub precision: Precision,
@@ -269,6 +273,7 @@ impl ServerNode {
         metrics.kv_pages_free.set(pool_cfg.capacity_pages as u64);
         Ok(Arc::new(ServerNode {
             id: NodeId::from_name(name),
+            name: name.to_string(),
             start: span.start,
             end: span.end,
             precision,
@@ -681,10 +686,16 @@ impl ServerNode {
     }
 
     /// The `moved:` redirect reply for a migrated-away session, if any.
+    /// Each bounce is one client learning the session's new home and
+    /// re-planning its chain, so it doubles as the replan counter.
     fn moved_reply(&self, session: u64) -> Option<Message> {
-        self.moved.lock().unwrap().get(&session).map(|addr| Message::Error {
+        let reply = self.moved.lock().unwrap().get(&session).map(|addr| Message::Error {
             message: Error::Moved(addr.clone()).to_string(),
-        })
+        });
+        if reply.is_some() {
+            self.metrics.chains_replanned.inc();
+        }
+        reply
     }
 
     /// Handle an inbound `MigrateSessionOffer`: decide whether this

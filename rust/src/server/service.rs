@@ -291,6 +291,35 @@ impl MetricsHandle {
     }
 }
 
+/// Routable view from an announcement's telemetry alone: the latency is
+/// a neutral placeholder until the first real ping, everything else
+/// (span, throughput, p50 step latency, queue depth, pool pressure) is
+/// the server's own v4 announcement.
+fn view_from_entry(e: &crate::dht::ServerEntry, bandwidth_bps: f64) -> ServerView {
+    let span = e.end.saturating_sub(e.start) as usize;
+    let span_compute_s =
+        if e.throughput > 0.0 { 1.0 / e.throughput as f64 } else { 0.01 * span as f64 };
+    let free_ratio = if e.total_pages > 0 {
+        e.free_pages as f64 / e.total_pages as f64
+    } else {
+        1.0
+    };
+    ServerView {
+        id: e.server,
+        start: e.start as usize,
+        end: e.end as usize,
+        latency_s: 0.005,
+        bandwidth_bps,
+        span_compute_s,
+        queue_depth: e.queue_depth,
+        free_ratio,
+        prefix_fps: e.prefix_fps.clone(),
+        p50_step_us: e.p50_step_us,
+        measured_step_s: None,
+        measured_age_s: 0.0,
+    }
+}
+
 /// Client-side record of one remote server.
 struct Remote {
     addr: String,
@@ -320,6 +349,10 @@ pub struct TcpSwarm {
     /// Assumed symmetric bandwidth for routing cost (real localhost
     /// links don't need modelling; wide-area deployments would measure).
     pub assumed_bandwidth_bps: f64,
+    /// This client's own measured per-hop step clocks
+    /// ([`ChainClient::observe_step`]); stamped onto discovered views so
+    /// `find_chain` scores chains by estimated end-to-end tokens/s.
+    measured: crate::coordinator::throughput::MeasuredHops,
 }
 
 impl TcpSwarm {
@@ -366,13 +399,23 @@ impl TcpSwarm {
 
     /// Connect from full discovery announcements, keeping each server's
     /// advertised prefix fingerprints as routing hints (the announcement
-    /// records carry them; `Pong` does not).
+    /// records carry them; `Pong` does not) and seeding each peer's view
+    /// from the announcement's v4 telemetry tail — so chain scoring
+    /// consults the same numbers `petals top` renders even before the
+    /// first ping refresh.
     pub fn connect_discovered(peers: Vec<crate::dht::FsAnnouncement>) -> Self {
-        Self::from_remotes(
+        let swarm = Self::from_remotes(
             peers
-                .into_iter()
-                .map(|a| (a.entry.server, a.addr, a.entry.prefix_fps)),
-        )
+                .iter()
+                .map(|a| (a.entry.server, a.addr.clone(), a.entry.prefix_fps.clone())),
+        );
+        for a in &peers {
+            if let Some(r) = swarm.peers.get(&a.entry.server) {
+                *r.view.lock().unwrap() =
+                    Some(view_from_entry(&a.entry, swarm.assumed_bandwidth_bps));
+            }
+        }
+        swarm
     }
 
     /// Servers this client knows how to dial (no network traffic —
@@ -397,7 +440,11 @@ impl TcpSwarm {
                 )
             })
             .collect();
-        TcpSwarm { peers: map, assumed_bandwidth_bps: 10e9 }
+        TcpSwarm {
+            peers: map,
+            assumed_bandwidth_bps: 10e9,
+            measured: crate::coordinator::throughput::MeasuredHops::new(),
+        }
     }
 
     /// Dial address for a known peer (migration targets, redirects).
@@ -476,6 +523,7 @@ impl TcpSwarm {
                              queue_depth: u32,
                              free_pages: u32,
                              total_pages: u32,
+                             p50_step_us: u32,
                              prefix_fps: Vec<u64>| {
                 let span = (end - start) as usize;
                 let span_compute_s = if throughput > 0.0 {
@@ -498,6 +546,9 @@ impl TcpSwarm {
                     queue_depth,
                     free_ratio,
                     prefix_fps,
+                    p50_step_us,
+                    measured_step_s: None,
+                    measured_age_s: 0.0,
                 }
             };
             *remote.view.lock().unwrap() = match reply {
@@ -508,6 +559,7 @@ impl TcpSwarm {
                     queue_depth,
                     free_pages,
                     total_pages,
+                    p50_step_us,
                     prefix_fps,
                     ..
                 }) => {
@@ -519,7 +571,8 @@ impl TcpSwarm {
                         prefix_fps
                     };
                     Some(make_view(
-                        start, end, throughput, queue_depth, free_pages, total_pages, fps,
+                        start, end, throughput, queue_depth, free_pages, total_pages,
+                        p50_step_us, fps,
                     ))
                 }
                 Ok(Message::Pong {
@@ -537,6 +590,8 @@ impl TcpSwarm {
                     queue_depth,
                     free_pages,
                     total_pages,
+                    // a v2 pong carries no step-latency telemetry
+                    0,
                     // a v2 pong gossips nothing: prefix hints come from
                     // the announcement records captured at discovery
                     remote.hint_fps.clone(),
@@ -550,10 +605,24 @@ impl TcpSwarm {
 impl ChainClient for TcpSwarm {
     fn discover(&self) -> Vec<ServerView> {
         self.refresh();
-        self.peers
+        let mut views: Vec<ServerView> = self
+            .peers
             .values()
             .filter_map(|r| r.view.lock().unwrap().clone())
-            .collect()
+            .collect();
+        self.measured.stamp(&mut views);
+        views
+    }
+
+    fn observe_step(&self, server: NodeId, wall_s: f64) {
+        // strip the link's round trip so the EWMA approximates compute
+        // time (the chain cost model adds msg_time separately)
+        let rtt = self
+            .peers
+            .get(&server)
+            .and_then(|r| r.view.lock().unwrap().as_ref().map(|v| v.latency_s * 2.0))
+            .unwrap_or(0.0);
+        self.measured.observe(server, (wall_s - rtt).max(1e-6));
     }
 
     fn open_session(

@@ -210,6 +210,229 @@ impl Rpc for SimDhtNet {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Rebalancing-under-churn model
+// ---------------------------------------------------------------------------
+
+/// Workload for [`run_rebalance_churn`]: a swarm of virtual servers on a
+/// virtual clock, shrinking through a sustained departure phase and then
+/// growing back (the diurnal pattern public swarms actually see). The
+/// same seeded event schedule drives two arms — one running the
+/// distributed rebalancing protocol of [`crate::rebalance`] (deterministic
+/// greedy planner + hysteresis + dwell, at most one elected mover per
+/// snapshot), one a static-assignment control whose servers pick a span
+/// once at join ([`balancer::choose_join_span`]) and never move — so the
+/// aggregate-throughput difference is attributable to rebalancing alone.
+#[derive(Debug, Clone)]
+pub struct ChurnWorkload {
+    pub n_blocks: usize,
+    /// Starting (and final) population.
+    pub n_servers: usize,
+    /// Total simulated seconds; the first half is the departure phase,
+    /// the second half the recovery phase.
+    pub horizon_s: f64,
+    /// Evaluation/sampling period of the virtual clock.
+    pub tick_s: f64,
+    /// Probability of one churn event (a leave in phase 1, a join in
+    /// phase 2) at each tick.
+    pub churn_prob: f64,
+    /// Hysteresis bar for the rebalancing arm (see
+    /// [`balancer::plan_rebalance`]).
+    pub min_gain_ratio: f64,
+    /// Seconds a server that just moved sits out of planning.
+    pub dwell_s: f64,
+    pub seed: u64,
+}
+
+impl Default for ChurnWorkload {
+    fn default() -> Self {
+        ChurnWorkload {
+            n_blocks: 96,
+            n_servers: 256,
+            horizon_s: 600.0,
+            tick_s: 5.0,
+            churn_prob: 0.8,
+            min_gain_ratio: 0.05,
+            dwell_s: 30.0,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Outcome of one [`run_rebalance_churn`] comparison.
+#[derive(Debug, Clone, Copy)]
+pub struct ChurnOutcome {
+    /// Time-averaged swarm throughput (bottleneck-block steps/s proxy)
+    /// with live rebalancing on.
+    pub rebalance_steps_per_s: f64,
+    /// Same metric for the static-assignment control.
+    pub static_steps_per_s: f64,
+    /// `rebalance_steps_per_s / static_steps_per_s`.
+    pub gain: f64,
+    /// Span moves the rebalancing arm executed.
+    pub moves: usize,
+    /// Fraction of ticks the control spent with an uncovered block.
+    pub static_dead_frac: f64,
+    /// Same for the rebalancing arm.
+    pub rebalance_dead_frac: f64,
+}
+
+/// The shared churn schedule: tick index → event. Precomputed once so
+/// both arms replay byte-identical populations.
+enum ChurnEvent {
+    /// Kill the `pick % alive`-th live server.
+    Leave { pick: u64 },
+    /// A fresh server joins with this capacity and per-block weight
+    /// (span chosen by each arm's own policy at apply time).
+    Join { capacity: usize, weight: f64 },
+}
+
+struct ChurnServer {
+    span: std::ops::Range<usize>,
+    weight: f64,
+    alive: bool,
+    /// Virtual time of this server's last own move (dwell hysteresis).
+    moved_at_s: f64,
+    /// Set for the tick in which the server is (re)loading blocks after
+    /// a move — it contributes nothing to that tick's throughput, so the
+    /// model charges a real (if coarse) cost per move.
+    loading: bool,
+}
+
+use crate::coordinator::balancer;
+
+fn churn_coverage(servers: &[ChurnServer], n_blocks: usize) -> balancer::BlockCoverage {
+    let mut cov = balancer::BlockCoverage::new(n_blocks);
+    for s in servers.iter().filter(|s| s.alive && !s.loading) {
+        cov.add_span(s.span.clone(), s.weight);
+    }
+    cov
+}
+
+fn churn_arm(w: &ChurnWorkload, schedule: &[(usize, ChurnEvent)], rebalance: bool) -> (f64, usize, f64) {
+    let mut servers: Vec<ChurnServer> = Vec::new();
+    let mut join = |servers: &mut Vec<ChurnServer>, capacity: usize, weight: f64| {
+        let cov = churn_coverage(servers, w.n_blocks);
+        let span = balancer::choose_join_span(&cov, capacity);
+        servers.push(ChurnServer {
+            span,
+            weight,
+            alive: true,
+            moved_at_s: f64::NEG_INFINITY,
+            loading: false,
+        });
+    };
+    // initial population: the same greedy join sequence in both arms
+    {
+        let mut boot = Rng::new(w.seed ^ 0xB007);
+        for _ in 0..w.n_servers {
+            let capacity = 4 + boot.usize_below(5); // 4..=8 blocks
+            let weight = boot.range_f64(0.5, 2.0);
+            join(&mut servers, capacity, weight);
+        }
+    }
+    let ticks = (w.horizon_s / w.tick_s).ceil() as usize;
+    let mut ev = schedule.iter().peekable();
+    let mut integral = 0.0;
+    let mut dead_ticks = 0usize;
+    let mut moves = 0usize;
+    for t in 0..ticks {
+        let now_s = t as f64 * w.tick_s;
+        while let Some((tick, event)) = ev.peek() {
+            if *tick > t {
+                break;
+            }
+            match event {
+                ChurnEvent::Leave { pick } => {
+                    let alive: Vec<usize> = servers
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, s)| s.alive)
+                        .map(|(i, _)| i)
+                        .collect();
+                    if !alive.is_empty() {
+                        servers[alive[(*pick % alive.len() as u64) as usize]].alive = false;
+                    }
+                }
+                ChurnEvent::Join { capacity, weight } => {
+                    join(&mut servers, *capacity, *weight);
+                }
+            }
+            ev.next();
+        }
+        if rebalance {
+            // the distributed protocol: everyone plans over the same
+            // full snapshot with the same deterministic greedy policy,
+            // so at most ONE server is elected per snapshot — and if the
+            // elected mover is still inside its dwell window, nobody
+            // moves this tick (dwell is the mover's own hysteresis, not
+            // a hole in everyone else's coverage view)
+            let idx: Vec<usize> = servers
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.alive)
+                .map(|(i, _)| i)
+                .collect();
+            let spans: Vec<(std::ops::Range<usize>, f64)> =
+                idx.iter().map(|&i| (servers[i].span.clone(), servers[i].weight)).collect();
+            if let Some(mv) = balancer::plan_rebalance(w.n_blocks, &spans, w.min_gain_ratio) {
+                let s = &mut servers[idx[mv.server_idx]];
+                if now_s - s.moved_at_s >= w.dwell_s {
+                    s.span = mv.to;
+                    s.moved_at_s = now_s;
+                    s.loading = true;
+                    moves += 1;
+                }
+            }
+        }
+        let tp = balancer::swarm_throughput(&churn_coverage(&servers, w.n_blocks));
+        if tp <= 0.0 {
+            dead_ticks += 1;
+        }
+        integral += tp * w.tick_s;
+        for s in servers.iter_mut() {
+            s.loading = false;
+        }
+    }
+    (integral / w.horizon_s, moves, dead_ticks as f64 / ticks as f64)
+}
+
+/// Run the rebalancing-vs-static churn comparison (see
+/// [`ChurnWorkload`]). Fully deterministic for a given workload: virtual
+/// clock, seeded PRNG, no wall time.
+pub fn run_rebalance_churn(w: &ChurnWorkload) -> ChurnOutcome {
+    // one shared schedule: departures while the swarm shrinks, joins
+    // (fresh capacities/weights) while it recovers
+    let mut rng = Rng::new(w.seed);
+    let ticks = (w.horizon_s / w.tick_s).ceil() as usize;
+    let mut schedule: Vec<(usize, ChurnEvent)> = Vec::new();
+    let mut departed = 0usize;
+    for t in 0..ticks {
+        if rng.f64() >= w.churn_prob {
+            continue;
+        }
+        if t < ticks / 2 {
+            schedule.push((t, ChurnEvent::Leave { pick: rng.next_u64() }));
+            departed += 1;
+        } else if departed > 0 {
+            let capacity = 4 + rng.usize_below(5);
+            let weight = rng.range_f64(0.5, 2.0);
+            schedule.push((t, ChurnEvent::Join { capacity, weight }));
+            departed -= 1;
+        }
+    }
+    let (stat, _, stat_dead) = churn_arm(w, &schedule, false);
+    let (reb, moves, reb_dead) = churn_arm(w, &schedule, true);
+    ChurnOutcome {
+        rebalance_steps_per_s: reb,
+        static_steps_per_s: stat,
+        gain: if stat > 0.0 { reb / stat } else { f64::INFINITY },
+        moves,
+        static_dead_frac: stat_dead,
+        rebalance_dead_frac: reb_dead,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -333,6 +556,40 @@ mod tests {
         );
         // a second refresh with everything fresh is a no-op
         assert_eq!(refresh_stale_buckets(&net, &refreshed, net.now_ms(), 600_000, 256), 0);
+    }
+
+    #[test]
+    fn rebalance_churn_model_is_deterministic() {
+        let w = ChurnWorkload {
+            n_servers: 64,
+            n_blocks: 48,
+            horizon_s: 200.0,
+            ..Default::default()
+        };
+        let a = run_rebalance_churn(&w);
+        let b = run_rebalance_churn(&w);
+        assert_eq!(a.rebalance_steps_per_s, b.rebalance_steps_per_s);
+        assert_eq!(a.static_steps_per_s, b.static_steps_per_s);
+        assert_eq!(a.moves, b.moves);
+        assert!(a.static_steps_per_s > 0.0, "control must not be born dead");
+    }
+
+    #[test]
+    fn rebalancing_helps_under_churn_at_small_scale() {
+        let w = ChurnWorkload {
+            n_servers: 64,
+            n_blocks: 48,
+            horizon_s: 300.0,
+            ..Default::default()
+        };
+        let out = run_rebalance_churn(&w);
+        assert!(out.moves > 0, "the departure phase must trigger span moves");
+        assert!(
+            out.rebalance_steps_per_s >= out.static_steps_per_s,
+            "rebalancing must not lose to the static control: {:.3} vs {:.3}",
+            out.rebalance_steps_per_s,
+            out.static_steps_per_s
+        );
     }
 
     #[test]

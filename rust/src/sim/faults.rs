@@ -179,6 +179,51 @@ impl MockChain {
         Ok(())
     }
 
+    /// Relocate `server` to a new block span — the mock twin of a live
+    /// rebalance move ([`crate::rebalance::execute_move`]): the span
+    /// changes immediately (discovery reflects it on the next refresh),
+    /// and live sessions are handed VERBATIM to the first alive peer
+    /// still covering the old span, with per-session `moved:` redirects
+    /// left behind so in-flight clients bounce instead of erroring.
+    /// Returns `(migrated, stranded)`.
+    pub fn move_span(
+        &self,
+        server: NodeId,
+        new_start: usize,
+        new_end: usize,
+    ) -> Result<(usize, usize)> {
+        let mut st = self.state.lock().unwrap();
+        let si = st
+            .iter()
+            .position(|s| s.id == server)
+            .ok_or_else(|| Error::NotFound("server".into()))?;
+        let (old_start, old_end) = (st[si].start, st[si].end);
+        st[si].start = new_start;
+        st[si].end = new_end;
+        if (new_start <= old_start && new_end >= old_end) || st[si].sessions.is_empty() {
+            // the new span still covers every session's blocks (or there
+            // is nothing to move): sessions stay put
+            return Ok((0, 0));
+        }
+        let Some(ti) = st
+            .iter()
+            .position(|s| s.alive && s.id != server && s.start <= old_start && s.end >= old_end)
+        else {
+            // nobody covers the old span: sessions stay live on the
+            // mover — stranded, exactly what the real drain reports
+            return Ok((0, st[si].sessions.len()));
+        };
+        let addr = mock_addr(st[ti].id);
+        let moved: Vec<(u64, MockKv)> = st[si].sessions.drain().collect();
+        let n = moved.len();
+        for (sid, kv) in moved {
+            st[si].moved.insert(sid, addr.clone());
+            st[ti].moved.remove(&sid);
+            st[ti].sessions.insert(sid, kv);
+        }
+        Ok((n, 0))
+    }
+
     /// Rows released early on `server` (assertions on per-row exit).
     pub fn rows_closed(&self, server: NodeId) -> Vec<(u64, usize)> {
         let st = self.state.lock().unwrap();
@@ -296,6 +341,9 @@ impl ChainClient for MockChain {
                 queue_depth: 0,
                 free_ratio: 1.0,
                 prefix_fps: vec![],
+                p50_step_us: 0,
+                measured_step_s: None,
+                measured_age_s: 0.0,
             })
             .collect()
     }

@@ -205,6 +205,123 @@ fn tcp_shared_prompt_hits_prefix_cache() {
     h2.shutdown();
 }
 
+/// A live span move over real sockets (the `--rebalance` execution
+/// path): a full-span server relocates to the upper half mid-generation.
+/// Its live session drains over wire-v6 migration to the other full-span
+/// server, the client follows the `moved:` bounce with ZERO replay, the
+/// greedy tokens stay golden, and freshly discovered clients see the
+/// mover announcing its new span under the same identity.
+#[test]
+fn tcp_live_rebalance_move_loses_no_sessions() {
+    use petals::coordinator::session::{InferenceSession, PromptShape};
+    use petals::model::tensor::Tensor;
+    use petals::rebalance::{execute_move, MoveContext, ServingSlot};
+
+    let home = home();
+    let g = home.geometry().clone();
+    let rt = runtime(&home);
+    let n = g.n_layers;
+    let half = n / 2;
+    let ha = spawn(&home, &rt, "r-a", 0..n);
+    let hb = spawn(&home, &rt, "r-b", 0..n);
+    let peers = vec![
+        ("r-a".to_string(), ha.addr.clone()),
+        ("r-b".to_string(), hb.addr.clone()),
+    ];
+    let swarm = TcpSwarm::connect(&peers);
+    let weights = Weights::load(&home, Precision::F16).unwrap();
+    let head = LocalHead::new(&home, rt.clone(), &weights).unwrap();
+
+    let gg = &home.manifest.golden_generate;
+    let prefix = home.load_tensor(&gg.prefix).unwrap().as_i32().to_vec();
+    let want = home.load_tensor(&gg.tokens).unwrap().as_i32().to_vec();
+
+    let scfg = cfg(&home);
+    let w = head.derive_prefill_width(1, prefix.len()).unwrap();
+    let shape = PromptShape { batch: 1, prefix_len: prefix.len(), prefill_width: w };
+    let mut session = InferenceSession::open(&swarm, scfg, shape, 9).unwrap();
+    let mut ids = vec![0i32; w];
+    ids[..prefix.len()].copy_from_slice(&prefix);
+    let h0 = head.embed(&Tensor::from_i32(&[1, w], &ids)).unwrap();
+    let h_pre = session.prefill(h0).unwrap();
+    let p = prefix.len();
+    let hidden = g.hidden;
+    let mut last = Tensor::from_f32(&[1, hidden], &h_pre.as_f32()[(p - 1) * hidden..p * hidden]);
+
+    // whichever full-span server the route picked is the mover; the
+    // other is the covering peer its session must drain to
+    let mover_id = session.chain()[0].server;
+    let (mv, other) = if mover_id == petals::dht::NodeId::from_name("r-a") {
+        (&ha, &hb)
+    } else {
+        (&hb, &ha)
+    };
+    let slot = ServingSlot::new(mv.node.clone(), mv.addr.clone());
+    let ctx = MoveContext {
+        home: ModelHome::open(
+            std::env::var("PETALS_ARTIFACTS")
+                .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()),
+        )
+        .unwrap(),
+        runtime: rt.clone(),
+        opts: petals::server::ServerOptions::default(),
+        listen_host: "127.0.0.1".into(),
+    };
+
+    let mut got = Vec::new();
+    let mut moved = None;
+    for step in 0..want.len() {
+        if step == 3 {
+            let out = execute_move(
+                &slot,
+                &ctx,
+                half..n,
+                &[(other.node.id, other.addr.clone())],
+            )
+            .unwrap();
+            assert_eq!(out.migrated, 1, "the live session must migrate");
+            assert_eq!(out.stranded, 0, "no session may be stranded");
+            assert_eq!(slot.node().start, half, "slot must serve the new span");
+            assert_eq!(slot.addr(), out.handle.addr);
+            moved = Some(out);
+        }
+        let logits = head.lm_head(&last).unwrap();
+        let next = Sampler::Greedy.sample(&logits);
+        got.push(next[0]);
+        let h = head.embed(&Tensor::from_i32(&[1, 1], &next)).unwrap();
+        let out = session.step(h).unwrap();
+        last = Tensor::from_f32(&[1, hidden], out.as_f32());
+    }
+    assert_eq!(got, want, "tokens diverged across the live move");
+    assert_eq!(session.recoveries(), 0, "a clean move must not cost a KV replay");
+    assert_eq!(
+        session.chain()[0].server,
+        other.node.id,
+        "client must have replanned onto the covering peer"
+    );
+    session.close();
+
+    // a freshly discovered client sees the mover on its new span, same
+    // identity, at the replacement's address
+    let ann = vec![
+        petals::dht::FsAnnouncement { addr: slot.addr(), entry: slot.entry() },
+        petals::dht::FsAnnouncement { addr: other.addr.clone(), entry: other.node.dht_entry() },
+    ];
+    let discovered = TcpSwarm::connect_discovered(ann);
+    let views = discovered.discover();
+    assert_eq!(views.len(), 2);
+    let mv_view = views.iter().find(|v| v.id == mover_id).unwrap();
+    assert_eq!((mv_view.start, mv_view.end), (half, n), "new span must be discoverable");
+
+    let out = moved.unwrap();
+    assert_eq!(slot.node().metrics.rebalance_moves.get(), 1);
+    assert_eq!(slot.node().metrics.blocks_loaded.get(), 0, "upper half was already held");
+    assert_eq!(slot.node().metrics.blocks_dropped.get(), half as u64);
+    out.handle.shutdown();
+    ha.shutdown();
+    hb.shutdown();
+}
+
 /// HTTP API server over a TCP swarm: full 4-layer stack
 /// (HTTP -> client -> TCP protocol -> PJRT), batch and streaming.
 #[test]
