@@ -61,6 +61,12 @@ if [[ "$MODE" == "test-only" ]]; then
     # outputs, and the 256-node churn model must show rebalancing
     # beating static assignment. Deterministic in-process simulation.
     cargo test -q --test rebalance
+    step "cargo test --test tenancy (multi-tenant gateway gate)"
+    # named gate: auth/quota matrix, virtual-clock rate limits, the
+    # unified error envelope, and the WFQ fairness bound (storming
+    # tenant must not inflate well-behaved p99 TTFT beyond 2x).
+    # Library-level + deterministic sim: no artifacts, no sockets.
+    cargo test -q --test tenancy
     echo
     echo "test-only checks passed"
     exit 0
@@ -111,6 +117,11 @@ step "cargo test --test rebalance (rebalance churn gate)"
 # named gate (see test-only mode above): zero-loss span moves + the
 # rebalancing-beats-static churn bar at 256 nodes
 cargo test -q --test rebalance
+
+step "cargo test --test tenancy (multi-tenant gateway gate)"
+# named gate (see test-only mode above): auth/quotas/rate limits, the
+# unified envelope, and the adversarial-tenant WFQ fairness bound
+cargo test -q --test tenancy
 
 echo
 echo "all checks passed"

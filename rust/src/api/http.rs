@@ -14,16 +14,29 @@
 //! | `POST /api/v1/session/open` | persistent session: prefill once, keep server-side KV |
 //! | `POST /api/v1/session/append` | feed tokens + generate, reusing the KV (chat turns) |
 //! | `POST /api/v1/session/close` | release the session's pool pages |
-//! | `GET /health` | liveness |
+//! | `GET /health`, `GET /api/v1/health` | liveness |
+//! | `GET /api/v1/info` | model name, block range, protocol version, features |
+//! | `GET /api/v1/admin/usage` | per-tenant usage counters |
+//! | `GET /api/v1/admin/traces` | recent traced decode steps (was `/api/v1/debug/traces`) |
 //!
 //! Requests and responses are typed ([`crate::api::types`]); errors
 //! carry stable codes and HTTP statuses (a too-long prompt is a 413
-//! `prompt_too_long`, never a silent truncation). Persistent sessions
-//! idle past [`ApiServer::session_ttl`] are garbage-collected so a
-//! crashed client cannot leak server-side KV-pool pages. Schema and
-//! curl examples: `docs/HTTP_API.md`.
+//! `prompt_too_long`, never a silent truncation) inside the unified
+//! `{"error": {...}}` envelope. Persistent sessions idle past
+//! [`ApiServer::session_ttl`] are garbage-collected so a crashed client
+//! cannot leak server-side KV-pool pages. Schema and curl examples:
+//! `docs/HTTP_API.md`.
+//!
+//! **Tenancy.** Every request resolves to a tenant via the
+//! [`TenantRegistry`] (bearer key → tenant; anonymous when the swarm is
+//! open). Inference and session endpoints pass token-bucket rate limits
+//! and concurrent-session quotas at admission — refusals are `429`
+//! `rate_limited`/`quota_exceeded` with a `Retry-After` header — and
+//! every tenant's requests, tokens, and KV-page-seconds are metered for
+//! `/api/v1/admin/usage` and the labeled `/metrics` families.
 
 use crate::api::stream::{sse_frame, SpecSummary, StreamEvent, StreamStats, TokenEvent};
+use crate::api::tenant::{endpoint_class, EndpointClass, RequestCtx, TenantRegistry, TenantState};
 use crate::api::types::{
     parse_ids, parse_resume_token, tensor_from_json, tensor_to_json, tensors_from_binary,
     tensors_to_binary, unsupported_speculation_error, ApiError, GenerateRequest, SamplerSpec,
@@ -55,6 +68,10 @@ struct OpenApiSession<C: ChainClient> {
     /// Hidden state [1,H] feeding the next lm_head call.
     last: Tensor,
     last_used: Instant,
+    /// Owner: holds one concurrent-session quota slot until the session
+    /// closes (explicitly, on append failure, or by the TTL sweep) and
+    /// accrues the KV-page-seconds this session's cache occupies.
+    tenant: Arc<TenantState>,
 }
 
 /// A streaming generation that can survive its HTTP connection: the
@@ -92,6 +109,9 @@ struct ResumableGen<C: ChainClient> {
     /// Speculation counters — `Some` iff this stream decodes
     /// speculatively (traced streams fall back to per-token decoding).
     spec: Option<SpecSummary>,
+    /// Owner: the quota slot is held while `session` is `Some` (live
+    /// swarm KV); released the moment the generation finishes or dies.
+    tenant: Arc<TenantState>,
 }
 
 /// One buffered speculative emission awaiting its [`TokenEvent`].
@@ -123,8 +143,14 @@ pub struct ApiServer<C: ChainClient> {
     /// `GET /metrics` in Prometheus text exposition.
     pub metrics: Arc<NodeMetrics>,
     /// Recent traced decode steps (bounded ring), served at
-    /// `GET /api/v1/debug/traces`.
+    /// `GET /api/v1/admin/traces`.
     pub traces: TraceRing,
+    /// Auth keys, per-tenant limits, and usage metering. Defaults to an
+    /// open registry (anonymous, unlimited) so embedded/test use needs
+    /// no setup; `--tenants tenants.toml` makes it real.
+    pub tenants: Arc<TenantRegistry>,
+    /// Served model name, reported by `GET /api/v1/info`.
+    model: Mutex<String>,
 }
 
 /// Largest request body the server will buffer. Requests are JSON —
@@ -153,6 +179,19 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
         cfg: SessionConfig,
         session_ttl: Duration,
     ) -> Arc<Self> {
+        Self::with_options(swarm, head, cfg, session_ttl, Arc::new(TenantRegistry::open()))
+    }
+
+    /// Full constructor: a populated [`TenantRegistry`] turns on auth,
+    /// rate limits, quotas, and metering; the other constructors run
+    /// with an open (anonymous, unlimited) registry.
+    pub fn with_options(
+        swarm: Arc<C>,
+        head: Arc<LocalHead>,
+        cfg: SessionConfig,
+        session_ttl: Duration,
+        tenants: Arc<TenantRegistry>,
+    ) -> Arc<Self> {
         Arc::new(ApiServer {
             swarm,
             head,
@@ -163,7 +202,20 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             session_ttl,
             metrics: Arc::new(NodeMetrics::new()),
             traces: TraceRing::new(256),
+            tenants,
+            model: Mutex::new("unknown".to_string()),
         })
+    }
+
+    /// Record the served model's name for `GET /api/v1/info`.
+    pub fn set_model_name(&self, name: &str) {
+        *self.model.lock().unwrap() = name.to_string();
+    }
+
+    /// The identity in-process callers (tests, examples, the legacy
+    /// public handler signatures) run as — never a refusal.
+    fn local_ctx(&self) -> RequestCtx {
+        RequestCtx { tenant: self.tenants.fallback() }
     }
 
     fn fresh_id(&self) -> u64 {
@@ -217,6 +269,10 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
     /// session — per-row cache lengths server-side — instead of N
     /// sessions; `outputs` is then an array of per-row token arrays.
     pub fn generate_json(&self, body: &str) -> Result<String> {
+        self.generate_with(body, &self.local_ctx())
+    }
+
+    fn generate_with(&self, body: &str, ctx: &RequestCtx) -> Result<String> {
         let v = Value::parse(body)?;
         let req = GenerateRequest::from_json(&v, self.head.vocab)?;
         let opts = self.gen_options(&req)?;
@@ -232,6 +288,9 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             self.metrics.spec_proposed.add(result.spec.proposed);
             self.metrics.spec_accepted.add(result.spec.accepted);
         }
+        let tokens_in: usize = req.inputs.iter().map(|r| r.len()).sum();
+        let tokens_out: usize = result.tokens.iter().map(|r| r.len()).sum();
+        ctx.tenant.charge_tokens_at(tokens_in as u64, tokens_out as u64, self.tenants.now_s());
 
         let mut obj = BTreeMap::new();
         let outputs = if req.inputs.len() == 1 {
@@ -424,24 +483,49 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
     /// keeps the KV server-side so later `append` calls (chat turns)
     /// skip re-prefilling the whole history.
     pub fn session_open_json(&self, body: &str) -> Result<String> {
+        self.session_open_with(body, &self.local_ctx())
+    }
+
+    fn session_open_with(&self, body: &str, ctx: &RequestCtx) -> Result<String> {
         let v = Value::parse(body)?;
         let inputs = parse_ids(&v, "inputs", self.head.vocab)?;
         let sampler = SamplerSpec::from_json(v.opt("sampler"))?;
+        // the quota slot is taken only after the request parses (bad
+        // bodies must not consume capacity) and released on every
+        // failure path below
+        ctx.tenant
+            .try_open_session()
+            .map_err(|e| crate::api::types::admission_to_error(&e))?;
+        match self.session_open_inner(&inputs, sampler, ctx) {
+            Ok(reply) => Ok(reply),
+            Err(e) => {
+                ctx.tenant.release_session();
+                Err(e)
+            }
+        }
+    }
+
+    fn session_open_inner(
+        &self,
+        inputs: &[i32],
+        sampler: SamplerSpec,
+        ctx: &RequestCtx,
+    ) -> Result<String> {
         let prefix_len = inputs.len();
         let w = self.head.derive_prefill_width(1, prefix_len)?;
         let shape = PromptShape { batch: 1, prefix_len, prefill_width: w };
         let mut cfg = self.cfg.clone();
-        cfg.prefix_tokens = inputs.clone();
+        cfg.prefix_tokens = inputs.to_vec();
         if cfg.route.prefix_fp.is_none() {
             cfg.route.prefix_fp = Some(crate::server::prefixcache::template_fingerprint(
-                &inputs,
+                inputs,
                 crate::server::PAGE_TOKENS,
             ));
         }
         // embed BEFORE opening: an embed failure after the open would
         // strand per-server sessions (InferenceSession has no Drop)
         let mut ids = vec![0i32; w];
-        ids[..prefix_len].copy_from_slice(&inputs);
+        ids[..prefix_len].copy_from_slice(inputs);
         let h0 = self.head.embed(&Tensor::from_i32(&[1, w], &ids))?;
         let id = self.fresh_id();
         let mut session = InferenceSession::open(self.swarm.clone(), cfg, shape, id)?;
@@ -464,8 +548,10 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
                 sampler: sampler.to_sampler().start(),
                 last,
                 last_used: Instant::now(),
+                tenant: ctx.tenant.clone(),
             },
         );
+        ctx.tenant.charge_tokens_at(prefix_len as u64, 0, self.tenants.now_s());
         let mut obj = BTreeMap::new();
         obj.insert("session".to_string(), num(id as f64));
         obj.insert("prefix_len".to_string(), num(prefix_len as f64));
@@ -477,6 +563,10 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
     /// whole conversation, so a chat turn costs `len(inputs) + max_new`
     /// decode steps — no re-prefill of the history.
     pub fn session_append_json(&self, body: &str) -> Result<String> {
+        self.session_append_with(body, &self.local_ctx())
+    }
+
+    fn session_append_with(&self, body: &str, ctx: &RequestCtx) -> Result<String> {
         let v = Value::parse(body)?;
         let id = v.get("session")?.u64()?;
         let extra: Vec<i32> = match v.opt("inputs") {
@@ -505,6 +595,13 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             .unwrap()
             .remove(&id)
             .ok_or_else(|| Error::NotFound(format!("session {id}")))?;
+        // tenant isolation: one key must not drive another tenant's
+        // session — indistinguishable from an unknown id, so session
+        // ids leak no cross-tenant existence information
+        if entry.tenant.id != ctx.tenant.id {
+            self.sessions.lock().unwrap().insert(id, entry);
+            return Err(Error::NotFound(format!("session {id}")));
+        }
         let started = Instant::now();
         let result = (|| -> Result<(Vec<i32>, &'static str)> {
             let hidden = self.head.hidden;
@@ -538,6 +635,11 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
                 entry.last_used = Instant::now();
                 let cache_len = entry.inner.cache_len();
                 self.sessions.lock().unwrap().insert(id, entry);
+                ctx.tenant.charge_tokens_at(
+                    extra.len() as u64,
+                    out.len() as u64,
+                    self.tenants.now_s(),
+                );
                 let mut obj = BTreeMap::new();
                 obj.insert("outputs".to_string(), ids_value(&out));
                 obj.insert("steps".to_string(), num(out.len() as f64));
@@ -553,12 +655,17 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
                 // a failed step may have desynced client/server state —
                 // close rather than reinsert a corrupt session
                 entry.inner.close();
+                entry.tenant.release_session();
                 Err(e)
             }
         }
     }
 
     pub fn session_close_json(&self, body: &str) -> Result<String> {
+        self.session_close_with(body, &self.local_ctx())
+    }
+
+    fn session_close_with(&self, body: &str, ctx: &RequestCtx) -> Result<String> {
         let v = Value::parse(body)?;
         let id = v.get("session")?.u64()?;
         let entry = self
@@ -567,7 +674,12 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             .unwrap()
             .remove(&id)
             .ok_or_else(|| Error::NotFound(format!("session {id}")))?;
+        if entry.tenant.id != ctx.tenant.id {
+            self.sessions.lock().unwrap().insert(id, entry);
+            return Err(Error::NotFound(format!("session {id}")));
+        }
         entry.inner.close();
+        entry.tenant.release_session();
         Ok(r#"{"closed":true}"#.to_string())
     }
 
@@ -588,6 +700,7 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
         let n = expired.len();
         for s in expired {
             s.inner.close();
+            s.tenant.release_session();
         }
         // disconnected streams expire the same way — an abandoned
         // resumable must not pin its swarm-side KV pages forever
@@ -604,9 +717,66 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
         for mut g in stale {
             if let Some(s) = g.session.take() {
                 s.close();
+                g.tenant.release_session();
             }
         }
         n + m
+    }
+
+    /// Attribute KV-pool occupancy to its owners: each GC beat adds
+    /// `pages × elapsed` to every live session's tenant — the
+    /// KV-page-seconds meter behind `/api/v1/admin/usage` and the
+    /// `petals_tenant_kv_page_seconds_total` series. Page math mirrors
+    /// the server-side pool ([`KvPoolConfig::pages_for_cache_len`]), so
+    /// the gateway bills what the swarm actually holds.
+    pub fn sample_kv_usage(&self, elapsed: Duration) {
+        let us = elapsed.as_micros() as u64;
+        if us == 0 {
+            return;
+        }
+        let page_tokens = crate::server::PAGE_TOKENS;
+        let n_blocks = self.cfg.n_blocks;
+        let charge = |tenant: &TenantState, cache_len: usize| {
+            let pages = crate::server::KvPoolConfig::pages_for_cache_len(
+                n_blocks, cache_len, page_tokens,
+            ) as u64;
+            tenant.usage.kv_page_us.fetch_add(pages * us, Ordering::Relaxed);
+        };
+        for s in self.sessions.lock().unwrap().values() {
+            charge(&s.tenant, s.inner.cache_len());
+        }
+        for g in self.resumables.lock().unwrap().values() {
+            if let Some(sess) = &g.session {
+                charge(&g.tenant, sess.cache_len());
+            }
+        }
+    }
+
+    /// `GET /api/v1/info`: the deployment's identity card — model name,
+    /// served block range, wire protocol version, and feature flags —
+    /// so clients can discover capabilities instead of probing.
+    pub fn info_json(&self) -> String {
+        let features = [
+            "streaming",
+            "resume",
+            "speculation",
+            "tracing",
+            "binary_transport",
+            "tenancy",
+            "wfq",
+        ];
+        let mut obj = BTreeMap::new();
+        obj.insert("model".to_string(), Value::Str(self.model.lock().unwrap().clone()));
+        obj.insert("block_start".to_string(), num(0.0));
+        obj.insert("block_end".to_string(), num(self.cfg.n_blocks as f64));
+        obj.insert("n_blocks".to_string(), num(self.cfg.n_blocks as f64));
+        obj.insert("protocol_version".to_string(), num(crate::net::PROTOCOL_VERSION as f64));
+        obj.insert("max_new_tokens".to_string(), num(self.cfg.max_new as f64));
+        obj.insert(
+            "features".to_string(),
+            Value::Arr(features.iter().map(|s| Value::Str(s.to_string())).collect()),
+        );
+        Value::Obj(obj).render()
     }
 
     /// Live persistent sessions (tests / introspection).
@@ -632,6 +802,7 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             let beat = (gc.session_ttl / 4).max(Duration::from_millis(50));
             while !gc_stop.load(Ordering::SeqCst) {
                 std::thread::sleep(beat);
+                gc.sample_kv_usage(beat);
                 gc.sweep_sessions();
             }
         });
@@ -667,6 +838,7 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             let mut keep_alive = true;
             let mut content_type = String::new();
             let mut accept = String::new();
+            let mut authorization: Option<String> = None;
             loop {
                 let mut h = String::new();
                 reader.read_line(&mut h)?;
@@ -683,6 +855,11 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
                 }
                 if let Some(v) = lower.strip_prefix("accept:") {
                     accept = v.trim().to_string();
+                }
+                if lower.starts_with("authorization:") {
+                    // keys are case-sensitive: slice the ORIGINAL line,
+                    // not the lowercased copy used for header matching
+                    authorization = Some(h["authorization:".len()..].trim().to_string());
                 }
                 if lower.starts_with("connection:") && lower.contains("close") {
                     keep_alive = false;
@@ -708,6 +885,33 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
                 Some((r, q)) => (r.to_string(), q.to_string()),
                 None => (path.clone(), String::new()),
             };
+
+            // --- tenant admission (before any dispatch) ---------------
+            // public endpoints (health, info, metrics) skip auth; admin
+            // and inference/session endpoints resolve the key, and the
+            // latter also pass rate limits. Refusals close the
+            // connection with the unified envelope + Retry-After.
+            self.tenants.maybe_reload();
+            let class = endpoint_class(&route);
+            let ctx = if matches!(class, EndpointClass::Public) {
+                self.local_ctx()
+            } else {
+                let tenant = match self.tenants.resolve(authorization.as_deref()) {
+                    Ok(t) => t,
+                    Err(adm) => {
+                        self.metrics.failures.inc();
+                        return write_api_error(&mut stream, &ApiError::from_admission(&adm));
+                    }
+                };
+                if matches!(class, EndpointClass::Inference | EndpointClass::Session) {
+                    if let Err(adm) = tenant.admit_at(self.tenants.now_s()) {
+                        self.metrics.failures.inc();
+                        return write_api_error(&mut stream, &ApiError::from_admission(&adm));
+                    }
+                }
+                RequestCtx { tenant }
+            };
+
             let ct_bin = content_type.starts_with(TENSOR_CONTENT_TYPE);
             let accept_bin = accept.contains(TENSOR_CONTENT_TYPE);
             // SSE framing: `?format=sse` or `Accept: text/event-stream`
@@ -753,8 +957,10 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
 
             if (method.as_str(), route.as_str()) == ("GET", "/metrics") {
                 // Prometheus text exposition — its own content type, so
-                // it bypasses the JSON route table below
-                let reply = self.metrics.prometheus();
+                // it bypasses the JSON route table below. Per-tenant
+                // labeled families ride after the node registry's.
+                let reply =
+                    format!("{}{}", self.metrics.prometheus(), self.tenants.prometheus_block());
                 write!(
                     stream,
                     "HTTP/1.1 200 OK\r\nContent-Type: {PROMETHEUS_CONTENT_TYPE}\r\nContent-Length: {}\r\n\r\n{}",
@@ -772,45 +978,69 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             if (method.as_str(), route.as_str()) == ("POST", "/api/v1/stream") {
                 // streaming response: chunked NDJSON (or SSE), the
                 // connection closes after the terminal event
-                self.handle_stream(&body, sse, &mut stream)?;
+                self.handle_stream(&body, sse, &ctx, &mut stream)?;
                 return Ok(());
             }
             if (method.as_str(), route.as_str()) == ("POST", "/api/v1/stream/resume") {
-                self.handle_stream_resume(&body, sse, &mut stream)?;
+                self.handle_stream_resume(&body, sse, &ctx, &mut stream)?;
                 return Ok(());
             }
 
+            if (method.as_str(), route.as_str()) == ("GET", "/api/v1/debug/traces") {
+                // moved to the admin surface; permanent redirect with a
+                // JSON breadcrumb for clients that don't follow 308s
+                let crumb = r#"{"moved":"/api/v1/admin/traces"}"#;
+                write!(
+                    stream,
+                    "HTTP/1.1 308 Permanent Redirect\r\nLocation: /api/v1/admin/traces\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+                    crumb.len(),
+                    crumb
+                )?;
+                stream.flush()?;
+                self.metrics.bytes_out.add(crumb.len() as u64);
+                if !keep_alive {
+                    return Ok(());
+                }
+                continue;
+            }
+
             let result = match (method.as_str(), route.as_str()) {
-                ("POST", "/api/v1/generate") => Some(self.generate_json(&body)),
+                ("POST", "/api/v1/generate") => Some(self.generate_with(&body, &ctx)),
                 ("POST", "/api/v1/forward") => Some(self.forward_json(&body)),
                 ("POST", "/api/v1/backward") => Some(self.backward_json(&body)),
-                ("POST", "/api/v1/session/open") => Some(self.session_open_json(&body)),
-                ("POST", "/api/v1/session/append") => Some(self.session_append_json(&body)),
-                ("POST", "/api/v1/session/close") => Some(self.session_close_json(&body)),
-                ("GET", "/api/v1/debug/traces") => Some(Ok(self.traces.to_json().render())),
-                ("GET", "/health") => Some(Ok("{\"status\":\"ok\"}".to_string())),
+                ("POST", "/api/v1/session/open") => Some(self.session_open_with(&body, &ctx)),
+                ("POST", "/api/v1/session/append") => {
+                    Some(self.session_append_with(&body, &ctx))
+                }
+                ("POST", "/api/v1/session/close") => {
+                    Some(self.session_close_with(&body, &ctx))
+                }
+                ("GET", "/api/v1/admin/traces") => Some(Ok(self.traces.to_json().render())),
+                ("GET", "/api/v1/admin/usage") => Some(Ok(self.tenants.usage_json())),
+                ("GET", "/api/v1/info") => Some(Ok(self.info_json())),
+                ("GET", "/health") | ("GET", "/api/v1/health") => {
+                    Some(Ok("{\"status\":\"ok\"}".to_string()))
+                }
                 _ => None,
             };
-            let (status, reply) = match result {
-                Some(Ok(json)) => ("200 OK".to_string(), json),
+            let (status, retry_after, reply) = match result {
+                Some(Ok(json)) => ("200 OK".to_string(), None, json),
                 Some(Err(e)) => {
                     self.metrics.failures.inc();
                     let ae = ApiError::from_error(&e);
-                    (ae.status_line(), ae.body())
+                    (ae.status_line(), ae.retry_after_s, ae.body())
                 }
-                None => (
-                    "404 Not Found".to_string(),
-                    ApiError {
-                        status: 404,
-                        code: "not_found",
-                        message: format!("no route {method} {path}"),
-                    }
-                    .body(),
-                ),
+                None => {
+                    let ae =
+                        ApiError::new(404, "not_found", format!("no route {method} {path}"));
+                    (ae.status_line(), ae.retry_after_s, ae.body())
+                }
             };
+            let retry_hdr =
+                retry_after.map(|s| format!("Retry-After: {s}\r\n")).unwrap_or_default();
             write!(
                 stream,
-                "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+                "HTTP/1.1 {status}\r\nContent-Type: application/json\r\n{retry_hdr}Content-Length: {}\r\n\r\n{}",
                 reply.len(),
                 reply
             )?;
@@ -827,7 +1057,13 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
     /// Every token event carries a resumption token; if the connection
     /// drops mid-stream the generation state is parked and
     /// `/api/v1/stream/resume` re-attaches at the exact next event.
-    fn handle_stream<W: Write>(&self, body: &str, sse: bool, out: &mut W) -> Result<()> {
+    fn handle_stream<W: Write>(
+        &self,
+        body: &str,
+        sse: bool,
+        ctx: &RequestCtx,
+        out: &mut W,
+    ) -> Result<()> {
         let parsed = (|| -> Result<GenerateRequest> {
             let v = Value::parse(body)?;
             GenerateRequest::from_json(&v, self.head.vocab)
@@ -847,7 +1083,7 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             return write_error_response(out, &e);
         }
         let gid = self.fresh_id();
-        let gen = match self.start_resumable(&req, gid) {
+        let gen = match self.start_resumable(&req, gid, &ctx.tenant) {
             Ok(g) => g,
             Err(e) => return write_error_response(out, &e),
         };
@@ -859,7 +1095,13 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
     /// generating live on the same swarm session — no token duplicated,
     /// none skipped. Unknown ids (expired, never existed, or currently
     /// attached to a live connection) are 404s.
-    fn handle_stream_resume<W: Write>(&self, body: &str, sse: bool, out: &mut W) -> Result<()> {
+    fn handle_stream_resume<W: Write>(
+        &self,
+        body: &str,
+        sse: bool,
+        ctx: &RequestCtx,
+        out: &mut W,
+    ) -> Result<()> {
         let parsed = (|| -> Result<(u64, usize)> {
             let v = Value::parse(body)?;
             parse_resume_token(v.get("resume")?.str()?)
@@ -873,6 +1115,14 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             let e = Error::NotFound(format!("no resumable stream {gid}"));
             return write_error_response(out, &e);
         };
+        if gen.tenant.id != ctx.tenant.id {
+            // another tenant's stream: park it back untouched and answer
+            // exactly like an unknown id — resume tokens must not leak
+            // cross-tenant state
+            self.park(gid, gen);
+            let e = Error::NotFound(format!("no resumable stream {gid}"));
+            return write_error_response(out, &e);
+        }
         if from > gen.events.len() {
             // ahead of what was ever produced: reject WITHOUT destroying
             // the state — a typo'd index must not kill the generation
@@ -889,7 +1139,12 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
     /// Open the swarm session and run the prefill for a resumable
     /// stream (mirrors `session_open_json`'s ordering: embed before
     /// open, close on prefill failure — nothing may strand server KV).
-    fn start_resumable(&self, req: &GenerateRequest, gid: u64) -> Result<ResumableGen<C>> {
+    fn start_resumable(
+        &self,
+        req: &GenerateRequest,
+        gid: u64,
+        tenant: &Arc<TenantState>,
+    ) -> Result<ResumableGen<C>> {
         let opts = self.gen_options(req)?;
         // traced streams fall back to per-token decoding (a verify
         // round has no per-step hop waterfall to attach)
@@ -909,11 +1164,21 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
         let mut ids = vec![0i32; w];
         ids[..prefix_len].copy_from_slice(inputs);
         let h0 = self.head.embed(&Tensor::from_i32(&[1, w], &ids))?;
-        let mut session = InferenceSession::open(self.swarm.clone(), cfg, shape, gid)?;
+        // a live resumable stream pins swarm KV exactly like a
+        // persistent session — it holds a quota slot for that span
+        tenant.try_open_session().map_err(|e| crate::api::types::admission_to_error(&e))?;
+        let mut session = match InferenceSession::open(self.swarm.clone(), cfg, shape, gid) {
+            Ok(s) => s,
+            Err(e) => {
+                tenant.release_session();
+                return Err(e);
+            }
+        };
         let h_pre = match session.prefill(h0) {
             Ok(h) => h,
             Err(e) => {
                 session.close();
+                tenant.release_session();
                 return Err(e);
             }
         };
@@ -922,6 +1187,7 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             &[1, hidden],
             &h_pre.as_f32()[(prefix_len - 1) * hidden..prefix_len * hidden],
         );
+        tenant.charge_tokens_at(prefix_len as u64, 0, self.tenants.now_s());
         Ok(ResumableGen {
             session: Some(session),
             sampler: req.sampler.to_sampler().start(),
@@ -939,6 +1205,7 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             prompt: inputs.clone(),
             spec_buf: VecDeque::new(),
             spec: spec_on.then(SpecSummary::default),
+            tenant: tenant.clone(),
         })
     }
 
@@ -990,6 +1257,9 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             trace,
             accepted: None,
         });
+        // metered at production, not replay — a stream resumed N times
+        // bills each token once
+        g.tenant.charge_tokens_at(0, 1, self.tenants.now_s());
         if g.opts.stop_tokens.contains(&token) {
             Self::finish_gen(g, "stop");
         }
@@ -1020,6 +1290,7 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
             trace: None,
             accepted: Some(p.accepted),
         });
+        g.tenant.charge_tokens_at(0, 1, self.tenants.now_s());
         if g.opts.stop_tokens.contains(&p.token) {
             // discard any buffered overshoot — the stream is over and
             // the extra tokens were never observable
@@ -1117,6 +1388,7 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
         let recoveries = g.session.as_ref().map(|s| s.recoveries()).unwrap_or(0);
         if let Some(s) = g.session.take() {
             s.close();
+            g.tenant.release_session();
         }
         g.finished = Some(finish.to_string());
         g.stats = Some(StreamStats {
@@ -1141,6 +1413,7 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
                 if let Some(mut dead) = map.remove(&oldest) {
                     if let Some(s) = dead.session.take() {
                         s.close();
+                        dead.tenant.release_session();
                     }
                 }
             }
@@ -1195,6 +1468,7 @@ impl<C: ChainClient + Send + Sync + 'static> ApiServer<C> {
                 // KV may have desynced — report in-band and discard
                 if let Some(s) = g.session.take() {
                     s.close();
+                    g.tenant.release_session();
                 }
                 let ae = ApiError::from_error(&e);
                 let ev =
@@ -1239,12 +1513,20 @@ fn write_stream_line<W: Write>(out: &mut W, line: &str, sse: bool) -> Result<()>
 }
 
 fn write_error_response<W: Write>(out: &mut W, e: &Error) -> Result<()> {
-    let ae = ApiError::from_error(e);
+    write_api_error(out, &ApiError::from_error(e))
+}
+
+/// Write the unified error envelope, with a `Retry-After` header when
+/// the error carries a wait estimate (429s always do).
+fn write_api_error<W: Write>(out: &mut W, ae: &ApiError) -> Result<()> {
     let body = ae.body();
+    let retry_hdr =
+        ae.retry_after_s.map(|s| format!("Retry-After: {s}\r\n")).unwrap_or_default();
     write!(
         out,
-        "HTTP/1.1 {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        "HTTP/1.1 {}\r\nContent-Type: application/json\r\n{}Content-Length: {}\r\nConnection: close\r\n\r\n{}",
         ae.status_line(),
+        retry_hdr,
         body.len(),
         body
     )?;
@@ -1284,6 +1566,35 @@ pub fn http_get(addr: &str, path: &str) -> Result<(u16, String, String)> {
         })
         .unwrap_or_default();
     Ok((status, content_type, buf[idx + 4..].to_string()))
+}
+
+/// POST with a bearer key, returning `(status, headers, body)` — the
+/// tenancy tests assert on `Retry-After` and the envelope together.
+pub fn http_post_auth(
+    addr: &str,
+    path: &str,
+    body: &str,
+    key: Option<&str>,
+) -> Result<(u16, String, String)> {
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    let auth = key.map(|k| format!("Authorization: Bearer {k}\r\n")).unwrap_or_default();
+    write!(
+        stream,
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\n{auth}Content-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    let mut buf = String::new();
+    BufReader::new(stream).read_to_string(&mut buf)?;
+    let status: u16 = buf
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| Error::Protocol("bad status line".into()))?;
+    let idx = buf
+        .find("\r\n\r\n")
+        .ok_or_else(|| Error::Protocol("no http body".into()))?;
+    Ok((status, buf[..idx].to_string(), buf[idx + 4..].to_string()))
 }
 
 /// POST returning `(status, body)` (typed-error tests need the code).

@@ -15,17 +15,26 @@
 //!   `/api/v1/forward` / `backward` raw-activation access (the
 //!   prompt-tuning workload), and persistent `/api/v1/session/*`
 //!   endpoints that keep server-side KV between chat turns, with a TTL
-//!   sweep for abandoned sessions.
+//!   sweep for abandoned sessions;
+//! - [`tenant`] — multi-tenant identity: bearer-key resolution from a
+//!   hot-reloadable `tenants.toml`, token-bucket rate limits and
+//!   session quotas at admission, per-tenant usage metering behind
+//!   `GET /api/v1/admin/usage` and labeled `petals_tenant_*` series.
 //!
 //! Wire reference: `docs/HTTP_API.md`.
 
 pub mod http;
 pub mod stream;
+pub mod tenant;
 pub mod types;
 
-pub use http::{http_get, http_post, http_post_status, ApiServer};
+pub use http::{http_get, http_post, http_post_auth, http_post_status, ApiServer};
 pub use stream::{http_post_stream, StreamEvent, StreamStats, TokenEvent};
-pub use types::{ApiError, GenerateRequest, SamplerSpec};
+pub use tenant::{
+    endpoint_class, AdmissionError, EndpointClass, RequestCtx, TenantLimits, TenantRegistry,
+    TenantState, TokenBucket,
+};
+pub use types::{is_retryable_code, ApiError, GenerateRequest, SamplerSpec};
 
 #[cfg(all(test, feature = "artifact-tests"))]
 mod tests {

@@ -127,6 +127,13 @@ impl StreamEvent {
                 obj.insert("event".into(), Value::Str("error".into()));
                 obj.insert("code".into(), Value::Str(code.clone()));
                 obj.insert("message".into(), Value::Str(message.clone()));
+                // additive v2 envelope field — same retryable-code list
+                // as HTTP error bodies; parse() ignores unknown keys,
+                // so pre-v2 clients are unaffected
+                obj.insert(
+                    "retryable".into(),
+                    Value::Bool(crate::api::types::is_retryable_code(code)),
+                );
             }
         }
         Value::Obj(obj).render()

@@ -1,0 +1,968 @@
+//! Multi-tenant gateway identity, quotas, and metering.
+//!
+//! The paper's premise is a *public* swarm: many parties share one
+//! deployment, so the HTTP gateway needs tenancy, not just endpoints.
+//! This module is the whole tenant model in one place:
+//!
+//! - [`TenantRegistry`] — bearer API key → tenant resolution, loaded
+//!   from a `tenants.toml` file (`--tenants` on `petals chat`) and
+//!   hot-reloaded on mtime change. Open swarms keep an anonymous
+//!   tenant; closed swarms disable it and every request must carry a
+//!   valid `Authorization: Bearer <key>` header.
+//! - [`TenantState`] — per-tenant token buckets (requests/s and
+//!   tokens/s, virtual-clock driven so tests never sleep), a
+//!   concurrent-session quota, and usage counters (requests, tokens
+//!   in/out, KV-page-seconds) that feed `GET /api/v1/admin/usage` and
+//!   the labeled `petals_tenant_*` Prometheus series.
+//! - [`AdmissionError`] — the stable `unauthorized` / `rate_limited` /
+//!   `quota_exceeded` admission outcomes, carrying `Retry-After`.
+//! - [`endpoint_class`] — the route → endpoint-class map the gateway
+//!   uses to decide which requests are authenticated and metered.
+//!
+//! Token accounting is post-paid: admission only requires the tokens/s
+//! bucket to be non-negative (the cost of a generate call is unknown
+//! until it finishes), and the actual token count is debited after
+//! completion. A tenant that overdraws goes negative and is refused
+//! until the bucket refills — bursty traffic is smoothed without the
+//! gateway having to predict output lengths.
+
+use crate::config::json::Value;
+use crate::error::{Error, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Instant, SystemTime};
+
+/// Stable admission error codes (also the envelope `error.code`).
+pub const CODE_UNAUTHORIZED: &str = "unauthorized";
+pub const CODE_RATE_LIMITED: &str = "rate_limited";
+pub const CODE_QUOTA_EXCEEDED: &str = "quota_exceeded";
+
+/// Per-tenant limits. `0` (or `0.0`) means unlimited for that axis;
+/// `weight` feeds the scheduler's weighted-fair queueing (min 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantLimits {
+    /// Sustained request admissions per second (token bucket, burst of
+    /// one second's worth). `0.0` = unlimited.
+    pub requests_per_s: f64,
+    /// Sustained generated+ingested tokens per second (post-paid token
+    /// bucket). `0.0` = unlimited.
+    pub tokens_per_s: f64,
+    /// Concurrent open sessions (chat sessions + live streams).
+    /// `0` = unlimited.
+    pub max_sessions: usize,
+    /// Weighted-fair-queueing share in the step scheduler.
+    pub weight: u64,
+}
+
+impl Default for TenantLimits {
+    fn default() -> Self {
+        TenantLimits { requests_per_s: 0.0, tokens_per_s: 0.0, max_sessions: 0, weight: 1 }
+    }
+}
+
+/// A classic token bucket driven by an explicit clock (seconds as
+/// `f64`) so rate tests use virtual time instead of sleeping.
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    level: f64,
+    last_s: f64,
+}
+
+impl TokenBucket {
+    /// `rate <= 0` builds an unlimited bucket (all takes succeed).
+    /// Burst capacity is one second's worth, floored at 1.
+    pub fn new(rate: f64) -> Self {
+        let burst = rate.max(1.0);
+        TokenBucket { rate, burst, level: burst, last_s: 0.0 }
+    }
+
+    fn refill(&mut self, now_s: f64) {
+        if now_s > self.last_s {
+            self.level = (self.level + (now_s - self.last_s) * self.rate).min(self.burst);
+        }
+        self.last_s = self.last_s.max(now_s);
+    }
+
+    /// Prepaid take: succeed iff `cost` tokens are available now.
+    /// On refusal returns the seconds until the bucket could cover it.
+    pub fn try_take_at(&mut self, cost: f64, now_s: f64) -> std::result::Result<(), f64> {
+        if self.rate <= 0.0 {
+            return Ok(());
+        }
+        self.refill(now_s);
+        if self.level >= cost {
+            self.level -= cost;
+            Ok(())
+        } else {
+            Err(((cost - self.level) / self.rate).max(0.0))
+        }
+    }
+
+    /// Post-paid admission: succeed while the bucket is non-negative
+    /// (debt from a previous debit blocks new work until repaid).
+    pub fn admit_at(&mut self, now_s: f64) -> std::result::Result<(), f64> {
+        if self.rate <= 0.0 {
+            return Ok(());
+        }
+        self.refill(now_s);
+        if self.level >= 0.0 {
+            Ok(())
+        } else {
+            Err((-self.level / self.rate).max(0.0))
+        }
+    }
+
+    /// Post-paid debit: subtract `cost`, allowing the level to go
+    /// negative (the debt gates future `admit_at` calls).
+    pub fn debit_at(&mut self, cost: f64, now_s: f64) {
+        if self.rate <= 0.0 {
+            return;
+        }
+        self.refill(now_s);
+        self.level -= cost;
+    }
+
+    /// Current level after refilling to `now_s` (tests/inspection).
+    pub fn level_at(&mut self, now_s: f64) -> f64 {
+        self.refill(now_s);
+        self.level
+    }
+}
+
+/// Monotonic per-tenant usage counters. `kv_page_us` accumulates
+/// page-microseconds (pages held × wall time) sampled by the gateway's
+/// GC sweep; it is exported as fractional page-seconds.
+#[derive(Debug, Default)]
+pub struct UsageCounters {
+    pub requests: AtomicU64,
+    pub tokens_in: AtomicU64,
+    pub tokens_out: AtomicU64,
+    pub rejected: AtomicU64,
+    pub kv_page_us: AtomicU64,
+}
+
+impl UsageCounters {
+    pub fn kv_page_seconds(&self) -> f64 {
+        self.kv_page_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+}
+
+/// Admission refused — maps onto the unified error envelope.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionError {
+    /// One of [`CODE_UNAUTHORIZED`] / [`CODE_RATE_LIMITED`] /
+    /// [`CODE_QUOTA_EXCEEDED`].
+    pub code: &'static str,
+    pub message: String,
+    /// Seconds the client should wait before retrying (`Retry-After`).
+    pub retry_after_s: Option<u64>,
+}
+
+impl AdmissionError {
+    fn rate_limited(what: &str, wait_s: f64) -> Self {
+        let retry = (wait_s.ceil() as u64).max(1);
+        AdmissionError {
+            code: CODE_RATE_LIMITED,
+            message: format!("{what} rate limit exceeded"),
+            retry_after_s: Some(retry),
+        }
+    }
+}
+
+/// One tenant's live state: identity, limits, buckets, usage.
+#[derive(Debug)]
+pub struct TenantState {
+    pub name: String,
+    /// Stable non-zero id derived from the name — the scheduler's WFQ
+    /// flow key (`StepRequest::tenant`).
+    pub id: u64,
+    pub limits: TenantLimits,
+    /// (requests/s bucket, tokens/s bucket) under one lock — admission
+    /// consults both atomically.
+    buckets: Mutex<(TokenBucket, TokenBucket)>,
+    pub usage: UsageCounters,
+    sessions_open: AtomicU64,
+}
+
+/// FNV-1a over the tenant name, forced non-zero (`0` is the scheduler's
+/// "untenanted" flow).
+pub fn tenant_id(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h.max(1)
+}
+
+impl TenantState {
+    pub fn new(name: &str, limits: TenantLimits) -> Self {
+        TenantState {
+            name: name.to_string(),
+            id: tenant_id(name),
+            buckets: Mutex::new((
+                TokenBucket::new(limits.requests_per_s),
+                TokenBucket::new(limits.tokens_per_s),
+            )),
+            limits,
+            usage: UsageCounters::default(),
+            sessions_open: AtomicU64::new(0),
+        }
+    }
+
+    /// Admit one metered request at virtual time `now_s`: prepaid take
+    /// from the requests/s bucket, non-negative check on the tokens/s
+    /// bucket. Counts the request (or the rejection) in usage.
+    pub fn admit_at(&self, now_s: f64) -> std::result::Result<(), AdmissionError> {
+        let mut b = self.buckets.lock().unwrap();
+        if let Err(wait) = b.0.try_take_at(1.0, now_s) {
+            drop(b);
+            self.usage.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(AdmissionError::rate_limited("request", wait));
+        }
+        if let Err(wait) = b.1.admit_at(now_s) {
+            drop(b);
+            self.usage.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(AdmissionError::rate_limited("token", wait));
+        }
+        drop(b);
+        self.usage.requests.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Post-paid token charge (tokens in + out of a completed call) and
+    /// the matching usage counters.
+    pub fn charge_tokens_at(&self, tokens_in: u64, tokens_out: u64, now_s: f64) {
+        self.usage.tokens_in.fetch_add(tokens_in, Ordering::Relaxed);
+        self.usage.tokens_out.fetch_add(tokens_out, Ordering::Relaxed);
+        let cost = (tokens_in + tokens_out) as f64;
+        if cost > 0.0 {
+            self.buckets.lock().unwrap().1.debit_at(cost, now_s);
+        }
+    }
+
+    /// Claim a concurrent-session slot; refused with `quota_exceeded`
+    /// once `max_sessions` are open.
+    pub fn try_open_session(&self) -> std::result::Result<(), AdmissionError> {
+        let max = self.limits.max_sessions;
+        let claim = self.sessions_open.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+            if max > 0 && n as usize >= max {
+                None
+            } else {
+                Some(n + 1)
+            }
+        });
+        match claim {
+            Ok(_) => Ok(()),
+            Err(_) => {
+                self.usage.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(AdmissionError {
+                    code: CODE_QUOTA_EXCEEDED,
+                    message: format!(
+                        "tenant {:?} already has {max} open sessions (max_sessions)",
+                        self.name
+                    ),
+                    retry_after_s: Some(1),
+                })
+            }
+        }
+    }
+
+    /// Release a session slot (close, sweep, stream teardown). Pairs
+    /// with a successful [`Self::try_open_session`]; saturates at 0 so
+    /// double-release on teardown races never underflows.
+    pub fn release_session(&self) {
+        let _ = self
+            .sessions_open
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| n.checked_sub(1));
+    }
+
+    pub fn sessions_open(&self) -> u64 {
+        self.sessions_open.load(Ordering::SeqCst)
+    }
+
+    /// Hot reload: carry monotonic usage + open-session count over from
+    /// the previous generation of this tenant (buckets restart full —
+    /// documented, and cheap compared to losing the metering history).
+    fn adopt(&self, old: &TenantState) {
+        for (dst, src) in [
+            (&self.usage.requests, &old.usage.requests),
+            (&self.usage.tokens_in, &old.usage.tokens_in),
+            (&self.usage.tokens_out, &old.usage.tokens_out),
+            (&self.usage.rejected, &old.usage.rejected),
+            (&self.usage.kv_page_us, &old.usage.kv_page_us),
+        ] {
+            dst.store(src.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.sessions_open.store(old.sessions_open.load(Ordering::SeqCst), Ordering::SeqCst);
+    }
+
+    fn usage_value(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Value::Str(self.name.clone()));
+        m.insert("requests".into(), num(self.usage.requests.load(Ordering::Relaxed)));
+        m.insert("tokens_in".into(), num(self.usage.tokens_in.load(Ordering::Relaxed)));
+        m.insert("tokens_out".into(), num(self.usage.tokens_out.load(Ordering::Relaxed)));
+        m.insert("rejected".into(), num(self.usage.rejected.load(Ordering::Relaxed)));
+        m.insert("kv_page_seconds".into(), Value::Num(self.usage.kv_page_seconds()));
+        m.insert("sessions_open".into(), num(self.sessions_open()));
+        m.insert("weight".into(), num(self.limits.weight));
+        Value::Obj(m)
+    }
+}
+
+fn num(n: u64) -> Value {
+    Value::Num(n as f64)
+}
+
+/// The tenant a request runs as — threaded through every gateway
+/// handler so metering and quota release land on the right books.
+#[derive(Clone)]
+pub struct RequestCtx {
+    pub tenant: Arc<TenantState>,
+}
+
+struct RegistryInner {
+    /// bearer key -> tenant name
+    by_key: HashMap<String, String>,
+    /// name -> state, sorted for deterministic exposition order
+    tenants: BTreeMap<String, Arc<TenantState>>,
+    /// `None` = anonymous access disabled (closed swarm)
+    anonymous: Option<Arc<TenantState>>,
+    source: Option<PathBuf>,
+    mtime: Option<SystemTime>,
+    last_check_s: f64,
+}
+
+/// The gateway's key → tenant map plus the admission clock.
+pub struct TenantRegistry {
+    inner: Mutex<RegistryInner>,
+    epoch: Instant,
+}
+
+impl TenantRegistry {
+    /// Open-swarm default: one unlimited anonymous tenant, no keys.
+    pub fn open() -> Self {
+        TenantRegistry {
+            inner: Mutex::new(RegistryInner {
+                by_key: HashMap::new(),
+                tenants: BTreeMap::new(),
+                anonymous: Some(Arc::new(TenantState::new("anonymous", TenantLimits::default()))),
+                source: None,
+                mtime: None,
+                last_check_s: 0.0,
+            }),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Parse a `tenants.toml` config (see [`parse_tenants_toml`]).
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let reg = Self::open();
+        let parsed = parse_tenants_toml(text)?;
+        let mut inner = reg.inner.lock().unwrap();
+        *inner = parsed;
+        drop(inner);
+        Ok(reg)
+    }
+
+    /// Load from a file and remember it for hot reload.
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let reg = Self::from_toml(&text)?;
+        {
+            let mut inner = reg.inner.lock().unwrap();
+            inner.source = Some(PathBuf::from(path));
+            inner.mtime = std::fs::metadata(path).and_then(|m| m.modified()).ok();
+        }
+        Ok(reg)
+    }
+
+    /// Seconds since the registry was created — the virtual-clock base
+    /// every admission decision uses.
+    pub fn now_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Hot reload: if the backing file's mtime changed, re-parse it and
+    /// swap the tenant set in, carrying usage counters and open-session
+    /// counts across by tenant name. Checks at most ~1/s; parse errors
+    /// keep the previous config (a bad edit must not lock everyone
+    /// out).
+    pub fn maybe_reload(&self) {
+        let now = self.now_s();
+        let mut inner = self.inner.lock().unwrap();
+        let Some(path) = inner.source.clone() else { return };
+        if now - inner.last_check_s < 1.0 {
+            return;
+        }
+        inner.last_check_s = now;
+        let mtime = std::fs::metadata(&path).and_then(|m| m.modified()).ok();
+        if mtime.is_none() || mtime == inner.mtime {
+            return;
+        }
+        let Ok(text) = std::fs::read_to_string(&path) else { return };
+        match parse_tenants_toml(&text) {
+            Ok(mut fresh) => {
+                for (name, state) in &fresh.tenants {
+                    if let Some(old) = inner.tenants.get(name) {
+                        state.adopt(old);
+                    }
+                }
+                if let (Some(anon), Some(old)) = (&fresh.anonymous, &inner.anonymous) {
+                    anon.adopt(old);
+                }
+                fresh.source = Some(path);
+                fresh.mtime = mtime;
+                fresh.last_check_s = now;
+                *inner = fresh;
+            }
+            Err(e) => {
+                eprintln!("[tenants] reload of {} failed, keeping old config: {e}", path.display());
+                inner.mtime = mtime; // don't re-log every second
+            }
+        }
+    }
+
+    /// Resolve an `Authorization` header to a tenant. `None` falls back
+    /// to the anonymous tenant when the swarm is open; unknown or
+    /// malformed credentials are always `unauthorized`.
+    pub fn resolve(
+        &self,
+        authorization: Option<&str>,
+    ) -> std::result::Result<Arc<TenantState>, AdmissionError> {
+        let inner = self.inner.lock().unwrap();
+        match authorization {
+            None => inner.anonymous.clone().ok_or_else(|| AdmissionError {
+                code: CODE_UNAUTHORIZED,
+                message: "missing Authorization header (this swarm requires an API key)".into(),
+                retry_after_s: None,
+            }),
+            Some(raw) => {
+                let key = raw
+                    .strip_prefix("Bearer ")
+                    .or_else(|| raw.strip_prefix("bearer "))
+                    .unwrap_or(raw)
+                    .trim();
+                inner
+                    .by_key
+                    .get(key)
+                    .and_then(|name| inner.tenants.get(name))
+                    .cloned()
+                    .ok_or_else(|| AdmissionError {
+                        code: CODE_UNAUTHORIZED,
+                        message: "unknown API key".into(),
+                        retry_after_s: None,
+                    })
+            }
+        }
+    }
+
+    /// The tenant in-process callers (tests, examples, the legacy
+    /// public handler signatures) run as: the anonymous tenant when
+    /// enabled, else an unlimited internal one — never a refusal, so
+    /// direct library use keeps working on closed swarms.
+    pub fn fallback(&self) -> Arc<TenantState> {
+        let inner = self.inner.lock().unwrap();
+        if let Some(anon) = &inner.anonymous {
+            return anon.clone();
+        }
+        drop(inner);
+        let mut inner = self.inner.lock().unwrap();
+        inner
+            .tenants
+            .entry("_local".to_string())
+            .or_insert_with(|| Arc::new(TenantState::new("_local", TenantLimits::default())))
+            .clone()
+    }
+
+    /// `(tenant id, WFQ weight)` for every known tenant — the gateway
+    /// forwards these to the step scheduler.
+    pub fn tenant_weights(&self) -> Vec<(u64, u64)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .tenants
+            .values()
+            .chain(inner.anonymous.iter())
+            .map(|t| (t.id, t.limits.weight.max(1)))
+            .collect()
+    }
+
+    fn all_tenants(&self) -> Vec<Arc<TenantState>> {
+        let inner = self.inner.lock().unwrap();
+        let mut v: Vec<_> = inner.tenants.values().cloned().collect();
+        if let Some(anon) = &inner.anonymous {
+            v.push(anon.clone());
+        }
+        v
+    }
+
+    /// `GET /api/v1/admin/usage` body.
+    pub fn usage_json(&self) -> String {
+        let tenants: Vec<Value> = self.all_tenants().iter().map(|t| t.usage_value()).collect();
+        let mut m = BTreeMap::new();
+        m.insert("tenants".into(), Value::Arr(tenants));
+        Value::Obj(m).render()
+    }
+
+    /// Labeled per-tenant Prometheus families, appended verbatim after
+    /// the node registry's exposition on `GET /metrics`. Rendered here
+    /// (not via the `node_metrics!` registry) because these are labeled
+    /// series over a dynamic tenant set, which the fixed-field registry
+    /// deliberately does not model.
+    pub fn prometheus_block(&self) -> String {
+        let tenants = self.all_tenants();
+        if tenants.is_empty() {
+            return String::new();
+        }
+        let mut out = String::new();
+        let label = |name: &str| {
+            // escape per the exposition format: backslash, quote, newline
+            name.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+        };
+        type Render = fn(&TenantState) -> String;
+        let families: [(&str, &str, &str, Render); 6] = [
+            ("petals_tenant_requests_total", "counter", "Admitted requests per tenant.", |t| {
+                t.usage.requests.load(Ordering::Relaxed).to_string()
+            }),
+            ("petals_tenant_tokens_in_total", "counter", "Prompt/input tokens per tenant.", |t| {
+                t.usage.tokens_in.load(Ordering::Relaxed).to_string()
+            }),
+            ("petals_tenant_tokens_out_total", "counter", "Generated tokens per tenant.", |t| {
+                t.usage.tokens_out.load(Ordering::Relaxed).to_string()
+            }),
+            (
+                "petals_tenant_rejections_total",
+                "counter",
+                "Admissions refused per tenant (rate limit or quota).",
+                |t| t.usage.rejected.load(Ordering::Relaxed).to_string(),
+            ),
+            (
+                "petals_tenant_kv_page_seconds_total",
+                "counter",
+                "KV-pool page-seconds held per tenant (sampled).",
+                |t| format!("{:.6}", t.usage.kv_page_seconds()),
+            ),
+            ("petals_tenant_sessions_open", "gauge", "Currently open sessions per tenant.", |t| {
+                t.sessions_open().to_string()
+            }),
+        ];
+        for (fam, kind, help, value) in families {
+            out.push_str(&format!("# HELP {fam} {help}\n# TYPE {fam} {kind}\n"));
+            for t in &tenants {
+                out.push_str(&format!("{fam}{{tenant=\"{}\"}} {}\n", label(&t.name), value(t)));
+            }
+        }
+        out
+    }
+}
+
+// --- endpoint classification -------------------------------------------
+
+/// Which admission policy a route gets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EndpointClass {
+    /// No auth, no metering: health, info, metrics scrape.
+    Public,
+    /// Auth only (when keys are configured) — no rate-limit charge.
+    Admin,
+    /// Auth + rate limits; token usage metered.
+    Inference,
+    /// Auth + rate limits + concurrent-session quota interplay.
+    Session,
+}
+
+/// Classify a route. Unknown routes are `Public` — they 404 before
+/// touching tenant state, and must not leak key validity.
+pub fn endpoint_class(route: &str) -> EndpointClass {
+    match route {
+        "/health" | "/api/v1/health" | "/api/v1/info" | "/metrics" => EndpointClass::Public,
+        "/api/v1/generate" | "/api/v1/stream" | "/api/v1/stream/resume" | "/api/v1/forward"
+        | "/api/v1/backward" => EndpointClass::Inference,
+        r if r.starts_with("/api/v1/session/") => EndpointClass::Session,
+        r if r.starts_with("/api/v1/admin/") || r == "/api/v1/debug/traces" => EndpointClass::Admin,
+        _ => EndpointClass::Public,
+    }
+}
+
+// --- tenants.toml ------------------------------------------------------
+
+/// Parse the `tenants.toml` subset:
+///
+/// ```toml
+/// # closed swarm: no [anonymous] section (or enabled = false)
+/// [anonymous]
+/// enabled = true
+/// requests_per_s = 5.0
+///
+/// [tenant.acme]
+/// key = "sk-acme-123"
+/// requests_per_s = 50.0
+/// tokens_per_s = 2000.0
+/// max_sessions = 8
+/// weight = 4
+/// ```
+///
+/// Supported values: quoted strings, numbers, `true`/`false`. Comments
+/// (`#`) and blank lines are skipped. Duplicate tenant names, duplicate
+/// keys, and keyless tenants are errors.
+fn parse_tenants_toml(text: &str) -> Result<RegistryInner> {
+    enum Section {
+        None,
+        Anonymous,
+        Tenant(String),
+    }
+    struct Pending {
+        key: Option<String>,
+        limits: TenantLimits,
+        enabled: bool,
+    }
+    impl Default for Pending {
+        fn default() -> Self {
+            Pending { key: None, limits: TenantLimits::default(), enabled: true }
+        }
+    }
+
+    let mut section = Section::None;
+    let mut anon: Option<Pending> = None;
+    let mut tenants: Vec<(String, Pending)> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let at = |m: &str| Error::Parse(format!("tenants.toml line {}: {m}", lineno + 1));
+        if let Some(h) = line.strip_prefix('[') {
+            let h = h.strip_suffix(']').ok_or_else(|| at("unterminated section header"))?.trim();
+            if h == "anonymous" {
+                section = Section::Anonymous;
+                anon.get_or_insert_with(Pending::default);
+            } else if let Some(name) = h.strip_prefix("tenant.") {
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(at("empty tenant name"));
+                }
+                if tenants.iter().any(|(n, _)| n == name) {
+                    return Err(at(&format!("duplicate tenant {name:?}")));
+                }
+                tenants.push((name.to_string(), Pending::default()));
+                section = Section::Tenant(name.to_string());
+            } else {
+                return Err(at(&format!("unknown section [{h}]")));
+            }
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+            .ok_or_else(|| at("expected `key = value`"))?;
+        // the active [tenant.*] section is always the last one pushed
+        let p: &mut Pending = match &section {
+            Section::None => return Err(at("key outside any section")),
+            Section::Anonymous => anon.get_or_insert_with(Pending::default),
+            Section::Tenant(_) => &mut tenants.last_mut().expect("section implies a tenant").1,
+        };
+        match k.as_str() {
+            "key" => p.key = Some(parse_toml_str(&v).ok_or_else(|| at("key wants a quoted string"))?),
+            "requests_per_s" => {
+                p.limits.requests_per_s = v.parse().map_err(|_| at("requests_per_s wants a number"))?
+            }
+            "tokens_per_s" => {
+                p.limits.tokens_per_s = v.parse().map_err(|_| at("tokens_per_s wants a number"))?
+            }
+            "max_sessions" => {
+                p.limits.max_sessions = v.parse().map_err(|_| at("max_sessions wants an integer"))?
+            }
+            "weight" => p.limits.weight = v.parse().map_err(|_| at("weight wants an integer"))?,
+            "enabled" => {
+                p.enabled = match v.as_str() {
+                    "true" => true,
+                    "false" => false,
+                    _ => return Err(at("enabled wants true/false")),
+                }
+            }
+            other => return Err(at(&format!("unknown key {other:?}"))),
+        }
+    }
+
+    let mut by_key = HashMap::new();
+    let mut map = BTreeMap::new();
+    for (name, p) in tenants {
+        let key = p
+            .key
+            .ok_or_else(|| Error::Parse(format!("tenants.toml: tenant {name:?} has no key")))?;
+        if by_key.insert(key, name.clone()).is_some() {
+            return Err(Error::Parse(format!("tenants.toml: tenant {name:?} reuses another tenant's key")));
+        }
+        map.insert(name.clone(), Arc::new(TenantState::new(&name, p.limits)));
+    }
+    let anonymous = match anon {
+        Some(p) if p.enabled => Some(Arc::new(TenantState::new("anonymous", p.limits))),
+        Some(_) => None,
+        // No [anonymous] section: keyed tenants configured -> closed
+        // swarm; an empty file stays open (matches TenantRegistry::open)
+        None if map.is_empty() => {
+            Some(Arc::new(TenantState::new("anonymous", TenantLimits::default())))
+        }
+        None => None,
+    };
+    Ok(RegistryInner {
+        by_key,
+        tenants: map,
+        anonymous,
+        source: None,
+        mtime: None,
+        last_check_s: 0.0,
+    })
+}
+
+/// Cut a `#` comment, respecting `"..."` quoting.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\\' if in_str && !escaped => {
+                escaped = true;
+                continue;
+            }
+            '"' if !escaped => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        escaped = false;
+    }
+    line
+}
+
+/// `"quoted string"` with `\"` / `\\` escapes.
+fn parse_toml_str(v: &str) -> Option<String> {
+    let body = v.strip_prefix('"')?.strip_suffix('"')?;
+    let mut out = String::with_capacity(body.len());
+    let mut escaped = false;
+    for c in body.chars() {
+        if escaped {
+            out.push(c);
+            escaped = false;
+        } else if c == '\\' {
+            escaped = true;
+        } else if c == '"' {
+            return None; // unescaped quote inside the body
+        } else {
+            out.push(c);
+        }
+    }
+    if escaped {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# two keyed tenants + rate-limited anonymous access
+[anonymous]
+enabled = true
+requests_per_s = 2.0
+
+[tenant.acme]
+key = "sk-acme" # inline comment
+requests_per_s = 10.0
+tokens_per_s = 100.0
+max_sessions = 2
+weight = 4
+
+[tenant.beta]
+key = "sk-beta"
+"#;
+
+    #[test]
+    fn toml_parses_tenants_and_anonymous() {
+        let reg = TenantRegistry::from_toml(SAMPLE).unwrap();
+        let acme = reg.resolve(Some("Bearer sk-acme")).unwrap();
+        assert_eq!(acme.name, "acme");
+        assert_eq!(acme.limits.requests_per_s, 10.0);
+        assert_eq!(acme.limits.max_sessions, 2);
+        assert_eq!(acme.limits.weight, 4);
+        let beta = reg.resolve(Some("sk-beta")).unwrap(); // bare token accepted
+        assert_eq!(beta.name, "beta");
+        assert_eq!(beta.limits.weight, 1); // default
+        let anon = reg.resolve(None).unwrap();
+        assert_eq!(anon.name, "anonymous");
+        assert_eq!(anon.limits.requests_per_s, 2.0);
+    }
+
+    #[test]
+    fn toml_rejects_bad_configs() {
+        assert!(TenantRegistry::from_toml("[tenant.x]\nweight = 1").is_err()); // no key
+        assert!(TenantRegistry::from_toml("[tenant.x]\nkey = \"k\"\n[tenant.x]\nkey = \"j\"").is_err());
+        assert!(TenantRegistry::from_toml("[tenant.x]\nkey = \"k\"\n[tenant.y]\nkey = \"k\"").is_err());
+        assert!(TenantRegistry::from_toml("stray = 1").is_err()); // key outside section
+        assert!(TenantRegistry::from_toml("[what]\n").is_err()); // unknown section
+        assert!(TenantRegistry::from_toml("[tenant.x]\nkey = unquoted").is_err());
+    }
+
+    #[test]
+    fn closed_swarm_rejects_anonymous_and_unknown_keys() {
+        let reg = TenantRegistry::from_toml("[tenant.a]\nkey = \"sk\"\n").unwrap();
+        assert_eq!(reg.resolve(None).unwrap_err().code, CODE_UNAUTHORIZED);
+        assert_eq!(reg.resolve(Some("Bearer nope")).unwrap_err().code, CODE_UNAUTHORIZED);
+        assert_eq!(reg.resolve(Some("Bearer sk")).unwrap().name, "a");
+        // fallback still works for in-process callers
+        assert_eq!(reg.fallback().name, "_local");
+    }
+
+    #[test]
+    fn bucket_refills_on_virtual_clock() {
+        let mut b = TokenBucket::new(2.0); // burst 2
+        assert!(b.try_take_at(1.0, 0.0).is_ok());
+        assert!(b.try_take_at(1.0, 0.0).is_ok());
+        let wait = b.try_take_at(1.0, 0.0).unwrap_err();
+        assert!((wait - 0.5).abs() < 1e-9, "empty bucket at rate 2 -> 0.5s, got {wait}");
+        assert!(b.try_take_at(1.0, 0.4).is_err(), "not yet refilled");
+        assert!(b.try_take_at(1.0, 0.5).is_ok(), "refilled after 0.5s");
+        // burst cap: a long idle stretch never banks more than `burst`
+        assert!(b.try_take_at(2.0, 100.0).is_ok());
+        assert!(b.try_take_at(0.5, 100.0).is_err());
+    }
+
+    #[test]
+    fn post_paid_debit_blocks_until_repaid() {
+        let mut b = TokenBucket::new(10.0); // burst 10
+        assert!(b.admit_at(0.0).is_ok());
+        b.debit_at(35.0, 0.0); // level -25
+        let wait = b.admit_at(0.0).unwrap_err();
+        assert!((wait - 2.5).abs() < 1e-9, "25 tokens of debt at 10/s -> 2.5s, got {wait}");
+        assert!(b.admit_at(2.0).is_err());
+        assert!(b.admit_at(2.5).is_ok());
+    }
+
+    #[test]
+    fn admission_counts_usage_and_rejections() {
+        let t = TenantState::new(
+            "t",
+            TenantLimits { requests_per_s: 1.0, ..TenantLimits::default() },
+        );
+        assert!(t.admit_at(0.0).is_ok());
+        let err = t.admit_at(0.0).unwrap_err();
+        assert_eq!(err.code, CODE_RATE_LIMITED);
+        assert!(err.retry_after_s.unwrap() >= 1);
+        assert!(t.admit_at(1.0).is_ok());
+        assert_eq!(t.usage.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(t.usage.rejected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn session_quota_open_release_cycle() {
+        let t = TenantState::new(
+            "t",
+            TenantLimits { max_sessions: 2, ..TenantLimits::default() },
+        );
+        assert!(t.try_open_session().is_ok());
+        assert!(t.try_open_session().is_ok());
+        let err = t.try_open_session().unwrap_err();
+        assert_eq!(err.code, CODE_QUOTA_EXCEEDED);
+        assert_eq!(err.retry_after_s, Some(1));
+        t.release_session();
+        assert!(t.try_open_session().is_ok());
+        assert_eq!(t.sessions_open(), 2);
+        t.release_session();
+        t.release_session();
+        t.release_session(); // extra release saturates at 0
+        assert_eq!(t.sessions_open(), 0);
+    }
+
+    #[test]
+    fn tenant_ids_are_stable_and_nonzero() {
+        assert_eq!(tenant_id("acme"), tenant_id("acme"));
+        assert_ne!(tenant_id("acme"), tenant_id("beta"));
+        assert_ne!(tenant_id(""), 0);
+    }
+
+    #[test]
+    fn endpoint_classes_cover_the_route_table() {
+        use EndpointClass::*;
+        assert_eq!(endpoint_class("/api/v1/generate"), Inference);
+        assert_eq!(endpoint_class("/api/v1/stream"), Inference);
+        assert_eq!(endpoint_class("/api/v1/stream/resume"), Inference);
+        assert_eq!(endpoint_class("/api/v1/forward"), Inference);
+        assert_eq!(endpoint_class("/api/v1/backward"), Inference);
+        assert_eq!(endpoint_class("/api/v1/session/open"), Session);
+        assert_eq!(endpoint_class("/api/v1/session/append"), Session);
+        assert_eq!(endpoint_class("/api/v1/session/close"), Session);
+        assert_eq!(endpoint_class("/api/v1/admin/usage"), Admin);
+        assert_eq!(endpoint_class("/api/v1/admin/traces"), Admin);
+        assert_eq!(endpoint_class("/api/v1/debug/traces"), Admin);
+        assert_eq!(endpoint_class("/health"), Public);
+        assert_eq!(endpoint_class("/api/v1/health"), Public);
+        assert_eq!(endpoint_class("/api/v1/info"), Public);
+        assert_eq!(endpoint_class("/metrics"), Public);
+        assert_eq!(endpoint_class("/nope"), Public);
+    }
+
+    #[test]
+    fn usage_json_and_prometheus_block_render() {
+        let reg = TenantRegistry::from_toml(SAMPLE).unwrap();
+        let acme = reg.resolve(Some("Bearer sk-acme")).unwrap();
+        acme.admit_at(0.0).unwrap();
+        acme.charge_tokens_at(7, 3, 0.0);
+        acme.usage.kv_page_us.fetch_add(2_500_000, Ordering::Relaxed);
+        let v = Value::parse(&reg.usage_json()).unwrap();
+        let rows = v.get("tenants").unwrap().arr().unwrap();
+        assert_eq!(rows.len(), 3); // acme, beta, anonymous
+        let row = rows
+            .iter()
+            .find(|r| r.get("name").unwrap().str().unwrap() == "acme")
+            .unwrap();
+        assert_eq!(row.get("requests").unwrap().u64().unwrap(), 1);
+        assert_eq!(row.get("tokens_in").unwrap().u64().unwrap(), 7);
+        assert_eq!(row.get("tokens_out").unwrap().u64().unwrap(), 3);
+        assert!((row.get("kv_page_seconds").unwrap().f64().unwrap() - 2.5).abs() < 1e-9);
+        let prom = reg.prometheus_block();
+        assert!(prom.contains("petals_tenant_requests_total{tenant=\"acme\"} 1"));
+        assert!(prom.contains("petals_tenant_tokens_out_total{tenant=\"acme\"} 3"));
+        assert!(prom.contains("petals_tenant_kv_page_seconds_total{tenant=\"acme\"} 2.5"));
+        assert!(prom.contains("# TYPE petals_tenant_sessions_open gauge"));
+        // every non-comment line carries a tenant label
+        for l in prom.lines().filter(|l| !l.starts_with('#')) {
+            assert!(l.contains("{tenant=\""), "unlabeled series line: {l}");
+        }
+    }
+
+    #[test]
+    fn hot_reload_preserves_usage() {
+        let dir = std::env::temp_dir().join(format!("petals-tenants-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tenants.toml");
+        std::fs::write(&path, "[tenant.a]\nkey = \"k1\"\nrequests_per_s = 5.0\n").unwrap();
+        let reg = TenantRegistry::load(path.to_str().unwrap()).unwrap();
+        let a = reg.resolve(Some("Bearer k1")).unwrap();
+        a.admit_at(0.0).unwrap();
+        a.try_open_session().unwrap();
+        // rewrite with a changed limit + a new tenant; force the mtime
+        // and check throttle windows open
+        std::fs::write(&path, "[tenant.a]\nkey = \"k1\"\nrequests_per_s = 9.0\n[tenant.b]\nkey = \"k2\"\n")
+            .unwrap();
+        {
+            let mut inner = reg.inner.lock().unwrap();
+            inner.last_check_s = -10.0;
+            inner.mtime = None;
+        }
+        reg.maybe_reload();
+        let a2 = reg.resolve(Some("Bearer k1")).unwrap();
+        assert_eq!(a2.limits.requests_per_s, 9.0);
+        assert_eq!(a2.usage.requests.load(Ordering::Relaxed), 1, "usage carried across reload");
+        assert_eq!(a2.sessions_open(), 1, "open sessions carried across reload");
+        assert_eq!(reg.resolve(Some("Bearer k2")).unwrap().name, "b");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

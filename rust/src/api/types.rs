@@ -346,11 +346,31 @@ pub fn parse_resume_token(tok: &str) -> Result<(u64, usize)> {
 }
 
 /// A typed API failure: stable machine-readable `code` + HTTP status.
+///
+/// Every endpoint renders failures through one versioned envelope:
+/// `{"error": {"code", "message", "retryable", "retry_after_s"?}}`.
+/// `error.code`/`error.message` are the legacy fields and stay put for
+/// the deprecation window; `retryable` and `retry_after_s` are the v2
+/// additions. Retryable transient refusals (`busy`, `rate_limited`,
+/// `quota_exceeded`) surface as HTTP 429 + a `Retry-After` header.
 #[derive(Debug, Clone)]
 pub struct ApiError {
     pub status: u16,
     pub code: &'static str,
     pub message: String,
+    /// Seconds for the `Retry-After` header (429s always carry one).
+    pub retry_after_s: Option<u64>,
+}
+
+/// Is `code` a transient condition clients should retry (after
+/// `retry_after_s` when given, with their own backoff otherwise)? One
+/// list shared by the HTTP envelope and mid-stream error events so the
+/// two surfaces can never disagree.
+pub fn is_retryable_code(code: &str) -> bool {
+    matches!(
+        code,
+        "busy" | "rate_limited" | "quota_exceeded" | "moved" | "no_route" | "chain_broken"
+    )
 }
 
 /// Marker prefix [`ApiError::from_error`] recognizes so speculation
@@ -367,7 +387,22 @@ pub fn unsupported_speculation_error(msg: impl std::fmt::Display) -> Error {
     Error::Parse(format!("{UNSUPPORTED_SPECULATION_PREFIX}{msg}"))
 }
 
+/// Fold an admission refusal into the crate-wide [`Error`] type so
+/// handlers that return `crate::error::Result` can refuse mid-flight
+/// (e.g. a session quota hit inside `session/open`). The stable code
+/// rides as a message prefix; [`ApiError::from_error`] recovers it.
+pub fn admission_to_error(e: &super::tenant::AdmissionError) -> Error {
+    Error::Busy(format!("{}: {}", e.code, e.message))
+}
+
 impl ApiError {
+    /// Plain constructor; 429s get a default 1s `Retry-After` so the
+    /// retryable contract holds even for ad-hoc call sites.
+    pub fn new(status: u16, code: &'static str, message: impl Into<String>) -> ApiError {
+        let retry_after_s = if status == 429 { Some(1) } else { None };
+        ApiError { status, code, message: message.into(), retry_after_s }
+    }
+
     pub fn from_error(e: &Error) -> ApiError {
         let (status, code) = match e {
             Error::Parse(m) if m.starts_with(UNSUPPORTED_SPECULATION_PREFIX) => {
@@ -375,8 +410,21 @@ impl ApiError {
             }
             Error::Parse(_) => (400, "bad_request"),
             Error::PromptTooLong(_) => (413, "prompt_too_long"),
+            // capacity refusal is the caller's signal to back off and
+            // retry — 429 + Retry-After, not a generic 503. Admission
+            // refusals tunneled via [`admission_to_error`] keep their
+            // own stable codes.
+            Error::Busy(m) if m.starts_with("quota_exceeded: ") => {
+                (429, super::tenant::CODE_QUOTA_EXCEEDED)
+            }
+            Error::Busy(m) if m.starts_with("rate_limited: ") => {
+                (429, super::tenant::CODE_RATE_LIMITED)
+            }
+            Error::Busy(m) if m.starts_with("unauthorized: ") => {
+                (401, super::tenant::CODE_UNAUTHORIZED)
+            }
+            Error::Busy(_) => (429, "busy"),
             Error::NotFound(_) => (404, "not_found"),
-            Error::Busy(_) => (503, "busy"),
             Error::Moved(_) => (503, "moved"),
             Error::NoRoute(_) => (503, "no_route"),
             Error::Shape(_) => (400, "bad_shape"),
@@ -384,7 +432,19 @@ impl ApiError {
             Error::ChainBroken(_) => (502, "chain_broken"),
             Error::Io(_) | Error::Xla(_) | Error::Other(_) => (500, "internal"),
         };
-        ApiError { status, code, message: e.to_string() }
+        ApiError::new(status, code, e.to_string())
+    }
+
+    /// An admission refusal from the tenant layer: `unauthorized` is a
+    /// 401; `rate_limited`/`quota_exceeded` are 429s carrying the
+    /// bucket's own `Retry-After` estimate.
+    pub fn from_admission(e: &super::tenant::AdmissionError) -> ApiError {
+        let status = if e.code == super::tenant::CODE_UNAUTHORIZED { 401 } else { 429 };
+        let mut out = ApiError::new(status, e.code, e.message.clone());
+        if let Some(s) = e.retry_after_s {
+            out.retry_after_s = Some(s);
+        }
+        out
     }
 
     /// The stable code for a speculation config this deployment cannot
@@ -392,16 +452,18 @@ impl ApiError {
     /// Distinguishable from a generic `bad_request` so clients can fall
     /// back to non-speculative decoding programmatically.
     pub fn unsupported_speculation(message: impl Into<String>) -> ApiError {
-        ApiError { status: 400, code: "unsupported_speculation", message: message.into() }
+        ApiError::new(400, "unsupported_speculation", message)
     }
 
     /// `"400 Bad Request"`-style status line fragment.
     pub fn status_line(&self) -> String {
         let reason = match self.status {
             400 => "Bad Request",
+            401 => "Unauthorized",
             404 => "Not Found",
             409 => "Conflict",
             413 => "Payload Too Large",
+            429 => "Too Many Requests",
             502 => "Bad Gateway",
             503 => "Service Unavailable",
             _ => "Internal Server Error",
@@ -409,11 +471,24 @@ impl ApiError {
         format!("{} {}", self.status, reason)
     }
 
-    /// `{"error": {"code": ..., "message": ...}}`
+    /// Is this a condition the client should retry? Drives both the
+    /// envelope's `retryable` field and the `Retry-After` header.
+    pub fn retryable(&self) -> bool {
+        is_retryable_code(self.code)
+    }
+
+    /// The unified envelope:
+    /// `{"error": {"code", "message", "retryable", "retry_after_s"?}}`.
+    /// `code`/`message` are the legacy v1 fields (kept verbatim for the
+    /// deprecation window); `retryable`/`retry_after_s` are additive.
     pub fn body(&self) -> String {
         let mut inner = BTreeMap::new();
         inner.insert("code".to_string(), Value::Str(self.code.to_string()));
         inner.insert("message".to_string(), Value::Str(self.message.clone()));
+        inner.insert("retryable".to_string(), Value::Bool(self.retryable()));
+        if let Some(s) = self.retry_after_s {
+            inner.insert("retry_after_s".to_string(), Value::Num(s as f64));
+        }
         let mut obj = BTreeMap::new();
         obj.insert("error".to_string(), Value::Obj(inner));
         Value::Obj(obj).render()
@@ -526,7 +601,11 @@ mod tests {
         assert!(e.status_line().starts_with("413"));
         let v = Value::parse(&e.body()).unwrap();
         assert_eq!(v.get("error").unwrap().get("code").unwrap().str().unwrap(), "prompt_too_long");
-        assert_eq!(ApiError::from_error(&Error::Busy("full".into())).status, 503);
+        assert_eq!(v.get("error").unwrap().get("retryable").unwrap().bool().unwrap(), false);
+        // capacity refusals are retryable 429s and always carry Retry-After
+        let busy = ApiError::from_error(&Error::Busy("full".into()));
+        assert_eq!((busy.status, busy.retry_after_s), (429, Some(1)));
+        assert!(busy.retryable() && busy.status_line().starts_with("429 Too Many Requests"));
         assert_eq!(ApiError::from_error(&Error::Parse("x".into())).status, 400);
         let e = ApiError::unsupported_speculation("no such draft");
         assert_eq!((e.status, e.code), (400, "unsupported_speculation"));

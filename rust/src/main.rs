@@ -15,6 +15,7 @@
 //!                 --prompt 1,2,3 [--max-new N] [--topk K | --topp P] [--stream]
 //! petals chat     --artifacts DIR (--peers ... | --announce-dir DIR
 //!                 | --bootstrap ADDR,...) [--model NAME] [--listen ADDR] [--stream]
+//!                 [--tenants tenants.toml]
 //! petals sim      [--preset 3xa100|12virtual|14real] [--net gbit5|mbit100-5|mbit100-100]
 //!                 [--workload inference|forward|multiclient|shared-prefix]
 //! petals top      (--announce-dir DIR | --bootstrap ADDR,...) [--model NAME]
@@ -603,7 +604,24 @@ fn cmd_chat(flags: &HashMap<String, String>) -> i32 {
     };
     let vocab = home.geometry().vocab as i32;
     let cfg = session_cfg(&home, 32);
-    let backend = ApiServer::new(swarm, head, cfg);
+    // --tenants tenants.toml: bearer-key auth + per-tenant rate limits,
+    // session quotas, and usage metering (hot-reloaded on edit);
+    // without it the gateway runs open (anonymous, unlimited)
+    let tenants = match flags.get("tenants") {
+        Some(path) => match petals::api::TenantRegistry::load(path) {
+            Ok(reg) => Arc::new(reg),
+            Err(e) => return fail(&format!("--tenants {path}: {e}")),
+        },
+        None => Arc::new(petals::api::TenantRegistry::open()),
+    };
+    let backend = ApiServer::with_options(
+        swarm,
+        head,
+        cfg,
+        std::time::Duration::from_secs(600),
+        tenants,
+    );
+    backend.set_model_name(&model_name(flags));
     let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
     let addr = match backend.serve(&listen, stop) {
         Ok(addr) => {

@@ -91,6 +91,15 @@ impl KvPoolConfig {
         2 * batch * n_blocks * tokens.div_ceil(self.page_tokens.max(1))
     }
 
+    /// [`Self::pages_for`] without a config in hand: pages a
+    /// single-row session at `cache_len` tokens holds across
+    /// `n_blocks` blocks, given the pool's page size. The tenant
+    /// metering sweep uses this to convert a client-visible
+    /// `cache_len` into KV-page-seconds without locking the pool.
+    pub fn pages_for_cache_len(n_blocks: usize, cache_len: usize, page_tokens: usize) -> usize {
+        2 * n_blocks * cache_len.div_ceil(page_tokens.max(1))
+    }
+
     /// Pages a session must be able to allocate privately to write the
     /// span `[write_from, max_tokens)`: pages wholly below `write_from`
     /// stay shared, every page touched at or after it needs a private
@@ -1749,6 +1758,14 @@ mod tests {
         assert_eq!(c.private_pages(1, 1, 8, 8), 0);
         // write_from 0 equals the classic formula
         assert_eq!(c.private_pages(1, 3, 0, 9), c.pages_for(1, 3, 9));
+        // the config-free form the tenant metering sweep uses agrees
+        // with pages_for at batch 1
+        for (blocks, len) in [(3usize, 9usize), (1, 4), (24, 0), (24, 1), (8, 17)] {
+            assert_eq!(
+                KvPoolConfig::pages_for_cache_len(blocks, len, c.page_tokens),
+                c.pages_for(1, blocks, len),
+            );
+        }
     }
 
     #[test]

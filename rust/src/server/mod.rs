@@ -222,6 +222,12 @@ pub struct ServerNode {
     /// lock) — gossiped in this session's outbound `MigrateSessionOffer`
     /// so a target pinning the same template re-attaches it cheaply.
     session_prefix_fp: Mutex<HashMap<u64, u64>>,
+    /// WFQ flow key each live session runs as (0 = untenanted): stamped
+    /// onto [`StepRequest::tenant`] at submit so the scheduler's
+    /// weighted-fair queueing sees per-tenant flows. The HTTP gateway
+    /// registers real tenant ids; the TCP service derives per-peer flow
+    /// keys. Leaf lock.
+    session_tenants: Mutex<HashMap<u64, u64>>,
 }
 
 impl ServerNode {
@@ -298,6 +304,7 @@ impl ServerNode {
             moved: Mutex::new(HashMap::new()),
             migrations_in: Mutex::new(HashMap::new()),
             session_prefix_fp: Mutex::new(HashMap::new()),
+            session_tenants: Mutex::new(HashMap::new()),
         }))
     }
 
@@ -368,8 +375,30 @@ impl ServerNode {
         self.step_lits.lock().unwrap().remove(&session);
         self.last_seen.lock().unwrap().remove(&session);
         self.session_prefix_fp.lock().unwrap().remove(&session);
+        self.session_tenants.lock().unwrap().remove(&session);
         // deliberately NOT `moved`: the redirect must outlive the local
         // close so a late request still learns the session's new home
+    }
+
+    /// Record which tenant (WFQ flow) a session's decode steps charge.
+    /// `0` clears back to the untenanted shared flow.
+    pub fn set_session_tenant(&self, session: u64, tenant: u64) {
+        let mut m = self.session_tenants.lock().unwrap();
+        if tenant == 0 {
+            m.remove(&session);
+        } else {
+            m.insert(session, tenant);
+        }
+    }
+
+    /// The WFQ flow a session's steps run under (0 = untenanted).
+    pub fn session_tenant(&self, session: u64) -> u64 {
+        self.session_tenants.lock().unwrap().get(&session).copied().unwrap_or(0)
+    }
+
+    /// Forward a tenant's weighted-fair share to the step scheduler.
+    pub fn set_tenant_weight(&self, tenant: u64, weight: u64) {
+        self.scheduler.set_tenant_weight(tenant, weight);
     }
 
     /// Reset a session's idle clock (leaf lock).
@@ -974,6 +1003,7 @@ impl ServerNode {
             row_lens: row_lens.to_vec(),
             hidden: h.clone(),
             timing: None,
+            tenant: 0,
         })
     }
 
@@ -1054,14 +1084,19 @@ impl ServerNode {
             row_lens: row_lens.to_vec(),
             hidden: h.clone(),
             timing: Some(timing.clone()),
+            tenant: 0,
         })?;
         let total_us = t0.elapsed().as_micros() as u64;
         Ok((out, timing.snapshot(crate::trace::fresh_span_id(), total_us)))
     }
 
-    fn submit_step(&self, req: StepRequest) -> Result<Tensor> {
+    fn submit_step(&self, mut req: StepRequest) -> Result<Tensor> {
         let t0 = std::time::Instant::now();
         self.touch_session(req.session);
+        // stamp the session's WFQ flow unless the caller already did
+        if req.tenant == 0 {
+            req.tenant = self.session_tenant(req.session);
+        }
         self.active.fetch_add(1, Ordering::Relaxed);
         let result = self.scheduler.submit(req, |reqs| self.step_batch(reqs));
         self.active.fetch_sub(1, Ordering::Relaxed);
@@ -1522,6 +1557,33 @@ impl ServerNode {
         self.metrics.requests.inc();
         self.metrics.step_latency.record(dt);
         self.throughput.record(1);
+    }
+
+    /// [`Self::handle`] with a caller-attributed WFQ flow: session
+    /// opens record `tenant` as the session's flow key (scrubbed again
+    /// if the open is refused), so each decode step the session later
+    /// submits charges that flow in the scheduler. The wire protocol is
+    /// untouched — attribution rides on the transport (the TCP service
+    /// hashes the peer address; the HTTP gateway passes real tenant
+    /// ids). `tenant == 0` is exactly [`Self::handle`].
+    pub fn handle_as(&self, msg: &Message, tenant: u64) -> Message {
+        let opened = match msg {
+            Message::OpenSession { session, .. }
+            | Message::OpenSessionV3 { session, .. }
+            | Message::OpenSessionTraced { session, .. }
+                if tenant != 0 =>
+            {
+                self.set_session_tenant(*session, tenant);
+                Some(*session)
+            }
+            _ => None,
+        };
+        let reply = self.handle(msg);
+        if let (Some(session), Message::Error { .. }) = (opened, &reply) {
+            // refused open: do not leave a stray flow mapping behind
+            self.set_session_tenant(session, 0);
+        }
+        reply
     }
 
     /// Protocol-level dispatch (shared by the TCP service and tests).

@@ -35,6 +35,20 @@
 //! outputs to the same sessions run back-to-back (asserted in the server
 //! tests).
 //!
+//! **Weighted-fair queueing.** Requests carry a tenant id (0 =
+//! untenanted), and group selection runs per-tenant virtual-time
+//! accounting: each admitted request charges its tenant
+//! `rows × VT_SCALE / weight`, and the next slot always goes to the
+//! queued request of the tenant with the LOWEST virtual time (ties
+//! broken by arrival ticket). One tenant's burst of queued steps
+//! therefore cannot monopolize fused batches — other tenants' requests
+//! keep winning slots on vtime — while a single-tenant queue degrades
+//! to exact FIFO (every candidate shares one vtime, so the ticket
+//! tie-break decides). Selection only changes WHICH requests fuse
+//! together; the batch is still session-sorted before execution, so
+//! fused outputs stay bitwise identical to FIFO ordering for the same
+//! admitted set.
+//!
 //! The scheduler is transport-agnostic: it takes the execution closure
 //! per call, owns no model state, and is driven by the same
 //! thread-per-connection model the TCP service already uses (a waiting
@@ -65,6 +79,10 @@ pub struct StepRequest {
     /// nothing — tracing never changes which batch a request fuses
     /// into, only what gets measured.
     pub timing: Option<Arc<StepTiming>>,
+    /// Weighted-fair-queueing flow key (see [`crate::api::tenant`]).
+    /// `0` = untenanted: all such requests share one flow, which keeps
+    /// single-tenant deployments on exact FIFO order.
+    pub tenant: u64,
 }
 
 impl StepRequest {
@@ -72,7 +90,7 @@ impl StepRequest {
     /// `cache_len`.
     pub fn uniform(session: u64, cache_len: usize, hidden: Tensor) -> Self {
         let rows = hidden.shape.first().copied().unwrap_or(1);
-        StepRequest { session, row_lens: vec![cache_len; rows], hidden, timing: None }
+        StepRequest { session, row_lens: vec![cache_len; rows], hidden, timing: None, tenant: 0 }
     }
 
     /// Whether every row sits at the same depth.
@@ -81,11 +99,22 @@ impl StepRequest {
     }
 }
 
+/// Virtual-time charge per admitted row at weight 1. Integer-scaled so
+/// tie-breaks stay exact (no float accumulation drift across batches).
+const VT_SCALE: u64 = 1024;
+
 struct SchedState {
     next_ticket: u64,
     queue: VecDeque<(u64, Instant, StepRequest)>,
     results: HashMap<u64, Result<Tensor>>,
     leader_active: bool,
+    /// Per-tenant virtual time — the WFQ ledger. Cleared whenever the
+    /// queue drains so it only tracks *active* flows (an idle tenant
+    /// re-enters at the current floor, not with banked credit).
+    vtime: HashMap<u64, u64>,
+    /// Per-tenant WFQ weights (absent = 1). Fed by the gateway from the
+    /// tenant registry via [`StepScheduler::set_tenant_weight`].
+    weights: HashMap<u64, u64>,
 }
 
 /// Group-commit scheduler; one per [`crate::server::ServerNode`].
@@ -109,6 +138,8 @@ impl StepScheduler {
                 queue: VecDeque::new(),
                 results: HashMap::new(),
                 leader_active: false,
+                vtime: HashMap::new(),
+                weights: HashMap::new(),
             }),
             arrived: Condvar::new(),
             done: Condvar::new(),
@@ -120,6 +151,13 @@ impl StepScheduler {
     /// Requests currently queued (for metrics / Pong).
     pub fn queue_len(&self) -> usize {
         self.state.lock().unwrap().queue.len()
+    }
+
+    /// Set a tenant's WFQ weight (share of fused-batch slots relative
+    /// to other tenants; min 1). The gateway forwards these from the
+    /// tenant registry at startup and after hot reloads.
+    pub fn set_tenant_weight(&self, tenant: u64, weight: u64) {
+        self.state.lock().unwrap().weights.insert(tenant, weight.max(1));
     }
 
     /// Submit one step and block until its result is ready. `exec`
@@ -157,7 +195,15 @@ impl StepScheduler {
                         st = guard;
                     }
                 }
-                let batch = Self::take_compatible(&mut st.queue, self.max_width);
+                let batch = {
+                    let SchedState { queue, vtime, weights, .. } = &mut *st;
+                    Self::take_fair(queue, self.max_width, vtime, weights)
+                };
+                if st.queue.is_empty() {
+                    // no active flows left: reset the WFQ ledger so the
+                    // next burst starts from a level field
+                    st.vtime.clear();
+                }
                 drop(st);
                 // traced members learn where their pre-exec wait went:
                 // queue = submitted → a leader picked the work up, fuse =
@@ -200,30 +246,69 @@ impl StepScheduler {
         }
     }
 
-    /// Drain the head-compatible group: pairwise-distinct sessions, up
-    /// to `max_width`. Cache lengths may differ — the executor runs
-    /// mixed-depth groups through the ragged decode artifact (and falls
-    /// back to uniform sub-groups where no ragged entry is compiled).
-    /// Returned sorted by session id for order-independent arithmetic.
+    /// FIFO group selection (no WFQ state): pairwise-distinct sessions,
+    /// up to `max_width`. Equivalent to [`Self::take_fair`] with a
+    /// fresh ledger — with one flow, ticket order IS arrival order.
+    #[cfg(test)]
     fn take_compatible(
         queue: &mut VecDeque<(u64, Instant, StepRequest)>,
         max_width: usize,
     ) -> Vec<(u64, Instant, StepRequest)> {
+        Self::take_fair(queue, max_width, &mut HashMap::new(), &HashMap::new())
+    }
+
+    /// Drain the next fused group under weighted-fair queueing: up to
+    /// `max_width` requests with pairwise-distinct sessions, each slot
+    /// going to the pending request of the tenant with the lowest
+    /// virtual time (ties by arrival ticket — deterministic, never by
+    /// map iteration order). Each pick charges its tenant
+    /// `rows × VT_SCALE / weight` of virtual time. Tenants entering the
+    /// ledger start at the floor (minimum vtime among queued flows), so
+    /// a newcomer is served promptly but gets no banked credit to burst
+    /// with. Cache lengths may differ — the executor runs mixed-depth
+    /// groups through the ragged decode artifact (and falls back to
+    /// uniform sub-groups where no ragged entry is compiled). Returned
+    /// sorted by session id for order-independent arithmetic.
+    fn take_fair(
+        queue: &mut VecDeque<(u64, Instant, StepRequest)>,
+        max_width: usize,
+        vtime: &mut HashMap<u64, u64>,
+        weights: &HashMap<u64, u64>,
+    ) -> Vec<(u64, Instant, StepRequest)> {
         if queue.is_empty() {
             return Vec::new();
         }
+        let floor = queue
+            .iter()
+            .filter_map(|(_, _, r)| vtime.get(&r.tenant).copied())
+            .min()
+            .unwrap_or(0);
+        let mut items: Vec<Option<(u64, Instant, StepRequest)>> =
+            queue.drain(..).map(Some).collect();
         let mut batch: Vec<(u64, Instant, StepRequest)> = Vec::new();
-        let mut rest: VecDeque<(u64, Instant, StepRequest)> = VecDeque::new();
-        while let Some((t, at, r)) = queue.pop_front() {
-            let compatible = batch.len() < max_width
-                && batch.iter().all(|(_, _, b)| b.session != r.session);
-            if compatible {
-                batch.push((t, at, r));
-            } else {
-                rest.push_back((t, at, r));
+        while batch.len() < max_width {
+            // smallest (tenant vtime, ticket) among session-compatible
+            // candidates; index scan keeps the choice deterministic
+            let mut best: Option<(u64, u64, usize)> = None;
+            for (i, slot) in items.iter().enumerate() {
+                let Some((ticket, _, r)) = slot else { continue };
+                if batch.iter().any(|(_, _, b)| b.session == r.session) {
+                    continue;
+                }
+                let vt = vtime.get(&r.tenant).copied().unwrap_or(floor);
+                if best.map_or(true, |(bvt, bt, _)| (vt, *ticket) < (bvt, bt)) {
+                    best = Some((vt, *ticket, i));
+                }
             }
+            let Some((_, _, idx)) = best else { break };
+            let (ticket, at, r) = items[idx].take().expect("picked slot is full");
+            let rows = r.row_lens.len().max(1) as u64;
+            let w = weights.get(&r.tenant).copied().unwrap_or(1).max(1);
+            *vtime.entry(r.tenant).or_insert(floor) += rows * VT_SCALE / w;
+            batch.push((ticket, at, r));
         }
-        *queue = rest;
+        // leftovers keep their arrival order for the next group
+        queue.extend(items.into_iter().flatten());
         batch.sort_by_key(|(_, _, r)| r.session);
         batch
     }
@@ -431,5 +516,120 @@ mod tests {
         for (c, ok) in results {
             assert_eq!(ok, c != 1, "session {c}");
         }
+    }
+
+    fn treq(ticket: u64, session: u64, tenant: u64) -> (u64, Instant, StepRequest) {
+        let mut r = req(session, 4, 0.0);
+        r.tenant = tenant;
+        (ticket, Instant::now(), r)
+    }
+
+    #[test]
+    fn wfq_single_flow_is_exact_fifo() {
+        // one tenant (or untenanted traffic) must see IDENTICAL picks
+        // from take_fair and the FIFO baseline, including with
+        // persistent vtime state across groups
+        let mk = || {
+            let mut q: VecDeque<(u64, Instant, StepRequest)> = VecDeque::new();
+            for t in 0..5u64 {
+                q.push_back(treq(t, 10 + t, 0));
+            }
+            q.push_back(treq(5, 10, 0)); // duplicate session 10
+            q
+        };
+        let mut fifo_q = mk();
+        let fifo: Vec<u64> = StepScheduler::take_compatible(&mut fifo_q, 3)
+            .iter()
+            .map(|(t, _, _)| *t)
+            .collect();
+        let mut q = mk();
+        let mut vtime = HashMap::new();
+        let fair: Vec<u64> = StepScheduler::take_fair(&mut q, 3, &mut vtime, &HashMap::new())
+            .iter()
+            .map(|(t, _, _)| *t)
+            .collect();
+        assert_eq!(fair, fifo);
+        // second group, vtime carried over: still FIFO
+        let fair2: Vec<u64> = StepScheduler::take_fair(&mut q, 3, &mut vtime, &HashMap::new())
+            .iter()
+            .map(|(t, _, _)| *t)
+            .collect();
+        let fifo2: Vec<u64> = StepScheduler::take_compatible(&mut fifo_q, 3)
+            .iter()
+            .map(|(t, _, _)| *t)
+            .collect();
+        assert_eq!(fair2, fifo2);
+    }
+
+    #[test]
+    fn wfq_storming_tenant_cannot_monopolize_the_batch() {
+        // tenant 1 has 6 queued sessions ahead of tenant 2's single
+        // request; FIFO would fill a width-4 batch with tenant 1 only
+        let mut q: VecDeque<(u64, Instant, StepRequest)> = VecDeque::new();
+        for t in 0..6u64 {
+            q.push_back(treq(t, 100 + t, 1));
+        }
+        q.push_back(treq(6, 200, 2));
+        let mut vtime = HashMap::new();
+        let batch = StepScheduler::take_fair(&mut q, 4, &mut vtime, &HashMap::new());
+        assert_eq!(batch.len(), 4);
+        assert!(
+            batch.iter().any(|(_, _, r)| r.session == 200),
+            "the lone tenant-2 request wins a slot in the first fused group"
+        );
+        // the storm's leftovers keep arrival order
+        let left: Vec<u64> = q.iter().map(|(t, _, _)| *t).collect();
+        assert_eq!(left, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn wfq_weights_split_slots_proportionally() {
+        // weight 3 vs weight 1 over a width-4 batch -> 3:1 slot split
+        let mut q: VecDeque<(u64, Instant, StepRequest)> = VecDeque::new();
+        for t in 0..6u64 {
+            q.push_back(treq(t, 100 + t, 1));
+        }
+        for t in 6..12u64 {
+            q.push_back(treq(t, 200 + t, 2));
+        }
+        let mut weights = HashMap::new();
+        weights.insert(1u64, 3u64);
+        let mut vtime = HashMap::new();
+        let batch = StepScheduler::take_fair(&mut q, 4, &mut vtime, &weights);
+        let t1 = batch.iter().filter(|(_, _, r)| r.tenant == 1).count();
+        let t2 = batch.iter().filter(|(_, _, r)| r.tenant == 2).count();
+        assert_eq!((t1, t2), (3, 1), "weight-3 tenant gets 3 of 4 slots");
+    }
+
+    #[test]
+    fn wfq_selection_is_deterministic() {
+        // same queue -> same picks, run-to-run (no map-iteration-order
+        // dependence); and the fused batch stays session-sorted, so the
+        // executed row order matches FIFO for the same admitted set
+        let mk = || {
+            let mut q: VecDeque<(u64, Instant, StepRequest)> = VecDeque::new();
+            for (t, (s, tn)) in
+                [(9u64, 7u64), (3, 1), (8, 7), (1, 1), (5, 3)].iter().enumerate()
+            {
+                q.push_back(treq(t as u64, *s, *tn));
+            }
+            q
+        };
+        let run = || {
+            let mut q = mk();
+            let mut vtime = HashMap::new();
+            StepScheduler::take_fair(&mut q, 3, &mut vtime, &HashMap::new())
+                .iter()
+                .map(|(t, _, r)| (*t, r.session))
+                .collect::<Vec<_>>()
+        };
+        let a = run();
+        for _ in 0..10 {
+            assert_eq!(run(), a);
+        }
+        let sessions: Vec<u64> = a.iter().map(|(_, s)| *s).collect();
+        let mut sorted = sessions.clone();
+        sorted.sort_unstable();
+        assert_eq!(sessions, sorted, "executed row order is session-sorted");
     }
 }

@@ -140,6 +140,17 @@ pub fn drain_node(node: &ServerNode, swarm: &TcpSwarm) -> usize {
     migrated
 }
 
+/// Stable non-zero WFQ flow key for a remote peer address (FNV-1a over
+/// the IP string — ports vary per connection and must not split flows).
+fn peer_flow_key(ip: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in ip.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h.max(1)
+}
+
 /// Serve a node on `addr` ("127.0.0.1:0" for an ephemeral port).
 /// Returns once the listener is bound.
 pub fn serve(node: Arc<ServerNode>, addr: &str) -> Result<ServerHandle> {
@@ -184,6 +195,16 @@ pub fn serve(node: Arc<ServerNode>, addr: &str) -> Result<ServerHandle> {
                 let Ok(stream) = conn else { continue };
                 let node3 = node2.clone();
                 let stop3 = stop2.clone();
+                // per-peer WFQ attribution: sessions opened over this
+                // connection charge a flow keyed by the peer's IP, so
+                // one remote host's burst can't monopolize fused
+                // batches. Wire-protocol-free — pure transport-side
+                // bookkeeping (single-host swarms collapse to one flow,
+                // i.e. plain FIFO).
+                let peer_flow = stream
+                    .peer_addr()
+                    .map(|a| peer_flow_key(&a.ip().to_string()))
+                    .unwrap_or(0);
                 std::thread::spawn(move || {
                     let Ok(mut framed) = FramedConn::from_stream(stream) else {
                         return;
@@ -193,7 +214,7 @@ pub fn serve(node: Arc<ServerNode>, addr: &str) -> Result<ServerHandle> {
                             Ok(m) => m,
                             Err(_) => break, // peer hung up
                         };
-                        let reply = node3.handle(&msg);
+                        let reply = node3.handle_as(&msg, peer_flow);
                         if framed.send(&reply).is_err() {
                             break;
                         }

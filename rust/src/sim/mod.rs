@@ -177,6 +177,23 @@ pub struct RaggedMixReport {
     pub decode_joins: usize,
 }
 
+/// Result of the adversarial-tenant fairness scenario
+/// ([`SwarmSim::run_inference_fair_mix`]): one storming tenant floods
+/// the bottleneck with single-row sessions while N well-behaved tenants
+/// each run one request. The gated number is the well-behaved cohort's
+/// p99 TTFT — bounded under weighted-fair queueing, unbounded under
+/// FIFO (the storm's backlog serializes in front of everyone).
+#[derive(Debug, Clone)]
+pub struct FairMixReport {
+    /// p99 time-to-first-token of the well-behaved tenants, seconds.
+    pub p99_ttft_s: f64,
+    /// Mean TTFT of the well-behaved cohort.
+    pub mean_ttft_s: f64,
+    /// Decode row-steps the storming tenant got through the bottleneck
+    /// (diagnostics: WFQ throttles its share, it does not starve it).
+    pub storm_row_steps: usize,
+}
+
 /// KV pages one session costs under the paged pool: the full cost of a
 /// private session vs the marginal (suffix-only) cost when its
 /// `prefix_len`-token prefix is shared — the acceptance metric for the
@@ -948,6 +965,149 @@ impl SwarmSim {
             occupancy: self.decode_occupancy(),
             p50_ttft_s,
             decode_joins: self.decode_joins,
+        })
+    }
+
+    /// Adversarial-tenant fairness: one storming tenant enqueues
+    /// `storm_rows` single-row decode sessions at t≈0; `n_well`
+    /// well-behaved tenants trickle in behind it, one request each. The
+    /// bottleneck fuses up to [`Self::max_batch_width`] rows per round
+    /// (round time grows sub-linearly with width — the whole point of
+    /// fusion), each request needs `n_steps` rounds, and a request's
+    /// TTFT is the completion of its FIRST round. `wfq` selects rows by
+    /// per-tenant virtual time (the gateway scheduler's policy,
+    /// [`crate::server::StepScheduler`]); otherwise strict FIFO, where
+    /// the storm's backlog serializes ahead of every later arrival.
+    /// Deterministic given the build seed.
+    pub fn run_inference_fair_mix(
+        &mut self,
+        n_well: usize,
+        storm_rows: usize,
+        n_steps: usize,
+        wfq: bool,
+    ) -> Option<FairMixReport> {
+        if n_well == 0 || n_steps == 0 {
+            return None;
+        }
+        struct Row {
+            tenant: u64,
+            ticket: u64,
+            arrival: f64,
+            steps_left: usize,
+            first_tok_at: Option<f64>,
+        }
+        let width = self.max_batch_width.max(1);
+        let mut rows: Vec<Row> = Vec::new();
+        let mut ticket = 0u64;
+        // the storm lands first (tenant 1), jittered inside ~2ms
+        for _ in 0..storm_rows {
+            rows.push(Row {
+                tenant: 1,
+                ticket,
+                arrival: self.rng.f64() * 0.002,
+                steps_left: n_steps,
+                first_tok_at: None,
+            });
+            ticket += 1;
+        }
+        // well-behaved tenants (one request each) arrive strictly after
+        for i in 0..n_well {
+            rows.push(Row {
+                tenant: 100 + i as u64,
+                ticket,
+                arrival: 0.005 + i as f64 * 0.003 + self.rng.f64() * 0.002,
+                steps_left: n_steps,
+                first_tok_at: None,
+            });
+            ticket += 1;
+        }
+        let mut vtime: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+        let mut now = 0.0f64;
+        let mut storm_row_steps = 0usize;
+        while rows.iter().any(|r| r.steps_left > 0) {
+            let next_arrival = rows
+                .iter()
+                .filter(|r| r.steps_left > 0)
+                .map(|r| r.arrival)
+                .min_by(f64::total_cmp)?;
+            if now < next_arrival {
+                now = next_arrival;
+            }
+            // assemble one fused round: iterative picks so a WFQ charge
+            // lands before the next slot is filled (interleaving tenants
+            // instead of draining one). The newcomer floor is latched
+            // ONCE per round (exactly like `StepScheduler::take_fair`) —
+            // recomputing it per slot would let an incumbent's rising
+            // vtime drag the floor up with it, and every tie would then
+            // break on ticket toward the storm: WFQ would collapse to
+            // FIFO.
+            let floor = rows
+                .iter()
+                .filter(|r| r.steps_left > 0 && r.arrival <= now)
+                .filter_map(|r| vtime.get(&r.tenant).copied())
+                .min()
+                .unwrap_or(0);
+            let mut picked: Vec<usize> = Vec::new();
+            for _ in 0..width {
+                let best = rows
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, r)| {
+                        r.steps_left > 0 && r.arrival <= now && !picked.contains(i)
+                    })
+                    .min_by_key(|(_, r)| {
+                        if wfq {
+                            (vtime.get(&r.tenant).copied().unwrap_or(floor), r.ticket)
+                        } else {
+                            // FIFO: arrival order (µs precision keeps
+                            // the key integral), ticket tie-break
+                            ((r.arrival * 1e6) as u64, r.ticket)
+                        }
+                    })
+                    .map(|(i, r)| (i, r.tenant));
+                let Some((i, tenant)) = best else { break };
+                if wfq {
+                    let vt = vtime.get(&tenant).copied().unwrap_or(floor);
+                    vtime.insert(tenant, vt + 1);
+                }
+                picked.push(i);
+            }
+            if picked.is_empty() {
+                break;
+            }
+            // fused rounds pay a near-marginal per-row cost: the weight
+            // stream dominates, extra rows ride it (the continuous-
+            // batching premise the rest of the sim calibrates)
+            let round_s = 0.05 + 0.002 * (picked.len() - 1) as f64;
+            now += round_s;
+            for &i in &picked {
+                let r = &mut rows[i];
+                if r.steps_left == n_steps {
+                    r.first_tok_at = Some(now);
+                }
+                r.steps_left -= 1;
+                if r.tenant == 1 {
+                    storm_row_steps += 1;
+                }
+            }
+            // a drained queue resets the virtual-time ledger, exactly
+            // like the real scheduler
+            if rows.iter().all(|r| r.steps_left == 0 || r.arrival > now) {
+                vtime.clear();
+            }
+        }
+        let mut ttfts: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.tenant != 1)
+            .map(|r| r.first_tok_at.unwrap_or(f64::INFINITY) - r.arrival)
+            .collect();
+        ttfts.sort_by(f64::total_cmp);
+        let n = ttfts.len();
+        let p99_idx = ((n as f64 * 0.99).ceil() as usize).clamp(1, n) - 1;
+        Some(FairMixReport {
+            p99_ttft_s: ttfts[p99_idx],
+            mean_ttft_s: ttfts.iter().sum::<f64>() / n as f64,
+            storm_row_steps,
         })
     }
 
